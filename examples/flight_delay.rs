@@ -1,0 +1,49 @@
+//! Flight-delay regression (the paper's §6.1 workload, DESIGN.md §4
+//! substitution): ADVGP vs SVIGP vs DistGP-GD on the flight-like
+//! generator, reporting RMSE in delay minutes.
+//!
+//!     cargo run --release --example flight_delay -- \
+//!         [--n 40000] [--m 100] [--budget 12] [--workers 4] [--tau 32]
+
+use advgp::experiments::methods::*;
+use advgp::experiments::{flight_problem, print_table};
+use advgp::util::cli::Args;
+
+fn main() {
+    let args = Args::from_env();
+    let n = args.usize_or("n", 40_000);
+    let m = args.usize_or("m", 100);
+    let budget = args.f64_or("budget", 12.0);
+    let workers = args.usize_or("workers", 4);
+    let tau = args.u64_or("tau", 32);
+
+    println!("flight-like: n={n} (test 5000), m={m}, {workers} workers, τ={tau}, budget {budget}s");
+    let p = flight_problem(n, 5_000, m, 1);
+    let y_std = p.standardizer.y_std;
+
+    let opts = MethodOpts { budget_secs: budget, tau, workers, ..Default::default() };
+    let sync = MethodOpts { budget_secs: budget, tau: 0, workers, ..Default::default() };
+    let advgp = run_advgp(&p, &opts);
+    let svigp = run_svigp_method(&p, &opts);
+    let gd = run_distgp_gd_method(&p, &sync);
+
+    let rows = vec![
+        vec!["ADVGP".into(),
+             format!("{:.4}", final_rmse(&advgp) * y_std),
+             format!("{:.4}", final_mnlp(&advgp)),
+             format!("{}", advgp.trace.last().map(|t| t.version).unwrap_or(0))],
+        vec!["SVIGP".into(),
+             format!("{:.4}", final_rmse(&svigp) * y_std),
+             format!("{:.4}", final_mnlp(&svigp)),
+             format!("{}", svigp.trace.last().map(|t| t.version).unwrap_or(0))],
+        vec!["DistGP-GD".into(),
+             format!("{:.4}", final_rmse(&gd) * y_std),
+             format!("{:.4}", final_mnlp(&gd)),
+             format!("{}", gd.trace.last().map(|t| t.version).unwrap_or(0))],
+    ];
+    print_table(
+        "flight delay prediction (RMSE in minutes)",
+        &["Method", "RMSE", "MNLP", "iterations"],
+        &rows,
+    );
+}

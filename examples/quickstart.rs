@@ -1,0 +1,74 @@
+//! Quickstart: train ADVGP on a small synthetic regression problem and
+//! compare it against the exact O(n³) GP — the 60-second tour of the
+//! public API.
+//!
+//!     cargo run --release --example quickstart
+
+use advgp::data::{kmeans, synth, Standardizer};
+use advgp::gp::exact::ExactGp;
+use advgp::gp::{SparseGp, Theta, ThetaLayout};
+use advgp::grad::native_factory;
+use advgp::kernel::ArdParams;
+use advgp::ps::coordinator::{native_eval_factory, train, TrainConfig};
+use advgp::util::rng::Pcg64;
+use advgp::util::{mnlp, rmse};
+
+fn main() {
+    // 1. Data: Friedman #1, 3000 train / 500 test, standardized.
+    let mut ds = synth::friedman(3500, 4, 0.4, 0);
+    let mut rng = Pcg64::seeded(0);
+    ds.shuffle(&mut rng);
+    let (mut train_ds, mut test_ds) = ds.split(500);
+    let st = Standardizer::fit(&train_ds);
+    st.apply(&mut train_ds);
+    st.apply(&mut test_ds);
+
+    // 2. Model: m = 20 inducing points from k-means (paper §6.3 init).
+    let m = 20;
+    let layout = ThetaLayout::new(m, train_ds.d());
+    let z0 = kmeans::kmeans(&train_ds.x, m, 20, &mut rng);
+    let theta0 = Theta::init(layout, &z0);
+
+    // 3. Train: 4 asynchronous workers, delay limit τ = 8.
+    let mut cfg = TrainConfig::new(layout);
+    cfg.tau = 8;
+    cfg.max_updates = 400;
+    let res = train(
+        &cfg,
+        theta0.data.clone(),
+        train_ds.shard(4),
+        native_factory(layout),
+        Some(native_eval_factory(layout, test_ds.clone(), None)),
+    );
+    println!(
+        "trained {} updates in {:.2}s ({} gradient pushes, mean staleness {:.2})",
+        res.stats.updates,
+        res.wall_secs,
+        res.stats.pushes,
+        res.stats.staleness.mean()
+    );
+
+    // 4. Evaluate vs the exact GP (feasible at n=3000).
+    let gp = SparseGp::new(Theta { layout, data: res.theta });
+    let (mean, var) = gp.predict(&test_ds.x);
+    let advgp_rmse = rmse(&mean, &test_ds.y);
+    let advgp_mnlp = mnlp(&mean, &var, &test_ds.y);
+
+    let exact = ExactGp::fit(
+        ArdParams::unit(train_ds.d()),
+        0.0,
+        train_ds.x.clone(),
+        &train_ds.y,
+    );
+    let (em, ev) = exact.predict(&test_ds.x);
+    let exact_rmse = rmse(&em, &test_ds.y);
+    let exact_mnlp = mnlp(&em, &ev, &test_ds.y);
+    let mean_rmse = rmse(&vec![0.0; test_ds.n()], &test_ds.y);
+
+    println!("\n{:<28}{:>10}{:>10}", "method", "RMSE", "MNLP");
+    println!("{:<28}{:>10.4}{:>10.4}", "ADVGP (m=20, 4 workers)", advgp_rmse, advgp_mnlp);
+    println!("{:<28}{:>10.4}{:>10.4}", "exact GP (n=3000)", exact_rmse, exact_mnlp);
+    println!("{:<28}{:>10.4}{:>10}", "mean predictor", mean_rmse, "-");
+    assert!(advgp_rmse < 0.7 * mean_rmse, "ADVGP should beat the mean handily");
+    println!("\nquickstart OK");
+}

@@ -1,0 +1,109 @@
+"""AOT lowering: JAX model -> HLO *text* artifacts + JSON manifest.
+
+The interchange format is HLO text, not ``.serialize()``: jax >= 0.5
+emits HloModuleProto with 64-bit instruction ids which the xla crate's
+xla_extension 0.5.1 rejects (``proto.id() <= INT_MAX``); the text parser
+reassigns ids and round-trips cleanly (see /opt/xla-example/README.md).
+
+One artifact per (kind, m, d, B) configuration; the Rust runtime reads
+``artifacts/manifest.json`` and compiles what each engine needs.  Python
+runs exactly once (``make artifacts``) and never on the request path.
+
+Usage:  cd python && python -m compile.aot --out ../artifacts
+"""
+
+import argparse
+import json
+import os
+
+import jax
+import jax.numpy as jnp
+from jax._src.lib import xla_client as xc
+
+from . import model
+
+# (m, d, batch) grid.  d=8 -> flight-like data, d=9 -> taxi-like data,
+# d=4 -> quickstart/tests.  Batches are multiples of the Pallas tile (128).
+GRAD_B = 1024
+EVAL_B = 2048
+CONFIGS = [
+    # (m, d) pairs
+    (50, 8), (100, 8), (200, 8),     # Tables 1-2, Figs 1-3, Appendix C/D
+    (50, 9), (100, 9),               # Fig 4 (taxi)
+    (16, 4),                         # quickstart / integration tests
+]
+
+
+def to_hlo_text(lowered) -> str:
+    """StableHLO -> XlaComputation -> HLO text (return_tuple=True)."""
+    mlir_mod = lowered.compiler_ir("stablehlo")
+    comp = xc._xla.mlir.mlir_module_to_xla_computation(
+        str(mlir_mod), use_tuple_args=False, return_tuple=True)
+    return comp.as_hlo_text()
+
+
+def _param_specs(m, d):
+    f32 = jnp.float32
+    return (
+        jax.ShapeDtypeStruct((m,), f32),        # mu
+        jax.ShapeDtypeStruct((m, m), f32),      # u
+        jax.ShapeDtypeStruct((m, d), f32),      # z
+        jax.ShapeDtypeStruct((m, m), f32),      # chol_l (host-computed)
+        jax.ShapeDtypeStruct((), f32),          # log_a0
+        jax.ShapeDtypeStruct((d,), f32),        # log_eta
+        jax.ShapeDtypeStruct((), f32),          # log_sigma
+    )
+
+
+def lower_one(kind, m, d, b):
+    f32 = jnp.float32
+    params = _param_specs(m, d)
+    xspec = jax.ShapeDtypeStruct((b, d), f32)
+    yspec = jax.ShapeDtypeStruct((b,), f32)
+    if kind == "grad":
+        fn, args = model.grad_fn, params + (xspec, yspec, yspec)
+    elif kind == "predict":
+        fn, args = model.predict_fn, params + (xspec,)
+    elif kind == "elbo":
+        fn, args = model.elbo_fn, params + (xspec, yspec, yspec)
+    else:
+        raise ValueError(kind)
+    return to_hlo_text(jax.jit(fn).lower(*args))
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--out", default="../artifacts",
+                    help="artifacts directory")
+    ap.add_argument("--configs", default=None,
+                    help="comma list of m:d pairs, e.g. 50:8,100:8")
+    args = ap.parse_args()
+    os.makedirs(args.out, exist_ok=True)
+
+    configs = CONFIGS
+    if args.configs:
+        configs = [tuple(int(v) for v in c.split(":"))
+                   for c in args.configs.split(",")]
+
+    manifest = []
+    for m, d in configs:
+        for kind, b in (("grad", GRAD_B), ("predict", EVAL_B),
+                        ("elbo", EVAL_B)):
+            name = f"{kind}_m{m}_d{d}_b{b}"
+            path = os.path.join(args.out, name + ".hlo.txt")
+            text = lower_one(kind, m, d, b)
+            with open(path, "w") as f:
+                f.write(text)
+            manifest.append(dict(kind=kind, m=m, d=d, b=b,
+                                 file=name + ".hlo.txt",
+                                 block_b=128, dtype="f32", abi="split-chol-v2"))
+            print(f"  wrote {path} ({len(text)} chars)")
+
+    with open(os.path.join(args.out, "manifest.json"), "w") as f:
+        json.dump(dict(version=1, grad_b=GRAD_B, eval_b=EVAL_B,
+                       artifacts=manifest), f, indent=1)
+    print(f"manifest: {len(manifest)} artifacts")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,149 @@
+"""L1 Pallas kernel: fused ARD cross-covariance + feature map.
+
+This is the per-worker compute hot-spot of ADVGP: for a data block
+``X_blk`` it produces, in one pass,
+
+    K_bm   = k(X_blk, Z)                       [B, m]   (ARD SE kernel)
+    Phi    = K_bm @ L                          [B, m]   (eq. 11 feature map)
+    ktilde = a0^2 - rowsum(Phi * Phi)          [B]      (eq. 8 diag term)
+
+TPU mapping (see DESIGN.md §Hardware-Adaptation): the grid runs over
+batch tiles of size ``block_b``; each grid step keeps the X tile, the
+whole inducing matrix ``Z`` (m×d, tiny) and the whole Cholesky factor
+``L`` (m×m, <=160 KB at m=200) resident in VMEM.  The pairwise-distance
++ exp() part is VPU work, the ``K_bm @ L`` contraction is MXU work.
+``interpret=True`` everywhere because the CPU PJRT plugin cannot execute
+Mosaic custom-calls; the kernel still lowers into the same HLO module as
+the surrounding jax program, which is what the Rust runtime loads.
+
+Reverse-mode: interpret-mode ``pallas_call`` has no autodiff rule, so
+``fused_phi`` is wrapped in a ``jax.custom_vjp`` whose backward pass is
+hand-derived (and checked in pytest against ``jax.grad`` through the
+pure-jnp oracle in ``ref.py``).
+"""
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+DEFAULT_BLOCK_B = 128
+
+
+def _fused_kernel(x_ref, z_ref, l_ref, a0_ref, eta_ref,
+                  k_ref, phi_ref, kt_ref):
+    """One batch tile: [TB, d] x -> K [TB, m], Phi [TB, m], ktilde [TB]."""
+    x = x_ref[...]                       # [TB, d]  (VMEM)
+    z = z_ref[...]                       # [m, d]   (VMEM, replicated)
+    chol_l = l_ref[...]                  # [m, m]   (VMEM, replicated)
+    a0_sq = jnp.exp(2.0 * a0_ref[0])
+    eta = jnp.exp(eta_ref[...])          # [d]
+
+    # Scaled pairwise squared distances.  d is tiny (<= ~16) so the
+    # broadcasted [TB, m, d] intermediate stays well inside VMEM.
+    diff = x[:, None, :] - z[None, :, :]
+    d2 = jnp.sum(diff * diff * eta[None, None, :], axis=-1)
+    k_bm = a0_sq * jnp.exp(-0.5 * d2)    # VPU
+
+    # Feature map: MXU contraction.
+    phi = jnp.dot(k_bm, chol_l, preferred_element_type=jnp.float32)
+
+    k_ref[...] = k_bm
+    phi_ref[...] = phi
+    kt_ref[...] = a0_sq - jnp.sum(phi * phi, axis=-1)
+
+
+def _fused_phi_fwd_impl(x, z, chol_l, log_a0, log_eta, *, block_b):
+    b, d = x.shape
+    m = z.shape[0]
+    if b % block_b != 0:
+        raise ValueError(f"batch {b} not divisible by block_b {block_b}")
+    grid = (b // block_b,)
+    return pl.pallas_call(
+        _fused_kernel,
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((block_b, d), lambda i: (i, 0)),   # X: tiled
+            pl.BlockSpec((m, d), lambda i: (0, 0)),         # Z: replicated
+            pl.BlockSpec((m, m), lambda i: (0, 0)),         # L: replicated
+            pl.BlockSpec((1,), lambda i: (0,)),             # log_a0
+            pl.BlockSpec((d,), lambda i: (0,)),             # log_eta
+        ],
+        out_specs=[
+            pl.BlockSpec((block_b, m), lambda i: (i, 0)),
+            pl.BlockSpec((block_b, m), lambda i: (i, 0)),
+            pl.BlockSpec((block_b,), lambda i: (i,)),
+        ],
+        out_shape=[
+            jax.ShapeDtypeStruct((b, m), x.dtype),
+            jax.ShapeDtypeStruct((b, m), x.dtype),
+            jax.ShapeDtypeStruct((b,), x.dtype),
+        ],
+        interpret=True,
+    )(x, z, chol_l, jnp.reshape(log_a0, (1,)), log_eta)
+
+
+@functools.partial(jax.custom_vjp, nondiff_argnums=(5,))
+def fused_phi(x, z, chol_l, log_a0, log_eta, block_b=DEFAULT_BLOCK_B):
+    """Differentiable fused kernel: returns (K_bm, Phi, ktilde)."""
+    k_bm, phi, ktilde = _fused_phi_fwd_impl(
+        x, z, chol_l, log_a0, log_eta, block_b=block_b)
+    return k_bm, phi, ktilde
+
+
+def _fused_phi_fwd(x, z, chol_l, log_a0, log_eta, block_b):
+    k_bm, phi, ktilde = _fused_phi_fwd_impl(
+        x, z, chol_l, log_a0, log_eta, block_b=block_b)
+    residuals = (x, z, chol_l, log_a0, log_eta, k_bm, phi)
+    return (k_bm, phi, ktilde), residuals
+
+
+def _fused_phi_bwd(block_b, residuals, cotangents):
+    """Hand-derived VJP.
+
+    Primal:  K = a0^2 * exp(-0.5 * sum_k eta_k (x_ik - z_jk)^2)
+             Phi = K @ L
+             ktilde_i = a0^2 - sum_j Phi_ij^2
+    The cotangent paths into K are the direct one (dK) plus Phi's
+    (dPhi_tot @ L^T) where dPhi_tot folds ktilde's -2*Phi*dkt term.
+    """
+    x, z, chol_l, log_a0, log_eta, k_bm, phi = residuals
+    dk, dphi, dkt = cotangents
+    eta = jnp.exp(log_eta)
+    a0_sq = jnp.exp(2.0 * log_a0)
+
+    dphi_tot = dphi - 2.0 * phi * dkt[:, None]
+    dk_tot = dk + dphi_tot @ chol_l.T
+    d_chol_l = k_bm.T @ dphi_tot
+
+    g = dk_tot * k_bm                     # [B, m]
+    g_row = jnp.sum(g, axis=1)            # [B]
+    g_col = jnp.sum(g, axis=0)            # [m]
+
+    # dK_ij/dx_ik = -K_ij * eta_k * (x_ik - z_jk); dK_ij/dz_jk is +.
+    dx = -eta[None, :] * (g_row[:, None] * x - g @ z)
+    dz = eta[None, :] * (g.T @ x - g_col[:, None] * z)
+
+    # dK/dlog_a0 = 2K ; dktilde/dlog_a0 = 2 a0^2.
+    dlog_a0 = 2.0 * jnp.sum(g) + 2.0 * a0_sq * jnp.sum(dkt)
+
+    # dK_ij/dlog_eta_k = -0.5 * K_ij * eta_k * (x_ik - z_jk)^2, expanded
+    # so no [B, m, d] tensor is materialized:
+    #   sum_ij G_ij (x_ik - z_jk)^2
+    #     = g_row . (x.^2)_k  - 2 sum_i x_ik (g @ z)_ik + g_col . (z.^2)_k
+    quad = (g_row @ (x * x)
+            - 2.0 * jnp.sum(x * (g @ z), axis=0)
+            + g_col @ (z * z))
+    dlog_eta = -0.5 * eta * quad
+
+    return dx, dz, d_chol_l, dlog_a0, dlog_eta
+
+
+fused_phi.defvjp(_fused_phi_fwd, _fused_phi_bwd)
+
+
+def fused_phi_jnp_fallback(x, z, chol_l, log_a0, log_eta):
+    """Pure-jnp twin of ``fused_phi`` (used to A/B the lowered HLO)."""
+    from . import ref
+    return ref.fused_phi_ref(x, z, chol_l, log_a0, log_eta)

@@ -1,0 +1,134 @@
+"""Pure-jnp reference oracle for the ADVGP compute kernels.
+
+Everything here is written with plain ``jax.numpy`` (no Pallas) and is
+fully differentiable.  It serves three purposes:
+
+1. Correctness oracle for the Pallas kernel (``ard_phi.py``): pytest
+   asserts ``allclose`` between the two on swept shapes.
+2. Autodiff oracle for the hand-written ``custom_vjp`` of the fused
+   kernel: gradients of any scalar function of the kernel outputs must
+   match ``jax.grad`` through this reference.
+3. Readable statement of the math in the paper (eqs. 6, 10, 11, 15, 23).
+
+Notation follows the paper: a batch ``X`` of shape [B, d], inducing
+inputs ``Z`` of shape [m, d], ARD squared-exponential kernel
+
+    k(x, z) = a0^2 * exp(-0.5 * sum_k eta_k (x_k - z_k)^2)
+
+with ``eta = exp(log_eta)`` (so lengthscale a_k = eta_k^-1/2), and the
+feature map of eq. (11): ``phi(x) = L^T k_m(x)`` where ``L`` is the
+lower-triangular Cholesky factor of ``K_mm^{-1}`` (``K_mm^{-1} = L L^T``).
+"""
+
+import jax
+import jax.numpy as jnp
+
+# Jitter added to K_mm before inversion; scaled by a0^2 so it tracks the
+# kernel's output scale.  f32-safe for m <= ~500.
+DEFAULT_JITTER = 1e-4
+
+
+def ard_cross(x, z, log_a0, log_eta):
+    """ARD squared-exponential cross-covariance K[x, z] of shape [B, m]."""
+    eta = jnp.exp(log_eta)  # [d]
+    a0_sq = jnp.exp(2.0 * log_a0)
+    # Pairwise scaled squared distances via broadcasting: [B, m].
+    diff = x[:, None, :] - z[None, :, :]
+    d2 = jnp.sum(diff * diff * eta, axis=-1)
+    return a0_sq * jnp.exp(-0.5 * d2)
+
+
+def kmm(z, log_a0, log_eta, jitter=DEFAULT_JITTER):
+    """Inducing covariance K_mm with scaled jitter on the diagonal."""
+    a0_sq = jnp.exp(2.0 * log_a0)
+    k = ard_cross(z, z, log_a0, log_eta)
+    return k + jitter * a0_sq * jnp.eye(z.shape[0], dtype=k.dtype)
+
+
+def chol_inv_factor(z, log_a0, log_eta, jitter=DEFAULT_JITTER):
+    """Lower-triangular L with K_mm^{-1} = L L^T (paper's convention).
+
+    Computed as L = cholesky(inv(K_mm)) after symmetrizing; m is small
+    (<= a few hundred) so the explicit inverse is cheap and matches the
+    paper's appendix-A derivation exactly.
+    """
+    k = kmm(z, log_a0, log_eta, jitter)
+    kinv = jnp.linalg.inv(k)
+    kinv = 0.5 * (kinv + kinv.T)
+    return jnp.linalg.cholesky(kinv)
+
+
+def fused_phi_ref(x, z, chol_l, log_a0, log_eta):
+    """Reference for the fused L1 kernel.
+
+    Returns (K_bm, Phi, ktilde):
+      K_bm   [B, m] — cross covariance k_m(x_i)^T rows
+      Phi    [B, m] — feature map rows phi_i = L^T k_m(x_i)
+      ktilde [B]    — diag of K_nn - Phi Phi^T restricted to the batch,
+                      i.e. a0^2 - ||phi_i||^2 (eq. 8's k~_ii).
+    """
+    k_bm = ard_cross(x, z, log_a0, log_eta)
+    phi = k_bm @ chol_l
+    a0_sq = jnp.exp(2.0 * log_a0)
+    ktilde = a0_sq - jnp.sum(phi * phi, axis=-1)
+    return k_bm, phi, ktilde
+
+
+def objective_ref(mu, u, z, log_a0, log_eta, log_sigma, x, y, mask,
+                  jitter=DEFAULT_JITTER):
+    """Batch data term G = sum_i mask_i * g_i of the negative ELBO (eq. 23).
+
+    ``u`` is the upper-triangular Cholesky factor of Sigma (Sigma = U^T U);
+    only its upper triangle is read.  ``h`` (the KL, eq. 24) is *not*
+    included: in ADVGP it lives on the server inside the proximal
+    operator, so workers only ever evaluate/differentiate G.
+    """
+    u_tri = jnp.triu(u)
+    chol_l = chol_inv_factor(z, log_a0, log_eta, jitter)
+    _, phi, ktilde = fused_phi_ref(x, z, chol_l, log_a0, log_eta)
+    beta = jnp.exp(-2.0 * log_sigma)
+    e = phi @ mu - y
+    phi_u = phi @ u_tri.T            # rows: U phi_i  -> [B, m]
+    quad = jnp.sum(phi_u * phi_u, axis=-1)  # phi_i^T Sigma phi_i
+    g = (0.5 * jnp.log(2.0 * jnp.pi) + log_sigma
+         + 0.5 * beta * (e * e + quad + ktilde))
+    return jnp.sum(mask * g)
+
+
+def kl_term(mu, u):
+    """h = KL(q(w) || N(0, I)) of eq. (24), from the Cholesky factor U."""
+    u_tri = jnp.triu(u)
+    m = mu.shape[0]
+    diag = jnp.diagonal(u_tri)
+    logdet = 2.0 * jnp.sum(jnp.log(jnp.abs(diag)))
+    tr = jnp.sum(u_tri * u_tri)
+    return 0.5 * (-logdet - m + tr + mu @ mu)
+
+
+def predict_ref(mu, u, z, log_a0, log_eta, log_sigma, x,
+                jitter=DEFAULT_JITTER):
+    """Posterior predictive q(y*) = N(phi^T mu, ktilde + phi^T Sigma phi + sigma^2)."""
+    u_tri = jnp.triu(u)
+    chol_l = chol_inv_factor(z, log_a0, log_eta, jitter)
+    _, phi, ktilde = fused_phi_ref(x, z, chol_l, log_a0, log_eta)
+    mean = phi @ mu
+    phi_u = phi @ u_tri.T
+    var_f = ktilde + jnp.sum(phi_u * phi_u, axis=-1)
+    noise = jnp.exp(2.0 * log_sigma)
+    return mean, var_f + noise
+
+
+def exact_log_evidence(x, y, log_a0, log_eta, log_sigma):
+    """Exact GP log evidence log N(y | 0, K_nn + sigma^2 I) (eq. 2).
+
+    O(n^3); used only in tests to check ELBO <= evidence and the m -> n
+    tightness of the bound.
+    """
+    n = x.shape[0]
+    knn = ard_cross(x, x, log_a0, log_eta)
+    noise = jnp.exp(2.0 * log_sigma)
+    c = knn + noise * jnp.eye(n, dtype=knn.dtype)
+    chol = jnp.linalg.cholesky(c)
+    alpha = jax.scipy.linalg.cho_solve((chol, True), y)
+    logdet = 2.0 * jnp.sum(jnp.log(jnp.diagonal(chol)))
+    return -0.5 * (n * jnp.log(2.0 * jnp.pi) + logdet + y @ alpha)

@@ -1,0 +1,136 @@
+"""L2: the ADVGP worker compute graph (JAX, build-time only).
+
+Three functions get AOT-lowered to HLO text (see ``aot.py``) and executed
+by the Rust coordinator through PJRT:
+
+* ``grad_fn``     — value + full gradient of the local data term
+                    ``G(theta; batch) = sum_i mask_i g_i`` (paper eq. 15/23).
+                    This is what every worker runs per iteration.
+* ``predict_fn``  — posterior predictive mean/variance for a batch
+                    (evaluator thread: RMSE / MNLP traces).
+* ``elbo_fn``     — the batch contribution ``sum_i mask_i g_i`` plus the
+                    masked squared error, for the Appendix-C negative log
+                    evidence traces (the convex KL term ``h`` is evaluated
+                    on the Rust side: it only needs mu and U).
+
+Artifact ABI (all float32), fixed positional order — the Rust runtime
+packs literals in exactly this order:
+
+    mu        [m]      variational mean of q(w)
+    u         [m, m]   upper-tri Cholesky factor of Sigma (Sigma = U^T U)
+    z         [m, d]   inducing inputs
+    chol_l    [m, m]   lower-tri L with K_mm^{-1} = L L^T  (HOST-COMPUTED)
+    log_a0    []       ARD signal amplitude (a0 = exp(log_a0))
+    log_eta   [d]      ARD inverse squared lengthscales (eta = exp(log_eta))
+    log_sigma []       observation noise (beta = exp(-2 log_sigma))
+
+Batch inputs: x [B, d], y [B], mask [B] (1.0 for real rows, 0.0 padding).
+
+**Why chol_l is an input**: jax's CPU linalg (cholesky/inv/solve) lowers
+to typed-FFI custom-calls (API v4) that the deployment XLA
+(xla_extension 0.5.1) cannot execute.  So the O(m^3) factorization runs
+on the Rust host (it owns an SPD solver anyway), the artifact treats L
+as a leaf, and ``grad_fn`` returns the cotangent dL so the host can
+chain it through chol(inv(K_mm)) — see rust/src/grad/chain.rs.  The
+per-sample O(B m^2) work (the actual hot path) stays in XLA/Pallas.
+
+The gradient is taken by ``jax.value_and_grad`` through the Pallas fused
+kernel (``kernels.ard_phi.fused_phi``) whose custom VJP is hand-written.
+"""
+
+import jax
+import jax.numpy as jnp
+
+from .kernels import ref
+from .kernels.ard_phi import fused_phi
+
+# Toggle for A/B tests: use the pure-jnp twin instead of the Pallas kernel.
+_USE_PALLAS = True
+
+
+def _phi(x, z, chol_l, log_a0, log_eta, use_pallas=None, block_b=128):
+    use_pallas = _USE_PALLAS if use_pallas is None else use_pallas
+    if use_pallas:
+        return fused_phi(x, z, chol_l, log_a0, log_eta, block_b)
+    return ref.fused_phi_ref(x, z, chol_l, log_a0, log_eta)
+
+
+def objective(mu, u, z, chol_l, log_a0, log_eta, log_sigma, x, y, mask,
+              use_pallas=None, block_b=128):
+    """Masked local data term G (negative-ELBO part, eq. 23).
+
+    ``chol_l`` is a leaf input (see module docstring); gradients w.r.t.
+    it are the dL cotangent the Rust host chains through chol(inv(Kmm)).
+    """
+    u_tri = jnp.triu(u)
+    _, phi, ktilde = _phi(x, z, chol_l, log_a0, log_eta,
+                          use_pallas=use_pallas, block_b=block_b)
+    beta = jnp.exp(-2.0 * log_sigma)
+    e = phi @ mu - y
+    phi_u = phi @ u_tri.T
+    quad = jnp.sum(phi_u * phi_u, axis=-1)
+    g = (0.5 * jnp.log(2.0 * jnp.pi) + log_sigma
+         + 0.5 * beta * (e * e + quad + ktilde))
+    return jnp.sum(mask * g)
+
+
+def objective_full(mu, u, z, log_a0, log_eta, log_sigma, x, y, mask,
+                   jitter=ref.DEFAULT_JITTER, use_pallas=None, block_b=128):
+    """Objective with chol_l computed inside (eager/test use only —
+    contains jnp.linalg, so it is never AOT-lowered)."""
+    chol_l = ref.chol_inv_factor(z, log_a0, log_eta, jitter)
+    return objective(mu, u, z, chol_l, log_a0, log_eta, log_sigma, x, y,
+                     mask, use_pallas=use_pallas, block_b=block_b)
+
+
+def grad_fn(mu, u, z, chol_l, log_a0, log_eta, log_sigma, x, y, mask):
+    """(G, dmu, du, dz_direct, dchol_l, dlog_a0_direct, dlog_eta_direct,
+    dlog_sigma) for one batch.  The *direct* gradients exclude the
+    L-path, which the host adds by chaining dchol_l."""
+    val, grads = jax.value_and_grad(
+        objective, argnums=(0, 1, 2, 3, 4, 5, 6))(
+            mu, u, z, chol_l, log_a0, log_eta, log_sigma, x, y, mask)
+    dmu, du, dz, dchol_l, dla0, dleta, dls = grads
+    # The strictly-lower part of u never enters the objective, so autodiff
+    # already returns zeros there; triu is a no-op kept for clarity.
+    return (val, dmu, jnp.triu(du), dz, jnp.tril(dchol_l), dla0, dleta, dls)
+
+
+def predict_fn(mu, u, z, chol_l, log_a0, log_eta, log_sigma, x):
+    """(mean, var_y) with var_y = ktilde + phi^T Sigma phi + sigma^2."""
+    u_tri = jnp.triu(u)
+    _, phi, ktilde = _phi(x, z, chol_l, log_a0, log_eta)
+    mean = phi @ mu
+    phi_u = phi @ u_tri.T
+    var_f = ktilde + jnp.sum(phi_u * phi_u, axis=-1)
+    return mean, var_f + jnp.exp(2.0 * log_sigma)
+
+
+def elbo_fn(mu, u, z, chol_l, log_a0, log_eta, log_sigma, x, y, mask):
+    """(sum_i mask_i g_i, sum_i mask_i (mean_i - y_i)^2) for one batch.
+
+    -ELBO = sum-over-all-batches(g) + h(mu, U); h is computed in Rust.
+    The squared-error output lets the evaluator reuse the same pass for
+    training-RMSE diagnostics.
+    """
+    g = objective(mu, u, z, chol_l, log_a0, log_eta, log_sigma, x, y, mask)
+    mean, _ = predict_fn(mu, u, z, chol_l, log_a0, log_eta, log_sigma, x)
+    sse = jnp.sum(mask * (mean - y) ** 2)
+    return g, sse
+
+
+def init_params(m, d, key=None, z_init=None):
+    """Paper §6.1 initialization: mu = 0, U = I, unit kernel scales."""
+    if z_init is None:
+        key = key if key is not None else jax.random.PRNGKey(0)
+        z_init = jax.random.normal(key, (m, d), dtype=jnp.float32)
+    return dict(
+        mu=jnp.zeros((m,), jnp.float32),
+        u=jnp.eye(m, dtype=jnp.float32),
+        z=jnp.asarray(z_init, jnp.float32),
+        log_a0=jnp.asarray(0.0, jnp.float32),
+        # 1/d heuristic for standardized features (matches Theta::init
+        # on the Rust side): keeps the kernel responsive for any d.
+        log_eta=jnp.full((d,), -jnp.log(jnp.asarray(d, jnp.float32))),
+        log_sigma=jnp.asarray(0.0, jnp.float32),
+    )

@@ -1,0 +1,93 @@
+"""AOT path: HLO-text emission and manifest consistency."""
+
+import json
+import os
+import tempfile
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from compile import aot, model
+
+
+class TestLowering:
+    def test_grad_artifact_signature(self):
+        text = aot.lower_one("grad", 16, 4, 128)
+        assert text.startswith("HloModule")
+        # 10 inputs (incl. chol_l), 8 tuple outputs (value + 7 grads).
+        assert "f32[16,16]" in text          # u / chol_l / du / dchol_l
+        assert "f32[128,4]" in text          # x batch
+        assert "entry_computation_layout" in text
+
+    def test_no_ffi_custom_calls(self):
+        """The deployment XLA (0.5.1) cannot run typed-FFI custom-calls;
+        the artifacts must not contain any (jnp.linalg is banned from
+        lowered code — the split-Cholesky ABI exists for this)."""
+        for kind in ("grad", "predict", "elbo"):
+            text = aot.lower_one(kind, 16, 4, 128)
+            assert "custom-call" not in text, f"{kind} has custom-call"
+            assert "API_VERSION_TYPED_FFI" not in text
+
+    def test_predict_artifact_signature(self):
+        text = aot.lower_one("predict", 16, 4, 128)
+        assert "f32[128,4]" in text and "f32[128]" in text
+
+    def test_elbo_artifact_signature(self):
+        text = aot.lower_one("elbo", 16, 4, 128)
+        assert "f32[128]" in text
+
+    def test_unknown_kind_rejected(self):
+        with pytest.raises(ValueError):
+            aot.lower_one("nope", 16, 4, 128)
+
+    def test_hlo_text_has_no_64bit_id_issue(self):
+        """The interchange constraint: we must emit text, and the text
+        must parse as an HloModule header (the Rust side re-parses it)."""
+        text = aot.lower_one("predict", 8, 4, 128)
+        assert text.splitlines()[0].startswith("HloModule")
+        assert ".serialize" not in text
+
+
+class TestManifest:
+    def test_main_writes_manifest_and_files(self, monkeypatch):
+        with tempfile.TemporaryDirectory() as td:
+            monkeypatch.setattr(
+                "sys.argv", ["aot", "--out", td, "--configs", "8:4"])
+            aot.main()
+            with open(os.path.join(td, "manifest.json")) as f:
+                man = json.load(f)
+            assert man["version"] == 1
+            assert len(man["artifacts"]) == 3
+            kinds = {a["kind"] for a in man["artifacts"]}
+            assert kinds == {"grad", "predict", "elbo"}
+            for a in man["artifacts"]:
+                p = os.path.join(td, a["file"])
+                assert os.path.exists(p) and os.path.getsize(p) > 1000
+                assert a["m"] == 8 and a["d"] == 4
+                assert a["b"] % a["block_b"] == 0
+
+
+class TestLoweredNumerics:
+    """Execute the lowered HLO via jax itself (CPU) and compare with the
+    eager functions — catches lowering-order bugs in the positional ABI."""
+
+    def test_grad_roundtrip_numerics(self):
+        from compile.kernels import ref as kref
+        m, d, b = 16, 4, 128
+        params = model.init_params(m, d)
+        ks = jax.random.split(jax.random.PRNGKey(5), 3)
+        x = jax.random.normal(ks[0], (b, d))
+        y = jax.random.normal(ks[1], (b,))
+        mask = jnp.ones((b,))
+        chol_l = kref.chol_inv_factor(params["z"], params["log_a0"],
+                                      params["log_eta"])
+        args = (params["mu"], params["u"], params["z"], chol_l,
+                params["log_a0"], params["log_eta"], params["log_sigma"],
+                x, y, mask)
+        eager = model.grad_fn(*args)
+        compiled = jax.jit(model.grad_fn).lower(*args).compile()(*args)
+        for e, c in zip(eager, compiled):
+            np.testing.assert_allclose(np.asarray(e), np.asarray(c),
+                                       rtol=1e-5, atol=1e-6)

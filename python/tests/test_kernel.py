@@ -1,0 +1,125 @@
+"""L1 correctness: Pallas fused kernel vs the pure-jnp oracle.
+
+This is the core correctness signal for the compute layer: the kernel
+that ends up inside every AOT artifact must agree with ``ref.py`` in
+values AND in gradients (through the hand-written custom VJP).
+"""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from compile.kernels import ref
+from compile.kernels.ard_phi import fused_phi, DEFAULT_BLOCK_B
+
+
+def make_problem(seed, b, m, d, scale=1.0):
+    ks = jax.random.split(jax.random.PRNGKey(seed), 6)
+    x = jax.random.normal(ks[0], (b, d)) * scale
+    z = jax.random.normal(ks[1], (m, d)) * 0.8 * scale
+    log_a0 = jnp.asarray(float(jax.random.normal(ks[2], ()) * 0.3))
+    log_eta = jax.random.normal(ks[3], (d,)) * 0.3
+    chol_l = ref.chol_inv_factor(z, log_a0, log_eta)
+    return x, z, chol_l, log_a0, log_eta
+
+
+class TestForwardAgainstRef:
+    @pytest.mark.parametrize("b,m,d,block",
+                             [(128, 20, 5, 64), (256, 50, 8, 128),
+                              (128, 100, 9, 128), (384, 7, 3, 128),
+                              (128, 1, 1, 64), (512, 200, 8, 128)])
+    def test_matches_ref(self, b, m, d, block):
+        x, z, chol_l, la0, leta = make_problem(b * 7 + m, b, m, d)
+        got = fused_phi(x, z, chol_l, la0, leta, block)
+        want = ref.fused_phi_ref(x, z, chol_l, la0, leta)
+        for g, w, name in zip(got, want, ("K_bm", "Phi", "ktilde")):
+            np.testing.assert_allclose(np.asarray(g), np.asarray(w),
+                                       rtol=2e-5, atol=2e-5, err_msg=name)
+
+    def test_single_tile_grid(self):
+        """B == block_b -> grid of 1."""
+        x, z, chol_l, la0, leta = make_problem(3, 128, 10, 4)
+        got = fused_phi(x, z, chol_l, la0, leta, 128)
+        want = ref.fused_phi_ref(x, z, chol_l, la0, leta)
+        for g, w in zip(got, want):
+            np.testing.assert_allclose(np.asarray(g), np.asarray(w),
+                                       rtol=2e-5, atol=2e-5)
+
+    def test_indivisible_batch_rejected(self):
+        x, z, chol_l, la0, leta = make_problem(0, 100, 5, 3)
+        with pytest.raises(ValueError, match="not divisible"):
+            fused_phi(x, z, chol_l, la0, leta, 64)
+
+    def test_ktilde_nonnegative(self):
+        """k~_ii = diag(K_nn - Phi Phi^T) >= 0 (Schur complement, §3)."""
+        for seed in range(5):
+            x, z, chol_l, la0, leta = make_problem(seed, 256, 30, 6)
+            _, _, kt = fused_phi(x, z, chol_l, la0, leta, 128)
+            assert float(jnp.min(kt)) > -1e-4 * float(jnp.exp(2 * la0))
+
+    @settings(max_examples=15, deadline=None)
+    @given(seed=st.integers(0, 10_000),
+           m=st.integers(1, 64),
+           d=st.integers(1, 12),
+           tiles=st.integers(1, 4),
+           scale=st.floats(0.2, 3.0))
+    def test_hypothesis_shape_sweep(self, seed, m, d, tiles, scale):
+        """Property: Pallas == oracle over random shapes & input scales."""
+        b = 64 * tiles
+        x, z, chol_l, la0, leta = make_problem(seed, b, m, d, scale)
+        got = fused_phi(x, z, chol_l, la0, leta, 64)
+        want = ref.fused_phi_ref(x, z, chol_l, la0, leta)
+        for g, w in zip(got, want):
+            np.testing.assert_allclose(np.asarray(g), np.asarray(w),
+                                       rtol=5e-5, atol=5e-5)
+
+
+class TestCustomVjp:
+    @staticmethod
+    def scalar_of(kernel_fn):
+        def s(x, z, chol_l, la0, leta):
+            k, phi, kt = kernel_fn(x, z, chol_l, la0, leta)
+            # Mix all three outputs so every cotangent path is exercised.
+            return (jnp.sum(jnp.sin(k)) + jnp.sum(phi ** 2)
+                    + jnp.sum(kt * 1.7) + jnp.sum(k * phi))
+        return s
+
+    @pytest.mark.parametrize("b,m,d", [(128, 20, 5), (256, 50, 8),
+                                       (128, 3, 2), (128, 64, 9)])
+    def test_vjp_matches_autodiff(self, b, m, d):
+        x, z, chol_l, la0, leta = make_problem(b + m + d, b, m, d)
+        s_pallas = self.scalar_of(
+            lambda *a: fused_phi(*a, DEFAULT_BLOCK_B))
+        s_ref = self.scalar_of(ref.fused_phi_ref)
+        gp = jax.grad(s_pallas, argnums=(0, 1, 2, 3, 4))(
+            x, z, chol_l, la0, leta)
+        gr = jax.grad(s_ref, argnums=(0, 1, 2, 3, 4))(
+            x, z, chol_l, la0, leta)
+        for a, b_, name in zip(gp, gr, ("dx", "dz", "dL", "dla0", "dleta")):
+            np.testing.assert_allclose(np.asarray(a), np.asarray(b_),
+                                       rtol=2e-4, atol=2e-4, err_msg=name)
+
+    @settings(max_examples=10, deadline=None)
+    @given(seed=st.integers(0, 10_000), m=st.integers(2, 40),
+           d=st.integers(1, 10))
+    def test_vjp_hypothesis_sweep(self, seed, m, d):
+        x, z, chol_l, la0, leta = make_problem(seed, 128, m, d)
+        s_pallas = self.scalar_of(lambda *a: fused_phi(*a, 64))
+        s_ref = self.scalar_of(ref.fused_phi_ref)
+        gp = jax.grad(s_pallas, argnums=(1, 2, 3, 4))(x, z, chol_l, la0, leta)
+        gr = jax.grad(s_ref, argnums=(1, 2, 3, 4))(x, z, chol_l, la0, leta)
+        for a, b_ in zip(gp, gr):
+            np.testing.assert_allclose(np.asarray(a), np.asarray(b_),
+                                       rtol=5e-4, atol=5e-4)
+
+    def test_vjp_finite_difference_spotcheck(self):
+        """Independent of jax autodiff: central finite differences."""
+        x, z, chol_l, la0, leta = make_problem(42, 64, 8, 3)
+        s = self.scalar_of(lambda *a: fused_phi(*a, 64))
+        g_la0 = float(jax.grad(s, argnums=3)(x, z, chol_l, la0, leta))
+        eps = 1e-3
+        fd = (float(s(x, z, chol_l, la0 + eps, leta))
+              - float(s(x, z, chol_l, la0 - eps, leta))) / (2 * eps)
+        assert abs(g_la0 - fd) < 1e-2 * max(1.0, abs(fd))

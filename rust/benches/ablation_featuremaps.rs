@@ -1,0 +1,135 @@
+//! Ablation over the §5 feature-map family — the design choice DESIGN.md
+//! calls out.  For each map φ(·) (eq. 11 Cholesky, eq. 21 Nyström/EigenGP,
+//! eq. 22 ensemble-Nyström, RVM-style) we compute, at fixed kernel
+//! hyperparameters, the **optimal-q ELBO** (closed form: Σ* = (I+βΦᵀΦ)⁻¹,
+//! μ* = βΣ*Φᵀy) and the held-out RMSE, as m grows — the bound-quality
+//! ladder of the framework, with the exact GP evidence as the ceiling.
+//!
+//! Claims checked: (a) every map's ELBO lower-bounds the exact evidence;
+//! (b) Cholesky and Nyström span the same subspace (identical ELBOs);
+//! (c) bounds tighten monotonically-ish with m; (d) the clamped RVM map
+//! is strictly weaker (its α-cap shrinks Φ).
+
+use advgp::data::{kmeans, synth, Standardizer};
+use advgp::gp::exact::ExactGp;
+use advgp::gp::featuremap::*;
+use advgp::kernel::ArdParams;
+use advgp::linalg::{cholesky_lower, spd_inverse, Mat};
+use advgp::util::rng::Pcg64;
+use advgp::util::rmse;
+use advgp::experiments::{out_dir, print_table, Scale};
+
+/// Optimal-q negative ELBO and test RMSE for a feature map.
+fn eval_map(
+    map: &dyn FeatureMap,
+    params: &ArdParams,
+    beta: f64,
+    train: &advgp::data::Dataset,
+    test: &advgp::data::Dataset,
+) -> (f64, f64) {
+    let pb = map.phi(params, &train.x);
+    let p = map.dim();
+    let mut prec = pb.phi.gram();
+    prec.scale(beta);
+    for i in 0..p {
+        prec[(i, i)] += 1.0;
+    }
+    let sigma = spd_inverse(&prec).expect("prec SPD");
+    let mut mu = sigma.matvec(&pb.phi.tr_matvec(&train.y));
+    for v in &mut mu {
+        *v *= beta;
+    }
+    // Data term Σ g_i at (μ*, Σ*).
+    let n = train.n();
+    let mut g = 0.0;
+    let u = cholesky_lower(&sigma).expect("Σ SPD").transpose(); // upper
+    for i in 0..n {
+        let phi_i = pb.phi.row(i);
+        let e = advgp::linalg::dot(phi_i, &mu) - train.y[i];
+        let uphi = u.matvec(phi_i);
+        let quad: f64 = uphi.iter().map(|v| v * v).sum();
+        g += 0.5 * (2.0 * std::f64::consts::PI).ln() - 0.5 * beta.ln()
+            + 0.5 * beta * (e * e + quad + pb.ktilde[i]);
+    }
+    // KL(q||prior) with Σ = UᵀU.
+    let logdet: f64 = u.diag().iter().map(|v| 2.0 * v.abs().ln()).sum();
+    let tr: f64 = u.data.iter().map(|v| v * v).sum();
+    let musq: f64 = mu.iter().map(|v| v * v).sum();
+    let kl = 0.5 * (-logdet - p as f64 + tr + musq);
+    let neg_elbo = g + kl;
+    // Held-out RMSE with the optimal q.
+    let pt = map.phi(params, &test.x);
+    let mean = pt.phi.matvec(&mu);
+    (-neg_elbo, rmse(&mean, &test.y))
+}
+
+fn main() {
+    let scale = Scale::from_env();
+    let n_train = scale.pick(800, 3_000, 20_000);
+    let n_test = scale.pick(200, 600, 4_000);
+    let ms: Vec<usize> = scale.pick(vec![10, 25], vec![10, 25, 50, 100],
+                                    vec![25, 50, 100, 200]);
+
+    let mut ds = synth::friedman(n_train + n_test, 4, 0.4, 77);
+    let mut rng = Pcg64::seeded(77);
+    ds.shuffle(&mut rng);
+    let (mut train, mut test) = ds.split(n_test);
+    let st = Standardizer::fit(&train);
+    st.apply(&mut train);
+    st.apply(&mut test);
+    let d = train.d();
+    let params = ArdParams { log_a0: 0.0, log_eta: vec![-(d as f64).ln(); d] };
+    let log_sigma: f64 = -0.5;
+    let beta = (-2.0 * log_sigma).exp();
+
+    // Exact evidence ceiling (feasible at small/ci scales only).
+    let exact = if n_train <= 4000 {
+        Some(ExactGp::fit(params.clone(), log_sigma, train.x.clone(), &train.y)
+            .log_evidence())
+    } else {
+        None
+    };
+
+    let mut rows = Vec::new();
+    for &m in &ms {
+        let z = kmeans::kmeans(&train.x, m, 20, &mut rng);
+        let half = m / 2;
+        let z1 = Mat::from_vec(half, d, z.data[..half * d].to_vec());
+        let z2 = Mat::from_vec(m - half, d, z.data[half * d..].to_vec());
+        let chol = InducingChol::build(&params, z.clone());
+        let nys = Nystrom::build(&params, z.clone());
+        let ens = EnsembleNystrom::build(&params, vec![z1, z2]);
+        let rvm = Rvm::build(&params, z.clone(), &vec![1.0; m]);
+        let maps: Vec<(&str, &dyn FeatureMap)> = vec![
+            ("chol (eq.11)", &chol),
+            ("nystrom (eq.21)", &nys),
+            ("ensemble (eq.22)", &ens),
+            ("rvm (§5)", &rvm),
+        ];
+        for (name, map) in maps {
+            let (elbo, r) = eval_map(map, &params, beta, &train, &test);
+            if let Some(ev) = exact {
+                assert!(elbo <= ev + 1e-3, "{name} m={m}: ELBO {elbo} > evidence {ev}");
+            }
+            rows.push(vec![
+                format!("{m}"),
+                name.to_string(),
+                format!("{elbo:.2}"),
+                format!("{r:.4}"),
+            ]);
+        }
+    }
+    let mut table = print_table(
+        &format!(
+            "feature-map ablation: optimal-q ELBO and test RMSE (n={n_train}, exact evidence = {})",
+            exact.map(|e| format!("{e:.2}")).unwrap_or_else(|| "n/a".into())
+        ),
+        &["m", "map", "ELBO (higher=better)", "test RMSE"],
+        &rows,
+    );
+    if let Some(ev) = exact {
+        table.push_str(&format!("\nexact GP log evidence: {ev:.2}\n"));
+        println!("\nexact GP log evidence: {ev:.2} (every ELBO above is ≤ this)");
+    }
+    std::fs::write(out_dir().join("ablation_featuremaps.md"), table).unwrap();
+}

@@ -1,0 +1,59 @@
+//! Reproduces **Figure 1**: RMSE as a function of training time for
+//! ADVGP, DistGP-GD, DistGP-LBFGS and SVIGP (m ∈ {100, 200} panels).
+//!
+//! Emits one CSV trace per (method, m) under target/bench_out/fig1/ and
+//! prints RMSE at 25/50/75/100% of the budget.  The paper's claims to
+//! reproduce: ADVGP reduces RMSE fastest; SVIGP tracks it early then
+//! lags; DistGP-LBFGS converges early but to a worse point.
+
+use advgp::experiments::methods::*;
+use advgp::experiments::{flight_problem, out_dir, print_table, Scale};
+use advgp::ps::metrics::write_trace_csv;
+
+fn rmse_at_fraction(r: &advgp::baselines::BaselineResult, frac: f64, budget: f64) -> f64 {
+    let cutoff = frac * budget;
+    r.trace
+        .iter()
+        .filter(|t| t.t_secs <= cutoff)
+        .map(|t| t.rmse)
+        .fold(f64::INFINITY, f64::min)
+}
+
+fn main() {
+    let scale = Scale::from_env();
+    let n_train = scale.pick(4_000, 40_000, 700_000);
+    let n_test = scale.pick(800, 8_000, 100_000);
+    let ms: Vec<usize> = scale.pick(vec![25], vec![100, 200], vec![100, 200]);
+    let budget = scale.pick(2.0, 15.0, 600.0);
+    let dir = out_dir().join("fig1");
+
+    for &m in &ms {
+        let p = flight_problem(n_train, n_test, m, 7);
+        let y_std = p.standardizer.y_std;
+        let opts = MethodOpts { budget_secs: budget, tau: 32, ..Default::default() };
+        let sync = MethodOpts { budget_secs: budget, tau: 0, ..Default::default() };
+        let runs = vec![
+            ("advgp", run_advgp(&p, &opts)),
+            ("distgp_gd", run_distgp_gd_method(&p, &sync)),
+            ("distgp_lbfgs", run_distgp_lbfgs_method(&p, &sync)),
+            ("svigp", run_svigp_method(&p, &opts)),
+        ];
+        let mut rows = Vec::new();
+        for (name, r) in &runs {
+            write_trace_csv(&dir.join(format!("{name}_m{m}.csv")), &r.trace).unwrap();
+            rows.push(vec![
+                name.to_string(),
+                format!("{:.4}", rmse_at_fraction(r, 0.25, budget) * y_std),
+                format!("{:.4}", rmse_at_fraction(r, 0.50, budget) * y_std),
+                format!("{:.4}", rmse_at_fraction(r, 0.75, budget) * y_std),
+                format!("{:.4}", final_rmse(r) * y_std),
+            ]);
+        }
+        print_table(
+            &format!("Fig.1 panel m={m}: RMSE at fraction of {budget:.0}s budget"),
+            &["Method", "25%", "50%", "75%", "100%"],
+            &rows,
+        );
+    }
+    println!("\ntraces in {}", dir.display());
+}

@@ -1,0 +1,95 @@
+//! §Perf micro-benchmarks over the hot paths of all three layers'
+//! Rust-side counterparts:
+//!
+//! * gradient engines (native vs XLA/Pallas artifact) per 1024-row block
+//! * the fused feature-map forward (K_bm, Φ, ktilde)
+//! * the server update (ADADELTA + prox), serial vs element-wise sharded
+//! * K_mm factorization chain (chol + inverse + L⁻¹)
+//! * k-means init, prediction path
+//!
+//! Used by the performance pass; results recorded in EXPERIMENTS.md §Perf.
+
+use advgp::data::synth;
+use advgp::experiments::harness::bench;
+use advgp::gp::featuremap::{FeatureMap, InducingChol};
+use advgp::gp::{SparseGp, Theta, ThetaLayout};
+use advgp::grad::chain::LChain;
+use advgp::grad::{native::NativeEngine, GradEngine};
+use advgp::opt::AdaDelta;
+use advgp::ps::server::apply_update;
+use advgp::runtime::{Manifest, XlaEngine};
+use advgp::util::rng::Pcg64;
+
+fn main() {
+    let (m, d, b) = (100usize, 8usize, 1024usize);
+    let layout = ThetaLayout::new(m, d);
+    let ds = synth::flight_like(b, 3);
+    let mut rng = Pcg64::seeded(5);
+    let z = advgp::data::kmeans::kmeans(&ds.x, m, 10, &mut rng);
+    let theta = Theta::init(layout, &z);
+    println!("hot-path microbenches: m={m} d={d} block={b}\n");
+
+    // L3-side forward: fused feature map (the Pallas kernel's Rust twin).
+    let map = InducingChol::build(&theta.ard(), theta.z_mat());
+    bench("phi_forward (K_bm+Phi+ktilde, 1024x100)", 3, 1.0, || {
+        let pb = map.phi(&theta.ard(), &ds.x);
+        std::hint::black_box(pb.ktilde.len());
+    });
+
+    // Native gradient engine per block.
+    let mut nat = NativeEngine::new(layout);
+    bench("native_grad (1024 rows)", 2, 1.5, || {
+        let r = nat.grad(&theta.data, &ds.x, &ds.y);
+        std::hint::black_box(r.value);
+    });
+
+    // XLA (JAX+Pallas artifact) engine per block, if artifacts exist.
+    let man_dir = std::path::Path::new(env!("CARGO_MANIFEST_DIR")).join("artifacts");
+    match Manifest::load(&man_dir).and_then(|man| XlaEngine::from_manifest(&man, m, d)) {
+        Ok(mut xla) => {
+            bench("xla_grad (1024 rows, m=100 d=8 artifact)", 2, 1.5, || {
+                let r = xla.grad(&theta.data, &ds.x, &ds.y);
+                std::hint::black_box(r.value);
+            });
+        }
+        Err(e) => println!("(skipping xla_grad: {e:#})"),
+    }
+
+    // K_mm factorization chain (once per θ per worker iteration).
+    bench("lchain_build (chol+inv+Linv, m=100)", 3, 1.0, || {
+        let c = LChain::build(theta.ard(), theta.z_mat());
+        std::hint::black_box(c.chol_l.data.len());
+    });
+
+    // Server update: ADADELTA + prox, serial vs sharded.
+    let dim = layout.len();
+    let grad: Vec<f64> = (0..dim).map(|i| (i as f64 * 0.37).sin()).collect();
+    for shards in [1usize, 2, 4, 8] {
+        let mut th = theta.data.clone();
+        let mut ada = AdaDelta::default_for(dim);
+        bench(
+            &format!("server_update dim={dim} shards={shards}"),
+            3,
+            0.5,
+            || {
+                apply_update(&layout, &mut th, &mut ada, &grad, 0.5, 0.1, shards);
+                std::hint::black_box(th[0]);
+            },
+        );
+    }
+
+    // Prediction path (evaluator cadence driver).
+    let gp = SparseGp::new(theta.clone());
+    bench("predict (1024 rows)", 3, 1.0, || {
+        let (mean, _var) = gp.predict(&ds.x);
+        std::hint::black_box(mean.len());
+    });
+
+    // k-means init (run once per experiment).
+    let big = synth::flight_like(20_000, 9);
+    bench("kmeans m=100 on 20K rows (5 iters)", 1, 2.0, || {
+        let mut r = Pcg64::seeded(11);
+        let c = advgp::data::kmeans::kmeans(&big.x, m, 5, &mut r);
+        std::hint::black_box(c.data.len());
+    });
+}

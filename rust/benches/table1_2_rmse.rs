@@ -1,0 +1,56 @@
+//! Reproduces **Table 1** (700K flight) and **Table 2** (2M flight):
+//! RMSE for m ∈ {50, 100, 200} across ADVGP (Prox GP), DistGP-GD,
+//! DistGP-LBFGS and SVIGP, each given the same wall-clock budget.
+//!
+//! Scale via ADVGP_BENCH_SCALE = ci | small (default) | paper.
+//! The paper's claim to reproduce: ADVGP's RMSE is comparable or better
+//! in every column, and RMSE decreases with m for the prox methods.
+
+use advgp::experiments::methods::*;
+use advgp::experiments::{flight_problem, out_dir, print_table, Scale};
+
+fn main() {
+    let scale = Scale::from_env();
+    let sizes: Vec<(&str, usize, usize)> = vec![
+        ("table1-700K-equivalent", scale.pick(4_000, 40_000, 700_000),
+         scale.pick(800, 8_000, 100_000)),
+        ("table2-2M-equivalent", scale.pick(8_000, 120_000, 2_000_000),
+         scale.pick(800, 8_000, 100_000)),
+    ];
+    let ms: Vec<usize> = scale.pick(vec![25], vec![50, 100, 200], vec![50, 100, 200]);
+    let budget = scale.pick(2.0, 12.0, 600.0);
+
+    let mut all = String::new();
+    for (label, n_train, n_test) in sizes {
+        let mut rows: Vec<Vec<String>> = vec![
+            vec!["ADVGP (Prox GP)".into()],
+            vec!["DistGP-GD".into()],
+            vec!["DistGP-LBFGS".into()],
+            vec!["SVIGP".into()],
+        ];
+        for &m in &ms {
+            let p = flight_problem(n_train, n_test, m, 42);
+            let y_std = p.standardizer.y_std;
+            let opts = MethodOpts { budget_secs: budget, tau: 32, ..Default::default() };
+            let sync = MethodOpts { budget_secs: budget, tau: 0, ..Default::default() };
+            let advgp = run_advgp(&p, &opts);
+            let gd = run_distgp_gd_method(&p, &sync);
+            let lbfgs = run_distgp_lbfgs_method(&p, &sync);
+            let svi = run_svigp_method(&p, &opts);
+            // Report in original target units (delay minutes), like the paper.
+            for (row, r) in rows.iter_mut().zip([&advgp, &gd, &lbfgs, &svi]) {
+                row.push(format!("{:.4}", final_rmse(r) * y_std));
+            }
+        }
+        let mut header = vec!["Method"];
+        let m_labels: Vec<String> = ms.iter().map(|m| format!("m = {m}")).collect();
+        header.extend(m_labels.iter().map(|s| s.as_str()));
+        all.push_str(&print_table(
+            &format!("{label} (n_train per scale, budget {budget:.0}s/cell)"),
+            &header,
+            &rows,
+        ));
+    }
+    std::fs::write(out_dir().join("table1_2_rmse.md"), all).unwrap();
+    println!("\nwrote {}", out_dir().join("table1_2_rmse.md").display());
+}

@@ -1,0 +1,285 @@
+//! DistGP (Gal et al., 2014) substitutes: bulk-synchronous distributed
+//! optimization of the full negative ELBO −L = Σ_k G_k + h.
+//!
+//! * `DistGP-GD` — synchronous (τ=0) distributed ADADELTA gradient
+//!   descent on **all** parameters (variational + hypers), with the KL
+//!   gradient (eqs. 35–36) added explicitly instead of the prox step.
+//! * `DistGP-LBFGS` — master-side L-BFGS: every function/gradient
+//!   evaluation is one synchronous map-reduce over the shards (which is
+//!   exactly why its wall-clock per iteration is large — the effect the
+//!   paper's Fig. 1 shows).
+//!
+//! Both run the workers as scoped threads with a full barrier per
+//! evaluation — the MapReduce behaviour the paper compares against.
+
+use super::BaselineResult;
+use crate::data::Dataset;
+use crate::gp::{SparseGp, Theta, ThetaLayout};
+use crate::grad::EngineFactory;
+use crate::linalg::Mat;
+use crate::opt::{lbfgs::lbfgs_step, AdaDelta, Lbfgs};
+use crate::ps::metrics::TraceRow;
+use crate::util::{mnlp, rmse, Stopwatch};
+
+/// ∇h (eqs. 35–36): dμ = μ; dU = U − diag(1/U_ii), upper triangle only.
+fn kl_grad(layout: &ThetaLayout, theta: &[f64], out: &mut [f64]) {
+    let m = layout.m;
+    for (o, v) in out[layout.mu_range()].iter_mut().zip(&theta[layout.mu_range()]) {
+        *o += v;
+    }
+    let ur = layout.u_range();
+    let u = &theta[ur.clone()];
+    let go = &mut out[ur];
+    for i in 0..m {
+        for j in i..m {
+            let idx = i * m + j;
+            go[idx] += u[idx];
+            if i == j {
+                let d = u[idx];
+                let safe = if d.abs() < 1e-8 { 1e-8f64.copysign(d) } else { d };
+                go[idx] -= 1.0 / safe;
+            }
+        }
+    }
+}
+
+/// One synchronous map-reduce pass: f(θ) = Σ_k G_k + h, ∇f likewise.
+/// Workers run in scoped threads (a full barrier, as in MapReduce).
+fn full_eval(
+    layout: &ThetaLayout,
+    theta: &[f64],
+    shards: &[Dataset],
+    factory: &EngineFactory,
+) -> (f64, Vec<f64>) {
+    let dim = layout.len();
+    let partials: Vec<(f64, Vec<f64>)> = std::thread::scope(|scope| {
+        let handles: Vec<_> = shards
+            .iter()
+            .enumerate()
+            .map(|(k, shard)| {
+                let factory = factory.clone();
+                scope.spawn(move || {
+                    let mut engine = factory(k);
+                    let r = engine.grad(theta, &shard.x, &shard.y);
+                    (r.value, r.grad)
+                })
+            })
+            .collect();
+        handles.into_iter().map(|h| h.join().unwrap()).collect()
+    });
+    let mut value = 0.0;
+    let mut grad = vec![0.0; dim];
+    for (v, g) in partials {
+        value += v;
+        for (a, b) in grad.iter_mut().zip(&g) {
+            *a += b;
+        }
+    }
+    // Add the convex KL term h(μ, U).
+    let th = Theta { layout: *layout, data: theta.to_vec() };
+    value += th.kl();
+    kl_grad(layout, theta, &mut grad);
+    (value, grad)
+}
+
+pub struct DistGpConfig {
+    pub iters: u64,
+    pub lr: f64,
+    pub eval_every: u64,
+    pub time_limit_secs: Option<f64>,
+    /// L-BFGS memory (LBFGS mode only).
+    pub lbfgs_mem: usize,
+}
+
+impl Default for DistGpConfig {
+    fn default() -> Self {
+        Self { iters: 300, lr: 1.0, eval_every: 10, time_limit_secs: None, lbfgs_mem: 10 }
+    }
+}
+
+fn snapshot(
+    layout: ThetaLayout,
+    theta: &[f64],
+    test: &Dataset,
+    t: u64,
+    clock: &Stopwatch,
+    neg_elbo: f64,
+    trace: &mut Vec<TraceRow>,
+) {
+    let gp = SparseGp::new(Theta { layout, data: theta.to_vec() });
+    let (mean, var) = gp.predict(&test.x);
+    trace.push(TraceRow {
+        t_secs: clock.secs(),
+        version: t,
+        rmse: rmse(&mean, &test.y),
+        mnlp: mnlp(&mean, &var, &test.y),
+        neg_elbo: Some(neg_elbo),
+    });
+}
+
+/// DistGP-GD: synchronous distributed ADADELTA descent on −L.
+pub fn run_distgp_gd(
+    cfg: &DistGpConfig,
+    theta0: Theta,
+    shards: &[Dataset],
+    test: &Dataset,
+    factory: EngineFactory,
+) -> BaselineResult {
+    let layout = theta0.layout;
+    let clock = Stopwatch::start();
+    let mut theta = theta0.data;
+    let mut ada = AdaDelta::default_for(theta.len());
+    let mut trace = Vec::new();
+    for t in 0..cfg.iters {
+        if let Some(limit) = cfg.time_limit_secs {
+            if clock.secs() > limit {
+                break;
+            }
+        }
+        let (value, grad) = full_eval(&layout, &theta, shards, &factory);
+        ada.apply(&mut theta, &grad, cfg.lr);
+        // Keep U structurally upper-triangular.
+        let mut th = Theta { layout, data: theta };
+        th.enforce_triu();
+        theta = th.data;
+        if t % cfg.eval_every == 0 || t + 1 == cfg.iters {
+            snapshot(layout, &theta, test, t, &clock, value, &mut trace);
+        }
+    }
+    BaselineResult { theta, trace, wall_secs: clock.secs() }
+}
+
+/// DistGP-LBFGS: master-side L-BFGS over synchronous map-reduce evals.
+pub fn run_distgp_lbfgs(
+    cfg: &DistGpConfig,
+    theta0: Theta,
+    shards: &[Dataset],
+    test: &Dataset,
+    factory: EngineFactory,
+) -> BaselineResult {
+    let layout = theta0.layout;
+    let clock = Stopwatch::start();
+    let mut theta = theta0.data;
+    let mut opt = Lbfgs::new(cfg.lbfgs_mem);
+    let mut trace = Vec::new();
+    let (mut fx, mut gx) = full_eval(&layout, &theta, shards, &factory);
+    for t in 0..cfg.iters {
+        if let Some(limit) = cfg.time_limit_secs {
+            if clock.secs() > limit {
+                break;
+            }
+        }
+        let (nx, nf, _evals) = lbfgs_step(&mut opt, &theta, fx, &gx, |cand| {
+            full_eval(&layout, cand, shards, &factory)
+        });
+        let stalled = (fx - nf).abs() < 1e-10 * fx.abs().max(1.0);
+        theta = nx;
+        let mut th = Theta { layout, data: theta };
+        th.enforce_triu();
+        theta = th.data;
+        let r = full_eval(&layout, &theta, shards, &factory);
+        fx = r.0;
+        gx = r.1;
+        if t % cfg.eval_every == 0 || t + 1 == cfg.iters || stalled {
+            snapshot(layout, &theta, test, t, &clock, fx, &mut trace);
+        }
+        if stalled {
+            break; // converged (possibly to the suboptimal point §6.1 sees)
+        }
+    }
+    BaselineResult { theta, trace, wall_secs: clock.secs() }
+}
+
+/// Expose the KL gradient for tests.
+pub fn kl_grad_for_test(layout: &ThetaLayout, theta: &[f64]) -> Vec<f64> {
+    let mut g = vec![0.0; layout.len()];
+    kl_grad(layout, theta, &mut g);
+    g
+}
+
+#[allow(dead_code)]
+fn unused(_: &Mat) {}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::data::{kmeans, synth, Standardizer};
+    use crate::grad::native_factory;
+    use crate::util::rng::Pcg64;
+
+    fn setup(seed: u64) -> (Dataset, Dataset, Theta, ThetaLayout) {
+        let mut ds = synth::friedman(1200, 4, 0.4, seed);
+        let mut rng = Pcg64::seeded(seed);
+        ds.shuffle(&mut rng);
+        let (mut tr, mut te) = ds.split(250);
+        let st = Standardizer::fit(&tr);
+        st.apply(&mut tr);
+        st.apply(&mut te);
+        let layout = ThetaLayout::new(10, 4);
+        let z = kmeans::kmeans(&tr.x, 10, 10, &mut rng);
+        (tr, te, Theta::init(layout, &z), layout)
+    }
+
+    #[test]
+    fn kl_grad_matches_fd() {
+        let layout = ThetaLayout::new(4, 2);
+        let mut rng = Pcg64::seeded(9);
+        let z = Mat::from_vec(4, 2, (0..8).map(|_| rng.normal()).collect());
+        let mut th = Theta::init(layout, &z);
+        for v in th.mu_mut() {
+            *v = rng.normal();
+        }
+        let mut u = Mat::eye(4);
+        for i in 0..4 {
+            u[(i, i)] = 0.5 + rng.next_f64();
+            for j in i + 1..4 {
+                u[(i, j)] = rng.normal() * 0.2;
+            }
+        }
+        th.set_u_mat(&u);
+        let g = kl_grad_for_test(&layout, &th.data);
+        let eps = 1e-6;
+        for i in 0..layout.len() {
+            let mut tp = th.clone();
+            tp.data[i] += eps;
+            let mut tm = th.clone();
+            tm.data[i] -= eps;
+            let fd = (tp.kl() - tm.kl()) / (2.0 * eps);
+            assert!(
+                (fd - g[i]).abs() < 1e-5 * fd.abs().max(1.0).max(g[i].abs()),
+                "coord {i}: {fd} vs {}",
+                g[i]
+            );
+        }
+    }
+
+    #[test]
+    fn distgp_gd_learns() {
+        let (tr, te, th, layout) = setup(21);
+        let shards = tr.shard(3);
+        let cfg = DistGpConfig { iters: 150, eval_every: 25, ..Default::default() };
+        let res = run_distgp_gd(&cfg, th, &shards, &te, native_factory(layout));
+        let last = res.trace.last().unwrap();
+        let base = rmse(&vec![0.0; te.n()], &te.y);
+        assert!(last.rmse < 0.65 * base, "{} vs {}", last.rmse, base);
+        // -ELBO decreased.
+        let first = res.trace.first().unwrap().neg_elbo.unwrap();
+        assert!(last.neg_elbo.unwrap() < first);
+    }
+
+    #[test]
+    fn distgp_lbfgs_decreases_objective_monotonically() {
+        let (tr, te, th, layout) = setup(23);
+        let shards = tr.shard(2);
+        let cfg = DistGpConfig { iters: 30, eval_every: 1, ..Default::default() };
+        let res = run_distgp_lbfgs(&cfg, th, &shards, &te, native_factory(layout));
+        let elbos: Vec<f64> = res.trace.iter().filter_map(|r| r.neg_elbo).collect();
+        assert!(elbos.len() >= 2);
+        for w in elbos.windows(2) {
+            assert!(w[1] <= w[0] + 1e-6 * w[0].abs(), "not monotone: {w:?}");
+        }
+        // LBFGS converges quickly to a decent (possibly suboptimal) fit.
+        let base = rmse(&vec![0.0; te.n()], &te.y);
+        assert!(res.trace.last().unwrap().rmse < base);
+    }
+}

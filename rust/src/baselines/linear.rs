@@ -1,0 +1,151 @@
+//! SGD linear regression — the Vowpal-Wabbit stand-in of §6.3.
+//!
+//! Linear-in-features model with bias, trained by SGD with an inverse
+//! decay schedule over shuffled epochs (VW's default regime: online
+//! least squares).  Features/targets are expected standardized by the
+//! caller (as for every other method).
+
+use super::BaselineResult;
+use crate::data::Dataset;
+use crate::ps::metrics::TraceRow;
+use crate::util::rng::Pcg64;
+use crate::util::{rmse, Stopwatch};
+
+pub struct LinearConfig {
+    pub epochs: usize,
+    pub lr0: f64,
+    pub decay: f64,
+    pub l2: f64,
+    pub eval_every_rows: usize,
+    pub seed: u64,
+    pub time_limit_secs: Option<f64>,
+}
+
+impl Default for LinearConfig {
+    fn default() -> Self {
+        Self {
+            epochs: 3,
+            lr0: 0.05,
+            decay: 1e-5,
+            l2: 1e-8,
+            eval_every_rows: 50_000,
+            seed: 0,
+            time_limit_secs: None,
+        }
+    }
+}
+
+pub struct LinearModel {
+    pub w: Vec<f64>,
+    pub b: f64,
+}
+
+impl LinearModel {
+    pub fn predict_row(&self, x: &[f64]) -> f64 {
+        self.b + crate::linalg::dot(&self.w, x)
+    }
+
+    pub fn predict(&self, x: &crate::linalg::Mat) -> Vec<f64> {
+        (0..x.rows).map(|r| self.predict_row(x.row(r))).collect()
+    }
+}
+
+pub fn run_linear(
+    cfg: &LinearConfig,
+    data: &Dataset,
+    test: &Dataset,
+) -> (LinearModel, BaselineResult) {
+    let d = data.d();
+    let n = data.n();
+    let clock = Stopwatch::start();
+    let mut model = LinearModel { w: vec![0.0; d], b: 0.0 };
+    let mut rng = Pcg64::new(cfg.seed, 17);
+    let mut order: Vec<usize> = (0..n).collect();
+    let mut trace = Vec::new();
+    let mut seen: u64 = 0;
+    'outer: for _epoch in 0..cfg.epochs {
+        rng.shuffle(&mut order);
+        for &i in &order {
+            let x = data.x.row(i);
+            let err = model.predict_row(x) - data.y[i];
+            let lr = cfg.lr0 / (1.0 + cfg.decay * seen as f64);
+            for (wj, xj) in model.w.iter_mut().zip(x) {
+                *wj -= lr * (err * xj + cfg.l2 * *wj);
+            }
+            model.b -= lr * err;
+            seen += 1;
+            if seen as usize % cfg.eval_every_rows == 0 {
+                let pred = model.predict(&test.x);
+                trace.push(TraceRow {
+                    t_secs: clock.secs(),
+                    version: seen,
+                    rmse: rmse(&pred, &test.y),
+                    mnlp: f64::NAN, // point predictor: no likelihood
+                    neg_elbo: None,
+                });
+                if let Some(limit) = cfg.time_limit_secs {
+                    if clock.secs() > limit {
+                        break 'outer;
+                    }
+                }
+            }
+        }
+    }
+    let pred = model.predict(&test.x);
+    trace.push(TraceRow {
+        t_secs: clock.secs(),
+        version: seen,
+        rmse: rmse(&pred, &test.y),
+        mnlp: f64::NAN,
+        neg_elbo: None,
+    });
+    let wall = clock.secs();
+    (model, BaselineResult { theta: vec![], trace, wall_secs: wall })
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::data::{synth, Standardizer};
+    use crate::util::rng::Pcg64;
+
+    #[test]
+    fn recovers_linear_ground_truth() {
+        // Purely linear data: SGD must reach near-OLS accuracy.
+        let mut ds = synth::friedman(4000, 4, 0.0, 31);
+        for r in 0..ds.n() {
+            let x = ds.x.row(r);
+            ds.y[r] = 2.0 * x[0] - 1.0 * x[1] + 0.5 * x[2] + 3.0;
+        }
+        let mut rng = Pcg64::seeded(31);
+        ds.shuffle(&mut rng);
+        let (mut tr, mut te) = ds.split(500);
+        let st = Standardizer::fit(&tr);
+        st.apply(&mut tr);
+        st.apply(&mut te);
+        let (model, res) = run_linear(&LinearConfig::default(), &tr, &te);
+        let pred = model.predict(&te.x);
+        assert!(rmse(&pred, &te.y) < 0.05, "rmse {}", rmse(&pred, &te.y));
+        assert!(!res.trace.is_empty());
+    }
+
+    #[test]
+    fn underfits_nonlinear_data() {
+        // On friedman it must beat the mean but stay well above the
+        // noise floor — the gap the GP closes (the §6.3 comparison).
+        let mut ds = synth::friedman(4000, 4, 0.3, 33);
+        let mut rng = Pcg64::seeded(33);
+        ds.shuffle(&mut rng);
+        let (mut tr, mut te) = ds.split(500);
+        let st = Standardizer::fit(&tr);
+        st.apply(&mut tr);
+        st.apply(&mut te);
+        let (model, _) = run_linear(&LinearConfig::default(), &tr, &te);
+        let pred = model.predict(&te.x);
+        let lin = rmse(&pred, &te.y);
+        let mean_rmse = rmse(&vec![0.0; te.n()], &te.y);
+        let noise_floor = 0.3 / st.y_std;
+        assert!(lin < 0.95 * mean_rmse, "beats mean: {lin} vs {mean_rmse}");
+        assert!(lin > 2.0 * noise_floor, "must underfit: {lin} vs {noise_floor}");
+    }
+}

@@ -1,0 +1,37 @@
+//! The mean predictor (§6.3's weakest baseline).
+
+use crate::data::Dataset;
+use crate::util::rmse;
+
+pub struct MeanPredictor {
+    pub mean: f64,
+}
+
+impl MeanPredictor {
+    pub fn fit(data: &Dataset) -> Self {
+        Self { mean: data.y.iter().sum::<f64>() / data.n().max(1) as f64 }
+    }
+
+    pub fn rmse_on(&self, test: &Dataset) -> f64 {
+        rmse(&vec![self.mean; test.n()], &test.y)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::data::synth;
+
+    #[test]
+    fn mean_is_fit_and_rmse_is_std() {
+        let ds = synth::friedman(2000, 4, 0.1, 41);
+        let mp = MeanPredictor::fit(&ds);
+        let want_mean = ds.y.iter().sum::<f64>() / 2000.0;
+        assert!((mp.mean - want_mean).abs() < 1e-12);
+        // RMSE of the mean predictor on the training set == the std.
+        let std = (ds.y.iter().map(|v| (v - want_mean).powi(2)).sum::<f64>()
+            / 2000.0)
+            .sqrt();
+        assert!((mp.rmse_on(&ds) - std).abs() < 1e-9);
+    }
+}

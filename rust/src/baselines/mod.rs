@@ -1,0 +1,27 @@
+//! Baselines reproduced from the paper's evaluation (§6):
+//!
+//! * [`svigp`] — SVIGP (Hensman et al., 2013): single-machine stochastic
+//!   variational inference with closed-form natural-gradient updates of
+//!   q(w) and ADADELTA on the hyperparameters.
+//! * [`distgp`] — DistGP (Gal et al., 2014) substitutes: bulk-synchronous
+//!   distributed optimization of the same ELBO with plain gradient
+//!   descent (`DistGP-GD`) or master-side L-BFGS (`DistGP-LBFGS`).
+//!   See DESIGN.md §4 for the substitution rationale.
+//! * [`linear`] — SGD linear regression (the Vowpal-Wabbit stand-in of
+//!   §6.3).
+//! * [`mean`] — the mean predictor.
+
+pub mod distgp;
+pub mod linear;
+pub mod mean;
+pub mod svigp;
+
+use crate::ps::metrics::TraceRow;
+
+/// Common result shape so benches can treat all methods uniformly.
+pub struct BaselineResult {
+    /// Final parameters (method-specific meaning; empty for mean/linear).
+    pub theta: Vec<f64>,
+    pub trace: Vec<TraceRow>,
+    pub wall_secs: f64,
+}

@@ -1,0 +1,129 @@
+//! CSV I/O for datasets and metric traces, plus a tiny least-squares
+//! helper used by tests and the linear baseline's closed-form check.
+
+use super::Dataset;
+use crate::linalg::{spd_inverse, Mat};
+use anyhow::{Context, Result};
+use std::io::{BufRead, BufWriter, Write};
+use std::path::Path;
+
+/// Write a dataset as CSV with header `f0,...,fD,y`.
+pub fn write_dataset(path: &Path, ds: &Dataset) -> Result<()> {
+    let f = std::fs::File::create(path)
+        .with_context(|| format!("create {path:?}"))?;
+    let mut w = BufWriter::new(f);
+    let header: Vec<String> = (0..ds.d()).map(|i| format!("f{i}")).collect();
+    writeln!(w, "{},y", header.join(","))?;
+    for r in 0..ds.n() {
+        for v in ds.x.row(r) {
+            write!(w, "{v},")?;
+        }
+        writeln!(w, "{}", ds.y[r])?;
+    }
+    Ok(())
+}
+
+/// Read a dataset written by `write_dataset` (last column is the target).
+pub fn read_dataset(path: &Path) -> Result<Dataset> {
+    let f = std::fs::File::open(path).with_context(|| format!("open {path:?}"))?;
+    let mut lines = std::io::BufReader::new(f).lines();
+    let header = lines.next().context("empty csv")??;
+    let d = header.split(',').count() - 1;
+    let mut xdata = Vec::new();
+    let mut y = Vec::new();
+    for (lineno, line) in lines.enumerate() {
+        let line = line?;
+        if line.trim().is_empty() {
+            continue;
+        }
+        let vals: Vec<f64> = line
+            .split(',')
+            .map(|s| s.trim().parse::<f64>())
+            .collect::<Result<_, _>>()
+            .with_context(|| format!("line {}", lineno + 2))?;
+        anyhow::ensure!(vals.len() == d + 1, "line {}: want {} cols", lineno + 2, d + 1);
+        xdata.extend_from_slice(&vals[..d]);
+        y.push(vals[d]);
+    }
+    let n = y.len();
+    Ok(Dataset { x: Mat::from_vec(n, d, xdata), y })
+}
+
+/// Append rows of `(t, iter, metric...)` traces as CSV.
+pub fn write_trace(path: &Path, header: &str, rows: &[Vec<f64>]) -> Result<()> {
+    if let Some(parent) = path.parent() {
+        std::fs::create_dir_all(parent)?;
+    }
+    let f = std::fs::File::create(path)?;
+    let mut w = BufWriter::new(f);
+    writeln!(w, "{header}")?;
+    for row in rows {
+        let s: Vec<String> = row.iter().map(|v| format!("{v}")).collect();
+        writeln!(w, "{}", s.join(","))?;
+    }
+    Ok(())
+}
+
+/// Residual RMSE of an ordinary-least-squares fit (with intercept).
+/// Used to verify generators are genuinely nonlinear.
+pub fn linear_fit_residual_rmse(ds: &Dataset) -> f64 {
+    let n = ds.n();
+    let d = ds.d();
+    // Design matrix with intercept.
+    let mut a = Mat::zeros(n, d + 1);
+    for r in 0..n {
+        a.row_mut(r)[..d].copy_from_slice(ds.x.row(r));
+        a.row_mut(r)[d] = 1.0;
+    }
+    let mut ata = a.gram();
+    for i in 0..=d {
+        ata[(i, i)] += 1e-8 * n as f64;
+    }
+    let aty = a.tr_matvec(&ds.y);
+    let w = spd_inverse(&ata).expect("ridge ATA SPD").matvec(&aty);
+    let pred = a.matvec(&w);
+    crate::util::rmse(&pred, &ds.y)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::data::synth;
+
+    #[test]
+    fn dataset_roundtrip() {
+        let ds = synth::friedman(50, 4, 0.1, 1);
+        let dir = std::env::temp_dir().join("advgp_csv_test");
+        std::fs::create_dir_all(&dir).unwrap();
+        let p = dir.join("toy.csv");
+        write_dataset(&p, &ds).unwrap();
+        let back = read_dataset(&p).unwrap();
+        assert_eq!(back.n(), 50);
+        assert_eq!(back.d(), 4);
+        for r in 0..50 {
+            assert!((back.y[r] - ds.y[r]).abs() < 1e-9);
+            for c in 0..4 {
+                assert!((back.x[(r, c)] - ds.x[(r, c)]).abs() < 1e-9);
+            }
+        }
+    }
+
+    #[test]
+    fn ols_exact_on_linear_data() {
+        // y = 3 x0 - 2 x1 + 1 exactly -> residual ~ 0.
+        let mut ds = synth::friedman(200, 4, 0.0, 2);
+        for r in 0..ds.n() {
+            ds.y[r] = 3.0 * ds.x[(r, 0)] - 2.0 * ds.x[(r, 1)] + 1.0;
+        }
+        assert!(linear_fit_residual_rmse(&ds) < 1e-5);
+    }
+
+    #[test]
+    fn read_rejects_ragged() {
+        let dir = std::env::temp_dir().join("advgp_csv_test");
+        std::fs::create_dir_all(&dir).unwrap();
+        let p = dir.join("bad.csv");
+        std::fs::write(&p, "f0,f1,y\n1,2,3\n4,5\n").unwrap();
+        assert!(read_dataset(&p).is_err());
+    }
+}

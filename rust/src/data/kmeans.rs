@@ -1,0 +1,157 @@
+//! k-means++ clustering for inducing-point initialization (paper §6.3
+//! initializes Z from k-means centers of a training subsample).
+
+use crate::linalg::Mat;
+use crate::util::rng::Pcg64;
+
+fn sq_dist(a: &[f64], b: &[f64]) -> f64 {
+    a.iter().zip(b).map(|(x, y)| (x - y) * (x - y)).sum()
+}
+
+/// k-means++ seeding followed by Lloyd iterations.
+/// `x` is [n, d]; returns centers [k, d].
+pub fn kmeans(x: &Mat, k: usize, iters: usize, rng: &mut Pcg64) -> Mat {
+    let n = x.rows;
+    let d = x.cols;
+    assert!(k >= 1 && k <= n, "k={k} n={n}");
+
+    // ---- k-means++ seeding ----
+    let mut centers = Mat::zeros(k, d);
+    let first = rng.next_below(n as u64) as usize;
+    centers.row_mut(0).copy_from_slice(x.row(first));
+    let mut d2: Vec<f64> = (0..n).map(|i| sq_dist(x.row(i), centers.row(0))).collect();
+    for c in 1..k {
+        let total: f64 = d2.iter().sum();
+        let mut pick = n - 1;
+        if total > 0.0 {
+            let target = rng.next_f64() * total;
+            let mut acc = 0.0;
+            for (i, w) in d2.iter().enumerate() {
+                acc += w;
+                if acc >= target {
+                    pick = i;
+                    break;
+                }
+            }
+        } else {
+            pick = rng.next_below(n as u64) as usize;
+        }
+        centers.row_mut(c).copy_from_slice(x.row(pick));
+        for i in 0..n {
+            d2[i] = d2[i].min(sq_dist(x.row(i), centers.row(c)));
+        }
+    }
+
+    // ---- Lloyd iterations ----
+    let mut assign = vec![0usize; n];
+    for _ in 0..iters {
+        let mut changed = false;
+        for i in 0..n {
+            let xi = x.row(i);
+            let mut best = 0;
+            let mut best_d = f64::INFINITY;
+            for c in 0..k {
+                let dd = sq_dist(xi, centers.row(c));
+                if dd < best_d {
+                    best_d = dd;
+                    best = c;
+                }
+            }
+            if assign[i] != best {
+                assign[i] = best;
+                changed = true;
+            }
+        }
+        let mut sums = Mat::zeros(k, d);
+        let mut counts = vec![0usize; k];
+        for i in 0..n {
+            counts[assign[i]] += 1;
+            let xi = x.row(i);
+            let s = sums.row_mut(assign[i]);
+            for c in 0..d {
+                s[c] += xi[c];
+            }
+        }
+        for c in 0..k {
+            if counts[c] == 0 {
+                // Re-seed empty cluster at a random point.
+                let j = rng.next_below(n as u64) as usize;
+                centers.row_mut(c).copy_from_slice(x.row(j));
+            } else {
+                let s = sums.row(c).to_vec();
+                let cm = centers.row_mut(c);
+                for (t, v) in cm.iter_mut().zip(s) {
+                    *t = v / counts[c] as f64;
+                }
+            }
+        }
+        if !changed {
+            break;
+        }
+    }
+    centers
+}
+
+/// Total within-cluster sum of squares (for testing monotonicity).
+pub fn inertia(x: &Mat, centers: &Mat) -> f64 {
+    (0..x.rows)
+        .map(|i| {
+            (0..centers.rows)
+                .map(|c| sq_dist(x.row(i), centers.row(c)))
+                .fold(f64::INFINITY, f64::min)
+        })
+        .sum()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn three_blobs(n_per: usize, seed: u64) -> Mat {
+        let mut rng = Pcg64::seeded(seed);
+        let centers = [[0.0, 0.0], [10.0, 0.0], [0.0, 10.0]];
+        let mut data = Vec::new();
+        for c in centers {
+            for _ in 0..n_per {
+                data.push(c[0] + rng.normal() * 0.3);
+                data.push(c[1] + rng.normal() * 0.3);
+            }
+        }
+        Mat::from_vec(3 * n_per, 2, data)
+    }
+
+    #[test]
+    fn recovers_blobs() {
+        let x = three_blobs(100, 1);
+        let mut rng = Pcg64::seeded(2);
+        let centers = kmeans(&x, 3, 50, &mut rng);
+        let mut found = [false; 3];
+        for c in 0..3 {
+            let row = centers.row(c);
+            for (t, truth) in [[0.0, 0.0], [10.0, 0.0], [0.0, 10.0]].iter().enumerate() {
+                if sq_dist(row, truth) < 0.5 {
+                    found[t] = true;
+                }
+            }
+        }
+        assert_eq!(found, [true, true, true], "{centers:?}");
+    }
+
+    #[test]
+    fn inertia_improves_over_seeding_only() {
+        let x = three_blobs(60, 3);
+        let mut rng1 = Pcg64::seeded(4);
+        let seeded = kmeans(&x, 5, 0, &mut rng1);
+        let mut rng2 = Pcg64::seeded(4);
+        let trained = kmeans(&x, 5, 30, &mut rng2);
+        assert!(inertia(&x, &trained) <= inertia(&x, &seeded) + 1e-9);
+    }
+
+    #[test]
+    fn k_equals_n_zero_inertia() {
+        let x = three_blobs(3, 5); // 9 points
+        let mut rng = Pcg64::seeded(6);
+        let centers = kmeans(&x, 9, 20, &mut rng);
+        assert!(inertia(&x, &centers) < 1e-6);
+    }
+}

@@ -1,0 +1,215 @@
+//! Datasets: container, standardization, sharding, CSV I/O, synthetic
+//! generators and k-means++ inducing-point initialization.
+
+pub mod csv;
+pub mod kmeans;
+pub mod synth;
+
+use crate::linalg::Mat;
+use crate::util::rng::Pcg64;
+
+/// A regression dataset: features `x` [n, d] and targets `y` [n].
+#[derive(Clone, Debug)]
+pub struct Dataset {
+    pub x: Mat,
+    pub y: Vec<f64>,
+}
+
+impl Dataset {
+    pub fn n(&self) -> usize {
+        self.y.len()
+    }
+
+    pub fn d(&self) -> usize {
+        self.x.cols
+    }
+
+    /// Split off the last `n_test` rows (callers shuffle first).
+    pub fn split(mut self, n_test: usize) -> (Dataset, Dataset) {
+        assert!(n_test < self.n());
+        let n_train = self.n() - n_test;
+        let d = self.d();
+        let test_x = Mat::from_vec(
+            n_test,
+            d,
+            self.x.data.split_off(n_train * d),
+        );
+        let test_y = self.y.split_off(n_train);
+        self.x.rows = n_train;
+        (
+            Dataset { x: self.x, y: self.y },
+            Dataset { x: test_x, y: test_y },
+        )
+    }
+
+    /// In-place row shuffle (features and targets together).
+    pub fn shuffle(&mut self, rng: &mut Pcg64) {
+        let n = self.n();
+        let d = self.d();
+        for i in (1..n).rev() {
+            let j = rng.next_below((i + 1) as u64) as usize;
+            if i != j {
+                self.y.swap(i, j);
+                for c in 0..d {
+                    self.x.data.swap(i * d + c, j * d + c);
+                }
+            }
+        }
+    }
+
+    /// Contiguous shards of near-equal size (one per worker, §4).
+    pub fn shard(&self, r: usize) -> Vec<Dataset> {
+        assert!(r >= 1);
+        let n = self.n();
+        let d = self.d();
+        let base = n / r;
+        let extra = n % r;
+        let mut out = Vec::with_capacity(r);
+        let mut start = 0;
+        for k in 0..r {
+            let len = base + usize::from(k < extra);
+            let x = Mat::from_vec(
+                len,
+                d,
+                self.x.data[start * d..(start + len) * d].to_vec(),
+            );
+            let y = self.y[start..start + len].to_vec();
+            out.push(Dataset { x, y });
+            start += len;
+        }
+        out
+    }
+
+    /// Take the first `k` rows (for subsampling).
+    pub fn head(&self, k: usize) -> Dataset {
+        let k = k.min(self.n());
+        Dataset {
+            x: Mat::from_vec(k, self.d(), self.x.data[..k * self.d()].to_vec()),
+            y: self.y[..k].to_vec(),
+        }
+    }
+}
+
+/// Per-feature/target standardization statistics (fit on train only).
+#[derive(Clone, Debug)]
+pub struct Standardizer {
+    pub x_mean: Vec<f64>,
+    pub x_std: Vec<f64>,
+    pub y_mean: f64,
+    pub y_std: f64,
+}
+
+impl Standardizer {
+    pub fn fit(data: &Dataset) -> Self {
+        let n = data.n() as f64;
+        let d = data.d();
+        let mut x_mean = vec![0.0; d];
+        for r in 0..data.n() {
+            for (c, v) in data.x.row(r).iter().enumerate() {
+                x_mean[c] += v;
+            }
+        }
+        for m in &mut x_mean {
+            *m /= n;
+        }
+        let mut x_std = vec![0.0; d];
+        for r in 0..data.n() {
+            for (c, v) in data.x.row(r).iter().enumerate() {
+                x_std[c] += (v - x_mean[c]) * (v - x_mean[c]);
+            }
+        }
+        for s in &mut x_std {
+            *s = (*s / n).sqrt().max(1e-8);
+        }
+        let y_mean = data.y.iter().sum::<f64>() / n;
+        let y_std = (data.y.iter().map(|v| (v - y_mean) * (v - y_mean)).sum::<f64>() / n)
+            .sqrt()
+            .max(1e-8);
+        Self { x_mean, x_std, y_mean, y_std }
+    }
+
+    pub fn apply(&self, data: &mut Dataset) {
+        let d = data.d();
+        for r in 0..data.n() {
+            let row = data.x.row_mut(r);
+            for c in 0..d {
+                row[c] = (row[c] - self.x_mean[c]) / self.x_std[c];
+            }
+        }
+        for y in &mut data.y {
+            *y = (*y - self.y_mean) / self.y_std;
+        }
+    }
+
+    /// Undo the target scaling on a prediction (for reporting RMSE in
+    /// original units).
+    pub fn unscale_y(&self, y: f64) -> f64 {
+        y * self.y_std + self.y_mean
+    }
+
+    /// RMSE in standardized space -> original units.
+    pub fn unscale_rmse(&self, rmse_std: f64) -> f64 {
+        rmse_std * self.y_std
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn toy(n: usize, d: usize) -> Dataset {
+        let x = Mat::from_vec(n, d, (0..n * d).map(|i| i as f64).collect());
+        let y = (0..n).map(|i| 10.0 * i as f64).collect();
+        Dataset { x, y }
+    }
+
+    #[test]
+    fn split_preserves_rows() {
+        let ds = toy(10, 3);
+        let (tr, te) = ds.split(4);
+        assert_eq!(tr.n(), 6);
+        assert_eq!(te.n(), 4);
+        assert_eq!(te.x.row(0)[0], 18.0); // row 6 starts at 6*3=18
+        assert_eq!(te.y[0], 60.0);
+    }
+
+    #[test]
+    fn shard_covers_everything_once() {
+        let ds = toy(10, 2);
+        let shards = ds.shard(3);
+        assert_eq!(shards.iter().map(|s| s.n()).sum::<usize>(), 10);
+        assert_eq!(shards[0].n(), 4); // 10 = 4+3+3
+        let mut ys: Vec<f64> = shards.iter().flat_map(|s| s.y.clone()).collect();
+        ys.sort_by(|a, b| a.partial_cmp(b).unwrap());
+        assert_eq!(ys, ds.y);
+    }
+
+    #[test]
+    fn shuffle_keeps_pairs_together() {
+        let mut ds = toy(50, 2);
+        let mut rng = Pcg64::seeded(5);
+        ds.shuffle(&mut rng);
+        for r in 0..50 {
+            // y = 10 * (x[0] / 2) by construction (x row i = [2i, 2i+1])
+            assert_eq!(ds.y[r], 10.0 * ds.x.row(r)[0] / 2.0);
+            assert_eq!(ds.x.row(r)[1], ds.x.row(r)[0] + 1.0);
+        }
+    }
+
+    #[test]
+    fn standardizer_roundtrip() {
+        let mut ds = toy(20, 2);
+        let st = Standardizer::fit(&ds);
+        st.apply(&mut ds);
+        let refit = Standardizer::fit(&ds);
+        assert!(refit.y_mean.abs() < 1e-10);
+        assert!((refit.y_std - 1.0).abs() < 1e-10);
+        for c in 0..2 {
+            assert!(refit.x_mean[c].abs() < 1e-10);
+            assert!((refit.x_std[c] - 1.0).abs() < 1e-10);
+        }
+        // unscale inverts
+        let y0 = st.unscale_y(ds.y[0]);
+        assert!((y0 - 0.0).abs() < 1e-9);
+    }
+}

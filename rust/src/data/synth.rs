@@ -1,0 +1,210 @@
+//! Synthetic workload generators standing in for the paper's datasets
+//! (DESIGN.md §4 records the substitution rationale).
+//!
+//! * `flight_like`  — 8 features mirroring the US-flight-delay schema
+//!   (Hensman et al. 2013): month, day-of-month, day-of-week, departure
+//!   time, arrival time, air time, distance, aircraft age.  Delay is a
+//!   smooth nonlinear function (rush-hour bumps, distance interaction,
+//!   weekday effects) plus heavy-ish noise — linear models underfit it,
+//!   GPs don't, which is the property Tables 1–2 / Fig. 1 exercise.
+//! * `taxi_like` — 9 features mirroring the NYC-taxi schema (§6.3):
+//!   time-of-day, day-of-week, day-of-month, month, pickup lat/lon,
+//!   dropoff lat/lon, trip distance.  Travel time = distance / speed
+//!   where speed depends nonlinearly on time-of-day and location
+//!   (Manhattan congestion bowl), plus lognormal-ish noise.
+//! * `friedman` — the classic Friedman #1 benchmark, for quickstart and
+//!   tests (d = 4 used by the tiny artifacts: first 4 of 5 active dims).
+
+use super::Dataset;
+use crate::linalg::Mat;
+use crate::util::rng::Pcg64;
+
+/// US-flight-delay-like generator.  Target is "delay minutes".
+pub fn flight_like(n: usize, seed: u64) -> Dataset {
+    let mut rng = Pcg64::new(seed, 101);
+    let d = 8;
+    let mut x = Mat::zeros(n, d);
+    let mut y = vec![0.0; n];
+    for i in 0..n {
+        let month = rng.uniform(1.0, 13.0).floor(); // 1..12
+        let dom = rng.uniform(1.0, 29.0).floor();
+        let dow = rng.uniform(0.0, 7.0).floor();
+        let dep = rng.uniform(5.0, 24.0); // departure hour
+        let air = rng.uniform(0.5, 6.5); // air time hours
+        let arr = (dep + air) % 24.0;
+        let dist = air * rng.uniform(350.0, 520.0); // miles
+        let age = rng.uniform(0.0, 25.0); // aircraft age years
+
+        // Nonlinear "true" delay surface.
+        let rush = 18.0 * (-0.5 * ((dep - 8.0) / 1.5).powi(2)).exp()
+            + 25.0 * (-0.5 * ((dep - 17.5) / 2.0).powi(2)).exp();
+        let weekend = if dow >= 5.0 { -6.0 } else { 2.0 * (dow - 2.0).abs() };
+        let seasonal = 10.0 * (std::f64::consts::PI * (month - 6.5) / 6.0).cos().powi(2);
+        let congestion = 12.0 / (1.0 + (-0.8 * (dist / 400.0 - 2.0)).exp());
+        let age_eff = 0.25 * age * (1.0 + 0.3 * (age / 10.0).sin());
+        let interaction = 6.0 * ((dep / 24.0) * (dist / 2500.0) * 8.0).sin();
+        let f = rush + weekend + seasonal + congestion + age_eff + interaction;
+
+        // Heavy-ish noise: mixture of N(0, 9^2) and occasional big delays.
+        let noise = if rng.next_f64() < 0.08 {
+            rng.normal_scaled(35.0, 30.0).max(0.0)
+        } else {
+            rng.normal_scaled(0.0, 9.0)
+        };
+        y[i] = f + noise;
+        let row = x.row_mut(i);
+        row.copy_from_slice(&[month, dom, dow, dep, arr, air, dist, age]);
+    }
+    Dataset { x, y }
+}
+
+/// NYC-taxi-like generator.  Target is "travel seconds".
+pub fn taxi_like(n: usize, seed: u64) -> Dataset {
+    let mut rng = Pcg64::new(seed, 202);
+    let d = 9;
+    let mut x = Mat::zeros(n, d);
+    let mut y = vec![0.0; n];
+    for i in 0..n {
+        let tod = rng.uniform(0.0, 24.0);
+        let dow = rng.uniform(0.0, 7.0).floor();
+        let dom = rng.uniform(1.0, 32.0).floor();
+        let month = rng.uniform(1.0, 13.0).floor();
+        // Manhattan-ish bounding box.
+        let p_lat = rng.uniform(40.70, 40.83);
+        let p_lon = rng.uniform(-74.02, -73.93);
+        let d_lat = (p_lat + rng.normal_scaled(0.0, 0.03)).clamp(40.60, 40.90);
+        let d_lon = (p_lon + rng.normal_scaled(0.0, 0.03)).clamp(-74.05, -73.90);
+        // Haversine-ish planar distance in km, plus route wiggle.
+        let dy = (d_lat - p_lat) * 111.0;
+        let dx = (d_lon - p_lon) * 84.3;
+        let dist = (dx * dx + dy * dy).sqrt() * rng.uniform(1.15, 1.45) + 0.2;
+
+        // Speed surface (km/h): congestion bowl by time-of-day, worse
+        // midtown, better weekends — the nonlinearity the GP must find.
+        let rush = 1.0
+            + 0.9 * (-0.5 * ((tod - 8.5) / 1.8).powi(2)).exp()
+            + 1.2 * (-0.5 * ((tod - 17.5) / 2.2).powi(2)).exp();
+        let midtown = (-(((p_lat - 40.755) / 0.02).powi(2)
+            + ((p_lon + 73.985) / 0.02).powi(2))
+            / 2.0)
+            .exp();
+        let weekend = if dow >= 5.0 { 1.25 } else { 1.0 };
+        let night = if !(6.0..22.0).contains(&tod) { 1.35 } else { 1.0 };
+        let speed = 24.0 * weekend * night / (rush * (1.0 + 0.8 * midtown));
+
+        let base = dist / speed * 3600.0; // seconds
+        let overhead = 90.0 + 25.0 * midtown + 4.0 * (month - 6.0).abs();
+        let noise = (rng.normal_scaled(0.0, 0.18)).exp(); // lognormal factor
+        y[i] = ((base + overhead) * noise).clamp(30.0, 5.0 * 3600.0);
+        let row = x.row_mut(i);
+        row.copy_from_slice(&[tod, dow, dom, month, p_lat, p_lon, d_lat, d_lon, dist]);
+    }
+    Dataset { x, y }
+}
+
+/// Friedman #1 (d = 4 variant used by the tiny m=16 artifacts):
+/// y = 10 sin(pi x1 x2) + 20 (x3 - .5)^2 + 10 x4 + noise.
+pub fn friedman(n: usize, d: usize, noise_std: f64, seed: u64) -> Dataset {
+    assert!(d >= 4);
+    let mut rng = Pcg64::new(seed, 303);
+    let mut x = Mat::zeros(n, d);
+    let mut y = vec![0.0; n];
+    for i in 0..n {
+        let row = x.row_mut(i);
+        for v in row.iter_mut() {
+            *v = rng.next_f64();
+        }
+        let f = 10.0 * (std::f64::consts::PI * row[0] * row[1]).sin()
+            + 20.0 * (row[2] - 0.5).powi(2)
+            + 10.0 * row[3];
+        y[i] = f + rng.normal_scaled(0.0, noise_std);
+    }
+    Dataset { x, y }
+}
+
+/// Draw from an actual GP prior (ARD kernel) — for exact-GP validation.
+pub fn gp_draw(n: usize, d: usize, noise_std: f64, seed: u64) -> Dataset {
+    use crate::kernel::{kmm, ArdParams};
+    use crate::linalg::cholesky_lower;
+    let mut rng = Pcg64::new(seed, 404);
+    let x = Mat::from_vec(n, d, (0..n * d).map(|_| rng.normal()).collect());
+    let params = ArdParams::unit(d);
+    let k = kmm(&params, &x, 1e-8);
+    let l = cholesky_lower(&k).expect("prior covariance SPD");
+    let eps: Vec<f64> = (0..n).map(|_| rng.normal()).collect();
+    let f = l.matvec(&eps);
+    let y = f
+        .iter()
+        .map(|fi| fi + rng.normal_scaled(0.0, noise_std))
+        .collect();
+    Dataset { x, y }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn flight_shapes_and_ranges() {
+        let ds = flight_like(500, 1);
+        assert_eq!(ds.n(), 500);
+        assert_eq!(ds.d(), 8);
+        for r in 0..ds.n() {
+            let row = ds.x.row(r);
+            assert!((1.0..=12.0).contains(&row[0]), "month");
+            assert!((0.0..7.0).contains(&row[2]), "dow");
+            assert!(row[6] > 0.0, "distance positive");
+        }
+    }
+
+    #[test]
+    fn flight_is_nonlinear() {
+        // A linear fit on the true features must leave substantially more
+        // residual than the structural noise floor — the property that
+        // makes the GP-vs-linear comparison meaningful.
+        let ds = flight_like(4000, 2);
+        let resid = super::super::csv::linear_fit_residual_rmse(&ds);
+        let var = {
+            let m = ds.y.iter().sum::<f64>() / ds.n() as f64;
+            (ds.y.iter().map(|v| (v - m) * (v - m)).sum::<f64>() / ds.n() as f64).sqrt()
+        };
+        assert!(resid > 0.5 * var * 0.5, "resid={resid} var={var}");
+        assert!(resid < var, "linear must still beat the mean");
+    }
+
+    #[test]
+    fn taxi_shapes_and_positivity() {
+        let ds = taxi_like(500, 3);
+        assert_eq!(ds.d(), 9);
+        assert!(ds.y.iter().all(|&t| (30.0..=18_000.0).contains(&t)));
+        // Average around the paper's ~764s scale (same order).
+        let mean = ds.y.iter().sum::<f64>() / ds.n() as f64;
+        assert!((200.0..2500.0).contains(&mean), "mean={mean}");
+    }
+
+    #[test]
+    fn determinism_by_seed() {
+        let a = taxi_like(100, 7);
+        let b = taxi_like(100, 7);
+        let c = taxi_like(100, 8);
+        assert_eq!(a.y, b.y);
+        assert_ne!(a.y, c.y);
+    }
+
+    #[test]
+    fn friedman_signal_dominates() {
+        let ds = friedman(2000, 4, 0.5, 9);
+        let m = ds.y.iter().sum::<f64>() / ds.n() as f64;
+        let std = (ds.y.iter().map(|v| (v - m) * (v - m)).sum::<f64>() / ds.n() as f64).sqrt();
+        assert!(std > 3.0, "signal variance should dominate noise");
+    }
+
+    #[test]
+    fn gp_draw_matches_prior_scale() {
+        let ds = gp_draw(200, 3, 0.1, 11);
+        let m = ds.y.iter().sum::<f64>() / 200.0;
+        let var = ds.y.iter().map(|v| (v - m) * (v - m)).sum::<f64>() / 200.0;
+        // Prior variance is a0^2 + noise = 1.01; allow wide slack.
+        assert!((0.3..3.0).contains(&var), "var={var}");
+    }
+}

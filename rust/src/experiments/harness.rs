@@ -1,0 +1,85 @@
+//! Micro-benchmark harness (offline build: no `criterion`).
+//!
+//! Warms up, runs timed iterations, reports mean/std/min and a rough
+//! ops/sec figure.  Used by `cargo bench` targets (harness = false).
+
+use crate::util::{Stats, Stopwatch};
+
+pub struct BenchReport {
+    pub name: String,
+    pub iters: u64,
+    pub stats: Stats,
+}
+
+impl BenchReport {
+    pub fn print(&self) {
+        let mean = self.stats.mean();
+        println!(
+            "{:<44} {:>12}  ±{:>10}  min {:>10}  ({:.1}/s, n={})",
+            self.name,
+            fmt_secs(mean),
+            fmt_secs(self.stats.std()),
+            fmt_secs(self.stats.min),
+            1.0 / mean.max(1e-12),
+            self.iters
+        );
+    }
+}
+
+pub fn fmt_secs(s: f64) -> String {
+    if s < 1e-6 {
+        format!("{:.1}ns", s * 1e9)
+    } else if s < 1e-3 {
+        format!("{:.2}µs", s * 1e6)
+    } else if s < 1.0 {
+        format!("{:.3}ms", s * 1e3)
+    } else {
+        format!("{:.3}s", s)
+    }
+}
+
+/// Time `f` for at least `min_secs` (after `warmup` runs).
+pub fn bench<F: FnMut()>(name: &str, warmup: u64, min_secs: f64, mut f: F) -> BenchReport {
+    for _ in 0..warmup {
+        f();
+    }
+    let mut stats = Stats::new();
+    let total = Stopwatch::start();
+    let mut iters = 0u64;
+    while total.secs() < min_secs || iters < 5 {
+        let sw = Stopwatch::start();
+        f();
+        stats.push(sw.secs());
+        iters += 1;
+        if iters > 100_000 {
+            break;
+        }
+    }
+    let r = BenchReport { name: name.to_string(), iters, stats };
+    r.print();
+    r
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn bench_collects_stats() {
+        let mut x = 0u64;
+        let r = bench("noop-ish", 2, 0.01, || {
+            x = x.wrapping_add(1);
+            std::hint::black_box(x);
+        });
+        assert!(r.iters >= 5);
+        assert!(r.stats.mean() >= 0.0);
+    }
+
+    #[test]
+    fn fmt_scales() {
+        assert!(fmt_secs(2e-9).ends_with("ns"));
+        assert!(fmt_secs(2e-5).ends_with("µs"));
+        assert!(fmt_secs(2e-2).ends_with("ms"));
+        assert!(fmt_secs(2.0).ends_with('s'));
+    }
+}

@@ -1,0 +1,174 @@
+//! Uniform method runners for the benches: every method takes a
+//! [`super::Problem`], a wall-clock budget, and returns a trace.
+
+use super::Problem;
+use crate::baselines::distgp::{run_distgp_gd, run_distgp_lbfgs, DistGpConfig};
+use crate::baselines::linear::{run_linear, LinearConfig};
+use crate::baselines::mean::MeanPredictor;
+use crate::baselines::svigp::{run_svigp, SvigpConfig};
+use crate::baselines::BaselineResult;
+use crate::grad::{native_factory, EngineFactory};
+use crate::ps::coordinator::{native_eval_factory, train, TrainConfig};
+use crate::ps::metrics::TraceRow;
+use crate::ps::worker::WorkerProfile;
+use std::time::Duration;
+
+/// Options shared by the GP methods.
+#[derive(Clone, Debug)]
+pub struct MethodOpts {
+    pub workers: usize,
+    pub tau: u64,
+    pub budget_secs: f64,
+    /// Per-worker straggler sleeps (ms), cycled (Fig. 2).
+    pub straggle_ms: Vec<u64>,
+    /// Cap on rows per worker iteration (0 = full shard).
+    pub max_rows: usize,
+    pub eval_every_secs: f64,
+    pub track_elbo: bool,
+    /// ADADELTA direction scale (server-side gradient step).
+    pub lr: f64,
+    /// Proximal strength schedule γ_t = prox_c / (1 + t / prox_t0).
+    pub prox_c: f64,
+    pub prox_t0: f64,
+}
+
+impl Default for MethodOpts {
+    fn default() -> Self {
+        Self {
+            workers: 4,
+            tau: 32,
+            budget_secs: 10.0,
+            straggle_ms: vec![],
+            max_rows: 0,
+            eval_every_secs: 0.25,
+            track_elbo: false,
+            lr: 1.0,
+            prox_c: 0.005,
+            prox_t0: 500.0,
+        }
+    }
+}
+
+fn profiles(opts: &MethodOpts, workers: usize) -> Vec<WorkerProfile> {
+    (0..workers)
+        .map(|k| WorkerProfile {
+            straggle: Duration::from_millis(
+                *opts.straggle_ms.get(k % opts.straggle_ms.len().max(1)).unwrap_or(&0),
+            ),
+            max_rows: opts.max_rows,
+            ..Default::default()
+        })
+        .collect()
+}
+
+/// ADVGP (the paper's method) with a pluggable engine factory.
+pub fn run_advgp_with(
+    p: &Problem,
+    opts: &MethodOpts,
+    factory: EngineFactory,
+) -> BaselineResult {
+    let mut cfg = TrainConfig::new(p.layout);
+    cfg.tau = opts.tau;
+    cfg.max_updates = u64::MAX / 2;
+    cfg.time_limit_secs = Some(opts.budget_secs);
+    cfg.eval_every_secs = opts.eval_every_secs;
+    cfg.profiles = profiles(opts, opts.workers);
+    cfg.lr = opts.lr;
+    cfg.prox = crate::opt::StepSchedule::new(opts.prox_c, opts.prox_t0);
+    let elbo_set = opts.track_elbo.then(|| p.train.head(4096));
+    let res = train(
+        &cfg,
+        p.theta0.data.clone(),
+        p.train.shard(opts.workers),
+        factory,
+        Some(native_eval_factory(p.layout, p.test.clone(), elbo_set)),
+    );
+    BaselineResult { theta: res.theta, trace: res.trace, wall_secs: res.wall_secs }
+}
+
+/// ADVGP with the pure-Rust engine (scaling benches, baseline parity).
+pub fn run_advgp(p: &Problem, opts: &MethodOpts) -> BaselineResult {
+    run_advgp_with(p, opts, native_factory(p.layout))
+}
+
+/// DistGP-GD (synchronous map-reduce gradient descent).
+pub fn run_distgp_gd_method(p: &Problem, opts: &MethodOpts) -> BaselineResult {
+    let cfg = DistGpConfig {
+        iters: u64::MAX / 2,
+        eval_every: 5,
+        time_limit_secs: Some(opts.budget_secs),
+        ..Default::default()
+    };
+    let shards = p.train.shard(opts.workers);
+    run_distgp_gd(&cfg, p.theta0.clone(), &shards, &p.test, native_factory(p.layout))
+}
+
+/// DistGP-LBFGS (synchronous map-reduce L-BFGS).
+pub fn run_distgp_lbfgs_method(p: &Problem, opts: &MethodOpts) -> BaselineResult {
+    let cfg = DistGpConfig {
+        iters: u64::MAX / 2,
+        eval_every: 2,
+        time_limit_secs: Some(opts.budget_secs),
+        ..Default::default()
+    };
+    let shards = p.train.shard(opts.workers);
+    run_distgp_lbfgs(&cfg, p.theta0.clone(), &shards, &p.test, native_factory(p.layout))
+}
+
+/// SVIGP (single-machine stochastic variational inference).
+pub fn run_svigp_method(p: &Problem, opts: &MethodOpts) -> BaselineResult {
+    let cfg = SvigpConfig {
+        steps: u64::MAX / 2,
+        batch: 1000.min(p.train.n()),
+        time_limit_secs: Some(opts.budget_secs),
+        eval_every: 10,
+        ..Default::default()
+    };
+    run_svigp(&cfg, p.theta0.clone(), &p.train, &p.test)
+}
+
+/// VW-style linear regression.
+pub fn run_linear_method(p: &Problem, opts: &MethodOpts) -> BaselineResult {
+    let cfg = LinearConfig {
+        epochs: 1000,
+        time_limit_secs: Some(opts.budget_secs),
+        eval_every_rows: (p.train.n() / 4).max(1),
+        ..Default::default()
+    };
+    run_linear(&cfg, &p.train, &p.test).1
+}
+
+/// Mean predictor (instant).
+pub fn run_mean_method(p: &Problem) -> BaselineResult {
+    let mp = MeanPredictor::fit(&p.train);
+    let rmse = mp.rmse_on(&p.test);
+    BaselineResult {
+        theta: vec![mp.mean],
+        trace: vec![TraceRow { t_secs: 0.0, version: 0, rmse, mnlp: f64::NAN, neg_elbo: None }],
+        wall_secs: 0.0,
+    }
+}
+
+/// Final (minimum observed) RMSE of a trace — methods are evaluated at
+/// their best point within the budget, like the paper's "at convergence".
+pub fn final_rmse(r: &BaselineResult) -> f64 {
+    r.trace
+        .iter()
+        .map(|t| t.rmse)
+        .fold(f64::INFINITY, f64::min)
+}
+
+pub fn final_mnlp(r: &BaselineResult) -> f64 {
+    r.trace
+        .iter()
+        .map(|t| t.mnlp)
+        .filter(|v| v.is_finite())
+        .fold(f64::INFINITY, f64::min)
+}
+
+pub fn final_neg_elbo(r: &BaselineResult) -> Option<f64> {
+    r.trace
+        .iter()
+        .filter_map(|t| t.neg_elbo)
+        .fold(None, |acc: Option<f64>, v| Some(acc.map_or(v, |a| a.min(v))))
+}

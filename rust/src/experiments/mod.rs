@@ -1,0 +1,129 @@
+//! Shared experiment harness used by `cargo bench` targets, examples,
+//! and the CLI: dataset setup, method runners, table/trace output.
+//!
+//! Every bench honours `ADVGP_BENCH_SCALE` ∈ {ci, small, paper}
+//! (default `small`) so the whole suite runs in minutes on a laptop but
+//! can be scaled to the paper's sizes on a big box.
+
+pub mod harness;
+pub mod methods;
+
+use crate::data::{kmeans, synth, Dataset, Standardizer};
+use crate::gp::{Theta, ThetaLayout};
+use crate::util::rng::Pcg64;
+use std::path::PathBuf;
+
+/// Experiment scale knob.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum Scale {
+    Ci,
+    Small,
+    Paper,
+}
+
+impl Scale {
+    pub fn from_env() -> Self {
+        match std::env::var("ADVGP_BENCH_SCALE").as_deref() {
+            Ok("ci") => Scale::Ci,
+            Ok("paper") => Scale::Paper,
+            _ => Scale::Small,
+        }
+    }
+
+    /// Scale a (ci, small, paper) triple.
+    pub fn pick<T>(&self, ci: T, small: T, paper: T) -> T {
+        match self {
+            Scale::Ci => ci,
+            Scale::Small => small,
+            Scale::Paper => paper,
+        }
+    }
+}
+
+/// Where benches drop CSV traces and tables.
+pub fn out_dir() -> PathBuf {
+    let p = PathBuf::from("target/bench_out");
+    let _ = std::fs::create_dir_all(&p);
+    p
+}
+
+/// A standardized train/test problem with k-means-initialized θ.
+pub struct Problem {
+    pub train: Dataset,
+    pub test: Dataset,
+    pub layout: ThetaLayout,
+    pub theta0: Theta,
+    pub standardizer: Standardizer,
+}
+
+pub fn make_problem(
+    raw: Dataset,
+    n_test: usize,
+    m: usize,
+    kmeans_subset: usize,
+    seed: u64,
+) -> Problem {
+    let mut ds = raw;
+    let mut rng = Pcg64::new(seed, 31);
+    ds.shuffle(&mut rng);
+    let (mut train, mut test) = ds.split(n_test);
+    let st = Standardizer::fit(&train);
+    st.apply(&mut train);
+    st.apply(&mut test);
+    let layout = ThetaLayout::new(m, train.d());
+    // Paper §6.3: inducing points from k-means centers of a subsample.
+    let sub = train.head(kmeans_subset.min(train.n()));
+    let z = kmeans::kmeans(&sub.x, m, 20, &mut rng);
+    let theta0 = Theta::init(layout, &z);
+    Problem { train, test, layout, theta0, standardizer: st }
+}
+
+/// Flight-like problem (Tables 1–2, Figs 1–3, Appendix C/D).
+pub fn flight_problem(n_train: usize, n_test: usize, m: usize, seed: u64) -> Problem {
+    let raw = synth::flight_like(n_train + n_test, seed);
+    make_problem(raw, n_test, m, 20_000, seed)
+}
+
+/// Taxi-like problem (Fig. 4).
+pub fn taxi_problem(n_train: usize, n_test: usize, m: usize, seed: u64) -> Problem {
+    let raw = synth::taxi_like(n_train + n_test, seed);
+    make_problem(raw, n_test, m, 50_000, seed)
+}
+
+/// Render a markdown-ish table to stdout (and return it for files).
+pub fn print_table(title: &str, header: &[&str], rows: &[Vec<String>]) -> String {
+    let mut out = format!("\n## {title}\n\n");
+    out.push_str(&format!("| {} |\n", header.join(" | ")));
+    out.push_str(&format!("|{}\n", "---|".repeat(header.len())));
+    for row in rows {
+        out.push_str(&format!("| {} |\n", row.join(" | ")));
+    }
+    print!("{out}");
+    out
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn scale_env_parsing() {
+        assert_eq!(Scale::Small.pick(1, 2, 3), 2);
+        assert_eq!(Scale::Ci.pick(1, 2, 3), 1);
+        assert_eq!(Scale::Paper.pick(1, 2, 3), 3);
+    }
+
+    #[test]
+    fn problem_is_standardized_and_initialized() {
+        let p = flight_problem(2000, 300, 10, 1);
+        assert_eq!(p.train.n(), 2000);
+        assert_eq!(p.test.n(), 300);
+        assert_eq!(p.layout.m, 10);
+        assert_eq!(p.layout.d, 8);
+        // Train targets standardized.
+        let mean: f64 = p.train.y.iter().sum::<f64>() / 2000.0;
+        assert!(mean.abs() < 1e-8);
+        // θ init follows the paper: μ=0, U=I.
+        assert!(p.theta0.mu().iter().all(|&v| v == 0.0));
+    }
+}

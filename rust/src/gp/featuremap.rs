@@ -1,0 +1,289 @@
+//! Feature maps φ(·) of the weight-space augmentation (paper §3, §5).
+//!
+//! Every map here has the form `phi(x) = W^T k_m(x)` for a projection
+//! matrix `W` built from the inducing covariance K_mm, so a batch is
+//! `Phi = K_bm W` and the eq. (6) residual diagonal is
+//! `ktilde_i = k(x_i, x_i) - ||phi_i||^2`.  The paper's variants:
+//!
+//! * [`InducingChol`] — eq. (11): `W = L`, `K_mm^{-1} = L L^T`.  This is
+//!   the Titsias/SVI parameterization and ADVGP's default.
+//! * [`Nystrom`] — eq. (21): `W = Q diag(λ)^{-1/2}` (variational EigenGP).
+//!   Spans the same subspace as `InducingChol` (Φ Φ^T identical), letting
+//!   tests cross-validate both.
+//! * [`EnsembleNystrom`] — eq. (22): q Nyström maps over q groups of
+//!   inducing points, concatenated with 1/√q scaling so that
+//!   `Φ Φ^T = (1/q) Σ_l Φ_l Φ_l^T ⪯ K_nn` (each term is the Schur-PSD
+//!   single-group map).
+//! * [`Rvm`] — §5's RVM-style map `phi(x) = diag(α)^{1/2} k_m(x)`, with α
+//!   clamped to `α_i ≤ 1/λ_max(K_mm)` so `diag(α) ⪯ K_mm^{-1}` keeps
+//!   K_nn − ΦΦ^T ⪰ 0.
+
+use crate::kernel::{cross, kmm, ArdParams, DEFAULT_JITTER};
+use crate::linalg::{cholesky_lower, spd_inverse, sym_eig, Mat};
+
+/// Batch output of a feature map.
+pub struct PhiBatch {
+    /// Φ rows: φ(x_i)^T, shape [B, p] (p = feature dimension).
+    pub phi: Mat,
+    /// ktilde_i = k(x_i, x_i) − ‖φ(x_i)‖², shape [B].
+    pub ktilde: Vec<f64>,
+}
+
+/// A feature map bound to (kernel params, inducing inputs).
+pub trait FeatureMap {
+    /// Feature dimension p (rows of w; = m except for ensembles).
+    fn dim(&self) -> usize;
+
+    /// Evaluate the map on a batch X [B, d].
+    fn phi(&self, params: &ArdParams, x: &Mat) -> PhiBatch;
+}
+
+fn ktilde_from(phi: &Mat, a0_sq: f64) -> Vec<f64> {
+    (0..phi.rows)
+        .map(|i| a0_sq - phi.row(i).iter().map(|v| v * v).sum::<f64>())
+        .collect()
+}
+
+/// eq. (11): φ(x) = L^T k_m(x), K_mm^{-1} = L L^T.
+pub struct InducingChol {
+    pub z: Mat,
+    /// Lower-triangular L.
+    pub chol_l: Mat,
+}
+
+impl InducingChol {
+    pub fn build(params: &ArdParams, z: Mat) -> Self {
+        let k = kmm(params, &z, DEFAULT_JITTER);
+        let kinv = spd_inverse(&k).expect("K_mm SPD");
+        let chol_l = cholesky_lower(&kinv).expect("K_mm^{-1} SPD");
+        Self { z, chol_l }
+    }
+}
+
+impl FeatureMap for InducingChol {
+    fn dim(&self) -> usize {
+        self.z.rows
+    }
+
+    fn phi(&self, params: &ArdParams, x: &Mat) -> PhiBatch {
+        let k_bm = cross(params, x, &self.z);
+        let phi = k_bm.matmul(&self.chol_l);
+        let ktilde = ktilde_from(&phi, params.a0_sq());
+        PhiBatch { phi, ktilde }
+    }
+}
+
+/// eq. (21): φ(x) = diag(λ)^{-1/2} Q^T k_m(x) — scaled Nyström/EigenGP.
+pub struct Nystrom {
+    pub z: Mat,
+    /// W = Q diag(λ)^{-1/2} (columns scaled eigenvectors of K_mm).
+    pub w: Mat,
+}
+
+impl Nystrom {
+    pub fn build(params: &ArdParams, z: Mat) -> Self {
+        let k = kmm(params, &z, DEFAULT_JITTER);
+        let (lam, q) = sym_eig(&k);
+        let m = z.rows;
+        let mut w = q;
+        for c in 0..m {
+            let s = 1.0 / lam[c].max(1e-12).sqrt();
+            for r in 0..m {
+                w[(r, c)] *= s;
+            }
+        }
+        Self { z, w }
+    }
+}
+
+impl FeatureMap for Nystrom {
+    fn dim(&self) -> usize {
+        self.z.rows
+    }
+
+    fn phi(&self, params: &ArdParams, x: &Mat) -> PhiBatch {
+        let k_bm = cross(params, x, &self.z);
+        let phi = k_bm.matmul(&self.w);
+        let ktilde = ktilde_from(&phi, params.a0_sq());
+        PhiBatch { phi, ktilde }
+    }
+}
+
+/// eq. (22): concatenation of q Nyström maps with 1/sqrt(q) scaling.
+pub struct EnsembleNystrom {
+    pub groups: Vec<Nystrom>,
+}
+
+impl EnsembleNystrom {
+    pub fn build(params: &ArdParams, groups: Vec<Mat>) -> Self {
+        Self {
+            groups: groups
+                .into_iter()
+                .map(|z| Nystrom::build(params, z))
+                .collect(),
+        }
+    }
+}
+
+impl FeatureMap for EnsembleNystrom {
+    fn dim(&self) -> usize {
+        self.groups.iter().map(|g| g.dim()).sum()
+    }
+
+    fn phi(&self, params: &ArdParams, x: &Mat) -> PhiBatch {
+        let q = self.groups.len();
+        let scale = 1.0 / (q as f64).sqrt();
+        let b = x.rows;
+        let p = self.dim();
+        let mut phi = Mat::zeros(b, p);
+        let mut col0 = 0;
+        for g in &self.groups {
+            let pb = g.phi(params, x);
+            for r in 0..b {
+                let src = pb.phi.row(r);
+                let dst = phi.row_mut(r);
+                for (c, v) in src.iter().enumerate() {
+                    dst[col0 + c] = scale * v;
+                }
+            }
+            col0 += g.dim();
+        }
+        let ktilde = ktilde_from(&phi, params.a0_sq());
+        PhiBatch { phi, ktilde }
+    }
+}
+
+/// §5 RVM-style: φ(x) = diag(α)^{1/2} k_m(x), α clamped for PSD.
+pub struct Rvm {
+    pub z: Mat,
+    pub sqrt_alpha: Vec<f64>,
+}
+
+impl Rvm {
+    /// Clamp each α_i to 1/(m λ_max(K_mm)) … guarantees
+    /// diag(α) ⪯ (1/λ_max) I ⪯ K_mm^{-1}.
+    pub fn build(params: &ArdParams, z: Mat, alpha: &[f64]) -> Self {
+        assert_eq!(alpha.len(), z.rows);
+        let k = kmm(params, &z, DEFAULT_JITTER);
+        let (lam, _) = sym_eig(&k);
+        let cap = 1.0 / lam[0].max(1e-12);
+        let sqrt_alpha = alpha
+            .iter()
+            .map(|&a| a.clamp(0.0, cap).sqrt())
+            .collect();
+        Self { z, sqrt_alpha }
+    }
+}
+
+impl FeatureMap for Rvm {
+    fn dim(&self) -> usize {
+        self.z.rows
+    }
+
+    fn phi(&self, params: &ArdParams, x: &Mat) -> PhiBatch {
+        let mut phi = cross(params, x, &self.z);
+        for r in 0..phi.rows {
+            let row = phi.row_mut(r);
+            for (c, v) in row.iter_mut().enumerate() {
+                *v *= self.sqrt_alpha[c];
+            }
+        }
+        let ktilde = ktilde_from(&phi, params.a0_sq());
+        PhiBatch { phi, ktilde }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::kernel;
+    use crate::util::rng::Pcg64;
+
+    fn rand_mat(rng: &mut Pcg64, r: usize, c: usize) -> Mat {
+        Mat::from_vec(r, c, (0..r * c).map(|_| rng.normal()).collect())
+    }
+
+    /// K_nn − Φ Φ^T must be PSD (eq. 6's covariance): check via
+    /// eigenvalues on a modest batch.
+    fn assert_residual_psd(map: &dyn FeatureMap, params: &ArdParams, x: &Mat) {
+        let knn = kernel::cross(params, x, x);
+        let pb = map.phi(params, x);
+        let ppt = pb.phi.matmul(&pb.phi.transpose());
+        let mut resid = knn.clone();
+        resid.axpy(-1.0, &ppt);
+        let (w, _) = sym_eig(&resid);
+        let min = w.iter().cloned().fold(f64::INFINITY, f64::min);
+        assert!(min > -1e-6 * params.a0_sq(), "min eig {min}");
+        // And ktilde is its diagonal.
+        for i in 0..x.rows {
+            assert!((pb.ktilde[i] - resid[(i, i)]).abs() < 1e-8);
+        }
+    }
+
+    #[test]
+    fn inducing_chol_psd_and_ktilde() {
+        let mut rng = Pcg64::seeded(41);
+        let params = ArdParams { log_a0: 0.2, log_eta: vec![0.1, -0.2, 0.0] };
+        let z = rand_mat(&mut rng, 12, 3);
+        let x = rand_mat(&mut rng, 25, 3);
+        let map = InducingChol::build(&params, z);
+        assert_residual_psd(&map, &params, &x);
+    }
+
+    #[test]
+    fn nystrom_spans_same_subspace_as_chol() {
+        let mut rng = Pcg64::seeded(42);
+        let params = ArdParams::unit(2);
+        let z = rand_mat(&mut rng, 8, 2);
+        let x = rand_mat(&mut rng, 15, 2);
+        let chol = InducingChol::build(&params, z.clone());
+        let nys = Nystrom::build(&params, z);
+        let p1 = chol.phi(&params, &x);
+        let p2 = nys.phi(&params, &x);
+        // Different bases but identical Gram matrices Φ Φ^T.
+        let g1 = p1.phi.matmul(&p1.phi.transpose());
+        let g2 = p2.phi.matmul(&p2.phi.transpose());
+        assert!(g1.max_abs_diff(&g2) < 1e-6);
+        for (a, b) in p1.ktilde.iter().zip(&p2.ktilde) {
+            assert!((a - b).abs() < 1e-6);
+        }
+        assert_residual_psd(&nys, &params, &x);
+    }
+
+    #[test]
+    fn ensemble_psd_and_dim() {
+        let mut rng = Pcg64::seeded(43);
+        let params = ArdParams::unit(2);
+        let g1 = rand_mat(&mut rng, 5, 2);
+        let g2 = rand_mat(&mut rng, 7, 2);
+        let x = rand_mat(&mut rng, 20, 2);
+        let ens = EnsembleNystrom::build(&params, vec![g1, g2]);
+        assert_eq!(ens.dim(), 12);
+        assert_residual_psd(&ens, &params, &x);
+    }
+
+    #[test]
+    fn rvm_clamps_to_psd() {
+        let mut rng = Pcg64::seeded(44);
+        let params = ArdParams::unit(2);
+        let z = rand_mat(&mut rng, 6, 2);
+        let x = rand_mat(&mut rng, 18, 2);
+        // Intentionally huge alphas: must be clamped.
+        let alpha = vec![1e6; 6];
+        let map = Rvm::build(&params, z, &alpha);
+        assert_residual_psd(&map, &params, &x);
+    }
+
+    #[test]
+    fn ktilde_vanishes_on_inducing_points() {
+        // φ at x = z_j reconstructs k exactly: ktilde(z_j) ≈ jitter-scale.
+        let mut rng = Pcg64::seeded(45);
+        let params = ArdParams::unit(3);
+        let z = rand_mat(&mut rng, 10, 3);
+        let map = InducingChol::build(&params, z.clone());
+        let pb = map.phi(&params, &z);
+        for &kt in &pb.ktilde {
+            assert!(kt.abs() < 5e-4, "ktilde at inducing point: {kt}");
+        }
+    }
+}

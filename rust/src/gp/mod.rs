@@ -1,0 +1,168 @@
+//! GP core: parameter layout, feature maps, sparse predictive model,
+//! ELBO evaluation, exact-GP oracle.
+
+pub mod exact;
+pub mod featuremap;
+pub mod params;
+
+pub use params::{Theta, ThetaLayout};
+
+use crate::gp::featuremap::{FeatureMap, InducingChol};
+use crate::linalg::Mat;
+
+/// Sparse-GP predictive model bound to a parameter vector θ.
+///
+/// Wraps the eq. (11) feature map; prediction follows §3's augmented
+/// model: q(f*) = N(φ(x*)^T μ, ktilde + φ^T Σ φ), plus σ² for y*.
+pub struct SparseGp {
+    pub theta: Theta,
+    map: InducingChol,
+}
+
+impl SparseGp {
+    pub fn new(theta: Theta) -> Self {
+        let map = InducingChol::build(&theta.ard(), theta.z_mat());
+        Self { theta, map }
+    }
+
+    /// Refresh the cached feature-map factor after θ changed.
+    pub fn update(&mut self, theta: Theta) {
+        self.map = InducingChol::build(&theta.ard(), theta.z_mat());
+        self.theta = theta;
+    }
+
+    /// Predictive mean and variance (of y, noise included) for a batch.
+    pub fn predict(&self, x: &Mat) -> (Vec<f64>, Vec<f64>) {
+        let pb = self.map.phi(&self.theta.ard(), x);
+        let mu = self.theta.mu();
+        let u = self.theta.u_mat(); // upper-tri
+        let mean = pb.phi.matvec(mu);
+        let noise = (2.0 * self.theta.log_sigma()).exp();
+        let mut var = Vec::with_capacity(x.rows);
+        for i in 0..x.rows {
+            let phi_i = pb.phi.row(i);
+            // ‖U φ‖² = φ^T Σ φ.
+            let uphi = u.matvec(phi_i);
+            let quad: f64 = uphi.iter().map(|v| v * v).sum();
+            var.push((pb.ktilde[i] + quad).max(1e-12) + noise);
+        }
+        (mean, var)
+    }
+
+    /// The batch data term Σ_i g_i of the negative ELBO (eq. 23) —
+    /// pure-Rust twin of `model.elbo_fn`'s first output.
+    pub fn data_term(&self, x: &Mat, y: &[f64]) -> f64 {
+        let pb = self.map.phi(&self.theta.ard(), x);
+        let mu = self.theta.mu();
+        let u = self.theta.u_mat();
+        let beta = self.theta.beta();
+        let log_sigma = self.theta.log_sigma();
+        let mut g = 0.0;
+        for i in 0..x.rows {
+            let phi_i = pb.phi.row(i);
+            let e = crate::linalg::dot(phi_i, mu) - y[i];
+            let uphi = u.matvec(phi_i);
+            let quad: f64 = uphi.iter().map(|v| v * v).sum();
+            g += 0.5 * (2.0 * std::f64::consts::PI).ln() + log_sigma
+                + 0.5 * beta * (e * e + quad + pb.ktilde[i]);
+        }
+        g
+    }
+
+    /// Full negative ELBO −L = Σ g_i + h (eq. 14) over a dataset.
+    pub fn neg_elbo(&self, x: &Mat, y: &[f64]) -> f64 {
+        self.data_term(x, y) + self.theta.kl()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::data::synth;
+    use crate::gp::exact::ExactGp;
+    use crate::kernel::ArdParams;
+    use crate::util::rmse;
+
+    fn optimal_q(theta: &mut Theta, x: &Mat, y: &[f64]) {
+        // Closed-form optimum: Σ* = (I + β Φ^T Φ)^{-1}, μ* = β Σ* Φ^T y.
+        let map = InducingChol::build(&theta.ard(), theta.z_mat());
+        let pb = map.phi(&theta.ard(), x);
+        let beta = theta.beta();
+        let m = theta.layout.m;
+        let mut prec = pb.phi.gram();
+        prec.scale(beta);
+        for i in 0..m {
+            prec[(i, i)] += 1.0;
+        }
+        let sigma = crate::linalg::spd_inverse(&prec).unwrap();
+        let phity = pb.phi.tr_matvec(y);
+        let mut mu = sigma.matvec(&phity);
+        for v in &mut mu {
+            *v *= beta;
+        }
+        theta.mu_mut().copy_from_slice(&mu);
+        // U = chol(Σ)^T (upper).
+        let l = crate::linalg::cholesky_lower(&sigma).unwrap();
+        theta.set_u_mat(&l.transpose());
+    }
+
+    #[test]
+    fn elbo_lower_bounds_exact_evidence() {
+        let ds = synth::gp_draw(60, 2, 0.3, 7);
+        let exact = ExactGp::fit(ArdParams::unit(2), (0.3f64).ln(), ds.x.clone(), &ds.y);
+        let layout = ThetaLayout::new(12, 2);
+        let mut rng = crate::util::rng::Pcg64::seeded(8);
+        let z = crate::data::kmeans::kmeans(&ds.x, 12, 25, &mut rng);
+        let mut theta = Theta::init(layout, &z);
+        theta.data[layout.log_sigma_idx()] = (0.3f64).ln();
+        // At the init q.
+        let gp = SparseGp::new(theta.clone());
+        let elbo_init = -gp.neg_elbo(&ds.x, &ds.y);
+        assert!(elbo_init <= exact.log_evidence() + 1e-6);
+        // At the optimal q: tighter but still a lower bound.
+        optimal_q(&mut theta, &ds.x, &ds.y);
+        let gp2 = SparseGp::new(theta);
+        let elbo_opt = -gp2.neg_elbo(&ds.x, &ds.y);
+        assert!(elbo_opt <= exact.log_evidence() + 1e-6);
+        assert!(elbo_opt > elbo_init);
+    }
+
+    #[test]
+    fn m_equals_n_predictions_match_exact() {
+        let ds = synth::gp_draw(50, 2, 0.2, 9);
+        let layout = ThetaLayout::new(50, 2);
+        let mut theta = Theta::init(layout, &ds.x); // Z = X
+        theta.data[layout.log_sigma_idx()] = (0.2f64).ln();
+        // Match the exact GP's unit lengthscales (init uses η = 1/d).
+        for v in &mut theta.data[layout.log_eta_range()] {
+            *v = 0.0;
+        }
+        optimal_q(&mut theta, &ds.x, &ds.y);
+        let sparse = SparseGp::new(theta);
+        let exact = ExactGp::fit(ArdParams::unit(2), (0.2f64).ln(), ds.x.clone(), &ds.y);
+        let test = synth::gp_draw(20, 2, 0.2, 10).x;
+        let (ms, vs) = sparse.predict(&test);
+        let (me, ve) = exact.predict(&test);
+        assert!(rmse(&ms, &me) < 2e-2, "mean gap {}", rmse(&ms, &me));
+        for (a, b) in vs.iter().zip(&ve) {
+            assert!((a - b).abs() < 5e-2, "var gap {a} vs {b}");
+        }
+    }
+
+    #[test]
+    fn data_term_matches_manual_sum() {
+        let ds = synth::friedman(64, 4, 0.3, 11);
+        let layout = ThetaLayout::new(8, 4);
+        let mut rng = crate::util::rng::Pcg64::seeded(12);
+        let z = crate::data::kmeans::kmeans(&ds.x, 8, 10, &mut rng);
+        let theta = Theta::init(layout, &z);
+        let gp = SparseGp::new(theta);
+        // Additivity: sum over two halves equals the whole.
+        let h1 = ds.head(32);
+        let x2 = Mat::from_vec(32, 4, ds.x.data[32 * 4..].to_vec());
+        let y2 = ds.y[32..].to_vec();
+        let whole = gp.data_term(&ds.x, &ds.y);
+        let parts = gp.data_term(&h1.x, &h1.y) + gp.data_term(&x2, &y2);
+        assert!((whole - parts).abs() < 1e-8);
+    }
+}

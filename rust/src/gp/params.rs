@@ -1,0 +1,253 @@
+//! The flat parameter vector θ shared by the server, both gradient
+//! engines, and the AOT artifacts.
+//!
+//! Layout (f64 host-side; converted to f32 at the PJRT boundary), in the
+//! exact positional order of `python/compile/model.py`:
+//!
+//! ```text
+//! mu        [m]        variational mean of q(w)
+//! u         [m*m]      row-major upper-tri Cholesky factor of Σ
+//! z         [m*d]      row-major inducing inputs
+//! log_a0    [1]
+//! log_eta   [d]
+//! log_sigma [1]
+//! ```
+
+use crate::kernel::ArdParams;
+use crate::linalg::Mat;
+
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub struct ThetaLayout {
+    pub m: usize,
+    pub d: usize,
+}
+
+impl ThetaLayout {
+    pub fn new(m: usize, d: usize) -> Self {
+        Self { m, d }
+    }
+
+    pub fn len(&self) -> usize {
+        self.m + self.m * self.m + self.m * self.d + 1 + self.d + 1
+    }
+
+    pub fn is_empty(&self) -> bool {
+        false
+    }
+
+    pub fn mu_range(&self) -> std::ops::Range<usize> {
+        0..self.m
+    }
+
+    pub fn u_range(&self) -> std::ops::Range<usize> {
+        let s = self.m;
+        s..s + self.m * self.m
+    }
+
+    pub fn z_range(&self) -> std::ops::Range<usize> {
+        let s = self.m + self.m * self.m;
+        s..s + self.m * self.d
+    }
+
+    pub fn log_a0_idx(&self) -> usize {
+        self.m + self.m * self.m + self.m * self.d
+    }
+
+    pub fn log_eta_range(&self) -> std::ops::Range<usize> {
+        let s = self.log_a0_idx() + 1;
+        s..s + self.d
+    }
+
+    pub fn log_sigma_idx(&self) -> usize {
+        self.log_eta_range().end
+    }
+
+    /// Is index `i` part of the variational block (μ or U)?  The server
+    /// applies the proximal operator only there (Algorithm 1 line 3).
+    pub fn is_variational(&self, i: usize) -> bool {
+        i < self.m + self.m * self.m
+    }
+
+    /// Is index `i` a *diagonal* element of U (special prox, eq. 20)?
+    pub fn is_u_diag(&self, i: usize) -> bool {
+        let ur = self.u_range();
+        if !ur.contains(&i) {
+            return false;
+        }
+        let off = i - ur.start;
+        off % self.m == off / self.m
+    }
+}
+
+/// Owned parameter vector with typed accessors.
+#[derive(Clone, Debug)]
+pub struct Theta {
+    pub layout: ThetaLayout,
+    pub data: Vec<f64>,
+}
+
+impl Theta {
+    /// Paper §6.1 init: μ = 0, U = I, unit kernel, given inducing points.
+    pub fn init(layout: ThetaLayout, z_init: &Mat) -> Self {
+        assert_eq!(z_init.rows, layout.m);
+        assert_eq!(z_init.cols, layout.d);
+        let mut data = vec![0.0; layout.len()];
+        let m = layout.m;
+        for i in 0..m {
+            data[layout.u_range().start + i * m + i] = 1.0;
+        }
+        data[layout.z_range()].copy_from_slice(&z_init.data);
+        // log_a0 = 0, log_sigma = 0.  Lengthscales use the standard
+        // heuristic for standardized features: eta_k = 1/d, so that the
+        // expected scaled distance E[eta * ||x - x'||^2] = 2 stays inside
+        // the kernel's responsive range for any input dimension.
+        let log_eta0 = -(layout.d as f64).ln();
+        for v in &mut data[layout.log_eta_range()] {
+            *v = log_eta0;
+        }
+        Self { layout, data }
+    }
+
+    pub fn mu(&self) -> &[f64] {
+        &self.data[self.layout.mu_range()]
+    }
+
+    pub fn mu_mut(&mut self) -> &mut [f64] {
+        let r = self.layout.mu_range();
+        &mut self.data[r]
+    }
+
+    pub fn u_mat(&self) -> Mat {
+        Mat::from_vec(self.layout.m, self.layout.m,
+                      self.data[self.layout.u_range()].to_vec())
+    }
+
+    pub fn set_u_mat(&mut self, u: &Mat) {
+        assert_eq!((u.rows, u.cols), (self.layout.m, self.layout.m));
+        let r = self.layout.u_range();
+        self.data[r].copy_from_slice(&u.data);
+    }
+
+    pub fn z_mat(&self) -> Mat {
+        Mat::from_vec(self.layout.m, self.layout.d,
+                      self.data[self.layout.z_range()].to_vec())
+    }
+
+    pub fn set_z_mat(&mut self, z: &Mat) {
+        let r = self.layout.z_range();
+        self.data[r].copy_from_slice(&z.data);
+    }
+
+    pub fn log_a0(&self) -> f64 {
+        self.data[self.layout.log_a0_idx()]
+    }
+
+    pub fn log_eta(&self) -> &[f64] {
+        &self.data[self.layout.log_eta_range()]
+    }
+
+    pub fn log_sigma(&self) -> f64 {
+        self.data[self.layout.log_sigma_idx()]
+    }
+
+    pub fn beta(&self) -> f64 {
+        (-2.0 * self.log_sigma()).exp()
+    }
+
+    pub fn ard(&self) -> ArdParams {
+        ArdParams { log_a0: self.log_a0(), log_eta: self.log_eta().to_vec() }
+    }
+
+    /// KL term h(μ, U) of eq. (24): ½(−ln|Σ| − m + tr Σ + μᵀμ), with
+    /// Σ = UᵀU so ln|Σ| = 2 Σ_i ln|U_ii| and tr Σ = ΣᵢⱼU²ᵢⱼ.
+    pub fn kl(&self) -> f64 {
+        let m = self.layout.m;
+        let u = &self.data[self.layout.u_range()];
+        let mut logdet = 0.0;
+        let mut tr = 0.0;
+        for i in 0..m {
+            for j in i..m {
+                let v = u[i * m + j];
+                tr += v * v;
+            }
+            logdet += u[i * m + i].abs().max(1e-300).ln();
+        }
+        let mu_sq: f64 = self.mu().iter().map(|x| x * x).sum();
+        0.5 * (-2.0 * logdet - m as f64 + tr + mu_sq)
+    }
+
+    /// Enforce the upper-triangular structure of U (zero strict lower).
+    pub fn enforce_triu(&mut self) {
+        let m = self.layout.m;
+        let r = self.layout.u_range();
+        let u = &mut self.data[r];
+        for i in 0..m {
+            for j in 0..i {
+                u[i * m + j] = 0.0;
+            }
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn layout_ranges_partition() {
+        let l = ThetaLayout::new(5, 3);
+        assert_eq!(l.len(), 5 + 25 + 15 + 1 + 3 + 1);
+        assert_eq!(l.mu_range().end, l.u_range().start);
+        assert_eq!(l.u_range().end, l.z_range().start);
+        assert_eq!(l.z_range().end, l.log_a0_idx());
+        assert_eq!(l.log_a0_idx() + 1, l.log_eta_range().start);
+        assert_eq!(l.log_eta_range().end, l.log_sigma_idx());
+        assert_eq!(l.log_sigma_idx() + 1, l.len());
+    }
+
+    #[test]
+    fn variational_and_diag_classification() {
+        let l = ThetaLayout::new(3, 2);
+        for i in 0..l.len() {
+            let expect = i < 3 + 9;
+            assert_eq!(l.is_variational(i), expect, "i={i}");
+        }
+        // U diag offsets: u starts at 3; diag at local 0, 4, 8.
+        let diags: Vec<usize> = (0..l.len()).filter(|&i| l.is_u_diag(i)).collect();
+        assert_eq!(diags, vec![3, 7, 11]);
+    }
+
+    #[test]
+    fn init_is_paper_init() {
+        let l = ThetaLayout::new(4, 2);
+        let z = Mat::from_vec(4, 2, (0..8).map(|i| i as f64).collect());
+        let th = Theta::init(l, &z);
+        assert!(th.mu().iter().all(|&x| x == 0.0));
+        let u = th.u_mat();
+        assert!(u.max_abs_diff(&Mat::eye(4)) < 1e-15);
+        assert_eq!(th.z_mat().data, z.data);
+        assert_eq!(th.log_a0(), 0.0);
+        assert_eq!(th.log_sigma(), 0.0);
+        // KL at the prior is exactly 0.
+        assert!(th.kl().abs() < 1e-12);
+    }
+
+    #[test]
+    fn kl_matches_dense_formula() {
+        let l = ThetaLayout::new(3, 1);
+        let z = Mat::zeros(3, 1);
+        let mut th = Theta::init(l, &z);
+        th.mu_mut().copy_from_slice(&[0.5, -1.0, 2.0]);
+        let u = Mat::from_rows(vec![
+            vec![0.9, 0.2, -0.1],
+            vec![0.0, 1.1, 0.3],
+            vec![0.0, 0.0, 0.7],
+        ]);
+        th.set_u_mat(&u);
+        let sigma = u.transpose().matmul(&u);
+        let (w, _) = crate::linalg::sym_eig(&sigma);
+        let logdet: f64 = w.iter().map(|x| x.ln()).sum();
+        let want = 0.5 * (-logdet - 3.0 + sigma.trace() + 0.25 + 1.0 + 4.0);
+        assert!((th.kl() - want).abs() < 1e-9, "{} vs {}", th.kl(), want);
+    }
+}

@@ -1,0 +1,201 @@
+//! The L-path chain rule shared by both gradient engines.
+//!
+//! The feature map uses `L = chol(K_mm^{-1})` (eq. 11).  Given the true
+//! cotangent `dL̄ = ∂G/∂L`, this module back-propagates it through
+//!
+//!   L = cholesky(K_inv)      (reverse-mode Cholesky, half-diag mask)
+//!   K_inv = K_mm⁻¹           (reverse-mode inverse)
+//!   K_mm  = k(Z, Z) + jitter·a0²·I   (ARD kernel VJP)
+//!
+//! yielding the (Z, lnη, ln a0) contributions.  This is exactly the
+//! content of the paper's appendix eqs. 28–32 (their Ψ/T_i operator is
+//! the per-sample form of the Cholesky differential); we keep the
+//! mechanical form because every step is independently testable.
+//!
+//! Used by: `NativeEngine` (which also computes dL̄ itself) and
+//! `XlaEngine` (whose artifact returns dL̄ — jax's CPU linalg lowers to
+//! typed-FFI custom-calls that xla_extension 0.5.1 cannot execute, so
+//! the O(m³) factor lives on the Rust side of the ABI).
+
+use crate::kernel::{cross_pairwise, kmm, ArdParams, DEFAULT_JITTER};
+use crate::linalg::{cholesky_lower, solve_lower, spd_inverse, Mat};
+
+/// Factorization context for one θ.
+pub struct LChain {
+    pub params: ArdParams,
+    pub z: Mat,
+    /// Lower L with K_mm^{-1} = L L^T (jittered K_mm).
+    pub chol_l: Mat,
+    /// L^{-1} (lower).
+    pub chol_l_inv: Mat,
+    /// K_mm^{-1} (jittered).
+    pub kinv: Mat,
+    /// Jittered K_mm.
+    pub kmm_jit: Mat,
+    /// Raw (unjittered) kernel matrix k(Z, Z).
+    pub kmm_raw: Mat,
+}
+
+/// Gradient contributions flowing through L.
+pub struct LChainGrads {
+    pub dz: Mat,
+    pub dlog_eta: Vec<f64>,
+    pub dlog_a0: f64,
+}
+
+impl LChain {
+    pub fn build(params: ArdParams, z: Mat) -> Self {
+        Self::try_build(params, z).expect("K_mm SPD")
+    }
+
+    /// Fallible build: returns `None` when K_mm (or its inverse) is not
+    /// SPD at this θ — line searches probe such points and must see a
+    /// +∞ objective rather than a panic.
+    pub fn try_build(params: ArdParams, z: Mat) -> Option<Self> {
+        let m = z.rows;
+        let kmm_jit = kmm(&params, &z, DEFAULT_JITTER);
+        let kinv = spd_inverse(&kmm_jit).ok()?;
+        let chol_l = cholesky_lower(&kinv).ok()?;
+        let mut chol_l_inv = Mat::zeros(m, m);
+        for col in 0..m {
+            let mut e = vec![0.0; m];
+            e[col] = 1.0;
+            let xcol = solve_lower(&chol_l, &e);
+            for r in col..m {
+                chol_l_inv[(r, col)] = xcol[r];
+            }
+        }
+        let kmm_raw = cross_pairwise(&params, &z, &z);
+        Some(Self { params, z, chol_l, chol_l_inv, kinv, kmm_jit, kmm_raw })
+    }
+
+    /// Back-propagate the true cotangent `l_cot = ∂G/∂L` to (Z, lnη, ln a0).
+    pub fn chain(&self, l_cot: &Mat) -> LChainGrads {
+        let m = self.z.rows;
+        let d = self.z.cols;
+        let eta = self.params.eta();
+        // Cholesky reverse-mode for K_inv = L Lᵀ:
+        //   K̄inv = ½ L^{-T} (Φ(Lᵀ dL̄) + Φ(Lᵀ dL̄)ᵀ) L^{-1},
+        // Φ = take-lower with halved diagonal.
+        let lt_d = self.chol_l.transpose().matmul(l_cot);
+        let mut philow = Mat::zeros(m, m);
+        for i in 0..m {
+            for j in 0..=i {
+                philow[(i, j)] = lt_d[(i, j)] * if i == j { 0.5 } else { 1.0 };
+            }
+        }
+        let mut sym = philow.clone();
+        let pt = philow.transpose();
+        sym.add_assign(&pt);
+        let linv = &self.chol_l_inv;
+        let mut kinv_cot = linv.transpose().matmul(&sym).matmul(linv);
+        kinv_cot.scale(0.5);
+        // Inverse reverse-mode: K̄mm = −K_inv K̄inv K_inv.
+        let mut kmm_cot = self.kinv.matmul(&kinv_cot).matmul(&self.kinv);
+        kmm_cot.scale(-1.0);
+
+        // Kernel VJP.  G2 = (K̄mm + K̄mmᵀ) ∘ K_raw for dZ;
+        // G3 = K̄mm ∘ K_raw for dlnη; dln a0 = 2 Σ K̄mm ∘ K_jit
+        // (the jitter ridge scales with a0², hence K_jit).
+        let mut g2 = kmm_cot.clone();
+        let kt = kmm_cot.transpose();
+        g2.add_assign(&kt);
+        for (v, k) in g2.data.iter_mut().zip(&self.kmm_raw.data) {
+            *v *= k;
+        }
+        let g2_z = g2.matmul(&self.z);
+        let g2_rowsum: Vec<f64> = (0..m).map(|j| g2.row(j).iter().sum()).collect();
+        let mut dz = Mat::zeros(m, d);
+        for j in 0..m {
+            for k in 0..d {
+                dz[(j, k)] =
+                    eta[k] * (g2_z[(j, k)] - g2_rowsum[j] * self.z[(j, k)]);
+            }
+        }
+
+        let mut g3 = kmm_cot.clone();
+        for (v, k) in g3.data.iter_mut().zip(&self.kmm_raw.data) {
+            *v *= k;
+        }
+        let g3_z = g3.matmul(&self.z);
+        let g3_rowsum: Vec<f64> = (0..m).map(|j| g3.row(j).iter().sum()).collect();
+        let g3_colsum = g3.tr_matvec(&vec![1.0; m]);
+        let mut dlog_eta = vec![0.0; d];
+        for k in 0..d {
+            let mut q = 0.0;
+            for j in 0..m {
+                let zjk = self.z[(j, k)];
+                q += g3_rowsum[j] * zjk * zjk - 2.0 * zjk * g3_z[(j, k)]
+                    + g3_colsum[j] * zjk * zjk;
+            }
+            dlog_eta[k] = -0.5 * eta[k] * q;
+        }
+
+        let mut dlog_a0 = 0.0;
+        for (c, k) in kmm_cot.data.iter().zip(&self.kmm_jit.data) {
+            dlog_a0 += 2.0 * c * k;
+        }
+
+        LChainGrads { dz, dlog_eta, dlog_a0 }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::rng::Pcg64;
+
+    /// FD check of the full chain: scalar s(L(Z, η, a0)) = Σ W ∘ L.
+    #[test]
+    fn chain_matches_finite_differences() {
+        let (m, d) = (5, 3);
+        let mut rng = Pcg64::seeded(77);
+        let z0 = Mat::from_vec(m, d, (0..m * d).map(|_| rng.normal()).collect());
+        let w = Mat::from_vec(m, m, (0..m * m).map(|_| rng.normal()).collect());
+        let params0 = ArdParams { log_a0: 0.15, log_eta: vec![0.1, -0.2, 0.05] };
+
+        let scalar = |params: &ArdParams, z: &Mat| -> f64 {
+            let c = LChain::build(params.clone(), z.clone());
+            c.chol_l.data.iter().zip(&w.data).map(|(a, b)| a * b).sum()
+        };
+
+        let chain = LChain::build(params0.clone(), z0.clone());
+        let grads = chain.chain(&w);
+        let eps = 1e-6;
+
+        // Z coordinates.
+        for j in 0..m {
+            for k in 0..d {
+                let mut zp = z0.clone();
+                zp[(j, k)] += eps;
+                let mut zm = z0.clone();
+                zm[(j, k)] -= eps;
+                let fd = (scalar(&params0, &zp) - scalar(&params0, &zm)) / (2.0 * eps);
+                let an = grads.dz[(j, k)];
+                assert!(
+                    (fd - an).abs() < 1e-4 * fd.abs().max(an.abs()).max(1.0),
+                    "dz[{j},{k}] fd {fd} vs {an}"
+                );
+            }
+        }
+        // lnη.
+        for k in 0..d {
+            let mut pp = params0.clone();
+            pp.log_eta[k] += eps;
+            let mut pm = params0.clone();
+            pm.log_eta[k] -= eps;
+            let fd = (scalar(&pp, &z0) - scalar(&pm, &z0)) / (2.0 * eps);
+            let an = grads.dlog_eta[k];
+            assert!((fd - an).abs() < 1e-4 * fd.abs().max(an.abs()).max(1.0),
+                    "dleta[{k}] fd {fd} vs {an}");
+        }
+        // ln a0.
+        let mut pp = params0.clone();
+        pp.log_a0 += eps;
+        let mut pm = params0.clone();
+        pm.log_a0 -= eps;
+        let fd = (scalar(&pp, &z0) - scalar(&pm, &z0)) / (2.0 * eps);
+        assert!((fd - grads.dlog_a0).abs() < 1e-4 * fd.abs().max(1.0),
+                "dla0 fd {fd} vs {}", grads.dlog_a0);
+    }
+}

@@ -1,0 +1,49 @@
+//! Gradient engines: compute `(G, ∇G)` of the local data term for a
+//! worker's shard.
+//!
+//! Two interchangeable implementations:
+//! * [`native::NativeEngine`] — pure Rust, analytic appendix-A formulas
+//!   (eqs. 16–17, 26–32 batched).  Used by baselines, tests, and the
+//!   high-worker-count scaling benches.
+//! * [`crate::runtime::XlaEngine`] — executes the AOT JAX/Pallas
+//!   artifact through PJRT (the production hot path).
+//!
+//! Both implement [`GradEngine`] over the same flat θ layout, and an
+//! integration test pins them against each other.
+
+pub mod chain;
+pub mod native;
+
+use crate::gp::ThetaLayout;
+use crate::linalg::Mat;
+
+/// Result of one local-gradient computation.
+#[derive(Clone, Debug)]
+pub struct GradResult {
+    /// The local data term G_k(θ) (eq. 15, summed over the shard).
+    pub value: f64,
+    /// ∇G_k in the flat θ layout.
+    pub grad: Vec<f64>,
+}
+
+/// Computes the data-term gradient over a worker's shard.
+///
+/// Engines are created per worker thread by an [`EngineFactory`]
+/// (PJRT clients are not `Send`, so they can never cross threads).
+pub trait GradEngine {
+    fn layout(&self) -> ThetaLayout;
+
+    /// Full-shard gradient at θ (chunks the shard internally if needed).
+    fn grad(&mut self, theta: &[f64], x: &Mat, y: &[f64]) -> GradResult;
+
+    /// Name for logs/metrics.
+    fn name(&self) -> &'static str;
+}
+
+/// Per-thread engine constructor (worker id → engine).
+pub type EngineFactory = std::sync::Arc<dyn Fn(usize) -> Box<dyn GradEngine> + Send + Sync>;
+
+/// Convenience: factory for the pure-Rust engine.
+pub fn native_factory(layout: ThetaLayout) -> EngineFactory {
+    std::sync::Arc::new(move |_worker| Box::new(native::NativeEngine::new(layout)))
+}

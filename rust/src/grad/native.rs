@@ -1,0 +1,386 @@
+//! Pure-Rust gradient engine: batched analytic gradients of the local
+//! data term G (paper appendix A, eqs. 16–17 and 26–32).
+//!
+//! The per-sample forms of the appendix are folded into matrix products
+//! (DESIGN.md §6): with Φ [B,m] and P [B,m] (rows p_i of eq. 29), the
+//! direct K_bm path uses `A1 = (P Lᵀ) ∘ K_bm` and the L path chains the
+//! cotangent `dL̄ = β K_bmᵀ P` through [`super::chain::LChain`] — the
+//! mechanical equivalent of the appendix's Ψ/T_i operator.  Correctness
+//! is pinned by central finite differences over every θ coordinate
+//! (tests below) and against the JAX/Pallas artifact (integration test).
+
+use super::chain::LChain;
+use super::{GradEngine, GradResult};
+use crate::gp::{Theta, ThetaLayout};
+use crate::kernel::cross;
+use crate::linalg::{dot, Mat};
+
+/// Max rows processed per chunk (bounds the [chunk, m] temporaries).
+const CHUNK: usize = 2048;
+
+pub struct NativeEngine {
+    layout: ThetaLayout,
+}
+
+impl NativeEngine {
+    pub fn new(layout: ThetaLayout) -> Self {
+        Self { layout }
+    }
+}
+
+/// Per-θ precomputation shared across chunks.
+struct Factorization {
+    lchain: LChain,
+    u: Mat,
+    mu: Vec<f64>,
+    beta: f64,
+    log_sigma: f64,
+}
+
+impl Factorization {
+    fn build(layout: ThetaLayout, theta: &[f64]) -> Option<Self> {
+        let th = Theta { layout, data: theta.to_vec() };
+        let lchain = LChain::try_build(th.ard(), th.z_mat())?;
+        let mut u = th.u_mat();
+        u.triu_inplace();
+        Some(Self {
+            lchain,
+            u,
+            mu: th.mu().to_vec(),
+            beta: th.beta(),
+            log_sigma: th.log_sigma(),
+        })
+    }
+}
+
+impl GradEngine for NativeEngine {
+    fn layout(&self) -> ThetaLayout {
+        self.layout
+    }
+
+    fn name(&self) -> &'static str {
+        "native"
+    }
+
+    fn grad(&mut self, theta: &[f64], x: &Mat, y: &[f64]) -> GradResult {
+        assert_eq!(theta.len(), self.layout.len());
+        assert_eq!(x.cols, self.layout.d);
+        assert_eq!(x.rows, y.len());
+        // Line searches probe infeasible θ (non-SPD K_mm): report +∞ so
+        // the caller backtracks instead of crashing.
+        let Some(f) = Factorization::build(self.layout, theta) else {
+            return GradResult {
+                value: f64::INFINITY,
+                grad: vec![0.0; self.layout.len()],
+            };
+        };
+        let mut value = 0.0;
+        let mut grad = vec![0.0; self.layout.len()];
+        // dL̄ accumulates across chunks; the O(m³) chain runs once.
+        let m = self.layout.m;
+        let mut l_cot = Mat::zeros(m, m);
+        let mut start = 0;
+        while start < x.rows {
+            let len = CHUNK.min(x.rows - start);
+            let xc = Mat::from_vec(len, x.cols,
+                                   x.data[start * x.cols..(start + len) * x.cols].to_vec());
+            let yc = &y[start..start + len];
+            value += accumulate_chunk(&self.layout, &f, &xc, yc, &mut grad, &mut l_cot);
+            start += len;
+        }
+        // L path: Z and lnη contributions (ln a0 is covered exactly by
+        // the analytic eq. 27 inside the chunk loop — see note there).
+        let lg = f.lchain.chain(&l_cot);
+        let zr = self.layout.z_range();
+        for (slot, v) in grad[zr].iter_mut().zip(&lg.dz.data) {
+            *slot += v;
+        }
+        let er = self.layout.log_eta_range();
+        for (slot, v) in grad[er].iter_mut().zip(&lg.dlog_eta) {
+            *slot += v;
+        }
+        GradResult { value, grad }
+    }
+}
+
+/// Process one chunk; returns its contribution to G, adds the direct
+/// paths to `grad`, and accumulates the L cotangent into `l_cot`.
+fn accumulate_chunk(
+    layout: &ThetaLayout,
+    f: &Factorization,
+    x: &Mat,
+    y: &[f64],
+    grad: &mut [f64],
+    l_cot: &mut Mat,
+) -> f64 {
+    let (b, m, d) = (x.rows, layout.m, layout.d);
+    let a0_sq = f.lchain.params.a0_sq();
+    let eta = f.lchain.params.eta();
+    let beta = f.beta;
+    let z = &f.lchain.z;
+
+    // ---- forward (the Pallas kernel's job on the XLA path) ----
+    let k_bm = cross(&f.lchain.params, x, z); // [B, m]
+    let phi = k_bm.matmul(&f.lchain.chol_l); // [B, m]
+    let mut e = vec![0.0; b];
+    let mut quad = vec![0.0; b];
+    let mut ktilde = vec![0.0; b];
+    // uphi rows: U φ_i; sphi rows: Σ φ_i = U^T (U φ_i).
+    let uphi = phi.matmul(&f.u.transpose()); // rows: (U φ_i)^T
+    let sphi = uphi.matmul(&f.u); // rows: φ_i^T U^T U = (Σ φ_i)^T
+    for i in 0..b {
+        let phi_i = phi.row(i);
+        e[i] = dot(phi_i, &f.mu) - y[i];
+        quad[i] = dot(uphi.row(i), uphi.row(i));
+        ktilde[i] = a0_sq - dot(phi_i, phi_i);
+    }
+    let mut g_val = 0.0;
+    for i in 0..b {
+        g_val += 0.5 * (2.0 * std::f64::consts::PI).ln() + f.log_sigma
+            + 0.5 * beta * (e[i] * e[i] + quad[i] + ktilde[i]);
+    }
+
+    // ---- dμ (eq. 16): β Φ^T e ----
+    {
+        let dmu = phi.tr_matvec(&e);
+        let r = layout.mu_range();
+        for (gslot, v) in grad[r].iter_mut().zip(dmu) {
+            *gslot += beta * v;
+        }
+    }
+
+    // ---- dU (eq. 17): β triu(U Φ^T Φ) ----
+    {
+        let gram = phi.gram(); // Φ^T Φ
+        let mut du = f.u.matmul(&gram);
+        du.triu_inplace();
+        let r = layout.u_range();
+        for (gslot, v) in grad[r].iter_mut().zip(&du.data) {
+            *gslot += beta * v;
+        }
+    }
+
+    // ---- dlnσ (eq. 26) ----
+    {
+        let mut s = 0.0;
+        for i in 0..b {
+            s += 1.0 - beta * (e[i] * e[i] + quad[i] + ktilde[i]);
+        }
+        grad[layout.log_sigma_idx()] += s;
+    }
+
+    // ---- dln a0 (eq. 27) — exact for ALL paths: Φ ∝ a0 identically
+    // (K_bm ∝ a0², L ∝ a0^{-1} incl. the a0²-scaled jitter), so the
+    // closed form needs no chain contribution. ----
+    {
+        let mut s = 0.0;
+        for i in 0..b {
+            let phim = e[i] + y[i]; // φ_i^T μ
+            let phi_sq = a0_sq - ktilde[i]; // ‖φ_i‖²
+            s += -y[i] * phim + quad[i] + phim * phim + a0_sq - phi_sq;
+        }
+        grad[layout.log_a0_idx()] += beta * s;
+    }
+
+    // ---- P (eq. 29): p_i = e_i μ + Σ φ_i − φ_i (= ∂g_i/∂φ_i / β) ----
+    let mut p = Mat::zeros(b, m);
+    for i in 0..b {
+        let prow = p.row_mut(i);
+        let phii = phi.row(i);
+        let sphii = sphi.row(i);
+        for j in 0..m {
+            prow[j] = e[i] * f.mu[j] + sphii[j] - phii[j];
+        }
+    }
+
+    // ---- direct K_bm path: A1 = (P Lᵀ) ∘ K_bm ----
+    let mut a1 = p.matmul(&f.lchain.chol_l.transpose());
+    for (v, k) in a1.data.iter_mut().zip(&k_bm.data) {
+        *v *= k;
+    }
+    let ones_b = vec![1.0; b];
+    let s_col = a1.tr_matvec(&ones_b); // s_j = Σ_i A1[i,j]
+    let mut row_sum = vec![0.0; b];
+    for i in 0..b {
+        row_sum[i] = a1.row(i).iter().sum();
+    }
+    let a1t_x = a1.tr_matmul(x); // [m, d]
+
+    // dZ direct: β η_k [ (A1ᵀX)[j,k] − s_j z_jk ].
+    {
+        let r = layout.z_range();
+        let gz = &mut grad[r];
+        for j in 0..m {
+            for k in 0..d {
+                gz[j * d + k] +=
+                    beta * eta[k] * (a1t_x[(j, k)] - s_col[j] * z[(j, k)]);
+            }
+        }
+    }
+
+    // dlnη direct: −½ β η_k Σ_ij A1[i,j] (x_ik − z_jk)².
+    {
+        let r = layout.log_eta_range();
+        let geta = &mut grad[r];
+        for k in 0..d {
+            let mut q = 0.0;
+            for i in 0..b {
+                let xik = x[(i, k)];
+                q += row_sum[i] * xik * xik;
+            }
+            for j in 0..m {
+                let zjk = z[(j, k)];
+                q += -2.0 * zjk * a1t_x[(j, k)] + s_col[j] * zjk * zjk;
+            }
+            geta[k] += -0.5 * beta * eta[k] * q;
+        }
+    }
+
+    // ---- accumulate the true L cotangent: dL̄ += β K_bmᵀ P ----
+    {
+        let d_mat = k_bm.tr_matmul(&p);
+        l_cot.axpy(beta, &d_mat);
+    }
+
+    g_val
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::rng::Pcg64;
+
+    fn test_theta(layout: ThetaLayout, seed: u64) -> Vec<f64> {
+        let mut rng = Pcg64::seeded(seed);
+        let z = Mat::from_vec(layout.m, layout.d,
+                              (0..layout.m * layout.d).map(|_| rng.normal() * 0.8).collect());
+        let mut th = Theta::init(layout, &z);
+        for v in th.mu_mut() {
+            *v = rng.normal() * 0.3;
+        }
+        let m = layout.m;
+        let mut u = Mat::eye(m);
+        for i in 0..m {
+            u[(i, i)] = 0.7 + 0.3 * rng.next_f64();
+            for j in i + 1..m {
+                u[(i, j)] = rng.normal() * 0.05;
+            }
+        }
+        th.set_u_mat(&u);
+        th.data[layout.log_a0_idx()] = 0.2;
+        for (k, v) in th.data[layout.log_eta_range()].iter_mut().enumerate() {
+            *v = 0.1 * (k as f64 - 1.0);
+        }
+        th.data[layout.log_sigma_idx()] = -0.3;
+        th.data
+    }
+
+    fn value_at(layout: ThetaLayout, theta: &[f64], x: &Mat, y: &[f64]) -> f64 {
+        NativeEngine::new(layout).grad(theta, x, y).value
+    }
+
+    fn rand_data(n: usize, d: usize, seed: u64) -> (Mat, Vec<f64>) {
+        let mut rng = Pcg64::seeded(seed);
+        let x = Mat::from_vec(n, d, (0..n * d).map(|_| rng.normal()).collect());
+        let y = (0..n).map(|_| rng.normal()).collect();
+        (x, y)
+    }
+
+    /// Central finite differences over EVERY θ coordinate.
+    #[test]
+    fn gradient_matches_finite_differences() {
+        let layout = ThetaLayout::new(5, 3);
+        let theta = test_theta(layout, 1);
+        let (x, y) = rand_data(24, 3, 2);
+        let mut engine = NativeEngine::new(layout);
+        let res = engine.grad(&theta, &x, &y);
+        let eps = 1e-5;
+        let mut max_rel = 0.0f64;
+        for i in 0..layout.len() {
+            let mut tp = theta.clone();
+            tp[i] += eps;
+            let mut tm = theta.clone();
+            tm[i] -= eps;
+            let fd = (value_at(layout, &tp, &x, &y) - value_at(layout, &tm, &x, &y))
+                / (2.0 * eps);
+            let an = res.grad[i];
+            let denom = fd.abs().max(an.abs()).max(1e-4);
+            let rel = (fd - an).abs() / denom;
+            max_rel = max_rel.max(rel);
+            assert!(
+                rel < 2e-3,
+                "coord {i}: analytic {an:.8} vs fd {fd:.8} (rel {rel:.2e})"
+            );
+        }
+        assert!(max_rel < 2e-3, "max rel err {max_rel:.2e}");
+    }
+
+    #[test]
+    fn strictly_lower_u_gradient_is_zero() {
+        let layout = ThetaLayout::new(4, 2);
+        let theta = test_theta(layout, 3);
+        let (x, y) = rand_data(32, 2, 4);
+        let res = NativeEngine::new(layout).grad(&theta, &x, &y);
+        let ur = layout.u_range();
+        let m = 4;
+        for i in 0..m {
+            for j in 0..i {
+                assert_eq!(res.grad[ur.start + i * m + j], 0.0);
+            }
+        }
+    }
+
+    #[test]
+    fn value_matches_sparse_gp_data_term() {
+        let layout = ThetaLayout::new(6, 3);
+        let theta = test_theta(layout, 5);
+        let (x, y) = rand_data(50, 3, 6);
+        let res = NativeEngine::new(layout).grad(&theta, &x, &y);
+        let gp = crate::gp::SparseGp::new(Theta { layout, data: theta.clone() });
+        let want = gp.data_term(&x, &y);
+        assert!((res.value - want).abs() < 1e-8 * want.abs().max(1.0),
+                "{} vs {}", res.value, want);
+    }
+
+    #[test]
+    fn additive_over_shards() {
+        let layout = ThetaLayout::new(5, 3);
+        let theta = test_theta(layout, 7);
+        let (x, y) = rand_data(64, 3, 8);
+        let ds = crate::data::Dataset { x, y };
+        let mut eng = NativeEngine::new(layout);
+        let whole = eng.grad(&theta, &ds.x, &ds.y);
+        let shards = ds.shard(4);
+        let mut sum_val = 0.0;
+        let mut sum_grad = vec![0.0; layout.len()];
+        for s in &shards {
+            let r = eng.grad(&theta, &s.x, &s.y);
+            sum_val += r.value;
+            for (a, b) in sum_grad.iter_mut().zip(&r.grad) {
+                *a += b;
+            }
+        }
+        assert!((whole.value - sum_val).abs() < 1e-8);
+        for (a, b) in whole.grad.iter().zip(&sum_grad) {
+            assert!((a - b).abs() < 1e-8);
+        }
+    }
+
+    #[test]
+    fn chunking_is_transparent() {
+        let layout = ThetaLayout::new(4, 2);
+        let theta = test_theta(layout, 9);
+        let n = CHUNK + 513;
+        let (x, y) = rand_data(n, 2, 10);
+        let mut eng = NativeEngine::new(layout);
+        let whole = eng.grad(&theta, &x, &y);
+        let x1 = Mat::from_vec(CHUNK, 2, x.data[..CHUNK * 2].to_vec());
+        let x2 = Mat::from_vec(513, 2, x.data[CHUNK * 2..].to_vec());
+        let r1 = eng.grad(&theta, &x1, &y[..CHUNK]);
+        let r2 = eng.grad(&theta, &x2, &y[CHUNK..]);
+        assert!((whole.value - r1.value - r2.value).abs() < 1e-6);
+        for i in 0..layout.len() {
+            assert!((whole.grad[i] - r1.grad[i] - r2.grad[i]).abs() < 1e-6);
+        }
+    }
+}

@@ -1,0 +1,33 @@
+//! # ADVGP — Asynchronous Distributed Variational Gaussian Processes
+//!
+//! A faithful, production-shaped reproduction of *"Asynchronous
+//! Distributed Variational Gaussian Process for Regression"* (Peng, Zhe,
+//! Zhang, Qi; 2017): a weight-space-augmented variational GP whose
+//! negative ELBO decomposes as `Σ_k G_k(θ) + h(θ)`, optimized by
+//! bounded-staleness (delay-limit τ) proximal gradient descent on a
+//! parameter-server topology.
+//!
+//! Architecture (see DESIGN.md):
+//! * **L3 (this crate)** — the coordinator: parameter server, workers,
+//!   delay gate, proximal updates, baselines, metrics, benches.
+//! * **L2 (python/compile/model.py)** — the JAX objective/gradients,
+//!   AOT-lowered to HLO text in `artifacts/`.
+//! * **L1 (python/compile/kernels/ard_phi.py)** — the fused Pallas
+//!   feature-map kernel inside every artifact.
+//!
+//! Python never runs at inference/training time; the Rust binary loads
+//! the artifacts through PJRT (`runtime`) or falls back to a pure-Rust
+//! gradient engine (`grad::native`) that implements the same math.
+
+pub mod baselines;
+pub mod data;
+pub mod experiments;
+pub mod gp;
+pub mod grad;
+pub mod kernel;
+pub mod linalg;
+pub mod opt;
+pub mod ps;
+pub mod runtime;
+pub mod testing;
+pub mod util;

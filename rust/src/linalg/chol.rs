@@ -1,0 +1,183 @@
+//! Cholesky factorization, triangular solves, SPD inverse.
+
+use super::Mat;
+
+#[derive(Debug, Clone, PartialEq)]
+pub enum CholError {
+    /// Leading minor `i` is not positive definite.
+    NotPositiveDefinite(usize),
+}
+
+impl std::fmt::Display for CholError {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        match self {
+            CholError::NotPositiveDefinite(i) => {
+                write!(f, "matrix not positive definite at pivot {i}")
+            }
+        }
+    }
+}
+
+impl std::error::Error for CholError {}
+
+/// Lower Cholesky factor L with A = L L^T.  `A` must be symmetric.
+pub fn cholesky_lower(a: &Mat) -> Result<Mat, CholError> {
+    assert_eq!(a.rows, a.cols, "cholesky wants square");
+    let n = a.rows;
+    let mut l = Mat::zeros(n, n);
+    for i in 0..n {
+        for j in 0..=i {
+            // s = A[i][j] - sum_k L[i][k] L[j][k]
+            let mut s = a[(i, j)];
+            let (li, lj) = (l.row(i), l.row(j));
+            for k in 0..j {
+                s -= li[k] * lj[k];
+            }
+            if i == j {
+                if s <= 0.0 || !s.is_finite() {
+                    return Err(CholError::NotPositiveDefinite(i));
+                }
+                l[(i, i)] = s.sqrt();
+            } else {
+                l[(i, j)] = s / l[(j, j)];
+            }
+        }
+    }
+    Ok(l)
+}
+
+/// Solve L x = b for lower-triangular L (forward substitution).
+pub fn solve_lower(l: &Mat, b: &[f64]) -> Vec<f64> {
+    let n = l.rows;
+    assert_eq!(b.len(), n);
+    let mut x = vec![0.0; n];
+    for i in 0..n {
+        let mut s = b[i];
+        let row = l.row(i);
+        for k in 0..i {
+            s -= row[k] * x[k];
+        }
+        x[i] = s / row[i];
+    }
+    x
+}
+
+/// Solve U x = b for upper-triangular U (back substitution).
+pub fn solve_upper(u: &Mat, b: &[f64]) -> Vec<f64> {
+    let n = u.rows;
+    assert_eq!(b.len(), n);
+    let mut x = vec![0.0; n];
+    for i in (0..n).rev() {
+        let mut s = b[i];
+        let row = u.row(i);
+        for k in i + 1..n {
+            s -= row[k] * x[k];
+        }
+        x[i] = s / row[i];
+    }
+    x
+}
+
+/// Inverse of an SPD matrix via Cholesky: A^{-1} = L^{-T} L^{-1}.
+pub fn spd_inverse(a: &Mat) -> Result<Mat, CholError> {
+    let n = a.rows;
+    let l = cholesky_lower(a)?;
+    // Invert L by forward-substituting the identity columns, building
+    // Linv (lower-triangular).
+    let mut linv = Mat::zeros(n, n);
+    for col in 0..n {
+        let mut e = vec![0.0; n];
+        e[col] = 1.0;
+        let x = solve_lower(&l, &e);
+        for r in col..n {
+            linv[(r, col)] = x[r];
+        }
+    }
+    // A^{-1} = Linv^T Linv; exploit symmetry.
+    let mut inv = Mat::zeros(n, n);
+    for i in 0..n {
+        for j in i..n {
+            let mut s = 0.0;
+            for k in i.max(j)..n {
+                s += linv[(k, i)] * linv[(k, j)];
+            }
+            inv[(i, j)] = s;
+            inv[(j, i)] = s;
+        }
+    }
+    Ok(inv)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::rng::Pcg64;
+
+    fn random_spd(rng: &mut Pcg64, n: usize) -> Mat {
+        let a = Mat::from_vec(n, n, (0..n * n).map(|_| rng.normal()).collect());
+        let mut s = a.transpose().matmul(&a);
+        for i in 0..n {
+            s[(i, i)] += n as f64 * 0.1;
+        }
+        s
+    }
+
+    #[test]
+    fn cholesky_reconstructs() {
+        let mut rng = Pcg64::seeded(10);
+        for n in [1, 2, 5, 20, 64] {
+            let a = random_spd(&mut rng, n);
+            let l = cholesky_lower(&a).unwrap();
+            let back = l.matmul(&l.transpose());
+            assert!(back.max_abs_diff(&a) < 1e-9 * n as f64, "n={n}");
+            // L is lower-triangular with positive diagonal.
+            for i in 0..n {
+                assert!(l[(i, i)] > 0.0);
+                for j in i + 1..n {
+                    assert_eq!(l[(i, j)], 0.0);
+                }
+            }
+        }
+    }
+
+    #[test]
+    fn rejects_indefinite() {
+        let a = Mat::from_rows(vec![vec![1.0, 2.0], vec![2.0, 1.0]]);
+        assert!(matches!(
+            cholesky_lower(&a),
+            Err(CholError::NotPositiveDefinite(1))
+        ));
+    }
+
+    #[test]
+    fn triangular_solves() {
+        let mut rng = Pcg64::seeded(11);
+        let a = random_spd(&mut rng, 12);
+        let l = cholesky_lower(&a).unwrap();
+        let x_true: Vec<f64> = (0..12).map(|_| rng.normal()).collect();
+        let b = l.matvec(&x_true);
+        let x = solve_lower(&l, &b);
+        for (u, v) in x.iter().zip(&x_true) {
+            assert!((u - v).abs() < 1e-10);
+        }
+        let u_mat = l.transpose();
+        let b2 = u_mat.matvec(&x_true);
+        let x2 = solve_upper(&u_mat, &b2);
+        for (u, v) in x2.iter().zip(&x_true) {
+            assert!((u - v).abs() < 1e-10);
+        }
+    }
+
+    #[test]
+    fn spd_inverse_identity() {
+        let mut rng = Pcg64::seeded(12);
+        for n in [1, 3, 10, 40] {
+            let a = random_spd(&mut rng, n);
+            let inv = spd_inverse(&a).unwrap();
+            let prod = a.matmul(&inv);
+            assert!(prod.max_abs_diff(&Mat::eye(n)) < 1e-8, "n={n}");
+            // Symmetric.
+            assert!(inv.max_abs_diff(&inv.transpose()) < 1e-12);
+        }
+    }
+}

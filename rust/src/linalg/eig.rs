@@ -1,0 +1,137 @@
+//! Cyclic Jacobi eigendecomposition for symmetric matrices.
+//!
+//! Used by the Nyström / EigenGP feature maps (paper eqs. 21–22), which
+//! need eigenvectors/eigenvalues of the m×m inducing covariance.
+//! O(m^3) per sweep with quadratic convergence; m ≤ a few hundred here.
+
+use super::Mat;
+
+/// Returns (eigenvalues desc, eigenvectors as columns), A = V diag(w) V^T.
+pub fn sym_eig(a: &Mat) -> (Vec<f64>, Mat) {
+    assert_eq!(a.rows, a.cols);
+    let n = a.rows;
+    let mut m = a.clone();
+    // Symmetrize defensively.
+    for i in 0..n {
+        for j in 0..i {
+            let s = 0.5 * (m[(i, j)] + m[(j, i)]);
+            m[(i, j)] = s;
+            m[(j, i)] = s;
+        }
+    }
+    let mut v = Mat::eye(n);
+    let max_sweeps = 64;
+    for _sweep in 0..max_sweeps {
+        let mut off = 0.0;
+        for i in 0..n {
+            for j in i + 1..n {
+                off += m[(i, j)] * m[(i, j)];
+            }
+        }
+        if off.sqrt() < 1e-12 * (1.0 + m.frob_norm()) {
+            break;
+        }
+        for p in 0..n {
+            for q in p + 1..n {
+                let apq = m[(p, q)];
+                if apq.abs() < 1e-300 {
+                    continue;
+                }
+                let app = m[(p, p)];
+                let aqq = m[(q, q)];
+                let theta = 0.5 * (aqq - app) / apq;
+                let t = theta.signum() / (theta.abs() + (theta * theta + 1.0).sqrt());
+                let c = 1.0 / (t * t + 1.0).sqrt();
+                let s = t * c;
+                // Rotate rows/cols p and q of M.
+                for k in 0..n {
+                    let mkp = m[(k, p)];
+                    let mkq = m[(k, q)];
+                    m[(k, p)] = c * mkp - s * mkq;
+                    m[(k, q)] = s * mkp + c * mkq;
+                }
+                for k in 0..n {
+                    let mpk = m[(p, k)];
+                    let mqk = m[(q, k)];
+                    m[(p, k)] = c * mpk - s * mqk;
+                    m[(q, k)] = s * mpk + c * mqk;
+                }
+                // Accumulate eigenvectors.
+                for k in 0..n {
+                    let vkp = v[(k, p)];
+                    let vkq = v[(k, q)];
+                    v[(k, p)] = c * vkp - s * vkq;
+                    v[(k, q)] = s * vkp + c * vkq;
+                }
+            }
+        }
+    }
+    let mut w = m.diag();
+    // Sort descending, permuting eigenvector columns to match.
+    let mut order: Vec<usize> = (0..n).collect();
+    order.sort_by(|&i, &j| w[j].partial_cmp(&w[i]).unwrap());
+    let w_sorted: Vec<f64> = order.iter().map(|&i| w[i]).collect();
+    let mut v_sorted = Mat::zeros(n, n);
+    for (new_c, &old_c) in order.iter().enumerate() {
+        for r in 0..n {
+            v_sorted[(r, new_c)] = v[(r, old_c)];
+        }
+    }
+    w = w_sorted;
+    (w, v_sorted)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::rng::Pcg64;
+
+    #[test]
+    fn reconstructs_and_orthonormal() {
+        let mut rng = Pcg64::seeded(21);
+        for n in [1, 2, 5, 30] {
+            let a = Mat::from_vec(n, n, (0..n * n).map(|_| rng.normal()).collect());
+            let s = {
+                let mut s = a.transpose().matmul(&a);
+                s.scale(1.0 / n as f64);
+                s
+            };
+            let (w, v) = sym_eig(&s);
+            // V diag(w) V^T == S
+            let mut dw = Mat::zeros(n, n);
+            for i in 0..n {
+                dw[(i, i)] = w[i];
+            }
+            let back = v.matmul(&dw).matmul(&v.transpose());
+            assert!(back.max_abs_diff(&s) < 1e-8, "n={n}");
+            // V orthonormal
+            let vtv = v.transpose().matmul(&v);
+            assert!(vtv.max_abs_diff(&Mat::eye(n)) < 1e-9);
+            // Sorted descending
+            for i in 1..n {
+                assert!(w[i - 1] >= w[i] - 1e-12);
+            }
+            // PSD input -> nonnegative eigenvalues
+            assert!(w.iter().all(|&x| x > -1e-9));
+        }
+    }
+
+    #[test]
+    fn known_2x2() {
+        let a = Mat::from_rows(vec![vec![2.0, 1.0], vec![1.0, 2.0]]);
+        let (w, _) = sym_eig(&a);
+        assert!((w[0] - 3.0).abs() < 1e-12);
+        assert!((w[1] - 1.0).abs() < 1e-12);
+    }
+
+    #[test]
+    fn diagonal_is_fixed_point() {
+        let mut d = Mat::zeros(4, 4);
+        for (i, x) in [4.0, 3.0, 2.0, 1.0].iter().enumerate() {
+            d[(i, i)] = *x;
+        }
+        let (w, v) = sym_eig(&d);
+        assert_eq!(w, vec![4.0, 3.0, 2.0, 1.0]);
+        assert!(v.max_abs_diff(&Mat::eye(4)) < 1e-12);
+    }
+}

@@ -1,0 +1,352 @@
+//! Dense linear-algebra substrate (offline build: no BLAS/nalgebra).
+//!
+//! Row-major `f64` matrices sized for the GP working set (m ≤ a few
+//! hundred): blocked matmul, Cholesky, triangular solves, inverses and a
+//! Jacobi symmetric eigendecomposition (for the Nyström/EigenGP feature
+//! maps, paper eq. 21–22).
+
+mod chol;
+mod eig;
+
+pub use chol::{cholesky_lower, solve_lower, solve_upper, spd_inverse, CholError};
+pub use eig::sym_eig;
+
+use std::fmt;
+use std::ops::{Index, IndexMut};
+
+/// Dense row-major matrix.
+#[derive(Clone, PartialEq)]
+pub struct Mat {
+    pub rows: usize,
+    pub cols: usize,
+    pub data: Vec<f64>,
+}
+
+impl fmt::Debug for Mat {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        writeln!(f, "Mat {}x{} [", self.rows, self.cols)?;
+        for r in 0..self.rows.min(6) {
+            write!(f, "  ")?;
+            for c in 0..self.cols.min(8) {
+                write!(f, "{:10.4} ", self[(r, c)])?;
+            }
+            writeln!(f, "{}", if self.cols > 8 { "…" } else { "" })?;
+        }
+        if self.rows > 6 {
+            writeln!(f, "  …")?;
+        }
+        write!(f, "]")
+    }
+}
+
+impl Mat {
+    pub fn zeros(rows: usize, cols: usize) -> Self {
+        Self { rows, cols, data: vec![0.0; rows * cols] }
+    }
+
+    pub fn eye(n: usize) -> Self {
+        let mut m = Self::zeros(n, n);
+        for i in 0..n {
+            m[(i, i)] = 1.0;
+        }
+        m
+    }
+
+    pub fn from_rows(rows: Vec<Vec<f64>>) -> Self {
+        let r = rows.len();
+        let c = rows.first().map(|x| x.len()).unwrap_or(0);
+        assert!(rows.iter().all(|x| x.len() == c), "ragged rows");
+        Self { rows: r, cols: c, data: rows.into_iter().flatten().collect() }
+    }
+
+    pub fn from_vec(rows: usize, cols: usize, data: Vec<f64>) -> Self {
+        assert_eq!(data.len(), rows * cols);
+        Self { rows, cols, data }
+    }
+
+    #[inline]
+    pub fn row(&self, r: usize) -> &[f64] {
+        &self.data[r * self.cols..(r + 1) * self.cols]
+    }
+
+    #[inline]
+    pub fn row_mut(&mut self, r: usize) -> &mut [f64] {
+        let c = self.cols;
+        &mut self.data[r * c..(r + 1) * c]
+    }
+
+    pub fn transpose(&self) -> Mat {
+        let mut t = Mat::zeros(self.cols, self.rows);
+        for r in 0..self.rows {
+            for c in 0..self.cols {
+                t[(c, r)] = self[(r, c)];
+            }
+        }
+        t
+    }
+
+    /// C = A * B (ikj loop order: streams B's rows, vector-friendly).
+    pub fn matmul(&self, b: &Mat) -> Mat {
+        assert_eq!(self.cols, b.rows, "matmul dims {}x{} * {}x{}",
+                   self.rows, self.cols, b.rows, b.cols);
+        let mut c = Mat::zeros(self.rows, b.cols);
+        for i in 0..self.rows {
+            let arow = self.row(i);
+            let crow = c.row_mut(i);
+            for (k, &aik) in arow.iter().enumerate() {
+                if aik == 0.0 {
+                    continue;
+                }
+                let brow = b.row(k);
+                for (j, &bkj) in brow.iter().enumerate() {
+                    crow[j] += aik * bkj;
+                }
+            }
+        }
+        c
+    }
+
+    /// C = A^T * B without materializing A^T (kij order streams both
+    /// operands row-wise; beats `self.transpose().matmul(b)` by the
+    /// transpose copy plus its cache misses on tall matrices).
+    pub fn tr_matmul(&self, b: &Mat) -> Mat {
+        assert_eq!(self.rows, b.rows, "tr_matmul dims");
+        let mut c = Mat::zeros(self.cols, b.cols);
+        for k in 0..self.rows {
+            let arow = self.row(k);
+            let brow = b.row(k);
+            for (i, &aki) in arow.iter().enumerate() {
+                if aki == 0.0 {
+                    continue;
+                }
+                let crow = c.row_mut(i);
+                for (j, &bkj) in brow.iter().enumerate() {
+                    crow[j] += aki * bkj;
+                }
+            }
+        }
+        c
+    }
+
+    /// C = A^T * A (Gram matrix), exploiting symmetry.
+    pub fn gram(&self) -> Mat {
+        let n = self.cols;
+        let mut g = Mat::zeros(n, n);
+        for r in 0..self.rows {
+            let row = self.row(r);
+            for i in 0..n {
+                let xi = row[i];
+                if xi == 0.0 {
+                    continue;
+                }
+                for j in i..n {
+                    g[(i, j)] += xi * row[j];
+                }
+            }
+        }
+        for i in 0..n {
+            for j in 0..i {
+                g[(i, j)] = g[(j, i)];
+            }
+        }
+        g
+    }
+
+    /// y = A * x.
+    pub fn matvec(&self, x: &[f64]) -> Vec<f64> {
+        assert_eq!(self.cols, x.len());
+        (0..self.rows)
+            .map(|r| dot(self.row(r), x))
+            .collect()
+    }
+
+    /// y = A^T * x.
+    pub fn tr_matvec(&self, x: &[f64]) -> Vec<f64> {
+        assert_eq!(self.rows, x.len());
+        let mut y = vec![0.0; self.cols];
+        for r in 0..self.rows {
+            let xr = x[r];
+            if xr == 0.0 {
+                continue;
+            }
+            for (c, &v) in self.row(r).iter().enumerate() {
+                y[c] += xr * v;
+            }
+        }
+        y
+    }
+
+    pub fn scale(&mut self, s: f64) {
+        for v in &mut self.data {
+            *v *= s;
+        }
+    }
+
+    pub fn add_assign(&mut self, other: &Mat) {
+        assert_eq!((self.rows, self.cols), (other.rows, other.cols));
+        for (a, b) in self.data.iter_mut().zip(&other.data) {
+            *a += b;
+        }
+    }
+
+    /// self += s * other.
+    pub fn axpy(&mut self, s: f64, other: &Mat) {
+        assert_eq!((self.rows, self.cols), (other.rows, other.cols));
+        for (a, b) in self.data.iter_mut().zip(&other.data) {
+            *a += s * b;
+        }
+    }
+
+    /// Keep the upper triangle (incl. diagonal), zero the rest — the
+    /// paper's `triu[·]` operator (eq. 17).
+    pub fn triu_inplace(&mut self) {
+        for r in 0..self.rows {
+            for c in 0..r.min(self.cols) {
+                self[(r, c)] = 0.0;
+            }
+        }
+    }
+
+    pub fn diag(&self) -> Vec<f64> {
+        (0..self.rows.min(self.cols)).map(|i| self[(i, i)]).collect()
+    }
+
+    pub fn trace(&self) -> f64 {
+        self.diag().iter().sum()
+    }
+
+    pub fn frob_norm(&self) -> f64 {
+        self.data.iter().map(|x| x * x).sum::<f64>().sqrt()
+    }
+
+    pub fn max_abs_diff(&self, other: &Mat) -> f64 {
+        assert_eq!((self.rows, self.cols), (other.rows, other.cols));
+        self.data
+            .iter()
+            .zip(&other.data)
+            .map(|(a, b)| (a - b).abs())
+            .fold(0.0, f64::max)
+    }
+}
+
+impl Index<(usize, usize)> for Mat {
+    type Output = f64;
+    #[inline]
+    fn index(&self, (r, c): (usize, usize)) -> &f64 {
+        debug_assert!(r < self.rows && c < self.cols);
+        &self.data[r * self.cols + c]
+    }
+}
+
+impl IndexMut<(usize, usize)> for Mat {
+    #[inline]
+    fn index_mut(&mut self, (r, c): (usize, usize)) -> &mut f64 {
+        debug_assert!(r < self.rows && c < self.cols);
+        &mut self.data[r * self.cols + c]
+    }
+}
+
+#[inline]
+pub fn dot(a: &[f64], b: &[f64]) -> f64 {
+    debug_assert_eq!(a.len(), b.len());
+    // 4-way unrolled accumulation: lets LLVM vectorize without
+    // re-association concerns dominating.
+    let mut s0 = 0.0;
+    let mut s1 = 0.0;
+    let mut s2 = 0.0;
+    let mut s3 = 0.0;
+    let chunks = a.len() / 4;
+    for i in 0..chunks {
+        let k = i * 4;
+        s0 += a[k] * b[k];
+        s1 += a[k + 1] * b[k + 1];
+        s2 += a[k + 2] * b[k + 2];
+        s3 += a[k + 3] * b[k + 3];
+    }
+    let mut s = s0 + s1 + s2 + s3;
+    for i in chunks * 4..a.len() {
+        s += a[i] * b[i];
+    }
+    s
+}
+
+/// Elementwise a·b summed with a mask.
+#[inline]
+pub fn dot3(a: &[f64], b: &[f64], mask: &[f64]) -> f64 {
+    a.iter().zip(b).zip(mask).map(|((x, y), m)| x * y * m).sum()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::rng::Pcg64;
+
+    fn random_mat(rng: &mut Pcg64, r: usize, c: usize) -> Mat {
+        Mat::from_vec(r, c, (0..r * c).map(|_| rng.normal()).collect())
+    }
+
+    #[test]
+    fn matmul_identity_and_assoc() {
+        let mut rng = Pcg64::seeded(1);
+        let a = random_mat(&mut rng, 7, 5);
+        let i5 = Mat::eye(5);
+        assert!(a.matmul(&i5).max_abs_diff(&a) < 1e-14);
+        let b = random_mat(&mut rng, 5, 6);
+        let c = random_mat(&mut rng, 6, 4);
+        let left = a.matmul(&b).matmul(&c);
+        let right = a.matmul(&b.matmul(&c));
+        assert!(left.max_abs_diff(&right) < 1e-10);
+    }
+
+    #[test]
+    fn matmul_known_values() {
+        let a = Mat::from_rows(vec![vec![1.0, 2.0], vec![3.0, 4.0]]);
+        let b = Mat::from_rows(vec![vec![1.0, 1.0], vec![1.0, 1.0]]);
+        let c = a.matmul(&b);
+        assert_eq!(c.data, vec![3.0, 3.0, 7.0, 7.0]);
+    }
+
+    #[test]
+    fn gram_matches_explicit() {
+        let mut rng = Pcg64::seeded(2);
+        let a = random_mat(&mut rng, 9, 6);
+        let g = a.gram();
+        let g2 = a.transpose().matmul(&a);
+        assert!(g.max_abs_diff(&g2) < 1e-12);
+    }
+
+    #[test]
+    fn matvec_and_transpose() {
+        let mut rng = Pcg64::seeded(3);
+        let a = random_mat(&mut rng, 8, 5);
+        let x: Vec<f64> = (0..5).map(|_| rng.normal()).collect();
+        let y = a.matvec(&x);
+        let yt = a.transpose().tr_matvec(&x);
+        // A x == (A^T)^T x
+        for (u, v) in y.iter().zip(&yt) {
+            assert!((u - v).abs() < 1e-12);
+        }
+    }
+
+    #[test]
+    fn triu_zeroes_strict_lower() {
+        let mut a = Mat::from_rows(vec![
+            vec![1.0, 2.0, 3.0],
+            vec![4.0, 5.0, 6.0],
+            vec![7.0, 8.0, 9.0],
+        ]);
+        a.triu_inplace();
+        assert_eq!(a.data, vec![1.0, 2.0, 3.0, 0.0, 5.0, 6.0, 0.0, 0.0, 9.0]);
+    }
+
+    #[test]
+    fn dot_unrolled_matches_naive() {
+        let mut rng = Pcg64::seeded(4);
+        for n in [0, 1, 3, 4, 7, 64, 129] {
+            let a: Vec<f64> = (0..n).map(|_| rng.normal()).collect();
+            let b: Vec<f64> = (0..n).map(|_| rng.normal()).collect();
+            let naive: f64 = a.iter().zip(&b).map(|(x, y)| x * y).sum();
+            assert!((dot(&a, &b) - naive).abs() < 1e-10);
+        }
+    }
+}

@@ -1,0 +1,156 @@
+//! `advgp` — the command-line launcher for the ADVGP system.
+//!
+//! Subcommands:
+//!   train      train a GP regression model (ADVGP / baselines) on CSV
+//!              or synthetic data and report RMSE/MNLP
+//!   datagen    write a synthetic dataset (flight|taxi|friedman) as CSV
+//!   artifacts  list the AOT artifact manifest
+//!   smoke      PJRT round-trip smoke test on an HLO text file
+
+use advgp::data::{csv, synth, Dataset};
+use advgp::experiments::methods::*;
+use advgp::experiments::{make_problem, print_table};
+use advgp::runtime::{engine::xla_factory, ArtifactKind, Manifest};
+use advgp::util::cli::Args;
+use anyhow::{bail, Context, Result};
+use std::path::{Path, PathBuf};
+
+fn main() -> Result<()> {
+    advgp::util::logging::init();
+    let args = Args::from_env();
+    match args.positional.first().map(|s| s.as_str()) {
+        Some("train") => cmd_train(&args),
+        Some("datagen") => cmd_datagen(&args),
+        Some("artifacts") => cmd_artifacts(&args),
+        Some("smoke") => cmd_smoke(&args),
+        _ => {
+            eprintln!(
+                "usage: advgp <train|datagen|artifacts|smoke> [--flags]\n\
+                 \n\
+                 train:    --data <csv|flight|taxi|friedman> [--n 50000] [--m 100]\n\
+                 \x20         [--method advgp|svigp|distgp-gd|distgp-lbfgs|linear]\n\
+                 \x20         [--workers 4] [--tau 32] [--budget 30] [--engine native|xla]\n\
+                 \x20         [--out-trace trace.csv]\n\
+                 datagen:  --kind flight|taxi|friedman --n 10000 --out data.csv [--seed 0]\n\
+                 artifacts: [--dir artifacts]\n\
+                 smoke:    [--hlo /tmp/fn_hlo.txt]"
+            );
+            std::process::exit(2);
+        }
+    }
+}
+
+fn load_data(args: &Args) -> Result<Dataset> {
+    let spec = args.str_or("data", "flight");
+    let n = args.usize_or("n", 50_000);
+    let seed = args.u64_or("seed", 0);
+    Ok(match spec {
+        "flight" => synth::flight_like(n, seed),
+        "taxi" => synth::taxi_like(n, seed),
+        "friedman" => synth::friedman(n, 4, 0.4, seed),
+        path => csv::read_dataset(Path::new(path))
+            .with_context(|| format!("loading CSV {path}"))?,
+    })
+}
+
+fn cmd_train(args: &Args) -> Result<()> {
+    let raw = load_data(args)?;
+    let m = args.usize_or("m", 100);
+    let n_test = args.usize_or("n-test", (raw.n() / 10).clamp(100, 100_000));
+    let method = args.str_or("method", "advgp").to_string();
+    let engine = args.str_or("engine", "native").to_string();
+    let opts = MethodOpts {
+        workers: args.usize_or("workers", 4),
+        tau: args.u64_or("tau", 32),
+        budget_secs: args.f64_or("budget", 30.0),
+        eval_every_secs: args.f64_or("eval-every", 0.5),
+        lr: args.f64_or("lr", 1.0),
+        prox_c: args.f64_or("prox-c", 0.05),
+        prox_t0: args.f64_or("prox-t0", 200.0),
+        max_rows: args.usize_or("max-rows", 0),
+        ..Default::default()
+    };
+    let p = make_problem(raw, n_test, m, 20_000, args.u64_or("seed", 0));
+    let y_std = p.standardizer.y_std;
+    println!(
+        "training {method} on n={} (test {}), d={}, m={m}, θ dim {}",
+        p.train.n(), p.test.n(), p.train.d(), p.layout.len()
+    );
+
+    let result = match method.as_str() {
+        "advgp" => {
+            if engine == "xla" {
+                let dir = PathBuf::from(args.str_or("artifacts", "artifacts"));
+                let man = Manifest::load(&dir)?;
+                man.find(ArtifactKind::Grad, m, p.train.d())?;
+                run_advgp_with(&p, &opts, xla_factory(man, m, p.train.d()))
+            } else {
+                run_advgp(&p, &opts)
+            }
+        }
+        "svigp" => run_svigp_method(&p, &opts),
+        "distgp-gd" => run_distgp_gd_method(&p, &opts),
+        "distgp-lbfgs" => run_distgp_lbfgs_method(&p, &opts),
+        "linear" => run_linear_method(&p, &opts),
+        other => bail!("unknown method {other}"),
+    };
+
+    if let Some(out) = args.get("out-trace") {
+        advgp::ps::metrics::write_trace_csv(Path::new(out), &result.trace)?;
+        println!("trace -> {out}");
+    }
+    let mean = run_mean_method(&p);
+    print_table(
+        "results (original target units)",
+        &["Method", "RMSE", "MNLP", "wall (s)"],
+        &[
+            vec![method, format!("{:.4}", final_rmse(&result) * y_std),
+                 format!("{:.4}", final_mnlp(&result)),
+                 format!("{:.1}", result.wall_secs)],
+            vec!["mean".into(), format!("{:.4}", final_rmse(&mean) * y_std),
+                 "-".into(), "0.0".into()],
+        ],
+    );
+    Ok(())
+}
+
+fn cmd_datagen(args: &Args) -> Result<()> {
+    let kind = args.str_or("kind", "flight");
+    let n = args.usize_or("n", 10_000);
+    let seed = args.u64_or("seed", 0);
+    let out = args.get("out").context("--out <file.csv> required")?;
+    let ds = match kind {
+        "flight" => synth::flight_like(n, seed),
+        "taxi" => synth::taxi_like(n, seed),
+        "friedman" => synth::friedman(n, 4, 0.4, seed),
+        other => bail!("unknown kind {other}"),
+    };
+    csv::write_dataset(Path::new(out), &ds)?;
+    println!("wrote {n} rows ({} features) to {out}", ds.d());
+    Ok(())
+}
+
+fn cmd_artifacts(args: &Args) -> Result<()> {
+    let dir = PathBuf::from(args.str_or("dir", "artifacts"));
+    let man = Manifest::load(&dir)?;
+    println!("{} artifacts in {}:", man.artifacts.len(), dir.display());
+    for a in &man.artifacts {
+        println!(
+            "  {:<8} m={:<4} d={:<2} b={:<5} {}",
+            format!("{:?}", a.kind).to_lowercase(),
+            a.m, a.d, a.b,
+            a.path.file_name().unwrap().to_string_lossy()
+        );
+    }
+    println!("complete (grad+predict+elbo) configs: {:?}", man.complete_configs());
+    Ok(())
+}
+
+fn cmd_smoke(args: &Args) -> Result<()> {
+    let path = args.str_or("hlo", "/tmp/fn_hlo.txt");
+    let vals = advgp::runtime::smoke(path)?;
+    println!("smoke result: {vals:?}");
+    anyhow::ensure!(vals == vec![5.0, 5.0, 9.0, 9.0], "unexpected values");
+    println!("smoke OK");
+    Ok(())
+}

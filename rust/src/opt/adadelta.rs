@@ -1,0 +1,98 @@
+//! ADADELTA (Zeiler, 2012) — the paper's §6.1 choice for adapting the
+//! gradient-descent step before the proximal projection.
+//!
+//! Per coordinate i:
+//!   E[g²]_i ← ρ E[g²]_i + (1−ρ) g_i²
+//!   Δ_i     = −√(E[Δ²]_i + ε) / √(E[g²]_i + ε) · g_i
+//!   E[Δ²]_i ← ρ E[Δ²]_i + (1−ρ) Δ_i²
+
+#[derive(Clone, Debug)]
+pub struct AdaDelta {
+    rho: f64,
+    eps: f64,
+    eg2: Vec<f64>,
+    ed2: Vec<f64>,
+}
+
+impl AdaDelta {
+    pub fn new(dim: usize, rho: f64, eps: f64) -> Self {
+        Self { rho, eps, eg2: vec![0.0; dim], ed2: vec![0.0; dim] }
+    }
+
+    /// Zeiler's defaults.  (eps=1e-3 was tried during the perf pass:
+    /// the warmer start overshoots on full-batch gradients and stalls —
+    /// see EXPERIMENTS.md §Perf tuning log.)
+    pub fn default_for(dim: usize) -> Self {
+        Self::new(dim, 0.95, 1e-6)
+    }
+
+    /// Compute the (negative) update Δ for `grad` and roll the state.
+    /// Returns the step to *add* to the parameters.
+    pub fn step(&mut self, grad: &[f64]) -> Vec<f64> {
+        assert_eq!(grad.len(), self.eg2.len());
+        let mut delta = vec![0.0; grad.len()];
+        for i in 0..grad.len() {
+            let g = grad[i];
+            self.eg2[i] = self.rho * self.eg2[i] + (1.0 - self.rho) * g * g;
+            let d = -((self.ed2[i] + self.eps).sqrt()
+                / (self.eg2[i] + self.eps).sqrt())
+                * g;
+            self.ed2[i] = self.rho * self.ed2[i] + (1.0 - self.rho) * d * d;
+            delta[i] = d;
+        }
+        delta
+    }
+
+    /// Apply in place: θ ← θ + scale·Δ(grad).
+    pub fn apply(&mut self, theta: &mut [f64], grad: &[f64], scale: f64) {
+        let delta = self.step(grad);
+        for (t, d) in theta.iter_mut().zip(delta) {
+            *t += scale * d;
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn descends_a_quadratic() {
+        // f(x) = 0.5 * sum c_i x_i^2 with wildly different curvatures —
+        // the case ADADELTA's per-coordinate scaling is built for.
+        let c = [100.0, 1.0, 0.01];
+        let mut x = [1.0, 1.0, 1.0];
+        let mut opt = AdaDelta::default_for(3);
+        let f = |x: &[f64; 3]| 0.5 * (c[0] * x[0] * x[0] + c[1] * x[1] * x[1] + c[2] * x[2] * x[2]);
+        let f0 = f(&x);
+        for _ in 0..3000 {
+            let g = [c[0] * x[0], c[1] * x[1], c[2] * x[2]];
+            opt.apply(&mut x, &g, 1.0);
+        }
+        assert!(f(&x) < 1e-3 * f0, "f={} from {}", f(&x), f0);
+    }
+
+    #[test]
+    fn first_step_is_sqrt_eps_scaled() {
+        let mut opt = AdaDelta::new(1, 0.95, 1e-6);
+        let d = opt.step(&[10.0]);
+        // E[g²] = 0.05*100 = 5 ; Δ = -sqrt(1e-6)/sqrt(5+1e-6)*10
+        let want = -(1e-6f64).sqrt() / (5.0f64 + 1e-6).sqrt() * 10.0;
+        assert!((d[0] - want).abs() < 1e-12);
+        // Scale invariance: 100x gradient, (almost) identical step.
+        let mut a = AdaDelta::new(1, 0.95, 1e-12);
+        let mut b = AdaDelta::new(1, 0.95, 1e-12);
+        let da = a.step(&[3.0]);
+        let db = b.step(&[300.0]);
+        assert!((da[0] - db[0]).abs() < 1e-9, "{} vs {}", da[0], db[0]);
+    }
+
+    #[test]
+    fn zero_grad_is_fixed_point() {
+        let mut opt = AdaDelta::default_for(4);
+        let mut x = [1.0, 2.0, 3.0, 4.0];
+        let before = x;
+        opt.apply(&mut x, &[0.0; 4], 1.0);
+        assert_eq!(x, before);
+    }
+}

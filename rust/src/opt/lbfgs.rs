@@ -1,0 +1,204 @@
+//! L-BFGS with backtracking Armijo line search — the optimizer behind
+//! the DistGP-LBFGS baseline (Gal et al. 2014 drive the collapsed bound
+//! with L-BFGS on the master).
+
+/// Limited-memory BFGS state (two-loop recursion).
+pub struct Lbfgs {
+    mem: usize,
+    s: Vec<Vec<f64>>,
+    y: Vec<Vec<f64>>,
+    rho: Vec<f64>,
+    prev_x: Option<Vec<f64>>,
+    prev_g: Option<Vec<f64>>,
+}
+
+impl Lbfgs {
+    pub fn new(mem: usize) -> Self {
+        Self { mem, s: vec![], y: vec![], rho: vec![], prev_x: None, prev_g: None }
+    }
+
+    /// Two-loop recursion: returns the descent direction −H·g.
+    pub fn direction(&self, g: &[f64]) -> Vec<f64> {
+        let k = self.s.len();
+        let mut q = g.to_vec();
+        let mut alpha = vec![0.0; k];
+        for i in (0..k).rev() {
+            alpha[i] = self.rho[i] * dot(&self.s[i], &q);
+            axpy(&mut q, -alpha[i], &self.y[i]);
+        }
+        // Initial Hessian scaling γ = s·y / y·y.
+        if let (Some(s), Some(y)) = (self.s.last(), self.y.last()) {
+            let gamma = dot(s, y) / dot(y, y).max(1e-300);
+            for v in &mut q {
+                *v *= gamma;
+            }
+        }
+        for i in 0..k {
+            let beta = self.rho[i] * dot(&self.y[i], &q);
+            axpy(&mut q, alpha[i] - beta, &self.s[i]);
+        }
+        for v in &mut q {
+            *v = -*v;
+        }
+        q
+    }
+
+    /// Record the accepted step (x_{t+1}, g_{t+1}).
+    pub fn update(&mut self, x: &[f64], g: &[f64]) {
+        if let (Some(px), Some(pg)) = (&self.prev_x, &self.prev_g) {
+            let s: Vec<f64> = x.iter().zip(px).map(|(a, b)| a - b).collect();
+            let y: Vec<f64> = g.iter().zip(pg).map(|(a, b)| a - b).collect();
+            let sy = dot(&s, &y);
+            if sy > 1e-10 * norm(&s) * norm(&y) {
+                // Curvature condition holds: keep the pair.
+                self.s.push(s);
+                self.y.push(y);
+                self.rho.push(1.0 / sy);
+                if self.s.len() > self.mem {
+                    self.s.remove(0);
+                    self.y.remove(0);
+                    self.rho.remove(0);
+                }
+            }
+        }
+        self.prev_x = Some(x.to_vec());
+        self.prev_g = Some(g.to_vec());
+    }
+
+    pub fn reset(&mut self) {
+        self.s.clear();
+        self.y.clear();
+        self.rho.clear();
+        self.prev_x = None;
+        self.prev_g = None;
+    }
+}
+
+fn dot(a: &[f64], b: &[f64]) -> f64 {
+    a.iter().zip(b).map(|(x, y)| x * y).sum()
+}
+
+fn norm(a: &[f64]) -> f64 {
+    dot(a, a).sqrt()
+}
+
+fn axpy(y: &mut [f64], a: f64, x: &[f64]) {
+    for (yi, xi) in y.iter_mut().zip(x) {
+        *yi += a * xi;
+    }
+}
+
+/// One L-BFGS step with backtracking Armijo line search.
+/// `f` evaluates (value, gradient).  Returns (new_x, new_value, evals).
+pub fn lbfgs_step<F>(
+    opt: &mut Lbfgs,
+    x: &[f64],
+    fx: f64,
+    gx: &[f64],
+    mut f: F,
+) -> (Vec<f64>, f64, usize)
+where
+    F: FnMut(&[f64]) -> (f64, Vec<f64>),
+{
+    opt.update(x, gx);
+    let dir = opt.direction(gx);
+    let slope = dot(&dir, gx);
+    // Fall back to steepest descent if the direction isn't a descent dir.
+    let (dir, slope) = if slope < 0.0 {
+        (dir, slope)
+    } else {
+        let d: Vec<f64> = gx.iter().map(|g| -g).collect();
+        let s = dot(&d, gx);
+        (d, s)
+    };
+    let mut step = 1.0;
+    let c1 = 1e-4;
+    let mut evals = 0;
+    for _ in 0..30 {
+        let cand: Vec<f64> = x.iter().zip(&dir).map(|(xi, di)| xi + step * di).collect();
+        let (val, _g) = f(&cand);
+        evals += 1;
+        if val.is_finite() && val <= fx + c1 * step * slope {
+            return (cand, val, evals);
+        }
+        step *= 0.5;
+    }
+    // Line search failed: stay put (caller may reset the memory).
+    (x.to_vec(), fx, evals)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn rosenbrock(x: &[f64]) -> (f64, Vec<f64>) {
+        let (a, b) = (1.0, 100.0);
+        let f = (a - x[0]).powi(2) + b * (x[1] - x[0] * x[0]).powi(2);
+        let g = vec![
+            -2.0 * (a - x[0]) - 4.0 * b * x[0] * (x[1] - x[0] * x[0]),
+            2.0 * b * (x[1] - x[0] * x[0]),
+        ];
+        (f, g)
+    }
+
+    #[test]
+    fn solves_rosenbrock() {
+        let mut opt = Lbfgs::new(8);
+        let mut x = vec![-1.2, 1.0];
+        let (mut fx, mut gx) = rosenbrock(&x);
+        for _ in 0..1000 {
+            let (nx, nf, _) = lbfgs_step(&mut opt, &x, fx, &gx, rosenbrock);
+            x = nx;
+            let (f2, g2) = rosenbrock(&x);
+            fx = f2;
+            gx = g2;
+            if nf < 1e-12 {
+                break;
+            }
+        }
+        assert!((x[0] - 1.0).abs() < 1e-4 && (x[1] - 1.0).abs() < 1e-4,
+                "x={x:?} f={fx}");
+    }
+
+    #[test]
+    fn quadratic_converges_fast() {
+        // f = 0.5 x^T diag(c) x: L-BFGS should crush this in few iters.
+        let c = [10.0, 1.0, 0.1, 100.0];
+        let f = |x: &[f64]| {
+            let v = 0.5 * x.iter().zip(&c).map(|(xi, ci)| ci * xi * xi).sum::<f64>();
+            let g: Vec<f64> = x.iter().zip(&c).map(|(xi, ci)| ci * xi).collect();
+            (v, g)
+        };
+        let mut opt = Lbfgs::new(6);
+        let mut x = vec![1.0; 4];
+        let (mut fx, mut gx) = f(&x);
+        for _ in 0..40 {
+            let (nx, _, _) = lbfgs_step(&mut opt, &x, fx, &gx, f);
+            x = nx;
+            let r = f(&x);
+            fx = r.0;
+            gx = r.1;
+        }
+        assert!(fx < 1e-10, "f={fx}");
+    }
+
+    #[test]
+    fn monotone_nonincreasing() {
+        let f = |x: &[f64]| {
+            let v = (x[0] - 3.0).powi(4) + x[1] * x[1];
+            (v, vec![4.0 * (x[0] - 3.0).powi(3), 2.0 * x[1]])
+        };
+        let mut opt = Lbfgs::new(5);
+        let mut x = vec![0.0, 5.0];
+        let (mut fx, mut gx) = f(&x);
+        for _ in 0..50 {
+            let (nx, nf, _) = lbfgs_step(&mut opt, &x, fx, &gx, f);
+            assert!(nf <= fx + 1e-12, "went uphill: {nf} > {fx}");
+            x = nx;
+            let r = f(&x);
+            fx = r.0;
+            gx = r.1;
+        }
+        assert!(fx < 1e-3);
+    }
+}

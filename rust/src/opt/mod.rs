@@ -1,0 +1,68 @@
+//! Optimizers: ADADELTA, the ADVGP proximal operator (eqs. 18–20),
+//! plain SGD, and L-BFGS (for the DistGP-LBFGS baseline).
+
+pub mod adadelta;
+pub mod lbfgs;
+pub mod prox;
+
+pub use adadelta::AdaDelta;
+pub use lbfgs::Lbfgs;
+pub use prox::prox_update;
+
+/// Theorem 4.1-style decaying global scale: γ_t = c / (1 + t / t0).
+/// Composed with ADADELTA's per-coordinate adaptation (§6.1), this keeps
+/// γ_t ≤ ((1+τ)C + ε)^{-1} eventually, for any Lipschitz constant C.
+#[derive(Clone, Copy, Debug)]
+pub struct StepSchedule {
+    pub c: f64,
+    pub t0: f64,
+}
+
+impl StepSchedule {
+    pub fn new(c: f64, t0: f64) -> Self {
+        Self { c, t0 }
+    }
+
+    pub fn at(&self, t: u64) -> f64 {
+        self.c / (1.0 + t as f64 / self.t0)
+    }
+}
+
+/// Plain SGD step (used by the linear baseline).
+pub fn sgd_step(w: &mut [f64], grad: &[f64], lr: f64) {
+    for (wi, gi) in w.iter_mut().zip(grad) {
+        *wi -= lr * gi;
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn schedule_monotone_decreasing() {
+        let s = StepSchedule::new(0.5, 100.0);
+        assert_eq!(s.at(0), 0.5);
+        let mut prev = f64::INFINITY;
+        for t in [0, 10, 100, 1000, 100_000] {
+            let g = s.at(t);
+            assert!(g <= prev);
+            assert!(g > 0.0);
+            prev = g;
+        }
+    }
+
+    #[test]
+    fn sgd_minimizes_quadratic() {
+        // f(w) = ||w - a||^2 / 2
+        let a = [1.0, -2.0, 3.0];
+        let mut w = [0.0; 3];
+        for _ in 0..200 {
+            let g: Vec<f64> = w.iter().zip(&a).map(|(wi, ai)| wi - ai).collect();
+            sgd_step(&mut w, &g, 0.1);
+        }
+        for (wi, ai) in w.iter().zip(&a) {
+            assert!((wi - ai).abs() < 1e-6);
+        }
+    }
+}

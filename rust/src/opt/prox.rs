@@ -1,0 +1,153 @@
+//! The ADVGP proximal operator (paper eqs. 13, 18–20).
+//!
+//! After the delayed gradient step produces θ′, the server projects the
+//! variational block toward the minimum of the convex KL term h:
+//!
+//!   Prox_γ[θ′] = argmin_θ  h(θ) + ‖θ − θ′‖² / (2γ)
+//!
+//! With h of eq. (24) this is closed-form and **element-wise**:
+//!   μ_i   = μ′_i / (1 + γ)                                   (18)
+//!   U_ij  = U′_ij / (1 + γ)            (i ≠ j)               (19)
+//!   U_ii  = (U′_ii + √(U′_ii² + 4(1+γ)γ)) / (2(1+γ))         (20)
+//!
+//! Eq. (20) keeps diag(U) > 0 for any input, i.e. Σ = UᵀU stays SPD by
+//! construction — the property the whole asynchronous scheme leans on.
+
+use crate::gp::ThetaLayout;
+
+/// Apply the proximal projection to the variational block of θ′ in
+/// place.  Non-variational coordinates (Z, kernel, noise) are left
+/// untouched: for them h is constant, so Prox is the identity
+/// (Algorithm 1 line 4).
+pub fn prox_update(layout: &ThetaLayout, theta: &mut [f64], gamma: f64) {
+    assert!(gamma >= 0.0, "negative step {gamma}");
+    let scale = 1.0 / (1.0 + gamma);
+    for v in &mut theta[layout.mu_range()] {
+        *v *= scale; // eq. (18)
+    }
+    let m = layout.m;
+    let ur = layout.u_range();
+    let u = &mut theta[ur];
+    for i in 0..m {
+        for j in 0..m {
+            let idx = i * m + j;
+            if i == j {
+                // eq. (20)
+                let up = u[idx];
+                u[idx] = (up + (up * up + 4.0 * (1.0 + gamma) * gamma).sqrt())
+                    / (2.0 * (1.0 + gamma));
+            } else {
+                u[idx] *= scale; // eq. (19)
+            }
+        }
+    }
+}
+
+/// Numeric check helper: the prox objective for a single diagonal entry.
+#[cfg(test)]
+fn diag_objective(u: f64, up: f64, gamma: f64) -> f64 {
+    // h contribution of one diagonal entry: ½(−2 ln u + u²) (from eq. 24);
+    // plus the proximal quadratic.
+    0.5 * (-2.0 * u.ln() + u * u) + (u - up) * (u - up) / (2.0 * gamma)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::gp::Theta;
+    use crate::linalg::Mat;
+    use crate::util::rng::Pcg64;
+
+    #[test]
+    fn gamma_zero_is_identity() {
+        let layout = ThetaLayout::new(4, 2);
+        let mut rng = Pcg64::seeded(1);
+        let mut theta: Vec<f64> = (0..layout.len()).map(|_| rng.normal()).collect();
+        let before = theta.clone();
+        prox_update(&layout, &mut theta, 0.0);
+        // μ and off-diag unchanged; diag maps u ↦ (u + |u|)/2 only when
+        // γ = 0: (u + sqrt(u²))/2 = max(u, 0) — for positive diag it's id.
+        for i in 0..layout.len() {
+            if layout.is_u_diag(i) {
+                assert!((theta[i] - before[i].max(0.0)).abs() < 1e-12);
+            } else {
+                assert_eq!(theta[i], before[i]);
+            }
+        }
+    }
+
+    #[test]
+    fn diag_stays_positive_for_any_input() {
+        let layout = ThetaLayout::new(3, 1);
+        for seed in 0..20 {
+            let mut rng = Pcg64::seeded(seed);
+            let mut theta: Vec<f64> =
+                (0..layout.len()).map(|_| rng.normal() * 10.0).collect();
+            let gamma = 0.01 + rng.next_f64();
+            prox_update(&layout, &mut theta, gamma);
+            for i in 0..layout.len() {
+                if layout.is_u_diag(i) {
+                    assert!(theta[i] > 0.0, "diag went nonpositive: {}", theta[i]);
+                }
+            }
+        }
+    }
+
+    #[test]
+    fn diag_update_is_argmin_of_prox_objective() {
+        // eq. (20) must minimize ½(−2 ln u + u²) + (u−u′)²/(2γ) over u>0.
+        for &(up, gamma) in
+            &[(1.0, 0.5), (-2.0, 0.3), (0.1, 2.0), (5.0, 0.01), (-0.5, 1.0)]
+        {
+            let layout = ThetaLayout::new(1, 1);
+            let mut theta = vec![0.0; layout.len()];
+            theta[layout.u_range().start] = up;
+            prox_update(&layout, &mut theta, gamma);
+            let star = theta[layout.u_range().start];
+            let f_star = diag_objective(star, up, gamma);
+            // Grid around the solution.
+            for delta in [-1e-3, -1e-4, 1e-4, 1e-3] {
+                let u = (star + delta).max(1e-9);
+                assert!(
+                    diag_objective(u, up, gamma) >= f_star - 1e-12,
+                    "up={up} gamma={gamma}: not a minimum"
+                );
+            }
+        }
+    }
+
+    #[test]
+    fn mu_and_offdiag_shrink_toward_prior() {
+        // The prox pulls q(w) toward N(0, I): μ shrinks, off-diag shrinks,
+        // and a unit diagonal is a fixed point (KL gradient zero there).
+        let layout = ThetaLayout::new(3, 2);
+        let z = Mat::zeros(3, 2);
+        let mut th = Theta::init(layout, &z);
+        th.mu_mut().copy_from_slice(&[1.0, -2.0, 0.5]);
+        let mut u = Mat::eye(3);
+        u[(0, 1)] = 0.4;
+        th.set_u_mat(&u);
+        let kl_before = th.kl();
+        prox_update(&layout, &mut th.data, 0.5);
+        let kl_after = th.kl();
+        assert!(kl_after < kl_before);
+        // Unit diagonal ~ fixed point of eq. (20):
+        // (1 + sqrt(1 + 4(1+γ)γ)) / (2(1+γ)) with γ=0.5 →
+        let want = (1.0 + (1.0f64 + 4.0 * 1.5 * 0.5).sqrt()) / 3.0;
+        let got = th.u_mat()[(1, 1)];
+        assert!((got - want).abs() < 1e-12);
+        assert!((want - 1.0).abs() < 0.01, "unit diag moves little: {want}");
+    }
+
+    #[test]
+    fn hyperparameters_untouched() {
+        let layout = ThetaLayout::new(2, 3);
+        let mut rng = Pcg64::seeded(5);
+        let mut theta: Vec<f64> = (0..layout.len()).map(|_| rng.normal()).collect();
+        let before = theta.clone();
+        prox_update(&layout, &mut theta, 0.7);
+        for i in layout.z_range().start..layout.len() {
+            assert_eq!(theta[i], before[i], "hyper {i} changed");
+        }
+    }
+}

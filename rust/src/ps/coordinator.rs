@@ -1,0 +1,184 @@
+//! Wiring: spawn server + workers + evaluator, run to completion,
+//! collect traces.  This is the entry point every experiment uses.
+
+use super::messages::ToServer;
+use super::metrics::{EvalMetrics, ServerStats, TraceRow};
+use super::server::{run_server, ServerConfig};
+use super::worker::{run_worker, WorkerProfile};
+use super::Published;
+use crate::data::Dataset;
+use crate::gp::ThetaLayout;
+use crate::grad::EngineFactory;
+use crate::opt::StepSchedule;
+use crate::util::Stopwatch;
+use std::sync::mpsc;
+use std::time::Duration;
+
+/// Evaluation closure, constructed *inside* the evaluator thread
+/// (PJRT evaluators are not Send).
+pub type EvalFactory = Box<dyn FnOnce() -> Box<dyn FnMut(&[f64]) -> EvalMetrics> + Send>;
+
+pub struct TrainConfig {
+    pub layout: ThetaLayout,
+    pub tau: u64,
+    pub max_updates: u64,
+    /// Learning-rate scale on the ADADELTA direction (paper §6.1).
+    pub lr: f64,
+    /// Proximal strength γ_t schedule.
+    pub prox: StepSchedule,
+    pub server_shards: usize,
+    pub freeze_hyper: bool,
+    /// Per-worker behaviour; padded with defaults if shorter than the
+    /// number of shards.
+    pub profiles: Vec<WorkerProfile>,
+    /// Evaluator cadence (seconds). 0 disables intermediate snapshots.
+    pub eval_every_secs: f64,
+    /// Hard wall-clock limit; the run is shut down when exceeded.
+    pub time_limit_secs: Option<f64>,
+}
+
+impl TrainConfig {
+    pub fn new(layout: ThetaLayout) -> Self {
+        Self {
+            layout,
+            tau: 32, // the paper's tuned default for the flight runs
+            max_updates: 500,
+            lr: 1.0,
+            prox: StepSchedule::new(0.05, 200.0),
+            server_shards: 1,
+            freeze_hyper: false,
+            profiles: vec![],
+            eval_every_secs: 0.5,
+            time_limit_secs: None,
+        }
+    }
+}
+
+pub struct RunResult {
+    pub theta: Vec<f64>,
+    pub trace: Vec<TraceRow>,
+    pub stats: ServerStats,
+    pub wall_secs: f64,
+}
+
+/// Train ADVGP: Algorithm 1 end-to-end over the given shards.
+pub fn train(
+    cfg: &TrainConfig,
+    theta0: Vec<f64>,
+    shards: Vec<Dataset>,
+    factory: EngineFactory,
+    eval_factory: Option<EvalFactory>,
+) -> RunResult {
+    let clock = Stopwatch::start();
+    let workers = shards.len();
+    assert!(workers >= 1, "need at least one shard");
+    let published = Published::new(theta0);
+    let (tx, rx) = mpsc::channel::<ToServer>();
+
+    let server_cfg = ServerConfig {
+        layout: cfg.layout,
+        workers,
+        tau: cfg.tau,
+        max_updates: cfg.max_updates,
+        lr: cfg.lr,
+        prox: cfg.prox,
+        server_shards: cfg.server_shards,
+        freeze_hyper: cfg.freeze_hyper,
+    };
+
+    std::thread::scope(|scope| {
+        // ---- workers ----
+        for (k, shard) in shards.into_iter().enumerate() {
+            let factory = factory.clone();
+            let published = published.clone();
+            let tx = tx.clone();
+            let profile = cfg.profiles.get(k).cloned().unwrap_or_default();
+            scope.spawn(move || {
+                run_worker(k, shard, factory, published, tx, profile)
+            });
+        }
+        drop(tx); // server's recv() unblocks when all workers exit
+
+        // ---- evaluator ----
+        let trace_handle = eval_factory.map(|ef| {
+            let published = published.clone();
+            let every = cfg.eval_every_secs.max(1e-3);
+            scope.spawn(move || {
+                let mut eval = ef();
+                let mut trace: Vec<TraceRow> = Vec::new();
+                let mut last_version = u64::MAX;
+                loop {
+                    let (version, theta, shutdown) = published.snapshot();
+                    if version != last_version {
+                        let m = eval(&theta);
+                        trace.push(TraceRow {
+                            t_secs: clock.secs(),
+                            version,
+                            rmse: m.rmse,
+                            mnlp: m.mnlp,
+                            neg_elbo: m.neg_elbo,
+                        });
+                        last_version = version;
+                    }
+                    if shutdown {
+                        return trace;
+                    }
+                    std::thread::sleep(Duration::from_secs_f64(every));
+                }
+            })
+        });
+
+        // ---- watchdog for the wall-clock limit ----
+        let watchdog = cfg.time_limit_secs.map(|limit| {
+            let published = published.clone();
+            scope.spawn(move || loop {
+                if published.snapshot().2 {
+                    return;
+                }
+                if clock.secs() > limit {
+                    published.shutdown();
+                    return;
+                }
+                std::thread::sleep(Duration::from_millis(20));
+            })
+        });
+
+        // ---- server (on this thread) ----
+        let outcome = run_server(&server_cfg, published.clone(), rx);
+        published.shutdown();
+        let trace = trace_handle
+            .map(|h| h.join().expect("evaluator panicked"))
+            .unwrap_or_default();
+        if let Some(w) = watchdog {
+            let _ = w.join();
+        }
+        RunResult {
+            theta: outcome.theta,
+            trace,
+            stats: outcome.stats,
+            wall_secs: clock.secs(),
+        }
+    })
+}
+
+/// Convenience: a native evaluator factory over a held-out set, with an
+/// optional (x, y) subset for −ELBO tracking (Appendix C traces).
+pub fn native_eval_factory(
+    layout: ThetaLayout,
+    test: Dataset,
+    elbo_set: Option<Dataset>,
+) -> EvalFactory {
+    Box::new(move || {
+        Box::new(move |theta: &[f64]| {
+            let th = crate::gp::Theta { layout, data: theta.to_vec() };
+            let gp = crate::gp::SparseGp::new(th);
+            let (mean, var) = gp.predict(&test.x);
+            let rmse = crate::util::rmse(&mean, &test.y);
+            let mnlp = crate::util::mnlp(&mean, &var, &test.y);
+            let neg_elbo = elbo_set
+                .as_ref()
+                .map(|es| gp.neg_elbo(&es.x, &es.y));
+            EvalMetrics { rmse, mnlp, neg_elbo }
+        })
+    })
+}

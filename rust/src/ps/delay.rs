@@ -1,0 +1,115 @@
+//! The bounded-staleness gate of Algorithm 1.
+//!
+//! The server may advance from iteration `t` to `t+1` only when every
+//! worker's freshest gradient was computed at a version `t_k` with
+//! `t − τ ≤ t_k` (and every worker has pushed at least once).  τ = 0 is
+//! bulk-synchronous; τ = `u64::MAX` is fully asynchronous.
+
+/// Tracks per-worker freshest-push versions and answers the gate query.
+#[derive(Clone, Debug)]
+pub struct DelayGate {
+    tau: u64,
+    /// Freshest pushed version per worker; `None` until the first push.
+    latest: Vec<Option<u64>>,
+}
+
+impl DelayGate {
+    pub fn new(workers: usize, tau: u64) -> Self {
+        Self { tau, latest: vec![None; workers] }
+    }
+
+    pub fn tau(&self) -> u64 {
+        self.tau
+    }
+
+    /// Record a push from `worker` computed at `version`.
+    pub fn record(&mut self, worker: usize, version: u64) {
+        let slot = &mut self.latest[worker];
+        // Versions may arrive out of order under heavy async; keep max.
+        *slot = Some(slot.map_or(version, |v| v.max(version)));
+    }
+
+    /// May the server perform update `t` (producing version t+1)?
+    pub fn permits(&self, t: u64) -> bool {
+        self.latest.iter().all(|slot| match slot {
+            None => false,
+            Some(tk) => *tk + self.tau >= t,
+        })
+    }
+
+    /// Current staleness bound observed: t − min_k t_k (None if some
+    /// worker never pushed).
+    pub fn staleness(&self, t: u64) -> Option<u64> {
+        let min = self
+            .latest
+            .iter()
+            .map(|s| (*s)?.into())
+            .collect::<Option<Vec<u64>>>()?
+            .into_iter()
+            .min()?;
+        Some(t.saturating_sub(min))
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn requires_first_push_from_everyone() {
+        let mut g = DelayGate::new(3, 100);
+        assert!(!g.permits(0));
+        g.record(0, 0);
+        g.record(1, 0);
+        assert!(!g.permits(0));
+        g.record(2, 0);
+        assert!(g.permits(0));
+    }
+
+    #[test]
+    fn tau_zero_is_synchronous() {
+        let mut g = DelayGate::new(2, 0);
+        g.record(0, 0);
+        g.record(1, 0);
+        assert!(g.permits(0));
+        // After update to t=1, old gradients (t_k=0) no longer qualify.
+        assert!(!g.permits(1));
+        g.record(0, 1);
+        assert!(!g.permits(1));
+        g.record(1, 1);
+        assert!(g.permits(1));
+    }
+
+    #[test]
+    fn tau_bounds_staleness_exactly() {
+        let mut g = DelayGate::new(2, 3);
+        g.record(0, 0);
+        g.record(1, 0);
+        for t in 0..=3 {
+            assert!(g.permits(t), "t={t} within tau");
+        }
+        assert!(!g.permits(4), "t=4 exceeds tau=3 for t_k=0");
+        g.record(1, 4);
+        assert!(!g.permits(4), "worker 0 still stale");
+        g.record(0, 2);
+        assert!(g.permits(4), "t−τ=1 ≤ min t_k=2");
+        assert_eq!(g.staleness(4), Some(2));
+    }
+
+    #[test]
+    fn out_of_order_pushes_keep_max() {
+        let mut g = DelayGate::new(1, 0);
+        g.record(0, 5);
+        g.record(0, 3); // late arrival of an older push
+        assert!(g.permits(5));
+        assert_eq!(g.staleness(5), Some(0));
+    }
+
+    #[test]
+    fn huge_tau_is_fully_async() {
+        let mut g = DelayGate::new(2, u64::MAX);
+        g.record(0, 0);
+        g.record(1, 0);
+        assert!(g.permits(1_000_000_000));
+    }
+}

@@ -1,0 +1,22 @@
+//! Worker → server messages.  (Server → worker travels through
+//! [`super::Published`], matching ParameterServer's pull semantics.)
+
+/// A local gradient pushed by a worker (Algorithm 1, worker line 4).
+pub struct Push {
+    pub worker: usize,
+    /// The version t_k of θ the gradient was computed at.
+    pub version: u64,
+    /// Local data-term value G_k(θ^(t_k)).
+    pub value: f64,
+    /// ∇G_k in the flat θ layout.
+    pub grad: Vec<f64>,
+    /// Wall-clock seconds the worker spent computing (for metrics).
+    pub compute_secs: f64,
+}
+
+/// Everything a worker can tell the server.
+pub enum ToServer {
+    Push(Push),
+    /// Worker exited (failure injection / shutdown).
+    WorkerExit { worker: usize },
+}

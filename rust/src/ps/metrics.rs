@@ -1,0 +1,83 @@
+//! Run metrics: evaluation snapshots and per-iteration statistics —
+//! the raw material for every figure in the paper.
+
+use crate::util::Stats;
+use anyhow::Result;
+use std::path::Path;
+
+/// One evaluator snapshot.
+#[derive(Clone, Debug)]
+pub struct TraceRow {
+    /// Seconds since training start.
+    pub t_secs: f64,
+    /// Server version at snapshot time.
+    pub version: u64,
+    pub rmse: f64,
+    pub mnlp: f64,
+    /// Negative ELBO (−L = Σg + h) over the elbo-eval subset, if tracked.
+    pub neg_elbo: Option<f64>,
+}
+
+/// Metrics produced by one evaluation pass.
+#[derive(Clone, Copy, Debug)]
+pub struct EvalMetrics {
+    pub rmse: f64,
+    pub mnlp: f64,
+    pub neg_elbo: Option<f64>,
+}
+
+/// Aggregated run statistics from the server loop.
+#[derive(Clone, Debug, Default)]
+pub struct ServerStats {
+    /// Wall time between consecutive server updates.
+    pub iter_secs: Stats,
+    /// Observed staleness t − min_k t_k at each update.
+    pub staleness: Stats,
+    /// Worker compute seconds (from push messages).
+    pub worker_compute_secs: Stats,
+    /// Total updates performed.
+    pub updates: u64,
+    /// Total pushes received.
+    pub pushes: u64,
+}
+
+/// Write a trace as CSV (t_secs,version,rmse,mnlp,neg_elbo).
+pub fn write_trace_csv(path: &Path, rows: &[TraceRow]) -> Result<()> {
+    let mut out = String::from("t_secs,version,rmse,mnlp,neg_elbo\n");
+    for r in rows {
+        out.push_str(&format!(
+            "{},{},{},{},{}\n",
+            r.t_secs,
+            r.version,
+            r.rmse,
+            r.mnlp,
+            r.neg_elbo.map(|v| v.to_string()).unwrap_or_default()
+        ));
+    }
+    if let Some(parent) = path.parent() {
+        std::fs::create_dir_all(parent)?;
+    }
+    std::fs::write(path, out)?;
+    Ok(())
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn csv_roundtrip_shape() {
+        let rows = vec![
+            TraceRow { t_secs: 0.5, version: 3, rmse: 1.2, mnlp: 0.9, neg_elbo: Some(10.0) },
+            TraceRow { t_secs: 1.0, version: 7, rmse: 1.0, mnlp: 0.8, neg_elbo: None },
+        ];
+        let dir = std::env::temp_dir().join("advgp_metrics_test");
+        let p = dir.join("trace.csv");
+        write_trace_csv(&p, &rows).unwrap();
+        let text = std::fs::read_to_string(&p).unwrap();
+        let lines: Vec<&str> = text.lines().collect();
+        assert_eq!(lines.len(), 3);
+        assert!(lines[1].starts_with("0.5,3,1.2,0.9,10"));
+        assert!(lines[2].ends_with(','));
+    }
+}

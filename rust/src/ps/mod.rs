@@ -1,0 +1,131 @@
+//! The parameter server — ADVGP's L3 system contribution (paper §4,
+//! Algorithm 1).
+//!
+//! Topology: one **server** (optionally sharded element-wise for the
+//! update step), `r` **workers** each owning a data shard, and one
+//! **evaluator** thread producing the RMSE/MNLP/−ELBO-vs-time traces
+//! every figure in the paper is drawn from.
+//!
+//! Protocol (Algorithm 1):
+//! * Worker k: block until a version newer than its last pull is
+//!   published → pull θ^(t) → compute ∇G_k over D_k → push.
+//! * Server: on every push, record `(t_k, ∇G_k)`; when the bounded-
+//!   staleness gate `min_k t_k ≥ t − τ` holds (and every worker has
+//!   pushed at least once), aggregate the *latest* gradient of every
+//!   worker, take an ADADELTA-scaled gradient step, apply the
+//!   closed-form proximal projection (eqs. 18–20) to (μ, U), bump the
+//!   version, and notify all blocked workers.
+//!
+//! τ = 0 degenerates to bulk-synchronous (the DistGP-GD baseline runs
+//! exactly this path); τ = ∞ is fully asynchronous.
+
+pub mod coordinator;
+pub mod delay;
+pub mod messages;
+pub mod metrics;
+pub mod server;
+pub mod worker;
+
+pub use coordinator::{train, RunResult, TrainConfig};
+pub use delay::DelayGate;
+pub use metrics::{EvalMetrics, TraceRow};
+
+use std::sync::{Arc, Condvar, Mutex};
+
+/// The server's published state: workers pull from here.
+pub struct Published {
+    pub inner: Mutex<PublishedInner>,
+    pub cv: Condvar,
+}
+
+pub struct PublishedInner {
+    pub version: u64,
+    pub theta: Arc<Vec<f64>>,
+    pub shutdown: bool,
+}
+
+impl Published {
+    pub fn new(theta: Vec<f64>) -> Arc<Self> {
+        Arc::new(Self {
+            inner: Mutex::new(PublishedInner {
+                version: 0,
+                theta: Arc::new(theta),
+                shutdown: false,
+            }),
+            cv: Condvar::new(),
+        })
+    }
+
+    /// Publish a new version (server side).
+    pub fn publish(&self, version: u64, theta: Vec<f64>) {
+        let mut g = self.inner.lock().unwrap();
+        g.version = version;
+        g.theta = Arc::new(theta);
+        self.cv.notify_all();
+    }
+
+    /// Signal shutdown to all blocked workers.
+    pub fn shutdown(&self) {
+        let mut g = self.inner.lock().unwrap();
+        g.shutdown = true;
+        self.cv.notify_all();
+    }
+
+    /// Worker side: block until `version > seen` (or shutdown).
+    /// Returns `None` on shutdown.
+    pub fn wait_newer(&self, seen: u64) -> Option<(u64, Arc<Vec<f64>>)> {
+        let mut g = self.inner.lock().unwrap();
+        loop {
+            if g.shutdown {
+                return None;
+            }
+            if g.version > seen {
+                return Some((g.version, g.theta.clone()));
+            }
+            g = self.cv.wait(g).unwrap();
+        }
+    }
+
+    /// Non-blocking snapshot (evaluator side).
+    pub fn snapshot(&self) -> (u64, Arc<Vec<f64>>, bool) {
+        let g = self.inner.lock().unwrap();
+        (g.version, g.theta.clone(), g.shutdown)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use std::time::Duration;
+
+    #[test]
+    fn publish_wakes_waiters() {
+        let p = Published::new(vec![0.0; 3]);
+        let p2 = p.clone();
+        let h = std::thread::spawn(move || p2.wait_newer(0));
+        std::thread::sleep(Duration::from_millis(20));
+        p.publish(1, vec![1.0, 2.0, 3.0]);
+        let (v, th) = h.join().unwrap().expect("should get version");
+        assert_eq!(v, 1);
+        assert_eq!(*th, vec![1.0, 2.0, 3.0]);
+    }
+
+    #[test]
+    fn shutdown_unblocks() {
+        let p = Published::new(vec![0.0]);
+        let p2 = p.clone();
+        let h = std::thread::spawn(move || p2.wait_newer(100));
+        std::thread::sleep(Duration::from_millis(20));
+        p.shutdown();
+        assert!(h.join().unwrap().is_none());
+    }
+
+    #[test]
+    fn snapshot_is_nonblocking() {
+        let p = Published::new(vec![7.0]);
+        let (v, th, sd) = p.snapshot();
+        assert_eq!(v, 0);
+        assert_eq!(*th, vec![7.0]);
+        assert!(!sd);
+    }
+}

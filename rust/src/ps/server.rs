@@ -1,0 +1,225 @@
+//! The server loop: delayed gradient aggregation + proximal updates
+//! (Algorithm 1, server side).
+
+use super::delay::DelayGate;
+use super::messages::{Push, ToServer};
+use super::metrics::ServerStats;
+use super::Published;
+use crate::gp::ThetaLayout;
+use crate::opt::{prox_update, AdaDelta, StepSchedule};
+use crate::util::Stopwatch;
+use std::sync::mpsc::Receiver;
+use std::sync::Arc;
+
+pub struct ServerConfig {
+    pub layout: ThetaLayout,
+    pub workers: usize,
+    pub tau: u64,
+    /// Stop after this many server updates.
+    pub max_updates: u64,
+    /// Global learning-rate scale multiplying the ADADELTA direction.
+    pub lr: f64,
+    /// Proximal strength schedule γ_t (eqs. 18–20).
+    pub prox: StepSchedule,
+    /// Element-wise server shards for the update step (the paper's
+    /// "highly parallelizable" server-side prox; 1 = single shard).
+    pub server_shards: usize,
+    /// If true, hyperparameters (Z, kernel, noise) are frozen and only
+    /// the variational block is optimized (used by ablations/baselines).
+    pub freeze_hyper: bool,
+}
+
+/// Outcome of the server loop.
+pub struct ServerOutcome {
+    pub theta: Vec<f64>,
+    pub stats: ServerStats,
+    /// Total data-term value at the last aggregation (diagnostics).
+    pub last_value: f64,
+}
+
+/// Run the server until `max_updates` or all workers exit.
+pub fn run_server(
+    cfg: &ServerConfig,
+    published: Arc<Published>,
+    rx: Receiver<ToServer>,
+) -> ServerOutcome {
+    let layout = cfg.layout;
+    let dim = layout.len();
+    let mut theta = published.snapshot().1.as_ref().clone();
+    assert_eq!(theta.len(), dim);
+    let mut gate = DelayGate::new(cfg.workers, cfg.tau);
+    // Freshest gradient per worker (the Σ_k ∇G_k^{(t_k)} aggregation
+    // uses the latest push of each worker).
+    let mut slots: Vec<Option<Push>> = (0..cfg.workers).map(|_| None).collect();
+    let mut adadelta = AdaDelta::default_for(dim);
+    let mut t: u64 = 0;
+    let mut stats = ServerStats::default();
+    let mut live_workers = cfg.workers;
+    let clock = Stopwatch::start();
+    let mut last_update = 0.0f64;
+    let mut last_value = f64::NAN;
+
+    while t < cfg.max_updates && live_workers > 0 {
+        let msg = match rx.recv() {
+            Ok(m) => m,
+            Err(_) => break, // all senders dropped
+        };
+        match msg {
+            ToServer::WorkerExit { worker: _ } => {
+                live_workers -= 1;
+                continue;
+            }
+            ToServer::Push(push) => {
+                stats.pushes += 1;
+                stats.worker_compute_secs.push(push.compute_secs);
+                gate.record(push.worker, push.version);
+                let w = push.worker;
+                slots[w] = Some(push);
+            }
+        }
+
+        // Drain any queued pushes before checking the gate — keeps the
+        // aggregation as fresh as possible without blocking.
+        while let Ok(msg) = rx.try_recv() {
+            match msg {
+                ToServer::WorkerExit { .. } => live_workers -= 1,
+                ToServer::Push(push) => {
+                    stats.pushes += 1;
+                    stats.worker_compute_secs.push(push.compute_secs);
+                    gate.record(push.worker, push.version);
+                    let w = push.worker;
+                    slots[w] = Some(push);
+                }
+            }
+        }
+
+        if !gate.permits(t) {
+            continue;
+        }
+
+        // ---- Algorithm 1, server lines 2–5 ----
+        if let Some(s) = gate.staleness(t) {
+            stats.staleness.push(s as f64);
+        }
+        let mut grad = vec![0.0f64; dim];
+        let mut value = 0.0f64;
+        for slot in slots.iter().flatten() {
+            for (g, s) in grad.iter_mut().zip(&slot.grad) {
+                *g += s;
+            }
+            value += slot.value;
+        }
+        last_value = value;
+        if cfg.freeze_hyper {
+            for g in grad[layout.z_range().start..].iter_mut() {
+                *g = 0.0;
+            }
+        }
+        let gamma = cfg.prox.at(t);
+        apply_update(
+            &layout,
+            &mut theta,
+            &mut adadelta,
+            &grad,
+            cfg.lr,
+            gamma,
+            cfg.server_shards,
+        );
+        t += 1;
+        published.publish(t, theta.clone());
+        let now = clock.secs();
+        stats.iter_secs.push(now - last_update);
+        last_update = now;
+        stats.updates = t;
+    }
+
+    published.shutdown();
+    // Drain remaining messages so worker sends never block (they use an
+    // unbounded channel, but be tidy and record exits).
+    while let Ok(_msg) = rx.try_recv() {}
+    ServerOutcome { theta, stats, last_value }
+}
+
+/// One server update: ADADELTA-scaled gradient step + prox projection,
+/// optionally parallelized element-wise across `shards` threads — the
+/// paper's "element-wise, closed-form … highly parallelizable" claim.
+pub fn apply_update(
+    layout: &ThetaLayout,
+    theta: &mut [f64],
+    adadelta: &mut AdaDelta,
+    grad: &[f64],
+    lr: f64,
+    gamma: f64,
+    shards: usize,
+) {
+    let delta = adadelta.step(grad);
+    if shards <= 1 {
+        for (t, d) in theta.iter_mut().zip(&delta) {
+            *t += lr * d;
+        }
+        prox_update(layout, theta, gamma);
+    } else {
+        // Element-wise partition: every shard owns a contiguous slice of
+        // θ, applies the gradient step and its slice of the prox without
+        // any cross-shard communication.
+        let dim = theta.len();
+        let chunk = dim.div_ceil(shards);
+        let layout = *layout;
+        let scale = 1.0 / (1.0 + gamma);
+        std::thread::scope(|scope| {
+            for (si, (t_chunk, d_chunk)) in theta
+                .chunks_mut(chunk)
+                .zip(delta.chunks(chunk))
+                .enumerate()
+            {
+                scope.spawn(move || {
+                    let base = si * chunk;
+                    for (off, (t, d)) in
+                        t_chunk.iter_mut().zip(d_chunk).enumerate()
+                    {
+                        *t += lr * d;
+                        let idx = base + off;
+                        // Element-wise prox (eqs. 18–20).
+                        if layout.is_variational(idx) {
+                            if layout.is_u_diag(idx) {
+                                let up = *t;
+                                *t = (up
+                                    + (up * up + 4.0 * (1.0 + gamma) * gamma)
+                                        .sqrt())
+                                    / (2.0 * (1.0 + gamma));
+                            } else {
+                                *t *= scale;
+                            }
+                        }
+                    }
+                });
+            }
+        });
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::rng::Pcg64;
+
+    #[test]
+    fn sharded_update_matches_serial() {
+        let layout = ThetaLayout::new(6, 3);
+        let dim = layout.len();
+        let mut rng = Pcg64::seeded(3);
+        let theta0: Vec<f64> = (0..dim).map(|_| rng.normal()).collect();
+        let grad: Vec<f64> = (0..dim).map(|_| rng.normal()).collect();
+        let mut serial = theta0.clone();
+        let mut ada1 = AdaDelta::default_for(dim);
+        apply_update(&layout, &mut serial, &mut ada1, &grad, 0.7, 0.3, 1);
+        for shards in [2, 3, 5, 16] {
+            let mut sharded = theta0.clone();
+            let mut ada = AdaDelta::default_for(dim);
+            apply_update(&layout, &mut sharded, &mut ada, &grad, 0.7, 0.3, shards);
+            for (a, b) in serial.iter().zip(&sharded) {
+                assert!((a - b).abs() < 1e-12, "shards={shards}");
+            }
+        }
+    }
+}

@@ -1,0 +1,91 @@
+//! The worker loop (Algorithm 1, worker side) with straggler and
+//! crash/restart injection.
+
+use super::messages::{Push, ToServer};
+use super::Published;
+use crate::data::Dataset;
+use crate::grad::EngineFactory;
+use crate::util::Stopwatch;
+use std::sync::mpsc::Sender;
+use std::sync::Arc;
+use std::time::Duration;
+
+/// Per-worker behaviour knobs (used by Fig. 2's straggler experiment and
+/// the failure-injection tests).
+#[derive(Clone, Debug, Default)]
+pub struct WorkerProfile {
+    /// Sleep this long before *every* iteration (the paper's simulated
+    /// slow workers: "a random sleep time of 0, 10 or 20 seconds").
+    pub straggle: Duration,
+    /// Simulate a crash at local iteration N: the worker drops its
+    /// engine, sleeps `restart_after`, rebuilds, and rejoins.
+    pub crash_at: Option<u64>,
+    pub restart_after: Duration,
+    /// Cap rows per iteration (0 = full shard, the paper's setting).
+    pub max_rows: usize,
+}
+
+/// Run one worker until the server shuts down.
+pub fn run_worker(
+    worker_id: usize,
+    shard: Dataset,
+    factory: EngineFactory,
+    published: Arc<Published>,
+    tx: Sender<ToServer>,
+    profile: WorkerProfile,
+) {
+    let mut engine = factory(worker_id);
+    let mut seen: u64 = 0;
+    let mut local_iter: u64 = 0;
+    let mut crashed = false;
+    // First pull uses version 0 (initial θ) — workers must each push one
+    // gradient before the server can make update 0, so don't wait for a
+    // newer version on the first iteration.
+    let (mut version, mut theta) = {
+        let (v, th, _sd) = published.snapshot();
+        (v, th)
+    };
+    loop {
+        if !profile.straggle.is_zero() {
+            std::thread::sleep(profile.straggle);
+        }
+        if !crashed && profile.crash_at == Some(local_iter) {
+            // Crash: lose the engine, stay dark, then rebuild and rejoin.
+            crashed = true;
+            drop(engine);
+            std::thread::sleep(profile.restart_after);
+            engine = factory(worker_id);
+        }
+
+        let (x, y) = if profile.max_rows > 0 && profile.max_rows < shard.n() {
+            let head = shard.head(profile.max_rows);
+            (head.x, head.y)
+        } else {
+            (shard.x.clone(), shard.y.clone())
+        };
+        let sw = Stopwatch::start();
+        let res = engine.grad(&theta, &x, &y);
+        let push = Push {
+            worker: worker_id,
+            version,
+            value: res.value,
+            grad: res.grad,
+            compute_secs: sw.secs(),
+        };
+        if tx.send(ToServer::Push(push)).is_err() {
+            break; // server gone
+        }
+        local_iter += 1;
+
+        // Block until a strictly newer version (Algorithm 1, line 1).
+        match published.wait_newer(seen.max(version)) {
+            None => break,
+            Some((v, th)) => {
+                seen = v;
+                version = v;
+                theta = th;
+            }
+        }
+    }
+    let _ = tx.send(ToServer::WorkerExit { worker: worker_id });
+}

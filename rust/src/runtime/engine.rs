@@ -1,0 +1,264 @@
+//! PJRT-backed gradient / evaluation engines.
+//!
+//! One `XlaEngine` per worker thread (clients are not `Send`).  The
+//! engine compiles its artifact once, then streams shard data through it
+//! in fixed-size blocks, padding the final block via the mask input.
+//!
+//! Split-Cholesky ABI (see python/compile/model.py): the host computes
+//! `L = chol(K_mm^{-1})` with its own linalg, feeds it as an input, and
+//! chains the returned cotangent dL̄ through [`LChain`] — jax's CPU
+//! linalg custom-calls (typed FFI) are not executable under
+//! xla_extension 0.5.1, and the O(m³) factor is cheap on the host.
+
+use crate::gp::{Theta, ThetaLayout};
+use crate::grad::chain::LChain;
+use crate::grad::{EngineFactory, GradEngine, GradResult};
+use crate::linalg::Mat;
+use crate::runtime::manifest::{ArtifactKind, ArtifactSpec, Manifest};
+use anyhow::{Context, Result};
+use std::path::Path;
+use xla::Literal;
+
+fn to_f32(s: &[f64]) -> Vec<f32> {
+    s.iter().map(|&v| v as f32).collect()
+}
+
+/// Pack the seven θ-side inputs in the artifact's positional ABI.
+/// Returns the literals plus the `LChain` built for this θ.
+fn theta_literals(
+    layout: ThetaLayout,
+    theta: &[f64],
+) -> Result<(Vec<Literal>, LChain)> {
+    let (m, d) = (layout.m, layout.d);
+    let th = Theta { layout, data: theta.to_vec() };
+    let chain = LChain::build(th.ard(), th.z_mat());
+    let mu = Literal::vec1(&to_f32(&theta[layout.mu_range()]));
+    let u = Literal::vec1(&to_f32(&theta[layout.u_range()]))
+        .reshape(&[m as i64, m as i64])?;
+    let z = Literal::vec1(&to_f32(&theta[layout.z_range()]))
+        .reshape(&[m as i64, d as i64])?;
+    let chol_l = Literal::vec1(&to_f32(&chain.chol_l.data))
+        .reshape(&[m as i64, m as i64])?;
+    let log_a0 = Literal::scalar(theta[layout.log_a0_idx()] as f32);
+    let log_eta = Literal::vec1(&to_f32(&theta[layout.log_eta_range()]));
+    let log_sigma = Literal::scalar(theta[layout.log_sigma_idx()] as f32);
+    Ok((vec![mu, u, z, chol_l, log_a0, log_eta, log_sigma], chain))
+}
+
+/// Pack one padded data block: x [B, d] (f32) and optionally y, mask [B].
+fn block_literals(
+    b: usize,
+    d: usize,
+    x: &Mat,
+    y: Option<&[f64]>,
+    start: usize,
+    len: usize,
+) -> Result<Vec<Literal>> {
+    let mut xbuf = vec![0.0f32; b * d];
+    for r in 0..len {
+        for c in 0..d {
+            xbuf[r * d + c] = x[(start + r, c)] as f32;
+        }
+    }
+    let xl = Literal::vec1(&xbuf).reshape(&[b as i64, d as i64])?;
+    let mut out = vec![xl];
+    if let Some(y) = y {
+        let mut ybuf = vec![0.0f32; b];
+        for r in 0..len {
+            ybuf[r] = y[start + r] as f32;
+        }
+        let mut mbuf = vec![0.0f32; b];
+        for v in mbuf.iter_mut().take(len) {
+            *v = 1.0;
+        }
+        out.push(Literal::vec1(&ybuf));
+        out.push(Literal::vec1(&mbuf));
+    }
+    Ok(out)
+}
+
+fn compile(client: &xla::PjRtClient, path: &Path) -> Result<xla::PjRtLoadedExecutable> {
+    let proto = xla::HloModuleProto::from_text_file(
+        path.to_str().context("artifact path not utf-8")?,
+    )
+    .with_context(|| format!("parse HLO text {path:?}"))?;
+    let comp = xla::XlaComputation::from_proto(&proto);
+    Ok(client.compile(&comp)?)
+}
+
+fn literal_to_f64(lit: &Literal) -> Result<Vec<f64>> {
+    Ok(lit.to_vec::<f32>()?.into_iter().map(|v| v as f64).collect())
+}
+
+/// PJRT gradient engine implementing [`GradEngine`].
+pub struct XlaEngine {
+    layout: ThetaLayout,
+    block: usize,
+    _client: xla::PjRtClient,
+    exe: xla::PjRtLoadedExecutable,
+}
+
+impl XlaEngine {
+    pub fn from_manifest(manifest: &Manifest, m: usize, d: usize) -> Result<Self> {
+        let spec = manifest.find(ArtifactKind::Grad, m, d)?;
+        Self::new(spec)
+    }
+
+    pub fn new(spec: &ArtifactSpec) -> Result<Self> {
+        anyhow::ensure!(spec.kind == ArtifactKind::Grad, "grad artifact required");
+        let client = xla::PjRtClient::cpu()?;
+        let exe = compile(&client, &spec.path)?;
+        Ok(Self {
+            layout: ThetaLayout::new(spec.m, spec.d),
+            block: spec.b,
+            _client: client,
+            exe,
+        })
+    }
+
+    fn grad_inner(&self, theta: &[f64], x: &Mat, y: &[f64]) -> Result<GradResult> {
+        let layout = self.layout;
+        let (m, d) = (layout.m, layout.d);
+        let mut value = 0.0f64;
+        let mut grad = vec![0.0f64; layout.len()];
+        let (theta_lits, chain) = theta_literals(layout, theta)?;
+        let mut l_cot = Mat::zeros(m, m);
+        let mut start = 0;
+        while start < x.rows {
+            let len = self.block.min(x.rows - start);
+            let mut args: Vec<&Literal> = theta_lits.iter().collect();
+            let blk = block_literals(self.block, d, x, Some(y), start, len)?;
+            args.extend(blk.iter());
+            let out = self.exe.execute::<&Literal>(&args)?[0][0]
+                .to_literal_sync()?
+                .to_tuple()?;
+            anyhow::ensure!(out.len() == 8, "grad artifact returned {}", out.len());
+            // (G, dmu, du, dz_direct, dchol_l, dla0, dleta, dls)
+            value += literal_to_f64(&out[0])?[0];
+            add_into(&mut grad[layout.mu_range()], &literal_to_f64(&out[1])?);
+            add_into(&mut grad[layout.u_range()], &literal_to_f64(&out[2])?);
+            add_into(&mut grad[layout.z_range()], &literal_to_f64(&out[3])?);
+            let dl = literal_to_f64(&out[4])?;
+            for (slot, v) in l_cot.data.iter_mut().zip(&dl) {
+                *slot += v;
+            }
+            grad[layout.log_a0_idx()] += literal_to_f64(&out[5])?[0];
+            add_into(&mut grad[layout.log_eta_range()], &literal_to_f64(&out[6])?);
+            grad[layout.log_sigma_idx()] += literal_to_f64(&out[7])?[0];
+            start += len;
+        }
+        // Chain the L cotangent through chol(inv(K_mm)) on the host.
+        let lg = chain.chain(&l_cot);
+        add_into(&mut grad[layout.z_range()], &lg.dz.data);
+        add_into(&mut grad[layout.log_eta_range()], &lg.dlog_eta);
+        grad[layout.log_a0_idx()] += lg.dlog_a0;
+        Ok(GradResult { value, grad })
+    }
+}
+
+fn add_into(dst: &mut [f64], src: &[f64]) {
+    debug_assert_eq!(dst.len(), src.len());
+    for (a, b) in dst.iter_mut().zip(src) {
+        *a += b;
+    }
+}
+
+impl GradEngine for XlaEngine {
+    fn layout(&self) -> ThetaLayout {
+        self.layout
+    }
+
+    fn name(&self) -> &'static str {
+        "xla"
+    }
+
+    fn grad(&mut self, theta: &[f64], x: &Mat, y: &[f64]) -> GradResult {
+        self.grad_inner(theta, x, y).expect("XLA grad execution failed")
+    }
+}
+
+/// Engine factory for PJRT workers (one engine per worker thread).
+pub fn xla_factory(manifest: Manifest, m: usize, d: usize) -> EngineFactory {
+    std::sync::Arc::new(move |_worker| {
+        Box::new(XlaEngine::from_manifest(&manifest, m, d).expect("build XlaEngine"))
+    })
+}
+
+/// Evaluation-side PJRT engine: predictions (mean/var) and the data term
+/// of the negative ELBO — the evaluator thread's workhorse.
+pub struct XlaEvaluator {
+    layout: ThetaLayout,
+    block_pred: usize,
+    block_elbo: usize,
+    _client: xla::PjRtClient,
+    exe_predict: xla::PjRtLoadedExecutable,
+    exe_elbo: xla::PjRtLoadedExecutable,
+}
+
+impl XlaEvaluator {
+    pub fn from_manifest(manifest: &Manifest, m: usize, d: usize) -> Result<Self> {
+        let pspec = manifest.find(ArtifactKind::Predict, m, d)?;
+        let espec = manifest.find(ArtifactKind::Elbo, m, d)?;
+        let client = xla::PjRtClient::cpu()?;
+        let exe_predict = compile(&client, &pspec.path)?;
+        let exe_elbo = compile(&client, &espec.path)?;
+        Ok(Self {
+            layout: ThetaLayout::new(m, d),
+            block_pred: pspec.b,
+            block_elbo: espec.b,
+            _client: client,
+            exe_predict,
+            exe_elbo,
+        })
+    }
+
+    pub fn layout(&self) -> ThetaLayout {
+        self.layout
+    }
+
+    /// Predictive (mean, var_y) for every row of x.
+    pub fn predict(&self, theta: &[f64], x: &Mat) -> Result<(Vec<f64>, Vec<f64>)> {
+        let (theta_lits, _chain) = theta_literals(self.layout, theta)?;
+        let mut mean = Vec::with_capacity(x.rows);
+        let mut var = Vec::with_capacity(x.rows);
+        let mut start = 0;
+        while start < x.rows {
+            let len = self.block_pred.min(x.rows - start);
+            let mut args: Vec<&Literal> = theta_lits.iter().collect();
+            let blk = block_literals(self.block_pred, self.layout.d, x, None, start, len)?;
+            args.extend(blk.iter());
+            let out = self.exe_predict.execute::<&Literal>(&args)?[0][0]
+                .to_literal_sync()?
+                .to_tuple()?;
+            anyhow::ensure!(out.len() == 2, "predict artifact returned {}", out.len());
+            mean.extend(literal_to_f64(&out[0])?.into_iter().take(len));
+            var.extend(literal_to_f64(&out[1])?.into_iter().take(len));
+            start += len;
+        }
+        Ok((mean, var))
+    }
+
+    /// (Σ_i g_i, Σ_i (mean_i − y_i)²) over the dataset — the data term of
+    /// −ELBO (add `Theta::kl()` for the full bound) and the SSE.
+    pub fn elbo_data_term(&self, theta: &[f64], x: &Mat, y: &[f64]) -> Result<(f64, f64)> {
+        let (theta_lits, _chain) = theta_literals(self.layout, theta)?;
+        let mut g = 0.0;
+        let mut sse = 0.0;
+        let mut start = 0;
+        while start < x.rows {
+            let len = self.block_elbo.min(x.rows - start);
+            let mut args: Vec<&Literal> = theta_lits.iter().collect();
+            let blk =
+                block_literals(self.block_elbo, self.layout.d, x, Some(y), start, len)?;
+            args.extend(blk.iter());
+            let out = self.exe_elbo.execute::<&Literal>(&args)?[0][0]
+                .to_literal_sync()?
+                .to_tuple()?;
+            anyhow::ensure!(out.len() == 2, "elbo artifact returned {}", out.len());
+            g += literal_to_f64(&out[0])?[0];
+            sse += literal_to_f64(&out[1])?[0];
+            start += len;
+        }
+        Ok((g, sse))
+    }
+}

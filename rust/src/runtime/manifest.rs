@@ -1,0 +1,137 @@
+//! `artifacts/manifest.json` parsing and artifact lookup.
+
+use crate::util::json::Json;
+use anyhow::{bail, Context, Result};
+use std::path::{Path, PathBuf};
+
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum ArtifactKind {
+    Grad,
+    Predict,
+    Elbo,
+}
+
+impl ArtifactKind {
+    pub fn parse(s: &str) -> Result<Self> {
+        Ok(match s {
+            "grad" => Self::Grad,
+            "predict" => Self::Predict,
+            "elbo" => Self::Elbo,
+            other => bail!("unknown artifact kind {other:?}"),
+        })
+    }
+}
+
+#[derive(Clone, Debug)]
+pub struct ArtifactSpec {
+    pub kind: ArtifactKind,
+    pub m: usize,
+    pub d: usize,
+    pub b: usize,
+    pub path: PathBuf,
+}
+
+#[derive(Clone, Debug)]
+pub struct Manifest {
+    pub dir: PathBuf,
+    pub artifacts: Vec<ArtifactSpec>,
+}
+
+impl Manifest {
+    /// Load `<dir>/manifest.json`.
+    pub fn load(dir: &Path) -> Result<Self> {
+        let path = dir.join("manifest.json");
+        let text = std::fs::read_to_string(&path)
+            .with_context(|| format!("read {path:?} — run `make artifacts` first"))?;
+        let v = Json::parse(&text).map_err(|e| anyhow::anyhow!("manifest: {e}"))?;
+        let arts = v
+            .get("artifacts")
+            .and_then(|a| a.as_arr())
+            .context("manifest missing 'artifacts'")?;
+        let mut artifacts = Vec::new();
+        for a in arts {
+            let get_usize = |k: &str| {
+                a.get(k)
+                    .and_then(|x| x.as_usize())
+                    .with_context(|| format!("artifact missing {k}"))
+            };
+            artifacts.push(ArtifactSpec {
+                kind: ArtifactKind::parse(
+                    a.get("kind").and_then(|x| x.as_str()).context("kind")?,
+                )?,
+                m: get_usize("m")?,
+                d: get_usize("d")?,
+                b: get_usize("b")?,
+                path: dir.join(a.get("file").and_then(|x| x.as_str()).context("file")?),
+            });
+        }
+        Ok(Self { dir: dir.to_path_buf(), artifacts })
+    }
+
+    /// Find the artifact for (kind, m, d).
+    pub fn find(&self, kind: ArtifactKind, m: usize, d: usize) -> Result<&ArtifactSpec> {
+        self.artifacts
+            .iter()
+            .find(|a| a.kind == kind && a.m == m && a.d == d)
+            .with_context(|| {
+                format!(
+                    "no {kind:?} artifact for m={m}, d={d}; available: {:?}",
+                    self.artifacts
+                        .iter()
+                        .map(|a| (a.kind, a.m, a.d))
+                        .collect::<Vec<_>>()
+                )
+            })
+    }
+
+    /// All (m, d) pairs with a full (grad, predict, elbo) triple.
+    pub fn complete_configs(&self) -> Vec<(usize, usize)> {
+        let mut out = Vec::new();
+        for a in &self.artifacts {
+            if a.kind == ArtifactKind::Grad
+                && self.find(ArtifactKind::Predict, a.m, a.d).is_ok()
+                && self.find(ArtifactKind::Elbo, a.m, a.d).is_ok()
+            {
+                out.push((a.m, a.d));
+            }
+        }
+        out
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn fake_manifest_dir() -> PathBuf {
+        let dir = std::env::temp_dir().join(format!("advgp_manifest_{}", std::process::id()));
+        std::fs::create_dir_all(&dir).unwrap();
+        std::fs::write(
+            dir.join("manifest.json"),
+            r#"{"version":1,"artifacts":[
+                {"kind":"grad","m":16,"d":4,"b":1024,"file":"g.hlo.txt","block_b":128},
+                {"kind":"predict","m":16,"d":4,"b":2048,"file":"p.hlo.txt","block_b":128},
+                {"kind":"elbo","m":16,"d":4,"b":2048,"file":"e.hlo.txt","block_b":128}
+            ]}"#,
+        )
+        .unwrap();
+        dir
+    }
+
+    #[test]
+    fn load_and_find() {
+        let dir = fake_manifest_dir();
+        let man = Manifest::load(&dir).unwrap();
+        assert_eq!(man.artifacts.len(), 3);
+        let g = man.find(ArtifactKind::Grad, 16, 4).unwrap();
+        assert_eq!(g.b, 1024);
+        assert!(man.find(ArtifactKind::Grad, 50, 8).is_err());
+        assert_eq!(man.complete_configs(), vec![(16, 4)]);
+    }
+
+    #[test]
+    fn missing_dir_is_actionable() {
+        let err = Manifest::load(Path::new("/nonexistent/advgp")).unwrap_err();
+        assert!(format!("{err:#}").contains("make artifacts"));
+    }
+}

@@ -1,0 +1,33 @@
+//! PJRT runtime: load AOT HLO-text artifacts produced by
+//! `python/compile/aot.py` and execute them on the CPU PJRT client.
+//!
+//! Key constraints (see /opt/xla-example/README.md and DESIGN.md):
+//! * Interchange is **HLO text** — xla_extension 0.5.1 rejects jax>=0.5's
+//!   serialized protos (64-bit instruction ids); the text parser
+//!   reassigns ids.
+//! * `PjRtClient` is `Rc`-backed and **not `Send`**: every worker thread
+//!   builds its own [`XlaEngine`] (clients/executables never migrate).
+//! * Artifacts are shape-specialized `(kind, m, d, B)`; shards are
+//!   streamed through in fixed `B`-row blocks with a 0/1 mask padding
+//!   the tail, so padded rows contribute exactly zero.
+
+pub mod engine;
+pub mod manifest;
+
+pub use engine::{XlaEngine, XlaEvaluator};
+pub use manifest::{ArtifactKind, ArtifactSpec, Manifest};
+
+use anyhow::Result;
+
+/// Smoke helper used by the `advgp smoke` subcommand: load an HLO text
+/// file of the reference `fn(x, y) = (x @ y + 2,)` and execute it.
+pub fn smoke(path: &str) -> Result<Vec<f32>> {
+    let client = xla::PjRtClient::cpu()?;
+    let proto = xla::HloModuleProto::from_text_file(path)?;
+    let comp = xla::XlaComputation::from_proto(&proto);
+    let exe = client.compile(&comp)?;
+    let x = xla::Literal::vec1(&[1f32, 2., 3., 4.]).reshape(&[2, 2])?;
+    let y = xla::Literal::vec1(&[1f32, 1., 1., 1.]).reshape(&[2, 2])?;
+    let r = exe.execute::<xla::Literal>(&[x, y])?[0][0].to_literal_sync()?;
+    Ok(r.to_tuple1()?.to_vec::<f32>()?)
+}

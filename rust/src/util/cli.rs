@@ -1,0 +1,131 @@
+//! Tiny CLI argument parser substrate (offline build: no `clap`).
+//!
+//! Supports `--key value`, `--key=value`, boolean `--flag`, positional
+//! arguments, and typed lookups with defaults.
+
+use std::collections::BTreeMap;
+
+#[derive(Clone, Debug, Default)]
+pub struct Args {
+    pub positional: Vec<String>,
+    pub flags: BTreeMap<String, String>,
+}
+
+impl Args {
+    /// Parse from an iterator of tokens (usually `std::env::args().skip(1)`).
+    pub fn parse<I: IntoIterator<Item = String>>(it: I) -> Self {
+        let mut out = Args::default();
+        let mut it = it.into_iter().peekable();
+        while let Some(tok) = it.next() {
+            if let Some(body) = tok.strip_prefix("--") {
+                if let Some((k, v)) = body.split_once('=') {
+                    out.flags.insert(k.to_string(), v.to_string());
+                } else if it
+                    .peek()
+                    .map(|n| !n.starts_with("--"))
+                    .unwrap_or(false)
+                {
+                    let v = it.next().unwrap();
+                    out.flags.insert(body.to_string(), v);
+                } else {
+                    out.flags.insert(body.to_string(), "true".to_string());
+                }
+            } else {
+                out.positional.push(tok);
+            }
+        }
+        out
+    }
+
+    pub fn from_env() -> Self {
+        Self::parse(std::env::args().skip(1))
+    }
+
+    pub fn str_or<'a>(&'a self, key: &str, default: &'a str) -> &'a str {
+        self.flags.get(key).map(|s| s.as_str()).unwrap_or(default)
+    }
+
+    pub fn get(&self, key: &str) -> Option<&str> {
+        self.flags.get(key).map(|s| s.as_str())
+    }
+
+    pub fn usize_or(&self, key: &str, default: usize) -> usize {
+        self.flags
+            .get(key)
+            .map(|v| v.parse().unwrap_or_else(|_| panic!("--{key} wants an integer, got {v:?}")))
+            .unwrap_or(default)
+    }
+
+    pub fn u64_or(&self, key: &str, default: u64) -> u64 {
+        self.flags
+            .get(key)
+            .map(|v| v.parse().unwrap_or_else(|_| panic!("--{key} wants an integer, got {v:?}")))
+            .unwrap_or(default)
+    }
+
+    pub fn f64_or(&self, key: &str, default: f64) -> f64 {
+        self.flags
+            .get(key)
+            .map(|v| v.parse().unwrap_or_else(|_| panic!("--{key} wants a number, got {v:?}")))
+            .unwrap_or(default)
+    }
+
+    pub fn bool_or(&self, key: &str, default: bool) -> bool {
+        self.flags
+            .get(key)
+            .map(|v| matches!(v.as_str(), "true" | "1" | "yes"))
+            .unwrap_or(default)
+    }
+
+    /// Optional list: `--taus 0,5,10`.
+    pub fn usize_list_or(&self, key: &str, default: &[usize]) -> Vec<usize> {
+        match self.flags.get(key) {
+            None => default.to_vec(),
+            Some(v) => v
+                .split(',')
+                .filter(|s| !s.is_empty())
+                .map(|s| s.trim().parse().unwrap_or_else(|_| panic!("--{key}: bad entry {s:?}")))
+                .collect(),
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn parse(toks: &[&str]) -> Args {
+        Args::parse(toks.iter().map(|s| s.to_string()))
+    }
+
+    #[test]
+    fn mixed_forms() {
+        let a = parse(&["train", "--m", "100", "--tau=32", "--verbose", "--out", "x.csv"]);
+        assert_eq!(a.positional, vec!["train"]);
+        assert_eq!(a.usize_or("m", 0), 100);
+        assert_eq!(a.usize_or("tau", 0), 32);
+        assert!(a.bool_or("verbose", false));
+        assert_eq!(a.str_or("out", ""), "x.csv");
+        assert_eq!(a.usize_or("missing", 7), 7);
+    }
+
+    #[test]
+    fn negative_numbers_as_values() {
+        let a = parse(&["--lr=-0.5", "--x", "2"]);
+        assert_eq!(a.f64_or("lr", 0.0), -0.5);
+        assert_eq!(a.f64_or("x", 0.0), 2.0);
+    }
+
+    #[test]
+    fn lists() {
+        let a = parse(&["--taus", "0,5,10,20"]);
+        assert_eq!(a.usize_list_or("taus", &[]), vec![0, 5, 10, 20]);
+        assert_eq!(a.usize_list_or("other", &[1]), vec![1]);
+    }
+
+    #[test]
+    fn trailing_flag_is_boolean() {
+        let a = parse(&["--sync"]);
+        assert!(a.bool_or("sync", false));
+    }
+}

@@ -1,0 +1,146 @@
+//! Shared substrates: RNG, JSON, CLI parsing, logging, timing.
+//!
+//! The build environment is offline (only `xla` + `anyhow` resolve), so
+//! these replace the usual crates (`rand`, `serde_json`, `clap`, `log`).
+
+pub mod cli;
+pub mod json;
+pub mod logging;
+pub mod rng;
+
+use std::time::Instant;
+
+/// Monotonic stopwatch used across metrics and traces.
+#[derive(Clone, Copy, Debug)]
+pub struct Stopwatch {
+    start: Instant,
+}
+
+impl Stopwatch {
+    pub fn start() -> Self {
+        Self { start: Instant::now() }
+    }
+
+    pub fn secs(&self) -> f64 {
+        self.start.elapsed().as_secs_f64()
+    }
+
+    pub fn millis(&self) -> f64 {
+        self.secs() * 1e3
+    }
+}
+
+impl Default for Stopwatch {
+    fn default() -> Self {
+        Self::start()
+    }
+}
+
+/// Simple online mean/variance/min/max accumulator (Welford).
+#[derive(Clone, Debug, Default)]
+pub struct Stats {
+    pub n: u64,
+    mean: f64,
+    m2: f64,
+    pub min: f64,
+    pub max: f64,
+}
+
+impl Stats {
+    pub fn new() -> Self {
+        Self { n: 0, mean: 0.0, m2: 0.0, min: f64::INFINITY, max: f64::NEG_INFINITY }
+    }
+
+    pub fn push(&mut self, x: f64) {
+        self.n += 1;
+        let d = x - self.mean;
+        self.mean += d / self.n as f64;
+        self.m2 += d * (x - self.mean);
+        self.min = self.min.min(x);
+        self.max = self.max.max(x);
+    }
+
+    pub fn mean(&self) -> f64 {
+        self.mean
+    }
+
+    pub fn var(&self) -> f64 {
+        if self.n < 2 {
+            0.0
+        } else {
+            self.m2 / (self.n - 1) as f64
+        }
+    }
+
+    pub fn std(&self) -> f64 {
+        self.var().sqrt()
+    }
+}
+
+/// Root-mean-square error between two slices.
+pub fn rmse(pred: &[f64], truth: &[f64]) -> f64 {
+    assert_eq!(pred.len(), truth.len());
+    assert!(!pred.is_empty());
+    let sse: f64 = pred
+        .iter()
+        .zip(truth)
+        .map(|(p, t)| (p - t) * (p - t))
+        .sum();
+    (sse / pred.len() as f64).sqrt()
+}
+
+/// Mean negative log predictive likelihood for Gaussian predictions
+/// (Appendix D's MNLP): mean of -log N(y | mean_i, var_i).
+pub fn mnlp(mean: &[f64], var: &[f64], truth: &[f64]) -> f64 {
+    assert_eq!(mean.len(), truth.len());
+    assert_eq!(var.len(), truth.len());
+    let n = mean.len() as f64;
+    let s: f64 = mean
+        .iter()
+        .zip(var)
+        .zip(truth)
+        .map(|((m, v), t)| {
+            let v = v.max(1e-12);
+            0.5 * ((2.0 * std::f64::consts::PI * v).ln() + (t - m) * (t - m) / v)
+        })
+        .sum();
+    s / n
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn stats_welford() {
+        let mut s = Stats::new();
+        for x in [1.0, 2.0, 3.0, 4.0] {
+            s.push(x);
+        }
+        assert!((s.mean() - 2.5).abs() < 1e-12);
+        assert!((s.var() - 5.0 / 3.0).abs() < 1e-12);
+        assert_eq!(s.min, 1.0);
+        assert_eq!(s.max, 4.0);
+    }
+
+    #[test]
+    fn rmse_known() {
+        assert!((rmse(&[1.0, 2.0], &[0.0, 4.0]) - (2.5f64).sqrt()).abs() < 1e-12);
+        assert_eq!(rmse(&[3.0], &[3.0]), 0.0);
+    }
+
+    #[test]
+    fn mnlp_standard_normal() {
+        // -log N(0 | 0, 1) = 0.5 ln(2 pi)
+        let v = mnlp(&[0.0], &[1.0], &[0.0]);
+        assert!((v - 0.5 * (2.0 * std::f64::consts::PI).ln()).abs() < 1e-12);
+    }
+
+    #[test]
+    fn mnlp_penalizes_overconfidence() {
+        // Same error, smaller variance -> larger MNLP.
+        let tight = mnlp(&[0.0], &[0.01], &[1.0]);
+        let loose = mnlp(&[0.0], &[1.0], &[1.0]);
+        assert!(tight > loose);
+    }
+}

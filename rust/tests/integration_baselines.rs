@@ -1,0 +1,71 @@
+//! Integration: the four baselines and ADVGP on one shared problem —
+//! relative orderings the paper's evaluation depends on.
+
+use advgp::experiments::methods::*;
+use advgp::experiments::{flight_problem, taxi_problem};
+
+#[test]
+fn all_methods_beat_mean_on_flight() {
+    let p = flight_problem(6_000, 1_000, 25, 3);
+    let opts = MethodOpts { budget_secs: 4.0, ..Default::default() };
+    let sync = MethodOpts { budget_secs: 4.0, tau: 0, ..Default::default() };
+    let mean = final_rmse(&run_mean_method(&p));
+    for (name, r) in [
+        ("advgp", run_advgp(&p, &opts)),
+        ("svigp", run_svigp_method(&p, &opts)),
+        ("distgp-gd", run_distgp_gd_method(&p, &sync)),
+        ("distgp-lbfgs", run_distgp_lbfgs_method(&p, &sync)),
+        ("linear", run_linear_method(&p, &opts)),
+    ] {
+        let rmse = final_rmse(&r);
+        assert!(rmse < mean, "{name}: {rmse} !< mean {mean}");
+        assert!(!r.trace.is_empty(), "{name}: empty trace");
+    }
+}
+
+#[test]
+fn gp_beats_linear_on_taxi_shape() {
+    // Fig. 4's qualitative content at test scale.
+    let p = taxi_problem(6_000, 1_000, 25, 5);
+    let opts = MethodOpts { budget_secs: 5.0, tau: 20, ..Default::default() };
+    let gp = final_rmse(&run_advgp(&p, &opts));
+    let lin = final_rmse(&run_linear_method(&p, &opts));
+    let mean = final_rmse(&run_mean_method(&p));
+    assert!(gp < lin, "GP {gp} !< linear {lin}");
+    assert!(lin < mean, "linear {lin} !< mean {mean}");
+}
+
+#[test]
+fn advgp_and_svigp_reach_similar_quality() {
+    // Tables 1–2's "comparable accuracy" claim: within 15% of each other
+    // given equal budget at small scale.
+    let p = flight_problem(6_000, 1_000, 25, 7);
+    let opts = MethodOpts { budget_secs: 6.0, ..Default::default() };
+    let a = final_rmse(&run_advgp(&p, &opts));
+    let s = final_rmse(&run_svigp_method(&p, &opts));
+    let ratio = a / s;
+    assert!((0.8..1.25).contains(&ratio), "advgp {a} vs svigp {s} (ratio {ratio})");
+}
+
+#[test]
+fn async_does_more_updates_than_sync_with_stragglers() {
+    // Fig. 3's mechanism: under heterogeneous workers the async gate
+    // sustains far more server updates per second than the τ=0 barrier.
+    let p = flight_problem(4_000, 500, 16, 9);
+    let mk = |tau: u64| MethodOpts {
+        budget_secs: 3.0,
+        tau,
+        workers: 4,
+        straggle_ms: vec![0, 5, 10, 20],
+        eval_every_secs: 10.0, // don't let eval interfere
+        ..Default::default()
+    };
+    let async_r = run_advgp(&p, &mk(64));
+    let sync_r = run_advgp(&p, &mk(0));
+    let au = async_r.trace.last().map(|t| t.version).unwrap_or(0);
+    let su = sync_r.trace.last().map(|t| t.version).unwrap_or(0);
+    assert!(
+        au as f64 > 1.5 * su as f64,
+        "async {au} updates vs sync {su} — expected a clear gap"
+    );
+}

@@ -1,0 +1,198 @@
+//! Integration: asynchronous parameter-server training end-to-end with
+//! the native engine — convergence, staleness invariants, stragglers,
+//! crash/restart, wall-clock limits.
+
+use advgp::data::{kmeans, synth, Dataset, Standardizer};
+use advgp::gp::{SparseGp, Theta, ThetaLayout};
+use advgp::grad::native_factory;
+use advgp::ps::coordinator::{native_eval_factory, train, TrainConfig};
+use advgp::ps::worker::WorkerProfile;
+use advgp::util::rng::Pcg64;
+use advgp::util::rmse;
+use std::time::Duration;
+
+/// Standardized friedman problem + kmeans-initialized θ.
+fn setup(n: usize, m: usize, seed: u64) -> (Dataset, Dataset, Theta, ThetaLayout) {
+    let mut ds = synth::friedman(n + 200, 4, 0.4, seed);
+    let mut rng = Pcg64::seeded(seed);
+    ds.shuffle(&mut rng);
+    let (mut train_ds, mut test_ds) = ds.split(200);
+    let st = Standardizer::fit(&train_ds);
+    st.apply(&mut train_ds);
+    st.apply(&mut test_ds);
+    let layout = ThetaLayout::new(m, 4);
+    let z = kmeans::kmeans(&train_ds.x, m, 15, &mut rng);
+    let theta = Theta::init(layout, &z);
+    (train_ds, test_ds, theta, layout)
+}
+
+fn mean_rmse(test: &Dataset) -> f64 {
+    // Targets are standardized: the mean predictor is ~0.
+    rmse(&vec![0.0; test.n()], &test.y)
+}
+
+#[test]
+fn async_training_beats_mean_and_reduces_neg_elbo() {
+    let (train_ds, test_ds, theta, layout) = setup(2000, 16, 1);
+    let elbo_probe = train_ds.head(512);
+    let gp0 = SparseGp::new(theta.clone());
+    let neg_elbo_0 = gp0.neg_elbo(&train_ds.x, &train_ds.y);
+
+    let mut cfg = TrainConfig::new(layout);
+    cfg.tau = 8;
+    cfg.max_updates = 300;
+    cfg.eval_every_secs = 0.05;
+    let shards = train_ds.shard(4);
+    let res = train(
+        &cfg,
+        theta.data.clone(),
+        shards,
+        native_factory(layout),
+        Some(native_eval_factory(layout, test_ds.clone(), Some(elbo_probe))),
+    );
+    assert_eq!(res.stats.updates, 300);
+    let gp = SparseGp::new(Theta { layout, data: res.theta.clone() });
+    let (mean, _) = gp.predict(&test_ds.x);
+    let final_rmse = rmse(&mean, &test_ds.y);
+    let baseline = mean_rmse(&test_ds);
+    assert!(
+        final_rmse < 0.6 * baseline,
+        "rmse {final_rmse} vs mean predictor {baseline}"
+    );
+    let neg_elbo_t = gp.neg_elbo(&train_ds.x, &train_ds.y);
+    assert!(neg_elbo_t < neg_elbo_0, "{neg_elbo_t} !< {neg_elbo_0}");
+    // Trace recorded and improves over time.
+    assert!(res.trace.len() >= 3);
+    let first = res.trace.first().unwrap().rmse;
+    let last = res.trace.last().unwrap().rmse;
+    assert!(last < first, "trace should improve: {first} -> {last}");
+}
+
+#[test]
+fn staleness_never_exceeds_tau() {
+    for tau in [0u64, 3, 16] {
+        let (train_ds, _test, theta, layout) = setup(600, 8, 2 + tau);
+        let mut cfg = TrainConfig::new(layout);
+        cfg.tau = tau;
+        cfg.max_updates = 120;
+        cfg.eval_every_secs = 0.0;
+        // Heterogeneous workers to provoke staleness.
+        cfg.profiles = vec![
+            WorkerProfile::default(),
+            WorkerProfile { straggle: Duration::from_millis(3), ..Default::default() },
+            WorkerProfile { straggle: Duration::from_millis(7), ..Default::default() },
+        ];
+        let res = train(
+            &cfg,
+            theta.data.clone(),
+            train_ds.shard(3),
+            native_factory(layout),
+            None,
+        );
+        // The gate guarantees staleness ≤ τ at every update.
+        assert!(
+            res.stats.staleness.max <= tau as f64,
+            "tau={tau}: observed staleness {}",
+            res.stats.staleness.max
+        );
+        if tau == 0 {
+            // Bulk-synchronous: staleness identically zero.
+            assert_eq!(res.stats.staleness.max, 0.0);
+        }
+    }
+}
+
+#[test]
+fn diag_u_stays_positive_throughout() {
+    let (train_ds, test_ds, theta, layout) = setup(800, 10, 5);
+    let mut cfg = TrainConfig::new(layout);
+    cfg.tau = 4;
+    cfg.max_updates = 150;
+    cfg.eval_every_secs = 0.02;
+    let res = train(
+        &cfg,
+        theta.data.clone(),
+        train_ds.shard(3),
+        native_factory(layout),
+        Some(native_eval_factory(layout, test_ds, None)),
+    );
+    let th = Theta { layout, data: res.theta };
+    let u = th.u_mat();
+    for i in 0..layout.m {
+        assert!(u[(i, i)] > 0.0, "U[{i},{i}] = {}", u[(i, i)]);
+    }
+    // MNLP finite at every snapshot (Σ stayed SPD the whole run).
+    for row in &res.trace {
+        assert!(row.mnlp.is_finite());
+    }
+}
+
+#[test]
+fn crash_and_restart_worker_recovers() {
+    let (train_ds, test_ds, theta, layout) = setup(1200, 12, 7);
+    let mut cfg = TrainConfig::new(layout);
+    cfg.tau = 50; // generous: survive the dark period
+    cfg.max_updates = 200;
+    cfg.eval_every_secs = 0.0;
+    cfg.profiles = vec![
+        WorkerProfile::default(),
+        WorkerProfile {
+            crash_at: Some(5),
+            restart_after: Duration::from_millis(150),
+            ..Default::default()
+        },
+        WorkerProfile::default(),
+    ];
+    let res = train(
+        &cfg,
+        theta.data.clone(),
+        train_ds.shard(3),
+        native_factory(layout),
+        None,
+    );
+    assert_eq!(res.stats.updates, 200, "run must complete despite the crash");
+    let gp = SparseGp::new(Theta { layout, data: res.theta });
+    let (mean, _) = gp.predict(&test_ds.x);
+    assert!(rmse(&mean, &test_ds.y) < 0.8 * mean_rmse(&test_ds));
+}
+
+#[test]
+fn time_limit_stops_run() {
+    let (train_ds, _test, theta, layout) = setup(1500, 12, 9);
+    let mut cfg = TrainConfig::new(layout);
+    cfg.tau = 8;
+    cfg.max_updates = u64::MAX / 2; // effectively unbounded
+    cfg.eval_every_secs = 0.0;
+    cfg.time_limit_secs = Some(0.5);
+    let start = std::time::Instant::now();
+    let res = train(
+        &cfg,
+        theta.data.clone(),
+        train_ds.shard(2),
+        native_factory(layout),
+        None,
+    );
+    assert!(start.elapsed() < Duration::from_secs(10));
+    assert!(res.stats.updates > 0, "should do some updates before the limit");
+}
+
+#[test]
+fn sync_tau0_matches_single_worker_semantics() {
+    // With τ=0 and identical data splits, every update aggregates one
+    // fresh gradient per worker computed at the same version — the sum
+    // equals the full-batch gradient, so 2-worker sync must equal
+    // 1-worker sync trajectory exactly (deterministic engines).
+    let (train_ds, _test, theta, layout) = setup(400, 6, 11);
+    let run = |shards: Vec<Dataset>| {
+        let mut cfg = TrainConfig::new(layout);
+        cfg.tau = 0;
+        cfg.max_updates = 25;
+        cfg.eval_every_secs = 0.0;
+        train(&cfg, theta.data.clone(), shards, native_factory(layout), None)
+    };
+    let r1 = run(vec![train_ds.clone()]);
+    let r2 = run(train_ds.shard(3));
+    for (a, b) in r1.theta.iter().zip(&r2.theta) {
+        assert!((a - b).abs() < 1e-9, "sync trajectories diverged: {a} vs {b}");
+    }
+}

@@ -1,0 +1,139 @@
+//! Integration: the PJRT (JAX/Pallas artifact) engine and the pure-Rust
+//! native engine must agree — value, every gradient block, predictions,
+//! and ELBO terms.  This pins L1+L2 against L3's independent math.
+//!
+//! Requires `make artifacts` (skips gracefully if absent).
+
+use advgp::data::synth;
+use advgp::gp::{SparseGp, Theta, ThetaLayout};
+use advgp::grad::{native::NativeEngine, GradEngine};
+use advgp::linalg::Mat;
+use advgp::runtime::{Manifest, XlaEngine, XlaEvaluator};
+use advgp::util::rng::Pcg64;
+use std::path::Path;
+
+fn manifest() -> Option<Manifest> {
+    let dir = Path::new(env!("CARGO_MANIFEST_DIR")).join("artifacts");
+    match Manifest::load(&dir) {
+        Ok(m) if m.find(advgp::runtime::ArtifactKind::Grad, 16, 4).is_ok() => Some(m),
+        _ => {
+            eprintln!("skipping: artifacts/ missing (run `make artifacts`)");
+            None
+        }
+    }
+}
+
+fn test_theta(layout: ThetaLayout, seed: u64) -> Theta {
+    let mut rng = Pcg64::seeded(seed);
+    let z = Mat::from_vec(
+        layout.m,
+        layout.d,
+        (0..layout.m * layout.d).map(|_| rng.normal() * 0.7).collect(),
+    );
+    let mut th = Theta::init(layout, &z);
+    for v in th.mu_mut() {
+        *v = rng.normal() * 0.2;
+    }
+    let m = layout.m;
+    let mut u = Mat::eye(m);
+    for i in 0..m {
+        u[(i, i)] = 0.8 + 0.2 * rng.next_f64();
+        for j in i + 1..m {
+            u[(i, j)] = rng.normal() * 0.03;
+        }
+    }
+    th.set_u_mat(&u);
+    th.data[layout.log_a0_idx()] = 0.1;
+    th.data[layout.log_sigma_idx()] = -0.2;
+    th
+}
+
+#[test]
+fn xla_and_native_gradients_agree() {
+    let Some(man) = manifest() else { return };
+    let layout = ThetaLayout::new(16, 4);
+    let th = test_theta(layout, 1);
+    // 1500 rows: exercises full blocks AND the padded tail (b=1024).
+    let ds = synth::friedman(1500, 4, 0.4, 2);
+    let mut xla = XlaEngine::from_manifest(&man, 16, 4).unwrap();
+    let mut nat = NativeEngine::new(layout);
+    let rx = xla.grad(&th.data, &ds.x, &ds.y);
+    let rn = nat.grad(&th.data, &ds.x, &ds.y);
+    let rel = (rx.value - rn.value).abs() / rn.value.abs().max(1.0);
+    assert!(rel < 5e-4, "value: xla {} vs native {}", rx.value, rn.value);
+    let mut worst = (0usize, 0.0f64);
+    for i in 0..layout.len() {
+        let denom = rn.grad[i].abs().max(rx.grad[i].abs()).max(1e-2);
+        let rel = (rx.grad[i] - rn.grad[i]).abs() / denom;
+        if rel > worst.1 {
+            worst = (i, rel);
+        }
+    }
+    assert!(
+        worst.1 < 5e-3,
+        "grad coord {}: xla {} vs native {} (rel {:.2e})",
+        worst.0, rx.grad[worst.0], rn.grad[worst.0], worst.1
+    );
+}
+
+#[test]
+fn xla_predictions_match_native_sparse_gp() {
+    let Some(man) = manifest() else { return };
+    let layout = ThetaLayout::new(16, 4);
+    let th = test_theta(layout, 3);
+    let ds = synth::friedman(700, 4, 0.3, 4);
+    let eval = XlaEvaluator::from_manifest(&man, 16, 4).unwrap();
+    let (mx, vx) = eval.predict(&th.data, &ds.x).unwrap();
+    let gp = SparseGp::new(th.clone());
+    let (mn, vn) = gp.predict(&ds.x);
+    assert_eq!(mx.len(), 700);
+    for i in 0..700 {
+        assert!((mx[i] - mn[i]).abs() < 5e-4 * (1.0 + mn[i].abs()), "mean {i}");
+        assert!((vx[i] - vn[i]).abs() < 5e-3 * (1.0 + vn[i].abs()), "var {i}");
+    }
+}
+
+#[test]
+fn xla_elbo_term_matches_native() {
+    let Some(man) = manifest() else { return };
+    let layout = ThetaLayout::new(16, 4);
+    let th = test_theta(layout, 5);
+    let ds = synth::friedman(3000, 4, 0.3, 6);
+    let eval = XlaEvaluator::from_manifest(&man, 16, 4).unwrap();
+    let (g, sse) = eval.elbo_data_term(&th.data, &ds.x, &ds.y).unwrap();
+    let gp = SparseGp::new(th.clone());
+    let want_g = gp.data_term(&ds.x, &ds.y);
+    let (mean, _) = gp.predict(&ds.x);
+    let want_sse: f64 = mean
+        .iter()
+        .zip(&ds.y)
+        .map(|(p, t)| (p - t) * (p - t))
+        .sum();
+    assert!((g - want_g).abs() / want_g.abs() < 1e-3, "{g} vs {want_g}");
+    assert!((sse - want_sse).abs() / want_sse.abs() < 1e-3, "{sse} vs {want_sse}");
+}
+
+#[test]
+fn mask_padding_contributes_zero() {
+    let Some(man) = manifest() else { return };
+    let layout = ThetaLayout::new(16, 4);
+    let th = test_theta(layout, 7);
+    // 1024 rows == exactly one block vs the same rows + pathological tail
+    // values that the mask must cancel: compare against 1024+1 rows where
+    // the extra row is processed in a second padded block.
+    let ds = synth::friedman(1024, 4, 0.3, 8);
+    let mut one_more = synth::friedman(1025, 4, 0.3, 8);
+    // Make row 1024 contribute a known amount: run it separately.
+    let extra_x = Mat::from_vec(1, 4, one_more.x.data[1024 * 4..].to_vec());
+    let extra_y = vec![one_more.y[1024]];
+    one_more.x.data.truncate(1025 * 4);
+    let mut xla = XlaEngine::from_manifest(&man, 16, 4).unwrap();
+    let full = xla.grad(&th.data, &one_more.x, &one_more.y);
+    let base = xla.grad(&th.data, &ds.x, &ds.y);
+    let extra = xla.grad(&th.data, &extra_x, &extra_y);
+    assert!(
+        (full.value - base.value - extra.value).abs() < 1e-3,
+        "{} vs {} + {}",
+        full.value, base.value, extra.value
+    );
+}

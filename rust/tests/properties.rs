@@ -1,0 +1,303 @@
+//! Property tests (via the in-repo `testing` harness) over the system's
+//! core invariants:
+//!
+//! * prox (eqs. 18–20): positivity, hyper-invariance, KL contraction
+//! * feature maps: K_nn − ΦΦᵀ PSD for every map in §5
+//! * delay gate: staleness bound never violated under random schedules
+//! * linalg: factorization round-trips
+//! * native gradient: −∇G is always a descent direction
+//! * data sharding: partition + balance
+//! * KL nonnegativity, RNG stream independence
+
+use advgp::data::synth;
+use advgp::gp::featuremap::{EnsembleNystrom, FeatureMap, InducingChol, Nystrom, Rvm};
+use advgp::gp::{Theta, ThetaLayout};
+use advgp::kernel::ArdParams;
+use advgp::linalg::{cholesky_lower, spd_inverse, sym_eig, Mat};
+use advgp::opt::prox_update;
+use advgp::ps::DelayGate;
+use advgp::testing::{forall, gens, Config};
+use advgp::util::rng::Pcg64;
+
+fn cfg() -> Config {
+    Config::default()
+}
+
+fn rand_mat(rng: &mut Pcg64, r: usize, c: usize, scale: f64) -> Mat {
+    Mat::from_vec(r, c, (0..r * c).map(|_| rng.normal() * scale).collect())
+}
+
+#[test]
+fn prox_diag_positive_and_shrinks_kl() {
+    forall(
+        "prox positivity + KL contraction",
+        &cfg(),
+        |rng: &mut Pcg64| {
+            let m = 2 + rng.next_below(6) as usize;
+            let d = 1 + rng.next_below(4) as usize;
+            let layout = ThetaLayout::new(m, d);
+            let theta: Vec<f64> =
+                (0..layout.len()).map(|_| rng.normal() * 5.0).collect();
+            let gamma = rng.uniform(1e-4, 2.0);
+            (layout, theta, gamma)
+        },
+        |(layout, theta, gamma)| {
+            let mut th = theta.clone();
+            prox_update(layout, &mut th, *gamma);
+            for i in 0..layout.len() {
+                if layout.is_u_diag(i) {
+                    advgp::prop_assert!(th[i] > 0.0, "diag {i} = {}", th[i]);
+                }
+                if !layout.is_variational(i) {
+                    advgp::prop_assert!(th[i] == theta[i], "hyper {i} moved");
+                }
+            }
+            let mk = |data: &[f64]| Theta { layout: *layout, data: data.to_vec() }.kl();
+            advgp::prop_assert!(
+                mk(&th) <= mk(theta) + 1e-9,
+                "KL grew: {} -> {}",
+                mk(theta),
+                mk(&th)
+            );
+            Ok(())
+        },
+    );
+}
+
+#[test]
+fn feature_maps_keep_residual_psd() {
+    forall(
+        "K_nn − ΦΦᵀ ⪰ 0 for all §5 maps",
+        &Config { cases: 24, ..cfg() },
+        |rng: &mut Pcg64| {
+            let d = 1 + rng.next_below(4) as usize;
+            let m = 2 + rng.next_below(8) as usize;
+            let b = 8 + rng.next_below(16) as usize;
+            let params = ArdParams {
+                log_a0: rng.uniform(-0.5, 0.5),
+                log_eta: (0..d).map(|_| rng.uniform(-0.5, 0.5)).collect(),
+            };
+            let z = rand_mat(rng, m, d, 1.0);
+            let z2 = rand_mat(rng, m.max(2), d, 1.0);
+            let x = rand_mat(rng, b, d, 1.0);
+            let alpha: Vec<f64> = (0..m).map(|_| rng.uniform(0.0, 10.0)).collect();
+            (params, z, z2, x, alpha)
+        },
+        |(params, z, z2, x, alpha)| {
+            let maps: Vec<Box<dyn FeatureMap>> = vec![
+                Box::new(InducingChol::build(params, z.clone())),
+                Box::new(Nystrom::build(params, z.clone())),
+                Box::new(EnsembleNystrom::build(
+                    params,
+                    vec![z.clone(), z2.clone()],
+                )),
+                Box::new(Rvm::build(params, z.clone(), alpha)),
+            ];
+            let knn = advgp::kernel::cross(params, x, x);
+            for (i, map) in maps.iter().enumerate() {
+                let pb = map.phi(params, x);
+                let ppt = pb.phi.matmul(&pb.phi.transpose());
+                let mut resid = knn.clone();
+                resid.axpy(-1.0, &ppt);
+                let (w, _) = sym_eig(&resid);
+                let min = w.iter().cloned().fold(f64::INFINITY, f64::min);
+                advgp::prop_assert!(
+                    min > -1e-6 * params.a0_sq(),
+                    "map {i}: min eig {min}"
+                );
+            }
+            Ok(())
+        },
+    );
+}
+
+#[test]
+fn delay_gate_staleness_bounded_under_random_schedules() {
+    forall(
+        "gate invariant",
+        &Config { cases: 200, ..cfg() },
+        |rng: &mut Pcg64| {
+            let workers = 1 + rng.next_below(6) as usize;
+            let tau = rng.next_below(20);
+            let events: Vec<(usize, u64)> = (0..100)
+                .map(|_| (rng.next_below(workers as u64) as usize, rng.next_below(3)))
+                .collect();
+            (workers, tau, events)
+        },
+        |(workers, tau, events)| {
+            let mut gate = DelayGate::new(*workers, *tau);
+            let mut t: u64 = 0;
+            let mut last_pull = vec![0u64; *workers];
+            for (w, lag) in events {
+                let v = last_pull[*w].saturating_sub(*lag).min(t);
+                gate.record(*w, v);
+                while gate.permits(t) {
+                    if let Some(s) = gate.staleness(t) {
+                        advgp::prop_assert!(
+                            s <= *tau,
+                            "staleness {s} > tau {tau} at t={t}"
+                        );
+                    }
+                    t += 1;
+                    last_pull[*w] = t;
+                }
+            }
+            Ok(())
+        },
+    );
+}
+
+#[test]
+fn spd_roundtrips() {
+    forall(
+        "cholesky/inverse round-trips",
+        &Config { cases: 40, ..cfg() },
+        |rng: &mut Pcg64| {
+            let n = 1 + rng.next_below(20) as usize;
+            let a = rand_mat(rng, n, n, 1.0);
+            let mut s = a.transpose().matmul(&a);
+            for i in 0..n {
+                s[(i, i)] += 0.5 + n as f64 * 0.05;
+            }
+            s
+        },
+        |s| {
+            let n = s.rows;
+            let l = cholesky_lower(s).map_err(|e| e.to_string())?;
+            let back = l.matmul(&l.transpose());
+            advgp::prop_assert!(
+                back.max_abs_diff(s) < 1e-8 * (1.0 + s.frob_norm()),
+                "LLᵀ ≠ A"
+            );
+            let inv = spd_inverse(s).map_err(|e| e.to_string())?;
+            let prod = s.matmul(&inv);
+            advgp::prop_assert!(
+                prod.max_abs_diff(&Mat::eye(n)) < 1e-7 * (1.0 + s.frob_norm()),
+                "A·A⁻¹ ≠ I"
+            );
+            Ok(())
+        },
+    );
+}
+
+#[test]
+fn native_gradient_is_descent_direction() {
+    forall(
+        "−∇G is a descent direction",
+        &Config { cases: 20, ..cfg() },
+        |rng: &mut Pcg64| {
+            let m = 3 + rng.next_below(5) as usize;
+            let d = 2 + rng.next_below(3) as usize;
+            let seed = rng.next_u64();
+            (m, d, seed)
+        },
+        |(m, d, seed)| {
+            use advgp::grad::{native::NativeEngine, GradEngine};
+            let layout = ThetaLayout::new(*m, *d);
+            let mut rng = Pcg64::seeded(*seed);
+            let z = rand_mat(&mut rng, *m, *d, 0.8);
+            let mut th = Theta::init(layout, &z);
+            for v in th.mu_mut() {
+                *v = rng.normal() * 0.3;
+            }
+            let ds = synth::gp_draw(24, *d, 0.3, *seed);
+            let mut eng = NativeEngine::new(layout);
+            let r = eng.grad(&th.data, &ds.x, &ds.y);
+            let gnorm: f64 = r.grad.iter().map(|g| g * g).sum::<f64>().sqrt();
+            if gnorm < 1e-10 {
+                return Ok(());
+            }
+            let step = 1e-6 / gnorm;
+            let moved: Vec<f64> = th
+                .data
+                .iter()
+                .zip(&r.grad)
+                .map(|(t, g)| t - step * g)
+                .collect();
+            let r2 = eng.grad(&moved, &ds.x, &ds.y);
+            advgp::prop_assert!(
+                r2.value <= r.value + 1e-9 * r.value.abs(),
+                "uphill: {} -> {}",
+                r.value,
+                r2.value
+            );
+            Ok(())
+        },
+    );
+}
+
+#[test]
+fn dataset_shard_partition_properties() {
+    forall(
+        "shard partitioning",
+        &Config { cases: 60, ..cfg() },
+        |rng: &mut Pcg64| {
+            let n = 1 + rng.next_below(500) as usize;
+            let r = 1 + rng.next_below(16) as usize;
+            let seed = rng.next_u64();
+            (n, r.min(n), seed)
+        },
+        |(n, r, seed)| {
+            let ds = synth::friedman((*n).max(4), 4, 0.1, *seed);
+            let ds = ds.head(*n);
+            let shards = ds.shard(*r);
+            advgp::prop_assert!(shards.len() == *r, "shard count");
+            let total: usize = shards.iter().map(|s| s.n()).sum();
+            advgp::prop_assert!(total == ds.n(), "rows lost: {total} != {}", ds.n());
+            let sizes: Vec<usize> = shards.iter().map(|s| s.n()).collect();
+            let (mn, mx) = (
+                *sizes.iter().min().unwrap(),
+                *sizes.iter().max().unwrap(),
+            );
+            advgp::prop_assert!(mx - mn <= 1, "imbalance {sizes:?}");
+            Ok(())
+        },
+    );
+}
+
+#[test]
+fn rng_streams_do_not_collide() {
+    forall(
+        "independent streams",
+        &Config { cases: 30, ..cfg() },
+        gens::usize_in(0, 10_000),
+        |&seed| {
+            let mut a = Pcg64::new(seed as u64, 1);
+            let mut b = Pcg64::new(seed as u64, 2);
+            let xa: Vec<u64> = (0..16).map(|_| a.next_u64()).collect();
+            let xb: Vec<u64> = (0..16).map(|_| b.next_u64()).collect();
+            advgp::prop_assert!(xa != xb, "streams collided for seed {seed}");
+            Ok(())
+        },
+    );
+}
+
+#[test]
+fn kl_nonnegative_for_valid_u() {
+    forall(
+        "KL(q||p) >= 0",
+        &Config { cases: 80, ..cfg() },
+        |rng: &mut Pcg64| {
+            let m = 1 + rng.next_below(10) as usize;
+            let layout = ThetaLayout::new(m, 1);
+            let z = Mat::zeros(m, 1);
+            let mut th = Theta::init(layout, &z);
+            for v in th.mu_mut() {
+                *v = rng.normal() * 2.0;
+            }
+            let mut u = Mat::zeros(m, m);
+            for i in 0..m {
+                u[(i, i)] = rng.uniform(0.05, 3.0);
+                for j in i + 1..m {
+                    u[(i, j)] = rng.normal() * 0.3;
+                }
+            }
+            th.set_u_mat(&u);
+            th
+        },
+        |th| {
+            advgp::prop_assert!(th.kl() >= -1e-9, "KL = {}", th.kl());
+            Ok(())
+        },
+    );
+}
