@@ -7,18 +7,26 @@
 //! * K_mm factorization chain (chol + inverse + L⁻¹)
 //! * k-means init, prediction path
 //!
-//! Used by the performance pass; results recorded in EXPERIMENTS.md §Perf.
+//! Prints the human-readable table AND dumps machine-readable results
+//! to `BENCH_hotpath.json` (bench name → ns/iter plus the pool/thread
+//! configuration), so the perf trajectory is tracked across PRs.
+//! Thread count follows `ADVGP_THREADS` (default: all cores); rerun
+//! with `ADVGP_THREADS=1` for the serial baseline.
 
 use advgp::data::synth;
-use advgp::experiments::harness::bench;
-use advgp::gp::featuremap::{FeatureMap, InducingChol};
+use advgp::experiments::harness::{bench, BenchReport};
+use advgp::gp::featuremap::{FeatureMap, InducingChol, PhiBatch, PhiWorkspace};
 use advgp::gp::{SparseGp, Theta, ThetaLayout};
 use advgp::grad::chain::LChain;
 use advgp::grad::{native::NativeEngine, GradEngine};
 use advgp::opt::AdaDelta;
 use advgp::ps::server::apply_update;
 use advgp::runtime::{Manifest, XlaEngine};
+use advgp::util::json::Json;
+use advgp::util::pool;
 use advgp::util::rng::Pcg64;
+
+const OUT_PATH: &str = "BENCH_hotpath.json";
 
 fn main() {
     let (m, d, b) = (100usize, 8usize, 1024usize);
@@ -27,39 +35,44 @@ fn main() {
     let mut rng = Pcg64::seeded(5);
     let z = advgp::data::kmeans::kmeans(&ds.x, m, 10, &mut rng);
     let theta = Theta::init(layout, &z);
-    println!("hot-path microbenches: m={m} d={d} block={b}\n");
+    let threads = pool::threads();
+    println!("hot-path microbenches: m={m} d={d} block={b} threads={threads}\n");
+    let mut reports: Vec<BenchReport> = Vec::new();
 
-    // L3-side forward: fused feature map (the Pallas kernel's Rust twin).
+    // L3-side forward: fused feature map (the Pallas kernel's Rust twin),
+    // workspace-reusing path (zero allocation in steady state).
     let map = InducingChol::build(&theta.ard(), theta.z_mat());
-    bench("phi_forward (K_bm+Phi+ktilde, 1024x100)", 3, 1.0, || {
-        let pb = map.phi(&theta.ard(), &ds.x);
+    let mut ws = PhiWorkspace::new();
+    let mut pb = PhiBatch::empty();
+    reports.push(bench("phi_forward (K_bm+Phi+ktilde, 1024x100)", 3, 1.0, || {
+        map.phi_into(&theta.ard(), &ds.x, &mut ws, &mut pb);
         std::hint::black_box(pb.ktilde.len());
-    });
+    }));
 
     // Native gradient engine per block.
     let mut nat = NativeEngine::new(layout);
-    bench("native_grad (1024 rows)", 2, 1.5, || {
+    reports.push(bench("native_grad (1024 rows)", 2, 1.5, || {
         let r = nat.grad(&theta.data, &ds.x, &ds.y);
         std::hint::black_box(r.value);
-    });
+    }));
 
     // XLA (JAX+Pallas artifact) engine per block, if artifacts exist.
     let man_dir = std::path::Path::new(env!("CARGO_MANIFEST_DIR")).join("artifacts");
     match Manifest::load(&man_dir).and_then(|man| XlaEngine::from_manifest(&man, m, d)) {
         Ok(mut xla) => {
-            bench("xla_grad (1024 rows, m=100 d=8 artifact)", 2, 1.5, || {
+            reports.push(bench("xla_grad (1024 rows, m=100 d=8 artifact)", 2, 1.5, || {
                 let r = xla.grad(&theta.data, &ds.x, &ds.y);
                 std::hint::black_box(r.value);
-            });
+            }));
         }
         Err(e) => println!("(skipping xla_grad: {e:#})"),
     }
 
     // K_mm factorization chain (once per θ per worker iteration).
-    bench("lchain_build (chol+inv+Linv, m=100)", 3, 1.0, || {
+    reports.push(bench("lchain_build (chol+inv+Linv, m=100)", 3, 1.0, || {
         let c = LChain::build(theta.ard(), theta.z_mat());
         std::hint::black_box(c.chol_l.data.len());
-    });
+    }));
 
     // Server update: ADADELTA + prox, serial vs sharded.
     let dim = layout.len();
@@ -67,7 +80,7 @@ fn main() {
     for shards in [1usize, 2, 4, 8] {
         let mut th = theta.data.clone();
         let mut ada = AdaDelta::default_for(dim);
-        bench(
+        reports.push(bench(
             &format!("server_update dim={dim} shards={shards}"),
             3,
             0.5,
@@ -75,21 +88,57 @@ fn main() {
                 apply_update(&layout, &mut th, &mut ada, &grad, 0.5, 0.1, shards);
                 std::hint::black_box(th[0]);
             },
-        );
+        ));
     }
 
     // Prediction path (evaluator cadence driver).
     let gp = SparseGp::new(theta.clone());
-    bench("predict (1024 rows)", 3, 1.0, || {
+    reports.push(bench("predict (1024 rows)", 3, 1.0, || {
         let (mean, _var) = gp.predict(&ds.x);
         std::hint::black_box(mean.len());
-    });
+    }));
 
     // k-means init (run once per experiment).
     let big = synth::flight_like(20_000, 9);
-    bench("kmeans m=100 on 20K rows (5 iters)", 1, 2.0, || {
+    reports.push(bench("kmeans m=100 on 20K rows (5 iters)", 1, 2.0, || {
         let mut r = Pcg64::seeded(11);
         let c = advgp::data::kmeans::kmeans(&big.x, m, 5, &mut r);
         std::hint::black_box(c.data.len());
-    });
+    }));
+
+    write_json(&reports, threads, m, d, b);
+    println!("\nwrote {} ({} benches, threads={threads})", OUT_PATH, reports.len());
+}
+
+/// Dump `BENCH_hotpath.json`: schema versioned, one entry per bench
+/// with ns/iter stats plus the configuration that produced them.
+fn write_json(reports: &[BenchReport], threads: usize, m: usize, d: usize, b: usize) {
+    let benches: Vec<Json> = reports
+        .iter()
+        .map(|r| {
+            Json::obj(vec![
+                ("name", Json::Str(r.name.clone())),
+                ("mean_ns", Json::Num(r.stats.mean() * 1e9)),
+                ("std_ns", Json::Num(r.stats.std() * 1e9)),
+                ("min_ns", Json::Num(r.stats.min * 1e9)),
+                ("iters", Json::Num(r.iters as f64)),
+            ])
+        })
+        .collect();
+    let doc = Json::obj(vec![
+        ("schema", Json::Num(1.0)),
+        ("bench", Json::Str("perf_hotpath".into())),
+        ("threads", Json::Num(threads as f64)),
+        ("m", Json::Num(m as f64)),
+        ("d", Json::Num(d as f64)),
+        ("block", Json::Num(b as f64)),
+        (
+            "par_min_flops",
+            Json::Num(advgp::linalg::par_min_flops() as f64),
+        ),
+        ("benches", Json::Arr(benches)),
+    ]);
+    if let Err(e) = std::fs::write(OUT_PATH, format!("{doc}\n")) {
+        eprintln!("failed to write {OUT_PATH}: {e}");
+    }
 }

@@ -1,7 +1,14 @@
 //! k-means++ clustering for inducing-point initialization (paper §6.3
 //! initializes Z from k-means centers of a training subsample).
+//!
+//! The O(n·k·d) assignment step (and the k-means++ distance refresh)
+//! runs in parallel row blocks on the global pool above the linalg flop
+//! threshold; each point's nearest-center computation is independent,
+//! so results are identical at any thread count.  Seeding draws and the
+//! O(n·d) center accumulation stay serial (RNG order must be stable).
 
-use crate::linalg::Mat;
+use crate::linalg::{should_par, Mat};
+use crate::util::pool;
 use crate::util::rng::Pcg64;
 
 fn sq_dist(a: &[f64], b: &[f64]) -> f64 {
@@ -37,16 +44,27 @@ pub fn kmeans(x: &Mat, k: usize, iters: usize, rng: &mut Pcg64) -> Mat {
             pick = rng.next_below(n as u64) as usize;
         }
         centers.row_mut(c).copy_from_slice(x.row(pick));
-        for i in 0..n {
-            d2[i] = d2[i].min(sq_dist(x.row(i), centers.row(c)));
+        let crow = centers.row(c);
+        if should_par(n * d) {
+            pool::parallel_rows_mut(&mut d2, 1, n, pool::block_size(n), &|r0, blk| {
+                for (i, v) in blk.iter_mut().enumerate() {
+                    *v = v.min(sq_dist(x.row(r0 + i), crow));
+                }
+            });
+        } else {
+            for (i, v) in d2.iter_mut().enumerate() {
+                *v = v.min(sq_dist(x.row(i), crow));
+            }
         }
     }
 
     // ---- Lloyd iterations ----
     let mut assign = vec![0usize; n];
     for _ in 0..iters {
-        let mut changed = false;
-        for i in 0..n {
+        // Assignment: each point independently finds its nearest center
+        // (the O(n·k·d) bulk of an iteration) — parallel row blocks.
+        let changed = std::sync::atomic::AtomicBool::new(false);
+        let assign_point = |i: usize, slot: &mut usize| {
             let xi = x.row(i);
             let mut best = 0;
             let mut best_d = f64::INFINITY;
@@ -57,11 +75,23 @@ pub fn kmeans(x: &Mat, k: usize, iters: usize, rng: &mut Pcg64) -> Mat {
                     best = c;
                 }
             }
-            if assign[i] != best {
-                assign[i] = best;
-                changed = true;
+            if *slot != best {
+                *slot = best;
+                changed.store(true, std::sync::atomic::Ordering::Relaxed);
+            }
+        };
+        if should_par(n * k * d) {
+            pool::parallel_rows_mut(&mut assign, 1, n, pool::block_size(n), &|r0, blk| {
+                for (i, slot) in blk.iter_mut().enumerate() {
+                    assign_point(r0 + i, slot);
+                }
+            });
+        } else {
+            for (i, slot) in assign.iter_mut().enumerate() {
+                assign_point(i, slot);
             }
         }
+        let changed = changed.into_inner();
         let mut sums = Mat::zeros(k, d);
         let mut counts = vec![0usize; k];
         for i in 0..n {

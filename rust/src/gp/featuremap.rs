@@ -18,7 +18,7 @@
 //!   clamped to `α_i ≤ 1/λ_max(K_mm)` so `diag(α) ⪯ K_mm^{-1}` keeps
 //!   K_nn − ΦΦ^T ⪰ 0.
 
-use crate::kernel::{cross, kmm, ArdParams, DEFAULT_JITTER};
+use crate::kernel::{cross_into_ws, kmm, ArdParams, CrossScratch, DEFAULT_JITTER};
 use crate::linalg::{cholesky_lower, spd_inverse, sym_eig, Mat};
 
 /// Batch output of a feature map.
@@ -29,19 +29,64 @@ pub struct PhiBatch {
     pub ktilde: Vec<f64>,
 }
 
+impl PhiBatch {
+    /// Empty batch for use as a reusable `phi_into` target.
+    pub fn empty() -> Self {
+        Self { phi: Mat::empty(), ktilde: Vec::new() }
+    }
+}
+
+/// Reusable scratch for [`FeatureMap::phi_into`] — holds the K_bm
+/// buffer plus kernel scratch so callers that keep a workspace across
+/// batches (the gradient engine and the perf benches today; see
+/// `grad::native::LaneWs` for the same pattern) run the forward pass
+/// with no steady-state heap allocation.  `SparseGp::predict` still
+/// uses the allocating [`FeatureMap::phi`]: it rebuilds the whole map
+/// per θ snapshot on the cadenced evaluator, where the O(m³) factor
+/// build dominates any per-call buffer churn.
+pub struct PhiWorkspace {
+    k_bm: Mat,
+    cross: CrossScratch,
+    /// Per-group staging buffer (ensembles only).
+    tmp: Mat,
+}
+
+impl PhiWorkspace {
+    pub fn new() -> Self {
+        Self { k_bm: Mat::empty(), cross: CrossScratch::new(), tmp: Mat::empty() }
+    }
+}
+
+impl Default for PhiWorkspace {
+    fn default() -> Self {
+        Self::new()
+    }
+}
+
 /// A feature map bound to (kernel params, inducing inputs).
 pub trait FeatureMap {
     /// Feature dimension p (rows of w; = m except for ensembles).
     fn dim(&self) -> usize;
 
-    /// Evaluate the map on a batch X [B, d].
-    fn phi(&self, params: &ArdParams, x: &Mat) -> PhiBatch;
+    /// Evaluate the map on a batch X [B, d] into caller-owned buffers
+    /// (allocation-free once `ws`/`out` are warm).
+    fn phi_into(&self, params: &ArdParams, x: &Mat, ws: &mut PhiWorkspace, out: &mut PhiBatch);
+
+    /// Evaluate the map on a batch X [B, d] (allocating convenience
+    /// wrapper around [`FeatureMap::phi_into`]).
+    fn phi(&self, params: &ArdParams, x: &Mat) -> PhiBatch {
+        let mut ws = PhiWorkspace::new();
+        let mut out = PhiBatch::empty();
+        self.phi_into(params, x, &mut ws, &mut out);
+        out
+    }
 }
 
-fn ktilde_from(phi: &Mat, a0_sq: f64) -> Vec<f64> {
-    (0..phi.rows)
-        .map(|i| a0_sq - phi.row(i).iter().map(|v| v * v).sum::<f64>())
-        .collect()
+fn ktilde_into(phi: &Mat, a0_sq: f64, out: &mut Vec<f64>) {
+    out.resize(phi.rows, 0.0);
+    for (i, slot) in out.iter_mut().enumerate() {
+        *slot = a0_sq - phi.row(i).iter().map(|v| v * v).sum::<f64>();
+    }
 }
 
 /// eq. (11): φ(x) = L^T k_m(x), K_mm^{-1} = L L^T.
@@ -65,11 +110,11 @@ impl FeatureMap for InducingChol {
         self.z.rows
     }
 
-    fn phi(&self, params: &ArdParams, x: &Mat) -> PhiBatch {
-        let k_bm = cross(params, x, &self.z);
-        let phi = k_bm.matmul(&self.chol_l);
-        let ktilde = ktilde_from(&phi, params.a0_sq());
-        PhiBatch { phi, ktilde }
+    fn phi_into(&self, params: &ArdParams, x: &Mat, ws: &mut PhiWorkspace, out: &mut PhiBatch) {
+        cross_into_ws(params, x, &self.z, &mut ws.k_bm, &mut ws.cross);
+        // L = chol(K_mm^{-1}) is lower triangular: structural kernel.
+        ws.k_bm.mul_tril_into(&self.chol_l, &mut out.phi);
+        ktilde_into(&out.phi, params.a0_sq(), &mut out.ktilde);
     }
 }
 
@@ -101,11 +146,10 @@ impl FeatureMap for Nystrom {
         self.z.rows
     }
 
-    fn phi(&self, params: &ArdParams, x: &Mat) -> PhiBatch {
-        let k_bm = cross(params, x, &self.z);
-        let phi = k_bm.matmul(&self.w);
-        let ktilde = ktilde_from(&phi, params.a0_sq());
-        PhiBatch { phi, ktilde }
+    fn phi_into(&self, params: &ArdParams, x: &Mat, ws: &mut PhiWorkspace, out: &mut PhiBatch) {
+        cross_into_ws(params, x, &self.z, &mut ws.k_bm, &mut ws.cross);
+        ws.k_bm.matmul_into(&self.w, &mut out.phi);
+        ktilde_into(&out.phi, params.a0_sq(), &mut out.ktilde);
     }
 }
 
@@ -130,26 +174,27 @@ impl FeatureMap for EnsembleNystrom {
         self.groups.iter().map(|g| g.dim()).sum()
     }
 
-    fn phi(&self, params: &ArdParams, x: &Mat) -> PhiBatch {
+    fn phi_into(&self, params: &ArdParams, x: &Mat, ws: &mut PhiWorkspace, out: &mut PhiBatch) {
         let q = self.groups.len();
         let scale = 1.0 / (q as f64).sqrt();
         let b = x.rows;
         let p = self.dim();
-        let mut phi = Mat::zeros(b, p);
+        out.phi.resize(b, p);
         let mut col0 = 0;
         for g in &self.groups {
-            let pb = g.phi(params, x);
+            let gd = g.dim();
+            cross_into_ws(params, x, &g.z, &mut ws.k_bm, &mut ws.cross);
+            ws.k_bm.matmul_into(&g.w, &mut ws.tmp);
             for r in 0..b {
-                let src = pb.phi.row(r);
-                let dst = phi.row_mut(r);
-                for (c, v) in src.iter().enumerate() {
-                    dst[col0 + c] = scale * v;
+                let src = ws.tmp.row(r);
+                let dst = &mut out.phi.row_mut(r)[col0..col0 + gd];
+                for (d, s) in dst.iter_mut().zip(src) {
+                    *d = scale * s;
                 }
             }
-            col0 += g.dim();
+            col0 += gd;
         }
-        let ktilde = ktilde_from(&phi, params.a0_sq());
-        PhiBatch { phi, ktilde }
+        ktilde_into(&out.phi, params.a0_sq(), &mut out.ktilde);
     }
 }
 
@@ -180,16 +225,15 @@ impl FeatureMap for Rvm {
         self.z.rows
     }
 
-    fn phi(&self, params: &ArdParams, x: &Mat) -> PhiBatch {
-        let mut phi = cross(params, x, &self.z);
-        for r in 0..phi.rows {
-            let row = phi.row_mut(r);
+    fn phi_into(&self, params: &ArdParams, x: &Mat, ws: &mut PhiWorkspace, out: &mut PhiBatch) {
+        cross_into_ws(params, x, &self.z, &mut out.phi, &mut ws.cross);
+        for r in 0..out.phi.rows {
+            let row = out.phi.row_mut(r);
             for (c, v) in row.iter_mut().enumerate() {
                 *v *= self.sqrt_alpha[c];
             }
         }
-        let ktilde = ktilde_from(&phi, params.a0_sq());
-        PhiBatch { phi, ktilde }
+        ktilde_into(&out.phi, params.a0_sq(), &mut out.ktilde);
     }
 }
 
@@ -272,6 +316,36 @@ mod tests {
         let alpha = vec![1e6; 6];
         let map = Rvm::build(&params, z, &alpha);
         assert_residual_psd(&map, &params, &x);
+    }
+
+    #[test]
+    fn phi_into_matches_phi_and_reuses_buffers() {
+        let mut rng = Pcg64::seeded(46);
+        let params = ArdParams { log_a0: 0.1, log_eta: vec![0.2, -0.1] };
+        let z = rand_mat(&mut rng, 6, 2);
+        let g2 = rand_mat(&mut rng, 4, 2);
+        let maps: Vec<Box<dyn FeatureMap>> = vec![
+            Box::new(InducingChol::build(&params, z.clone())),
+            Box::new(Nystrom::build(&params, z.clone())),
+            Box::new(EnsembleNystrom::build(&params, vec![z.clone(), g2])),
+            Box::new(Rvm::build(&params, z, &vec![0.3; 6])),
+        ];
+        let xa = rand_mat(&mut rng, 17, 2);
+        let xb = rand_mat(&mut rng, 5, 2);
+        for map in &maps {
+            let mut ws = PhiWorkspace::new();
+            let mut out = PhiBatch::empty();
+            // Warm on one shape, then evaluate another: results must
+            // match the allocating path exactly.
+            map.phi_into(&params, &xa, &mut ws, &mut out);
+            map.phi_into(&params, &xb, &mut ws, &mut out);
+            let want = map.phi(&params, &xb);
+            assert_eq!(out.phi.data, want.phi.data);
+            assert_eq!(out.ktilde, want.ktilde);
+            let cap = out.phi.data.capacity();
+            map.phi_into(&params, &xb, &mut ws, &mut out);
+            assert_eq!(out.phi.data.capacity(), cap, "phi_into reallocated");
+        }
     }
 
     #[test]

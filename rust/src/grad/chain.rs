@@ -119,7 +119,7 @@ impl LChain {
         }
         let g3_z = g3.matmul(&self.z);
         let g3_rowsum: Vec<f64> = (0..m).map(|j| g3.row(j).iter().sum()).collect();
-        let g3_colsum = g3.tr_matvec(&vec![1.0; m]);
+        let g3_colsum = g3.col_sums();
         let mut dlog_eta = vec![0.0; d];
         for k in 0..d {
             let mut q = 0.0;

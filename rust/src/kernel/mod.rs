@@ -4,7 +4,8 @@
 //!
 //! Mirrors `python/compile/kernels/ref.py` (the f32 JAX oracle) in f64.
 
-use crate::linalg::Mat;
+use crate::linalg::{dot, Mat};
+use crate::util::pool;
 
 /// Hyperparameters of the ARD kernel, stored in log space.
 #[derive(Clone, Debug, PartialEq)]
@@ -42,72 +43,143 @@ pub fn k_pair(p: &ArdParams, x: &[f64], z: &[f64]) -> f64 {
     p.a0_sq() * (-0.5 * d2).exp()
 }
 
-/// Cross-covariance K[X, Z] of shape [n, m]; rows of `x`/`z` are points.
+/// Reusable scratch for [`cross_into_ws`]: η-scaled inducing rows and
+/// their η-norms.  Holding one per engine/worker makes the batched
+/// kernel evaluation allocation-free in steady state.
+#[derive(Clone, Debug)]
+pub struct CrossScratch {
+    /// ze[j, k] = η_k z[j, k].
+    ze: Mat,
+    /// zn[j] = Σ_k η_k z[j, k]².
+    zn: Vec<f64>,
+}
+
+impl CrossScratch {
+    pub fn new() -> Self {
+        Self { ze: Mat::empty(), zn: Vec::new() }
+    }
+}
+
+impl Default for CrossScratch {
+    fn default() -> Self {
+        Self::new()
+    }
+}
+
+/// Rough cost model for one K[X, Z] evaluation: d multiply-adds plus an
+/// exp (~16 flops) per pair.  Drives the serial/parallel dispatch.
+fn cross_flops(rows: usize, m: usize, d: usize) -> usize {
+    rows * m * (d + 16)
+}
+
+/// Cross-covariance K[X, Z] of shape [n, m] into a caller-owned buffer;
+/// rows of `x`/`z` are points.
 ///
 /// Uses the dot-product expansion `‖x−z‖²_η = ‖x‖²_η + ‖z‖²_η − 2⟨x,z⟩_η`
-/// with the inner products computed by the blocked matmul — ~2× faster
-/// than the naive per-pair loop (vectorizes) at identical math; tiny
-/// negative d² from cancellation is clamped to 0.
-pub fn cross(p: &ArdParams, x: &Mat, z: &Mat) -> Mat {
+/// with the z-side η-scaling hoisted into `ws` — ~2× faster than the
+/// naive per-pair loop (the inner product vectorizes) at identical
+/// math; tiny negative d² from cancellation is clamped to 0.  Rows of
+/// the output are computed in parallel blocks above the linalg flop
+/// threshold; each row's arithmetic is independent of the thread count.
+pub fn cross_into_ws(p: &ArdParams, x: &Mat, z: &Mat, out: &mut Mat, ws: &mut CrossScratch) {
     assert_eq!(x.cols, z.cols);
     assert_eq!(x.cols, p.dim());
     let eta = p.eta();
     let a0_sq = p.a0_sq();
     let d = eta.len();
-    let sqrt_eta: Vec<f64> = eta.iter().map(|e| e.sqrt()).collect();
-    // Scale rows by sqrt(η) once; all distance work becomes Euclidean.
-    let scale_rows = |m: &Mat| -> Mat {
-        let mut s = m.clone();
-        for r in 0..s.rows {
-            let row = s.row_mut(r);
+    let m = z.rows;
+    out.resize(x.rows, m);
+    if x.rows == 0 || m == 0 {
+        return;
+    }
+    // z side: scale once per call (m×d, small next to the [n, m] output).
+    ws.ze.resize(m, d);
+    ws.zn.resize(m, 0.0);
+    for j in 0..m {
+        let zrow = z.row(j);
+        let erow = ws.ze.row_mut(j);
+        let mut n2 = 0.0;
+        for c in 0..d {
+            erow[c] = eta[c] * zrow[c];
+            n2 += eta[c] * zrow[c] * zrow[c];
+        }
+        ws.zn[j] = n2;
+    }
+    let ze = &ws.ze;
+    let zn = &ws.zn;
+    let eta = &eta;
+    let kernel = |r0: usize, blk: &mut [f64]| {
+        for (i, orow) in blk.chunks_mut(m).enumerate() {
+            let xrow = x.row(r0 + i);
+            let mut xn = 0.0;
             for c in 0..d {
-                row[c] *= sqrt_eta[c];
+                xn += eta[c] * xrow[c] * xrow[c];
+            }
+            for (j, v) in orow.iter_mut().enumerate() {
+                // dot(x, η∘z) = ⟨x, z⟩_η.
+                let d2 = (xn + zn[j] - 2.0 * dot(xrow, ze.row(j))).max(0.0);
+                *v = a0_sq * (-0.5 * d2).exp();
             }
         }
-        s
     };
-    let xs = scale_rows(x);
-    let zs = scale_rows(z);
-    let sq_norms = |m: &Mat| -> Vec<f64> {
-        (0..m.rows)
-            .map(|r| m.row(r).iter().map(|v| v * v).sum())
-            .collect()
-    };
-    let xn = sq_norms(&xs);
-    let zn = sq_norms(&zs);
-    let mut k = xs.matmul(&zs.transpose()); // ⟨x, z⟩_η
-    for i in 0..x.rows {
-        let krow = k.row_mut(i);
-        let xi = xn[i];
-        for (j, v) in krow.iter_mut().enumerate() {
-            let d2 = (xi + zn[j] - 2.0 * *v).max(0.0);
-            *v = a0_sq * (-0.5 * d2).exp();
-        }
+    if crate::linalg::should_par(cross_flops(x.rows, m, d)) {
+        pool::parallel_rows_mut(&mut out.data, m, x.rows, pool::block_size(x.rows), &|r0, blk| {
+            kernel(r0, blk)
+        });
+    } else {
+        kernel(0, &mut out.data);
     }
-    k
+}
+
+/// Cross-covariance K[X, Z] into a caller-owned buffer (temporary
+/// scratch allocated internally).
+pub fn cross_into(p: &ArdParams, x: &Mat, z: &Mat, out: &mut Mat) {
+    let mut ws = CrossScratch::new();
+    cross_into_ws(p, x, z, out, &mut ws);
+}
+
+/// Cross-covariance K[X, Z] of shape [n, m]; rows of `x`/`z` are points.
+pub fn cross(p: &ArdParams, x: &Mat, z: &Mat) -> Mat {
+    let mut out = Mat::empty();
+    cross_into(p, x, z, &mut out);
+    out
 }
 
 /// Exact per-pair evaluation (no dot-product expansion).  Used for the
 /// small m×m inducing covariance, where `chol(inv(K_mm))` amplifies the
 /// cancellation error of the fast form by K_mm's condition number.
+/// Parallel over row blocks of `x` above the flop threshold.
 pub fn cross_pairwise(p: &ArdParams, x: &Mat, z: &Mat) -> Mat {
     assert_eq!(x.cols, z.cols);
     assert_eq!(x.cols, p.dim());
     let eta = p.eta();
     let a0_sq = p.a0_sq();
-    let mut k = Mat::zeros(x.rows, z.rows);
-    for i in 0..x.rows {
-        let xi = x.row(i);
-        let krow = k.row_mut(i);
-        for j in 0..z.rows {
-            let zj = z.row(j);
-            let mut d2 = 0.0;
-            for c in 0..eta.len() {
-                let diff = xi[c] - zj[c];
-                d2 += diff * diff * eta[c];
+    let m = z.rows;
+    let mut k = Mat::zeros(x.rows, m);
+    if x.rows == 0 || m == 0 {
+        return k;
+    }
+    let eta = &eta;
+    let kernel = |r0: usize, blk: &mut [f64]| {
+        for (i, krow) in blk.chunks_mut(m).enumerate() {
+            let xi = x.row(r0 + i);
+            for (j, slot) in krow.iter_mut().enumerate() {
+                let zj = z.row(j);
+                let mut d2 = 0.0;
+                for c in 0..eta.len() {
+                    let diff = xi[c] - zj[c];
+                    d2 += diff * diff * eta[c];
+                }
+                *slot = a0_sq * (-0.5 * d2).exp();
             }
-            krow[j] = a0_sq * (-0.5 * d2).exp();
         }
+    };
+    if crate::linalg::should_par(cross_flops(x.rows, m, eta.len())) {
+        pool::parallel_rows_mut(&mut k.data, m, x.rows, pool::block_size(x.rows), &|r0, blk| {
+            kernel(r0, blk)
+        });
+    } else {
+        kernel(0, &mut k.data);
     }
     k
 }

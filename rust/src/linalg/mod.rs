@@ -1,9 +1,27 @@
 //! Dense linear-algebra substrate (offline build: no BLAS/nalgebra).
 //!
 //! Row-major `f64` matrices sized for the GP working set (m ≤ a few
-//! hundred): blocked matmul, Cholesky, triangular solves, inverses and a
-//! Jacobi symmetric eigendecomposition (for the Nyström/EigenGP feature
-//! maps, paper eq. 21–22).
+//! hundred, batches up to a few thousand rows): cache-blocked,
+//! row-parallel matmul family, Cholesky, triangular solves, inverses
+//! and a Jacobi symmetric eigendecomposition (for the Nyström/EigenGP
+//! feature maps, paper eq. 21–22).
+//!
+//! # Execution model
+//!
+//! Every product has an allocation-free `*_into` form plus a
+//! convenience allocating wrapper.  Ops whose multiply count reaches
+//! [`par_min_flops`] are dispatched over the global thread pool
+//! ([`crate::util::pool`]) in contiguous *output-row blocks*; smaller
+//! ops run inline on the caller.  Both paths execute the **same
+//! kernel** over row ranges, and each output row's accumulation order
+//! is fixed (ascending k, tiled), so results are bitwise identical at
+//! any thread count or budget.
+//!
+//! Dense kernels carry no `== 0.0` skip guards (they were branch
+//! mispredict fodder on dense GP matrices); structural sparsity is
+//! exploited instead by the dedicated triangular kernels
+//! ([`triu_matmul_into`], [`Mat::mul_tril_into`], …) used for the
+//! paper's `triu[U]` and Cholesky-factor products.
 
 mod chol;
 mod eig;
@@ -11,8 +29,40 @@ mod eig;
 pub use chol::{cholesky_lower, solve_lower, solve_upper, spd_inverse, CholError};
 pub use eig::sym_eig;
 
+use crate::util::pool;
 use std::fmt;
 use std::ops::{Index, IndexMut};
+use std::sync::atomic::{AtomicUsize, Ordering};
+
+/// Default serial-fallback threshold: ops below this many multiplies
+/// are not worth a pool dispatch (~20 µs of serial work).
+pub const DEFAULT_PAR_MIN_FLOPS: usize = 1 << 16;
+
+static PAR_MIN_FLOPS: AtomicUsize = AtomicUsize::new(DEFAULT_PAR_MIN_FLOPS);
+
+/// Current serial-fallback threshold (multiply count).
+pub fn par_min_flops() -> usize {
+    PAR_MIN_FLOPS.load(Ordering::Relaxed)
+}
+
+/// Override the serial-fallback threshold (1 forces parallel dispatch
+/// for every op — used by the equivalence tests and benches).
+pub fn set_par_min_flops(n: usize) {
+    PAR_MIN_FLOPS.store(n.max(1), Ordering::Relaxed);
+}
+
+/// The crate-wide serial/parallel dispatch gate: parallelize only when
+/// the op's multiply count clears the threshold AND this thread may
+/// actually fan out.  Shared by `kernel` and `data::kmeans` so the
+/// gating policy lives in one place.
+#[inline]
+pub(crate) fn should_par(flops: usize) -> bool {
+    flops >= par_min_flops() && pool::effective_parallelism() > 1
+}
+
+/// K-dimension tile: keeps the streamed operand's tile resident in L1/L2
+/// across an output-row block without changing accumulation order.
+const KC_TILE: usize = 64;
 
 /// Dense row-major matrix.
 #[derive(Clone, PartialEq)]
@@ -39,9 +89,246 @@ impl fmt::Debug for Mat {
     }
 }
 
+// ---------------------------------------------------------------------
+// Row-range kernels.  Each computes a contiguous block of OUTPUT rows;
+// the serial path runs them over the full range, the parallel path over
+// disjoint blocks.  Per-element accumulation order (ascending k) is
+// identical either way.
+// ---------------------------------------------------------------------
+
+/// Rows [r0, r0+rows) of C = A·B (ikj, k-tiled).
+fn matmul_rows(a: &Mat, b: &Mat, r0: usize, rows: usize, out: &mut [f64]) {
+    let n = b.cols;
+    debug_assert_eq!(out.len(), rows * n);
+    for v in out.iter_mut() {
+        *v = 0.0;
+    }
+    let mut k0 = 0;
+    while k0 < a.cols {
+        let k1 = (k0 + KC_TILE).min(a.cols);
+        for i in 0..rows {
+            let arow = &a.row(r0 + i)[k0..k1];
+            let crow = &mut out[i * n..(i + 1) * n];
+            for (k, &aik) in arow.iter().enumerate() {
+                let brow = b.row(k0 + k);
+                for (j, &bkj) in brow.iter().enumerate() {
+                    crow[j] += aik * bkj;
+                }
+            }
+        }
+        k0 = k1;
+    }
+}
+
+/// Rows [i0, i0+rows) of C = Aᵀ·B (k-outer; streams both operands).
+fn tr_matmul_rows(a: &Mat, b: &Mat, i0: usize, rows: usize, out: &mut [f64]) {
+    let n = b.cols;
+    debug_assert_eq!(out.len(), rows * n);
+    for v in out.iter_mut() {
+        *v = 0.0;
+    }
+    for k in 0..a.rows {
+        let arow = a.row(k);
+        let brow = b.row(k);
+        for i in 0..rows {
+            let aki = arow[i0 + i];
+            let crow = &mut out[i * n..(i + 1) * n];
+            for (j, &bkj) in brow.iter().enumerate() {
+                crow[j] += aki * bkj;
+            }
+        }
+    }
+}
+
+/// Rows [i0, i0+rows) of G = AᵀA, upper triangle only (j ≥ global i).
+fn gram_rows(a: &Mat, i0: usize, rows: usize, out: &mut [f64]) {
+    let n = a.cols;
+    debug_assert_eq!(out.len(), rows * n);
+    for v in out.iter_mut() {
+        *v = 0.0;
+    }
+    for r in 0..a.rows {
+        let row = a.row(r);
+        for i in 0..rows {
+            let gi = i0 + i;
+            let xi = row[gi];
+            let orow = &mut out[i * n..(i + 1) * n];
+            for j in gi..n {
+                orow[j] += xi * row[j];
+            }
+        }
+    }
+}
+
+/// Rows [r0, r0+rows) of y = A·x.
+fn matvec_rows(a: &Mat, x: &[f64], r0: usize, rows: usize, out: &mut [f64]) {
+    for (i, v) in out.iter_mut().enumerate().take(rows) {
+        *v = dot(a.row(r0 + i), x);
+    }
+}
+
+/// Columns [c0, c0+cols) of y = Aᵀ·x.
+fn tr_matvec_cols(a: &Mat, x: &[f64], c0: usize, cols: usize, out: &mut [f64]) {
+    for v in out.iter_mut() {
+        *v = 0.0;
+    }
+    for r in 0..a.rows {
+        let xr = x[r];
+        let arow = &a.row(r)[c0..c0 + cols];
+        for (c, &v) in arow.iter().enumerate() {
+            out[c] += xr * v;
+        }
+    }
+}
+
+/// Columns [c0, c0+cols) of s_j = Σ_i A[i, j].
+fn col_sums_cols(a: &Mat, c0: usize, cols: usize, out: &mut [f64]) {
+    for v in out.iter_mut() {
+        *v = 0.0;
+    }
+    for r in 0..a.rows {
+        let arow = &a.row(r)[c0..c0 + cols];
+        for (c, &v) in arow.iter().enumerate() {
+            out[c] += v;
+        }
+    }
+}
+
+/// Rows [r0, r0+rows) of C = U·B with U upper triangular (k ≥ i).
+fn triu_matmul_rows(u: &Mat, b: &Mat, r0: usize, rows: usize, out: &mut [f64]) {
+    let n = b.cols;
+    debug_assert_eq!(out.len(), rows * n);
+    for v in out.iter_mut() {
+        *v = 0.0;
+    }
+    for i in 0..rows {
+        let gi = r0 + i;
+        let urow = u.row(gi);
+        let crow = &mut out[i * n..(i + 1) * n];
+        for k in gi..u.cols {
+            let uik = urow[k];
+            let brow = b.row(k);
+            for (j, &bkj) in brow.iter().enumerate() {
+                crow[j] += uik * bkj;
+            }
+        }
+    }
+}
+
+/// Rows [r0, r0+rows) of C = A·L with L lower triangular (j ≤ k).
+fn mul_tril_rows(a: &Mat, l: &Mat, r0: usize, rows: usize, out: &mut [f64]) {
+    let n = l.cols;
+    debug_assert_eq!(out.len(), rows * n);
+    for v in out.iter_mut() {
+        *v = 0.0;
+    }
+    for i in 0..rows {
+        let arow = a.row(r0 + i);
+        let crow = &mut out[i * n..(i + 1) * n];
+        for (k, &aik) in arow.iter().enumerate() {
+            let lrow = &l.row(k)[..=k];
+            for (j, &lkj) in lrow.iter().enumerate() {
+                crow[j] += aik * lkj;
+            }
+        }
+    }
+}
+
+/// Rows [r0, r0+rows) of C = A·U with U upper triangular (j ≥ k).
+fn mul_triu_rows(a: &Mat, u: &Mat, r0: usize, rows: usize, out: &mut [f64]) {
+    let n = u.cols;
+    debug_assert_eq!(out.len(), rows * n);
+    for v in out.iter_mut() {
+        *v = 0.0;
+    }
+    for i in 0..rows {
+        let arow = a.row(r0 + i);
+        let crow = &mut out[i * n..(i + 1) * n];
+        for (k, &aik) in arow.iter().enumerate() {
+            let urow = &u.row(k)[k..];
+            for (j, &ukj) in urow.iter().enumerate() {
+                crow[k + j] += aik * ukj;
+            }
+        }
+    }
+}
+
+/// Rows [r0, r0+rows) of C = A·Lᵀ with L lower triangular:
+/// C[i, j] = ⟨A[i, ..=j], L[j, ..=j]⟩ (prefix dot).
+fn mul_tril_t_rows(a: &Mat, l: &Mat, r0: usize, rows: usize, out: &mut [f64]) {
+    let n = l.rows;
+    debug_assert_eq!(out.len(), rows * n);
+    for i in 0..rows {
+        let arow = a.row(r0 + i);
+        let crow = &mut out[i * n..(i + 1) * n];
+        for (j, slot) in crow.iter_mut().enumerate() {
+            *slot = dot(&arow[..=j], &l.row(j)[..=j]);
+        }
+    }
+}
+
+/// Rows [r0, r0+rows) of C = A·Uᵀ with U upper triangular:
+/// C[i, j] = ⟨A[i, j..], U[j, j..]⟩ (suffix dot).
+fn mul_triu_t_rows(a: &Mat, u: &Mat, r0: usize, rows: usize, out: &mut [f64]) {
+    let n = u.rows;
+    debug_assert_eq!(out.len(), rows * n);
+    for i in 0..rows {
+        let arow = a.row(r0 + i);
+        let crow = &mut out[i * n..(i + 1) * n];
+        for (j, slot) in crow.iter_mut().enumerate() {
+            *slot = dot(&arow[j..], &u.row(j)[j..]);
+        }
+    }
+}
+
+/// Dispatch a row-blocked kernel: inline below the flop threshold,
+/// otherwise over the pool in disjoint output-row blocks.
+///
+/// `full_pass` marks transpose-side kernels whose every block streams
+/// the *whole* input operand (tr_matmul/gram/tr_matvec/col_sums): they
+/// get exactly one block per lane, since extra blocks multiply memory
+/// traffic instead of improving balance.
+fn run_rows(
+    out: &mut [f64],
+    row_len: usize,
+    rows: usize,
+    flops: usize,
+    full_pass: bool,
+    kernel: &(dyn Fn(usize, usize, &mut [f64]) + Sync),
+) {
+    if rows == 0 || row_len == 0 {
+        return;
+    }
+    if should_par(flops) {
+        let block = if full_pass {
+            pool::block_size_full_pass(rows)
+        } else {
+            pool::block_size(rows)
+        };
+        pool::parallel_rows_mut(out, row_len, rows, block, &|r0, blk| {
+            kernel(r0, blk.len() / row_len, blk)
+        });
+    } else {
+        kernel(0, rows, out);
+    }
+}
+
 impl Mat {
     pub fn zeros(rows: usize, cols: usize) -> Self {
         Self { rows, cols, data: vec![0.0; rows * cols] }
+    }
+
+    /// Empty matrix placeholder for `*_into` targets (no allocation).
+    pub fn empty() -> Self {
+        Self { rows: 0, cols: 0, data: Vec::new() }
+    }
+
+    /// Reshape to [rows, cols] reusing the allocation.  Contents are
+    /// unspecified afterwards; every `*_into` kernel overwrites fully.
+    pub fn resize(&mut self, rows: usize, cols: usize) {
+        self.rows = rows;
+        self.cols = cols;
+        self.data.resize(rows * cols, 0.0);
     }
 
     pub fn eye(n: usize) -> Self {
@@ -85,95 +372,175 @@ impl Mat {
         t
     }
 
-    /// C = A * B (ikj loop order: streams B's rows, vector-friendly).
+    /// C = A * B into a caller-owned buffer (no allocation once `out`
+    /// has capacity).
+    pub fn matmul_into(&self, b: &Mat, out: &mut Mat) {
+        assert_eq!(
+            self.cols, b.rows,
+            "matmul dims {}x{} * {}x{}",
+            self.rows, self.cols, b.rows, b.cols
+        );
+        out.resize(self.rows, b.cols);
+        let flops = self.rows * self.cols * b.cols;
+        run_rows(&mut out.data, b.cols, self.rows, flops, false, &|r0, rows, blk| {
+            matmul_rows(self, b, r0, rows, blk)
+        });
+    }
+
+    /// C = A * B.
     pub fn matmul(&self, b: &Mat) -> Mat {
-        assert_eq!(self.cols, b.rows, "matmul dims {}x{} * {}x{}",
-                   self.rows, self.cols, b.rows, b.cols);
-        let mut c = Mat::zeros(self.rows, b.cols);
-        for i in 0..self.rows {
-            let arow = self.row(i);
-            let crow = c.row_mut(i);
-            for (k, &aik) in arow.iter().enumerate() {
-                if aik == 0.0 {
-                    continue;
-                }
-                let brow = b.row(k);
-                for (j, &bkj) in brow.iter().enumerate() {
-                    crow[j] += aik * bkj;
-                }
-            }
-        }
-        c
+        let mut out = Mat::empty();
+        self.matmul_into(b, &mut out);
+        out
     }
 
-    /// C = A^T * B without materializing A^T (kij order streams both
-    /// operands row-wise; beats `self.transpose().matmul(b)` by the
-    /// transpose copy plus its cache misses on tall matrices).
-    pub fn tr_matmul(&self, b: &Mat) -> Mat {
+    /// C = Aᵀ * B into a caller-owned buffer, without materializing Aᵀ.
+    pub fn tr_matmul_into(&self, b: &Mat, out: &mut Mat) {
         assert_eq!(self.rows, b.rows, "tr_matmul dims");
-        let mut c = Mat::zeros(self.cols, b.cols);
-        for k in 0..self.rows {
-            let arow = self.row(k);
-            let brow = b.row(k);
-            for (i, &aki) in arow.iter().enumerate() {
-                if aki == 0.0 {
-                    continue;
-                }
-                let crow = c.row_mut(i);
-                for (j, &bkj) in brow.iter().enumerate() {
-                    crow[j] += aki * bkj;
-                }
-            }
-        }
-        c
+        out.resize(self.cols, b.cols);
+        let flops = self.rows * self.cols * b.cols;
+        run_rows(&mut out.data, b.cols, self.cols, flops, true, &|i0, rows, blk| {
+            tr_matmul_rows(self, b, i0, rows, blk)
+        });
     }
 
-    /// C = A^T * A (Gram matrix), exploiting symmetry.
-    pub fn gram(&self) -> Mat {
+    /// C = Aᵀ * B without materializing Aᵀ.
+    pub fn tr_matmul(&self, b: &Mat) -> Mat {
+        let mut out = Mat::empty();
+        self.tr_matmul_into(b, &mut out);
+        out
+    }
+
+    /// G = Aᵀ * A (Gram matrix) into a caller-owned buffer, exploiting
+    /// symmetry (upper triangle computed, lower mirrored).
+    pub fn gram_into(&self, out: &mut Mat) {
         let n = self.cols;
-        let mut g = Mat::zeros(n, n);
-        for r in 0..self.rows {
-            let row = self.row(r);
-            for i in 0..n {
-                let xi = row[i];
-                if xi == 0.0 {
-                    continue;
-                }
-                for j in i..n {
-                    g[(i, j)] += xi * row[j];
-                }
-            }
-        }
+        out.resize(n, n);
+        let flops = self.rows * n * n / 2;
+        run_rows(&mut out.data, n, n, flops, true, &|i0, rows, blk| {
+            gram_rows(self, i0, rows, blk)
+        });
         for i in 0..n {
             for j in 0..i {
-                g[(i, j)] = g[(j, i)];
+                out[(i, j)] = out[(j, i)];
             }
         }
-        g
+    }
+
+    /// G = Aᵀ * A (Gram matrix), exploiting symmetry.
+    pub fn gram(&self) -> Mat {
+        let mut out = Mat::empty();
+        self.gram_into(&mut out);
+        out
+    }
+
+    /// C = U * B with U = self **upper triangular** (structural skip of
+    /// the strictly-lower zeros; the paper's `triu[·]` factor).
+    pub fn triu_matmul_into(&self, b: &Mat, out: &mut Mat) {
+        assert_eq!(self.rows, self.cols, "triu operand must be square");
+        assert_eq!(self.cols, b.rows, "triu_matmul dims");
+        out.resize(self.rows, b.cols);
+        let flops = self.rows * self.cols * b.cols / 2;
+        run_rows(&mut out.data, b.cols, self.rows, flops, false, &|r0, rows, blk| {
+            triu_matmul_rows(self, b, r0, rows, blk)
+        });
+    }
+
+    /// C = A * L with `l` **lower triangular** (half the multiplies of
+    /// a dense matmul).
+    pub fn mul_tril_into(&self, l: &Mat, out: &mut Mat) {
+        assert_eq!(l.rows, l.cols, "tril operand must be square");
+        assert_eq!(self.cols, l.rows, "mul_tril dims");
+        out.resize(self.rows, l.cols);
+        let flops = self.rows * l.rows * l.cols / 2;
+        run_rows(&mut out.data, l.cols, self.rows, flops, false, &|r0, rows, blk| {
+            mul_tril_rows(self, l, r0, rows, blk)
+        });
+    }
+
+    /// C = A * U with `u` **upper triangular**.
+    pub fn mul_triu_into(&self, u: &Mat, out: &mut Mat) {
+        assert_eq!(u.rows, u.cols, "triu operand must be square");
+        assert_eq!(self.cols, u.rows, "mul_triu dims");
+        out.resize(self.rows, u.cols);
+        let flops = self.rows * u.rows * u.cols / 2;
+        run_rows(&mut out.data, u.cols, self.rows, flops, false, &|r0, rows, blk| {
+            mul_triu_rows(self, u, r0, rows, blk)
+        });
+    }
+
+    /// C = A * Lᵀ with `l` **lower triangular**, without materializing
+    /// the transpose.
+    pub fn mul_tril_t_into(&self, l: &Mat, out: &mut Mat) {
+        assert_eq!(l.rows, l.cols, "tril operand must be square");
+        assert_eq!(self.cols, l.rows, "mul_tril_t dims");
+        out.resize(self.rows, l.rows);
+        let flops = self.rows * l.rows * l.cols / 2;
+        run_rows(&mut out.data, l.rows, self.rows, flops, false, &|r0, rows, blk| {
+            mul_tril_t_rows(self, l, r0, rows, blk)
+        });
+    }
+
+    /// C = A * Uᵀ with `u` **upper triangular**, without materializing
+    /// the transpose.
+    pub fn mul_triu_t_into(&self, u: &Mat, out: &mut Mat) {
+        assert_eq!(u.rows, u.cols, "triu operand must be square");
+        assert_eq!(self.cols, u.rows, "mul_triu_t dims");
+        out.resize(self.rows, u.rows);
+        let flops = self.rows * u.rows * u.cols / 2;
+        run_rows(&mut out.data, u.rows, self.rows, flops, false, &|r0, rows, blk| {
+            mul_triu_t_rows(self, u, r0, rows, blk)
+        });
+    }
+
+    /// y = A * x into a caller-owned buffer.
+    pub fn matvec_into(&self, x: &[f64], out: &mut Vec<f64>) {
+        assert_eq!(self.cols, x.len());
+        out.resize(self.rows, 0.0);
+        let flops = self.rows * self.cols;
+        run_rows(out, 1, self.rows, flops, false, &|r0, rows, blk| {
+            matvec_rows(self, x, r0, rows, blk)
+        });
     }
 
     /// y = A * x.
     pub fn matvec(&self, x: &[f64]) -> Vec<f64> {
-        assert_eq!(self.cols, x.len());
-        (0..self.rows)
-            .map(|r| dot(self.row(r), x))
-            .collect()
+        let mut out = Vec::new();
+        self.matvec_into(x, &mut out);
+        out
     }
 
-    /// y = A^T * x.
-    pub fn tr_matvec(&self, x: &[f64]) -> Vec<f64> {
+    /// y = Aᵀ * x into a caller-owned buffer.
+    pub fn tr_matvec_into(&self, x: &[f64], out: &mut Vec<f64>) {
         assert_eq!(self.rows, x.len());
-        let mut y = vec![0.0; self.cols];
-        for r in 0..self.rows {
-            let xr = x[r];
-            if xr == 0.0 {
-                continue;
-            }
-            for (c, &v) in self.row(r).iter().enumerate() {
-                y[c] += xr * v;
-            }
-        }
-        y
+        out.resize(self.cols, 0.0);
+        let flops = self.rows * self.cols;
+        run_rows(out, 1, self.cols, flops, true, &|c0, cols, blk| {
+            tr_matvec_cols(self, x, c0, cols, blk)
+        });
+    }
+
+    /// y = Aᵀ * x.
+    pub fn tr_matvec(&self, x: &[f64]) -> Vec<f64> {
+        let mut out = Vec::new();
+        self.tr_matvec_into(x, &mut out);
+        out
+    }
+
+    /// s_j = Σ_i A[i, j] (column sums).
+    pub fn col_sums(&self) -> Vec<f64> {
+        let mut out = Vec::new();
+        self.col_sums_into(&mut out);
+        out
+    }
+
+    /// s_j = Σ_i A[i, j] (column sums) into a caller-owned buffer.
+    pub fn col_sums_into(&self, out: &mut Vec<f64>) {
+        out.resize(self.cols, 0.0);
+        let flops = self.rows * self.cols;
+        run_rows(out, 1, self.cols, flops, true, &|c0, cols, blk| {
+            col_sums_cols(self, c0, cols, blk)
+        });
     }
 
     pub fn scale(&mut self, s: f64) {
@@ -347,6 +714,131 @@ mod tests {
             let b: Vec<f64> = (0..n).map(|_| rng.normal()).collect();
             let naive: f64 = a.iter().zip(&b).map(|(x, y)| x * y).sum();
             assert!((dot(&a, &b) - naive).abs() < 1e-10);
+        }
+    }
+
+    #[test]
+    fn into_variants_reuse_buffers() {
+        let mut rng = Pcg64::seeded(5);
+        let a = random_mat(&mut rng, 6, 4);
+        let b = random_mat(&mut rng, 4, 3);
+        let mut out = Mat::empty();
+        a.matmul_into(&b, &mut out);
+        let want = a.matmul(&b);
+        assert_eq!(out.data, want.data);
+        let cap = out.data.capacity();
+        // Second call with the same shapes must not reallocate.
+        a.matmul_into(&b, &mut out);
+        assert_eq!(out.data.capacity(), cap);
+        assert_eq!(out.data, want.data);
+    }
+
+    #[test]
+    fn degenerate_shapes() {
+        let a = Mat::zeros(0, 4);
+        let b = Mat::zeros(4, 3);
+        let c = a.matmul(&b);
+        assert_eq!((c.rows, c.cols), (0, 3));
+        let d = a.tr_matmul(&Mat::zeros(0, 2));
+        assert_eq!((d.rows, d.cols), (4, 2));
+        assert!(d.data.iter().all(|&v| v == 0.0));
+        let e = Mat::zeros(3, 0).gram();
+        assert_eq!((e.rows, e.cols), (0, 0));
+        assert_eq!(Mat::zeros(0, 3).matvec(&[1.0, 2.0, 3.0]).len(), 0);
+    }
+
+    fn random_lower(rng: &mut Pcg64, n: usize) -> Mat {
+        let mut l = Mat::zeros(n, n);
+        for i in 0..n {
+            for j in 0..=i {
+                l[(i, j)] = rng.normal();
+            }
+        }
+        l
+    }
+
+    fn random_upper(rng: &mut Pcg64, n: usize) -> Mat {
+        let mut u = Mat::zeros(n, n);
+        for i in 0..n {
+            for j in i..n {
+                u[(i, j)] = rng.normal();
+            }
+        }
+        u
+    }
+
+    #[test]
+    fn triangular_kernels_match_dense() {
+        let mut rng = Pcg64::seeded(6);
+        for n in [1usize, 2, 5, 9] {
+            let a = random_mat(&mut rng, 7, n);
+            let l = random_lower(&mut rng, n);
+            let u = random_upper(&mut rng, n);
+            let b = random_mat(&mut rng, n, 4);
+
+            let mut got = Mat::empty();
+            a.mul_tril_into(&l, &mut got);
+            assert!(got.max_abs_diff(&a.matmul(&l)) < 1e-12, "mul_tril n={n}");
+
+            a.mul_triu_into(&u, &mut got);
+            assert!(got.max_abs_diff(&a.matmul(&u)) < 1e-12, "mul_triu n={n}");
+
+            a.mul_tril_t_into(&l, &mut got);
+            assert!(
+                got.max_abs_diff(&a.matmul(&l.transpose())) < 1e-12,
+                "mul_tril_t n={n}"
+            );
+
+            a.mul_triu_t_into(&u, &mut got);
+            assert!(
+                got.max_abs_diff(&a.matmul(&u.transpose())) < 1e-12,
+                "mul_triu_t n={n}"
+            );
+
+            u.triu_matmul_into(&b, &mut got);
+            assert!(got.max_abs_diff(&u.matmul(&b)) < 1e-12, "triu_matmul n={n}");
+        }
+    }
+
+    #[test]
+    fn col_sums_match_tr_matvec_ones() {
+        let mut rng = Pcg64::seeded(7);
+        let a = random_mat(&mut rng, 11, 6);
+        let mut s = Vec::new();
+        a.col_sums_into(&mut s);
+        let want = a.tr_matvec(&vec![1.0; 11]);
+        for (x, y) in s.iter().zip(&want) {
+            assert!((x - y).abs() < 1e-12);
+        }
+    }
+
+    #[test]
+    fn parallel_dispatch_is_bitwise_identical() {
+        // Force pool dispatch for everything and compare against the
+        // budget-1 (inline) path: identical bits, not just close.
+        // Restore the global threshold even if an assertion fails, so
+        // a failure here can't change how other lib tests dispatch.
+        struct Restore(usize);
+        impl Drop for Restore {
+            fn drop(&mut self) {
+                set_par_min_flops(self.0);
+            }
+        }
+        let _restore = Restore(par_min_flops());
+        set_par_min_flops(1);
+        let mut rng = Pcg64::seeded(8);
+        for (r, k, c) in [(1usize, 1usize, 1usize), (3, 5, 2), (33, 17, 9), (64, 8, 100)] {
+            let a = random_mat(&mut rng, r, k);
+            let b = random_mat(&mut rng, k, c);
+            let serial = crate::util::pool::with_budget(1, || a.matmul(&b));
+            let par = a.matmul(&b);
+            assert_eq!(serial.data, par.data, "matmul {r}x{k}x{c}");
+            let serial = crate::util::pool::with_budget(1, || b.tr_matmul(&a.transpose()));
+            let par = b.tr_matmul(&a.transpose());
+            assert_eq!(serial.data, par.data, "tr_matmul {r}x{k}x{c}");
+            let serial = crate::util::pool::with_budget(1, || a.gram());
+            let par = a.gram();
+            assert_eq!(serial.data, par.data, "gram {r}x{k}");
         }
     }
 }

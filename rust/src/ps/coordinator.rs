@@ -35,6 +35,10 @@ pub struct TrainConfig {
     pub eval_every_secs: f64,
     /// Hard wall-clock limit; the run is shut down when exceeded.
     pub time_limit_secs: Option<f64>,
+    /// Thread-pool budget per worker for its gradient linalg
+    /// (0 = auto: `util::pool::threads()` split evenly across workers,
+    /// min 1).  Individual `WorkerProfile::threads` values override.
+    pub worker_threads: usize,
 }
 
 impl TrainConfig {
@@ -50,6 +54,7 @@ impl TrainConfig {
             profiles: vec![],
             eval_every_secs: 0.5,
             time_limit_secs: None,
+            worker_threads: 0,
         }
     }
 }
@@ -86,13 +91,38 @@ pub fn train(
         freeze_hyper: cfg.freeze_hyper,
     };
 
+    // Per-worker thread budgets.  Explicit budgets (profile or
+    // cfg.worker_threads) are honored as-is; the remaining pool
+    // capacity is split across the auto workers with the remainder
+    // distributed one-by-one, so no core is left permanently idle by
+    // integer truncation and explicit budgets aren't double-counted.
+    let mut profiles: Vec<WorkerProfile> = (0..workers)
+        .map(|k| cfg.profiles.get(k).cloned().unwrap_or_default())
+        .collect();
+    if cfg.worker_threads > 0 {
+        for p in profiles.iter_mut().filter(|p| p.threads == 0) {
+            p.threads = cfg.worker_threads;
+        }
+    }
+    let explicit: usize = profiles.iter().map(|p| p.threads).sum();
+    let auto_count = profiles.iter().filter(|p| p.threads == 0).count();
+    if auto_count > 0 {
+        let avail = crate::util::pool::threads()
+            .saturating_sub(explicit)
+            .max(auto_count); // every worker gets at least one lane
+        let base = avail / auto_count;
+        let extra = avail % auto_count;
+        for (i, p) in profiles.iter_mut().filter(|p| p.threads == 0).enumerate() {
+            p.threads = (base + usize::from(i < extra)).max(1);
+        }
+    }
+
     std::thread::scope(|scope| {
         // ---- workers ----
-        for (k, shard) in shards.into_iter().enumerate() {
+        for ((k, shard), profile) in shards.into_iter().enumerate().zip(profiles) {
             let factory = factory.clone();
             let published = published.clone();
             let tx = tx.clone();
-            let profile = cfg.profiles.get(k).cloned().unwrap_or_default();
             scope.spawn(move || {
                 run_worker(k, shard, factory, published, tx, profile)
             });

@@ -5,7 +5,7 @@ use super::messages::{Push, ToServer};
 use super::Published;
 use crate::data::Dataset;
 use crate::grad::EngineFactory;
-use crate::util::Stopwatch;
+use crate::util::{pool, Stopwatch};
 use std::sync::mpsc::Sender;
 use std::sync::Arc;
 use std::time::Duration;
@@ -23,6 +23,10 @@ pub struct WorkerProfile {
     pub restart_after: Duration,
     /// Cap rows per iteration (0 = full shard, the paper's setting).
     pub max_rows: usize,
+    /// Thread-pool budget for this worker's gradient computation
+    /// (0 = auto: the coordinator splits `pool::threads()` across
+    /// workers).  See `util::pool::with_budget`.
+    pub threads: usize,
 }
 
 /// Run one worker until the server shuts down.
@@ -64,7 +68,9 @@ pub fn run_worker(
             (shard.x.clone(), shard.y.clone())
         };
         let sw = Stopwatch::start();
-        let res = engine.grad(&theta, &x, &y);
+        // Cap this worker's parallel linalg at its share of the pool so
+        // concurrent workers don't oversubscribe the machine.
+        let res = pool::with_budget(profile.threads.max(1), || engine.grad(&theta, &x, &y));
         let push = Push {
             worker: worker_id,
             version,

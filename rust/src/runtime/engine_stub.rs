@@ -1,0 +1,82 @@
+//! Stub PJRT engines for builds without the optional `xla` crate.
+//!
+//! Mirrors the public surface of `runtime::engine` so callers compile
+//! unchanged: fallible constructors return a descriptive error (the
+//! same shape as "artifacts missing", which every caller already
+//! handles by falling back to [`crate::grad::native::NativeEngine`] or
+//! skipping); `xla_factory` — whose signature has no error channel —
+//! panics immediately at the call site with the same message; the
+//! remaining methods are unreachable because no value of these types
+//! can ever be constructed.
+
+use crate::gp::ThetaLayout;
+use crate::grad::{EngineFactory, GradEngine, GradResult};
+use crate::linalg::Mat;
+use crate::runtime::manifest::{ArtifactSpec, Manifest};
+use anyhow::Result;
+
+fn unavailable() -> anyhow::Error {
+    anyhow::anyhow!(
+        "PJRT runtime unavailable: this binary was built without the `xla` cargo \
+         feature (rebuild with `--features xla` to execute AOT artifacts)"
+    )
+}
+
+/// Stub for `engine::XlaEngine`; cannot be constructed.
+pub struct XlaEngine {
+    never: std::convert::Infallible,
+}
+
+impl XlaEngine {
+    pub fn from_manifest(_manifest: &Manifest, _m: usize, _d: usize) -> Result<Self> {
+        Err(unavailable())
+    }
+
+    pub fn new(_spec: &ArtifactSpec) -> Result<Self> {
+        Err(unavailable())
+    }
+}
+
+impl GradEngine for XlaEngine {
+    fn layout(&self) -> ThetaLayout {
+        match self.never {}
+    }
+
+    fn name(&self) -> &'static str {
+        match self.never {}
+    }
+
+    fn grad(&mut self, _theta: &[f64], _x: &Mat, _y: &[f64]) -> GradResult {
+        match self.never {}
+    }
+}
+
+/// Stub factory: fails fast on the *calling* thread (a caller reaches
+/// this only after explicitly selecting the XLA engine), rather than
+/// letting `train` spawn workers that each die mid-run.
+pub fn xla_factory(_manifest: Manifest, _m: usize, _d: usize) -> EngineFactory {
+    panic!("{:#}", unavailable())
+}
+
+/// Stub for `engine::XlaEvaluator`; cannot be constructed.
+pub struct XlaEvaluator {
+    never: std::convert::Infallible,
+}
+
+impl XlaEvaluator {
+    pub fn from_manifest(_manifest: &Manifest, _m: usize, _d: usize) -> Result<Self> {
+        Err(unavailable())
+    }
+
+    pub fn layout(&self) -> ThetaLayout {
+        match self.never {}
+    }
+
+    pub fn predict(&self, _theta: &[f64], _x: &Mat) -> Result<(Vec<f64>, Vec<f64>)> {
+        match self.never {}
+    }
+
+    pub fn elbo_data_term(&self, _theta: &[f64], _x: &Mat, _y: &[f64]) -> Result<(f64, f64)> {
+        match self.never {}
+    }
+}

@@ -10,9 +10,19 @@
 //! * Artifacts are shape-specialized `(kind, m, d, B)`; shards are
 //!   streamed through in fixed `B`-row blocks with a 0/1 mask padding
 //!   the tail, so padded rows contribute exactly zero.
+//!
+//! The `xla` crate is optional (cargo feature `xla`): without it the
+//! crate still builds and every entry point here returns a descriptive
+//! error, so the pure-Rust [`crate::grad::native`] path — and all of
+//! tier-1 — works in environments where the PJRT toolchain is absent.
 
-pub mod engine;
 pub mod manifest;
+
+#[cfg(feature = "xla")]
+pub mod engine;
+#[cfg(not(feature = "xla"))]
+#[path = "engine_stub.rs"]
+pub mod engine;
 
 pub use engine::{XlaEngine, XlaEvaluator};
 pub use manifest::{ArtifactKind, ArtifactSpec, Manifest};
@@ -21,6 +31,7 @@ use anyhow::Result;
 
 /// Smoke helper used by the `advgp smoke` subcommand: load an HLO text
 /// file of the reference `fn(x, y) = (x @ y + 2,)` and execute it.
+#[cfg(feature = "xla")]
 pub fn smoke(path: &str) -> Result<Vec<f32>> {
     let client = xla::PjRtClient::cpu()?;
     let proto = xla::HloModuleProto::from_text_file(path)?;
@@ -30,4 +41,10 @@ pub fn smoke(path: &str) -> Result<Vec<f32>> {
     let y = xla::Literal::vec1(&[1f32, 1., 1., 1.]).reshape(&[2, 2])?;
     let r = exe.execute::<xla::Literal>(&[x, y])?[0][0].to_literal_sync()?;
     Ok(r.to_tuple1()?.to_vec::<f32>()?)
+}
+
+/// Smoke helper (stub): the build has no PJRT runtime.
+#[cfg(not(feature = "xla"))]
+pub fn smoke(_path: &str) -> Result<Vec<f32>> {
+    anyhow::bail!("built without the `xla` cargo feature; PJRT smoke test unavailable")
 }

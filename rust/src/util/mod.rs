@@ -6,6 +6,7 @@
 pub mod cli;
 pub mod json;
 pub mod logging;
+pub mod pool;
 pub mod rng;
 
 use std::time::Instant;

@@ -1,0 +1,430 @@
+//! Persistent work-sharing thread pool for the dense-linalg hot paths.
+//!
+//! std-only (the build is offline — no `rayon`).  Design:
+//!
+//! * One **global pool**, sized by `ADVGP_THREADS` (default: available
+//!   parallelism), spawned lazily on first parallel dispatch.  A size of
+//!   1 means "no helper threads": every dispatch runs inline, so
+//!   `ADVGP_THREADS=1` reproduces the old single-threaded behaviour
+//!   with zero queueing overhead.
+//! * **Work-sharing**: the *calling* thread always participates in its
+//!   own task set, so progress never depends on free pool workers —
+//!   several parameter-server workers can dispatch concurrently without
+//!   risk of deadlock (a caller whose helpers are busy simply does all
+//!   the work itself).
+//! * **Nested dispatch** from inside a pool job runs inline (serial):
+//!   no recursive fan-out, no oversubscription.
+//! * A thread-local **budget** ([`with_budget`]) caps the parallelism
+//!   of a region, letting the parameter server split the machine across
+//!   its worker threads (`ps::TrainConfig::worker_threads`).
+//!
+//! Determinism: the pool only distributes *which thread* computes a
+//! block; every block's internal arithmetic order is fixed by the
+//! kernel, so per-row results are bitwise identical at any thread
+//! count (see `linalg`).
+
+use std::cell::Cell;
+use std::marker::PhantomData;
+use std::ops::Range;
+use std::panic::{catch_unwind, resume_unwind, AssertUnwindSafe};
+use std::sync::atomic::{AtomicBool, AtomicUsize, Ordering};
+use std::sync::mpsc::{channel, Sender};
+use std::sync::{Arc, Condvar, Mutex, OnceLock};
+
+type Job = Box<dyn FnOnce() + Send + 'static>;
+
+/// The pool: `threads - 1` helper threads plus the calling thread.
+pub struct ThreadPool {
+    tx: Mutex<Sender<Job>>,
+    workers: usize,
+}
+
+static GLOBAL: OnceLock<ThreadPool> = OnceLock::new();
+
+thread_local! {
+    /// True on pool helper threads: nested dispatch runs inline there.
+    static IN_POOL: Cell<bool> = const { Cell::new(false) };
+    /// Per-thread parallelism cap (see [`with_budget`]).
+    static BUDGET: Cell<usize> = const { Cell::new(usize::MAX) };
+}
+
+fn configured_threads() -> usize {
+    let auto = || std::thread::available_parallelism().map(|n| n.get()).unwrap_or(1);
+    match std::env::var("ADVGP_THREADS") {
+        Ok(v) => match v.trim().parse::<usize>() {
+            Ok(n) if n >= 1 => n,
+            _ => {
+                // A typo'd/zero value must not silently serialize the
+                // whole process: warn and fall back to the default.
+                eprintln!(
+                    "warning: invalid ADVGP_THREADS={v:?}; using available parallelism"
+                );
+                auto()
+            }
+        },
+        Err(_) => auto(),
+    }
+}
+
+/// The global pool (created on first use).
+pub fn global() -> &'static ThreadPool {
+    GLOBAL.get_or_init(|| ThreadPool::new(configured_threads()))
+}
+
+/// Total thread budget of the global pool (helpers + caller).
+pub fn threads() -> usize {
+    global().workers + 1
+}
+
+/// Parallelism available to the *current* thread right now: 1 on pool
+/// helpers and under `with_budget(1)`, otherwise min(pool, budget).
+pub fn effective_parallelism() -> usize {
+    if IN_POOL.with(|f| f.get()) {
+        1
+    } else {
+        threads().min(BUDGET.with(|b| b.get())).max(1)
+    }
+}
+
+struct BudgetGuard {
+    prev: usize,
+}
+
+impl Drop for BudgetGuard {
+    fn drop(&mut self) {
+        BUDGET.with(|b| b.set(self.prev));
+    }
+}
+
+/// Run `f` with this thread's parallel dispatches capped at `n` lanes
+/// (n = 1 forces fully serial execution).  Restored on exit, including
+/// on panic.
+pub fn with_budget<R>(n: usize, f: impl FnOnce() -> R) -> R {
+    let _guard = BUDGET.with(|b| {
+        let prev = b.get();
+        b.set(n.max(1));
+        BudgetGuard { prev }
+    });
+    f()
+}
+
+impl ThreadPool {
+    /// Pool with `threads` total lanes (spawns `threads - 1` helpers).
+    fn new(threads: usize) -> Self {
+        let workers = threads.saturating_sub(1);
+        let (tx, rx) = channel::<Job>();
+        let rx = Arc::new(Mutex::new(rx));
+        for i in 0..workers {
+            let rx = Arc::clone(&rx);
+            std::thread::Builder::new()
+                .name(format!("advgp-pool-{i}"))
+                .spawn(move || {
+                    IN_POOL.with(|f| f.set(true));
+                    loop {
+                        // Hold the lock only for the blocking recv; jobs
+                        // run outside it so helpers execute in parallel.
+                        let job = match rx.lock().unwrap().recv() {
+                            Ok(j) => j,
+                            Err(_) => return,
+                        };
+                        job();
+                    }
+                })
+                .expect("spawn pool worker");
+        }
+        Self { tx: Mutex::new(tx), workers }
+    }
+}
+
+/// Shared state of one `parallel_tasks` call, reference-counted so
+/// queued-but-stale helper jobs stay sound after the caller returns.
+struct JobState {
+    /// Lifetime-erased task body, kept as a *raw* pointer: a stale
+    /// queued job may hold this state after the `parallel_tasks` frame
+    /// (and the closure it points at) is gone, and a raw pointer —
+    /// unlike a reference — is allowed to dangle while unused.  It is
+    /// re-bound to a reference only for task indices claimed from
+    /// `next`, and the caller blocks until every claimed index has
+    /// finished, so the pointee is always alive at dereference time.
+    f: *const (dyn Fn(usize) + Sync),
+    next: AtomicUsize,
+    tasks: usize,
+    done: Mutex<usize>,
+    cv: Condvar,
+    panicked: AtomicBool,
+    /// First panic payload, re-thrown on the calling thread so the
+    /// original message/location survives the pool boundary.
+    payload: Mutex<Option<Box<dyn std::any::Any + Send>>>,
+}
+
+// Safety: `f` points at a `Sync` closure (so shared cross-thread calls
+// are fine) and is only dereferenced under the claimed-task protocol
+// documented on the field; all other fields are Sync.
+unsafe impl Send for JobState {}
+unsafe impl Sync for JobState {}
+
+impl JobState {
+    /// Claim-and-run until the cursor is exhausted.  After a failure,
+    /// remaining claims are skipped (no wasted work) but still counted
+    /// done, so waiters cannot hang; the first payload is kept.
+    fn drain(&self) {
+        loop {
+            let i = self.next.fetch_add(1, Ordering::Relaxed);
+            if i >= self.tasks {
+                return;
+            }
+            if !self.panicked.load(Ordering::Relaxed) {
+                // Safety: `i < tasks` was claimed, so the caller frame
+                // (owning the closure) is still blocked in `wait_all`.
+                let f = unsafe { &*self.f };
+                if let Err(p) = catch_unwind(AssertUnwindSafe(|| f(i))) {
+                    let mut slot = self.payload.lock().unwrap();
+                    if slot.is_none() {
+                        *slot = Some(p);
+                    }
+                    self.panicked.store(true, Ordering::Relaxed);
+                }
+            }
+            let mut d = self.done.lock().unwrap();
+            *d += 1;
+            if *d == self.tasks {
+                self.cv.notify_all();
+            }
+        }
+    }
+
+    /// Block until every task (not every helper job) has completed —
+    /// a caller whose tasks were all claimed returns immediately even
+    /// if its queued helper jobs are still waiting behind another
+    /// caller's work in the shared queue.
+    fn wait_all(&self) {
+        let mut d = self.done.lock().unwrap();
+        while *d < self.tasks {
+            d = self.cv.wait(d).unwrap();
+        }
+    }
+}
+
+/// Run `f(i)` for every `i in 0..tasks` across the pool, blocking until
+/// all tasks finish.  Tasks are claimed dynamically (an atomic cursor),
+/// the caller participates, and each task runs exactly once.  Tasks
+/// must be independent; use [`DisjointMut`] for split output buffers.
+pub fn parallel_tasks(tasks: usize, f: &(dyn Fn(usize) + Sync)) {
+    if tasks == 0 {
+        return;
+    }
+    let par = effective_parallelism();
+    let pool = global();
+    let helpers = pool.workers.min(par.saturating_sub(1)).min(tasks - 1);
+    if helpers == 0 {
+        // Fast path: no state, no unwind shims.
+        for i in 0..tasks {
+            f(i);
+        }
+        return;
+    }
+    // Lifetime erasure (see `JobState::f`): jobs that find the cursor
+    // exhausted exit without ever touching `f`; jobs that claim a task
+    // finish it before `wait_all` lets this frame return.  The Arc
+    // keeps the state itself alive for stale queued jobs.
+    // (transmute, not `as`: an `as`-cast may not widen the trait
+    // object's lifetime bound to the pointer type's `'static` default)
+    let f_ptr: *const (dyn Fn(usize) + Sync) = unsafe { std::mem::transmute(f) };
+    let state = Arc::new(JobState {
+        f: f_ptr,
+        next: AtomicUsize::new(0),
+        tasks,
+        done: Mutex::new(0),
+        cv: Condvar::new(),
+        panicked: AtomicBool::new(false),
+        payload: Mutex::new(None),
+    });
+    {
+        let tx = pool.tx.lock().unwrap();
+        for _ in 0..helpers {
+            let s = Arc::clone(&state);
+            tx.send(Box::new(move || s.drain())).expect("pool alive");
+        }
+    }
+    state.drain(); // the caller always participates
+    state.wait_all();
+    if let Some(p) = state.payload.lock().unwrap().take() {
+        resume_unwind(p);
+    }
+}
+
+/// Split `0..total` into contiguous blocks of (up to) `block` items and
+/// run them on the pool.
+pub fn parallel_blocks(total: usize, block: usize, f: &(dyn Fn(Range<usize>) + Sync)) {
+    if total == 0 {
+        return;
+    }
+    let block = block.max(1);
+    let n = (total + block - 1) / block;
+    parallel_tasks(n, &|i| {
+        let lo = i * block;
+        f(lo..(lo + block).min(total))
+    });
+}
+
+/// Block size giving each available lane a few blocks (load balance
+/// without excessive dispatch overhead).  For kernels whose per-block
+/// work streams only the block itself.
+pub fn block_size(total: usize) -> usize {
+    let lanes = effective_parallelism() * 4;
+    ((total + lanes - 1) / lanes).max(1)
+}
+
+/// Block size for kernels whose *every block* re-streams a whole input
+/// operand (transpose-side reductions: tr_matmul/gram/col_sums): one
+/// block per lane, since extra blocks multiply memory traffic, not
+/// balance.
+pub fn block_size_full_pass(total: usize) -> usize {
+    let lanes = effective_parallelism();
+    ((total + lanes - 1) / lanes).max(1)
+}
+
+/// Hands out non-overlapping `&mut` windows of one slice to parallel
+/// tasks.  The exclusive borrow on `data` pins the slice for the
+/// wrapper's lifetime.
+pub struct DisjointMut<'a, T> {
+    ptr: *mut T,
+    len: usize,
+    _marker: PhantomData<&'a mut [T]>,
+}
+
+unsafe impl<T: Send> Sync for DisjointMut<'_, T> {}
+unsafe impl<T: Send> Send for DisjointMut<'_, T> {}
+
+impl<'a, T> DisjointMut<'a, T> {
+    pub fn new(data: &'a mut [T]) -> Self {
+        Self { ptr: data.as_mut_ptr(), len: data.len(), _marker: PhantomData }
+    }
+
+    /// # Safety
+    /// Ranges taken by concurrently-live calls must be disjoint.
+    #[allow(clippy::mut_from_ref)]
+    pub unsafe fn range(&self, r: Range<usize>) -> &mut [T] {
+        debug_assert!(r.start <= r.end && r.end <= self.len);
+        std::slice::from_raw_parts_mut(self.ptr.add(r.start), r.end - r.start)
+    }
+}
+
+/// Parallel map over disjoint row blocks of a row-major buffer:
+/// `f(first_row, block_slice)` with `block_slice` covering whole rows.
+pub fn parallel_rows_mut<T: Send>(
+    out: &mut [T],
+    row_len: usize,
+    rows: usize,
+    rows_per_block: usize,
+    f: &(dyn Fn(usize, &mut [T]) + Sync),
+) {
+    assert!(rows * row_len <= out.len(), "row blocks exceed buffer");
+    let cells = DisjointMut::new(out);
+    parallel_blocks(rows, rows_per_block, &|r: Range<usize>| {
+        // Safety: blocks from `parallel_blocks` are disjoint row ranges.
+        let s = unsafe { cells.range(r.start * row_len..r.end * row_len) };
+        f(r.start, s)
+    });
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn tasks_run_exactly_once() {
+        let hits: Vec<AtomicUsize> = (0..97).map(|_| AtomicUsize::new(0)).collect();
+        parallel_tasks(97, &|i| {
+            hits[i].fetch_add(1, Ordering::Relaxed);
+        });
+        for h in &hits {
+            assert_eq!(h.load(Ordering::Relaxed), 1);
+        }
+    }
+
+    #[test]
+    fn blocks_cover_range() {
+        for total in [0usize, 1, 2, 7, 64, 129] {
+            for block in [1usize, 3, 64] {
+                let seen: Vec<AtomicUsize> =
+                    (0..total).map(|_| AtomicUsize::new(0)).collect();
+                parallel_blocks(total, block, &|r| {
+                    for i in r {
+                        seen[i].fetch_add(1, Ordering::Relaxed);
+                    }
+                });
+                assert!(seen.iter().all(|s| s.load(Ordering::Relaxed) == 1));
+            }
+        }
+    }
+
+    #[test]
+    fn rows_mut_writes_disjoint() {
+        let mut out = vec![0.0f64; 7 * 5];
+        parallel_rows_mut(&mut out, 5, 7, 2, &|r0, blk| {
+            for (i, v) in blk.iter_mut().enumerate() {
+                *v = (r0 * 5 + i) as f64;
+            }
+        });
+        for (i, v) in out.iter().enumerate() {
+            assert_eq!(*v, i as f64);
+        }
+    }
+
+    #[test]
+    fn nested_dispatch_is_serial_and_correct() {
+        let total = AtomicUsize::new(0);
+        parallel_tasks(8, &|_| {
+            // Inner dispatch: inline on pool helpers, still correct.
+            parallel_tasks(16, &|_| {
+                total.fetch_add(1, Ordering::Relaxed);
+            });
+        });
+        assert_eq!(total.load(Ordering::Relaxed), 8 * 16);
+    }
+
+    #[test]
+    fn budget_one_is_inline() {
+        with_budget(1, || {
+            assert_eq!(effective_parallelism(), 1);
+            let n = AtomicUsize::new(0);
+            parallel_tasks(32, &|_| {
+                n.fetch_add(1, Ordering::Relaxed);
+            });
+            assert_eq!(n.load(Ordering::Relaxed), 32);
+        });
+        assert!(effective_parallelism() >= 1);
+    }
+
+    #[test]
+    fn budget_restored_after_panic() {
+        let before = BUDGET.with(|b| b.get());
+        let r = catch_unwind(AssertUnwindSafe(|| {
+            with_budget(1, || panic!("boom"));
+        }));
+        assert!(r.is_err());
+        assert_eq!(BUDGET.with(|b| b.get()), before);
+    }
+
+    #[test]
+    fn task_panic_propagates() {
+        let r = catch_unwind(AssertUnwindSafe(|| {
+            parallel_tasks(64, &|i| {
+                if i == 13 {
+                    panic!("task 13");
+                }
+            });
+        }));
+        // The original payload must cross the pool boundary intact.
+        let p = r.expect_err("must panic");
+        let msg = p.downcast_ref::<&str>().copied().unwrap_or_default();
+        assert_eq!(msg, "task 13");
+        // Pool must stay usable after a panicked dispatch.
+        let n = AtomicUsize::new(0);
+        parallel_tasks(8, &|_| {
+            n.fetch_add(1, Ordering::Relaxed);
+        });
+        assert_eq!(n.load(Ordering::Relaxed), 8);
+    }
+}

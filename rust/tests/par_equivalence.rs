@@ -1,0 +1,192 @@
+//! Serial/parallel equivalence of the pool-dispatched linalg + kernel
+//! hot paths (ISSUE 1 satellite).
+//!
+//! Strategy: force pool dispatch for *every* op (`set_par_min_flops(1)`)
+//! and compare against the inline path (`pool::with_budget(1, …)`)
+//! across odd shapes — 0/1 rows, sizes that are not multiples of any
+//! block size — and thread budgets 1–8.  The linalg family must match
+//! **bitwise** (each output row keeps its serial accumulation order);
+//! the gradient engine, whose lane reduction reorders chunk sums, must
+//! match to tight floating-point tolerance.
+
+use advgp::gp::featuremap::{FeatureMap, InducingChol, PhiBatch, PhiWorkspace};
+use advgp::gp::{Theta, ThetaLayout};
+use advgp::grad::{native::NativeEngine, GradEngine};
+use advgp::kernel::{cross, cross_pairwise, ArdParams};
+use advgp::linalg::{set_par_min_flops, Mat};
+use advgp::testing::{forall, Config};
+use advgp::util::pool;
+use advgp::util::rng::Pcg64;
+
+const BUDGETS: [usize; 4] = [2, 3, 4, 8];
+
+fn rand_mat(rng: &mut Pcg64, r: usize, c: usize) -> Mat {
+    Mat::from_vec(r, c, (0..r * c).map(|_| rng.normal()).collect())
+}
+
+/// Odd shapes around block boundaries (block sizes are derived from the
+/// thread budget, so cover 0, 1, primes and non-multiples of 4/8).
+fn dims() -> impl advgp::testing::Gen<(usize, usize, usize)> {
+    |rng: &mut Pcg64| {
+        let pick = |rng: &mut Pcg64| {
+            const SIZES: [usize; 9] = [0, 1, 2, 3, 5, 7, 13, 33, 65];
+            SIZES[rng.next_below(SIZES.len() as u64) as usize]
+        };
+        (pick(rng), pick(rng).max(1), pick(rng).max(1))
+    }
+}
+
+#[test]
+fn matmul_family_bitwise_identical_across_budgets() {
+    set_par_min_flops(1);
+    forall(
+        "matmul/tr_matmul/gram/matvec serial == parallel",
+        &Config { cases: 48, seed: 0xA11CE },
+        dims(),
+        |&(r, k, c)| {
+            let mut rng = Pcg64::seeded((r * 1009 + k * 31 + c) as u64);
+            let a = rand_mat(&mut rng, r, k);
+            let b = rand_mat(&mut rng, k, c);
+            let x: Vec<f64> = (0..k).map(|_| rng.normal()).collect();
+            let mm0 = pool::with_budget(1, || a.matmul(&b));
+            let tm0 = pool::with_budget(1, || a.tr_matmul(&a));
+            let g0 = pool::with_budget(1, || a.gram());
+            let mv0 = pool::with_budget(1, || a.matvec(&x));
+            let cs0 = pool::with_budget(1, || {
+                let mut s = Vec::new();
+                a.col_sums_into(&mut s);
+                s
+            });
+            for &t in &BUDGETS {
+                let mm = pool::with_budget(t, || a.matmul(&b));
+                advgp::prop_assert!(mm.data == mm0.data, "matmul differs at budget {t}");
+                let tm = pool::with_budget(t, || a.tr_matmul(&a));
+                advgp::prop_assert!(tm.data == tm0.data, "tr_matmul differs at budget {t}");
+                let g = pool::with_budget(t, || a.gram());
+                advgp::prop_assert!(g.data == g0.data, "gram differs at budget {t}");
+                let mv = pool::with_budget(t, || a.matvec(&x));
+                advgp::prop_assert!(mv == mv0, "matvec differs at budget {t}");
+                let cs = pool::with_budget(t, || {
+                    let mut s = Vec::new();
+                    a.col_sums_into(&mut s);
+                    s
+                });
+                advgp::prop_assert!(cs == cs0, "col_sums differs at budget {t}");
+            }
+            Ok(())
+        },
+    );
+}
+
+#[test]
+fn cross_bitwise_identical_across_budgets() {
+    set_par_min_flops(1);
+    forall(
+        "kernel::cross serial == parallel",
+        &Config { cases: 32, seed: 0xC0FFEE },
+        dims(),
+        |&(n, m, d)| {
+            let mut rng = Pcg64::seeded((n * 131 + m * 17 + d) as u64);
+            let p = ArdParams {
+                log_a0: rng.normal() * 0.2,
+                log_eta: (0..d).map(|_| rng.normal() * 0.3).collect(),
+            };
+            let x = rand_mat(&mut rng, n, d);
+            let z = rand_mat(&mut rng, m, d);
+            let k0 = pool::with_budget(1, || cross(&p, &x, &z));
+            let kp0 = pool::with_budget(1, || cross_pairwise(&p, &x, &z));
+            for &t in &BUDGETS {
+                let k = pool::with_budget(t, || cross(&p, &x, &z));
+                advgp::prop_assert!(k.data == k0.data, "cross differs at budget {t}");
+                let kp = pool::with_budget(t, || cross_pairwise(&p, &x, &z));
+                advgp::prop_assert!(
+                    kp.data == kp0.data,
+                    "cross_pairwise differs at budget {t}"
+                );
+            }
+            Ok(())
+        },
+    );
+}
+
+#[test]
+fn phi_into_identical_across_budgets_and_reuse() {
+    set_par_min_flops(1);
+    let mut rng = Pcg64::seeded(99);
+    let d = 3;
+    let params = ArdParams { log_a0: 0.1, log_eta: vec![0.05, -0.1, 0.2] };
+    let z = rand_mat(&mut rng, 9, d);
+    let map = InducingChol::build(&params, z);
+    let mut ws = PhiWorkspace::new();
+    let mut out = PhiBatch::empty();
+    for n in [0usize, 1, 5, 33, 130] {
+        let x = rand_mat(&mut rng, n, d);
+        let want = pool::with_budget(1, || map.phi(&params, &x));
+        for &t in &BUDGETS {
+            pool::with_budget(t, || map.phi_into(&params, &x, &mut ws, &mut out));
+            assert_eq!(out.phi.data, want.phi.data, "phi n={n} budget={t}");
+            assert_eq!(out.ktilde, want.ktilde, "ktilde n={n} budget={t}");
+        }
+    }
+}
+
+#[test]
+fn native_grad_equivalent_across_budgets() {
+    set_par_min_flops(1);
+    let layout = ThetaLayout::new(6, 3);
+    let mut rng = Pcg64::seeded(7);
+    let z = rand_mat(&mut rng, 6, 3);
+    let theta = Theta::init(layout, &z).data;
+    // 17 chunks (CHUNK = 2048): the lane fan-out needs
+    // `n_chunks >= 2 * budget`, so every budget in BUDGETS (max 8,
+    // needing 16) takes the lane path on a sufficiently-parallel host.
+    let n = 16 * 2048 + 137;
+    let x = rand_mat(&mut rng, n, 3);
+    let y: Vec<f64> = (0..n).map(|_| rng.normal()).collect();
+    let mut eng = NativeEngine::new(layout);
+    let base = pool::with_budget(1, || eng.grad(&theta, &x, &y));
+    for &t in &BUDGETS {
+        let r = pool::with_budget(t, || eng.grad(&theta, &x, &y));
+        let vscale = base.value.abs().max(1.0);
+        assert!(
+            (r.value - base.value).abs() < 1e-9 * vscale,
+            "value differs at budget {t}: {} vs {}",
+            r.value,
+            base.value
+        );
+        for (i, (a, b)) in base.grad.iter().zip(&r.grad).enumerate() {
+            assert!(
+                (a - b).abs() < 1e-8 * a.abs().max(1.0) + 1e-9,
+                "grad[{i}] differs at budget {t}: {a} vs {b}"
+            );
+        }
+    }
+    // And the empty shard edge case.
+    let x0 = Mat::zeros(0, 3);
+    let r0 = eng.grad(&theta, &x0, &[]);
+    assert_eq!(r0.value, 0.0);
+    assert!(r0.grad.iter().all(|g| g.abs() < 1e-12));
+}
+
+/// `ADVGP_THREADS=1`-equivalent behaviour: budget 1 must bypass the
+/// pool entirely and still satisfy every algebraic identity.
+#[test]
+fn budget_one_matches_reference_algebra() {
+    set_par_min_flops(1);
+    let mut rng = Pcg64::seeded(11);
+    let a = rand_mat(&mut rng, 33, 17);
+    let b = rand_mat(&mut rng, 17, 9);
+    let got = pool::with_budget(1, || a.matmul(&b));
+    // Naive triple loop reference.
+    let mut want = Mat::zeros(33, 9);
+    for i in 0..33 {
+        for j in 0..9 {
+            let mut s = 0.0;
+            for k in 0..17 {
+                s += a[(i, k)] * b[(k, j)];
+            }
+            want[(i, j)] = s;
+        }
+    }
+    assert!(got.max_abs_diff(&want) < 1e-10);
+}
