@@ -1,0 +1,107 @@
+//! Serve a synthetic query stream against the **live published θ** of
+//! an in-flight training run — the serving half of the system (ISSUE 2).
+//!
+//!     cargo run --release --example serve_latency
+//!
+//! Topology: the parameter server trains on a background thread via
+//! `train_published` (so we own the `Published` handle); a
+//! `serve::BatchServer` follows it through a `PosteriorCache` (one
+//! O(m³) posterior rebuild per θ version, atomically swapped); client
+//! threads fire single-row predict requests the whole time.  At the end
+//! we print rows/sec, latency percentiles, and the span of θ versions
+//! that actually served traffic.
+
+use advgp::data::{kmeans, synth, Standardizer};
+use advgp::gp::{Theta, ThetaLayout};
+use advgp::grad::native_factory;
+use advgp::ps::coordinator::{train_published, TrainConfig};
+use advgp::ps::Published;
+use advgp::serve::{BatchConfig, BatchServer, PosteriorCache};
+use advgp::util::rng::Pcg64;
+use std::sync::atomic::{AtomicBool, Ordering};
+use std::sync::Arc;
+use std::time::Duration;
+
+fn main() {
+    // 1. Data: flight-like synthetic, 12k train / 2k query pool.
+    let mut ds = synth::flight_like(14_000, 5);
+    let mut rng = Pcg64::seeded(5);
+    ds.shuffle(&mut rng);
+    let (mut train_ds, mut query_ds) = ds.split(2_000);
+    let st = Standardizer::fit(&train_ds);
+    st.apply(&mut train_ds);
+    st.apply(&mut query_ds);
+    let d = train_ds.d();
+
+    // 2. Model: m = 64 inducing points, k-means init.
+    let m = 64;
+    let layout = ThetaLayout::new(m, d);
+    let z0 = kmeans::kmeans(&train_ds.x, m, 10, &mut rng);
+    let theta0 = Theta::init(layout, &z0);
+
+    // 3. Trainer on a background thread, publishing into a handle we own.
+    let published = Published::new(theta0.data.clone());
+    let trainer = {
+        let published = Arc::clone(&published);
+        let shards = train_ds.shard(4);
+        std::thread::spawn(move || {
+            let mut cfg = TrainConfig::new(layout);
+            cfg.tau = 16;
+            cfg.max_updates = 400;
+            cfg.eval_every_secs = 0.0;
+            train_published(&cfg, published, shards, native_factory(layout), None)
+        })
+    };
+
+    // 4. Batch server following the live θ.
+    let cache = Arc::new(PosteriorCache::new(layout));
+    let cfg = BatchConfig { max_rows: 256, max_delay: Duration::from_millis(1) };
+    let (server, client) =
+        BatchServer::start(Arc::clone(&cache), Some(Arc::clone(&published)), cfg);
+
+    // 5. Query stream: 4 clients hammer the server until training ends.
+    let stop = Arc::new(AtomicBool::new(false));
+    let clients: Vec<_> = (0..4)
+        .map(|c| {
+            let client = client.clone();
+            let stop = Arc::clone(&stop);
+            let queries = query_ds.clone();
+            std::thread::spawn(move || {
+                let n = queries.n();
+                let mut i = c * (n / 4);
+                let mut served = 0u64;
+                while !stop.load(Ordering::Relaxed) {
+                    let row = queries.x.row(i % n);
+                    if client.predict(row).is_none() {
+                        break; // server gone
+                    }
+                    served += 1;
+                    i += 1;
+                }
+                served
+            })
+        })
+        .collect();
+    drop(client);
+
+    let run = trainer.join().expect("trainer panicked");
+    stop.store(true, Ordering::Relaxed);
+    let served: u64 = clients.into_iter().map(|h| h.join().unwrap()).sum();
+    let report = server.join();
+
+    // 6. Report.
+    println!(
+        "training: {} updates in {:.2}s ({} pushes, mean staleness {:.2})",
+        run.stats.updates, run.wall_secs, run.stats.pushes, run.stats.staleness.mean()
+    );
+    println!("serving:  {}", report.summary());
+    println!(
+        "          client-side confirmed rows: {served}; posterior followed θ v{} → v{}",
+        report.first_version, report.last_version
+    );
+    assert_eq!(report.rows, served);
+    assert!(
+        report.last_version > report.first_version,
+        "server should have observed θ advancing while serving"
+    );
+}

@@ -1,0 +1,147 @@
+//! §Serving micro-benchmarks: the blocked prediction path (ISSUE 2).
+//!
+//! Measures `SparseGp::predict_into` rows/sec across batch sizes
+//! {1, 64, 4096} at thread budgets {1, N} (N = the pool size), plus the
+//! blocked `data_term_ws` and an end-to-end `serve::BatchServer`
+//! throughput probe.  Prints the human-readable table AND dumps
+//! machine-readable results to `BENCH_predict.json` — the serving twin
+//! of `perf_hotpath`'s `BENCH_hotpath.json`; `scripts/bench_diff.py`
+//! diffs either file against a previous run.
+//!
+//! Thread count follows `ADVGP_THREADS` (default: all cores); the
+//! budget-1 rows emulate `ADVGP_THREADS=1` via `pool::with_budget`.
+
+use advgp::data::synth;
+use advgp::experiments::harness::{bench, BenchReport};
+use advgp::gp::{PredictWorkspace, SparseGp, Theta, ThetaLayout};
+use advgp::serve::{BatchConfig, BatchServer, PosteriorCache};
+use advgp::util::json::Json;
+use advgp::util::pool;
+use advgp::util::rng::Pcg64;
+use std::sync::Arc;
+
+const OUT_PATH: &str = "BENCH_predict.json";
+const BATCHES: [usize; 3] = [1, 64, 4096];
+
+struct Entry {
+    report: BenchReport,
+    batch: usize,
+    threads: usize,
+    rows_per_sec: f64,
+}
+
+fn main() {
+    let (m, d) = (100usize, 8usize);
+    let layout = ThetaLayout::new(m, d);
+    let ds = synth::flight_like(*BATCHES.iter().max().unwrap(), 3);
+    let mut rng = Pcg64::seeded(17);
+    let z = advgp::data::kmeans::kmeans(&ds.x, m, 10, &mut rng);
+    let theta = Theta::init(layout, &z);
+    let gp = SparseGp::new(theta.clone());
+    let pool_threads = pool::threads();
+    println!("predict/serving microbenches: m={m} d={d} threads={pool_threads}\n");
+
+    let mut budgets = vec![1usize, pool_threads];
+    budgets.dedup();
+    let mut entries: Vec<Entry> = Vec::new();
+
+    // Blocked predict across batch × thread budget.
+    for &batch in &BATCHES {
+        let xb = ds.head(batch).x;
+        for &t in &budgets {
+            let mut ws = PredictWorkspace::new();
+            let mut mean = Vec::new();
+            let mut var = Vec::new();
+            let report = bench(
+                &format!("predict_into batch={batch} threads={t}"),
+                3,
+                0.6,
+                || {
+                    pool::with_budget(t, || {
+                        gp.predict_into(&xb, &mut ws, &mut mean, &mut var)
+                    });
+                    std::hint::black_box(var.len());
+                },
+            );
+            let rows_per_sec = batch as f64 / report.stats.mean().max(1e-12);
+            entries.push(Entry { report, batch, threads: t, rows_per_sec });
+        }
+    }
+
+    // Blocked data term (the evaluator's −ELBO path) at the big batch.
+    let big = BATCHES[BATCHES.len() - 1];
+    for &t in &budgets {
+        let mut ws = PredictWorkspace::new();
+        let report = bench(
+            &format!("data_term_ws batch={big} threads={t}"),
+            3,
+            0.6,
+            || {
+                let g = pool::with_budget(t, || gp.data_term_ws(&ds.x, &ds.y, &mut ws));
+                std::hint::black_box(g);
+            },
+        );
+        let rows_per_sec = big as f64 / report.stats.mean().max(1e-12);
+        entries.push(Entry { report, batch: big, threads: t, rows_per_sec });
+    }
+
+    // End-to-end microbatching server: one client firing single-row
+    // requests back-to-back (latency-bound) — reported for context, not
+    // diffed as a hot path.
+    {
+        let cache = Arc::new(PosteriorCache::new(layout));
+        cache.install(1, &theta.data);
+        // Zero delay: a lone client measures the pure round-trip cost
+        // (channel + stage + blocked 1-row predict), not the deadline.
+        let cfg = BatchConfig { max_rows: 512, max_delay: std::time::Duration::ZERO };
+        let (server, client) = BatchServer::start(cache, None, cfg);
+        let row = ds.x.row(0).to_vec();
+        let report = bench("batch_server single-row round-trip", 10, 0.6, || {
+            let p = client.predict(&row).expect("server alive");
+            std::hint::black_box(p.mean);
+        });
+        drop(client);
+        let sr = server.join();
+        println!("  server report: {}", sr.summary());
+        let rows_per_sec = 1.0 / report.stats.mean().max(1e-12);
+        entries.push(Entry { report, batch: 1, threads: pool_threads, rows_per_sec });
+    }
+
+    write_json(&entries, pool_threads, m, d);
+    println!("\nwrote {} ({} entries, threads={pool_threads})", OUT_PATH, entries.len());
+}
+
+/// Dump `BENCH_predict.json`: schema-versioned, one entry per
+/// (bench, batch, threads) with ns/iter stats and rows/sec.
+fn write_json(entries: &[Entry], threads: usize, m: usize, d: usize) {
+    let benches: Vec<Json> = entries
+        .iter()
+        .map(|e| {
+            Json::obj(vec![
+                ("name", Json::Str(e.report.name.clone())),
+                ("batch", Json::Num(e.batch as f64)),
+                ("threads", Json::Num(e.threads as f64)),
+                ("rows_per_sec", Json::Num(e.rows_per_sec)),
+                ("mean_ns", Json::Num(e.report.stats.mean() * 1e9)),
+                ("std_ns", Json::Num(e.report.stats.std() * 1e9)),
+                ("min_ns", Json::Num(e.report.stats.min * 1e9)),
+                ("iters", Json::Num(e.report.iters as f64)),
+            ])
+        })
+        .collect();
+    let doc = Json::obj(vec![
+        ("schema", Json::Num(1.0)),
+        ("bench", Json::Str("perf_predict".into())),
+        ("threads", Json::Num(threads as f64)),
+        ("m", Json::Num(m as f64)),
+        ("d", Json::Num(d as f64)),
+        (
+            "par_min_flops",
+            Json::Num(advgp::linalg::par_min_flops() as f64),
+        ),
+        ("benches", Json::Arr(benches)),
+    ]);
+    if let Err(e) = std::fs::write(OUT_PATH, format!("{doc}\n")) {
+        eprintln!("failed to write {OUT_PATH}: {e}");
+    }
+}

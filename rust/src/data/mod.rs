@@ -88,6 +88,33 @@ impl Dataset {
             y: self.y[..k].to_vec(),
         }
     }
+
+    /// Copy `k` consecutive rows starting at `start` (wrapping around
+    /// the end) into a caller-owned buffer — allocation-free once `out`
+    /// is warm.  Used by capped workers to *rotate* through their shard
+    /// instead of resampling the same head every iteration: windows at
+    /// offsets `start, start + k, start + 2k, …` (mod n) tile the whole
+    /// shard within ⌈n/k⌉ steps from any starting offset.
+    pub fn copy_cyclic_window(&self, start: usize, k: usize, out: &mut Dataset) {
+        let n = self.n();
+        let d = self.d();
+        let k = k.min(n);
+        out.x.resize(k, d);
+        out.y.resize(k, 0.0);
+        if k == 0 {
+            return;
+        }
+        let start = start % n;
+        let first = k.min(n - start);
+        out.x.data[..first * d]
+            .copy_from_slice(&self.x.data[start * d..(start + first) * d]);
+        out.y[..first].copy_from_slice(&self.y[start..start + first]);
+        if first < k {
+            let rest = k - first; // wrapped prefix
+            out.x.data[first * d..].copy_from_slice(&self.x.data[..rest * d]);
+            out.y[first..].copy_from_slice(&self.y[..rest]);
+        }
+    }
 }
 
 /// Per-feature/target standardization statistics (fit on train only).
@@ -194,6 +221,53 @@ mod tests {
             assert_eq!(ds.y[r], 10.0 * ds.x.row(r)[0] / 2.0);
             assert_eq!(ds.x.row(r)[1], ds.x.row(r)[0] + 1.0);
         }
+    }
+
+    /// Rotating windows must (a) keep (x, y) rows paired, (b) wrap
+    /// correctly, and (c) cover every shard row within ⌈n/k⌉ steps from
+    /// any starting offset — the capped-worker coverage guarantee.
+    #[test]
+    fn cyclic_windows_cover_shard_from_any_offset() {
+        for (n, k) in [(10usize, 4usize), (10, 3), (7, 7), (9, 1), (5, 8)] {
+            let ds = toy(n, 2);
+            for start0 in [0usize, 2, n - 1] {
+                let mut seen = vec![false; n];
+                let mut win = Dataset { x: Mat::empty(), y: Vec::new() };
+                let mut off = start0;
+                let kk = k.min(n);
+                let steps = n.div_ceil(kk);
+                for _ in 0..steps {
+                    ds.copy_cyclic_window(off, k, &mut win);
+                    assert_eq!(win.n(), kk);
+                    for r in 0..win.n() {
+                        // Row identity from construction: y = 10·i,
+                        // x row i = [2i, 2i+1].
+                        let i = (win.y[r] / 10.0) as usize;
+                        assert_eq!(win.x.row(r)[0], (2 * i) as f64, "x/y pairing");
+                        assert_eq!(win.x.row(r)[1], (2 * i + 1) as f64);
+                        seen[i] = true;
+                    }
+                    off = (off + kk) % n;
+                }
+                assert!(
+                    seen.iter().all(|&s| s),
+                    "n={n} k={k} start={start0}: rows missed: {seen:?}"
+                );
+            }
+        }
+    }
+
+    #[test]
+    fn cyclic_window_reuses_buffers() {
+        let ds = toy(12, 3);
+        let mut win = Dataset { x: Mat::empty(), y: Vec::new() };
+        ds.copy_cyclic_window(0, 5, &mut win);
+        let (cx, cy) = (win.x.data.capacity(), win.y.capacity());
+        for off in [5usize, 10, 3, 8] {
+            ds.copy_cyclic_window(off, 5, &mut win);
+        }
+        assert_eq!(win.x.data.capacity(), cx, "window x reallocated");
+        assert_eq!(win.y.capacity(), cy, "window y reallocated");
     }
 
     #[test]

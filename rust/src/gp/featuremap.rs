@@ -38,12 +38,11 @@ impl PhiBatch {
 
 /// Reusable scratch for [`FeatureMap::phi_into`] — holds the K_bm
 /// buffer plus kernel scratch so callers that keep a workspace across
-/// batches (the gradient engine and the perf benches today; see
-/// `grad::native::LaneWs` for the same pattern) run the forward pass
-/// with no steady-state heap allocation.  `SparseGp::predict` still
-/// uses the allocating [`FeatureMap::phi`]: it rebuilds the whole map
-/// per θ snapshot on the cadenced evaluator, where the O(m³) factor
-/// build dominates any per-call buffer churn.
+/// batches run the forward pass with no steady-state heap allocation.
+/// Both the gradient engine (`grad::native::LaneWs`) and the blocked
+/// posterior path (`gp::PredictWorkspace`, one per predict lane) embed
+/// one; the allocating [`FeatureMap::phi`] remains as a convenience
+/// for one-shot callers and tests.
 pub struct PhiWorkspace {
     k_bm: Mat,
     cross: CrossScratch,

@@ -1,5 +1,25 @@
 //! GP core: parameter layout, feature maps, sparse predictive model,
 //! ELBO evaluation, exact-GP oracle.
+//!
+//! # Blocked posterior math (ISSUE 2)
+//!
+//! `SparseGp` no longer walks test rows one at a time.  Prediction and
+//! the ELBO data term are computed in row chunks through the blocked,
+//! pool-parallel linalg kernels of `linalg`:
+//!
+//! * `V = Φ Uᵀ` via the structural [`Mat::mul_triu_t_into`] kernel
+//!   (suffix dots — half the multiplies of a dense product), so the
+//!   per-row quadratic `φᵀ Σ φ = ‖U φ‖²` becomes a row sum-of-squares
+//!   of `V`;
+//! * the predictive mean `Φ μ` via the row-parallel matvec.
+//!
+//! All `[chunk, m]` temporaries live in a reusable [`PredictWorkspace`]
+//! (mirroring `grad::native::NativeEngine`'s lane design): buffers are
+//! resized in place and keep their capacity across calls, so the
+//! steady-state predict path performs **zero heap allocation**.  Shards
+//! wider than a few chunks fan out chunk→lane over the thread pool with
+//! a static round-robin assignment and deterministic lane-order
+//! reduction; smaller batches parallelize *inside* the kernels instead.
 
 pub mod exact;
 pub mod featuremap;
@@ -7,71 +27,285 @@ pub mod params;
 
 pub use params::{Theta, ThetaLayout};
 
-use crate::gp::featuremap::{FeatureMap, InducingChol};
-use crate::linalg::Mat;
+use crate::gp::featuremap::{FeatureMap, InducingChol, PhiBatch, PhiWorkspace};
+use crate::kernel::ArdParams;
+use crate::linalg::{dot, Mat};
+use crate::util::pool;
+
+/// Max rows per prediction chunk (bounds the `[chunk, m]` temporaries;
+/// same granularity as the gradient engine's chunking).
+const PRED_CHUNK: usize = 2048;
+
+/// Reusable buffers for the blocked posterior math.  One lane per
+/// concurrently-processed chunk; lanes are grown on demand and keep
+/// their capacity, so repeated `predict_into`/`data_term_ws` calls at a
+/// fixed shape allocate nothing.
+pub struct PredictWorkspace {
+    lanes: Vec<PredictLane>,
+}
+
+struct PredictLane {
+    /// Staged chunk rows `[b, d]` (no view type in this substrate; the
+    /// memcpy is noise next to the O(b·m²) products).
+    xc: Mat,
+    phi_ws: PhiWorkspace,
+    pb: PhiBatch,
+    /// V = Φ Uᵀ rows: v_i = (U φ_i)ᵀ, shape [b, m].
+    v: Mat,
+    /// Φ μ for the chunk.
+    mv: Vec<f64>,
+    /// Lane-private data-term accumulator, reduced in lane order.
+    g: f64,
+}
+
+impl PredictLane {
+    fn new() -> Self {
+        Self {
+            xc: Mat::empty(),
+            phi_ws: PhiWorkspace::new(),
+            pb: PhiBatch::empty(),
+            v: Mat::empty(),
+            mv: Vec::new(),
+            g: 0.0,
+        }
+    }
+}
+
+impl PredictWorkspace {
+    pub fn new() -> Self {
+        Self { lanes: Vec::new() }
+    }
+
+    fn ensure_lanes(&mut self, n: usize) {
+        if self.lanes.len() < n {
+            self.lanes.resize_with(n, PredictLane::new);
+        }
+    }
+}
+
+impl Default for PredictWorkspace {
+    fn default() -> Self {
+        Self::new()
+    }
+}
 
 /// Sparse-GP predictive model bound to a parameter vector θ.
 ///
 /// Wraps the eq. (11) feature map; prediction follows §3's augmented
 /// model: q(f*) = N(φ(x*)^T μ, ktilde + φ^T Σ φ), plus σ² for y*.
+///
+/// The kernel params, the (triu-enforced) variational factor U and the
+/// feature-map factor are cached at construction so the per-batch
+/// posterior math touches no allocating accessor.
 pub struct SparseGp {
     pub theta: Theta,
     map: InducingChol,
+    /// Cached kernel parameters (θ accessors allocate).
+    ard: ArdParams,
+    /// Cached U with the strict lower triangle zeroed — the posterior
+    /// math (like the gradient engine) treats U as structurally
+    /// upper-triangular.
+    u: Mat,
 }
 
 impl SparseGp {
     pub fn new(theta: Theta) -> Self {
-        let map = InducingChol::build(&theta.ard(), theta.z_mat());
-        Self { theta, map }
+        let ard = theta.ard();
+        let map = InducingChol::build(&ard, theta.z_mat());
+        let mut u = theta.u_mat();
+        u.triu_inplace();
+        Self { theta, map, ard, u }
     }
 
     /// Refresh the cached feature-map factor after θ changed.
     pub fn update(&mut self, theta: Theta) {
-        self.map = InducingChol::build(&theta.ard(), theta.z_mat());
+        self.ard = theta.ard();
+        self.map = InducingChol::build(&self.ard, theta.z_mat());
+        let mut u = theta.u_mat();
+        u.triu_inplace();
+        self.u = u;
         self.theta = theta;
     }
 
-    /// Predictive mean and variance (of y, noise included) for a batch.
+    /// Predictive mean and variance (of y, noise included) for a batch
+    /// (allocating convenience wrapper around [`SparseGp::predict_into`]).
     pub fn predict(&self, x: &Mat) -> (Vec<f64>, Vec<f64>) {
-        let pb = self.map.phi(&self.theta.ard(), x);
-        let mu = self.theta.mu();
-        let u = self.theta.u_mat(); // upper-tri
-        let mean = pb.phi.matvec(mu);
-        let noise = (2.0 * self.theta.log_sigma()).exp();
-        let mut var = Vec::with_capacity(x.rows);
-        for i in 0..x.rows {
-            let phi_i = pb.phi.row(i);
-            // ‖U φ‖² = φ^T Σ φ.
-            let uphi = u.matvec(phi_i);
-            let quad: f64 = uphi.iter().map(|v| v * v).sum();
-            var.push((pb.ktilde[i] + quad).max(1e-12) + noise);
-        }
+        let mut ws = PredictWorkspace::new();
+        let mut mean = Vec::new();
+        let mut var = Vec::new();
+        self.predict_into(x, &mut ws, &mut mean, &mut var);
         (mean, var)
     }
 
+    /// Blocked predictive mean/variance into caller-owned buffers —
+    /// allocation-free once `ws`/`mean`/`var` are warm.
+    pub fn predict_into(
+        &self,
+        x: &Mat,
+        ws: &mut PredictWorkspace,
+        mean: &mut Vec<f64>,
+        var: &mut Vec<f64>,
+    ) {
+        let n = x.rows;
+        mean.resize(n, 0.0);
+        var.resize(n, 0.0);
+        if n == 0 {
+            return;
+        }
+        let noise = (2.0 * self.theta.log_sigma()).exp();
+        let meanw = pool::DisjointMut::new(&mut mean[..]);
+        let varw = pool::DisjointMut::new(&mut var[..]);
+        self.for_each_chunk(n, ws, &|lane, start, b| {
+            // Safety: chunk row ranges are disjoint and statically
+            // assigned (`for_each_chunk` hands each chunk out once).
+            let ms = unsafe { meanw.range(start..start + b) };
+            let vs = unsafe { varw.range(start..start + b) };
+            self.predict_chunk(x, start, b, noise, lane, ms, vs);
+        });
+    }
+
+    /// Shared chunk→lane dispatch for the blocked posterior paths: run
+    /// `body(lane, start, b)` over every [`PRED_CHUNK`] chunk of `n`
+    /// rows.  Many chunks → one lane per pool thread (static
+    /// round-robin, serial inner linalg — see `NativeEngine`); few →
+    /// a single lane whose kernels row-parallelize internally.  Lane
+    /// `g` accumulators are zeroed for the lanes used; returns that
+    /// lane count so callers can reduce in lane order.
+    fn for_each_chunk(
+        &self,
+        n: usize,
+        ws: &mut PredictWorkspace,
+        body: &(dyn Fn(&mut PredictLane, usize, usize) + Sync),
+    ) -> usize {
+        let n_chunks = (n + PRED_CHUNK - 1) / PRED_CHUNK;
+        let lanes = self.lane_count(n_chunks);
+        ws.ensure_lanes(lanes);
+        for lane in ws.lanes[..lanes].iter_mut() {
+            lane.g = 0.0;
+        }
+        if lanes == 1 {
+            let lane = &mut ws.lanes[0];
+            for c in 0..n_chunks {
+                let start = c * PRED_CHUNK;
+                body(lane, start, PRED_CHUNK.min(n - start));
+            }
+        } else {
+            pool::parallel_rows_mut(
+                &mut ws.lanes[..lanes],
+                1,
+                lanes,
+                1,
+                &|lane_i, blk: &mut [PredictLane]| {
+                    let lane = &mut blk[0];
+                    pool::with_budget(1, || {
+                        let mut c = lane_i;
+                        while c < n_chunks {
+                            let start = c * PRED_CHUNK;
+                            body(lane, start, PRED_CHUNK.min(n - start));
+                            c += lanes;
+                        }
+                    });
+                },
+            );
+        }
+        lanes
+    }
+
+    /// One chunk of the blocked posterior: Φ → mean slice, V = Φ Uᵀ →
+    /// row sums-of-squares → variance slice.
+    fn predict_chunk(
+        &self,
+        x: &Mat,
+        start: usize,
+        b: usize,
+        noise: f64,
+        lane: &mut PredictLane,
+        mean: &mut [f64],
+        var: &mut [f64],
+    ) {
+        self.chunk_forward(x, start, b, lane);
+        mean.copy_from_slice(&lane.mv);
+        for i in 0..b {
+            let vi = lane.v.row(i);
+            var[i] = (lane.pb.ktilde[i] + dot(vi, vi)).max(1e-12) + noise;
+        }
+    }
+
+    /// Shared forward pass for a chunk: stage rows, evaluate the
+    /// feature map, Φ μ into `lane.mv`, V = Φ Uᵀ into `lane.v`.
+    fn chunk_forward(&self, x: &Mat, start: usize, b: usize, lane: &mut PredictLane) {
+        let d = x.cols;
+        lane.xc.resize(b, d);
+        lane.xc
+            .data
+            .copy_from_slice(&x.data[start * d..(start + b) * d]);
+        self.map
+            .phi_into(&self.ard, &lane.xc, &mut lane.phi_ws, &mut lane.pb);
+        lane.pb.phi.matvec_into(self.theta.mu(), &mut lane.mv);
+        lane.pb.phi.mul_triu_t_into(&self.u, &mut lane.v);
+    }
+
+    /// Decide the chunk→lane fan-out (same policy as the gradient
+    /// engine): many chunks → one lane per pool thread with serial math
+    /// inside; few chunks → a single lane whose kernels row-parallelize
+    /// internally.
+    fn lane_count(&self, n_chunks: usize) -> usize {
+        let par = pool::effective_parallelism();
+        if par > 1 && n_chunks >= 2 * par {
+            par
+        } else {
+            1
+        }
+    }
+
     /// The batch data term Σ_i g_i of the negative ELBO (eq. 23) —
-    /// pure-Rust twin of `model.elbo_fn`'s first output.
+    /// pure-Rust twin of `model.elbo_fn`'s first output (allocating
+    /// convenience wrapper around [`SparseGp::data_term_ws`]).
     pub fn data_term(&self, x: &Mat, y: &[f64]) -> f64 {
-        let pb = self.map.phi(&self.theta.ard(), x);
-        let mu = self.theta.mu();
-        let u = self.theta.u_mat();
+        let mut ws = PredictWorkspace::new();
+        self.data_term_ws(x, y, &mut ws)
+    }
+
+    /// Blocked data term through a reusable workspace (allocation-free
+    /// once `ws` is warm).
+    pub fn data_term_ws(&self, x: &Mat, y: &[f64], ws: &mut PredictWorkspace) -> f64 {
+        assert_eq!(x.rows, y.len());
+        let n = x.rows;
+        if n == 0 {
+            return 0.0;
+        }
+        let lanes = self.for_each_chunk(n, ws, &|lane, start, b| {
+            self.data_term_chunk(x, y, start, b, lane)
+        });
+        // Deterministic lane-order reduction.
+        ws.lanes[..lanes].iter().map(|l| l.g).sum()
+    }
+
+    /// One chunk of the blocked data term (eq. 23), accumulated into
+    /// the lane.
+    fn data_term_chunk(&self, x: &Mat, y: &[f64], start: usize, b: usize, lane: &mut PredictLane) {
+        self.chunk_forward(x, start, b, lane);
         let beta = self.theta.beta();
         let log_sigma = self.theta.log_sigma();
         let mut g = 0.0;
-        for i in 0..x.rows {
-            let phi_i = pb.phi.row(i);
-            let e = crate::linalg::dot(phi_i, mu) - y[i];
-            let uphi = u.matvec(phi_i);
-            let quad: f64 = uphi.iter().map(|v| v * v).sum();
+        for i in 0..b {
+            let e = lane.mv[i] - y[start + i];
+            let vi = lane.v.row(i);
+            let quad = dot(vi, vi);
             g += 0.5 * (2.0 * std::f64::consts::PI).ln() + log_sigma
-                + 0.5 * beta * (e * e + quad + pb.ktilde[i]);
+                + 0.5 * beta * (e * e + quad + lane.pb.ktilde[i]);
         }
-        g
+        lane.g += g;
     }
 
     /// Full negative ELBO −L = Σ g_i + h (eq. 14) over a dataset.
     pub fn neg_elbo(&self, x: &Mat, y: &[f64]) -> f64 {
         self.data_term(x, y) + self.theta.kl()
+    }
+
+    /// Negative ELBO through a reusable workspace.
+    pub fn neg_elbo_ws(&self, x: &Mat, y: &[f64], ws: &mut PredictWorkspace) -> f64 {
+        self.data_term_ws(x, y, ws) + self.theta.kl()
     }
 }
 
@@ -164,5 +398,135 @@ mod tests {
         let whole = gp.data_term(&ds.x, &ds.y);
         let parts = gp.data_term(&h1.x, &h1.y) + gp.data_term(&x2, &y2);
         assert!((whole - parts).abs() < 1e-8);
+    }
+
+    /// Per-row reference predict (the pre-ISSUE-2 implementation): one
+    /// `u.matvec(φ_i)` per test row.
+    fn predict_reference(gp: &SparseGp, x: &Mat) -> (Vec<f64>, Vec<f64>) {
+        let pb = gp.map.phi(&gp.theta.ard(), x);
+        let mu = gp.theta.mu();
+        let u = gp.theta.u_mat();
+        let mean = pb.phi.matvec(mu);
+        let noise = (2.0 * gp.theta.log_sigma()).exp();
+        let mut var = Vec::with_capacity(x.rows);
+        for i in 0..x.rows {
+            let uphi = u.matvec(pb.phi.row(i));
+            let quad: f64 = uphi.iter().map(|v| v * v).sum();
+            var.push((pb.ktilde[i] + quad).max(1e-12) + noise);
+        }
+        (mean, var)
+    }
+
+    fn random_gp(m: usize, d: usize, seed: u64) -> SparseGp {
+        let mut rng = crate::util::rng::Pcg64::seeded(seed);
+        let z = Mat::from_vec(m, d, (0..m * d).map(|_| rng.normal()).collect());
+        let mut th = Theta::init(ThetaLayout::new(m, d), &z);
+        for v in th.mu_mut() {
+            *v = rng.normal() * 0.4;
+        }
+        let mut u = Mat::zeros(m, m);
+        for i in 0..m {
+            u[(i, i)] = 0.6 + rng.next_f64();
+            for j in i + 1..m {
+                u[(i, j)] = rng.normal() * 0.1;
+            }
+        }
+        th.set_u_mat(&u);
+        th.data[th.layout.log_sigma_idx()] = -0.4;
+        SparseGp::new(th)
+    }
+
+    #[test]
+    fn blocked_predict_matches_per_row_reference() {
+        let gp = random_gp(7, 3, 21);
+        let mut rng = crate::util::rng::Pcg64::seeded(22);
+        for n in [1usize, 2, 33, 257] {
+            let x = Mat::from_vec(n, 3, (0..n * 3).map(|_| rng.normal()).collect());
+            let (mean, var) = gp.predict(&x);
+            let (mr, vr) = predict_reference(&gp, &x);
+            assert_eq!(mean, mr, "n={n}: blocked mean must be bitwise");
+            for i in 0..n {
+                let scale = vr[i].abs().max(1.0);
+                assert!(
+                    (var[i] - vr[i]).abs() <= 1e-12 * scale,
+                    "n={n} row {i}: {} vs {}",
+                    var[i],
+                    vr[i]
+                );
+            }
+        }
+    }
+
+    /// The predict/data-term hot path must not allocate in steady
+    /// state: capacities of every reusable buffer are unchanged across
+    /// repeated calls, including after warming on a different shape.
+    #[test]
+    fn predict_workspace_zero_steady_state_allocation() {
+        let gp = random_gp(6, 2, 31);
+        let mut rng = crate::util::rng::Pcg64::seeded(32);
+        let xa = Mat::from_vec(97, 2, (0..97 * 2).map(|_| rng.normal()).collect());
+        let xb = Mat::from_vec(40, 2, (0..40 * 2).map(|_| rng.normal()).collect());
+        let yb: Vec<f64> = (0..40).map(|_| rng.normal()).collect();
+        let mut ws = PredictWorkspace::new();
+        let mut mean = Vec::new();
+        let mut var = Vec::new();
+        // Warm on a larger shape, then settle on the steady shape.
+        gp.predict_into(&xa, &mut ws, &mut mean, &mut var);
+        gp.predict_into(&xb, &mut ws, &mut mean, &mut var);
+        gp.data_term_ws(&xb, &yb, &mut ws);
+        let sig = |ws: &PredictWorkspace, mean: &Vec<f64>, var: &Vec<f64>| {
+            let mut caps = vec![ws.lanes.capacity(), mean.capacity(), var.capacity()];
+            for l in &ws.lanes {
+                caps.extend_from_slice(&[
+                    l.xc.data.capacity(),
+                    l.pb.phi.data.capacity(),
+                    l.pb.ktilde.capacity(),
+                    l.v.data.capacity(),
+                    l.mv.capacity(),
+                ]);
+            }
+            caps
+        };
+        let before = sig(&ws, &mean, &var);
+        let (m0, v0) = (mean.clone(), var.clone());
+        for _ in 0..4 {
+            gp.predict_into(&xb, &mut ws, &mut mean, &mut var);
+            gp.data_term_ws(&xb, &yb, &mut ws);
+        }
+        assert_eq!(sig(&ws, &mean, &var), before, "steady-state predict reallocated");
+        assert_eq!(mean, m0);
+        assert_eq!(var, v0);
+    }
+
+    /// The chunk→lane fan-out must be transparent: a multi-chunk batch
+    /// predicted under different pool budgets matches the serial path
+    /// exactly (per-row values depend only on their own row).
+    #[test]
+    fn lane_parallel_predict_matches_serial() {
+        let gp = random_gp(5, 2, 41);
+        let n = 5 * PRED_CHUNK + 137; // 6 chunks
+        let mut rng = crate::util::rng::Pcg64::seeded(42);
+        let x = Mat::from_vec(n, 2, (0..n * 2).map(|_| rng.normal()).collect());
+        let y: Vec<f64> = (0..n).map(|_| rng.normal()).collect();
+        let mut ws = PredictWorkspace::new();
+        let mut mean = Vec::new();
+        let mut var = Vec::new();
+        let (m0, v0, g0) = pool::with_budget(1, || {
+            gp.predict_into(&x, &mut ws, &mut mean, &mut var);
+            (mean.clone(), var.clone(), gp.data_term_ws(&x, &y, &mut ws))
+        });
+        for budget in [2usize, 3] {
+            let g = pool::with_budget(budget, || {
+                gp.predict_into(&x, &mut ws, &mut mean, &mut var);
+                gp.data_term_ws(&x, &y, &mut ws)
+            });
+            assert_eq!(mean, m0, "mean differs at budget {budget}");
+            assert_eq!(var, v0, "var differs at budget {budget}");
+            // Lane reduction reorders the chunk partial sums.
+            assert!(
+                (g - g0).abs() < 1e-9 * g0.abs().max(1.0),
+                "data term differs at budget {budget}: {g} vs {g0}"
+            );
+        }
     }
 }

@@ -29,5 +29,6 @@ pub mod linalg;
 pub mod opt;
 pub mod ps;
 pub mod runtime;
+pub mod serve;
 pub mod testing;
 pub mod util;

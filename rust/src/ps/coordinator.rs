@@ -15,8 +15,10 @@ use std::sync::mpsc;
 use std::time::Duration;
 
 /// Evaluation closure, constructed *inside* the evaluator thread
-/// (PJRT evaluators are not Send).
-pub type EvalFactory = Box<dyn FnOnce() -> Box<dyn FnMut(&[f64]) -> EvalMetrics> + Send>;
+/// (PJRT evaluators are not Send).  Called as `(version, θ)` so the
+/// evaluator can key posterior caches by the published version.
+pub type EvalFactory =
+    Box<dyn FnOnce() -> Box<dyn FnMut(u64, &[f64]) -> EvalMetrics> + Send>;
 
 pub struct TrainConfig {
     pub layout: ThetaLayout,
@@ -74,10 +76,24 @@ pub fn train(
     factory: EngineFactory,
     eval_factory: Option<EvalFactory>,
 ) -> RunResult {
+    train_published(cfg, Published::new(theta0), shards, factory, eval_factory)
+}
+
+/// [`train`] against a caller-owned [`Published`] handle (seeded with
+/// θ₀).  This lets a serving stack — e.g. a `serve::BatchServer`
+/// syncing its `PosteriorCache` — follow the live θ *while training
+/// runs* (see `examples/serve_latency.rs`); `train` is the
+/// convenience wrapper that creates the handle itself.
+pub fn train_published(
+    cfg: &TrainConfig,
+    published: std::sync::Arc<Published>,
+    shards: Vec<Dataset>,
+    factory: EngineFactory,
+    eval_factory: Option<EvalFactory>,
+) -> RunResult {
     let clock = Stopwatch::start();
     let workers = shards.len();
     assert!(workers >= 1, "need at least one shard");
-    let published = Published::new(theta0);
     let (tx, rx) = mpsc::channel::<ToServer>();
 
     let server_cfg = ServerConfig {
@@ -140,7 +156,7 @@ pub fn train(
                 loop {
                     let (version, theta, shutdown) = published.snapshot();
                     if version != last_version {
-                        let m = eval(&theta);
+                        let m = eval(version, &theta);
                         trace.push(TraceRow {
                             t_secs: clock.secs(),
                             version,
@@ -193,21 +209,32 @@ pub fn train(
 
 /// Convenience: a native evaluator factory over a held-out set, with an
 /// optional (x, y) subset for −ELBO tracking (Appendix C traces).
+///
+/// Runs on the serving stack: an internal `serve::PosteriorCache`
+/// (rebuilt only when the published version advances) plus reusable
+/// `PredictWorkspace`/output buffers, so a mid-training evaluation pass
+/// allocates nothing beyond the per-version O(m³) factor build — the
+/// pre-ISSUE-2 evaluator rebuilt the model *and* allocated fresh
+/// buffers on every snapshot.
 pub fn native_eval_factory(
     layout: ThetaLayout,
     test: Dataset,
     elbo_set: Option<Dataset>,
 ) -> EvalFactory {
     Box::new(move || {
-        Box::new(move |theta: &[f64]| {
-            let th = crate::gp::Theta { layout, data: theta.to_vec() };
-            let gp = crate::gp::SparseGp::new(th);
-            let (mean, var) = gp.predict(&test.x);
+        let cache = crate::serve::PosteriorCache::new(layout);
+        let mut ws = crate::gp::PredictWorkspace::new();
+        let mut mean: Vec<f64> = Vec::new();
+        let mut var: Vec<f64> = Vec::new();
+        Box::new(move |version: u64, theta: &[f64]| {
+            cache.install(version, theta);
+            let post = cache.get().expect("posterior installed");
+            post.gp.predict_into(&test.x, &mut ws, &mut mean, &mut var);
             let rmse = crate::util::rmse(&mean, &test.y);
             let mnlp = crate::util::mnlp(&mean, &var, &test.y);
             let neg_elbo = elbo_set
                 .as_ref()
-                .map(|es| gp.neg_elbo(&es.x, &es.y));
+                .map(|es| post.gp.neg_elbo_ws(&es.x, &es.y, &mut ws));
             EvalMetrics { rmse, mnlp, neg_elbo }
         })
     })

@@ -27,6 +27,11 @@ pub struct EvalMetrics {
 }
 
 /// Aggregated run statistics from the server loop.
+///
+/// Every series is a streaming [`Stats`] summary (count/mean/min/max +
+/// a bounded quantile reservoir), so server memory stays O(1) in the
+/// number of updates — long runs never grow these linearly.  Use
+/// `Stats::quantile` for percentiles (e.g. p95 iteration time).
 #[derive(Clone, Debug, Default)]
 pub struct ServerStats {
     /// Wall time between consecutive server updates.

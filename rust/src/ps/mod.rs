@@ -26,7 +26,7 @@ pub mod metrics;
 pub mod server;
 pub mod worker;
 
-pub use coordinator::{train, RunResult, TrainConfig};
+pub use coordinator::{train, train_published, RunResult, TrainConfig};
 pub use delay::DelayGate;
 pub use metrics::{EvalMetrics, TraceRow};
 

@@ -5,6 +5,8 @@ use super::messages::{Push, ToServer};
 use super::Published;
 use crate::data::Dataset;
 use crate::grad::EngineFactory;
+use crate::linalg::Mat;
+use crate::util::rng::Pcg64;
 use crate::util::{pool, Stopwatch};
 use std::sync::mpsc::Sender;
 use std::sync::Arc;
@@ -22,6 +24,8 @@ pub struct WorkerProfile {
     pub crash_at: Option<u64>,
     pub restart_after: Duration,
     /// Cap rows per iteration (0 = full shard, the paper's setting).
+    /// Capped workers rotate a cyclic window through the shard so the
+    /// cap subsamples *all* of their data over time, not a fixed head.
     pub max_rows: usize,
     /// Thread-pool budget for this worker's gradient computation
     /// (0 = auto: the coordinator splits `pool::threads()` across
@@ -42,6 +46,19 @@ pub fn run_worker(
     let mut seen: u64 = 0;
     let mut local_iter: u64 = 0;
     let mut crashed = false;
+    // Capped workers rotate a cyclic window through the shard (seeded
+    // starting offset, advanced by the cap each iteration) so every row
+    // is visited within ⌈n/cap⌉ iterations — the old `shard.head(cap)`
+    // resampled the *same* rows forever.  The window buffer is reused
+    // across iterations; uncapped workers borrow the shard directly
+    // (the old path cloned the whole dataset every step).
+    let capped = profile.max_rows > 0 && profile.max_rows < shard.n();
+    let mut window = Dataset { x: Mat::empty(), y: Vec::new() };
+    let mut offset = if capped {
+        Pcg64::seeded(worker_id as u64 ^ 0x5EED).next_below(shard.n() as u64) as usize
+    } else {
+        0
+    };
     // First pull uses version 0 (initial θ) — workers must each push one
     // gradient before the server can make update 0, so don't wait for a
     // newer version on the first iteration.
@@ -61,16 +78,17 @@ pub fn run_worker(
             engine = factory(worker_id);
         }
 
-        let (x, y) = if profile.max_rows > 0 && profile.max_rows < shard.n() {
-            let head = shard.head(profile.max_rows);
-            (head.x, head.y)
+        let (x, y): (&Mat, &[f64]) = if capped {
+            shard.copy_cyclic_window(offset, profile.max_rows, &mut window);
+            offset = (offset + profile.max_rows) % shard.n();
+            (&window.x, &window.y)
         } else {
-            (shard.x.clone(), shard.y.clone())
+            (&shard.x, &shard.y)
         };
         let sw = Stopwatch::start();
         // Cap this worker's parallel linalg at its share of the pool so
         // concurrent workers don't oversubscribe the machine.
-        let res = pool::with_budget(profile.threads.max(1), || engine.grad(&theta, &x, &y));
+        let res = pool::with_budget(profile.threads.max(1), || engine.grad(&theta, x, y));
         let push = Push {
             worker: worker_id,
             version,

@@ -1,0 +1,321 @@
+//! Microbatching prediction server: single-row requests are staged and
+//! answered in blocked batches (flush at `max_rows` rows or after
+//! `max_delay`), amortizing the O(B·m²) posterior math and the pool
+//! dispatch across concurrent clients.
+//!
+//! One serving thread owns a reusable [`PredictWorkspace`] and a staged
+//! row buffer, so the steady-state serve loop allocates nothing on the
+//! prediction path; the only per-request allocations are client-side
+//! (the row copy and the one-shot reply channel).  The server follows
+//! the live published θ: before every flush it syncs its
+//! [`PosteriorCache`] against the parameter server's [`Published`]
+//! state, rebuilding the posterior only when the version advanced.
+
+use super::PosteriorCache;
+use crate::gp::PredictWorkspace;
+use crate::linalg::Mat;
+use crate::ps::Published;
+use crate::util::{Stats, Stopwatch};
+use std::sync::mpsc::{channel, Receiver, RecvTimeoutError, Sender};
+use std::sync::Arc;
+use std::time::{Duration, Instant};
+
+/// Microbatching policy.
+#[derive(Clone, Debug)]
+pub struct BatchConfig {
+    /// Flush when this many rows are staged.
+    pub max_rows: usize,
+    /// …or when the oldest staged request has waited this long.
+    pub max_delay: Duration,
+}
+
+impl Default for BatchConfig {
+    fn default() -> Self {
+        Self { max_rows: 256, max_delay: Duration::from_millis(2) }
+    }
+}
+
+/// One answered prediction.
+#[derive(Clone, Copy, Debug)]
+pub struct Prediction {
+    pub mean: f64,
+    /// Predictive variance of y (noise included).
+    pub var: f64,
+    /// θ version of the posterior that served this row.
+    pub version: u64,
+}
+
+struct Request {
+    row: Vec<f64>,
+    enqueued: Stopwatch,
+    reply: Sender<Prediction>,
+}
+
+/// Cheap cloneable handle for submitting predict requests.  Dropping
+/// every client (and any clones) shuts the server down.
+#[derive(Clone)]
+pub struct ServeClient {
+    tx: Sender<Request>,
+    d: usize,
+}
+
+impl ServeClient {
+    /// Enqueue one row; the answer arrives on the returned channel once
+    /// its microbatch is flushed.  None if the server has shut down.
+    pub fn submit(&self, row: &[f64]) -> Option<Receiver<Prediction>> {
+        assert_eq!(row.len(), self.d, "feature dimension mismatch");
+        let (rtx, rrx) = channel();
+        let req = Request { row: row.to_vec(), enqueued: Stopwatch::start(), reply: rtx };
+        self.tx.send(req).ok()?;
+        Some(rrx)
+    }
+
+    /// Blocking single-row predict.
+    pub fn predict(&self, row: &[f64]) -> Option<Prediction> {
+        self.submit(row)?.recv().ok()
+    }
+}
+
+/// Throughput/latency report for one server lifetime.
+#[derive(Clone, Debug)]
+pub struct ServeReport {
+    /// Rows answered.
+    pub rows: u64,
+    /// Blocked predict calls issued.
+    pub batches: u64,
+    /// Serving-thread lifetime.
+    pub wall_secs: f64,
+    pub rows_per_sec: f64,
+    /// Rows-per-batch distribution.
+    pub batch_rows: Stats,
+    /// Per-request latency (enqueue → reply), seconds.  Use
+    /// `latency.quantile(0.5 / 0.95 / 0.99)` for percentiles.
+    pub latency: Stats,
+    /// θ versions served (first, last) — how live the posterior was.
+    pub first_version: u64,
+    pub last_version: u64,
+}
+
+impl ServeReport {
+    /// One-line human summary (used by the example/bench output).
+    pub fn summary(&self) -> String {
+        format!(
+            "{} rows in {} batches ({:.0} rows/s, mean batch {:.1}); latency p50 {:.3}ms p95 {:.3}ms p99 {:.3}ms; θ v{}..v{}",
+            self.rows,
+            self.batches,
+            self.rows_per_sec,
+            self.batch_rows.mean(),
+            self.latency.quantile(0.5) * 1e3,
+            self.latency.quantile(0.95) * 1e3,
+            self.latency.quantile(0.99) * 1e3,
+            self.first_version,
+            self.last_version,
+        )
+    }
+}
+
+/// The microbatching server.  `start` spawns the serving thread and
+/// hands back a client; `join` collects the report after every client
+/// handle has been dropped.
+pub struct BatchServer {
+    handle: std::thread::JoinHandle<ServeReport>,
+}
+
+impl BatchServer {
+    /// Spawn the serving thread.  The cache must either already hold a
+    /// posterior or `published` must be given (the server seeds the
+    /// cache from it before serving).
+    pub fn start(
+        cache: Arc<PosteriorCache>,
+        published: Option<Arc<Published>>,
+        cfg: BatchConfig,
+    ) -> (Self, ServeClient) {
+        assert!(cfg.max_rows >= 1, "max_rows must be >= 1");
+        if let Some(p) = &published {
+            cache.sync(p);
+        }
+        assert!(
+            cache.get().is_some(),
+            "BatchServer needs a seeded PosteriorCache or a Published source"
+        );
+        let d = cache.layout().d;
+        let (tx, rx) = channel::<Request>();
+        let handle = std::thread::Builder::new()
+            .name("advgp-serve".into())
+            .spawn(move || serve_loop(cache, published, cfg, rx))
+            .expect("spawn serve thread");
+        (Self { handle }, ServeClient { tx, d })
+    }
+
+    /// Wait for shutdown (all clients dropped) and return the report.
+    pub fn join(self) -> ServeReport {
+        self.handle.join().expect("serve thread panicked")
+    }
+}
+
+fn serve_loop(
+    cache: Arc<PosteriorCache>,
+    published: Option<Arc<Published>>,
+    cfg: BatchConfig,
+    rx: Receiver<Request>,
+) -> ServeReport {
+    let d = cache.layout().d;
+    let clock = Stopwatch::start();
+    let mut ws = PredictWorkspace::new();
+    let mut xbuf = Mat::empty();
+    let mut mean: Vec<f64> = Vec::new();
+    let mut var: Vec<f64> = Vec::new();
+    let mut pending: Vec<Request> = Vec::with_capacity(cfg.max_rows);
+    let mut rows = 0u64;
+    let mut batches = 0u64;
+    let mut batch_rows = Stats::new();
+    let mut latency = Stats::new();
+    let mut first_version: Option<u64> = None;
+    let mut last_version = 0u64;
+
+    'serve: loop {
+        // Block for the batch's first request; disconnect = shutdown.
+        match rx.recv() {
+            Ok(r) => pending.push(r),
+            Err(_) => break 'serve,
+        }
+        // Stage more until the flush threshold or the deadline.
+        let deadline = Instant::now() + cfg.max_delay;
+        while pending.len() < cfg.max_rows {
+            let now = Instant::now();
+            if now >= deadline {
+                break;
+            }
+            match rx.recv_timeout(deadline - now) {
+                Ok(r) => pending.push(r),
+                Err(RecvTimeoutError::Timeout) => break,
+                // Serve what's staged, then shut down.
+                Err(RecvTimeoutError::Disconnected) => break,
+            }
+        }
+        // Follow the live θ: rebuild the posterior only on a version bump.
+        if let Some(p) = &published {
+            cache.sync(p);
+        }
+        let post = cache.get().expect("cache seeded before start");
+        let b = pending.len();
+        xbuf.resize(b, d);
+        for (i, r) in pending.iter().enumerate() {
+            xbuf.row_mut(i).copy_from_slice(&r.row);
+        }
+        post.gp.predict_into(&xbuf, &mut ws, &mut mean, &mut var);
+        batches += 1;
+        rows += b as u64;
+        batch_rows.push(b as f64);
+        first_version.get_or_insert(post.version);
+        last_version = post.version;
+        for (i, r) in pending.drain(..).enumerate() {
+            latency.push(r.enqueued.secs());
+            // A client that gave up on its reply is not an error.
+            let _ = r.reply.send(Prediction {
+                mean: mean[i],
+                var: var[i],
+                version: post.version,
+            });
+        }
+    }
+
+    let wall_secs = clock.secs();
+    ServeReport {
+        rows,
+        batches,
+        wall_secs,
+        rows_per_sec: rows as f64 / wall_secs.max(1e-12),
+        batch_rows,
+        latency,
+        first_version: first_version.unwrap_or(0),
+        last_version,
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::gp::{SparseGp, Theta, ThetaLayout};
+    use crate::util::rng::Pcg64;
+
+    fn seeded_cache(m: usize, d: usize) -> (Arc<PosteriorCache>, Theta) {
+        let layout = ThetaLayout::new(m, d);
+        let mut rng = Pcg64::seeded(77);
+        let z = Mat::from_vec(m, d, (0..m * d).map(|_| rng.normal()).collect());
+        let mut th = Theta::init(layout, &z);
+        for v in th.mu_mut() {
+            *v = rng.normal();
+        }
+        let cache = Arc::new(PosteriorCache::new(layout));
+        cache.install(1, &th.data);
+        (cache, th)
+    }
+
+    #[test]
+    fn batched_answers_match_direct_predict_exactly() {
+        let (cache, th) = seeded_cache(6, 3);
+        let gp = SparseGp::new(th);
+        let cfg = BatchConfig { max_rows: 8, max_delay: Duration::from_millis(5) };
+        let (server, client) = BatchServer::start(Arc::clone(&cache), None, cfg);
+        let mut rng = Pcg64::seeded(78);
+        let rows: Vec<Vec<f64>> = (0..40)
+            .map(|_| (0..3).map(|_| rng.normal()).collect())
+            .collect();
+        // Concurrent clients so batches actually mix rows.
+        std::thread::scope(|scope| {
+            for chunk in rows.chunks(10) {
+                let client = client.clone();
+                let gp = &gp;
+                scope.spawn(move || {
+                    for row in chunk {
+                        let p = client.predict(row).expect("server alive");
+                        let x = Mat::from_vec(1, 3, row.clone());
+                        let (em, ev) = gp.predict(&x);
+                        // Per-row math is independent of batch shape:
+                        // bitwise equality, not tolerance.
+                        assert_eq!(p.mean, em[0]);
+                        assert_eq!(p.var, ev[0]);
+                        assert_eq!(p.version, 1);
+                    }
+                });
+            }
+        });
+        drop(client);
+        let report = server.join();
+        assert_eq!(report.rows, 40);
+        assert_eq!(report.latency.n, 40);
+        assert!(report.batches <= 40);
+        assert!(report.rows_per_sec > 0.0);
+        assert_eq!((report.first_version, report.last_version), (1, 1));
+        assert!(report.latency.quantile(0.99) >= report.latency.quantile(0.5));
+    }
+
+    /// A burst submitted before the server can drain must be coalesced
+    /// into few blocked calls (the whole point of microbatching).
+    #[test]
+    fn burst_is_microbatched() {
+        let (cache, _th) = seeded_cache(4, 2);
+        let cfg = BatchConfig { max_rows: 64, max_delay: Duration::from_millis(100) };
+        let (server, client) = BatchServer::start(cache, None, cfg);
+        let row = [0.3, -0.7];
+        let receivers: Vec<_> = (0..256)
+            .map(|_| client.submit(&row).expect("server alive"))
+            .collect();
+        for r in receivers {
+            r.recv().expect("reply");
+        }
+        drop(client);
+        let report = server.join();
+        assert_eq!(report.rows, 256);
+        // 256 rows at flush size 64: a handful of batches even with an
+        // early partial flush — far fewer than one call per row.
+        assert!(
+            report.batches <= 16,
+            "burst not batched: {} batches for {} rows",
+            report.batches,
+            report.rows
+        );
+        assert!(report.batch_rows.max <= 64.0);
+    }
+}

@@ -37,19 +37,55 @@ impl Default for Stopwatch {
     }
 }
 
-/// Simple online mean/variance/min/max accumulator (Welford).
-#[derive(Clone, Debug, Default)]
+/// Capacity of the [`Stats`] quantile reservoir: memory stays bounded
+/// no matter how many samples are pushed (ISSUE 2 satellite — server
+/// stats on long runs must not grow linearly).
+const RESERVOIR_CAP: usize = 512;
+
+/// Streaming mean/variance/min/max accumulator (Welford) plus a
+/// **bounded reservoir sample** (Vitter's Algorithm R, deterministic
+/// internal RNG) for quantile estimates.  O(RESERVOIR_CAP) memory for
+/// any stream length.
+#[derive(Clone, Debug)]
 pub struct Stats {
     pub n: u64,
     mean: f64,
     m2: f64,
     pub min: f64,
     pub max: f64,
+    /// Uniform sample of the stream, ≤ RESERVOIR_CAP entries.
+    reservoir: Vec<f64>,
+    /// xorshift64* state for reservoir replacement (fixed seed: stats
+    /// are reproducible for a fixed push sequence).
+    rng: u64,
+}
+
+impl Default for Stats {
+    fn default() -> Self {
+        Self::new()
+    }
 }
 
 impl Stats {
     pub fn new() -> Self {
-        Self { n: 0, mean: 0.0, m2: 0.0, min: f64::INFINITY, max: f64::NEG_INFINITY }
+        Self {
+            n: 0,
+            mean: 0.0,
+            m2: 0.0,
+            min: f64::INFINITY,
+            max: f64::NEG_INFINITY,
+            reservoir: Vec::new(),
+            rng: 0x9E37_79B9_7F4A_7C15,
+        }
+    }
+
+    fn next_u64(&mut self) -> u64 {
+        let mut x = self.rng;
+        x ^= x >> 12;
+        x ^= x << 25;
+        x ^= x >> 27;
+        self.rng = x;
+        x.wrapping_mul(0x2545_F491_4F6C_DD1D)
     }
 
     pub fn push(&mut self, x: f64) {
@@ -59,6 +95,15 @@ impl Stats {
         self.m2 += d * (x - self.mean);
         self.min = self.min.min(x);
         self.max = self.max.max(x);
+        if self.reservoir.len() < RESERVOIR_CAP {
+            self.reservoir.push(x);
+        } else {
+            // Algorithm R: keep each of the n samples with prob CAP/n.
+            let j = (self.next_u64() % self.n) as usize;
+            if j < RESERVOIR_CAP {
+                self.reservoir[j] = x;
+            }
+        }
     }
 
     pub fn mean(&self) -> f64 {
@@ -75,6 +120,19 @@ impl Stats {
 
     pub fn std(&self) -> f64 {
         self.var().sqrt()
+    }
+
+    /// Quantile estimate (q in [0, 1]) from the bounded reservoir —
+    /// exact while n ≤ RESERVOIR_CAP, a uniform-sample estimate beyond.
+    /// NaN when empty.
+    pub fn quantile(&self, q: f64) -> f64 {
+        if self.reservoir.is_empty() {
+            return f64::NAN;
+        }
+        let mut s = self.reservoir.clone();
+        s.sort_by(|a, b| a.partial_cmp(b).unwrap_or(std::cmp::Ordering::Equal));
+        let idx = ((s.len() - 1) as f64 * q.clamp(0.0, 1.0)).round() as usize;
+        s[idx]
     }
 }
 
@@ -122,6 +180,37 @@ mod tests {
         assert!((s.var() - 5.0 / 3.0).abs() < 1e-12);
         assert_eq!(s.min, 1.0);
         assert_eq!(s.max, 4.0);
+    }
+
+    /// Reservoir memory stays bounded for arbitrarily long streams and
+    /// quantiles remain sane estimates.
+    #[test]
+    fn stats_reservoir_bounded_and_quantiles_sane() {
+        let mut s = Stats::new();
+        // Exact regime: n ≤ cap.
+        for i in 0..100 {
+            s.push(i as f64);
+        }
+        assert_eq!(s.quantile(0.0), 0.0);
+        assert_eq!(s.quantile(1.0), 99.0);
+        assert!((s.quantile(0.5) - 49.5).abs() <= 0.5);
+        // Long-stream regime: memory bounded, estimates in-range.
+        for i in 100..200_000 {
+            s.push((i % 1000) as f64);
+        }
+        assert!(s.reservoir.len() <= RESERVOIR_CAP, "reservoir grew unbounded");
+        assert_eq!(s.n, 200_000);
+        let p50 = s.quantile(0.5);
+        assert!((0.0..=999.0).contains(&p50));
+        // Uniform 0..999 stream: the sampled median lands near 500.
+        assert!((p50 - 500.0).abs() < 120.0, "p50 estimate {p50}");
+        // Welford summaries are unaffected by the reservoir.
+        assert_eq!(s.min, 0.0);
+        assert_eq!(s.max, 999.0);
+        // Empty stats: quantile is NaN, min/max are sentinels.
+        let e = Stats::default();
+        assert!(e.quantile(0.5).is_nan());
+        assert!(e.min.is_infinite() && e.max.is_infinite());
     }
 
     #[test]

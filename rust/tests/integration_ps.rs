@@ -176,6 +176,68 @@ fn time_limit_stops_run() {
     assert!(res.stats.updates > 0, "should do some updates before the limit");
 }
 
+/// ISSUE 2 satellite: a `max_rows`-capped worker must rotate through
+/// its *whole* shard over successive iterations (the old code resampled
+/// the same `head(max_rows)` rows forever).  A probe engine records the
+/// row ids (encoded in the first feature) that reach the gradient.
+#[test]
+fn capped_worker_covers_whole_shard() {
+    use advgp::grad::{GradEngine, GradResult};
+    use advgp::linalg::Mat;
+    use std::collections::HashSet;
+    use std::sync::{Arc, Mutex};
+
+    struct Probe {
+        layout: ThetaLayout,
+        cap: usize,
+        seen: Arc<Mutex<HashSet<i64>>>,
+    }
+    impl GradEngine for Probe {
+        fn layout(&self) -> ThetaLayout {
+            self.layout
+        }
+        fn grad(&mut self, _theta: &[f64], x: &Mat, _y: &[f64]) -> GradResult {
+            assert_eq!(x.rows, self.cap, "window must be exactly the cap");
+            let mut seen = self.seen.lock().unwrap();
+            for i in 0..x.rows {
+                seen.insert(x.row(i)[0].round() as i64);
+            }
+            GradResult { value: 0.0, grad: vec![0.0; self.layout.len()] }
+        }
+        fn name(&self) -> &'static str {
+            "probe"
+        }
+    }
+
+    let n = 30usize;
+    let cap = 8usize;
+    let layout = ThetaLayout::new(2, 1);
+    let shard = Dataset {
+        x: Mat::from_vec(n, 1, (0..n).map(|i| i as f64).collect()),
+        y: vec![0.0; n],
+    };
+    let z0 = Mat::from_vec(2, 1, vec![3.0, 20.0]);
+    let theta = Theta::init(layout, &z0);
+    let seen = Arc::new(Mutex::new(HashSet::new()));
+    let seen_f = Arc::clone(&seen);
+    let factory: advgp::grad::EngineFactory = Arc::new(move |_worker| {
+        Box::new(Probe { layout, cap, seen: Arc::clone(&seen_f) })
+    });
+    let mut cfg = TrainConfig::new(layout);
+    cfg.tau = 32;
+    cfg.max_updates = 12; // ≥ ⌈30/8⌉ = 4 worker iterations needed
+    cfg.eval_every_secs = 0.0;
+    cfg.profiles = vec![WorkerProfile { max_rows: cap, ..Default::default() }];
+    train(&cfg, theta.data.clone(), vec![shard], factory, None);
+    let seen = seen.lock().unwrap();
+    let missing: Vec<usize> = (0..n).filter(|i| !seen.contains(&(*i as i64))).collect();
+    assert!(
+        missing.is_empty(),
+        "capped worker never saw rows {missing:?} (saw {} of {n})",
+        seen.len()
+    );
+}
+
 #[test]
 fn sync_tau0_matches_single_worker_semantics() {
     // With τ=0 and identical data splits, every update aggregates one

@@ -10,7 +10,8 @@
 //! match to tight floating-point tolerance.
 
 use advgp::gp::featuremap::{FeatureMap, InducingChol, PhiBatch, PhiWorkspace};
-use advgp::gp::{Theta, ThetaLayout};
+use advgp::gp::{PredictWorkspace, SparseGp, Theta, ThetaLayout};
+use advgp::linalg::dot;
 use advgp::grad::{native::NativeEngine, GradEngine};
 use advgp::kernel::{cross, cross_pairwise, ArdParams};
 use advgp::linalg::{set_par_min_flops, Mat};
@@ -166,6 +167,111 @@ fn native_grad_equivalent_across_budgets() {
     let r0 = eng.grad(&theta, &x0, &[]);
     assert_eq!(r0.value, 0.0);
     assert!(r0.grad.iter().all(|g| g.abs() < 1e-12));
+}
+
+/// Per-row reference posterior (the pre-ISSUE-2 `SparseGp` loops): one
+/// `u.matvec(φ_i)` per row, sequential sums.  The blocked path must
+/// match it to ≤1e-12 elementwise at every thread budget.
+fn reference_predict_and_data_term(
+    gp: &SparseGp,
+    x: &advgp::linalg::Mat,
+    y: &[f64],
+) -> (Vec<f64>, Vec<f64>, f64) {
+    let theta = &gp.theta;
+    let map = InducingChol::build(&theta.ard(), theta.z_mat());
+    let pb = map.phi(&theta.ard(), x);
+    let mu = theta.mu();
+    let u = theta.u_mat();
+    let mean = pb.phi.matvec(mu);
+    let noise = (2.0 * theta.log_sigma()).exp();
+    let beta = theta.beta();
+    let log_sigma = theta.log_sigma();
+    let mut var = Vec::with_capacity(x.rows);
+    let mut g = 0.0;
+    for i in 0..x.rows {
+        let phi_i = pb.phi.row(i);
+        let uphi = u.matvec(phi_i);
+        let quad: f64 = uphi.iter().map(|v| v * v).sum();
+        var.push((pb.ktilde[i] + quad).max(1e-12) + noise);
+        let e = dot(phi_i, mu) - y[i];
+        g += 0.5 * (2.0 * std::f64::consts::PI).ln() + log_sigma
+            + 0.5 * beta * (e * e + quad + pb.ktilde[i]);
+    }
+    (mean, var, g)
+}
+
+fn random_sparse_gp(m: usize, d: usize, seed: u64) -> SparseGp {
+    let mut rng = Pcg64::seeded(seed);
+    let z = rand_mat(&mut rng, m, d);
+    let mut th = Theta::init(ThetaLayout::new(m, d), &z);
+    for v in th.mu_mut() {
+        *v = rng.normal() * 0.5;
+    }
+    let mut u = Mat::zeros(m, m);
+    for i in 0..m {
+        u[(i, i)] = 0.5 + rng.next_f64();
+        for j in i + 1..m {
+            u[(i, j)] = rng.normal() * 0.1;
+        }
+    }
+    th.set_u_mat(&u);
+    th.data[th.layout.log_a0_idx()] = rng.normal() * 0.2;
+    th.data[th.layout.log_sigma_idx()] = -0.5 + rng.normal() * 0.1;
+    SparseGp::new(th)
+}
+
+/// ISSUE 2 tentpole invariant: the blocked, workspace-reusing
+/// `predict_into`/`data_term_ws` match the per-row reference to ≤1e-12
+/// elementwise across odd shapes and thread budgets 1–8, with pool
+/// dispatch forced for every op.
+#[test]
+fn blocked_posterior_matches_per_row_reference_across_budgets() {
+    set_par_min_flops(1);
+    forall(
+        "blocked predict/data_term == per-row reference",
+        &Config { cases: 24, seed: 0x5E27E },
+        |rng: &mut Pcg64| {
+            const NS: [usize; 7] = [1, 2, 3, 7, 33, 65, 130];
+            const MS: [usize; 4] = [1, 2, 5, 9];
+            (
+                NS[rng.next_below(NS.len() as u64) as usize],
+                MS[rng.next_below(MS.len() as u64) as usize],
+                1 + rng.next_below(3) as usize,
+            )
+        },
+        |&(n, m, d)| {
+            let mut rng = Pcg64::seeded((n * 7919 + m * 101 + d) as u64);
+            let gp = random_sparse_gp(m, d, (n + m * 1000 + d) as u64);
+            let x = rand_mat(&mut rng, n, d);
+            let y: Vec<f64> = (0..n).map(|_| rng.normal()).collect();
+            let (mr, vr, gr) = reference_predict_and_data_term(&gp, &x, &y);
+            let mut ws = PredictWorkspace::new();
+            let mut mean = Vec::new();
+            let mut var = Vec::new();
+            for t in [1usize, 2, 3, 4, 8] {
+                let g = pool::with_budget(t, || {
+                    gp.predict_into(&x, &mut ws, &mut mean, &mut var);
+                    gp.data_term_ws(&x, &y, &mut ws)
+                });
+                advgp::prop_assert!(mean == mr, "mean differs at budget {t} (n={n} m={m})");
+                for i in 0..n {
+                    let scale = vr[i].abs().max(1.0);
+                    advgp::prop_assert!(
+                        (var[i] - vr[i]).abs() <= 1e-12 * scale,
+                        "var[{i}] {} vs {} at budget {t}",
+                        var[i],
+                        vr[i]
+                    );
+                }
+                let gscale = gr.abs().max(1.0);
+                advgp::prop_assert!(
+                    (g - gr).abs() <= 1e-12 * gscale,
+                    "data_term {g} vs {gr} at budget {t} (n={n} m={m} d={d})"
+                );
+            }
+            Ok(())
+        },
+    );
 }
 
 /// `ADVGP_THREADS=1`-equivalent behaviour: budget 1 must bypass the

@@ -1,0 +1,89 @@
+#!/usr/bin/env python3
+"""Diff two ADVGP bench JSON dumps and print a regression table.
+
+Usage:
+    scripts/bench_diff.py OLD.json NEW.json [--fail-over PCT]
+
+Works on any file written by the `perf_hotpath` / `perf_predict`
+benches (schema 1: {"benches": [{"name", "mean_ns", ...}]}).  Benches
+are matched by name; the table shows old/new mean ns/iter and the
+relative delta (positive = slower).  Entries present on only one side
+are listed separately.  Exit code is 0 unless --fail-over is given and
+some bench regressed by more than PCT percent.
+
+stdlib-only (the build environment is offline).
+"""
+
+import argparse
+import json
+import sys
+
+
+def load(path):
+    with open(path) as f:
+        doc = json.load(f)
+    out = {}
+    for b in doc.get("benches", []):
+        name = b.get("name")
+        mean = b.get("mean_ns")
+        if name is not None and mean is not None:
+            out[name] = b
+    return doc, out
+
+
+def fmt_ns(ns):
+    if ns < 1e3:
+        return f"{ns:.0f}ns"
+    if ns < 1e6:
+        return f"{ns / 1e3:.2f}us"
+    if ns < 1e9:
+        return f"{ns / 1e6:.3f}ms"
+    return f"{ns / 1e9:.3f}s"
+
+
+def main():
+    ap = argparse.ArgumentParser(description=__doc__)
+    ap.add_argument("old")
+    ap.add_argument("new")
+    ap.add_argument(
+        "--fail-over",
+        type=float,
+        default=None,
+        metavar="PCT",
+        help="exit 1 if any bench regressed by more than PCT percent",
+    )
+    args = ap.parse_args()
+
+    old_doc, old = load(args.old)
+    new_doc, new = load(args.new)
+    ot, nt = old_doc.get("threads"), new_doc.get("threads")
+    if ot != nt:
+        print(f"note: thread counts differ (old={ot}, new={nt}); deltas are not comparable\n")
+
+    shared = [n for n in new if n in old]
+    name_w = max((len(n) for n in shared), default=4) + 2
+    print(f"{'bench':<{name_w}} {'old':>10} {'new':>10} {'delta':>8}")
+    worst = 0.0
+    for name in shared:
+        o, n = old[name]["mean_ns"], new[name]["mean_ns"]
+        delta = (n - o) / o * 100.0 if o > 0 else float("nan")
+        worst = max(worst, delta)
+        flag = "  <-- regression" if delta > 10.0 else ""
+        print(f"{name:<{name_w}} {fmt_ns(o):>10} {fmt_ns(n):>10} {delta:>+7.1f}%{flag}")
+        rps_o, rps_n = old[name].get("rows_per_sec"), new[name].get("rows_per_sec")
+        if rps_o and rps_n:
+            print(f"{'':<{name_w}} {rps_o:>10.0f} {rps_n:>10.0f}  rows/s")
+
+    for name in sorted(set(old) - set(new)):
+        print(f"{name:<{name_w}} {fmt_ns(old[name]['mean_ns']):>10} {'(gone)':>10}")
+    for name in sorted(set(new) - set(old)):
+        print(f"{name:<{name_w}} {'(new)':>10} {fmt_ns(new[name]['mean_ns']):>10}")
+
+    if args.fail_over is not None and worst > args.fail_over:
+        print(f"\nFAIL: worst regression {worst:+.1f}% exceeds {args.fail_over}%")
+        return 1
+    return 0
+
+
+if __name__ == "__main__":
+    sys.exit(main())
