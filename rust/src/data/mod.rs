@@ -1,14 +1,29 @@
 //! Datasets: container, standardization, sharding, CSV I/O, synthetic
-//! generators and k-means++ inducing-point initialization.
+//! generators, k-means++ inducing-point initialization, and the
+//! out-of-core shard [`store`].
+//!
+//! This is the data layer under the paper's §4 topology: [`Dataset::shard`]
+//! produces the per-worker partition D = ∪ D_k (one contiguous,
+//! near-equal shard per worker), and [`store::ShardSet`] is its on-disk
+//! twin for runs where a shard must not be resident in worker memory.
+//!
+//! Key invariants:
+//! * Partitions are exact: shards are disjoint, cover every row once,
+//!   and sizes differ by at most one.
+//! * Degenerate partitions are rejected loudly — see the contracts on
+//!   [`Dataset::split`] and [`Dataset::shard`].
+//! * [`Standardizer`] statistics are fit on training data only and are
+//!   invertible (`unscale_y`), so reported RMSE is in original units.
 
 pub mod csv;
 pub mod kmeans;
+pub mod store;
 pub mod synth;
 
 use crate::linalg::Mat;
 use crate::util::rng::Pcg64;
 
-/// A regression dataset: features `x` [n, d] and targets `y` [n].
+/// A regression dataset: features `x` `[n, d]` and targets `y` `[n]`.
 #[derive(Clone, Debug)]
 pub struct Dataset {
     pub x: Mat,
@@ -25,8 +40,19 @@ impl Dataset {
     }
 
     /// Split off the last `n_test` rows (callers shuffle first).
+    ///
+    /// # Contract
+    ///
+    /// Panics unless `0 < n_test < n`: both sides of the split must be
+    /// non-empty (an empty train or test set silently poisons every
+    /// downstream statistic, so it is rejected here instead).
     pub fn split(mut self, n_test: usize) -> (Dataset, Dataset) {
-        assert!(n_test < self.n());
+        assert!(
+            n_test > 0 && n_test < self.n(),
+            "Dataset::split: n_test={n_test} must satisfy 0 < n_test < n={} \
+             (both partitions must be non-empty)",
+            self.n()
+        );
         let n_train = self.n() - n_test;
         let d = self.d();
         let test_x = Mat::from_vec(
@@ -58,26 +84,39 @@ impl Dataset {
     }
 
     /// Contiguous shards of near-equal size (one per worker, §4).
+    ///
+    /// # Contract
+    ///
+    /// Panics unless `1 ≤ r ≤ n`: every worker must receive at least
+    /// one row (an empty shard would deadlock the bounded-staleness
+    /// gate, which waits for a gradient from every worker).
+    ///
+    /// ```
+    /// use advgp::data::Dataset;
+    /// use advgp::linalg::Mat;
+    ///
+    /// let ds = Dataset {
+    ///     x: Mat::from_vec(10, 1, (0..10).map(|i| i as f64).collect()),
+    ///     y: vec![0.0; 10],
+    /// };
+    /// let shards = ds.shard(3); // sizes 4 + 3 + 3
+    /// assert_eq!(shards.iter().map(|s| s.n()).sum::<usize>(), 10);
+    /// assert_eq!(shards[0].n(), 4);
+    /// assert_eq!(shards[2].x.row(0)[0], 7.0); // contiguous partition
+    /// ```
     pub fn shard(&self, r: usize) -> Vec<Dataset> {
-        assert!(r >= 1);
-        let n = self.n();
         let d = self.d();
-        let base = n / r;
-        let extra = n % r;
-        let mut out = Vec::with_capacity(r);
-        let mut start = 0;
-        for k in 0..r {
-            let len = base + usize::from(k < extra);
-            let x = Mat::from_vec(
-                len,
-                d,
-                self.x.data[start * d..(start + len) * d].to_vec(),
-            );
-            let y = self.y[start..start + len].to_vec();
-            out.push(Dataset { x, y });
-            start += len;
-        }
-        out
+        shard_spans(self.n(), r)
+            .map(|span| {
+                let x = Mat::from_vec(
+                    span.len(),
+                    d,
+                    self.x.data[span.start * d..span.end * d].to_vec(),
+                );
+                let y = self.y[span].to_vec();
+                Dataset { x, y }
+            })
+            .collect()
     }
 
     /// Take the first `k` rows (for subsampling).
@@ -115,6 +154,27 @@ impl Dataset {
             out.y[first..].copy_from_slice(&self.y[..rest]);
         }
     }
+}
+
+/// The §4 partition arithmetic, shared by [`Dataset::shard`] and the
+/// on-disk [`store::ShardSet`]: `r` contiguous row spans of near-equal
+/// size (first `n % r` spans get one extra row) covering `0..n` exactly
+/// once.  Panics unless `1 ≤ r ≤ n` — see [`Dataset::shard`].
+pub fn shard_spans(n: usize, r: usize) -> impl Iterator<Item = std::ops::Range<usize>> {
+    assert!(
+        r >= 1 && r <= n,
+        "shard: cannot partition n={n} rows into r={r} non-empty shards \
+         (need 1 <= r <= n)"
+    );
+    let base = n / r;
+    let extra = n % r;
+    let mut start = 0;
+    (0..r).map(move |k| {
+        let len = base + usize::from(k < extra);
+        let span = start..start + len;
+        start += len;
+        span
+    })
 }
 
 /// Per-feature/target standardization statistics (fit on train only).
@@ -209,6 +269,30 @@ mod tests {
         let mut ys: Vec<f64> = shards.iter().flat_map(|s| s.y.clone()).collect();
         ys.sort_by(|a, b| a.partial_cmp(b).unwrap());
         assert_eq!(ys, ds.y);
+    }
+
+    #[test]
+    #[should_panic(expected = "0 < n_test < n")]
+    fn split_rejects_test_set_as_big_as_data() {
+        toy(5, 2).split(5);
+    }
+
+    #[test]
+    #[should_panic(expected = "0 < n_test < n")]
+    fn split_rejects_empty_test_set() {
+        toy(5, 2).split(0);
+    }
+
+    #[test]
+    #[should_panic(expected = "non-empty")]
+    fn shard_rejects_more_workers_than_rows() {
+        toy(3, 2).shard(4);
+    }
+
+    #[test]
+    #[should_panic(expected = "non-empty")]
+    fn shard_rejects_zero_workers() {
+        toy(3, 2).shard(0);
     }
 
     #[test]

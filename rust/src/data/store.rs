@@ -1,0 +1,733 @@
+//! Out-of-core shard store (ISSUE 3): the disk layer that lets a worker
+//! train on a shard far larger than its RAM — the paper's §1 regime
+//! ("billions of samples") needs data locality to be a property of the
+//! *store*, not of process memory (cf. Gal et al., 2014, on distributed
+//! data placement in sparse-GP inference).
+//!
+//! # Shard file format `ADVGPSH1`
+//!
+//! All values little-endian:
+//!
+//! ```text
+//! [ 0.. 8)  magic   b"ADVGPSH1"
+//! [ 8..16)  n       u64 row count        (≥ 1)
+//! [16..24)  d       u64 feature count    (≥ 1)
+//! [24.. )   rows    n × (d features + 1 target) f64, row-major
+//! ```
+//!
+//! A row is contiguous (`x[0..d]` then `y`), so any window of rows is a
+//! single ranged read.  The file is sealed by write-to-temp + atomic
+//! rename: a crash mid-write can never leave a half-valid shard at the
+//! final path, and [`ShardReader::open`] rejects bad magic, short
+//! headers, and length mismatches (truncation or trailing garbage).
+//!
+//! # Key invariants
+//!
+//! * **Zero steady-state allocation**: [`ShardReader`] streams windows
+//!   through one internal byte buffer and one caller-owned [`Dataset`]
+//!   buffer; both are grown once and recycled forever after (pinned by
+//!   `tests/store_checkpoint.rs`).  Peak resident data per worker is
+//!   one chunk, not the shard.
+//! * **Traversal parity**: the cyclic window at `(start, k)` decodes
+//!   bitwise-identically to [`Dataset::copy_cyclic_window`] on the
+//!   in-memory shard, so an out-of-core worker visits exactly the rows
+//!   its resident twin would, in the same order.
+//! * **Partition parity**: [`ShardSet::create`] writes the same
+//!   contiguous near-equal partition as [`Dataset::shard`] (and
+//!   enforces the same `1 ≤ r ≤ n` contract).
+
+use super::Dataset;
+use crate::util::json::Json;
+use anyhow::{ensure, Context, Result};
+use std::fs::File;
+use std::io::{BufWriter, Read, Seek, SeekFrom, Write};
+use std::path::{Path, PathBuf};
+
+/// Magic bytes opening every shard file.
+pub const SHARD_MAGIC: [u8; 8] = *b"ADVGPSH1";
+/// Shard header length in bytes (magic + n + d).
+pub const SHARD_HEADER_LEN: u64 = 24;
+/// Default minibatch chunk (rows per streamed window).
+pub const DEFAULT_CHUNK_ROWS: usize = 4096;
+/// Name of the [`ShardSet`] manifest inside its directory.
+pub const STORE_MANIFEST: &str = "store.json";
+
+/// Streaming writer for one shard file.
+///
+/// Rows are appended to `<path>.tmp`; [`ShardWriter::finish`] patches
+/// the row count into the header, fsyncs, and atomically renames the
+/// file into place.  An abandoned writer (dropped unfinished, or a
+/// failed `finish`) removes its temp file, so aborted writes leave
+/// nothing behind.
+pub struct ShardWriter {
+    /// `None` once `finish` has consumed the stream.
+    w: Option<BufWriter<File>>,
+    path: PathBuf,
+    tmp: PathBuf,
+    d: usize,
+    n: u64,
+}
+
+impl ShardWriter {
+    /// Start a shard at `path` for `d`-feature rows.
+    pub fn create(path: &Path, d: usize) -> Result<Self> {
+        ensure!(d >= 1, "shard store needs d >= 1 features (got {d})");
+        let tmp = tmp_path(path);
+        let f = File::create(&tmp)
+            .with_context(|| format!("create shard temp {}", tmp.display()))?;
+        let mut w = BufWriter::new(f);
+        w.write_all(&SHARD_MAGIC)?;
+        w.write_all(&0u64.to_le_bytes())?; // n, patched by finish()
+        w.write_all(&(d as u64).to_le_bytes())?;
+        Ok(Self { w: Some(w), path: path.to_path_buf(), tmp, d, n: 0 })
+    }
+
+    /// Append one row (`x` must have exactly `d` features).
+    pub fn push_row(&mut self, x: &[f64], y: f64) -> Result<()> {
+        ensure!(
+            x.len() == self.d,
+            "row has {} features, shard expects {}",
+            x.len(),
+            self.d
+        );
+        let w = self.w.as_mut().expect("writer already finished");
+        for v in x {
+            w.write_all(&v.to_le_bytes())?;
+        }
+        w.write_all(&y.to_le_bytes())?;
+        self.n += 1;
+        Ok(())
+    }
+
+    /// Append every row of `ds`.
+    pub fn push_dataset(&mut self, ds: &Dataset) -> Result<()> {
+        for r in 0..ds.n() {
+            self.push_row(ds.x.row(r), ds.y[r])?;
+        }
+        Ok(())
+    }
+
+    /// Seal the shard: patch the header row count, fsync, and rename
+    /// the temp file to its final path.  Returns the row count; on
+    /// error the temp file is removed.
+    pub fn finish(mut self) -> Result<u64> {
+        let res = self.finish_inner();
+        if res.is_err() {
+            let _ = std::fs::remove_file(&self.tmp);
+        }
+        res
+    }
+
+    fn finish_inner(&mut self) -> Result<u64> {
+        ensure!(self.n >= 1, "refusing to seal an empty shard (0 rows)");
+        let mut w = self.w.take().expect("writer already finished");
+        w.flush()?;
+        w.seek(SeekFrom::Start(8))?;
+        w.write_all(&self.n.to_le_bytes())?;
+        w.flush()?;
+        let f = w.into_inner().context("flush shard writer")?;
+        f.sync_all().context("fsync shard")?;
+        drop(f);
+        std::fs::rename(&self.tmp, &self.path).with_context(|| {
+            format!("rename {} -> {}", self.tmp.display(), self.path.display())
+        })?;
+        Ok(self.n)
+    }
+}
+
+impl Drop for ShardWriter {
+    fn drop(&mut self) {
+        // Unfinished writer: close the stream, then discard the temp
+        // file so aborted writes don't accumulate.  (`finish` takes the
+        // stream out first, so a sealed shard is never touched.)
+        if self.w.take().is_some() {
+            let _ = std::fs::remove_file(&self.tmp);
+        }
+    }
+}
+
+/// Write `ds` as a single shard file at `path` (atomic; see
+/// [`ShardWriter`]).
+pub fn write_shard(path: &Path, ds: &Dataset) -> Result<()> {
+    let mut w = ShardWriter::create(path, ds.d())?;
+    w.push_dataset(ds)?;
+    w.finish()?;
+    Ok(())
+}
+
+/// Order-sensitive FNV-1a fingerprint over a dataset's exact f64 bit
+/// patterns (features row-major, then targets).  Stored in the
+/// [`ShardSet`] manifest so a reused store can be tied to its *source
+/// data*, not just its shape — two datasets with equal `(n, d)` but
+/// different contents (another seed, a regenerated CSV) fingerprint
+/// differently.
+pub fn dataset_fingerprint(ds: &Dataset) -> u64 {
+    let mut h = crate::util::FNV1A64_INIT;
+    for v in ds.x.data.iter().chain(&ds.y) {
+        h = crate::util::fnv1a64(h, &v.to_le_bytes());
+    }
+    h
+}
+
+/// Streams fixed-size minibatch windows out of one shard file.
+///
+/// The reader holds a cursor for [`ShardReader::next_window`] and a
+/// reusable byte buffer; windows wrap cyclically so offsets
+/// `start, start + k, start + 2k, …` (mod n) tile the whole shard
+/// within ⌈n/k⌉ reads from any starting offset — the same coverage
+/// guarantee as [`Dataset::copy_cyclic_window`].
+///
+/// ```
+/// use advgp::data::store::{write_shard, ShardReader};
+/// use advgp::data::Dataset;
+/// use advgp::linalg::Mat;
+///
+/// let dir = std::env::temp_dir().join("advgp_doc_shard_reader");
+/// std::fs::create_dir_all(&dir).unwrap();
+/// let path = dir.join("toy.shard");
+/// let ds = Dataset {
+///     x: Mat::from_vec(5, 2, (0..10).map(|i| i as f64).collect()),
+///     y: (0..5).map(|i| 10.0 * i as f64).collect(),
+/// };
+/// write_shard(&path, &ds).unwrap();
+///
+/// let mut reader = ShardReader::open(&path).unwrap();
+/// reader.set_chunk_rows(2);
+/// let mut window = Dataset { x: Mat::empty(), y: Vec::new() };
+/// reader.next_window(&mut window).unwrap(); // rows 0, 1
+/// assert_eq!(window.y, vec![0.0, 10.0]);
+/// reader.next_window(&mut window).unwrap(); // rows 2, 3
+/// reader.next_window(&mut window).unwrap(); // rows 4, 0 (wraps)
+/// assert_eq!(window.y, vec![40.0, 0.0]);
+/// assert_eq!((reader.n(), reader.d()), (5, 2));
+/// ```
+pub struct ShardReader {
+    f: File,
+    path: PathBuf,
+    n: usize,
+    d: usize,
+    chunk_rows: usize,
+    offset: usize,
+    /// Reusable raw block buffer (grown once, recycled per window).
+    buf: Vec<u8>,
+}
+
+impl ShardReader {
+    /// Open and validate a shard file.
+    pub fn open(path: &Path) -> Result<Self> {
+        let mut f = File::open(path)
+            .with_context(|| format!("open shard {}", path.display()))?;
+        let mut header = [0u8; SHARD_HEADER_LEN as usize];
+        f.read_exact(&mut header).with_context(|| {
+            format!("shard {} shorter than its header", path.display())
+        })?;
+        ensure!(
+            header[..8] == SHARD_MAGIC,
+            "shard {}: bad magic {:?} (want {:?})",
+            path.display(),
+            &header[..8],
+            SHARD_MAGIC
+        );
+        let n = u64::from_le_bytes(header[8..16].try_into().unwrap());
+        let d = u64::from_le_bytes(header[16..24].try_into().unwrap());
+        ensure!(n >= 1 && d >= 1, "shard {}: degenerate n={n} d={d}", path.display());
+        let want = SHARD_HEADER_LEN as u128 + n as u128 * (d + 1) as u128 * 8;
+        let have = f.metadata()?.len() as u128;
+        ensure!(
+            have == want,
+            "shard {}: {have} bytes on disk, header declares {want} \
+             (truncated or corrupt)",
+            path.display()
+        );
+        Ok(Self {
+            f,
+            path: path.to_path_buf(),
+            n: n as usize,
+            d: d as usize,
+            chunk_rows: DEFAULT_CHUNK_ROWS,
+            offset: 0,
+            buf: Vec::new(),
+        })
+    }
+
+    pub fn n(&self) -> usize {
+        self.n
+    }
+
+    pub fn d(&self) -> usize {
+        self.d
+    }
+
+    pub fn path(&self) -> &Path {
+        &self.path
+    }
+
+    /// Rows per [`ShardReader::next_window`] call (clamped to n).
+    pub fn chunk_rows(&self) -> usize {
+        self.chunk_rows.min(self.n)
+    }
+
+    pub fn set_chunk_rows(&mut self, rows: usize) {
+        self.chunk_rows = rows.max(1);
+    }
+
+    /// Move the streaming cursor (wraps mod n).
+    pub fn seek_to(&mut self, offset: usize) {
+        self.offset = offset % self.n;
+    }
+
+    /// Current streaming cursor.
+    pub fn cursor(&self) -> usize {
+        self.offset
+    }
+
+    /// Capacity of the internal byte buffer — exposed so tests can pin
+    /// the zero-steady-state-allocation guarantee.
+    pub fn buf_capacity(&self) -> usize {
+        self.buf.capacity()
+    }
+
+    /// Read `k` consecutive rows starting at `start` (wrapping around
+    /// the end) into `out` — the on-disk twin of
+    /// [`Dataset::copy_cyclic_window`], bitwise-identical to it on the
+    /// same data.  Allocation-free once `out` and the internal buffer
+    /// are warm.
+    pub fn read_window(&mut self, start: usize, k: usize, out: &mut Dataset) -> Result<()> {
+        let n = self.n;
+        let d = self.d;
+        let k = k.min(n);
+        out.x.resize(k, d);
+        out.y.resize(k, 0.0);
+        if k == 0 {
+            return Ok(());
+        }
+        let start = start % n;
+        let first = k.min(n - start);
+        self.read_rows(start, first, 0, out)?;
+        if first < k {
+            self.read_rows(0, k - first, first, out)?; // wrapped prefix
+        }
+        Ok(())
+    }
+
+    /// Stream the next `chunk_rows()` window at the cursor and advance
+    /// it, wrapping cyclically.  Returns the rows read.
+    pub fn next_window(&mut self, out: &mut Dataset) -> Result<usize> {
+        let k = self.chunk_rows();
+        self.read_window(self.offset, k, out)?;
+        self.offset = (self.offset + k) % self.n;
+        Ok(k)
+    }
+
+    /// Materialize the whole shard (tests / small-data convenience —
+    /// defeats the point of the store for real runs).
+    pub fn read_all(&mut self) -> Result<Dataset> {
+        let mut out = Dataset { x: crate::linalg::Mat::empty(), y: Vec::new() };
+        let n = self.n;
+        self.read_window(0, n, &mut out)?;
+        Ok(out)
+    }
+
+    /// Ranged read of `rows` rows at file row `row0` into `out` rows
+    /// `out_row0..`, de-interleaving features and target.
+    fn read_rows(
+        &mut self,
+        row0: usize,
+        rows: usize,
+        out_row0: usize,
+        out: &mut Dataset,
+    ) -> Result<()> {
+        let d = self.d;
+        let stride = (d + 1) * 8;
+        let bytes = rows * stride;
+        self.buf.resize(bytes, 0);
+        self.f
+            .seek(SeekFrom::Start(SHARD_HEADER_LEN + (row0 * stride) as u64))?;
+        self.f.read_exact(&mut self.buf[..bytes]).with_context(|| {
+            format!("shard {}: short read at row {row0}", self.path.display())
+        })?;
+        for r in 0..rows {
+            let base = r * stride;
+            let xrow = out.x.row_mut(out_row0 + r);
+            for c in 0..d {
+                let o = base + c * 8;
+                xrow[c] = f64::from_le_bytes(self.buf[o..o + 8].try_into().unwrap());
+            }
+            let o = base + d * 8;
+            out.y[out_row0 + r] =
+                f64::from_le_bytes(self.buf[o..o + 8].try_into().unwrap());
+        }
+        Ok(())
+    }
+}
+
+/// A directory of shard files plus a JSON manifest: the on-disk form of
+/// `Dataset::shard(r)`.  Created once, then each worker opens its own
+/// [`ShardReader`] — nothing is cloned into worker memory.
+pub struct ShardSet {
+    dir: PathBuf,
+    n: usize,
+    d: usize,
+    chunk_rows: usize,
+    fingerprint: u64,
+    files: Vec<PathBuf>,
+}
+
+impl ShardSet {
+    /// Partition `ds` into `r` shard files under `dir` (created if
+    /// missing) with the manifest last, so a crash mid-create never
+    /// leaves an openable-but-incomplete store.  Refuses to write over
+    /// an existing store: re-partitioning in place could leave a stale
+    /// manifest pointing at a mix of old and new shard files, so delete
+    /// the directory (or its manifest) first.  The partition is the
+    /// same [`crate::data::shard_spans`] split as [`Dataset::shard`]
+    /// and shares its `1 ≤ r ≤ ds.n()` panic contract.
+    pub fn create(dir: &Path, ds: &Dataset, r: usize, chunk_rows: usize) -> Result<Self> {
+        let n = ds.n();
+        let d = ds.d();
+        ensure!(
+            !Self::exists(dir),
+            "store already exists at {} — delete it (or its {STORE_MANIFEST}) \
+             before re-partitioning",
+            dir.display()
+        );
+        std::fs::create_dir_all(dir)
+            .with_context(|| format!("create store dir {}", dir.display()))?;
+        let mut files = Vec::with_capacity(r);
+        let mut write_all = || -> Result<()> {
+            for (k, span) in crate::data::shard_spans(n, r).enumerate() {
+                let path = dir.join(format!("shard_{k:03}.bin"));
+                let mut w = ShardWriter::create(&path, d)?;
+                for row in span {
+                    w.push_row(ds.x.row(row), ds.y[row])?;
+                }
+                w.finish()?;
+                files.push(path);
+            }
+            Ok(())
+        };
+        if let Err(e) = write_all() {
+            // Don't strand a partial partition (disk full mid-create…):
+            // no manifest was written, so the dir must stay reusable.
+            for f in &files {
+                let _ = std::fs::remove_file(f);
+            }
+            return Err(e);
+        }
+        let set = Self {
+            dir: dir.to_path_buf(),
+            n,
+            d,
+            chunk_rows: chunk_rows.max(1),
+            fingerprint: dataset_fingerprint(ds),
+            files,
+        };
+        set.write_manifest()?;
+        Ok(set)
+    }
+
+    /// Open an existing store from its manifest, cross-checking every
+    /// shard header against it (feature count and total row count), so
+    /// a manifest desynchronized from its shard files is rejected here
+    /// rather than silently training on the wrong partition.
+    pub fn open(dir: &Path) -> Result<Self> {
+        let mpath = dir.join(STORE_MANIFEST);
+        let text = std::fs::read_to_string(&mpath)
+            .with_context(|| format!("read store manifest {}", mpath.display()))?;
+        let v = Json::parse(&text)
+            .map_err(|e| anyhow::anyhow!("parse {}: {e}", mpath.display()))?;
+        let format = v.get("format").and_then(Json::as_str).unwrap_or("");
+        ensure!(
+            format == "advgp-store-v1",
+            "{}: unknown store format {format:?}",
+            mpath.display()
+        );
+        let n = v.get("n").and_then(Json::as_usize).context("manifest: n")?;
+        let d = v.get("d").and_then(Json::as_usize).context("manifest: d")?;
+        let chunk_rows = v
+            .get("chunk_rows")
+            .and_then(Json::as_usize)
+            .unwrap_or(DEFAULT_CHUNK_ROWS);
+        let fingerprint = v
+            .get("fingerprint")
+            .and_then(Json::as_str)
+            .and_then(|s| u64::from_str_radix(s, 16).ok())
+            .with_context(|| format!("{}: missing/bad fingerprint", mpath.display()))?;
+        let names = v.get("files").and_then(Json::as_arr).context("manifest: files")?;
+        let mut files = Vec::with_capacity(names.len());
+        let mut rows = 0usize;
+        for name in names {
+            let name = name.as_str().context("manifest: file name")?;
+            let path = dir.join(name);
+            let reader = ShardReader::open(&path)
+                .with_context(|| format!("store shard {}", path.display()))?;
+            ensure!(
+                reader.d() == d,
+                "{}: shard has d={} but manifest says {d}",
+                path.display(),
+                reader.d()
+            );
+            rows += reader.n();
+            files.push(path);
+        }
+        ensure!(!files.is_empty(), "{}: empty store", mpath.display());
+        ensure!(
+            rows == n,
+            "{}: shards hold {rows} rows but manifest says {n} — store and \
+             manifest are out of sync (recreate the store)",
+            mpath.display()
+        );
+        Ok(Self {
+            dir: dir.to_path_buf(),
+            n,
+            d,
+            chunk_rows: chunk_rows.max(1),
+            fingerprint,
+            files,
+        })
+    }
+
+    /// Does `dir` already hold a store manifest?
+    pub fn exists(dir: &Path) -> bool {
+        dir.join(STORE_MANIFEST).is_file()
+    }
+
+    pub fn dir(&self) -> &Path {
+        &self.dir
+    }
+
+    /// Total rows across all shards.
+    pub fn n(&self) -> usize {
+        self.n
+    }
+
+    pub fn d(&self) -> usize {
+        self.d
+    }
+
+    /// Number of shards (= workers the store was partitioned for).
+    pub fn r(&self) -> usize {
+        self.files.len()
+    }
+
+    pub fn chunk_rows(&self) -> usize {
+        self.chunk_rows
+    }
+
+    /// [`dataset_fingerprint`] of the source data this store was
+    /// partitioned from — compare before reusing a store for a run
+    /// whose data was (re)generated independently.
+    pub fn fingerprint(&self) -> u64 {
+        self.fingerprint
+    }
+
+    /// Open a validating reader on shard `k`, preconfigured with the
+    /// store's chunk size.
+    pub fn reader(&self, k: usize) -> Result<ShardReader> {
+        ensure!(k < self.files.len(), "shard index {k} out of {}", self.files.len());
+        let mut r = ShardReader::open(&self.files[k])?;
+        ensure!(
+            r.d() == self.d,
+            "{}: shard d={} but manifest says {}",
+            self.files[k].display(),
+            r.d(),
+            self.d
+        );
+        r.set_chunk_rows(self.chunk_rows);
+        Ok(r)
+    }
+
+    /// One reader per shard, in shard order.
+    pub fn readers(&self) -> Result<Vec<ShardReader>> {
+        (0..self.r()).map(|k| self.reader(k)).collect()
+    }
+
+    fn write_manifest(&self) -> Result<()> {
+        let names: Vec<Json> = self
+            .files
+            .iter()
+            .map(|p| Json::Str(p.file_name().unwrap().to_string_lossy().into_owned()))
+            .collect();
+        let doc = Json::obj(vec![
+            ("format", Json::Str("advgp-store-v1".into())),
+            ("n", Json::Num(self.n as f64)),
+            ("d", Json::Num(self.d as f64)),
+            ("r", Json::Num(self.r() as f64)),
+            ("chunk_rows", Json::Num(self.chunk_rows as f64)),
+            ("fingerprint", Json::Str(format!("{:016x}", self.fingerprint))),
+            ("files", Json::Arr(names)),
+        ]);
+        let path = self.dir.join(STORE_MANIFEST);
+        crate::util::atomic_write(&path, format!("{doc}\n").as_bytes())
+            .context("write store manifest")?;
+        Ok(())
+    }
+}
+
+fn tmp_path(path: &Path) -> PathBuf {
+    let mut os = path.as_os_str().to_os_string();
+    os.push(".tmp");
+    PathBuf::from(os)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::data::synth;
+    use crate::linalg::Mat;
+
+    fn tdir(name: &str) -> PathBuf {
+        let dir = std::env::temp_dir().join("advgp_store_test").join(name);
+        let _ = std::fs::remove_dir_all(&dir);
+        std::fs::create_dir_all(&dir).unwrap();
+        dir
+    }
+
+    #[test]
+    fn roundtrip_bitwise() {
+        let dir = tdir("roundtrip");
+        let ds = synth::friedman(37, 4, 0.3, 9);
+        let path = dir.join("a.shard");
+        write_shard(&path, &ds).unwrap();
+        let mut r = ShardReader::open(&path).unwrap();
+        assert_eq!((r.n(), r.d()), (37, 4));
+        let back = r.read_all().unwrap();
+        for i in 0..ds.n() {
+            assert_eq!(back.y[i].to_bits(), ds.y[i].to_bits());
+            for c in 0..ds.d() {
+                assert_eq!(back.x[(i, c)].to_bits(), ds.x[(i, c)].to_bits());
+            }
+        }
+    }
+
+    #[test]
+    fn window_matches_in_memory_cyclic_window() {
+        let dir = tdir("window");
+        let ds = synth::friedman(23, 3, 0.2, 4);
+        let path = dir.join("w.shard");
+        write_shard(&path, &ds).unwrap();
+        let mut r = ShardReader::open(&path).unwrap();
+        let mut disk = Dataset { x: Mat::empty(), y: Vec::new() };
+        let mut mem = Dataset { x: Mat::empty(), y: Vec::new() };
+        for (start, k) in [(0usize, 7usize), (20, 7), (22, 23), (5, 40), (11, 1)] {
+            r.read_window(start, k, &mut disk).unwrap();
+            ds.copy_cyclic_window(start, k, &mut mem);
+            assert_eq!(disk.n(), mem.n(), "start={start} k={k}");
+            for i in 0..mem.n() {
+                assert_eq!(disk.y[i].to_bits(), mem.y[i].to_bits());
+                for c in 0..mem.d() {
+                    assert_eq!(disk.x[(i, c)].to_bits(), mem.x[(i, c)].to_bits());
+                }
+            }
+        }
+    }
+
+    #[test]
+    fn open_rejects_corruption() {
+        let dir = tdir("corrupt");
+        let ds = synth::friedman(10, 2, 0.1, 1);
+        let good = dir.join("good.shard");
+        write_shard(&good, &ds).unwrap();
+        // Bad magic.
+        let mut bytes = std::fs::read(&good).unwrap();
+        bytes[0] ^= 0xFF;
+        let bad = dir.join("bad_magic.shard");
+        std::fs::write(&bad, &bytes).unwrap();
+        assert!(ShardReader::open(&bad).is_err());
+        // Truncated data region.
+        let bytes = std::fs::read(&good).unwrap();
+        let trunc = dir.join("trunc.shard");
+        std::fs::write(&trunc, &bytes[..bytes.len() - 8]).unwrap();
+        assert!(ShardReader::open(&trunc).is_err());
+        // Truncated header.
+        let short = dir.join("short.shard");
+        std::fs::write(&short, &bytes[..12]).unwrap();
+        assert!(ShardReader::open(&short).is_err());
+        // Trailing garbage.
+        let mut bytes = std::fs::read(&good).unwrap();
+        bytes.extend_from_slice(&[0u8; 8]);
+        let long = dir.join("long.shard");
+        std::fs::write(&long, &bytes).unwrap();
+        assert!(ShardReader::open(&long).is_err());
+        // The pristine file still opens.
+        assert!(ShardReader::open(&good).is_ok());
+    }
+
+    #[test]
+    fn shard_set_matches_dataset_shard() {
+        let dir = tdir("set");
+        let ds = synth::friedman(25, 4, 0.2, 7);
+        let set = ShardSet::create(&dir, &ds, 3, 8).unwrap();
+        assert_eq!((set.n(), set.d(), set.r()), (25, 4, 3));
+        let mem = ds.shard(3);
+        let reopened = ShardSet::open(&dir).unwrap();
+        assert_eq!(reopened.chunk_rows(), 8);
+        // The fingerprint survives the manifest roundtrip and ties the
+        // store to this exact data: a same-shape other dataset differs.
+        assert_eq!(reopened.fingerprint(), dataset_fingerprint(&ds));
+        let other = synth::friedman(25, 4, 0.2, 8);
+        assert_ne!(reopened.fingerprint(), dataset_fingerprint(&other));
+        for k in 0..3 {
+            let got = reopened.reader(k).unwrap().read_all().unwrap();
+            assert_eq!(got.n(), mem[k].n(), "shard {k} size");
+            for i in 0..got.n() {
+                assert_eq!(got.y[i].to_bits(), mem[k].y[i].to_bits());
+                for c in 0..got.d() {
+                    assert_eq!(got.x[(i, c)].to_bits(), mem[k].x[(i, c)].to_bits());
+                }
+            }
+        }
+    }
+
+    #[test]
+    fn create_refuses_existing_store_and_open_rejects_desync() {
+        let dir = tdir("recreate");
+        let ds = synth::friedman(20, 3, 0.1, 5);
+        ShardSet::create(&dir, &ds, 2, 4).unwrap();
+        // Re-partitioning in place is refused (stale-manifest hazard).
+        assert!(ShardSet::create(&dir, &ds, 4, 4).is_err());
+        // Simulate the hazard anyway: a shard file from a different
+        // partition under a surviving manifest → open() must reject.
+        write_shard(&dir.join("shard_000.bin"), &ds.head(3)).unwrap();
+        let err = ShardSet::open(&dir).unwrap_err();
+        assert!(err.to_string().contains("out of sync"), "{err:#}");
+    }
+
+    #[test]
+    fn steady_state_reads_do_not_allocate() {
+        let dir = tdir("zeroalloc");
+        let ds = synth::friedman(64, 5, 0.2, 3);
+        let path = dir.join("z.shard");
+        write_shard(&path, &ds).unwrap();
+        let mut r = ShardReader::open(&path).unwrap();
+        r.set_chunk_rows(10);
+        let mut win = Dataset { x: Mat::empty(), y: Vec::new() };
+        // Warm-up: one full cycle (includes a wrapped read).
+        for _ in 0..7 {
+            r.next_window(&mut win).unwrap();
+        }
+        let (cb, cx, cy) = (r.buf_capacity(), win.x.data.capacity(), win.y.capacity());
+        for _ in 0..50 {
+            r.next_window(&mut win).unwrap();
+        }
+        assert_eq!(r.buf_capacity(), cb, "reader byte buffer reallocated");
+        assert_eq!(win.x.data.capacity(), cx, "window x reallocated");
+        assert_eq!(win.y.capacity(), cy, "window y reallocated");
+    }
+
+    #[test]
+    fn writer_rejects_bad_rows_and_cleans_up_temp_files() {
+        let dir = tdir("writer");
+        let mut w = ShardWriter::create(&dir.join("w.shard"), 3).unwrap();
+        assert!(w.push_row(&[1.0, 2.0], 0.0).is_err(), "wrong arity accepted");
+        drop(w);
+        let w2 = ShardWriter::create(&dir.join("e.shard"), 2).unwrap();
+        assert!(w2.finish().is_err(), "empty shard sealed");
+        // Neither the final paths nor any temp files survive an abort.
+        let leftovers: Vec<_> = std::fs::read_dir(&dir)
+            .unwrap()
+            .map(|e| e.unwrap().file_name())
+            .collect();
+        assert!(leftovers.is_empty(), "aborted writers left {leftovers:?}");
+    }
+}

@@ -7,10 +7,16 @@ use crate::baselines::linear::{run_linear, LinearConfig};
 use crate::baselines::mean::MeanPredictor;
 use crate::baselines::svigp::{run_svigp, SvigpConfig};
 use crate::baselines::BaselineResult;
+use crate::data::store::ShardSet;
 use crate::grad::{native_factory, EngineFactory};
-use crate::ps::coordinator::{native_eval_factory, train, TrainConfig};
+use crate::ps::checkpoint::Checkpoint;
+use crate::ps::coordinator::{
+    native_eval_factory, train, train_sources, TrainConfig,
+};
 use crate::ps::metrics::TraceRow;
-use crate::ps::worker::WorkerProfile;
+use crate::ps::worker::{WorkerProfile, WorkerSource};
+use anyhow::Result;
+use std::path::PathBuf;
 use std::time::Duration;
 
 /// Options shared by the GP methods.
@@ -30,6 +36,11 @@ pub struct MethodOpts {
     /// Proximal strength schedule γ_t = prox_c / (1 + t / prox_t0).
     pub prox_c: f64,
     pub prox_t0: f64,
+    /// Checkpoint cadence in server updates (0 = off) and destination.
+    pub checkpoint_every: u64,
+    pub checkpoint_dir: Option<PathBuf>,
+    /// Resume the run from this frozen server state.
+    pub resume_from: Option<Checkpoint>,
 }
 
 impl Default for MethodOpts {
@@ -45,6 +56,9 @@ impl Default for MethodOpts {
             lr: 1.0,
             prox_c: 0.005,
             prox_t0: 500.0,
+            checkpoint_every: 0,
+            checkpoint_dir: None,
+            resume_from: None,
         }
     }
 }
@@ -61,20 +75,28 @@ fn profiles(opts: &MethodOpts, workers: usize) -> Vec<WorkerProfile> {
         .collect()
 }
 
+fn train_config(p: &Problem, opts: &MethodOpts, workers: usize) -> TrainConfig {
+    let mut cfg = TrainConfig::new(p.layout);
+    cfg.tau = opts.tau;
+    cfg.max_updates = u64::MAX / 2;
+    cfg.time_limit_secs = Some(opts.budget_secs);
+    cfg.eval_every_secs = opts.eval_every_secs;
+    cfg.profiles = profiles(opts, workers);
+    cfg.lr = opts.lr;
+    cfg.prox = crate::opt::StepSchedule::new(opts.prox_c, opts.prox_t0);
+    cfg.checkpoint_every = opts.checkpoint_every;
+    cfg.checkpoint_dir = opts.checkpoint_dir.clone();
+    cfg.resume_from = opts.resume_from.clone();
+    cfg
+}
+
 /// ADVGP (the paper's method) with a pluggable engine factory.
 pub fn run_advgp_with(
     p: &Problem,
     opts: &MethodOpts,
     factory: EngineFactory,
 ) -> BaselineResult {
-    let mut cfg = TrainConfig::new(p.layout);
-    cfg.tau = opts.tau;
-    cfg.max_updates = u64::MAX / 2;
-    cfg.time_limit_secs = Some(opts.budget_secs);
-    cfg.eval_every_secs = opts.eval_every_secs;
-    cfg.profiles = profiles(opts, opts.workers);
-    cfg.lr = opts.lr;
-    cfg.prox = crate::opt::StepSchedule::new(opts.prox_c, opts.prox_t0);
+    let cfg = train_config(p, opts, opts.workers);
     let elbo_set = opts.track_elbo.then(|| p.train.head(4096));
     let res = train(
         &cfg,
@@ -84,6 +106,33 @@ pub fn run_advgp_with(
         Some(native_eval_factory(p.layout, p.test.clone(), elbo_set)),
     );
     BaselineResult { theta: res.theta, trace: res.trace, wall_secs: res.wall_secs }
+}
+
+/// ADVGP over an on-disk [`ShardSet`] (ISSUE 3): each worker streams
+/// minibatch chunks from its shard file instead of holding a resident
+/// clone — peak per-worker data is one chunk buffer.  Worker count is
+/// the store's shard count.
+pub fn run_advgp_store(
+    p: &Problem,
+    opts: &MethodOpts,
+    store: &ShardSet,
+    factory: EngineFactory,
+) -> Result<BaselineResult> {
+    let cfg = train_config(p, opts, store.r());
+    let sources: Vec<WorkerSource> = store
+        .readers()?
+        .into_iter()
+        .map(WorkerSource::Store)
+        .collect();
+    let elbo_set = opts.track_elbo.then(|| p.train.head(4096));
+    let res = train_sources(
+        &cfg,
+        p.theta0.data.clone(),
+        sources,
+        factory,
+        Some(native_eval_factory(p.layout, p.test.clone(), elbo_set)),
+    );
+    Ok(BaselineResult { theta: res.theta, trace: res.trace, wall_secs: res.wall_secs })
 }
 
 /// ADVGP with the pure-Rust engine (scaling benches, baseline parity).

@@ -25,7 +25,7 @@ use crate::linalg::{cholesky_lower, spd_inverse, sym_eig, Mat};
 pub struct PhiBatch {
     /// Φ rows: φ(x_i)^T, shape [B, p] (p = feature dimension).
     pub phi: Mat,
-    /// ktilde_i = k(x_i, x_i) − ‖φ(x_i)‖², shape [B].
+    /// ktilde_i = k(x_i, x_i) − ‖φ(x_i)‖², shape `[B]`.
     pub ktilde: Vec<f64>,
 }
 

@@ -48,9 +48,9 @@ pub fn k_pair(p: &ArdParams, x: &[f64], z: &[f64]) -> f64 {
 /// kernel evaluation allocation-free in steady state.
 #[derive(Clone, Debug)]
 pub struct CrossScratch {
-    /// ze[j, k] = η_k z[j, k].
+    /// `ze[j, k] = η_k z[j, k]`.
     ze: Mat,
-    /// zn[j] = Σ_k η_k z[j, k]².
+    /// `zn[j] = Σ_k η_k z[j, k]²`.
     zn: Vec<f64>,
 }
 

@@ -7,9 +7,11 @@
 //! bounded-staleness (delay-limit τ) proximal gradient descent on a
 //! parameter-server topology.
 //!
-//! Architecture (see DESIGN.md):
+//! Architecture (see DESIGN.md and docs/ARCHITECTURE.md):
 //! * **L3 (this crate)** — the coordinator: parameter server, workers,
-//!   delay gate, proximal updates, baselines, metrics, benches.
+//!   delay gate, proximal updates, out-of-core shard store +
+//!   checkpoint/restore ([`data::store`], [`ps::checkpoint`]),
+//!   baselines, metrics, benches.
 //! * **L2 (python/compile/model.py)** — the JAX objective/gradients,
 //!   AOT-lowered to HLO text in `artifacts/`.
 //! * **L1 (python/compile/kernels/ard_phi.py)** — the fused Pallas

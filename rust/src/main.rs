@@ -7,9 +7,11 @@
 //!   artifacts  list the AOT artifact manifest
 //!   smoke      PJRT round-trip smoke test on an HLO text file
 
+use advgp::data::store::ShardSet;
 use advgp::data::{csv, synth, Dataset};
 use advgp::experiments::methods::*;
 use advgp::experiments::{make_problem, print_table};
+use advgp::grad::native_factory;
 use advgp::runtime::{engine::xla_factory, ArtifactKind, Manifest};
 use advgp::util::cli::Args;
 use anyhow::{bail, Context, Result};
@@ -30,7 +32,8 @@ fn main() -> Result<()> {
                  train:    --data <csv|flight|taxi|friedman> [--n 50000] [--m 100]\n\
                  \x20         [--method advgp|svigp|distgp-gd|distgp-lbfgs|linear]\n\
                  \x20         [--workers 4] [--tau 32] [--budget 30] [--engine native|xla]\n\
-                 \x20         [--out-trace trace.csv]\n\
+                 \x20         [--store dir] [--chunk-rows 4096] [--checkpoint-every 0]\n\
+                 \x20         [--checkpoint-dir dir] [--resume] [--out-trace trace.csv]\n\
                  datagen:  --kind flight|taxi|friedman --n 10000 --out data.csv [--seed 0]\n\
                  artifacts: [--dir artifacts]\n\
                  smoke:    [--hlo /tmp/fn_hlo.txt]"
@@ -59,6 +62,48 @@ fn cmd_train(args: &Args) -> Result<()> {
     let n_test = args.usize_or("n-test", (raw.n() / 10).clamp(100, 100_000));
     let method = args.str_or("method", "advgp").to_string();
     let engine = args.str_or("engine", "native").to_string();
+    // Durability flags (ISSUE 3): --checkpoint-every N writes versioned
+    // server checkpoints; --resume continues from the newest one.  Only
+    // the advgp parameter-server path implements them — reject rather
+    // than silently ignore elsewhere.
+    if method != "advgp" {
+        anyhow::ensure!(
+            args.get("store").is_none()
+                && args.get("checkpoint-every").is_none()
+                && args.get("checkpoint-dir").is_none()
+                && !args.bool_or("resume", false),
+            "--store/--checkpoint-every/--checkpoint-dir/--resume only apply \
+             to --method advgp (got --method {method})"
+        );
+    }
+    let store_dir = args.get("store").map(PathBuf::from);
+    let checkpoint_every = args.u64_or("checkpoint-every", 0);
+    anyhow::ensure!(
+        args.get("checkpoint-dir").is_none()
+            || checkpoint_every > 0
+            || args.bool_or("resume", false),
+        "--checkpoint-dir does nothing on its own: add --checkpoint-every N \
+         (to write checkpoints) or --resume (to restore from them)"
+    );
+    let checkpoint_dir = args
+        .get("checkpoint-dir")
+        .map(PathBuf::from)
+        .or_else(|| store_dir.as_ref().map(|d| d.join("checkpoints")))
+        .unwrap_or_else(|| PathBuf::from("checkpoints"));
+    let resume_from = if args.bool_or("resume", false) {
+        let ck = advgp::ps::Checkpoint::load_latest(&checkpoint_dir)?
+            .with_context(|| {
+                format!("--resume: no checkpoint in {}", checkpoint_dir.display())
+            })?;
+        println!(
+            "resuming from version {} ({})",
+            ck.version,
+            checkpoint_dir.display()
+        );
+        Some(ck)
+    } else {
+        None
+    };
     let opts = MethodOpts {
         workers: args.usize_or("workers", 4),
         tau: args.u64_or("tau", 32),
@@ -68,6 +113,10 @@ fn cmd_train(args: &Args) -> Result<()> {
         prox_c: args.f64_or("prox-c", 0.05),
         prox_t0: args.f64_or("prox-t0", 200.0),
         max_rows: args.usize_or("max-rows", 0),
+        checkpoint_every,
+        checkpoint_dir: (checkpoint_every > 0 || resume_from.is_some())
+            .then(|| checkpoint_dir.clone()),
+        resume_from,
         ..Default::default()
     };
     let p = make_problem(raw, n_test, m, 20_000, args.u64_or("seed", 0));
@@ -79,13 +128,85 @@ fn cmd_train(args: &Args) -> Result<()> {
 
     let result = match method.as_str() {
         "advgp" => {
-            if engine == "xla" {
+            let factory = if engine == "xla" {
                 let dir = PathBuf::from(args.str_or("artifacts", "artifacts"));
                 let man = Manifest::load(&dir)?;
                 man.find(ArtifactKind::Grad, m, p.train.d())?;
-                run_advgp_with(&p, &opts, xla_factory(man, m, p.train.d()))
+                Some(xla_factory(man, m, p.train.d()))
             } else {
-                run_advgp(&p, &opts)
+                None
+            };
+            if let Some(dir) = &store_dir {
+                // Out-of-core path: partition the (standardized) train
+                // set to disk once, then every worker streams minibatch
+                // chunks from its shard file instead of holding a clone.
+                let store = if ShardSet::exists(dir) {
+                    let s = ShardSet::open(dir)?;
+                    anyhow::ensure!(
+                        s.n() == p.train.n() && s.d() == p.train.d(),
+                        "store {} holds n={} d={} but this run has n={} d={} \
+                         (delete the dir or match --data/--n/--seed)",
+                        dir.display(),
+                        s.n(),
+                        s.d(),
+                        p.train.n(),
+                        p.train.d()
+                    );
+                    // Shape can collide across seeds/regenerated files;
+                    // the content fingerprint cannot.
+                    anyhow::ensure!(
+                        s.fingerprint()
+                            == advgp::data::store::dataset_fingerprint(&p.train),
+                        "store {} was built from different data than this run \
+                         (same shape, different contents — check --data/--seed \
+                         or delete the store)",
+                        dir.display()
+                    );
+                    // A reused store fixes the partition: explicit flags
+                    // that contradict it are an error, not a silent
+                    // override.
+                    anyhow::ensure!(
+                        args.get("workers").is_none() || opts.workers == s.r(),
+                        "--workers {} contradicts store {} ({} shards); drop \
+                         the flag or recreate the store",
+                        opts.workers,
+                        dir.display(),
+                        s.r()
+                    );
+                    anyhow::ensure!(
+                        args.get("chunk-rows").is_none()
+                            || args.usize_or("chunk-rows", 0) == s.chunk_rows(),
+                        "--chunk-rows {} contradicts store {} (chunk {}); drop \
+                         the flag or recreate the store",
+                        args.usize_or("chunk-rows", 0),
+                        dir.display(),
+                        s.chunk_rows()
+                    );
+                    println!(
+                        "store: reusing {} ({} shards, chunk {})",
+                        dir.display(),
+                        s.r(),
+                        s.chunk_rows()
+                    );
+                    s
+                } else {
+                    let chunk = args.usize_or("chunk-rows", 4096);
+                    let s = ShardSet::create(dir, &p.train, opts.workers, chunk)?;
+                    println!(
+                        "store: wrote {} shards ({} rows, chunk {chunk}) to {}",
+                        s.r(),
+                        s.n(),
+                        dir.display()
+                    );
+                    s
+                };
+                let f = factory.unwrap_or_else(|| native_factory(p.layout));
+                run_advgp_store(&p, &opts, &store, f)?
+            } else {
+                match factory {
+                    Some(f) => run_advgp_with(&p, &opts, f),
+                    None => run_advgp(&p, &opts),
+                }
             }
         }
         "svigp" => run_svigp_method(&p, &opts),

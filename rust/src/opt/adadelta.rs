@@ -43,6 +43,25 @@ impl AdaDelta {
         delta
     }
 
+    /// `(ρ, ε)` hyperparameters — for checkpointing.
+    pub fn params(&self) -> (f64, f64) {
+        (self.rho, self.eps)
+    }
+
+    /// Accumulator state `(E[g²], E[Δ²])` — for checkpointing.
+    pub fn state(&self) -> (&[f64], &[f64]) {
+        (&self.eg2, &self.ed2)
+    }
+
+    /// Rebuild an optimizer from checkpointed state (the inverse of
+    /// [`AdaDelta::params`] + [`AdaDelta::state`]): the next `step` is
+    /// bitwise-identical to what the checkpointed instance would have
+    /// produced.
+    pub fn from_state(rho: f64, eps: f64, eg2: Vec<f64>, ed2: Vec<f64>) -> Self {
+        assert_eq!(eg2.len(), ed2.len(), "accumulator length mismatch");
+        Self { rho, eps, eg2, ed2 }
+    }
+
     /// Apply in place: θ ← θ + scale·Δ(grad).
     pub fn apply(&mut self, theta: &mut [f64], grad: &[f64], scale: f64) {
         let delta = self.step(grad);
@@ -85,6 +104,24 @@ mod tests {
         let da = a.step(&[3.0]);
         let db = b.step(&[300.0]);
         assert!((da[0] - db[0]).abs() < 1e-9, "{} vs {}", da[0], db[0]);
+    }
+
+    /// Checkpoint fidelity: an optimizer rebuilt via `from_state` must
+    /// continue the original trajectory bitwise.
+    #[test]
+    fn state_roundtrip_continues_bitwise() {
+        let mut a = AdaDelta::default_for(3);
+        for i in 0..10 {
+            a.step(&[1.0 + i as f64, -2.0, 0.5]);
+        }
+        let (rho, eps) = a.params();
+        let (eg2, ed2) = a.state();
+        let mut b = AdaDelta::from_state(rho, eps, eg2.to_vec(), ed2.to_vec());
+        let da = a.step(&[0.3, 0.7, -1.1]);
+        let db = b.step(&[0.3, 0.7, -1.1]);
+        for (x, y) in da.iter().zip(&db) {
+            assert_eq!(x.to_bits(), y.to_bits());
+        }
     }
 
     #[test]

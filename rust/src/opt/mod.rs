@@ -1,5 +1,13 @@
-//! Optimizers: ADADELTA, the ADVGP proximal operator (eqs. 18–20),
-//! plain SGD, and L-BFGS (for the DistGP-LBFGS baseline).
+//! Optimizers: ADADELTA (paper §6.1), the ADVGP proximal operator
+//! (paper eqs. 18–20), plain SGD, and L-BFGS (for the DistGP-LBFGS
+//! baseline).
+//!
+//! Key invariants:
+//! * The proximal projection keeps diag(U) strictly positive (eq. 20's
+//!   closed form), so Σ = UᵀU stays SPD at every server update.
+//! * [`AdaDelta`] state is checkpointable: `params`/`state` +
+//!   `from_state` round-trip bitwise, which is what makes
+//!   `ps::checkpoint` resumes exact.
 
 pub mod adadelta;
 pub mod lbfgs;

@@ -1,0 +1,375 @@
+//! Durable, versioned server-state checkpoints (ISSUE 3).
+//!
+//! A checkpoint freezes everything the server needs to continue
+//! Algorithm 1 from update `t`: θ^(t), the ADADELTA accumulators
+//! (E[g²], E[Δ²] with their ρ/ε), and the per-worker clocks t_k of the
+//! bounded-staleness gate.  Files are written next to their final path
+//! and atomically renamed into place after an fsync, so a crash during
+//! a save can never leave a half-written checkpoint where a resume
+//! would find it; an FNV-1a checksum rejects files corrupted at rest.
+//!
+//! # Resume semantics
+//!
+//! Gradient *slots* are deliberately not persisted: a resumed server
+//! re-enters Algorithm 1's "every live worker has pushed at least once"
+//! precondition at the restored θ^(t), so the first post-resume update
+//! aggregates only gradients computed at θ^(t) — never stale pre-crash
+//! gradients.  The saved clocks travel for inspection and metrics; θ
+//! and the optimizer state restore **bitwise** (f64 bit patterns are
+//! stored verbatim), so the first θ a resumed run publishes is exactly
+//! the checkpointed θ.  Worker-side stream cursors are *worker* state
+//! and are not captured: chunk-streaming workers re-seed their
+//! minibatch schedule on resume (see ROADMAP "Open items").
+//!
+//! # File format `ADVGPCK1`
+//!
+//! All values little-endian:
+//!
+//! ```text
+//! [ 0.. 8)  magic    b"ADVGPCK1"
+//! [ 8..16)  version  u64 server iteration t
+//! [16..32)  m, d     u64 × 2 (θ layout; dim is derived and checked)
+//! [32..48)  ρ, ε     f64 × 2 ADADELTA hyperparameters
+//! ...       θ        dim × f64
+//! ...       E[g²]    dim × f64
+//! ...       E[Δ²]    dim × f64
+//! ...       workers  u64, then workers × (u8 tag, u64 t_k)
+//! ...       checksum u64 FNV-1a over everything above
+//! ```
+
+use crate::gp::ThetaLayout;
+use crate::opt::AdaDelta;
+use crate::util::{fnv1a64, FNV1A64_INIT};
+use anyhow::{ensure, Context, Result};
+use std::path::{Path, PathBuf};
+
+/// Magic bytes opening every checkpoint file.
+pub const CHECKPOINT_MAGIC: [u8; 8] = *b"ADVGPCK1";
+
+/// A frozen server state — see the module docs for semantics.
+#[derive(Clone, Debug, PartialEq)]
+pub struct Checkpoint {
+    /// Server iteration t the state was frozen at (θ = θ^(t)).
+    pub version: u64,
+    /// θ layout the state belongs to.
+    pub m: usize,
+    pub d: usize,
+    pub theta: Vec<f64>,
+    /// ADADELTA hyperparameters and accumulators.
+    pub rho: f64,
+    pub eps: f64,
+    pub eg2: Vec<f64>,
+    pub ed2: Vec<f64>,
+    /// Per-worker freshest-push clocks at save time (`None` = never
+    /// pushed or retired).  Informational on restore — see module docs.
+    pub clocks: Vec<Option<u64>>,
+}
+
+impl Checkpoint {
+    /// Freeze the server state.
+    pub fn capture(
+        layout: ThetaLayout,
+        version: u64,
+        theta: &[f64],
+        adadelta: &AdaDelta,
+        clocks: Vec<Option<u64>>,
+    ) -> Self {
+        assert_eq!(theta.len(), layout.len(), "θ does not match layout");
+        let (rho, eps) = adadelta.params();
+        let (eg2, ed2) = adadelta.state();
+        assert_eq!(eg2.len(), layout.len(), "optimizer does not match layout");
+        Self {
+            version,
+            m: layout.m,
+            d: layout.d,
+            theta: theta.to_vec(),
+            rho,
+            eps,
+            eg2: eg2.to_vec(),
+            ed2: ed2.to_vec(),
+            clocks,
+        }
+    }
+
+    /// The layout this checkpoint was taken under.
+    pub fn layout(&self) -> ThetaLayout {
+        ThetaLayout::new(self.m, self.d)
+    }
+
+    /// Rebuild the optimizer; its next step continues the checkpointed
+    /// trajectory bitwise.
+    pub fn restore_adadelta(&self) -> AdaDelta {
+        AdaDelta::from_state(self.rho, self.eps, self.eg2.clone(), self.ed2.clone())
+    }
+
+    /// Serialize to the `ADVGPCK1` byte layout.
+    pub fn encode(&self) -> Vec<u8> {
+        let dim = self.theta.len();
+        let mut b = Vec::with_capacity(48 + 24 * dim + 8 + 9 * self.clocks.len() + 8);
+        b.extend_from_slice(&CHECKPOINT_MAGIC);
+        b.extend_from_slice(&self.version.to_le_bytes());
+        b.extend_from_slice(&(self.m as u64).to_le_bytes());
+        b.extend_from_slice(&(self.d as u64).to_le_bytes());
+        b.extend_from_slice(&self.rho.to_le_bytes());
+        b.extend_from_slice(&self.eps.to_le_bytes());
+        for v in self.theta.iter().chain(&self.eg2).chain(&self.ed2) {
+            b.extend_from_slice(&v.to_le_bytes());
+        }
+        b.extend_from_slice(&(self.clocks.len() as u64).to_le_bytes());
+        for c in &self.clocks {
+            match c {
+                Some(tk) => {
+                    b.push(1);
+                    b.extend_from_slice(&tk.to_le_bytes());
+                }
+                None => {
+                    b.push(0);
+                    b.extend_from_slice(&0u64.to_le_bytes());
+                }
+            }
+        }
+        let sum = fnv1a64(FNV1A64_INIT, &b);
+        b.extend_from_slice(&sum.to_le_bytes());
+        b
+    }
+
+    /// Parse and validate the `ADVGPCK1` byte layout.
+    pub fn decode(bytes: &[u8]) -> Result<Self> {
+        let mut r = Cursor { b: bytes, i: 0 };
+        ensure!(
+            r.take(8)? == CHECKPOINT_MAGIC,
+            "checkpoint: bad magic (want {CHECKPOINT_MAGIC:?})"
+        );
+        let version = r.u64()?;
+        let m = r.u64()? as usize;
+        let d = r.u64()? as usize;
+        // Plausibility-gate m/d *before* deriving the layout length:
+        // a corrupt header must surface as Err, not as a multiply
+        // overflow panic on the way to the checksum that would have
+        // caught it.
+        ensure!(
+            (1..=1 << 20).contains(&m) && (1..=1 << 20).contains(&d),
+            "checkpoint: implausible layout m={m} d={d} — corrupt header"
+        );
+        let dim = ThetaLayout::new(m, d).len();
+        let rho = r.f64()?;
+        let eps = r.f64()?;
+        let theta = r.f64_vec(dim)?;
+        let eg2 = r.f64_vec(dim)?;
+        let ed2 = r.f64_vec(dim)?;
+        let workers = r.u64()? as usize;
+        ensure!(workers <= 1 << 20, "checkpoint: implausible worker count {workers}");
+        let mut clocks = Vec::with_capacity(workers);
+        for _ in 0..workers {
+            let tag = r.take(1)?[0];
+            let tk = r.u64()?;
+            clocks.push(match tag {
+                0 => None,
+                1 => Some(tk),
+                t => anyhow::bail!("checkpoint: bad clock tag {t}"),
+            });
+        }
+        let body_end = r.i;
+        let stored = r.u64()?;
+        ensure!(r.i == bytes.len(), "checkpoint: trailing bytes after checksum");
+        let actual = fnv1a64(FNV1A64_INIT, &bytes[..body_end]);
+        ensure!(
+            stored == actual,
+            "checkpoint: checksum mismatch (stored {stored:#018x}, \
+             computed {actual:#018x}) — file is corrupt"
+        );
+        Ok(Self { version, m, d, theta, rho, eps, eg2, ed2, clocks })
+    }
+
+    /// Save into `dir` (created if missing) as `ck_{version:012}.bin`
+    /// via [`crate::util::atomic_write`] (temp-file + fsync + atomic
+    /// rename).  Returns the final path.
+    pub fn save_in(&self, dir: &Path) -> Result<PathBuf> {
+        std::fs::create_dir_all(dir)
+            .with_context(|| format!("create checkpoint dir {}", dir.display()))?;
+        let path = dir.join(format!("ck_{:012}.bin", self.version));
+        crate::util::atomic_write(&path, &self.encode())
+            .with_context(|| format!("save checkpoint {}", path.display()))?;
+        Ok(path)
+    }
+
+    /// Load and validate one checkpoint file.
+    pub fn load(path: &Path) -> Result<Self> {
+        let bytes = std::fs::read(path)
+            .with_context(|| format!("read checkpoint {}", path.display()))?;
+        Self::decode(&bytes).with_context(|| format!("decode {}", path.display()))
+    }
+
+    /// Path of the newest checkpoint in `dir` (highest version), if any.
+    pub fn latest_in(dir: &Path) -> Result<Option<PathBuf>> {
+        if !dir.is_dir() {
+            return Ok(None);
+        }
+        let mut best: Option<PathBuf> = None;
+        for entry in std::fs::read_dir(dir)? {
+            let path = entry?.path();
+            let name = match path.file_name().and_then(|n| n.to_str()) {
+                Some(n) => n,
+                None => continue,
+            };
+            if name.starts_with("ck_") && name.ends_with(".bin") {
+                // Zero-padded fixed-width names sort lexically by version.
+                if best.as_ref().is_none_or(|b| path > *b) {
+                    best = Some(path);
+                }
+            }
+        }
+        Ok(best)
+    }
+
+    /// Load the newest checkpoint in `dir`, if any.
+    pub fn load_latest(dir: &Path) -> Result<Option<Self>> {
+        match Self::latest_in(dir)? {
+            Some(path) => Ok(Some(Self::load(&path)?)),
+            None => Ok(None),
+        }
+    }
+}
+
+struct Cursor<'a> {
+    b: &'a [u8],
+    i: usize,
+}
+
+impl<'a> Cursor<'a> {
+    fn take(&mut self, len: usize) -> Result<&'a [u8]> {
+        ensure!(self.i + len <= self.b.len(), "checkpoint: truncated at byte {}", self.i);
+        let s = &self.b[self.i..self.i + len];
+        self.i += len;
+        Ok(s)
+    }
+
+    fn u64(&mut self) -> Result<u64> {
+        Ok(u64::from_le_bytes(self.take(8)?.try_into().unwrap()))
+    }
+
+    fn f64(&mut self) -> Result<f64> {
+        Ok(f64::from_le_bytes(self.take(8)?.try_into().unwrap()))
+    }
+
+    fn f64_vec(&mut self, len: usize) -> Result<Vec<f64>> {
+        let raw = self.take(len * 8)?;
+        Ok(raw
+            .chunks_exact(8)
+            .map(|c| f64::from_le_bytes(c.try_into().unwrap()))
+            .collect())
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::rng::Pcg64;
+    use std::path::PathBuf;
+
+    fn tdir(name: &str) -> PathBuf {
+        let dir = std::env::temp_dir().join("advgp_ck_test").join(name);
+        let _ = std::fs::remove_dir_all(&dir);
+        std::fs::create_dir_all(&dir).unwrap();
+        dir
+    }
+
+    fn sample(version: u64, seed: u64) -> Checkpoint {
+        let layout = ThetaLayout::new(3, 2);
+        let dim = layout.len();
+        let mut rng = Pcg64::seeded(seed);
+        let theta: Vec<f64> = (0..dim).map(|_| rng.normal()).collect();
+        let mut ada = AdaDelta::default_for(dim);
+        for _ in 0..5 {
+            let g: Vec<f64> = (0..dim).map(|_| rng.normal()).collect();
+            ada.step(&g);
+        }
+        Checkpoint::capture(layout, version, &theta, &ada, vec![Some(7), None, Some(9)])
+    }
+
+    #[test]
+    fn encode_decode_roundtrip_bitwise() {
+        let ck = sample(42, 1);
+        let back = Checkpoint::decode(&ck.encode()).unwrap();
+        assert_eq!(back.version, 42);
+        assert_eq!((back.m, back.d), (3, 2));
+        assert_eq!(back.clocks, vec![Some(7), None, Some(9)]);
+        for (a, b) in ck.theta.iter().zip(&back.theta) {
+            assert_eq!(a.to_bits(), b.to_bits());
+        }
+        for (a, b) in ck.eg2.iter().zip(&back.eg2).chain(ck.ed2.iter().zip(&back.ed2)) {
+            assert_eq!(a.to_bits(), b.to_bits());
+        }
+        assert_eq!(ck, back);
+    }
+
+    #[test]
+    fn save_load_and_latest() {
+        let dir = tdir("latest");
+        for v in [3u64, 12, 7] {
+            sample(v, v).save_in(&dir).unwrap();
+        }
+        let latest = Checkpoint::latest_in(&dir).unwrap().unwrap();
+        assert!(latest.to_string_lossy().ends_with("ck_000000000012.bin"));
+        let ck = Checkpoint::load_latest(&dir).unwrap().unwrap();
+        assert_eq!(ck.version, 12);
+        assert_eq!(ck, sample(12, 12));
+        // Re-saving the same version overwrites atomically.
+        sample(12, 99).save_in(&dir).unwrap();
+        assert_eq!(Checkpoint::load_latest(&dir).unwrap().unwrap(), sample(12, 99));
+        // Empty / missing dir.
+        assert!(Checkpoint::load_latest(&tdir("empty")).unwrap().is_none());
+        assert!(
+            Checkpoint::load_latest(&PathBuf::from("/nonexistent/advgp"))
+                .unwrap()
+                .is_none()
+        );
+    }
+
+    #[test]
+    fn corruption_is_rejected() {
+        let ck = sample(5, 2);
+        let mut bytes = ck.encode();
+        // Flip one payload byte: checksum must catch it.
+        bytes[60] ^= 0x01;
+        assert!(Checkpoint::decode(&bytes).is_err());
+        // Truncation.
+        let bytes = ck.encode();
+        assert!(Checkpoint::decode(&bytes[..bytes.len() - 3]).is_err());
+        // Bad magic.
+        let mut bytes = ck.encode();
+        bytes[0] ^= 0xFF;
+        assert!(Checkpoint::decode(&bytes).is_err());
+        // Corrupt m (header bytes 16..24): must be a clean Err, never a
+        // multiply-overflow panic while deriving the layout length.
+        let mut bytes = ck.encode();
+        bytes[22] ^= 0xFF;
+        assert!(Checkpoint::decode(&bytes).is_err());
+        // m = 0 is as corrupt as m = huge.
+        let mut bytes = ck.encode();
+        bytes[16..24].copy_from_slice(&0u64.to_le_bytes());
+        assert!(Checkpoint::decode(&bytes).is_err());
+        // Trailing garbage.
+        let mut bytes = ck.encode();
+        bytes.push(0);
+        assert!(Checkpoint::decode(&bytes).is_err());
+    }
+
+    #[test]
+    fn restored_optimizer_continues_bitwise() {
+        let layout = ThetaLayout::new(2, 1);
+        let dim = layout.len();
+        let mut ada = AdaDelta::default_for(dim);
+        let g: Vec<f64> = (0..dim).map(|i| 0.3 * (i as f64 + 1.0)).collect();
+        for _ in 0..8 {
+            ada.step(&g);
+        }
+        let ck = Checkpoint::capture(layout, 8, &vec![0.0; dim], &ada, vec![]);
+        let mut restored = ck.restore_adadelta();
+        let da = ada.step(&g);
+        let db = restored.step(&g);
+        for (a, b) in da.iter().zip(&db) {
+            assert_eq!(a.to_bits(), b.to_bits());
+        }
+    }
+}

@@ -1,16 +1,19 @@
-//! Wiring: spawn server + workers + evaluator, run to completion,
-//! collect traces.  This is the entry point every experiment uses.
+//! Wiring: spawn server + workers (+ late joiners) + evaluator, run to
+//! completion, collect traces.  This is the entry point every
+//! experiment uses.
 
+use super::checkpoint::Checkpoint;
 use super::messages::ToServer;
 use super::metrics::{EvalMetrics, ServerStats, TraceRow};
 use super::server::{run_server, ServerConfig};
-use super::worker::{run_worker, WorkerProfile};
+use super::worker::{run_worker, WorkerProfile, WorkerSource};
 use super::Published;
 use crate::data::Dataset;
 use crate::gp::ThetaLayout;
 use crate::grad::EngineFactory;
 use crate::opt::StepSchedule;
 use crate::util::Stopwatch;
+use std::path::PathBuf;
 use std::sync::mpsc;
 use std::time::Duration;
 
@@ -23,6 +26,8 @@ pub type EvalFactory =
 pub struct TrainConfig {
     pub layout: ThetaLayout,
     pub tau: u64,
+    /// Cumulative published-version ceiling — see
+    /// [`ServerConfig::max_updates`](super::server::ServerConfig).
     pub max_updates: u64,
     /// Learning-rate scale on the ADADELTA direction (paper §6.1).
     pub lr: f64,
@@ -41,6 +46,16 @@ pub struct TrainConfig {
     /// (0 = auto: `util::pool::threads()` split evenly across workers,
     /// min 1).  Individual `WorkerProfile::threads` values override.
     pub worker_threads: usize,
+    /// Write a server-state checkpoint every N updates into
+    /// `checkpoint_dir` (0 = never).  See [`crate::ps::checkpoint`].
+    pub checkpoint_every: u64,
+    pub checkpoint_dir: Option<PathBuf>,
+    /// Resume from a frozen server state (load it with
+    /// [`Checkpoint::load`] / [`Checkpoint::load_latest`]): the run
+    /// publishes `(ck.version, ck.θ)` before any worker starts, and θ,
+    /// the version counter, and the ADADELTA accumulators restore
+    /// bitwise.
+    pub resume_from: Option<Checkpoint>,
 }
 
 impl TrainConfig {
@@ -57,8 +72,21 @@ impl TrainConfig {
             eval_every_secs: 0.5,
             time_limit_secs: None,
             worker_threads: 0,
+            checkpoint_every: 0,
+            checkpoint_dir: None,
+            resume_from: None,
         }
     }
+}
+
+/// A worker that enters the run late (ISSUE 3 elasticity): after
+/// `after`, it snapshots the live published version — *adopting* the
+/// current θ — and joins the push/pull loop.  The server admits it on
+/// its first push.
+pub struct Joiner {
+    pub after: Duration,
+    pub source: WorkerSource,
+    pub profile: WorkerProfile,
 }
 
 pub struct RunResult {
@@ -68,7 +96,7 @@ pub struct RunResult {
     pub wall_secs: f64,
 }
 
-/// Train ADVGP: Algorithm 1 end-to-end over the given shards.
+/// Train ADVGP: Algorithm 1 end-to-end over the given resident shards.
 pub fn train(
     cfg: &TrainConfig,
     theta0: Vec<f64>,
@@ -76,7 +104,21 @@ pub fn train(
     factory: EngineFactory,
     eval_factory: Option<EvalFactory>,
 ) -> RunResult {
-    train_published(cfg, Published::new(theta0), shards, factory, eval_factory)
+    let sources = shards.into_iter().map(WorkerSource::Memory).collect();
+    train_elastic(cfg, Published::new(theta0), sources, vec![], factory, eval_factory)
+}
+
+/// [`train`] over arbitrary worker data sources — resident datasets or
+/// out-of-core [`crate::data::store::ShardReader`]s (typically a
+/// [`crate::data::store::ShardSet`]'s readers).
+pub fn train_sources(
+    cfg: &TrainConfig,
+    theta0: Vec<f64>,
+    sources: Vec<WorkerSource>,
+    factory: EngineFactory,
+    eval_factory: Option<EvalFactory>,
+) -> RunResult {
+    train_elastic(cfg, Published::new(theta0), sources, vec![], factory, eval_factory)
 }
 
 /// [`train`] against a caller-owned [`Published`] handle (seeded with
@@ -91,9 +133,44 @@ pub fn train_published(
     factory: EngineFactory,
     eval_factory: Option<EvalFactory>,
 ) -> RunResult {
+    let sources = shards.into_iter().map(WorkerSource::Memory).collect();
+    train_elastic(cfg, published, sources, vec![], factory, eval_factory)
+}
+
+/// The full-control entry point: caller-owned [`Published`] handle,
+/// arbitrary worker sources, and late [`Joiner`]s.  Every other train
+/// function is a thin wrapper over this.
+pub fn train_elastic(
+    cfg: &TrainConfig,
+    published: std::sync::Arc<Published>,
+    sources: Vec<WorkerSource>,
+    joiners: Vec<Joiner>,
+    factory: EngineFactory,
+    eval_factory: Option<EvalFactory>,
+) -> RunResult {
     let clock = Stopwatch::start();
-    let workers = shards.len();
-    assert!(workers >= 1, "need at least one shard");
+    let workers = sources.len();
+    assert!(workers >= 1, "need at least one initial worker source");
+    if let Some(ck) = &cfg.resume_from {
+        // Compare (m, d), not just θ length: distinct layouts can
+        // collide on dimension (e.g. m=1,d=5 and m=2,d=2 both give 14),
+        // and restoring across that collision would silently slice
+        // every θ block at the wrong offsets.
+        assert_eq!(
+            (ck.m, ck.d),
+            (cfg.layout.m, cfg.layout.d),
+            "resume checkpoint is for layout m={}, d={} but this run uses \
+             m={}, d={}",
+            ck.m,
+            ck.d,
+            cfg.layout.m,
+            cfg.layout.d
+        );
+        // Restore the published state *before* any worker or evaluator
+        // starts: the first θ anyone observes is the checkpointed θ, at
+        // the checkpointed version.
+        published.publish(ck.version, ck.theta.clone());
+    }
     let (tx, rx) = mpsc::channel::<ToServer>();
 
     let server_cfg = ServerConfig {
@@ -105,6 +182,10 @@ pub fn train_published(
         prox: cfg.prox,
         server_shards: cfg.server_shards,
         freeze_hyper: cfg.freeze_hyper,
+        checkpoint_every: cfg.checkpoint_every,
+        checkpoint_dir: cfg.checkpoint_dir.clone(),
+        resume: cfg.resume_from.clone(),
+        expected_joiners: joiners.len(),
     };
 
     // Per-worker thread budgets.  Explicit budgets (profile or
@@ -112,6 +193,7 @@ pub fn train_published(
     // capacity is split across the auto workers with the remainder
     // distributed one-by-one, so no core is left permanently idle by
     // integer truncation and explicit budgets aren't double-counted.
+    // (Joiners keep their own profile budgets: honored as-is, min 1.)
     let mut profiles: Vec<WorkerProfile> = (0..workers)
         .map(|k| cfg.profiles.get(k).cloned().unwrap_or_default())
         .collect();
@@ -134,13 +216,29 @@ pub fn train_published(
     }
 
     std::thread::scope(|scope| {
-        // ---- workers ----
-        for ((k, shard), profile) in shards.into_iter().enumerate().zip(profiles) {
+        // ---- initial workers ----
+        for ((k, source), profile) in sources.into_iter().enumerate().zip(profiles) {
             let factory = factory.clone();
             let published = published.clone();
             let tx = tx.clone();
             scope.spawn(move || {
-                run_worker(k, shard, factory, published, tx, profile)
+                run_worker(k, source, factory, published, tx, profile)
+            });
+        }
+        // ---- late joiners (ids continue after the initial workers) ----
+        for (j, joiner) in joiners.into_iter().enumerate() {
+            let k = workers + j;
+            let factory = factory.clone();
+            let published = published.clone();
+            let tx = tx.clone();
+            scope.spawn(move || {
+                // Interruptible delay: a run that ends early (time
+                // limit, max_updates) wakes this immediately instead of
+                // holding train_elastic open for the full join delay.
+                if published.shutdown_or_timeout(joiner.after) {
+                    return; // run already over; never joined
+                }
+                run_worker(k, joiner.source, factory, published, tx, joiner.profile)
             });
         }
         drop(tx); // server's recv() unblocks when all workers exit

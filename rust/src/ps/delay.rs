@@ -1,53 +1,130 @@
-//! The bounded-staleness gate of Algorithm 1.
+//! The bounded-staleness gate of Algorithm 1, with elastic membership.
 //!
 //! The server may advance from iteration `t` to `t+1` only when every
-//! worker's freshest gradient was computed at a version `t_k` with
-//! `t − τ ≤ t_k` (and every worker has pushed at least once).  τ = 0 is
-//! bulk-synchronous; τ = `u64::MAX` is fully asynchronous.
+//! **live** worker's freshest gradient was computed at a version `t_k`
+//! with `t − τ ≤ t_k` (and every live worker has pushed at least once).
+//! τ = 0 is bulk-synchronous; τ = `u64::MAX` is fully asynchronous.
+//!
+//! Membership is elastic (ISSUE 3): a departed worker is **retired** —
+//! its clock leaves the `min_k t_k` so the run proceeds without it —
+//! and a joiner is **admitted** on its first push (there is no separate
+//! hello: the first gradient both registers the worker and stamps its
+//! clock, so a slow joiner can never stall the gate before it has work
+//! to contribute).
+
+/// Per-worker clock state.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+enum Clock {
+    /// Registered but never pushed — blocks every update (Algorithm 1
+    /// aggregates one gradient from every live worker).
+    Pending,
+    /// Freshest pushed version t_k.
+    Active(u64),
+    /// Departed (or an id gap left by sparse joins): excluded from the
+    /// gate entirely.
+    Retired,
+}
 
 /// Tracks per-worker freshest-push versions and answers the gate query.
 #[derive(Clone, Debug)]
 pub struct DelayGate {
     tau: u64,
-    /// Freshest pushed version per worker; `None` until the first push.
-    latest: Vec<Option<u64>>,
+    clocks: Vec<Clock>,
 }
 
 impl DelayGate {
     pub fn new(workers: usize, tau: u64) -> Self {
-        Self { tau, latest: vec![None; workers] }
+        Self { tau, clocks: vec![Clock::Pending; workers] }
     }
 
     pub fn tau(&self) -> u64 {
         self.tau
     }
 
-    /// Record a push from `worker` computed at `version`.
-    pub fn record(&mut self, worker: usize, version: u64) {
-        let slot = &mut self.latest[worker];
+    /// Record a push from `worker` computed at `version`.  Unknown ids
+    /// are admitted (the gate grows); a retired id that pushes again is
+    /// re-activated.  Returns true when this push *admitted* the worker
+    /// into the live set (an unknown id, or a retired id coming back) —
+    /// a `Pending` initial worker's first push is not an admission, it
+    /// was already a member.
+    pub fn record(&mut self, worker: usize, version: u64) -> bool {
+        if worker >= self.clocks.len() {
+            // Ids between the old frontier and the joiner never pushed:
+            // they stay out of the gate until their own first push.
+            self.clocks.resize(worker + 1, Clock::Retired);
+        }
+        let slot = &mut self.clocks[worker];
+        let admitted = *slot == Clock::Retired;
         // Versions may arrive out of order under heavy async; keep max.
-        *slot = Some(slot.map_or(version, |v| v.max(version)));
+        *slot = match *slot {
+            Clock::Active(v) => Clock::Active(v.max(version)),
+            _ => Clock::Active(version),
+        };
+        admitted
+    }
+
+    /// Retire a departed worker: its clock no longer gates updates and
+    /// its id may be re-admitted later by a fresh push.
+    pub fn retire(&mut self, worker: usize) {
+        if worker < self.clocks.len() {
+            self.clocks[worker] = Clock::Retired;
+        }
+    }
+
+    /// Is this id currently excluded from the gate?
+    pub fn is_retired(&self, worker: usize) -> bool {
+        self.clocks.get(worker).is_none_or(|c| *c == Clock::Retired)
+    }
+
+    /// Live (non-retired) workers currently gating updates.
+    pub fn live(&self) -> usize {
+        self.clocks.iter().filter(|c| **c != Clock::Retired).count()
     }
 
     /// May the server perform update `t` (producing version t+1)?
+    /// False while any live worker is yet to push, or when no live
+    /// worker remains at all.
     pub fn permits(&self, t: u64) -> bool {
-        self.latest.iter().all(|slot| match slot {
-            None => false,
-            Some(tk) => *tk + self.tau >= t,
-        })
+        let mut any_live = false;
+        for c in &self.clocks {
+            match c {
+                Clock::Retired => {}
+                Clock::Pending => return false,
+                Clock::Active(tk) => {
+                    any_live = true;
+                    if tk.saturating_add(self.tau) < t {
+                        return false;
+                    }
+                }
+            }
+        }
+        any_live
     }
 
-    /// Current staleness bound observed: t − min_k t_k (None if some
-    /// worker never pushed).
+    /// Current staleness bound observed: t − min over live clocks
+    /// (None if some live worker never pushed, or none are live).
     pub fn staleness(&self, t: u64) -> Option<u64> {
-        let min = self
-            .latest
+        let mut min: Option<u64> = None;
+        for c in &self.clocks {
+            match c {
+                Clock::Retired => {}
+                Clock::Pending => return None,
+                Clock::Active(tk) => min = Some(min.map_or(*tk, |m| m.min(*tk))),
+            }
+        }
+        min.map(|m| t.saturating_sub(m))
+    }
+
+    /// Per-worker clocks for checkpointing: `Some(t_k)` for active
+    /// workers, `None` for pending/retired slots.
+    pub fn clocks(&self) -> Vec<Option<u64>> {
+        self.clocks
             .iter()
-            .map(|s| (*s)?.into())
-            .collect::<Option<Vec<u64>>>()?
-            .into_iter()
-            .min()?;
-        Some(t.saturating_sub(min))
+            .map(|c| match c {
+                Clock::Active(tk) => Some(*tk),
+                _ => None,
+            })
+            .collect()
     }
 }
 
@@ -109,7 +186,57 @@ mod tests {
     fn huge_tau_is_fully_async() {
         let mut g = DelayGate::new(2, u64::MAX);
         g.record(0, 0);
-        g.record(1, 0);
+        g.record(1, 3); // saturating add: no overflow at tau = MAX
         assert!(g.permits(1_000_000_000));
+    }
+
+    /// ISSUE 3: a departed worker's frozen clock must stop gating
+    /// progress the moment it is retired.
+    #[test]
+    fn retired_clock_leaves_the_gate() {
+        let mut g = DelayGate::new(3, 2);
+        g.record(0, 10);
+        g.record(1, 10);
+        g.record(2, 0); // stale straggler
+        assert!(!g.permits(10), "straggler's clock gates");
+        assert_eq!(g.staleness(10), Some(10));
+        g.retire(2);
+        assert_eq!(g.live(), 2);
+        assert!(g.permits(10), "retired clock must not gate");
+        assert_eq!(g.staleness(10), Some(0));
+        assert!(g.is_retired(2));
+        // Rejoin: a fresh push re-admits the id (and reports it).
+        assert!(g.record(2, 11), "re-admission must be reported");
+        assert!(!g.is_retired(2));
+        assert_eq!(g.live(), 3);
+    }
+
+    /// A joiner with an unseen id is admitted on first push; id gaps
+    /// stay out of the gate.
+    #[test]
+    fn join_admits_on_first_push() {
+        let mut g = DelayGate::new(2, 1);
+        assert!(!g.record(0, 4), "initial member: not an admission");
+        g.record(1, 4);
+        assert!(g.permits(4));
+        assert!(g.record(5, 4), "joiner admitted"); // ids 2..5 stay gaps
+        assert!(!g.record(5, 5), "second push is not a second admission");
+        assert_eq!(g.live(), 3);
+        assert!(g.permits(4), "gap ids must not gate");
+        assert_eq!(g.clocks(), vec![Some(4), Some(4), None, None, None, Some(5)]);
+    }
+
+    /// With every worker retired the gate closes (the server stops via
+    /// its live-worker count, but permits must not go vacuously true).
+    #[test]
+    fn all_retired_never_permits() {
+        let mut g = DelayGate::new(2, u64::MAX);
+        g.record(0, 0);
+        g.record(1, 0);
+        g.retire(0);
+        g.retire(1);
+        assert_eq!(g.live(), 0);
+        assert!(!g.permits(0));
+        assert_eq!(g.staleness(0), None);
     }
 }

@@ -1,5 +1,12 @@
 //! Worker → server messages.  (Server → worker travels through
 //! [`super::Published`], matching ParameterServer's pull semantics.)
+//!
+//! Membership is implicit in the message stream (ISSUE 3): a worker is
+//! **admitted** by its first [`Push`] — there is no separate hello, so
+//! a joiner can never stall the bounded-staleness gate before it has a
+//! gradient to contribute — and **retired** by [`ToServer::WorkerExit`],
+//! which removes both its clock and its latest gradient from the
+//! aggregation.
 
 /// A local gradient pushed by a worker (Algorithm 1, worker line 4).
 pub struct Push {
@@ -17,6 +24,8 @@ pub struct Push {
 /// Everything a worker can tell the server.
 pub enum ToServer {
     Push(Push),
-    /// Worker exited (failure injection / shutdown).
+    /// Worker departed (permanent leave, store failure, or shutdown).
+    /// Mid-run, the server retires the worker's clock so the gate
+    /// `min_k t_k ≥ t − τ` ranges over live workers only.
     WorkerExit { worker: usize },
 }

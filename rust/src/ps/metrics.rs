@@ -40,10 +40,20 @@ pub struct ServerStats {
     pub staleness: Stats,
     /// Worker compute seconds (from push messages).
     pub worker_compute_secs: Stats,
-    /// Total updates performed.
+    /// Published version after the last update.  Equals the number of
+    /// updates for a fresh run; on a resumed run the count continues
+    /// from the checkpoint version (cumulative across resumes).
     pub updates: u64,
     /// Total pushes received.
     pub pushes: u64,
+    /// Workers admitted mid-run: first push from a previously-unknown
+    /// worker id (ISSUE 3 elasticity).
+    pub joins: u64,
+    /// Worker departures the server observed: mid-run exits (the
+    /// elasticity signal) plus whatever shutdown-driven exits had
+    /// reached the channel by teardown — exits still in flight when
+    /// the server returns are not counted, so treat this as a floor.
+    pub leaves: u64,
 }
 
 /// Write a trace as CSV (t_secs,version,rmse,mnlp,neg_elbo).

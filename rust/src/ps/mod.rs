@@ -18,7 +18,19 @@
 //!
 //! τ = 0 degenerates to bulk-synchronous (the DistGP-GD baseline runs
 //! exactly this path); τ = ∞ is fully asynchronous.
+//!
+//! Elasticity & durability (ISSUE 3): membership is dynamic — a
+//! departed worker's clock is *retired* from the gate so the run
+//! proceeds without it, and a late joiner is admitted by its first
+//! push after adopting the live published θ (see [`coordinator::Joiner`]
+//! and [`delay::DelayGate`]).  The server periodically freezes
+//! (θ, t, ADADELTA state, worker clocks) into an atomic, versioned
+//! [`checkpoint::Checkpoint`] file, and `TrainConfig::resume_from`
+//! restarts a run from one bitwise.  Workers can stream their shard
+//! from the out-of-core [`crate::data::store`] instead of holding it
+//! resident ([`worker::WorkerSource`]).
 
+pub mod checkpoint;
 pub mod coordinator;
 pub mod delay;
 pub mod messages;
@@ -26,9 +38,14 @@ pub mod metrics;
 pub mod server;
 pub mod worker;
 
-pub use coordinator::{train, train_published, RunResult, TrainConfig};
+pub use checkpoint::Checkpoint;
+pub use coordinator::{
+    train, train_elastic, train_published, train_sources, Joiner, RunResult,
+    TrainConfig,
+};
 pub use delay::DelayGate;
 pub use metrics::{EvalMetrics, TraceRow};
+pub use worker::{WorkerProfile, WorkerSource};
 
 use std::sync::{Arc, Condvar, Mutex};
 
@@ -91,6 +108,27 @@ impl Published {
         let g = self.inner.lock().unwrap();
         (g.version, g.theta.clone(), g.shutdown)
     }
+
+    /// Block until shutdown is signalled or `timeout` elapses; returns
+    /// true on shutdown.  Late joiners wait out their join delay with
+    /// this instead of a raw sleep, so a run that ends early never has
+    /// to sit through the full delay before `train_elastic` can return.
+    pub fn shutdown_or_timeout(&self, timeout: std::time::Duration) -> bool {
+        let deadline = std::time::Instant::now() + timeout;
+        let mut g = self.inner.lock().unwrap();
+        loop {
+            if g.shutdown {
+                return true;
+            }
+            let now = std::time::Instant::now();
+            if now >= deadline {
+                return false;
+            }
+            // Publishes also notify this condvar; the deadline check
+            // above absorbs those (and spurious) wakeups.
+            g = self.cv.wait_timeout(g, deadline - now).unwrap().0;
+        }
+    }
 }
 
 #[cfg(test)]
@@ -127,5 +165,29 @@ mod tests {
         assert_eq!(v, 0);
         assert_eq!(*th, vec![7.0]);
         assert!(!sd);
+    }
+
+    /// A joiner's delay wait must end immediately on shutdown (not sit
+    /// out the timeout) and report which way it woke.
+    #[test]
+    fn shutdown_or_timeout_wakes_on_shutdown() {
+        let p = Published::new(vec![0.0]);
+        // Timeout path: far-future shutdown never arrives.
+        assert!(!p.shutdown_or_timeout(Duration::from_millis(10)));
+        // Shutdown path: signalled mid-wait, returns well before the
+        // 60 s timeout.
+        let p2 = p.clone();
+        let h = std::thread::spawn(move || {
+            let t0 = std::time::Instant::now();
+            let sd = p2.shutdown_or_timeout(Duration::from_secs(60));
+            (sd, t0.elapsed())
+        });
+        std::thread::sleep(Duration::from_millis(20));
+        p.shutdown();
+        let (sd, waited) = h.join().unwrap();
+        assert!(sd);
+        assert!(waited < Duration::from_secs(10));
+        // Already shut down: returns true without waiting.
+        assert!(p.shutdown_or_timeout(Duration::from_secs(60)));
     }
 }

@@ -1,13 +1,17 @@
 //! The server loop: delayed gradient aggregation + proximal updates
-//! (Algorithm 1, server side).
+//! (Algorithm 1, server side), with elastic membership and durable
+//! checkpoints (ISSUE 3).
 
+use super::checkpoint::Checkpoint;
 use super::delay::DelayGate;
 use super::messages::{Push, ToServer};
 use super::metrics::ServerStats;
 use super::Published;
 use crate::gp::ThetaLayout;
+use crate::log_warn;
 use crate::opt::{prox_update, AdaDelta, StepSchedule};
 use crate::util::Stopwatch;
+use std::path::{Path, PathBuf};
 use std::sync::mpsc::Receiver;
 use std::sync::Arc;
 
@@ -15,7 +19,9 @@ pub struct ServerConfig {
     pub layout: ThetaLayout,
     pub workers: usize,
     pub tau: u64,
-    /// Stop after this many server updates.
+    /// Stop once the published version reaches this many updates.  On a
+    /// resumed run the count continues from the checkpoint version, so
+    /// this is a *cumulative* ceiling across resumes.
     pub max_updates: u64,
     /// Global learning-rate scale multiplying the ADADELTA direction.
     pub lr: f64,
@@ -27,6 +33,24 @@ pub struct ServerConfig {
     /// If true, hyperparameters (Z, kernel, noise) are frozen and only
     /// the variational block is optimized (used by ablations/baselines).
     pub freeze_hyper: bool,
+    /// Write a checkpoint every N updates (0 = never).  Cadence writes
+    /// happen on a background thread so publishing never stalls on
+    /// fsync (a hit is skipped if the previous save is still in
+    /// flight); a final synchronous seal at the end of the run is
+    /// always written when enabled.
+    pub checkpoint_every: u64,
+    /// Where checkpoints go (required when `checkpoint_every > 0`).
+    pub checkpoint_dir: Option<PathBuf>,
+    /// Resume from this frozen state: θ, the version counter, and the
+    /// ADADELTA accumulators restore bitwise; the gate starts fresh so
+    /// every live worker must push once at the restored θ before the
+    /// first post-resume update (see `ps::checkpoint` module docs).
+    pub resume: Option<Checkpoint>,
+    /// Late joiners the coordinator has declared but that may not have
+    /// pushed yet.  The server keeps running while any are outstanding,
+    /// so a run whose initial workers all depart before a declared
+    /// joiner arrives waits for it instead of ending early.
+    pub expected_joiners: usize,
 }
 
 /// Outcome of the server loop.
@@ -35,6 +59,109 @@ pub struct ServerOutcome {
     pub stats: ServerStats,
     /// Total data-term value at the last aggregation (diagnostics).
     pub last_value: f64,
+}
+
+/// Absorb one worker message into the gate / gradient slots / stats —
+/// shared by the blocking receive and the opportunistic drain.
+/// `joiner_pending[i]` tracks whether declared joiner id
+/// `initial_workers + i` is still outstanding; only *that* id's first
+/// admission clears its slot, so a retired member rejoining can never
+/// consume a declared joiner's keep-alive.
+fn absorb(
+    msg: ToServer,
+    gate: &mut DelayGate,
+    slots: &mut Vec<Option<Push>>,
+    stats: &mut ServerStats,
+    initial_workers: usize,
+    joiner_pending: &mut [bool],
+) {
+    match msg {
+        ToServer::WorkerExit { worker } => {
+            stats.leaves += 1;
+            gate.retire(worker);
+            // Drop the departed worker's gradient: a retired worker
+            // must stop contributing to Σ_k ∇G_k immediately.
+            if worker < slots.len() {
+                slots[worker] = None;
+            }
+        }
+        ToServer::Push(push) => {
+            let w = push.worker;
+            if w >= slots.len() {
+                slots.resize_with(w + 1, || None);
+            }
+            stats.pushes += 1;
+            stats.worker_compute_secs.push(push.compute_secs);
+            // The gate decides what counts as an admission (unknown or
+            // retired id), so joins are counted correctly even when
+            // joiners' first pushes arrive out of id order.
+            if gate.record(w, push.version) {
+                stats.joins += 1;
+                if let Some(slot) = w
+                    .checked_sub(initial_workers)
+                    .and_then(|i| joiner_pending.get_mut(i))
+                {
+                    *slot = false;
+                }
+            }
+            slots[w] = Some(push);
+        }
+    }
+}
+
+/// Freeze the server state and resolve the destination directory —
+/// the shared front half of both checkpoint paths.  `None` (with a
+/// warning) when no directory is configured.
+fn capture_checkpoint(
+    cfg: &ServerConfig,
+    t: u64,
+    theta: &[f64],
+    adadelta: &AdaDelta,
+    gate: &DelayGate,
+) -> Option<(Checkpoint, PathBuf)> {
+    let Some(dir) = cfg.checkpoint_dir.clone() else {
+        log_warn!("checkpoint_every set but no checkpoint_dir; skipping");
+        return None;
+    };
+    Some((Checkpoint::capture(cfg.layout, t, theta, adadelta, gate.clocks()), dir))
+}
+
+/// Save and swallow-with-warning: training outlives a failed save —
+/// durability is best-effort, correctness of the run is not affected.
+/// The single failure-policy point for both the cadence writer and the
+/// final seal.
+fn save_and_log(ck: Checkpoint, dir: &Path) {
+    if let Err(e) = ck.save_in(dir) {
+        log_warn!("checkpoint at t={} failed: {e:#}", ck.version);
+    }
+}
+
+/// Synchronous save (the end-of-run seal).
+fn write_checkpoint(
+    cfg: &ServerConfig,
+    t: u64,
+    theta: &[f64],
+    adadelta: &AdaDelta,
+    gate: &DelayGate,
+) {
+    if let Some((ck, dir)) = capture_checkpoint(cfg, t, theta, adadelta, gate) {
+        save_and_log(ck, &dir);
+    }
+}
+
+/// Hand the encode + fsync to a background thread so the update/publish
+/// thread never stalls on disk (the save is an O(dim) state snapshot,
+/// not an O(m³) rebuild).  Returns the writer handle; `None` when no
+/// directory is configured.
+fn spawn_checkpoint(
+    cfg: &ServerConfig,
+    t: u64,
+    theta: &[f64],
+    adadelta: &AdaDelta,
+    gate: &DelayGate,
+) -> Option<std::thread::JoinHandle<()>> {
+    let (ck, dir) = capture_checkpoint(cfg, t, theta, adadelta, gate)?;
+    Some(std::thread::spawn(move || save_and_log(ck, &dir)))
 }
 
 /// Run the server until `max_updates` or all workers exit.
@@ -49,48 +176,58 @@ pub fn run_server(
     assert_eq!(theta.len(), dim);
     let mut gate = DelayGate::new(cfg.workers, cfg.tau);
     // Freshest gradient per worker (the Σ_k ∇G_k^{(t_k)} aggregation
-    // uses the latest push of each worker).
+    // uses the latest push of every live worker).
     let mut slots: Vec<Option<Push>> = (0..cfg.workers).map(|_| None).collect();
-    let mut adadelta = AdaDelta::default_for(dim);
-    let mut t: u64 = 0;
+    let (mut adadelta, mut t) = match &cfg.resume {
+        Some(ck) => {
+            // (m, d) — not just θ length, which collides across layouts.
+            assert_eq!(
+                (ck.m, ck.d),
+                (layout.m, layout.d),
+                "resume checkpoint is for layout m={}, d={} but the server \
+                 runs m={}, d={}",
+                ck.m,
+                ck.d,
+                layout.m,
+                layout.d
+            );
+            assert_eq!(ck.theta.len(), dim);
+            // The coordinator already published (ck.version, ck.theta);
+            // take the checkpoint as the source of truth regardless.
+            theta.copy_from_slice(&ck.theta);
+            (ck.restore_adadelta(), ck.version)
+        }
+        None => (AdaDelta::default_for(dim), 0),
+    };
     let mut stats = ServerStats::default();
-    let mut live_workers = cfg.workers;
+    // `updates` reports the published version: on a resumed run it
+    // starts at the checkpoint version even if no new update lands.
+    stats.updates = t;
     let clock = Stopwatch::start();
     let mut last_update = 0.0f64;
     let mut last_value = f64::NAN;
 
-    while t < cfg.max_updates && live_workers > 0 {
+    // One keep-alive slot per declared joiner, cleared by that id's
+    // first admission (never by an unrelated rejoin).
+    let mut joiner_pending = vec![true; cfg.expected_joiners];
+    // Outstanding background checkpoint write (at most one in flight).
+    let mut ck_writer: Option<std::thread::JoinHandle<()>> = None;
+    // Keep serving while any declared joiner is outstanding, even if
+    // every current member departed — the joiner's first push (or the
+    // channel disconnecting) is what ends the wait, so an elastic run
+    // can hand over from its initial workers to late ones.
+    while t < cfg.max_updates
+        && (gate.live() > 0 || joiner_pending.iter().any(|p| *p))
+    {
         let msg = match rx.recv() {
             Ok(m) => m,
             Err(_) => break, // all senders dropped
         };
-        match msg {
-            ToServer::WorkerExit { worker: _ } => {
-                live_workers -= 1;
-                continue;
-            }
-            ToServer::Push(push) => {
-                stats.pushes += 1;
-                stats.worker_compute_secs.push(push.compute_secs);
-                gate.record(push.worker, push.version);
-                let w = push.worker;
-                slots[w] = Some(push);
-            }
-        }
-
+        absorb(msg, &mut gate, &mut slots, &mut stats, cfg.workers, &mut joiner_pending);
         // Drain any queued pushes before checking the gate — keeps the
         // aggregation as fresh as possible without blocking.
         while let Ok(msg) = rx.try_recv() {
-            match msg {
-                ToServer::WorkerExit { .. } => live_workers -= 1,
-                ToServer::Push(push) => {
-                    stats.pushes += 1;
-                    stats.worker_compute_secs.push(push.compute_secs);
-                    gate.record(push.worker, push.version);
-                    let w = push.worker;
-                    slots[w] = Some(push);
-                }
-            }
+            absorb(msg, &mut gate, &mut slots, &mut stats, cfg.workers, &mut joiner_pending);
         }
 
         if !gate.permits(t) {
@@ -127,16 +264,45 @@ pub fn run_server(
         );
         t += 1;
         published.publish(t, theta.clone());
+        if cfg.checkpoint_every > 0 && t % cfg.checkpoint_every == 0 {
+            // Async write off the publish thread.  If the previous save
+            // is still flushing, skip this cadence hit (the final seal
+            // below guarantees the run's last state is always saved).
+            if ck_writer.as_ref().is_some_and(|h| !h.is_finished()) {
+                log_warn!("checkpoint at t={t} skipped: previous save still in flight");
+            } else {
+                if let Some(h) = ck_writer.take() {
+                    let _ = h.join();
+                }
+                ck_writer = spawn_checkpoint(cfg, t, &theta, &adadelta, &gate);
+            }
+        }
         let now = clock.secs();
         stats.iter_secs.push(now - last_update);
         last_update = now;
         stats.updates = t;
     }
 
+    if let Some(h) = ck_writer.take() {
+        // Join the in-flight writer first: the synchronous seal below
+        // may target the same version/temp path, and run_server must
+        // not return with a write still racing in the background.
+        let _ = h.join();
+    }
+    if cfg.checkpoint_every > 0 {
+        // Seal the run so a resume continues from the final state (a
+        // no-op rewrite when t already landed on a cadence boundary).
+        write_checkpoint(cfg, t, &theta, &adadelta, &gate);
+    }
     published.shutdown();
-    // Drain remaining messages so worker sends never block (they use an
-    // unbounded channel, but be tidy and record exits).
-    while let Ok(_msg) = rx.try_recv() {}
+    // Drain remaining messages so worker sends never block (unbounded
+    // channel, but be tidy) and keep the departure count honest for
+    // exits that arrived after the loop broke.
+    while let Ok(msg) = rx.try_recv() {
+        if let ToServer::WorkerExit { .. } = msg {
+            stats.leaves += 1;
+        }
+    }
     ServerOutcome { theta, stats, last_value }
 }
 

@@ -1,19 +1,64 @@
-//! The worker loop (Algorithm 1, worker side) with straggler and
-//! crash/restart injection.
+//! The worker loop (Algorithm 1, worker side) with straggler,
+//! crash/restart, and permanent-departure injection, over in-memory or
+//! out-of-core data sources.
 
 use super::messages::{Push, ToServer};
 use super::Published;
+use crate::data::store::ShardReader;
 use crate::data::Dataset;
 use crate::grad::EngineFactory;
 use crate::linalg::Mat;
+use crate::log_warn;
 use crate::util::rng::Pcg64;
 use crate::util::{pool, Stopwatch};
 use std::sync::mpsc::Sender;
 use std::sync::Arc;
 use std::time::Duration;
 
+/// Where a worker's shard lives (ISSUE 3).
+///
+/// * `Memory` — the original path: the shard is resident and borrowed
+///   every iteration (capped workers rotate a cyclic window through it).
+/// * `Store` — out-of-core: the worker streams fixed-size minibatch
+///   chunks from a shard file through one reusable buffer; peak
+///   resident data is one chunk, never the shard.
+pub enum WorkerSource {
+    Memory(Dataset),
+    Store(ShardReader),
+}
+
+impl WorkerSource {
+    /// Rows in the underlying shard.
+    pub fn n(&self) -> usize {
+        match self {
+            WorkerSource::Memory(ds) => ds.n(),
+            WorkerSource::Store(r) => r.n(),
+        }
+    }
+
+    /// Feature count of the underlying shard.
+    pub fn d(&self) -> usize {
+        match self {
+            WorkerSource::Memory(ds) => ds.d(),
+            WorkerSource::Store(r) => r.d(),
+        }
+    }
+}
+
+impl From<Dataset> for WorkerSource {
+    fn from(ds: Dataset) -> Self {
+        WorkerSource::Memory(ds)
+    }
+}
+
+impl From<ShardReader> for WorkerSource {
+    fn from(r: ShardReader) -> Self {
+        WorkerSource::Store(r)
+    }
+}
+
 /// Per-worker behaviour knobs (used by Fig. 2's straggler experiment and
-/// the failure-injection tests).
+/// the failure-injection/elasticity tests).
 #[derive(Clone, Debug, Default)]
 pub struct WorkerProfile {
     /// Sleep this long before *every* iteration (the paper's simulated
@@ -23,9 +68,14 @@ pub struct WorkerProfile {
     /// engine, sleeps `restart_after`, rebuilds, and rejoins.
     pub crash_at: Option<u64>,
     pub restart_after: Duration,
+    /// Depart permanently at local iteration N (ISSUE 3): the worker
+    /// sends `WorkerExit` and the server retires its clock from the
+    /// bounded-staleness gate, so the run proceeds without it.
+    pub leave_at: Option<u64>,
     /// Cap rows per iteration (0 = full shard, the paper's setting).
     /// Capped workers rotate a cyclic window through the shard so the
     /// cap subsamples *all* of their data over time, not a fixed head.
+    /// For `Store` sources this also overrides the store's chunk size.
     pub max_rows: usize,
     /// Thread-pool budget for this worker's gradient computation
     /// (0 = auto: the coordinator splits `pool::threads()` across
@@ -33,10 +83,13 @@ pub struct WorkerProfile {
     pub threads: usize,
 }
 
-/// Run one worker until the server shuts down.
+/// Run one worker until the server shuts down (or the profile makes it
+/// leave).  The worker pulls θ from `published`, computes its local
+/// gradient over `source`, and pushes to `tx` — Algorithm 1, worker
+/// side.
 pub fn run_worker(
     worker_id: usize,
-    shard: Dataset,
+    mut source: WorkerSource,
     factory: EngineFactory,
     published: Arc<Published>,
     tx: Sender<ToServer>,
@@ -46,27 +99,59 @@ pub fn run_worker(
     let mut seen: u64 = 0;
     let mut local_iter: u64 = 0;
     let mut crashed = false;
-    // Capped workers rotate a cyclic window through the shard (seeded
-    // starting offset, advanced by the cap each iteration) so every row
-    // is visited within ⌈n/cap⌉ iterations — the old `shard.head(cap)`
-    // resampled the *same* rows forever.  The window buffer is reused
-    // across iterations; uncapped workers borrow the shard directly
-    // (the old path cloned the whole dataset every step).
-    let capped = profile.max_rows > 0 && profile.max_rows < shard.n();
+    let n = source.n();
+    // Windowed iteration: store sources always stream chunks; memory
+    // sources window only when capped.  Windows rotate cyclically from
+    // a seeded offset (advanced by the window size each iteration) so
+    // every row is visited within ⌈n/window⌉ iterations — see
+    // `Dataset::copy_cyclic_window`.  The window buffer is reused
+    // across iterations; uncapped memory workers borrow the shard
+    // directly (the pre-ISSUE-2 path cloned the whole dataset every
+    // step).
+    let window_rows = match &source {
+        WorkerSource::Memory(_) => {
+            if profile.max_rows > 0 && profile.max_rows < n {
+                profile.max_rows
+            } else {
+                0 // borrow the whole shard
+            }
+        }
+        WorkerSource::Store(r) => {
+            if profile.max_rows > 0 {
+                profile.max_rows.min(n)
+            } else {
+                r.chunk_rows()
+            }
+        }
+    };
     let mut window = Dataset { x: Mat::empty(), y: Vec::new() };
-    let mut offset = if capped {
-        Pcg64::seeded(worker_id as u64 ^ 0x5EED).next_below(shard.n() as u64) as usize
+    // Seed the cyclic start only for windows smaller than the shard:
+    // rotating a full-shard window is a no-op for coverage, and offset
+    // 0 keeps a whole-shard store stream bitwise-identical to the
+    // resident borrow (pinned by `tests/store_checkpoint.rs`).
+    let mut offset = if window_rows > 0 && window_rows < n {
+        Pcg64::seeded(worker_id as u64 ^ 0x5EED).next_below(n as u64) as usize
     } else {
         0
     };
+    if let WorkerSource::Store(reader) = &mut source {
+        // The reader owns the stream cursor for store sources — one
+        // copy of the cyclic arithmetic, in `data::store`.
+        reader.set_chunk_rows(window_rows);
+        reader.seek_to(offset);
+    }
     // First pull uses version 0 (initial θ) — workers must each push one
     // gradient before the server can make update 0, so don't wait for a
-    // newer version on the first iteration.
+    // newer version on the first iteration.  A late joiner lands here
+    // too: its first snapshot *adopts* whatever version is live.
     let (mut version, mut theta) = {
         let (v, th, _sd) = published.snapshot();
         (v, th)
     };
     loop {
+        if profile.leave_at == Some(local_iter) {
+            break; // permanent departure — WorkerExit below retires us
+        }
         if !profile.straggle.is_zero() {
             std::thread::sleep(profile.straggle);
         }
@@ -78,12 +163,25 @@ pub fn run_worker(
             engine = factory(worker_id);
         }
 
-        let (x, y): (&Mat, &[f64]) = if capped {
-            shard.copy_cyclic_window(offset, profile.max_rows, &mut window);
-            offset = (offset + profile.max_rows) % shard.n();
-            (&window.x, &window.y)
-        } else {
-            (&shard.x, &shard.y)
+        let (x, y): (&Mat, &[f64]) = match &mut source {
+            WorkerSource::Memory(ds) => {
+                if window_rows > 0 {
+                    ds.copy_cyclic_window(offset, window_rows, &mut window);
+                    offset = (offset + window_rows) % n;
+                    (&window.x, &window.y)
+                } else {
+                    (&ds.x, &ds.y)
+                }
+            }
+            WorkerSource::Store(reader) => {
+                if let Err(e) = reader.next_window(&mut window) {
+                    // A dead store is a dead worker: depart and let the
+                    // gate retire our clock.
+                    log_warn!("worker {worker_id}: shard read failed, leaving: {e:#}");
+                    break;
+                }
+                (&window.x, &window.y)
+            }
         };
         let sw = Stopwatch::start();
         // Cap this worker's parallel linalg at its share of the pool so

@@ -43,6 +43,26 @@ pub struct Posterior {
 /// refresher thread); `get` is wait-free apart from a brief read lock
 /// and returns a snapshot that stays valid for as long as the caller
 /// holds the `Arc`, even across later installs.
+///
+/// ```
+/// use advgp::gp::{Theta, ThetaLayout};
+/// use advgp::linalg::Mat;
+/// use advgp::serve::PosteriorCache;
+///
+/// let layout = ThetaLayout::new(2, 1);
+/// let theta = Theta::init(layout, &Mat::from_vec(2, 1, vec![-1.0, 1.0]));
+/// let cache = PosteriorCache::new(layout);
+/// assert!(cache.get().is_none()); // nothing installed yet
+///
+/// assert!(cache.install(1, &theta.data)); // O(m³) build, then swap
+/// assert!(!cache.install(1, &theta.data)); // same version: no rebuild
+/// assert!(!cache.install(0, &theta.data)); // stale writer: dropped
+///
+/// let post = cache.get().unwrap(); // snapshot outlives later installs
+/// assert_eq!(post.version, 1);
+/// let (mean, var) = post.gp.predict(&Mat::from_vec(1, 1, vec![0.2]));
+/// assert_eq!((mean.len(), var.len()), (1, 1));
+/// ```
 pub struct PosteriorCache {
     layout: ThetaLayout,
     slot: RwLock<Option<Arc<Posterior>>>,

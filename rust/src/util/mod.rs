@@ -1,7 +1,18 @@
-//! Shared substrates: RNG, JSON, CLI parsing, logging, timing.
+//! Shared substrates: RNG, JSON, CLI parsing, logging, timing, the
+//! global thread pool, and streaming statistics.
 //!
 //! The build environment is offline (only `xla` + `anyhow` resolve), so
 //! these replace the usual crates (`rand`, `serde_json`, `clap`, `log`).
+//!
+//! Key invariants:
+//! * [`rng::Pcg64`] streams are deterministic per seed — every
+//!   experiment, shuffle, and worker offset is reproducible.
+//! * [`Stats`] memory is bounded (Welford summaries + a 512-slot
+//!   quantile reservoir) for any stream length, so server metrics
+//!   never grow with run length.
+//! * [`pool`] is work-*sharing*: dispatchers execute part of their own
+//!   task set and nested dispatch runs inline, so concurrent
+//!   parameter-server workers can never deadlock the pool.
 
 pub mod cli;
 pub mod json;
@@ -134,6 +145,48 @@ impl Stats {
         let idx = ((s.len() - 1) as f64 * q.clamp(0.0, 1.0)).round() as usize;
         s[idx]
     }
+}
+
+/// Write `bytes` to `path` durably: create `<path>.tmp` beside it,
+/// write, fsync, atomically rename into place, then best-effort fsync
+/// the parent directory so the rename itself survives a crash.  A
+/// failure can never leave a partial file at `path`.  The single
+/// durability-policy point shared by checkpoints and store manifests
+/// (the streaming shard writer follows the same discipline inline).
+pub fn atomic_write(path: &std::path::Path, bytes: &[u8]) -> anyhow::Result<()> {
+    use anyhow::Context;
+    let mut os = path.as_os_str().to_os_string();
+    os.push(".tmp");
+    let tmp = std::path::PathBuf::from(os);
+    let mut f = std::fs::File::create(&tmp)
+        .with_context(|| format!("create {}", tmp.display()))?;
+    std::io::Write::write_all(&mut f, bytes)
+        .with_context(|| format!("write {}", tmp.display()))?;
+    f.sync_all().with_context(|| format!("fsync {}", tmp.display()))?;
+    drop(f);
+    std::fs::rename(&tmp, path)
+        .with_context(|| format!("rename {} -> {}", tmp.display(), path.display()))?;
+    if let Some(parent) = path.parent() {
+        if let Ok(d) = std::fs::File::open(parent) {
+            let _ = d.sync_all();
+        }
+    }
+    Ok(())
+}
+
+/// FNV-1a 64-bit offset basis — seed for [`fnv1a64`].
+pub const FNV1A64_INIT: u64 = 0xcbf2_9ce4_8422_2325;
+
+/// Fold `bytes` into an FNV-1a 64-bit state (seed with
+/// [`FNV1A64_INIT`]; chain calls to hash incrementally).  Integrity
+/// hashing only — not cryptographic.  Shared by the checkpoint
+/// checksum and the shard-store data fingerprint.
+pub fn fnv1a64(mut h: u64, bytes: &[u8]) -> u64 {
+    for b in bytes {
+        h ^= *b as u64;
+        h = h.wrapping_mul(0x0000_0100_0000_01b3);
+    }
+    h
 }
 
 /// Root-mean-square error between two slices.

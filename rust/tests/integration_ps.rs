@@ -156,6 +156,39 @@ fn crash_and_restart_worker_recovers() {
     assert!(rmse(&mean, &test_ds.y) < 0.8 * mean_rmse(&test_ds));
 }
 
+/// ISSUE 3: a worker killed mid-run (permanent departure, unlike the
+/// crash/restart above) must not stall the bounded-staleness gate — the
+/// server retires its clock, keeps aggregating the survivors, and the
+/// run still converges.  Pre-elasticity this deadlocked: the departed
+/// worker's frozen clock eventually failed `min_k t_k ≥ t − τ` forever.
+#[test]
+fn killed_worker_retires_and_run_converges() {
+    let (train_ds, test_ds, theta, layout) = setup(1200, 12, 8);
+    let mut cfg = TrainConfig::new(layout);
+    cfg.tau = 2; // tight gate: a frozen clock would stall within 3 updates
+    cfg.max_updates = 200;
+    cfg.eval_every_secs = 0.0;
+    cfg.profiles = vec![
+        WorkerProfile::default(),
+        WorkerProfile { leave_at: Some(5), ..Default::default() },
+        WorkerProfile::default(),
+    ];
+    let res = train(
+        &cfg,
+        theta.data.clone(),
+        train_ds.shard(3),
+        native_factory(layout),
+        None,
+    );
+    assert_eq!(res.stats.updates, 200, "run must complete despite the kill");
+    assert!(res.stats.leaves >= 1, "departure must be observed");
+    // Staleness stays bounded by τ for the *live* membership throughout.
+    assert!(res.stats.staleness.max <= cfg.tau as f64);
+    let gp = SparseGp::new(Theta { layout, data: res.theta });
+    let (mean, _) = gp.predict(&test_ds.x);
+    assert!(rmse(&mean, &test_ds.y) < 0.8 * mean_rmse(&test_ds));
+}
+
 #[test]
 fn time_limit_stops_run() {
     let (train_ds, _test, theta, layout) = setup(1500, 12, 9);

@@ -1,0 +1,434 @@
+//! Integration: out-of-core shard store, checkpoint/restore, and
+//! elastic membership (ISSUE 3) — training end-to-end from on-disk
+//! shards, exact resume, and mid-run worker join.
+
+use advgp::data::store::{ShardReader, ShardSet};
+use advgp::data::{kmeans, synth, Dataset, Standardizer};
+use advgp::gp::{SparseGp, Theta, ThetaLayout};
+use advgp::grad::{native_factory, EngineFactory, GradEngine, GradResult};
+use advgp::linalg::Mat;
+use advgp::ps::coordinator::{
+    train, train_elastic, train_sources, Joiner, TrainConfig,
+};
+use advgp::ps::worker::{WorkerProfile, WorkerSource};
+use advgp::ps::{Checkpoint, Published};
+use advgp::util::rmse;
+use advgp::util::rng::Pcg64;
+use std::path::PathBuf;
+use std::sync::{Arc, Mutex};
+use std::time::Duration;
+
+fn tdir(name: &str) -> PathBuf {
+    let dir = std::env::temp_dir().join("advgp_sc_test").join(name);
+    let _ = std::fs::remove_dir_all(&dir);
+    std::fs::create_dir_all(&dir).unwrap();
+    dir
+}
+
+/// Standardized friedman problem + kmeans-initialized θ.
+fn setup(n: usize, m: usize, seed: u64) -> (Dataset, Dataset, Theta, ThetaLayout) {
+    let mut ds = synth::friedman(n + 200, 4, 0.4, seed);
+    let mut rng = Pcg64::seeded(seed);
+    ds.shuffle(&mut rng);
+    let (mut train_ds, mut test_ds) = ds.split(200);
+    let st = Standardizer::fit(&train_ds);
+    st.apply(&mut train_ds);
+    st.apply(&mut test_ds);
+    let layout = ThetaLayout::new(m, 4);
+    let z = kmeans::kmeans(&train_ds.x, m, 15, &mut rng);
+    let theta = Theta::init(layout, &z);
+    (train_ds, test_ds, theta, layout)
+}
+
+fn mean_rmse(test: &Dataset) -> f64 {
+    rmse(&vec![0.0; test.n()], &test.y)
+}
+
+fn store_sources(set: &ShardSet) -> Vec<WorkerSource> {
+    set.readers()
+        .unwrap()
+        .into_iter()
+        .map(WorkerSource::Store)
+        .collect()
+}
+
+/// Workers streaming minibatch chunks from on-disk shards must converge
+/// just like resident-shard workers — the tentpole end-to-end path.
+#[test]
+fn store_backed_training_converges() {
+    let dir = tdir("train");
+    let (train_ds, test_ds, theta, layout) = setup(2000, 16, 1);
+    // Chunks well below the ~667-row shards: every gradient is a true
+    // streamed minibatch (with wrap-around), not a disguised full batch.
+    let set = ShardSet::create(&dir, &train_ds, 3, 256).unwrap();
+    let mut cfg = TrainConfig::new(layout);
+    cfg.tau = 8;
+    cfg.max_updates = 400;
+    cfg.eval_every_secs = 0.0;
+    let res = train_sources(
+        &cfg,
+        theta.data.clone(),
+        store_sources(&set),
+        native_factory(layout),
+        None,
+    );
+    assert_eq!(res.stats.updates, 400);
+    let gp = SparseGp::new(Theta { layout, data: res.theta });
+    let (mean, _) = gp.predict(&test_ds.x);
+    let final_rmse = rmse(&mean, &test_ds.y);
+    let baseline = mean_rmse(&test_ds);
+    assert!(
+        final_rmse < 0.7 * baseline,
+        "rmse {final_rmse} vs mean predictor {baseline}"
+    );
+}
+
+/// A store-fed worker's minibatch windows must tile its whole shard
+/// (same coverage contract as the in-memory cyclic window).
+#[test]
+fn store_worker_covers_whole_shard() {
+    use std::collections::HashSet;
+
+    struct Probe {
+        layout: ThetaLayout,
+        chunk: usize,
+        seen: Arc<Mutex<HashSet<i64>>>,
+    }
+    impl GradEngine for Probe {
+        fn layout(&self) -> ThetaLayout {
+            self.layout
+        }
+        fn grad(&mut self, _theta: &[f64], x: &Mat, _y: &[f64]) -> GradResult {
+            assert_eq!(x.rows, self.chunk, "window must be exactly the chunk");
+            let mut seen = self.seen.lock().unwrap();
+            for i in 0..x.rows {
+                seen.insert(x.row(i)[0].round() as i64);
+            }
+            GradResult { value: 0.0, grad: vec![0.0; self.layout.len()] }
+        }
+        fn name(&self) -> &'static str {
+            "probe"
+        }
+    }
+
+    let dir = tdir("coverage");
+    let n = 30usize;
+    let chunk = 8usize;
+    let layout = ThetaLayout::new(2, 1);
+    let shard = Dataset {
+        x: Mat::from_vec(n, 1, (0..n).map(|i| i as f64).collect()),
+        y: vec![0.0; n],
+    };
+    let set = ShardSet::create(&dir, &shard, 1, chunk).unwrap();
+    let seen = Arc::new(Mutex::new(HashSet::new()));
+    let seen_f = Arc::clone(&seen);
+    let factory: EngineFactory = Arc::new(move |_worker| {
+        Box::new(Probe { layout, chunk, seen: Arc::clone(&seen_f) })
+    });
+    let z0 = Mat::from_vec(2, 1, vec![3.0, 20.0]);
+    let theta = Theta::init(layout, &z0);
+    let mut cfg = TrainConfig::new(layout);
+    cfg.tau = 32;
+    cfg.max_updates = 12; // ≥ ⌈30/8⌉ = 4 worker iterations needed
+    cfg.eval_every_secs = 0.0;
+    train_sources(&cfg, theta.data.clone(), store_sources(&set), factory, None);
+    let seen = seen.lock().unwrap();
+    let missing: Vec<usize> = (0..n).filter(|i| !seen.contains(&(*i as i64))).collect();
+    assert!(
+        missing.is_empty(),
+        "store worker never saw rows {missing:?} (saw {} of {n})",
+        seen.len()
+    );
+}
+
+/// The first θ any worker pulls after a resume must be the checkpointed
+/// θ, bitwise — verified race-free at the worker's first gradient call
+/// (the server cannot update before every worker has pushed once).
+#[test]
+fn resume_republishes_checkpoint_theta_bitwise() {
+    let ckdir = tdir("bitwise_ck");
+    let (train_ds, _test, theta, layout) = setup(600, 8, 3);
+
+    // Leg 1: 40 updates, checkpointing every 10.
+    let mut cfg = TrainConfig::new(layout);
+    cfg.tau = 4;
+    cfg.max_updates = 40;
+    cfg.eval_every_secs = 0.0;
+    cfg.checkpoint_every = 10;
+    cfg.checkpoint_dir = Some(ckdir.clone());
+    train(
+        &cfg,
+        theta.data.clone(),
+        train_ds.shard(2),
+        native_factory(layout),
+        None,
+    );
+    let ck = Checkpoint::load_latest(&ckdir).unwrap().expect("leg 1 checkpointed");
+    assert_eq!(ck.version, 40, "final checkpoint seals the run");
+    assert_eq!(ck.clocks.len(), 2);
+
+    // Leg 2: resume; a probe wrapping the native engine records the
+    // first θ each worker is handed.
+    struct FirstTheta {
+        inner: Box<dyn GradEngine>,
+        recorded: bool,
+        sink: Arc<Mutex<Vec<Vec<f64>>>>,
+    }
+    impl GradEngine for FirstTheta {
+        fn layout(&self) -> ThetaLayout {
+            self.inner.layout()
+        }
+        fn grad(&mut self, theta: &[f64], x: &Mat, y: &[f64]) -> GradResult {
+            if !self.recorded {
+                self.recorded = true;
+                self.sink.lock().unwrap().push(theta.to_vec());
+            }
+            self.inner.grad(theta, x, y)
+        }
+        fn name(&self) -> &'static str {
+            "first-theta-probe"
+        }
+    }
+    let firsts: Arc<Mutex<Vec<Vec<f64>>>> = Arc::new(Mutex::new(Vec::new()));
+    let sink = Arc::clone(&firsts);
+    let native = native_factory(layout);
+    let factory: EngineFactory = Arc::new(move |worker| {
+        Box::new(FirstTheta {
+            inner: native(worker),
+            recorded: false,
+            sink: Arc::clone(&sink),
+        })
+    });
+    let mut cfg2 = TrainConfig::new(layout);
+    cfg2.tau = 4;
+    cfg2.max_updates = 60;
+    cfg2.eval_every_secs = 0.0;
+    cfg2.resume_from = Some(ck.clone());
+    let res = train(
+        &cfg2,
+        theta.data.clone(), // deliberately stale: the checkpoint must win
+        train_ds.shard(2),
+        factory,
+        None,
+    );
+    assert_eq!(res.stats.updates, 60, "cumulative ceiling: 40 resumed → 60");
+    let firsts = firsts.lock().unwrap();
+    assert_eq!(firsts.len(), 2, "both workers recorded a first pull");
+    for (w, th) in firsts.iter().enumerate() {
+        assert_eq!(th.len(), ck.theta.len());
+        for (a, b) in th.iter().zip(&ck.theta) {
+            assert_eq!(
+                a.to_bits(),
+                b.to_bits(),
+                "worker {w}: first pulled θ differs from checkpoint"
+            );
+        }
+    }
+}
+
+/// Determinism under τ=0: N updates + checkpoint + resume to 2N must
+/// land bitwise on the same θ as 2N updates straight through — the
+/// checkpoint captures *everything* the trajectory depends on.
+#[test]
+fn resumed_trajectory_matches_uninterrupted_run_bitwise() {
+    let ckdir = tdir("traj");
+    let (train_ds, _test, theta, layout) = setup(400, 6, 11);
+    let run = |max: u64, every: u64, resume: Option<Checkpoint>| {
+        let mut cfg = TrainConfig::new(layout);
+        cfg.tau = 0; // sync: aggregation identical every update
+        cfg.max_updates = max;
+        cfg.eval_every_secs = 0.0;
+        cfg.checkpoint_every = every;
+        cfg.checkpoint_dir = (every > 0).then(|| ckdir.clone());
+        cfg.resume_from = resume;
+        train(
+            &cfg,
+            theta.data.clone(),
+            train_ds.shard(2),
+            native_factory(layout),
+            None,
+        )
+    };
+    let direct = run(30, 0, None);
+    let _leg1 = run(15, 15, None);
+    let ck = Checkpoint::load_latest(&ckdir).unwrap().unwrap();
+    assert_eq!(ck.version, 15);
+    let resumed = run(30, 0, Some(ck));
+    assert_eq!(resumed.stats.updates, 30);
+    for (i, (a, b)) in direct.theta.iter().zip(&resumed.theta).enumerate() {
+        assert_eq!(
+            a.to_bits(),
+            b.to_bits(),
+            "θ[{i}] diverged: straight {a} vs resumed {b}"
+        );
+    }
+}
+
+/// Checkpoint cadence: every N updates plus a sealing checkpoint at the
+/// end, all loadable, newest wins.
+#[test]
+fn checkpoint_cadence_and_seal() {
+    let ckdir = tdir("cadence");
+    let (train_ds, _test, theta, layout) = setup(400, 6, 5);
+    let mut cfg = TrainConfig::new(layout);
+    cfg.tau = 4;
+    cfg.max_updates = 35;
+    cfg.eval_every_secs = 0.0;
+    cfg.checkpoint_every = 10;
+    cfg.checkpoint_dir = Some(ckdir.clone());
+    train(
+        &cfg,
+        theta.data.clone(),
+        train_ds.shard(2),
+        native_factory(layout),
+        None,
+    );
+    let mut versions: Vec<u64> = std::fs::read_dir(&ckdir)
+        .unwrap()
+        .map(|e| Checkpoint::load(&e.unwrap().path()).unwrap().version)
+        .collect();
+    versions.sort_unstable();
+    // Cadence writes are async and may individually be skipped while a
+    // previous save is in flight, but every file must sit on a cadence
+    // boundary (or be the seal), and the synchronous final seal at
+    // t=35 is guaranteed.
+    assert!(
+        versions.iter().all(|v| [10, 20, 30, 35].contains(v)),
+        "off-cadence checkpoint files: {versions:?}"
+    );
+    assert_eq!(versions.last(), Some(&35), "final seal missing: {versions:?}");
+    assert_eq!(Checkpoint::load_latest(&ckdir).unwrap().unwrap().version, 35);
+}
+
+/// A worker that joins mid-run is admitted on its first push and
+/// contributes to convergence; ids/gaps never stall the gate.
+#[test]
+fn late_joiner_is_admitted() {
+    let (train_ds, test_ds, theta, layout) = setup(1000, 10, 7);
+    let shards = train_ds.shard(3);
+    let mut shards = shards.into_iter();
+    let s0 = shards.next().unwrap();
+    let s1 = shards.next().unwrap();
+    let s2 = shards.next().unwrap();
+    let mut cfg = TrainConfig::new(layout);
+    cfg.tau = 16;
+    cfg.max_updates = 150;
+    cfg.eval_every_secs = 0.0;
+    // Slow the initial workers slightly so the run outlives the join.
+    cfg.profiles = vec![
+        WorkerProfile { straggle: Duration::from_millis(2), ..Default::default() },
+        WorkerProfile { straggle: Duration::from_millis(2), ..Default::default() },
+    ];
+    let res = train_elastic(
+        &cfg,
+        Published::new(theta.data.clone()),
+        vec![WorkerSource::Memory(s0), WorkerSource::Memory(s1)],
+        vec![Joiner {
+            after: Duration::from_millis(40),
+            source: WorkerSource::Memory(s2),
+            profile: WorkerProfile::default(),
+        }],
+        native_factory(layout),
+        None,
+    );
+    assert_eq!(res.stats.updates, 150);
+    assert_eq!(res.stats.joins, 1, "joiner admitted on first push");
+    let gp = SparseGp::new(Theta { layout, data: res.theta });
+    let (mean, _) = gp.predict(&test_ds.x);
+    assert!(rmse(&mean, &test_ds.y) < 0.8 * mean_rmse(&test_ds));
+}
+
+/// Handover: every initial worker departs *before* the declared joiner
+/// arrives.  The server must keep the run open for the outstanding
+/// joiner (`ServerConfig::expected_joiners`) instead of ending at the
+/// moment the live set empties, and the joiner alone finishes the run.
+#[test]
+fn run_survives_full_handover_to_late_joiner() {
+    let (train_ds, _test, theta, layout) = setup(400, 6, 17);
+    let shards = train_ds.shard(2);
+    let mut shards = shards.into_iter();
+    let s0 = shards.next().unwrap();
+    let s1 = shards.next().unwrap();
+    let mut cfg = TrainConfig::new(layout);
+    cfg.tau = 8;
+    cfg.max_updates = 40;
+    cfg.eval_every_secs = 0.0;
+    cfg.profiles = vec![WorkerProfile { leave_at: Some(3), ..Default::default() }];
+    let res = train_elastic(
+        &cfg,
+        Published::new(theta.data.clone()),
+        vec![WorkerSource::Memory(s0)],
+        vec![Joiner {
+            // Long after the lone initial worker (3 fast iterations) is
+            // gone: without expected_joiners the run would end early.
+            after: Duration::from_millis(150),
+            source: WorkerSource::Memory(s1),
+            profile: WorkerProfile::default(),
+        }],
+        native_factory(layout),
+        None,
+    );
+    assert_eq!(res.stats.updates, 40, "joiner must finish the run alone");
+    assert_eq!(res.stats.joins, 1);
+    assert!(res.stats.leaves >= 1);
+}
+
+/// Store readers hand workers bitwise-identical data to the resident
+/// path: a τ=0 sync run from disk matches the in-memory run exactly
+/// when windows align (chunk = shard size).
+#[test]
+fn store_and_memory_runs_agree_bitwise_when_windows_align() {
+    let dir = tdir("parity");
+    let (train_ds, _test, theta, layout) = setup(300, 6, 13);
+    let shards = train_ds.shard(2);
+    let max_shard = shards.iter().map(|s| s.n()).max().unwrap();
+    let set = ShardSet::create(&dir, &train_ds, 2, max_shard).unwrap();
+    let run = |sources: Vec<WorkerSource>| {
+        let mut cfg = TrainConfig::new(layout);
+        cfg.tau = 0;
+        cfg.max_updates = 20;
+        cfg.eval_every_secs = 0.0;
+        // chunk = full shard: store workers stream one n_k-row window
+        // from offset 0 (full-shard windows are never offset-seeded),
+        // i.e. the same rows in the same order the memory workers
+        // borrow — so the gradients, and hence every θ update, must be
+        // bitwise identical.
+        train_sources(&cfg, theta.data.clone(), sources, native_factory(layout), None)
+    };
+    let mem = run(shards.into_iter().map(WorkerSource::Memory).collect());
+    let disk = run(store_sources(&set));
+    for (i, (a, b)) in mem.theta.iter().zip(&disk.theta).enumerate() {
+        assert_eq!(a.to_bits(), b.to_bits(), "θ[{i}]: store vs memory diverged");
+    }
+}
+
+/// Reader streaming is allocation-free in steady state and resident
+/// data is one chunk: the window buffers never grow past chunk size.
+#[test]
+fn worker_residency_is_one_chunk() {
+    let dir = tdir("residency");
+    let ds = synth::friedman(512, 4, 0.2, 2);
+    let set = ShardSet::create(&dir, &ds, 1, 32).unwrap();
+    let mut r: ShardReader = set.reader(0).unwrap();
+    let mut win = Dataset { x: Mat::empty(), y: Vec::new() };
+    for _ in 0..20 {
+        r.next_window(&mut win).unwrap();
+    }
+    let stride = (ds.d() + 1) * 8;
+    assert!(
+        r.buf_capacity() <= 2 * 32 * stride,
+        "byte buffer {} exceeds chunk scale",
+        r.buf_capacity()
+    );
+    assert!(win.x.data.capacity() <= 2 * 32 * ds.d(), "x window grew past chunk");
+    assert!(win.y.capacity() <= 2 * 32, "y window grew past chunk");
+    let (cb, cx, cy) = (r.buf_capacity(), win.x.data.capacity(), win.y.capacity());
+    for _ in 0..100 {
+        r.next_window(&mut win).unwrap();
+    }
+    assert_eq!(
+        (r.buf_capacity(), win.x.data.capacity(), win.y.capacity()),
+        (cb, cx, cy),
+        "steady-state minibatch path allocated"
+    );
+}
