@@ -1,0 +1,116 @@
+//! Distributed training over the ADVGPNT1 wire protocol (ISSUE 4) —
+//! the whole parameter-server topology of `docs/PROTOCOL.md` in one
+//! process, over real loopback TCP sockets:
+//!
+//!     cargo run --release --example net_train
+//!
+//! The walkthrough:
+//! 1. partition a synthetic dataset into an on-disk shard store (what
+//!    `advgp serve-ps --store` does);
+//! 2. start the θ-server on an ephemeral loopback port
+//!    ([`train_remote`] — the `advgp serve-ps` path);
+//! 3. connect two remote workers ([`remote_worker_loop`] — the
+//!    `advgp worker --connect` path), each streaming minibatch chunks
+//!    from its shard file through the ADVGPSH1 reader;
+//! 4. report the trace and the final test RMSE.
+//!
+//! For the true multi-process version of this run, see "Distributed
+//! quickstart" in the README.
+
+use advgp::data::store::ShardSet;
+use advgp::data::{kmeans, synth, Standardizer};
+use advgp::gp::{SparseGp, Theta, ThetaLayout};
+use advgp::grad::native_factory;
+use advgp::ps::coordinator::{native_eval_factory, train_remote, TrainConfig};
+use advgp::ps::net::{remote_worker_loop, NetServer};
+use advgp::ps::worker::{WorkerProfile, WorkerSource};
+use advgp::util::rmse;
+use advgp::util::rng::Pcg64;
+
+fn main() -> anyhow::Result<()> {
+    // 1. Data → standardized splits → on-disk shard store.
+    let mut ds = synth::friedman(4500, 4, 0.4, 0);
+    let mut rng = Pcg64::seeded(0);
+    ds.shuffle(&mut rng);
+    let (mut train_ds, mut test_ds) = ds.split(500);
+    let st = Standardizer::fit(&train_ds);
+    st.apply(&mut train_ds);
+    st.apply(&mut test_ds);
+
+    let dir = std::env::temp_dir().join("advgp_example_net");
+    let _ = std::fs::remove_dir_all(&dir);
+    let store = ShardSet::create(&dir.join("store"), &train_ds, 2, 256)?;
+    println!(
+        "store: {} shards x ~{} rows (chunk 256) at {}",
+        store.r(),
+        store.n() / store.r(),
+        store.dir().display()
+    );
+
+    let m = 16;
+    let layout = ThetaLayout::new(m, train_ds.d());
+    let z0 = kmeans::kmeans(&train_ds.x, m, 20, &mut rng);
+    let theta0 = Theta::init(layout, &z0);
+
+    // 2. Bind the server on an ephemeral port; workers learn it below.
+    let net = NetServer::bind("127.0.0.1:0")?;
+    let addr = net.local_addr().to_string();
+    println!("server: ADVGPNT1 on {addr}");
+
+    // 3. Two remote workers (threads here; separate `advgp worker`
+    //    processes in a real deployment — same wire traffic either way).
+    let workers: Vec<_> = (0..store.r())
+        .map(|k| {
+            let addr = addr.clone();
+            let reader = store.reader(k)?;
+            Ok(std::thread::spawn(move || {
+                remote_worker_loop(
+                    &addr,
+                    Some(k),
+                    WorkerSource::Store(reader),
+                    native_factory(layout),
+                    WorkerProfile::default(),
+                )
+                .expect("remote worker failed")
+            }))
+        })
+        .collect::<anyhow::Result<_>>()?;
+
+    let mut cfg = TrainConfig::new(layout);
+    cfg.tau = 8;
+    cfg.max_updates = 300;
+    cfg.eval_every_secs = 0.05;
+    let res = train_remote(
+        &cfg,
+        theta0.data.clone(),
+        net,
+        store.r(),
+        Some(native_eval_factory(layout, test_ds.clone(), None)),
+    );
+    for w in workers {
+        w.join().expect("worker thread panicked");
+    }
+
+    // 4. Results.
+    println!(
+        "run: {} updates, {} pushes, staleness p95 ≈ {:.1}, wall {:.2}s",
+        res.stats.updates,
+        res.stats.pushes,
+        res.stats.staleness.quantile(0.95),
+        res.wall_secs
+    );
+    if let (Some(first), Some(last)) = (res.trace.first(), res.trace.last()) {
+        println!(
+            "trace: rmse {:.4} (v{}) → {:.4} (v{})",
+            first.rmse, first.version, last.rmse, last.version
+        );
+    }
+    let gp = SparseGp::new(Theta { layout, data: res.theta });
+    let (mean, _) = gp.predict(&test_ds.x);
+    let final_rmse = rmse(&mean, &test_ds.y);
+    let baseline = rmse(&vec![0.0; test_ds.n()], &test_ds.y);
+    println!("final test RMSE {final_rmse:.4} (mean predictor {baseline:.4})");
+    anyhow::ensure!(final_rmse < baseline, "networked training must beat the mean");
+    println!("OK: distributed loopback run converged");
+    Ok(())
+}

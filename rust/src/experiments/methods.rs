@@ -39,6 +39,8 @@ pub struct MethodOpts {
     /// Checkpoint cadence in server updates (0 = off) and destination.
     pub checkpoint_every: u64,
     pub checkpoint_dir: Option<PathBuf>,
+    /// Checkpoint retention: keep only the newest K files (None = all).
+    pub keep_last: Option<usize>,
     /// Resume the run from this frozen server state.
     pub resume_from: Option<Checkpoint>,
 }
@@ -58,6 +60,7 @@ impl Default for MethodOpts {
             prox_t0: 500.0,
             checkpoint_every: 0,
             checkpoint_dir: None,
+            keep_last: None,
             resume_from: None,
         }
     }
@@ -86,6 +89,7 @@ fn train_config(p: &Problem, opts: &MethodOpts, workers: usize) -> TrainConfig {
     cfg.prox = crate::opt::StepSchedule::new(opts.prox_c, opts.prox_t0);
     cfg.checkpoint_every = opts.checkpoint_every;
     cfg.checkpoint_dir = opts.checkpoint_dir.clone();
+    cfg.keep_last = opts.keep_last;
     cfg.resume_from = opts.resume_from.clone();
     cfg
 }

@@ -3,15 +3,23 @@
 //! Subcommands:
 //!   train      train a GP regression model (ADVGP / baselines) on CSV
 //!              or synthetic data and report RMSE/MNLP
+//!   serve-ps   run the parameter server over the ADVGPNT1 networked
+//!              transport; `advgp worker` processes connect to it
+//!   worker     join a serve-ps run as a remote worker, streaming its
+//!              shard from an on-disk store
 //!   datagen    write a synthetic dataset (flight|taxi|friedman) as CSV
 //!   artifacts  list the AOT artifact manifest
 //!   smoke      PJRT round-trip smoke test on an HLO text file
 
+use advgp::baselines::BaselineResult;
 use advgp::data::store::ShardSet;
 use advgp::data::{csv, synth, Dataset};
 use advgp::experiments::methods::*;
-use advgp::experiments::{make_problem, print_table};
+use advgp::experiments::{make_problem, print_table, Problem};
 use advgp::grad::native_factory;
+use advgp::opt::StepSchedule;
+use advgp::ps::coordinator::native_eval_factory;
+use advgp::ps::{train_remote, Checkpoint, TrainConfig};
 use advgp::runtime::{engine::xla_factory, ArtifactKind, Manifest};
 use advgp::util::cli::Args;
 use anyhow::{bail, Context, Result};
@@ -22,18 +30,27 @@ fn main() -> Result<()> {
     let args = Args::from_env();
     match args.positional.first().map(|s| s.as_str()) {
         Some("train") => cmd_train(&args),
+        Some("serve-ps") => cmd_serve_ps(&args),
+        Some("worker") => cmd_worker(&args),
         Some("datagen") => cmd_datagen(&args),
         Some("artifacts") => cmd_artifacts(&args),
         Some("smoke") => cmd_smoke(&args),
         _ => {
             eprintln!(
-                "usage: advgp <train|datagen|artifacts|smoke> [--flags]\n\
+                "usage: advgp <train|serve-ps|worker|datagen|artifacts|smoke> [--flags]\n\
                  \n\
                  train:    --data <csv|flight|taxi|friedman> [--n 50000] [--m 100]\n\
                  \x20         [--method advgp|svigp|distgp-gd|distgp-lbfgs|linear]\n\
                  \x20         [--workers 4] [--tau 32] [--budget 30] [--engine native|xla]\n\
                  \x20         [--store dir] [--chunk-rows 4096] [--checkpoint-every 0]\n\
-                 \x20         [--checkpoint-dir dir] [--resume] [--out-trace trace.csv]\n\
+                 \x20         [--checkpoint-dir dir] [--keep-last K] [--resume]\n\
+                 \x20         [--out-trace trace.csv]\n\
+                 serve-ps: --addr 127.0.0.1:7171 --workers 2 --data <...> [--n 50000]\n\
+                 \x20         [--m 100] [--tau 32] [--budget 60] [--max-updates N]\n\
+                 \x20         [--store dir] [--chunk-rows 4096] [--checkpoint-every N]\n\
+                 \x20         [--checkpoint-dir dir] [--keep-last K] [--resume]\n\
+                 worker:   --connect host:port --store dir --shard K [--worker-id id]\n\
+                 \x20         [--chunk-rows n] [--max-rows n] [--threads n] [--straggle-ms n]\n\
                  datagen:  --kind flight|taxi|friedman --n 10000 --out data.csv [--seed 0]\n\
                  artifacts: [--dir artifacts]\n\
                  smoke:    [--hlo /tmp/fn_hlo.txt]"
@@ -56,6 +73,159 @@ fn load_data(args: &Args) -> Result<Dataset> {
     })
 }
 
+/// Reuse a shard store if `dir` holds one (validating shape, content
+/// fingerprint, and that explicit flags don't contradict the frozen
+/// partition), or partition the standardized train set into one.
+/// Shared by `train --store` and `serve-ps --store`.
+fn open_or_create_store(
+    dir: &Path,
+    train: &Dataset,
+    workers: usize,
+    args: &Args,
+) -> Result<ShardSet> {
+    if ShardSet::exists(dir) {
+        let s = ShardSet::open(dir)?;
+        anyhow::ensure!(
+            s.n() == train.n() && s.d() == train.d(),
+            "store {} holds n={} d={} but this run has n={} d={} \
+             (delete the dir or match --data/--n/--seed)",
+            dir.display(),
+            s.n(),
+            s.d(),
+            train.n(),
+            train.d()
+        );
+        // Shape can collide across seeds/regenerated files; the content
+        // fingerprint cannot.
+        anyhow::ensure!(
+            s.fingerprint() == advgp::data::store::dataset_fingerprint(train),
+            "store {} was built from different data than this run \
+             (same shape, different contents — check --data/--seed \
+             or delete the store)",
+            dir.display()
+        );
+        // A reused store fixes the partition: explicit flags that
+        // contradict it are an error, not a silent override.
+        anyhow::ensure!(
+            args.get("workers").is_none() || workers == s.r(),
+            "--workers {workers} contradicts store {} ({} shards); drop \
+             the flag or recreate the store",
+            dir.display(),
+            s.r()
+        );
+        anyhow::ensure!(
+            args.get("chunk-rows").is_none()
+                || args.usize_or("chunk-rows", 0) == s.chunk_rows(),
+            "--chunk-rows {} contradicts store {} (chunk {}); drop \
+             the flag or recreate the store",
+            args.usize_or("chunk-rows", 0),
+            dir.display(),
+            s.chunk_rows()
+        );
+        println!(
+            "store: reusing {} ({} shards, chunk {})",
+            dir.display(),
+            s.r(),
+            s.chunk_rows()
+        );
+        Ok(s)
+    } else {
+        let chunk = args.usize_or("chunk-rows", 4096);
+        let s = ShardSet::create(dir, train, workers, chunk)?;
+        println!(
+            "store: wrote {} shards ({} rows, chunk {chunk}) to {}",
+            s.r(),
+            s.n(),
+            dir.display()
+        );
+        Ok(s)
+    }
+}
+
+/// Parse the durability flags shared by `train` and `serve-ps`:
+/// `--checkpoint-every N`, `--checkpoint-dir`, `--keep-last K`,
+/// `--resume`.  Returns (cadence, dir, resume checkpoint, keep-last).
+fn checkpoint_flags(
+    args: &Args,
+    store_dir: Option<&PathBuf>,
+) -> Result<(u64, PathBuf, Option<Checkpoint>, Option<usize>)> {
+    let checkpoint_every = args.u64_or("checkpoint-every", 0);
+    anyhow::ensure!(
+        args.get("checkpoint-dir").is_none()
+            || checkpoint_every > 0
+            || args.bool_or("resume", false),
+        "--checkpoint-dir does nothing on its own: add --checkpoint-every N \
+         (to write checkpoints) or --resume (to restore from them)"
+    );
+    anyhow::ensure!(
+        args.get("keep-last").is_none() || checkpoint_every > 0,
+        "--keep-last does nothing without --checkpoint-every N"
+    );
+    let keep_last = match args.get("keep-last") {
+        None => None,
+        Some(v) => {
+            let k: usize = v
+                .parse()
+                .map_err(|_| anyhow::anyhow!("--keep-last wants an integer, got {v:?}"))?;
+            anyhow::ensure!(k >= 1, "--keep-last wants K ≥ 1 (the seal must survive)");
+            Some(k)
+        }
+    };
+    let checkpoint_dir = args
+        .get("checkpoint-dir")
+        .map(PathBuf::from)
+        .or_else(|| store_dir.map(|d| d.join("checkpoints")))
+        .unwrap_or_else(|| PathBuf::from("checkpoints"));
+    let resume_from = if args.bool_or("resume", false) {
+        let ck = Checkpoint::load_latest(&checkpoint_dir)?.with_context(|| {
+            format!("--resume: no checkpoint in {}", checkpoint_dir.display())
+        })?;
+        println!(
+            "resuming from version {} ({})",
+            ck.version,
+            checkpoint_dir.display()
+        );
+        Some(ck)
+    } else {
+        None
+    };
+    Ok((checkpoint_every, checkpoint_dir, resume_from, keep_last))
+}
+
+/// Final RMSE/MNLP table (original target units) + optional trace CSV.
+fn report_result(
+    method: &str,
+    p: &Problem,
+    result: &BaselineResult,
+    args: &Args,
+) -> Result<()> {
+    if let Some(out) = args.get("out-trace") {
+        advgp::ps::metrics::write_trace_csv(Path::new(out), &result.trace)?;
+        println!("trace -> {out}");
+    }
+    let y_std = p.standardizer.y_std;
+    let mean = run_mean_method(p);
+    print_table(
+        "results (original target units)",
+        &["Method", "RMSE", "MNLP", "wall (s)"],
+        &[
+            vec![
+                method.to_string(),
+                format!("{:.4}", final_rmse(result) * y_std),
+                format!("{:.4}", final_mnlp(result)),
+                format!("{:.1}", result.wall_secs),
+            ],
+            vec![
+                "mean".into(),
+                format!("{:.4}", final_rmse(&mean) * y_std),
+                "-".into(),
+                "0.0".into(),
+            ],
+        ],
+    );
+    Ok(())
+}
+
 fn cmd_train(args: &Args) -> Result<()> {
     let raw = load_data(args)?;
     let m = args.usize_or("m", 100);
@@ -71,39 +241,15 @@ fn cmd_train(args: &Args) -> Result<()> {
             args.get("store").is_none()
                 && args.get("checkpoint-every").is_none()
                 && args.get("checkpoint-dir").is_none()
+                && args.get("keep-last").is_none()
                 && !args.bool_or("resume", false),
-            "--store/--checkpoint-every/--checkpoint-dir/--resume only apply \
-             to --method advgp (got --method {method})"
+            "--store/--checkpoint-every/--checkpoint-dir/--keep-last/--resume \
+             only apply to --method advgp (got --method {method})"
         );
     }
     let store_dir = args.get("store").map(PathBuf::from);
-    let checkpoint_every = args.u64_or("checkpoint-every", 0);
-    anyhow::ensure!(
-        args.get("checkpoint-dir").is_none()
-            || checkpoint_every > 0
-            || args.bool_or("resume", false),
-        "--checkpoint-dir does nothing on its own: add --checkpoint-every N \
-         (to write checkpoints) or --resume (to restore from them)"
-    );
-    let checkpoint_dir = args
-        .get("checkpoint-dir")
-        .map(PathBuf::from)
-        .or_else(|| store_dir.as_ref().map(|d| d.join("checkpoints")))
-        .unwrap_or_else(|| PathBuf::from("checkpoints"));
-    let resume_from = if args.bool_or("resume", false) {
-        let ck = advgp::ps::Checkpoint::load_latest(&checkpoint_dir)?
-            .with_context(|| {
-                format!("--resume: no checkpoint in {}", checkpoint_dir.display())
-            })?;
-        println!(
-            "resuming from version {} ({})",
-            ck.version,
-            checkpoint_dir.display()
-        );
-        Some(ck)
-    } else {
-        None
-    };
+    let (checkpoint_every, checkpoint_dir, resume_from, keep_last) =
+        checkpoint_flags(args, store_dir.as_ref())?;
     let opts = MethodOpts {
         workers: args.usize_or("workers", 4),
         tau: args.u64_or("tau", 32),
@@ -116,11 +262,11 @@ fn cmd_train(args: &Args) -> Result<()> {
         checkpoint_every,
         checkpoint_dir: (checkpoint_every > 0 || resume_from.is_some())
             .then(|| checkpoint_dir.clone()),
+        keep_last,
         resume_from,
         ..Default::default()
     };
     let p = make_problem(raw, n_test, m, 20_000, args.u64_or("seed", 0));
-    let y_std = p.standardizer.y_std;
     println!(
         "training {method} on n={} (test {}), d={}, m={m}, θ dim {}",
         p.train.n(), p.test.n(), p.train.d(), p.layout.len()
@@ -140,66 +286,7 @@ fn cmd_train(args: &Args) -> Result<()> {
                 // Out-of-core path: partition the (standardized) train
                 // set to disk once, then every worker streams minibatch
                 // chunks from its shard file instead of holding a clone.
-                let store = if ShardSet::exists(dir) {
-                    let s = ShardSet::open(dir)?;
-                    anyhow::ensure!(
-                        s.n() == p.train.n() && s.d() == p.train.d(),
-                        "store {} holds n={} d={} but this run has n={} d={} \
-                         (delete the dir or match --data/--n/--seed)",
-                        dir.display(),
-                        s.n(),
-                        s.d(),
-                        p.train.n(),
-                        p.train.d()
-                    );
-                    // Shape can collide across seeds/regenerated files;
-                    // the content fingerprint cannot.
-                    anyhow::ensure!(
-                        s.fingerprint()
-                            == advgp::data::store::dataset_fingerprint(&p.train),
-                        "store {} was built from different data than this run \
-                         (same shape, different contents — check --data/--seed \
-                         or delete the store)",
-                        dir.display()
-                    );
-                    // A reused store fixes the partition: explicit flags
-                    // that contradict it are an error, not a silent
-                    // override.
-                    anyhow::ensure!(
-                        args.get("workers").is_none() || opts.workers == s.r(),
-                        "--workers {} contradicts store {} ({} shards); drop \
-                         the flag or recreate the store",
-                        opts.workers,
-                        dir.display(),
-                        s.r()
-                    );
-                    anyhow::ensure!(
-                        args.get("chunk-rows").is_none()
-                            || args.usize_or("chunk-rows", 0) == s.chunk_rows(),
-                        "--chunk-rows {} contradicts store {} (chunk {}); drop \
-                         the flag or recreate the store",
-                        args.usize_or("chunk-rows", 0),
-                        dir.display(),
-                        s.chunk_rows()
-                    );
-                    println!(
-                        "store: reusing {} ({} shards, chunk {})",
-                        dir.display(),
-                        s.r(),
-                        s.chunk_rows()
-                    );
-                    s
-                } else {
-                    let chunk = args.usize_or("chunk-rows", 4096);
-                    let s = ShardSet::create(dir, &p.train, opts.workers, chunk)?;
-                    println!(
-                        "store: wrote {} shards ({} rows, chunk {chunk}) to {}",
-                        s.r(),
-                        s.n(),
-                        dir.display()
-                    );
-                    s
-                };
+                let store = open_or_create_store(dir, &p.train, opts.workers, args)?;
                 let f = factory.unwrap_or_else(|| native_factory(p.layout));
                 run_advgp_store(&p, &opts, &store, f)?
             } else {
@@ -215,23 +302,136 @@ fn cmd_train(args: &Args) -> Result<()> {
         "linear" => run_linear_method(&p, &opts),
         other => bail!("unknown method {other}"),
     };
+    report_result(&method, &p, &result, args)
+}
 
-    if let Some(out) = args.get("out-trace") {
-        advgp::ps::metrics::write_trace_csv(Path::new(out), &result.trace)?;
-        println!("trace -> {out}");
+/// `advgp serve-ps`: run the θ-server side of a distributed training
+/// run over the ADVGPNT1 transport (see docs/PROTOCOL.md).  The server
+/// owns the problem definition (data standardization, θ layout, θ₀,
+/// evaluation set); workers bring only compute and their shard.  With
+/// `--store`, the standardized train set is partitioned to disk so
+/// local `advgp worker --store` processes can stream it.
+fn cmd_serve_ps(args: &Args) -> Result<()> {
+    let raw = load_data(args)?;
+    let m = args.usize_or("m", 100);
+    let n_test = args.usize_or("n-test", (raw.n() / 10).clamp(100, 100_000));
+    let mut workers = args.usize_or("workers", 2);
+    let addr = args.str_or("addr", "127.0.0.1:7171");
+    let store_dir = args.get("store").map(PathBuf::from);
+    let (checkpoint_every, checkpoint_dir, resume_from, keep_last) =
+        checkpoint_flags(args, store_dir.as_ref())?;
+    let p = make_problem(raw, n_test, m, 20_000, args.u64_or("seed", 0));
+    if let Some(dir) = &store_dir {
+        let store = open_or_create_store(dir, &p.train, workers, args)?;
+        // The store's partition is authoritative: a fresh store was just
+        // written with `workers` shards, an explicit contradicting
+        // --workers already errored inside open_or_create_store, and a
+        // reused store without the flag adopts its frozen shard count
+        // (mirrors `train --store`) instead of failing against the
+        // default.
+        workers = store.r();
     }
-    let mean = run_mean_method(&p);
-    print_table(
-        "results (original target units)",
-        &["Method", "RMSE", "MNLP", "wall (s)"],
-        &[
-            vec![method, format!("{:.4}", final_rmse(&result) * y_std),
-                 format!("{:.4}", final_mnlp(&result)),
-                 format!("{:.1}", result.wall_secs)],
-            vec!["mean".into(), format!("{:.4}", final_rmse(&mean) * y_std),
-                 "-".into(), "0.0".into()],
-        ],
+    let mut cfg = TrainConfig::new(p.layout);
+    cfg.tau = args.u64_or("tau", 32);
+    cfg.max_updates = args.u64_or("max-updates", u64::MAX / 2);
+    cfg.time_limit_secs = Some(args.f64_or("budget", 60.0));
+    cfg.eval_every_secs = args.f64_or("eval-every", 0.5);
+    cfg.lr = args.f64_or("lr", 1.0);
+    cfg.prox = StepSchedule::new(
+        args.f64_or("prox-c", 0.05),
+        args.f64_or("prox-t0", 200.0),
     );
+    cfg.checkpoint_every = checkpoint_every;
+    cfg.checkpoint_dir = (checkpoint_every > 0 || resume_from.is_some())
+        .then(|| checkpoint_dir.clone());
+    cfg.keep_last = keep_last;
+    cfg.resume_from = resume_from;
+
+    let net = advgp::ps::NetServer::bind(addr)?;
+    println!(
+        "serve-ps: ADVGPNT1 rev {} on {} — expecting {workers} worker(s), \
+         n={} d={} m={m} (θ dim {}), τ={}",
+        advgp::ps::wire::PROTO_VERSION,
+        net.local_addr(),
+        p.train.n(),
+        p.train.d(),
+        p.layout.len(),
+        cfg.tau
+    );
+    let res = train_remote(
+        &cfg,
+        p.theta0.data.clone(),
+        net,
+        workers,
+        Some(native_eval_factory(p.layout, p.test.clone(), None)),
+    );
+    println!(
+        "serve-ps: done — {} updates, {} pushes, {} join(s), {} leave(s)",
+        res.stats.updates, res.stats.pushes, res.stats.joins, res.stats.leaves
+    );
+    let result = BaselineResult {
+        theta: res.theta,
+        trace: res.trace,
+        wall_secs: res.wall_secs,
+    };
+    report_result("advgp (networked)", &p, &result, args)
+}
+
+/// `advgp worker`: join a `serve-ps` run as a remote worker.  The θ
+/// layout arrives in the WELCOME frame, so the only local inputs are
+/// the connection address and the shard to stream.
+fn cmd_worker(args: &Args) -> Result<()> {
+    use advgp::ps::{NetWorkerHandle, WorkerProfile, WorkerSource};
+    let addr = args.get("connect").context("--connect host:port required")?;
+    let store = args.get("store").context(
+        "--store dir required (the shard store written by \
+         `advgp serve-ps --store` or `advgp train --store`)",
+    )?;
+    let set = ShardSet::open(Path::new(store))?;
+    let shard: usize = args
+        .get("shard")
+        .context("--shard K required (which shard of the store this worker owns)")?
+        .parse()
+        .map_err(|_| anyhow::anyhow!("--shard wants an integer"))?;
+    let mut reader = set.reader(shard)?;
+    if let Some(chunk) = args.get("chunk-rows") {
+        let chunk: usize = chunk
+            .parse()
+            .map_err(|_| anyhow::anyhow!("--chunk-rows wants an integer"))?;
+        reader.set_chunk_rows(chunk);
+    }
+    let claim = Some(args.usize_or("worker-id", shard));
+    let profile = WorkerProfile {
+        max_rows: args.usize_or("max-rows", 0),
+        // A standalone worker process owns its whole machine: default
+        // to the full pool (in-process runs split it across workers).
+        threads: args.usize_or("threads", advgp::util::pool::threads()),
+        straggle: std::time::Duration::from_millis(args.u64_or("straggle-ms", 0)),
+        ..Default::default()
+    };
+    let handle = NetWorkerHandle::connect(addr, claim)?;
+    anyhow::ensure!(
+        handle.layout.d == set.d(),
+        "server layout has d={} but store {store} holds d={} features",
+        handle.layout.d,
+        set.d()
+    );
+    println!(
+        "worker {}: connected to {addr} (m={} d={} τ={}, θ v{}) — streaming \
+         shard {shard}/{} ({} rows, chunk {})",
+        handle.worker,
+        handle.layout.m,
+        handle.layout.d,
+        handle.tau,
+        handle.version(),
+        set.r(),
+        reader.n(),
+        reader.chunk_rows()
+    );
+    let factory = native_factory(handle.layout);
+    let worker_id = handle.worker;
+    handle.run(WorkerSource::Store(reader), factory, profile)?;
+    println!("worker {worker_id}: run complete (server shut down or this worker departed)");
     Ok(())
 }
 

@@ -200,12 +200,13 @@ impl Checkpoint {
         Self::decode(&bytes).with_context(|| format!("decode {}", path.display()))
     }
 
-    /// Path of the newest checkpoint in `dir` (highest version), if any.
-    pub fn latest_in(dir: &Path) -> Result<Option<PathBuf>> {
+    /// All checkpoint files in `dir`, sorted oldest → newest.
+    /// (Zero-padded fixed-width names sort lexically by version.)
+    pub fn list_in(dir: &Path) -> Result<Vec<PathBuf>> {
+        let mut files = Vec::new();
         if !dir.is_dir() {
-            return Ok(None);
+            return Ok(files);
         }
-        let mut best: Option<PathBuf> = None;
         for entry in std::fs::read_dir(dir)? {
             let path = entry?.path();
             let name = match path.file_name().and_then(|n| n.to_str()) {
@@ -213,13 +214,35 @@ impl Checkpoint {
                 None => continue,
             };
             if name.starts_with("ck_") && name.ends_with(".bin") {
-                // Zero-padded fixed-width names sort lexically by version.
-                if best.as_ref().is_none_or(|b| path > *b) {
-                    best = Some(path);
-                }
+                files.push(path);
             }
         }
-        Ok(best)
+        files.sort();
+        Ok(files)
+    }
+
+    /// Path of the newest checkpoint in `dir` (highest version), if any.
+    pub fn latest_in(dir: &Path) -> Result<Option<PathBuf>> {
+        Ok(Self::list_in(dir)?.pop())
+    }
+
+    /// Retention GC (ROADMAP "Checkpoint GC/retention"): delete all but
+    /// the newest `keep` checkpoint files in `dir`, returning the paths
+    /// removed.  `keep` is clamped to ≥ 1 so the latest seal — the file
+    /// a resume needs — can never be collected.  The server calls this
+    /// after every *successful* save when
+    /// [`TrainConfig::keep_last`](super::TrainConfig::keep_last) is set;
+    /// it is also safe to run by hand on a cold directory.
+    pub fn prune_keep_last(dir: &Path, keep: usize) -> Result<Vec<PathBuf>> {
+        let keep = keep.max(1);
+        let mut files = Self::list_in(dir)?;
+        let cut = files.len().saturating_sub(keep);
+        let removed: Vec<PathBuf> = files.drain(..cut).collect();
+        for path in &removed {
+            std::fs::remove_file(path)
+                .with_context(|| format!("prune checkpoint {}", path.display()))?;
+        }
+        Ok(removed)
     }
 
     /// Load the newest checkpoint in `dir`, if any.
@@ -324,6 +347,37 @@ mod tests {
                 .unwrap()
                 .is_none()
         );
+    }
+
+    /// Keep-last-K GC removes exactly the oldest files, never the
+    /// newest seal, and clamps degenerate `keep` values.
+    #[test]
+    fn prune_keeps_newest_k() {
+        let dir = tdir("prune");
+        for v in [5u64, 10, 15, 20, 25] {
+            sample(v, v).save_in(&dir).unwrap();
+        }
+        // Non-checkpoint files are never touched.
+        std::fs::write(dir.join("notes.txt"), b"keep me").unwrap();
+        let removed = Checkpoint::prune_keep_last(&dir, 2).unwrap();
+        assert_eq!(removed.len(), 3);
+        let left = Checkpoint::list_in(&dir).unwrap();
+        let versions: Vec<u64> =
+            left.iter().map(|p| Checkpoint::load(p).unwrap().version).collect();
+        assert_eq!(versions, vec![20, 25], "newest two survive");
+        assert!(dir.join("notes.txt").is_file());
+        // keep = 0 clamps to 1: the latest seal always survives.
+        let removed = Checkpoint::prune_keep_last(&dir, 0).unwrap();
+        assert_eq!(removed.len(), 1);
+        assert_eq!(
+            Checkpoint::load_latest(&dir).unwrap().unwrap().version,
+            25,
+            "seal survives a keep=0 prune"
+        );
+        // Nothing over-retained, nothing to do: no-op.
+        assert!(Checkpoint::prune_keep_last(&dir, 4).unwrap().is_empty());
+        // Empty / missing dir: no-op, not an error.
+        assert!(Checkpoint::prune_keep_last(&tdir("prune_empty"), 3).unwrap().is_empty());
     }
 
     #[test]

@@ -50,6 +50,11 @@ pub struct TrainConfig {
     /// `checkpoint_dir` (0 = never).  See [`crate::ps::checkpoint`].
     pub checkpoint_every: u64,
     pub checkpoint_dir: Option<PathBuf>,
+    /// Checkpoint retention: after every successful save keep only the
+    /// newest K files in `checkpoint_dir` (`None` = keep all; clamped
+    /// to ≥ 1 so the final seal always survives).  See
+    /// [`Checkpoint::prune_keep_last`].
+    pub keep_last: Option<usize>,
     /// Resume from a frozen server state (load it with
     /// [`Checkpoint::load`] / [`Checkpoint::load_latest`]): the run
     /// publishes `(ck.version, ck.θ)` before any worker starts, and θ,
@@ -74,6 +79,7 @@ impl TrainConfig {
             worker_threads: 0,
             checkpoint_every: 0,
             checkpoint_dir: None,
+            keep_last: None,
             resume_from: None,
         }
     }
@@ -137,6 +143,97 @@ pub fn train_published(
     train_elastic(cfg, published, sources, vec![], factory, eval_factory)
 }
 
+/// Layout guard shared by every resume path: compare (m, d), not just
+/// θ length — distinct layouts can collide on dimension (e.g. m=1,d=5
+/// and m=2,d=2 both give 14), and restoring across that collision would
+/// silently slice every θ block at the wrong offsets.
+fn check_resume_layout(ck: &Checkpoint, layout: &ThetaLayout) {
+    assert_eq!(
+        (ck.m, ck.d),
+        (layout.m, layout.d),
+        "resume checkpoint is for layout m={}, d={} but this run uses \
+         m={}, d={}",
+        ck.m,
+        ck.d,
+        layout.m,
+        layout.d
+    );
+}
+
+/// Lower a [`TrainConfig`] into the server loop's own config.
+fn server_config(cfg: &TrainConfig, workers: usize, expected_joiners: usize) -> ServerConfig {
+    ServerConfig {
+        layout: cfg.layout,
+        workers,
+        tau: cfg.tau,
+        max_updates: cfg.max_updates,
+        lr: cfg.lr,
+        prox: cfg.prox,
+        server_shards: cfg.server_shards,
+        freeze_hyper: cfg.freeze_hyper,
+        checkpoint_every: cfg.checkpoint_every,
+        checkpoint_dir: cfg.checkpoint_dir.clone(),
+        keep_last: cfg.keep_last,
+        resume: cfg.resume_from.clone(),
+        expected_joiners,
+    }
+}
+
+/// Spawn the evaluator thread: one trace row whenever the published
+/// version has advanced, sampled at a wall-clock cadence.  Shared by
+/// the in-process and networked coordinators.
+fn spawn_evaluator<'scope>(
+    scope: &'scope std::thread::Scope<'scope, '_>,
+    published: std::sync::Arc<Published>,
+    clock: Stopwatch,
+    every_secs: f64,
+    ef: EvalFactory,
+) -> std::thread::ScopedJoinHandle<'scope, Vec<TraceRow>> {
+    let every = every_secs.max(1e-3);
+    scope.spawn(move || {
+        let mut eval = ef();
+        let mut trace: Vec<TraceRow> = Vec::new();
+        let mut last_version = u64::MAX;
+        loop {
+            let (version, theta, shutdown) = published.snapshot();
+            if version != last_version {
+                let m = eval(version, &theta);
+                trace.push(TraceRow {
+                    t_secs: clock.secs(),
+                    version,
+                    rmse: m.rmse,
+                    mnlp: m.mnlp,
+                    neg_elbo: m.neg_elbo,
+                });
+                last_version = version;
+            }
+            if shutdown {
+                return trace;
+            }
+            std::thread::sleep(Duration::from_secs_f64(every));
+        }
+    })
+}
+
+/// Spawn the wall-clock watchdog: shuts the run down past `limit`.
+fn spawn_watchdog<'scope>(
+    scope: &'scope std::thread::Scope<'scope, '_>,
+    published: std::sync::Arc<Published>,
+    clock: Stopwatch,
+    limit: f64,
+) -> std::thread::ScopedJoinHandle<'scope, ()> {
+    scope.spawn(move || loop {
+        if published.snapshot().2 {
+            return;
+        }
+        if clock.secs() > limit {
+            published.shutdown();
+            return;
+        }
+        std::thread::sleep(Duration::from_millis(20));
+    })
+}
+
 /// The full-control entry point: caller-owned [`Published`] handle,
 /// arbitrary worker sources, and late [`Joiner`]s.  Every other train
 /// function is a thin wrapper over this.
@@ -152,41 +249,14 @@ pub fn train_elastic(
     let workers = sources.len();
     assert!(workers >= 1, "need at least one initial worker source");
     if let Some(ck) = &cfg.resume_from {
-        // Compare (m, d), not just θ length: distinct layouts can
-        // collide on dimension (e.g. m=1,d=5 and m=2,d=2 both give 14),
-        // and restoring across that collision would silently slice
-        // every θ block at the wrong offsets.
-        assert_eq!(
-            (ck.m, ck.d),
-            (cfg.layout.m, cfg.layout.d),
-            "resume checkpoint is for layout m={}, d={} but this run uses \
-             m={}, d={}",
-            ck.m,
-            ck.d,
-            cfg.layout.m,
-            cfg.layout.d
-        );
+        check_resume_layout(ck, &cfg.layout);
         // Restore the published state *before* any worker or evaluator
         // starts: the first θ anyone observes is the checkpointed θ, at
         // the checkpointed version.
         published.publish(ck.version, ck.theta.clone());
     }
     let (tx, rx) = mpsc::channel::<ToServer>();
-
-    let server_cfg = ServerConfig {
-        layout: cfg.layout,
-        workers,
-        tau: cfg.tau,
-        max_updates: cfg.max_updates,
-        lr: cfg.lr,
-        prox: cfg.prox,
-        server_shards: cfg.server_shards,
-        freeze_hyper: cfg.freeze_hyper,
-        checkpoint_every: cfg.checkpoint_every,
-        checkpoint_dir: cfg.checkpoint_dir.clone(),
-        resume: cfg.resume_from.clone(),
-        expected_joiners: joiners.len(),
-    };
+    let server_cfg = server_config(cfg, workers, joiners.len());
 
     // Per-worker thread budgets.  Explicit budgets (profile or
     // cfg.worker_threads) are honored as-is; the remaining pool
@@ -245,51 +315,99 @@ pub fn train_elastic(
 
         // ---- evaluator ----
         let trace_handle = eval_factory.map(|ef| {
-            let published = published.clone();
-            let every = cfg.eval_every_secs.max(1e-3);
-            scope.spawn(move || {
-                let mut eval = ef();
-                let mut trace: Vec<TraceRow> = Vec::new();
-                let mut last_version = u64::MAX;
-                loop {
-                    let (version, theta, shutdown) = published.snapshot();
-                    if version != last_version {
-                        let m = eval(version, &theta);
-                        trace.push(TraceRow {
-                            t_secs: clock.secs(),
-                            version,
-                            rmse: m.rmse,
-                            mnlp: m.mnlp,
-                            neg_elbo: m.neg_elbo,
-                        });
-                        last_version = version;
-                    }
-                    if shutdown {
-                        return trace;
-                    }
-                    std::thread::sleep(Duration::from_secs_f64(every));
-                }
-            })
+            spawn_evaluator(scope, published.clone(), clock, cfg.eval_every_secs, ef)
         });
 
         // ---- watchdog for the wall-clock limit ----
-        let watchdog = cfg.time_limit_secs.map(|limit| {
-            let published = published.clone();
-            scope.spawn(move || loop {
-                if published.snapshot().2 {
-                    return;
-                }
-                if clock.secs() > limit {
-                    published.shutdown();
-                    return;
-                }
-                std::thread::sleep(Duration::from_millis(20));
-            })
-        });
+        let watchdog = cfg
+            .time_limit_secs
+            .map(|limit| spawn_watchdog(scope, published.clone(), clock, limit));
 
         // ---- server (on this thread) ----
         let outcome = run_server(&server_cfg, published.clone(), rx);
         published.shutdown();
+        let trace = trace_handle
+            .map(|h| h.join().expect("evaluator panicked"))
+            .unwrap_or_default();
+        if let Some(w) = watchdog {
+            let _ = w.join();
+        }
+        RunResult {
+            theta: outcome.theta,
+            trace,
+            stats: outcome.stats,
+            wall_secs: clock.secs(),
+        }
+    })
+}
+
+/// Serve a training run over the `ADVGPNT1` networked transport
+/// (ISSUE 4): the server loop runs here, workers connect over TCP
+/// (`advgp worker --connect`, [`super::net::remote_worker_loop`], or
+/// any codec-compatible client) and stream pushes in while θ snapshots
+/// fan out.  `workers` is the *expected* initial worker count — it
+/// sizes the [`super::DelayGate`] exactly as the in-process paths do,
+/// so update 0 waits for one gradient from each of the `workers` ids
+/// `0..workers`; connections claiming ids beyond that are admitted as
+/// elastic joiners on their first push.
+///
+/// Checkpointing, retention GC, resume, the evaluator, and the
+/// wall-clock watchdog all behave exactly as in [`train_elastic`] —
+/// they are server-side concerns the transport never sees.  At τ=0
+/// (with deterministic engines and fixed per-worker thread budgets) a
+/// loopback-TCP run reproduces the in-process θ trajectory bitwise
+/// (pinned by `rust/tests/net_transport.rs`).
+///
+/// Returns when `max_updates` is reached, the wall-clock limit fires,
+/// or every admitted worker has departed.
+pub fn train_remote(
+    cfg: &TrainConfig,
+    theta0: Vec<f64>,
+    net: super::net::NetServer,
+    workers: usize,
+    eval_factory: Option<EvalFactory>,
+) -> RunResult {
+    let clock = Stopwatch::start();
+    assert!(workers >= 1, "need at least one expected worker");
+    assert_eq!(theta0.len(), cfg.layout.len(), "θ₀ does not match the layout");
+    let published = Published::new(theta0);
+    if let Some(ck) = &cfg.resume_from {
+        check_resume_layout(ck, &cfg.layout);
+        // Before the listener starts accepting: the first θ any remote
+        // worker handshakes onto is the checkpointed θ.
+        published.publish(ck.version, ck.theta.clone());
+    }
+    let (tx, rx) = mpsc::channel::<ToServer>();
+    let server_cfg = server_config(cfg, workers, 0);
+    let addr = net.local_addr();
+
+    std::thread::scope(|scope| {
+        // ---- transport: accept loop (reader/publisher threads per
+        // connection are detached inside) ----
+        {
+            let published = published.clone();
+            let layout = cfg.layout;
+            let tau = cfg.tau;
+            scope.spawn(move || {
+                super::net::accept_loop(net, published, tx, layout, tau, workers)
+            });
+        }
+        // (`tx` moved into the accept loop; per-connection readers hold
+        // clones.  The server loop therefore ends via its membership /
+        // max_updates / watchdog conditions, not channel disconnect.)
+
+        let trace_handle = eval_factory.map(|ef| {
+            spawn_evaluator(scope, published.clone(), clock, cfg.eval_every_secs, ef)
+        });
+        let watchdog = cfg
+            .time_limit_secs
+            .map(|limit| spawn_watchdog(scope, published.clone(), clock, limit));
+
+        // ---- server (on this thread) ----
+        let outcome = run_server(&server_cfg, published.clone(), rx);
+        published.shutdown();
+        // Unblock the accept loop so the scope can close.
+        super::net::wake(addr);
         let trace = trace_handle
             .map(|h| h.join().expect("evaluator panicked"))
             .unwrap_or_default();

@@ -1,14 +1,23 @@
-//! Worker → server messages.  (Server → worker travels through
-//! [`super::Published`], matching ParameterServer's pull semantics.)
+//! Transport-agnostic message types: everything a worker and the server
+//! can say to each other, independent of how the bytes travel.
+//!
+//! Worker → server messages are [`ToServer`]; server → worker traffic is
+//! [`FromServer`] (in-process it travels through [`super::Published`],
+//! matching ParameterServer's pull semantics; over the network both
+//! directions are framed by [`super::wire`] — the `ADVGPNT1` codec —
+//! and pumped by [`super::net`]).
 //!
 //! Membership is implicit in the message stream (ISSUE 3): a worker is
-//! **admitted** by its first [`Push`] — there is no separate hello, so
-//! a joiner can never stall the bounded-staleness gate before it has a
-//! gradient to contribute — and **retired** by [`ToServer::WorkerExit`],
-//! which removes both its clock and its latest gradient from the
-//! aggregation.
+//! **admitted** by its first [`Push`] — there is no separate hello at
+//! this layer, so a joiner can never stall the bounded-staleness gate
+//! before it has a gradient to contribute — and **retired** by
+//! [`ToServer::WorkerExit`], which removes both its clock and its
+//! latest gradient from the aggregation.  (The wire protocol's
+//! HELLO/WELCOME exchange is *connection* setup — id assignment and
+//! version negotiation — not gate membership; see `docs/PROTOCOL.md`.)
 
 /// A local gradient pushed by a worker (Algorithm 1, worker line 4).
+#[derive(Clone, Debug, PartialEq)]
 pub struct Push {
     pub worker: usize,
     /// The version t_k of θ the gradient was computed at.
@@ -22,10 +31,48 @@ pub struct Push {
 }
 
 /// Everything a worker can tell the server.
+#[derive(Clone, Debug, PartialEq)]
 pub enum ToServer {
     Push(Push),
     /// Worker departed (permanent leave, store failure, or shutdown).
     /// Mid-run, the server retires the worker's clock so the gate
     /// `min_k t_k ≥ t − τ` ranges over live workers only.
     WorkerExit { worker: usize },
+}
+
+/// `staleness` value in [`PublishMeta`] meaning "not measured" (no
+/// update has landed yet, e.g. the initial θ₀ publish or a resume
+/// republish before any post-resume push).
+pub const STALENESS_UNKNOWN: u64 = u64::MAX;
+
+/// Gate-clock metadata riding along with every published θ snapshot —
+/// what a remote worker can know about the staleness regime it is
+/// participating in without seeing the server's [`super::DelayGate`].
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub struct PublishMeta {
+    /// Live (non-retired) workers gating updates when this version was
+    /// produced.
+    pub live: u64,
+    /// Observed staleness `t − min_k t_k` at the aggregation that
+    /// produced this version ([`STALENESS_UNKNOWN`] when the snapshot
+    /// was not produced by an aggregation).
+    pub staleness: u64,
+}
+
+impl Default for PublishMeta {
+    fn default() -> Self {
+        Self { live: 0, staleness: STALENESS_UNKNOWN }
+    }
+}
+
+/// Everything the server can tell a worker — the pull-side dual of
+/// [`ToServer`].  In-process this is implicit in [`super::Published`]
+/// (`Publish` = a condvar wakeup with a newer version, `Shutdown` = the
+/// shutdown flag); on the wire each variant is an explicit frame.
+#[derive(Clone, Debug, PartialEq)]
+pub enum FromServer {
+    /// A new θ version (the publish stream).
+    Publish { version: u64, meta: PublishMeta, theta: Vec<f64> },
+    /// The run is over; workers should exit.
+    Shutdown,
 }

@@ -53,6 +53,9 @@ pub struct ServerStats {
     /// elasticity signal) plus whatever shutdown-driven exits had
     /// reached the channel by teardown — exits still in flight when
     /// the server returns are not counted, so treat this as a floor.
+    /// Only *members* count: an exit for an id that never pushed and
+    /// was never declared (e.g. a read-only networked observer
+    /// disconnecting) is not a leave.
     pub leaves: u64,
 }
 

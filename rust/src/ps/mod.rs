@@ -25,26 +25,39 @@
 //! push after adopting the live published θ (see [`coordinator::Joiner`]
 //! and [`delay::DelayGate`]).  The server periodically freezes
 //! (θ, t, ADADELTA state, worker clocks) into an atomic, versioned
-//! [`checkpoint::Checkpoint`] file, and `TrainConfig::resume_from`
-//! restarts a run from one bitwise.  Workers can stream their shard
-//! from the out-of-core [`crate::data::store`] instead of holding it
-//! resident ([`worker::WorkerSource`]).
+//! [`checkpoint::Checkpoint`] file (with keep-last-K GC — see
+//! [`coordinator::TrainConfig::keep_last`]), and
+//! `TrainConfig::resume_from` restarts a run from one bitwise.  Workers
+//! can stream their shard from the out-of-core [`crate::data::store`]
+//! instead of holding it resident ([`worker::WorkerSource`]).
+//!
+//! Transports (ISSUE 4): the server loop, [`DelayGate`], and the worker
+//! loop are transport-agnostic — they speak [`messages::ToServer`] and
+//! [`Published`].  In-process those travel over an `mpsc` channel and a
+//! condvar; across machines the same messages travel as `ADVGPNT1`
+//! frames over TCP ([`wire`] is the codec, [`net`] the pumps — see
+//! `docs/PROTOCOL.md`), and [`coordinator::train_remote`] /
+//! [`net::remote_worker_loop`] wire the two halves up.
 
 pub mod checkpoint;
 pub mod coordinator;
 pub mod delay;
 pub mod messages;
 pub mod metrics;
+pub mod net;
 pub mod server;
+pub mod wire;
 pub mod worker;
 
 pub use checkpoint::Checkpoint;
 pub use coordinator::{
-    train, train_elastic, train_published, train_sources, Joiner, RunResult,
-    TrainConfig,
+    train, train_elastic, train_published, train_remote, train_sources, Joiner,
+    RunResult, TrainConfig,
 };
 pub use delay::DelayGate;
+pub use messages::PublishMeta;
 pub use metrics::{EvalMetrics, TraceRow};
+pub use net::{remote_worker_loop, NetServer, NetWorkerHandle};
 pub use worker::{WorkerProfile, WorkerSource};
 
 use std::sync::{Arc, Condvar, Mutex};
@@ -58,6 +71,9 @@ pub struct Published {
 pub struct PublishedInner {
     pub version: u64,
     pub theta: Arc<Vec<f64>>,
+    /// Gate-clock metadata of the aggregation that produced `version`
+    /// (default/unknown for seeded or resume-republished snapshots).
+    pub meta: PublishMeta,
     pub shutdown: bool,
 }
 
@@ -67,17 +83,26 @@ impl Published {
             inner: Mutex::new(PublishedInner {
                 version: 0,
                 theta: Arc::new(theta),
+                meta: PublishMeta::default(),
                 shutdown: false,
             }),
             cv: Condvar::new(),
         })
     }
 
-    /// Publish a new version (server side).
+    /// Publish a new version (server side) with no clock metadata —
+    /// the coordinator's resume republish and tests use this.
     pub fn publish(&self, version: u64, theta: Vec<f64>) {
+        self.publish_meta(version, theta, PublishMeta::default());
+    }
+
+    /// Publish a new version with the gate-clock metadata the networked
+    /// transport forwards to remote workers in PUBLISH frames.
+    pub fn publish_meta(&self, version: u64, theta: Vec<f64>, meta: PublishMeta) {
         let mut g = self.inner.lock().unwrap();
         g.version = version;
         g.theta = Arc::new(theta);
+        g.meta = meta;
         self.cv.notify_all();
     }
 
@@ -91,13 +116,22 @@ impl Published {
     /// Worker side: block until `version > seen` (or shutdown).
     /// Returns `None` on shutdown.
     pub fn wait_newer(&self, seen: u64) -> Option<(u64, Arc<Vec<f64>>)> {
+        self.wait_newer_meta(seen).map(|(v, th, _)| (v, th))
+    }
+
+    /// [`Published::wait_newer`] plus the version's clock metadata —
+    /// the per-connection publish fan-out of [`net`] uses this.
+    pub fn wait_newer_meta(
+        &self,
+        seen: u64,
+    ) -> Option<(u64, Arc<Vec<f64>>, PublishMeta)> {
         let mut g = self.inner.lock().unwrap();
         loop {
             if g.shutdown {
                 return None;
             }
             if g.version > seen {
-                return Some((g.version, g.theta.clone()));
+                return Some((g.version, g.theta.clone(), g.meta));
             }
             g = self.cv.wait(g).unwrap();
         }
@@ -107,6 +141,13 @@ impl Published {
     pub fn snapshot(&self) -> (u64, Arc<Vec<f64>>, bool) {
         let g = self.inner.lock().unwrap();
         (g.version, g.theta.clone(), g.shutdown)
+    }
+
+    /// Non-blocking snapshot including clock metadata (the networked
+    /// handshake's initial PUBLISH uses this).
+    pub fn snapshot_meta(&self) -> (u64, Arc<Vec<f64>>, PublishMeta, bool) {
+        let g = self.inner.lock().unwrap();
+        (g.version, g.theta.clone(), g.meta, g.shutdown)
     }
 
     /// Block until shutdown is signalled or `timeout` elapses; returns
@@ -165,6 +206,24 @@ mod tests {
         assert_eq!(v, 0);
         assert_eq!(*th, vec![7.0]);
         assert!(!sd);
+    }
+
+    /// Clock metadata rides along with the version it was produced at,
+    /// and seeded/plain publishes report the unknown default.
+    #[test]
+    fn publish_meta_travels_with_the_version() {
+        let p = Published::new(vec![0.0]);
+        let (_, _, meta, _) = p.snapshot_meta();
+        assert_eq!(meta, PublishMeta::default());
+        let m = PublishMeta { live: 3, staleness: 1 };
+        p.publish_meta(5, vec![2.0], m);
+        let (v, th, got) = p.wait_newer_meta(0).unwrap();
+        assert_eq!((v, got), (5, m));
+        assert_eq!(*th, vec![2.0]);
+        // Plain publish resets to the unknown default.
+        p.publish(6, vec![3.0]);
+        let (_, _, got, _) = p.snapshot_meta();
+        assert_eq!(got, PublishMeta::default());
     }
 
     /// A joiner's delay wait must end immediately on shutdown (not sit

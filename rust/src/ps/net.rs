@@ -1,0 +1,623 @@
+//! Networked parameter-server transport (ISSUE 4): the TCP half that
+//! turns the in-process `mpsc` + condvar topology into a distributed
+//! one, speaking the `ADVGPNT1` protocol ([`super::wire`] is the codec;
+//! `docs/PROTOCOL.md` the normative spec).
+//!
+//! Design: the server loop ([`super::server::run_server`]), the
+//! [`super::DelayGate`], checkpointing, and the worker loop
+//! ([`super::worker::run_worker`]) are reused **unchanged** — this
+//! module only pumps bytes:
+//!
+//! * **Server side** — [`NetServer`] + the accept loop: one *reader*
+//!   thread per connection decodes PUSH/EXIT frames into the same
+//!   `Sender<ToServer>` the in-process workers would use, and one
+//!   *publisher* thread per connection follows
+//!   [`super::Published::wait_newer_meta`] and writes PUBLISH frames.
+//!   Backpressure is per-connection: a slow link blocks only its own
+//!   publisher, which then skips straight to the newest version (the
+//!   same catch-up semantics an in-process worker gets from the
+//!   condvar).  A connection that dies without an EXIT frame has its
+//!   clock retired via a synthesized `WorkerExit`, so a killed remote
+//!   worker (any death the TCP stack can observe — process kill, RST,
+//!   FIN) cannot stall the bounded-staleness gate.  A *silently* wedged
+//!   peer — powered off mid-run, no FIN ever — is the documented gap:
+//!   like a hung in-process worker it stalls a bounded-τ gate until the
+//!   wall-clock watchdog (see ROADMAP "WAN hardening" for the
+//!   heartbeat plan).
+//! * **Worker side** — [`NetWorkerHandle`] connects and handshakes
+//!   (HELLO → WELCOME + initial PUBLISH), then [`NetWorkerHandle::run`]
+//!   bridges the socket onto a local [`super::Published`] and an `mpsc`
+//!   channel and calls `run_worker` on them.
+//!
+//! Determinism: the transport moves exactly the same messages the
+//! in-process channel would, and the server aggregates gradient slots
+//! in worker-id order — so a τ=0 loopback-TCP run reproduces the
+//! in-process θ trajectory **bitwise** (pinned by
+//! `rust/tests/net_transport.rs`).
+//!
+//! # Example: join a run as a remote worker
+//!
+//! ```no_run
+//! # fn main() -> anyhow::Result<()> {
+//! use advgp::data::synth;
+//! use advgp::grad::native_factory;
+//! use advgp::ps::{NetWorkerHandle, WorkerProfile, WorkerSource};
+//!
+//! // Connect to `advgp serve-ps` on :7171, claiming worker id 0.  The
+//! // WELCOME frame carries the θ layout, so the engine needs no local
+//! // configuration beyond the data shard.
+//! let shard = synth::friedman(1000, 4, 0.4, 0);
+//! let handle = NetWorkerHandle::connect("127.0.0.1:7171", Some(0))?;
+//! let factory = native_factory(handle.layout);
+//! handle.run(WorkerSource::Memory(shard), factory, WorkerProfile::default())?;
+//! # Ok(()) }
+//! ```
+
+use super::messages::ToServer;
+use super::wire::{
+    self, Frame, ERR_BAD_MAGIC, ERR_DIM, ERR_ID_IN_USE, ERR_ID_MISMATCH,
+    ERR_MALFORMED, ERR_PROTO, MAX_HANDSHAKE_FRAME_LEN, MAX_WORKER_ID,
+    PROTO_VERSION, WORKER_ID_ANY,
+};
+use super::worker::{run_worker, WorkerProfile, WorkerSource};
+use super::{Published, PublishMeta};
+use crate::gp::ThetaLayout;
+use crate::grad::EngineFactory;
+use crate::{log_debug, log_info, log_warn};
+use anyhow::{bail, ensure, Context, Result};
+use std::collections::HashSet;
+use std::net::{IpAddr, Ipv4Addr, Ipv6Addr, SocketAddr, TcpListener, TcpStream};
+use std::sync::mpsc::Sender;
+use std::sync::{Arc, Mutex};
+use std::time::Duration;
+
+/// A bound ADVGPNT1 listener, handed to
+/// [`super::coordinator::train_remote`] to serve a run.  Binding is
+/// split from serving so callers (tests, the CLI) can bind port 0 and
+/// learn the real port before any worker needs it.
+pub struct NetServer {
+    listener: TcpListener,
+}
+
+impl NetServer {
+    /// Bind the listener (e.g. `"0.0.0.0:7171"`, or `"127.0.0.1:0"` for
+    /// an ephemeral loopback port).
+    pub fn bind(addr: &str) -> Result<Self> {
+        let listener = TcpListener::bind(addr)
+            .with_context(|| format!("bind ADVGPNT1 server on {addr}"))?;
+        Ok(Self { listener })
+    }
+
+    /// The address actually bound (resolves port 0).
+    pub fn local_addr(&self) -> SocketAddr {
+        self.listener.local_addr().expect("bound listener has a local address")
+    }
+}
+
+/// Worker ids currently holding a live connection.  An id frees up on
+/// disconnect, so a crashed worker can reconnect as itself and be
+/// re-admitted by the gate on its next push.
+struct Registry {
+    /// Declared gate members (ids `0..declared`).  Reserved for
+    /// explicit claims: auto-assignment starts above this range, so a
+    /// read-only or elastic `ANY` connection can never squat the id an
+    /// expected `advgp worker --shard k` is about to claim (which
+    /// would stall the gate on a clock that never pushes).
+    declared: u64,
+    connected: Mutex<HashSet<u64>>,
+}
+
+impl Registry {
+    fn new(declared: usize) -> Self {
+        Self { declared: declared as u64, connected: Mutex::new(HashSet::new()) }
+    }
+
+    fn claim(&self, want: u64) -> std::result::Result<u64, (u16, String)> {
+        let mut c = self.connected.lock().unwrap();
+        let id = if want == WORKER_ID_ANY {
+            let mut i = self.declared;
+            while c.contains(&i) {
+                i += 1;
+            }
+            i
+        } else if want > MAX_WORKER_ID {
+            // The gate clocks and gradient slots are id-indexed dense
+            // arrays: an unbounded claim would let one client OOM the
+            // shared server.
+            return Err((
+                ERR_MALFORMED,
+                format!("worker id {want} exceeds the maximum {MAX_WORKER_ID}"),
+            ));
+        } else if c.contains(&want) {
+            return Err((ERR_ID_IN_USE, format!("worker id {want} already connected")));
+        } else {
+            want
+        };
+        c.insert(id);
+        Ok(id)
+    }
+
+    fn release(&self, id: u64) {
+        self.connected.lock().unwrap().remove(&id);
+    }
+}
+
+/// Accept connections until shutdown, spawning a handler per worker.
+/// Runs on a dedicated thread inside `train_remote`'s scope; per-
+/// connection reader/publisher threads are detached (they hold only
+/// `Arc`s and channel clones, and unwind on socket close).
+///
+/// The listener runs non-blocking with a 50 ms shutdown poll, so the
+/// loop terminates deterministically even if the post-shutdown
+/// [`wake`] connection (which exists only to end the wait early) is
+/// dropped by a firewall.  If non-blocking mode is unavailable the
+/// loop falls back to blocking accepts and relies on the wake.
+pub(crate) fn accept_loop(
+    net: NetServer,
+    published: Arc<Published>,
+    tx: Sender<ToServer>,
+    layout: ThetaLayout,
+    tau: u64,
+    declared_workers: usize,
+) {
+    let registry = Arc::new(Registry::new(declared_workers));
+    let nonblocking = net.listener.set_nonblocking(true).is_ok();
+    loop {
+        let stream = match net.listener.accept() {
+            Ok((s, _peer)) => s,
+            Err(e) if nonblocking && e.kind() == std::io::ErrorKind::WouldBlock => {
+                if published.snapshot().2 {
+                    break;
+                }
+                std::thread::sleep(Duration::from_millis(50));
+                continue;
+            }
+            Err(e) => {
+                if published.snapshot().2 {
+                    break;
+                }
+                log_warn!("ps::net: accept failed: {e}");
+                // EMFILE and friends are persistent: without a backoff
+                // this arm busy-spins the accept thread at 100% CPU
+                // (the queued connection keeps failing instantly).
+                std::thread::sleep(Duration::from_millis(50));
+                continue;
+            }
+        };
+        if published.snapshot().2 {
+            break; // the post-shutdown wake connection (or a stray late joiner)
+        }
+        // Handlers expect blocking I/O regardless of the listener mode.
+        if stream.set_nonblocking(false).is_err() {
+            continue;
+        }
+        let published = Arc::clone(&published);
+        let tx = tx.clone();
+        let registry = Arc::clone(&registry);
+        std::thread::spawn(move || handle_conn(stream, published, tx, layout, tau, registry));
+    }
+}
+
+/// Unblock an [`accept_loop`] stuck in `accept()` after shutdown was
+/// signalled, by poking one throwaway connection at it.
+pub(crate) fn wake(addr: SocketAddr) {
+    let mut a = addr;
+    if a.ip().is_unspecified() {
+        // Can't connect *to* a wildcard bind address; the listener is
+        // reachable on loopback.
+        a.set_ip(match a {
+            SocketAddr::V4(_) => IpAddr::V4(Ipv4Addr::LOCALHOST),
+            SocketAddr::V6(_) => IpAddr::V6(Ipv6Addr::LOCALHOST),
+        });
+    }
+    let _ = TcpStream::connect_timeout(&a, Duration::from_millis(500));
+}
+
+fn send_bytes(w: &Mutex<TcpStream>, bytes: &[u8]) -> std::io::Result<()> {
+    use std::io::Write;
+    // One locked write_all per frame: frames never interleave even with
+    // the publisher thread and the reader's error path sharing a socket.
+    w.lock().unwrap().write_all(bytes)
+}
+
+fn send_error(w: &Mutex<TcpStream>, code: u16, message: &str) {
+    let f = Frame::Error { code, message: message.into() };
+    let _ = send_bytes(w, &f.encode());
+}
+
+/// One connection, server side: handshake, then this thread reads
+/// worker→server frames while a spawned twin fans out publishes.
+fn handle_conn(
+    stream: TcpStream,
+    published: Arc<Published>,
+    tx: Sender<ToServer>,
+    layout: ThetaLayout,
+    tau: u64,
+    registry: Arc<Registry>,
+) {
+    let _ = stream.set_nodelay(true);
+    // Bound every write: a peer that stops draining its publish stream
+    // would otherwise block the publisher thread inside write_all while
+    // it holds the writer mutex — and then an error-path send_error on
+    // the reader thread would deadlock behind it, leaving the worker's
+    // clock in the gate forever.  With the timeout the wedged write
+    // fails, the mutex frees, and teardown proceeds.
+    let _ = stream.set_write_timeout(Some(Duration::from_secs(30)));
+    // Bound the handshake read too: an idle pre-HELLO connection (port
+    // scanner, slowloris) must not pin this thread + FD for the life of
+    // the process.  Cleared after the handshake — a healthy worker may
+    // legitimately compute for minutes between pushes.
+    let _ = stream.set_read_timeout(Some(Duration::from_secs(10)));
+    let peer = stream
+        .peer_addr()
+        .map(|a| a.to_string())
+        .unwrap_or_else(|_| "?".into());
+    let writer = match stream.try_clone() {
+        Ok(s) => Arc::new(Mutex::new(s)),
+        Err(e) => {
+            log_warn!("ps::net: {peer}: stream clone failed: {e}");
+            return;
+        }
+    };
+    let mut reader = stream;
+    let mut scratch = Vec::new();
+
+    // ---- handshake: HELLO → WELCOME + initial PUBLISH ----
+    // The peer is untrusted until HELLO validates: the capped read
+    // keeps a hostile length prefix from allocating MAX_FRAME_LEN.
+    let hello = wire::read_frame_capped(&mut reader, &mut scratch, MAX_HANDSHAKE_FRAME_LEN);
+    let (proto, want) = match hello {
+        Ok(Frame::Hello { proto, worker }) => (proto, worker),
+        Ok(f) => {
+            let msg = format!("expected HELLO, got kind {:#04x}", f.kind());
+            send_error(&writer, ERR_MALFORMED, &msg);
+            return;
+        }
+        Err(e) => {
+            send_error(&writer, ERR_BAD_MAGIC, &format!("bad HELLO: {e:#}"));
+            return;
+        }
+    };
+    if proto != PROTO_VERSION {
+        send_error(
+            &writer,
+            ERR_PROTO,
+            &format!("server speaks ADVGPNT1 rev {PROTO_VERSION}, client offered {proto}"),
+        );
+        return;
+    }
+    let id = match registry.claim(want) {
+        Ok(id) => id,
+        Err((code, msg)) => {
+            send_error(&writer, code, &msg);
+            return;
+        }
+    };
+    let welcome = Frame::Welcome {
+        proto: PROTO_VERSION,
+        worker: id,
+        m: layout.m as u64,
+        d: layout.d as u64,
+        tau,
+    };
+    let (version, theta, meta, shutdown) = published.snapshot_meta();
+    let hand = send_bytes(&writer, &welcome.encode()).and_then(|_| {
+        if shutdown {
+            send_bytes(&writer, &Frame::Shutdown.encode())
+        } else {
+            send_bytes(&writer, &wire::publish_frame_bytes(version, meta, &theta))
+        }
+    });
+    if hand.is_err() || shutdown {
+        registry.release(id);
+        return;
+    }
+    // Handshake passed: back to blocking reads (see above).
+    let _ = reader.set_read_timeout(None);
+    log_info!("ps::net: worker {id} joined from {peer} (θ v{version})");
+
+    // ---- publish fan-out: one detached thread per connection ----
+    let pub_w = Arc::clone(&writer);
+    let pub_published = Arc::clone(&published);
+    std::thread::spawn(move || {
+        let mut seen = version;
+        loop {
+            match pub_published.wait_newer_meta(seen) {
+                Some((v, th, meta)) => {
+                    if send_bytes(&pub_w, &wire::publish_frame_bytes(v, meta, &th)).is_err() {
+                        // Link gone (or write-timeout on a wedged peer):
+                        // kill the socket so the reader side unblocks
+                        // promptly and retires the clock, instead of
+                        // waiting for the peer's FIN that may never come.
+                        let _ = pub_w.lock().unwrap().shutdown(std::net::Shutdown::Both);
+                        return;
+                    }
+                    seen = v;
+                }
+                None => {
+                    let _ = send_bytes(&pub_w, &Frame::Shutdown.encode());
+                    return;
+                }
+            }
+        }
+    });
+
+    // ---- worker → server pump (this thread) ----
+    let mut exited = false;
+    loop {
+        match wire::read_frame_opt(&mut reader, &mut scratch) {
+            Ok(Some(Frame::Push(p))) => {
+                if exited {
+                    // A push after EXIT would re-admit the retired
+                    // clock — and with `exited` already true, no
+                    // WorkerExit would be synthesized on disconnect,
+                    // leaving a ghost clock that stalls the gate
+                    // forever.  Protocol-state violation: drop the
+                    // connection (its clock stays retired).
+                    send_error(&writer, ERR_MALFORMED, "PUSH after EXIT");
+                    break;
+                }
+                if p.worker as u64 != id {
+                    send_error(
+                        &writer,
+                        ERR_ID_MISMATCH,
+                        &format!("push for worker {} on worker-{id} connection", p.worker),
+                    );
+                    break;
+                }
+                if p.grad.len() != layout.len() {
+                    send_error(
+                        &writer,
+                        ERR_DIM,
+                        &format!("gradient dim {} but θ dim is {}", p.grad.len(), layout.len()),
+                    );
+                    break;
+                }
+                if tx.send(ToServer::Push(p)).is_err() {
+                    break; // server loop already returned
+                }
+            }
+            Ok(Some(Frame::WorkerExit { worker })) => {
+                if worker != id {
+                    // Same contract as PUSH (and docs/PROTOCOL.md
+                    // code 6): the id field must match the connection.
+                    send_error(
+                        &writer,
+                        ERR_ID_MISMATCH,
+                        &format!("exit for worker {worker} on worker-{id} connection"),
+                    );
+                    break;
+                }
+                exited = true;
+                let _ = tx.send(ToServer::WorkerExit { worker: id as usize });
+                // Keep draining until the client closes its end.
+            }
+            Ok(Some(Frame::Error { code, message })) => {
+                log_warn!("ps::net: worker {id} sent error {code}: {message}");
+                break;
+            }
+            Ok(Some(f)) => {
+                send_error(&writer, ERR_MALFORMED, &format!("unexpected kind {:#04x}", f.kind()));
+                break;
+            }
+            Ok(None) => break, // clean close
+            Err(e) => {
+                log_warn!("ps::net: worker {id} ({peer}) stream error: {e:#}");
+                break;
+            }
+        }
+    }
+    if !exited {
+        // Mid-stream disconnect (crash, kill -9, partition): retire the
+        // clock so the gate ranges over live workers only — the
+        // networked twin of the in-process kill-worker path.
+        let _ = tx.send(ToServer::WorkerExit { worker: id as usize });
+    }
+    // Enforce the "ERROR (or EXIT) then close" contract for every exit
+    // from the loop: killing the socket makes the publisher thread's
+    // next write fail so it exits too — otherwise it would stream
+    // publishes to a dead connection (one pinned thread + FD per
+    // erroring client) for the rest of the run.
+    let _ = reader.shutdown(std::net::Shutdown::Both);
+    registry.release(id);
+    log_info!(
+        "ps::net: worker {id} ({peer}) disconnected{}",
+        if exited { "" } else { " without EXIT — clock retired" }
+    );
+}
+
+/// A handshaken worker-side connection: holds the assigned id, the θ
+/// layout and staleness bound the server announced, and the initial θ
+/// snapshot.  [`NetWorkerHandle::run`] turns it into a full worker.
+pub struct NetWorkerHandle {
+    stream: TcpStream,
+    /// Worker id this connection runs as (claimed or server-assigned).
+    pub worker: usize,
+    /// θ layout announced by WELCOME — build the engine from this.
+    pub layout: ThetaLayout,
+    /// Staleness bound τ announced by WELCOME (informational).
+    pub tau: u64,
+    version: u64,
+    meta: PublishMeta,
+    theta: Vec<f64>,
+}
+
+impl NetWorkerHandle {
+    /// Connect and handshake.  `claim = Some(k)` asks to run as worker
+    /// k (the id owning shard k); `None` lets the server assign the
+    /// lowest free id.
+    pub fn connect(addr: &str, claim: Option<usize>) -> Result<Self> {
+        let mut stream = TcpStream::connect(addr)
+            .with_context(|| format!("connect to ADVGPNT1 server {addr}"))?;
+        let _ = stream.set_nodelay(true);
+        // Bound the handshake so a silent listener can't hang the
+        // worker forever; cleared below once WELCOME validates (pulls
+        // can legitimately wait a long time between publishes).
+        let _ = stream.set_read_timeout(Some(Duration::from_secs(30)));
+        let hello = Frame::Hello {
+            proto: PROTO_VERSION,
+            worker: claim.map_or(WORKER_ID_ANY, |c| c as u64),
+        };
+        wire::write_frame(&mut stream, &hello).context("send HELLO")?;
+        let mut scratch = Vec::new();
+        // The server is unvalidated until WELCOME arrives: cap the read
+        // so a rogue listener can't make us allocate MAX_FRAME_LEN.
+        let welcome =
+            wire::read_frame_capped(&mut stream, &mut scratch, MAX_HANDSHAKE_FRAME_LEN)?;
+        let (worker, layout, tau) = match welcome {
+            Frame::Welcome { proto, worker, m, d, tau } => {
+                ensure!(
+                    proto == PROTO_VERSION,
+                    "server negotiated unsupported ADVGPNT1 rev {proto}"
+                );
+                ensure!(
+                    (1..=1 << 20).contains(&m) && (1..=1 << 20).contains(&d),
+                    "WELCOME: implausible layout m={m} d={d}"
+                );
+                (worker as usize, ThetaLayout::new(m as usize, d as usize), tau)
+            }
+            Frame::Error { code, message } => {
+                bail!("server rejected the connection (code {code}): {message}")
+            }
+            f => bail!("expected WELCOME, got frame kind {:#04x}", f.kind()),
+        };
+        let (version, meta, theta) = match wire::read_frame(&mut stream, &mut scratch)? {
+            Frame::Publish { version, meta, theta } => {
+                ensure!(
+                    theta.len() == layout.len(),
+                    "initial PUBLISH carries dim {} but layout m={} d={} needs {}",
+                    theta.len(),
+                    layout.m,
+                    layout.d,
+                    layout.len()
+                );
+                (version, meta, theta)
+            }
+            Frame::Shutdown => bail!("server is shutting down; nothing to join"),
+            Frame::Error { code, message } => {
+                bail!("server rejected the connection (code {code}): {message}")
+            }
+            f => bail!("expected the initial PUBLISH, got frame kind {:#04x}", f.kind()),
+        };
+        let _ = stream.set_read_timeout(None);
+        Ok(Self { stream, worker, layout, tau, version, meta, theta })
+    }
+
+    /// θ version the server was at when this connection handshook.
+    pub fn version(&self) -> u64 {
+        self.version
+    }
+
+    /// Run the worker loop over this connection until the server shuts
+    /// down or the profile makes the worker leave.  Internally this
+    /// bridges the socket onto a local [`Published`] + `mpsc` pair and
+    /// calls the ordinary [`run_worker`] — straggler/crash/leave
+    /// profiles, windowed streaming, and [`WorkerSource::Store`] all
+    /// behave exactly as they do in-process.
+    pub fn run(
+        self,
+        source: WorkerSource,
+        factory: EngineFactory,
+        profile: WorkerProfile,
+    ) -> Result<()> {
+        let Self { stream, worker, layout, tau: _, version, meta, theta } = self;
+        ensure!(
+            source.d() == layout.d,
+            "shard has d={} features but the server's layout has d={}",
+            source.d(),
+            layout.d
+        );
+        // Seed a local Published with the server's snapshot so the
+        // worker's first pull adopts the live version (a late joiner
+        // whose first push claimed version 0 would stall a tight gate).
+        let published = Published::new(theta.clone());
+        if version > 0 {
+            published.publish_meta(version, theta, meta);
+        }
+        let reader = stream.try_clone().context("clone stream for the publish pump")?;
+        let ctrl = stream.try_clone().context("clone stream for teardown")?;
+        let (tx, rx) = std::sync::mpsc::channel::<ToServer>();
+        let dim = layout.len();
+        std::thread::scope(|s| {
+            // Publish pump: server → local Published.
+            let pub_r = Arc::clone(&published);
+            s.spawn(move || {
+                let mut r = reader;
+                let mut scratch = Vec::new();
+                loop {
+                    match wire::read_frame_opt(&mut r, &mut scratch) {
+                        Ok(Some(Frame::Publish { version, meta, theta })) => {
+                            if theta.len() != dim {
+                                // Protocol violation; don't hand the
+                                // engine a mis-sized θ.
+                                log_warn!(
+                                    "worker {worker}: PUBLISH dim {} ≠ layout dim {dim}",
+                                    theta.len()
+                                );
+                                break;
+                            }
+                            pub_r.publish_meta(version, theta, meta);
+                        }
+                        Ok(Some(Frame::Shutdown)) | Ok(None) => break,
+                        Ok(Some(Frame::Error { code, message })) => {
+                            log_warn!("worker {worker}: server error {code}: {message}");
+                            break;
+                        }
+                        Ok(Some(f)) => {
+                            log_warn!("worker {worker}: unexpected frame kind {:#04x}", f.kind());
+                            break;
+                        }
+                        Err(e) => {
+                            // Server died mid-frame, or our own teardown
+                            // half-close raced a publish: either way the
+                            // run is over for this worker.
+                            log_debug!("worker {worker}: publish stream ended: {e:#}");
+                            break;
+                        }
+                    }
+                }
+                pub_r.shutdown();
+            });
+            // Push pump: local channel → server.
+            let pub_w = Arc::clone(&published);
+            let wh = s.spawn(move || {
+                let mut w = stream;
+                while let Ok(msg) = rx.recv() {
+                    let frame: Frame = msg.into();
+                    if let Err(e) = wire::write_frame(&mut w, &frame) {
+                        // Server unreachable: stop the local loop too.
+                        pub_w.shutdown();
+                        return Err(e);
+                    }
+                }
+                let _ = w.shutdown(std::net::Shutdown::Write);
+                Ok(())
+            });
+            // The worker loop itself, unchanged from the in-process path.
+            run_worker(worker, source, factory, Arc::clone(&published), tx, profile);
+            if let Ok(Err(e)) = wh.join().map_err(|_| "push pump panicked") {
+                log_warn!("worker {worker}: push stream failed: {e}");
+            }
+            // Unblock the publish pump if it is still mid-read (early
+            // departure: the server keeps publishing to others).
+            let _ = ctrl.shutdown(std::net::Shutdown::Both);
+        });
+        Ok(())
+    }
+}
+
+/// Connect to `addr`, handshake (claiming `claim` if given), and run
+/// the worker loop to completion.  Returns the worker id the run used.
+/// This is the whole body of `advgp worker --connect`.
+pub fn remote_worker_loop(
+    addr: &str,
+    claim: Option<usize>,
+    source: WorkerSource,
+    factory: EngineFactory,
+    profile: WorkerProfile,
+) -> Result<usize> {
+    let handle = NetWorkerHandle::connect(addr, claim)?;
+    let id = handle.worker;
+    handle.run(source, factory, profile)?;
+    Ok(id)
+}

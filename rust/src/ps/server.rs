@@ -4,12 +4,12 @@
 
 use super::checkpoint::Checkpoint;
 use super::delay::DelayGate;
-use super::messages::{Push, ToServer};
+use super::messages::{Push, PublishMeta, ToServer, STALENESS_UNKNOWN};
 use super::metrics::ServerStats;
 use super::Published;
 use crate::gp::ThetaLayout;
-use crate::log_warn;
 use crate::opt::{prox_update, AdaDelta, StepSchedule};
+use crate::{log_debug, log_warn};
 use crate::util::Stopwatch;
 use std::path::{Path, PathBuf};
 use std::sync::mpsc::Receiver;
@@ -41,6 +41,10 @@ pub struct ServerConfig {
     pub checkpoint_every: u64,
     /// Where checkpoints go (required when `checkpoint_every > 0`).
     pub checkpoint_dir: Option<PathBuf>,
+    /// Checkpoint GC: after every successful save, keep only the
+    /// newest K checkpoint files in the directory (`None` = keep all).
+    /// Clamped to ≥ 1 — a run always retains its latest seal.
+    pub keep_last: Option<usize>,
     /// Resume from this frozen state: θ, the version counter, and the
     /// ADADELTA accumulators restore bitwise; the gate starts fresh so
     /// every live worker must push once at the restored θ before the
@@ -77,7 +81,13 @@ fn absorb(
 ) {
     match msg {
         ToServer::WorkerExit { worker } => {
-            stats.leaves += 1;
+            // Only a member's departure is a leave: an exit for an id
+            // that never pushed and was never declared (an observer
+            // connection, a failed handshake) must not inflate the
+            // membership report.
+            if !gate.is_retired(worker) {
+                stats.leaves += 1;
+            }
             gate.retire(worker);
             // Drop the departed worker's gradient: a retired worker
             // must stop contributing to Σ_k ∇G_k immediately.
@@ -129,10 +139,23 @@ fn capture_checkpoint(
 /// Save and swallow-with-warning: training outlives a failed save —
 /// durability is best-effort, correctness of the run is not affected.
 /// The single failure-policy point for both the cadence writer and the
-/// final seal.
-fn save_and_log(ck: Checkpoint, dir: &Path) {
+/// final seal.  A successful save triggers keep-last-K GC when
+/// configured (never after a failure: a failed save must not eat the
+/// still-good older files).
+fn save_and_log(ck: Checkpoint, dir: &Path, keep_last: Option<usize>) {
+    let version = ck.version;
     if let Err(e) = ck.save_in(dir) {
-        log_warn!("checkpoint at t={} failed: {e:#}", ck.version);
+        log_warn!("checkpoint at t={version} failed: {e:#}");
+        return;
+    }
+    if let Some(keep) = keep_last {
+        match Checkpoint::prune_keep_last(dir, keep) {
+            Ok(removed) if !removed.is_empty() => {
+                log_debug!("checkpoint GC: pruned {} old file(s)", removed.len());
+            }
+            Ok(_) => {}
+            Err(e) => log_warn!("checkpoint GC in {} failed: {e:#}", dir.display()),
+        }
     }
 }
 
@@ -145,7 +168,7 @@ fn write_checkpoint(
     gate: &DelayGate,
 ) {
     if let Some((ck, dir)) = capture_checkpoint(cfg, t, theta, adadelta, gate) {
-        save_and_log(ck, &dir);
+        save_and_log(ck, &dir, cfg.keep_last);
     }
 }
 
@@ -161,7 +184,8 @@ fn spawn_checkpoint(
     gate: &DelayGate,
 ) -> Option<std::thread::JoinHandle<()>> {
     let (ck, dir) = capture_checkpoint(cfg, t, theta, adadelta, gate)?;
-    Some(std::thread::spawn(move || save_and_log(ck, &dir)))
+    let keep_last = cfg.keep_last;
+    Some(std::thread::spawn(move || save_and_log(ck, &dir, keep_last)))
 }
 
 /// Run the server until `max_updates` or all workers exit.
@@ -219,9 +243,20 @@ pub fn run_server(
     while t < cfg.max_updates
         && (gate.live() > 0 || joiner_pending.iter().any(|p| *p))
     {
-        let msg = match rx.recv() {
+        let msg = match rx.recv_timeout(std::time::Duration::from_millis(25)) {
             Ok(m) => m,
-            Err(_) => break, // all senders dropped
+            Err(std::sync::mpsc::RecvTimeoutError::Timeout) => {
+                // A transport (`ps::net`) keeps its sender open for the
+                // whole run, so channel disconnect can't signal the end;
+                // observe the shutdown flag here so an externally ended
+                // run (watchdog, time limit) never hangs the server
+                // loop waiting for traffic that will never come.
+                if published.snapshot().2 {
+                    break;
+                }
+                continue;
+            }
+            Err(std::sync::mpsc::RecvTimeoutError::Disconnected) => break, // all senders dropped
         };
         absorb(msg, &mut gate, &mut slots, &mut stats, cfg.workers, &mut joiner_pending);
         // Drain any queued pushes before checking the gate — keeps the
@@ -235,7 +270,8 @@ pub fn run_server(
         }
 
         // ---- Algorithm 1, server lines 2–5 ----
-        if let Some(s) = gate.staleness(t) {
+        let observed_staleness = gate.staleness(t);
+        if let Some(s) = observed_staleness {
             stats.staleness.push(s as f64);
         }
         let mut grad = vec![0.0f64; dim];
@@ -263,7 +299,16 @@ pub fn run_server(
             cfg.server_shards,
         );
         t += 1;
-        published.publish(t, theta.clone());
+        // Clock metadata rides along with the snapshot so networked
+        // workers see the staleness regime they are part of.
+        published.publish_meta(
+            t,
+            theta.clone(),
+            PublishMeta {
+                live: gate.live() as u64,
+                staleness: observed_staleness.unwrap_or(STALENESS_UNKNOWN),
+            },
+        );
         if cfg.checkpoint_every > 0 && t % cfg.checkpoint_every == 0 {
             // Async write off the publish thread.  If the previous save
             // is still flushing, skip this cadence hit (the final seal
@@ -297,10 +342,15 @@ pub fn run_server(
     published.shutdown();
     // Drain remaining messages so worker sends never block (unbounded
     // channel, but be tidy) and keep the departure count honest for
-    // exits that arrived after the loop broke.
+    // exits that arrived after the loop broke (same member-only rule
+    // as `absorb`: retire as we count so one worker's exit can't be
+    // double-counted and non-members don't count at all).
     while let Ok(msg) = rx.try_recv() {
-        if let ToServer::WorkerExit { .. } = msg {
-            stats.leaves += 1;
+        if let ToServer::WorkerExit { worker } = msg {
+            if !gate.is_retired(worker) {
+                stats.leaves += 1;
+                gate.retire(worker);
+            }
         }
     }
     ServerOutcome { theta, stats, last_value }

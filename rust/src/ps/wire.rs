@@ -1,0 +1,644 @@
+//! `ADVGPNT1` — the length-prefixed binary wire codec for the networked
+//! parameter server (ISSUE 4).
+//!
+//! This module is pure codec: [`Frame`] ⇄ bytes, plus blocking
+//! [`read_frame`]/[`write_frame`] helpers over any `Read`/`Write`.  All
+//! socket handling, threading, and protocol *sequencing* (who sends
+//! what when) lives in [`super::net`]; the byte-level contract is
+//! specified normatively in `docs/PROTOCOL.md` — a reader should be
+//! able to reimplement this file from that document alone.
+//!
+//! # Frame layout
+//!
+//! Every frame on the stream, both directions, little-endian:
+//!
+//! ```text
+//! [0..4)       len       u32 — byte length of body ∥ checksum (≥ 9)
+//! [4..4+len−8) body      kind u8, then the kind-specific payload
+//! last 8       checksum  u64 FNV-1a over body (same rules as ADVGPCK1)
+//! ```
+//!
+//! The checksum covers the body only; a corrupted length prefix
+//! misframes the stream and surfaces as a checksum mismatch, an unknown
+//! kind, or an out-of-range length — all hard errors (the connection is
+//! dropped, never resynchronized).
+//!
+//! # Example: encode → decode roundtrip
+//!
+//! ```
+//! use advgp::ps::messages::{Push, PublishMeta};
+//! use advgp::ps::wire::Frame;
+//!
+//! let frame = Frame::Push(Push {
+//!     worker: 1,
+//!     version: 7,
+//!     value: -3.25,
+//!     grad: vec![0.5, -1.0],
+//!     compute_secs: 0.125,
+//! });
+//! let bytes = frame.encode();
+//! // Strip the 4-byte length prefix (a stream reader has already
+//! // consumed it) and decode the rest.
+//! let back = Frame::decode(&bytes[4..]).unwrap();
+//! assert_eq!(back, frame);
+//! ```
+
+use super::messages::{FromServer, Push, PublishMeta, ToServer};
+use crate::util::{fnv1a64, FNV1A64_INIT};
+use anyhow::{bail, ensure, Context, Result};
+use std::io::{Read, Write};
+
+/// Magic bytes carried inside HELLO and WELCOME (stream preamble).
+pub const WIRE_MAGIC: [u8; 8] = *b"ADVGPNT1";
+
+/// Protocol revision spoken by this build.  HELLO carries the highest
+/// revision the client speaks; the server answers with the revision the
+/// connection will use (today: exactly this, or an `ERR_PROTO` error).
+pub const PROTO_VERSION: u32 = 1;
+
+/// Hard ceiling on the `len` field: frames larger than this are treated
+/// as stream corruption, not as gigantic messages.  1 GiB comfortably
+/// holds any realistic θ (m = 10⁴, d = 10² is ≈ 400 MB).
+pub const MAX_FRAME_LEN: usize = 1 << 30;
+
+/// Length ceiling for *handshake* frames (HELLO, WELCOME, and the
+/// ERROR replies they can draw).  Until a peer has passed the
+/// handshake it is fully untrusted, so the first read must not let a
+/// length prefix alone commit the receiver to a MAX_FRAME_LEN
+/// allocation — 4 KiB is orders of magnitude above any legal
+/// handshake frame.
+pub const MAX_HANDSHAKE_FRAME_LEN: usize = 4096;
+
+/// HELLO `worker` value requesting server-side id assignment.
+pub const WORKER_ID_ANY: u64 = u64::MAX;
+
+/// Largest claimable worker id.  The server's gate clocks and gradient
+/// slots are dense arrays indexed by id, so an unbounded id claim would
+/// let one misconfigured client allocate gigabytes of bookkeeping on
+/// the shared θ-server; 2¹⁶ workers is far beyond any realistic run.
+pub const MAX_WORKER_ID: u64 = 1 << 16;
+
+/// Frame kind bytes (first byte of every body).
+pub const KIND_HELLO: u8 = 0x01;
+pub const KIND_WELCOME: u8 = 0x02;
+pub const KIND_PUBLISH: u8 = 0x03;
+pub const KIND_PUSH: u8 = 0x04;
+pub const KIND_EXIT: u8 = 0x05;
+pub const KIND_SHUTDOWN: u8 = 0x06;
+pub const KIND_ERROR: u8 = 0x07;
+
+/// ERROR frame codes.
+pub const ERR_BAD_MAGIC: u16 = 1;
+pub const ERR_PROTO: u16 = 2;
+pub const ERR_ID_IN_USE: u16 = 3;
+pub const ERR_MALFORMED: u16 = 4;
+pub const ERR_DIM: u16 = 5;
+pub const ERR_ID_MISMATCH: u16 = 6;
+
+/// One ADVGPNT1 frame — see the module docs for the byte layout and
+/// `docs/PROTOCOL.md` §"Frame table" for the per-kind payloads.
+#[derive(Clone, Debug, PartialEq)]
+pub enum Frame {
+    /// Client → server, first frame on every connection: magic,
+    /// highest protocol revision spoken, and the worker id claimed
+    /// ([`WORKER_ID_ANY`] = assign me one).
+    Hello { proto: u32, worker: u64 },
+    /// Server → client handshake reply: negotiated revision, the id the
+    /// connection runs as, the θ layout (m, d), and the staleness bound.
+    Welcome { proto: u32, worker: u64, m: u64, d: u64, tau: u64 },
+    /// Server → client: one published θ snapshot (version, gate-clock
+    /// metadata, full θ).
+    Publish { version: u64, meta: PublishMeta, theta: Vec<f64> },
+    /// Client → server: a local gradient ([`super::messages::Push`]).
+    Push(Push),
+    /// Client → server: permanent departure (retires the gate clock).
+    WorkerExit { worker: u64 },
+    /// Server → client: the run is over; close after reading this.
+    Shutdown,
+    /// Either direction: fatal protocol error; the sender closes the
+    /// connection after writing it.
+    Error { code: u16, message: String },
+}
+
+impl Frame {
+    /// The kind byte this frame encodes as.
+    pub fn kind(&self) -> u8 {
+        match self {
+            Frame::Hello { .. } => KIND_HELLO,
+            Frame::Welcome { .. } => KIND_WELCOME,
+            Frame::Publish { .. } => KIND_PUBLISH,
+            Frame::Push(_) => KIND_PUSH,
+            Frame::WorkerExit { .. } => KIND_EXIT,
+            Frame::Shutdown => KIND_SHUTDOWN,
+            Frame::Error { .. } => KIND_ERROR,
+        }
+    }
+
+    /// Serialize to the full on-stream form: length prefix, body,
+    /// checksum.  The result is written with a single `write_all`, so
+    /// concurrent writers serialized by a lock never interleave frames.
+    pub fn encode(&self) -> Vec<u8> {
+        let mut body = Vec::with_capacity(64);
+        body.push(self.kind());
+        match self {
+            Frame::Hello { proto, worker } => {
+                body.extend_from_slice(&WIRE_MAGIC);
+                body.extend_from_slice(&proto.to_le_bytes());
+                body.extend_from_slice(&worker.to_le_bytes());
+            }
+            Frame::Welcome { proto, worker, m, d, tau } => {
+                body.extend_from_slice(&WIRE_MAGIC);
+                body.extend_from_slice(&proto.to_le_bytes());
+                body.extend_from_slice(&worker.to_le_bytes());
+                body.extend_from_slice(&m.to_le_bytes());
+                body.extend_from_slice(&d.to_le_bytes());
+                body.extend_from_slice(&tau.to_le_bytes());
+            }
+            Frame::Publish { version, meta, theta } => {
+                // One copy of the PUBLISH layout: the slice-based
+                // encoder below is the normative implementation.
+                return publish_frame_bytes(*version, *meta, theta);
+            }
+            Frame::Push(p) => {
+                body.extend_from_slice(&(p.worker as u64).to_le_bytes());
+                body.extend_from_slice(&p.version.to_le_bytes());
+                body.extend_from_slice(&p.value.to_le_bytes());
+                body.extend_from_slice(&p.compute_secs.to_le_bytes());
+                body.extend_from_slice(&(p.grad.len() as u64).to_le_bytes());
+                for v in &p.grad {
+                    body.extend_from_slice(&v.to_le_bytes());
+                }
+            }
+            Frame::WorkerExit { worker } => {
+                body.extend_from_slice(&worker.to_le_bytes());
+            }
+            Frame::Shutdown => {}
+            Frame::Error { code, message } => {
+                body.extend_from_slice(&code.to_le_bytes());
+                let msg = message.as_bytes();
+                body.extend_from_slice(&(msg.len() as u32).to_le_bytes());
+                body.extend_from_slice(msg);
+            }
+        }
+        seal_frame(body)
+    }
+
+    /// Decode one frame from `bytes` = body ∥ checksum (the 4-byte
+    /// length prefix already consumed by the stream reader).  Rejects
+    /// checksum mismatches, unknown kinds, truncated payloads, trailing
+    /// bytes, bad magic (HELLO/WELCOME), and invalid UTF-8 (ERROR).
+    pub fn decode(bytes: &[u8]) -> Result<Frame> {
+        ensure!(bytes.len() >= 9, "frame shorter than kind + checksum");
+        let (body, sum) = bytes.split_at(bytes.len() - 8);
+        let stored = u64::from_le_bytes(sum.try_into().unwrap());
+        let actual = fnv1a64(FNV1A64_INIT, body);
+        ensure!(
+            stored == actual,
+            "frame checksum mismatch (stored {stored:#018x}, computed \
+             {actual:#018x}) — corrupt or misframed stream"
+        );
+        let kind = body[0];
+        let mut r = Cursor { b: &body[1..], i: 0 };
+        let frame = match kind {
+            KIND_HELLO => {
+                ensure!(r.take(8)? == WIRE_MAGIC, "HELLO: bad magic (want ADVGPNT1)");
+                Frame::Hello { proto: r.u32()?, worker: r.u64()? }
+            }
+            KIND_WELCOME => {
+                ensure!(r.take(8)? == WIRE_MAGIC, "WELCOME: bad magic (want ADVGPNT1)");
+                Frame::Welcome {
+                    proto: r.u32()?,
+                    worker: r.u64()?,
+                    m: r.u64()?,
+                    d: r.u64()?,
+                    tau: r.u64()?,
+                }
+            }
+            KIND_PUBLISH => {
+                let version = r.u64()?;
+                let meta = PublishMeta { live: r.u64()?, staleness: r.u64()? };
+                let dim = r.u64()? as usize;
+                Frame::Publish { version, meta, theta: r.f64_vec(dim)? }
+            }
+            KIND_PUSH => {
+                let worker = r.u64()?;
+                ensure!(
+                    worker <= MAX_WORKER_ID,
+                    "PUSH: implausible worker id {worker} (max {MAX_WORKER_ID})"
+                );
+                let version = r.u64()?;
+                let value = r.f64()?;
+                let compute_secs = r.f64()?;
+                let dim = r.u64()? as usize;
+                Frame::Push(Push {
+                    worker: worker as usize,
+                    version,
+                    value,
+                    grad: r.f64_vec(dim)?,
+                    compute_secs,
+                })
+            }
+            KIND_EXIT => Frame::WorkerExit { worker: r.u64()? },
+            KIND_SHUTDOWN => Frame::Shutdown,
+            KIND_ERROR => {
+                let code = r.u16()?;
+                let len = r.u32()? as usize;
+                let message = String::from_utf8(r.take(len)?.to_vec())
+                    .context("ERROR frame: message is not UTF-8")?;
+                Frame::Error { code, message }
+            }
+            k => bail!("unknown frame kind {k:#04x}"),
+        };
+        ensure!(
+            r.i == body.len() - 1,
+            "frame kind {kind:#04x}: {} trailing payload bytes",
+            body.len() - 1 - r.i
+        );
+        Ok(frame)
+    }
+
+    /// The worker→server message this frame carries, if it is one.
+    pub fn into_to_server(self) -> Option<ToServer> {
+        match self {
+            Frame::Push(p) => Some(ToServer::Push(p)),
+            Frame::WorkerExit { worker } => {
+                Some(ToServer::WorkerExit { worker: worker as usize })
+            }
+            _ => None,
+        }
+    }
+
+    /// The server→worker message this frame carries, if it is one.
+    pub fn into_from_server(self) -> Option<FromServer> {
+        match self {
+            Frame::Publish { version, meta, theta } => {
+                Some(FromServer::Publish { version, meta, theta })
+            }
+            Frame::Shutdown => Some(FromServer::Shutdown),
+            _ => None,
+        }
+    }
+}
+
+impl From<FromServer> for Frame {
+    fn from(m: FromServer) -> Frame {
+        match m {
+            FromServer::Publish { version, meta, theta } => {
+                Frame::Publish { version, meta, theta }
+            }
+            FromServer::Shutdown => Frame::Shutdown,
+        }
+    }
+}
+
+impl From<ToServer> for Frame {
+    fn from(m: ToServer) -> Frame {
+        match m {
+            ToServer::Push(p) => Frame::Push(p),
+            ToServer::WorkerExit { worker } => {
+                Frame::WorkerExit { worker: worker as u64 }
+            }
+        }
+    }
+}
+
+/// Encode a PUBLISH frame straight from a θ slice — the server's
+/// publish fan-out path, which would otherwise clone θ into a [`Frame`]
+/// once per connection per version just to serialize it.
+pub fn publish_frame_bytes(version: u64, meta: PublishMeta, theta: &[f64]) -> Vec<u8> {
+    let mut body = Vec::with_capacity(1 + 32 + theta.len() * 8);
+    body.push(KIND_PUBLISH);
+    body.extend_from_slice(&version.to_le_bytes());
+    body.extend_from_slice(&meta.live.to_le_bytes());
+    body.extend_from_slice(&meta.staleness.to_le_bytes());
+    body.extend_from_slice(&(theta.len() as u64).to_le_bytes());
+    for v in theta {
+        body.extend_from_slice(&v.to_le_bytes());
+    }
+    seal_frame(body)
+}
+
+/// Checksum a body and prepend the length prefix — the single sealing
+/// point for every encoder.  Panics on a frame over [`MAX_FRAME_LEN`]:
+/// the receiver would reject it anyway, and a silent `as u32` wrap
+/// would misframe the stream and blame the network for a local sizing
+/// bug.
+fn seal_frame(body: Vec<u8>) -> Vec<u8> {
+    let sum = fnv1a64(FNV1A64_INIT, &body);
+    let total = body.len() + 8;
+    assert!(
+        total <= MAX_FRAME_LEN,
+        "frame of {total} bytes exceeds MAX_FRAME_LEN ({MAX_FRAME_LEN}) — \
+         θ too large for one ADVGPNT1 frame"
+    );
+    let mut out = Vec::with_capacity(4 + total);
+    out.extend_from_slice(&(total as u32).to_le_bytes());
+    out.extend_from_slice(&body);
+    out.extend_from_slice(&sum.to_le_bytes());
+    out
+}
+
+/// Write one frame (a single `write_all` of the encoded bytes).
+pub fn write_frame(w: &mut impl Write, frame: &Frame) -> std::io::Result<()> {
+    w.write_all(&frame.encode())
+}
+
+/// Read one frame, reusing `scratch` across calls (no steady-state
+/// allocation once the buffer has grown to the largest frame seen).
+/// EOF anywhere — including cleanly between frames — is an error; use
+/// [`read_frame_opt`] where a peer hanging up is an expected event.
+pub fn read_frame(r: &mut impl Read, scratch: &mut Vec<u8>) -> Result<Frame> {
+    read_frame_opt(r, scratch)?.context("connection closed mid-stream")
+}
+
+/// [`read_frame`] with a caller-chosen length ceiling.  Handshake
+/// reads pass [`MAX_HANDSHAKE_FRAME_LEN`] so an unauthenticated peer's
+/// length prefix can never commit the receiver to a gigabyte
+/// allocation before HELLO/WELCOME validation has run.
+pub fn read_frame_capped(
+    r: &mut impl Read,
+    scratch: &mut Vec<u8>,
+    max_len: usize,
+) -> Result<Frame> {
+    read_frame_opt_capped(r, scratch, max_len)?.context("connection closed mid-stream")
+}
+
+/// Like [`read_frame`], but a clean EOF *at a frame boundary* returns
+/// `Ok(None)`; EOF inside a frame is still an error (torn frame).
+pub fn read_frame_opt(r: &mut impl Read, scratch: &mut Vec<u8>) -> Result<Option<Frame>> {
+    read_frame_opt_capped(r, scratch, MAX_FRAME_LEN)
+}
+
+/// The core reader: length prefix (bounded by `max_len`), body,
+/// checksum, decode.
+pub fn read_frame_opt_capped(
+    r: &mut impl Read,
+    scratch: &mut Vec<u8>,
+    max_len: usize,
+) -> Result<Option<Frame>> {
+    let max_len = max_len.min(MAX_FRAME_LEN);
+    let mut len4 = [0u8; 4];
+    let mut got = 0usize;
+    while got == 0 {
+        match r.read(&mut len4) {
+            Ok(0) => return Ok(None), // peer hung up between frames
+            Ok(k) => got = k,
+            Err(e) if e.kind() == std::io::ErrorKind::Interrupted => continue,
+            Err(e) => return Err(e).context("read frame length"),
+        }
+    }
+    r.read_exact(&mut len4[got..]).context("read frame length (torn)")?;
+    let len = u32::from_le_bytes(len4) as usize;
+    ensure!(
+        (9..=max_len).contains(&len),
+        "frame length {len} outside [9, {max_len}] — corrupt or hostile stream"
+    );
+    scratch.resize(len, 0);
+    r.read_exact(scratch).context("read frame body (torn)")?;
+    Frame::decode(scratch).map(Some)
+}
+
+struct Cursor<'a> {
+    b: &'a [u8],
+    i: usize,
+}
+
+impl<'a> Cursor<'a> {
+    fn take(&mut self, len: usize) -> Result<&'a [u8]> {
+        ensure!(
+            self.i + len <= self.b.len(),
+            "frame payload truncated at byte {}",
+            self.i
+        );
+        let s = &self.b[self.i..self.i + len];
+        self.i += len;
+        Ok(s)
+    }
+
+    fn u16(&mut self) -> Result<u16> {
+        Ok(u16::from_le_bytes(self.take(2)?.try_into().unwrap()))
+    }
+
+    fn u32(&mut self) -> Result<u32> {
+        Ok(u32::from_le_bytes(self.take(4)?.try_into().unwrap()))
+    }
+
+    fn u64(&mut self) -> Result<u64> {
+        Ok(u64::from_le_bytes(self.take(8)?.try_into().unwrap()))
+    }
+
+    fn f64(&mut self) -> Result<f64> {
+        Ok(f64::from_le_bytes(self.take(8)?.try_into().unwrap()))
+    }
+
+    fn f64_vec(&mut self, len: usize) -> Result<Vec<f64>> {
+        let raw = self.take(len.checked_mul(8).context("frame: length overflow")?)?;
+        Ok(raw
+            .chunks_exact(8)
+            .map(|c| f64::from_le_bytes(c.try_into().unwrap()))
+            .collect())
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn all_frames() -> Vec<Frame> {
+        vec![
+            Frame::Hello { proto: PROTO_VERSION, worker: WORKER_ID_ANY },
+            Frame::Hello { proto: 1, worker: 3 },
+            Frame::Welcome { proto: 1, worker: 3, m: 100, d: 8, tau: 32 },
+            Frame::Publish {
+                version: 41,
+                meta: PublishMeta { live: 4, staleness: 2 },
+                theta: vec![1.5, -2.25, 0.0, f64::MIN_POSITIVE],
+            },
+            Frame::Push(Push {
+                worker: 2,
+                version: 40,
+                value: -1234.5,
+                grad: vec![0.125; 7],
+                compute_secs: 0.03125,
+            }),
+            Frame::WorkerExit { worker: 2 },
+            Frame::Shutdown,
+            Frame::Error { code: ERR_ID_IN_USE, message: "worker id 3 in use".into() },
+        ]
+    }
+
+    #[test]
+    fn roundtrip_every_kind() {
+        for f in all_frames() {
+            let bytes = f.encode();
+            let len = u32::from_le_bytes(bytes[..4].try_into().unwrap()) as usize;
+            assert_eq!(len, bytes.len() - 4, "{f:?}: length prefix");
+            let back = Frame::decode(&bytes[4..]).unwrap();
+            assert_eq!(back, f);
+        }
+    }
+
+    #[test]
+    fn f64_payloads_roundtrip_bitwise() {
+        // PartialEq can't see the difference between 0.0 and -0.0 (and
+        // would reject NaN): check the raw bit patterns explicitly.
+        let theta = vec![0.0, -0.0, f64::NAN, f64::INFINITY, -1e-308];
+        let f = Frame::Publish { version: 1, meta: PublishMeta::default(), theta: theta.clone() };
+        let bytes = f.encode();
+        match Frame::decode(&bytes[4..]).unwrap() {
+            Frame::Publish { theta: back, .. } => {
+                for (a, b) in theta.iter().zip(&back) {
+                    assert_eq!(a.to_bits(), b.to_bits());
+                }
+            }
+            other => panic!("wrong kind back: {other:?}"),
+        }
+    }
+
+    #[test]
+    fn corruption_is_rejected() {
+        for f in all_frames() {
+            let clean = f.encode();
+            // Flip every body/checksum byte one at a time: decode must
+            // never silently accept (a kind-byte flip may decode as a
+            // *checksum* error — either way it's an Err).
+            for i in 4..clean.len() {
+                let mut bytes = clean.clone();
+                bytes[i] ^= 0x01;
+                assert!(
+                    Frame::decode(&bytes[4..]).is_err(),
+                    "{f:?}: accepted a flipped byte at {i}"
+                );
+            }
+            // Truncation at every boundary.
+            for cut in 4..clean.len() {
+                assert!(
+                    Frame::decode(&clean[4..cut]).is_err(),
+                    "{f:?}: accepted truncation at {cut}"
+                );
+            }
+            // Trailing garbage (appended before the checksum slot moves:
+            // simplest is appending a byte — checksum now misaligned).
+            let mut bytes = clean.clone();
+            bytes.push(0xAB);
+            assert!(Frame::decode(&bytes[4..]).is_err(), "{f:?}: trailing byte");
+        }
+    }
+
+    #[test]
+    fn stream_read_write_roundtrip_and_eof_semantics() {
+        let mut buf: Vec<u8> = Vec::new();
+        for f in all_frames() {
+            write_frame(&mut buf, &f).unwrap();
+        }
+        let mut cur = std::io::Cursor::new(buf.clone());
+        let mut scratch = Vec::new();
+        for f in all_frames() {
+            assert_eq!(read_frame(&mut cur, &mut scratch).unwrap(), f);
+        }
+        // Clean EOF at a frame boundary: None, not an error.
+        assert!(read_frame_opt(&mut cur, &mut scratch).unwrap().is_none());
+        // ... but read_frame treats it as an error.
+        assert!(read_frame(&mut cur, &mut scratch).is_err());
+        // Torn frame: cut the stream mid-frame.
+        let mut cur = std::io::Cursor::new(buf[..buf.len() - 3].to_vec());
+        loop {
+            match read_frame_opt(&mut cur, &mut scratch) {
+                Ok(Some(_)) => continue,
+                Ok(None) => panic!("torn frame read as clean EOF"),
+                Err(_) => break,
+            }
+        }
+    }
+
+    #[test]
+    fn length_prefix_bounds_are_enforced() {
+        // len < 9.
+        let mut bytes = vec![];
+        bytes.extend_from_slice(&5u32.to_le_bytes());
+        bytes.extend_from_slice(&[0u8; 5]);
+        let mut cur = std::io::Cursor::new(bytes);
+        assert!(read_frame(&mut cur, &mut Vec::new()).is_err());
+        // len > MAX_FRAME_LEN.
+        let mut bytes = vec![];
+        bytes.extend_from_slice(&(MAX_FRAME_LEN as u32 + 1).to_le_bytes());
+        let mut cur = std::io::Cursor::new(bytes);
+        assert!(read_frame(&mut cur, &mut Vec::new()).is_err());
+        // Handshake cap: a legal-for-the-stream length is still
+        // rejected before the body is read (or allocated) when it
+        // exceeds the handshake ceiling.
+        let big = Frame::Publish {
+            version: 0,
+            meta: PublishMeta::default(),
+            theta: vec![0.0; MAX_HANDSHAKE_FRAME_LEN / 8],
+        }
+        .encode();
+        let mut scratch = Vec::new();
+        let mut cur = std::io::Cursor::new(big.clone());
+        assert!(
+            read_frame_capped(&mut cur, &mut scratch, MAX_HANDSHAKE_FRAME_LEN).is_err(),
+            "oversized frame accepted during handshake"
+        );
+        assert!(scratch.is_empty(), "handshake cap allocated the body anyway");
+        // The same bytes are fine through the normal reader.
+        let mut cur = std::io::Cursor::new(big);
+        assert!(read_frame(&mut cur, &mut scratch).is_ok());
+        // HELLO itself fits the cap with room to spare.
+        let hello = Frame::Hello { proto: PROTO_VERSION, worker: WORKER_ID_ANY }.encode();
+        let mut cur = std::io::Cursor::new(hello);
+        assert!(read_frame_capped(&mut cur, &mut scratch, MAX_HANDSHAKE_FRAME_LEN).is_ok());
+    }
+
+    /// Pins the worked example in docs/PROTOCOL.md: if this breaks,
+    /// the codec and its normative spec have drifted apart.
+    #[test]
+    fn shutdown_frame_matches_the_protocol_doc() {
+        assert_eq!(
+            Frame::Shutdown.encode(),
+            vec![0x09, 0, 0, 0, 0x06, 0x79, 0xb4, 0x01, 0x86, 0x4c, 0xbb, 0x63, 0xaf]
+        );
+    }
+
+    #[test]
+    fn publish_frame_bytes_matches_frame_encode() {
+        let meta = PublishMeta { live: 3, staleness: 1 };
+        let theta = vec![1.0, 2.5, -3.75];
+        let via_frame =
+            Frame::Publish { version: 9, meta, theta: theta.clone() }.encode();
+        assert_eq!(publish_frame_bytes(9, meta, &theta), via_frame);
+    }
+
+    #[test]
+    fn to_server_conversions() {
+        let push = Push {
+            worker: 5,
+            version: 2,
+            value: 0.5,
+            grad: vec![1.0],
+            compute_secs: 0.01,
+        };
+        let f: Frame = ToServer::Push(push.clone()).into();
+        assert_eq!(f.clone().into_to_server(), Some(ToServer::Push(push)));
+        let f: Frame = ToServer::WorkerExit { worker: 5 }.into();
+        assert_eq!(f.into_to_server(), Some(ToServer::WorkerExit { worker: 5 }));
+        assert_eq!(Frame::Shutdown.into_to_server(), None);
+    }
+
+    #[test]
+    fn from_server_conversions() {
+        let msg = FromServer::Publish {
+            version: 4,
+            meta: PublishMeta { live: 2, staleness: 0 },
+            theta: vec![1.0, 2.0],
+        };
+        let f: Frame = msg.clone().into();
+        assert_eq!(f.into_from_server(), Some(msg));
+        let f: Frame = FromServer::Shutdown.into();
+        assert_eq!(f.clone().into_from_server(), Some(FromServer::Shutdown));
+        assert_eq!(Frame::Shutdown.into_to_server(), None);
+        assert_eq!(
+            Frame::Hello { proto: 1, worker: 0 }.into_from_server(),
+            None
+        );
+    }
+}

@@ -1,6 +1,13 @@
 //! The worker loop (Algorithm 1, worker side) with straggler,
 //! crash/restart, and permanent-departure injection, over in-memory or
 //! out-of-core data sources.
+//!
+//! The loop is transport-agnostic: it talks to the server only through
+//! a [`Published`] handle (pull) and a `Sender<ToServer>` (push).
+//! In-process those are the coordinator's shared handle and channel;
+//! over the network [`super::net::NetWorkerHandle::run`] hands the
+//! *same function* a socket-backed pair, so profiles, windowing, and
+//! store streaming behave identically on both transports.
 
 use super::messages::{Push, ToServer};
 use super::Published;

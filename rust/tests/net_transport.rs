@@ -1,0 +1,548 @@
+//! Integration: the ADVGPNT1 networked parameter-server transport
+//! (ISSUE 4) — wire-codec robustness against a live server, loopback-
+//! TCP training runs, bitwise parity with the in-process path at τ=0,
+//! mid-stream disconnect retirement, and networked checkpoint/resume
+//! with keep-last GC.
+
+use advgp::data::{kmeans, synth, Dataset, Standardizer};
+use advgp::gp::{Theta, ThetaLayout};
+use advgp::grad::native_factory;
+use advgp::ps::coordinator::{train, train_remote, TrainConfig};
+use advgp::ps::net::{remote_worker_loop, NetServer, NetWorkerHandle};
+use advgp::ps::wire::{
+    self, Frame, ERR_ID_IN_USE, ERR_MALFORMED, ERR_PROTO, PROTO_VERSION,
+};
+use advgp::ps::worker::{WorkerProfile, WorkerSource};
+use advgp::ps::{Checkpoint, PublishMeta};
+use advgp::util::rng::Pcg64;
+use std::net::TcpStream;
+use std::path::PathBuf;
+
+fn tdir(name: &str) -> PathBuf {
+    let dir = std::env::temp_dir().join("advgp_net_test").join(name);
+    let _ = std::fs::remove_dir_all(&dir);
+    std::fs::create_dir_all(&dir).unwrap();
+    dir
+}
+
+/// Standardized friedman problem + kmeans-initialized θ.
+fn setup(n: usize, m: usize, seed: u64) -> (Dataset, Dataset, Theta, ThetaLayout) {
+    let mut ds = synth::friedman(n + 200, 4, 0.4, seed);
+    let mut rng = Pcg64::seeded(seed);
+    ds.shuffle(&mut rng);
+    let (mut train_ds, mut test_ds) = ds.split(200);
+    let st = Standardizer::fit(&train_ds);
+    st.apply(&mut train_ds);
+    st.apply(&mut test_ds);
+    let layout = ThetaLayout::new(m, 4);
+    let z = kmeans::kmeans(&train_ds.x, m, 15, &mut rng);
+    let theta = Theta::init(layout, &z);
+    (train_ds, test_ds, theta, layout)
+}
+
+/// Fixed per-worker thread budgets: the gradient engine's lane
+/// reduction is deterministic *per budget*, so bitwise comparisons pin
+/// every worker to one lane on both transports.
+fn one_thread() -> WorkerProfile {
+    WorkerProfile { threads: 1, ..Default::default() }
+}
+
+/// The acceptance-criterion test: a 2-worker τ=0 training run over
+/// loopback TCP must reproduce the in-process θ trajectory **bitwise**
+/// — the transport moves the same messages the channel would, and the
+/// server aggregates slots in worker-id order either way.
+#[test]
+fn loopback_tcp_matches_in_process_bitwise_at_tau0() {
+    let (train_ds, _test, theta, layout) = setup(400, 6, 11);
+    let shards = train_ds.shard(2);
+    let mk_cfg = || {
+        let mut cfg = TrainConfig::new(layout);
+        cfg.tau = 0;
+        cfg.max_updates = 25;
+        cfg.eval_every_secs = 0.0;
+        cfg.profiles = vec![one_thread(), one_thread()];
+        cfg
+    };
+
+    // In-process reference.
+    let cfg = mk_cfg();
+    let local = train(
+        &cfg,
+        theta.data.clone(),
+        shards.clone(),
+        native_factory(layout),
+        None,
+    );
+    assert_eq!(local.stats.updates, 25);
+
+    // Loopback-TCP twin: same shards, same ids, same thread budgets.
+    let net = NetServer::bind("127.0.0.1:0").unwrap();
+    let addr = net.local_addr().to_string();
+    let workers: Vec<_> = shards
+        .into_iter()
+        .enumerate()
+        .map(|(k, shard)| {
+            let addr = addr.clone();
+            std::thread::spawn(move || {
+                remote_worker_loop(
+                    &addr,
+                    Some(k),
+                    WorkerSource::Memory(shard),
+                    native_factory(layout),
+                    one_thread(),
+                )
+                .unwrap()
+            })
+        })
+        .collect();
+    let cfg = mk_cfg();
+    let remote = train_remote(&cfg, theta.data.clone(), net, 2, None);
+    for w in workers {
+        w.join().unwrap();
+    }
+    assert_eq!(remote.stats.updates, 25);
+    assert_eq!(remote.stats.joins, 0, "declared workers are not joins");
+    for (i, (a, b)) in local.theta.iter().zip(&remote.theta).enumerate() {
+        assert_eq!(
+            a.to_bits(),
+            b.to_bits(),
+            "θ[{i}] diverged: in-process {a} vs loopback-TCP {b}"
+        );
+    }
+}
+
+/// A networked run that checkpoints (with keep-last GC), is killed, and
+/// resumes over the network must land bitwise on the θ of an
+/// uninterrupted in-process run — durability and transport compose.
+#[test]
+fn networked_checkpoint_resume_matches_uninterrupted_run_bitwise() {
+    let ckdir = tdir("net_resume");
+    let (train_ds, _test, theta, layout) = setup(300, 6, 13);
+    let shards = train_ds.shard(2);
+    let remote_run = |max: u64, every: u64, resume: Option<Checkpoint>| {
+        let mut cfg = TrainConfig::new(layout);
+        cfg.tau = 0;
+        cfg.max_updates = max;
+        cfg.eval_every_secs = 0.0;
+        cfg.checkpoint_every = every;
+        cfg.checkpoint_dir = (every > 0).then(|| ckdir.clone());
+        cfg.keep_last = (every > 0).then_some(2);
+        cfg.resume_from = resume;
+        let net = NetServer::bind("127.0.0.1:0").unwrap();
+        let addr = net.local_addr().to_string();
+        let workers: Vec<_> = shards
+            .clone()
+            .into_iter()
+            .enumerate()
+            .map(|(k, shard)| {
+                let addr = addr.clone();
+                std::thread::spawn(move || {
+                    remote_worker_loop(
+                        &addr,
+                        Some(k),
+                        WorkerSource::Memory(shard),
+                        native_factory(layout),
+                        one_thread(),
+                    )
+                    .unwrap()
+                })
+            })
+            .collect();
+        let res = train_remote(&cfg, theta.data.clone(), net, 2, None);
+        for w in workers {
+            w.join().unwrap();
+        }
+        res
+    };
+
+    // Leg 1: 15 updates over TCP, checkpoint every 5, keep the last 2.
+    let leg1 = remote_run(15, 5, None);
+    assert_eq!(leg1.stats.updates, 15);
+    let files = Checkpoint::list_in(&ckdir).unwrap();
+    assert!(
+        files.len() <= 2,
+        "keep_last=2 retained {} files: {files:?}",
+        files.len()
+    );
+    let ck = Checkpoint::load_latest(&ckdir).unwrap().expect("leg 1 sealed");
+    assert_eq!(ck.version, 15, "seal is the newest survivor");
+
+    // Leg 2: resume over TCP to 30.
+    let resumed = remote_run(30, 0, Some(ck));
+    assert_eq!(resumed.stats.updates, 30);
+
+    // Uninterrupted in-process reference.
+    let mut cfg = TrainConfig::new(layout);
+    cfg.tau = 0;
+    cfg.max_updates = 30;
+    cfg.eval_every_secs = 0.0;
+    cfg.profiles = vec![one_thread(), one_thread()];
+    let direct = train(&cfg, theta.data.clone(), shards, native_factory(layout), None);
+    for (i, (a, b)) in direct.theta.iter().zip(&resumed.theta).enumerate() {
+        assert_eq!(
+            a.to_bits(),
+            b.to_bits(),
+            "θ[{i}] diverged: uninterrupted {a} vs networked-resumed {b}"
+        );
+    }
+}
+
+/// A remote worker whose connection dies mid-stream — no EXIT frame,
+/// just EOF — must have its clock retired via the gate so the
+/// survivors finish the run (the networked twin of the in-process
+/// kill-worker test).  τ=2 means a lingering clock would stall the run
+/// within 3 updates.
+#[test]
+fn mid_stream_disconnect_retires_clock_via_gate() {
+    let (train_ds, _test, theta, layout) = setup(600, 8, 7);
+    let shards = train_ds.shard(2);
+    let net = NetServer::bind("127.0.0.1:0").unwrap();
+    let addr = net.local_addr().to_string();
+
+    // Two well-behaved remote workers own the real shards.
+    let workers: Vec<_> = shards
+        .into_iter()
+        .enumerate()
+        .map(|(k, shard)| {
+            let addr = addr.clone();
+            std::thread::spawn(move || {
+                remote_worker_loop(
+                    &addr,
+                    Some(k),
+                    WorkerSource::Memory(shard),
+                    native_factory(layout),
+                    one_thread(),
+                )
+                .unwrap()
+            })
+        })
+        .collect();
+
+    // The flaky third member: handshakes as worker 2, pushes one
+    // all-zero gradient, then vanishes without an EXIT frame.
+    let flaky = {
+        let addr = addr.clone();
+        let dim = layout.len();
+        std::thread::spawn(move || {
+            let mut s = TcpStream::connect(&addr).unwrap();
+            wire::write_frame(
+                &mut s,
+                &Frame::Hello { proto: PROTO_VERSION, worker: 2 },
+            )
+            .unwrap();
+            let mut scratch = Vec::new();
+            match wire::read_frame(&mut s, &mut scratch).unwrap() {
+                Frame::Welcome { worker, m, d, .. } => {
+                    assert_eq!(worker, 2);
+                    assert_eq!((m as usize, d as usize), (layout.m, layout.d));
+                }
+                f => panic!("expected WELCOME, got {f:?}"),
+            }
+            let version = match wire::read_frame(&mut s, &mut scratch).unwrap() {
+                Frame::Publish { version, theta, .. } => {
+                    assert_eq!(theta.len(), dim);
+                    version
+                }
+                f => panic!("expected PUBLISH, got {f:?}"),
+            };
+            let push = advgp::ps::messages::Push {
+                worker: 2,
+                version,
+                value: 0.0,
+                grad: vec![0.0; dim],
+                compute_secs: 0.0,
+            };
+            wire::write_frame(&mut s, &Frame::Push(push)).unwrap();
+            // Drop the socket: a kill -9, not a polite departure.
+        })
+    };
+
+    let mut cfg = TrainConfig::new(layout);
+    cfg.tau = 2;
+    cfg.max_updates = 60;
+    cfg.eval_every_secs = 0.0;
+    cfg.time_limit_secs = Some(60.0); // hang backstop only; never hit
+    let res = train_remote(&cfg, theta.data.clone(), net, 3, None);
+    flaky.join().unwrap();
+    for w in workers {
+        w.join().unwrap();
+    }
+    assert_eq!(
+        res.stats.updates, 60,
+        "survivors must finish the run after the disconnect"
+    );
+    assert!(res.stats.leaves >= 1, "the EOF must be observed as a departure");
+    // Staleness stays bounded for the live membership throughout.
+    assert!(res.stats.staleness.max <= cfg.tau as f64);
+}
+
+/// Handshake rejections: wrong protocol revision and duplicate worker
+/// ids get ERROR frames (and the server survives to serve real
+/// clients); id auto-assignment hands out the lowest free id.
+#[test]
+fn handshake_rejects_bad_proto_and_duplicate_ids() {
+    let (_train, _test, theta, layout) = setup(200, 4, 3);
+    let net = NetServer::bind("127.0.0.1:0").unwrap();
+    let addr = net.local_addr().to_string();
+
+    let server = {
+        let mut cfg = TrainConfig::new(layout);
+        cfg.tau = 0;
+        cfg.max_updates = 10;
+        cfg.eval_every_secs = 0.0;
+        cfg.time_limit_secs = Some(60.0);
+        let theta0 = theta.data.clone();
+        std::thread::spawn(move || train_remote(&cfg, theta0, net, 1, None))
+    };
+
+    // A legitimate connection holding worker id 0 (never pushes).
+    let held = NetWorkerHandle::connect(&addr, Some(0)).unwrap();
+    assert_eq!(held.worker, 0);
+    assert_eq!(held.version(), 0);
+
+    // Duplicate id → ERR_ID_IN_USE surfaced through connect().
+    let err = NetWorkerHandle::connect(&addr, Some(0)).unwrap_err();
+    assert!(
+        err.to_string().contains(&format!("code {ERR_ID_IN_USE}")),
+        "want id-in-use rejection, got: {err:#}"
+    );
+
+    // Auto-assign starts above the declared range (R = 1 here), so an
+    // ANY connection can never squat a declared gate id.
+    let auto = NetWorkerHandle::connect(&addr, None).unwrap();
+    assert_eq!(auto.worker, 1, "lowest free id ≥ declared worker count");
+
+    // Wrong protocol revision → ERR_PROTO error frame.
+    {
+        let mut s = TcpStream::connect(&addr).unwrap();
+        wire::write_frame(&mut s, &Frame::Hello { proto: 99, worker: 7 }).unwrap();
+        let mut scratch = Vec::new();
+        match wire::read_frame(&mut s, &mut scratch).unwrap() {
+            Frame::Error { code, .. } => assert_eq!(code, ERR_PROTO),
+            f => panic!("expected ERROR, got {f:?}"),
+        }
+    }
+
+    // Implausible id claim → ERR_MALFORMED, never an allocation: the
+    // server's gate clocks and gradient slots are id-indexed arrays.
+    {
+        let mut s = TcpStream::connect(&addr).unwrap();
+        wire::write_frame(
+            &mut s,
+            &Frame::Hello { proto: PROTO_VERSION, worker: 1 << 40 },
+        )
+        .unwrap();
+        let mut scratch = Vec::new();
+        match wire::read_frame(&mut s, &mut scratch).unwrap() {
+            Frame::Error { code, .. } => assert_eq!(code, ERR_MALFORMED),
+            f => panic!("expected ERROR, got {f:?}"),
+        }
+    }
+
+    // Drop both held connections: their clocks retire (id 0 was the
+    // only declared worker), so the run ends without a single update.
+    drop(held);
+    drop(auto);
+    let res = server.join().unwrap();
+    assert_eq!(res.stats.updates, 0, "nobody ever pushed a gradient");
+}
+
+/// Post-handshake protocol-state enforcement: a mismatched push id, a
+/// wrong-dimension gradient, and a PUSH after EXIT each draw the
+/// specified ERROR frame, drop the connection, and — critically —
+/// leave the gate with the clock retired so the run ends instead of
+/// stalling on a ghost member.
+#[test]
+fn protocol_violations_get_errors_and_retire_the_clock() {
+    let (_train, _test, theta, layout) = setup(200, 4, 21);
+    let dim = layout.len();
+
+    // Handshake as worker 0 and return the stream + handshake version.
+    let connect = |addr: &str| -> (TcpStream, u64) {
+        let mut s = TcpStream::connect(addr).unwrap();
+        wire::write_frame(&mut s, &Frame::Hello { proto: PROTO_VERSION, worker: 0 })
+            .unwrap();
+        let mut scratch = Vec::new();
+        match wire::read_frame(&mut s, &mut scratch).unwrap() {
+            Frame::Welcome { worker: 0, .. } => {}
+            f => panic!("expected WELCOME for worker 0, got {f:?}"),
+        }
+        match wire::read_frame(&mut s, &mut scratch).unwrap() {
+            Frame::Publish { version, .. } => (s, version),
+            f => panic!("expected PUBLISH, got {f:?}"),
+        }
+    };
+    // Read until the ERROR frame (publishes/shutdowns may interleave).
+    let expect_error = |s: &mut TcpStream, want_code: u16| {
+        let mut scratch = Vec::new();
+        loop {
+            match wire::read_frame(s, &mut scratch).unwrap() {
+                Frame::Error { code, message } => {
+                    assert_eq!(code, want_code, "unexpected error: {message}");
+                    return;
+                }
+                Frame::Publish { .. } | Frame::Shutdown => continue,
+                f => panic!("expected ERROR {want_code}, got {f:?}"),
+            }
+        }
+    };
+    let serve = |max_updates: u64| {
+        let net = NetServer::bind("127.0.0.1:0").unwrap();
+        let addr = net.local_addr().to_string();
+        let mut cfg = TrainConfig::new(layout);
+        cfg.tau = 0;
+        cfg.max_updates = max_updates;
+        cfg.eval_every_secs = 0.0;
+        cfg.time_limit_secs = Some(20.0); // stall backstop; never hit
+        let theta0 = theta.data.clone();
+        (addr, std::thread::spawn(move || train_remote(&cfg, theta0, net, 1, None)))
+    };
+    let push = |worker: usize, version: u64, grad_dim: usize| {
+        Frame::Push(advgp::ps::messages::Push {
+            worker,
+            version,
+            value: 0.0,
+            grad: vec![0.0; grad_dim],
+            compute_secs: 0.0,
+        })
+    };
+
+    // Mismatched id → code 6; the never-admitted clock retires and the
+    // run ends without a single update.
+    let (addr, server) = serve(5);
+    let (mut s, v) = connect(&addr);
+    wire::write_frame(&mut s, &push(1, v, dim)).unwrap();
+    expect_error(&mut s, wire::ERR_ID_MISMATCH);
+    drop(s);
+    assert_eq!(server.join().unwrap().stats.updates, 0);
+
+    // Wrong gradient dimension → code 5; same retirement.
+    let (addr, server) = serve(5);
+    let (mut s, v) = connect(&addr);
+    wire::write_frame(&mut s, &push(0, v, dim + 1)).unwrap();
+    expect_error(&mut s, wire::ERR_DIM);
+    drop(s);
+    assert_eq!(server.join().unwrap().stats.updates, 0);
+
+    // PUSH after EXIT → code 4, and the clock STAYS retired: exactly
+    // one update (from the valid pre-EXIT push) ever lands.
+    let (addr, server) = serve(5);
+    let (mut s, v) = connect(&addr);
+    wire::write_frame(&mut s, &push(0, v, dim)).unwrap();
+    // Wait for the resulting publish before EXITing: sent back-to-back,
+    // PUSH and EXIT can drain in one server absorb cycle — the clock
+    // retires and the slot clears before the gate ever permits, and no
+    // update would land at all.
+    let mut scratch = Vec::new();
+    loop {
+        match wire::read_frame(&mut s, &mut scratch).unwrap() {
+            Frame::Publish { version, .. } if version > v => break,
+            Frame::Publish { .. } => continue,
+            f => panic!("expected PUBLISH v{}, got {f:?}", v + 1),
+        }
+    }
+    wire::write_frame(&mut s, &Frame::WorkerExit { worker: 0 }).unwrap();
+    wire::write_frame(&mut s, &push(0, v + 1, dim)).unwrap();
+    expect_error(&mut s, wire::ERR_MALFORMED);
+    drop(s);
+    let res = server.join().unwrap();
+    assert_eq!(res.stats.updates, 1, "post-EXIT push must not re-admit");
+    assert!(res.stats.leaves >= 1);
+}
+
+/// A serve-ps run nobody joins must still honor its wall-clock limit —
+/// the transport keeps its channel sender open for the whole run, so
+/// the server loop has to observe shutdown, not channel disconnect.
+#[test]
+fn unjoined_run_respects_time_limit() {
+    let (_train, _test, theta, layout) = setup(200, 4, 5);
+    let net = NetServer::bind("127.0.0.1:0").unwrap();
+    let mut cfg = TrainConfig::new(layout);
+    cfg.tau = 0;
+    cfg.max_updates = 100;
+    cfg.eval_every_secs = 0.0;
+    cfg.time_limit_secs = Some(0.3);
+    let start = std::time::Instant::now();
+    let res = train_remote(&cfg, theta.data.clone(), net, 2, None);
+    assert!(start.elapsed() < std::time::Duration::from_secs(20));
+    assert_eq!(res.stats.updates, 0);
+}
+
+/// PUBLISH frames carry the gate-clock metadata of the aggregation
+/// that produced them: a remote observer sees live count and staleness
+/// without any side channel.
+#[test]
+fn publish_frames_carry_clock_metadata() {
+    let (train_ds, _test, theta, layout) = setup(300, 6, 9);
+    let shards = train_ds.shard(2);
+    let net = NetServer::bind("127.0.0.1:0").unwrap();
+    let addr = net.local_addr().to_string();
+    let workers: Vec<_> = shards
+        .into_iter()
+        .enumerate()
+        .map(|(k, shard)| {
+            let addr = addr.clone();
+            std::thread::spawn(move || {
+                remote_worker_loop(
+                    &addr,
+                    Some(k),
+                    WorkerSource::Memory(shard),
+                    native_factory(layout),
+                    one_thread(),
+                )
+                .unwrap()
+            })
+        })
+        .collect();
+    // A read-only observer connection: handshakes as an explicit id
+    // outside the declared worker range (ANY would work too — it is
+    // assigned above the declared range), then just reads the publish
+    // stream until SHUTDOWN.
+    let observer = {
+        let addr = addr.clone();
+        std::thread::spawn(move || {
+            let mut s = TcpStream::connect(&addr).unwrap();
+            wire::write_frame(
+                &mut s,
+                &Frame::Hello { proto: PROTO_VERSION, worker: 5 },
+            )
+            .unwrap();
+            let mut scratch = Vec::new();
+            let mut metas: Vec<(u64, PublishMeta)> = Vec::new();
+            loop {
+                match wire::read_frame(&mut s, &mut scratch).unwrap() {
+                    Frame::Welcome { .. } => {}
+                    Frame::Publish { version, meta, .. } => metas.push((version, meta)),
+                    Frame::Shutdown => return metas,
+                    f => panic!("unexpected frame {f:?}"),
+                }
+            }
+        })
+    };
+    let mut cfg = TrainConfig::new(layout);
+    cfg.tau = 1;
+    cfg.max_updates = 20;
+    cfg.eval_every_secs = 0.0;
+    cfg.time_limit_secs = Some(60.0);
+    let res = train_remote(&cfg, theta.data.clone(), net, 2, None);
+    assert_eq!(res.stats.updates, 20);
+    let metas = observer.join().unwrap();
+    for w in workers {
+        w.join().unwrap();
+    }
+    // Every aggregated version reports exactly the two pushing workers
+    // as live (the observer never pushes, so the gate never counts it)
+    // and staleness within τ.
+    assert!(!metas.is_empty(), "observer saw no publishes");
+    for (version, meta) in &metas {
+        if *version == 0 {
+            continue; // handshake snapshot of the seed θ: metadata unknown
+        }
+        assert_eq!(meta.live, 2, "v{version}: live count");
+        assert!(
+            meta.staleness <= cfg.tau,
+            "v{version}: staleness {} exceeds τ",
+            meta.staleness
+        );
+    }
+}

@@ -300,6 +300,63 @@ fn checkpoint_cadence_and_seal() {
     assert_eq!(Checkpoint::load_latest(&ckdir).unwrap().unwrap().version, 35);
 }
 
+/// Checkpoint GC (ISSUE 4 satellite): with `keep_last` set, cadence
+/// writes prune as they land and the run never retains more than K
+/// files — while the final seal always survives and still resumes.
+#[test]
+fn checkpoint_cadence_prunes_to_keep_last() {
+    let ckdir = tdir("gc");
+    let (train_ds, _test, theta, layout) = setup(400, 6, 5);
+    let mut cfg = TrainConfig::new(layout);
+    cfg.tau = 4;
+    cfg.max_updates = 35;
+    cfg.eval_every_secs = 0.0;
+    cfg.checkpoint_every = 10;
+    cfg.checkpoint_dir = Some(ckdir.clone());
+    cfg.keep_last = Some(2);
+    train(
+        &cfg,
+        theta.data.clone(),
+        train_ds.shard(2),
+        native_factory(layout),
+        None,
+    );
+    let files = Checkpoint::list_in(&ckdir).unwrap();
+    assert!(
+        (1..=2).contains(&files.len()),
+        "keep_last=2 retained {} files: {files:?}",
+        files.len()
+    );
+    let mut versions: Vec<u64> = files
+        .iter()
+        .map(|p| Checkpoint::load(p).unwrap().version)
+        .collect();
+    versions.sort_unstable();
+    // Survivors still sit on cadence boundaries (or are the seal), and
+    // the newest is always the t=35 seal a resume would want.
+    assert!(
+        versions.iter().all(|v| [10, 20, 30, 35].contains(v)),
+        "off-cadence survivors: {versions:?}"
+    );
+    assert_eq!(versions.last(), Some(&35), "seal pruned away: {versions:?}");
+    let ck = Checkpoint::load_latest(&ckdir).unwrap().unwrap();
+    assert_eq!(ck.version, 35);
+    // The survivor is a valid resume point.
+    let mut cfg2 = TrainConfig::new(layout);
+    cfg2.tau = 4;
+    cfg2.max_updates = 40;
+    cfg2.eval_every_secs = 0.0;
+    cfg2.resume_from = Some(ck);
+    let res = train(
+        &cfg2,
+        theta.data.clone(),
+        train_ds.shard(2),
+        native_factory(layout),
+        None,
+    );
+    assert_eq!(res.stats.updates, 40, "resume from the GC survivor");
+}
+
 /// A worker that joins mid-run is admitted on its first push and
 /// contributes to convergence; ids/gaps never stall the gate.
 #[test]
