@@ -23,6 +23,10 @@ use std::time::Duration;
 #[derive(Clone, Debug)]
 pub struct MethodOpts {
     pub workers: usize,
+    /// θ-slice server count for the advgp parameter server (ISSUE 5):
+    /// 1 = single server; S > 1 partitions θ across S in-process slice
+    /// server loops (τ=0 trajectories are bitwise-identical either way).
+    pub servers: usize,
     pub tau: u64,
     pub budget_secs: f64,
     /// Per-worker straggler sleeps (ms), cycled (Fig. 2).
@@ -49,6 +53,7 @@ impl Default for MethodOpts {
     fn default() -> Self {
         Self {
             workers: 4,
+            servers: 1,
             tau: 32,
             budget_secs: 10.0,
             straggle_ms: vec![],
@@ -80,6 +85,7 @@ fn profiles(opts: &MethodOpts, workers: usize) -> Vec<WorkerProfile> {
 
 fn train_config(p: &Problem, opts: &MethodOpts, workers: usize) -> TrainConfig {
     let mut cfg = TrainConfig::new(p.layout);
+    cfg.servers = opts.servers.max(1);
     cfg.tau = opts.tau;
     cfg.max_updates = u64::MAX / 2;
     cfg.time_limit_secs = Some(opts.budget_secs);

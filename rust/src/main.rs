@@ -41,16 +41,19 @@ fn main() -> Result<()> {
                  \n\
                  train:    --data <csv|flight|taxi|friedman> [--n 50000] [--m 100]\n\
                  \x20         [--method advgp|svigp|distgp-gd|distgp-lbfgs|linear]\n\
-                 \x20         [--workers 4] [--tau 32] [--budget 30] [--engine native|xla]\n\
-                 \x20         [--store dir] [--chunk-rows 4096] [--checkpoint-every 0]\n\
-                 \x20         [--checkpoint-dir dir] [--keep-last K] [--resume]\n\
-                 \x20         [--out-trace trace.csv]\n\
+                 \x20         [--workers 4] [--servers 1] [--tau 32] [--budget 30]\n\
+                 \x20         [--engine native|xla] [--store dir] [--chunk-rows 4096]\n\
+                 \x20         [--checkpoint-every 0] [--checkpoint-dir dir]\n\
+                 \x20         [--keep-last K] [--resume] [--out-trace trace.csv]\n\
                  serve-ps: --addr 127.0.0.1:7171 --workers 2 --data <...> [--n 50000]\n\
                  \x20         [--m 100] [--tau 32] [--budget 60] [--max-updates N]\n\
+                 \x20         [--servers S | --slice i/S]   (partitioned θ, ADVGPNT2)\n\
                  \x20         [--store dir] [--chunk-rows 4096] [--checkpoint-every N]\n\
                  \x20         [--checkpoint-dir dir] [--keep-last K] [--resume]\n\
-                 worker:   --connect host:port --store dir --shard K [--worker-id id]\n\
-                 \x20         [--chunk-rows n] [--max-rows n] [--threads n] [--straggle-ms n]\n\
+                 worker:   --connect host:port[,host:port…] --store dir --shard K\n\
+                 \x20         (one address per slice server of a partitioned fleet)\n\
+                 \x20         [--worker-id id] [--chunk-rows n] [--max-rows n]\n\
+                 \x20         [--threads n] [--straggle-ms n]\n\
                  datagen:  --kind flight|taxi|friedman --n 10000 --out data.csv [--seed 0]\n\
                  artifacts: [--dir artifacts]\n\
                  smoke:    [--hlo /tmp/fn_hlo.txt]"
@@ -177,7 +180,10 @@ fn checkpoint_flags(
         .or_else(|| store_dir.map(|d| d.join("checkpoints")))
         .unwrap_or_else(|| PathBuf::from("checkpoints"));
     let resume_from = if args.bool_or("resume", false) {
-        let ck = Checkpoint::load_latest(&checkpoint_dir)?.with_context(|| {
+        // `load_latest_any` handles both directory shapes: flat
+        // single-server files and sharded (topology manifest +
+        // per-slice subdirectories, reassembled bitwise).
+        let ck = Checkpoint::load_latest_any(&checkpoint_dir)?.with_context(|| {
             format!("--resume: no checkpoint in {}", checkpoint_dir.display())
         })?;
         println!(
@@ -185,6 +191,12 @@ fn checkpoint_flags(
             ck.version,
             checkpoint_dir.display()
         );
+        // Provenance across resumes, from the lineage manifest.
+        match advgp::ps::checkpoint::provenance(&checkpoint_dir) {
+            Ok(p) if !p.is_empty() => print!("lineage:\n{p}"),
+            Ok(_) => {}
+            Err(e) => eprintln!("lineage manifest unreadable: {e:#}"),
+        }
         Some(ck)
     } else {
         None
@@ -239,19 +251,27 @@ fn cmd_train(args: &Args) -> Result<()> {
     if method != "advgp" {
         anyhow::ensure!(
             args.get("store").is_none()
+                && args.get("servers").is_none()
                 && args.get("checkpoint-every").is_none()
                 && args.get("checkpoint-dir").is_none()
                 && args.get("keep-last").is_none()
                 && !args.bool_or("resume", false),
-            "--store/--checkpoint-every/--checkpoint-dir/--keep-last/--resume \
-             only apply to --method advgp (got --method {method})"
+            "--store/--servers/--checkpoint-every/--checkpoint-dir/--keep-last/\
+             --resume only apply to --method advgp (got --method {method})"
         );
     }
     let store_dir = args.get("store").map(PathBuf::from);
     let (checkpoint_every, checkpoint_dir, resume_from, keep_last) =
         checkpoint_flags(args, store_dir.as_ref())?;
+    let servers = args.usize_or("servers", 1);
+    anyhow::ensure!(
+        (1..=advgp::ps::sharded::MAX_SLICES).contains(&servers),
+        "--servers wants 1..={}, got {servers}",
+        advgp::ps::sharded::MAX_SLICES
+    );
     let opts = MethodOpts {
         workers: args.usize_or("workers", 4),
+        servers,
         tau: args.u64_or("tau", 32),
         budget_secs: args.f64_or("budget", 30.0),
         eval_every_secs: args.f64_or("eval-every", 0.5),
@@ -267,6 +287,12 @@ fn cmd_train(args: &Args) -> Result<()> {
         ..Default::default()
     };
     let p = make_problem(raw, n_test, m, 20_000, args.u64_or("seed", 0));
+    anyhow::ensure!(
+        opts.servers <= p.layout.len(),
+        "--servers {} exceeds the θ dimension {} — nothing left to slice",
+        opts.servers,
+        p.layout.len()
+    );
     println!(
         "training {method} on n={} (test {}), d={}, m={m}, θ dim {}",
         p.train.n(), p.test.n(), p.train.d(), p.layout.len()
@@ -347,24 +373,95 @@ fn cmd_serve_ps(args: &Args) -> Result<()> {
     cfg.keep_last = keep_last;
     cfg.resume_from = resume_from;
 
-    let net = advgp::ps::NetServer::bind(addr)?;
-    println!(
-        "serve-ps: ADVGPNT1 rev {} on {} — expecting {workers} worker(s), \
-         n={} d={} m={m} (θ dim {}), τ={}",
-        advgp::ps::wire::PROTO_VERSION,
-        net.local_addr(),
-        p.train.n(),
-        p.train.d(),
-        p.layout.len(),
-        cfg.tau
+    // ---- partitioned-θ modes (ISSUE 5) ----
+    if let Some(slice_arg) = args.get("slice") {
+        // One slice server in this process; the other S−1 run elsewhere
+        // (`--slice j/S` each).  Workers connect to all of them.
+        anyhow::ensure!(
+            args.get("servers").is_none(),
+            "--slice i/S and --servers S are mutually exclusive \
+             (--servers runs every slice in this process)"
+        );
+        let (slice_id, n_slices) = parse_slice_arg(slice_arg)?;
+        anyhow::ensure!(
+            n_slices <= p.layout.len(),
+            "--slice {slice_id}/{n_slices}: {n_slices} slices exceed the θ \
+             dimension {} — nothing left to slice",
+            p.layout.len()
+        );
+        let net = advgp::ps::NetServer::bind(addr)?;
+        println!(
+            "serve-ps: ADVGPNT2 rev {} on {} — θ slice {slice_id}/{n_slices}, \
+             expecting {workers} worker(s), n={} d={} m={m} (θ dim {}), τ={}",
+            advgp::ps::wire::PROTO_VERSION,
+            net.local_addr(),
+            p.train.n(),
+            p.train.d(),
+            p.layout.len(),
+            cfg.tau
+        );
+        let res = advgp::ps::train_remote_slice(
+            &cfg,
+            p.theta0.data.clone(),
+            net,
+            workers,
+            slice_id,
+            n_slices,
+        );
+        // This process never holds the full θ, so there is no final
+        // RMSE table — just the slice server's own account of the run.
+        println!(
+            "serve-ps (slice {slice_id}/{n_slices}): done — {} updates, \
+             {} pushes, {} join(s), {} leave(s), {} coordinate(s) owned",
+            res.stats.updates,
+            res.stats.pushes,
+            res.stats.joins,
+            res.stats.leaves,
+            res.theta.len()
+        );
+        return Ok(());
+    }
+
+    let servers = args.usize_or("servers", 1);
+    anyhow::ensure!(
+        (1..=advgp::ps::sharded::MAX_SLICES).contains(&servers)
+            && servers <= p.layout.len(),
+        "--servers wants 1..={} (and at most the θ dimension {}), got {servers}",
+        advgp::ps::sharded::MAX_SLICES,
+        p.layout.len()
     );
-    let res = train_remote(
-        &cfg,
-        p.theta0.data.clone(),
-        net,
-        workers,
-        Some(native_eval_factory(p.layout, p.test.clone(), None)),
-    );
+    let eval = Some(native_eval_factory(p.layout, p.test.clone(), None));
+    let res = if servers > 1 {
+        let nets = bind_slice_listeners(addr, servers)?;
+        let addrs: Vec<String> =
+            nets.iter().map(|n| n.local_addr().to_string()).collect();
+        println!(
+            "serve-ps: ADVGPNT2 rev {} — θ partitioned over {servers} slice \
+             server(s) on [{}], expecting {workers} worker(s) connecting to \
+             ALL of them (--connect {}), n={} d={} m={m} (θ dim {}), τ={}",
+            advgp::ps::wire::PROTO_VERSION,
+            addrs.join(", "),
+            addrs.join(","),
+            p.train.n(),
+            p.train.d(),
+            p.layout.len(),
+            cfg.tau
+        );
+        advgp::ps::train_remote_sharded(&cfg, p.theta0.data.clone(), nets, workers, eval)
+    } else {
+        let net = advgp::ps::NetServer::bind(addr)?;
+        println!(
+            "serve-ps: ADVGPNT rev {} on {} — expecting {workers} worker(s), \
+             n={} d={} m={m} (θ dim {}), τ={}",
+            advgp::ps::wire::PROTO_VERSION,
+            net.local_addr(),
+            p.train.n(),
+            p.train.d(),
+            p.layout.len(),
+            cfg.tau
+        );
+        train_remote(&cfg, p.theta0.data.clone(), net, workers, eval)
+    };
     println!(
         "serve-ps: done — {} updates, {} pushes, {} join(s), {} leave(s)",
         res.stats.updates, res.stats.pushes, res.stats.joins, res.stats.leaves
@@ -377,12 +474,63 @@ fn cmd_serve_ps(args: &Args) -> Result<()> {
     report_result("advgp (networked)", &p, &result, args)
 }
 
+/// Parse `--slice i/S`.
+fn parse_slice_arg(arg: &str) -> Result<(usize, usize)> {
+    let (i, s) = arg
+        .split_once('/')
+        .with_context(|| format!("--slice wants i/S (e.g. 0/2), got {arg:?}"))?;
+    let i: usize = i.parse().map_err(|_| anyhow::anyhow!("--slice: bad index {i:?}"))?;
+    let s: usize = s.parse().map_err(|_| anyhow::anyhow!("--slice: bad count {s:?}"))?;
+    anyhow::ensure!(s >= 1 && i < s, "--slice {i}/{s}: index out of range");
+    anyhow::ensure!(
+        s <= advgp::ps::sharded::MAX_SLICES,
+        "--slice {i}/{s}: at most {} slices supported",
+        advgp::ps::sharded::MAX_SLICES
+    );
+    Ok((i, s))
+}
+
+/// Bind `s` slice listeners from a base `host:port` — consecutive ports
+/// (port, port+1, …), or all-ephemeral when the base port is 0.
+fn bind_slice_listeners(addr: &str, s: usize) -> Result<Vec<advgp::ps::NetServer>> {
+    let (host, port) = addr
+        .rsplit_once(':')
+        .with_context(|| format!("--addr wants host:port, got {addr:?}"))?;
+    let port: u16 = port
+        .parse()
+        .map_err(|_| anyhow::anyhow!("--addr: bad port in {addr:?}"))?;
+    (0..s)
+        .map(|i| {
+            let p = if port == 0 {
+                0
+            } else {
+                port.checked_add(i as u16).with_context(|| {
+                    format!("--servers {s}: port range {port}+{i} overflows")
+                })?
+            };
+            advgp::ps::NetServer::bind(&format!("{host}:{p}"))
+        })
+        .collect()
+}
+
 /// `advgp worker`: join a `serve-ps` run as a remote worker.  The θ
 /// layout arrives in the WELCOME frame, so the only local inputs are
 /// the connection address and the shard to stream.
 fn cmd_worker(args: &Args) -> Result<()> {
-    use advgp::ps::{NetWorkerHandle, WorkerProfile, WorkerSource};
-    let addr = args.get("connect").context("--connect host:port required")?;
+    use advgp::ps::{
+        remote_worker_loop, NetWorkerHandle, ShardedWorkerHandle, WorkerProfile,
+        WorkerSource,
+    };
+    let connect = args.get("connect").context(
+        "--connect host:port (or a comma-separated list, one address per \
+         slice server of a partitioned fleet) required",
+    )?;
+    let addrs: Vec<String> = connect
+        .split(',')
+        .map(|a| a.trim().to_string())
+        .filter(|a| !a.is_empty())
+        .collect();
+    anyhow::ensure!(!addrs.is_empty(), "--connect: no addresses given");
     let store = args.get("store").context(
         "--store dir required (the shard store written by \
          `advgp serve-ps --store` or `advgp train --store`)",
@@ -409,28 +557,82 @@ fn cmd_worker(args: &Args) -> Result<()> {
         straggle: std::time::Duration::from_millis(args.u64_or("straggle-ms", 0)),
         ..Default::default()
     };
-    let handle = NetWorkerHandle::connect(addr, claim)?;
-    anyhow::ensure!(
-        handle.layout.d == set.d(),
-        "server layout has d={} but store {store} holds d={} features",
-        handle.layout.d,
-        set.d()
-    );
-    println!(
-        "worker {}: connected to {addr} (m={} d={} τ={}, θ v{}) — streaming \
-         shard {shard}/{} ({} rows, chunk {})",
-        handle.worker,
-        handle.layout.m,
-        handle.layout.d,
-        handle.tau,
-        handle.version(),
-        set.r(),
-        reader.n(),
-        reader.chunk_rows()
-    );
-    let factory = native_factory(handle.layout);
-    let worker_id = handle.worker;
-    handle.run(WorkerSource::Store(reader), factory, profile)?;
+    let shard_rows = reader.n();
+    let source = WorkerSource::Store(reader);
+    // Fail a bad store pairing before any gradient work — one contract,
+    // applied to whichever handle shape the address list produced.
+    let check_store = |layout: advgp::gp::ThetaLayout| -> Result<()> {
+        anyhow::ensure!(
+            layout.d == set.d(),
+            "server layout has d={} but store {store} holds d={} features",
+            layout.d,
+            set.d()
+        );
+        Ok(())
+    };
+
+    let worker_id = if addrs.len() > 1 {
+        // Partitioned fleet: one connection per slice server, θ
+        // assembled worker-side, gradients split per slice (ADVGPNT2).
+        let handle = ShardedWorkerHandle::connect(&addrs, claim)?;
+        check_store(handle.layout)?;
+        println!(
+            "worker {}: connected to {} slice server(s) [{}] (m={} d={} τ={}, \
+             θ versions {:?}) — streaming shard {shard}/{}",
+            handle.worker,
+            addrs.len(),
+            addrs.join(", "),
+            handle.layout.m,
+            handle.layout.d,
+            handle.tau,
+            handle.version_vector(),
+            set.r(),
+        );
+        let factory = native_factory(handle.layout);
+        let id = handle.worker;
+        let mut source = source;
+        // (No auto-reconnect across a half-lost fleet; rerunning this
+        // command re-admits the worker on every slice.  Library callers
+        // can use `ps::sharded_worker_loop` for the same flow.)
+        match handle.run(&mut source, factory, profile)? {
+            advgp::ps::net::RunEnd::ConnectionLost => anyhow::bail!(
+                "worker {id}: a slice-server link was lost mid-run; rerun \
+                 this command to rejoin the fleet"
+            ),
+            _ => id,
+        }
+    } else {
+        // Single server: probe once for the layout (so a bad store
+        // pairing fails before any gradient work), then run with
+        // reconnect-with-backoff through transient link losses.
+        let probe = NetWorkerHandle::connect(&addrs[0], claim)?;
+        check_store(probe.layout)?;
+        println!(
+            "worker {}: connected to {} (rev {}, m={} d={} τ={}, θ v{}) — \
+             streaming shard {shard}/{} ({} rows)",
+            probe.worker,
+            addrs[0],
+            probe.proto,
+            probe.layout.m,
+            probe.layout.d,
+            probe.tau,
+            probe.version(),
+            set.r(),
+            shard_rows,
+        );
+        let factory = native_factory(probe.layout);
+        let claim = Some(probe.worker);
+        let mut source = source;
+        // Run on the probe connection; a lost link falls back to the
+        // reconnect loop, which re-claims the same id.
+        match probe.run(&mut source, factory.clone(), profile.clone())? {
+            advgp::ps::net::RunEnd::ConnectionLost => {
+                println!("worker: link lost — reconnecting with backoff");
+                remote_worker_loop(&addrs[0], claim, source, factory, profile)?
+            }
+            _ => claim.unwrap(),
+        }
+    };
     println!("worker {worker_id}: run complete (server shut down or this worker departed)");
     Ok(())
 }

@@ -37,14 +37,28 @@
 //! ...       checksum u64 FNV-1a over everything above
 //! ```
 
+use super::sharded::{SliceSpec, Topology};
 use crate::gp::ThetaLayout;
 use crate::opt::AdaDelta;
+use crate::util::json::Json;
 use crate::util::{fnv1a64, FNV1A64_INIT};
 use anyhow::{ensure, Context, Result};
 use std::path::{Path, PathBuf};
 
 /// Magic bytes opening every checkpoint file.
 pub const CHECKPOINT_MAGIC: [u8; 8] = *b"ADVGPCK1";
+
+/// File name of the sharded-checkpoint topology manifest (ISSUE 5):
+/// written once at the root of a sharded checkpoint directory, it stamps
+/// the slice layout the per-slice `slice_*/ck_*.bin` files were frozen
+/// under, so a resume can validate the partition and reassemble θ
+/// exactly.
+pub const TOPOLOGY_MANIFEST: &str = "topology.json";
+
+/// File name of the lineage manifest: one record per completed run
+/// `(run_id, resumed_from, step, wall_time)`, appended at every seal and
+/// surviving keep-last-K GC (the GC touches only `ck_*.bin`).
+pub const LINEAGE_MANIFEST: &str = "lineage.json";
 
 /// A frozen server state — see the module docs for semantics.
 #[derive(Clone, Debug, PartialEq)]
@@ -91,6 +105,123 @@ impl Checkpoint {
         }
     }
 
+    /// Freeze a *slice* server's state (ISSUE 5): identical field
+    /// order and byte grammar to [`Checkpoint::capture`], but the θ /
+    /// accumulator vectors are `slice.len()` long instead of the full
+    /// layout dimension.  The `(m, d)` header still names the full
+    /// layout; the sharded directory's [`TOPOLOGY_MANIFEST`] is what
+    /// tells a reader the expected vector length (see
+    /// [`Checkpoint::decode_with_dim`]).
+    pub fn capture_slice(
+        layout: ThetaLayout,
+        slice: &SliceSpec,
+        version: u64,
+        theta: &[f64],
+        adadelta: &AdaDelta,
+        clocks: Vec<Option<u64>>,
+    ) -> Self {
+        assert!(slice.range.end <= layout.len(), "slice does not fit the layout");
+        assert_eq!(theta.len(), slice.len(), "θ does not match the slice");
+        let (rho, eps) = adadelta.params();
+        let (eg2, ed2) = adadelta.state();
+        assert_eq!(eg2.len(), slice.len(), "optimizer does not match the slice");
+        Self {
+            version,
+            m: layout.m,
+            d: layout.d,
+            theta: theta.to_vec(),
+            rho,
+            eps,
+            eg2: eg2.to_vec(),
+            ed2: ed2.to_vec(),
+            clocks,
+        }
+    }
+
+    /// Restrict a full checkpoint to a θ index range — the coordinator
+    /// uses this to hand each slice server its share of a resumed state
+    /// (the inverse of [`Checkpoint::assemble`]).
+    pub fn slice_of(&self, range: std::ops::Range<usize>) -> Self {
+        assert!(range.end <= self.theta.len(), "slice range outside the checkpoint");
+        Self {
+            version: self.version,
+            m: self.m,
+            d: self.d,
+            theta: self.theta[range.clone()].to_vec(),
+            rho: self.rho,
+            eps: self.eps,
+            eg2: self.eg2[range.clone()].to_vec(),
+            ed2: self.ed2[range].to_vec(),
+            clocks: self.clocks.clone(),
+        }
+    }
+
+    /// Reassemble a full checkpoint from per-slice parts (in slice-id
+    /// order).  Versions and ADADELTA hyperparameters must agree
+    /// bitwise across the parts; θ and the accumulators concatenate —
+    /// because every server-side quantity is element-wise, the result
+    /// is byte-for-byte the checkpoint a single server would have
+    /// written at the same version.  Worker clocks are taken from slice
+    /// 0 (every slice observes the same membership stream; clocks are
+    /// informational on resume).
+    pub fn assemble(topology: &Topology, parts: &[Checkpoint]) -> Result<Self> {
+        ensure!(
+            parts.len() == topology.n_slices(),
+            "assemble: {} checkpoint parts for a {}-slice topology",
+            parts.len(),
+            topology.n_slices()
+        );
+        let first = &parts[0];
+        let mut theta = Vec::with_capacity(topology.dim);
+        let mut eg2 = Vec::with_capacity(topology.dim);
+        let mut ed2 = Vec::with_capacity(topology.dim);
+        for (i, (part, r)) in parts.iter().zip(&topology.ranges).enumerate() {
+            ensure!(
+                part.version == first.version,
+                "assemble: slice {i} is at version {} but slice 0 is at {} — \
+                 slices must seal at a common version to resume",
+                part.version,
+                first.version
+            );
+            ensure!(
+                (part.m, part.d) == (first.m, first.d)
+                    && part.rho.to_bits() == first.rho.to_bits()
+                    && part.eps.to_bits() == first.eps.to_bits(),
+                "assemble: slice {i} disagrees on layout or optimizer \
+                 hyperparameters"
+            );
+            ensure!(
+                part.theta.len() == r.end - r.start,
+                "assemble: slice {i} holds {} coordinates but the topology \
+                 assigns it [{}, {})",
+                part.theta.len(),
+                r.start,
+                r.end
+            );
+            theta.extend_from_slice(&part.theta);
+            eg2.extend_from_slice(&part.eg2);
+            ed2.extend_from_slice(&part.ed2);
+        }
+        ensure!(
+            theta.len() == ThetaLayout::new(first.m, first.d).len(),
+            "assemble: topology dim {} does not match layout m={} d={}",
+            theta.len(),
+            first.m,
+            first.d
+        );
+        Ok(Self {
+            version: first.version,
+            m: first.m,
+            d: first.d,
+            theta,
+            rho: first.rho,
+            eps: first.eps,
+            eg2,
+            ed2,
+            clocks: first.clocks.clone(),
+        })
+    }
+
     /// The layout this checkpoint was taken under.
     pub fn layout(&self) -> ThetaLayout {
         ThetaLayout::new(self.m, self.d)
@@ -133,8 +264,18 @@ impl Checkpoint {
         b
     }
 
-    /// Parse and validate the `ADVGPCK1` byte layout.
+    /// Parse and validate the `ADVGPCK1` byte layout (a full-θ file:
+    /// the vector length is derived from the `(m, d)` header).
     pub fn decode(bytes: &[u8]) -> Result<Self> {
+        Self::decode_with_dim(bytes, None)
+    }
+
+    /// [`Checkpoint::decode`] with an externally-supplied vector length
+    /// — how per-slice files are read: the byte grammar is identical,
+    /// but a slice file's vectors are `slice.len()` long, a length only
+    /// the sharded directory's [`TOPOLOGY_MANIFEST`] knows.  `None`
+    /// derives the length from `(m, d)` (the full-θ case).
+    pub fn decode_with_dim(bytes: &[u8], expect_dim: Option<usize>) -> Result<Self> {
         let mut r = Cursor { b: bytes, i: 0 };
         ensure!(
             r.take(8)? == CHECKPOINT_MAGIC,
@@ -151,7 +292,18 @@ impl Checkpoint {
             (1..=1 << 20).contains(&m) && (1..=1 << 20).contains(&d),
             "checkpoint: implausible layout m={m} d={d} — corrupt header"
         );
-        let dim = ThetaLayout::new(m, d).len();
+        let full = ThetaLayout::new(m, d).len();
+        let dim = match expect_dim {
+            None => full,
+            Some(n) => {
+                ensure!(
+                    n <= full,
+                    "checkpoint: expected slice of {n} coordinates exceeds the \
+                     layout dimension {full}"
+                );
+                n
+            }
+        };
         let rho = r.f64()?;
         let eps = r.f64()?;
         let theta = r.f64_vec(dim)?;
@@ -198,6 +350,21 @@ impl Checkpoint {
         let bytes = std::fs::read(path)
             .with_context(|| format!("read checkpoint {}", path.display()))?;
         Self::decode(&bytes).with_context(|| format!("decode {}", path.display()))
+    }
+
+    /// Load a per-slice checkpoint file (vector length from the
+    /// topology, not the header — see [`Checkpoint::decode_with_dim`]).
+    pub fn load_slice(path: &Path, expect_dim: usize) -> Result<Self> {
+        let bytes = std::fs::read(path)
+            .with_context(|| format!("read slice checkpoint {}", path.display()))?;
+        Self::decode_with_dim(&bytes, Some(expect_dim))
+            .with_context(|| format!("decode {}", path.display()))
+    }
+
+    /// The version a checkpoint file name encodes (`ck_{v:012}.bin`).
+    pub fn version_of_path(path: &Path) -> Option<u64> {
+        let name = path.file_name()?.to_str()?;
+        name.strip_prefix("ck_")?.strip_suffix(".bin")?.parse().ok()
     }
 
     /// All checkpoint files in `dir`, sorted oldest → newest.
@@ -252,6 +419,311 @@ impl Checkpoint {
             None => Ok(None),
         }
     }
+
+    // ---- sharded checkpoint directories (ISSUE 5) ----
+
+    /// The subdirectory of a sharded checkpoint root that slice `i` of
+    /// `s` writes into.  Zero-padded so listings sort by slice id.
+    pub fn slice_dir(root: &Path, i: usize, s: usize) -> PathBuf {
+        root.join(format!("slice_{i:02}_of_{s:02}"))
+    }
+
+    /// Write the topology manifest at the root of a sharded checkpoint
+    /// directory (idempotent: re-writing the same topology is fine; a
+    /// *different* — or unreadable — existing manifest is a
+    /// [`TopologyConflict`] error: re-partitioning a checkpoint
+    /// directory in place would orphan the per-slice files, and
+    /// checkpointing under a manifest that cannot describe the files is
+    /// the same stale-resume hazard).  Callers distinguish the conflict
+    /// (a configuration error, loud) from plain IO failures (best-effort
+    /// durability, warn) by downcasting.
+    pub fn save_topology(root: &Path, layout: ThetaLayout, topology: &Topology) -> Result<()> {
+        ensure!(
+            topology.dim == layout.len(),
+            "topology dim {} does not match layout m={} d={}",
+            topology.dim,
+            layout.m,
+            layout.d
+        );
+        match Self::load_topology(root) {
+            Ok(Some((m, d, existing))) => {
+                if (m, d) == (layout.m, layout.d) && existing == *topology {
+                    return Ok(());
+                }
+                return Err(anyhow::Error::new(TopologyConflict(format!(
+                    "checkpoint dir {} already holds a different topology \
+                     ({} slices over m={m} d={d}) — delete it to re-partition",
+                    root.display(),
+                    existing.n_slices()
+                ))));
+            }
+            Ok(None) => {}
+            Err(e) => {
+                return Err(anyhow::Error::new(TopologyConflict(format!(
+                    "unreadable topology manifest in {}: {e:#} — refusing to \
+                     checkpoint a partition the manifest cannot describe",
+                    root.display()
+                ))));
+            }
+        }
+        std::fs::create_dir_all(root)
+            .with_context(|| format!("create checkpoint dir {}", root.display()))?;
+        let ranges = Json::Arr(
+            topology
+                .ranges
+                .iter()
+                .map(|r| Json::Arr(vec![Json::Num(r.start as f64), Json::Num(r.end as f64)]))
+                .collect(),
+        );
+        let doc = Json::obj(vec![
+            ("format", Json::Str("advgp-sharded-ck-v1".into())),
+            ("m", Json::Num(layout.m as f64)),
+            ("d", Json::Num(layout.d as f64)),
+            ("dim", Json::Num(topology.dim as f64)),
+            ("n_slices", Json::Num(topology.n_slices() as f64)),
+            ("ranges", ranges),
+        ]);
+        crate::util::atomic_write(&root.join(TOPOLOGY_MANIFEST), doc.to_string().as_bytes())
+            .with_context(|| format!("write {}/{}", root.display(), TOPOLOGY_MANIFEST))
+    }
+
+    /// Read the topology manifest of a sharded checkpoint directory:
+    /// `Ok(None)` when the directory is not sharded (no manifest).
+    pub fn load_topology(root: &Path) -> Result<Option<(usize, usize, Topology)>> {
+        let path = root.join(TOPOLOGY_MANIFEST);
+        if !path.is_file() {
+            return Ok(None);
+        }
+        let text = std::fs::read_to_string(&path)
+            .with_context(|| format!("read {}", path.display()))?;
+        let doc = Json::parse(&text)
+            .map_err(|e| anyhow::anyhow!("parse {}: {e}", path.display()))?;
+        ensure!(
+            doc.get("format").and_then(Json::as_str) == Some("advgp-sharded-ck-v1"),
+            "{}: unknown manifest format",
+            path.display()
+        );
+        let field = |k: &str| {
+            doc.get(k)
+                .and_then(Json::as_usize)
+                .with_context(|| format!("{}: missing field {k}", path.display()))
+        };
+        let (m, d, dim, n) = (field("m")?, field("d")?, field("dim")?, field("n_slices")?);
+        let pairs: Vec<(u64, u64)> = doc
+            .get("ranges")
+            .and_then(Json::as_arr)
+            .context("manifest: missing ranges")?
+            .iter()
+            .map(|r| -> Result<(u64, u64)> {
+                let a = r.as_arr().context("manifest: range is not a pair")?;
+                ensure!(a.len() == 2, "manifest: range is not a pair");
+                Ok((
+                    a[0].as_usize().context("range start")? as u64,
+                    a[1].as_usize().context("range end")? as u64,
+                ))
+            })
+            .collect::<Result<_>>()?;
+        ensure!(pairs.len() == n, "manifest: n_slices disagrees with ranges");
+        let topology = Topology::from_wire(dim, &pairs)?;
+        ensure!(
+            ThetaLayout::new(m, d).len() == dim,
+            "manifest: dim {dim} does not match layout m={m} d={d}"
+        );
+        Ok(Some((m, d, topology)))
+    }
+
+    /// Load the newest checkpoint a sharded directory can reassemble:
+    /// the highest version present in **every** slice subdirectory
+    /// (slices killed mid-save may be one cadence apart; keep-last-K
+    /// retention runs per slice, so a small window of common versions
+    /// always survives a healthy run).  Returns the assembled full-θ
+    /// checkpoint — byte-for-byte what a single server would have
+    /// sealed at that version.
+    pub fn load_latest_sharded(root: &Path) -> Result<Option<Self>> {
+        let Some((_m, _d, topology)) = Self::load_topology(root)? else {
+            return Ok(None);
+        };
+        let s = topology.n_slices();
+        // Per-slice version sets, intersected.
+        let mut common: Option<std::collections::BTreeSet<u64>> = None;
+        for i in 0..s {
+            let dir = Self::slice_dir(root, i, s);
+            let versions: std::collections::BTreeSet<u64> = Self::list_in(&dir)?
+                .iter()
+                .filter_map(|p| Self::version_of_path(p))
+                .collect();
+            common = Some(match common {
+                None => versions,
+                Some(c) => c.intersection(&versions).copied().collect(),
+            });
+        }
+        let Some(v) = common.and_then(|c| c.into_iter().next_back()) else {
+            return Ok(None);
+        };
+        let parts: Vec<Checkpoint> = (0..s)
+            .map(|i| {
+                let path = Self::slice_dir(root, i, s).join(format!("ck_{v:012}.bin"));
+                Self::load_slice(&path, topology.ranges[i].end - topology.ranges[i].start)
+            })
+            .collect::<Result<_>>()?;
+        Self::assemble(&topology, &parts).map(Some)
+    }
+
+    /// Load the newest resumable state from a checkpoint directory of
+    /// either shape: sharded (a [`TOPOLOGY_MANIFEST`] plus per-slice
+    /// subdirectories) or classic flat `ck_*.bin` files.  Because the
+    /// assembled sharded state is bitwise the single-server state, a
+    /// single-server run can resume a sharded directory and vice versa
+    /// — and a directory that has hosted **both** (a sharded run, then
+    /// an unsharded continuation writing flat files at the root, or the
+    /// reverse) resumes from whichever shape sealed the *newest*
+    /// version, never from a stale manifest's older state.
+    pub fn load_latest_any(dir: &Path) -> Result<Option<Self>> {
+        let flat = Self::load_latest(dir)?;
+        let sharded = if dir.join(TOPOLOGY_MANIFEST).is_file() {
+            Self::load_latest_sharded(dir)?
+        } else {
+            None
+        };
+        Ok(match (flat, sharded) {
+            (Some(f), Some(s)) => Some(if s.version > f.version { s } else { f }),
+            (f, s) => f.or(s),
+        })
+    }
+}
+
+/// The topology-manifest conflict error of [`Checkpoint::save_topology`]
+/// — an existing manifest names a different (or undecipherable)
+/// partition.  A configuration error, not an IO hiccup: coordinators
+/// escalate it loudly instead of the warn-and-continue treatment plain
+/// save failures get.
+#[derive(Debug)]
+pub struct TopologyConflict(pub String);
+
+impl std::fmt::Display for TopologyConflict {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        f.write_str(&self.0)
+    }
+}
+
+impl std::error::Error for TopologyConflict {}
+
+/// One completed run's entry in the [`LINEAGE_MANIFEST`]: which run
+/// wrote into this directory, what it resumed from, where it stopped,
+/// and how long it ran.  `load_latest` callers print the chain of these
+/// as provenance across resumes.
+#[derive(Clone, Debug, PartialEq)]
+pub struct LineageRecord {
+    /// Opaque per-run id (the coordinator generates one per
+    /// `TrainConfig`).
+    pub run_id: String,
+    /// Version of the checkpoint this run resumed from (`None` for a
+    /// fresh run).
+    pub resumed_from: Option<u64>,
+    /// Final published version when the run sealed.
+    pub step: u64,
+    /// Wall-clock seconds the run trained for.
+    pub wall_secs: f64,
+}
+
+impl LineageRecord {
+    fn to_json(&self) -> Json {
+        Json::obj(vec![
+            ("run_id", Json::Str(self.run_id.clone())),
+            (
+                "resumed_from",
+                self.resumed_from.map_or(Json::Null, |v| Json::Num(v as f64)),
+            ),
+            ("step", Json::Num(self.step as f64)),
+            ("wall_secs", Json::Num(self.wall_secs)),
+        ])
+    }
+
+    fn from_json(j: &Json) -> Result<Self> {
+        Ok(Self {
+            run_id: j
+                .get("run_id")
+                .and_then(Json::as_str)
+                .context("lineage record: missing run_id")?
+                .to_string(),
+            resumed_from: match j.get("resumed_from") {
+                None | Some(Json::Null) => None,
+                Some(v) => Some(v.as_usize().context("lineage record: resumed_from")? as u64),
+            },
+            step: j
+                .get("step")
+                .and_then(Json::as_usize)
+                .context("lineage record: missing step")? as u64,
+            wall_secs: j
+                .get("wall_secs")
+                .and_then(Json::as_f64)
+                .context("lineage record: missing wall_secs")?,
+        })
+    }
+}
+
+/// Read the lineage manifest of a checkpoint directory (empty when none
+/// has been written yet).
+pub fn read_lineage(dir: &Path) -> Result<Vec<LineageRecord>> {
+    let path = dir.join(LINEAGE_MANIFEST);
+    if !path.is_file() {
+        return Ok(Vec::new());
+    }
+    let text =
+        std::fs::read_to_string(&path).with_context(|| format!("read {}", path.display()))?;
+    let doc =
+        Json::parse(&text).map_err(|e| anyhow::anyhow!("parse {}: {e}", path.display()))?;
+    ensure!(
+        doc.get("format").and_then(Json::as_str) == Some("advgp-lineage-v1"),
+        "{}: unknown lineage format",
+        path.display()
+    );
+    doc.get("records")
+        .and_then(Json::as_arr)
+        .context("lineage: missing records")?
+        .iter()
+        .map(LineageRecord::from_json)
+        .collect()
+}
+
+/// Append one record to the lineage manifest (read-modify-write through
+/// [`crate::util::atomic_write`], so a crash mid-append leaves the old
+/// manifest intact).  Best-effort durability, same policy as checkpoint
+/// saves: callers log and continue on error.  An *unreadable* existing
+/// manifest (corruption, a future format revision) is an error, not an
+/// empty history — overwriting it would silently destroy every prior
+/// run's provenance.
+pub fn append_lineage(dir: &Path, record: LineageRecord) -> Result<()> {
+    std::fs::create_dir_all(dir)
+        .with_context(|| format!("create checkpoint dir {}", dir.display()))?;
+    let mut records = read_lineage(dir)
+        .context("existing lineage manifest is unreadable; refusing to overwrite it")?;
+    records.push(record);
+    let doc = Json::obj(vec![
+        ("format", Json::Str("advgp-lineage-v1".into())),
+        ("records", Json::Arr(records.iter().map(LineageRecord::to_json).collect())),
+    ]);
+    crate::util::atomic_write(&dir.join(LINEAGE_MANIFEST), doc.to_string().as_bytes())
+        .with_context(|| format!("write {}/{}", dir.display(), LINEAGE_MANIFEST))
+}
+
+/// Human-readable provenance chain for a checkpoint directory — one
+/// line per recorded run, oldest first.  Empty string when no lineage
+/// has been recorded.
+pub fn provenance(dir: &Path) -> Result<String> {
+    let records = read_lineage(dir)?;
+    let mut out = String::new();
+    for r in &records {
+        let from = match r.resumed_from {
+            Some(v) => format!("resumed from v{v}"),
+            None => "fresh".to_string(),
+        };
+        out.push_str(&format!(
+            "run {} ({from}) -> sealed v{} after {:.1}s\n",
+            r.run_id, r.step, r.wall_secs
+        ));
+    }
+    Ok(out)
 }
 
 struct Cursor<'a> {
@@ -425,5 +897,73 @@ mod tests {
         for (a, b) in da.iter().zip(&db) {
             assert_eq!(a.to_bits(), b.to_bits());
         }
+    }
+
+    /// slice_of → assemble is the identity, bitwise, for any partition;
+    /// slice files roundtrip through the byte grammar with an external
+    /// length.
+    #[test]
+    fn slice_roundtrip_assembles_bitwise() {
+        use crate::ps::sharded::Topology;
+        let full = sample(21, 4);
+        let dim = full.theta.len();
+        for s in [1, 2, 3] {
+            let topo = Topology::partition(dim, s);
+            let parts: Vec<Checkpoint> = topo
+                .ranges
+                .iter()
+                .map(|r| {
+                    let part = full.slice_of(r.clone());
+                    // Byte-grammar roundtrip with the external length.
+                    let back =
+                        Checkpoint::decode_with_dim(&part.encode(), Some(r.end - r.start))
+                            .unwrap();
+                    assert_eq!(back, part);
+                    // A full-length decode of a slice file must fail
+                    // loudly, never mis-slice.
+                    if r.end - r.start != dim {
+                        assert!(Checkpoint::decode(&part.encode()).is_err());
+                    }
+                    back
+                })
+                .collect();
+            let assembled = Checkpoint::assemble(&topo, &parts).unwrap();
+            assert_eq!(assembled.version, full.version);
+            for (a, b) in full
+                .theta
+                .iter()
+                .zip(&assembled.theta)
+                .chain(full.eg2.iter().zip(&assembled.eg2))
+                .chain(full.ed2.iter().zip(&assembled.ed2))
+            {
+                assert_eq!(a.to_bits(), b.to_bits(), "S={s}");
+            }
+        }
+        // Version skew across parts is rejected.
+        let topo = Topology::partition(dim, 2);
+        let mut parts =
+            vec![full.slice_of(topo.ranges[0].clone()), full.slice_of(topo.ranges[1].clone())];
+        parts[1].version += 1;
+        assert!(Checkpoint::assemble(&topo, &parts).is_err());
+    }
+
+    /// The topology manifest roundtrips, is idempotent, and refuses a
+    /// re-partition in place.
+    #[test]
+    fn topology_manifest_roundtrip_and_conflict() {
+        use crate::ps::sharded::Topology;
+        let dir = tdir("topology");
+        let layout = ThetaLayout::new(3, 2);
+        let topo = Topology::partition(layout.len(), 2);
+        assert!(Checkpoint::load_topology(&dir).unwrap().is_none());
+        Checkpoint::save_topology(&dir, layout, &topo).unwrap();
+        // Idempotent re-save.
+        Checkpoint::save_topology(&dir, layout, &topo).unwrap();
+        let (m, d, back) = Checkpoint::load_topology(&dir).unwrap().unwrap();
+        assert_eq!((m, d), (3, 2));
+        assert_eq!(back, topo);
+        // A different partition over the same directory is an error.
+        let other = Topology::partition(layout.len(), 3);
+        assert!(Checkpoint::save_topology(&dir, layout, &other).is_err());
     }
 }

@@ -1,16 +1,39 @@
-//! Wiring: spawn server + workers (+ late joiners) + evaluator, run to
-//! completion, collect traces.  This is the entry point every
+//! Wiring: spawn server(s) + workers (+ late joiners) + evaluator, run
+//! to completion, collect traces.  This is the entry point every
 //! experiment uses.
+//!
+//! Topologies (all sharing the same server loop, gate, and worker
+//! math):
+//!
+//! * [`train`] / [`train_sources`] / [`train_elastic`] — in-process.
+//!   With [`TrainConfig::servers`] > 1 the same calls transparently run
+//!   the **partitioned** topology (ISSUE 5): θ is tiled into `S`
+//!   contiguous slices, one independent server loop each, with an
+//!   assembler presenting workers the full-θ view and a splitter
+//!   fanning each gradient out per slice — at τ = 0 bitwise-identical
+//!   to the single-server trajectory (`rust/tests/sharded_ps.rs`).
+//! * [`train_remote`] — one θ-server over TCP (`ADVGPNT1`/`2`).
+//! * [`train_remote_sharded`] — `S` slice servers over TCP, one
+//!   listener each, workers connecting to all of them
+//!   ([`super::net::ShardedWorkerHandle`]).
+//! * [`train_remote_slice`] — exactly one slice server, for
+//!   multi-process deployments (`advgp serve-ps --slice i/S`), where
+//!   every slice runs in its own process and no single process holds
+//!   all of θ.
 
-use super::checkpoint::Checkpoint;
+use super::checkpoint::{self, Checkpoint};
 use super::messages::ToServer;
 use super::metrics::{EvalMetrics, ServerStats, TraceRow};
-use super::server::{run_server, ServerConfig};
+use super::server::{run_server, ServerConfig, ServerOutcome};
+use super::sharded::{
+    merge_outcomes, run_assembler, run_splitter, ShardedPublished, SliceSpec, Topology,
+};
 use super::worker::{run_worker, WorkerProfile, WorkerSource};
 use super::Published;
 use crate::data::Dataset;
 use crate::gp::ThetaLayout;
 use crate::grad::EngineFactory;
+use crate::log_warn;
 use crate::opt::StepSchedule;
 use crate::util::Stopwatch;
 use std::path::PathBuf;
@@ -33,6 +56,14 @@ pub struct TrainConfig {
     pub lr: f64,
     /// Proximal strength γ_t schedule.
     pub prox: StepSchedule,
+    /// θ-slice server count (ISSUE 5): 1 = the classic single server;
+    /// S > 1 partitions θ into S contiguous slices, each owned by an
+    /// independent server loop with its own gate, optimizer state, and
+    /// checkpoints.  At τ=0 the trajectory is bitwise-identical for
+    /// every S.
+    pub servers: usize,
+    /// Element-wise threads *within* each server's update step (the
+    /// paper's "highly parallelizable" prox; orthogonal to `servers`).
     pub server_shards: usize,
     pub freeze_hyper: bool,
     /// Per-worker behaviour; padded with defaults if shorter than the
@@ -48,19 +79,33 @@ pub struct TrainConfig {
     pub worker_threads: usize,
     /// Write a server-state checkpoint every N updates into
     /// `checkpoint_dir` (0 = never).  See [`crate::ps::checkpoint`].
+    /// Sharded runs write per-slice files under
+    /// `checkpoint_dir/slice_*/` plus a topology manifest at the root.
     pub checkpoint_every: u64,
     pub checkpoint_dir: Option<PathBuf>,
     /// Checkpoint retention: after every successful save keep only the
     /// newest K files in `checkpoint_dir` (`None` = keep all; clamped
-    /// to ≥ 1 so the final seal always survives).  See
-    /// [`Checkpoint::prune_keep_last`].
+    /// to ≥ 1 so the final seal always survives).  Sharded runs prune
+    /// per slice directory.  See [`Checkpoint::prune_keep_last`].
     pub keep_last: Option<usize>,
     /// Resume from a frozen server state (load it with
-    /// [`Checkpoint::load`] / [`Checkpoint::load_latest`]): the run
-    /// publishes `(ck.version, ck.θ)` before any worker starts, and θ,
-    /// the version counter, and the ADADELTA accumulators restore
-    /// bitwise.
+    /// [`Checkpoint::load`] / [`Checkpoint::load_latest_any`] — the
+    /// latter reassembles sharded directories): the run publishes
+    /// `(ck.version, ck.θ)` before any worker starts, and θ, the
+    /// version counter, and the ADADELTA accumulators restore bitwise.
+    /// Because every server-side quantity is element-wise, a sharded
+    /// run can resume a single-server checkpoint and vice versa.
     pub resume_from: Option<Checkpoint>,
+    /// Heartbeat idle window for networked transports (seconds; 0
+    /// disables): after this much read silence on a revision-2
+    /// connection the server PINGs, and a peer silent through a second
+    /// window is retired as wedged.  In-process runs ignore it.
+    pub heartbeat_secs: f64,
+    /// Opaque id stamped into the checkpoint directory's lineage
+    /// manifest ([`checkpoint::append_lineage`]) when this run seals —
+    /// generated per config; override to correlate with external
+    /// schedulers.
+    pub run_id: String,
 }
 
 impl TrainConfig {
@@ -71,6 +116,7 @@ impl TrainConfig {
             max_updates: 500,
             lr: 1.0,
             prox: StepSchedule::new(0.05, 200.0),
+            servers: 1,
             server_shards: 1,
             freeze_hyper: false,
             profiles: vec![],
@@ -81,7 +127,41 @@ impl TrainConfig {
             checkpoint_dir: None,
             keep_last: None,
             resume_from: None,
+            heartbeat_secs: 30.0,
+            run_id: gen_run_id(),
         }
+    }
+}
+
+/// A per-process, per-instant run id for the lineage manifest — opaque,
+/// collision-resistant enough for provenance display (FNV-1a over the
+/// wall clock and pid).
+fn gen_run_id() -> String {
+    let nanos = std::time::SystemTime::now()
+        .duration_since(std::time::UNIX_EPOCH)
+        .map(|d| d.as_nanos())
+        .unwrap_or(0);
+    let h = crate::util::fnv1a64(crate::util::FNV1A64_INIT, &nanos.to_le_bytes());
+    let h = crate::util::fnv1a64(h, &std::process::id().to_le_bytes());
+    format!("{h:016x}")
+}
+
+/// Append this run's lineage record to the checkpoint directory —
+/// best-effort, same durability policy as checkpoint saves (a failed
+/// append warns and never fails the run).
+fn record_lineage(cfg: &TrainConfig, step: u64, wall_secs: f64) {
+    if cfg.checkpoint_every == 0 {
+        return;
+    }
+    let Some(dir) = &cfg.checkpoint_dir else { return };
+    let rec = checkpoint::LineageRecord {
+        run_id: cfg.run_id.clone(),
+        resumed_from: cfg.resume_from.as_ref().map(|c| c.version),
+        step,
+        wall_secs,
+    };
+    if let Err(e) = checkpoint::append_lineage(dir, rec) {
+        log_warn!("lineage manifest append in {} failed: {e:#}", dir.display());
     }
 }
 
@@ -131,7 +211,9 @@ pub fn train_sources(
 /// θ₀).  This lets a serving stack — e.g. a `serve::BatchServer`
 /// syncing its `PosteriorCache` — follow the live θ *while training
 /// runs* (see `examples/serve_latency.rs`); `train` is the
-/// convenience wrapper that creates the handle itself.
+/// convenience wrapper that creates the handle itself.  In a sharded
+/// run the handle is the assembled view, so the serving stack is
+/// equally topology-blind.
 pub fn train_published(
     cfg: &TrainConfig,
     published: std::sync::Arc<Published>,
@@ -160,10 +242,21 @@ fn check_resume_layout(ck: &Checkpoint, layout: &ThetaLayout) {
     );
 }
 
-/// Lower a [`TrainConfig`] into the server loop's own config.
-fn server_config(cfg: &TrainConfig, workers: usize, expected_joiners: usize) -> ServerConfig {
+/// Lower a [`TrainConfig`] into one slice server's config.  The full
+/// slice with the root checkpoint dir for single-server runs; a proper
+/// sub-range plus its `slice_*/` checkpoint directory (and its share of
+/// a resumed state) for sharded runs.
+fn slice_server_config(
+    cfg: &TrainConfig,
+    workers: usize,
+    expected_joiners: usize,
+    slice: SliceSpec,
+    checkpoint_dir: Option<PathBuf>,
+    resume: Option<Checkpoint>,
+) -> ServerConfig {
     ServerConfig {
         layout: cfg.layout,
+        slice,
         workers,
         tau: cfg.tau,
         max_updates: cfg.max_updates,
@@ -172,11 +265,99 @@ fn server_config(cfg: &TrainConfig, workers: usize, expected_joiners: usize) -> 
         server_shards: cfg.server_shards,
         freeze_hyper: cfg.freeze_hyper,
         checkpoint_every: cfg.checkpoint_every,
-        checkpoint_dir: cfg.checkpoint_dir.clone(),
+        checkpoint_dir,
         keep_last: cfg.keep_last,
-        resume: cfg.resume_from.clone(),
+        resume,
         expected_joiners,
     }
+}
+
+/// The single-server lowering (full slice, root checkpoint dir).
+fn server_config(cfg: &TrainConfig, workers: usize, expected_joiners: usize) -> ServerConfig {
+    slice_server_config(
+        cfg,
+        workers,
+        expected_joiners,
+        SliceSpec::full(cfg.layout.len()),
+        cfg.checkpoint_dir.clone(),
+        cfg.resume_from.clone(),
+    )
+}
+
+/// Write (or validate) the sharded run's topology manifest.  A
+/// [`checkpoint::TopologyConflict`] (different or unreadable existing
+/// manifest) is a configuration error and loud — silently checkpointing
+/// a different partition into per-slice directories the old manifest
+/// does not name would make the next resume restore stale state.  A
+/// plain IO failure follows the checkpoint durability policy (warn,
+/// training outlives it).
+fn ensure_topology_manifest(root: &std::path::Path, layout: ThetaLayout, topo: &Topology) {
+    if let Err(e) = Checkpoint::save_topology(root, layout, topo) {
+        if e.downcast_ref::<checkpoint::TopologyConflict>().is_some() {
+            panic!("{e:#} (delete the directory or match --servers)");
+        }
+        log_warn!(
+            "topology manifest write in {} failed: {e:#} — sharded resume \
+             from this directory will not work",
+            root.display()
+        );
+    }
+}
+
+/// Prepare a sharded run's checkpoint layout: the topology manifest at
+/// the root (validated against any existing manifest — re-partitioning
+/// a directory in place is an error) and the per-slice directory for
+/// each server.  Also re-slices a resumed checkpoint.
+fn sharded_checkpoint_dirs(
+    cfg: &TrainConfig,
+    topo: &Topology,
+) -> Vec<(Option<PathBuf>, Option<Checkpoint>)> {
+    let root = cfg.checkpoint_dir.as_ref();
+    if cfg.checkpoint_every > 0 {
+        if let Some(root) = root {
+            ensure_topology_manifest(root, cfg.layout, topo);
+        }
+    }
+    (0..topo.n_slices())
+        .map(|i| {
+            let dir = root.map(|r| Checkpoint::slice_dir(r, i, topo.n_slices()));
+            let resume = cfg
+                .resume_from
+                .as_ref()
+                .map(|ck| ck.slice_of(topo.ranges[i].clone()));
+            (dir, resume)
+        })
+        .collect()
+}
+
+/// Resolve per-worker thread budgets.  Explicit budgets (profile or
+/// `cfg.worker_threads`) are honored as-is; the remaining pool capacity
+/// is split across the auto workers with the remainder distributed
+/// one-by-one, so no core is left permanently idle by integer
+/// truncation and explicit budgets aren't double-counted.  (Joiners
+/// keep their own profile budgets: honored as-is, min 1.)
+fn resolve_profiles(cfg: &TrainConfig, workers: usize) -> Vec<WorkerProfile> {
+    let mut profiles: Vec<WorkerProfile> = (0..workers)
+        .map(|k| cfg.profiles.get(k).cloned().unwrap_or_default())
+        .collect();
+    if cfg.worker_threads > 0 {
+        for p in profiles.iter_mut().filter(|p| p.threads == 0) {
+            p.threads = cfg.worker_threads;
+        }
+    }
+    let explicit: usize = profiles.iter().map(|p| p.threads).sum();
+    let auto_count = profiles.iter().filter(|p| p.threads == 0).count();
+    if auto_count > 0 {
+        let avail = crate::util::pool::threads()
+            .saturating_sub(explicit)
+            .max(auto_count); // every worker gets at least one lane
+        let base = avail / auto_count;
+        let extra = avail % auto_count;
+        for (i, p) in profiles.iter_mut().filter(|p| p.threads == 0).enumerate() {
+            p.threads = (base + usize::from(i < extra)).max(1);
+        }
+    }
+    profiles
 }
 
 /// Spawn the evaluator thread: one trace row whenever the published
@@ -215,19 +396,25 @@ fn spawn_evaluator<'scope>(
     })
 }
 
-/// Spawn the wall-clock watchdog: shuts the run down past `limit`.
+/// Spawn the wall-clock watchdog: past `limit` it shuts down **every**
+/// handle in `all` (in a sharded run, each slice plus the assembled
+/// view — one stuck slice must not outlive the limit).  `watch` (the
+/// assembled/only view) is observed for the early-exit path.
 fn spawn_watchdog<'scope>(
     scope: &'scope std::thread::Scope<'scope, '_>,
-    published: std::sync::Arc<Published>,
+    watch: std::sync::Arc<Published>,
+    all: Vec<std::sync::Arc<Published>>,
     clock: Stopwatch,
     limit: f64,
 ) -> std::thread::ScopedJoinHandle<'scope, ()> {
     scope.spawn(move || loop {
-        if published.snapshot().2 {
+        if watch.snapshot().2 {
             return;
         }
         if clock.secs() > limit {
-            published.shutdown();
+            for p in &all {
+                p.shutdown();
+            }
             return;
         }
         std::thread::sleep(Duration::from_millis(20));
@@ -236,7 +423,10 @@ fn spawn_watchdog<'scope>(
 
 /// The full-control entry point: caller-owned [`Published`] handle,
 /// arbitrary worker sources, and late [`Joiner`]s.  Every other train
-/// function is a thin wrapper over this.
+/// function is a thin wrapper over this.  With
+/// [`TrainConfig::servers`] > 1 the run transparently uses the
+/// partitioned topology (the caller's handle becomes the assembled
+/// view).
 pub fn train_elastic(
     cfg: &TrainConfig,
     published: std::sync::Arc<Published>,
@@ -245,6 +435,9 @@ pub fn train_elastic(
     factory: EngineFactory,
     eval_factory: Option<EvalFactory>,
 ) -> RunResult {
+    if cfg.servers > 1 {
+        return train_elastic_sharded(cfg, published, sources, joiners, factory, eval_factory);
+    }
     let clock = Stopwatch::start();
     let workers = sources.len();
     assert!(workers >= 1, "need at least one initial worker source");
@@ -257,33 +450,7 @@ pub fn train_elastic(
     }
     let (tx, rx) = mpsc::channel::<ToServer>();
     let server_cfg = server_config(cfg, workers, joiners.len());
-
-    // Per-worker thread budgets.  Explicit budgets (profile or
-    // cfg.worker_threads) are honored as-is; the remaining pool
-    // capacity is split across the auto workers with the remainder
-    // distributed one-by-one, so no core is left permanently idle by
-    // integer truncation and explicit budgets aren't double-counted.
-    // (Joiners keep their own profile budgets: honored as-is, min 1.)
-    let mut profiles: Vec<WorkerProfile> = (0..workers)
-        .map(|k| cfg.profiles.get(k).cloned().unwrap_or_default())
-        .collect();
-    if cfg.worker_threads > 0 {
-        for p in profiles.iter_mut().filter(|p| p.threads == 0) {
-            p.threads = cfg.worker_threads;
-        }
-    }
-    let explicit: usize = profiles.iter().map(|p| p.threads).sum();
-    let auto_count = profiles.iter().filter(|p| p.threads == 0).count();
-    if auto_count > 0 {
-        let avail = crate::util::pool::threads()
-            .saturating_sub(explicit)
-            .max(auto_count); // every worker gets at least one lane
-        let base = avail / auto_count;
-        let extra = avail % auto_count;
-        for (i, p) in profiles.iter_mut().filter(|p| p.threads == 0).enumerate() {
-            p.threads = (base + usize::from(i < extra)).max(1);
-        }
-    }
+    let profiles = resolve_profiles(cfg, workers);
 
     std::thread::scope(|scope| {
         // ---- initial workers ----
@@ -292,7 +459,8 @@ pub fn train_elastic(
             let published = published.clone();
             let tx = tx.clone();
             scope.spawn(move || {
-                run_worker(k, source, factory, published, tx, profile)
+                let mut source = source;
+                run_worker(k, &mut source, factory, published, tx, profile)
             });
         }
         // ---- late joiners (ids continue after the initial workers) ----
@@ -308,7 +476,8 @@ pub fn train_elastic(
                 if published.shutdown_or_timeout(joiner.after) {
                     return; // run already over; never joined
                 }
-                run_worker(k, joiner.source, factory, published, tx, joiner.profile)
+                let mut source = joiner.source;
+                run_worker(k, &mut source, factory, published, tx, joiner.profile)
             });
         }
         drop(tx); // server's recv() unblocks when all workers exit
@@ -319,9 +488,9 @@ pub fn train_elastic(
         });
 
         // ---- watchdog for the wall-clock limit ----
-        let watchdog = cfg
-            .time_limit_secs
-            .map(|limit| spawn_watchdog(scope, published.clone(), clock, limit));
+        let watchdog = cfg.time_limit_secs.map(|limit| {
+            spawn_watchdog(scope, published.clone(), vec![published.clone()], clock, limit)
+        });
 
         // ---- server (on this thread) ----
         let outcome = run_server(&server_cfg, published.clone(), rx);
@@ -332,6 +501,7 @@ pub fn train_elastic(
         if let Some(w) = watchdog {
             let _ = w.join();
         }
+        record_lineage(cfg, outcome.stats.updates, clock.secs());
         RunResult {
             theta: outcome.theta,
             trace,
@@ -341,13 +511,145 @@ pub fn train_elastic(
     })
 }
 
-/// Serve a training run over the `ADVGPNT1` networked transport
-/// (ISSUE 4): the server loop runs here, workers connect over TCP
-/// (`advgp worker --connect`, [`super::net::remote_worker_loop`], or
-/// any codec-compatible client) and stream pushes in while θ snapshots
-/// fan out.  `workers` is the *expected* initial worker count — it
-/// sizes the [`super::DelayGate`] exactly as the in-process paths do,
-/// so update 0 waits for one gradient from each of the `workers` ids
+/// The in-process partitioned topology (ISSUE 5): `cfg.servers` slice
+/// server loops, each owning a contiguous θ range with its own
+/// [`super::DelayGate`], optimizer state, and per-slice checkpoints;
+/// one assembler presenting workers/evaluator/watchdog the full-θ view
+/// (the caller's `published` handle); one splitter fanning each worker
+/// gradient out per slice.  Worker math, elasticity, and the τ=0
+/// bitwise guarantee are unchanged from the single-server path.
+fn train_elastic_sharded(
+    cfg: &TrainConfig,
+    published: std::sync::Arc<Published>,
+    sources: Vec<WorkerSource>,
+    joiners: Vec<Joiner>,
+    factory: EngineFactory,
+    eval_factory: Option<EvalFactory>,
+) -> RunResult {
+    let clock = Stopwatch::start();
+    let workers = sources.len();
+    assert!(workers >= 1, "need at least one initial worker source");
+    let topo = Topology::partition(cfg.layout.len(), cfg.servers);
+    if let Some(ck) = &cfg.resume_from {
+        check_resume_layout(ck, &cfg.layout);
+        published.publish(ck.version, ck.theta.clone());
+    }
+    // Seed the slice views from the (possibly resumed) assembled state.
+    let theta_now = published.snapshot().1;
+    let sharded = ShardedPublished::new(topo.clone(), &theta_now, published.clone());
+    if let Some(ck) = &cfg.resume_from {
+        sharded.seed(ck.version, &ck.theta);
+    }
+    let ck_dirs = sharded_checkpoint_dirs(cfg, &topo);
+    let expected_joiners = joiners.len();
+    let profiles = resolve_profiles(cfg, workers);
+
+    let (tx_all, rx_all) = mpsc::channel::<ToServer>();
+    let mut slice_txs = Vec::with_capacity(topo.n_slices());
+    let mut slice_rxs = Vec::with_capacity(topo.n_slices());
+    for _ in 0..topo.n_slices() {
+        let (t, r) = mpsc::channel::<ToServer>();
+        slice_txs.push(t);
+        slice_rxs.push(r);
+    }
+
+    std::thread::scope(|scope| {
+        // ---- splitter: merged worker channel → per-slice channels ----
+        {
+            let topo = topo.clone();
+            scope.spawn(move || run_splitter(&topo, rx_all, slice_txs));
+        }
+        // ---- assembler: slice views → the caller's assembled view ----
+        {
+            let sharded_ref = &sharded;
+            scope.spawn(move || run_assembler(sharded_ref));
+        }
+        // ---- workers (on the assembled view, splitter channel) ----
+        for ((k, source), profile) in sources.into_iter().enumerate().zip(profiles) {
+            let factory = factory.clone();
+            let published = published.clone();
+            let tx = tx_all.clone();
+            scope.spawn(move || {
+                let mut source = source;
+                run_worker(k, &mut source, factory, published, tx, profile)
+            });
+        }
+        for (j, joiner) in joiners.into_iter().enumerate() {
+            let k = workers + j;
+            let factory = factory.clone();
+            let published = published.clone();
+            let tx = tx_all.clone();
+            scope.spawn(move || {
+                if published.shutdown_or_timeout(joiner.after) {
+                    return;
+                }
+                let mut source = joiner.source;
+                run_worker(k, &mut source, factory, published, tx, joiner.profile)
+            });
+        }
+        drop(tx_all); // splitter (and so every slice server) unblocks when workers exit
+
+        let trace_handle = eval_factory.map(|ef| {
+            spawn_evaluator(scope, published.clone(), clock, cfg.eval_every_secs, ef)
+        });
+        let watchdog = cfg.time_limit_secs.map(|limit| {
+            let mut all: Vec<std::sync::Arc<Published>> = sharded.slices.clone();
+            all.push(published.clone());
+            spawn_watchdog(scope, published.clone(), all, clock, limit)
+        });
+
+        // ---- slice servers (scoped threads; outcomes joined below) ----
+        let server_handles: Vec<_> = slice_rxs
+            .into_iter()
+            .enumerate()
+            .zip(ck_dirs)
+            .map(|((i, rx), (dir, resume))| {
+                let scfg = slice_server_config(
+                    cfg,
+                    workers,
+                    expected_joiners,
+                    topo.slice(i),
+                    dir,
+                    resume,
+                );
+                let p = sharded.slices[i].clone();
+                scope.spawn(move || run_server(&scfg, p, rx))
+            })
+            .collect();
+        let outcomes: Vec<ServerOutcome> = server_handles
+            .into_iter()
+            .map(|h| h.join().expect("slice server panicked"))
+            .collect();
+        sharded.shutdown_all();
+        let trace = trace_handle
+            .map(|h| h.join().expect("evaluator panicked"))
+            .unwrap_or_default();
+        if let Some(w) = watchdog {
+            let _ = w.join();
+        }
+        let merged = merge_outcomes(&topo, outcomes);
+        record_lineage(cfg, merged.stats.updates, clock.secs());
+        RunResult {
+            theta: merged.theta,
+            trace,
+            stats: merged.stats,
+            wall_secs: clock.secs(),
+        }
+    })
+}
+
+/// The networked transport's heartbeat window from the config.
+fn heartbeat_of(cfg: &TrainConfig) -> Option<Duration> {
+    (cfg.heartbeat_secs > 0.0).then(|| Duration::from_secs_f64(cfg.heartbeat_secs))
+}
+
+/// Serve a training run over the networked transport (ISSUE 4): the
+/// server loop runs here, workers connect over TCP (`advgp worker
+/// --connect`, [`super::net::remote_worker_loop`], or any
+/// codec-compatible client) and stream pushes in while θ snapshots fan
+/// out.  `workers` is the *expected* initial worker count — it sizes
+/// the [`super::DelayGate`] exactly as the in-process paths do, so
+/// update 0 waits for one gradient from each of the `workers` ids
 /// `0..workers`; connections claiming ids beyond that are admitted as
 /// elastic joiners on their first push.
 ///
@@ -386,11 +688,13 @@ pub fn train_remote(
         // connection are detached inside) ----
         {
             let published = published.clone();
-            let layout = cfg.layout;
-            let tau = cfg.tau;
-            scope.spawn(move || {
-                super::net::accept_loop(net, published, tx, layout, tau, workers)
-            });
+            let opts = super::net::NetServeOpts::single(
+                cfg.layout,
+                cfg.tau,
+                workers,
+                heartbeat_of(cfg),
+            );
+            scope.spawn(move || super::net::accept_loop(net, published, tx, opts));
         }
         // (`tx` moved into the accept loop; per-connection readers hold
         // clones.  The server loop therefore ends via its membership /
@@ -399,9 +703,9 @@ pub fn train_remote(
         let trace_handle = eval_factory.map(|ef| {
             spawn_evaluator(scope, published.clone(), clock, cfg.eval_every_secs, ef)
         });
-        let watchdog = cfg
-            .time_limit_secs
-            .map(|limit| spawn_watchdog(scope, published.clone(), clock, limit));
+        let watchdog = cfg.time_limit_secs.map(|limit| {
+            spawn_watchdog(scope, published.clone(), vec![published.clone()], clock, limit)
+        });
 
         // ---- server (on this thread) ----
         let outcome = run_server(&server_cfg, published.clone(), rx);
@@ -414,9 +718,182 @@ pub fn train_remote(
         if let Some(w) = watchdog {
             let _ = w.join();
         }
+        record_lineage(cfg, outcome.stats.updates, clock.secs());
         RunResult {
             theta: outcome.theta,
             trace,
+            stats: outcome.stats,
+            wall_secs: clock.secs(),
+        }
+    })
+}
+
+/// Serve a **partitioned** training run over TCP (ISSUE 5): one slice
+/// server per listener in `nets` (the partition is
+/// `Topology::partition(dim, nets.len())`, in listener order), all in
+/// this process.  Workers connect to *every* listener
+/// ([`super::net::sharded_worker_loop`] / `advgp worker --connect
+/// a0,a1,…`); the evaluator and watchdog run on the assembled view.
+/// Checkpoints are per-slice under `checkpoint_dir/slice_*/` with a
+/// topology manifest at the root; [`Checkpoint::load_latest_any`]
+/// reassembles them for `resume_from`.
+pub fn train_remote_sharded(
+    cfg: &TrainConfig,
+    theta0: Vec<f64>,
+    nets: Vec<super::net::NetServer>,
+    workers: usize,
+    eval_factory: Option<EvalFactory>,
+) -> RunResult {
+    let clock = Stopwatch::start();
+    assert!(workers >= 1, "need at least one expected worker");
+    assert!(!nets.is_empty(), "need at least one listener");
+    assert_eq!(theta0.len(), cfg.layout.len(), "θ₀ does not match the layout");
+    let topo = Topology::partition(cfg.layout.len(), nets.len());
+    let published = Published::new(theta0.clone());
+    if let Some(ck) = &cfg.resume_from {
+        check_resume_layout(ck, &cfg.layout);
+        published.publish(ck.version, ck.theta.clone());
+    }
+    let sharded = ShardedPublished::new(topo.clone(), &theta0, published.clone());
+    if let Some(ck) = &cfg.resume_from {
+        sharded.seed(ck.version, &ck.theta);
+    }
+    let ck_dirs = sharded_checkpoint_dirs(cfg, &topo);
+    let addrs: Vec<std::net::SocketAddr> = nets.iter().map(|n| n.local_addr()).collect();
+    let heartbeat = heartbeat_of(cfg);
+
+    std::thread::scope(|scope| {
+        // ---- one accept loop + server loop per slice ----
+        let mut server_handles = Vec::with_capacity(topo.n_slices());
+        for ((i, net), (dir, resume)) in nets.into_iter().enumerate().zip(ck_dirs) {
+            let (tx, rx) = mpsc::channel::<ToServer>();
+            let slice_pub = sharded.slices[i].clone();
+            {
+                let slice_pub = slice_pub.clone();
+                let opts = super::net::NetServeOpts {
+                    layout: cfg.layout,
+                    tau: cfg.tau,
+                    declared_workers: workers,
+                    slice: topo.slice(i),
+                    topology: topo.clone(),
+                    heartbeat,
+                };
+                scope.spawn(move || super::net::accept_loop(net, slice_pub, tx, opts));
+            }
+            let scfg = slice_server_config(cfg, workers, 0, topo.slice(i), dir, resume);
+            server_handles.push(scope.spawn(move || run_server(&scfg, slice_pub, rx)));
+        }
+        // ---- assembler for the evaluator/watchdog view ----
+        {
+            let sharded_ref = &sharded;
+            scope.spawn(move || run_assembler(sharded_ref));
+        }
+        let trace_handle = eval_factory.map(|ef| {
+            spawn_evaluator(scope, published.clone(), clock, cfg.eval_every_secs, ef)
+        });
+        let watchdog = cfg.time_limit_secs.map(|limit| {
+            let mut all: Vec<std::sync::Arc<Published>> = sharded.slices.clone();
+            all.push(published.clone());
+            spawn_watchdog(scope, published.clone(), all, clock, limit)
+        });
+
+        let outcomes: Vec<ServerOutcome> = server_handles
+            .into_iter()
+            .map(|h| h.join().expect("slice server panicked"))
+            .collect();
+        sharded.shutdown_all();
+        for a in &addrs {
+            super::net::wake(*a);
+        }
+        let trace = trace_handle
+            .map(|h| h.join().expect("evaluator panicked"))
+            .unwrap_or_default();
+        if let Some(w) = watchdog {
+            let _ = w.join();
+        }
+        let merged = merge_outcomes(&topo, outcomes);
+        record_lineage(cfg, merged.stats.updates, clock.secs());
+        RunResult {
+            theta: merged.theta,
+            trace,
+            stats: merged.stats,
+            wall_secs: clock.secs(),
+        }
+    })
+}
+
+/// Serve exactly **one** θ slice of a partitioned run (ISSUE 5, the
+/// multi-process deployment: `advgp serve-ps --slice i/S` — every slice
+/// in its own process, no process holding all of θ).  `theta0` is the
+/// *full* seed vector (every slice process derives its share from the
+/// shared seed); `cfg.resume_from`, if set, is likewise the assembled
+/// checkpoint ([`Checkpoint::load_latest_any`]) and is re-sliced here.
+///
+/// No evaluator runs — this process never sees the other slices, so
+/// there is no full θ to evaluate; drive evaluation from a worker-side
+/// observer or a single-process [`train_remote_sharded`] instead.  The
+/// returned `theta` is this slice's final fragment.  Lineage is
+/// recorded by slice 0 only (one writer per manifest).
+pub fn train_remote_slice(
+    cfg: &TrainConfig,
+    theta0: Vec<f64>,
+    net: super::net::NetServer,
+    workers: usize,
+    slice_id: usize,
+    n_slices: usize,
+) -> RunResult {
+    let clock = Stopwatch::start();
+    assert!(workers >= 1, "need at least one expected worker");
+    assert_eq!(theta0.len(), cfg.layout.len(), "θ₀ does not match the layout");
+    assert!(slice_id < n_slices, "--slice {slice_id}/{n_slices} out of range");
+    let topo = Topology::partition(cfg.layout.len(), n_slices);
+    let slice = topo.slice(slice_id);
+    let published = Published::new(theta0[slice.range.clone()].to_vec());
+    let resume = cfg.resume_from.as_ref().map(|ck| {
+        check_resume_layout(ck, &cfg.layout);
+        ck.slice_of(slice.range.clone())
+    });
+    if let Some(ck) = &resume {
+        published.publish(ck.version, ck.theta.clone());
+    }
+    let ck_dir = cfg.checkpoint_dir.as_ref().map(|root| {
+        if cfg.checkpoint_every > 0 {
+            ensure_topology_manifest(root, cfg.layout, &topo);
+        }
+        Checkpoint::slice_dir(root, slice_id, n_slices)
+    });
+    let (tx, rx) = mpsc::channel::<ToServer>();
+    let scfg = slice_server_config(cfg, workers, 0, slice.clone(), ck_dir, resume);
+    let addr = net.local_addr();
+
+    std::thread::scope(|scope| {
+        {
+            let published = published.clone();
+            let opts = super::net::NetServeOpts {
+                layout: cfg.layout,
+                tau: cfg.tau,
+                declared_workers: workers,
+                slice: slice.clone(),
+                topology: topo.clone(),
+                heartbeat: heartbeat_of(cfg),
+            };
+            scope.spawn(move || super::net::accept_loop(net, published, tx, opts));
+        }
+        let watchdog = cfg.time_limit_secs.map(|limit| {
+            spawn_watchdog(scope, published.clone(), vec![published.clone()], clock, limit)
+        });
+        let outcome = run_server(&scfg, published.clone(), rx);
+        published.shutdown();
+        super::net::wake(addr);
+        if let Some(w) = watchdog {
+            let _ = w.join();
+        }
+        if slice_id == 0 {
+            record_lineage(cfg, outcome.stats.updates, clock.secs());
+        }
+        RunResult {
+            theta: outcome.theta,
+            trace: Vec::new(),
             stats: outcome.stats,
             wall_secs: clock.secs(),
         }

@@ -38,6 +38,20 @@
 //! frames over TCP ([`wire`] is the codec, [`net`] the pumps — see
 //! `docs/PROTOCOL.md`), and [`coordinator::train_remote`] /
 //! [`net::remote_worker_loop`] wire the two halves up.
+//!
+//! Partitioning (ISSUE 5): θ itself can be sharded into `S` disjoint
+//! contiguous slices, each owned by an independent server loop — the
+//! element-wise prox/ADADELTA make slice servers need no cross-slice
+//! communication at all.  [`sharded`] holds the partition map and the
+//! assembler/splitter pumps; over the wire the `ADVGPNT2` revision
+//! (negotiated per connection; revision-1 peers keep working against a
+//! single-slice server) carries `(slice_id, range)` in
+//! WELCOME2/PUBLISH2/PUSH2 frames.  `TrainConfig::servers` switches the
+//! in-process coordinator; [`coordinator::train_remote_sharded`] /
+//! [`net::sharded_worker_loop`] are the networked pair, and
+//! `advgp serve-ps --servers S` / `--slice i/S` the CLI.  At τ = 0 a
+//! sharded run reproduces the single-server θ trajectory **bitwise**
+//! (`rust/tests/sharded_ps.rs`).
 
 pub mod checkpoint;
 pub mod coordinator;
@@ -46,18 +60,23 @@ pub mod messages;
 pub mod metrics;
 pub mod net;
 pub mod server;
+pub mod sharded;
 pub mod wire;
 pub mod worker;
 
 pub use checkpoint::Checkpoint;
 pub use coordinator::{
-    train, train_elastic, train_published, train_remote, train_sources, Joiner,
-    RunResult, TrainConfig,
+    train, train_elastic, train_published, train_remote, train_remote_sharded,
+    train_remote_slice, train_sources, Joiner, RunResult, TrainConfig,
 };
 pub use delay::DelayGate;
 pub use messages::PublishMeta;
 pub use metrics::{EvalMetrics, TraceRow};
-pub use net::{remote_worker_loop, NetServer, NetWorkerHandle};
+pub use net::{
+    remote_worker_loop, sharded_worker_loop, NetServer, NetWorkerHandle,
+    ReconnectPolicy, ShardedWorkerHandle,
+};
+pub use sharded::{ShardedPublished, SliceSpec, Topology};
 pub use worker::{WorkerProfile, WorkerSource};
 
 use std::sync::{Arc, Condvar, Mutex};

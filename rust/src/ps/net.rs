@@ -1,6 +1,6 @@
-//! Networked parameter-server transport (ISSUE 4): the TCP half that
-//! turns the in-process `mpsc` + condvar topology into a distributed
-//! one, speaking the `ADVGPNT1` protocol ([`super::wire`] is the codec;
+//! Networked parameter-server transport: the TCP half that turns the
+//! in-process `mpsc` + condvar topology into a distributed one,
+//! speaking `ADVGPNT1`/`ADVGPNT2` ([`super::wire`] is the codec;
 //! `docs/PROTOCOL.md` the normative spec).
 //!
 //! Design: the server loop ([`super::server::run_server`]), the
@@ -9,31 +9,44 @@
 //! module only pumps bytes:
 //!
 //! * **Server side** — [`NetServer`] + the accept loop: one *reader*
-//!   thread per connection decodes PUSH/EXIT frames into the same
+//!   thread per connection decodes PUSH/PUSH2/EXIT frames into the same
 //!   `Sender<ToServer>` the in-process workers would use, and one
 //!   *publisher* thread per connection follows
-//!   [`super::Published::wait_newer_meta`] and writes PUBLISH frames.
+//!   [`super::Published::wait_newer_meta`] and writes PUBLISH(2) frames
+//!   drawn from a shared per-version [`PublishFrameCache`] — θ is
+//!   encoded **once per version**, however many connections fan it out.
 //!   Backpressure is per-connection: a slow link blocks only its own
 //!   publisher, which then skips straight to the newest version (the
 //!   same catch-up semantics an in-process worker gets from the
 //!   condvar).  A connection that dies without an EXIT frame has its
-//!   clock retired via a synthesized `WorkerExit`, so a killed remote
-//!   worker (any death the TCP stack can observe — process kill, RST,
-//!   FIN) cannot stall the bounded-staleness gate.  A *silently* wedged
-//!   peer — powered off mid-run, no FIN ever — is the documented gap:
-//!   like a hung in-process worker it stalls a bounded-τ gate until the
-//!   wall-clock watchdog (see ROADMAP "WAN hardening" for the
-//!   heartbeat plan).
+//!   clock retired via a synthesized `WorkerExit`; on revision-2
+//!   connections a **heartbeat** closes the remaining gap: after
+//!   `heartbeat` of read silence the reader sends PING, and a peer that
+//!   answers nothing within another such window — wedged-but-connected,
+//!   the failure TCP alone cannot observe — is retired exactly like a
+//!   disconnect.
 //! * **Worker side** — [`NetWorkerHandle`] connects and handshakes
-//!   (HELLO → WELCOME + initial PUBLISH), then [`NetWorkerHandle::run`]
-//!   bridges the socket onto a local [`super::Published`] and an `mpsc`
-//!   channel and calls `run_worker` on them.
+//!   (HELLO → WELCOME/WELCOME2 + initial PUBLISH), then
+//!   [`NetWorkerHandle::run`] bridges the socket onto a local
+//!   [`super::Published`] and an `mpsc` channel and calls `run_worker`
+//!   on them.  Against a **partitioned** server fleet (ISSUE 5),
+//!   [`ShardedWorkerHandle`] opens one connection per slice server,
+//!   validates that the announced slices tile θ, and assembles the
+//!   slice publish streams into one full-θ view (the version-vector
+//!   floor) while splitting each gradient into per-slice PUSH2 frames —
+//!   `run_worker` never learns the topology existed.
+//! * [`remote_worker_loop`] adds WAN resilience: bounded,
+//!   jitter-backed-off reconnects ([`ReconnectPolicy`]) both for the
+//!   initial connect and after a mid-run link loss — the worker
+//!   reclaims its id, re-adopts the live θ, and is re-admitted by its
+//!   first push, so a transient partition costs staleness, not the
+//!   worker.
 //!
 //! Determinism: the transport moves exactly the same messages the
-//! in-process channel would, and the server aggregates gradient slots
-//! in worker-id order — so a τ=0 loopback-TCP run reproduces the
-//! in-process θ trajectory **bitwise** (pinned by
-//! `rust/tests/net_transport.rs`).
+//! in-process channel would, and every slice server aggregates gradient
+//! slots in worker-id order — so a τ=0 loopback-TCP run (sharded or
+//! not) reproduces the in-process θ trajectory **bitwise** (pinned by
+//! `rust/tests/net_transport.rs` and `rust/tests/sharded_ps.rs`).
 //!
 //! # Example: join a run as a remote worker
 //!
@@ -49,32 +62,38 @@
 //! let shard = synth::friedman(1000, 4, 0.4, 0);
 //! let handle = NetWorkerHandle::connect("127.0.0.1:7171", Some(0))?;
 //! let factory = native_factory(handle.layout);
-//! handle.run(WorkerSource::Memory(shard), factory, WorkerProfile::default())?;
+//! let mut source = WorkerSource::Memory(shard);
+//! handle.run(&mut source, factory, WorkerProfile::default())?;
 //! # Ok(()) }
 //! ```
 
 use super::messages::ToServer;
+use super::sharded::{run_assembler, ShardedPublished, SliceSpec, Topology};
 use super::wire::{
-    self, Frame, ERR_BAD_MAGIC, ERR_DIM, ERR_ID_IN_USE, ERR_ID_MISMATCH,
-    ERR_MALFORMED, ERR_PROTO, MAX_HANDSHAKE_FRAME_LEN, MAX_WORKER_ID,
-    PROTO_VERSION, WORKER_ID_ANY,
+    self, Frame, ReadEvent, ERR_BAD_MAGIC, ERR_DIM, ERR_ID_IN_USE, ERR_ID_MISMATCH,
+    ERR_MALFORMED, ERR_PROTO, MAX_FRAME_LEN, MAX_HANDSHAKE_FRAME_LEN, MAX_WORKER_ID,
+    PROTO_NT1, PROTO_NT2, PROTO_VERSION, WORKER_ID_ANY,
 };
 use super::worker::{run_worker, WorkerProfile, WorkerSource};
 use super::{Published, PublishMeta};
 use crate::gp::ThetaLayout;
 use crate::grad::EngineFactory;
+use crate::util::rng::Pcg64;
+use crate::util::{fnv1a64, FNV1A64_INIT};
 use crate::{log_debug, log_info, log_warn};
 use anyhow::{bail, ensure, Context, Result};
 use std::collections::HashSet;
 use std::net::{IpAddr, Ipv4Addr, Ipv6Addr, SocketAddr, TcpListener, TcpStream};
+use std::sync::atomic::{AtomicBool, AtomicU64, Ordering};
 use std::sync::mpsc::Sender;
 use std::sync::{Arc, Mutex};
 use std::time::Duration;
 
-/// A bound ADVGPNT1 listener, handed to
-/// [`super::coordinator::train_remote`] to serve a run.  Binding is
-/// split from serving so callers (tests, the CLI) can bind port 0 and
-/// learn the real port before any worker needs it.
+/// A bound listener, handed to
+/// [`super::coordinator::train_remote`] (or one per slice to
+/// [`super::coordinator::train_remote_sharded`]) to serve a run.
+/// Binding is split from serving so callers (tests, the CLI) can bind
+/// port 0 and learn the real port before any worker needs it.
 pub struct NetServer {
     listener: TcpListener,
 }
@@ -84,13 +103,47 @@ impl NetServer {
     /// an ephemeral loopback port).
     pub fn bind(addr: &str) -> Result<Self> {
         let listener = TcpListener::bind(addr)
-            .with_context(|| format!("bind ADVGPNT1 server on {addr}"))?;
+            .with_context(|| format!("bind ADVGPNT server on {addr}"))?;
         Ok(Self { listener })
     }
 
     /// The address actually bound (resolves port 0).
     pub fn local_addr(&self) -> SocketAddr {
         self.listener.local_addr().expect("bound listener has a local address")
+    }
+}
+
+/// Everything one slice server's accept loop needs to know about the
+/// run it serves: the θ layout and staleness bound (WELCOME fields),
+/// the declared worker count (id-assignment floor), the slice this
+/// server owns plus the full topology (WELCOME2 fields), and the
+/// heartbeat idle window (`None` disables the wedged-peer probe).
+pub struct NetServeOpts {
+    pub layout: ThetaLayout,
+    pub tau: u64,
+    pub declared_workers: usize,
+    pub slice: SliceSpec,
+    pub topology: Topology,
+    pub heartbeat: Option<Duration>,
+}
+
+impl NetServeOpts {
+    /// Classic single-server options (full slice).
+    pub fn single(
+        layout: ThetaLayout,
+        tau: u64,
+        declared_workers: usize,
+        heartbeat: Option<Duration>,
+    ) -> Self {
+        let dim = layout.len();
+        Self {
+            layout,
+            tau,
+            declared_workers,
+            slice: SliceSpec::full(dim),
+            topology: Topology::partition(dim, 1),
+            heartbeat,
+        }
     }
 }
 
@@ -142,8 +195,71 @@ impl Registry {
     }
 }
 
+/// Per-version PUBLISH frame cache (ROADMAP "WAN hardening"): the
+/// publish fan-out used to re-encode θ once per connection per version;
+/// this shares one `(version, Arc<bytes>)` encoded frame across every
+/// publisher thread of a slice server — exactly **one encode per
+/// version per wire revision**, asserted by
+/// `frame_cache_encodes_each_version_once`.
+///
+/// Two slots, one per protocol revision a single server can be speaking
+/// simultaneously (rev-1 PUBLISH and rev-2 PUBLISH2 frame the same θ
+/// differently).  The encode happens under the slot lock: publishers
+/// asking for the same version serialize briefly instead of encoding
+/// redundantly, which is the cheaper side of the trade for frames that
+/// are O(dim) to build and written to sockets anyway.
+pub struct PublishFrameCache {
+    slice: SliceSpec,
+    slots: Mutex<[Option<(u64, Arc<Vec<u8>>)>; 2]>,
+    encodes: AtomicU64,
+}
+
+impl PublishFrameCache {
+    pub fn new(slice: SliceSpec) -> Self {
+        Self { slice, slots: Mutex::new([None, None]), encodes: AtomicU64::new(0) }
+    }
+
+    /// The encoded PUBLISH (rev 1) or PUBLISH2 (rev ≥ 2) frame for
+    /// `version`, encoding only if this `(version, revision)` has not
+    /// been encoded yet.
+    pub fn get(
+        &self,
+        proto: u32,
+        version: u64,
+        meta: PublishMeta,
+        theta: &[f64],
+    ) -> Arc<Vec<u8>> {
+        let idx = usize::from(proto != PROTO_NT1);
+        let mut slots = self.slots.lock().unwrap();
+        if let Some((v, bytes)) = &slots[idx] {
+            if *v == version {
+                return Arc::clone(bytes);
+            }
+        }
+        self.encodes.fetch_add(1, Ordering::Relaxed);
+        let bytes = Arc::new(if proto == PROTO_NT1 {
+            wire::publish_frame_bytes(version, meta, theta)
+        } else {
+            wire::publish2_frame_bytes(
+                version,
+                meta,
+                self.slice.id as u64,
+                self.slice.range.start as u64,
+                theta,
+            )
+        });
+        slots[idx] = Some((version, Arc::clone(&bytes)));
+        bytes
+    }
+
+    /// Total encodes performed (tests pin one per version per revision).
+    pub fn encodes(&self) -> u64 {
+        self.encodes.load(Ordering::Relaxed)
+    }
+}
+
 /// Accept connections until shutdown, spawning a handler per worker.
-/// Runs on a dedicated thread inside `train_remote`'s scope; per-
+/// Runs on a dedicated thread inside the coordinator's scope; per-
 /// connection reader/publisher threads are detached (they hold only
 /// `Arc`s and channel clones, and unwind on socket close).
 ///
@@ -156,11 +272,11 @@ pub(crate) fn accept_loop(
     net: NetServer,
     published: Arc<Published>,
     tx: Sender<ToServer>,
-    layout: ThetaLayout,
-    tau: u64,
-    declared_workers: usize,
+    opts: NetServeOpts,
 ) {
-    let registry = Arc::new(Registry::new(declared_workers));
+    let opts = Arc::new(opts);
+    let registry = Arc::new(Registry::new(opts.declared_workers));
+    let cache = Arc::new(PublishFrameCache::new(opts.slice.clone()));
     let nonblocking = net.listener.set_nonblocking(true).is_ok();
     loop {
         let stream = match net.listener.accept() {
@@ -194,7 +310,9 @@ pub(crate) fn accept_loop(
         let published = Arc::clone(&published);
         let tx = tx.clone();
         let registry = Arc::clone(&registry);
-        std::thread::spawn(move || handle_conn(stream, published, tx, layout, tau, registry));
+        let opts = Arc::clone(&opts);
+        let cache = Arc::clone(&cache);
+        std::thread::spawn(move || handle_conn(stream, published, tx, opts, registry, cache));
     }
 }
 
@@ -225,16 +343,20 @@ fn send_error(w: &Mutex<TcpStream>, code: u16, message: &str) {
     let _ = send_bytes(w, &f.encode());
 }
 
-/// One connection, server side: handshake, then this thread reads
-/// worker→server frames while a spawned twin fans out publishes.
+/// One connection, server side: handshake (with protocol-revision
+/// negotiation), then this thread reads worker→server frames — probing
+/// idle revision-2 peers with PING — while a spawned twin fans out
+/// publishes from the shared frame cache.
 fn handle_conn(
     stream: TcpStream,
     published: Arc<Published>,
     tx: Sender<ToServer>,
-    layout: ThetaLayout,
-    tau: u64,
+    opts: Arc<NetServeOpts>,
     registry: Arc<Registry>,
+    cache: Arc<PublishFrameCache>,
 ) {
+    let layout = opts.layout;
+    let slice = &opts.slice;
     let _ = stream.set_nodelay(true);
     // Bound every write: a peer that stops draining its publish stream
     // would otherwise block the publisher thread inside write_all while
@@ -245,8 +367,10 @@ fn handle_conn(
     let _ = stream.set_write_timeout(Some(Duration::from_secs(30)));
     // Bound the handshake read too: an idle pre-HELLO connection (port
     // scanner, slowloris) must not pin this thread + FD for the life of
-    // the process.  Cleared after the handshake — a healthy worker may
-    // legitimately compute for minutes between pushes.
+    // the process.  Re-armed after the handshake only as the heartbeat
+    // window — a healthy worker may legitimately compute for minutes
+    // between pushes, and the PING/PONG probe (not a hard timeout) is
+    // what distinguishes "slow" from "wedged".
     let _ = stream.set_read_timeout(Some(Duration::from_secs(10)));
     let peer = stream
         .peer_addr()
@@ -262,11 +386,11 @@ fn handle_conn(
     let mut reader = stream;
     let mut scratch = Vec::new();
 
-    // ---- handshake: HELLO → WELCOME + initial PUBLISH ----
+    // ---- handshake: HELLO → WELCOME(2) + initial PUBLISH(2) ----
     // The peer is untrusted until HELLO validates: the capped read
     // keeps a hostile length prefix from allocating MAX_FRAME_LEN.
     let hello = wire::read_frame_capped(&mut reader, &mut scratch, MAX_HANDSHAKE_FRAME_LEN);
-    let (proto, want) = match hello {
+    let (offered, want) = match hello {
         Ok(Frame::Hello { proto, worker }) => (proto, worker),
         Ok(f) => {
             let msg = format!("expected HELLO, got kind {:#04x}", f.kind());
@@ -278,14 +402,37 @@ fn handle_conn(
             return;
         }
     };
-    if proto != PROTO_VERSION {
+    // Version negotiation: the connection speaks min(offer, ours).  A
+    // revision-1 peer can only address a server owning all of θ — its
+    // frames have nowhere to put a slice.
+    let proto = if offered >= PROTO_NT2 {
+        PROTO_NT2
+    } else if offered == PROTO_NT1 {
+        if slice.covers(layout.len()) {
+            PROTO_NT1
+        } else {
+            send_error(
+                &writer,
+                ERR_PROTO,
+                &format!(
+                    "this server owns θ slice {}/{}; ADVGPNT1 (rev 1) cannot \
+                     address a partitioned server — speak rev {PROTO_NT2}",
+                    slice.id, slice.n_slices
+                ),
+            );
+            return;
+        }
+    } else {
         send_error(
             &writer,
             ERR_PROTO,
-            &format!("server speaks ADVGPNT1 rev {PROTO_VERSION}, client offered {proto}"),
+            &format!(
+                "server speaks ADVGPNT revisions 1..={PROTO_VERSION}, \
+                 client offered {offered}"
+            ),
         );
         return;
-    }
+    };
     let id = match registry.claim(want) {
         Ok(id) => id,
         Err((code, msg)) => {
@@ -293,38 +440,58 @@ fn handle_conn(
             return;
         }
     };
-    let welcome = Frame::Welcome {
-        proto: PROTO_VERSION,
-        worker: id,
-        m: layout.m as u64,
-        d: layout.d as u64,
-        tau,
+    let welcome = if proto == PROTO_NT1 {
+        Frame::Welcome {
+            proto,
+            worker: id,
+            m: layout.m as u64,
+            d: layout.d as u64,
+            tau: opts.tau,
+        }
+    } else {
+        Frame::Welcome2 {
+            proto,
+            worker: id,
+            m: layout.m as u64,
+            d: layout.d as u64,
+            tau: opts.tau,
+            slice_id: slice.id as u64,
+            n_slices: slice.n_slices as u64,
+            start: slice.range.start as u64,
+            end: slice.range.end as u64,
+            topology: opts.topology.to_wire(),
+        }
     };
     let (version, theta, meta, shutdown) = published.snapshot_meta();
     let hand = send_bytes(&writer, &welcome.encode()).and_then(|_| {
         if shutdown {
             send_bytes(&writer, &Frame::Shutdown.encode())
         } else {
-            send_bytes(&writer, &wire::publish_frame_bytes(version, meta, &theta))
+            send_bytes(&writer, &cache.get(proto, version, meta, &theta))
         }
     });
     if hand.is_err() || shutdown {
         registry.release(id);
         return;
     }
-    // Handshake passed: back to blocking reads (see above).
-    let _ = reader.set_read_timeout(None);
-    log_info!("ps::net: worker {id} joined from {peer} (θ v{version})");
+    // Handshake passed: the read timeout becomes the heartbeat idle
+    // window (rev ≥ 2 with heartbeats on) or is cleared (rev 1 — an
+    // old peer would not answer PING, so silence must stay legal).
+    let heartbeat = (proto >= PROTO_NT2).then_some(opts.heartbeat).flatten();
+    let _ = reader.set_read_timeout(heartbeat);
+    log_info!("ps::net: worker {id} joined from {peer} (rev {proto}, θ v{version})");
 
     // ---- publish fan-out: one detached thread per connection ----
     let pub_w = Arc::clone(&writer);
     let pub_published = Arc::clone(&published);
+    let pub_cache = Arc::clone(&cache);
     std::thread::spawn(move || {
         let mut seen = version;
         loop {
             match pub_published.wait_newer_meta(seen) {
                 Some((v, th, meta)) => {
-                    if send_bytes(&pub_w, &wire::publish_frame_bytes(v, meta, &th)).is_err() {
+                    let bytes = pub_cache.get(proto, v, meta, &th);
+                    if send_bytes(&pub_w, &bytes).is_err() {
                         // Link gone (or write-timeout on a wedged peer):
                         // kill the socket so the reader side unblocks
                         // promptly and retires the clock, instead of
@@ -344,25 +511,48 @@ fn handle_conn(
 
     // ---- worker → server pump (this thread) ----
     let mut exited = false;
+    // One outstanding PING at a time: a second idle window with no
+    // traffic at all (not even PONG) is the wedged-peer verdict.
+    let mut pinged = false;
     loop {
-        match wire::read_frame_opt(&mut reader, &mut scratch) {
-            Ok(Some(Frame::Push(p))) => {
-                if exited {
-                    // A push after EXIT would re-admit the retired
-                    // clock — and with `exited` already true, no
-                    // WorkerExit would be synthesized on disconnect,
-                    // leaving a ghost clock that stalls the gate
-                    // forever.  Protocol-state violation: drop the
-                    // connection (its clock stays retired).
-                    send_error(&writer, ERR_MALFORMED, "PUSH after EXIT");
+        let event = wire::read_frame_event(&mut reader, &mut scratch, MAX_FRAME_LEN);
+        let frame = match event {
+            Ok(ReadEvent::Frame(f)) => {
+                pinged = false; // any traffic proves liveness
+                f
+            }
+            Ok(ReadEvent::IdleTimeout) => {
+                if heartbeat.is_none() {
+                    // No heartbeat configured but a timeout fired (e.g.
+                    // platform quirk): treat as a transient and retry.
+                    continue;
+                }
+                if pinged {
+                    log_warn!(
+                        "ps::net: worker {id} ({peer}) silent through PING + \
+                         grace — wedged; retiring its clock"
+                    );
                     break;
                 }
-                if p.worker as u64 != id {
-                    send_error(
-                        &writer,
-                        ERR_ID_MISMATCH,
-                        &format!("push for worker {} on worker-{id} connection", p.worker),
-                    );
+                if send_bytes(&writer, &Frame::Ping.encode()).is_err() {
+                    break;
+                }
+                pinged = true;
+                continue;
+            }
+            Ok(ReadEvent::Eof) => break, // clean close
+            Err(e) => {
+                log_warn!("ps::net: worker {id} ({peer}) stream error: {e:#}");
+                break;
+            }
+        };
+        // Normalize the two push encodings into one (worker, grad) pair
+        // after revision- and slice-validation; everything downstream is
+        // revision-agnostic.
+        let push = match frame {
+            Frame::Push(p) => {
+                if proto != PROTO_NT1 {
+                    send_error(&writer, ERR_MALFORMED, "rev-2 connections push PUSH2");
                     break;
                 }
                 if p.grad.len() != layout.len() {
@@ -373,11 +563,47 @@ fn handle_conn(
                     );
                     break;
                 }
-                if tx.send(ToServer::Push(p)).is_err() {
-                    break; // server loop already returned
-                }
+                p
             }
-            Ok(Some(Frame::WorkerExit { worker })) => {
+            Frame::Push2 { slice_id, start, push } => {
+                if proto == PROTO_NT1 {
+                    send_error(&writer, ERR_MALFORMED, "PUSH2 on a rev-1 connection");
+                    break;
+                }
+                if slice_id != slice.id as u64 || start != slice.range.start as u64 {
+                    send_error(
+                        &writer,
+                        ERR_DIM,
+                        &format!(
+                            "PUSH2 for slice {slice_id} @ {start} but this server owns \
+                             slice {} @ {}",
+                            slice.id, slice.range.start
+                        ),
+                    );
+                    break;
+                }
+                if push.grad.len() != slice.len() {
+                    send_error(
+                        &writer,
+                        ERR_DIM,
+                        &format!(
+                            "gradient fragment dim {} but slice [{}, {}) holds {}",
+                            push.grad.len(),
+                            slice.range.start,
+                            slice.range.end,
+                            slice.len()
+                        ),
+                    );
+                    break;
+                }
+                push
+            }
+            Frame::Ping => {
+                let _ = send_bytes(&writer, &Frame::Pong.encode());
+                continue;
+            }
+            Frame::Pong => continue,
+            Frame::WorkerExit { worker } => {
                 if worker != id {
                     // Same contract as PUSH (and docs/PROTOCOL.md
                     // code 6): the id field must match the connection.
@@ -391,26 +617,42 @@ fn handle_conn(
                 exited = true;
                 let _ = tx.send(ToServer::WorkerExit { worker: id as usize });
                 // Keep draining until the client closes its end.
+                continue;
             }
-            Ok(Some(Frame::Error { code, message })) => {
+            Frame::Error { code, message } => {
                 log_warn!("ps::net: worker {id} sent error {code}: {message}");
                 break;
             }
-            Ok(Some(f)) => {
+            f => {
                 send_error(&writer, ERR_MALFORMED, &format!("unexpected kind {:#04x}", f.kind()));
                 break;
             }
-            Ok(None) => break, // clean close
-            Err(e) => {
-                log_warn!("ps::net: worker {id} ({peer}) stream error: {e:#}");
-                break;
-            }
+        };
+        if exited {
+            // A push after EXIT would re-admit the retired clock — and
+            // with `exited` already true, no WorkerExit would be
+            // synthesized on disconnect, leaving a ghost clock that
+            // stalls the gate forever.  Protocol-state violation: drop
+            // the connection (its clock stays retired).
+            send_error(&writer, ERR_MALFORMED, "PUSH after EXIT");
+            break;
+        }
+        if push.worker as u64 != id {
+            send_error(
+                &writer,
+                ERR_ID_MISMATCH,
+                &format!("push for worker {} on worker-{id} connection", push.worker),
+            );
+            break;
+        }
+        if tx.send(ToServer::Push(push)).is_err() {
+            break; // server loop already returned
         }
     }
     if !exited {
-        // Mid-stream disconnect (crash, kill -9, partition): retire the
-        // clock so the gate ranges over live workers only — the
-        // networked twin of the in-process kill-worker path.
+        // Mid-stream disconnect (crash, kill -9, partition) or a wedged
+        // peer: retire the clock so the gate ranges over live workers
+        // only — the networked twin of the in-process kill-worker path.
         let _ = tx.send(ToServer::WorkerExit { worker: id as usize });
     }
     // Enforce the "ERROR (or EXIT) then close" contract for every exit
@@ -426,9 +668,53 @@ fn handle_conn(
     );
 }
 
+/// Worker-side heartbeat window: after this much publish-stream
+/// silence on a revision-2 connection the worker PINGs its server, and
+/// a server silent through a second window is treated as a dead link
+/// ([`RunEnd::ConnectionLost`] → the reconnect loop engages) — the
+/// mirror of the server-side probe, per the spec's bidirectional
+/// heartbeat.  Matches `TrainConfig::heartbeat_secs`'s default.
+/// Revision-1 servers do not speak PING, so rev-1 links keep the
+/// pre-heartbeat behavior (block until FIN).
+pub const WORKER_HEARTBEAT: Duration = Duration::from_secs(30);
+
+/// How [`NetWorkerHandle::run`] (and the sharded twin) ended.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum RunEnd {
+    /// The server announced SHUTDOWN — the run is over.
+    Shutdown,
+    /// The link died (read/write error or EOF without SHUTDOWN) while
+    /// the run may still be live: [`remote_worker_loop`] answers this
+    /// with a reconnect.
+    ConnectionLost,
+    /// The worker departed voluntarily (profile `leave_at`, store
+    /// failure) over a healthy connection.
+    Left,
+}
+
+/// A handshake rejection the server spelled out in an ERROR frame —
+/// deliberate, not transient, so [`remote_worker_loop`] does **not**
+/// retry it (retrying an `ERR_ID_IN_USE` or `ERR_PROTO` answer would
+/// hammer a server that has already said no).
+#[derive(Debug)]
+pub struct Rejected {
+    pub code: u16,
+    pub message: String,
+}
+
+impl std::fmt::Display for Rejected {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        write!(f, "server rejected the connection (code {}): {}", self.code, self.message)
+    }
+}
+
+impl std::error::Error for Rejected {}
+
 /// A handshaken worker-side connection: holds the assigned id, the θ
-/// layout and staleness bound the server announced, and the initial θ
-/// snapshot.  [`NetWorkerHandle::run`] turns it into a full worker.
+/// layout, staleness bound, and slice this server announced, and the
+/// initial θ snapshot.  [`NetWorkerHandle::run`] turns it into a full
+/// worker (single-server topologies); [`ShardedWorkerHandle`] composes
+/// one of these per slice server.
 pub struct NetWorkerHandle {
     stream: TcpStream,
     /// Worker id this connection runs as (claimed or server-assigned).
@@ -437,6 +723,13 @@ pub struct NetWorkerHandle {
     pub layout: ThetaLayout,
     /// Staleness bound τ announced by WELCOME (informational).
     pub tau: u64,
+    /// Negotiated protocol revision for this connection.
+    pub proto: u32,
+    /// The θ slice the server at the other end owns ([`SliceSpec::full`]
+    /// on revision-1 connections and unsharded revision-2 servers).
+    pub slice: SliceSpec,
+    /// The server's announced topology (single-slice unless sharded).
+    pub topology: Topology,
     version: u64,
     meta: PublishMeta,
     theta: Vec<f64>,
@@ -445,14 +738,21 @@ pub struct NetWorkerHandle {
 impl NetWorkerHandle {
     /// Connect and handshake.  `claim = Some(k)` asks to run as worker
     /// k (the id owning shard k); `None` lets the server assign the
-    /// lowest free id.
+    /// lowest free id.  Offers revision [`PROTO_VERSION`] and accepts
+    /// whatever ≤ that the server negotiates.
     pub fn connect(addr: &str, claim: Option<usize>) -> Result<Self> {
         let mut stream = TcpStream::connect(addr)
-            .with_context(|| format!("connect to ADVGPNT1 server {addr}"))?;
+            .with_context(|| format!("connect to ADVGPNT server {addr}"))?;
         let _ = stream.set_nodelay(true);
+        // Bound every write: a wedged server must surface as a push
+        // failure (→ ConnectionLost → reconnect), not pin the push pump
+        // in write_all forever.
+        let _ = stream.set_write_timeout(Some(WORKER_HEARTBEAT));
         // Bound the handshake so a silent listener can't hang the
-        // worker forever; cleared below once WELCOME validates (pulls
-        // can legitimately wait a long time between publishes).
+        // worker forever; re-armed by `run` as the worker-side
+        // heartbeat window (pulls can legitimately wait a long time
+        // between publishes — the PING probe, not a hard timeout, is
+        // what distinguishes a quiet server from a dead one).
         let _ = stream.set_read_timeout(Some(Duration::from_secs(30)));
         let hello = Frame::Hello {
             proto: PROTO_VERSION,
@@ -464,25 +764,64 @@ impl NetWorkerHandle {
         // so a rogue listener can't make us allocate MAX_FRAME_LEN.
         let welcome =
             wire::read_frame_capped(&mut stream, &mut scratch, MAX_HANDSHAKE_FRAME_LEN)?;
-        let (worker, layout, tau) = match welcome {
+        let check_layout = |m: u64, d: u64| -> Result<ThetaLayout> {
+            ensure!(
+                (1..=1 << 20).contains(&m) && (1..=1 << 20).contains(&d),
+                "WELCOME: implausible layout m={m} d={d}"
+            );
+            Ok(ThetaLayout::new(m as usize, d as usize))
+        };
+        let (proto, worker, layout, tau, slice, topology) = match welcome {
             Frame::Welcome { proto, worker, m, d, tau } => {
                 ensure!(
-                    proto == PROTO_VERSION,
-                    "server negotiated unsupported ADVGPNT1 rev {proto}"
+                    proto == PROTO_NT1,
+                    "rev-1 WELCOME announcing revision {proto} — confused server"
                 );
+                let layout = check_layout(m, d)?;
+                let dim = layout.len();
+                (
+                    proto,
+                    worker as usize,
+                    layout,
+                    tau,
+                    SliceSpec::full(dim),
+                    Topology::partition(dim, 1),
+                )
+            }
+            Frame::Welcome2 {
+                proto,
+                worker,
+                m,
+                d,
+                tau,
+                slice_id,
+                n_slices,
+                start: _,
+                end: _,
+                topology,
+            } => {
                 ensure!(
-                    (1..=1 << 20).contains(&m) && (1..=1 << 20).contains(&d),
-                    "WELCOME: implausible layout m={m} d={d}"
+                    (PROTO_NT2..=PROTO_VERSION).contains(&proto),
+                    "server negotiated unsupported ADVGPNT revision {proto}"
                 );
-                (worker as usize, ThetaLayout::new(m as usize, d as usize), tau)
+                let layout = check_layout(m, d)?;
+                let topo = Topology::from_wire(layout.len(), &topology)
+                    .context("WELCOME2 topology map")?;
+                ensure!(
+                    (slice_id as usize) < topo.n_slices() && n_slices as usize == topo.n_slices(),
+                    "WELCOME2: slice {slice_id}/{n_slices} outside its own topology"
+                );
+                let slice = topo.slice(slice_id as usize);
+                (proto, worker as usize, layout, tau, slice, topo)
             }
             Frame::Error { code, message } => {
-                bail!("server rejected the connection (code {code}): {message}")
+                return Err(anyhow::Error::new(Rejected { code, message }))
             }
             f => bail!("expected WELCOME, got frame kind {:#04x}", f.kind()),
         };
         let (version, meta, theta) = match wire::read_frame(&mut stream, &mut scratch)? {
             Frame::Publish { version, meta, theta } => {
+                ensure!(proto == PROTO_NT1, "rev-1 PUBLISH on a rev-{proto} connection");
                 ensure!(
                     theta.len() == layout.len(),
                     "initial PUBLISH carries dim {} but layout m={} d={} needs {}",
@@ -493,14 +832,29 @@ impl NetWorkerHandle {
                 );
                 (version, meta, theta)
             }
+            Frame::Publish2 { version, meta, slice_id, start, theta } => {
+                ensure!(proto >= PROTO_NT2, "PUBLISH2 on a rev-1 connection");
+                ensure!(
+                    slice_id == slice.id as u64
+                        && start == slice.range.start as u64
+                        && theta.len() == slice.len(),
+                    "initial PUBLISH2 (slice {slice_id} @ {start}, {} values) does \
+                     not match the announced slice {} @ {} ({} values)",
+                    theta.len(),
+                    slice.id,
+                    slice.range.start,
+                    slice.len()
+                );
+                (version, meta, theta)
+            }
             Frame::Shutdown => bail!("server is shutting down; nothing to join"),
             Frame::Error { code, message } => {
-                bail!("server rejected the connection (code {code}): {message}")
+                return Err(anyhow::Error::new(Rejected { code, message }))
             }
             f => bail!("expected the initial PUBLISH, got frame kind {:#04x}", f.kind()),
         };
         let _ = stream.set_read_timeout(None);
-        Ok(Self { stream, worker, layout, tau, version, meta, theta })
+        Ok(Self { stream, worker, layout, tau, proto, slice, topology, version, meta, theta })
     }
 
     /// θ version the server was at when this connection handshook.
@@ -509,18 +863,41 @@ impl NetWorkerHandle {
     }
 
     /// Run the worker loop over this connection until the server shuts
-    /// down or the profile makes the worker leave.  Internally this
-    /// bridges the socket onto a local [`Published`] + `mpsc` pair and
-    /// calls the ordinary [`run_worker`] — straggler/crash/leave
-    /// profiles, windowed streaming, and [`WorkerSource::Store`] all
-    /// behave exactly as they do in-process.
+    /// down, the link dies, or the profile makes the worker leave —
+    /// the [`RunEnd`] says which.  Internally this bridges the socket
+    /// onto a local [`Published`] + `mpsc` pair and calls the ordinary
+    /// [`run_worker`] — straggler/crash/leave profiles, windowed
+    /// streaming, and [`WorkerSource::Store`] all behave exactly as
+    /// they do in-process.  Answers server PINGs with PONG.
+    ///
+    /// Only valid against a server owning **all** of θ; against a slice
+    /// server use [`ShardedWorkerHandle`] (one connection per slice).
     pub fn run(
         self,
-        source: WorkerSource,
+        source: &mut WorkerSource,
         factory: EngineFactory,
         profile: WorkerProfile,
-    ) -> Result<()> {
-        let Self { stream, worker, layout, tau: _, version, meta, theta } = self;
+    ) -> Result<RunEnd> {
+        let Self {
+            stream,
+            worker,
+            layout,
+            tau: _,
+            proto,
+            slice,
+            topology: _,
+            version,
+            meta,
+            theta,
+        } = self;
+        ensure!(
+            slice.covers(layout.len()),
+            "server owns θ slice {}/{} — a single connection cannot train \
+             against a partitioned fleet; connect to every slice server \
+             (ShardedWorkerHandle / --connect addr0,addr1,…)",
+            slice.id,
+            slice.n_slices
+        );
         ensure!(
             source.d() == layout.d,
             "shard has d={} features but the server's layout has d={}",
@@ -536,35 +913,57 @@ impl NetWorkerHandle {
         }
         let reader = stream.try_clone().context("clone stream for the publish pump")?;
         let ctrl = stream.try_clone().context("clone stream for teardown")?;
+        // Writes are shared between the push pump and the publish
+        // pump's PONG replies: one mutex, one write_all per frame.
+        let writer = Arc::new(Mutex::new(stream));
         let (tx, rx) = std::sync::mpsc::channel::<ToServer>();
         let dim = layout.len();
-        std::thread::scope(|s| {
-            // Publish pump: server → local Published.
+        let saw_shutdown = Arc::new(AtomicBool::new(false));
+        let conn_err = Arc::new(AtomicBool::new(false));
+        let end = std::thread::scope(|s| {
+            // Publish pump: server → local Published (+ PONG replies).
             let pub_r = Arc::clone(&published);
+            let pong_w = Arc::clone(&writer);
+            let sd = Arc::clone(&saw_shutdown);
+            let ce = Arc::clone(&conn_err);
             s.spawn(move || {
                 let mut r = reader;
                 let mut scratch = Vec::new();
+                // Worker-side heartbeat (rev ≥ 2 only: a rev-1 server
+                // would treat PING as a protocol error).
+                if proto >= PROTO_NT2 {
+                    let _ = r.set_read_timeout(Some(WORKER_HEARTBEAT));
+                } else {
+                    let _ = r.set_read_timeout(None);
+                }
+                let mut pinged = false;
                 loop {
-                    match wire::read_frame_opt(&mut r, &mut scratch) {
-                        Ok(Some(Frame::Publish { version, meta, theta })) => {
-                            if theta.len() != dim {
-                                // Protocol violation; don't hand the
-                                // engine a mis-sized θ.
+                    let frame = match wire::read_frame_event(&mut r, &mut scratch, MAX_FRAME_LEN)
+                    {
+                        Ok(ReadEvent::Frame(f)) => {
+                            pinged = false; // any traffic proves liveness
+                            f
+                        }
+                        Ok(ReadEvent::IdleTimeout) => {
+                            if proto == PROTO_NT1 {
+                                continue; // no timeout armed; platform quirk
+                            }
+                            if pinged
+                                || send_bytes(&pong_w, &Frame::Ping.encode()).is_err()
+                            {
                                 log_warn!(
-                                    "worker {worker}: PUBLISH dim {} ≠ layout dim {dim}",
-                                    theta.len()
+                                    "worker {worker}: server silent through PING + \
+                                     grace — treating the link as dead"
                                 );
+                                ce.store(true, Ordering::Relaxed);
                                 break;
                             }
-                            pub_r.publish_meta(version, theta, meta);
+                            pinged = true;
+                            continue;
                         }
-                        Ok(Some(Frame::Shutdown)) | Ok(None) => break,
-                        Ok(Some(Frame::Error { code, message })) => {
-                            log_warn!("worker {worker}: server error {code}: {message}");
-                            break;
-                        }
-                        Ok(Some(f)) => {
-                            log_warn!("worker {worker}: unexpected frame kind {:#04x}", f.kind());
+                        Ok(ReadEvent::Eof) => {
+                            // EOF without SHUTDOWN: the server vanished.
+                            ce.store(true, Ordering::Relaxed);
                             break;
                         }
                         Err(e) => {
@@ -572,43 +971,443 @@ impl NetWorkerHandle {
                             // half-close raced a publish: either way the
                             // run is over for this worker.
                             log_debug!("worker {worker}: publish stream ended: {e:#}");
+                            ce.store(true, Ordering::Relaxed);
+                            break;
+                        }
+                    };
+                    match frame {
+                        Frame::Publish { version, meta, theta } => {
+                            if proto != PROTO_NT1 || theta.len() != dim {
+                                log_warn!(
+                                    "worker {worker}: bad PUBLISH (dim {} on a rev-{proto} \
+                                     link, layout dim {dim})",
+                                    theta.len()
+                                );
+                                ce.store(true, Ordering::Relaxed);
+                                break;
+                            }
+                            pub_r.publish_meta(version, theta, meta);
+                        }
+                        Frame::Publish2 { version, meta, slice_id, start, theta } => {
+                            if proto == PROTO_NT1
+                                || slice_id != 0
+                                || start != 0
+                                || theta.len() != dim
+                            {
+                                log_warn!(
+                                    "worker {worker}: bad PUBLISH2 (slice {slice_id} @ \
+                                     {start}, {} values, rev {proto})",
+                                    theta.len()
+                                );
+                                ce.store(true, Ordering::Relaxed);
+                                break;
+                            }
+                            pub_r.publish_meta(version, theta, meta);
+                        }
+                        Frame::Ping => {
+                            let _ = send_bytes(&pong_w, &Frame::Pong.encode());
+                        }
+                        Frame::Pong => {}
+                        Frame::Shutdown => {
+                            sd.store(true, Ordering::Relaxed);
+                            break;
+                        }
+                        Frame::Error { code, message } => {
+                            log_warn!("worker {worker}: server error {code}: {message}");
+                            ce.store(true, Ordering::Relaxed);
+                            break;
+                        }
+                        f => {
+                            log_warn!("worker {worker}: unexpected frame kind {:#04x}", f.kind());
+                            ce.store(true, Ordering::Relaxed);
                             break;
                         }
                     }
                 }
                 pub_r.shutdown();
             });
-            // Push pump: local channel → server.
+            // Push pump: local channel → server (PUSH on rev 1, PUSH2
+            // on rev 2 — same slice-full payload either way).
             let pub_w = Arc::clone(&published);
-            let wh = s.spawn(move || {
-                let mut w = stream;
+            let push_w = Arc::clone(&writer);
+            let push_slice = slice.clone();
+            let wh = s.spawn(move || -> std::io::Result<()> {
                 while let Ok(msg) = rx.recv() {
-                    let frame: Frame = msg.into();
-                    if let Err(e) = wire::write_frame(&mut w, &frame) {
+                    let frame: Frame = if proto == PROTO_NT1 {
+                        msg.into()
+                    } else {
+                        match msg {
+                            ToServer::Push(p) => Frame::Push2 {
+                                slice_id: push_slice.id as u64,
+                                start: push_slice.range.start as u64,
+                                push: p,
+                            },
+                            ToServer::WorkerExit { worker } => {
+                                Frame::WorkerExit { worker: worker as u64 }
+                            }
+                        }
+                    };
+                    if let Err(e) = send_bytes(&push_w, &frame.encode()) {
                         // Server unreachable: stop the local loop too.
                         pub_w.shutdown();
                         return Err(e);
                     }
                 }
-                let _ = w.shutdown(std::net::Shutdown::Write);
+                let _ = push_w.lock().unwrap().shutdown(std::net::Shutdown::Write);
                 Ok(())
             });
             // The worker loop itself, unchanged from the in-process path.
             run_worker(worker, source, factory, Arc::clone(&published), tx, profile);
-            if let Ok(Err(e)) = wh.join().map_err(|_| "push pump panicked") {
+            let push_res = wh
+                .join()
+                .unwrap_or_else(|_| Err(std::io::Error::other("push pump panicked")));
+            // Decide how the run ended *before* teardown: the control
+            // shutdown below makes the publish pump error out, which
+            // must not be mistaken for a lost link.
+            let end = if saw_shutdown.load(Ordering::Relaxed) {
+                RunEnd::Shutdown
+            } else if conn_err.load(Ordering::Relaxed) || push_res.is_err() {
+                RunEnd::ConnectionLost
+            } else {
+                RunEnd::Left
+            };
+            if let Err(e) = &push_res {
                 log_warn!("worker {worker}: push stream failed: {e}");
             }
             // Unblock the publish pump if it is still mid-read (early
             // departure: the server keeps publishing to others).
             let _ = ctrl.shutdown(std::net::Shutdown::Both);
+            end
         });
-        Ok(())
+        Ok(end)
+    }
+}
+
+/// A worker-side bundle of connections to a **partitioned** server
+/// fleet (ISSUE 5): one [`NetWorkerHandle`] per slice server, validated
+/// to agree on layout/τ/topology, to report the same worker id, and to
+/// tile θ exactly.  [`ShardedWorkerHandle::run`] assembles the slice
+/// publish streams into one full-θ view and splits each gradient into
+/// per-slice PUSH2 frames — `run_worker` (the math, windowing, and
+/// profiles) is reused verbatim on the assembled view.
+pub struct ShardedWorkerHandle {
+    conns: Vec<NetWorkerHandle>,
+    pub worker: usize,
+    pub layout: ThetaLayout,
+    pub tau: u64,
+    pub topology: Topology,
+}
+
+impl ShardedWorkerHandle {
+    /// Connect to every slice server (`addrs` in any order; the slices
+    /// they announce decide their role).  The first connection may let
+    /// the server assign an id (`claim = None`); every subsequent
+    /// connection claims that same id, so the worker is one identity
+    /// across the fleet.  Prefer explicit claims in multi-worker
+    /// deployments — concurrent `ANY` assignments on different servers
+    /// are not coordinated.
+    pub fn connect(addrs: &[String], claim: Option<usize>) -> Result<Self> {
+        ensure!(!addrs.is_empty(), "need at least one server address");
+        let mut conns: Vec<NetWorkerHandle> = Vec::with_capacity(addrs.len());
+        let mut claim = claim;
+        for addr in addrs {
+            let h = NetWorkerHandle::connect(addr, claim)
+                .with_context(|| format!("slice server {addr}"))?;
+            ensure!(
+                h.proto >= PROTO_NT2,
+                "{addr} negotiated revision {} — a sharded worker needs ADVGPNT2",
+                h.proto
+            );
+            claim = Some(h.worker); // one identity across the fleet
+            conns.push(h);
+        }
+        let first = &conns[0];
+        let (worker, layout, tau, topology) =
+            (first.worker, first.layout, first.tau, first.topology.clone());
+        ensure!(
+            topology.n_slices() == addrs.len(),
+            "servers announce a {}-slice topology but {} address(es) were given \
+             — connect to every slice server exactly once",
+            topology.n_slices(),
+            addrs.len()
+        );
+        let mut seen = vec![false; topology.n_slices()];
+        for (addr, h) in addrs.iter().zip(&conns) {
+            ensure!(
+                h.worker == worker && h.layout == layout && h.tau == tau,
+                "{addr} disagrees on worker id / layout / τ with the first server"
+            );
+            ensure!(
+                h.topology == topology,
+                "{addr} announces a different topology — the fleet is inconsistent"
+            );
+            ensure!(
+                !std::mem::replace(&mut seen[h.slice.id], true),
+                "{addr} announces slice {} which another address already covers",
+                h.slice.id
+            );
+        }
+        conns.sort_by_key(|c| c.slice.id);
+        Ok(Self { conns, worker, layout, tau, topology })
+    }
+
+    /// The per-slice θ versions at handshake time (the assembled start
+    /// version is this vector's minimum).
+    pub fn version_vector(&self) -> Vec<u64> {
+        self.conns.iter().map(|c| c.version).collect()
+    }
+
+    /// Run the worker loop against the fleet until the servers shut
+    /// down, any link dies, or the profile makes the worker leave.
+    pub fn run(
+        self,
+        source: &mut WorkerSource,
+        factory: EngineFactory,
+        profile: WorkerProfile,
+    ) -> Result<RunEnd> {
+        let Self { conns, worker, layout, tau: _, topology } = self;
+        ensure!(
+            source.d() == layout.d,
+            "shard has d={} features but the server's layout has d={}",
+            source.d(),
+            layout.d
+        );
+        // Assemble the initial view at the handshake version floor.
+        let floor = conns.iter().map(|c| c.version).min().unwrap_or(0);
+        let mut theta0 = vec![0.0f64; topology.dim];
+        for c in &conns {
+            theta0[c.slice.range.clone()].copy_from_slice(&c.theta);
+        }
+        let assembled = Published::new(theta0.clone());
+        let sharded = ShardedPublished::new(topology.clone(), &theta0, Arc::clone(&assembled));
+        for (c, p) in conns.iter().zip(&sharded.slices) {
+            if c.version > 0 {
+                p.publish_meta(c.version, c.theta.clone(), c.meta);
+            }
+        }
+        if floor > 0 {
+            assembled.publish(floor, theta0);
+        }
+        let saw_shutdown = Arc::new(AtomicBool::new(false));
+        let conn_err = Arc::new(AtomicBool::new(false));
+        let (tx, rx) = std::sync::mpsc::channel::<ToServer>();
+        // Per-connection plumbing: a reader for the publish pump, a
+        // control clone for teardown, a shared writer for pushes + PONGs.
+        let mut readers = Vec::with_capacity(conns.len());
+        let mut ctrls = Vec::with_capacity(conns.len());
+        let mut writers = Vec::with_capacity(conns.len());
+        for c in &conns {
+            readers.push(c.stream.try_clone().context("clone stream for the publish pump")?);
+            ctrls.push(c.stream.try_clone().context("clone stream for teardown")?);
+        }
+        for c in conns {
+            writers.push(Arc::new(Mutex::new(c.stream)));
+        }
+        let end = std::thread::scope(|s| {
+            // One publish pump per slice connection.
+            for (i, mut r) in readers.into_iter().enumerate() {
+                let slice = topology.slice(i);
+                let slice_pub = Arc::clone(&sharded.slices[i]);
+                let pong_w = Arc::clone(&writers[i]);
+                let sd = Arc::clone(&saw_shutdown);
+                let ce = Arc::clone(&conn_err);
+                s.spawn(move || {
+                    let mut scratch = Vec::new();
+                    // Sharded links are always rev ≥ 2: the worker-side
+                    // heartbeat probes every slice server independently.
+                    let _ = r.set_read_timeout(Some(WORKER_HEARTBEAT));
+                    let mut pinged = false;
+                    loop {
+                        let frame = match wire::read_frame_event(
+                            &mut r,
+                            &mut scratch,
+                            MAX_FRAME_LEN,
+                        ) {
+                            Ok(ReadEvent::Frame(f)) => {
+                                pinged = false;
+                                f
+                            }
+                            Ok(ReadEvent::IdleTimeout) => {
+                                if pinged
+                                    || send_bytes(&pong_w, &Frame::Ping.encode()).is_err()
+                                {
+                                    log_warn!(
+                                        "worker {worker}: slice {} server silent through \
+                                         PING + grace — treating the link as dead",
+                                        slice.id
+                                    );
+                                    ce.store(true, Ordering::Relaxed);
+                                    break;
+                                }
+                                pinged = true;
+                                continue;
+                            }
+                            Ok(ReadEvent::Eof) => {
+                                ce.store(true, Ordering::Relaxed);
+                                break;
+                            }
+                            Err(e) => {
+                                log_debug!(
+                                    "worker {worker}: slice {} publish stream ended: {e:#}",
+                                    slice.id
+                                );
+                                ce.store(true, Ordering::Relaxed);
+                                break;
+                            }
+                        };
+                        match frame {
+                            Frame::Publish2 { version, meta, slice_id, start, theta } => {
+                                if slice_id != slice.id as u64
+                                    || start != slice.range.start as u64
+                                    || theta.len() != slice.len()
+                                {
+                                    log_warn!(
+                                        "worker {worker}: slice {} sent a mismatched \
+                                         PUBLISH2 (slice {slice_id} @ {start}, {} values)",
+                                        slice.id,
+                                        theta.len()
+                                    );
+                                    ce.store(true, Ordering::Relaxed);
+                                    break;
+                                }
+                                slice_pub.publish_meta(version, theta, meta);
+                            }
+                            Frame::Ping => {
+                                let _ = send_bytes(&pong_w, &Frame::Pong.encode());
+                            }
+                            Frame::Pong => {}
+                            Frame::Shutdown => {
+                                sd.store(true, Ordering::Relaxed);
+                                break;
+                            }
+                            Frame::Error { code, message } => {
+                                log_warn!(
+                                    "worker {worker}: slice {} server error {code}: {message}",
+                                    slice.id
+                                );
+                                ce.store(true, Ordering::Relaxed);
+                                break;
+                            }
+                            f => {
+                                log_warn!(
+                                    "worker {worker}: unexpected frame kind {:#04x}",
+                                    f.kind()
+                                );
+                                ce.store(true, Ordering::Relaxed);
+                                break;
+                            }
+                        }
+                    }
+                    // One dead slice stream ends the whole worker run:
+                    // without its fragment the assembled view can never
+                    // advance again.
+                    slice_pub.shutdown();
+                });
+            }
+            // The assembler: slice views → assembled full-θ view.
+            {
+                let sharded_ref = &sharded;
+                s.spawn(move || run_assembler(sharded_ref));
+            }
+            // The push splitter: local channel → one PUSH2 per slice.
+            let split_writers: Vec<Arc<Mutex<TcpStream>>> =
+                writers.iter().map(Arc::clone).collect();
+            let topo = topology.clone();
+            let pub_w = Arc::clone(&assembled);
+            let ce = Arc::clone(&conn_err);
+            let wh = s.spawn(move || -> std::io::Result<()> {
+                while let Ok(msg) = rx.recv() {
+                    for (i, part) in
+                        super::sharded::split_message(&topo, &msg).into_iter().enumerate()
+                    {
+                        let frame: Frame = match part {
+                            ToServer::Push(p) => Frame::Push2 {
+                                slice_id: i as u64,
+                                start: topo.ranges[i].start as u64,
+                                push: p,
+                            },
+                            ToServer::WorkerExit { worker } => {
+                                Frame::WorkerExit { worker: worker as u64 }
+                            }
+                        };
+                        if let Err(e) = send_bytes(&split_writers[i], &frame.encode()) {
+                            ce.store(true, Ordering::Relaxed);
+                            pub_w.shutdown();
+                            return Err(e);
+                        }
+                    }
+                }
+                for w in &split_writers {
+                    let _ = w.lock().unwrap().shutdown(std::net::Shutdown::Write);
+                }
+                Ok(())
+            });
+            // The worker loop, verbatim, on the assembled view.
+            run_worker(worker, source, factory, Arc::clone(&assembled), tx, profile);
+            let push_res = wh
+                .join()
+                .unwrap_or_else(|_| Err(std::io::Error::other("push splitter panicked")));
+            let end = if saw_shutdown.load(Ordering::Relaxed) {
+                RunEnd::Shutdown
+            } else if conn_err.load(Ordering::Relaxed) || push_res.is_err() {
+                RunEnd::ConnectionLost
+            } else {
+                RunEnd::Left
+            };
+            if let Err(e) = &push_res {
+                log_warn!("worker {worker}: push stream failed: {e}");
+            }
+            // Tear every socket down so the per-slice pumps (and the
+            // assembler behind them) unwind.
+            for c in &ctrls {
+                let _ = c.shutdown(std::net::Shutdown::Both);
+            }
+            sharded.shutdown_all();
+            end
+        });
+        Ok(end)
+    }
+}
+
+/// Reconnect policy for [`remote_worker_loop`] (ROADMAP "WAN
+/// hardening"): bounded retries with exponentially growing, jittered
+/// delays.  The retry budget refills after every successful handshake,
+/// so it bounds each *outage*, not the worker's lifetime; handshake
+/// *rejections* ([`Rejected`] — wrong revision, id in use) are never
+/// retried.
+#[derive(Clone, Copy, Debug)]
+pub struct ReconnectPolicy {
+    /// Retries per outage (0 = fail on the first error).
+    pub max_retries: u32,
+    /// First retry delay; doubles each attempt.
+    pub base: Duration,
+    /// Ceiling on the (pre-jitter) delay.
+    pub cap: Duration,
+}
+
+impl Default for ReconnectPolicy {
+    fn default() -> Self {
+        Self { max_retries: 5, base: Duration::from_millis(200), cap: Duration::from_secs(10) }
+    }
+}
+
+impl ReconnectPolicy {
+    /// The delay before retry `attempt` (0-based): `base · 2^attempt`,
+    /// capped, then jittered by a uniform factor in `[0.5, 1.5)` so a
+    /// fleet of workers dropped by one partition does not reconnect as
+    /// a thundering herd.
+    pub fn delay(&self, attempt: u32, rng: &mut Pcg64) -> Duration {
+        let exp = self.base.as_secs_f64() * 2f64.powi(attempt.min(20) as i32);
+        let capped = exp.min(self.cap.as_secs_f64());
+        Duration::from_secs_f64(capped * (0.5 + rng.next_f64()))
     }
 }
 
 /// Connect to `addr`, handshake (claiming `claim` if given), and run
-/// the worker loop to completion.  Returns the worker id the run used.
-/// This is the whole body of `advgp worker --connect`.
+/// the worker loop to completion, reconnecting with the default
+/// [`ReconnectPolicy`] through transient connect failures and mid-run
+/// link losses.  Returns the worker id the run used.  This is the whole
+/// body of `advgp worker --connect` (single-server form).
 pub fn remote_worker_loop(
     addr: &str,
     claim: Option<usize>,
@@ -616,8 +1415,175 @@ pub fn remote_worker_loop(
     factory: EngineFactory,
     profile: WorkerProfile,
 ) -> Result<usize> {
-    let handle = NetWorkerHandle::connect(addr, claim)?;
+    remote_worker_loop_with(addr, claim, source, factory, profile, ReconnectPolicy::default())
+}
+
+/// [`remote_worker_loop`] with an explicit [`ReconnectPolicy`].
+pub fn remote_worker_loop_with(
+    addr: &str,
+    claim: Option<usize>,
+    mut source: WorkerSource,
+    factory: EngineFactory,
+    profile: WorkerProfile,
+    policy: ReconnectPolicy,
+) -> Result<usize> {
+    let mut claim = claim;
+    // Deterministic per-(worker, address) jitter stream.
+    let seed = fnv1a64(FNV1A64_INIT, addr.as_bytes())
+        ^ claim.map_or(u64::MAX, |c| c as u64);
+    let mut rng = Pcg64::seeded(seed);
+    let mut attempt: u32 = 0;
+    loop {
+        let handle = match NetWorkerHandle::connect(addr, claim) {
+            Ok(h) => h,
+            Err(e) => {
+                // Deliberate rejections are fatal — EXCEPT "id in use",
+                // which is transient by construction on a reconnect:
+                // after a link loss the server frees the id only once
+                // its reader observes the dead connection (up to a
+                // heartbeat window later), so the very scenario the
+                // retry budget exists for answers ERR_ID_IN_USE first.
+                let fatal_rejection = e
+                    .downcast_ref::<Rejected>()
+                    .is_some_and(|r| r.code != ERR_ID_IN_USE);
+                if fatal_rejection || attempt >= policy.max_retries {
+                    return Err(e).with_context(|| {
+                        format!("connect to {addr} (after {attempt} retries)")
+                    });
+                }
+                let delay = policy.delay(attempt, &mut rng);
+                attempt += 1;
+                log_warn!(
+                    "worker: connect to {addr} failed ({e:#}); retry {attempt}/{} in {:.1}s",
+                    policy.max_retries,
+                    delay.as_secs_f64()
+                );
+                std::thread::sleep(delay);
+                continue;
+            }
+        };
+        // A successful handshake refills the budget and pins the id, so
+        // a reconnect resumes the same identity — and the jitter stream
+        // is reseeded with that id: a fleet started with ANY claims
+        // shares one pre-assignment seed, and identical backoff
+        // sequences would reconnect it as exactly the thundering herd
+        // the jitter exists to spread.
+        attempt = 0;
+        let id = handle.worker;
+        if claim != Some(id) {
+            rng = Pcg64::seeded(seed ^ id as u64);
+        }
+        claim = Some(id);
+        match handle.run(&mut source, factory.clone(), profile.clone())? {
+            RunEnd::Shutdown | RunEnd::Left => return Ok(id),
+            RunEnd::ConnectionLost => {
+                if attempt >= policy.max_retries {
+                    bail!("worker {id}: link to {addr} lost and retry budget exhausted");
+                }
+                let delay = policy.delay(attempt, &mut rng);
+                attempt += 1;
+                log_warn!(
+                    "worker {id}: link to {addr} lost; reconnect {attempt}/{} in {:.1}s",
+                    policy.max_retries,
+                    delay.as_secs_f64()
+                );
+                std::thread::sleep(delay);
+            }
+        }
+    }
+}
+
+/// Connect to every slice server of a partitioned fleet, handshake, and
+/// run the worker loop to completion.  Returns the worker id.  This is
+/// the body of `advgp worker --connect addr0,addr1,…`.  No automatic
+/// reconnect: resuming a half-lost multi-link session would need a
+/// fleet-wide rendezvous — the caller restarts the worker instead (its
+/// first pushes re-admit it on every slice).
+pub fn sharded_worker_loop(
+    addrs: &[String],
+    claim: Option<usize>,
+    mut source: WorkerSource,
+    factory: EngineFactory,
+    profile: WorkerProfile,
+) -> Result<usize> {
+    let handle = ShardedWorkerHandle::connect(addrs, claim)?;
     let id = handle.worker;
-    handle.run(source, factory, profile)?;
-    Ok(id)
+    match handle.run(&mut source, factory, profile)? {
+        // A lost link mid-run is a failure the caller (or its
+        // supervisor) must see — exiting 0 would read as "run
+        // complete" while the fleet is still training without us.
+        RunEnd::ConnectionLost => bail!(
+            "worker {id}: a slice-server link was lost mid-run; restart \
+             the worker to rejoin the fleet"
+        ),
+        RunEnd::Shutdown | RunEnd::Left => Ok(id),
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    /// The satellite guarantee: however many connections fan a version
+    /// out (and from however many threads), each (version, revision) is
+    /// encoded exactly once.
+    #[test]
+    fn frame_cache_encodes_each_version_once() {
+        let cache = Arc::new(PublishFrameCache::new(SliceSpec::full(4)));
+        let theta = Arc::new(vec![1.0, 2.0, 3.0, 4.0]);
+        let meta = PublishMeta::default();
+        for version in 1..=3u64 {
+            let mut handles = Vec::new();
+            for _ in 0..8 {
+                let cache = Arc::clone(&cache);
+                let theta = Arc::clone(&theta);
+                handles.push(std::thread::spawn(move || {
+                    cache.get(PROTO_NT2, version, meta, &theta)
+                }));
+            }
+            let frames: Vec<_> = handles.into_iter().map(|h| h.join().unwrap()).collect();
+            // All connections got byte-identical frames.
+            for f in &frames[1..] {
+                assert_eq!(**f, *frames[0]);
+            }
+            assert_eq!(
+                cache.encodes(),
+                version,
+                "one encode per version, not per connection"
+            );
+        }
+        // A rev-1 connection needs its own framing: one more encode,
+        // still shared across rev-1 readers.
+        let a = cache.get(PROTO_NT1, 3, meta, &theta);
+        let b = cache.get(PROTO_NT1, 3, meta, &theta);
+        assert_eq!(*a, *b);
+        assert_eq!(cache.encodes(), 4);
+        assert_eq!(*a, wire::publish_frame_bytes(3, meta, &theta));
+    }
+
+    /// Backoff grows, caps, and jitters within [0.5, 1.5)× —
+    /// deterministic for a seeded stream.
+    #[test]
+    fn reconnect_backoff_grows_caps_and_jitters() {
+        let policy = ReconnectPolicy {
+            max_retries: 10,
+            base: Duration::from_millis(100),
+            cap: Duration::from_secs(2),
+        };
+        let mut rng = Pcg64::seeded(7);
+        let mut prev_nominal = 0.0f64;
+        for attempt in 0..10 {
+            let d = policy.delay(attempt, &mut rng).as_secs_f64();
+            let nominal = (0.1 * 2f64.powi(attempt as i32)).min(2.0);
+            assert!(
+                d >= nominal * 0.5 && d < nominal * 1.5,
+                "attempt {attempt}: {d} outside jitter band around {nominal}"
+            );
+            assert!(nominal >= prev_nominal, "nominal delay must be monotone");
+            prev_nominal = nominal;
+        }
+        // Capped: far attempts never exceed 1.5 × cap.
+        let d = policy.delay(30, &mut rng).as_secs_f64();
+        assert!(d < 2.0 * 1.5 + 1e-9);
+    }
 }

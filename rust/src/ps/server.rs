@@ -6,6 +6,7 @@ use super::checkpoint::Checkpoint;
 use super::delay::DelayGate;
 use super::messages::{Push, PublishMeta, ToServer, STALENESS_UNKNOWN};
 use super::metrics::ServerStats;
+use super::sharded::SliceSpec;
 use super::Published;
 use crate::gp::ThetaLayout;
 use crate::opt::{prox_update, AdaDelta, StepSchedule};
@@ -17,6 +18,14 @@ use std::sync::Arc;
 
 pub struct ServerConfig {
     pub layout: ThetaLayout,
+    /// The contiguous θ slice this server owns (ISSUE 5 partitioning).
+    /// [`SliceSpec::full`] for the classic single-server run; a proper
+    /// sub-range when the coordinator shards θ across `S` server loops
+    /// — the prox and ADADELTA are element-wise, so the loop below is
+    /// identical either way, just restricted to the range.  The
+    /// `published` handle, gradients, and checkpoints of a slice server
+    /// are all slice-sized.
+    pub slice: SliceSpec,
     pub workers: usize,
     pub tau: u64,
     /// Stop once the published version reaches this many updates.  On a
@@ -133,7 +142,10 @@ fn capture_checkpoint(
         log_warn!("checkpoint_every set but no checkpoint_dir; skipping");
         return None;
     };
-    Some((Checkpoint::capture(cfg.layout, t, theta, adadelta, gate.clocks()), dir))
+    Some((
+        Checkpoint::capture_slice(cfg.layout, &cfg.slice, t, theta, adadelta, gate.clocks()),
+        dir,
+    ))
 }
 
 /// Save and swallow-with-warning: training outlives a failed save —
@@ -195,7 +207,19 @@ pub fn run_server(
     rx: Receiver<ToServer>,
 ) -> ServerOutcome {
     let layout = cfg.layout;
-    let dim = layout.len();
+    let slice = &cfg.slice;
+    assert!(
+        slice.range.end <= layout.len() && !slice.is_empty(),
+        "slice [{}, {}) does not fit θ of dim {}",
+        slice.range.start,
+        slice.range.end,
+        layout.len()
+    );
+    // Everything below is slice-local: θ, gradients, and the optimizer
+    // are `dim = slice.len()` long; `layout` is consulted only to map a
+    // local index back to its global coordinate for the element-wise
+    // prox and the hyperparameter freeze.
+    let dim = slice.len();
     let mut theta = published.snapshot().1.as_ref().clone();
     assert_eq!(theta.len(), dim);
     let mut gate = DelayGate::new(cfg.workers, cfg.tau);
@@ -215,7 +239,15 @@ pub fn run_server(
                 layout.m,
                 layout.d
             );
-            assert_eq!(ck.theta.len(), dim);
+            assert_eq!(
+                ck.theta.len(),
+                dim,
+                "resume checkpoint carries {} coordinates but this server's \
+                 slice [{}, {}) holds {dim}",
+                ck.theta.len(),
+                slice.range.start,
+                slice.range.end
+            );
             // The coordinator already published (ck.version, ck.theta);
             // take the checkpoint as the source of truth regardless.
             theta.copy_from_slice(&ck.theta);
@@ -284,13 +316,19 @@ pub fn run_server(
         }
         last_value = value;
         if cfg.freeze_hyper {
-            for g in grad[layout.z_range().start..].iter_mut() {
+            // Freeze everything from Z onward, in *global* coordinates:
+            // the hyper block may start before, inside, or after this
+            // slice's range.
+            let z0 = layout.z_range().start;
+            let lo = z0.saturating_sub(slice.range.start).min(dim);
+            for g in grad[lo..].iter_mut() {
                 *g = 0.0;
             }
         }
         let gamma = cfg.prox.at(t);
-        apply_update(
+        apply_update_slice(
             &layout,
+            slice,
             &mut theta,
             &mut adadelta,
             &grad,
@@ -414,6 +452,64 @@ pub fn apply_update(
     }
 }
 
+/// One server update restricted to a θ slice: the ADADELTA-scaled
+/// gradient step plus the element-wise prox (eqs. 18–20), applied per
+/// coordinate with the *global* index deciding which projection rule
+/// applies.  For [`SliceSpec::full`] this is bitwise-identical to
+/// [`apply_update`] with `shards = 1` (same per-element arithmetic as
+/// [`prox_update`], just a different iteration order over independent
+/// coordinates) — pinned by `full_slice_update_matches_apply_update`.
+/// `shards > 1` parallelizes element-wise *within* the slice, exactly
+/// as `apply_update` does across the whole vector.
+#[allow(clippy::too_many_arguments)]
+pub fn apply_update_slice(
+    layout: &ThetaLayout,
+    slice: &SliceSpec,
+    theta: &mut [f64],
+    adadelta: &mut AdaDelta,
+    grad: &[f64],
+    lr: f64,
+    gamma: f64,
+    shards: usize,
+) {
+    assert_eq!(theta.len(), slice.len());
+    let delta = adadelta.step(grad);
+    let scale = 1.0 / (1.0 + gamma);
+    let base = slice.range.start;
+    // The per-coordinate rule (identical arithmetic to `prox_update`).
+    let elem = |global: usize, t: &mut f64, d: f64| {
+        *t += lr * d;
+        if layout.is_variational(global) {
+            if layout.is_u_diag(global) {
+                let up = *t;
+                *t = (up + (up * up + 4.0 * (1.0 + gamma) * gamma).sqrt())
+                    / (2.0 * (1.0 + gamma));
+            } else {
+                *t *= scale;
+            }
+        }
+    };
+    if shards <= 1 {
+        for (i, (t, d)) in theta.iter_mut().zip(&delta).enumerate() {
+            elem(base + i, t, *d);
+        }
+    } else {
+        let chunk = theta.len().div_ceil(shards);
+        std::thread::scope(|scope| {
+            for (si, (t_chunk, d_chunk)) in
+                theta.chunks_mut(chunk).zip(delta.chunks(chunk)).enumerate()
+            {
+                let elem = &elem;
+                scope.spawn(move || {
+                    for (off, (t, d)) in t_chunk.iter_mut().zip(d_chunk).enumerate() {
+                        elem(base + si * chunk + off, t, *d);
+                    }
+                });
+            }
+        });
+    }
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;
@@ -435,6 +531,88 @@ mod tests {
             apply_update(&layout, &mut sharded, &mut ada, &grad, 0.7, 0.3, shards);
             for (a, b) in serial.iter().zip(&sharded) {
                 assert!((a - b).abs() < 1e-12, "shards={shards}");
+            }
+        }
+    }
+
+    /// The slice-update path with a full slice is the single-server
+    /// update, **bitwise** — the parity the whole partitioned topology
+    /// rests on.
+    #[test]
+    fn full_slice_update_matches_apply_update() {
+        let layout = ThetaLayout::new(5, 3);
+        let dim = layout.len();
+        let mut rng = Pcg64::seeded(9);
+        let theta0: Vec<f64> = (0..dim).map(|_| rng.normal()).collect();
+        let mut single = theta0.clone();
+        let mut sliced = theta0.clone();
+        let mut ada_a = AdaDelta::default_for(dim);
+        let mut ada_b = AdaDelta::default_for(dim);
+        let full = SliceSpec::full(dim);
+        for step in 0..6 {
+            let grad: Vec<f64> = (0..dim).map(|_| rng.normal()).collect();
+            let gamma = 0.05 / (1.0 + step as f64 / 3.0);
+            apply_update(&layout, &mut single, &mut ada_a, &grad, 0.8, gamma, 1);
+            apply_update_slice(&layout, &full, &mut sliced, &mut ada_b, &grad, 0.8, gamma, 1);
+            for (i, (a, b)) in single.iter().zip(&sliced).enumerate() {
+                assert_eq!(a.to_bits(), b.to_bits(), "step {step} θ[{i}]");
+            }
+        }
+    }
+
+    /// S independent slice servers — each with its own optimizer over
+    /// its range — compose to the full update bitwise: element-wise
+    /// separability, the paper's server-side parallelism claim taken to
+    /// the process level.
+    #[test]
+    fn disjoint_slices_compose_to_the_full_update_bitwise() {
+        use crate::ps::sharded::Topology;
+        let layout = ThetaLayout::new(6, 2);
+        let dim = layout.len();
+        let mut rng = Pcg64::seeded(23);
+        let theta0: Vec<f64> = (0..dim).map(|_| rng.normal()).collect();
+        let grads: Vec<Vec<f64>> =
+            (0..5).map(|_| (0..dim).map(|_| rng.normal()).collect()).collect();
+        // Reference: one full-vector server.
+        let mut full_theta = theta0.clone();
+        let mut full_ada = AdaDelta::default_for(dim);
+        for g in &grads {
+            apply_update_slice(
+                &layout,
+                &SliceSpec::full(dim),
+                &mut full_theta,
+                &mut full_ada,
+                g,
+                1.0,
+                0.2,
+                1,
+            );
+        }
+        for s in [2, 3, 4] {
+            let topo = Topology::partition(dim, s);
+            let mut parts: Vec<Vec<f64>> =
+                topo.ranges.iter().map(|r| theta0[r.clone()].to_vec()).collect();
+            let mut adas: Vec<AdaDelta> =
+                topo.ranges.iter().map(|r| AdaDelta::default_for(r.end - r.start)).collect();
+            for g in &grads {
+                for i in 0..s {
+                    let spec = topo.slice(i);
+                    let frag = g[spec.range.clone()].to_vec();
+                    apply_update_slice(
+                        &layout,
+                        &spec,
+                        &mut parts[i],
+                        &mut adas[i],
+                        &frag,
+                        1.0,
+                        0.2,
+                        1,
+                    );
+                }
+            }
+            let assembled: Vec<f64> = parts.concat();
+            for (i, (a, b)) in full_theta.iter().zip(&assembled).enumerate() {
+                assert_eq!(a.to_bits(), b.to_bits(), "S={s} θ[{i}]");
             }
         }
     }

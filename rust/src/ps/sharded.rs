@@ -1,0 +1,477 @@
+//! Partitioned parameter server (ISSUE 5): θ sharded into `S` disjoint
+//! contiguous slices, each owned by an independent server loop.
+//!
+//! ADVGP's weight-space augmentation makes the global update
+//! **element-wise separable**: the ADADELTA direction and the proximal
+//! projection (eqs. 18–20) touch each coordinate of θ independently, so
+//! a server owning only `θ[a..b)` can run Algorithm 1's server side on
+//! its slice with no cross-slice communication at all.  This module
+//! holds the pieces every sharded topology (in-process threads,
+//! loopback TCP, real multi-process deployments) shares:
+//!
+//! * [`SliceSpec`] / [`Topology`] — the partition itself: which slice
+//!   owns which contiguous index range, derived deterministically from
+//!   `(dim, S)` so every participant computes the same map.
+//! * [`ShardedPublished`] — the worker-facing **assembled view**: one
+//!   [`Published`] per slice plus an assembler pump that concatenates
+//!   slice snapshots into a full θ whose version is the **floor of the
+//!   version vector** (`min_s v_s`).  `run_worker` consumes the
+//!   assembled handle and never learns the topology existed.
+//! * [`run_splitter`] — the worker-side push fan-out: one full-θ
+//!   gradient in, `S` per-slice fragment pushes out (worker math — the
+//!   engine, windowing, profiles — is reused unchanged).
+//! * [`merge_outcomes`] — folds the `S` per-slice [`ServerOutcome`]s
+//!   back into one run report.
+//!
+//! # Version-vector staleness semantics
+//!
+//! Each slice server runs its own [`super::DelayGate`] and publishes its
+//! own version counter, so at τ > 0 the slices drift: the assembled θ a
+//! worker pulls may mix fragments from different slice versions.  That
+//! is *by design* — coordinate-wise asynchrony is exactly the freedom
+//! the element-wise separability buys (the same argument that lets
+//! workers be stale lets slices be stale relative to each other).  The
+//! assembled version is the vector floor, so a worker's push clock
+//! `t_k` is a lower bound on every fragment's version, and each slice
+//! gate still enforces `min_k t_k ≥ t_s − τ` for its own counter.  At
+//! **τ = 0** the gates force lockstep: every slice advances only when
+//! every worker has pushed at the current floor, all slices sit at the
+//! same version, and the assembled trajectory is **bitwise identical**
+//! to a single server's (pinned by `rust/tests/sharded_ps.rs`).
+
+use super::messages::{Push, ToServer};
+use super::metrics::ServerStats;
+use super::server::ServerOutcome;
+use super::Published;
+use crate::log_warn;
+use std::ops::Range;
+use std::sync::mpsc::{Receiver, Sender};
+use std::sync::Arc;
+
+/// Most slices one run may be partitioned into.  WELCOME2 carries the
+/// whole topology map inside a handshake frame (≤ 4096 bytes), and a
+/// slice much smaller than θ's natural blocks stops being "highly
+/// parallelizable" and starts being overhead; 64 server processes is
+/// far beyond any realistic deployment of this system.
+pub const MAX_SLICES: usize = 64;
+
+/// One server's slice of θ: a contiguous index range plus its position
+/// in the topology.  `SliceSpec::full` describes the classic
+/// single-server run (slice 0 of 1, the whole vector).
+#[derive(Clone, Debug, PartialEq, Eq)]
+pub struct SliceSpec {
+    /// Which slice this is (`0..n_slices`).
+    pub id: usize,
+    /// Total slices in the topology.
+    pub n_slices: usize,
+    /// The contiguous global θ index range this slice owns.
+    pub range: Range<usize>,
+}
+
+impl SliceSpec {
+    /// The whole of θ as one slice — the single-server degenerate case.
+    pub fn full(dim: usize) -> Self {
+        Self { id: 0, n_slices: 1, range: 0..dim }
+    }
+
+    /// Coordinates in this slice.
+    pub fn len(&self) -> usize {
+        self.range.end - self.range.start
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.range.is_empty()
+    }
+
+    /// Does this slice cover all of a `dim`-long θ?
+    pub fn covers(&self, dim: usize) -> bool {
+        self.range.start == 0 && self.range.end == dim
+    }
+}
+
+/// The full partition map: `dim` coordinates tiled by `S` contiguous
+/// ranges.  Derived deterministically from `(dim, S)` by
+/// [`Topology::partition`], so the coordinator, every slice server, and
+/// every worker agree on the layout without negotiation — the WELCOME2
+/// topology map exists to *validate* that agreement, not to create it.
+#[derive(Clone, Debug, PartialEq, Eq)]
+pub struct Topology {
+    pub dim: usize,
+    pub ranges: Vec<Range<usize>>,
+}
+
+impl Topology {
+    /// Tile `0..dim` into `s` contiguous near-equal ranges: the first
+    /// `dim % s` slices get `⌊dim/s⌋ + 1` coordinates, the rest
+    /// `⌊dim/s⌋` — every slice non-empty for any `s ≤ dim` (a plain
+    /// `div_ceil` chunking would leave trailing slices empty whenever
+    /// `⌈dim/⌈dim/s⌉⌉ < s`, e.g. dim=100, s=64).  The same remainder
+    /// scheme the coordinator uses to split thread budgets.
+    pub fn partition(dim: usize, s: usize) -> Self {
+        assert!(s >= 1, "need at least one slice");
+        assert!(s <= MAX_SLICES, "{s} slices exceeds MAX_SLICES ({MAX_SLICES})");
+        assert!(s <= dim, "cannot split {dim} coordinates into {s} non-empty slices");
+        let base = dim / s;
+        let extra = dim % s;
+        let mut ranges = Vec::with_capacity(s);
+        let mut start = 0;
+        for i in 0..s {
+            let len = base + usize::from(i < extra);
+            ranges.push(start..start + len);
+            start += len;
+        }
+        debug_assert_eq!(start, dim);
+        Self { dim, ranges }
+    }
+
+    pub fn n_slices(&self) -> usize {
+        self.ranges.len()
+    }
+
+    /// The [`SliceSpec`] for slice `i`.
+    pub fn slice(&self, i: usize) -> SliceSpec {
+        SliceSpec { id: i, n_slices: self.ranges.len(), range: self.ranges[i].clone() }
+    }
+
+    /// The wire form of the map (WELCOME2 payload): `(start, end)` per
+    /// slice, in slice-id order.
+    pub fn to_wire(&self) -> Vec<(u64, u64)> {
+        self.ranges.iter().map(|r| (r.start as u64, r.end as u64)).collect()
+    }
+
+    /// Rebuild and validate a topology announced on the wire: ranges
+    /// must be non-empty, contiguous, in order, and tile `0..dim`
+    /// exactly.
+    pub fn from_wire(dim: usize, pairs: &[(u64, u64)]) -> anyhow::Result<Self> {
+        anyhow::ensure!(
+            (1..=MAX_SLICES).contains(&pairs.len()),
+            "topology with {} slices (max {MAX_SLICES})",
+            pairs.len()
+        );
+        let mut ranges = Vec::with_capacity(pairs.len());
+        let mut cursor = 0usize;
+        for (i, &(a, b)) in pairs.iter().enumerate() {
+            let (a, b) = (a as usize, b as usize);
+            anyhow::ensure!(
+                a == cursor && b > a && b <= dim,
+                "topology slice {i} is [{a}, {b}) but the tiling cursor is at \
+                 {cursor} (dim {dim}) — slices must tile θ contiguously"
+            );
+            cursor = b;
+            ranges.push(a..b);
+        }
+        anyhow::ensure!(cursor == dim, "topology tiles only {cursor} of {dim} coordinates");
+        Ok(Self { dim, ranges })
+    }
+}
+
+/// The sharded twin of [`Published`]: one slice handle per server plus
+/// the worker-facing assembled view.  The assembler pump
+/// ([`run_assembler`]) keeps `assembled` at the version-vector floor of
+/// the slices; workers, the evaluator, and the watchdog consume
+/// `assembled` exactly as they would a single server's handle.
+pub struct ShardedPublished {
+    pub topology: Topology,
+    pub slices: Vec<Arc<Published>>,
+    pub assembled: Arc<Published>,
+}
+
+impl ShardedPublished {
+    /// Seed every slice handle from `theta0` (version 0) and adopt the
+    /// caller's `assembled` handle (which the caller has already seeded
+    /// with the full θ₀ — e.g. via [`Published::new`]).
+    pub fn new(topology: Topology, theta0: &[f64], assembled: Arc<Published>) -> Self {
+        assert_eq!(theta0.len(), topology.dim, "θ₀ does not match the topology");
+        let slices = topology
+            .ranges
+            .iter()
+            .map(|r| Published::new(theta0[r.clone()].to_vec()))
+            .collect();
+        Self { topology, slices, assembled }
+    }
+
+    /// Republish a resumed state at `version` on every slice *and* the
+    /// assembled view — the sharded twin of the coordinator's resume
+    /// republish (the first θ anyone observes is the checkpointed θ).
+    pub fn seed(&self, version: u64, theta: &[f64]) {
+        assert_eq!(theta.len(), self.topology.dim);
+        for (p, r) in self.slices.iter().zip(&self.topology.ranges) {
+            p.publish(version, theta[r.clone()].to_vec());
+        }
+        self.assembled.publish(version, theta.to_vec());
+    }
+
+    /// The current per-slice versions (diagnostics; the assembled
+    /// version is this vector's minimum).
+    pub fn version_vector(&self) -> Vec<u64> {
+        self.slices.iter().map(|p| p.snapshot().0).collect()
+    }
+
+    /// Signal shutdown on every handle (slices and assembled).
+    pub fn shutdown_all(&self) {
+        for p in &self.slices {
+            p.shutdown();
+        }
+        self.assembled.shutdown();
+    }
+}
+
+/// The assembler pump: block until **every** slice has a version newer
+/// than the assembled floor, concatenate the fragments, publish the new
+/// floor.  Exits (shutting the assembled view down) as soon as any
+/// slice shuts down.  Run it on its own thread — scoped or detached —
+/// for the life of the run.
+///
+/// At τ = 0 the floor advances one step at a time and every fragment is
+/// at exactly the floor version, so the assembled θ is the single-server
+/// θ bitwise; at τ > 0 fragments may be newer than the floor (the
+/// documented version-vector semantics).
+pub fn run_assembler(sharded: &ShardedPublished) {
+    let topo = &sharded.topology;
+    let mut seen = sharded.assembled.snapshot().0;
+    loop {
+        let mut floor = u64::MAX;
+        let mut floor_meta = super::messages::PublishMeta::default();
+        let mut parts: Vec<Arc<Vec<f64>>> = Vec::with_capacity(topo.n_slices());
+        for p in &sharded.slices {
+            match p.wait_newer_meta(seen) {
+                Some((v, th, meta)) => {
+                    if v < floor {
+                        floor = v;
+                        floor_meta = meta;
+                    }
+                    parts.push(th);
+                }
+                None => {
+                    sharded.assembled.shutdown();
+                    return;
+                }
+            }
+        }
+        let mut theta = vec![0.0f64; topo.dim];
+        for (r, th) in topo.ranges.iter().zip(&parts) {
+            debug_assert_eq!(th.len(), r.end - r.start);
+            theta[r.clone()].copy_from_slice(th);
+        }
+        sharded.assembled.publish_meta(floor, theta, floor_meta);
+        seen = floor;
+    }
+}
+
+/// Split one worker message into its per-slice form: a [`Push`] becomes
+/// one fragment push per slice (same worker/version/value/compute
+/// metadata, the gradient restricted to the slice range); a
+/// [`ToServer::WorkerExit`] fans out verbatim so every slice gate
+/// retires the clock.
+pub fn split_message(topology: &Topology, msg: &ToServer) -> Vec<ToServer> {
+    match msg {
+        ToServer::WorkerExit { worker } => topology
+            .ranges
+            .iter()
+            .map(|_| ToServer::WorkerExit { worker: *worker })
+            .collect(),
+        ToServer::Push(p) => {
+            assert_eq!(
+                p.grad.len(),
+                topology.dim,
+                "worker {} pushed a {}-dim gradient into a {}-dim topology",
+                p.worker,
+                p.grad.len(),
+                topology.dim
+            );
+            topology
+                .ranges
+                .iter()
+                .map(|r| {
+                    ToServer::Push(Push {
+                        worker: p.worker,
+                        version: p.version,
+                        value: p.value,
+                        grad: p.grad[r.clone()].to_vec(),
+                        compute_secs: p.compute_secs,
+                    })
+                })
+                .collect()
+        }
+    }
+}
+
+/// The splitter pump: drain the merged worker channel, fan each message
+/// out to the per-slice server channels.  Exits when every worker-side
+/// sender has dropped (which in turn drops the slice senders, letting
+/// each slice server's receive loop observe disconnect).  Run on its
+/// own thread for the life of the run.
+pub fn run_splitter(
+    topology: &Topology,
+    rx: Receiver<ToServer>,
+    slice_txs: Vec<Sender<ToServer>>,
+) {
+    assert_eq!(slice_txs.len(), topology.n_slices());
+    while let Ok(msg) = rx.recv() {
+        if let ToServer::Push(p) = &msg {
+            if p.grad.len() != topology.dim {
+                log_warn!(
+                    "splitter: dropping worker {} push with dim {} (topology dim {})",
+                    p.worker,
+                    p.grad.len(),
+                    topology.dim
+                );
+                continue;
+            }
+        }
+        for (part, tx) in split_message(topology, &msg).into_iter().zip(&slice_txs) {
+            if tx.send(part).is_err() {
+                // That slice server already returned; keep feeding the
+                // rest so their gates still see exits/pushes.
+            }
+        }
+    }
+}
+
+/// Fold the `S` per-slice outcomes into one run report.
+///
+/// * `theta` — the concatenation of the slice θs (the final assembled
+///   state; at τ=0 identical to a single server's final θ).
+/// * `updates` — the version-vector floor (the assembled version).
+/// * `pushes` — summed: each worker push lands once per slice, so this
+///   counts slice-level messages (documented on [`ServerStats`]).
+/// * `joins`/`leaves` — the max across slices: every slice observes the
+///   same membership events, so the max is the event count (a sum would
+///   multiply-count by `S`).
+/// * timing/staleness series — taken from slice 0 (the slices see
+///   statistically identical streams; merging reservoirs would not add
+///   information).
+pub fn merge_outcomes(topology: &Topology, outcomes: Vec<ServerOutcome>) -> ServerOutcome {
+    assert_eq!(outcomes.len(), topology.n_slices());
+    let mut theta = vec![0.0f64; topology.dim];
+    for (r, o) in topology.ranges.iter().zip(&outcomes) {
+        assert_eq!(o.theta.len(), r.end - r.start, "slice outcome length mismatch");
+        theta[r.clone()].copy_from_slice(&o.theta);
+    }
+    let mut stats: ServerStats = outcomes[0].stats.clone();
+    stats.updates = outcomes.iter().map(|o| o.stats.updates).min().unwrap_or(0);
+    stats.pushes = outcomes.iter().map(|o| o.stats.pushes).sum();
+    stats.joins = outcomes.iter().map(|o| o.stats.joins).max().unwrap_or(0);
+    stats.leaves = outcomes.iter().map(|o| o.stats.leaves).max().unwrap_or(0);
+    let last_value = outcomes[0].last_value;
+    ServerOutcome { theta, stats, last_value }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::ps::messages::PublishMeta;
+
+    #[test]
+    fn partition_tiles_exactly() {
+        for (dim, s) in [(10, 1), (10, 3), (7, 7), (100, 64), (5, 2)] {
+            let t = Topology::partition(dim, s);
+            assert_eq!(t.n_slices(), s);
+            let mut cursor = 0;
+            for (i, r) in t.ranges.iter().enumerate() {
+                assert_eq!(r.start, cursor, "slice {i} not contiguous");
+                assert!(r.end > r.start, "slice {i} empty (dim {dim}, s {s})");
+                cursor = r.end;
+            }
+            assert_eq!(cursor, dim);
+            // The wire roundtrip reproduces the same map.
+            let back = Topology::from_wire(dim, &t.to_wire()).unwrap();
+            assert_eq!(back, t);
+        }
+    }
+
+    #[test]
+    #[should_panic(expected = "non-empty")]
+    fn partition_rejects_more_slices_than_coordinates() {
+        Topology::partition(3, 4);
+    }
+
+    #[test]
+    fn from_wire_rejects_gaps_overlaps_and_short_tilings() {
+        assert!(Topology::from_wire(10, &[(0, 4), (5, 10)]).is_err(), "gap");
+        assert!(Topology::from_wire(10, &[(0, 6), (4, 10)]).is_err(), "overlap");
+        assert!(Topology::from_wire(10, &[(0, 4)]).is_err(), "short");
+        assert!(Topology::from_wire(10, &[(0, 4), (4, 4), (4, 10)]).is_err(), "empty slice");
+        assert!(Topology::from_wire(10, &[]).is_err(), "no slices");
+        assert!(Topology::from_wire(10, &[(0, 11)]).is_err(), "past dim");
+    }
+
+    #[test]
+    fn split_message_fragments_and_fans_out() {
+        let t = Topology::partition(5, 2); // [0..3), [3..5)
+        let push = ToServer::Push(Push {
+            worker: 7,
+            version: 4,
+            value: -2.5,
+            grad: vec![1.0, 2.0, 3.0, 4.0, 5.0],
+            compute_secs: 0.25,
+        });
+        let parts = split_message(&t, &push);
+        assert_eq!(parts.len(), 2);
+        match (&parts[0], &parts[1]) {
+            (ToServer::Push(a), ToServer::Push(b)) => {
+                assert_eq!(a.grad, vec![1.0, 2.0, 3.0]);
+                assert_eq!(b.grad, vec![4.0, 5.0]);
+                for p in [a, b] {
+                    assert_eq!((p.worker, p.version, p.value, p.compute_secs), (7, 4, -2.5, 0.25));
+                }
+            }
+            other => panic!("wrong split: {other:?}"),
+        }
+        let exits = split_message(&t, &ToServer::WorkerExit { worker: 7 });
+        assert_eq!(exits, vec![
+            ToServer::WorkerExit { worker: 7 },
+            ToServer::WorkerExit { worker: 7 },
+        ]);
+    }
+
+    /// The assembled view publishes the version-vector floor, mixing
+    /// fragment versions when slices drift (τ > 0 semantics).
+    #[test]
+    fn assembler_publishes_the_version_floor() {
+        let topo = Topology::partition(4, 2); // [0..2), [2..4)
+        let assembled = Published::new(vec![0.0; 4]);
+        let sharded = ShardedPublished::new(topo, &[0.0; 4], assembled.clone());
+        let slices = sharded.slices.clone();
+        let h = std::thread::spawn(move || run_assembler(&sharded));
+        // Slice 0 races ahead to v2; slice 1 reaches v1: floor = 1.
+        slices[0].publish_meta(1, vec![1.0, 1.0], PublishMeta { live: 2, staleness: 0 });
+        slices[0].publish(2, vec![2.0, 2.0]);
+        slices[1].publish(1, vec![10.0, 10.0]);
+        let (v, th) = assembled.wait_newer(0).unwrap();
+        assert_eq!(v, 1);
+        // Fragments may be newer than the floor — slice 0's v2 payload
+        // rides along (or its v1 did, if the assembler won the race);
+        // either way slice 1's fragment is its v1 payload.
+        assert_eq!(&th[2..4], &[10.0, 10.0]);
+        assert!(th[0] == 1.0 || th[0] == 2.0);
+        // Slice shutdown propagates to the assembled view and ends the
+        // assembler.
+        slices[0].shutdown();
+        slices[1].shutdown();
+        h.join().unwrap();
+        assert!(assembled.snapshot().2, "assembled view must observe shutdown");
+    }
+
+    #[test]
+    fn merge_outcomes_concatenates_and_floors() {
+        let topo = Topology::partition(4, 2);
+        let mk = |theta: Vec<f64>, updates, pushes, joins, leaves| {
+            let mut stats = ServerStats::default();
+            stats.updates = updates;
+            stats.pushes = pushes;
+            stats.joins = joins;
+            stats.leaves = leaves;
+            ServerOutcome { theta, stats, last_value: -1.0 }
+        };
+        let merged = merge_outcomes(
+            &topo,
+            vec![mk(vec![1.0, 2.0], 10, 40, 1, 2), mk(vec![3.0, 4.0], 9, 38, 1, 2)],
+        );
+        assert_eq!(merged.theta, vec![1.0, 2.0, 3.0, 4.0]);
+        assert_eq!(merged.stats.updates, 9, "version-vector floor");
+        assert_eq!(merged.stats.pushes, 78, "slice-level pushes sum");
+        assert_eq!(merged.stats.joins, 1);
+        assert_eq!(merged.stats.leaves, 2);
+    }
+}

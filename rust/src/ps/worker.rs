@@ -94,9 +94,14 @@ pub struct WorkerProfile {
 /// leave).  The worker pulls θ from `published`, computes its local
 /// gradient over `source`, and pushes to `tx` — Algorithm 1, worker
 /// side.
+///
+/// `source` is borrowed, not consumed: a transport that reconnects
+/// after a dropped link ([`super::net::remote_worker_loop`]'s bounded
+/// retry) hands the *same* source — stream cursor and all — to the
+/// next `run_worker` call.
 pub fn run_worker(
     worker_id: usize,
-    mut source: WorkerSource,
+    source: &mut WorkerSource,
     factory: EngineFactory,
     published: Arc<Published>,
     tx: Sender<ToServer>,
@@ -115,7 +120,7 @@ pub fn run_worker(
     // across iterations; uncapped memory workers borrow the shard
     // directly (the pre-ISSUE-2 path cloned the whole dataset every
     // step).
-    let window_rows = match &source {
+    let window_rows = match &*source {
         WorkerSource::Memory(_) => {
             if profile.max_rows > 0 && profile.max_rows < n {
                 profile.max_rows
@@ -141,7 +146,7 @@ pub fn run_worker(
     } else {
         0
     };
-    if let WorkerSource::Store(reader) = &mut source {
+    if let WorkerSource::Store(reader) = &mut *source {
         // The reader owns the stream cursor for store sources — one
         // copy of the cyclic arithmetic, in `data::store`.
         reader.set_chunk_rows(window_rows);
@@ -170,7 +175,7 @@ pub fn run_worker(
             engine = factory(worker_id);
         }
 
-        let (x, y): (&Mat, &[f64]) = match &mut source {
+        let (x, y): (&Mat, &[f64]) = match &mut *source {
             WorkerSource::Memory(ds) => {
                 if window_rows > 0 {
                     ds.copy_cyclic_window(offset, window_rows, &mut window);

@@ -10,7 +10,8 @@ use advgp::grad::native_factory;
 use advgp::ps::coordinator::{train, train_remote, TrainConfig};
 use advgp::ps::net::{remote_worker_loop, NetServer, NetWorkerHandle};
 use advgp::ps::wire::{
-    self, Frame, ERR_ID_IN_USE, ERR_MALFORMED, ERR_PROTO, PROTO_VERSION,
+    self, Frame, ERR_ID_IN_USE, ERR_MALFORMED, ERR_PROTO, PROTO_NT1, PROTO_NT2,
+    PROTO_VERSION,
 };
 use advgp::ps::worker::{WorkerProfile, WorkerSource};
 use advgp::ps::{Checkpoint, PublishMeta};
@@ -218,8 +219,9 @@ fn mid_stream_disconnect_retires_clock_via_gate() {
         })
         .collect();
 
-    // The flaky third member: handshakes as worker 2, pushes one
-    // all-zero gradient, then vanishes without an EXIT frame.
+    // The flaky third member: handshakes as worker 2 — speaking
+    // revision 1, which a rev-2 single-slice server must still serve —
+    // pushes one all-zero gradient, then vanishes without an EXIT frame.
     let flaky = {
         let addr = addr.clone();
         let dim = layout.len();
@@ -227,7 +229,7 @@ fn mid_stream_disconnect_retires_clock_via_gate() {
             let mut s = TcpStream::connect(&addr).unwrap();
             wire::write_frame(
                 &mut s,
-                &Frame::Hello { proto: PROTO_VERSION, worker: 2 },
+                &Frame::Hello { proto: PROTO_NT1, worker: 2 },
             )
             .unwrap();
             let mut scratch = Vec::new();
@@ -312,10 +314,27 @@ fn handshake_rejects_bad_proto_and_duplicate_ids() {
     let auto = NetWorkerHandle::connect(&addr, None).unwrap();
     assert_eq!(auto.worker, 1, "lowest free id ≥ declared worker count");
 
-    // Wrong protocol revision → ERR_PROTO error frame.
+    // Version negotiation: a client offering a *future* revision is
+    // negotiated down to the server's highest (min(offer, ours) = 2),
+    // not rejected — forward compatibility by construction.
     {
         let mut s = TcpStream::connect(&addr).unwrap();
         wire::write_frame(&mut s, &Frame::Hello { proto: 99, worker: 7 }).unwrap();
+        let mut scratch = Vec::new();
+        match wire::read_frame(&mut s, &mut scratch).unwrap() {
+            Frame::Welcome2 { proto, worker, .. } => {
+                assert_eq!(proto, PROTO_NT2, "negotiated down to rev 2");
+                assert_eq!(worker, 7);
+            }
+            f => panic!("expected WELCOME2 at rev 2, got {f:?}"),
+        }
+    }
+
+    // An unknown *lower* revision (0) has no framing we can speak →
+    // ERR_PROTO error frame.
+    {
+        let mut s = TcpStream::connect(&addr).unwrap();
+        wire::write_frame(&mut s, &Frame::Hello { proto: 0, worker: 8 }).unwrap();
         let mut scratch = Vec::new();
         match wire::read_frame(&mut s, &mut scratch).unwrap() {
             Frame::Error { code, .. } => assert_eq!(code, ERR_PROTO),
@@ -357,10 +376,11 @@ fn protocol_violations_get_errors_and_retire_the_clock() {
     let (_train, _test, theta, layout) = setup(200, 4, 21);
     let dim = layout.len();
 
-    // Handshake as worker 0 and return the stream + handshake version.
+    // Handshake as worker 0 (revision 1 — the violation handling must
+    // be revision-agnostic) and return the stream + handshake version.
     let connect = |addr: &str| -> (TcpStream, u64) {
         let mut s = TcpStream::connect(addr).unwrap();
-        wire::write_frame(&mut s, &Frame::Hello { proto: PROTO_VERSION, worker: 0 })
+        wire::write_frame(&mut s, &Frame::Hello { proto: PROTO_NT1, worker: 0 })
             .unwrap();
         let mut scratch = Vec::new();
         match wire::read_frame(&mut s, &mut scratch).unwrap() {
@@ -504,7 +524,7 @@ fn publish_frames_carry_clock_metadata() {
             let mut s = TcpStream::connect(&addr).unwrap();
             wire::write_frame(
                 &mut s,
-                &Frame::Hello { proto: PROTO_VERSION, worker: 5 },
+                &Frame::Hello { proto: PROTO_NT1, worker: 5 },
             )
             .unwrap();
             let mut scratch = Vec::new();

@@ -1,0 +1,489 @@
+//! Integration: the partitioned parameter server (ISSUE 5) — θ sharded
+//! over S independent server loops, in-process and over loopback TCP.
+//!
+//! The acceptance criteria pinned here:
+//! * τ=0 sharded runs (S ∈ {1, 2, 3} in-process; S = 2 loopback TCP)
+//!   reproduce the single-server θ trajectory **bitwise**;
+//! * a sharded checkpoint (per-slice ADVGPCK1 files + topology
+//!   manifest) resumes bitwise — including *across* topologies (a
+//!   single server can resume a sharded directory);
+//! * a worker killed mid-run is retired from **every** slice gate so
+//!   the survivors finish;
+//! * an ADVGPNT1 (rev-1) peer still interoperates with an unsharded
+//!   rev-2 server, and is cleanly rejected by a slice server it cannot
+//!   address;
+//! * a wedged-but-connected worker is retired by the PING/PONG
+//!   heartbeat;
+//! * `remote_worker_loop` reconnects with bounded backoff.
+
+use advgp::data::{kmeans, synth, Dataset, Standardizer};
+use advgp::gp::{Theta, ThetaLayout};
+use advgp::grad::native_factory;
+use advgp::ps::coordinator::{train, train_remote, train_remote_sharded, TrainConfig};
+use advgp::ps::net::{
+    remote_worker_loop_with, sharded_worker_loop, NetServer, ReconnectPolicy,
+};
+use advgp::ps::wire::{self, Frame, ERR_PROTO, PROTO_NT1, PROTO_NT2};
+use advgp::ps::worker::{WorkerProfile, WorkerSource};
+use advgp::ps::{checkpoint, Checkpoint};
+use advgp::util::rng::Pcg64;
+use std::net::{TcpListener, TcpStream};
+use std::path::PathBuf;
+
+fn tdir(name: &str) -> PathBuf {
+    let dir = std::env::temp_dir().join("advgp_sharded_test").join(name);
+    let _ = std::fs::remove_dir_all(&dir);
+    std::fs::create_dir_all(&dir).unwrap();
+    dir
+}
+
+/// Standardized friedman problem + kmeans-initialized θ.
+fn setup(n: usize, m: usize, seed: u64) -> (Dataset, Dataset, Theta, ThetaLayout) {
+    let mut ds = synth::friedman(n + 200, 4, 0.4, seed);
+    let mut rng = Pcg64::seeded(seed);
+    ds.shuffle(&mut rng);
+    let (mut train_ds, mut test_ds) = ds.split(200);
+    let st = Standardizer::fit(&train_ds);
+    st.apply(&mut train_ds);
+    st.apply(&mut test_ds);
+    let layout = ThetaLayout::new(m, 4);
+    let z = kmeans::kmeans(&train_ds.x, m, 15, &mut rng);
+    let theta = Theta::init(layout, &z);
+    (train_ds, test_ds, theta, layout)
+}
+
+/// Fixed per-worker thread budgets: the gradient engine's lane
+/// reduction is deterministic *per budget*, so bitwise comparisons pin
+/// every worker to one lane on both topologies.
+fn one_thread() -> WorkerProfile {
+    WorkerProfile { threads: 1, ..Default::default() }
+}
+
+fn assert_bitwise(a: &[f64], b: &[f64], what: &str) {
+    assert_eq!(a.len(), b.len(), "{what}: length");
+    for (i, (x, y)) in a.iter().zip(b).enumerate() {
+        assert_eq!(x.to_bits(), y.to_bits(), "{what}: θ[{i}] diverged ({x} vs {y})");
+    }
+}
+
+/// The tentpole acceptance test, in-process: at τ=0, partitioning θ
+/// over S ∈ {2, 3} slice servers reproduces the single-server (S=1)
+/// trajectory bitwise — element-wise separability taken to the
+/// process level.
+#[test]
+fn tau0_sharded_in_process_matches_single_server_bitwise() {
+    let (train_ds, _test, theta, layout) = setup(400, 6, 31);
+    let shards = train_ds.shard(2);
+    let run = |servers: usize| {
+        let mut cfg = TrainConfig::new(layout);
+        cfg.tau = 0;
+        cfg.max_updates = 25;
+        cfg.eval_every_secs = 0.0;
+        cfg.servers = servers;
+        cfg.profiles = vec![one_thread(), one_thread()];
+        train(&cfg, theta.data.clone(), shards.clone(), native_factory(layout), None)
+    };
+    let single = run(1);
+    assert_eq!(single.stats.updates, 25);
+    for s in [2, 3] {
+        let sharded = run(s);
+        assert_eq!(sharded.stats.updates, 25, "S={s}: version-vector floor");
+        assert_bitwise(&single.theta, &sharded.theta, &format!("S={s} vs single"));
+        // Each worker push fans out once per slice.
+        assert_eq!(sharded.stats.pushes, single.stats.pushes * s as u64, "S={s} pushes");
+    }
+}
+
+/// The loopback-TCP twin: 2 slice servers, 2 sharded workers connecting
+/// to both (`ADVGPNT2` WELCOME2/PUBLISH2/PUSH2), τ=0 — bitwise equal to
+/// the in-process single-server run.
+#[test]
+fn tau0_sharded_loopback_tcp_matches_single_server_bitwise() {
+    let (train_ds, _test, theta, layout) = setup(400, 6, 33);
+    let shards = train_ds.shard(2);
+    let mk_cfg = || {
+        let mut cfg = TrainConfig::new(layout);
+        cfg.tau = 0;
+        cfg.max_updates = 20;
+        cfg.eval_every_secs = 0.0;
+        cfg.profiles = vec![one_thread(), one_thread()];
+        cfg
+    };
+    // In-process single-server reference.
+    let local = train(
+        &mk_cfg(),
+        theta.data.clone(),
+        shards.clone(),
+        native_factory(layout),
+        None,
+    );
+    assert_eq!(local.stats.updates, 20);
+
+    // Two slice servers on loopback; each worker connects to both.
+    let nets: Vec<NetServer> =
+        (0..2).map(|_| NetServer::bind("127.0.0.1:0").unwrap()).collect();
+    let addrs: Vec<String> = nets.iter().map(|n| n.local_addr().to_string()).collect();
+    let workers: Vec<_> = shards
+        .into_iter()
+        .enumerate()
+        .map(|(k, shard)| {
+            let addrs = addrs.clone();
+            std::thread::spawn(move || {
+                sharded_worker_loop(
+                    &addrs,
+                    Some(k),
+                    WorkerSource::Memory(shard),
+                    native_factory(layout),
+                    one_thread(),
+                )
+                .unwrap()
+            })
+        })
+        .collect();
+    let remote = train_remote_sharded(&mk_cfg(), theta.data.clone(), nets, 2, None);
+    for w in workers {
+        w.join().unwrap();
+    }
+    assert_eq!(remote.stats.updates, 20);
+    assert_bitwise(&local.theta, &remote.theta, "loopback S=2 vs in-process single");
+}
+
+/// Sharded durability: per-slice ADVGPCK1 files under `slice_*/`, a
+/// topology manifest at the root, per-slice keep-last GC — and a resume
+/// that lands bitwise on the uninterrupted single-server trajectory,
+/// from BOTH a sharded continuation (S=2) and a single-server
+/// continuation of the same sharded directory (cross-topology resume).
+#[test]
+fn sharded_checkpoint_resumes_bitwise_across_topologies() {
+    let ckdir = tdir("resume");
+    let (train_ds, _test, theta, layout) = setup(300, 6, 35);
+    let shards = train_ds.shard(2);
+    let run = |servers: usize, max: u64, every: u64, resume: Option<Checkpoint>| {
+        let mut cfg = TrainConfig::new(layout);
+        cfg.tau = 0;
+        cfg.max_updates = max;
+        cfg.eval_every_secs = 0.0;
+        cfg.servers = servers;
+        cfg.profiles = vec![one_thread(), one_thread()];
+        cfg.checkpoint_every = every;
+        cfg.checkpoint_dir = (every > 0).then(|| ckdir.clone());
+        cfg.keep_last = (every > 0).then_some(2);
+        cfg.resume_from = resume;
+        train(&cfg, theta.data.clone(), shards.clone(), native_factory(layout), None)
+    };
+
+    // Leg 1: sharded (S=2), 15 updates, checkpoint every 5, keep 2.
+    let leg1 = run(2, 15, 5, None);
+    assert_eq!(leg1.stats.updates, 15);
+    assert!(ckdir.join("topology.json").is_file(), "topology manifest at the root");
+    for i in 0..2 {
+        let sdir = Checkpoint::slice_dir(&ckdir, i, 2);
+        let files = Checkpoint::list_in(&sdir).unwrap();
+        assert!(
+            !files.is_empty() && files.len() <= 2,
+            "slice {i}: keep_last=2 retained {} files",
+            files.len()
+        );
+    }
+    // The assembled checkpoint is the single-server checkpoint, bitwise.
+    let ck = Checkpoint::load_latest_any(&ckdir).unwrap().expect("sealed");
+    assert_eq!(ck.version, 15);
+    assert_eq!(ck.theta.len(), layout.len());
+    assert_bitwise(&ck.theta, &leg1.theta, "assembled seal vs leg-1 θ");
+
+    // Uninterrupted single-server reference to 30.
+    let direct = run(1, 30, 0, None);
+
+    // Sharded resume → 30: bitwise.
+    let resumed_sharded = run(2, 30, 0, Some(ck.clone()));
+    assert_eq!(resumed_sharded.stats.updates, 30);
+    assert_bitwise(&direct.theta, &resumed_sharded.theta, "sharded resume");
+
+    // Cross-topology: a SINGLE server resuming the sharded directory's
+    // assembled state — same trajectory, bitwise.
+    let resumed_single = run(1, 30, 0, Some(ck));
+    assert_eq!(resumed_single.stats.updates, 30);
+    assert_bitwise(&direct.theta, &resumed_single.theta, "cross-topology resume");
+}
+
+/// Kill-one-worker gate behavior on a partitioned fleet: a worker that
+/// handshakes with both slice servers, pushes one fragment to each, and
+/// vanishes without EXIT must have its clock retired on EVERY slice —
+/// at τ=2 a single lingering clock would stall the run within three
+/// updates.
+#[test]
+fn killed_worker_is_retired_on_every_slice() {
+    let (train_ds, _test, theta, layout) = setup(600, 8, 37);
+    let shards = train_ds.shard(2);
+    let nets: Vec<NetServer> =
+        (0..2).map(|_| NetServer::bind("127.0.0.1:0").unwrap()).collect();
+    let addrs: Vec<String> = nets.iter().map(|n| n.local_addr().to_string()).collect();
+
+    // Two well-behaved sharded workers own the real shards.
+    let workers: Vec<_> = shards
+        .into_iter()
+        .enumerate()
+        .map(|(k, shard)| {
+            let addrs = addrs.clone();
+            std::thread::spawn(move || {
+                sharded_worker_loop(
+                    &addrs,
+                    Some(k),
+                    WorkerSource::Memory(shard),
+                    native_factory(layout),
+                    one_thread(),
+                )
+                .unwrap()
+            })
+        })
+        .collect();
+
+    // The flaky third member: raw ADVGPNT2 client against both slice
+    // servers — HELLO, read WELCOME2 + initial PUBLISH2, push one
+    // all-zero fragment, then drop both sockets (kill -9, not EXIT).
+    let flaky = {
+        let addrs = addrs.clone();
+        std::thread::spawn(move || {
+            let mut socks = Vec::new();
+            for addr in &addrs {
+                let mut s = TcpStream::connect(addr).unwrap();
+                wire::write_frame(&mut s, &Frame::Hello { proto: PROTO_NT2, worker: 2 })
+                    .unwrap();
+                let mut scratch = Vec::new();
+                let (slice_id, start, len) =
+                    match wire::read_frame(&mut s, &mut scratch).unwrap() {
+                        Frame::Welcome2 { worker, slice_id, start, end, .. } => {
+                            assert_eq!(worker, 2);
+                            (slice_id, start, (end - start) as usize)
+                        }
+                        f => panic!("expected WELCOME2, got {f:?}"),
+                    };
+                let version = match wire::read_frame(&mut s, &mut scratch).unwrap() {
+                    Frame::Publish2 { version, theta, .. } => {
+                        assert_eq!(theta.len(), len);
+                        version
+                    }
+                    f => panic!("expected PUBLISH2, got {f:?}"),
+                };
+                let push = advgp::ps::messages::Push {
+                    worker: 2,
+                    version,
+                    value: 0.0,
+                    grad: vec![0.0; len],
+                    compute_secs: 0.0,
+                };
+                wire::write_frame(&mut s, &Frame::Push2 { slice_id, start, push }).unwrap();
+                socks.push(s);
+            }
+            drop(socks); // vanish from the whole fleet at once
+        })
+    };
+
+    let mut cfg = TrainConfig::new(layout);
+    cfg.tau = 2;
+    cfg.max_updates = 40;
+    cfg.eval_every_secs = 0.0;
+    cfg.time_limit_secs = Some(60.0); // hang backstop only; never hit
+    let res = train_remote_sharded(&cfg, theta.data.clone(), nets, 3, None);
+    flaky.join().unwrap();
+    for w in workers {
+        w.join().unwrap();
+    }
+    assert_eq!(
+        res.stats.updates, 40,
+        "survivors must finish the run after the fleet-wide disconnect"
+    );
+    assert!(res.stats.leaves >= 1, "the EOF must be observed as a departure");
+    assert!(res.stats.staleness.max <= cfg.tau as f64);
+}
+
+/// Version negotiation at the fleet boundary: a rev-1 peer keeps
+/// working against an *unsharded* rev-2 server (that interop is pinned
+/// by `net_transport.rs`), but a slice server cannot be addressed by
+/// rev-1 frames at all — the handshake must say so explicitly.
+#[test]
+fn rev1_client_is_rejected_by_a_slice_server_only() {
+    let (_train, _test, theta, layout) = setup(200, 4, 39);
+    let nets: Vec<NetServer> =
+        (0..2).map(|_| NetServer::bind("127.0.0.1:0").unwrap()).collect();
+    let addr0 = nets[0].local_addr().to_string();
+    let server = {
+        let mut cfg = TrainConfig::new(layout);
+        cfg.tau = 0;
+        cfg.max_updates = 5;
+        cfg.eval_every_secs = 0.0;
+        cfg.time_limit_secs = Some(2.0); // nobody real ever joins
+        let theta0 = theta.data.clone();
+        std::thread::spawn(move || train_remote_sharded(&cfg, theta0, nets, 1, None))
+    };
+    // Rev-1 HELLO at a slice server → ERR_PROTO with a pointer to rev 2.
+    let mut s = TcpStream::connect(&addr0).unwrap();
+    wire::write_frame(&mut s, &Frame::Hello { proto: PROTO_NT1, worker: 0 }).unwrap();
+    let mut scratch = Vec::new();
+    match wire::read_frame(&mut s, &mut scratch).unwrap() {
+        Frame::Error { code, message } => {
+            assert_eq!(code, ERR_PROTO);
+            assert!(message.contains("slice"), "error should explain the slice: {message}");
+        }
+        f => panic!("expected ERROR, got {f:?}"),
+    }
+    drop(s);
+    let res = server.join().unwrap();
+    assert_eq!(res.stats.updates, 0);
+}
+
+/// WAN hardening: a worker that handshakes, pushes once, then wedges —
+/// socket open, nothing ever read or written again — is retired by the
+/// PING + grace heartbeat, and the survivors finish the run.  Without
+/// the heartbeat this exact topology deadlocks until the wall-clock
+/// watchdog (the pre-ISSUE-5 documented gap).
+#[test]
+fn wedged_worker_is_retired_by_heartbeat() {
+    let (train_ds, _test, theta, layout) = setup(400, 6, 41);
+    let shards = train_ds.shard(2);
+    let net = NetServer::bind("127.0.0.1:0").unwrap();
+    let addr = net.local_addr().to_string();
+
+    // Worker 0: healthy, owns shard 0 (remote_worker_loop answers PONGs
+    // through its publish pump).
+    let healthy = {
+        let addr = addr.clone();
+        let shard = shards[0].clone();
+        std::thread::spawn(move || {
+            remote_worker_loop_with(
+                &addr,
+                Some(0),
+                WorkerSource::Memory(shard),
+                native_factory(layout),
+                one_thread(),
+                ReconnectPolicy::default(),
+            )
+            .unwrap()
+        })
+    };
+    // Worker 1: handshakes (rev 2), pushes one real-shaped gradient,
+    // then sleeps forever without reading — wedged, not disconnected.
+    let dim = layout.len();
+    let _wedged = {
+        let addr = addr.clone();
+        std::thread::spawn(move || {
+            let mut s = TcpStream::connect(&addr).unwrap();
+            wire::write_frame(&mut s, &Frame::Hello { proto: PROTO_NT2, worker: 1 })
+                .unwrap();
+            let mut scratch = Vec::new();
+            match wire::read_frame(&mut s, &mut scratch).unwrap() {
+                Frame::Welcome2 { worker: 1, .. } => {}
+                f => panic!("expected WELCOME2, got {f:?}"),
+            }
+            let version = match wire::read_frame(&mut s, &mut scratch).unwrap() {
+                Frame::Publish2 { version, .. } => version,
+                f => panic!("expected PUBLISH2, got {f:?}"),
+            };
+            let push = advgp::ps::messages::Push {
+                worker: 1,
+                version,
+                value: 0.0,
+                grad: vec![0.0; dim],
+                compute_secs: 0.0,
+            };
+            wire::write_frame(&mut s, &Frame::Push2 { slice_id: 0, start: 0, push })
+                .unwrap();
+            // Wedge: hold the socket, answer nothing.  (Not joined; the
+            // thread parks well past the test's lifetime.)
+            std::thread::sleep(std::time::Duration::from_secs(30));
+            drop(s);
+        })
+    };
+
+    let mut cfg = TrainConfig::new(layout);
+    cfg.tau = 2;
+    cfg.max_updates = 30;
+    cfg.eval_every_secs = 0.0;
+    cfg.heartbeat_secs = 0.2; // PING after 200 ms silence, retire after 400 ms
+    cfg.time_limit_secs = Some(60.0); // backstop only — the heartbeat must win
+    let start = std::time::Instant::now();
+    let res = train_remote(&cfg, theta.data.clone(), net, 2, None);
+    healthy.join().unwrap();
+    assert_eq!(res.stats.updates, 30, "survivor must finish after the wedge retires");
+    assert!(res.stats.leaves >= 1, "the wedged worker must count as a departure");
+    assert!(
+        start.elapsed() < std::time::Duration::from_secs(30),
+        "the heartbeat, not the watchdog, must have retired the wedge"
+    );
+}
+
+/// WAN hardening: the reconnect loop retries the initial connect with
+/// bounded backoff, so a worker started before its server still joins.
+#[test]
+fn worker_retries_connect_until_the_server_binds() {
+    let (train_ds, _test, theta, layout) = setup(200, 4, 43);
+    // Reserve a port, free it, and bind the real server there shortly
+    // after the worker has already started dialing.
+    let port = {
+        let probe = TcpListener::bind("127.0.0.1:0").unwrap();
+        probe.local_addr().unwrap().port()
+    };
+    let addr = format!("127.0.0.1:{port}");
+    let worker = {
+        let addr = addr.clone();
+        let shard = train_ds.clone();
+        std::thread::spawn(move || {
+            remote_worker_loop_with(
+                &addr,
+                Some(0),
+                WorkerSource::Memory(shard),
+                native_factory(layout),
+                one_thread(),
+                ReconnectPolicy {
+                    max_retries: 60,
+                    base: std::time::Duration::from_millis(50),
+                    cap: std::time::Duration::from_millis(200),
+                },
+            )
+            .unwrap()
+        })
+    };
+    std::thread::sleep(std::time::Duration::from_millis(400));
+    let net = NetServer::bind(&addr).unwrap();
+    let mut cfg = TrainConfig::new(layout);
+    cfg.tau = 0;
+    cfg.max_updates = 5;
+    cfg.eval_every_secs = 0.0;
+    cfg.time_limit_secs = Some(30.0);
+    let res = train_remote(&cfg, theta.data.clone(), net, 1, None);
+    assert_eq!(res.stats.updates, 5, "the late-dialing worker must have joined");
+    assert_eq!(worker.join().unwrap(), 0);
+}
+
+/// The lineage manifest travels with sharded checkpoint directories
+/// too: each run (fresh, then resumed) appends one record at the root.
+#[test]
+fn sharded_lineage_records_fresh_and_resumed_runs() {
+    let ckdir = tdir("lineage");
+    let (train_ds, _test, theta, layout) = setup(200, 4, 45);
+    let shards = train_ds.shard(2);
+    let run = |max: u64, resume: Option<Checkpoint>| {
+        let mut cfg = TrainConfig::new(layout);
+        cfg.tau = 0;
+        cfg.max_updates = max;
+        cfg.eval_every_secs = 0.0;
+        cfg.servers = 2;
+        cfg.profiles = vec![one_thread(), one_thread()];
+        cfg.checkpoint_every = 5;
+        cfg.checkpoint_dir = Some(ckdir.clone());
+        cfg.resume_from = resume;
+        train(&cfg, theta.data.clone(), shards.clone(), native_factory(layout), None)
+    };
+    run(10, None);
+    let ck = Checkpoint::load_latest_any(&ckdir).unwrap().expect("sealed");
+    run(20, Some(ck));
+    let records = checkpoint::read_lineage(&ckdir).unwrap();
+    assert_eq!(records.len(), 2, "one record per completed run");
+    assert_eq!(records[0].resumed_from, None);
+    assert_eq!(records[0].step, 10);
+    assert_eq!(records[1].resumed_from, Some(10));
+    assert_eq!(records[1].step, 20);
+    assert_ne!(records[0].run_id, records[1].run_id);
+    let prov = checkpoint::provenance(&ckdir).unwrap();
+    assert!(prov.contains(&records[0].run_id) && prov.contains("resumed from v10"));
+}

@@ -489,3 +489,85 @@ fn worker_residency_is_one_chunk() {
         "steady-state minibatch path allocated"
     );
 }
+
+/// The checkpoint lineage manifest (ISSUE 5 satellite): every run that
+/// seals appends one `(run_id, resumed_from, step, wall_time)` record
+/// to `lineage.json`, chained across resumes, and the manifest survives
+/// keep-last-K GC (which touches only `ck_*.bin`).
+#[test]
+fn lineage_manifest_chains_runs_and_survives_gc() {
+    use advgp::ps::checkpoint::{self, LINEAGE_MANIFEST};
+    let ckdir = tdir("lineage");
+    let (train_ds, _test, theta, layout) = setup(300, 6, 51);
+    let shards = train_ds.shard(2);
+    let run = |max: u64, resume: Option<Checkpoint>| {
+        let mut cfg = TrainConfig::new(layout);
+        cfg.tau = 0;
+        cfg.max_updates = max;
+        cfg.eval_every_secs = 0.0;
+        cfg.profiles = vec![
+            WorkerProfile { threads: 1, ..Default::default() },
+            WorkerProfile { threads: 1, ..Default::default() },
+        ];
+        cfg.checkpoint_every = 4;
+        cfg.checkpoint_dir = Some(ckdir.clone());
+        cfg.keep_last = Some(2);
+        cfg.resume_from = resume;
+        train(&cfg, theta.data.clone(), shards.clone(), native_factory(layout), None)
+    };
+
+    // Fresh run to 8: one record, no parent.
+    run(8, None);
+    let records = checkpoint::read_lineage(&ckdir).unwrap();
+    assert_eq!(records.len(), 1);
+    assert_eq!(records[0].resumed_from, None);
+    assert_eq!(records[0].step, 8);
+    assert!(records[0].wall_secs >= 0.0);
+
+    // Resume to 16: second record, chained to the v8 seal.
+    let ck = Checkpoint::load_latest(&ckdir).unwrap().expect("sealed");
+    assert_eq!(ck.version, 8);
+    run(16, Some(ck));
+    let records = checkpoint::read_lineage(&ckdir).unwrap();
+    assert_eq!(records.len(), 2, "one record per completed run");
+    assert_eq!(records[1].resumed_from, Some(8));
+    assert_eq!(records[1].step, 16);
+    assert_ne!(records[0].run_id, records[1].run_id, "distinct runs, distinct ids");
+
+    // GC prunes checkpoint files only — the manifest (and the newest
+    // seal) survive an aggressive keep=1 pass.
+    Checkpoint::prune_keep_last(&ckdir, 1).unwrap();
+    assert!(ckdir.join(LINEAGE_MANIFEST).is_file(), "lineage survives GC");
+    assert_eq!(Checkpoint::load_latest(&ckdir).unwrap().unwrap().version, 16);
+    assert_eq!(checkpoint::read_lineage(&ckdir).unwrap().len(), 2);
+
+    // Provenance rendering: one line per run, chained.
+    let prov = checkpoint::provenance(&ckdir).unwrap();
+    assert!(prov.contains("fresh") && prov.contains("resumed from v8"), "{prov}");
+    assert!(prov.contains(&records[0].run_id) && prov.contains(&records[1].run_id));
+}
+
+/// Lineage round-trips through an empty/missing directory gracefully.
+#[test]
+fn lineage_reads_empty_when_absent() {
+    use advgp::ps::checkpoint;
+    let dir = tdir("lineage_absent");
+    assert!(checkpoint::read_lineage(&dir).unwrap().is_empty());
+    assert_eq!(checkpoint::provenance(&dir).unwrap(), "");
+    // And appending to a not-yet-created directory creates it.
+    let missing = dir.join("nested");
+    checkpoint::append_lineage(
+        &missing,
+        checkpoint::LineageRecord {
+            run_id: "abc123".into(),
+            resumed_from: Some(5),
+            step: 9,
+            wall_secs: 1.25,
+        },
+    )
+    .unwrap();
+    let records = checkpoint::read_lineage(&missing).unwrap();
+    assert_eq!(records.len(), 1);
+    assert_eq!(records[0].resumed_from, Some(5));
+    assert_eq!(records[0].run_id, "abc123");
+}
