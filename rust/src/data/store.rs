@@ -131,6 +131,20 @@ impl ShardWriter {
         std::fs::rename(&self.tmp, &self.path).with_context(|| {
             format!("rename {} -> {}", self.tmp.display(), self.path.display())
         })?;
+        // Durability contract (ISSUE 6): fsync(file) + rename + fsync
+        // (parent dir).  The file sync makes the *contents* durable, the
+        // rename makes the sealed name appear atomically, and the
+        // directory sync makes the rename itself survive a crash — on
+        // ext4/xfs an unsynced directory entry can vanish on power loss,
+        // leaving a complete shard nobody can find.  Directory fsync is
+        // unsupported on some filesystems (and on Windows), so failure
+        // here is best-effort by design: the rename already succeeded
+        // and readers of a live process see the sealed file either way.
+        if let Some(parent) = self.path.parent() {
+            if let Ok(dir) = File::open(parent) {
+                let _ = dir.sync_all();
+            }
+        }
         Ok(self.n)
     }
 }

@@ -591,13 +591,16 @@ fn cmd_worker(args: &Args) -> Result<()> {
         let factory = native_factory(handle.layout);
         let id = handle.worker;
         let mut source = source;
-        // (No auto-reconnect across a half-lost fleet; rerunning this
-        // command re-admits the worker on every slice.  Library callers
-        // can use `ps::sharded_worker_loop` for the same flow.)
+        // Lost slice links are re-established in place under the
+        // session's outage budget (ISSUE 6); ConnectionLost means that
+        // budget ran dry or the fleet changed identity underneath us.
+        // Library callers get the same flow via
+        // `ps::sharded_worker_loop`.
         match handle.run(&mut source, factory, profile)? {
             advgp::ps::net::RunEnd::ConnectionLost => anyhow::bail!(
-                "worker {id}: a slice-server link was lost mid-run; rerun \
-                 this command to rejoin the fleet"
+                "worker {id}: a slice-server link was lost and the session's \
+                 outage budget is exhausted; rerun this command to rejoin \
+                 the fleet"
             ),
             _ => id,
         }

@@ -39,6 +39,7 @@
 
 use super::sharded::{SliceSpec, Topology};
 use crate::gp::ThetaLayout;
+use crate::log_warn;
 use crate::opt::AdaDelta;
 use crate::util::json::Json;
 use crate::util::{fnv1a64, FNV1A64_INIT};
@@ -335,7 +336,9 @@ impl Checkpoint {
 
     /// Save into `dir` (created if missing) as `ck_{version:012}.bin`
     /// via [`crate::util::atomic_write`] (temp-file + fsync + atomic
-    /// rename).  Returns the final path.
+    /// rename + parent-directory fsync, so both the bytes and the new
+    /// directory entry survive a crash — ISSUE 6).  Returns the final
+    /// path.
     pub fn save_in(&self, dir: &Path) -> Result<PathBuf> {
         std::fs::create_dir_all(dir)
             .with_context(|| format!("create checkpoint dir {}", dir.display()))?;
@@ -412,10 +415,45 @@ impl Checkpoint {
         Ok(removed)
     }
 
-    /// Load the newest checkpoint in `dir`, if any.
+    /// Load the newest **readable** checkpoint in `dir`, if any.
+    ///
+    /// Skip-on-corrupt (ISSUE 6): a newest file that fails to load —
+    /// checksum mismatch, truncation mid-save on a crashed host,
+    /// unreadable bytes — is logged and skipped, and the next-newest is
+    /// tried, so one bad file never strands an otherwise resumable
+    /// directory (keep-last-K retention guarantees older seals exist).
+    /// Only when *every* checkpoint file fails does the error surface;
+    /// an empty directory is still `Ok(None)`.
     pub fn load_latest(dir: &Path) -> Result<Option<Self>> {
-        match Self::latest_in(dir)? {
-            Some(path) => Ok(Some(Self::load(&path)?)),
+        let mut newest_skipped = false;
+        let mut last_err: Option<anyhow::Error> = None;
+        for path in Self::list_in(dir)?.into_iter().rev() {
+            match Self::load(&path) {
+                Ok(ck) => {
+                    if newest_skipped {
+                        log_warn!(
+                            "checkpoint: resuming from older {} — newer file(s) \
+                             in the directory were corrupt",
+                            path.display()
+                        );
+                    }
+                    return Ok(Some(ck));
+                }
+                Err(e) => {
+                    log_warn!(
+                        "checkpoint: skipping unreadable {}: {e:#} — falling \
+                         back to the next-newest file",
+                        path.display()
+                    );
+                    newest_skipped = true;
+                    last_err = Some(e);
+                }
+            }
+        }
+        match last_err {
+            Some(e) => {
+                Err(e.context("every checkpoint file in the directory failed to load"))
+            }
             None => Ok(None),
         }
     }
@@ -557,16 +595,47 @@ impl Checkpoint {
                 Some(c) => c.intersection(&versions).copied().collect(),
             });
         }
-        let Some(v) = common.and_then(|c| c.into_iter().next_back()) else {
-            return Ok(None);
-        };
-        let parts: Vec<Checkpoint> = (0..s)
-            .map(|i| {
-                let path = Self::slice_dir(root, i, s).join(format!("ck_{v:012}.bin"));
-                Self::load_slice(&path, topology.ranges[i].end - topology.ranges[i].start)
-            })
-            .collect::<Result<_>>()?;
-        Self::assemble(&topology, &parts).map(Some)
+        let candidates: Vec<u64> = common
+            .map(|c| c.into_iter().rev().collect())
+            .unwrap_or_default();
+        // Skip-on-corrupt (ISSUE 6), per *version*: a reassembly is
+        // all-or-nothing, so one corrupt slice file disqualifies that
+        // whole version and the next-newest common version is tried.
+        let mut last_err: Option<anyhow::Error> = None;
+        for v in candidates {
+            let parts: Result<Vec<Checkpoint>> = (0..s)
+                .map(|i| {
+                    let path = Self::slice_dir(root, i, s).join(format!("ck_{v:012}.bin"));
+                    Self::load_slice(&path, topology.ranges[i].end - topology.ranges[i].start)
+                })
+                .collect();
+            match parts {
+                Ok(parts) => {
+                    if last_err.is_some() {
+                        log_warn!(
+                            "checkpoint: reassembling older sharded version {v} \
+                             in {} — newer version(s) had corrupt slice files",
+                            root.display()
+                        );
+                    }
+                    return Self::assemble(&topology, &parts).map(Some);
+                }
+                Err(e) => {
+                    log_warn!(
+                        "checkpoint: skipping sharded version {v} in {}: {e:#} \
+                         — falling back to the next-newest common version",
+                        root.display()
+                    );
+                    last_err = Some(e);
+                }
+            }
+        }
+        match last_err {
+            Some(e) => Err(e.context(
+                "every common sharded checkpoint version failed to reassemble",
+            )),
+            None => Ok(None),
+        }
     }
 
     /// Load the newest resumable state from a checkpoint directory of

@@ -28,7 +28,7 @@ use super::server::{run_server, ServerConfig, ServerOutcome};
 use super::sharded::{
     merge_outcomes, run_assembler, run_splitter, ShardedPublished, SliceSpec, Topology,
 };
-use super::worker::{run_worker, WorkerProfile, WorkerSource};
+use super::worker::{run_worker, ShardInbox, StorePool, WorkerProfile, WorkerSource};
 use super::Published;
 use crate::data::Dataset;
 use crate::gp::ThetaLayout;
@@ -37,7 +37,8 @@ use crate::log_warn;
 use crate::opt::StepSchedule;
 use crate::util::Stopwatch;
 use std::path::PathBuf;
-use std::sync::mpsc;
+use std::sync::atomic::AtomicU64;
+use std::sync::{mpsc, Arc, Mutex};
 use std::time::Duration;
 
 /// Evaluation closure, constructed *inside* the evaluator thread
@@ -269,6 +270,9 @@ fn slice_server_config(
         keep_last: cfg.keep_last,
         resume,
         expected_joiners,
+        // Only the networked coordinators wire a live counter in (the
+        // transport is the only fault surface); in-process runs report 0.
+        transport_faults: None,
     }
 }
 
@@ -358,6 +362,42 @@ fn resolve_profiles(cfg: &TrainConfig, workers: usize) -> Vec<WorkerProfile> {
         }
     }
     profiles
+}
+
+/// Wrap an out-of-core source in a [`StorePool`] on the run's shared
+/// shard inbox (ISSUE 6 failure-domain hardening): a worker that leaves
+/// early surrenders its shard readers to the inbox, and any surviving
+/// pool worker adopts them before its next window — the departed
+/// worker's slice of the data keeps flowing into the posterior instead
+/// of silently dropping out of the run.  Resident (`Memory`) sources
+/// pass through untouched: their data lives only in the departing
+/// worker's address space, so there is nothing durable to hand over.
+fn pool_source(k: usize, source: WorkerSource, inbox: &ShardInbox) -> WorkerSource {
+    match source {
+        WorkerSource::Store(reader) => {
+            WorkerSource::Pool(StorePool::new(k, reader, inbox.clone()))
+        }
+        other => other,
+    }
+}
+
+/// Run one worker to completion, then surrender its pooled shards if
+/// the run is still live (on a shutdown-driven exit the run is over and
+/// nobody is left to adopt them — skip the inbox churn).
+fn run_worker_pooled(
+    k: usize,
+    mut source: WorkerSource,
+    factory: EngineFactory,
+    published: Arc<Published>,
+    tx: mpsc::Sender<ToServer>,
+    profile: WorkerProfile,
+) {
+    run_worker(k, &mut source, factory, published.clone(), tx, profile);
+    if let WorkerSource::Pool(pool) = source {
+        if !published.snapshot().2 {
+            pool.surrender();
+        }
+    }
 }
 
 /// Spawn the evaluator thread: one trace row whenever the published
@@ -451,6 +491,9 @@ pub fn train_elastic(
     let (tx, rx) = mpsc::channel::<ToServer>();
     let server_cfg = server_config(cfg, workers, joiners.len());
     let profiles = resolve_profiles(cfg, workers);
+    // One shard inbox per run: departed pool workers surrender their
+    // out-of-core shards here, survivors adopt them (ISSUE 6).
+    let inbox: ShardInbox = Arc::new(Mutex::new(Vec::new()));
 
     std::thread::scope(|scope| {
         // ---- initial workers ----
@@ -458,10 +501,8 @@ pub fn train_elastic(
             let factory = factory.clone();
             let published = published.clone();
             let tx = tx.clone();
-            scope.spawn(move || {
-                let mut source = source;
-                run_worker(k, &mut source, factory, published, tx, profile)
-            });
+            let source = pool_source(k, source, &inbox);
+            scope.spawn(move || run_worker_pooled(k, source, factory, published, tx, profile));
         }
         // ---- late joiners (ids continue after the initial workers) ----
         for (j, joiner) in joiners.into_iter().enumerate() {
@@ -469,15 +510,16 @@ pub fn train_elastic(
             let factory = factory.clone();
             let published = published.clone();
             let tx = tx.clone();
+            let Joiner { after, source, profile } = joiner;
+            let source = pool_source(k, source, &inbox);
             scope.spawn(move || {
                 // Interruptible delay: a run that ends early (time
                 // limit, max_updates) wakes this immediately instead of
                 // holding train_elastic open for the full join delay.
-                if published.shutdown_or_timeout(joiner.after) {
+                if published.shutdown_or_timeout(after) {
                     return; // run already over; never joined
                 }
-                let mut source = joiner.source;
-                run_worker(k, &mut source, factory, published, tx, joiner.profile)
+                run_worker_pooled(k, source, factory, published, tx, profile)
             });
         }
         drop(tx); // server's recv() unblocks when all workers exit
@@ -543,6 +585,7 @@ fn train_elastic_sharded(
     let ck_dirs = sharded_checkpoint_dirs(cfg, &topo);
     let expected_joiners = joiners.len();
     let profiles = resolve_profiles(cfg, workers);
+    let inbox: ShardInbox = Arc::new(Mutex::new(Vec::new()));
 
     let (tx_all, rx_all) = mpsc::channel::<ToServer>();
     let mut slice_txs = Vec::with_capacity(topo.n_slices());
@@ -569,22 +612,21 @@ fn train_elastic_sharded(
             let factory = factory.clone();
             let published = published.clone();
             let tx = tx_all.clone();
-            scope.spawn(move || {
-                let mut source = source;
-                run_worker(k, &mut source, factory, published, tx, profile)
-            });
+            let source = pool_source(k, source, &inbox);
+            scope.spawn(move || run_worker_pooled(k, source, factory, published, tx, profile));
         }
         for (j, joiner) in joiners.into_iter().enumerate() {
             let k = workers + j;
             let factory = factory.clone();
             let published = published.clone();
             let tx = tx_all.clone();
+            let Joiner { after, source, profile } = joiner;
+            let source = pool_source(k, source, &inbox);
             scope.spawn(move || {
-                if published.shutdown_or_timeout(joiner.after) {
+                if published.shutdown_or_timeout(after) {
                     return;
                 }
-                let mut source = joiner.source;
-                run_worker(k, &mut source, factory, published, tx, joiner.profile)
+                run_worker_pooled(k, source, factory, published, tx, profile)
             });
         }
         drop(tx_all); // splitter (and so every slice server) unblocks when workers exit
@@ -680,7 +722,12 @@ pub fn train_remote(
         published.publish(ck.version, ck.theta.clone());
     }
     let (tx, rx) = mpsc::channel::<ToServer>();
-    let server_cfg = server_config(cfg, workers, 0);
+    let mut server_cfg = server_config(cfg, workers, 0);
+    // Transport-fault counter (ISSUE 6): the accept loop's connection
+    // handlers bump it, the server loop samples it into
+    // [`ServerStats::faults`](super::metrics::ServerStats) at teardown.
+    let faults = Arc::new(AtomicU64::new(0));
+    server_cfg.transport_faults = Some(faults.clone());
     let addr = net.local_addr();
 
     std::thread::scope(|scope| {
@@ -688,12 +735,13 @@ pub fn train_remote(
         // connection are detached inside) ----
         {
             let published = published.clone();
-            let opts = super::net::NetServeOpts::single(
+            let mut opts = super::net::NetServeOpts::single(
                 cfg.layout,
                 cfg.tau,
                 workers,
                 heartbeat_of(cfg),
             );
+            opts.faults = faults.clone();
             scope.spawn(move || super::net::accept_loop(net, published, tx, opts));
         }
         // (`tx` moved into the accept loop; per-connection readers hold
@@ -768,6 +816,9 @@ pub fn train_remote_sharded(
         for ((i, net), (dir, resume)) in nets.into_iter().enumerate().zip(ck_dirs) {
             let (tx, rx) = mpsc::channel::<ToServer>();
             let slice_pub = sharded.slices[i].clone();
+            // Per-slice fault counter: each listener owns disjoint
+            // connections, so [`merge_outcomes`] can sum them.
+            let faults = Arc::new(AtomicU64::new(0));
             {
                 let slice_pub = slice_pub.clone();
                 let opts = super::net::NetServeOpts {
@@ -777,10 +828,13 @@ pub fn train_remote_sharded(
                     slice: topo.slice(i),
                     topology: topo.clone(),
                     heartbeat,
+                    retry: super::net::RetryPolicy::default(),
+                    faults: faults.clone(),
                 };
                 scope.spawn(move || super::net::accept_loop(net, slice_pub, tx, opts));
             }
-            let scfg = slice_server_config(cfg, workers, 0, topo.slice(i), dir, resume);
+            let mut scfg = slice_server_config(cfg, workers, 0, topo.slice(i), dir, resume);
+            scfg.transport_faults = Some(faults);
             server_handles.push(scope.spawn(move || run_server(&scfg, slice_pub, rx)));
         }
         // ---- assembler for the evaluator/watchdog view ----
@@ -863,7 +917,9 @@ pub fn train_remote_slice(
         Checkpoint::slice_dir(root, slice_id, n_slices)
     });
     let (tx, rx) = mpsc::channel::<ToServer>();
-    let scfg = slice_server_config(cfg, workers, 0, slice.clone(), ck_dir, resume);
+    let mut scfg = slice_server_config(cfg, workers, 0, slice.clone(), ck_dir, resume);
+    let faults = Arc::new(AtomicU64::new(0));
+    scfg.transport_faults = Some(faults.clone());
     let addr = net.local_addr();
 
     std::thread::scope(|scope| {
@@ -876,6 +932,8 @@ pub fn train_remote_slice(
                 slice: slice.clone(),
                 topology: topo.clone(),
                 heartbeat: heartbeat_of(cfg),
+                retry: super::net::RetryPolicy::default(),
+                faults: faults.clone(),
             };
             scope.spawn(move || super::net::accept_loop(net, published, tx, opts));
         }

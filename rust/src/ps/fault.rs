@@ -1,0 +1,499 @@
+//! ADVGPFI1 — deterministic fault injection at the frame boundary
+//! (ISSUE 6).
+//!
+//! A [`FaultPlan`] is a seeded, per-connection, per-direction schedule
+//! of fault events keyed by frame index; a [`FaultProxy`] sits between
+//! any worker/server socket pair and applies the plan reproducibly:
+//! the same seed always yields the same plan, and re-running a chaos
+//! test with the same plan replays the same fault sequence (pinned by
+//! `rust/tests/chaos_ps.rs`).
+//!
+//! The proxy understands exactly one thing about the ADVGPNT1/2 wire
+//! protocol: the 4-byte little-endian length prefix that delimits
+//! frames (`docs/PROTOCOL.md`).  It never decodes bodies, so it is
+//! transparent to the wire spec — every fault it injects is one the
+//! real network could produce (loss, delay, bit rot, duplication, torn
+//! writes, wedged peers, severed links).  Frame indices count per
+//! connection and per direction, starting at 0 with the handshake
+//! frame.
+//!
+//! The proxy is a *test harness*, not a production component: it lives
+//! in the library (not `#[cfg(test)]`) so integration tests and future
+//! soak binaries can drive it, but no training path constructs one.
+
+use crate::log_debug;
+use crate::util::rng::Pcg64;
+use crate::util::Stopwatch;
+use anyhow::{Context, Result};
+use std::io::{Read, Write};
+use std::net::{Shutdown, SocketAddr, TcpListener, TcpStream};
+use std::ops::Range;
+use std::sync::atomic::{AtomicBool, AtomicUsize, Ordering};
+use std::sync::{Arc, Mutex};
+use std::time::Duration;
+
+/// Which way a frame is travelling through the proxy.
+#[derive(Clone, Copy, Debug, PartialEq, Eq, PartialOrd, Ord)]
+pub enum Direction {
+    /// Worker → server (HELLO, PUSH/PUSH2, EXIT, PONG).
+    ClientToServer,
+    /// Server → worker (WELCOME/2, PUBLISH/2, PING, ERROR, SHUTDOWN).
+    ServerToClient,
+}
+
+/// One injectable fault.  Every variant maps to a failure the real
+/// network (or a real peer) can produce.
+#[derive(Clone, Copy, Debug, PartialEq, Eq, PartialOrd, Ord)]
+pub enum FaultEvent {
+    /// Swallow the frame entirely (packet loss past the retransmit
+    /// horizon — the stream stays framed, one message vanishes).
+    Drop,
+    /// Hold the frame for this many milliseconds before forwarding
+    /// (congestion / a GC pause on a middlebox).
+    DelayMs(u64),
+    /// XOR one body byte (offset taken modulo the frame length) so the
+    /// length prefix survives but the checksum cannot — the receiver
+    /// must answer `ERROR` and drop the connection, never panic.
+    CorruptByte(usize),
+    /// Forward the frame twice (retransmit duplication); receivers
+    /// must be idempotent to re-delivery.
+    Duplicate,
+    /// Forward only the first half of the frame, then sever both ways
+    /// — a torn write, the classic crash-mid-send.
+    TruncateMid,
+    /// Stop forwarding in this direction forever while keeping the
+    /// connection open (a wedged peer: alive at the TCP level, silent
+    /// at the protocol level — what heartbeats exist to detect).
+    Wedge,
+    /// Shut the connection down both ways immediately (link cut).
+    Sever,
+}
+
+/// One scheduled fault: apply `event` to frame number `frame` flowing
+/// in `dir` on connection `conn` (by accept order; `None` = every
+/// connection).  Recorded traces always carry a concrete `conn`.
+#[derive(Clone, Copy, Debug, PartialEq, Eq, PartialOrd, Ord)]
+pub struct FaultRule {
+    pub conn: Option<usize>,
+    pub dir: Direction,
+    pub frame: u64,
+    pub event: FaultEvent,
+}
+
+/// A deterministic fault schedule.  Build one explicitly from rules,
+/// or draw one from a seed with [`FaultPlan::seeded`] — equality is
+/// derived, so "same seed ⇒ same plan" is a plain `assert_eq!`.
+#[derive(Clone, Debug, Default, PartialEq, Eq)]
+pub struct FaultPlan {
+    pub rules: Vec<FaultRule>,
+}
+
+impl FaultPlan {
+    /// A plan from explicit rules (sorted for stable comparison).
+    pub fn new(mut rules: Vec<FaultRule>) -> Self {
+        rules.sort();
+        Self { rules }
+    }
+
+    /// Draw a plan from a seed: each requested event is assigned a
+    /// uniformly random direction and a frame index in `frames`, via
+    /// the repo's deterministic [`Pcg64`].  Same `(seed, events,
+    /// frames)` ⇒ identical plan, on every platform, forever — this is
+    /// what makes a chaos run replayable from its seed alone.
+    pub fn seeded(seed: u64, events: &[FaultEvent], frames: Range<u64>) -> Self {
+        assert!(frames.start < frames.end, "empty frame range");
+        let mut rng = Pcg64::seeded(seed);
+        let span = frames.end - frames.start;
+        let rules = events
+            .iter()
+            .map(|&event| {
+                let dir = if rng.next_below(2) == 0 {
+                    Direction::ClientToServer
+                } else {
+                    Direction::ServerToClient
+                };
+                let frame = frames.start + rng.next_below(span);
+                FaultRule { conn: None, dir, frame, event }
+            })
+            .collect();
+        Self::new(rules)
+    }
+
+    /// The rules that apply to frame `frame` of connection `conn` in
+    /// direction `dir`, in plan order.
+    fn matching(&self, conn: usize, dir: Direction, frame: u64) -> Vec<FaultRule> {
+        self.rules
+            .iter()
+            .filter(|r| {
+                r.dir == dir && r.frame == frame && r.conn.map_or(true, |c| c == conn)
+            })
+            .copied()
+            .collect()
+    }
+}
+
+/// A fault-injecting TCP proxy: listens on an ephemeral loopback port,
+/// and for every accepted connection opens its own connection to
+/// `upstream` and pumps frames both ways, applying the plan.  Workers
+/// connect to [`FaultProxy::addr`] instead of the server; neither end
+/// can tell the proxy from a flaky network.
+///
+/// Applied faults are recorded (with the connection index made
+/// concrete) and retrievable via [`FaultProxy::trace`] — the trace is
+/// the replay witness chaos tests pin.
+pub struct FaultProxy {
+    addr: SocketAddr,
+    stop: Arc<AtomicBool>,
+    trace: Arc<Mutex<Vec<FaultRule>>>,
+    accept: Option<std::thread::JoinHandle<()>>,
+}
+
+/// Poll cadence for the nonblocking accept loop and the pump read
+/// timeout — bounds shutdown latency without busy-spinning.
+const POLL: Duration = Duration::from_millis(20);
+
+impl FaultProxy {
+    /// Start the proxy in front of `upstream` (e.g. a
+    /// [`super::net::NetServer`] address).  Returns immediately; the
+    /// accept loop and per-connection pumps run on background threads
+    /// until [`FaultProxy::shutdown`] (or drop).
+    pub fn start(upstream: &str, plan: FaultPlan) -> Result<Self> {
+        let upstream: SocketAddr = upstream
+            .parse()
+            .with_context(|| format!("parse upstream address {upstream}"))?;
+        let listener =
+            TcpListener::bind("127.0.0.1:0").context("bind fault proxy listener")?;
+        let addr = listener.local_addr().context("fault proxy local addr")?;
+        listener.set_nonblocking(true).context("fault proxy nonblocking")?;
+        let stop = Arc::new(AtomicBool::new(false));
+        let trace = Arc::new(Mutex::new(Vec::new()));
+        let accept = {
+            let stop = stop.clone();
+            let trace = trace.clone();
+            let plan = Arc::new(plan);
+            std::thread::spawn(move || {
+                let next_conn = AtomicUsize::new(0);
+                while !stop.load(Ordering::Acquire) {
+                    let client = match listener.accept() {
+                        Ok((s, _)) => s,
+                        Err(e) if e.kind() == std::io::ErrorKind::WouldBlock => {
+                            std::thread::sleep(POLL);
+                            continue;
+                        }
+                        Err(_) => break,
+                    };
+                    let conn = next_conn.fetch_add(1, Ordering::Relaxed);
+                    let server = match TcpStream::connect(upstream) {
+                        Ok(s) => s,
+                        Err(e) => {
+                            // Upstream gone: refuse exactly as a dead
+                            // server would — drop the client socket.
+                            log_debug!("fault proxy: upstream connect failed: {e}");
+                            continue;
+                        }
+                    };
+                    let c2s = Direction::ClientToServer;
+                    let s2c = Direction::ServerToClient;
+                    spawn_pump(&client, &server, conn, c2s, &plan, &trace, &stop);
+                    spawn_pump(&server, &client, conn, s2c, &plan, &trace, &stop);
+                }
+            })
+        };
+        Ok(Self { addr, stop, trace, accept: Some(accept) })
+    }
+
+    /// The address workers should connect to instead of the server.
+    pub fn addr(&self) -> String {
+        self.addr.to_string()
+    }
+
+    /// The faults actually applied so far, with concrete connection
+    /// indices, sorted (pump threads race, so raw insertion order is
+    /// not deterministic — the sorted multiset is).
+    pub fn trace(&self) -> Vec<FaultRule> {
+        let mut t = self.trace.lock().expect("fault trace poisoned").clone();
+        t.sort();
+        t
+    }
+
+    /// Stop accepting and wind down the pumps (each notices within one
+    /// poll interval).  Established flows are severed by their pumps'
+    /// stop checks, not here — in-flight frames may still land.
+    pub fn shutdown(&mut self) {
+        self.stop.store(true, Ordering::Release);
+        if let Some(h) = self.accept.take() {
+            let _ = h.join();
+        }
+    }
+}
+
+impl Drop for FaultProxy {
+    fn drop(&mut self) {
+        self.shutdown();
+    }
+}
+
+/// Clone the stream pair and spawn one pump direction on a detached
+/// thread.  A racing close (clone failure) skips the pump: the other
+/// direction's sever tears the flow down.
+fn spawn_pump(
+    from: &TcpStream,
+    to: &TcpStream,
+    conn: usize,
+    dir: Direction,
+    plan: &Arc<FaultPlan>,
+    trace: &Arc<Mutex<Vec<FaultRule>>>,
+    stop: &Arc<AtomicBool>,
+) {
+    let (Ok(from), Ok(to)) = (from.try_clone(), to.try_clone()) else { return };
+    let (plan, trace, stop) = (plan.clone(), trace.clone(), stop.clone());
+    std::thread::spawn(move || pump_dir(from, to, conn, dir, &plan, &trace, &stop));
+}
+
+/// Read exactly `buf.len()` bytes, treating read timeouts as polls of
+/// the stop flag.  `Ok(false)` = EOF (clean or torn — the pump severs
+/// either way) or stop; `Ok(true)` = buffer filled.
+fn read_full(s: &mut TcpStream, buf: &mut [u8], stop: &AtomicBool) -> std::io::Result<bool> {
+    let mut off = 0;
+    while off < buf.len() {
+        if stop.load(Ordering::Acquire) {
+            return Ok(false);
+        }
+        match s.read(&mut buf[off..]) {
+            Ok(0) => return Ok(false),
+            Ok(k) => off += k,
+            Err(e)
+                if matches!(
+                    e.kind(),
+                    std::io::ErrorKind::WouldBlock
+                        | std::io::ErrorKind::TimedOut
+                        | std::io::ErrorKind::Interrupted
+                ) =>
+            {
+                continue
+            }
+            Err(e) => return Err(e),
+        }
+    }
+    Ok(true)
+}
+
+/// One direction of one proxied connection: parse length-prefixed
+/// frames off `from`, apply the plan's matching rules, forward to
+/// `to`.  Exits on EOF, a fatal socket error, a terminal fault
+/// (Sever/TruncateMid), or proxy shutdown — always propagating the
+/// close so neither real endpoint waits on a half-dead middlebox.
+fn pump_dir(
+    mut from: TcpStream,
+    mut to: TcpStream,
+    conn: usize,
+    dir: Direction,
+    plan: &FaultPlan,
+    trace: &Mutex<Vec<FaultRule>>,
+    stop: &AtomicBool,
+) {
+    let _ = from.set_read_timeout(Some(POLL));
+    let mut frame: u64 = 0;
+    let mut wedged = false;
+    let mut buf: Vec<u8> = Vec::new();
+    let sever = |from: &TcpStream, to: &TcpStream| {
+        let _ = from.shutdown(Shutdown::Both);
+        let _ = to.shutdown(Shutdown::Both);
+    };
+    loop {
+        let mut len4 = [0u8; 4];
+        match read_full(&mut from, &mut len4, stop) {
+            Ok(true) => {}
+            // EOF / stop: propagate the close downstream and finish.
+            Ok(false) | Err(_) => return sever(&from, &to),
+        }
+        let len = u32::from_le_bytes(len4) as usize;
+        // A prefix the receiver would reject anyway (the wire layer
+        // enforces [9, MAX_FRAME_LEN]) means we lost framing: sever
+        // rather than stream garbage forever.
+        if !(9..=super::wire::MAX_FRAME_LEN).contains(&len) {
+            return sever(&from, &to);
+        }
+        buf.resize(4 + len, 0);
+        buf[..4].copy_from_slice(&len4);
+        match read_full(&mut from, &mut buf[4..], stop) {
+            Ok(true) => {}
+            Ok(false) | Err(_) => return sever(&from, &to),
+        }
+        let rules = plan.matching(conn, dir, frame);
+        frame += 1;
+        let mut record = |r: FaultRule| {
+            trace
+                .lock()
+                .expect("fault trace poisoned")
+                .push(FaultRule { conn: Some(conn), ..r });
+        };
+        // Fold this frame's rules into one action set (rules compose:
+        // e.g. Delay + Duplicate delays, then forwards twice).
+        let mut dropped = false;
+        let mut copies = 1usize;
+        for r in rules {
+            record(r);
+            match r.event {
+                FaultEvent::Drop => dropped = true,
+                FaultEvent::DelayMs(ms) => sleep_unless_stopped(ms, stop),
+                FaultEvent::CorruptByte(o) => buf[4 + o % len] ^= 0xFF,
+                FaultEvent::Duplicate => copies += 1,
+                FaultEvent::TruncateMid => {
+                    let _ = to.write_all(&buf[..4 + len / 2]);
+                    return sever(&from, &to);
+                }
+                FaultEvent::Wedge => wedged = true,
+                FaultEvent::Sever => return sever(&from, &to),
+            }
+        }
+        if wedged || dropped {
+            // Keep draining so the sender never blocks on a full TCP
+            // buffer — the peer sees protocol silence, not backpressure.
+            continue;
+        }
+        for _ in 0..copies {
+            if to.write_all(&buf).is_err() {
+                return sever(&from, &to);
+            }
+        }
+    }
+}
+
+/// Sleep `ms`, polling the stop flag so shutdown is never gated on a
+/// long injected delay.
+fn sleep_unless_stopped(ms: u64, stop: &AtomicBool) {
+    let sw = Stopwatch::start();
+    while sw.millis() < ms as f64 {
+        if stop.load(Ordering::Acquire) {
+            return;
+        }
+        std::thread::sleep(POLL.min(Duration::from_millis(ms)));
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::ps::wire::{self, Frame};
+
+    /// Same seed ⇒ identical plan; every drawn frame index lands in
+    /// the requested range; conn is unconstrained (`None`).
+    #[test]
+    fn seeded_plan_is_deterministic_and_in_range() {
+        let events = [
+            FaultEvent::Drop,
+            FaultEvent::CorruptByte(13),
+            FaultEvent::DelayMs(40),
+            FaultEvent::Duplicate,
+            FaultEvent::Sever,
+        ];
+        let a = FaultPlan::seeded(0xC0FFEE, &events, 3..17);
+        let b = FaultPlan::seeded(0xC0FFEE, &events, 3..17);
+        assert_eq!(a, b, "same seed must yield the same plan");
+        assert_eq!(a.rules.len(), events.len());
+        for r in &a.rules {
+            assert!((3..17).contains(&r.frame), "frame {} out of range", r.frame);
+            assert_eq!(r.conn, None);
+        }
+    }
+
+    /// Spawn a one-shot echo server that reflects raw bytes.
+    fn echo_server() -> (std::net::SocketAddr, std::thread::JoinHandle<()>) {
+        let l = TcpListener::bind("127.0.0.1:0").unwrap();
+        let addr = l.local_addr().unwrap();
+        let h = std::thread::spawn(move || {
+            if let Ok((mut s, _)) = l.accept() {
+                let mut buf = [0u8; 4096];
+                while let Ok(k) = s.read(&mut buf) {
+                    if k == 0 || s.write_all(&buf[..k]).is_err() {
+                        break;
+                    }
+                }
+            }
+        });
+        (addr, h)
+    }
+
+    /// A fault-free plan forwards frames untouched both ways.
+    #[test]
+    fn proxy_passes_frames_through() {
+        let (addr, server) = echo_server();
+        let mut proxy = FaultProxy::start(&addr.to_string(), FaultPlan::default()).unwrap();
+        let mut c = TcpStream::connect(proxy.addr()).unwrap();
+        c.set_read_timeout(Some(Duration::from_secs(10))).unwrap();
+        wire::write_frame(&mut c, &Frame::Ping).unwrap();
+        let mut scratch = Vec::new();
+        let back = wire::read_frame(&mut c, &mut scratch).unwrap();
+        assert!(matches!(back, Frame::Ping));
+        assert!(proxy.trace().is_empty());
+        drop(c);
+        proxy.shutdown();
+        let _ = server.join();
+    }
+
+    /// A Drop rule swallows exactly the indexed frame; later frames
+    /// still flow, and the trace records the applied rule with a
+    /// concrete connection index.
+    #[test]
+    fn proxy_drops_the_scheduled_frame() {
+        let (addr, server) = echo_server();
+        let plan = FaultPlan::new(vec![FaultRule {
+            conn: Some(0),
+            dir: Direction::ClientToServer,
+            frame: 0,
+            event: FaultEvent::Drop,
+        }]);
+        let mut proxy = FaultProxy::start(&addr.to_string(), plan).unwrap();
+        let mut c = TcpStream::connect(proxy.addr()).unwrap();
+        c.set_read_timeout(Some(Duration::from_secs(10))).unwrap();
+        wire::write_frame(&mut c, &Frame::Ping).unwrap(); // frame 0: dropped
+        wire::write_frame(&mut c, &Frame::Pong).unwrap(); // frame 1: passes
+        let mut scratch = Vec::new();
+        let back = wire::read_frame(&mut c, &mut scratch).unwrap();
+        assert!(matches!(back, Frame::Pong), "dropped frame must not arrive");
+        let trace = proxy.trace();
+        assert_eq!(
+            trace,
+            vec![FaultRule {
+                conn: Some(0),
+                dir: Direction::ClientToServer,
+                frame: 0,
+                event: FaultEvent::Drop,
+            }]
+        );
+        drop(c);
+        proxy.shutdown();
+        let _ = server.join();
+    }
+
+    /// A corrupted frame keeps its length prefix (framing survives)
+    /// but fails the checksum at the receiver.
+    #[test]
+    fn corrupted_frame_fails_decode_downstream() {
+        let (addr, server) = echo_server();
+        let plan = FaultPlan::new(vec![FaultRule {
+            conn: None,
+            dir: Direction::ClientToServer,
+            frame: 0,
+            event: FaultEvent::CorruptByte(5),
+        }]);
+        let mut proxy = FaultProxy::start(&addr.to_string(), plan).unwrap();
+        let mut c = TcpStream::connect(proxy.addr()).unwrap();
+        c.set_read_timeout(Some(Duration::from_secs(10))).unwrap();
+        wire::write_frame(&mut c, &Frame::Ping).unwrap();
+        // The echo server reflects the corrupted bytes back at us; the
+        // wire layer must reject them (checksum), not panic.
+        let mut scratch = Vec::new();
+        let err = wire::read_frame(&mut c, &mut scratch).unwrap_err();
+        let msg = format!("{err:#}");
+        assert!(
+            msg.contains("checksum") || msg.contains("corrupt"),
+            "unexpected error: {msg}"
+        );
+        assert_eq!(proxy.trace().len(), 1);
+        drop(c);
+        proxy.shutdown();
+        let _ = server.join();
+    }
+}

@@ -57,6 +57,13 @@ pub struct ServerStats {
     /// was never declared (e.g. a read-only networked observer
     /// disconnecting) is not a leave.
     pub leaves: u64,
+    /// Transport faults absorbed gracefully (ISSUE 6): connections the
+    /// networked server answered `ERROR` and dropped — corrupt or
+    /// truncated frames, protocol violations, dimension mismatches —
+    /// plus `ERROR` frames peers sent us.  Always 0 for in-process
+    /// runs; on sharded runs, summed across slices.  The slice loop
+    /// itself never sees these (graceful degradation by design).
+    pub faults: u64,
 }
 
 /// Write a trace as CSV (t_secs,version,rmse,mnlp,neg_elbo).

@@ -56,6 +56,7 @@
 pub mod checkpoint;
 pub mod coordinator;
 pub mod delay;
+pub mod fault;
 pub mod messages;
 pub mod metrics;
 pub mod net;
@@ -70,14 +71,16 @@ pub use coordinator::{
     train_remote_slice, train_sources, Joiner, RunResult, TrainConfig,
 };
 pub use delay::DelayGate;
+pub use fault::{FaultEvent, FaultPlan, FaultProxy, FaultRule};
 pub use messages::PublishMeta;
 pub use metrics::{EvalMetrics, TraceRow};
 pub use net::{
-    remote_worker_loop, sharded_worker_loop, NetServer, NetWorkerHandle,
-    ReconnectPolicy, ShardedWorkerHandle,
+    remote_worker_loop, remote_worker_loop_with, sharded_worker_loop,
+    sharded_worker_loop_with, NetServer, NetWorkerHandle, ReconnectPolicy, RetryPolicy,
+    ShardedWorkerHandle,
 };
 pub use sharded::{ShardedPublished, SliceSpec, Topology};
-pub use worker::{WorkerProfile, WorkerSource};
+pub use worker::{ShardInbox, StorePool, WorkerProfile, WorkerSource};
 
 use std::sync::{Arc, Condvar, Mutex};
 

@@ -36,11 +36,24 @@
 //!   floor) while splitting each gradient into per-slice PUSH2 frames —
 //!   `run_worker` never learns the topology existed.
 //! * [`remote_worker_loop`] adds WAN resilience: bounded,
-//!   jitter-backed-off reconnects ([`ReconnectPolicy`]) both for the
+//!   jitter-backed-off reconnects ([`ReconnectPolicy`], the budget knob
+//!   inside the unified [`RetryPolicy`] timeout bundle) both for the
 //!   initial connect and after a mid-run link loss — the worker
 //!   reclaims its id, re-adopts the live θ, and is re-admitted by its
 //!   first push, so a transient partition costs staleness, not the
-//!   worker.
+//!   worker.  The sharded twin hardens the half-lost fleet session
+//!   (ISSUE 6): a [`ShardedWorkerHandle`] that loses a *subset* of its
+//!   S links re-establishes only the lost ones, under one shared
+//!   outage budget, while held-back gradient fragments queue behind
+//!   the repair instead of being lost.
+//!
+//! Fault semantics (ISSUE 6): corrupt or truncated frames make the
+//! server answer `ERROR` and drop that one connection — never panic
+//! the slice loop — counted into
+//! [`ServerStats::faults`](super::metrics::ServerStats) via
+//! [`NetServeOpts::faults`].  The deterministic injection harness that
+//! proves this lives in [`super::fault`]; the seeded chaos matrix is
+//! `rust/tests/chaos_ps.rs`.
 //!
 //! Determinism: the transport moves exactly the same messages the
 //! in-process channel would, and every slice server aggregates gradient
@@ -79,12 +92,12 @@ use super::{Published, PublishMeta};
 use crate::gp::ThetaLayout;
 use crate::grad::EngineFactory;
 use crate::util::rng::Pcg64;
-use crate::util::{fnv1a64, FNV1A64_INIT};
+use crate::util::{fnv1a64, Stopwatch, FNV1A64_INIT};
 use crate::{log_debug, log_info, log_warn};
 use anyhow::{bail, ensure, Context, Result};
 use std::collections::HashSet;
 use std::net::{IpAddr, Ipv4Addr, Ipv6Addr, SocketAddr, TcpListener, TcpStream};
-use std::sync::atomic::{AtomicBool, AtomicU64, Ordering};
+use std::sync::atomic::{AtomicBool, AtomicU32, AtomicU64, Ordering};
 use std::sync::mpsc::Sender;
 use std::sync::{Arc, Mutex};
 use std::time::Duration;
@@ -125,6 +138,15 @@ pub struct NetServeOpts {
     pub slice: SliceSpec,
     pub topology: Topology,
     pub heartbeat: Option<Duration>,
+    /// Server-side timeout budgets (handshake read, frame write) — the
+    /// reconnect half is worker-side and unused here.
+    pub retry: RetryPolicy,
+    /// Transport-fault counter: incremented once per connection the
+    /// server drops for a protocol violation or a corrupt/truncated
+    /// stream (every `ERROR`-answer path).  The coordinator samples it
+    /// into [`ServerStats::faults`](super::metrics::ServerStats) via
+    /// [`super::server::ServerConfig::transport_faults`].
+    pub faults: Arc<AtomicU64>,
 }
 
 impl NetServeOpts {
@@ -143,6 +165,8 @@ impl NetServeOpts {
             slice: SliceSpec::full(dim),
             topology: Topology::partition(dim, 1),
             heartbeat,
+            retry: RetryPolicy::default(),
+            faults: Arc::new(AtomicU64::new(0)),
         }
     }
 }
@@ -343,6 +367,15 @@ fn send_error(w: &Mutex<TcpStream>, code: u16, message: &str) {
     let _ = send_bytes(w, &f.encode());
 }
 
+/// [`send_error`] on the graceful-degradation path (ISSUE 6): every
+/// `ERROR`-answered-and-dropped connection is one transport fault,
+/// visible in [`ServerStats::faults`](super::metrics::ServerStats) —
+/// the slice loop itself never even notices, let alone panics.
+fn send_error_counted(w: &Mutex<TcpStream>, faults: &AtomicU64, code: u16, message: &str) {
+    faults.fetch_add(1, Ordering::Relaxed);
+    send_error(w, code, message);
+}
+
 /// One connection, server side: handshake (with protocol-revision
 /// negotiation), then this thread reads worker→server frames — probing
 /// idle revision-2 peers with PING — while a spawned twin fans out
@@ -364,14 +397,14 @@ fn handle_conn(
     // the reader thread would deadlock behind it, leaving the worker's
     // clock in the gate forever.  With the timeout the wedged write
     // fails, the mutex frees, and teardown proceeds.
-    let _ = stream.set_write_timeout(Some(Duration::from_secs(30)));
+    let _ = stream.set_write_timeout(Some(opts.retry.write_timeout));
     // Bound the handshake read too: an idle pre-HELLO connection (port
     // scanner, slowloris) must not pin this thread + FD for the life of
     // the process.  Re-armed after the handshake only as the heartbeat
     // window — a healthy worker may legitimately compute for minutes
     // between pushes, and the PING/PONG probe (not a hard timeout) is
     // what distinguishes "slow" from "wedged".
-    let _ = stream.set_read_timeout(Some(Duration::from_secs(10)));
+    let _ = stream.set_read_timeout(Some(opts.retry.handshake_timeout));
     let peer = stream
         .peer_addr()
         .map(|a| a.to_string())
@@ -394,11 +427,12 @@ fn handle_conn(
         Ok(Frame::Hello { proto, worker }) => (proto, worker),
         Ok(f) => {
             let msg = format!("expected HELLO, got kind {:#04x}", f.kind());
-            send_error(&writer, ERR_MALFORMED, &msg);
+            send_error_counted(&writer, &opts.faults, ERR_MALFORMED, &msg);
             return;
         }
         Err(e) => {
-            send_error(&writer, ERR_BAD_MAGIC, &format!("bad HELLO: {e:#}"));
+            let msg = format!("bad HELLO: {e:#}");
+            send_error_counted(&writer, &opts.faults, ERR_BAD_MAGIC, &msg);
             return;
         }
     };
@@ -411,8 +445,9 @@ fn handle_conn(
         if slice.covers(layout.len()) {
             PROTO_NT1
         } else {
-            send_error(
+            send_error_counted(
                 &writer,
+                &opts.faults,
                 ERR_PROTO,
                 &format!(
                     "this server owns θ slice {}/{}; ADVGPNT1 (rev 1) cannot \
@@ -423,8 +458,9 @@ fn handle_conn(
             return;
         }
     } else {
-        send_error(
+        send_error_counted(
             &writer,
+            &opts.faults,
             ERR_PROTO,
             &format!(
                 "server speaks ADVGPNT revisions 1..={PROTO_VERSION}, \
@@ -436,7 +472,7 @@ fn handle_conn(
     let id = match registry.claim(want) {
         Ok(id) => id,
         Err((code, msg)) => {
-            send_error(&writer, code, &msg);
+            send_error_counted(&writer, &opts.faults, code, &msg);
             return;
         }
     };
@@ -542,7 +578,12 @@ fn handle_conn(
             }
             Ok(ReadEvent::Eof) => break, // clean close
             Err(e) => {
+                // Corrupt or truncated stream (ISSUE 6): answer ERROR,
+                // count the fault, drop the connection — the slice
+                // loop is untouched, graceful degradation by design.
                 log_warn!("ps::net: worker {id} ({peer}) stream error: {e:#}");
+                let msg = format!("malformed stream: {e:#}");
+                send_error_counted(&writer, &opts.faults, ERR_MALFORMED, &msg);
                 break;
             }
         };
@@ -552,12 +593,14 @@ fn handle_conn(
         let push = match frame {
             Frame::Push(p) => {
                 if proto != PROTO_NT1 {
-                    send_error(&writer, ERR_MALFORMED, "rev-2 connections push PUSH2");
+                    let msg = "rev-2 connections push PUSH2";
+                    send_error_counted(&writer, &opts.faults, ERR_MALFORMED, msg);
                     break;
                 }
                 if p.grad.len() != layout.len() {
-                    send_error(
+                    send_error_counted(
                         &writer,
+                        &opts.faults,
                         ERR_DIM,
                         &format!("gradient dim {} but θ dim is {}", p.grad.len(), layout.len()),
                     );
@@ -567,12 +610,14 @@ fn handle_conn(
             }
             Frame::Push2 { slice_id, start, push } => {
                 if proto == PROTO_NT1 {
-                    send_error(&writer, ERR_MALFORMED, "PUSH2 on a rev-1 connection");
+                    let msg = "PUSH2 on a rev-1 connection";
+                    send_error_counted(&writer, &opts.faults, ERR_MALFORMED, msg);
                     break;
                 }
                 if slice_id != slice.id as u64 || start != slice.range.start as u64 {
-                    send_error(
+                    send_error_counted(
                         &writer,
+                        &opts.faults,
                         ERR_DIM,
                         &format!(
                             "PUSH2 for slice {slice_id} @ {start} but this server owns \
@@ -583,8 +628,9 @@ fn handle_conn(
                     break;
                 }
                 if push.grad.len() != slice.len() {
-                    send_error(
+                    send_error_counted(
                         &writer,
+                        &opts.faults,
                         ERR_DIM,
                         &format!(
                             "gradient fragment dim {} but slice [{}, {}) holds {}",
@@ -607,8 +653,9 @@ fn handle_conn(
                 if worker != id {
                     // Same contract as PUSH (and docs/PROTOCOL.md
                     // code 6): the id field must match the connection.
-                    send_error(
+                    send_error_counted(
                         &writer,
+                        &opts.faults,
                         ERR_ID_MISMATCH,
                         &format!("exit for worker {worker} on worker-{id} connection"),
                     );
@@ -620,11 +667,16 @@ fn handle_conn(
                 continue;
             }
             Frame::Error { code, message } => {
+                // The peer declared the connection broken: a transport
+                // fault on our books too (no ERROR answer — the sender
+                // is already closing).
+                opts.faults.fetch_add(1, Ordering::Relaxed);
                 log_warn!("ps::net: worker {id} sent error {code}: {message}");
                 break;
             }
             f => {
-                send_error(&writer, ERR_MALFORMED, &format!("unexpected kind {:#04x}", f.kind()));
+                let msg = format!("unexpected kind {:#04x}", f.kind());
+                send_error_counted(&writer, &opts.faults, ERR_MALFORMED, &msg);
                 break;
             }
         };
@@ -634,12 +686,13 @@ fn handle_conn(
             // synthesized on disconnect, leaving a ghost clock that
             // stalls the gate forever.  Protocol-state violation: drop
             // the connection (its clock stays retired).
-            send_error(&writer, ERR_MALFORMED, "PUSH after EXIT");
+            send_error_counted(&writer, &opts.faults, ERR_MALFORMED, "PUSH after EXIT");
             break;
         }
         if push.worker as u64 != id {
-            send_error(
+            send_error_counted(
                 &writer,
+                &opts.faults,
                 ERR_ID_MISMATCH,
                 &format!("push for worker {} on worker-{id} connection", push.worker),
             );
@@ -677,6 +730,50 @@ fn handle_conn(
 /// Revision-1 servers do not speak PING, so rev-1 links keep the
 /// pre-heartbeat behavior (block until FIN).
 pub const WORKER_HEARTBEAT: Duration = Duration::from_secs(30);
+
+/// Every retry/timeout budget of the transport in one bundle (ISSUE 6),
+/// replacing the ad-hoc per-call-site constants: the reconnect backoff,
+/// the pre-handshake read bound, the per-frame write bound, and the
+/// heartbeat idle window.  `Default` reproduces the historical budgets;
+/// the chaos suite (`rust/tests/chaos_ps.rs`) shrinks them so injected
+/// outages resolve in milliseconds instead of minutes.
+#[derive(Clone, Copy, Debug)]
+pub struct RetryPolicy {
+    /// Reconnect budget — per outage for [`remote_worker_loop`], per
+    /// *session* for the sharded fleet (one shared pool however many
+    /// links an outage takes down), refilled by any successful
+    /// re-handshake.
+    pub reconnect: ReconnectPolicy,
+    /// How long an unvalidated peer may take over the
+    /// HELLO → WELCOME → initial-PUBLISH handshake before the
+    /// connection is abandoned.
+    pub handshake_timeout: Duration,
+    /// Per-frame write bound: a peer that stops draining fails the
+    /// write instead of pinning a pump thread inside `write_all`.
+    pub write_timeout: Duration,
+    /// Read-silence window before a PING probe on rev ≥ 2 links (a
+    /// peer silent through a second window is wedged).
+    pub heartbeat: Duration,
+}
+
+impl Default for RetryPolicy {
+    fn default() -> Self {
+        Self {
+            reconnect: ReconnectPolicy::default(),
+            handshake_timeout: Duration::from_secs(10),
+            write_timeout: Duration::from_secs(30),
+            heartbeat: WORKER_HEARTBEAT,
+        }
+    }
+}
+
+impl From<ReconnectPolicy> for RetryPolicy {
+    /// Adopt a bare reconnect budget, keeping the default timeouts —
+    /// the bridge for callers holding the pre-ISSUE-6 policy struct.
+    fn from(reconnect: ReconnectPolicy) -> Self {
+        Self { reconnect, ..Self::default() }
+    }
+}
 
 /// How [`NetWorkerHandle::run`] (and the sharded twin) ended.
 #[derive(Clone, Copy, Debug, PartialEq, Eq)]
@@ -717,6 +814,9 @@ impl std::error::Error for Rejected {}
 /// one of these per slice server.
 pub struct NetWorkerHandle {
     stream: TcpStream,
+    /// The address this connection dialed — re-dialed by the sharded
+    /// link supervisors, named in worker-side ERROR logs.
+    pub addr: String,
     /// Worker id this connection runs as (claimed or server-assigned).
     pub worker: usize,
     /// θ layout announced by WELCOME — build the engine from this.
@@ -741,19 +841,24 @@ impl NetWorkerHandle {
     /// lowest free id.  Offers revision [`PROTO_VERSION`] and accepts
     /// whatever ≤ that the server negotiates.
     pub fn connect(addr: &str, claim: Option<usize>) -> Result<Self> {
+        Self::connect_with(addr, claim, &RetryPolicy::default())
+    }
+
+    /// [`NetWorkerHandle::connect`] with explicit timeout budgets.
+    pub fn connect_with(addr: &str, claim: Option<usize>, retry: &RetryPolicy) -> Result<Self> {
         let mut stream = TcpStream::connect(addr)
             .with_context(|| format!("connect to ADVGPNT server {addr}"))?;
         let _ = stream.set_nodelay(true);
         // Bound every write: a wedged server must surface as a push
         // failure (→ ConnectionLost → reconnect), not pin the push pump
         // in write_all forever.
-        let _ = stream.set_write_timeout(Some(WORKER_HEARTBEAT));
+        let _ = stream.set_write_timeout(Some(retry.write_timeout));
         // Bound the handshake so a silent listener can't hang the
         // worker forever; re-armed by `run` as the worker-side
         // heartbeat window (pulls can legitimately wait a long time
         // between publishes — the PING probe, not a hard timeout, is
         // what distinguishes a quiet server from a dead one).
-        let _ = stream.set_read_timeout(Some(Duration::from_secs(30)));
+        let _ = stream.set_read_timeout(Some(retry.handshake_timeout));
         let hello = Frame::Hello {
             proto: PROTO_VERSION,
             worker: claim.map_or(WORKER_ID_ANY, |c| c as u64),
@@ -854,7 +959,19 @@ impl NetWorkerHandle {
             f => bail!("expected the initial PUBLISH, got frame kind {:#04x}", f.kind()),
         };
         let _ = stream.set_read_timeout(None);
-        Ok(Self { stream, worker, layout, tau, proto, slice, topology, version, meta, theta })
+        Ok(Self {
+            stream,
+            addr: addr.to_string(),
+            worker,
+            layout,
+            tau,
+            proto,
+            slice,
+            topology,
+            version,
+            meta,
+            theta,
+        })
     }
 
     /// θ version the server was at when this connection handshook.
@@ -878,8 +995,22 @@ impl NetWorkerHandle {
         factory: EngineFactory,
         profile: WorkerProfile,
     ) -> Result<RunEnd> {
+        self.run_with(source, factory, profile, &RetryPolicy::default())
+    }
+
+    /// [`NetWorkerHandle::run`] with explicit timeout budgets (the
+    /// chaos suite shrinks the heartbeat so injected wedges resolve in
+    /// milliseconds).
+    pub fn run_with(
+        self,
+        source: &mut WorkerSource,
+        factory: EngineFactory,
+        profile: WorkerProfile,
+        retry: &RetryPolicy,
+    ) -> Result<RunEnd> {
         let Self {
             stream,
+            addr,
             worker,
             layout,
             tau: _,
@@ -890,6 +1021,7 @@ impl NetWorkerHandle {
             meta,
             theta,
         } = self;
+        let heartbeat = retry.heartbeat;
         ensure!(
             slice.covers(layout.len()),
             "server owns θ slice {}/{} — a single connection cannot train \
@@ -932,7 +1064,7 @@ impl NetWorkerHandle {
                 // Worker-side heartbeat (rev ≥ 2 only: a rev-1 server
                 // would treat PING as a protocol error).
                 if proto >= PROTO_NT2 {
-                    let _ = r.set_read_timeout(Some(WORKER_HEARTBEAT));
+                    let _ = r.set_read_timeout(Some(heartbeat));
                 } else {
                     let _ = r.set_read_timeout(None);
                 }
@@ -1013,7 +1145,15 @@ impl NetWorkerHandle {
                             break;
                         }
                         Frame::Error { code, message } => {
-                            log_warn!("worker {worker}: server error {code}: {message}");
+                            // Surface the peer and the decision, not
+                            // just the code (ISSUE 6): the operator
+                            // sees *which* server refused and what
+                            // happens next.
+                            log_warn!(
+                                "worker {worker}: server {addr} answered ERROR {code} \
+                                 ({message}) — dropping the link; the reconnect loop \
+                                 decides whether to retry"
+                            );
                             ce.store(true, Ordering::Relaxed);
                             break;
                         }
@@ -1158,14 +1298,40 @@ impl ShardedWorkerHandle {
     }
 
     /// Run the worker loop against the fleet until the servers shut
-    /// down, any link dies, or the profile makes the worker leave.
+    /// down, the session's outage budget runs dry, or the profile makes
+    /// the worker leave.
     pub fn run(
         self,
         source: &mut WorkerSource,
         factory: EngineFactory,
         profile: WorkerProfile,
     ) -> Result<RunEnd> {
-        let Self { conns, worker, layout, tau: _, topology } = self;
+        self.run_with(source, factory, profile, &RetryPolicy::default())
+    }
+
+    /// [`ShardedWorkerHandle::run`] with explicit retry/timeout budgets.
+    ///
+    /// Hardening (ISSUE 6): a link that dies mid-run no longer ends the
+    /// session.  Each slice link has a *supervisor*: when the pump
+    /// reports the link dead, the supervisor marks it down (the push
+    /// splitter then **holds** that slice's fragments instead of
+    /// erroring out), draws an attempt from the session-wide
+    /// [`OutageBudget`] — one pool however many of the S links an
+    /// outage takes down — backs off, and re-handshakes that one
+    /// address, validating the new WELCOME2 still matches the fleet
+    /// (same id, layout, τ, topology, slice).  A successful
+    /// re-handshake refills the budget, republishes the slice's live θ,
+    /// swaps the shared writer, and the pump resumes; an exhausted
+    /// budget (or a changed fleet) ends the session with
+    /// [`RunEnd::ConnectionLost`].
+    pub fn run_with(
+        self,
+        source: &mut WorkerSource,
+        factory: EngineFactory,
+        profile: WorkerProfile,
+        retry: &RetryPolicy,
+    ) -> Result<RunEnd> {
+        let Self { conns, worker, layout, tau, topology } = self;
         ensure!(
             source.d() == layout.d,
             "shard has d={} features but the server's layout has d={}",
@@ -1190,117 +1356,193 @@ impl ShardedWorkerHandle {
         }
         let saw_shutdown = Arc::new(AtomicBool::new(false));
         let conn_err = Arc::new(AtomicBool::new(false));
+        // Teardown flag: supervisors check it before re-establishing,
+        // the splitter before holding a fragment — so a run that is
+        // over cannot be resurrected by a racing repair.
+        let session_over = Arc::new(AtomicBool::new(false));
+        // Which links are currently down (splitter holds fragments for
+        // them; their supervisors repair them).
+        let link_down: Arc<Vec<AtomicBool>> =
+            Arc::new((0..conns.len()).map(|_| AtomicBool::new(false)).collect());
+        let budget = Arc::new(OutageBudget {
+            max: retry.reconnect.max_retries,
+            used: AtomicU32::new(0),
+        });
         let (tx, rx) = std::sync::mpsc::channel::<ToServer>();
         // Per-connection plumbing: a reader for the publish pump, a
-        // control clone for teardown, a shared writer for pushes + PONGs.
+        // control clone for teardown (behind a mutex so a repair can
+        // swap in the replacement socket), a shared writer for pushes +
+        // PONGs, and the dialed address for re-establishment.
+        let mut addrs = Vec::with_capacity(conns.len());
         let mut readers = Vec::with_capacity(conns.len());
-        let mut ctrls = Vec::with_capacity(conns.len());
+        let mut ctrls: Vec<Arc<Mutex<TcpStream>>> = Vec::with_capacity(conns.len());
         let mut writers = Vec::with_capacity(conns.len());
         for c in &conns {
+            addrs.push(c.addr.clone());
             readers.push(c.stream.try_clone().context("clone stream for the publish pump")?);
-            ctrls.push(c.stream.try_clone().context("clone stream for teardown")?);
+            ctrls.push(Arc::new(Mutex::new(
+                c.stream.try_clone().context("clone stream for teardown")?,
+            )));
         }
         for c in conns {
             writers.push(Arc::new(Mutex::new(c.stream)));
         }
         let end = std::thread::scope(|s| {
-            // One publish pump per slice connection.
-            for (i, mut r) in readers.into_iter().enumerate() {
+            // One supervised publish pump per slice link: the pump runs
+            // until SHUTDOWN or link death; the supervisor loop around
+            // it decides whether the outage budget buys a repair.
+            for (i, mut reader) in readers.into_iter().enumerate() {
                 let slice = topology.slice(i);
+                let topo = topology.clone();
+                let addr = addrs[i].clone();
                 let slice_pub = Arc::clone(&sharded.slices[i]);
-                let pong_w = Arc::clone(&writers[i]);
+                let writer = Arc::clone(&writers[i]);
+                let ctrl = Arc::clone(&ctrls[i]);
                 let sd = Arc::clone(&saw_shutdown);
                 let ce = Arc::clone(&conn_err);
+                let over = Arc::clone(&session_over);
+                let down = Arc::clone(&link_down);
+                let budget = Arc::clone(&budget);
+                let retry = *retry;
+                // Deterministic per-(worker, address, slice) jitter
+                // stream, mirroring remote_worker_loop's seeding.
+                let mut rng = Pcg64::seeded(
+                    fnv1a64(FNV1A64_INIT, addr.as_bytes())
+                        ^ worker as u64
+                        ^ slice.id as u64,
+                );
                 s.spawn(move || {
-                    let mut scratch = Vec::new();
-                    // Sharded links are always rev ≥ 2: the worker-side
-                    // heartbeat probes every slice server independently.
-                    let _ = r.set_read_timeout(Some(WORKER_HEARTBEAT));
-                    let mut pinged = false;
-                    loop {
-                        let frame = match wire::read_frame_event(
-                            &mut r,
-                            &mut scratch,
-                            MAX_FRAME_LEN,
+                    'session: loop {
+                        match pump_slice(
+                            &mut reader,
+                            worker,
+                            &addr,
+                            &slice,
+                            &slice_pub,
+                            &writer,
+                            retry.heartbeat,
                         ) {
-                            Ok(ReadEvent::Frame(f)) => {
-                                pinged = false;
-                                f
+                            PumpEnd::Shutdown => {
+                                sd.store(true, Ordering::SeqCst);
+                                break 'session;
                             }
-                            Ok(ReadEvent::IdleTimeout) => {
-                                if pinged
-                                    || send_bytes(&pong_w, &Frame::Ping.encode()).is_err()
-                                {
+                            PumpEnd::LinkDead => {}
+                        }
+                        down[i].store(true, Ordering::SeqCst);
+                        if over.load(Ordering::SeqCst) {
+                            break 'session;
+                        }
+                        // Re-establish this one link under the shared
+                        // outage budget; the other S−1 links keep
+                        // training meanwhile.
+                        reader = loop {
+                            let Some(attempt) = budget.take() else {
+                                log_warn!(
+                                    "worker {worker}: slice {} link to {addr} lost and \
+                                     the session outage budget is exhausted — abandoning \
+                                     the session",
+                                    slice.id
+                                );
+                                ce.store(true, Ordering::SeqCst);
+                                break 'session;
+                            };
+                            let delay = retry.reconnect.delay(attempt, &mut rng);
+                            log_warn!(
+                                "worker {worker}: slice {} link to {addr} lost; \
+                                 re-establishing ({}/{} outage retries used) in {:.1}s",
+                                slice.id,
+                                attempt + 1,
+                                retry.reconnect.max_retries,
+                                delay.as_secs_f64()
+                            );
+                            if sleep_poll(delay, &over) {
+                                break 'session;
+                            }
+                            let h = match NetWorkerHandle::connect_with(
+                                &addr,
+                                Some(worker),
+                                &retry,
+                            ) {
+                                Ok(h) => h,
+                                Err(e) => {
+                                    // Same contract as remote_worker_loop:
+                                    // deliberate rejections are fatal,
+                                    // except ERR_ID_IN_USE, which a
+                                    // half-dead old connection answers
+                                    // until the server's heartbeat
+                                    // retires it.
+                                    let fatal = e
+                                        .downcast_ref::<Rejected>()
+                                        .is_some_and(|r| r.code != ERR_ID_IN_USE);
+                                    if fatal {
+                                        log_warn!(
+                                            "worker {worker}: slice {} server {addr} \
+                                             rejected the reconnect ({e:#}) — not \
+                                             retrying",
+                                            slice.id
+                                        );
+                                        ce.store(true, Ordering::SeqCst);
+                                        break 'session;
+                                    }
                                     log_warn!(
-                                        "worker {worker}: slice {} server silent through \
-                                         PING + grace — treating the link as dead",
+                                        "worker {worker}: slice {} reconnect to {addr} \
+                                         failed: {e:#}",
                                         slice.id
                                     );
-                                    ce.store(true, Ordering::Relaxed);
-                                    break;
+                                    continue;
                                 }
-                                pinged = true;
-                                continue;
-                            }
-                            Ok(ReadEvent::Eof) => {
-                                ce.store(true, Ordering::Relaxed);
-                                break;
-                            }
-                            Err(e) => {
-                                log_debug!(
-                                    "worker {worker}: slice {} publish stream ended: {e:#}",
+                            };
+                            if h.proto < PROTO_NT2
+                                || h.worker != worker
+                                || h.layout != layout
+                                || h.tau != tau
+                                || h.topology != topo
+                                || h.slice.id != slice.id
+                            {
+                                log_warn!(
+                                    "worker {worker}: slice {} server {addr} no longer \
+                                     matches the fleet (id/layout/τ/topology/slice \
+                                     changed) — abandoning the session",
                                     slice.id
                                 );
-                                ce.store(true, Ordering::Relaxed);
-                                break;
+                                ce.store(true, Ordering::SeqCst);
+                                break 'session;
                             }
-                        };
-                        match frame {
-                            Frame::Publish2 { version, meta, slice_id, start, theta } => {
-                                if slice_id != slice.id as u64
-                                    || start != slice.range.start as u64
-                                    || theta.len() != slice.len()
-                                {
-                                    log_warn!(
-                                        "worker {worker}: slice {} sent a mismatched \
-                                         PUBLISH2 (slice {slice_id} @ {start}, {} values)",
-                                        slice.id,
-                                        theta.len()
-                                    );
-                                    ce.store(true, Ordering::Relaxed);
-                                    break;
-                                }
+                            let (Ok(new_reader), Ok(new_ctrl)) =
+                                (h.stream.try_clone(), h.stream.try_clone())
+                            else {
+                                continue;
+                            };
+                            budget.refill();
+                            let NetWorkerHandle { stream, version, theta, meta, .. } = h;
+                            *ctrl.lock().unwrap() = new_ctrl;
+                            // Re-seed the slice view with the live θ so
+                            // the assembled floor can advance past the
+                            // outage without waiting for the next
+                            // server-side update.
+                            if version > 0 {
                                 slice_pub.publish_meta(version, theta, meta);
                             }
-                            Frame::Ping => {
-                                let _ = send_bytes(&pong_w, &Frame::Pong.encode());
+                            // Swap the writer *before* clearing `down`:
+                            // the splitter must never see a live link
+                            // with a dead socket behind it.
+                            *writer.lock().unwrap() = stream;
+                            down[i].store(false, Ordering::SeqCst);
+                            log_info!(
+                                "worker {worker}: slice {} link to {addr} \
+                                 re-established (θ v{version})",
+                                slice.id
+                            );
+                            if over.load(Ordering::SeqCst) {
+                                break 'session;
                             }
-                            Frame::Pong => {}
-                            Frame::Shutdown => {
-                                sd.store(true, Ordering::Relaxed);
-                                break;
-                            }
-                            Frame::Error { code, message } => {
-                                log_warn!(
-                                    "worker {worker}: slice {} server error {code}: {message}",
-                                    slice.id
-                                );
-                                ce.store(true, Ordering::Relaxed);
-                                break;
-                            }
-                            f => {
-                                log_warn!(
-                                    "worker {worker}: unexpected frame kind {:#04x}",
-                                    f.kind()
-                                );
-                                ce.store(true, Ordering::Relaxed);
-                                break;
-                            }
-                        }
+                            break new_reader;
+                        };
                     }
-                    // One dead slice stream ends the whole worker run:
-                    // without its fragment the assembled view can never
-                    // advance again.
+                    // The session is over for this slice (SHUTDOWN, an
+                    // exhausted budget, a changed fleet, or teardown):
+                    // end its view so the assembler — and run_worker
+                    // blocked behind it — unwinds too.
                     slice_pub.shutdown();
                 });
             }
@@ -1310,12 +1552,18 @@ impl ShardedWorkerHandle {
                 s.spawn(move || run_assembler(sharded_ref));
             }
             // The push splitter: local channel → one PUSH2 per slice.
+            // A fragment bound for a down link is **held** (20 ms
+            // polls) until its supervisor repairs the link — dropping
+            // it instead would wedge the run: the slice gate would wait
+            // forever on a push that never arrives while the worker
+            // waits on a publish that never comes.
             let split_writers: Vec<Arc<Mutex<TcpStream>>> =
                 writers.iter().map(Arc::clone).collect();
             let topo = topology.clone();
-            let pub_w = Arc::clone(&assembled);
-            let ce = Arc::clone(&conn_err);
-            let wh = s.spawn(move || -> std::io::Result<()> {
+            let view = Arc::clone(&assembled);
+            let over = Arc::clone(&session_over);
+            let down = Arc::clone(&link_down);
+            let wh = s.spawn(move || {
                 while let Ok(msg) = rx.recv() {
                     for (i, part) in
                         super::sharded::split_message(&topo, &msg).into_iter().enumerate()
@@ -1330,42 +1578,194 @@ impl ShardedWorkerHandle {
                                 Frame::WorkerExit { worker: worker as u64 }
                             }
                         };
-                        if let Err(e) = send_bytes(&split_writers[i], &frame.encode()) {
-                            ce.store(true, Ordering::Relaxed);
-                            pub_w.shutdown();
-                            return Err(e);
+                        let bytes = frame.encode();
+                        loop {
+                            if over.load(Ordering::SeqCst) || view.snapshot().2 {
+                                return; // session over: the fragment is moot
+                            }
+                            if down[i].load(Ordering::SeqCst) {
+                                std::thread::sleep(Duration::from_millis(20));
+                                continue; // hold for the link supervisor
+                            }
+                            match send_bytes(&split_writers[i], &bytes) {
+                                Ok(()) => break,
+                                Err(e) => {
+                                    // First to notice the dead socket:
+                                    // flag it and hold the fragment; the
+                                    // supervisor's pump errors out next
+                                    // read and repairs the link.
+                                    down[i].store(true, Ordering::SeqCst);
+                                    log_warn!(
+                                        "worker {worker}: slice {i} push failed ({e}); \
+                                         holding the fragment for the link supervisor"
+                                    );
+                                }
+                            }
                         }
                     }
                 }
                 for w in &split_writers {
                     let _ = w.lock().unwrap().shutdown(std::net::Shutdown::Write);
                 }
-                Ok(())
             });
             // The worker loop, verbatim, on the assembled view.
             run_worker(worker, source, factory, Arc::clone(&assembled), tx, profile);
-            let push_res = wh
-                .join()
-                .unwrap_or_else(|_| Err(std::io::Error::other("push splitter panicked")));
-            let end = if saw_shutdown.load(Ordering::Relaxed) {
+            let _ = wh.join();
+            // Decide how the run ended *before* teardown: the control
+            // shutdowns below make the pumps error out, which must not
+            // be mistaken for a lost link.
+            let end = if saw_shutdown.load(Ordering::SeqCst) {
                 RunEnd::Shutdown
-            } else if conn_err.load(Ordering::Relaxed) || push_res.is_err() {
+            } else if conn_err.load(Ordering::SeqCst) {
                 RunEnd::ConnectionLost
             } else {
                 RunEnd::Left
             };
-            if let Err(e) = &push_res {
-                log_warn!("worker {worker}: push stream failed: {e}");
-            }
             // Tear every socket down so the per-slice pumps (and the
-            // assembler behind them) unwind.
-            for c in &ctrls {
-                let _ = c.shutdown(std::net::Shutdown::Both);
+            // assembler behind them) unwind; `session_over` stops the
+            // supervisors from re-establishing what we just tore down.
+            session_over.store(true, Ordering::SeqCst);
+            for c in ctrls.iter() {
+                let _ = c.lock().unwrap().shutdown(std::net::Shutdown::Both);
             }
             sharded.shutdown_all();
             end
         });
         Ok(end)
+    }
+}
+
+/// How one slice link's publish pump ended: the whole session is over,
+/// or just this link.
+enum PumpEnd {
+    /// The server announced SHUTDOWN — the run is complete everywhere.
+    Shutdown,
+    /// This link died (EOF, stream error, heartbeat verdict, ERROR
+    /// answer, protocol violation); the supervisor decides whether the
+    /// outage budget buys a repair.
+    LinkDead,
+}
+
+/// One outage budget shared by every slice link of a sharded session
+/// (ISSUE 6): however many links a partition takes down, attempts are
+/// drawn from a single pool, refilled by any successful re-handshake —
+/// so a flapping fleet cannot retry forever, but an S-link outage
+/// costs the same budget a 1-link outage would.
+struct OutageBudget {
+    max: u32,
+    used: AtomicU32,
+}
+
+impl OutageBudget {
+    /// Draw one attempt; `Some(n)` is the 0-based attempt index (feeds
+    /// the backoff curve), `None` means the budget is exhausted.
+    fn take(&self) -> Option<u32> {
+        self.used
+            .fetch_update(Ordering::SeqCst, Ordering::SeqCst, |u| {
+                (u < self.max).then_some(u + 1)
+            })
+            .ok()
+    }
+
+    fn refill(&self) {
+        self.used.store(0, Ordering::SeqCst);
+    }
+}
+
+/// Sleep `d` in 20 ms polls, aborting early when the session ends;
+/// returns true if it ended — a supervisor's backoff must never
+/// outlive the run it would be repairing.
+fn sleep_poll(d: Duration, over: &AtomicBool) -> bool {
+    let sw = Stopwatch::start();
+    while sw.secs() < d.as_secs_f64() {
+        if over.load(Ordering::SeqCst) {
+            return true;
+        }
+        std::thread::sleep(Duration::from_millis(20));
+    }
+    over.load(Ordering::SeqCst)
+}
+
+/// One slice link's publish pump (the hardened sharded worker side):
+/// decode PUBLISH2/PING/SHUTDOWN until the run ends or the link dies —
+/// the caller's supervisor loop owns what happens next.
+fn pump_slice(
+    r: &mut TcpStream,
+    worker: usize,
+    addr: &str,
+    slice: &SliceSpec,
+    slice_pub: &Published,
+    pong_w: &Mutex<TcpStream>,
+    heartbeat: Duration,
+) -> PumpEnd {
+    let mut scratch = Vec::new();
+    // Sharded links are always rev ≥ 2: the worker-side heartbeat
+    // probes every slice server independently.
+    let _ = r.set_read_timeout(Some(heartbeat));
+    let mut pinged = false;
+    loop {
+        let frame = match wire::read_frame_event(r, &mut scratch, MAX_FRAME_LEN) {
+            Ok(ReadEvent::Frame(f)) => {
+                pinged = false;
+                f
+            }
+            Ok(ReadEvent::IdleTimeout) => {
+                if pinged || send_bytes(pong_w, &Frame::Ping.encode()).is_err() {
+                    log_warn!(
+                        "worker {worker}: slice {} server {addr} silent through \
+                         PING + grace — treating the link as dead",
+                        slice.id
+                    );
+                    return PumpEnd::LinkDead;
+                }
+                pinged = true;
+                continue;
+            }
+            Ok(ReadEvent::Eof) => return PumpEnd::LinkDead,
+            Err(e) => {
+                log_debug!(
+                    "worker {worker}: slice {} publish stream ended: {e:#}",
+                    slice.id
+                );
+                return PumpEnd::LinkDead;
+            }
+        };
+        match frame {
+            Frame::Publish2 { version, meta, slice_id, start, theta } => {
+                if slice_id != slice.id as u64
+                    || start != slice.range.start as u64
+                    || theta.len() != slice.len()
+                {
+                    log_warn!(
+                        "worker {worker}: slice {} sent a mismatched PUBLISH2 \
+                         (slice {slice_id} @ {start}, {} values)",
+                        slice.id,
+                        theta.len()
+                    );
+                    return PumpEnd::LinkDead;
+                }
+                slice_pub.publish_meta(version, theta, meta);
+            }
+            Frame::Ping => {
+                let _ = send_bytes(pong_w, &Frame::Pong.encode());
+            }
+            Frame::Pong => {}
+            Frame::Shutdown => return PumpEnd::Shutdown,
+            Frame::Error { code, message } => {
+                // Surface the peer and the decision taken (ISSUE 6).
+                log_warn!(
+                    "worker {worker}: slice {} server {addr} answered ERROR {code} \
+                     ({message}) — dropping the link; the outage budget decides \
+                     whether to re-establish",
+                    slice.id
+                );
+                return PumpEnd::LinkDead;
+            }
+            f => {
+                log_warn!("worker {worker}: unexpected frame kind {:#04x}", f.kind());
+                return PumpEnd::LinkDead;
+            }
+        }
     }
 }
 
@@ -1428,13 +1828,14 @@ pub fn remote_worker_loop_with(
     policy: ReconnectPolicy,
 ) -> Result<usize> {
     let mut claim = claim;
+    let retry = RetryPolicy::from(policy);
     // Deterministic per-(worker, address) jitter stream.
     let seed = fnv1a64(FNV1A64_INIT, addr.as_bytes())
         ^ claim.map_or(u64::MAX, |c| c as u64);
     let mut rng = Pcg64::seeded(seed);
     let mut attempt: u32 = 0;
     loop {
-        let handle = match NetWorkerHandle::connect(addr, claim) {
+        let handle = match NetWorkerHandle::connect_with(addr, claim, &retry) {
             Ok(h) => h,
             Err(e) => {
                 // Deliberate rejections are fatal — EXCEPT "id in use",
@@ -1447,6 +1848,18 @@ pub fn remote_worker_loop_with(
                     .downcast_ref::<Rejected>()
                     .is_some_and(|r| r.code != ERR_ID_IN_USE);
                 if fatal_rejection || attempt >= policy.max_retries {
+                    // Surface the server's stated reason and our
+                    // decision before erroring out (ISSUE 6): the
+                    // operator should not have to unwrap an error
+                    // chain to learn *why* the worker gave up.
+                    if let Some(r) = e.downcast_ref::<Rejected>() {
+                        log_warn!(
+                            "worker: server {addr} rejected the connection \
+                             (ERROR {}: {}) — not retrying",
+                            r.code,
+                            r.message
+                        );
+                    }
                     return Err(e).with_context(|| {
                         format!("connect to {addr} (after {attempt} retries)")
                     });
@@ -1474,7 +1887,7 @@ pub fn remote_worker_loop_with(
             rng = Pcg64::seeded(seed ^ id as u64);
         }
         claim = Some(id);
-        match handle.run(&mut source, factory.clone(), profile.clone())? {
+        match handle.run_with(&mut source, factory.clone(), profile.clone(), &retry)? {
             RunEnd::Shutdown | RunEnd::Left => return Ok(id),
             RunEnd::ConnectionLost => {
                 if attempt >= policy.max_retries {
@@ -1494,27 +1907,42 @@ pub fn remote_worker_loop_with(
 }
 
 /// Connect to every slice server of a partitioned fleet, handshake, and
-/// run the worker loop to completion.  Returns the worker id.  This is
-/// the body of `advgp worker --connect addr0,addr1,…`.  No automatic
-/// reconnect: resuming a half-lost multi-link session would need a
-/// fleet-wide rendezvous — the caller restarts the worker instead (its
-/// first pushes re-admit it on every slice).
+/// run the worker loop to completion, surviving partial link loss: the
+/// hardened [`ShardedWorkerHandle::run`] re-establishes lost links one
+/// by one under a single session-wide outage budget (ISSUE 6), so a
+/// half-lost fleet session costs staleness, not the worker.  Returns
+/// the worker id.  This is the body of
+/// `advgp worker --connect addr0,addr1,…`.
 pub fn sharded_worker_loop(
+    addrs: &[String],
+    claim: Option<usize>,
+    source: WorkerSource,
+    factory: EngineFactory,
+    profile: WorkerProfile,
+) -> Result<usize> {
+    sharded_worker_loop_with(addrs, claim, source, factory, profile, RetryPolicy::default())
+}
+
+/// [`sharded_worker_loop`] with explicit retry/timeout budgets.
+pub fn sharded_worker_loop_with(
     addrs: &[String],
     claim: Option<usize>,
     mut source: WorkerSource,
     factory: EngineFactory,
     profile: WorkerProfile,
+    retry: RetryPolicy,
 ) -> Result<usize> {
     let handle = ShardedWorkerHandle::connect(addrs, claim)?;
     let id = handle.worker;
-    match handle.run(&mut source, factory, profile)? {
-        // A lost link mid-run is a failure the caller (or its
-        // supervisor) must see — exiting 0 would read as "run
-        // complete" while the fleet is still training without us.
+    match handle.run_with(&mut source, factory, profile, &retry)? {
+        // The session outage budget ran dry (or the fleet changed under
+        // us) — a failure the caller (or its supervisor) must see:
+        // exiting 0 would read as "run complete" while the fleet is
+        // still training without us.
         RunEnd::ConnectionLost => bail!(
-            "worker {id}: a slice-server link was lost mid-run; restart \
-             the worker to rejoin the fleet"
+            "worker {id}: a slice-server link was lost and the session's \
+             outage budget is exhausted; restart the worker to rejoin \
+             the fleet"
         ),
         RunEnd::Shutdown | RunEnd::Left => Ok(id),
     }
@@ -1585,5 +2013,42 @@ mod tests {
         // Capped: far attempts never exceed 1.5 × cap.
         let d = policy.delay(30, &mut rng).as_secs_f64();
         assert!(d < 2.0 * 1.5 + 1e-9);
+    }
+
+    /// The unified budget bundle reproduces the historical constants,
+    /// and adopting a bare [`ReconnectPolicy`] keeps the default
+    /// timeouts — existing call sites see no behavior change.
+    #[test]
+    fn retry_policy_defaults_pin_the_historical_budgets() {
+        let r = RetryPolicy::default();
+        assert_eq!(r.heartbeat, WORKER_HEARTBEAT);
+        assert_eq!(r.write_timeout, Duration::from_secs(30));
+        assert_eq!(r.handshake_timeout, Duration::from_secs(10));
+        assert_eq!(r.reconnect.max_retries, 5);
+        assert_eq!(r.reconnect.base, Duration::from_millis(200));
+        assert_eq!(r.reconnect.cap, Duration::from_secs(10));
+        let tight = ReconnectPolicy {
+            max_retries: 2,
+            base: Duration::from_millis(10),
+            cap: Duration::from_millis(50),
+        };
+        let from = RetryPolicy::from(tight);
+        assert_eq!(from.reconnect.max_retries, 2);
+        assert_eq!(from.heartbeat, WORKER_HEARTBEAT);
+    }
+
+    /// The session-wide outage budget: attempts draw from one pool,
+    /// exhaust exactly at `max`, and any successful re-handshake
+    /// refills the whole pool.
+    #[test]
+    fn outage_budget_draws_exhausts_and_refills() {
+        let b = OutageBudget { max: 3, used: AtomicU32::new(0) };
+        assert_eq!(b.take(), Some(0));
+        assert_eq!(b.take(), Some(1));
+        assert_eq!(b.take(), Some(2));
+        assert_eq!(b.take(), None);
+        assert_eq!(b.take(), None, "exhaustion is stable");
+        b.refill();
+        assert_eq!(b.take(), Some(0));
     }
 }

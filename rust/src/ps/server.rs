@@ -13,6 +13,7 @@ use crate::opt::{prox_update, AdaDelta, StepSchedule};
 use crate::{log_debug, log_warn};
 use crate::util::Stopwatch;
 use std::path::{Path, PathBuf};
+use std::sync::atomic::{AtomicU64, Ordering};
 use std::sync::mpsc::Receiver;
 use std::sync::Arc;
 
@@ -64,6 +65,11 @@ pub struct ServerConfig {
     /// so a run whose initial workers all depart before a declared
     /// joiner arrives waits for it instead of ending early.
     pub expected_joiners: usize,
+    /// Transport-fault counter shared with this slice's accept loop
+    /// (ISSUE 6; see [`super::net::NetServeOpts::faults`]): sampled
+    /// into [`ServerStats::faults`] when the loop returns.  `None` for
+    /// in-process runs — there is no transport to fault.
+    pub transport_faults: Option<Arc<AtomicU64>>,
 }
 
 /// Outcome of the server loop.
@@ -390,6 +396,11 @@ pub fn run_server(
                 gate.retire(worker);
             }
         }
+    }
+    // Fold in the transport faults the accept loop absorbed on our
+    // behalf (ISSUE 6) — the loop above never saw them, by design.
+    if let Some(ctr) = &cfg.transport_faults {
+        stats.faults = ctr.load(Ordering::Relaxed);
     }
     ServerOutcome { theta, stats, last_value }
 }

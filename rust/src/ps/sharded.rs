@@ -338,6 +338,8 @@ pub fn run_splitter(
 /// * `joins`/`leaves` — the max across slices: every slice observes the
 ///   same membership events, so the max is the event count (a sum would
 ///   multiply-count by `S`).
+/// * `faults` — summed: transport faults are per-connection events and
+///   each slice server owns disjoint connections (ISSUE 6).
 /// * timing/staleness series — taken from slice 0 (the slices see
 ///   statistically identical streams; merging reservoirs would not add
 ///   information).
@@ -353,6 +355,7 @@ pub fn merge_outcomes(topology: &Topology, outcomes: Vec<ServerOutcome>) -> Serv
     stats.pushes = outcomes.iter().map(|o| o.stats.pushes).sum();
     stats.joins = outcomes.iter().map(|o| o.stats.joins).max().unwrap_or(0);
     stats.leaves = outcomes.iter().map(|o| o.stats.leaves).max().unwrap_or(0);
+    stats.faults = outcomes.iter().map(|o| o.stats.faults).sum();
     let last_value = outcomes[0].last_value;
     ServerOutcome { theta, stats, last_value }
 }

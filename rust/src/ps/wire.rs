@@ -1043,4 +1043,69 @@ mod tests {
             None
         );
     }
+
+    /// Torn streams at every frame position are *errors* (ISSUE 6),
+    /// never hangs or silent EOFs — the fault injector's TruncateMid
+    /// lands exactly here.
+    #[test]
+    fn torn_length_prefix_at_eof_is_an_error() {
+        let mut scratch = Vec::new();
+        let bytes = Frame::Ping.encode();
+        // 2 of the 4 length bytes, then EOF: the stream died mid-frame.
+        let mut r = std::io::Cursor::new(bytes[..2].to_vec());
+        let err = read_frame_event(&mut r, &mut scratch, MAX_FRAME_LEN).unwrap_err();
+        assert!(format!("{err:#}").contains("read frame length (torn)"), "{err:#}");
+        // A torn *body* (full prefix, partial payload) is equally fatal.
+        let mut r = std::io::Cursor::new(bytes[..6].to_vec());
+        let err = read_frame_event(&mut r, &mut scratch, MAX_FRAME_LEN).unwrap_err();
+        assert!(format!("{err:#}").contains("read frame body (torn)"), "{err:#}");
+    }
+
+    /// A length prefix outside `[9, max_len]` is rejected before any
+    /// body allocation — both the hostile-giant end and the
+    /// impossible-small end (a frame is at least kind + checksum).
+    #[test]
+    fn length_prefix_bounds_are_enforced() {
+        let mut scratch = Vec::new();
+        for len in [0u32, 1, 8, MAX_HANDSHAKE_FRAME_LEN as u32 + 1] {
+            let mut bytes = len.to_le_bytes().to_vec();
+            bytes.extend_from_slice(&[0u8; 16]);
+            let mut r = std::io::Cursor::new(bytes);
+            let err = read_frame_event(&mut r, &mut scratch, MAX_HANDSHAKE_FRAME_LEN)
+                .unwrap_err();
+            assert!(
+                format!("{err:#}").contains("corrupt or hostile stream"),
+                "len={len}: {err:#}"
+            );
+        }
+        // The floor itself (9 = kind + checksum, zero payload) passes
+        // framing and reaches the decoder.
+        let ok = Frame::Shutdown.encode();
+        assert_eq!(u32::from_le_bytes(ok[..4].try_into().unwrap()), 9);
+        let mut r = std::io::Cursor::new(ok);
+        assert!(matches!(
+            read_frame_event(&mut r, &mut scratch, MAX_HANDSHAKE_FRAME_LEN).unwrap(),
+            ReadEvent::Frame(Frame::Shutdown)
+        ));
+    }
+
+    /// Zero-payload frames are exactly 13 bytes on the wire —
+    /// `[len=9][kind][fnv1a64(kind)]` — and round-trip.  Pins the
+    /// minimal wire image the chaos suite corrupts byte-by-byte.
+    #[test]
+    fn zero_payload_frames_pin_the_minimal_wire_image() {
+        for (frame, kind) in [
+            (Frame::Shutdown, KIND_SHUTDOWN),
+            (Frame::Ping, KIND_PING),
+            (Frame::Pong, KIND_PONG),
+        ] {
+            let bytes = frame.encode();
+            assert_eq!(bytes.len(), 13, "{frame:?}");
+            assert_eq!(&bytes[..4], &9u32.to_le_bytes(), "{frame:?}");
+            assert_eq!(bytes[4], kind, "{frame:?}");
+            let sum = fnv1a64(FNV1A64_INIT, &[kind]);
+            assert_eq!(&bytes[5..], &sum.to_le_bytes(), "{frame:?}");
+            assert_eq!(Frame::decode(&bytes[4..]).unwrap(), frame);
+        }
+    }
 }

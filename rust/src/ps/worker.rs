@@ -15,11 +15,12 @@ use crate::data::store::ShardReader;
 use crate::data::Dataset;
 use crate::grad::EngineFactory;
 use crate::linalg::Mat;
-use crate::log_warn;
 use crate::util::rng::Pcg64;
 use crate::util::{pool, Stopwatch};
+use crate::{log_info, log_warn};
+use anyhow::{bail, Result};
 use std::sync::mpsc::Sender;
-use std::sync::Arc;
+use std::sync::{Arc, Mutex};
 use std::time::Duration;
 
 /// Where a worker's shard lives (ISSUE 3).
@@ -29,26 +30,147 @@ use std::time::Duration;
 /// * `Store` — out-of-core: the worker streams fixed-size minibatch
 ///   chunks from a shard file through one reusable buffer; peak
 ///   resident data is one chunk, never the shard.
+/// * `Pool` — a [`StorePool`]: out-of-core like `Store`, plus shard
+///   adoption (ISSUE 6) — when a worker departs, its shards go back to
+///   a coordinator-shared inbox and the survivors pick them up, so
+///   data coverage survives departures.
 pub enum WorkerSource {
     Memory(Dataset),
     Store(ShardReader),
+    Pool(StorePool),
 }
 
 impl WorkerSource {
-    /// Rows in the underlying shard.
+    /// Rows in the underlying shard(s).
     pub fn n(&self) -> usize {
         match self {
             WorkerSource::Memory(ds) => ds.n(),
             WorkerSource::Store(r) => r.n(),
+            WorkerSource::Pool(p) => p.n(),
         }
     }
 
-    /// Feature count of the underlying shard.
+    /// Feature count of the underlying shard(s).
     pub fn d(&self) -> usize {
         match self {
             WorkerSource::Memory(ds) => ds.d(),
             WorkerSource::Store(r) => r.d(),
+            WorkerSource::Pool(p) => p.d(),
         }
+    }
+}
+
+/// The shared shard-adoption inbox (ISSUE 6): departed workers'
+/// [`StorePool`]s surrender their readers here; survivors adopt them
+/// on their next iteration.  One per elastic run, created by the
+/// coordinator.
+pub type ShardInbox = Arc<Mutex<Vec<ShardReader>>>;
+
+/// One worker's rotation of out-of-core shards, wired to a shared
+/// adoption inbox (ISSUE 6).  Starts with the worker's own shard;
+/// every window first drains the inbox (adopting whatever departed
+/// workers surrendered, stream cursors intact), then reads round-robin
+/// across the held shards.  A shard that fails to read is dropped from
+/// the rotation — the pool only errors (and the worker leaves) when
+/// *no* readable shard remains.
+pub struct StorePool {
+    worker_id: usize,
+    readers: Vec<ShardReader>,
+    inbox: ShardInbox,
+    /// Round-robin cursor into `readers`.
+    next: usize,
+    /// Window size applied to every adopted reader (the owner's
+    /// `window_rows`), set by `configure`.
+    chunk_rows: usize,
+    d: usize,
+}
+
+impl StorePool {
+    pub fn new(worker_id: usize, reader: ShardReader, inbox: ShardInbox) -> Self {
+        let d = reader.d();
+        let chunk_rows = reader.chunk_rows();
+        Self { worker_id, readers: vec![reader], inbox, next: 0, chunk_rows, d }
+    }
+
+    /// Rows across the currently held shards (grows on adoption).
+    pub fn n(&self) -> usize {
+        self.readers.iter().map(|r| r.n()).sum()
+    }
+
+    pub fn d(&self) -> usize {
+        self.d
+    }
+
+    /// Default window of the primary shard (mirrors
+    /// [`ShardReader::chunk_rows`] for the `window_rows` decision).
+    fn primary_chunk_rows(&self) -> usize {
+        self.readers.first().map_or(1, |r| r.chunk_rows())
+    }
+
+    /// Apply the owner's window size and starting offset (the pool twin
+    /// of `set_chunk_rows` + `seek_to` on a bare reader).
+    fn configure(&mut self, window_rows: usize, offset: usize) {
+        self.chunk_rows = window_rows.max(1);
+        for r in &mut self.readers {
+            r.set_chunk_rows(self.chunk_rows);
+        }
+        if let Some(r) = self.readers.first_mut() {
+            r.seek_to(offset);
+        }
+    }
+
+    /// Drain the adoption inbox into this pool's rotation.
+    fn adopt(&mut self) {
+        let mut inbox = self.inbox.lock().unwrap();
+        while let Some(mut r) = inbox.pop() {
+            r.set_chunk_rows(self.chunk_rows);
+            log_info!(
+                "worker {}: adopted surrendered shard {} ({} rows) — \
+                 rotation now holds {} shard(s)",
+                self.worker_id,
+                r.path().display(),
+                r.n(),
+                self.readers.len() + 1
+            );
+            self.readers.push(r);
+        }
+    }
+
+    /// The next window, round-robin across held shards (adopting first).
+    fn next_window(&mut self, out: &mut Dataset) -> Result<usize> {
+        self.adopt();
+        while !self.readers.is_empty() {
+            self.next %= self.readers.len();
+            match self.readers[self.next].next_window(out) {
+                Ok(k) => {
+                    self.next += 1;
+                    return Ok(k);
+                }
+                Err(e) => {
+                    let r = self.readers.remove(self.next);
+                    log_warn!(
+                        "worker {}: shard {} read failed ({e:#}); dropped from \
+                         the rotation",
+                        self.worker_id,
+                        r.path().display()
+                    );
+                }
+            }
+        }
+        bail!("no readable shard left in the pool")
+    }
+
+    /// Surrender every held shard to the inbox (the departure path:
+    /// stream cursors ride along, so adopters continue mid-rotation).
+    /// Returns how many shards were given up.
+    pub fn surrender(self) -> usize {
+        let Self { readers, inbox, worker_id, .. } = self;
+        let k = readers.len();
+        if k > 0 {
+            log_info!("worker {worker_id}: surrendering {k} shard(s) for adoption");
+            inbox.lock().unwrap().extend(readers);
+        }
+        k
     }
 }
 
@@ -135,6 +257,13 @@ pub fn run_worker(
                 r.chunk_rows()
             }
         }
+        WorkerSource::Pool(p) => {
+            if profile.max_rows > 0 {
+                profile.max_rows.min(n)
+            } else {
+                p.primary_chunk_rows()
+            }
+        }
     };
     let mut window = Dataset { x: Mat::empty(), y: Vec::new() };
     // Seed the cyclic start only for windows smaller than the shard:
@@ -146,11 +275,15 @@ pub fn run_worker(
     } else {
         0
     };
-    if let WorkerSource::Store(reader) = &mut *source {
+    match &mut *source {
         // The reader owns the stream cursor for store sources — one
         // copy of the cyclic arithmetic, in `data::store`.
-        reader.set_chunk_rows(window_rows);
-        reader.seek_to(offset);
+        WorkerSource::Store(reader) => {
+            reader.set_chunk_rows(window_rows);
+            reader.seek_to(offset);
+        }
+        WorkerSource::Pool(pool) => pool.configure(window_rows, offset),
+        WorkerSource::Memory(_) => {}
     }
     // First pull uses version 0 (initial θ) — workers must each push one
     // gradient before the server can make update 0, so don't wait for a
@@ -190,6 +323,15 @@ pub fn run_worker(
                     // A dead store is a dead worker: depart and let the
                     // gate retire our clock.
                     log_warn!("worker {worker_id}: shard read failed, leaving: {e:#}");
+                    break;
+                }
+                (&window.x, &window.y)
+            }
+            WorkerSource::Pool(pool) => {
+                // The pool drops individual bad shards itself; only a
+                // pool with nothing left to read ends the worker.
+                if let Err(e) = pool.next_window(&mut window) {
+                    log_warn!("worker {worker_id}: shard pool exhausted, leaving: {e:#}");
                     break;
                 }
                 (&window.x, &window.y)

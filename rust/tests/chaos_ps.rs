@@ -1,0 +1,388 @@
+//! Chaos: deterministic fault injection (ADVGPFI1, ISSUE 6) against the
+//! networked parameter-server fleet.
+//!
+//! Every test drives real training through a [`FaultProxy`] whose
+//! seeded [`FaultPlan`] injects the failures a real network produces —
+//! loss, bit rot, congestion delay, duplication, wedged peers, severed
+//! links.  The acceptance criteria pinned here:
+//!
+//! * a seeded fault matrix over {drop, corrupt, delay, duplicate} at
+//!   S ∈ {1, 2} slice servers either converges or degrades *typed*
+//!   (watchdog / outage-budget exhaustion) — never a hang, never a
+//!   panic, never a non-finite θ;
+//! * a severed slice link is re-established in place under the
+//!   session's outage budget and the run still completes;
+//! * a server→worker wedge is detected by the worker-side heartbeat
+//!   and resolved by re-establishing the link;
+//! * a corrupted push is answered with `ERROR`, counted in
+//!   [`ServerStats::faults`], and survived by a reconnect;
+//! * the same seed replays the same fault trace, byte for byte.
+//!
+//! [`ServerStats::faults`]: advgp::ps::metrics::ServerStats
+
+use advgp::data::{kmeans, synth, Dataset, Standardizer};
+use advgp::gp::{PredictWorkspace, Theta, ThetaLayout};
+use advgp::grad::native_factory;
+use advgp::ps::coordinator::{train, train_remote, train_remote_sharded, TrainConfig};
+use advgp::ps::fault::Direction;
+use advgp::ps::net::{sharded_worker_loop_with, NetServer, ReconnectPolicy, RetryPolicy};
+use advgp::ps::wire::{self, Frame};
+use advgp::ps::worker::{WorkerProfile, WorkerSource};
+use advgp::ps::{FaultEvent, FaultPlan, FaultProxy, FaultRule, RunResult};
+use advgp::util::rng::Pcg64;
+use std::net::{TcpListener, TcpStream};
+use std::time::Duration;
+
+/// Standardized friedman problem + kmeans-initialized θ (the idiom
+/// shared with `rust/tests/sharded_ps.rs`).
+fn setup(n: usize, m: usize, seed: u64) -> (Dataset, Dataset, Theta, ThetaLayout) {
+    let mut ds = synth::friedman(n + 200, 4, 0.4, seed);
+    let mut rng = Pcg64::seeded(seed);
+    ds.shuffle(&mut rng);
+    let (mut train_ds, mut test_ds) = ds.split(200);
+    let st = Standardizer::fit(&train_ds);
+    st.apply(&mut train_ds);
+    st.apply(&mut test_ds);
+    let layout = ThetaLayout::new(m, 4);
+    let z = kmeans::kmeans(&train_ds.x, m, 15, &mut rng);
+    let theta = Theta::init(layout, &z);
+    (train_ds, test_ds, theta, layout)
+}
+
+fn one_thread() -> WorkerProfile {
+    WorkerProfile { threads: 1, ..Default::default() }
+}
+
+/// Millisecond-scale budgets so injected outages resolve in test time:
+/// fast reconnect backoff, a 250 ms heartbeat (a wedge is detected
+/// within ~two windows), and write/handshake bounds far under the
+/// watchdog limit.
+fn chaos_retry() -> RetryPolicy {
+    RetryPolicy {
+        reconnect: ReconnectPolicy {
+            max_retries: 8,
+            base: Duration::from_millis(20),
+            cap: Duration::from_millis(200),
+        },
+        handshake_timeout: Duration::from_secs(5),
+        write_timeout: Duration::from_secs(5),
+        heartbeat: Duration::from_millis(250),
+    }
+}
+
+fn chaos_cfg(layout: ThetaLayout, max_updates: u64) -> TrainConfig {
+    let mut cfg = TrainConfig::new(layout);
+    cfg.tau = 2;
+    cfg.max_updates = max_updates;
+    cfg.eval_every_secs = 0.0;
+    cfg.profiles = vec![one_thread(), one_thread()];
+    cfg.heartbeat_secs = 0.25;
+    // The no-hang backstop: a run that livelocks under faults is shut
+    // down typed by the watchdog, and the test still finishes.
+    cfg.time_limit_secs = Some(30.0);
+    cfg
+}
+
+fn assert_finite(theta: &[f64], what: &str) {
+    for (i, v) in theta.iter().enumerate() {
+        assert!(v.is_finite(), "{what}: θ[{i}] = {v} is not finite");
+    }
+}
+
+/// Held-out RMSE of a final θ, on the serving stack (the same path
+/// `native_eval_factory` uses).
+fn rmse_of(layout: ThetaLayout, theta: &[f64], test: &Dataset) -> f64 {
+    let cache = advgp::serve::PosteriorCache::new(layout);
+    cache.install(1, theta);
+    let post = cache.get().expect("posterior installed");
+    let mut ws = PredictWorkspace::new();
+    let (mut mean, mut var) = (Vec::new(), Vec::new());
+    post.gp.predict_into(&test.x, &mut ws, &mut mean, &mut var);
+    advgp::util::rmse(&mean, &test.y)
+}
+
+/// Run a faulted training session: `s` slice servers, one
+/// [`FaultProxy`] per listener (plans in listener order), two workers
+/// connecting through the proxies with millisecond chaos budgets.
+/// Returns the run result and each proxy's applied-fault trace.
+fn run_faulted(
+    s: usize,
+    layout: ThetaLayout,
+    theta0: Vec<f64>,
+    shards: Vec<Dataset>,
+    plans: Vec<FaultPlan>,
+    max_updates: u64,
+) -> (RunResult, Vec<Vec<FaultRule>>) {
+    assert_eq!(plans.len(), s, "one plan per listener");
+    let nets: Vec<NetServer> = (0..s).map(|_| NetServer::bind("127.0.0.1:0").unwrap()).collect();
+    let mut proxies: Vec<FaultProxy> = nets
+        .iter()
+        .zip(plans)
+        .map(|(n, plan)| FaultProxy::start(&n.local_addr().to_string(), plan).unwrap())
+        .collect();
+    let addrs: Vec<String> = proxies.iter().map(|p| p.addr()).collect();
+    let workers: Vec<_> = shards
+        .into_iter()
+        .enumerate()
+        .map(|(k, shard)| {
+            let addrs = addrs.clone();
+            std::thread::spawn(move || {
+                // Budget exhaustion under heavy faults is a *typed*
+                // error, never a panic — a panic here fails the join.
+                let _ = sharded_worker_loop_with(
+                    &addrs,
+                    Some(k),
+                    WorkerSource::Memory(shard),
+                    native_factory(layout),
+                    one_thread(),
+                    chaos_retry(),
+                );
+            })
+        })
+        .collect();
+    let cfg = chaos_cfg(layout, max_updates);
+    let run = if s == 1 {
+        train_remote(&cfg, theta0, nets.into_iter().next().unwrap(), 2, None)
+    } else {
+        train_remote_sharded(&cfg, theta0, nets, 2, None)
+    };
+    for w in workers {
+        w.join().expect("a faulted worker panicked");
+    }
+    let traces: Vec<Vec<FaultRule>> = proxies.iter().map(|p| p.trace()).collect();
+    for p in &mut proxies {
+        p.shutdown();
+    }
+    (run, traces)
+}
+
+/// The tentpole matrix: a seeded plan of {drop, delay, duplicate,
+/// corrupt} events per listener, at S ∈ {1, 2}.  Every rule is pinned
+/// to one of the two *initial* connections (reconnected links get a
+/// fresh, clean connection index), so a faulted run recovers instead of
+/// replaying the same fault forever.  The run must finish — converged,
+/// or typed-degraded by the watchdog — with a finite θ and no panics;
+/// when it converges, accuracy must stay within a loose band of the
+/// fault-free reference.
+#[test]
+fn seeded_fault_matrix_converges_or_degrades_typed() {
+    let (train_ds, test_ds, theta, layout) = setup(400, 6, 41);
+    let shards = train_ds.shard(2);
+    let max_updates = 15;
+
+    // Fault-free in-process reference for the accuracy band.
+    let base = train(
+        &chaos_cfg(layout, max_updates),
+        theta.data.clone(),
+        shards.clone(),
+        native_factory(layout),
+        None,
+    );
+    assert_eq!(base.stats.updates, max_updates);
+    let base_rmse = rmse_of(layout, &base.theta, &test_ds);
+
+    let events = [
+        FaultEvent::Drop,
+        FaultEvent::DelayMs(80),
+        FaultEvent::Duplicate,
+        FaultEvent::CorruptByte(7),
+        FaultEvent::Drop,
+        FaultEvent::DelayMs(40),
+    ];
+    for s in [1usize, 2] {
+        let plans: Vec<FaultPlan> = (0..s)
+            .map(|i| {
+                let seed = 0x5EED_0000 + (s * 16 + i) as u64;
+                // Frames 2.. spare the handshake (frame 0 each way) and
+                // the first push/publish, so the fleet always assembles
+                // before the chaos starts.
+                let drawn = FaultPlan::seeded(seed, &events, 2..10);
+                // Same seed ⇒ same plan, pinned on every run.
+                assert_eq!(drawn, FaultPlan::seeded(seed, &events, 2..10));
+                let mut rules = drawn.rules;
+                for (j, r) in rules.iter_mut().enumerate() {
+                    r.conn = Some(j % 2);
+                }
+                FaultPlan::new(rules)
+            })
+            .collect();
+        let (run, traces) = run_faulted(
+            s,
+            layout,
+            theta.data.clone(),
+            shards.clone(),
+            plans,
+            max_updates,
+        );
+        assert_finite(&run.theta, &format!("S={s} faulted"));
+        let applied: usize = traces.iter().map(Vec::len).sum();
+        assert!(applied >= 1, "S={s}: no fault of the plan was ever applied");
+        // Converge-or-typed-degradation: either the run reached its
+        // update target, or the watchdog ended it at the wall limit.
+        assert!(
+            run.stats.updates == max_updates || run.wall_secs >= 29.0,
+            "S={s}: run ended early ({} updates in {:.1}s) without a \
+             typed degradation path",
+            run.stats.updates,
+            run.wall_secs
+        );
+        if run.stats.updates == max_updates {
+            let faulted_rmse = rmse_of(layout, &run.theta, &test_ds);
+            assert!(
+                faulted_rmse <= base_rmse * 1.5 + 0.2,
+                "S={s}: faulted RMSE {faulted_rmse:.4} strayed too far from \
+                 the fault-free {base_rmse:.4}"
+            );
+        }
+    }
+}
+
+/// Half-lost fleet (S=2): severing one worker's link to one slice
+/// server mid-run re-establishes only that link, under the session's
+/// outage budget — the run still reaches its update target.
+#[test]
+fn severed_slice_link_reestablishes_under_the_outage_budget() {
+    let (train_ds, test_ds, theta, layout) = setup(400, 6, 43);
+    let shards = train_ds.shard(2);
+    let max_updates = 15;
+    let sever = FaultRule {
+        conn: Some(0),
+        dir: Direction::ServerToClient,
+        // s→c frames 0–1 are the WELCOME2 + initial PUBLISH consumed by
+        // the handshake; frame 3 lands mid-run.
+        frame: 3,
+        event: FaultEvent::Sever,
+    };
+    let plans = vec![FaultPlan::new(vec![sever]), FaultPlan::default()];
+    let (run, traces) = run_faulted(2, layout, theta.data.clone(), shards, plans, max_updates);
+    assert_eq!(
+        run.stats.updates,
+        max_updates,
+        "the fleet must absorb one severed link and still converge"
+    );
+    assert_finite(&run.theta, "post-sever");
+    assert_eq!(traces[0], vec![sever], "the sever must have been applied");
+    assert!(traces[1].is_empty(), "the healthy slice saw no faults");
+    let rmse = rmse_of(layout, &run.theta, &test_ds);
+    assert!(rmse.is_finite(), "post-sever RMSE {rmse} not finite");
+}
+
+/// A wedged server→worker direction (alive at the TCP level, silent at
+/// the protocol level) is detected by the worker-side PING/PONG
+/// heartbeat and resolved by re-establishing the link.
+#[test]
+fn wedged_server_link_is_detected_and_reestablished() {
+    let (train_ds, _test, theta, layout) = setup(400, 6, 47);
+    let shards = train_ds.shard(2);
+    let max_updates = 12;
+    let wedge = FaultRule {
+        conn: Some(0),
+        dir: Direction::ServerToClient,
+        frame: 4,
+        event: FaultEvent::Wedge,
+    };
+    let plans = vec![FaultPlan::new(vec![wedge])];
+    let (run, traces) = run_faulted(1, layout, theta.data.clone(), shards, plans, max_updates);
+    assert_eq!(
+        run.stats.updates,
+        max_updates,
+        "a wedged link must be detected and re-established, not waited out"
+    );
+    assert_finite(&run.theta, "post-wedge");
+    assert_eq!(traces[0], vec![wedge]);
+}
+
+/// A corrupted worker→server frame is answered with `ERROR`, counted in
+/// `ServerStats::faults`, and survived: the worker reconnects and the
+/// run converges.
+#[test]
+fn corrupt_push_counts_a_transport_fault_and_recovers() {
+    let (train_ds, _test, theta, layout) = setup(400, 6, 53);
+    let shards = train_ds.shard(2);
+    let max_updates = 12;
+    let corrupt = FaultRule {
+        conn: Some(0),
+        dir: Direction::ClientToServer,
+        // c→s frame 0 is the HELLO; frame 2 is a mid-run push (or PONG)
+        // whose checksum the corruption breaks.
+        frame: 2,
+        event: FaultEvent::CorruptByte(11),
+    };
+    let plans = vec![FaultPlan::new(vec![corrupt])];
+    let (run, traces) = run_faulted(1, layout, theta.data.clone(), shards, plans, max_updates);
+    assert_eq!(run.stats.updates, max_updates, "the run must survive the corruption");
+    assert_finite(&run.theta, "post-corruption");
+    assert_eq!(traces[0], vec![corrupt]);
+    assert!(
+        run.stats.faults >= 1,
+        "the server must have counted the corrupt frame it answered ERROR to \
+         (got {} faults)",
+        run.stats.faults
+    );
+}
+
+/// Reproducibility, end to end: the same seed yields the same plan, and
+/// replaying that plan over an identical frame schedule applies the
+/// identical fault trace — the witness that makes every chaos failure
+/// replayable from its seed alone.
+#[test]
+fn same_seed_replays_the_same_fault_trace() {
+    let events = [
+        FaultEvent::Drop,
+        FaultEvent::CorruptByte(6),
+        FaultEvent::DelayMs(30),
+        FaultEvent::Duplicate,
+        FaultEvent::Drop,
+    ];
+    // A scripted peer: raw byte echo, so the frame schedule both ways
+    // is a pure function of the plan.
+    let echo_server = || {
+        let l = TcpListener::bind("127.0.0.1:0").unwrap();
+        let addr = l.local_addr().unwrap();
+        let h = std::thread::spawn(move || {
+            if let Ok((mut s, _)) = l.accept() {
+                let mut buf = [0u8; 4096];
+                use std::io::{Read, Write};
+                while let Ok(k) = s.read(&mut buf) {
+                    if k == 0 || s.write_all(&buf[..k]).is_err() {
+                        break;
+                    }
+                }
+            }
+        });
+        (addr, h)
+    };
+    let run_once = || -> Vec<FaultRule> {
+        let (addr, srv) = echo_server();
+        let plan = FaultPlan::seeded(0xABAD_5EED, &events, 0..6);
+        let mut proxy = FaultProxy::start(&addr.to_string(), plan).unwrap();
+        let mut c = TcpStream::connect(proxy.addr()).unwrap();
+        for _ in 0..6 {
+            wire::write_frame(&mut c, &Frame::Ping).unwrap();
+        }
+        // Wait for the pumps to drain: the trace is complete once its
+        // length is stable (injected delays are ≤ 30 ms; cap the wait).
+        let (mut last, mut stable) = (usize::MAX, 0);
+        for _ in 0..100 {
+            std::thread::sleep(Duration::from_millis(50));
+            let n = proxy.trace().len();
+            if n == last {
+                stable += 1;
+                if stable >= 6 {
+                    break;
+                }
+            } else {
+                (last, stable) = (n, 0);
+            }
+        }
+        let trace = proxy.trace();
+        drop(c);
+        proxy.shutdown();
+        let _ = srv.join();
+        trace
+    };
+    let first = run_once();
+    let second = run_once();
+    assert!(!first.is_empty(), "the seeded plan must have applied faults");
+    assert_eq!(first, second, "same seed must replay the same fault trace");
+}
