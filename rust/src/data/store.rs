@@ -1,12 +1,12 @@
-//! Out-of-core shard store (ISSUE 3): the disk layer that lets a worker
-//! train on a shard far larger than its RAM — the paper's §1 regime
-//! ("billions of samples") needs data locality to be a property of the
-//! *store*, not of process memory (cf. Gal et al., 2014, on distributed
-//! data placement in sparse-GP inference).
+//! Out-of-core shard store (ISSUE 3, reworked in ISSUE 7): the disk
+//! layer that lets a worker train on a shard far larger than its RAM —
+//! the paper's §1 regime ("billions of samples") needs data locality to
+//! be a property of the *store*, not of process memory (cf. Gal et al.,
+//! 2014, on distributed data placement in sparse-GP inference).
 //!
-//! # Shard file format `ADVGPSH1`
+//! Two on-disk formats coexist:
 //!
-//! All values little-endian:
+//! # Legacy flat format `ADVGPSH1` (read + migrate only)
 //!
 //! ```text
 //! [ 0.. 8)  magic   b"ADVGPSH1"
@@ -15,50 +15,351 @@
 //! [24.. )   rows    n × (d features + 1 target) f64, row-major
 //! ```
 //!
-//! A row is contiguous (`x[0..d]` then `y`), so any window of rows is a
-//! single ranged read.  The file is sealed by write-to-temp + atomic
-//! rename: a crash mid-write can never leave a half-valid shard at the
-//! final path, and [`ShardReader::open`] rejects bad magic, short
-//! headers, and length mismatches (truncation or trailing garbage).
+//! SH1 carries **no checksums**: a flipped bit on disk reaches the
+//! gradient path undetected.  [`migrate_store`] upgrades an SH1 store
+//! in place (bitwise row parity pinned by tests).
+//!
+//! # Verifiable chunk-columnar format `ADVGPSH2` (ISSUE 7)
+//!
+//! All values little-endian:
+//!
+//! ```text
+//! [ 0.. 8)  magic        b"ADVGPSH2"
+//! [ 8..16)  n            u64 row count           (≥ 1)
+//! [16..24)  d            u64 feature count       (≥ 1)
+//! [24..32)  chunk_rows   u64 rows per chunk      (≥ 1; last chunk short)
+//! [32..40)  n_chunks     u64 = ⌈n / chunk_rows⌉
+//! [40..48)  dir_off      u64 file offset of the chunk directory
+//! [48..  )  payloads     n_chunks chunk payloads, back to back
+//! [dir_off) directory    n_chunks × 40-byte entries:
+//!             offset u64 | len u64 | raw_len u64 | enc u64 | sum u64
+//! [ .. +8)  dir_sum      u64 FNV-1a over header ‖ directory entries
+//! ```
+//!
+//! A chunk's *raw* payload is **columnar**: for the `r` rows it holds,
+//! the f64 bit patterns of feature column 0, then column 1, …, then the
+//! `r` targets (`raw_len = r·(d+1)·8`).  Columnar layout puts values of
+//! like magnitude next to each other, which is what the optional
+//! std-only compression (`enc = 1`) exploits: XOR-delta over
+//! consecutive u64 words, then a zero-run-length byte code.  The writer
+//! keeps the compressed form only when it is strictly smaller.
+//!
+//! `sum` is the same FNV-1a 64 used by the `ps/wire` frame checksums,
+//! computed over the payload bytes **as stored** (post-compression), so
+//! verification never has to decompress a corrupt chunk.  Every read
+//! path recomputes it; a mismatch surfaces as a typed
+//! [`StoreFault::ChunkCorrupt`] — corrupt bytes never reach the
+//! gradient path.
+//!
+//! # Quarantine & degraded mode
+//!
+//! A [`ShardReader`] given a [`QuarantinePolicy`] (training paths
+//! install one; standalone opens stay strict) reacts to a corrupt chunk
+//! by *quarantining* it — the chunk is skipped for the rest of the
+//! session, a shared counter is bumped, and one token is drawn from the
+//! session-wide [`CorruptionBudget`] (refilled by every verified read,
+//! mirroring the transport layer's `OutageBudget`).  Training continues
+//! on the surviving rows; only a dry budget (or a shard with nothing
+//! left) ends the run, typed ([`StoreFault::BudgetDry`] /
+//! [`StoreFault::ShardDead`]).
+//!
+//! # Logical repartitioning
+//!
+//! The v2 manifest maps **global chunk ranges** to logical workers, so
+//! [`ShardSet::repartition`] retargets a store from W to W′ workers by
+//! rewriting ~100 bytes of JSON — no shard bytes move.  A worker's
+//! readers are restricted to its assigned chunk ranges
+//! ([`ShardReader::restrict_chunks`]).
 //!
 //! # Key invariants
 //!
-//! * **Zero steady-state allocation**: [`ShardReader`] streams windows
-//!   through one internal byte buffer and one caller-owned [`Dataset`]
-//!   buffer; both are grown once and recycled forever after (pinned by
-//!   `tests/store_checkpoint.rs`).  Peak resident data per worker is
-//!   one chunk, not the shard.
+//! * **Zero steady-state allocation**: windows stream through reusable
+//!   byte buffers (stored + decompressed) and one caller-owned
+//!   [`Dataset`] buffer; all are grown once and recycled forever after.
 //! * **Traversal parity**: the cyclic window at `(start, k)` decodes
 //!   bitwise-identically to [`Dataset::copy_cyclic_window`] on the
-//!   in-memory shard, so an out-of-core worker visits exactly the rows
-//!   its resident twin would, in the same order.
+//!   in-memory shard, for both formats.
 //! * **Partition parity**: [`ShardSet::create`] writes the same
 //!   contiguous near-equal partition as [`Dataset::shard`] (and
 //!   enforces the same `1 ≤ r ≤ n` contract).
+//! * **Detection before use**: every SH2 byte consumed by training was
+//!   checksum-verified in the same read that fetched it.
 
 use super::Dataset;
 use crate::util::json::Json;
 use anyhow::{ensure, Context, Result};
 use std::fs::File;
 use std::io::{BufWriter, Read, Seek, SeekFrom, Write};
+use std::ops::Range;
 use std::path::{Path, PathBuf};
+use std::sync::atomic::{AtomicU32, AtomicU64, Ordering};
+use std::sync::Arc;
 
-/// Magic bytes opening every shard file.
+/// Magic bytes opening every legacy (v1) shard file.
 pub const SHARD_MAGIC: [u8; 8] = *b"ADVGPSH1";
-/// Shard header length in bytes (magic + n + d).
+/// Magic bytes opening every chunk-columnar (v2) shard file.
+pub const SHARD_MAGIC_V2: [u8; 8] = *b"ADVGPSH2";
+/// Legacy shard header length in bytes (magic + n + d).
 pub const SHARD_HEADER_LEN: u64 = 24;
-/// Default minibatch chunk (rows per streamed window).
+/// v2 shard header length (magic + n + d + chunk_rows + n_chunks + dir_off).
+pub const SH2_HEADER_LEN: u64 = 48;
+/// Bytes per v2 chunk-directory entry (offset, len, raw_len, enc, sum).
+pub const SH2_DIR_ENTRY_LEN: u64 = 40;
+/// Default minibatch chunk (rows per physical chunk and streamed window).
 pub const DEFAULT_CHUNK_ROWS: usize = 4096;
+/// Default session-wide corruption budget: consecutive quarantines a
+/// run absorbs before failing typed (verified reads refill it).
+pub const DEFAULT_CORRUPTION_BUDGET: u32 = 8;
 /// Name of the [`ShardSet`] manifest inside its directory.
 pub const STORE_MANIFEST: &str = "store.json";
 
-/// Streaming writer for one shard file.
+/// Typed storage faults (ISSUE 7).  Carried through `anyhow` like the
+/// checkpoint layer's `TopologyConflict`: downcast with
+/// `err.downcast_ref::<StoreFault>()`.
+#[derive(Debug, Clone, PartialEq, Eq)]
+pub enum StoreFault {
+    /// A chunk failed checksum verification (or could not be
+    /// decompressed / fully read).  Strict readers return this
+    /// directly; degraded readers quarantine instead.
+    ChunkCorrupt { path: PathBuf, chunk: usize, detail: String },
+    /// The session's [`CorruptionBudget`] ran dry at this quarantine.
+    BudgetDry { path: PathBuf, chunk: usize, max: u32 },
+    /// Every chunk this reader may serve is quarantined.
+    ShardDead { path: PathBuf, quarantined: usize },
+}
+
+impl std::fmt::Display for StoreFault {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        match self {
+            StoreFault::ChunkCorrupt { path, chunk, detail } => write!(
+                f,
+                "store: chunk {chunk} of {} corrupt: {detail}",
+                path.display()
+            ),
+            StoreFault::BudgetDry { path, chunk, max } => write!(
+                f,
+                "store: corruption budget ({max}) dry quarantining chunk {chunk} of {}",
+                path.display()
+            ),
+            StoreFault::ShardDead { path, quarantined } => write!(
+                f,
+                "store: every readable chunk of {} is quarantined ({quarantined})",
+                path.display()
+            ),
+        }
+    }
+}
+
+impl std::error::Error for StoreFault {}
+
+/// Session-wide corruption budget: how many *consecutive* chunk
+/// quarantines a run absorbs before failing typed.  Mirrors the
+/// transport layer's `OutageBudget` refill-on-success discipline: every
+/// verified chunk read calls [`CorruptionBudget::refill`], so the
+/// budget bounds corruption *density*, not lifetime total.
+pub struct CorruptionBudget {
+    max: u32,
+    used: AtomicU32,
+}
+
+impl CorruptionBudget {
+    pub fn new(max: u32) -> Self {
+        Self { max, used: AtomicU32::new(0) }
+    }
+
+    /// Draw one token; `false` means the budget is dry.
+    pub fn take(&self) -> bool {
+        self.used
+            .fetch_update(Ordering::SeqCst, Ordering::SeqCst, |u| {
+                (u < self.max).then_some(u + 1)
+            })
+            .is_ok()
+    }
+
+    /// A verified read proves the device still serves good bytes:
+    /// restore the full budget.
+    pub fn refill(&self) {
+        self.used.store(0, Ordering::SeqCst);
+    }
+
+    pub fn used(&self) -> u32 {
+        self.used.load(Ordering::SeqCst)
+    }
+
+    pub fn max(&self) -> u32 {
+        self.max
+    }
+}
+
+/// What a degraded-mode reader shares with the rest of the session: the
+/// corruption budget and the run-wide quarantine counter surfaced in
+/// `ServerStats.store_quarantines`.
+#[derive(Clone)]
+pub struct QuarantinePolicy {
+    pub budget: Arc<CorruptionBudget>,
+    pub counter: Arc<AtomicU64>,
+}
+
+impl QuarantinePolicy {
+    /// Fresh policy with the default budget (convenience for tests and
+    /// single-reader tools).
+    pub fn new_default() -> Self {
+        Self {
+            budget: Arc::new(CorruptionBudget::new(DEFAULT_CORRUPTION_BUDGET)),
+            counter: Arc::new(AtomicU64::new(0)),
+        }
+    }
+}
+
+// ---------------------------------------------------------------------
+// Std-only chunk compression (enc = 1): XOR-delta over consecutive u64
+// words, then a byte-level zero-run-length code.  Deterministic, exact,
+// and dependency-free; columnar chunks make consecutive words close in
+// magnitude, so their XOR is mostly leading-zero bytes.
+//
+// Token stream: control byte `c`:
+//   c in 0..=127   → the next c+1 bytes are literals
+//   c in 128..=255 → a run of (c - 126) zero bytes (2..=129)
+// ---------------------------------------------------------------------
+
+/// Compress `raw` (length a multiple of 8).  Returns the token stream;
+/// callers keep it only if it is strictly smaller than `raw`.
+fn sh2_compress(raw: &[u8]) -> Vec<u8> {
+    debug_assert!(raw.len() % 8 == 0);
+    // XOR-delta pass.
+    let mut delta = Vec::with_capacity(raw.len());
+    let mut prev = 0u64;
+    for w in raw.chunks_exact(8) {
+        let cur = u64::from_le_bytes(w.try_into().unwrap());
+        delta.extend_from_slice(&(cur ^ prev).to_le_bytes());
+        prev = cur;
+    }
+    // Zero-RLE pass.
+    let mut out = Vec::with_capacity(raw.len() / 2);
+    let mut i = 0usize;
+    while i < delta.len() {
+        if delta[i] == 0 {
+            let mut run = 1usize;
+            while i + run < delta.len() && delta[i + run] == 0 && run < 129 {
+                run += 1;
+            }
+            if run >= 2 {
+                out.push((run as u8 - 2) + 128);
+                i += run;
+                continue;
+            }
+        }
+        // Literal run: up to 128 bytes, stopping before a zero pair.
+        let start = i;
+        let mut len = 0usize;
+        while i < delta.len() && len < 128 {
+            if delta[i] == 0 && i + 1 < delta.len() && delta[i + 1] == 0 {
+                break;
+            }
+            i += 1;
+            len += 1;
+        }
+        out.push(len as u8 - 1);
+        out.extend_from_slice(&delta[start..i]);
+    }
+    out
+}
+
+/// Invert [`sh2_compress`] into `out` (cleared first).  Any structural
+/// mismatch (overrun, wrong final length) is an error — with the
+/// checksum already verified it would mean a writer bug, but the reader
+/// still refuses to fabricate rows.
+fn sh2_decompress(enc: &[u8], raw_len: usize, out: &mut Vec<u8>) -> Result<()> {
+    out.clear();
+    out.reserve(raw_len);
+    let mut i = 0usize;
+    while i < enc.len() {
+        let c = enc[i];
+        i += 1;
+        if c < 128 {
+            let len = c as usize + 1;
+            ensure!(i + len <= enc.len(), "compressed chunk: literal overruns payload");
+            out.extend_from_slice(&enc[i..i + len]);
+            i += len;
+        } else {
+            let run = c as usize - 126;
+            out.extend(std::iter::repeat(0u8).take(run));
+        }
+        ensure!(out.len() <= raw_len, "compressed chunk: inflates past raw_len");
+    }
+    ensure!(
+        out.len() == raw_len,
+        "compressed chunk: decoded {} bytes, expected {raw_len}",
+        out.len()
+    );
+    // Undo the XOR-delta in place.
+    let mut prev = 0u64;
+    for w in out.chunks_exact_mut(8) {
+        let cur = u64::from_le_bytes((&*w).try_into().unwrap()) ^ prev;
+        w.copy_from_slice(&cur.to_le_bytes());
+        prev = cur;
+    }
+    Ok(())
+}
+
+/// One v2 chunk-directory entry, as stored on disk.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub struct ChunkDesc {
+    /// Absolute file offset of the stored payload.
+    pub offset: u64,
+    /// Stored payload length (compressed length when `enc == 1`).
+    pub len: u64,
+    /// Uncompressed payload length = rows·(d+1)·8.
+    pub raw_len: u64,
+    /// 0 = raw columnar bytes, 1 = delta/RLE compressed.
+    pub enc: u64,
+    /// FNV-1a 64 over the stored payload bytes.
+    pub sum: u64,
+}
+
+impl ChunkDesc {
+    fn to_bytes(self) -> [u8; SH2_DIR_ENTRY_LEN as usize] {
+        let mut b = [0u8; SH2_DIR_ENTRY_LEN as usize];
+        b[0..8].copy_from_slice(&self.offset.to_le_bytes());
+        b[8..16].copy_from_slice(&self.len.to_le_bytes());
+        b[16..24].copy_from_slice(&self.raw_len.to_le_bytes());
+        b[24..32].copy_from_slice(&self.enc.to_le_bytes());
+        b[32..40].copy_from_slice(&self.sum.to_le_bytes());
+        b
+    }
+
+    fn from_bytes(b: &[u8]) -> Self {
+        let u = |r: Range<usize>| u64::from_le_bytes(b[r].try_into().unwrap());
+        Self {
+            offset: u(0..8),
+            len: u(8..16),
+            raw_len: u(16..24),
+            enc: u(24..32),
+            sum: u(32..40),
+        }
+    }
+}
+
+fn sh2_header_bytes(n: u64, d: u64, chunk_rows: u64, n_chunks: u64, dir_off: u64) -> [u8; 48] {
+    let mut h = [0u8; SH2_HEADER_LEN as usize];
+    h[0..8].copy_from_slice(&SHARD_MAGIC_V2);
+    h[8..16].copy_from_slice(&n.to_le_bytes());
+    h[16..24].copy_from_slice(&d.to_le_bytes());
+    h[24..32].copy_from_slice(&chunk_rows.to_le_bytes());
+    h[32..40].copy_from_slice(&n_chunks.to_le_bytes());
+    h[40..48].copy_from_slice(&dir_off.to_le_bytes());
+    h
+}
+
+/// Streaming writer for one ADVGPSH2 shard file.
 ///
-/// Rows are appended to `<path>.tmp`; [`ShardWriter::finish`] patches
-/// the row count into the header, fsyncs, and atomically renames the
-/// file into place.  An abandoned writer (dropped unfinished, or a
-/// failed `finish`) removes its temp file, so aborted writes leave
-/// nothing behind.
+/// Rows are buffered into physical chunks of `chunk_rows`; each full
+/// chunk is transposed to columnar order, optionally compressed,
+/// checksummed, and appended to `<path>.tmp`.  [`ShardWriter::finish`]
+/// writes the chunk directory + directory checksum, patches the header,
+/// fsyncs, and atomically renames the file into place.  An abandoned
+/// writer removes its temp file, so aborted writes leave nothing
+/// behind.
 pub struct ShardWriter {
     /// `None` once `finish` has consumed the stream.
     w: Option<BufWriter<File>>,
@@ -66,20 +367,50 @@ pub struct ShardWriter {
     tmp: PathBuf,
     d: usize,
     n: u64,
+    chunk_rows: usize,
+    /// Row-major staging for the chunk being filled.
+    pending: Vec<f64>,
+    pending_rows: usize,
+    descs: Vec<ChunkDesc>,
+    /// Next payload write offset.
+    pos: u64,
+    /// Reusable columnar / compressed scratch.
+    raw: Vec<u8>,
+    comp: Vec<u8>,
 }
 
 impl ShardWriter {
-    /// Start a shard at `path` for `d`-feature rows.
+    /// Start a shard at `path` for `d`-feature rows with the default
+    /// physical chunk size.
     pub fn create(path: &Path, d: usize) -> Result<Self> {
+        Self::create_with(path, d, DEFAULT_CHUNK_ROWS)
+    }
+
+    /// Start a shard at `path` with `chunk_rows` rows per physical
+    /// chunk.
+    pub fn create_with(path: &Path, d: usize, chunk_rows: usize) -> Result<Self> {
         ensure!(d >= 1, "shard store needs d >= 1 features (got {d})");
+        ensure!(chunk_rows >= 1, "shard store needs chunk_rows >= 1");
         let tmp = tmp_path(path);
         let f = File::create(&tmp)
             .with_context(|| format!("create shard temp {}", tmp.display()))?;
         let mut w = BufWriter::new(f);
-        w.write_all(&SHARD_MAGIC)?;
-        w.write_all(&0u64.to_le_bytes())?; // n, patched by finish()
-        w.write_all(&(d as u64).to_le_bytes())?;
-        Ok(Self { w: Some(w), path: path.to_path_buf(), tmp, d, n: 0 })
+        // Header placeholder — every field patched by finish().
+        w.write_all(&[0u8; SH2_HEADER_LEN as usize])?;
+        Ok(Self {
+            w: Some(w),
+            path: path.to_path_buf(),
+            tmp,
+            d,
+            n: 0,
+            chunk_rows,
+            pending: Vec::new(),
+            pending_rows: 0,
+            descs: Vec::new(),
+            pos: SH2_HEADER_LEN,
+            raw: Vec::new(),
+            comp: Vec::new(),
+        })
     }
 
     /// Append one row (`x` must have exactly `d` features).
@@ -90,12 +421,13 @@ impl ShardWriter {
             x.len(),
             self.d
         );
-        let w = self.w.as_mut().expect("writer already finished");
-        for v in x {
-            w.write_all(&v.to_le_bytes())?;
-        }
-        w.write_all(&y.to_le_bytes())?;
+        self.pending.extend_from_slice(x);
+        self.pending.push(y);
+        self.pending_rows += 1;
         self.n += 1;
+        if self.pending_rows == self.chunk_rows {
+            self.flush_chunk()?;
+        }
         Ok(())
     }
 
@@ -107,9 +439,48 @@ impl ShardWriter {
         Ok(())
     }
 
-    /// Seal the shard: patch the header row count, fsync, and rename
-    /// the temp file to its final path.  Returns the row count; on
-    /// error the temp file is removed.
+    /// Transpose the pending rows to columnar order, compress if that
+    /// helps, checksum, and append as one chunk.
+    fn flush_chunk(&mut self) -> Result<()> {
+        let rows = self.pending_rows;
+        if rows == 0 {
+            return Ok(());
+        }
+        let d = self.d;
+        let stride = d + 1;
+        self.raw.clear();
+        self.raw.reserve(rows * stride * 8);
+        for c in 0..stride {
+            for r in 0..rows {
+                self.raw.extend_from_slice(&self.pending[r * stride + c].to_le_bytes());
+            }
+        }
+        self.comp = sh2_compress(&self.raw);
+        let (stored, enc): (&[u8], u64) = if self.comp.len() < self.raw.len() {
+            (&self.comp, 1)
+        } else {
+            (&self.raw, 0)
+        };
+        let sum = crate::util::fnv1a64(crate::util::FNV1A64_INIT, stored);
+        let w = self.w.as_mut().expect("writer already finished");
+        w.write_all(stored)?;
+        self.descs.push(ChunkDesc {
+            offset: self.pos,
+            len: stored.len() as u64,
+            raw_len: self.raw.len() as u64,
+            enc,
+            sum,
+        });
+        self.pos += stored.len() as u64;
+        self.pending.clear();
+        self.pending_rows = 0;
+        Ok(())
+    }
+
+    /// Seal the shard: flush the tail chunk, write the directory and
+    /// its checksum, patch the header, fsync, and rename the temp file
+    /// to its final path.  Returns the row count; on error the temp
+    /// file is removed.
     pub fn finish(mut self) -> Result<u64> {
         let res = self.finish_inner();
         if res.is_err() {
@@ -120,10 +491,26 @@ impl ShardWriter {
 
     fn finish_inner(&mut self) -> Result<u64> {
         ensure!(self.n >= 1, "refusing to seal an empty shard (0 rows)");
+        self.flush_chunk()?;
+        let dir_off = self.pos;
+        let header = sh2_header_bytes(
+            self.n,
+            self.d as u64,
+            self.chunk_rows as u64,
+            self.descs.len() as u64,
+            dir_off,
+        );
+        let mut dir_sum = crate::util::fnv1a64(crate::util::FNV1A64_INIT, &header);
         let mut w = self.w.take().expect("writer already finished");
+        for desc in &self.descs {
+            let b = desc.to_bytes();
+            dir_sum = crate::util::fnv1a64(dir_sum, &b);
+            w.write_all(&b)?;
+        }
+        w.write_all(&dir_sum.to_le_bytes())?;
         w.flush()?;
-        w.seek(SeekFrom::Start(8))?;
-        w.write_all(&self.n.to_le_bytes())?;
+        w.seek(SeekFrom::Start(0))?;
+        w.write_all(&header)?;
         w.flush()?;
         let f = w.into_inner().context("flush shard writer")?;
         f.sync_all().context("fsync shard")?;
@@ -160,12 +547,42 @@ impl Drop for ShardWriter {
     }
 }
 
-/// Write `ds` as a single shard file at `path` (atomic; see
+/// Write `ds` as a single v2 shard file at `path` (atomic; see
 /// [`ShardWriter`]).
 pub fn write_shard(path: &Path, ds: &Dataset) -> Result<()> {
     let mut w = ShardWriter::create(path, ds.d())?;
     w.push_dataset(ds)?;
     w.finish()?;
+    Ok(())
+}
+
+/// Write `ds` in the legacy flat ADVGPSH1 format (migration sources,
+/// compatibility tests).  Atomic like the v2 writer.
+pub fn write_shard_v1(path: &Path, ds: &Dataset) -> Result<()> {
+    ensure!(ds.n() >= 1 && ds.d() >= 1, "refusing to write a degenerate v1 shard");
+    let tmp = tmp_path(path);
+    let mut bytes = Vec::with_capacity(SHARD_HEADER_LEN as usize + ds.n() * (ds.d() + 1) * 8);
+    bytes.extend_from_slice(&SHARD_MAGIC);
+    bytes.extend_from_slice(&(ds.n() as u64).to_le_bytes());
+    bytes.extend_from_slice(&(ds.d() as u64).to_le_bytes());
+    for r in 0..ds.n() {
+        for v in ds.x.row(r) {
+            bytes.extend_from_slice(&v.to_le_bytes());
+        }
+        bytes.extend_from_slice(&ds.y[r].to_le_bytes());
+    }
+    std::fs::write(&tmp, &bytes)
+        .with_context(|| format!("write v1 shard temp {}", tmp.display()))?;
+    let f = File::open(&tmp)?;
+    f.sync_all().context("fsync v1 shard")?;
+    drop(f);
+    std::fs::rename(&tmp, path)
+        .with_context(|| format!("rename {} -> {}", tmp.display(), path.display()))?;
+    if let Some(parent) = path.parent() {
+        if let Ok(dir) = File::open(parent) {
+            let _ = dir.sync_all();
+        }
+    }
     Ok(())
 }
 
@@ -183,10 +600,23 @@ pub fn dataset_fingerprint(ds: &Dataset) -> u64 {
     h
 }
 
-/// Streams fixed-size minibatch windows out of one shard file.
+/// v2-specific reader state.
+struct Sh2 {
+    /// Rows per physical chunk (last chunk may be short).
+    phys_rows: usize,
+    dir: Vec<ChunkDesc>,
+    quarantined: Vec<bool>,
+    /// Quarantine events in discovery order (the replayable trace).
+    trace: Vec<usize>,
+    /// Reusable decompressed-payload scratch.
+    raw: Vec<u8>,
+}
+
+/// Streams fixed-size minibatch windows out of one shard file (either
+/// format; v2 chunks are checksum-verified on every read).
 ///
-/// The reader holds a cursor for [`ShardReader::next_window`] and a
-/// reusable byte buffer; windows wrap cyclically so offsets
+/// The reader holds a cursor for [`ShardReader::next_window`] and
+/// reusable byte buffers; windows wrap cyclically so offsets
 /// `start, start + k, start + 2k, …` (mod n) tile the whole shard
 /// within ⌈n/k⌉ reads from any starting offset — the same coverage
 /// guarantee as [`Dataset::copy_cyclic_window`].
@@ -218,32 +648,54 @@ pub fn dataset_fingerprint(ds: &Dataset) -> u64 {
 pub struct ShardReader {
     f: File,
     path: PathBuf,
+    /// Absolute row count of the file.
     n: usize,
     d: usize,
+    /// Window rows per `next_window` (logical, independent of the
+    /// physical chunk size).
     chunk_rows: usize,
+    /// Streaming cursor, relative to the restriction window.
     offset: usize,
-    /// Reusable raw block buffer (grown once, recycled per window).
+    /// Reusable raw block buffer (grown once, recycled per read).
     buf: Vec<u8>,
+    /// `None` for legacy SH1 files.
+    v2: Option<Sh2>,
+    /// Restriction window `[row_lo, row_hi)` in absolute rows — the
+    /// logical-repartitioning hook.  Defaults to the whole file.
+    row_lo: usize,
+    row_hi: usize,
+    /// Installed by training paths; turns corrupt chunks into
+    /// quarantines instead of hard errors.
+    policy: Option<QuarantinePolicy>,
 }
 
 impl ShardReader {
-    /// Open and validate a shard file.
+    /// Open and validate a shard file (either format).  For v2 the
+    /// chunk directory is read and its checksum verified here; chunk
+    /// payloads are verified lazily, on each read.
     pub fn open(path: &Path) -> Result<Self> {
         let mut f = File::open(path)
             .with_context(|| format!("open shard {}", path.display()))?;
-        let mut header = [0u8; SHARD_HEADER_LEN as usize];
-        f.read_exact(&mut header).with_context(|| {
+        let mut magic = [0u8; 8];
+        f.read_exact(&mut magic)
+            .with_context(|| format!("shard {} shorter than its magic", path.display()))?;
+        if magic == SHARD_MAGIC_V2 {
+            return Self::open_v2(f, path);
+        }
+        ensure!(
+            magic == SHARD_MAGIC,
+            "shard {}: bad magic {:?} (want {:?} or {:?})",
+            path.display(),
+            &magic,
+            SHARD_MAGIC,
+            SHARD_MAGIC_V2
+        );
+        let mut rest = [0u8; 16];
+        f.read_exact(&mut rest).with_context(|| {
             format!("shard {} shorter than its header", path.display())
         })?;
-        ensure!(
-            header[..8] == SHARD_MAGIC,
-            "shard {}: bad magic {:?} (want {:?})",
-            path.display(),
-            &header[..8],
-            SHARD_MAGIC
-        );
-        let n = u64::from_le_bytes(header[8..16].try_into().unwrap());
-        let d = u64::from_le_bytes(header[16..24].try_into().unwrap());
+        let n = u64::from_le_bytes(rest[0..8].try_into().unwrap());
+        let d = u64::from_le_bytes(rest[8..16].try_into().unwrap());
         ensure!(n >= 1 && d >= 1, "shard {}: degenerate n={n} d={d}", path.display());
         let want = SHARD_HEADER_LEN as u128 + n as u128 * (d + 1) as u128 * 8;
         let have = f.metadata()?.len() as u128;
@@ -261,11 +713,102 @@ impl ShardReader {
             chunk_rows: DEFAULT_CHUNK_ROWS,
             offset: 0,
             buf: Vec::new(),
+            v2: None,
+            row_lo: 0,
+            row_hi: n as usize,
+            policy: None,
         })
     }
 
+    fn open_v2(mut f: File, path: &Path) -> Result<Self> {
+        let mut header = [0u8; SH2_HEADER_LEN as usize];
+        header[..8].copy_from_slice(&SHARD_MAGIC_V2);
+        f.read_exact(&mut header[8..]).with_context(|| {
+            format!("shard {} shorter than its v2 header", path.display())
+        })?;
+        let u = |r: Range<usize>| u64::from_le_bytes(header[r].try_into().unwrap());
+        let (n, d, phys, n_chunks, dir_off) =
+            (u(8..16), u(16..24), u(24..32), u(32..40), u(40..48));
+        ensure!(n >= 1 && d >= 1 && phys >= 1, "shard {}: degenerate header", path.display());
+        ensure!(
+            n_chunks == n.div_ceil(phys),
+            "shard {}: header declares {n_chunks} chunks, {n} rows / {phys} \
+             per chunk implies {}",
+            path.display(),
+            n.div_ceil(phys)
+        );
+        let want = dir_off as u128 + n_chunks as u128 * SH2_DIR_ENTRY_LEN as u128 + 8;
+        let have = f.metadata()?.len() as u128;
+        ensure!(
+            dir_off >= SH2_HEADER_LEN && have == want,
+            "shard {}: {have} bytes on disk, directory layout implies {want} \
+             (truncated or corrupt)",
+            path.display()
+        );
+        f.seek(SeekFrom::Start(dir_off))?;
+        let dir_bytes = n_chunks as usize * SH2_DIR_ENTRY_LEN as usize;
+        let mut block = vec![0u8; dir_bytes + 8];
+        f.read_exact(&mut block).with_context(|| {
+            format!("shard {}: short read of chunk directory", path.display())
+        })?;
+        let stored_sum = u64::from_le_bytes(block[dir_bytes..].try_into().unwrap());
+        let mut sum = crate::util::fnv1a64(crate::util::FNV1A64_INIT, &header);
+        sum = crate::util::fnv1a64(sum, &block[..dir_bytes]);
+        ensure!(
+            sum == stored_sum,
+            "shard {}: chunk directory checksum mismatch \
+             (stored {stored_sum:016x}, computed {sum:016x})",
+            path.display()
+        );
+        let mut dir = Vec::with_capacity(n_chunks as usize);
+        let mut pos = SH2_HEADER_LEN;
+        for c in 0..n_chunks as usize {
+            let e = ChunkDesc::from_bytes(
+                &block[c * SH2_DIR_ENTRY_LEN as usize..(c + 1) * SH2_DIR_ENTRY_LEN as usize],
+            );
+            let rows = if c as u64 + 1 == n_chunks { n - c as u64 * phys } else { phys };
+            ensure!(
+                e.offset == pos
+                    && e.offset + e.len <= dir_off
+                    && e.raw_len == rows * (d + 1) * 8
+                    && e.enc <= 1
+                    && (e.enc == 1 || e.len == e.raw_len),
+                "shard {}: chunk {c} directory entry inconsistent",
+                path.display()
+            );
+            pos = e.offset + e.len;
+            dir.push(e);
+        }
+        ensure!(
+            pos == dir_off,
+            "shard {}: chunk payloads do not tile the data region",
+            path.display()
+        );
+        Ok(Self {
+            f,
+            path: path.to_path_buf(),
+            n: n as usize,
+            d: d as usize,
+            chunk_rows: phys as usize,
+            offset: 0,
+            buf: Vec::new(),
+            v2: Some(Sh2 {
+                phys_rows: phys as usize,
+                quarantined: vec![false; n_chunks as usize],
+                trace: Vec::new(),
+                raw: Vec::new(),
+                dir,
+            }),
+            row_lo: 0,
+            row_hi: n as usize,
+            policy: None,
+        })
+    }
+
+    /// Rows this reader serves (the restriction window when one is
+    /// installed, else the whole file).
     pub fn n(&self) -> usize {
-        self.n
+        self.row_hi - self.row_lo
     }
 
     pub fn d(&self) -> usize {
@@ -276,23 +819,84 @@ impl ShardReader {
         &self.path
     }
 
+    /// Is this a chunk-columnar (checksummed) v2 shard?
+    pub fn is_v2(&self) -> bool {
+        self.v2.is_some()
+    }
+
+    /// Physical chunks in the file (1 for legacy SH1).
+    pub fn n_chunks(&self) -> usize {
+        self.v2.as_ref().map_or(1, |v| v.dir.len())
+    }
+
+    /// Rows per physical chunk (v2 only).
+    pub fn phys_chunk_rows(&self) -> Option<usize> {
+        self.v2.as_ref().map(|v| v.phys_rows)
+    }
+
     /// Rows per [`ShardReader::next_window`] call (clamped to n).
     pub fn chunk_rows(&self) -> usize {
-        self.chunk_rows.min(self.n)
+        self.chunk_rows.min(self.n())
     }
 
     pub fn set_chunk_rows(&mut self, rows: usize) {
         self.chunk_rows = rows.max(1);
     }
 
-    /// Move the streaming cursor (wraps mod n).
+    /// Move the streaming cursor (wraps mod the served row count).
     pub fn seek_to(&mut self, offset: usize) {
-        self.offset = offset % self.n;
+        self.offset = offset % self.n();
     }
 
-    /// Current streaming cursor.
+    /// Current streaming cursor (relative to the restriction window).
     pub fn cursor(&self) -> usize {
         self.offset
+    }
+
+    /// Advance the cursor as `windows` strict `next_window` calls would
+    /// (arithmetic only — no I/O, no verification).  Used to replay a
+    /// persisted `(offset, local_iter)` checkpoint cursor; exact for
+    /// intact stores, approximate once quarantines have perturbed the
+    /// walk (degraded runs don't promise bitwise resume).
+    pub fn fast_forward(&mut self, windows: u64) {
+        let ln = self.n() as u128;
+        if ln == 0 {
+            return;
+        }
+        let k = self.chunk_rows() as u128;
+        self.offset = ((self.offset as u128 + (windows as u128 % ln) * k % ln) % ln) as usize;
+    }
+
+    /// Install the session's degraded-mode policy: corrupt chunks are
+    /// quarantined (counted against `policy.counter` and
+    /// `policy.budget`) instead of failing the read.
+    pub fn set_fault_policy(&mut self, policy: QuarantinePolicy) {
+        self.policy = Some(policy);
+    }
+
+    /// Restrict the reader to physical chunks `[lo, hi)` — the reader
+    /// then serves only those rows, cyclically (logical repartitioning;
+    /// v2 only).  Resets the cursor.
+    pub fn restrict_chunks(&mut self, lo: usize, hi: usize) -> Result<()> {
+        let v2 = self
+            .v2
+            .as_ref()
+            .with_context(|| format!("{}: chunk restriction needs a v2 shard", self.path.display()))?;
+        ensure!(
+            lo < hi && hi <= v2.dir.len(),
+            "{}: chunk range {lo}..{hi} out of 0..{}",
+            self.path.display(),
+            v2.dir.len()
+        );
+        self.row_lo = lo * v2.phys_rows;
+        self.row_hi = (hi * v2.phys_rows).min(self.n);
+        self.offset = 0;
+        Ok(())
+    }
+
+    /// Quarantine events so far, in discovery order (v2 only).
+    pub fn quarantine_trace(&self) -> Vec<usize> {
+        self.v2.as_ref().map_or_else(Vec::new, |v| v.trace.clone())
     }
 
     /// Capacity of the internal byte buffer — exposed so tests can pin
@@ -301,11 +905,24 @@ impl ShardReader {
         self.buf.capacity()
     }
 
-    /// Read `k` consecutive rows starting at `start` (wrapping around
-    /// the end) into `out` — the on-disk twin of
+    /// Verify one physical chunk's checksum (and decompressibility)
+    /// without touching quarantine state.  SH1 files have no chunk
+    /// checksums; their single pseudo-chunk trivially passes (the open
+    /// already validated the length).
+    pub fn verify_chunk(&mut self, c: usize) -> Result<()> {
+        if self.v2.is_none() {
+            ensure!(c == 0, "{}: SH1 shard has one pseudo-chunk", self.path.display());
+            return Ok(());
+        }
+        self.load_chunk(c)
+    }
+
+    /// Read `k` consecutive rows starting at `start` (absolute file
+    /// rows, wrapping around the end) into `out` — the on-disk twin of
     /// [`Dataset::copy_cyclic_window`], bitwise-identical to it on the
-    /// same data.  Allocation-free once `out` and the internal buffer
-    /// are warm.
+    /// same data.  **Strict**: a corrupt v2 chunk fails the read typed,
+    /// regardless of any installed policy.  Allocation-free once `out`
+    /// and the internal buffers are warm.
     pub fn read_window(&mut self, start: usize, k: usize, out: &mut Dataset) -> Result<()> {
         let n = self.n;
         let d = self.d;
@@ -317,24 +934,41 @@ impl ShardReader {
         }
         let start = start % n;
         let first = k.min(n - start);
-        self.read_rows(start, first, 0, out)?;
+        self.fetch_rows(start, first, 0, out)?;
         if first < k {
-            self.read_rows(0, k - first, first, out)?; // wrapped prefix
+            self.fetch_rows(0, k - first, first, out)?; // wrapped prefix
         }
         Ok(())
     }
 
     /// Stream the next `chunk_rows()` window at the cursor and advance
-    /// it, wrapping cyclically.  Returns the rows read.
+    /// it, wrapping cyclically within the (possibly restricted) row
+    /// range.  Returns the rows read.
+    ///
+    /// With a [`QuarantinePolicy`] installed on a v2 shard this is the
+    /// **degraded-mode** entry point: corrupt chunks are quarantined
+    /// and skipped, the window is filled from surviving rows (possibly
+    /// fewer than requested), and only a dry budget or a fully
+    /// quarantined shard errors (typed).
     pub fn next_window(&mut self, out: &mut Dataset) -> Result<usize> {
-        let k = self.chunk_rows();
-        self.read_window(self.offset, k, out)?;
-        self.offset = (self.offset + k) % self.n;
+        let ln = self.n();
+        let k = self.chunk_rows.min(ln);
+        if self.v2.is_some() && self.policy.is_some() {
+            return self.next_window_degraded(k, out);
+        }
+        out.x.resize(k, self.d);
+        out.y.resize(k, 0.0);
+        let first = k.min(ln - self.offset);
+        self.fetch_rows(self.row_lo + self.offset, first, 0, out)?;
+        if first < k {
+            self.fetch_rows(self.row_lo, k - first, first, out)?;
+        }
+        self.offset = (self.offset + k) % ln;
         Ok(k)
     }
 
     /// Materialize the whole shard (tests / small-data convenience —
-    /// defeats the point of the store for real runs).
+    /// defeats the point of the store for real runs).  Strict.
     pub fn read_all(&mut self) -> Result<Dataset> {
         let mut out = Dataset { x: crate::linalg::Mat::empty(), y: Vec::new() };
         let n = self.n;
@@ -342,9 +976,182 @@ impl ShardReader {
         Ok(out)
     }
 
-    /// Ranged read of `rows` rows at file row `row0` into `out` rows
-    /// `out_row0..`, de-interleaving features and target.
-    fn read_rows(
+    // -- internals ----------------------------------------------------
+
+    fn next_window_degraded(&mut self, k: usize, out: &mut Dataset) -> Result<usize> {
+        let d = self.d;
+        out.x.resize(k, d);
+        out.y.resize(k, 0.0);
+        let ln = self.n();
+        let phys = self.v2.as_ref().unwrap().phys_rows;
+        let (mut got, mut pos, mut scanned) = (0usize, self.offset, 0usize);
+        while got < k && scanned < ln {
+            let abs = self.row_lo + pos;
+            let c = abs / phys;
+            let seg_end = ((c + 1) * phys).min(self.row_hi);
+            let seg = seg_end - abs;
+            if self.v2.as_ref().unwrap().quarantined[c] {
+                pos = (pos + seg) % ln;
+                scanned += seg;
+                continue;
+            }
+            let take = seg.min(k - got);
+            match self.copy_from_chunk(c, abs - c * phys, take, got, out) {
+                Ok(()) => {
+                    got += take;
+                    pos = (pos + take) % ln;
+                    scanned += take;
+                    // A verified read proves the device is still
+                    // serving good bytes (OutageBudget discipline).
+                    self.policy.as_ref().unwrap().budget.refill();
+                }
+                Err(e) => {
+                    self.quarantine(c, e)?;
+                    pos = (pos + seg) % ln;
+                    scanned += seg;
+                }
+            }
+        }
+        if got == 0 {
+            let quarantined =
+                self.v2.as_ref().unwrap().quarantined.iter().filter(|q| **q).count();
+            return Err(StoreFault::ShardDead { path: self.path.clone(), quarantined }.into());
+        }
+        self.offset = pos;
+        out.x.resize(got, d);
+        out.y.resize(got, 0.0);
+        Ok(got)
+    }
+
+    /// Record a fresh quarantine: mark the chunk, append to the trace,
+    /// bump the shared counter, and draw one budget token (typed
+    /// failure when dry).
+    fn quarantine(&mut self, c: usize, cause: anyhow::Error) -> Result<()> {
+        let policy = self.policy.clone().expect("quarantine without a policy");
+        let v2 = self.v2.as_mut().expect("quarantine on a v1 shard");
+        debug_assert!(!v2.quarantined[c]);
+        v2.quarantined[c] = true;
+        v2.trace.push(c);
+        policy.counter.fetch_add(1, Ordering::Relaxed);
+        crate::log_warn!(
+            "store: quarantined chunk {c} of {} ({cause:#}); {} of budget {} used",
+            self.path.display(),
+            policy.budget.used() + 1,
+            policy.budget.max()
+        );
+        if !policy.budget.take() {
+            return Err(StoreFault::BudgetDry {
+                path: self.path.clone(),
+                chunk: c,
+                max: policy.budget.max(),
+            }
+            .into());
+        }
+        Ok(())
+    }
+
+    /// Ranged read of `rows` absolute rows at `row0` into `out` rows
+    /// `out_row0..`, dispatching on format.  Strict (errors propagate).
+    fn fetch_rows(
+        &mut self,
+        row0: usize,
+        rows: usize,
+        out_row0: usize,
+        out: &mut Dataset,
+    ) -> Result<()> {
+        if self.v2.is_none() {
+            return self.read_rows_v1(row0, rows, out_row0, out);
+        }
+        let phys = self.v2.as_ref().unwrap().phys_rows;
+        let (mut row0, mut rows, mut out_row0) = (row0, rows, out_row0);
+        while rows > 0 {
+            let c = row0 / phys;
+            let in_chunk = row0 - c * phys;
+            let chunk_rows = self.rows_in_chunk(c);
+            let take = rows.min(chunk_rows - in_chunk);
+            self.copy_from_chunk(c, in_chunk, take, out_row0, out)?;
+            row0 += take;
+            rows -= take;
+            out_row0 += take;
+        }
+        Ok(())
+    }
+
+    fn rows_in_chunk(&self, c: usize) -> usize {
+        let v2 = self.v2.as_ref().unwrap();
+        if c + 1 == v2.dir.len() {
+            self.n - c * v2.phys_rows
+        } else {
+            v2.phys_rows
+        }
+    }
+
+    /// Fetch + verify chunk `c` and de-interleave rows
+    /// `[r0, r0 + rows)` of it (chunk-relative) into `out` at
+    /// `out_row0`.
+    fn copy_from_chunk(
+        &mut self,
+        c: usize,
+        r0: usize,
+        rows: usize,
+        out_row0: usize,
+        out: &mut Dataset,
+    ) -> Result<()> {
+        self.load_chunk(c)?;
+        let d = self.d;
+        let chunk_rows = self.rows_in_chunk(c);
+        let v2 = self.v2.as_ref().unwrap();
+        let words = if v2.dir[c].enc == 1 { &v2.raw } else { &self.buf };
+        for r in 0..rows {
+            let rr = r0 + r;
+            let xrow = out.x.row_mut(out_row0 + r);
+            for col in 0..d {
+                let o = (col * chunk_rows + rr) * 8;
+                xrow[col] = f64::from_le_bytes(words[o..o + 8].try_into().unwrap());
+            }
+            let o = (d * chunk_rows + rr) * 8;
+            out.y[out_row0 + r] = f64::from_le_bytes(words[o..o + 8].try_into().unwrap());
+        }
+        Ok(())
+    }
+
+    /// Read chunk `c`'s stored payload into `buf`, verify its FNV-1a
+    /// checksum, and (when compressed) decompress into the v2 scratch.
+    /// Every read re-verifies — corrupt bytes never reach a caller.
+    fn load_chunk(&mut self, c: usize) -> Result<()> {
+        let desc = self.v2.as_ref().unwrap().dir[c];
+        let path = self.path.clone();
+        let corrupt = move |detail: String| -> anyhow::Error {
+            StoreFault::ChunkCorrupt { path: path.clone(), chunk: c, detail }.into()
+        };
+        let len = desc.len as usize;
+        self.buf.resize(len, 0);
+        self.f.seek(SeekFrom::Start(desc.offset))?;
+        if let Err(e) = self.f.read_exact(&mut self.buf[..len]) {
+            return Err(corrupt(format!("short read ({e})")));
+        }
+        let sum = crate::util::fnv1a64(crate::util::FNV1A64_INIT, &self.buf[..len]);
+        if sum != desc.sum {
+            return Err(corrupt(format!(
+                "checksum mismatch (stored {:016x}, computed {sum:016x})",
+                desc.sum
+            )));
+        }
+        if desc.enc == 1 {
+            let buf = std::mem::take(&mut self.buf);
+            let v2 = self.v2.as_mut().unwrap();
+            let res = sh2_decompress(&buf[..len], desc.raw_len as usize, &mut v2.raw);
+            self.buf = buf;
+            if let Err(e) = res {
+                return Err(corrupt(format!("{e:#}")));
+            }
+        }
+        Ok(())
+    }
+
+    /// Legacy flat-format ranged read, de-interleaving features and
+    /// target.
+    fn read_rows_v1(
         &mut self,
         row0: usize,
         rows: usize,
@@ -375,9 +1182,26 @@ impl ShardReader {
     }
 }
 
+/// The `(offset, len)` file locations of every chunk payload in a v2
+/// shard — the hook the seeded storage fault layer (`ps/fault.rs`)
+/// uses to corrupt specific chunk indices deterministically.
+pub fn chunk_locations(path: &Path) -> Result<Vec<(u64, u64)>> {
+    let r = ShardReader::open(path)?;
+    let v2 = r
+        .v2
+        .as_ref()
+        .with_context(|| format!("{}: chunk locations need a v2 shard", path.display()))?;
+    Ok(v2.dir.iter().map(|e| (e.offset, e.len)).collect())
+}
+
 /// A directory of shard files plus a JSON manifest: the on-disk form of
 /// `Dataset::shard(r)`.  Created once, then each worker opens its own
-/// [`ShardReader`] — nothing is cloned into worker memory.
+/// [`ShardReader`]s — nothing is cloned into worker memory.
+///
+/// The v2 manifest additionally carries a **logical repartition map**:
+/// chunks are numbered globally (file 0's chunks, then file 1's, …) and
+/// `assign[w]` is the contiguous global chunk range logical worker `w`
+/// trains on.  [`ShardSet::repartition`] rewrites only this map.
 pub struct ShardSet {
     dir: PathBuf,
     n: usize,
@@ -385,20 +1209,30 @@ pub struct ShardSet {
     chunk_rows: usize,
     fingerprint: u64,
     files: Vec<PathBuf>,
+    /// Physical chunks per file (1 per file for SH1 stores).
+    file_chunks: Vec<usize>,
+    /// Global chunk range per logical worker.
+    assign: Vec<Range<usize>>,
+    /// Manifest/shard format generation (1 = SH1 flat, 2 = SH2).
+    version: u32,
 }
 
 impl ShardSet {
-    /// Partition `ds` into `r` shard files under `dir` (created if
+    /// Partition `ds` into `r` v2 shard files under `dir` (created if
     /// missing) with the manifest last, so a crash mid-create never
     /// leaves an openable-but-incomplete store.  Refuses to write over
     /// an existing store: re-partitioning in place could leave a stale
     /// manifest pointing at a mix of old and new shard files, so delete
-    /// the directory (or its manifest) first.  The partition is the
-    /// same [`crate::data::shard_spans`] split as [`Dataset::shard`]
-    /// and shares its `1 ≤ r ≤ ds.n()` panic contract.
+    /// the directory (or its manifest) first — or use
+    /// [`ShardSet::repartition`], which never rewrites shard bytes.
+    /// The partition is the same [`crate::data::shard_spans`] split as
+    /// [`Dataset::shard`] and shares its `1 ≤ r ≤ ds.n()` panic
+    /// contract.  `chunk_rows` is both the physical chunk size and the
+    /// default streaming window.
     pub fn create(dir: &Path, ds: &Dataset, r: usize, chunk_rows: usize) -> Result<Self> {
         let n = ds.n();
         let d = ds.d();
+        let chunk_rows = chunk_rows.max(1);
         ensure!(
             !Self::exists(dir),
             "store already exists at {} — delete it (or its {STORE_MANIFEST}) \
@@ -408,15 +1242,18 @@ impl ShardSet {
         std::fs::create_dir_all(dir)
             .with_context(|| format!("create store dir {}", dir.display()))?;
         let mut files = Vec::with_capacity(r);
+        let mut file_chunks = Vec::with_capacity(r);
         let mut write_all = || -> Result<()> {
             for (k, span) in crate::data::shard_spans(n, r).enumerate() {
                 let path = dir.join(format!("shard_{k:03}.bin"));
-                let mut w = ShardWriter::create(&path, d)?;
+                let rows = span.end - span.start;
+                let mut w = ShardWriter::create_with(&path, d, chunk_rows)?;
                 for row in span {
                     w.push_row(ds.x.row(row), ds.y[row])?;
                 }
                 w.finish()?;
                 files.push(path);
+                file_chunks.push(rows.div_ceil(chunk_rows));
             }
             Ok(())
         };
@@ -428,22 +1265,28 @@ impl ShardSet {
             }
             return Err(e);
         }
+        let assign = per_file_assign(&file_chunks);
         let set = Self {
             dir: dir.to_path_buf(),
             n,
             d,
-            chunk_rows: chunk_rows.max(1),
+            chunk_rows,
             fingerprint: dataset_fingerprint(ds),
             files,
+            file_chunks,
+            assign,
+            version: 2,
         };
         set.write_manifest()?;
         Ok(set)
     }
 
-    /// Open an existing store from its manifest, cross-checking every
-    /// shard header against it (feature count and total row count), so
-    /// a manifest desynchronized from its shard files is rejected here
-    /// rather than silently training on the wrong partition.
+    /// Open an existing store from its manifest (either generation),
+    /// cross-checking every shard header against it (feature count,
+    /// total row count, and — for v2 — per-file chunk counts and the
+    /// repartition map's coverage), so a manifest desynchronized from
+    /// its shard files is rejected here rather than silently training
+    /// on the wrong partition.
     pub fn open(dir: &Path) -> Result<Self> {
         let mpath = dir.join(STORE_MANIFEST);
         let text = std::fs::read_to_string(&mpath)
@@ -451,11 +1294,11 @@ impl ShardSet {
         let v = Json::parse(&text)
             .map_err(|e| anyhow::anyhow!("parse {}: {e}", mpath.display()))?;
         let format = v.get("format").and_then(Json::as_str).unwrap_or("");
-        ensure!(
-            format == "advgp-store-v1",
-            "{}: unknown store format {format:?}",
-            mpath.display()
-        );
+        let version = match format {
+            "advgp-store-v1" => 1,
+            "advgp-store-v2" => 2,
+            _ => anyhow::bail!("{}: unknown store format {format:?}", mpath.display()),
+        };
         let n = v.get("n").and_then(Json::as_usize).context("manifest: n")?;
         let d = v.get("d").and_then(Json::as_usize).context("manifest: d")?;
         let chunk_rows = v
@@ -469,6 +1312,7 @@ impl ShardSet {
             .with_context(|| format!("{}: missing/bad fingerprint", mpath.display()))?;
         let names = v.get("files").and_then(Json::as_arr).context("manifest: files")?;
         let mut files = Vec::with_capacity(names.len());
+        let mut file_chunks = Vec::with_capacity(names.len());
         let mut rows = 0usize;
         for name in names {
             let name = name.as_str().context("manifest: file name")?;
@@ -482,6 +1326,7 @@ impl ShardSet {
                 reader.d()
             );
             rows += reader.n();
+            file_chunks.push(reader.n_chunks());
             files.push(path);
         }
         ensure!(!files.is_empty(), "{}: empty store", mpath.display());
@@ -491,6 +1336,44 @@ impl ShardSet {
              manifest are out of sync (recreate the store)",
             mpath.display()
         );
+        let assign = match v.get("assign").and_then(Json::as_arr) {
+            // v1 manifests (and v2 ones from before a repartition was
+            // ever run) default to the physical per-file split.
+            None => per_file_assign(&file_chunks),
+            Some(arr) => {
+                let total: usize = file_chunks.iter().sum();
+                let mut assign = Vec::with_capacity(arr.len());
+                let mut cursor = 0usize;
+                for pair in arr {
+                    let pair = pair.as_arr().context("manifest: assign entry")?;
+                    ensure!(pair.len() == 2, "{}: assign entry arity", mpath.display());
+                    let lo = pair[0].as_usize().context("manifest: assign lo")?;
+                    let hi = pair[1].as_usize().context("manifest: assign hi")?;
+                    ensure!(
+                        lo == cursor && lo < hi && hi <= total,
+                        "{}: assign map does not tile chunks 0..{total}",
+                        mpath.display()
+                    );
+                    cursor = hi;
+                    assign.push(lo..hi);
+                }
+                ensure!(
+                    cursor == total && !assign.is_empty(),
+                    "{}: assign map does not tile chunks 0..{total}",
+                    mpath.display()
+                );
+                assign
+            }
+        };
+        if let Some(fc) = v.get("file_chunks").and_then(Json::as_arr) {
+            let declared: Option<Vec<usize>> = fc.iter().map(Json::as_usize).collect();
+            ensure!(
+                declared.as_deref() == Some(&file_chunks[..]),
+                "{}: manifest chunk counts disagree with shard headers — store \
+                 and manifest are out of sync (recreate the store)",
+                mpath.display()
+            );
+        }
         Ok(Self {
             dir: dir.to_path_buf(),
             n,
@@ -498,6 +1381,9 @@ impl ShardSet {
             chunk_rows: chunk_rows.max(1),
             fingerprint,
             files,
+            file_chunks,
+            assign,
+            version,
         })
     }
 
@@ -519,9 +1405,31 @@ impl ShardSet {
         self.d
     }
 
-    /// Number of shards (= workers the store was partitioned for).
+    /// Number of shard *files* (the physical partition).
     pub fn r(&self) -> usize {
         self.files.len()
+    }
+
+    /// On-disk path of shard file `k` (for the fault layer and tools;
+    /// panics on an out-of-range index like any slice access).
+    pub fn file_path(&self, k: usize) -> &Path {
+        &self.files[k]
+    }
+
+    /// Number of *logical* workers the repartition map currently
+    /// targets (= `r()` until a repartition changes it).
+    pub fn logical_workers(&self) -> usize {
+        self.assign.len()
+    }
+
+    /// Manifest/shard format generation (1 = legacy flat, 2 = ADVGPSH2).
+    pub fn version(&self) -> u32 {
+        self.version
+    }
+
+    /// Total physical chunks across all files.
+    pub fn total_chunks(&self) -> usize {
+        self.file_chunks.iter().sum()
     }
 
     pub fn chunk_rows(&self) -> usize {
@@ -535,8 +1443,8 @@ impl ShardSet {
         self.fingerprint
     }
 
-    /// Open a validating reader on shard `k`, preconfigured with the
-    /// store's chunk size.
+    /// Open a validating reader on shard *file* `k`, preconfigured with
+    /// the store's chunk size.
     pub fn reader(&self, k: usize) -> Result<ShardReader> {
         ensure!(k < self.files.len(), "shard index {k} out of {}", self.files.len());
         let mut r = ShardReader::open(&self.files[k])?;
@@ -551,9 +1459,73 @@ impl ShardSet {
         Ok(r)
     }
 
-    /// One reader per shard, in shard order.
+    /// One reader per shard file, in file order (the physical view).
     pub fn readers(&self) -> Result<Vec<ShardReader>> {
         (0..self.r()).map(|k| self.reader(k)).collect()
+    }
+
+    /// The readers logical worker `w` trains on under the current
+    /// repartition map: one per file its global chunk range touches,
+    /// each restricted to the assigned chunks.  Equals
+    /// `vec![self.reader(w)?]` until a repartition decouples workers
+    /// from files.
+    pub fn reader_group(&self, w: usize) -> Result<Vec<ShardReader>> {
+        ensure!(
+            w < self.assign.len(),
+            "logical worker {w} out of {}",
+            self.assign.len()
+        );
+        let want = self.assign[w].clone();
+        let mut out = Vec::new();
+        let mut base = 0usize; // global index of file k's first chunk
+        for (k, &fc) in self.file_chunks.iter().enumerate() {
+            let lo = want.start.max(base);
+            let hi = want.end.min(base + fc);
+            if lo < hi {
+                let mut r = self.reader(k)?;
+                if r.is_v2() {
+                    r.restrict_chunks(lo - base, hi - base)?;
+                } else {
+                    // SH1 files are one pseudo-chunk; a map that cuts
+                    // one can only come from a hand-edited manifest.
+                    ensure!(
+                        lo == base && hi == base + fc,
+                        "{}: repartition map splits an SH1 file — migrate the \
+                         store to ADVGPSH2 first",
+                        self.files[k].display()
+                    );
+                }
+                out.push(r);
+            }
+            base += fc;
+        }
+        ensure!(!out.is_empty(), "logical worker {w} has no chunks assigned");
+        Ok(out)
+    }
+
+    /// Reader groups for every logical worker, in worker order.
+    pub fn reader_groups(&self) -> Result<Vec<Vec<ShardReader>>> {
+        (0..self.logical_workers()).map(|w| self.reader_group(w)).collect()
+    }
+
+    /// Retarget the store from its current worker count to `workers`
+    /// by rewriting the manifest's chunk→worker map — shard bytes are
+    /// untouched.  Requires an ADVGPSH2 store (migrate first) and
+    /// `1 ≤ workers ≤ total_chunks()`.
+    pub fn repartition(&mut self, workers: usize) -> Result<()> {
+        ensure!(
+            self.version >= 2,
+            "store at {} is ADVGPSH1 — run `advgp store migrate` before \
+             repartitioning",
+            self.dir.display()
+        );
+        let total = self.total_chunks();
+        ensure!(
+            workers >= 1 && workers <= total,
+            "cannot split {total} chunks across {workers} workers"
+        );
+        self.assign = crate::data::shard_spans(total, workers).collect();
+        self.write_manifest()
     }
 
     fn write_manifest(&self) -> Result<()> {
@@ -562,20 +1534,224 @@ impl ShardSet {
             .iter()
             .map(|p| Json::Str(p.file_name().unwrap().to_string_lossy().into_owned()))
             .collect();
+        let assign: Vec<Json> = self
+            .assign
+            .iter()
+            .map(|r| {
+                Json::Arr(vec![Json::Num(r.start as f64), Json::Num(r.end as f64)])
+            })
+            .collect();
+        let file_chunks: Vec<Json> =
+            self.file_chunks.iter().map(|&c| Json::Num(c as f64)).collect();
         let doc = Json::obj(vec![
-            ("format", Json::Str("advgp-store-v1".into())),
+            ("format", Json::Str("advgp-store-v2".into())),
             ("n", Json::Num(self.n as f64)),
             ("d", Json::Num(self.d as f64)),
             ("r", Json::Num(self.r() as f64)),
+            ("workers", Json::Num(self.logical_workers() as f64)),
             ("chunk_rows", Json::Num(self.chunk_rows as f64)),
             ("fingerprint", Json::Str(format!("{:016x}", self.fingerprint))),
             ("files", Json::Arr(names)),
+            ("file_chunks", Json::Arr(file_chunks)),
+            ("assign", Json::Arr(assign)),
         ]);
         let path = self.dir.join(STORE_MANIFEST);
         crate::util::atomic_write(&path, format!("{doc}\n").as_bytes())
             .context("write store manifest")?;
         Ok(())
     }
+}
+
+/// The identity repartition map: worker k owns exactly file k's chunks.
+fn per_file_assign(file_chunks: &[usize]) -> Vec<Range<usize>> {
+    let mut assign = Vec::with_capacity(file_chunks.len());
+    let mut base = 0usize;
+    for &fc in file_chunks {
+        assign.push(base..base + fc);
+        base += fc;
+    }
+    assign
+}
+
+/// One file's scrub outcome in a [`VerifyReport`].
+#[derive(Debug, Clone)]
+pub struct FileVerify {
+    pub file: String,
+    /// "sh1" or "sh2".
+    pub format: &'static str,
+    pub rows: usize,
+    pub chunks: usize,
+    /// Chunk indices that failed verification, with details.
+    pub corrupt: Vec<(usize, String)>,
+    /// File-level failure (unopenable: bad header, corrupt directory…).
+    pub error: Option<String>,
+}
+
+/// Full-store scrub report from [`verify_store`].
+#[derive(Debug, Clone, Default)]
+pub struct VerifyReport {
+    pub files: Vec<FileVerify>,
+}
+
+impl VerifyReport {
+    /// No file-level errors and no corrupt chunks anywhere.
+    pub fn clean(&self) -> bool {
+        self.files.iter().all(|f| f.error.is_none() && f.corrupt.is_empty())
+    }
+
+    /// Total corrupt chunks across all files (unopenable files count
+    /// all their declared-unknown chunks as 1).
+    pub fn total_corrupt(&self) -> usize {
+        self.files
+            .iter()
+            .map(|f| f.corrupt.len() + usize::from(f.error.is_some()))
+            .sum()
+    }
+}
+
+impl std::fmt::Display for VerifyReport {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        for file in &self.files {
+            match &file.error {
+                Some(e) => writeln!(f, "{}: UNREADABLE — {e}", file.file)?,
+                None => {
+                    let bad = file.corrupt.len();
+                    writeln!(
+                        f,
+                        "{}: {} — {} rows, {}/{} chunks intact",
+                        file.file,
+                        if bad == 0 { "ok" } else { "CORRUPT" },
+                        file.rows,
+                        file.chunks - bad,
+                        file.chunks
+                    )?;
+                    for (c, detail) in &file.corrupt {
+                        writeln!(f, "  chunk {c}: {detail}")?;
+                    }
+                }
+            }
+        }
+        write!(
+            f,
+            "verify: {} file(s), {} fault(s){}",
+            self.files.len(),
+            self.total_corrupt(),
+            if self.clean() { " — store is clean" } else { "" }
+        )
+    }
+}
+
+/// Full scrub: read + verify every chunk of every shard named by the
+/// manifest, never failing on corruption — faults land in the report
+/// (the `advgp store verify` CLI).  Only a missing/unparseable manifest
+/// is a hard error.
+pub fn verify_store(dir: &Path) -> Result<VerifyReport> {
+    let mpath = dir.join(STORE_MANIFEST);
+    let text = std::fs::read_to_string(&mpath)
+        .with_context(|| format!("read store manifest {}", mpath.display()))?;
+    let v = Json::parse(&text)
+        .map_err(|e| anyhow::anyhow!("parse {}: {e}", mpath.display()))?;
+    let names = v.get("files").and_then(Json::as_arr).context("manifest: files")?;
+    let mut report = VerifyReport::default();
+    for name in names {
+        let name = name.as_str().context("manifest: file name")?.to_string();
+        let path = dir.join(&name);
+        match ShardReader::open(&path) {
+            Err(e) => report.files.push(FileVerify {
+                file: name,
+                format: "?",
+                rows: 0,
+                chunks: 0,
+                corrupt: Vec::new(),
+                error: Some(format!("{e:#}")),
+            }),
+            Ok(mut r) => {
+                let mut corrupt = Vec::new();
+                for c in 0..r.n_chunks() {
+                    if let Err(e) = r.verify_chunk(c) {
+                        corrupt.push((c, format!("{e:#}")));
+                    }
+                }
+                report.files.push(FileVerify {
+                    file: name,
+                    format: if r.is_v2() { "sh2" } else { "sh1" },
+                    rows: r.n(),
+                    chunks: r.n_chunks(),
+                    corrupt,
+                    error: None,
+                });
+            }
+        }
+    }
+    Ok(report)
+}
+
+/// Upgrade every ADVGPSH1 shard of the store at `dir` to ADVGPSH2 in
+/// place and rewrite the manifest as v2.  Row parity is verified
+/// *before* each rewritten file replaces its original (bitwise, via
+/// [`dataset_fingerprint`]), so a migration can never corrupt data it
+/// was asked to protect.  Returns the number of files migrated (0 when
+/// the store is already fully v2).
+pub fn migrate_store(dir: &Path) -> Result<usize> {
+    let set = ShardSet::open(dir)?;
+    let mut migrated = 0usize;
+    let mut file_chunks = Vec::with_capacity(set.files.len());
+    for path in &set.files {
+        let mut old = ShardReader::open(path)?;
+        if old.is_v2() {
+            file_chunks.push(old.n_chunks());
+            continue;
+        }
+        let rows = old.read_all()?;
+        let side = {
+            let mut os = path.as_os_str().to_os_string();
+            os.push(".migrate");
+            PathBuf::from(os)
+        };
+        let mut w = ShardWriter::create_with(&side, set.d, set.chunk_rows)?;
+        w.push_dataset(&rows)?;
+        w.finish()?;
+        // Bitwise row-parity gate before the original is replaced.
+        let back = ShardReader::open(&side)?.read_all()?;
+        let parity = back.n() == rows.n()
+            && dataset_fingerprint(&back) == dataset_fingerprint(&rows);
+        if !parity {
+            let _ = std::fs::remove_file(&side);
+            anyhow::bail!(
+                "migrate: rewritten {} fails bitwise row parity — original left \
+                 untouched",
+                path.display()
+            );
+        }
+        file_chunks.push(ShardReader::open(&side)?.n_chunks());
+        std::fs::rename(&side, path).with_context(|| {
+            format!("rename {} -> {}", side.display(), path.display())
+        })?;
+        if let Some(parent) = path.parent() {
+            if let Ok(dirf) = File::open(parent) {
+                let _ = dirf.sync_all();
+            }
+        }
+        migrated += 1;
+    }
+    if migrated > 0 || set.version < 2 {
+        let set = ShardSet {
+            assign: per_file_assign(&file_chunks),
+            file_chunks,
+            version: 2,
+            ..set
+        };
+        set.write_manifest()?;
+    }
+    Ok(migrated)
+}
+
+/// Rewrite the manifest's chunk→worker map for `workers` logical
+/// workers (the `advgp store repartition` CLI).  Shard bytes are
+/// untouched.
+pub fn repartition_store(dir: &Path, workers: usize) -> Result<()> {
+    let mut set = ShardSet::open(dir)?;
+    set.repartition(workers)
 }
 
 fn tmp_path(path: &Path) -> PathBuf {
@@ -597,21 +1773,99 @@ mod tests {
         dir
     }
 
-    #[test]
-    fn roundtrip_bitwise() {
-        let dir = tdir("roundtrip");
-        let ds = synth::friedman(37, 4, 0.3, 9);
-        let path = dir.join("a.shard");
-        write_shard(&path, &ds).unwrap();
-        let mut r = ShardReader::open(&path).unwrap();
-        assert_eq!((r.n(), r.d()), (37, 4));
-        let back = r.read_all().unwrap();
-        for i in 0..ds.n() {
-            assert_eq!(back.y[i].to_bits(), ds.y[i].to_bits());
-            for c in 0..ds.d() {
-                assert_eq!(back.x[(i, c)].to_bits(), ds.x[(i, c)].to_bits());
+    /// Build a legacy SH1 store (flat shards + v1 manifest) the way
+    /// PR 3 wrote them — the migration source fixture.
+    fn create_v1_store(dir: &Path, ds: &Dataset, r: usize, chunk_rows: usize) {
+        std::fs::create_dir_all(dir).unwrap();
+        let mut names = Vec::new();
+        for (k, span) in crate::data::shard_spans(ds.n(), r).enumerate() {
+            let path = dir.join(format!("shard_{k:03}.bin"));
+            let part = Dataset {
+                x: Mat::from_vec(
+                    span.end - span.start,
+                    ds.d(),
+                    span.clone().flat_map(|row| ds.x.row(row).to_vec()).collect(),
+                ),
+                y: span.clone().map(|row| ds.y[row]).collect(),
+            };
+            write_shard_v1(&path, &part).unwrap();
+            names.push(Json::Str(format!("shard_{k:03}.bin")));
+        }
+        let doc = Json::obj(vec![
+            ("format", Json::Str("advgp-store-v1".into())),
+            ("n", Json::Num(ds.n() as f64)),
+            ("d", Json::Num(ds.d() as f64)),
+            ("r", Json::Num(r as f64)),
+            ("chunk_rows", Json::Num(chunk_rows as f64)),
+            ("fingerprint", Json::Str(format!("{:016x}", dataset_fingerprint(ds)))),
+            ("files", Json::Arr(names)),
+        ]);
+        crate::util::atomic_write(
+            &dir.join(STORE_MANIFEST),
+            format!("{doc}\n").as_bytes(),
+        )
+        .unwrap();
+    }
+
+    fn assert_bitwise(a: &Dataset, b: &Dataset) {
+        assert_eq!((a.n(), a.d()), (b.n(), b.d()));
+        for i in 0..a.n() {
+            assert_eq!(a.y[i].to_bits(), b.y[i].to_bits(), "row {i} target");
+            for c in 0..a.d() {
+                assert_eq!(a.x[(i, c)].to_bits(), b.x[(i, c)].to_bits(), "row {i} col {c}");
             }
         }
+    }
+
+    #[test]
+    fn compression_roundtrips_exactly() {
+        let mut rng = crate::util::rng::Pcg64::seeded(11);
+        for case in 0..4 {
+            let words: Vec<u64> = match case {
+                0 => vec![0u64; 257],
+                1 => (0..300).map(|i| 1000 + i as u64).collect(),
+                2 => (0..128).map(|_| rng.next_u64()).collect(),
+                _ => (0..99)
+                    .map(|i| if i % 7 == 0 { rng.next_u64() } else { 42 })
+                    .collect(),
+            };
+            let raw: Vec<u8> = words.iter().flat_map(|w| w.to_le_bytes()).collect();
+            let enc = sh2_compress(&raw);
+            let mut back = Vec::new();
+            sh2_decompress(&enc, raw.len(), &mut back).unwrap();
+            assert_eq!(back, raw, "case {case}");
+        }
+        // Repetitive data must actually shrink (enc=1 is reachable).
+        let raw: Vec<u8> = std::iter::repeat(7.5f64.to_le_bytes())
+            .take(512)
+            .flatten()
+            .collect();
+        assert!(sh2_compress(&raw).len() < raw.len());
+    }
+
+    #[test]
+    fn roundtrip_bitwise_both_formats() {
+        let dir = tdir("roundtrip");
+        let ds = synth::friedman(37, 4, 0.3, 9);
+        for (name, v1) in [("a2.shard", false), ("a1.shard", true)] {
+            let path = dir.join(name);
+            if v1 {
+                write_shard_v1(&path, &ds).unwrap();
+            } else {
+                write_shard(&path, &ds).unwrap();
+            }
+            let mut r = ShardReader::open(&path).unwrap();
+            assert_eq!((r.n(), r.d(), r.is_v2()), (37, 4, !v1));
+            assert_bitwise(&r.read_all().unwrap(), &ds);
+        }
+        // Multi-chunk v2 (chunks of 5 over 37 rows → 8, last short).
+        let path = dir.join("chunked.shard");
+        let mut w = ShardWriter::create_with(&path, 4, 5).unwrap();
+        w.push_dataset(&ds).unwrap();
+        w.finish().unwrap();
+        let mut r = ShardReader::open(&path).unwrap();
+        assert_eq!((r.n_chunks(), r.phys_chunk_rows()), (8, Some(5)));
+        assert_bitwise(&r.read_all().unwrap(), &ds);
     }
 
     #[test]
@@ -619,52 +1873,146 @@ mod tests {
         let dir = tdir("window");
         let ds = synth::friedman(23, 3, 0.2, 4);
         let path = dir.join("w.shard");
-        write_shard(&path, &ds).unwrap();
+        let mut w = ShardWriter::create_with(&path, 3, 4).unwrap(); // 6 chunks
+        w.push_dataset(&ds).unwrap();
+        w.finish().unwrap();
         let mut r = ShardReader::open(&path).unwrap();
         let mut disk = Dataset { x: Mat::empty(), y: Vec::new() };
         let mut mem = Dataset { x: Mat::empty(), y: Vec::new() };
         for (start, k) in [(0usize, 7usize), (20, 7), (22, 23), (5, 40), (11, 1)] {
             r.read_window(start, k, &mut disk).unwrap();
             ds.copy_cyclic_window(start, k, &mut mem);
-            assert_eq!(disk.n(), mem.n(), "start={start} k={k}");
-            for i in 0..mem.n() {
-                assert_eq!(disk.y[i].to_bits(), mem.y[i].to_bits());
-                for c in 0..mem.d() {
-                    assert_eq!(disk.x[(i, c)].to_bits(), mem.x[(i, c)].to_bits());
-                }
-            }
+            assert_bitwise(&disk, &mem);
         }
     }
 
     #[test]
-    fn open_rejects_corruption() {
-        let dir = tdir("corrupt");
+    fn open_rejects_corruption_v1() {
+        let dir = tdir("corrupt_v1");
         let ds = synth::friedman(10, 2, 0.1, 1);
         let good = dir.join("good.shard");
-        write_shard(&good, &ds).unwrap();
+        write_shard_v1(&good, &ds).unwrap();
+        let pristine = std::fs::read(&good).unwrap();
         // Bad magic.
-        let mut bytes = std::fs::read(&good).unwrap();
+        let mut bytes = pristine.clone();
         bytes[0] ^= 0xFF;
-        let bad = dir.join("bad_magic.shard");
-        std::fs::write(&bad, &bytes).unwrap();
-        assert!(ShardReader::open(&bad).is_err());
+        std::fs::write(dir.join("bad_magic.shard"), &bytes).unwrap();
+        assert!(ShardReader::open(&dir.join("bad_magic.shard")).is_err());
         // Truncated data region.
-        let bytes = std::fs::read(&good).unwrap();
-        let trunc = dir.join("trunc.shard");
-        std::fs::write(&trunc, &bytes[..bytes.len() - 8]).unwrap();
-        assert!(ShardReader::open(&trunc).is_err());
+        std::fs::write(dir.join("trunc.shard"), &pristine[..pristine.len() - 8]).unwrap();
+        assert!(ShardReader::open(&dir.join("trunc.shard")).is_err());
         // Truncated header.
-        let short = dir.join("short.shard");
-        std::fs::write(&short, &bytes[..12]).unwrap();
-        assert!(ShardReader::open(&short).is_err());
+        std::fs::write(dir.join("short.shard"), &pristine[..12]).unwrap();
+        assert!(ShardReader::open(&dir.join("short.shard")).is_err());
         // Trailing garbage.
-        let mut bytes = std::fs::read(&good).unwrap();
+        let mut bytes = pristine.clone();
         bytes.extend_from_slice(&[0u8; 8]);
-        let long = dir.join("long.shard");
-        std::fs::write(&long, &bytes).unwrap();
-        assert!(ShardReader::open(&long).is_err());
+        std::fs::write(dir.join("long.shard"), &bytes).unwrap();
+        assert!(ShardReader::open(&dir.join("long.shard")).is_err());
         // The pristine file still opens.
         assert!(ShardReader::open(&good).is_ok());
+    }
+
+    #[test]
+    fn v2_detects_chunk_corruption_at_read_time() {
+        let dir = tdir("corrupt_v2");
+        let ds = synth::friedman(23, 3, 0.2, 4);
+        let path = dir.join("c.shard");
+        let mut w = ShardWriter::create_with(&path, 3, 4).unwrap(); // 6 chunks
+        w.push_dataset(&ds).unwrap();
+        w.finish().unwrap();
+        let locs = chunk_locations(&path).unwrap();
+        assert_eq!(locs.len(), 6);
+        // Flip one payload byte in chunk 2: open still succeeds (the
+        // directory is intact) but any strict read of that chunk fails
+        // typed, and the fault names the chunk.
+        let mut bytes = std::fs::read(&path).unwrap();
+        bytes[locs[2].0 as usize + 1] ^= 0xFF;
+        std::fs::write(&path, &bytes).unwrap();
+        let mut r = ShardReader::open(&path).unwrap();
+        let err = r.read_all().unwrap_err();
+        match err.downcast_ref::<StoreFault>() {
+            Some(StoreFault::ChunkCorrupt { chunk, .. }) => assert_eq!(*chunk, 2),
+            other => panic!("expected ChunkCorrupt, got {other:?} ({err:#})"),
+        }
+        // Chunks outside the blast radius still verify.
+        assert!(r.verify_chunk(1).is_ok());
+        assert!(r.verify_chunk(2).is_err());
+        // Directory corruption is caught at open.
+        let mut bytes = std::fs::read(&path).unwrap();
+        let dlen = bytes.len();
+        bytes[dlen - 12] ^= 0xFF; // inside the directory block
+        std::fs::write(dir.join("dir.shard"), &bytes).unwrap();
+        let err = ShardReader::open(&dir.join("dir.shard")).unwrap_err();
+        assert!(err.to_string().contains("checksum"), "{err:#}");
+    }
+
+    #[test]
+    fn degraded_mode_quarantines_and_respects_budget() {
+        let dir = tdir("degraded");
+        let ds = synth::friedman(24, 3, 0.2, 4);
+        let path = dir.join("d.shard");
+        let mut w = ShardWriter::create_with(&path, 3, 4).unwrap(); // 6 chunks
+        w.push_dataset(&ds).unwrap();
+        w.finish().unwrap();
+        let locs = chunk_locations(&path).unwrap();
+        let mut bytes = std::fs::read(&path).unwrap();
+        bytes[locs[1].0 as usize] ^= 0xFF;
+        std::fs::write(&path, &bytes).unwrap();
+        // Degraded streaming: chunk 1's rows vanish, everything else
+        // arrives, exactly once per cycle, and the quarantine trace and
+        // counter record the single event.
+        let policy = QuarantinePolicy::new_default();
+        let mut r = ShardReader::open(&path).unwrap();
+        r.set_fault_policy(policy.clone());
+        r.set_chunk_rows(4);
+        let mut win = Dataset { x: Mat::empty(), y: Vec::new() };
+        let mut got_y = Vec::new();
+        let mut rows = 0;
+        while rows < 20 {
+            let k = r.next_window(&mut win).unwrap();
+            assert!(k > 0);
+            got_y.extend_from_slice(&win.y[..k]);
+            rows += k;
+        }
+        assert_eq!(rows, 20, "one full cycle minus the quarantined chunk");
+        let want_y: Vec<f64> =
+            (0..24usize).filter(|i| !(4..8).contains(i)).map(|i| ds.y[i]).collect();
+        assert_eq!(got_y, want_y);
+        assert_eq!(r.quarantine_trace(), vec![1]);
+        assert_eq!(policy.counter.load(Ordering::Relaxed), 1);
+        // Budget of 1: two adjacent corrupt chunks with no verified
+        // read between them runs it dry, typed.
+        let mut bytes = std::fs::read(&path).unwrap();
+        bytes[locs[2].0 as usize] ^= 0xFF;
+        std::fs::write(&path, &bytes).unwrap();
+        let tight = QuarantinePolicy {
+            budget: Arc::new(CorruptionBudget::new(1)),
+            counter: Arc::new(AtomicU64::new(0)),
+        };
+        let mut r = ShardReader::open(&path).unwrap();
+        r.set_fault_policy(tight.clone());
+        r.set_chunk_rows(24);
+        let err = r.next_window(&mut win).unwrap_err();
+        match err.downcast_ref::<StoreFault>() {
+            Some(StoreFault::BudgetDry { chunk, max, .. }) => {
+                assert_eq!((*chunk, *max), (2, 1));
+            }
+            other => panic!("expected BudgetDry, got {other:?} ({err:#})"),
+        }
+        // All chunks corrupt → ShardDead (budget permitting).
+        let mut bytes = std::fs::read(&path).unwrap();
+        for (off, _) in &locs {
+            bytes[*off as usize] ^= 0xFF;
+        }
+        std::fs::write(&path, &bytes).unwrap();
+        let mut r = ShardReader::open(&path).unwrap();
+        r.set_fault_policy(QuarantinePolicy::new_default());
+        let err = r.next_window(&mut win).unwrap_err();
+        assert!(
+            matches!(err.downcast_ref::<StoreFault>(), Some(StoreFault::ShardDead { .. })),
+            "{err:#}"
+        );
     }
 
     #[test]
@@ -673,9 +2021,11 @@ mod tests {
         let ds = synth::friedman(25, 4, 0.2, 7);
         let set = ShardSet::create(&dir, &ds, 3, 8).unwrap();
         assert_eq!((set.n(), set.d(), set.r()), (25, 4, 3));
+        assert_eq!(set.logical_workers(), 3);
         let mem = ds.shard(3);
         let reopened = ShardSet::open(&dir).unwrap();
         assert_eq!(reopened.chunk_rows(), 8);
+        assert_eq!(reopened.version(), 2);
         // The fingerprint survives the manifest roundtrip and ties the
         // store to this exact data: a same-shape other dataset differs.
         assert_eq!(reopened.fingerprint(), dataset_fingerprint(&ds));
@@ -683,14 +2033,101 @@ mod tests {
         assert_ne!(reopened.fingerprint(), dataset_fingerprint(&other));
         for k in 0..3 {
             let got = reopened.reader(k).unwrap().read_all().unwrap();
-            assert_eq!(got.n(), mem[k].n(), "shard {k} size");
-            for i in 0..got.n() {
-                assert_eq!(got.y[i].to_bits(), mem[k].y[i].to_bits());
-                for c in 0..got.d() {
-                    assert_eq!(got.x[(i, c)].to_bits(), mem[k].x[(i, c)].to_bits());
+            assert_bitwise(&got, &mem[k]);
+        }
+    }
+
+    #[test]
+    fn repartition_remaps_chunks_without_moving_bytes() {
+        let dir = tdir("repartition");
+        let ds = synth::friedman(25, 3, 0.2, 7);
+        // r=2 files (13 + 12 rows), chunks of 4 → 4 + 3 = 7 chunks.
+        ShardSet::create(&dir, &ds, 2, 4).unwrap();
+        let before: Vec<Vec<u8>> = (0..2)
+            .map(|k| std::fs::read(dir.join(format!("shard_{k:03}.bin"))).unwrap())
+            .collect();
+        repartition_store(&dir, 3).unwrap();
+        let set = ShardSet::open(&dir).unwrap();
+        assert_eq!((set.r(), set.logical_workers(), set.total_chunks()), (2, 3, 7));
+        // Shard bytes are untouched — only the manifest moved.
+        for (k, bytes) in before.iter().enumerate() {
+            let after = std::fs::read(dir.join(format!("shard_{k:03}.bin"))).unwrap();
+            assert_eq!(&after, bytes, "file {k} rewritten");
+        }
+        // The three reader groups tile the dataset exactly, in order,
+        // and the middle group spans the file boundary.
+        let groups = set.reader_groups().unwrap();
+        assert_eq!(groups.iter().map(Vec::len).collect::<Vec<_>>(), vec![1, 2, 1]);
+        let mut all = Dataset { x: Mat::empty(), y: Vec::new() };
+        let mut win = Dataset { x: Mat::empty(), y: Vec::new() };
+        for mut group in groups {
+            for r in &mut group {
+                let ln = r.n();
+                r.set_chunk_rows(ln);
+                let k = r.next_window(&mut win).unwrap();
+                assert_eq!(k, ln);
+                for i in 0..k {
+                    all.x.data.extend_from_slice(win.x.row(i));
+                    all.y.push(win.y[i]);
                 }
             }
         }
+        let all = Dataset { x: Mat::from_vec(ds.n(), ds.d(), all.x.data), y: all.y };
+        assert_bitwise(&all, &ds);
+        // Degenerate targets are refused; W' = total chunks is the max.
+        assert!(repartition_store(&dir, 8).is_err());
+        repartition_store(&dir, 7).unwrap();
+        assert_eq!(ShardSet::open(&dir).unwrap().logical_workers(), 7);
+    }
+
+    #[test]
+    fn migrate_upgrades_sh1_in_place_with_row_parity() {
+        let dir = tdir("migrate");
+        let ds = synth::friedman(25, 4, 0.2, 7);
+        create_v1_store(&dir, &ds, 3, 8);
+        let v1 = ShardSet::open(&dir).unwrap();
+        assert_eq!(v1.version(), 1);
+        // SH1 stores cannot repartition (one pseudo-chunk per file).
+        assert!(ShardSet::open(&dir).unwrap().repartition(2).is_err());
+        assert_eq!(migrate_store(&dir).unwrap(), 3);
+        let v2 = ShardSet::open(&dir).unwrap();
+        assert_eq!(v2.version(), 2);
+        assert_eq!(v2.fingerprint(), dataset_fingerprint(&ds));
+        // Bitwise row parity, shard by shard, against the in-memory
+        // partition SH1 was written from.
+        let mem = ds.shard(3);
+        for k in 0..3 {
+            let got = v2.reader(k).unwrap().read_all().unwrap();
+            assert_bitwise(&got, &mem[k]);
+            assert!(v2.reader(k).unwrap().is_v2());
+        }
+        // Idempotent.
+        assert_eq!(migrate_store(&dir).unwrap(), 0);
+        // And now repartition works.
+        repartition_store(&dir, 2).unwrap();
+        assert_eq!(ShardSet::open(&dir).unwrap().logical_workers(), 2);
+    }
+
+    #[test]
+    fn verify_store_reports_per_chunk() {
+        let dir = tdir("verify");
+        let ds = synth::friedman(24, 3, 0.2, 4);
+        ShardSet::create(&dir, &ds, 2, 4).unwrap();
+        let report = verify_store(&dir).unwrap();
+        assert!(report.clean(), "{report}");
+        assert_eq!(report.files.len(), 2);
+        // Corrupt one chunk of file 1 → exactly one fault, named.
+        let path = dir.join("shard_001.bin");
+        let locs = chunk_locations(&path).unwrap();
+        let mut bytes = std::fs::read(&path).unwrap();
+        bytes[locs[1].0 as usize] ^= 0xFF;
+        std::fs::write(&path, &bytes).unwrap();
+        let report = verify_store(&dir).unwrap();
+        assert!(!report.clean());
+        assert_eq!(report.total_corrupt(), 1);
+        assert_eq!(report.files[1].corrupt.len(), 1);
+        assert_eq!(report.files[1].corrupt[0].0, 1);
+        assert!(report.files[0].corrupt.is_empty());
     }
 
     #[test]
@@ -712,7 +2149,9 @@ mod tests {
         let dir = tdir("zeroalloc");
         let ds = synth::friedman(64, 5, 0.2, 3);
         let path = dir.join("z.shard");
-        write_shard(&path, &ds).unwrap();
+        let mut w = ShardWriter::create_with(&path, 5, 16).unwrap(); // 4 chunks
+        w.push_dataset(&ds).unwrap();
+        w.finish().unwrap();
         let mut r = ShardReader::open(&path).unwrap();
         r.set_chunk_rows(10);
         let mut win = Dataset { x: Mat::empty(), y: Vec::new() };
@@ -743,5 +2182,32 @@ mod tests {
             .map(|e| e.unwrap().file_name())
             .collect();
         assert!(leftovers.is_empty(), "aborted writers left {leftovers:?}");
+    }
+
+    #[test]
+    fn fast_forward_matches_strict_streaming() {
+        let dir = tdir("ff");
+        let ds = synth::friedman(23, 3, 0.2, 4);
+        let path = dir.join("f.shard");
+        let mut w = ShardWriter::create_with(&path, 3, 4).unwrap();
+        w.push_dataset(&ds).unwrap();
+        w.finish().unwrap();
+        let mut a = ShardReader::open(&path).unwrap();
+        let mut b = ShardReader::open(&path).unwrap();
+        for r in [&mut a, &mut b] {
+            r.set_chunk_rows(5);
+            r.seek_to(7);
+        }
+        let mut win = Dataset { x: Mat::empty(), y: Vec::new() };
+        for _ in 0..11 {
+            a.next_window(&mut win).unwrap();
+        }
+        b.fast_forward(11);
+        assert_eq!(a.cursor(), b.cursor());
+        // And the next windows agree bitwise.
+        let mut wa = Dataset { x: Mat::empty(), y: Vec::new() };
+        a.next_window(&mut wa).unwrap();
+        b.next_window(&mut win).unwrap();
+        assert_bitwise(&wa, &win);
     }
 }

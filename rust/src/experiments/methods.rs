@@ -121,18 +121,35 @@ pub fn run_advgp_with(
 /// ADVGP over an on-disk [`ShardSet`] (ISSUE 3): each worker streams
 /// minibatch chunks from its shard file instead of holding a resident
 /// clone — peak per-worker data is one chunk buffer.  Worker count is
-/// the store's shard count.
+/// the store's *logical* worker count (ISSUE 7): after an `advgp store
+/// repartition` a worker's group may span several chunk-restricted
+/// readers, pooled round-robin.
 pub fn run_advgp_store(
     p: &Problem,
     opts: &MethodOpts,
     store: &ShardSet,
     factory: EngineFactory,
 ) -> Result<BaselineResult> {
-    let cfg = train_config(p, opts, store.r());
+    use crate::ps::worker::StorePool;
+    use std::sync::{Arc, Mutex};
+    let cfg = train_config(p, opts, store.logical_workers());
     let sources: Vec<WorkerSource> = store
-        .readers()?
+        .reader_groups()?
         .into_iter()
-        .map(WorkerSource::Store)
+        .enumerate()
+        .map(|(w, mut group)| {
+            if group.len() == 1 {
+                WorkerSource::Store(group.pop().unwrap())
+            } else {
+                // The coordinator re-homes this placeholder inbox onto
+                // the run's shared one (`pool_source`).
+                WorkerSource::Pool(StorePool::from_readers(
+                    w,
+                    group,
+                    Arc::new(Mutex::new(Vec::new())),
+                ))
+            }
+        })
         .collect();
     let elbo_set = opts.track_elbo.then(|| p.train.head(4096));
     let res = train_sources(

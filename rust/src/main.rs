@@ -7,6 +7,9 @@
 //!              transport; `advgp worker` processes connect to it
 //!   worker     join a serve-ps run as a remote worker, streaming its
 //!              shard from an on-disk store
+//!   store      offline shard-store tools (ISSUE 7): verify (full
+//!              scrub), migrate (ADVGPSH1 → SH2 in place), repartition
+//!              (remap chunk ranges to a new worker count)
 //!   datagen    write a synthetic dataset (flight|taxi|friedman) as CSV
 //!   artifacts  list the AOT artifact manifest
 //!   smoke      PJRT round-trip smoke test on an HLO text file
@@ -32,12 +35,13 @@ fn main() -> Result<()> {
         Some("train") => cmd_train(&args),
         Some("serve-ps") => cmd_serve_ps(&args),
         Some("worker") => cmd_worker(&args),
+        Some("store") => cmd_store(&args),
         Some("datagen") => cmd_datagen(&args),
         Some("artifacts") => cmd_artifacts(&args),
         Some("smoke") => cmd_smoke(&args),
         _ => {
             eprintln!(
-                "usage: advgp <train|serve-ps|worker|datagen|artifacts|smoke> [--flags]\n\
+                "usage: advgp <train|serve-ps|worker|store|datagen|artifacts|smoke> [--flags]\n\
                  \n\
                  train:    --data <csv|flight|taxi|friedman> [--n 50000] [--m 100]\n\
                  \x20         [--method advgp|svigp|distgp-gd|distgp-lbfgs|linear]\n\
@@ -54,6 +58,10 @@ fn main() -> Result<()> {
                  \x20         (one address per slice server of a partitioned fleet)\n\
                  \x20         [--worker-id id] [--chunk-rows n] [--max-rows n]\n\
                  \x20         [--threads n] [--straggle-ms n]\n\
+                 store:    <verify|migrate|repartition> --store dir [--workers W]\n\
+                 \x20         verify: scrub every chunk checksum, per-chunk report\n\
+                 \x20         migrate: upgrade ADVGPSH1 shards to SH2 in place\n\
+                 \x20         repartition: remap chunks to W workers, bytes untouched\n\
                  datagen:  --kind flight|taxi|friedman --n 10000 --out data.csv [--seed 0]\n\
                  artifacts: [--dir artifacts]\n\
                  smoke:    [--hlo /tmp/fn_hlo.txt]"
@@ -108,12 +116,17 @@ fn open_or_create_store(
             dir.display()
         );
         // A reused store fixes the partition: explicit flags that
-        // contradict it are an error, not a silent override.
+        // contradict it are an error, not a silent override.  The
+        // *logical* worker count is authoritative — `advgp store
+        // repartition` can remap chunks to more or fewer workers than
+        // there are shard files (ISSUE 7).
         anyhow::ensure!(
-            args.get("workers").is_none() || workers == s.r(),
-            "--workers {workers} contradicts store {} ({} shards); drop \
-             the flag or recreate the store",
+            args.get("workers").is_none() || workers == s.logical_workers(),
+            "--workers {workers} contradicts store {} ({} logical worker(s) \
+             over {} file(s)); drop the flag, recreate the store, or run \
+             `advgp store repartition --workers {workers}`",
             dir.display(),
+            s.logical_workers(),
             s.r()
         );
         anyhow::ensure!(
@@ -126,9 +139,10 @@ fn open_or_create_store(
             s.chunk_rows()
         );
         println!(
-            "store: reusing {} ({} shards, chunk {})",
+            "store: reusing {} ({} file(s), {} logical worker(s), chunk {})",
             dir.display(),
             s.r(),
+            s.logical_workers(),
             s.chunk_rows()
         );
         Ok(s)
@@ -352,10 +366,10 @@ fn cmd_serve_ps(args: &Args) -> Result<()> {
         // The store's partition is authoritative: a fresh store was just
         // written with `workers` shards, an explicit contradicting
         // --workers already errored inside open_or_create_store, and a
-        // reused store without the flag adopts its frozen shard count
-        // (mirrors `train --store`) instead of failing against the
-        // default.
-        workers = store.r();
+        // reused store without the flag adopts its frozen (possibly
+        // repartitioned) worker count (mirrors `train --store`) instead
+        // of failing against the default.
+        workers = store.logical_workers();
     }
     let mut cfg = TrainConfig::new(p.layout);
     cfg.tau = args.u64_or("tau", 32);
@@ -412,11 +426,13 @@ fn cmd_serve_ps(args: &Args) -> Result<()> {
         // RMSE table — just the slice server's own account of the run.
         println!(
             "serve-ps (slice {slice_id}/{n_slices}): done — {} updates, \
-             {} pushes, {} join(s), {} leave(s), {} coordinate(s) owned",
+             {} pushes, {} join(s), {} leave(s), {} transport fault(s), \
+             {} coordinate(s) owned",
             res.stats.updates,
             res.stats.pushes,
             res.stats.joins,
             res.stats.leaves,
+            res.stats.faults,
             res.theta.len()
         );
         return Ok(());
@@ -463,8 +479,14 @@ fn cmd_serve_ps(args: &Args) -> Result<()> {
         train_remote(&cfg, p.theta0.data.clone(), net, workers, eval)
     };
     println!(
-        "serve-ps: done — {} updates, {} pushes, {} join(s), {} leave(s)",
-        res.stats.updates, res.stats.pushes, res.stats.joins, res.stats.leaves
+        "serve-ps: done — {} updates, {} pushes, {} join(s), {} leave(s), \
+         {} transport fault(s), {} quarantined chunk(s)",
+        res.stats.updates,
+        res.stats.pushes,
+        res.stats.joins,
+        res.stats.leaves,
+        res.stats.faults,
+        res.stats.store_quarantines
     );
     let result = BaselineResult {
         theta: res.theta,
@@ -638,6 +660,70 @@ fn cmd_worker(args: &Args) -> Result<()> {
     };
     println!("worker {worker_id}: run complete (server shut down or this worker departed)");
     Ok(())
+}
+
+/// `advgp store`: offline tools over an on-disk shard store (ISSUE 7).
+/// `verify` scrubs every chunk checksum and prints a per-chunk report
+/// (exit 1 on any fault, so CI can gate on it); `migrate` upgrades
+/// ADVGPSH1 shards to the checksummed ADVGPSH2 format in place with
+/// bitwise row parity checked before any original is replaced;
+/// `repartition --workers W` remaps chunk ranges to a new worker count
+/// without rewriting shard bytes.
+fn cmd_store(args: &Args) -> Result<()> {
+    use advgp::data::store::{migrate_store, repartition_store, verify_store};
+    let action = args.positional.get(1).map(|s| s.as_str()).context(
+        "usage: advgp store <verify|migrate|repartition> --store dir [--workers W]",
+    )?;
+    let dir = PathBuf::from(
+        args.get("store")
+            .context("--store dir required (the shard store directory)")?,
+    );
+    match action {
+        "verify" => {
+            let report = verify_store(&dir)?;
+            println!("{report}");
+            anyhow::ensure!(
+                report.clean(),
+                "store {} failed verification ({} fault(s))",
+                dir.display(),
+                report.total_corrupt()
+            );
+            Ok(())
+        }
+        "migrate" => {
+            let migrated = migrate_store(&dir)?;
+            let s = ShardSet::open(&dir)?;
+            println!(
+                "store {}: {} file(s) migrated to ADVGPSH2 ({} already v2), \
+                 {} rows, chunk {}",
+                dir.display(),
+                migrated,
+                s.r() - migrated,
+                s.n(),
+                s.chunk_rows()
+            );
+            Ok(())
+        }
+        "repartition" => {
+            let workers: usize = args
+                .get("workers")
+                .context("--workers W required (the new logical worker count)")?
+                .parse()
+                .map_err(|_| anyhow::anyhow!("--workers wants an integer"))?;
+            repartition_store(&dir, workers)?;
+            let s = ShardSet::open(&dir)?;
+            println!(
+                "store {}: {} chunk(s) across {} file(s) remapped to {} logical \
+                 worker(s) — shard bytes untouched",
+                dir.display(),
+                s.total_chunks(),
+                s.r(),
+                s.logical_workers()
+            );
+            Ok(())
+        }
+        other => bail!("unknown store action {other} (verify|migrate|repartition)"),
+    }
 }
 
 fn cmd_datagen(args: &Args) -> Result<()> {

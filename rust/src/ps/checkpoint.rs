@@ -17,9 +17,17 @@
 //! gradients.  The saved clocks travel for inspection and metrics; θ
 //! and the optimizer state restore **bitwise** (f64 bit patterns are
 //! stored verbatim), so the first θ a resumed run publishes is exactly
-//! the checkpointed θ.  Worker-side stream cursors are *worker* state
-//! and are not captured: chunk-streaming workers re-seed their
-//! minibatch schedule on resume (see ROADMAP "Open items").
+//! the checkpointed θ.
+//!
+//! Worker-side stream cursors (ISSUE 7): in-process workers record
+//! `(initial offset, consumed windows)` into a shared registry before
+//! every push, and the server snapshots the registry into each
+//! checkpoint's cursor section.  A resumed coordinator hands each
+//! worker its cursor back, so chunk-streaming workers replay *exactly*
+//! the window schedule the uninterrupted run would have served — the
+//! missing half of bitwise τ=0 streamed-store resume.  Networked
+//! workers still re-seed from the stream head (their cursors live on
+//! the far side of the wire — documented limitation).
 //!
 //! # File format `ADVGPCK1`
 //!
@@ -34,6 +42,11 @@
 //! ...       E[g²]    dim × f64
 //! ...       E[Δ²]    dim × f64
 //! ...       workers  u64, then workers × (u8 tag, u64 t_k)
+//! ...       cursors  u64 count, then count × (u64 worker, u64 offset,
+//!           u64 windows), ascending by worker — OPTIONAL (ISSUE 7):
+//!           pre-SH2 files end after the clocks; presence is inferred
+//!           from the remaining length before the checksum, so both
+//!           generations decode
 //! ...       checksum u64 FNV-1a over everything above
 //! ```
 
@@ -78,6 +91,11 @@ pub struct Checkpoint {
     /// Per-worker freshest-push clocks at save time (`None` = never
     /// pushed or retired).  Informational on restore — see module docs.
     pub clocks: Vec<Option<u64>>,
+    /// Per-worker stream cursors `(worker, initial offset, consumed
+    /// windows)` at save time, ascending by worker (ISSUE 7).  Empty
+    /// when the run had no cursor registry (memory sources, networked
+    /// workers, pre-SH2 files).
+    pub cursors: Vec<(u64, u64, u64)>,
 }
 
 impl Checkpoint {
@@ -88,6 +106,7 @@ impl Checkpoint {
         theta: &[f64],
         adadelta: &AdaDelta,
         clocks: Vec<Option<u64>>,
+        cursors: Vec<(u64, u64, u64)>,
     ) -> Self {
         assert_eq!(theta.len(), layout.len(), "θ does not match layout");
         let (rho, eps) = adadelta.params();
@@ -103,6 +122,7 @@ impl Checkpoint {
             eg2: eg2.to_vec(),
             ed2: ed2.to_vec(),
             clocks,
+            cursors,
         }
     }
 
@@ -120,6 +140,7 @@ impl Checkpoint {
         theta: &[f64],
         adadelta: &AdaDelta,
         clocks: Vec<Option<u64>>,
+        cursors: Vec<(u64, u64, u64)>,
     ) -> Self {
         assert!(slice.range.end <= layout.len(), "slice does not fit the layout");
         assert_eq!(theta.len(), slice.len(), "θ does not match the slice");
@@ -136,6 +157,7 @@ impl Checkpoint {
             eg2: eg2.to_vec(),
             ed2: ed2.to_vec(),
             clocks,
+            cursors,
         }
     }
 
@@ -154,6 +176,7 @@ impl Checkpoint {
             eg2: self.eg2[range.clone()].to_vec(),
             ed2: self.ed2[range].to_vec(),
             clocks: self.clocks.clone(),
+            cursors: self.cursors.clone(),
         }
     }
 
@@ -162,9 +185,9 @@ impl Checkpoint {
     /// bitwise across the parts; θ and the accumulators concatenate —
     /// because every server-side quantity is element-wise, the result
     /// is byte-for-byte the checkpoint a single server would have
-    /// written at the same version.  Worker clocks are taken from slice
-    /// 0 (every slice observes the same membership stream; clocks are
-    /// informational on resume).
+    /// written at the same version.  Worker clocks and stream cursors
+    /// are taken from slice 0 (every slice observes the same membership
+    /// stream and shares one cursor registry).
     pub fn assemble(topology: &Topology, parts: &[Checkpoint]) -> Result<Self> {
         ensure!(
             parts.len() == topology.n_slices(),
@@ -220,6 +243,7 @@ impl Checkpoint {
             eg2,
             ed2,
             clocks: first.clocks.clone(),
+            cursors: first.cursors.clone(),
         })
     }
 
@@ -259,6 +283,15 @@ impl Checkpoint {
                     b.extend_from_slice(&0u64.to_le_bytes());
                 }
             }
+        }
+        // Cursor section (ISSUE 7): always written, even when empty —
+        // only *pre-cursor* files omit it (decode infers presence from
+        // the remaining length).
+        b.extend_from_slice(&(self.cursors.len() as u64).to_le_bytes());
+        for (worker, off, windows) in &self.cursors {
+            b.extend_from_slice(&worker.to_le_bytes());
+            b.extend_from_slice(&off.to_le_bytes());
+            b.extend_from_slice(&windows.to_le_bytes());
         }
         let sum = fnv1a64(FNV1A64_INIT, &b);
         b.extend_from_slice(&sum.to_le_bytes());
@@ -322,6 +355,25 @@ impl Checkpoint {
                 t => anyhow::bail!("checkpoint: bad clock tag {t}"),
             });
         }
+        // Optional cursor section (ISSUE 7): pre-cursor files go
+        // straight to the checksum here (exactly 8 bytes left); newer
+        // files always carry at least the u64 count.
+        let mut cursors = Vec::new();
+        if bytes.len() - r.i > 8 {
+            let count = r.u64()? as usize;
+            ensure!(count <= 1 << 20, "checkpoint: implausible cursor count {count}");
+            cursors.reserve(count);
+            let mut prev: Option<u64> = None;
+            for _ in 0..count {
+                let worker = r.u64()?;
+                ensure!(
+                    prev.map_or(true, |p| worker > p),
+                    "checkpoint: cursor workers out of order"
+                );
+                prev = Some(worker);
+                cursors.push((worker, r.u64()?, r.u64()?));
+            }
+        }
         let body_end = r.i;
         let stored = r.u64()?;
         ensure!(r.i == bytes.len(), "checkpoint: trailing bytes after checksum");
@@ -331,7 +383,7 @@ impl Checkpoint {
             "checkpoint: checksum mismatch (stored {stored:#018x}, \
              computed {actual:#018x}) — file is corrupt"
         );
-        Ok(Self { version, m, d, theta, rho, eps, eg2, ed2, clocks })
+        Ok(Self { version, m, d, theta, rho, eps, eg2, ed2, clocks, cursors })
     }
 
     /// Save into `dir` (created if missing) as `ck_{version:012}.bin`
@@ -848,7 +900,14 @@ mod tests {
             let g: Vec<f64> = (0..dim).map(|_| rng.normal()).collect();
             ada.step(&g);
         }
-        Checkpoint::capture(layout, version, &theta, &ada, vec![Some(7), None, Some(9)])
+        Checkpoint::capture(
+            layout,
+            version,
+            &theta,
+            &ada,
+            vec![Some(7), None, Some(9)],
+            vec![(0, 3, version), (2, 11, version)],
+        )
     }
 
     #[test]
@@ -858,6 +917,7 @@ mod tests {
         assert_eq!(back.version, 42);
         assert_eq!((back.m, back.d), (3, 2));
         assert_eq!(back.clocks, vec![Some(7), None, Some(9)]);
+        assert_eq!(back.cursors, vec![(0, 3, 42), (2, 11, 42)]);
         for (a, b) in ck.theta.iter().zip(&back.theta) {
             assert_eq!(a.to_bits(), b.to_bits());
         }
@@ -950,6 +1010,33 @@ mod tests {
         assert!(Checkpoint::decode(&bytes).is_err());
     }
 
+    /// A pre-cursor (PR 3 era) file — clocks, then checksum, no cursor
+    /// section — still decodes, with empty cursors; and the cursor
+    /// section's own validation rejects disorder.
+    #[test]
+    fn cursor_section_is_optional_and_validated() {
+        let mut ck = sample(5, 3);
+        ck.cursors.clear();
+        // Rebuild the legacy byte stream: strip the (zero) cursor count
+        // and the checksum, then re-checksum the shorter body.
+        let new_bytes = ck.encode();
+        let mut legacy = new_bytes[..new_bytes.len() - 16].to_vec();
+        let sum = fnv1a64(FNV1A64_INIT, &legacy);
+        legacy.extend_from_slice(&sum.to_le_bytes());
+        let back = Checkpoint::decode(&legacy).unwrap();
+        assert!(back.cursors.is_empty());
+        assert_eq!(back, ck);
+        // New-format empty-cursor files roundtrip too (the two byte
+        // streams differ; both are valid).
+        assert_eq!(Checkpoint::decode(&new_bytes).unwrap(), ck);
+        assert_ne!(legacy, new_bytes);
+        // Cursors must ascend strictly by worker id.
+        let mut bad = sample(6, 4);
+        bad.cursors = vec![(3, 1, 2), (1, 0, 2)];
+        let err = Checkpoint::decode(&bad.encode()).unwrap_err();
+        assert!(format!("{err:#}").contains("out of order"), "{err:#}");
+    }
+
     #[test]
     fn restored_optimizer_continues_bitwise() {
         let layout = ThetaLayout::new(2, 1);
@@ -959,7 +1046,7 @@ mod tests {
         for _ in 0..8 {
             ada.step(&g);
         }
-        let ck = Checkpoint::capture(layout, 8, &vec![0.0; dim], &ada, vec![]);
+        let ck = Checkpoint::capture(layout, 8, &vec![0.0; dim], &ada, vec![], vec![]);
         let mut restored = ck.restore_adadelta();
         let da = ada.step(&g);
         let db = restored.step(&g);

@@ -28,14 +28,18 @@ use super::server::{run_server, ServerConfig, ServerOutcome};
 use super::sharded::{
     merge_outcomes, run_assembler, run_splitter, ShardedPublished, SliceSpec, Topology,
 };
-use super::worker::{run_worker, ShardInbox, StorePool, WorkerProfile, WorkerSource};
+use super::worker::{
+    run_worker, CursorRegistry, ShardInbox, StorePool, WorkerProfile, WorkerSource,
+};
 use super::Published;
+use crate::data::store::QuarantinePolicy;
 use crate::data::Dataset;
 use crate::gp::ThetaLayout;
 use crate::grad::EngineFactory;
 use crate::log_warn;
 use crate::opt::StepSchedule;
 use crate::util::Stopwatch;
+use std::collections::BTreeMap;
 use std::path::PathBuf;
 use std::sync::atomic::AtomicU64;
 use std::sync::{mpsc, Arc, Mutex};
@@ -273,6 +277,11 @@ fn slice_server_config(
         // Only the networked coordinators wire a live counter in (the
         // transport is the only fault surface); in-process runs report 0.
         transport_faults: None,
+        // The in-process topologies install these after lowering (ISSUE
+        // 7); the networked paths leave them unset — remote workers keep
+        // their own cursors and resume from the stream head.
+        cursors: None,
+        store_quarantines: None,
     }
 }
 
@@ -364,6 +373,33 @@ fn resolve_profiles(cfg: &TrainConfig, workers: usize) -> Vec<WorkerProfile> {
     profiles
 }
 
+/// ISSUE 7 wiring shared by the in-process topologies: one cursor
+/// registry every worker records `(initial offset, consumed windows)`
+/// into — so checkpoints capture exact stream positions — and one
+/// quarantine policy (corruption budget + shared counter) to install on
+/// every out-of-core source.  Resumed checkpoint cursors are mapped
+/// back onto the initial worker ids that recorded them; a cursor for an
+/// id beyond `profiles` (a joiner of the sealed run) is dropped —
+/// joiners re-enter by wall clock, outside the bitwise-resume contract.
+fn wire_store_robustness(
+    cfg: &TrainConfig,
+    profiles: &mut [WorkerProfile],
+) -> (CursorRegistry, QuarantinePolicy) {
+    let cursors: CursorRegistry = Arc::new(Mutex::new(BTreeMap::new()));
+    let quarantine = QuarantinePolicy::new_default();
+    for p in profiles.iter_mut() {
+        p.cursors = Some(cursors.clone());
+    }
+    if let Some(ck) = &cfg.resume_from {
+        for &(w, off, windows) in &ck.cursors {
+            if let Some(p) = profiles.get_mut(w as usize) {
+                p.resume_cursor = Some((off, windows));
+            }
+        }
+    }
+    (cursors, quarantine)
+}
+
 /// Wrap an out-of-core source in a [`StorePool`] on the run's shared
 /// shard inbox (ISSUE 6 failure-domain hardening): a worker that leaves
 /// early surrenders its shard readers to the inbox, and any surviving
@@ -376,6 +412,13 @@ fn pool_source(k: usize, source: WorkerSource, inbox: &ShardInbox) -> WorkerSour
     match source {
         WorkerSource::Store(reader) => {
             WorkerSource::Pool(StorePool::new(k, reader, inbox.clone()))
+        }
+        WorkerSource::Pool(mut pool) => {
+            // A pre-built pool (a repartitioned reader group, ISSUE 7)
+            // joins the run's shared inbox so surrender/adopt spans
+            // every pool worker.
+            pool.rehome(inbox.clone());
+            WorkerSource::Pool(pool)
         }
         other => other,
     }
@@ -489,8 +532,12 @@ pub fn train_elastic(
         published.publish(ck.version, ck.theta.clone());
     }
     let (tx, rx) = mpsc::channel::<ToServer>();
-    let server_cfg = server_config(cfg, workers, joiners.len());
-    let profiles = resolve_profiles(cfg, workers);
+    let mut server_cfg = server_config(cfg, workers, joiners.len());
+    let mut profiles = resolve_profiles(cfg, workers);
+    // ---- stream cursors + corruption quarantine (ISSUE 7) ----
+    let (cursors, quarantine) = wire_store_robustness(cfg, &mut profiles);
+    server_cfg.cursors = Some(cursors.clone());
+    server_cfg.store_quarantines = Some(quarantine.counter.clone());
     // One shard inbox per run: departed pool workers surrender their
     // out-of-core shards here, survivors adopt them (ISSUE 6).
     let inbox: ShardInbox = Arc::new(Mutex::new(Vec::new()));
@@ -501,7 +548,8 @@ pub fn train_elastic(
             let factory = factory.clone();
             let published = published.clone();
             let tx = tx.clone();
-            let source = pool_source(k, source, &inbox);
+            let mut source = pool_source(k, source, &inbox);
+            source.set_fault_policy(quarantine.clone());
             scope.spawn(move || run_worker_pooled(k, source, factory, published, tx, profile));
         }
         // ---- late joiners (ids continue after the initial workers) ----
@@ -510,8 +558,10 @@ pub fn train_elastic(
             let factory = factory.clone();
             let published = published.clone();
             let tx = tx.clone();
-            let Joiner { after, source, profile } = joiner;
-            let source = pool_source(k, source, &inbox);
+            let Joiner { after, source, mut profile } = joiner;
+            profile.cursors = Some(cursors.clone());
+            let mut source = pool_source(k, source, &inbox);
+            source.set_fault_policy(quarantine.clone());
             scope.spawn(move || {
                 // Interruptible delay: a run that ends early (time
                 // limit, max_updates) wakes this immediately instead of
@@ -584,7 +634,9 @@ fn train_elastic_sharded(
     }
     let ck_dirs = sharded_checkpoint_dirs(cfg, &topo);
     let expected_joiners = joiners.len();
-    let profiles = resolve_profiles(cfg, workers);
+    let mut profiles = resolve_profiles(cfg, workers);
+    // ---- stream cursors + corruption quarantine (ISSUE 7) ----
+    let (cursors, quarantine) = wire_store_robustness(cfg, &mut profiles);
     let inbox: ShardInbox = Arc::new(Mutex::new(Vec::new()));
 
     let (tx_all, rx_all) = mpsc::channel::<ToServer>();
@@ -612,7 +664,8 @@ fn train_elastic_sharded(
             let factory = factory.clone();
             let published = published.clone();
             let tx = tx_all.clone();
-            let source = pool_source(k, source, &inbox);
+            let mut source = pool_source(k, source, &inbox);
+            source.set_fault_policy(quarantine.clone());
             scope.spawn(move || run_worker_pooled(k, source, factory, published, tx, profile));
         }
         for (j, joiner) in joiners.into_iter().enumerate() {
@@ -620,8 +673,10 @@ fn train_elastic_sharded(
             let factory = factory.clone();
             let published = published.clone();
             let tx = tx_all.clone();
-            let Joiner { after, source, profile } = joiner;
-            let source = pool_source(k, source, &inbox);
+            let Joiner { after, source, mut profile } = joiner;
+            profile.cursors = Some(cursors.clone());
+            let mut source = pool_source(k, source, &inbox);
+            source.set_fault_policy(quarantine.clone());
             scope.spawn(move || {
                 if published.shutdown_or_timeout(after) {
                     return;
@@ -646,7 +701,7 @@ fn train_elastic_sharded(
             .enumerate()
             .zip(ck_dirs)
             .map(|((i, rx), (dir, resume))| {
-                let scfg = slice_server_config(
+                let mut scfg = slice_server_config(
                     cfg,
                     workers,
                     expected_joiners,
@@ -654,6 +709,15 @@ fn train_elastic_sharded(
                     dir,
                     resume,
                 );
+                // Every slice snapshots the same registry (at τ=0 the
+                // slices step in lockstep, so the snapshots agree and
+                // `Checkpoint::assemble` takes slice 0's); the shared
+                // quarantine counter goes to slice 0 only so
+                // `merge_outcomes`' sum is the session count.
+                scfg.cursors = Some(cursors.clone());
+                if i == 0 {
+                    scfg.store_quarantines = Some(quarantine.counter.clone());
+                }
                 let p = sharded.slices[i].clone();
                 scope.spawn(move || run_server(&scfg, p, rx))
             })

@@ -360,6 +360,123 @@ fn pump_dir(
     }
 }
 
+// ---------------------------------------------------------------------
+// ADVGPFI1 on disk (ISSUE 7): the same seeded-plan discipline, aimed at
+// the ADVGPSH2 chunk store instead of the socket.  A [`StoreFaultPlan`]
+// mutates specific chunk payloads of an on-disk store; every event maps
+// to a failure real storage produces (bit rot, a scribbled block, a
+// truncated file).  Deterministic end to end: same (seed, events,
+// store) ⇒ same bytes flipped ⇒ same quarantine trace in the reader
+// (pinned by `rust/tests/chaos_store.rs`).
+// ---------------------------------------------------------------------
+
+/// One injectable storage fault.
+#[derive(Clone, Copy, Debug, PartialEq, Eq, PartialOrd, Ord)]
+pub enum StoreFaultEvent {
+    /// XOR one stored payload byte (offset taken modulo the stored
+    /// chunk length) — classic bit rot; the chunk checksum cannot
+    /// survive it.
+    CorruptByte(usize),
+    /// Overwrite the whole stored payload with a 0xA5 scribble (a
+    /// misdirected write landing on this block).  Never a no-op, unlike
+    /// zero-fill on an already-zero payload.
+    ScribbleChunk,
+    /// Truncate the *file* in the middle of this chunk's payload — the
+    /// chunk directory at the tail vanishes, so the shard stops opening
+    /// at all (a torn download / lost tail extent).  A whole-shard
+    /// fault, not a quarantinable one.
+    TruncateAt,
+}
+
+/// One scheduled storage fault: apply `event` to chunk `chunk` of shard
+/// file `file`.  Plans drawn from a seed may index past a short last
+/// file; [`StoreFaultPlan::apply`] reduces indices modulo the actual
+/// counts and the returned trace carries the concrete targets.
+#[derive(Clone, Copy, Debug, PartialEq, Eq, PartialOrd, Ord)]
+pub struct StoreFaultRule {
+    pub file: usize,
+    pub chunk: usize,
+    pub event: StoreFaultEvent,
+}
+
+/// A deterministic storage-fault schedule over a [`ShardSet`]'s files
+/// (`crate::data::store`).  Equality is derived, so "same seed ⇒ same
+/// plan" is a plain `assert_eq!`, mirroring [`FaultPlan`].
+#[derive(Clone, Debug, Default, PartialEq, Eq)]
+pub struct StoreFaultPlan {
+    pub rules: Vec<StoreFaultRule>,
+}
+
+impl StoreFaultPlan {
+    /// A plan from explicit rules (sorted for stable comparison).
+    pub fn new(mut rules: Vec<StoreFaultRule>) -> Self {
+        rules.sort();
+        Self { rules }
+    }
+
+    /// Draw a plan from a seed: each requested event is assigned a
+    /// uniformly random file in `0..files` and chunk in `0..chunks`,
+    /// via the repo's deterministic [`Pcg64`].  Same `(seed, events,
+    /// files, chunks)` ⇒ identical plan, on every platform, forever.
+    pub fn seeded(seed: u64, events: &[StoreFaultEvent], files: usize, chunks: usize) -> Self {
+        assert!(files >= 1 && chunks >= 1, "empty fault target space");
+        let mut rng = Pcg64::seeded(seed);
+        let rules = events
+            .iter()
+            .map(|&event| StoreFaultRule {
+                file: rng.next_below(files as u64) as usize,
+                chunk: rng.next_below(chunks as u64) as usize,
+                event,
+            })
+            .collect();
+        Self::new(rules)
+    }
+
+    /// Apply every rule to the store at `dir`, mutating shard bytes on
+    /// disk.  File/chunk indices are reduced modulo the actual counts;
+    /// the returned trace carries the concrete `(file, chunk)` targets,
+    /// sorted — the replay witness chaos tests pin.  Rules against a
+    /// file an earlier `TruncateAt` already beheaded are skipped (its
+    /// chunk directory is gone), keeping apply deterministic rather
+    /// than erroring on its own handiwork.
+    pub fn apply(&self, dir: &std::path::Path) -> Result<Vec<StoreFaultRule>> {
+        use crate::data::store::{chunk_locations, ShardSet};
+        let set = ShardSet::open(dir).context("open store for fault injection")?;
+        let mut truncated = vec![false; set.r()];
+        let mut applied = Vec::with_capacity(self.rules.len());
+        for r in &self.rules {
+            let file = r.file % set.r();
+            if truncated[file] {
+                continue;
+            }
+            let path = set.file_path(file);
+            let locs =
+                chunk_locations(path).context("locate chunks for fault injection")?;
+            let chunk = r.chunk % locs.len();
+            let (off, len) = locs[chunk];
+            let mut bytes = std::fs::read(path)
+                .with_context(|| format!("read shard {}", path.display()))?;
+            match r.event {
+                StoreFaultEvent::CorruptByte(o) => {
+                    bytes[off as usize + o % len as usize] ^= 0xFF;
+                }
+                StoreFaultEvent::ScribbleChunk => {
+                    bytes[off as usize..(off + len) as usize].fill(0xA5);
+                }
+                StoreFaultEvent::TruncateAt => {
+                    bytes.truncate(off as usize + len as usize / 2);
+                    truncated[file] = true;
+                }
+            }
+            std::fs::write(path, &bytes)
+                .with_context(|| format!("write faulted shard {}", path.display()))?;
+            applied.push(StoreFaultRule { file, chunk, event: r.event });
+        }
+        applied.sort();
+        Ok(applied)
+    }
+}
+
 /// Sleep `ms`, polling the stop flag so shutdown is never gated on a
 /// long injected delay.
 fn sleep_unless_stopped(ms: u64, stop: &AtomicBool) {
@@ -495,5 +612,109 @@ mod tests {
         drop(c);
         proxy.shutdown();
         let _ = server.join();
+    }
+
+    // -- StoreFaultPlan (disk) ----------------------------------------
+
+    fn store_fixture(name: &str) -> (std::path::PathBuf, crate::data::Dataset) {
+        let dir = std::env::temp_dir().join("advgp_fault_test").join(name);
+        let _ = std::fs::remove_dir_all(&dir);
+        std::fs::create_dir_all(&dir).unwrap();
+        let ds = crate::data::synth::friedman(40, 3, 0.2, 11);
+        // 2 files (20 + 20 rows), chunks of 6 → 4 + 4 = 8 chunks.
+        crate::data::store::ShardSet::create(&dir, &ds, 2, 6).unwrap();
+        (dir, ds)
+    }
+
+    /// Same seed ⇒ identical plan; drawn indices land in range.
+    #[test]
+    fn seeded_store_plan_is_deterministic_and_in_range() {
+        let events = [
+            StoreFaultEvent::CorruptByte(7),
+            StoreFaultEvent::ScribbleChunk,
+            StoreFaultEvent::CorruptByte(0),
+            StoreFaultEvent::TruncateAt,
+        ];
+        let a = StoreFaultPlan::seeded(0xD15C_FA17, &events, 3, 9);
+        let b = StoreFaultPlan::seeded(0xD15C_FA17, &events, 3, 9);
+        assert_eq!(a, b, "same seed must yield the same plan");
+        assert_eq!(a.rules.len(), events.len());
+        for r in &a.rules {
+            assert!(r.file < 3 && r.chunk < 9, "target out of range: {r:?}");
+        }
+        let c = StoreFaultPlan::seeded(0xD15C_FA18, &events, 3, 9);
+        assert_ne!(a, c, "different seed should (here) differ");
+    }
+
+    /// `apply` flips exactly the planned chunk: that chunk fails its
+    /// checksum at read time, every other chunk still verifies, and the
+    /// returned trace names the concrete target.
+    #[test]
+    fn store_plan_apply_corrupts_the_planned_chunk_only() {
+        use crate::data::store::ShardSet;
+        let (dir, _ds) = store_fixture("apply_corrupt");
+        let plan = StoreFaultPlan::new(vec![StoreFaultRule {
+            file: 1,
+            chunk: 2,
+            event: StoreFaultEvent::CorruptByte(3),
+        }]);
+        let trace = plan.apply(&dir).unwrap();
+        assert_eq!(trace, plan.rules);
+        let set = ShardSet::open(&dir).unwrap();
+        for file in 0..2 {
+            let mut r = set.reader(file).unwrap();
+            for c in 0..r.n_chunks() {
+                let ok = r.verify_chunk(c).is_ok();
+                assert_eq!(
+                    ok,
+                    !(file == 1 && c == 2),
+                    "file {file} chunk {c}: wrong verify outcome"
+                );
+            }
+        }
+    }
+
+    /// Out-of-range indices reduce modulo the actual counts, the trace
+    /// reports the concrete targets, and applying the same plan to an
+    /// identically rebuilt store yields the same trace.
+    #[test]
+    fn store_plan_apply_is_deterministic_and_wraps_indices() {
+        let plan = StoreFaultPlan::seeded(
+            0xABAD_D15C,
+            &[StoreFaultEvent::ScribbleChunk, StoreFaultEvent::CorruptByte(100)],
+            // Drawn over a larger space than the fixture (2 files × 4
+            // chunks) to exercise the modulo reduction.
+            5,
+            50,
+        );
+        let (dir_a, _) = store_fixture("apply_replay_a");
+        let (dir_b, _) = store_fixture("apply_replay_b");
+        let ta = plan.apply(&dir_a).unwrap();
+        let tb = plan.apply(&dir_b).unwrap();
+        assert_eq!(ta, tb, "same plan + same store ⇒ same trace");
+        for r in &ta {
+            assert!(r.file < 2 && r.chunk < 4, "unreduced target: {r:?}");
+        }
+    }
+
+    /// `TruncateAt` beheads the whole file — it stops opening (the
+    /// chunk directory is gone) — and later rules against that file are
+    /// skipped rather than erroring.
+    #[test]
+    fn store_plan_truncate_beheads_the_file() {
+        use crate::data::store::ShardReader;
+        let (dir, _ds) = store_fixture("apply_truncate");
+        let plan = StoreFaultPlan::new(vec![
+            StoreFaultRule { file: 0, chunk: 1, event: StoreFaultEvent::TruncateAt },
+            StoreFaultRule { file: 0, chunk: 2, event: StoreFaultEvent::CorruptByte(0) },
+        ]);
+        let trace = plan.apply(&dir).unwrap();
+        // Only the truncation lands; the follow-up rule is skipped.
+        assert_eq!(
+            trace,
+            vec![StoreFaultRule { file: 0, chunk: 1, event: StoreFaultEvent::TruncateAt }]
+        );
+        assert!(ShardReader::open(&dir.join("shard_000.bin")).is_err());
+        assert!(ShardReader::open(&dir.join("shard_001.bin")).is_ok());
     }
 }

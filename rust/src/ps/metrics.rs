@@ -64,6 +64,12 @@ pub struct ServerStats {
     /// runs; on sharded runs, summed across slices.  The slice loop
     /// itself never sees these (graceful degradation by design).
     pub faults: u64,
+    /// Store chunks quarantined during the run (ISSUE 7): reads that
+    /// failed ADVGPSH2 chunk verification, were isolated, and were
+    /// survived in degraded mode under the corruption budget.  0 for
+    /// in-memory or intact-store runs; on sharded runs the counter is
+    /// shared across workers and tallied once (not per slice).
+    pub store_quarantines: u64,
 }
 
 /// Write a trace as CSV (t_secs,version,rmse,mnlp,neg_elbo).

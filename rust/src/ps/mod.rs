@@ -52,6 +52,17 @@
 //! `advgp serve-ps --servers S` / `--slice i/S` the CLI.  At τ = 0 a
 //! sharded run reproduces the single-server θ trajectory **bitwise**
 //! (`rust/tests/sharded_ps.rs`).
+//!
+//! Storage robustness (ISSUE 7): out-of-core shards live in the
+//! checksummed `ADVGPSH2` chunk format; a read that fails verification
+//! quarantines the chunk and training continues **degraded** under a
+//! session-wide corruption budget (typed
+//! [`crate::data::store::StoreFault`] when it runs dry).  Workers
+//! record `(initial offset, consumed windows)` stream cursors into a
+//! [`worker::CursorRegistry`] the server freezes into every checkpoint,
+//! making streamed-store τ=0 resume bitwise end-to-end; the
+//! [`fault::StoreFaultPlan`] seeded disk-fault layer drives the
+//! `chaos_store` test matrix.
 
 pub mod checkpoint;
 pub mod coordinator;
@@ -71,7 +82,10 @@ pub use coordinator::{
     train_remote_slice, train_sources, Joiner, RunResult, TrainConfig,
 };
 pub use delay::DelayGate;
-pub use fault::{FaultEvent, FaultPlan, FaultProxy, FaultRule};
+pub use fault::{
+    FaultEvent, FaultPlan, FaultProxy, FaultRule, StoreFaultEvent, StoreFaultPlan,
+    StoreFaultRule,
+};
 pub use messages::PublishMeta;
 pub use metrics::{EvalMetrics, TraceRow};
 pub use net::{
@@ -80,7 +94,7 @@ pub use net::{
     ShardedWorkerHandle,
 };
 pub use sharded::{ShardedPublished, SliceSpec, Topology};
-pub use worker::{ShardInbox, StorePool, WorkerProfile, WorkerSource};
+pub use worker::{CursorRegistry, ShardInbox, StorePool, WorkerProfile, WorkerSource};
 
 use std::sync::{Arc, Condvar, Mutex};
 

@@ -70,6 +70,19 @@ pub struct ServerConfig {
     /// into [`ServerStats::faults`] when the loop returns.  `None` for
     /// in-process runs — there is no transport to fault.
     pub transport_faults: Option<Arc<AtomicU64>>,
+    /// Shared per-worker stream-cursor registry (ISSUE 7): when set,
+    /// the server snapshots it immediately *before* every publish —
+    /// the instant every worker is still blocked on `wait_newer`, so at
+    /// τ=0 the snapshot is exact — and seals the snapshot into each
+    /// checkpoint's cursor section.  `None` disables cursor capture
+    /// (memory sources, networked workers).
+    pub cursors: Option<super::worker::CursorRegistry>,
+    /// Store-quarantine counter shared with every worker's
+    /// [`QuarantinePolicy`](crate::data::store::QuarantinePolicy)
+    /// (ISSUE 7): sampled into [`ServerStats::store_quarantines`] when
+    /// the loop returns.  On sharded runs the coordinator hands it to
+    /// slice 0 only, so the merge's sum counts each quarantine once.
+    pub store_quarantines: Option<Arc<AtomicU64>>,
 }
 
 /// Outcome of the server loop.
@@ -143,13 +156,22 @@ fn capture_checkpoint(
     theta: &[f64],
     adadelta: &AdaDelta,
     gate: &DelayGate,
+    cursors: &[(u64, u64, u64)],
 ) -> Option<(Checkpoint, PathBuf)> {
     let Some(dir) = cfg.checkpoint_dir.clone() else {
         log_warn!("checkpoint_every set but no checkpoint_dir; skipping");
         return None;
     };
     Some((
-        Checkpoint::capture_slice(cfg.layout, &cfg.slice, t, theta, adadelta, gate.clocks()),
+        Checkpoint::capture_slice(
+            cfg.layout,
+            &cfg.slice,
+            t,
+            theta,
+            adadelta,
+            gate.clocks(),
+            cursors.to_vec(),
+        ),
         dir,
     ))
 }
@@ -184,8 +206,9 @@ fn write_checkpoint(
     theta: &[f64],
     adadelta: &AdaDelta,
     gate: &DelayGate,
+    cursors: &[(u64, u64, u64)],
 ) {
-    if let Some((ck, dir)) = capture_checkpoint(cfg, t, theta, adadelta, gate) {
+    if let Some((ck, dir)) = capture_checkpoint(cfg, t, theta, adadelta, gate, cursors) {
         save_and_log(ck, &dir, cfg.keep_last);
     }
 }
@@ -200,8 +223,9 @@ fn spawn_checkpoint(
     theta: &[f64],
     adadelta: &AdaDelta,
     gate: &DelayGate,
+    cursors: &[(u64, u64, u64)],
 ) -> Option<std::thread::JoinHandle<()>> {
-    let (ck, dir) = capture_checkpoint(cfg, t, theta, adadelta, gate)?;
+    let (ck, dir) = capture_checkpoint(cfg, t, theta, adadelta, gate, cursors)?;
     let keep_last = cfg.keep_last;
     Some(std::thread::spawn(move || save_and_log(ck, &dir, keep_last)))
 }
@@ -272,6 +296,11 @@ pub fn run_server(
     // One keep-alive slot per declared joiner, cleared by that id's
     // first admission (never by an unrelated rejoin).
     let mut joiner_pending = vec![true; cfg.expected_joiners];
+    // Latest consistent cursor snapshot (ISSUE 7), refreshed before
+    // every publish.  Seeded from the resume checkpoint so a run that
+    // seals without a new update re-seals the cursors it inherited.
+    let mut cursor_snapshot: Vec<(u64, u64, u64)> =
+        cfg.resume.as_ref().map(|ck| ck.cursors.clone()).unwrap_or_default();
     // Outstanding background checkpoint write (at most one in flight).
     let mut ck_writer: Option<std::thread::JoinHandle<()>> = None;
     // Keep serving while any declared joiner is outstanding, even if
@@ -343,6 +372,15 @@ pub fn run_server(
             cfg.server_shards,
         );
         t += 1;
+        // Snapshot the cursor registry *before* publishing: every
+        // worker contributing to this update is still blocked in
+        // `wait_newer`, so at τ=0 the registry is frozen at exactly
+        // `t` consumed windows per worker — publishing first would
+        // race the snapshot against workers starting iteration t.
+        if let Some(reg) = &cfg.cursors {
+            cursor_snapshot =
+                reg.lock().unwrap().iter().map(|(&w, &(off, win))| (w, off, win)).collect();
+        }
         // Clock metadata rides along with the snapshot so networked
         // workers see the staleness regime they are part of.
         published.publish_meta(
@@ -363,7 +401,8 @@ pub fn run_server(
                 if let Some(h) = ck_writer.take() {
                     let _ = h.join();
                 }
-                ck_writer = spawn_checkpoint(cfg, t, &theta, &adadelta, &gate);
+                ck_writer =
+                    spawn_checkpoint(cfg, t, &theta, &adadelta, &gate, &cursor_snapshot);
             }
         }
         let now = clock.secs();
@@ -381,7 +420,7 @@ pub fn run_server(
     if cfg.checkpoint_every > 0 {
         // Seal the run so a resume continues from the final state (a
         // no-op rewrite when t already landed on a cadence boundary).
-        write_checkpoint(cfg, t, &theta, &adadelta, &gate);
+        write_checkpoint(cfg, t, &theta, &adadelta, &gate, &cursor_snapshot);
     }
     published.shutdown();
     // Drain remaining messages so worker sends never block (unbounded
@@ -401,6 +440,11 @@ pub fn run_server(
     // behalf (ISSUE 6) — the loop above never saw them, by design.
     if let Some(ctr) = &cfg.transport_faults {
         stats.faults = ctr.load(Ordering::Relaxed);
+    }
+    // Likewise the store chunks the workers' readers quarantined
+    // (ISSUE 7): degraded reads never surface in the loop, only here.
+    if let Some(ctr) = &cfg.store_quarantines {
+        stats.store_quarantines = ctr.load(Ordering::Relaxed);
     }
     ServerOutcome { theta, stats, last_value }
 }

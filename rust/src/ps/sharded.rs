@@ -340,6 +340,9 @@ pub fn run_splitter(
 ///   multiply-count by `S`).
 /// * `faults` — summed: transport faults are per-connection events and
 ///   each slice server owns disjoint connections (ISSUE 6).
+/// * `store_quarantines` — summed: the coordinator hands the shared
+///   quarantine counter to slice 0 only, so the sum *is* the session
+///   count without double-tallying (ISSUE 7).
 /// * timing/staleness series — taken from slice 0 (the slices see
 ///   statistically identical streams; merging reservoirs would not add
 ///   information).
@@ -356,6 +359,7 @@ pub fn merge_outcomes(topology: &Topology, outcomes: Vec<ServerOutcome>) -> Serv
     stats.joins = outcomes.iter().map(|o| o.stats.joins).max().unwrap_or(0);
     stats.leaves = outcomes.iter().map(|o| o.stats.leaves).max().unwrap_or(0);
     stats.faults = outcomes.iter().map(|o| o.stats.faults).sum();
+    stats.store_quarantines = outcomes.iter().map(|o| o.stats.store_quarantines).sum();
     let last_value = outcomes[0].last_value;
     ServerOutcome { theta, stats, last_value }
 }
@@ -467,14 +471,14 @@ mod tests {
             stats.leaves = leaves;
             ServerOutcome { theta, stats, last_value: -1.0 }
         };
-        let merged = merge_outcomes(
-            &topo,
-            vec![mk(vec![1.0, 2.0], 10, 40, 1, 2), mk(vec![3.0, 4.0], 9, 38, 1, 2)],
-        );
+        let mut a = mk(vec![1.0, 2.0], 10, 40, 1, 2);
+        a.stats.store_quarantines = 3; // slice 0 holds the shared counter
+        let merged = merge_outcomes(&topo, vec![a, mk(vec![3.0, 4.0], 9, 38, 1, 2)]);
         assert_eq!(merged.theta, vec![1.0, 2.0, 3.0, 4.0]);
         assert_eq!(merged.stats.updates, 9, "version-vector floor");
         assert_eq!(merged.stats.pushes, 78, "slice-level pushes sum");
         assert_eq!(merged.stats.joins, 1);
         assert_eq!(merged.stats.leaves, 2);
+        assert_eq!(merged.stats.store_quarantines, 3, "summed, tallied once");
     }
 }

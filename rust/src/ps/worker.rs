@@ -11,7 +11,7 @@
 
 use super::messages::{Push, ToServer};
 use super::Published;
-use crate::data::store::ShardReader;
+use crate::data::store::{QuarantinePolicy, ShardReader, StoreFault};
 use crate::data::Dataset;
 use crate::grad::EngineFactory;
 use crate::linalg::Mat;
@@ -19,9 +19,21 @@ use crate::util::rng::Pcg64;
 use crate::util::{pool, Stopwatch};
 use crate::{log_info, log_warn};
 use anyhow::{bail, Result};
+use std::collections::BTreeMap;
 use std::sync::mpsc::Sender;
 use std::sync::{Arc, Mutex};
 use std::time::Duration;
+
+/// Shared per-worker stream-cursor registry (ISSUE 7): worker id →
+/// `(initial offset, completed local iterations)`.  Each worker records
+/// its entry *before* every push (so the channel's happens-before makes
+/// the entry visible to whoever absorbed the push), and the server
+/// snapshots the whole map into each checkpoint.  At τ=0 the snapshot
+/// is exact: every worker has pushed for update `t` and is blocked
+/// waiting for `t+1`, so every entry reads `t+1` consumed windows.
+/// In-process transports only — networked workers keep their own
+/// cursors and resume from the stream head (documented limitation).
+pub type CursorRegistry = Arc<Mutex<BTreeMap<u64, (u64, u64)>>>;
 
 /// Where a worker's shard lives (ISSUE 3).
 ///
@@ -58,6 +70,29 @@ impl WorkerSource {
             WorkerSource::Pool(p) => p.d(),
         }
     }
+
+    /// Install a corruption-quarantine policy (ISSUE 7) on every
+    /// underlying [`ShardReader`] — store reads then degrade (skip
+    /// quarantined chunks under the budget) instead of failing strict.
+    /// No-op for in-memory sources.
+    pub fn set_fault_policy(&mut self, policy: QuarantinePolicy) {
+        match self {
+            WorkerSource::Memory(_) => {}
+            WorkerSource::Store(r) => r.set_fault_policy(policy),
+            WorkerSource::Pool(p) => p.set_fault_policy(policy),
+        }
+    }
+
+    /// Advance the stream cursor as `windows` iterations would
+    /// (arithmetic only — no I/O).  Memory sources are a no-op: their
+    /// cursor lives in [`run_worker`]'s own offset arithmetic.
+    pub fn fast_forward(&mut self, windows: u64) {
+        match self {
+            WorkerSource::Memory(_) => {}
+            WorkerSource::Store(r) => r.fast_forward(windows),
+            WorkerSource::Pool(p) => p.fast_forward(windows),
+        }
+    }
 }
 
 /// The shared shard-adoption inbox (ISSUE 6): departed workers'
@@ -83,13 +118,64 @@ pub struct StorePool {
     /// `window_rows`), set by `configure`.
     chunk_rows: usize,
     d: usize,
+    /// Quarantine policy applied to every held *and adopted* reader
+    /// (ISSUE 7), so degraded mode survives shard adoption.
+    policy: Option<QuarantinePolicy>,
 }
 
 impl StorePool {
     pub fn new(worker_id: usize, reader: ShardReader, inbox: ShardInbox) -> Self {
-        let d = reader.d();
-        let chunk_rows = reader.chunk_rows();
-        Self { worker_id, readers: vec![reader], inbox, next: 0, chunk_rows, d }
+        Self::from_readers(worker_id, vec![reader], inbox)
+    }
+
+    /// Pool over an explicit reader group — a logically-repartitioned
+    /// worker streams several chunk-restricted readers round-robin
+    /// (ISSUE 7, [`crate::data::store::ShardSet::reader_group`]).
+    pub fn from_readers(
+        worker_id: usize,
+        readers: Vec<ShardReader>,
+        inbox: ShardInbox,
+    ) -> Self {
+        assert!(!readers.is_empty(), "a store pool needs at least one reader");
+        let d = readers[0].d();
+        let chunk_rows = readers[0].chunk_rows();
+        Self { worker_id, readers, inbox, next: 0, chunk_rows, d, policy: None }
+    }
+
+    /// Re-home the pool onto a run's shared shard inbox.  The
+    /// coordinator does this to pools built before the run existed
+    /// (pre-grouped repartition sources), so surrender/adopt spans
+    /// every pool worker of the run instead of a private dead-letter
+    /// inbox.
+    pub fn rehome(&mut self, inbox: ShardInbox) {
+        self.inbox = inbox;
+    }
+
+    /// Install a quarantine policy on every held reader and remember it
+    /// for readers adopted later.
+    pub fn set_fault_policy(&mut self, policy: QuarantinePolicy) {
+        for r in &mut self.readers {
+            r.set_fault_policy(policy.clone());
+        }
+        self.policy = Some(policy);
+    }
+
+    /// Advance the round-robin stream as `windows` iterations would
+    /// (arithmetic only): each held reader is forwarded by its share of
+    /// the windows, in rotation order.  Exact when the membership never
+    /// changed (the resume case: a freshly built pool holds exactly its
+    /// own shard); adoption and quarantine void the bitwise promise.
+    pub fn fast_forward(&mut self, windows: u64) {
+        if self.readers.is_empty() || windows == 0 {
+            return;
+        }
+        let k = self.readers.len() as u64;
+        for i in 0..self.readers.len() {
+            let idx = (self.next + i) % self.readers.len();
+            let share = windows / k + u64::from((i as u64) < windows % k);
+            self.readers[idx].fast_forward(share);
+        }
+        self.next = ((self.next as u64 + windows) % k) as usize;
     }
 
     /// Rows across the currently held shards (grows on adoption).
@@ -124,6 +210,9 @@ impl StorePool {
         let mut inbox = self.inbox.lock().unwrap();
         while let Some(mut r) = inbox.pop() {
             r.set_chunk_rows(self.chunk_rows);
+            if let Some(p) = &self.policy {
+                r.set_fault_policy(p.clone());
+            }
             log_info!(
                 "worker {}: adopted surrendered shard {} ({} rows) — \
                  rotation now holds {} shard(s)",
@@ -137,6 +226,12 @@ impl StorePool {
     }
 
     /// The next window, round-robin across held shards (adopting first).
+    ///
+    /// Error triage (ISSUE 7): a dry corruption budget or a strict
+    /// [`StoreFault::ChunkCorrupt`] propagates typed — corrupt data must
+    /// never be silently dropped from the rotation without accounting.
+    /// Everything else (a fully quarantined shard, plain I/O death)
+    /// keeps the pre-SH2 behavior: drop the shard, try the others.
     fn next_window(&mut self, out: &mut Dataset) -> Result<usize> {
         self.adopt();
         while !self.readers.is_empty() {
@@ -147,6 +242,12 @@ impl StorePool {
                     return Ok(k);
                 }
                 Err(e) => {
+                    if matches!(
+                        e.downcast_ref::<StoreFault>(),
+                        Some(StoreFault::BudgetDry { .. } | StoreFault::ChunkCorrupt { .. })
+                    ) {
+                        return Err(e);
+                    }
                     let r = self.readers.remove(self.next);
                     log_warn!(
                         "worker {}: shard {} read failed ({e:#}); dropped from \
@@ -210,6 +311,15 @@ pub struct WorkerProfile {
     /// (0 = auto: the coordinator splits `pool::threads()` across
     /// workers).  See `util::pool::with_budget`.
     pub threads: usize,
+    /// Shared stream-cursor registry (ISSUE 7): when set, the worker
+    /// records `(initial offset, consumed windows)` here before every
+    /// push, so checkpoints capture exact stream positions.
+    pub cursors: Option<CursorRegistry>,
+    /// Resume cursor from a checkpoint (ISSUE 7): `(initial offset,
+    /// consumed windows)`.  The worker re-seeds its stream from the
+    /// original offset and fast-forwards, instead of drawing a fresh
+    /// seeded start — the streamed half of bitwise τ=0 resume.
+    pub resume_cursor: Option<(u64, u64)>,
 }
 
 /// Run one worker until the server shuts down (or the profile makes it
@@ -231,7 +341,6 @@ pub fn run_worker(
 ) {
     let mut engine = factory(worker_id);
     let mut seen: u64 = 0;
-    let mut local_iter: u64 = 0;
     let mut crashed = false;
     let n = source.n();
     // Windowed iteration: store sources always stream chunks; memory
@@ -270,19 +379,38 @@ pub fn run_worker(
     // rotating a full-shard window is a no-op for coverage, and offset
     // 0 keeps a whole-shard store stream bitwise-identical to the
     // resident borrow (pinned by `tests/store_checkpoint.rs`).
-    let mut offset = if window_rows > 0 && window_rows < n {
+    //
+    // A resume cursor (ISSUE 7) overrides the fresh draw: the worker
+    // re-seeds from the checkpointed *initial* offset and fast-forwards
+    // by the consumed-window count, so the resumed stream serves
+    // exactly the windows the uninterrupted run would have.
+    let fresh_offset = if window_rows > 0 && window_rows < n {
         Pcg64::seeded(worker_id as u64 ^ 0x5EED).next_below(n as u64) as usize
     } else {
         0
     };
+    let (init_offset, start_iter) = match profile.resume_cursor {
+        Some((off, consumed)) => (off as usize, consumed),
+        None => (fresh_offset, 0),
+    };
+    let mut local_iter: u64 = start_iter;
+    // Memory sources keep their cursor here; store sources keep it in
+    // the reader (one copy of the cyclic arithmetic, in `data::store`).
+    let mut offset = if window_rows > 0 && n > 0 {
+        ((init_offset as u128 + start_iter as u128 * window_rows as u128) % n as u128) as usize
+    } else {
+        init_offset
+    };
     match &mut *source {
-        // The reader owns the stream cursor for store sources — one
-        // copy of the cyclic arithmetic, in `data::store`.
         WorkerSource::Store(reader) => {
             reader.set_chunk_rows(window_rows);
-            reader.seek_to(offset);
+            reader.seek_to(init_offset);
+            reader.fast_forward(start_iter);
         }
-        WorkerSource::Pool(pool) => pool.configure(window_rows, offset),
+        WorkerSource::Pool(pool) => {
+            pool.configure(window_rows, init_offset);
+            pool.fast_forward(start_iter);
+        }
         WorkerSource::Memory(_) => {}
     }
     // First pull uses version 0 (initial θ) — workers must each push one
@@ -348,6 +476,13 @@ pub fn run_worker(
             grad: res.grad,
             compute_secs: sw.secs(),
         };
+        // Record the stream cursor *before* the push: the channel's
+        // happens-before then guarantees the server sees a registry in
+        // which this worker has consumed `local_iter + 1` windows
+        // whenever it has absorbed this push (ISSUE 7).
+        if let Some(reg) = &profile.cursors {
+            reg.lock().unwrap().insert(worker_id as u64, (init_offset as u64, local_iter + 1));
+        }
         if tx.send(ToServer::Push(push)).is_err() {
             break; // server gone
         }

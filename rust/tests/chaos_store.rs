@@ -1,0 +1,329 @@
+//! Chaos, storage edition (ISSUE 7): deterministic disk-fault injection
+//! ([`StoreFaultPlan`], ADVGPFI1 extended from sockets to disk) against
+//! full in-process training runs streaming from checksummed ADVGPSH2
+//! shard stores.
+//!
+//! The acceptance criteria pinned here:
+//!
+//! * a seeded corruption matrix over {flipped byte, scribbled chunk} is
+//!   detected at read time — every corrupt chunk is quarantined (counted
+//!   in [`ServerStats::store_quarantines`], in exact agreement with an
+//!   offline `verify_store` scrub) and the run still converges in
+//!   degraded mode under the corruption budget;
+//! * corruption denser than the budget fails **typed**
+//!   ([`StoreFault::BudgetDry`]) and ends the run promptly — never a
+//!   hang, never a poisoned gradient;
+//! * the same seed replays the same fault plan, the same applied-fault
+//!   trace, and the same per-reader quarantine trace;
+//! * a logically repartitioned store (W → W′ without rewriting bytes)
+//!   trains across its chunk-restricted reader groups.
+//!
+//! [`ServerStats::store_quarantines`]: advgp::ps::metrics::ServerStats
+//! [`StoreFault::BudgetDry`]: advgp::data::store::StoreFault
+
+use advgp::data::store::{verify_store, QuarantinePolicy, ShardSet, StoreFault};
+use advgp::data::{kmeans, synth, Dataset, Standardizer};
+use advgp::gp::{Theta, ThetaLayout};
+use advgp::grad::native_factory;
+use advgp::linalg::Mat;
+use advgp::ps::coordinator::{train_sources, TrainConfig};
+use advgp::ps::worker::{StorePool, WorkerProfile, WorkerSource};
+use advgp::ps::{StoreFaultEvent, StoreFaultPlan, StoreFaultRule};
+use advgp::util::rng::Pcg64;
+use std::collections::BTreeSet;
+use std::path::PathBuf;
+use std::sync::{Arc, Mutex};
+
+/// Standardized friedman problem + kmeans-initialized θ (the idiom
+/// shared with `rust/tests/chaos_ps.rs`).
+fn setup(n: usize, m: usize, seed: u64) -> (Dataset, Dataset, Theta, ThetaLayout) {
+    let mut ds = synth::friedman(n + 200, 4, 0.4, seed);
+    let mut rng = Pcg64::seeded(seed);
+    ds.shuffle(&mut rng);
+    let (mut train_ds, mut test_ds) = ds.split(200);
+    let st = Standardizer::fit(&train_ds);
+    st.apply(&mut train_ds);
+    st.apply(&mut test_ds);
+    let layout = ThetaLayout::new(m, 4);
+    let z = kmeans::kmeans(&train_ds.x, m, 15, &mut rng);
+    let theta = Theta::init(layout, &z);
+    (train_ds, test_ds, theta, layout)
+}
+
+/// Fresh ADVGPSH2 store under the test temp root.
+fn store_at(name: &str, ds: &Dataset, r: usize, chunk_rows: usize) -> ShardSet {
+    let dir = std::env::temp_dir().join("advgp_chaos_store").join(name);
+    let _ = std::fs::remove_dir_all(&dir);
+    ShardSet::create(&dir, ds, r, chunk_rows).unwrap()
+}
+
+fn one_thread() -> WorkerProfile {
+    WorkerProfile { threads: 1, ..Default::default() }
+}
+
+fn chaos_cfg(layout: ThetaLayout, max_updates: u64, workers: usize) -> TrainConfig {
+    let mut cfg = TrainConfig::new(layout);
+    cfg.tau = 2;
+    cfg.max_updates = max_updates;
+    cfg.eval_every_secs = 0.0;
+    cfg.profiles = vec![one_thread(); workers];
+    // The no-hang backstop: a run that livelocks under corruption is
+    // shut down typed by the watchdog, and the test still finishes.
+    cfg.time_limit_secs = Some(30.0);
+    cfg
+}
+
+fn assert_finite(theta: &[f64], what: &str) {
+    for (i, v) in theta.iter().enumerate() {
+        assert!(v.is_finite(), "{what}: θ[{i}] = {v} is not finite");
+    }
+}
+
+fn empty_win() -> Dataset {
+    Dataset { x: Mat::empty(), y: Vec::new() }
+}
+
+/// The chunk-level (quarantinable) event alphabet: no `TruncateAt`,
+/// which beheads a whole file at open time and is pinned separately in
+/// `ps/fault.rs`.  Each event appears exactly once per seeded plan, so
+/// no two rules can XOR-cancel each other.
+fn chunk_events() -> [StoreFaultEvent; 3] {
+    [
+        StoreFaultEvent::CorruptByte(3),
+        StoreFaultEvent::ScribbleChunk,
+        StoreFaultEvent::CorruptByte(17),
+    ]
+}
+
+/// The store's reader groups lowered to worker sources, exactly as
+/// `run_advgp_store` does it (multi-reader groups pool round-robin; the
+/// coordinator re-homes the placeholder inbox).
+fn sources_of(set: &ShardSet) -> Vec<WorkerSource> {
+    set.reader_groups()
+        .unwrap()
+        .into_iter()
+        .enumerate()
+        .map(|(w, mut group)| {
+            if group.len() == 1 {
+                WorkerSource::Store(group.pop().unwrap())
+            } else {
+                WorkerSource::Pool(StorePool::from_readers(
+                    w,
+                    group,
+                    Arc::new(Mutex::new(Vec::new())),
+                ))
+            }
+        })
+        .collect()
+}
+
+/// The tentpole matrix: seeded chunk corruption against a live training
+/// run.  Every corrupt chunk must be caught at read time and
+/// quarantined — the run converges in degraded mode, and the server's
+/// quarantine count agrees *exactly* with an offline scrub of the same
+/// store (nothing double-counted, nothing missed, nothing corrupt ever
+/// reaching the gradient path).
+#[test]
+fn seeded_corruption_matrix_trains_degraded_within_the_budget() {
+    let (train_ds, _test, theta, layout) = setup(400, 6, 61);
+    let max_updates = 12;
+    // CI pins these seeds (.github/workflows/ci.yml): a failure here is
+    // replayable from the seed alone.
+    for (i, seed) in [0x57AB_0001u64, 0x57AB_0002].into_iter().enumerate() {
+        // 2 files × 200 rows, chunks of 25 → 8 chunks per file.
+        let set = store_at(&format!("matrix_{i}"), &train_ds, 2, 25);
+        let events = chunk_events();
+        let plan = StoreFaultPlan::seeded(seed, &events, 2, 8);
+        assert_eq!(
+            plan,
+            StoreFaultPlan::seeded(seed, &events, 2, 8),
+            "same seed must draw the same plan"
+        );
+        let trace = plan.apply(set.dir()).unwrap();
+        assert!(!trace.is_empty(), "seed {seed:#x}: nothing applied");
+        // Ground truth from the offline scrub: the distinct chunks the
+        // plan actually corrupted.
+        let report = verify_store(set.dir()).unwrap();
+        let corrupt = report.total_corrupt();
+        assert!(corrupt >= 1, "seed {seed:#x}: scrub found the store clean");
+        assert!(!report.clean());
+
+        let cfg = chaos_cfg(layout, max_updates, 2);
+        let run = train_sources(
+            &cfg,
+            theta.data.clone(),
+            sources_of(&set),
+            native_factory(layout),
+            None,
+        );
+        assert_eq!(
+            run.stats.updates, max_updates,
+            "seed {seed:#x}: degraded-mode run must still converge \
+             ({} corrupt chunk(s) ≤ budget)",
+            corrupt
+        );
+        assert_finite(&run.theta, &format!("seed {seed:#x} degraded"));
+        // Each reader owns its file for the whole run and quarantines a
+        // chunk exactly once, so the session count equals the scrub's.
+        assert_eq!(
+            run.stats.store_quarantines, corrupt as u64,
+            "seed {seed:#x}: quarantine count must match the offline scrub"
+        );
+    }
+}
+
+/// Corruption denser than the budget: every chunk of both files
+/// scribbled.  At the reader level the failure is typed
+/// ([`StoreFault::BudgetDry`]); at the run level both workers depart
+/// and the run ends promptly with zero updates — corrupt data never
+/// reaches the gradient path, and nothing hangs until the watchdog.
+#[test]
+fn corruption_beyond_the_budget_fails_typed_and_ends_the_run() {
+    let (train_ds, _test, theta, layout) = setup(400, 6, 63);
+    // 2 files × 200 rows, chunks of 16 → 13 chunks per file, all
+    // corrupted: the default budget of 8 runs dry with no verified
+    // read ever refilling it.
+    let set = store_at("budget_dry", &train_ds, 2, 16);
+    let rules: Vec<StoreFaultRule> = (0..2)
+        .flat_map(|f| {
+            (0..13).map(move |c| StoreFaultRule {
+                file: f,
+                chunk: c,
+                event: StoreFaultEvent::ScribbleChunk,
+            })
+        })
+        .collect();
+    let applied = StoreFaultPlan::new(rules.clone()).apply(set.dir()).unwrap();
+    assert_eq!(applied.len(), rules.len());
+
+    // Reader level: the failure is the typed budget error, not a panic
+    // and not silently empty data.
+    let mut r = set.reader(0).unwrap();
+    r.set_fault_policy(QuarantinePolicy::new_default());
+    let err = r.next_window(&mut empty_win()).unwrap_err();
+    match err.downcast_ref::<StoreFault>() {
+        Some(StoreFault::BudgetDry { max, .. }) => assert_eq!(*max, 8),
+        other => panic!("expected BudgetDry, got {other:?} ({err:#})"),
+    }
+
+    // Run level: both workers hit the dry budget on their first window,
+    // leave, and the run ends long before the 30 s watchdog with no
+    // update ever aggregated from poisoned bytes.
+    let cfg = chaos_cfg(layout, 12, 2);
+    let run = train_sources(
+        &cfg,
+        theta.data.clone(),
+        sources_of(&set),
+        native_factory(layout),
+        None,
+    );
+    assert_eq!(run.stats.updates, 0, "no update may form from a poisoned store");
+    assert_eq!(run.stats.pushes, 0);
+    assert!(
+        run.wall_secs < 29.0,
+        "the run must end typed, not be shot by the watchdog ({:.1}s)",
+        run.wall_secs
+    );
+    assert!(run.stats.leaves >= 1, "departing workers must be observed");
+    assert!(
+        run.stats.store_quarantines >= 8,
+        "every budget token spent is a counted quarantine (got {})",
+        run.stats.store_quarantines
+    );
+}
+
+/// Reproducibility, end to end: the same seed draws the same plan,
+/// applies the same fault trace to identical stores, and a degraded
+/// reader pass over each store quarantines the same chunks in the same
+/// order — every chaos failure is replayable from its seed alone.
+#[test]
+fn same_seed_replays_the_same_quarantine_trace() {
+    let ds = synth::friedman(240, 3, 0.3, 9);
+    let run_once = |name: &str| -> (Vec<StoreFaultRule>, Vec<Vec<usize>>) {
+        // 2 files × 120 rows, chunks of 15 → 8 chunks per file.
+        let set = store_at(name, &ds, 2, 15);
+        let plan = StoreFaultPlan::seeded(0xABAD_D15C, &chunk_events(), 2, 8);
+        let applied = plan.apply(set.dir()).unwrap();
+        let quarantines = (0..set.r())
+            .map(|k| {
+                let mut r = set.reader(k).unwrap();
+                r.set_fault_policy(QuarantinePolicy::new_default());
+                // One full-shard window walks every chunk, quarantining
+                // all corrupt ones in encounter order.
+                r.set_chunk_rows(r.n());
+                r.next_window(&mut empty_win()).unwrap();
+                r.quarantine_trace()
+            })
+            .collect();
+        (applied, quarantines)
+    };
+    let (trace_a, quar_a) = run_once("replay_a");
+    let (trace_b, quar_b) = run_once("replay_b");
+    assert!(!trace_a.is_empty());
+    assert_eq!(trace_a, trace_b, "same seed must apply the same fault trace");
+    assert_eq!(quar_a, quar_b, "same seed must replay the same quarantine trace");
+    assert!(
+        quar_a.iter().map(Vec::len).sum::<usize>() >= 1,
+        "the degraded pass must have quarantined something"
+    );
+    // The quarantined chunks are exactly the applied plan's targets.
+    let planned: BTreeSet<(usize, usize)> =
+        trace_a.iter().map(|r| (r.file, r.chunk)).collect();
+    let seen: BTreeSet<(usize, usize)> = quar_a
+        .iter()
+        .enumerate()
+        .flat_map(|(f, cs)| cs.iter().map(move |&c| (f, c)))
+        .collect();
+    assert_eq!(seen, planned);
+}
+
+/// Logical repartitioning (W → W′ without rewriting shard bytes): a
+/// 2-file store remapped to 3 workers hands out chunk-restricted reader
+/// groups that cover every row exactly once, and a full training run
+/// over those groups converges.
+#[test]
+fn repartitioned_store_trains_across_chunk_restricted_reader_groups() {
+    let (train_ds, _test, theta, layout) = setup(400, 6, 67);
+    // 2 files × 200 rows, chunks of 25 → 16 chunks total.
+    let mut set = store_at("repartition", &train_ds, 2, 25);
+    let dir: PathBuf = set.dir().to_path_buf();
+    let shard_bytes = |dir: &PathBuf| -> Vec<Vec<u8>> {
+        (0..2)
+            .map(|k| std::fs::read(dir.join(format!("shard_{k:03}.bin"))).unwrap())
+            .collect()
+    };
+    let before = shard_bytes(&dir);
+    set.repartition(3).unwrap();
+    assert_eq!(
+        shard_bytes(&dir),
+        before,
+        "repartitioning must not rewrite shard bytes"
+    );
+    // The remap survives the manifest roundtrip.
+    let set = ShardSet::open(set.dir()).unwrap();
+    assert_eq!((set.r(), set.logical_workers()), (2, 3));
+    let groups = set.reader_groups().unwrap();
+    assert_eq!(groups.len(), 3);
+    assert!(
+        groups.iter().any(|g| g.len() > 1),
+        "16 chunks over 3 workers must give some worker a two-file group"
+    );
+    let rows: usize = groups.iter().flatten().map(|r| r.n()).sum();
+    assert_eq!(rows, 400, "the groups must cover every row exactly once");
+
+    let max_updates = 10;
+    let cfg = chaos_cfg(layout, max_updates, 3);
+    let run = train_sources(
+        &cfg,
+        theta.data.clone(),
+        sources_of(&set),
+        native_factory(layout),
+        None,
+    );
+    assert_eq!(
+        run.stats.updates, max_updates,
+        "training over the repartitioned groups must converge"
+    );
+    assert_finite(&run.theta, "repartitioned");
+    assert_eq!(run.stats.store_quarantines, 0, "the store is intact");
+}

@@ -1,6 +1,9 @@
 //! Integration: out-of-core shard store, checkpoint/restore, and
 //! elastic membership (ISSUE 3) — training end-to-end from on-disk
-//! shards, exact resume, and mid-run worker join.
+//! shards, exact resume, and mid-run worker join.  ISSUE 7 extends the
+//! exact-resume contract to *streamed* stores: per-worker `(offset,
+//! local_iter)` cursors ride in the checkpoint, so τ=0 resume is
+//! bitwise even when windows are smaller than shards.
 
 use advgp::data::store::{ShardReader, ShardSet};
 use advgp::data::{kmeans, synth, Dataset, Standardizer};
@@ -545,6 +548,109 @@ fn lineage_manifest_chains_runs_and_survives_gc() {
     let prov = checkpoint::provenance(&ckdir).unwrap();
     assert!(prov.contains("fresh") && prov.contains("resumed from v8"), "{prov}");
     assert!(prov.contains(&records[0].run_id) && prov.contains(&records[1].run_id));
+}
+
+/// ISSUE 7's acceptance pin: τ=0 resume of a *streamed* store run is
+/// bitwise end-to-end even when windows are smaller than shards.  The
+/// checkpoint's per-worker `(offset, local_iter)` cursors put every
+/// resumed reader exactly where the uninterrupted run's reader would
+/// be; without them the resumed workers would restart their streams and
+/// feed different windows from update 16 on.
+#[test]
+fn streamed_resume_matches_uninterrupted_run_bitwise() {
+    let sdir = tdir("stream_traj_store");
+    let ckdir = tdir("stream_traj_ck");
+    let (train_ds, _test, theta, layout) = setup(400, 6, 11);
+    // Chunks well below the 200-row shards: windows wrap mid-shard, so
+    // the trajectory genuinely depends on where each stream stands.
+    let set = ShardSet::create(&sdir, &train_ds, 2, 64).unwrap();
+    let run = |max: u64, every: u64, resume: Option<Checkpoint>| {
+        let mut cfg = TrainConfig::new(layout);
+        cfg.tau = 0; // sync: aggregation identical every update
+        cfg.max_updates = max;
+        cfg.eval_every_secs = 0.0;
+        cfg.checkpoint_every = every;
+        cfg.checkpoint_dir = (every > 0).then(|| ckdir.clone());
+        cfg.resume_from = resume;
+        train_sources(
+            &cfg,
+            theta.data.clone(),
+            store_sources(&set),
+            native_factory(layout),
+            None,
+        )
+    };
+    let direct = run(30, 0, None);
+    let _leg1 = run(15, 15, None);
+    let ck = Checkpoint::load_latest(&ckdir).unwrap().unwrap();
+    assert_eq!(ck.version, 15);
+    assert_eq!(ck.cursors.len(), 2, "both stream cursors sealed");
+    for &(_w, _off, windows) in &ck.cursors {
+        assert_eq!(windows, 15, "τ=0 lockstep: 15 windows per worker");
+    }
+    let resumed = run(30, 0, Some(ck));
+    assert_eq!(resumed.stats.updates, 30);
+    for (i, (a, b)) in direct.theta.iter().zip(&resumed.theta).enumerate() {
+        assert_eq!(
+            a.to_bits(),
+            b.to_bits(),
+            "θ[{i}] diverged: straight {a} vs streamed-resumed {b}"
+        );
+    }
+}
+
+/// Skip-on-corrupt for sharded checkpoint directories (ISSUE 7
+/// satellite): when one slice's newest file is corrupt,
+/// `load_latest_sharded` falls back to the newest version *every* slice
+/// can still reassemble instead of failing the resume.
+#[test]
+fn sharded_resume_skips_version_with_corrupt_slice() {
+    let ckdir = tdir("sharded_corrupt");
+    let (train_ds, _test, theta, layout) = setup(400, 6, 19);
+    let run = |max: u64, resume: Option<Checkpoint>| {
+        let mut cfg = TrainConfig::new(layout);
+        cfg.servers = 2;
+        cfg.tau = 4;
+        cfg.max_updates = max;
+        cfg.eval_every_secs = 0.0;
+        cfg.profiles = vec![
+            WorkerProfile { threads: 1, ..Default::default() },
+            WorkerProfile { threads: 1, ..Default::default() },
+        ];
+        // Cadence == max: exactly one synchronous seal per leg, so both
+        // slices are guaranteed the same two versions across the legs.
+        cfg.checkpoint_every = max;
+        cfg.checkpoint_dir = Some(ckdir.clone());
+        cfg.resume_from = resume;
+        train(
+            &cfg,
+            theta.data.clone(),
+            train_ds.shard(2),
+            native_factory(layout),
+            None,
+        )
+    };
+    run(20, None);
+    let ck20 = Checkpoint::load_latest_sharded(&ckdir).unwrap().unwrap();
+    assert_eq!(ck20.version, 20);
+    run(35, Some(ck20.clone()));
+    assert_eq!(
+        Checkpoint::load_latest_sharded(&ckdir).unwrap().unwrap().version,
+        35
+    );
+    // Scribble slice 1's v35 file: that version can no longer be
+    // reassembled, and the loader must fall back to v20 — the newest
+    // version still intact in *every* slice.
+    let bad = ckdir.join("slice_01_of_02").join("ck_000000000035.bin");
+    assert!(bad.is_file(), "expected slice seal at {}", bad.display());
+    std::fs::write(&bad, b"not a checkpoint").unwrap();
+    let fell_back = Checkpoint::load_latest_sharded(&ckdir).unwrap().unwrap();
+    assert_eq!(fell_back.version, 20, "newest common intact version wins");
+    // The fallback is the same state the v20 seal held.
+    assert_eq!(fell_back.theta.len(), ck20.theta.len());
+    for (a, b) in fell_back.theta.iter().zip(&ck20.theta) {
+        assert_eq!(a.to_bits(), b.to_bits(), "fallback must be the v20 state");
+    }
 }
 
 /// Lineage round-trips through an empty/missing directory gracefully.
