@@ -1,0 +1,124 @@
+//! §Read-path fleet benchmark (ADVGPSV1, ISSUE 8): replicas over
+//! loopback TCP under open-loop load.
+//!
+//! One short τ=0 training run over the networked transport publishes θ
+//! to subscribed replicas; after the trainer's clean SHUTDOWN the
+//! replicas keep serving the final posterior (that is the contract),
+//! and `serve::loadgen` offers a fixed request schedule against fleets
+//! of 1 and 2 replicas.  Results merge into `BENCH_serve.json`
+//! (schema 1 — `scripts/bench_diff.py` diffs it like the other bench
+//! dumps): rows/sec plus exact p50/p99/p999 per fleet size.
+//!
+//! Open loop means latency is measured from each request's *scheduled*
+//! send time, so a stalled replica makes subsequent requests late
+//! instead of silently slowing the offered rate (no coordinated
+//! omission).
+
+use advgp::data::{kmeans, synth, Standardizer};
+use advgp::gp::{Theta, ThetaLayout};
+use advgp::grad::native_factory;
+use advgp::ps::coordinator::{train_remote, TrainConfig};
+use advgp::ps::net::{remote_worker_loop, NetServer};
+use advgp::ps::worker::{WorkerProfile, WorkerSource};
+use advgp::serve::{loadgen, LoadgenConfig, Replica, ReplicaConfig};
+use advgp::util::rng::Pcg64;
+use std::time::Duration;
+
+const OUT_PATH: &str = "BENCH_serve.json";
+const UPDATES: u64 = 12;
+
+fn main() {
+    // ---- a small standardized problem + θ₀ ----
+    let mut ds = synth::friedman(1200, 4, 0.4, 7);
+    let mut rng = Pcg64::seeded(7);
+    ds.shuffle(&mut rng);
+    let st = Standardizer::fit(&ds);
+    st.apply(&mut ds);
+    let (m, d) = (30usize, ds.d());
+    let layout = ThetaLayout::new(m, d);
+    let z = kmeans::kmeans(&ds.x, m, 10, &mut rng);
+    let theta0 = Theta::init(layout, &z);
+
+    // ---- train over loopback with replicas subscribed ----
+    let net = NetServer::bind("127.0.0.1:0").expect("bind θ server");
+    let addr = net.local_addr().to_string();
+    let shards = ds.shard(2);
+    // Trainer first: its accept loop answers the replica subscriptions.
+    // Replicas before workers: training cannot finish (and tear the
+    // publish stream down) until the workers join, so the subscriptions
+    // are guaranteed to see the run.
+    let trainer = {
+        let theta0 = theta0.data.clone();
+        std::thread::spawn(move || {
+            let mut cfg = TrainConfig::new(layout);
+            cfg.tau = 0;
+            cfg.max_updates = UPDATES;
+            cfg.eval_every_secs = 0.0;
+            train_remote(&cfg, theta0, net, 2, None)
+        })
+    };
+    let mk_replica = || {
+        Replica::start(
+            "127.0.0.1:0",
+            std::slice::from_ref(&addr),
+            ReplicaConfig::default(),
+        )
+        .expect("start replica")
+    };
+    let replicas = vec![mk_replica(), mk_replica()];
+    let workers: Vec<_> = shards
+        .into_iter()
+        .enumerate()
+        .map(|(k, shard)| {
+            let addr = addr.clone();
+            std::thread::spawn(move || {
+                remote_worker_loop(
+                    &addr,
+                    Some(k),
+                    WorkerSource::Memory(shard),
+                    native_factory(layout),
+                    WorkerProfile { threads: 1, ..Default::default() },
+                )
+                .expect("worker run")
+            })
+        })
+        .collect();
+    let run = trainer.join().expect("trainer thread");
+    for w in workers {
+        w.join().expect("worker thread");
+    }
+    println!(
+        "perf_serve: trained {} update(s) (m={m} d={d}); replicas converging…",
+        run.stats.updates
+    );
+    for (i, r) in replicas.iter().enumerate() {
+        assert!(
+            r.wait_version(run.stats.updates, Duration::from_secs(30)),
+            "replica {i} never reached θ v{}",
+            run.stats.updates
+        );
+    }
+
+    // ---- offered load against fleets of 1 and 2 replicas ----
+    let addrs: Vec<String> =
+        replicas.iter().map(|r| r.predict_addr().to_string()).collect();
+    let cfg = LoadgenConfig {
+        qps: 400.0,
+        requests: 1200,
+        rows_per_request: 8,
+        seed: 42,
+    };
+    for n in [1usize, 2] {
+        let fleet = &addrs[..n];
+        let sb = loadgen::run(fleet, &cfg).expect("loadgen run");
+        let name = format!("serve/replicas={n}");
+        println!("  {name}: {}", sb.summary());
+        assert_eq!(sb.total_rejects(), 0, "{name}: healthy fleet rejected traffic");
+        sb.write_bench(OUT_PATH, &name, &cfg, n).expect("write bench JSON");
+    }
+    for r in replicas {
+        let report = r.shutdown();
+        println!("  replica report: {}", report.summary());
+    }
+    println!("wrote {OUT_PATH}");
+}

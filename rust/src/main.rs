@@ -10,6 +10,11 @@
 //!   store      offline shard-store tools (ISSUE 7): verify (full
 //!              scrub), migrate (ADVGPSH1 → SH2 in place), repartition
 //!              (remap chunk ranges to a new worker count)
+//!   serve-replica  stateless read-path replica (ADVGPSV1): subscribe
+//!              to a serve-ps fleet's publish streams, rebuild the
+//!              posterior locally, answer PREDICT sessions
+//!   loadgen    open-loop load generator + scoreboard against one or
+//!              more replicas; merge-writes BENCH_serve.json
 //!   datagen    write a synthetic dataset (flight|taxi|friedman) as CSV
 //!   artifacts  list the AOT artifact manifest
 //!   smoke      PJRT round-trip smoke test on an HLO text file
@@ -35,13 +40,16 @@ fn main() -> Result<()> {
         Some("train") => cmd_train(&args),
         Some("serve-ps") => cmd_serve_ps(&args),
         Some("worker") => cmd_worker(&args),
+        Some("serve-replica") => cmd_serve_replica(&args),
+        Some("loadgen") => cmd_loadgen(&args),
         Some("store") => cmd_store(&args),
         Some("datagen") => cmd_datagen(&args),
         Some("artifacts") => cmd_artifacts(&args),
         Some("smoke") => cmd_smoke(&args),
         _ => {
             eprintln!(
-                "usage: advgp <train|serve-ps|worker|store|datagen|artifacts|smoke> [--flags]\n\
+                "usage: advgp <train|serve-ps|worker|serve-replica|loadgen|store|datagen|\
+                 artifacts|smoke> [--flags]\n\
                  \n\
                  train:    --data <csv|flight|taxi|friedman> [--n 50000] [--m 100]\n\
                  \x20         [--method advgp|svigp|distgp-gd|distgp-lbfgs|linear]\n\
@@ -58,6 +66,13 @@ fn main() -> Result<()> {
                  \x20         (one address per slice server of a partitioned fleet)\n\
                  \x20         [--worker-id id] [--chunk-rows n] [--max-rows n]\n\
                  \x20         [--threads n] [--straggle-ms n]\n\
+                 serve-replica: --connect host:port[,host:port…] (the serve-ps fleet)\n\
+                 \x20         [--listen 127.0.0.1:0] [--staleness-secs 10]\n\
+                 \x20         [--max-inflight-rows 4096] [--batch-rows 256]\n\
+                 \x20         [--batch-delay-ms 2] [--linger-secs 0]\n\
+                 loadgen:  --replicas host:port[,host:port…] [--qps 500]\n\
+                 \x20         [--requests 2000] [--rows 8] [--seed 42]\n\
+                 \x20         [--bench-out BENCH_serve.json] [--name serve/replicas=N]\n\
                  store:    <verify|migrate|repartition> --store dir [--workers W]\n\
                  \x20         verify: scrub every chunk checksum, per-chunk report\n\
                  \x20         migrate: upgrade ADVGPSH1 shards to SH2 in place\n\
@@ -659,6 +674,95 @@ fn cmd_worker(args: &Args) -> Result<()> {
         }
     };
     println!("worker {worker_id}: run complete (server shut down or this worker departed)");
+    Ok(())
+}
+
+/// `advgp serve-replica`: a stateless read-path replica (ADVGPSV1).
+/// Subscribes to every slice server of a `serve-ps` fleet, mirrors the
+/// publish streams into a local posterior cache, and answers PREDICT
+/// sessions on `--listen`.  Exits `--linger-secs` after the training
+/// fleet announces a clean end (so a scripted smoke terminates); kill
+/// the process to stop earlier.
+fn cmd_serve_replica(args: &Args) -> Result<()> {
+    use advgp::serve::{Replica, ReplicaConfig};
+    let connect = args.get("connect").context(
+        "--connect host:port (or a comma-separated list, one address per \
+         slice server of the training fleet) required",
+    )?;
+    let addrs: Vec<String> = connect
+        .split(',')
+        .map(|a| a.trim().to_string())
+        .filter(|a| !a.is_empty())
+        .collect();
+    anyhow::ensure!(!addrs.is_empty(), "--connect: no addresses given");
+    let mut cfg = ReplicaConfig::default();
+    cfg.staleness_budget =
+        std::time::Duration::from_secs_f64(args.f64_or("staleness-secs", 10.0));
+    cfg.max_inflight_rows = args.usize_or("max-inflight-rows", cfg.max_inflight_rows);
+    cfg.batch.max_rows = args.usize_or("batch-rows", cfg.batch.max_rows);
+    cfg.batch.max_delay =
+        std::time::Duration::from_millis(args.u64_or("batch-delay-ms", 2));
+    let listen = args.str_or("listen", "127.0.0.1:0");
+    let replica = Replica::start(listen, &addrs, cfg)?;
+    println!(
+        "serve-replica: predicts on {} — subscribed to {} slice server(s) \
+         [{}], θ v{}",
+        replica.predict_addr(),
+        addrs.len(),
+        addrs.join(", "),
+        replica.version().unwrap_or(0)
+    );
+    // Serve until the trainer ends cleanly, then linger for stragglers.
+    while !replica.wait_trainer_end(std::time::Duration::from_secs(3600)) {}
+    let linger = args.f64_or("linger-secs", 0.0);
+    println!(
+        "serve-replica: training fleet finished (θ v{}) — serving the final \
+         posterior for {linger:.0}s more",
+        replica.version().unwrap_or(0)
+    );
+    std::thread::sleep(std::time::Duration::from_secs_f64(linger));
+    let report = replica.shutdown();
+    println!("serve-replica: done — {}", report.summary());
+    Ok(())
+}
+
+/// `advgp loadgen`: offered-load measurement of a replica fleet.  Open
+/// loop (latency is measured from each request's *scheduled* instant),
+/// exact p50/p99/p999, optional merge-write into `BENCH_serve.json`.
+fn cmd_loadgen(args: &Args) -> Result<()> {
+    use advgp::serve::{loadgen, LoadgenConfig};
+    let replicas = args.get("replicas").context(
+        "--replicas host:port (or a comma-separated list of replica \
+         predict addresses) required",
+    )?;
+    let addrs: Vec<String> = replicas
+        .split(',')
+        .map(|a| a.trim().to_string())
+        .filter(|a| !a.is_empty())
+        .collect();
+    anyhow::ensure!(!addrs.is_empty(), "--replicas: no addresses given");
+    let cfg = LoadgenConfig {
+        qps: args.f64_or("qps", 500.0),
+        requests: args.usize_or("requests", 2000),
+        rows_per_request: args.usize_or("rows", 8),
+        seed: args.u64_or("seed", 42),
+    };
+    println!(
+        "loadgen: offering {} request(s) ({} row(s) each) at {} req/s across \
+         {} replica(s)",
+        cfg.requests,
+        cfg.rows_per_request,
+        cfg.qps,
+        addrs.len()
+    );
+    let sb = loadgen::run(&addrs, &cfg)?;
+    println!("loadgen: {}", sb.summary());
+    if let Some(out) = args.get("bench-out") {
+        let default_name = format!("serve/replicas={}", addrs.len());
+        let name = args.str_or("name", &default_name);
+        sb.write_bench(out, name, &cfg, addrs.len())?;
+        println!("loadgen: wrote entry {name:?} to {out}");
+    }
     Ok(())
 }
 

@@ -173,6 +173,31 @@ impl Published {
         }
     }
 
+    /// [`Published::wait_newer_meta`] with **draining** semantics: a
+    /// version newer than `seen` is delivered even when shutdown has
+    /// already been signalled — `None` means shutdown *and* nothing
+    /// newer to hand out.  `wait_newer_meta` checks shutdown first,
+    /// which is right for workers (a gradient against a dead run is
+    /// wasted compute) but loses the final θ when the server's last
+    /// publish and its shutdown race; the serving path's subscriber
+    /// fan-out (ADVGPSV1) must deliver that final version, so replicas
+    /// end bitwise-equal to the trainer.
+    pub fn wait_newer_draining(
+        &self,
+        seen: u64,
+    ) -> Option<(u64, Arc<Vec<f64>>, PublishMeta)> {
+        let mut g = self.inner.lock().unwrap();
+        loop {
+            if g.version > seen {
+                return Some((g.version, g.theta.clone(), g.meta));
+            }
+            if g.shutdown {
+                return None;
+            }
+            g = self.cv.wait(g).unwrap();
+        }
+    }
+
     /// Non-blocking snapshot (evaluator side).
     pub fn snapshot(&self) -> (u64, Arc<Vec<f64>>, bool) {
         let g = self.inner.lock().unwrap();
@@ -260,6 +285,25 @@ mod tests {
         p.publish(6, vec![3.0]);
         let (_, _, got, _) = p.snapshot_meta();
         assert_eq!(got, PublishMeta::default());
+    }
+
+    /// The draining wait delivers a final publish that raced shutdown
+    /// (the worker-side wait drops it by design), then reports the
+    /// shutdown.
+    #[test]
+    fn draining_wait_delivers_the_final_version_before_shutdown() {
+        let p = Published::new(vec![0.0]);
+        // Publish and shutdown already both applied — the racing case.
+        p.publish(3, vec![9.0]);
+        p.shutdown();
+        // Worker semantics: shutdown wins, the final version is lost.
+        assert!(p.wait_newer_meta(2).is_none());
+        // Draining semantics: the final version is delivered first …
+        let (v, th, _) = p.wait_newer_draining(2).unwrap();
+        assert_eq!(v, 3);
+        assert_eq!(*th, vec![9.0]);
+        // … and only then does the wait report shutdown.
+        assert!(p.wait_newer_draining(3).is_none());
     }
 
     /// A joiner's delay wait must end immediately on shutdown (not sit

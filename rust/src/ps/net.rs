@@ -47,6 +47,17 @@
 //!   outage budget, while held-back gradient fragments queue behind
 //!   the repair instead of being lost.
 //!
+//! * **Serving side** (ADVGPSV1, ISSUE 8) — a connection whose first
+//!   frame is SUBSCRIBE instead of HELLO is a *read-only* posterior
+//!   subscription: no worker id, no gate clock, no registry entry.  The
+//!   server answers with a full POSTERIOR-SYNC of its θ slice and fans
+//!   out every later version through
+//!   [`super::Published::wait_newer_draining`] — draining, so the final
+//!   publish of a run reaches subscribers even when it races SHUTDOWN.
+//!   [`crate::serve::replica`] is the client: it assembles the slice
+//!   streams exactly like [`ShardedWorkerHandle`] and serves PREDICT
+//!   traffic from the rebuilt posterior.
+//!
 //! Fault semantics (ISSUE 6): corrupt or truncated frames make the
 //! server answer `ERROR` and drop that one connection — never panic
 //! the slice loop — counted into
@@ -425,6 +436,13 @@ fn handle_conn(
     let hello = wire::read_frame_capped(&mut reader, &mut scratch, MAX_HANDSHAKE_FRAME_LEN);
     let (offered, want) = match hello {
         Ok(Frame::Hello { proto, worker }) => (proto, worker),
+        Ok(Frame::Subscribe { proto, scope }) => {
+            // ADVGPSV1: a read-only posterior subscription — no worker
+            // id, no registry entry, no gate clock.  Handled on this
+            // thread until the stream ends.
+            handle_subscriber(reader, writer, published, opts, proto, scope, &peer, scratch);
+            return;
+        }
         Ok(f) => {
             let msg = format!("expected HELLO, got kind {:#04x}", f.kind());
             send_error_counted(&writer, &opts.faults, ERR_MALFORMED, &msg);
@@ -719,6 +737,165 @@ fn handle_conn(
         "ps::net: worker {id} ({peer}) disconnected{}",
         if exited { "" } else { " without EXIT — clock retired" }
     );
+}
+
+/// One read-only subscriber connection, server side (ADVGPSV1): answer
+/// the SUBSCRIBE handshake with a full POSTERIOR-SYNC of the current θ
+/// slice, then fan out every subsequent version from a publisher thread
+/// while this thread polices the (PING/PONG-only) return stream.
+///
+/// Two deliberate differences from the worker path:
+/// * **No registry claim** — a subscriber has no gate clock, so its
+///   arrival, departure, or death changes nothing about the run; no
+///   `WorkerExit` is ever synthesized for it.
+/// * **Draining publish wait** — the fan-out uses
+///   [`Published::wait_newer_draining`], so a final publish that races
+///   shutdown still reaches every subscriber *before* the SHUTDOWN
+///   frame.  Workers deliberately drop that version (a gradient against
+///   a finished run is waste); a replica must not (its posterior would
+///   end one version behind the trainer, breaking bitwise parity).
+fn handle_subscriber(
+    mut reader: TcpStream,
+    writer: Arc<Mutex<TcpStream>>,
+    published: Arc<Published>,
+    opts: Arc<NetServeOpts>,
+    offered: u32,
+    scope: u8,
+    peer: &str,
+    mut scratch: Vec<u8>,
+) {
+    let layout = opts.layout;
+    let slice = &opts.slice;
+    if offered < PROTO_NT2 {
+        send_error_counted(
+            &writer,
+            &opts.faults,
+            ERR_PROTO,
+            &format!(
+                "ADVGPSV1 subscriptions require rev {PROTO_NT2}, client offered {offered}"
+            ),
+        );
+        return;
+    }
+    if scope != wire::SUBSCRIBE_POSTERIOR {
+        // Wrong endpoint, not a broken stream: a typed REJECT lets the
+        // client tell "dialed a θ server for predicts" from corruption.
+        let f = Frame::Reject {
+            id: 0,
+            code: wire::REJ_BAD_SCOPE,
+            message: "θ-slice servers serve posterior streams; dial a serving \
+                      replica for predict sessions"
+                .into(),
+        };
+        let _ = send_bytes(&writer, &f.encode());
+        return;
+    }
+    // Handshake reply: the current slice state, θ included — even if
+    // the run already shut down, this is the final posterior the
+    // subscriber came for (the SHUTDOWN frame follows right behind).
+    let (version, theta, meta, _) = published.snapshot_meta();
+    let (m, d) = (layout.m as u64, layout.d as u64);
+    let sync = wire::posterior_sync_frame_bytes(
+        m,
+        d,
+        slice.id as u64,
+        slice.n_slices as u64,
+        slice.range.start as u64,
+        slice.range.end as u64,
+        version,
+        meta,
+        &theta,
+    );
+    if send_bytes(&writer, &sync).is_err() {
+        return;
+    }
+    let heartbeat = opts.heartbeat;
+    let _ = reader.set_read_timeout(heartbeat);
+    log_info!(
+        "ps::net: subscriber joined from {peer} (slice {}, θ v{version})",
+        slice.id
+    );
+
+    // ---- posterior fan-out: one detached thread per subscription ----
+    let pub_w = Arc::clone(&writer);
+    let pub_published = Arc::clone(&published);
+    let pub_slice = slice.clone();
+    std::thread::spawn(move || {
+        let mut seen = version;
+        loop {
+            match pub_published.wait_newer_draining(seen) {
+                Some((v, th, meta)) => {
+                    let bytes = wire::posterior_sync_frame_bytes(
+                        m,
+                        d,
+                        pub_slice.id as u64,
+                        pub_slice.n_slices as u64,
+                        pub_slice.range.start as u64,
+                        pub_slice.range.end as u64,
+                        v,
+                        meta,
+                        &th,
+                    );
+                    if send_bytes(&pub_w, &bytes).is_err() {
+                        // Link gone (or write-timeout on a wedged
+                        // subscriber): kill the socket so the reader
+                        // side unblocks promptly.
+                        let _ = pub_w.lock().unwrap().shutdown(std::net::Shutdown::Both);
+                        return;
+                    }
+                    seen = v;
+                }
+                None => {
+                    let _ = send_bytes(&pub_w, &Frame::Shutdown.encode());
+                    return;
+                }
+            }
+        }
+    });
+
+    // ---- subscriber → server pump (this thread): PING/PONG only ----
+    // Capped reads: a subscriber's only legal frames are tiny, so its
+    // length prefix must never commit this server to a big allocation.
+    let mut pinged = false;
+    loop {
+        match wire::read_frame_event(&mut reader, &mut scratch, MAX_HANDSHAKE_FRAME_LEN) {
+            Ok(ReadEvent::Frame(Frame::Ping)) => {
+                pinged = false;
+                let _ = send_bytes(&writer, &Frame::Pong.encode());
+            }
+            Ok(ReadEvent::Frame(Frame::Pong)) => pinged = false,
+            Ok(ReadEvent::Frame(f)) => {
+                let msg =
+                    format!("unexpected kind {:#04x} on a posterior subscription", f.kind());
+                send_error_counted(&writer, &opts.faults, ERR_MALFORMED, &msg);
+                break;
+            }
+            Ok(ReadEvent::IdleTimeout) => {
+                if heartbeat.is_none() {
+                    continue;
+                }
+                if pinged || send_bytes(&writer, &Frame::Ping.encode()).is_err() {
+                    log_warn!(
+                        "ps::net: subscriber {peer} silent through PING + grace — \
+                         dropping the stream"
+                    );
+                    break;
+                }
+                pinged = true;
+            }
+            Ok(ReadEvent::Eof) => break, // clean close
+            Err(e) => {
+                log_warn!("ps::net: subscriber {peer} stream error: {e:#}");
+                let msg = format!("malformed stream: {e:#}");
+                send_error_counted(&writer, &opts.faults, ERR_MALFORMED, &msg);
+                break;
+            }
+        }
+    }
+    // Nothing to retire — a subscriber is read-only.  Kill the socket
+    // so the fan-out thread unwinds with it.
+    let _ = reader.shutdown(std::net::Shutdown::Both);
+    log_info!("ps::net: subscriber {peer} disconnected");
 }
 
 /// Worker-side heartbeat window: after this much publish-stream

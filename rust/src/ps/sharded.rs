@@ -227,6 +227,27 @@ impl ShardedPublished {
 /// θ bitwise; at τ > 0 fragments may be newer than the floor (the
 /// documented version-vector semantics).
 pub fn run_assembler(sharded: &ShardedPublished) {
+    run_assembler_inner(sharded, Published::wait_newer_meta)
+}
+
+/// [`run_assembler`] with **draining** slice waits
+/// ([`Published::wait_newer_draining`]): a slice's final publish is
+/// assembled even when it races that slice's shutdown.  Workers use the
+/// non-draining form (the last θ of a finished run buys them nothing);
+/// the serving replica ([`crate::serve::replica`]) must use this one,
+/// or its assembled view — and the posterior rebuilt from it — ends one
+/// version behind the trainer, breaking ADVGPSV1's bitwise parity.
+pub fn run_assembler_draining(sharded: &ShardedPublished) {
+    run_assembler_inner(sharded, Published::wait_newer_draining)
+}
+
+fn run_assembler_inner(
+    sharded: &ShardedPublished,
+    wait: impl Fn(
+        &Published,
+        u64,
+    ) -> Option<(u64, Arc<Vec<f64>>, super::messages::PublishMeta)>,
+) {
     let topo = &sharded.topology;
     let mut seen = sharded.assembled.snapshot().0;
     loop {
@@ -234,7 +255,7 @@ pub fn run_assembler(sharded: &ShardedPublished) {
         let mut floor_meta = super::messages::PublishMeta::default();
         let mut parts: Vec<Arc<Vec<f64>>> = Vec::with_capacity(topo.n_slices());
         for p in &sharded.slices {
-            match p.wait_newer_meta(seen) {
+            match wait(p, seen) {
                 Some((v, th, meta)) => {
                     if v < floor {
                         floor = v;
@@ -458,6 +479,41 @@ mod tests {
         slices[1].shutdown();
         h.join().unwrap();
         assert!(assembled.snapshot().2, "assembled view must observe shutdown");
+    }
+
+    /// The draining assembler delivers a floor whose slices all
+    /// published *before* shutting down — the publish+shutdown race the
+    /// worker-side assembler deliberately loses (ADVGPSV1 parity).
+    #[test]
+    fn draining_assembler_assembles_the_final_racing_version() {
+        let topo = Topology::partition(4, 2);
+        let assembled = Published::new(vec![0.0; 4]);
+        let sharded = ShardedPublished::new(topo, &[0.0; 4], assembled.clone());
+        // The race, pre-staged: both slices publish v1 and shut down
+        // before the assembler even starts.
+        for (p, val) in sharded.slices.iter().zip([1.0, 2.0]) {
+            p.publish(1, vec![val; 2]);
+            p.shutdown();
+        }
+        run_assembler_draining(&sharded);
+        let (v, th, sd) = assembled.snapshot();
+        assert_eq!(v, 1, "final racing version must be assembled");
+        assert_eq!(*th, vec![1.0, 1.0, 2.0, 2.0]);
+        assert!(sd, "shutdown still propagates after the drain");
+        // The non-draining assembler on the same pre-staged state drops
+        // v1 (shutdown wins) — pinning why the replica needs draining.
+        let assembled2 = Published::new(vec![0.0; 4]);
+        let sharded2 = ShardedPublished::new(
+            Topology::partition(4, 2),
+            &[0.0; 4],
+            assembled2.clone(),
+        );
+        for p in &sharded2.slices {
+            p.publish(1, vec![5.0; 2]);
+            p.shutdown();
+        }
+        run_assembler(&sharded2);
+        assert_eq!(assembled2.snapshot().0, 0, "worker semantics drop the race");
     }
 
     #[test]

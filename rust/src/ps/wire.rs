@@ -5,6 +5,11 @@
 //! heartbeat).  The two revisions share the stream magic and framing;
 //! HELLO's `proto` field negotiates which one a connection speaks (a
 //! revision-1 peer keeps working against a single-slice server).
+//! The serving path (`ADVGPSV1`, ISSUE 8) rides the same rev-2 framing:
+//! SUBSCRIBE opens a read-only session (a posterior stream on a θ-slice
+//! server, or a predict session on a serving replica), POSTERIOR-SYNC
+//! fans θ out to subscribers, and PREDICT/PREDICTION/REJECT carry the
+//! batched prediction traffic with per-request admission control.
 //!
 //! This module is pure codec: [`Frame`] ⇄ bytes, plus blocking
 //! [`read_frame`]/[`write_frame`] helpers over any `Read`/`Write`.  All
@@ -112,6 +117,13 @@ pub const KIND_PONG: u8 = 0x09;
 pub const KIND_WELCOME2: u8 = 0x0A;
 pub const KIND_PUBLISH2: u8 = 0x0B;
 pub const KIND_PUSH2: u8 = 0x0C;
+/// Serving-path kinds (ADVGPSV1, ISSUE 8) — spoken only on rev ≥ 2
+/// connections opened with SUBSCRIBE instead of HELLO.
+pub const KIND_SUBSCRIBE: u8 = 0x0D;
+pub const KIND_POSTERIOR_SYNC: u8 = 0x0E;
+pub const KIND_PREDICT: u8 = 0x0F;
+pub const KIND_PREDICTION: u8 = 0x10;
+pub const KIND_REJECT: u8 = 0x11;
 
 /// ERROR frame codes.
 pub const ERR_BAD_MAGIC: u16 = 1;
@@ -120,6 +132,23 @@ pub const ERR_ID_IN_USE: u16 = 3;
 pub const ERR_MALFORMED: u16 = 4;
 pub const ERR_DIM: u16 = 5;
 pub const ERR_ID_MISMATCH: u16 = 6;
+
+/// SUBSCRIBE scope: a θ-slice posterior stream (server → subscriber
+/// POSTERIOR-SYNC fan-out; the read-path twin of a worker's PUBLISH2
+/// stream).
+pub const SUBSCRIBE_POSTERIOR: u8 = 0;
+/// SUBSCRIBE scope: a predict session against a serving replica
+/// (PREDICT/PREDICTION/REJECT traffic).
+pub const SUBSCRIBE_PREDICT: u8 = 1;
+
+/// REJECT codes — per-request admission-control verdicts (ADVGPSV1).
+/// Unlike ERROR, a REJECT is *not* fatal: the session stays open and
+/// the next PREDICT is admitted on its own merits.
+pub const REJ_NOT_READY: u16 = 1;
+pub const REJ_STALE: u16 = 2;
+pub const REJ_OVERLOAD: u16 = 3;
+pub const REJ_BAD_DIM: u16 = 4;
+pub const REJ_BAD_SCOPE: u16 = 5;
 
 /// One ADVGPNT1 frame — see the module docs for the byte layout and
 /// `docs/PROTOCOL.md` §"Frame table" for the per-kind payloads.
@@ -176,6 +205,41 @@ pub enum Frame {
     /// Client → server, revision ≥ 2: the slice fragment of a local
     /// gradient — `push.grad` is restricted to the server's range.
     Push2 { slice_id: u64, start: u64, push: Push },
+    /// Subscriber → server, first frame on a *read-only* connection
+    /// (ADVGPSV1): magic, highest revision spoken, and the session
+    /// scope ([`SUBSCRIBE_POSTERIOR`] against a θ-slice server,
+    /// [`SUBSCRIBE_PREDICT`] against a serving replica).  A SUBSCRIBE
+    /// connection never claims a worker id and never pushes.
+    Subscribe { proto: u32, scope: u8 },
+    /// Server → subscriber (ADVGPSV1): the handshake reply *and* every
+    /// subsequent θ update on a posterior stream — layout, slice
+    /// coordinates, topology range, version, gate-clock metadata, and
+    /// the slice's θ values.  On a predict session the replica answers
+    /// the handshake with a header-only sync (`theta` empty): the
+    /// client learns `(m, d, version)` without shipping θ.
+    PosteriorSync {
+        m: u64,
+        d: u64,
+        slice_id: u64,
+        n_slices: u64,
+        start: u64,
+        end: u64,
+        version: u64,
+        meta: PublishMeta,
+        theta: Vec<f64>,
+    },
+    /// Client → replica (ADVGPSV1): one batch of prediction inputs —
+    /// `rows` is row-major, `rows.len() == k·d` for some k ≥ 1.  `id`
+    /// correlates the answer (PREDICTION or REJECT) on a pipelined
+    /// session.
+    Predict { id: u64, d: u64, rows: Vec<f64> },
+    /// Replica → client (ADVGPSV1): the posterior answer for PREDICT
+    /// `id` — predictive mean and variance per input row, plus the θ
+    /// version the posterior was built from.
+    Prediction { id: u64, version: u64, mean: Vec<f64>, var: Vec<f64> },
+    /// Replica → client (ADVGPSV1): PREDICT `id` was refused by
+    /// admission control (`REJ_*`).  Non-fatal: the session continues.
+    Reject { id: u64, code: u16, message: String },
 }
 
 impl Frame {
@@ -194,6 +258,11 @@ impl Frame {
             Frame::Welcome2 { .. } => KIND_WELCOME2,
             Frame::Publish2 { .. } => KIND_PUBLISH2,
             Frame::Push2 { .. } => KIND_PUSH2,
+            Frame::Subscribe { .. } => KIND_SUBSCRIBE,
+            Frame::PosteriorSync { .. } => KIND_POSTERIOR_SYNC,
+            Frame::Predict { .. } => KIND_PREDICT,
+            Frame::Prediction { .. } => KIND_PREDICTION,
+            Frame::Reject { .. } => KIND_REJECT,
         }
     }
 
@@ -290,6 +359,59 @@ impl Frame {
                 for v in &p.grad {
                     body.extend_from_slice(&v.to_le_bytes());
                 }
+            }
+            Frame::Subscribe { proto, scope } => {
+                body.extend_from_slice(&WIRE_MAGIC);
+                body.extend_from_slice(&proto.to_le_bytes());
+                body.push(*scope);
+            }
+            Frame::PosteriorSync {
+                m,
+                d,
+                slice_id,
+                n_slices,
+                start,
+                end,
+                version,
+                meta,
+                theta,
+            } => {
+                // One copy of the layout: the slice-based encoder below
+                // is the normative implementation.
+                return posterior_sync_frame_bytes(
+                    *m, *d, *slice_id, *n_slices, *start, *end, *version, *meta, theta,
+                );
+            }
+            Frame::Predict { id, d, rows } => {
+                body.extend_from_slice(&id.to_le_bytes());
+                body.extend_from_slice(&d.to_le_bytes());
+                body.extend_from_slice(&(rows.len() as u64).to_le_bytes());
+                for v in rows {
+                    body.extend_from_slice(&v.to_le_bytes());
+                }
+            }
+            Frame::Prediction { id, version, mean, var } => {
+                body.extend_from_slice(&id.to_le_bytes());
+                body.extend_from_slice(&version.to_le_bytes());
+                assert_eq!(
+                    mean.len(),
+                    var.len(),
+                    "PREDICTION: one variance per mean"
+                );
+                body.extend_from_slice(&(mean.len() as u64).to_le_bytes());
+                for v in mean {
+                    body.extend_from_slice(&v.to_le_bytes());
+                }
+                for v in var {
+                    body.extend_from_slice(&v.to_le_bytes());
+                }
+            }
+            Frame::Reject { id, code, message } => {
+                body.extend_from_slice(&id.to_le_bytes());
+                body.extend_from_slice(&code.to_le_bytes());
+                let msg = message.as_bytes();
+                body.extend_from_slice(&(msg.len() as u32).to_le_bytes());
+                body.extend_from_slice(msg);
             }
         }
         seal_frame(body)
@@ -426,6 +548,78 @@ impl Frame {
                     },
                 }
             }
+            KIND_SUBSCRIBE => {
+                ensure!(r.take(8)? == WIRE_MAGIC, "SUBSCRIBE: bad magic (want ADVGPNT1)");
+                let proto = r.u32()?;
+                let scope = r.take(1)?[0];
+                ensure!(
+                    scope == SUBSCRIBE_POSTERIOR || scope == SUBSCRIBE_PREDICT,
+                    "SUBSCRIBE: unknown scope {scope}"
+                );
+                Frame::Subscribe { proto, scope }
+            }
+            KIND_POSTERIOR_SYNC => {
+                let m = r.u64()?;
+                let d = r.u64()?;
+                let slice_id = r.u64()?;
+                let n_slices = r.u64()?;
+                let start = r.u64()?;
+                let end = r.u64()?;
+                let version = r.u64()?;
+                let meta = PublishMeta { live: r.u64()?, staleness: r.u64()? };
+                ensure!(
+                    (1..=MAX_SLICES as u64).contains(&n_slices),
+                    "POSTERIOR-SYNC: implausible slice count {n_slices} (max {MAX_SLICES})"
+                );
+                ensure!(
+                    slice_id < n_slices && start < end,
+                    "POSTERIOR-SYNC: slice {slice_id}/{n_slices} with range [{start}, {end})"
+                );
+                let dim = r.u64()? as usize;
+                ensure!(
+                    dim == 0 || dim as u64 == end - start,
+                    "POSTERIOR-SYNC: {dim} θ values for range [{start}, {end}) \
+                     (want 0 — a header-only sync — or the full slice)"
+                );
+                Frame::PosteriorSync {
+                    m,
+                    d,
+                    slice_id,
+                    n_slices,
+                    start,
+                    end,
+                    version,
+                    meta,
+                    theta: r.f64_vec(dim)?,
+                }
+            }
+            KIND_PREDICT => {
+                let id = r.u64()?;
+                let d = r.u64()?;
+                let len = r.u64()? as usize;
+                ensure!(d >= 1, "PREDICT: zero-dimensional inputs");
+                ensure!(
+                    len >= 1 && len as u64 % d == 0,
+                    "PREDICT: {len} values is not a whole number of {d}-dim rows"
+                );
+                Frame::Predict { id, d, rows: r.f64_vec(len)? }
+            }
+            KIND_PREDICTION => {
+                let id = r.u64()?;
+                let version = r.u64()?;
+                let len = r.u64()? as usize;
+                let mean = r.f64_vec(len)?;
+                let var = r.f64_vec(len)?;
+                Frame::Prediction { id, version, mean, var }
+            }
+            KIND_REJECT => {
+                let id = r.u64()?;
+                let code = r.u16()?;
+                let len = r.u32()? as usize;
+                let message = String::from_utf8(r.take(len)?.to_vec())
+                    .context("REJECT frame: message is not UTF-8")?;
+                Frame::Reject { id, code, message }
+            }
             KIND_ERROR => {
                 let code = r.u16()?;
                 let len = r.u32()? as usize;
@@ -522,6 +716,41 @@ pub fn publish2_frame_bytes(
     body.extend_from_slice(&meta.staleness.to_le_bytes());
     body.extend_from_slice(&slice_id.to_le_bytes());
     body.extend_from_slice(&start.to_le_bytes());
+    body.extend_from_slice(&(theta.len() as u64).to_le_bytes());
+    for v in theta {
+        body.extend_from_slice(&v.to_le_bytes());
+    }
+    seal_frame(body)
+}
+
+/// Encode a POSTERIOR-SYNC frame straight from a θ-slice — the
+/// serving-path twin of [`publish2_frame_bytes`], used by the
+/// subscriber fan-out so θ is encoded once per version, not once per
+/// subscriber.  `theta` may be empty (a header-only sync: the predict
+/// handshake's `(m, d, version)` ack).
+#[allow(clippy::too_many_arguments)]
+pub fn posterior_sync_frame_bytes(
+    m: u64,
+    d: u64,
+    slice_id: u64,
+    n_slices: u64,
+    start: u64,
+    end: u64,
+    version: u64,
+    meta: PublishMeta,
+    theta: &[f64],
+) -> Vec<u8> {
+    let mut body = Vec::with_capacity(1 + 80 + theta.len() * 8);
+    body.push(KIND_POSTERIOR_SYNC);
+    body.extend_from_slice(&m.to_le_bytes());
+    body.extend_from_slice(&d.to_le_bytes());
+    body.extend_from_slice(&slice_id.to_le_bytes());
+    body.extend_from_slice(&n_slices.to_le_bytes());
+    body.extend_from_slice(&start.to_le_bytes());
+    body.extend_from_slice(&end.to_le_bytes());
+    body.extend_from_slice(&version.to_le_bytes());
+    body.extend_from_slice(&meta.live.to_le_bytes());
+    body.extend_from_slice(&meta.staleness.to_le_bytes());
     body.extend_from_slice(&(theta.len() as u64).to_le_bytes());
     for v in theta {
         body.extend_from_slice(&v.to_le_bytes());
@@ -748,6 +977,39 @@ mod tests {
                     compute_secs: 0.0625,
                 },
             },
+            Frame::Subscribe { proto: PROTO_NT2, scope: SUBSCRIBE_POSTERIOR },
+            Frame::Subscribe { proto: PROTO_NT2, scope: SUBSCRIBE_PREDICT },
+            Frame::PosteriorSync {
+                m: 100,
+                d: 8,
+                slice_id: 1,
+                n_slices: 2,
+                start: 40,
+                end: 80,
+                version: 17,
+                meta: PublishMeta { live: 4, staleness: 1 },
+                theta: vec![0.5; 40],
+            },
+            Frame::PosteriorSync {
+                // Header-only sync: the predict handshake ack.
+                m: 100,
+                d: 8,
+                slice_id: 0,
+                n_slices: 1,
+                start: 0,
+                end: 120,
+                version: 17,
+                meta: PublishMeta { live: 4, staleness: 1 },
+                theta: vec![],
+            },
+            Frame::Predict { id: 9, d: 3, rows: vec![1.0, -2.0, 0.5, 4.0, 0.0, -0.125] },
+            Frame::Prediction {
+                id: 9,
+                version: 17,
+                mean: vec![0.25, -1.5],
+                var: vec![0.0625, 0.125],
+            },
+            Frame::Reject { id: 10, code: REJ_STALE, message: "stale".into() },
         ]
     }
 
@@ -836,7 +1098,7 @@ mod tests {
     }
 
     #[test]
-    fn length_prefix_bounds_are_enforced() {
+    fn length_prefix_and_handshake_cap_are_enforced() {
         // len < 9.
         let mut bytes = vec![];
         bytes.extend_from_slice(&5u32.to_le_bytes());
@@ -914,6 +1176,114 @@ mod tests {
         }
         .encode();
         assert_eq!(publish2_frame_bytes(7, meta, 1, 10, &theta), via_frame);
+    }
+
+    /// Pins the ADVGPSV1 worked example (SUBSCRIBE, posterior scope) in
+    /// docs/PROTOCOL.md the same way SHUTDOWN and PING pin theirs.
+    #[test]
+    fn subscribe_frame_matches_the_protocol_doc() {
+        assert_eq!(
+            Frame::Subscribe { proto: PROTO_NT2, scope: SUBSCRIBE_POSTERIOR }.encode(),
+            vec![
+                0x16, 0x00, 0x00, 0x00, // len = 22
+                0x0d, // kind SUBSCRIBE
+                0x41, 0x44, 0x56, 0x47, 0x50, 0x4e, 0x54, 0x31, // "ADVGPNT1"
+                0x02, 0x00, 0x00, 0x00, // proto = 2
+                0x00, // scope = posterior
+                0xe7, 0x10, 0xda, 0x89, 0x7b, 0x08, 0xaa, 0xa3, // fnv1a64(body)
+            ]
+        );
+    }
+
+    /// Pins the ADVGPSV1 REJECT worked example in docs/PROTOCOL.md.
+    #[test]
+    fn reject_frame_matches_the_protocol_doc() {
+        assert_eq!(
+            Frame::Reject { id: 7, code: REJ_STALE, message: "stale".into() }.encode(),
+            vec![
+                0x1c, 0x00, 0x00, 0x00, // len = 28
+                0x11, // kind REJECT
+                0x07, 0x00, 0x00, 0x00, 0x00, 0x00, 0x00, 0x00, // id = 7
+                0x02, 0x00, // code = REJ_STALE
+                0x05, 0x00, 0x00, 0x00, // message length
+                0x73, 0x74, 0x61, 0x6c, 0x65, // "stale"
+                0xf1, 0x7f, 0x58, 0xbc, 0x19, 0xbb, 0xf5, 0x43, // fnv1a64(body)
+            ]
+        );
+    }
+
+    #[test]
+    fn posterior_sync_frame_bytes_matches_frame_encode() {
+        let meta = PublishMeta { live: 2, staleness: 3 };
+        let theta = vec![1.0, -0.5, 0.25];
+        let via_frame = Frame::PosteriorSync {
+            m: 10,
+            d: 4,
+            slice_id: 1,
+            n_slices: 2,
+            start: 7,
+            end: 10,
+            version: 5,
+            meta,
+            theta: theta.clone(),
+        }
+        .encode();
+        assert_eq!(
+            posterior_sync_frame_bytes(10, 4, 1, 2, 7, 10, 5, meta, &theta),
+            via_frame
+        );
+    }
+
+    /// ADVGPSV1 semantic validation: SUBSCRIBE scope bytes, the
+    /// POSTERIOR-SYNC slice/θ-length rules (header-only or the whole
+    /// slice, nothing in between), and PREDICT's whole-rows rule.
+    #[test]
+    fn serving_frame_semantic_validation() {
+        // SUBSCRIBE: an unknown scope is rejected (craft the body by
+        // hand — encode can only produce legal scopes).
+        let mut body = vec![KIND_SUBSCRIBE];
+        body.extend_from_slice(&WIRE_MAGIC);
+        body.extend_from_slice(&PROTO_NT2.to_le_bytes());
+        body.push(2); // not a scope
+        let bytes = seal_frame(body);
+        assert!(Frame::decode(&bytes[4..]).is_err());
+        // POSTERIOR-SYNC: a partial slice is rejected; empty (header
+        // only) and exactly end − start both pass.
+        let sync = |theta: Vec<f64>| Frame::PosteriorSync {
+            m: 4,
+            d: 2,
+            slice_id: 0,
+            n_slices: 1,
+            start: 3,
+            end: 6,
+            version: 1,
+            meta: PublishMeta::default(),
+            theta,
+        };
+        assert!(Frame::decode(&sync(vec![]).encode()[4..]).is_ok());
+        assert!(Frame::decode(&sync(vec![0.0; 3]).encode()[4..]).is_ok());
+        assert!(Frame::decode(&sync(vec![0.0; 2]).encode()[4..]).is_err());
+        // POSTERIOR-SYNC: slice coordinates obey the WELCOME2 rules.
+        let bad = Frame::PosteriorSync {
+            m: 4,
+            d: 2,
+            slice_id: 1,
+            n_slices: 1, // slice_id ≥ n_slices
+            start: 0,
+            end: 3,
+            version: 1,
+            meta: PublishMeta::default(),
+            theta: vec![],
+        };
+        assert!(Frame::decode(&bad.encode()[4..]).is_err());
+        // PREDICT: a ragged batch (7 values, d = 3) is rejected, as is
+        // an empty one.
+        let ragged = Frame::Predict { id: 1, d: 3, rows: vec![0.0; 7] };
+        assert!(Frame::decode(&ragged.encode()[4..]).is_err());
+        let empty = Frame::Predict { id: 1, d: 3, rows: vec![] };
+        assert!(Frame::decode(&empty.encode()[4..]).is_err());
+        let whole = Frame::Predict { id: 1, d: 3, rows: vec![0.0; 6] };
+        assert!(Frame::decode(&whole.encode()[4..]).is_ok());
     }
 
     /// WELCOME2's internal consistency rules: the slice must sit inside

@@ -1,0 +1,395 @@
+//! Open-loop load generator + scoreboard for the replica read path
+//! (ADVGPSV1, ISSUE 8) — the measurement half of `advgp loadgen`.
+//!
+//! **Open loop**: the k-th request is *scheduled* at `t0 + k/qps` and
+//! its latency is measured from that scheduled instant, not from the
+//! moment the socket write happened.  A closed-loop generator (send,
+//! wait, send) silently stops offering load whenever the server stalls,
+//! so its tail quantiles flatter exactly the behaviour a tail quantile
+//! exists to expose (coordinated omission).  Here a stall makes the
+//! *next* requests late too — and their latencies say so.
+//!
+//! Requests round-robin across the replica fleet, one pipelined
+//! session per replica split into a sender and a receiver thread
+//! ([`crate::serve::replica::PredictClient::into_split`]); answers
+//! correlate back to their scheduled instants by request id.  Latencies
+//! are kept **exactly** (one `u64` of nanoseconds per request, sorted
+//! once at the end), so p50/p99/p999 are true order statistics, not
+//! reservoir estimates — a loadgen knows its n up front and can afford
+//! the memory.
+//!
+//! [`Scoreboard::write_bench`] merge-writes `BENCH_serve.json` in the
+//! same schema-1 shape as `perf_hotpath`/`perf_predict`, so
+//! `scripts/bench_diff.py` diffs serving runs unchanged and the
+//! replicas=1 / replicas=2 rows accumulate into one file.
+
+use super::replica::{PredictAnswer, PredictClient};
+use crate::util::json::Json;
+use crate::util::rng::Pcg64;
+use anyhow::{ensure, Context, Result};
+use std::sync::mpsc::{channel, Receiver, Sender};
+use std::time::{Duration, Instant};
+
+/// What to offer, at what rate.
+#[derive(Clone, Debug)]
+pub struct LoadgenConfig {
+    /// Offered request rate (requests/sec) across the whole fleet.
+    pub qps: f64,
+    /// Total requests to offer.
+    pub requests: usize,
+    /// Rows per PREDICT request.
+    pub rows_per_request: usize,
+    /// Seed for the synthetic input rows (deterministic per seed).
+    pub seed: u64,
+}
+
+impl Default for LoadgenConfig {
+    fn default() -> Self {
+        Self { qps: 500.0, requests: 2000, rows_per_request: 8, seed: 42 }
+    }
+}
+
+/// What came back: exact latencies plus admission/throughput tallies.
+#[derive(Clone, Debug)]
+pub struct Scoreboard {
+    /// Requests answered with a PREDICTION.
+    pub answered: usize,
+    /// Rows in those answers.
+    pub rows: usize,
+    /// Requests answered with a typed REJECT, by code.
+    pub rejects: Vec<(u16, u64)>,
+    /// Sessions that died before all their answers arrived.
+    pub broken_sessions: usize,
+    /// Offered-to-drained wall clock.
+    pub wall_secs: f64,
+    /// Answered rows per wall-clock second.
+    pub rows_per_sec: f64,
+    /// Per-request latency (scheduled → answered), sorted ascending.
+    pub latencies_ns: Vec<u64>,
+    /// θ versions observed in answers (freshness evidence).
+    pub min_version: u64,
+    pub max_version: u64,
+}
+
+impl Scoreboard {
+    /// Exact order-statistic quantile over the answered requests
+    /// (`q` in [0, 1]); 0 when nothing was answered.
+    pub fn quantile_ns(&self, q: f64) -> u64 {
+        if self.latencies_ns.is_empty() {
+            return 0;
+        }
+        let idx = ((self.latencies_ns.len() - 1) as f64 * q.clamp(0.0, 1.0)).round();
+        self.latencies_ns[idx as usize]
+    }
+
+    pub fn mean_ns(&self) -> f64 {
+        if self.latencies_ns.is_empty() {
+            return 0.0;
+        }
+        self.latencies_ns.iter().map(|&n| n as f64).sum::<f64>()
+            / self.latencies_ns.len() as f64
+    }
+
+    pub fn total_rejects(&self) -> u64 {
+        self.rejects.iter().map(|&(_, n)| n).sum()
+    }
+
+    /// One human line for the console.
+    pub fn summary(&self) -> String {
+        format!(
+            "{} answered ({} rows, {} rejects, {} broken) in {:.2}s — \
+             {:.0} rows/s, p50 {:.2}ms p99 {:.2}ms p999 {:.2}ms (θ v{}..v{})",
+            self.answered,
+            self.rows,
+            self.total_rejects(),
+            self.broken_sessions,
+            self.wall_secs,
+            self.rows_per_sec,
+            self.quantile_ns(0.50) as f64 / 1e6,
+            self.quantile_ns(0.99) as f64 / 1e6,
+            self.quantile_ns(0.999) as f64 / 1e6,
+            self.min_version,
+            self.max_version,
+        )
+    }
+
+    /// The schema-1 bench entry for this run.
+    pub fn to_bench_entry(&self, name: &str, cfg: &LoadgenConfig, replicas: usize) -> Json {
+        Json::obj(vec![
+            ("name", Json::Str(name.to_string())),
+            ("replicas", Json::Num(replicas as f64)),
+            ("qps_target", Json::Num(cfg.qps)),
+            ("requests", Json::Num(cfg.requests as f64)),
+            ("rows_per_request", Json::Num(cfg.rows_per_request as f64)),
+            ("rows_per_sec", Json::Num(self.rows_per_sec)),
+            ("mean_ns", Json::Num(self.mean_ns())),
+            ("p50_ns", Json::Num(self.quantile_ns(0.50) as f64)),
+            ("p99_ns", Json::Num(self.quantile_ns(0.99) as f64)),
+            ("p999_ns", Json::Num(self.quantile_ns(0.999) as f64)),
+            ("rejects", Json::Num(self.total_rejects() as f64)),
+            ("iters", Json::Num(self.answered as f64)),
+        ])
+    }
+
+    /// Merge this run into `path` (`BENCH_serve.json` shape: schema 1,
+    /// bench "serve").  An existing entry with the same `name` is
+    /// replaced; everything else in the file survives, so sequential
+    /// `replicas=1` / `replicas=2` runs accumulate into one document.
+    pub fn write_bench(
+        &self,
+        path: &str,
+        name: &str,
+        cfg: &LoadgenConfig,
+        replicas: usize,
+    ) -> Result<()> {
+        let mut benches: Vec<Json> = match std::fs::read_to_string(path) {
+            Ok(text) => Json::parse(&text)
+                .ok()
+                .and_then(|doc| doc.get("benches").and_then(|b| b.as_arr().map(<[Json]>::to_vec)))
+                .unwrap_or_default(),
+            Err(_) => Vec::new(),
+        };
+        benches.retain(|b| b.get("name").and_then(Json::as_str) != Some(name));
+        benches.push(self.to_bench_entry(name, cfg, replicas));
+        let doc = Json::obj(vec![
+            ("schema", Json::Num(1.0)),
+            ("bench", Json::Str("serve".into())),
+            ("threads", Json::Num(crate::util::pool::threads() as f64)),
+            ("benches", Json::Arr(benches)),
+        ]);
+        crate::util::atomic_write(std::path::Path::new(path), format!("{doc}\n").as_bytes())
+            .with_context(|| format!("write {path}"))
+    }
+}
+
+/// What a receiver thread tallies for its session.
+struct SessionTally {
+    latencies_ns: Vec<u64>,
+    rows: usize,
+    rejects: Vec<(u16, u64)>,
+    broken: bool,
+    min_version: u64,
+    max_version: u64,
+    last_answer: Option<Instant>,
+}
+
+/// Offer `cfg.requests` requests at `cfg.qps` across `replicas`
+/// (round-robin), wait for every answer, and score the run.
+pub fn run(replicas: &[String], cfg: &LoadgenConfig) -> Result<Scoreboard> {
+    ensure!(!replicas.is_empty(), "no replica addresses");
+    ensure!(cfg.qps > 0.0, "qps must be positive");
+    ensure!(cfg.requests > 0, "nothing to offer");
+    ensure!(cfg.rows_per_request > 0, "empty requests");
+
+    // One pipelined session per replica.
+    let mut senders = Vec::new();
+    let mut receivers = Vec::new();
+    let mut d = 0usize;
+    for addr in replicas {
+        let client = PredictClient::connect(addr)
+            .with_context(|| format!("open predict session to {addr}"))?;
+        ensure!(
+            d == 0 || d == client.d,
+            "replicas disagree on the feature dimension ({d} vs {})",
+            client.d
+        );
+        d = client.d;
+        let (tx, rx) = client.into_split();
+        senders.push(tx);
+        receivers.push(rx);
+    }
+    let interval = Duration::from_secs_f64(1.0 / cfg.qps);
+    let n_sessions = senders.len();
+
+    // Receiver threads: drain answers, correlating each to its
+    // scheduled instant through an in-order side channel (a session
+    // answers in request order).
+    let mut rx_threads = Vec::new();
+    let mut sched_txs: Vec<Sender<Instant>> = Vec::new();
+    for mut rx in receivers {
+        let (stx, srx): (Sender<Instant>, Receiver<Instant>) = channel();
+        sched_txs.push(stx);
+        rx_threads.push(std::thread::spawn(move || {
+            let mut t = SessionTally {
+                latencies_ns: Vec::new(),
+                rows: 0,
+                rejects: Vec::new(),
+                broken: false,
+                min_version: u64::MAX,
+                max_version: 0,
+                last_answer: None,
+            };
+            loop {
+                let answer = match rx.recv() {
+                    Ok(Some((_id, a))) => a,
+                    Ok(None) => break,
+                    Err(_) => {
+                        t.broken = true;
+                        break;
+                    }
+                };
+                let now = Instant::now();
+                let Ok(scheduled) = srx.recv() else {
+                    t.broken = true;
+                    break;
+                };
+                t.last_answer = Some(now);
+                match answer {
+                    PredictAnswer::Prediction { version, mean, .. } => {
+                        // Only answered predictions enter the latency
+                        // distribution — a fast REJECT would flatter
+                        // the quantiles of work the replica refused.
+                        t.latencies_ns.push(
+                            now.saturating_duration_since(scheduled).as_nanos() as u64,
+                        );
+                        t.rows += mean.len();
+                        t.min_version = t.min_version.min(version);
+                        t.max_version = t.max_version.max(version);
+                    }
+                    PredictAnswer::Rejected { code, .. } => {
+                        match t.rejects.iter_mut().find(|(c, _)| *c == code) {
+                            Some((_, n)) => *n += 1,
+                            None => t.rejects.push((code, 1)),
+                        }
+                    }
+                }
+            }
+            t
+        }));
+    }
+
+    // The single pacing loop: schedule, stamp, send, round-robin.
+    // (One sender thread is enough — frame writes are microseconds at
+    // these rates; the receivers carry the waiting.)
+    let t0 = Instant::now();
+    let mut rng = Pcg64::seeded(cfg.seed);
+    let mut rows = vec![0.0f64; cfg.rows_per_request * d];
+    for k in 0..cfg.requests {
+        let scheduled = t0 + interval.mul_f64(k as f64);
+        if let Some(wait) = scheduled.checked_duration_since(Instant::now()) {
+            std::thread::sleep(wait);
+        } // behind schedule: send immediately, the lateness is the point
+        for v in rows.iter_mut() {
+            *v = rng.next_f64() * 2.0 - 1.0;
+        }
+        let s = k % n_sessions;
+        // Stamp before the write so socket back-pressure counts.
+        let _ = sched_txs[s].send(scheduled);
+        if senders[s].send(&rows).is_err() {
+            // Session gone; its receiver will tally the break.  Keep
+            // offering to the surviving sessions.
+            continue;
+        }
+    }
+    // Half-close every session: receivers see a clean end after the
+    // in-flight answers drain.
+    drop(sched_txs);
+    for s in senders {
+        s.finish();
+    }
+
+    let mut sb = Scoreboard {
+        answered: 0,
+        rows: 0,
+        rejects: Vec::new(),
+        broken_sessions: 0,
+        wall_secs: 0.0,
+        rows_per_sec: 0.0,
+        latencies_ns: Vec::new(),
+        min_version: u64::MAX,
+        max_version: 0,
+    };
+    let mut t_end = t0;
+    for h in rx_threads {
+        let t = h.join().expect("receiver thread panicked");
+        sb.answered += t.latencies_ns.len();
+        sb.rows += t.rows;
+        sb.latencies_ns.extend(t.latencies_ns);
+        for (code, n) in t.rejects {
+            match sb.rejects.iter_mut().find(|(c, _)| *c == code) {
+                Some((_, m)) => *m += n,
+                None => sb.rejects.push((code, n)),
+            }
+        }
+        sb.broken_sessions += t.broken as usize;
+        sb.min_version = sb.min_version.min(t.min_version);
+        sb.max_version = sb.max_version.max(t.max_version);
+        if let Some(last) = t.last_answer {
+            t_end = t_end.max(last);
+        }
+    }
+    if sb.min_version == u64::MAX {
+        sb.min_version = 0;
+    }
+    sb.latencies_ns.sort_unstable();
+    sb.wall_secs = t_end.saturating_duration_since(t0).as_secs_f64();
+    sb.rows_per_sec = if sb.wall_secs > 0.0 { sb.rows as f64 / sb.wall_secs } else { 0.0 };
+    Ok(sb)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn board(lat: Vec<u64>) -> Scoreboard {
+        let mut latencies_ns = lat;
+        latencies_ns.sort_unstable();
+        Scoreboard {
+            answered: latencies_ns.len(),
+            rows: latencies_ns.len(),
+            rejects: vec![],
+            broken_sessions: 0,
+            wall_secs: 1.0,
+            rows_per_sec: latencies_ns.len() as f64,
+            latencies_ns,
+            min_version: 1,
+            max_version: 1,
+        }
+    }
+
+    /// Quantiles are exact order statistics over the latency vector.
+    #[test]
+    fn quantiles_are_exact_order_statistics() {
+        let sb = board((1..=1000).collect());
+        assert_eq!(sb.quantile_ns(0.0), 1);
+        assert_eq!(sb.quantile_ns(1.0), 1000);
+        // index round((n-1)·q): round(999·0.5) = 500 (0-based) → 501.
+        assert_eq!(sb.quantile_ns(0.5), 501);
+        assert_eq!(sb.quantile_ns(0.99), 990);
+        assert_eq!(sb.quantile_ns(0.999), 999);
+        assert!((sb.mean_ns() - 500.5).abs() < 1e-9);
+    }
+
+    /// Degenerate boards don't panic or divide by zero.
+    #[test]
+    fn empty_board_is_all_zeros() {
+        let sb = board(vec![]);
+        assert_eq!(sb.quantile_ns(0.5), 0);
+        assert_eq!(sb.mean_ns(), 0.0);
+    }
+
+    /// `write_bench` accumulates entries by name: a re-run replaces its
+    /// own row and leaves the other replica count's row alone.
+    #[test]
+    fn bench_file_merges_by_name() {
+        let dir = std::env::temp_dir().join(format!("advgp_loadgen_{}", std::process::id()));
+        std::fs::create_dir_all(&dir).unwrap();
+        let path = dir.join("BENCH_serve.json");
+        let path = path.to_str().unwrap();
+        let cfg = LoadgenConfig::default();
+        board(vec![10, 20]).write_bench(path, "serve/replicas=1", &cfg, 1).unwrap();
+        board(vec![30, 40]).write_bench(path, "serve/replicas=2", &cfg, 2).unwrap();
+        board(vec![50, 60]).write_bench(path, "serve/replicas=1", &cfg, 1).unwrap();
+        let doc = Json::parse(&std::fs::read_to_string(path).unwrap()).unwrap();
+        assert_eq!(doc.get("bench").unwrap().as_str(), Some("serve"));
+        let benches = doc.get("benches").unwrap().as_arr().unwrap();
+        assert_eq!(benches.len(), 2, "same-name rerun replaced, not appended");
+        let r1 = benches
+            .iter()
+            .find(|b| b.get("name").unwrap().as_str() == Some("serve/replicas=1"))
+            .unwrap();
+        // The replacement carries the rerun's latencies (mean 55ns).
+        assert!((r1.get("mean_ns").unwrap().as_f64().unwrap() - 55.0).abs() < 1e-9);
+        let _ = std::fs::remove_dir_all(&dir);
+    }
+}

@@ -22,10 +22,21 @@
 //! runs on the same cache + workspaces, so cadenced evaluation shares
 //! the per-version factor build and allocates nothing per snapshot
 //! beyond it.
+//!
+//! The **read-path fleet** (ADVGPSV1, ISSUE 8) scales this horizontally:
+//! [`replica::Replica`] subscribes to the training fleet's per-slice
+//! publish streams over the wire, mirrors them through the same
+//! assembler/cache machinery, and serves PREDICT sessions on its own
+//! listener; [`loadgen`] is the open-loop load generator + scoreboard
+//! that measures such a fleet (`advgp loadgen` → `BENCH_serve.json`).
 
 pub mod batch;
+pub mod loadgen;
+pub mod replica;
 
 pub use batch::{BatchConfig, BatchServer, Prediction, ServeClient, ServeReport};
+pub use loadgen::{LoadgenConfig, Scoreboard};
+pub use replica::{PredictAnswer, PredictClient, Replica, ReplicaConfig};
 
 use crate::gp::{SparseGp, Theta, ThetaLayout};
 use crate::ps::Published;

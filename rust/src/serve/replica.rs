@@ -1,0 +1,1194 @@
+//! The stateless serving replica (ADVGPSV1, ISSUE 8): horizontal read
+//! scale-out decoupled from training.
+//!
+//! A [`Replica`] dials every θ-slice server of a running fleet with a
+//! SUBSCRIBE handshake (read-only — no worker id, no gate clock),
+//! assembles the per-slice POSTERIOR-SYNC streams into one full-θ view
+//! with exactly the version-vector-floor machinery
+//! [`crate::ps::ShardedWorkerHandle`] uses, rebuilds the posterior
+//! locally in a [`PosteriorCache`], and answers PREDICT traffic on its
+//! own listener through a [`BatchServer`].  Because
+//! [`crate::gp::SparseGp`] is a deterministic function of (layout, θ),
+//! a replica's posterior at θ version v is **bitwise-equal** to the
+//! in-process cache at v — pinned by `rust/tests/serve_replica.rs`.
+//!
+//! Failure semantics:
+//! * A **clean SHUTDOWN** from the trainer freezes the final θ; the
+//!   replica serves it indefinitely (a finished model is not stale).
+//! * A **lost subscription link** degrades typed: the replica serves
+//!   its last posterior while a per-link supervisor reconnects with
+//!   jittered backoff (resuming at the *newest* θ version the server
+//!   holds); once the outage outlives
+//!   [`ReplicaConfig::staleness_budget`], PREDICTs draw
+//!   `REJECT(REJ_STALE)` until a link repair clears the clock.
+//! * **Admission control** answers per-request REJECTs (`REJ_*` codes)
+//!   without dropping the session — overload, staleness, and dimension
+//!   errors are workload verdicts, not protocol faults.
+//!
+//! [`PredictClient`] is the client half (used by `advgp loadgen`, the
+//! chaos suite, and any external caller): one SUBSCRIBE(predict)
+//! handshake, then pipelined PREDICT/PREDICTION exchanges.
+
+use super::{BatchConfig, BatchServer, PosteriorCache, ServeClient, ServeReport};
+use crate::gp::ThetaLayout;
+use crate::ps::net::{RetryPolicy, Rejected};
+use crate::ps::sharded::{run_assembler_draining, ShardedPublished, Topology};
+use crate::ps::wire::{
+    self, Frame, ReadEvent, ERR_MALFORMED, ERR_PROTO, MAX_FRAME_LEN,
+    MAX_HANDSHAKE_FRAME_LEN, PROTO_NT2, PROTO_VERSION, REJ_BAD_DIM, REJ_BAD_SCOPE,
+    REJ_NOT_READY, REJ_OVERLOAD, REJ_STALE, SUBSCRIBE_POSTERIOR, SUBSCRIBE_PREDICT,
+};
+use crate::ps::{Published, PublishMeta};
+use crate::util::rng::Pcg64;
+use crate::util::{fnv1a64, FNV1A64_INIT};
+use crate::{log_info, log_warn};
+use anyhow::{bail, ensure, Context, Result};
+use std::net::{SocketAddr, TcpListener, TcpStream};
+use std::sync::atomic::{AtomicBool, AtomicU64, AtomicUsize, Ordering};
+use std::sync::{Arc, Mutex};
+use std::time::{Duration, Instant};
+
+/// Replica policy knobs.
+#[derive(Clone, Debug)]
+pub struct ReplicaConfig {
+    /// Microbatching policy for the local [`BatchServer`].
+    pub batch: BatchConfig,
+    /// How long the replica may serve a *stale* posterior while its
+    /// subscription is down before PREDICTs draw `REJECT(REJ_STALE)`.
+    /// A clean trainer SHUTDOWN never starts this clock.
+    pub staleness_budget: Duration,
+    /// Subscription timeouts and the per-outage reconnect budget.
+    pub retry: RetryPolicy,
+    /// Admission ceiling: PREDICT rows in flight (staged or being
+    /// computed) beyond this draw `REJECT(REJ_OVERLOAD)`.
+    pub max_inflight_rows: usize,
+}
+
+impl Default for ReplicaConfig {
+    fn default() -> Self {
+        Self {
+            batch: BatchConfig::default(),
+            staleness_budget: Duration::from_secs(10),
+            retry: RetryPolicy::default(),
+            max_inflight_rows: 4096,
+        }
+    }
+}
+
+/// Per-code REJECT tallies — the typed-degradation evidence the chaos
+/// suite asserts on.
+#[derive(Default)]
+pub struct RejectCounters {
+    pub not_ready: AtomicU64,
+    pub stale: AtomicU64,
+    pub overload: AtomicU64,
+    pub bad_dim: AtomicU64,
+}
+
+impl RejectCounters {
+    fn bump(&self, code: u16) {
+        match code {
+            REJ_NOT_READY => &self.not_ready,
+            REJ_STALE => &self.stale,
+            REJ_OVERLOAD => &self.overload,
+            REJ_BAD_DIM => &self.bad_dim,
+            _ => return,
+        }
+        .fetch_add(1, Ordering::Relaxed);
+    }
+
+    pub fn total(&self) -> u64 {
+        self.not_ready.load(Ordering::Relaxed)
+            + self.stale.load(Ordering::Relaxed)
+            + self.overload.load(Ordering::Relaxed)
+            + self.bad_dim.load(Ordering::Relaxed)
+    }
+}
+
+/// Subscription-link staleness clock: which links are down, since when,
+/// and whether the trainer ended cleanly (in which case the final θ is
+/// *final*, not stale).
+struct LinkHealth {
+    inner: Mutex<HealthInner>,
+}
+
+struct HealthInner {
+    down: Vec<bool>,
+    down_since: Option<Instant>,
+    clean: bool,
+}
+
+impl LinkHealth {
+    fn new(n: usize) -> Self {
+        Self {
+            inner: Mutex::new(HealthInner {
+                down: vec![false; n],
+                down_since: None,
+                clean: false,
+            }),
+        }
+    }
+
+    fn mark_down(&self, i: usize) {
+        let mut g = self.inner.lock().unwrap();
+        g.down[i] = true;
+        g.down_since.get_or_insert_with(Instant::now);
+    }
+
+    fn mark_up(&self, i: usize) {
+        let mut g = self.inner.lock().unwrap();
+        g.down[i] = false;
+        if !g.down.iter().any(|&d| d) {
+            g.down_since = None;
+        }
+    }
+
+    /// A clean trainer SHUTDOWN: the posterior is final from here on;
+    /// any staleness clock (and future link losses — the servers are
+    /// gone on purpose) stops mattering.
+    fn mark_clean(&self) {
+        let mut g = self.inner.lock().unwrap();
+        g.clean = true;
+        g.down_since = None;
+    }
+
+    /// How long the posterior has been stale (some link down, no clean
+    /// shutdown); `None` while healthy or after a clean end.
+    fn stale_for(&self) -> Option<Duration> {
+        let g = self.inner.lock().unwrap();
+        if g.clean {
+            return None;
+        }
+        g.down_since.map(|t| t.elapsed())
+    }
+}
+
+/// One validated posterior subscription (the client side of the
+/// SUBSCRIBE → POSTERIOR-SYNC handshake against a θ-slice server).
+struct Subscription {
+    stream: TcpStream,
+    m: u64,
+    d: u64,
+    slice_id: u64,
+    n_slices: u64,
+    start: u64,
+    end: u64,
+    version: u64,
+    meta: PublishMeta,
+    theta: Vec<f64>,
+}
+
+impl Subscription {
+    /// The agreement key a reconnected link must reproduce exactly.
+    fn shape(&self) -> (u64, u64, u64, u64, u64, u64) {
+        (self.m, self.d, self.slice_id, self.n_slices, self.start, self.end)
+    }
+}
+
+/// Dial `addr`, SUBSCRIBE (posterior scope), and validate the sync
+/// reply.  The reply must carry the slice's full θ — a header-only sync
+/// is a predict-session artifact and is rejected here.
+fn connect_subscribe(addr: &str, retry: &RetryPolicy) -> Result<Subscription> {
+    let mut stream = TcpStream::connect(addr)
+        .with_context(|| format!("connect posterior subscription to {addr}"))?;
+    let _ = stream.set_nodelay(true);
+    let _ = stream.set_write_timeout(Some(retry.write_timeout));
+    let _ = stream.set_read_timeout(Some(retry.handshake_timeout));
+    wire::write_frame(
+        &mut stream,
+        &Frame::Subscribe { proto: PROTO_VERSION, scope: SUBSCRIBE_POSTERIOR },
+    )
+    .context("send SUBSCRIBE")?;
+    let mut scratch = Vec::new();
+    // The sync reply carries θ, so it reads under the full frame cap
+    // (unlike HELLO-side handshakes the server is the trusted party
+    // here — the client dialed it).
+    let frame = wire::read_frame(&mut stream, &mut scratch)
+        .with_context(|| format!("read POSTERIOR-SYNC from {addr}"))?;
+    match frame {
+        Frame::PosteriorSync { m, d, slice_id, n_slices, start, end, version, meta, theta } => {
+            ensure!(
+                !theta.is_empty(),
+                "{addr}: header-only sync on a posterior subscription"
+            );
+            Ok(Subscription {
+                stream,
+                m,
+                d,
+                slice_id,
+                n_slices,
+                start,
+                end,
+                version,
+                meta,
+                theta,
+            })
+        }
+        Frame::Error { code, message } => Err(Rejected { code, message })
+            .with_context(|| format!("{addr} rejected the subscription")),
+        Frame::Reject { code, message, .. } => {
+            bail!("{addr} rejected the subscription (code {code}: {message})")
+        }
+        f => bail!("{addr}: expected POSTERIOR-SYNC, got kind {:#04x}", f.kind()),
+    }
+}
+
+/// How one subscription pump ended.
+enum SubEnd {
+    /// The trainer announced SHUTDOWN — the posterior is final.
+    Shutdown,
+    /// The link died; the supervisor decides whether backoff buys a
+    /// repair.
+    LinkDead,
+}
+
+/// Decode one subscription link's POSTERIOR-SYNC stream into its slice
+/// [`Published`] until the run ends or the link dies — the replica twin
+/// of the sharded worker's `pump_slice`.
+fn pump_subscription(
+    r: &mut TcpStream,
+    addr: &str,
+    shape: (u64, u64, u64, u64, u64, u64),
+    slice_pub: &Published,
+    pong_w: &Mutex<TcpStream>,
+    heartbeat: Duration,
+) -> SubEnd {
+    let mut scratch = Vec::new();
+    let _ = r.set_read_timeout(Some(heartbeat));
+    let mut pinged = false;
+    loop {
+        let frame = match wire::read_frame_event(r, &mut scratch, MAX_FRAME_LEN) {
+            Ok(ReadEvent::Frame(f)) => {
+                pinged = false;
+                f
+            }
+            Ok(ReadEvent::IdleTimeout) => {
+                if pinged || send_frame(pong_w, &Frame::Ping).is_err() {
+                    log_warn!(
+                        "serve::replica: θ server {addr} silent through PING + grace — \
+                         treating the subscription as dead"
+                    );
+                    return SubEnd::LinkDead;
+                }
+                pinged = true;
+                continue;
+            }
+            Ok(ReadEvent::Eof) => return SubEnd::LinkDead,
+            Err(e) => {
+                log_warn!("serve::replica: subscription to {addr} ended: {e:#}");
+                return SubEnd::LinkDead;
+            }
+        };
+        match frame {
+            Frame::PosteriorSync {
+                m,
+                d,
+                slice_id,
+                n_slices,
+                start,
+                end,
+                version,
+                meta,
+                theta,
+            } => {
+                if (m, d, slice_id, n_slices, start, end) != shape || theta.is_empty() {
+                    log_warn!(
+                        "serve::replica: {addr} sent a sync disagreeing with its \
+                         handshake (slice {slice_id}/{n_slices} @ [{start}, {end}))"
+                    );
+                    return SubEnd::LinkDead;
+                }
+                slice_pub.publish_meta(version, theta, meta);
+            }
+            Frame::Ping => {
+                let _ = send_frame(pong_w, &Frame::Pong);
+            }
+            Frame::Pong => {}
+            Frame::Shutdown => return SubEnd::Shutdown,
+            Frame::Error { code, message } => {
+                log_warn!(
+                    "serve::replica: θ server {addr} answered ERROR {code} ({message})"
+                );
+                return SubEnd::LinkDead;
+            }
+            f => {
+                log_warn!(
+                    "serve::replica: unexpected frame kind {:#04x} from {addr}",
+                    f.kind()
+                );
+                return SubEnd::LinkDead;
+            }
+        }
+    }
+}
+
+fn send_frame(w: &Mutex<TcpStream>, f: &Frame) -> std::io::Result<()> {
+    use std::io::Write;
+    w.lock().unwrap().write_all(&f.encode())
+}
+
+/// Sleep in 20 ms polls, aborting when the replica is torn down.
+fn sleep_poll(d: Duration, over: &AtomicBool) -> bool {
+    let deadline = Instant::now() + d;
+    while Instant::now() < deadline {
+        if over.load(Ordering::SeqCst) {
+            return true;
+        }
+        std::thread::sleep(Duration::from_millis(20));
+    }
+    over.load(Ordering::SeqCst)
+}
+
+/// Shared state of the predict listener and its per-connection handlers.
+struct PredictCtx {
+    layout: ThetaLayout,
+    cache: Arc<PosteriorCache>,
+    /// Handle into the shared [`BatchServer`]; taken at teardown so the
+    /// serve loop can drain and exit (a clone held here forever would
+    /// deadlock `BatchServer::join`).
+    client: Mutex<Option<ServeClient>>,
+    health: Arc<LinkHealth>,
+    over: Arc<AtomicBool>,
+    inflight: AtomicUsize,
+    rejects: RejectCounters,
+    cfg: ReplicaConfig,
+    /// Live sockets (subscriptions + predict sessions) torn down with
+    /// the replica so no pump outlives it.
+    conns: Mutex<Vec<Arc<Mutex<TcpStream>>>>,
+}
+
+impl PredictCtx {
+    fn register(&self, s: &TcpStream) -> Option<Arc<Mutex<TcpStream>>> {
+        let w = Arc::new(Mutex::new(s.try_clone().ok()?));
+        self.conns.lock().unwrap().push(Arc::clone(&w));
+        Some(w)
+    }
+}
+
+/// A running serving replica.  `start` subscribes, assembles, and
+/// listens; `shutdown` tears every thread down and returns the serving
+/// report.
+pub struct Replica {
+    addr: SocketAddr,
+    cache: Arc<PosteriorCache>,
+    assembled: Arc<Published>,
+    ctx: Arc<PredictCtx>,
+    server: BatchServer,
+    /// Current socket of each subscription link (supervisors swap in
+    /// the reconnected stream) — severed at teardown so no pump waits
+    /// out a heartbeat window.
+    sub_writers: Vec<Arc<Mutex<TcpStream>>>,
+    threads: Vec<std::thread::JoinHandle<()>>,
+}
+
+impl Replica {
+    /// Subscribe to the slice servers at `subscribe_addrs` (one per θ
+    /// slice, any order), validate that their announced slices tile θ,
+    /// and start serving PREDICT sessions on `listen` (port 0 for an
+    /// ephemeral port — read it back from [`Replica::predict_addr`]).
+    pub fn start(listen: &str, subscribe_addrs: &[String], cfg: ReplicaConfig) -> Result<Self> {
+        ensure!(!subscribe_addrs.is_empty(), "no slice servers to subscribe to");
+        let listener = TcpListener::bind(listen)
+            .with_context(|| format!("bind replica predict listener on {listen}"))?;
+        let addr = listener.local_addr().context("replica listener address")?;
+
+        // ---- subscribe to every slice and validate the tiling ----
+        let mut subs: Vec<(String, Subscription)> = Vec::with_capacity(subscribe_addrs.len());
+        for a in subscribe_addrs {
+            subs.push((a.clone(), connect_subscribe(a, &cfg.retry)?));
+        }
+        let (m, d) = (subs[0].1.m, subs[0].1.d);
+        let layout = ThetaLayout::new(m as usize, d as usize);
+        for (a, s) in &subs {
+            ensure!(
+                (s.m, s.d) == (m, d),
+                "{a} announces layout ({}, {}) but {} announced ({m}, {d})",
+                s.m,
+                s.d,
+                subscribe_addrs[0]
+            );
+            ensure!(
+                s.n_slices as usize == subs.len(),
+                "{a} is slice {}/{} but {} servers were given",
+                s.slice_id,
+                s.n_slices,
+                subs.len()
+            );
+        }
+        // Sort by slice id; ids must be exactly 0..S and the ranges
+        // must tile θ — the same agreement checks the sharded worker
+        // runs on its WELCOME2s.
+        subs.sort_by_key(|(_, s)| s.slice_id);
+        let mut ranges = Vec::with_capacity(subs.len());
+        let mut cursor = 0u64;
+        for (i, (a, s)) in subs.iter().enumerate() {
+            ensure!(
+                s.slice_id == i as u64,
+                "duplicate or missing slice id: {a} is slice {} (expected {i})",
+                s.slice_id
+            );
+            ensure!(
+                s.start == cursor && s.end > s.start,
+                "{a}: slice {} is [{}, {}) but the tiling cursor is at {cursor}",
+                i,
+                s.start,
+                s.end
+            );
+            cursor = s.end;
+            ranges.push(s.start as usize..s.end as usize);
+        }
+        ensure!(
+            cursor as usize == layout.len(),
+            "slices tile only {cursor} of {} θ coordinates",
+            layout.len()
+        );
+        let topology = Topology { dim: layout.len(), ranges };
+
+        // ---- assemble: slice views → version-vector-floor view ----
+        let mut theta0 = vec![0.0f64; layout.len()];
+        for (_, s) in &subs {
+            theta0[s.start as usize..s.end as usize].copy_from_slice(&s.theta);
+        }
+        let assembled = Published::new(theta0.clone());
+        let sharded =
+            Arc::new(ShardedPublished::new(topology, &theta0, Arc::clone(&assembled)));
+        let floor = subs.iter().map(|(_, s)| s.version).min().unwrap_or(0);
+        let floor_meta = subs
+            .iter()
+            .map(|(_, s)| (s.version, s.meta))
+            .min_by_key(|(v, _)| *v)
+            .map(|(_, m)| m)
+            .unwrap_or_default();
+        for ((_, s), p) in subs.iter().zip(&sharded.slices) {
+            if s.version > 0 {
+                p.publish_meta(s.version, s.theta.clone(), s.meta);
+            }
+        }
+        if floor > 0 {
+            assembled.publish_meta(floor, theta0.clone(), floor_meta);
+        }
+        let cache = Arc::new(PosteriorCache::new(layout));
+        cache.install(floor, &theta0);
+
+        let health = Arc::new(LinkHealth::new(subs.len()));
+        let over = Arc::new(AtomicBool::new(false));
+        let mut threads = Vec::new();
+
+        // ---- per-link pump + reconnect supervisor threads ----
+        let mut sub_writers = Vec::with_capacity(subs.len());
+        for (i, (a, sub)) in subs.into_iter().enumerate() {
+            let slice_pub = Arc::clone(&sharded.slices[i]);
+            let health = Arc::clone(&health);
+            let over = Arc::clone(&over);
+            let retry = cfg.retry;
+            let writer = Arc::new(Mutex::new(
+                sub.stream.try_clone().context("clone subscription stream")?,
+            ));
+            sub_writers.push(Arc::clone(&writer));
+            threads.push(
+                std::thread::Builder::new()
+                    .name(format!("advgp-sub-{i}"))
+                    .spawn(move || {
+                        supervise_subscription(
+                            sub, i, a, slice_pub, writer, health, over, retry,
+                        )
+                    })
+                    .context("spawn subscription supervisor")?,
+            );
+        }
+
+        // ---- assembler thread (draining — final version survives) ----
+        {
+            let sharded = Arc::clone(&sharded);
+            threads.push(
+                std::thread::Builder::new()
+                    .name("advgp-assemble".into())
+                    .spawn(move || run_assembler_draining(&sharded))
+                    .context("spawn assembler")?,
+            );
+        }
+
+        // ---- posterior refresher: keep the cache hot while idle ----
+        // The batch server also syncs before every flush; this thread
+        // covers the idle case (no traffic) and moves the O(m³) build
+        // off the serve thread's critical path.  Draining wait, so the
+        // final version is installed even when it races shutdown.
+        {
+            let cache = Arc::clone(&cache);
+            let a = Arc::clone(&assembled);
+            threads.push(
+                std::thread::Builder::new()
+                    .name("advgp-refresh".into())
+                    .spawn(move || {
+                        let mut seen = 0u64;
+                        while let Some((v, th, _)) = a.wait_newer_draining(seen) {
+                            cache.install(v, &th);
+                            seen = v;
+                        }
+                    })
+                    .context("spawn posterior refresher")?,
+            );
+        }
+
+        // ---- batch server + predict listener ----
+        let (server, client) = BatchServer::start(
+            Arc::clone(&cache),
+            Some(Arc::clone(&assembled)),
+            cfg.batch.clone(),
+        );
+        let ctx = Arc::new(PredictCtx {
+            layout,
+            cache: Arc::clone(&cache),
+            client: Mutex::new(Some(client)),
+            health: Arc::clone(&health),
+            over: Arc::clone(&over),
+            inflight: AtomicUsize::new(0),
+            rejects: RejectCounters::default(),
+            cfg,
+            conns: Mutex::new(Vec::new()),
+        });
+        {
+            let ctx = Arc::clone(&ctx);
+            threads.push(
+                std::thread::Builder::new()
+                    .name("advgp-predict-accept".into())
+                    .spawn(move || accept_predicts(listener, ctx))
+                    .context("spawn predict accept loop")?,
+            );
+        }
+        log_info!(
+            "serve::replica: serving predicts on {addr} (θ v{floor}, {} slices)",
+            sharded.topology.n_slices()
+        );
+        Ok(Self { addr, cache, assembled, ctx, server, sub_writers, threads })
+    }
+
+    /// Where PREDICT sessions connect.
+    pub fn predict_addr(&self) -> SocketAddr {
+        self.addr
+    }
+
+    /// The replica's posterior cache — the τ=0 parity tests compare
+    /// this against the trainer-side cache bitwise.
+    pub fn cache(&self) -> Arc<PosteriorCache> {
+        Arc::clone(&self.cache)
+    }
+
+    /// θ version of the currently-served posterior.
+    pub fn version(&self) -> Option<u64> {
+        self.cache.version()
+    }
+
+    /// Poll (20 ms) until the served posterior reaches version `v` or
+    /// `timeout` elapses; true on success.  Test/benchmark helper.
+    pub fn wait_version(&self, v: u64, timeout: Duration) -> bool {
+        let deadline = Instant::now() + timeout;
+        while Instant::now() < deadline {
+            if self.cache.version().is_some_and(|got| got >= v) {
+                return true;
+            }
+            std::thread::sleep(Duration::from_millis(20));
+        }
+        self.cache.version().is_some_and(|got| got >= v)
+    }
+
+    /// REJECT tallies so far (typed-degradation evidence).
+    pub fn rejects(&self) -> &RejectCounters {
+        &self.ctx.rejects
+    }
+
+    /// Block until the training fleet announced a clean end (true) or
+    /// `timeout` elapsed (false).  The replica keeps serving its final
+    /// posterior either way — this is how `advgp serve-replica` knows
+    /// when its `--linger-secs` clock may start.
+    pub fn wait_trainer_end(&self, timeout: Duration) -> bool {
+        self.assembled.shutdown_or_timeout(timeout)
+    }
+
+    /// Tear the replica down: stop accepting, sever every session and
+    /// subscription, and return the batch server's report.
+    pub fn shutdown(mut self) -> ServeReport {
+        self.ctx.over.store(true, Ordering::SeqCst);
+        // End the assembled view so the refresher unwinds even if the
+        // assembler is already gone.
+        self.assembled.shutdown();
+        // Sever the subscription sockets (unblocks the pump reads) and
+        // every predict session (unblocks the handlers, which then drop
+        // their ServeClient clones).
+        for w in &self.sub_writers {
+            let _ = w.lock().unwrap().shutdown(std::net::Shutdown::Both);
+        }
+        for w in self.ctx.conns.lock().unwrap().iter() {
+            let _ = w.lock().unwrap().shutdown(std::net::Shutdown::Both);
+        }
+        drop(self.ctx.client.lock().unwrap().take());
+        for h in self.threads.drain(..) {
+            let _ = h.join();
+        }
+        self.server.join()
+    }
+}
+
+/// One subscription link's lifetime: pump until the run ends, repairing
+/// the link with jittered backoff through transient outages.  On a dead
+/// budget the link stays down (staleness clock running) — the replica
+/// keeps serving its last posterior, degrading typed, instead of dying.
+#[allow(clippy::too_many_arguments)]
+fn supervise_subscription(
+    sub: Subscription,
+    i: usize,
+    addr: String,
+    slice_pub: Arc<Published>,
+    writer: Arc<Mutex<TcpStream>>,
+    health: Arc<LinkHealth>,
+    over: Arc<AtomicBool>,
+    retry: RetryPolicy,
+) {
+    let shape = sub.shape();
+    // Deterministic per-(address, slice) jitter stream, mirroring the
+    // sharded worker's seeding.
+    let mut rng =
+        Pcg64::seeded(fnv1a64(FNV1A64_INIT, addr.as_bytes()) ^ sub.slice_id);
+    let mut reader = sub.stream;
+    'session: loop {
+        match pump_subscription(
+            &mut reader,
+            &addr,
+            shape,
+            &slice_pub,
+            &writer,
+            retry.heartbeat,
+        ) {
+            SubEnd::Shutdown => {
+                health.mark_clean();
+                log_info!(
+                    "serve::replica: θ server {addr} announced SHUTDOWN — \
+                     serving the final posterior from here on"
+                );
+                break 'session;
+            }
+            SubEnd::LinkDead => {}
+        }
+        health.mark_down(i);
+        if over.load(Ordering::SeqCst) {
+            break 'session;
+        }
+        let mut attempt = 0u32;
+        reader = loop {
+            if attempt >= retry.reconnect.max_retries {
+                log_warn!(
+                    "serve::replica: subscription to {addr} lost and the reconnect \
+                     budget is exhausted — serving stale until the staleness budget \
+                     runs out"
+                );
+                break 'session;
+            }
+            let delay = retry.reconnect.delay(attempt, &mut rng);
+            attempt += 1;
+            if sleep_poll(delay, &over) {
+                break 'session;
+            }
+            let s = match connect_subscribe(&addr, &retry) {
+                Ok(s) => s,
+                Err(e) => {
+                    log_warn!("serve::replica: resubscribe to {addr} failed: {e:#}");
+                    continue;
+                }
+            };
+            if s.shape() != shape {
+                log_warn!(
+                    "serve::replica: {addr} no longer matches the fleet \
+                     (layout/slice/topology changed) — abandoning the subscription"
+                );
+                break 'session;
+            }
+            let Ok(w) = s.stream.try_clone() else { continue };
+            // Resume at the newest θ the server holds — the handshake
+            // sync carries it, so the assembled floor can advance past
+            // the outage without waiting for the next training update.
+            if s.version > 0 {
+                slice_pub.publish_meta(s.version, s.theta, s.meta);
+            }
+            *writer.lock().unwrap() = w;
+            health.mark_up(i);
+            log_info!(
+                "serve::replica: subscription to {addr} re-established (θ v{})",
+                s.version
+            );
+            break s.stream;
+        };
+    }
+    // Session over for this slice: end its view so the (draining)
+    // assembler unwinds once every slice is done.
+    slice_pub.shutdown();
+}
+
+/// Accept PREDICT sessions until teardown (non-blocking accept with a
+/// 50 ms poll, like the parameter server's accept loop).
+fn accept_predicts(listener: TcpListener, ctx: Arc<PredictCtx>) {
+    let nonblocking = listener.set_nonblocking(true).is_ok();
+    loop {
+        match listener.accept() {
+            Ok((s, _peer)) => {
+                if ctx.over.load(Ordering::SeqCst) {
+                    break;
+                }
+                if s.set_nonblocking(false).is_err() {
+                    continue;
+                }
+                let ctx = Arc::clone(&ctx);
+                std::thread::spawn(move || handle_predict_conn(s, ctx));
+            }
+            Err(e) if nonblocking && e.kind() == std::io::ErrorKind::WouldBlock => {
+                if ctx.over.load(Ordering::SeqCst) {
+                    break;
+                }
+                std::thread::sleep(Duration::from_millis(50));
+            }
+            Err(e) => {
+                if ctx.over.load(Ordering::SeqCst) {
+                    break;
+                }
+                log_warn!("serve::replica: accept failed: {e}");
+                std::thread::sleep(Duration::from_millis(50));
+            }
+        }
+    }
+}
+
+/// One PREDICT session, replica side: SUBSCRIBE(predict) → header-only
+/// POSTERIOR-SYNC ack, then answer each PREDICT with a PREDICTION or a
+/// typed REJECT.  REJECTs are per-request: the session survives them.
+fn handle_predict_conn(stream: TcpStream, ctx: Arc<PredictCtx>) {
+    // Clone the batch-server handle up front; `None` means the replica
+    // is already tearing down.
+    let Some(client) = ctx.client.lock().unwrap().clone() else { return };
+    let _ = stream.set_nodelay(true);
+    let _ = stream.set_write_timeout(Some(ctx.cfg.retry.write_timeout));
+    let _ = stream.set_read_timeout(Some(ctx.cfg.retry.handshake_timeout));
+    let peer = stream.peer_addr().map(|a| a.to_string()).unwrap_or_else(|_| "?".into());
+    let Some(writer) = ctx.register(&stream) else { return };
+    let mut reader = stream;
+    let mut scratch = Vec::new();
+    let first = wire::read_frame_capped(&mut reader, &mut scratch, MAX_HANDSHAKE_FRAME_LEN);
+    match first {
+        Ok(Frame::Subscribe { proto, scope }) if proto >= PROTO_NT2 => {
+            if scope != SUBSCRIBE_PREDICT {
+                // A replica holds an assembled posterior, not a θ-slice
+                // publish stream: posterior subscriptions belong on the
+                // slice servers.
+                let _ = send_frame(
+                    &writer,
+                    &Frame::Reject {
+                        id: 0,
+                        code: REJ_BAD_SCOPE,
+                        message: "replicas serve predict sessions; subscribe to the \
+                                  θ-slice servers for posterior streams"
+                            .into(),
+                    },
+                );
+                return;
+            }
+        }
+        Ok(Frame::Subscribe { .. }) => {
+            let msg = format!("predict sessions require rev {PROTO_NT2}");
+            let _ = send_frame(&writer, &Frame::Error { code: ERR_PROTO, message: msg });
+            return;
+        }
+        Ok(f) => {
+            let msg = format!("expected SUBSCRIBE, got kind {:#04x}", f.kind());
+            let _ = send_frame(&writer, &Frame::Error { code: ERR_MALFORMED, message: msg });
+            return;
+        }
+        Err(e) => {
+            let msg = format!("bad SUBSCRIBE: {e:#}");
+            let _ = send_frame(&writer, &Frame::Error { code: ERR_MALFORMED, message: msg });
+            return;
+        }
+    }
+    // Handshake ack: a header-only sync carrying (m, d, version) — the
+    // client learns the feature dimension without shipping θ.
+    let (m, d) = (ctx.layout.m as u64, ctx.layout.d as u64);
+    let ack = Frame::PosteriorSync {
+        m,
+        d,
+        slice_id: 0,
+        n_slices: 1,
+        start: 0,
+        end: ctx.layout.len() as u64,
+        version: ctx.cache.version().unwrap_or(0),
+        meta: PublishMeta::default(),
+        theta: vec![],
+    };
+    if send_frame(&writer, &ack).is_err() {
+        return;
+    }
+    let _ = reader.set_read_timeout(Some(ctx.cfg.retry.heartbeat));
+    let mut pinged = false;
+    let reject = |id: u64, code: u16, message: String| {
+        ctx.rejects.bump(code);
+        send_frame(&writer, &Frame::Reject { id, code, message })
+    };
+    loop {
+        let frame = match wire::read_frame_event(&mut reader, &mut scratch, MAX_FRAME_LEN) {
+            Ok(ReadEvent::Frame(f)) => {
+                pinged = false;
+                f
+            }
+            Ok(ReadEvent::IdleTimeout) => {
+                if pinged || send_frame(&writer, &Frame::Ping).is_err() {
+                    log_warn!(
+                        "serve::replica: predict client {peer} silent through PING + \
+                         grace — dropping the session"
+                    );
+                    break;
+                }
+                pinged = true;
+                continue;
+            }
+            Ok(ReadEvent::Eof) => break,
+            Err(e) => {
+                let msg = format!("malformed stream: {e:#}");
+                let _ = send_frame(&writer, &Frame::Error { code: ERR_MALFORMED, message: msg });
+                break;
+            }
+        };
+        match frame {
+            Frame::Predict { id, d: want_d, rows } => {
+                let k = rows.len() / want_d.max(1) as usize;
+                // ---- admission control: typed per-request verdicts ----
+                if want_d != d {
+                    let _ = reject(
+                        id,
+                        REJ_BAD_DIM,
+                        format!("inputs are {want_d}-dimensional but the model takes {d}"),
+                    );
+                    continue;
+                }
+                if let Some(stale) = ctx.health.stale_for() {
+                    if stale > ctx.cfg.staleness_budget {
+                        let _ = reject(
+                            id,
+                            REJ_STALE,
+                            format!(
+                                "posterior stale for {:.1}s (budget {:.1}s) — \
+                                 subscription down",
+                                stale.as_secs_f64(),
+                                ctx.cfg.staleness_budget.as_secs_f64()
+                            ),
+                        );
+                        continue;
+                    }
+                }
+                if ctx.cache.get().is_none() {
+                    let _ = reject(id, REJ_NOT_READY, "no posterior installed yet".into());
+                    continue;
+                }
+                let admitted = ctx.inflight.fetch_add(k, Ordering::SeqCst) + k;
+                if admitted > ctx.cfg.max_inflight_rows {
+                    ctx.inflight.fetch_sub(k, Ordering::SeqCst);
+                    let _ = reject(
+                        id,
+                        REJ_OVERLOAD,
+                        format!(
+                            "{admitted} rows in flight exceeds the admission ceiling {}",
+                            ctx.cfg.max_inflight_rows
+                        ),
+                    );
+                    continue;
+                }
+                // ---- admitted: microbatch through the shared server ----
+                let receivers: Option<Vec<_>> =
+                    rows.chunks_exact(d as usize).map(|row| client.submit(row)).collect();
+                let Some(receivers) = receivers else {
+                    ctx.inflight.fetch_sub(k, Ordering::SeqCst);
+                    break; // batch server gone: the replica is tearing down
+                };
+                let mut mean = Vec::with_capacity(k);
+                let mut var = Vec::with_capacity(k);
+                let mut version = u64::MAX;
+                let mut dead = false;
+                for rx in receivers {
+                    match rx.recv() {
+                        Ok(p) => {
+                            mean.push(p.mean);
+                            var.push(p.var);
+                            // A batch can straddle an install; report
+                            // the floor so the client never overclaims
+                            // freshness.
+                            version = version.min(p.version);
+                        }
+                        Err(_) => {
+                            dead = true;
+                            break;
+                        }
+                    }
+                }
+                ctx.inflight.fetch_sub(k, Ordering::SeqCst);
+                if dead {
+                    break;
+                }
+                let answer = Frame::Prediction { id, version, mean, var };
+                if send_frame(&writer, &answer).is_err() {
+                    break;
+                }
+            }
+            Frame::Ping => {
+                let _ = send_frame(&writer, &Frame::Pong);
+            }
+            Frame::Pong => {}
+            Frame::Error { code, message } => {
+                log_warn!(
+                    "serve::replica: predict client {peer} sent error {code}: {message}"
+                );
+                break;
+            }
+            f => {
+                let msg = format!("unexpected kind {:#04x} on a predict session", f.kind());
+                let _ = send_frame(&writer, &Frame::Error { code: ERR_MALFORMED, message: msg });
+                break;
+            }
+        }
+    }
+    let _ = reader.shutdown(std::net::Shutdown::Both);
+}
+
+/// One answered PREDICT, client side.
+#[derive(Clone, Debug)]
+pub enum PredictAnswer {
+    /// The posterior answer: θ version, predictive means, predictive
+    /// variances (one per input row).
+    Prediction { version: u64, mean: Vec<f64>, var: Vec<f64> },
+    /// Admission control said no (typed, non-fatal).
+    Rejected { code: u16, message: String },
+}
+
+/// The client half of a PREDICT session — used by `advgp loadgen`, the
+/// chaos suite, and any external caller.  [`PredictClient::predict`] is
+/// the simple lock-step form; [`PredictClient::into_split`] yields
+/// independently-owned send/receive halves for pipelined open-loop
+/// traffic.
+pub struct PredictClient {
+    reader: TcpStream,
+    writer: TcpStream,
+    scratch: Vec<u8>,
+    next_id: u64,
+    /// Model layout announced in the handshake ack.
+    pub m: usize,
+    pub d: usize,
+    /// θ version at handshake time.
+    pub version: u64,
+}
+
+impl PredictClient {
+    /// Dial a replica and run the SUBSCRIBE(predict) handshake.
+    pub fn connect(addr: &str) -> Result<Self> {
+        let mut reader = TcpStream::connect(addr)
+            .with_context(|| format!("connect predict session to {addr}"))?;
+        let _ = reader.set_nodelay(true);
+        let _ = reader.set_read_timeout(Some(Duration::from_secs(10)));
+        wire::write_frame(
+            &mut reader,
+            &Frame::Subscribe { proto: PROTO_VERSION, scope: SUBSCRIBE_PREDICT },
+        )
+        .context("send SUBSCRIBE")?;
+        let mut scratch = Vec::new();
+        let ack = wire::read_frame_capped(&mut reader, &mut scratch, MAX_HANDSHAKE_FRAME_LEN)
+            .with_context(|| format!("read predict handshake ack from {addr}"))?;
+        let (m, d, version) = match ack {
+            Frame::PosteriorSync { m, d, version, theta, .. } => {
+                ensure!(theta.is_empty(), "predict ack carried θ");
+                (m, d, version)
+            }
+            Frame::Error { code, message } => {
+                return Err(Rejected { code, message })
+                    .with_context(|| format!("{addr} rejected the predict session"))
+            }
+            Frame::Reject { code, message, .. } => {
+                bail!("{addr} rejected the predict session (code {code}: {message})")
+            }
+            f => bail!("{addr}: expected a sync ack, got kind {:#04x}", f.kind()),
+        };
+        let _ = reader.set_read_timeout(None);
+        let writer = reader.try_clone().context("clone predict stream")?;
+        Ok(Self {
+            reader,
+            writer,
+            scratch,
+            next_id: 0,
+            m: m as usize,
+            d: d as usize,
+            version,
+        })
+    }
+
+    /// Send one PREDICT (rows row-major, `rows.len() % d == 0`) without
+    /// waiting; returns the request id to correlate the answer.
+    pub fn send(&mut self, rows: &[f64]) -> Result<u64> {
+        ensure!(
+            !rows.is_empty() && rows.len() % self.d == 0,
+            "{} values is not a whole number of {}-dim rows",
+            rows.len(),
+            self.d
+        );
+        let id = self.next_id;
+        self.next_id += 1;
+        wire::write_frame(
+            &mut self.writer,
+            &Frame::Predict { id, d: self.d as u64, rows: rows.to_vec() },
+        )
+        .context("send PREDICT")?;
+        Ok(id)
+    }
+
+    /// Receive the next answer (answers arrive in request order on a
+    /// session — the replica handler is sequential per connection).
+    pub fn recv(&mut self) -> Result<(u64, PredictAnswer)> {
+        loop {
+            let frame = wire::read_frame(&mut self.reader, &mut self.scratch)
+                .context("read prediction")?;
+            match frame {
+                Frame::Prediction { id, version, mean, var } => {
+                    return Ok((id, PredictAnswer::Prediction { version, mean, var }))
+                }
+                Frame::Reject { id, code, message } => {
+                    return Ok((id, PredictAnswer::Rejected { code, message }))
+                }
+                Frame::Ping => {
+                    wire::write_frame(&mut self.writer, &Frame::Pong)
+                        .context("answer PING")?;
+                }
+                Frame::Pong => {}
+                Frame::Error { code, message } => {
+                    bail!("replica answered ERROR {code}: {message}")
+                }
+                Frame::Shutdown => bail!("replica shut the session down"),
+                f => bail!("unexpected kind {:#04x} on a predict session", f.kind()),
+            }
+        }
+    }
+
+    /// Lock-step predict: send one batch, wait for its answer.
+    pub fn predict(&mut self, rows: &[f64]) -> Result<PredictAnswer> {
+        let want = self.send(rows)?;
+        let (id, answer) = self.recv()?;
+        ensure!(id == want, "answer for request {id}, expected {want}");
+        Ok(answer)
+    }
+
+    /// Split into independently-owned halves for pipelined traffic
+    /// (sender thread + receiver thread, correlated by request id).
+    pub fn into_split(self) -> (PredictSender, PredictReceiver) {
+        (
+            PredictSender { writer: self.writer, d: self.d, next_id: self.next_id },
+            PredictReceiver { reader: self.reader, scratch: self.scratch },
+        )
+    }
+}
+
+/// The send half of a split [`PredictClient`].
+pub struct PredictSender {
+    writer: TcpStream,
+    d: usize,
+    next_id: u64,
+}
+
+impl PredictSender {
+    pub fn send(&mut self, rows: &[f64]) -> Result<u64> {
+        ensure!(
+            !rows.is_empty() && rows.len() % self.d == 0,
+            "{} values is not a whole number of {}-dim rows",
+            rows.len(),
+            self.d
+        );
+        let id = self.next_id;
+        self.next_id += 1;
+        wire::write_frame(
+            &mut self.writer,
+            &Frame::Predict { id, d: self.d as u64, rows: rows.to_vec() },
+        )
+        .context("send PREDICT")?;
+        Ok(id)
+    }
+
+    /// Half-close the send direction: the replica sees EOF after the
+    /// in-flight answers drain, ending the session cleanly.
+    pub fn finish(self) {
+        let _ = self.writer.shutdown(std::net::Shutdown::Write);
+    }
+}
+
+/// The receive half of a split [`PredictClient`].
+pub struct PredictReceiver {
+    reader: TcpStream,
+    scratch: Vec<u8>,
+}
+
+impl PredictReceiver {
+    /// Next answer, or `None` on a clean end-of-session.
+    pub fn recv(&mut self) -> Result<Option<(u64, PredictAnswer)>> {
+        loop {
+            let frame =
+                match wire::read_frame_opt(&mut self.reader, &mut self.scratch)? {
+                    Some(f) => f,
+                    None => return Ok(None),
+                };
+            match frame {
+                Frame::Prediction { id, version, mean, var } => {
+                    return Ok(Some((id, PredictAnswer::Prediction { version, mean, var })))
+                }
+                Frame::Reject { id, code, message } => {
+                    return Ok(Some((id, PredictAnswer::Rejected { code, message })))
+                }
+                Frame::Ping | Frame::Pong => {} // receive half can't answer; harmless
+                Frame::Error { code, message } => {
+                    bail!("replica answered ERROR {code}: {message}")
+                }
+                Frame::Shutdown => return Ok(None),
+                f => bail!("unexpected kind {:#04x} on a predict session", f.kind()),
+            }
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    /// The staleness clock: starts on the first down link, survives
+    /// partial repair, clears on full repair, and is permanently
+    /// silenced by a clean shutdown.
+    #[test]
+    fn link_health_staleness_clock() {
+        let h = LinkHealth::new(2);
+        assert!(h.stale_for().is_none(), "healthy fleet is not stale");
+        h.mark_down(0);
+        assert!(h.stale_for().is_some());
+        h.mark_down(1);
+        h.mark_up(0);
+        assert!(h.stale_for().is_some(), "one link still down");
+        h.mark_up(1);
+        assert!(h.stale_for().is_none(), "full repair clears the clock");
+        h.mark_down(0);
+        h.mark_clean();
+        assert!(h.stale_for().is_none(), "a finished model is final, not stale");
+        h.mark_down(1);
+        assert!(h.stale_for().is_none(), "post-shutdown link loss is expected");
+    }
+
+    /// REJECT tallies land on their own counters.
+    #[test]
+    fn reject_counters_tally_by_code() {
+        let c = RejectCounters::default();
+        c.bump(REJ_STALE);
+        c.bump(REJ_STALE);
+        c.bump(REJ_OVERLOAD);
+        c.bump(REJ_BAD_DIM);
+        c.bump(999); // unknown codes are ignored, not miscounted
+        assert_eq!(c.stale.load(Ordering::Relaxed), 2);
+        assert_eq!(c.overload.load(Ordering::Relaxed), 1);
+        assert_eq!(c.bad_dim.load(Ordering::Relaxed), 1);
+        assert_eq!(c.not_ready.load(Ordering::Relaxed), 0);
+        assert_eq!(c.total(), 4);
+    }
+}

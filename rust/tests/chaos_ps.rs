@@ -18,6 +18,13 @@
 //!   [`ServerStats::faults`], and survived by a reconnect;
 //! * the same seed replays the same fault trace, byte for byte.
 //!
+//! The serving-link matrix (ADVGPSV1, ISSUE 8) extends the same
+//! discipline to the read path: a severed or wedged replica
+//! *subscription* degrades typed (stale-serve inside the staleness
+//! budget, `REJECT(REJ_STALE)` past it), reconnect-with-backoff resumes
+//! at the newest θ version, and the same plan replays the same serving
+//! fault trace.
+//!
 //! [`ServerStats::faults`]: advgp::ps::metrics::ServerStats
 
 use advgp::data::{kmeans, synth, Dataset, Standardizer};
@@ -29,9 +36,10 @@ use advgp::ps::net::{sharded_worker_loop_with, NetServer, ReconnectPolicy, Retry
 use advgp::ps::wire::{self, Frame};
 use advgp::ps::worker::{WorkerProfile, WorkerSource};
 use advgp::ps::{FaultEvent, FaultPlan, FaultProxy, FaultRule, RunResult};
+use advgp::serve::{PredictAnswer, PredictClient, Replica, ReplicaConfig};
 use advgp::util::rng::Pcg64;
 use std::net::{TcpListener, TcpStream};
-use std::time::Duration;
+use std::time::{Duration, Instant};
 
 /// Standardized friedman problem + kmeans-initialized θ (the idiom
 /// shared with `rust/tests/sharded_ps.rs`).
@@ -385,4 +393,307 @@ fn same_seed_replays_the_same_fault_trace() {
     let second = run_once();
     assert!(!first.is_empty(), "the seeded plan must have applied faults");
     assert_eq!(first, second, "same seed must replay the same fault trace");
+}
+
+// ---------------------------------------------------------------------
+// ADVGPSV1 serving links (ISSUE 8): the same chaos discipline aimed at
+// a replica's posterior subscription instead of a worker's push stream.
+// The training fleet stays healthy (workers dial the server directly);
+// only the read path runs through the proxy, so every assertion is
+// about *serving* degradation, never about convergence.
+// ---------------------------------------------------------------------
+
+/// A read-path chaos session with a *recoverable* plan: trainer first
+/// (its accept loop answers the subscription), then the replica through
+/// the fault proxy, then — only once every planned fault has fired
+/// (idle heartbeats drive the frame clock) and the link has had a
+/// moment to finish its repair — the workers.  Holding the workers back
+/// makes the fault schedule deterministic: the run cannot finish, and
+/// the publish stream cannot shut down, before the chaos has played
+/// out.  Returns the proxy's applied-fault trace and the θ version a
+/// post-recovery PREDICT reports.
+fn run_served_recovery(
+    plan: FaultPlan,
+    expect_applied: usize,
+    seed: u64,
+) -> (Vec<FaultRule>, u64) {
+    let (train_ds, _test, theta, layout) = setup(400, 6, seed);
+    let shards = train_ds.shard(2);
+    let max_updates = 12u64;
+    let net = NetServer::bind("127.0.0.1:0").unwrap();
+    let addr = net.local_addr().to_string();
+    let mut proxy = FaultProxy::start(&addr, plan).unwrap();
+    let sub_addr = proxy.addr();
+    let trainer = {
+        let theta0 = theta.data.clone();
+        std::thread::spawn(move || {
+            train_remote(&chaos_cfg(layout, max_updates), theta0, net, 2, None)
+        })
+    };
+    let replica = Replica::start(
+        "127.0.0.1:0",
+        std::slice::from_ref(&sub_addr),
+        ReplicaConfig { retry: chaos_retry(), ..Default::default() },
+    )
+    .expect("replica subscribes through the proxy");
+    let deadline = Instant::now() + Duration::from_secs(15);
+    while proxy.trace().len() < expect_applied {
+        assert!(
+            Instant::now() < deadline,
+            "planned serving faults never fired (trace: {:?})",
+            proxy.trace()
+        );
+        std::thread::sleep(Duration::from_millis(25));
+    }
+    // One more beat: the last fault has fired but the reconnect behind
+    // it (a few tens of ms of backoff) may still be in flight.
+    std::thread::sleep(Duration::from_secs(1));
+    let workers: Vec<_> = shards
+        .into_iter()
+        .enumerate()
+        .map(|(k, shard)| {
+            let addr = addr.clone();
+            std::thread::spawn(move || {
+                let _ = sharded_worker_loop_with(
+                    &[addr],
+                    Some(k),
+                    WorkerSource::Memory(shard),
+                    native_factory(layout),
+                    one_thread(),
+                    chaos_retry(),
+                );
+            })
+        })
+        .collect();
+    let run = trainer.join().expect("trainer thread");
+    for w in workers {
+        w.join().expect("worker thread");
+    }
+    assert_eq!(
+        run.stats.updates, max_updates,
+        "training is healthy — only the read path is faulted"
+    );
+    assert!(
+        replica.wait_version(max_updates, Duration::from_secs(30)),
+        "replica never resumed to θ v{max_updates} after the outage \
+         (stuck at {:?})",
+        replica.version()
+    );
+    assert!(
+        replica.wait_trainer_end(Duration::from_secs(10)),
+        "the clean SHUTDOWN never reached the replica"
+    );
+    let mut client = PredictClient::connect(&replica.predict_addr().to_string())
+        .expect("predict session after recovery");
+    let version = match client.predict(&[0.3, -0.1, 0.25, -0.6]).expect("predict") {
+        PredictAnswer::Prediction { version, .. } => version,
+        PredictAnswer::Rejected { code, message } => {
+            panic!("recovered replica rejected (code {code}: {message})")
+        }
+    };
+    assert_eq!(
+        replica.rejects().total(),
+        0,
+        "an outage repaired inside the staleness budget must not reject"
+    );
+    drop(client);
+    let _ = replica.shutdown();
+    let trace = proxy.trace();
+    proxy.shutdown();
+    (trace, version)
+}
+
+/// An unrecoverable subscription outage degrades *typed*: the replica
+/// stale-serves its last posterior inside the staleness budget, then
+/// answers `REJECT(REJ_STALE)` — and the predict session survives the
+/// rejects instead of being dropped.
+#[test]
+fn severed_subscription_stale_serves_then_rejects_typed() {
+    let (train_ds, _test, theta, layout) = setup(400, 6, 59);
+    let shards = train_ds.shard(2);
+    let max_updates = 12u64;
+    // conn 0 (the initial subscription) loses its stream right after
+    // the handshake; every reconnect attempt (conns 1..) is severed
+    // during *its* handshake, so the outage outlives the reconnect
+    // budget (8 attempts) and the staleness clock runs out.
+    let mut rules = vec![FaultRule {
+        conn: Some(0),
+        dir: Direction::ServerToClient,
+        frame: 1,
+        event: FaultEvent::Sever,
+    }];
+    for c in 1..=9 {
+        rules.push(FaultRule {
+            conn: Some(c),
+            dir: Direction::ServerToClient,
+            frame: 0,
+            event: FaultEvent::Sever,
+        });
+    }
+    let conn0_sever = rules[0];
+    let net = NetServer::bind("127.0.0.1:0").unwrap();
+    let addr = net.local_addr().to_string();
+    let mut proxy = FaultProxy::start(&addr, FaultPlan::new(rules)).unwrap();
+    let sub_addr = proxy.addr();
+    let trainer = {
+        let theta0 = theta.data.clone();
+        std::thread::spawn(move || {
+            train_remote(&chaos_cfg(layout, max_updates), theta0, net, 2, None)
+        })
+    };
+    let replica = Replica::start(
+        "127.0.0.1:0",
+        std::slice::from_ref(&sub_addr),
+        ReplicaConfig {
+            staleness_budget: Duration::from_millis(400),
+            retry: chaos_retry(),
+            ..Default::default()
+        },
+    )
+    .expect("replica subscribes through the proxy");
+
+    // Predict continuously across the sever.  The sequence must be:
+    // Predictions (fresh, then stale-within-budget) … then REJ_STALE.
+    let mut client = PredictClient::connect(&replica.predict_addr().to_string())
+        .expect("predict session");
+    let rows = [0.2, -0.4, 0.6, -0.8];
+    let deadline = Instant::now() + Duration::from_secs(20);
+    let mut served = 0u64;
+    let (code, message) = loop {
+        assert!(
+            Instant::now() < deadline,
+            "REJ_STALE never arrived ({served} predictions answered)"
+        );
+        match client.predict(&rows).expect("session must survive the outage") {
+            PredictAnswer::Prediction { .. } => served += 1,
+            PredictAnswer::Rejected { code, message } => break (code, message),
+        }
+        std::thread::sleep(Duration::from_millis(25));
+    };
+    assert_eq!(code, wire::REJ_STALE, "wrong reject: code {code} ({message})");
+    assert!(
+        served >= 1,
+        "the replica must stale-serve within the budget before rejecting"
+    );
+    // REJECT is per-request, not a session fault: the same session's
+    // next predict draws another typed verdict, not a dead socket.
+    match client.predict(&rows).expect("session alive after REJECT") {
+        PredictAnswer::Rejected { code, .. } => assert_eq!(code, wire::REJ_STALE),
+        PredictAnswer::Prediction { .. } => {
+            panic!("the link cannot repair — every reconnect is severed")
+        }
+    }
+    assert!(replica.rejects().total() >= 2, "reject tallies must record the verdicts");
+
+    // The training fleet was never touched: release the workers and the
+    // run completes normally.
+    let workers: Vec<_> = shards
+        .into_iter()
+        .enumerate()
+        .map(|(k, shard)| {
+            let addr = addr.clone();
+            std::thread::spawn(move || {
+                let _ = sharded_worker_loop_with(
+                    &[addr],
+                    Some(k),
+                    WorkerSource::Memory(shard),
+                    native_factory(layout),
+                    one_thread(),
+                    chaos_retry(),
+                );
+            })
+        })
+        .collect();
+    let run = trainer.join().expect("trainer thread");
+    for w in workers {
+        w.join().expect("worker thread");
+    }
+    assert_eq!(run.stats.updates, max_updates);
+    assert_finite(&run.theta, "read-path chaos");
+    let trace = proxy.trace();
+    assert!(
+        trace.contains(&conn0_sever),
+        "the subscription sever must be in the trace: {trace:?}"
+    );
+    assert!(
+        trace.len() >= 2,
+        "at least one reconnect handshake must also have been severed: {trace:?}"
+    );
+    drop(client);
+    let _ = replica.shutdown();
+    proxy.shutdown();
+}
+
+/// A severed subscription repaired inside the staleness budget:
+/// reconnect-with-backoff survives a second sever during the first
+/// retry's handshake, resumes at the newest θ the server holds, and the
+/// replica ends the run at the trainer's final version with zero
+/// rejects.
+#[test]
+fn severed_subscription_reconnects_and_resumes_at_newest_theta() {
+    let sever0 = FaultRule {
+        conn: Some(0),
+        dir: Direction::ServerToClient,
+        frame: 1,
+        event: FaultEvent::Sever,
+    };
+    let sever1 = FaultRule {
+        conn: Some(1),
+        dir: Direction::ServerToClient,
+        frame: 0,
+        event: FaultEvent::Sever,
+    };
+    let (trace, version) =
+        run_served_recovery(FaultPlan::new(vec![sever0, sever1]), 2, 61);
+    assert_eq!(trace, vec![sever0, sever1]);
+    assert_eq!(version, 12, "post-recovery predicts must report the final θ version");
+}
+
+/// A wedged subscription (TCP-alive, protocol-silent) is detected by
+/// the replica-side PING/PONG heartbeat within ~two windows and
+/// resolved by re-establishing the link.
+#[test]
+fn wedged_subscription_is_detected_by_heartbeat_and_repaired() {
+    let wedge = FaultRule {
+        conn: Some(0),
+        dir: Direction::ServerToClient,
+        frame: 1,
+        event: FaultEvent::Wedge,
+    };
+    let (trace, version) = run_served_recovery(FaultPlan::new(vec![wedge]), 1, 67);
+    assert_eq!(trace, vec![wedge]);
+    assert_eq!(version, 12);
+}
+
+/// Serving-link replay determinism: a plan whose sever frame is *drawn
+/// from a seed* (pinned to the subscription's publish stream, the
+/// serving-chaos direction) applies the identical fault trace on two
+/// independent end-to-end runs — same seed, same serving chaos.
+#[test]
+fn same_seed_replays_the_same_serving_fault_trace() {
+    let drawn = FaultPlan::seeded(0x5EED_5E12, &[FaultEvent::Sever], 1..4);
+    assert_eq!(
+        drawn,
+        FaultPlan::seeded(0x5EED_5E12, &[FaultEvent::Sever], 1..4),
+        "same seed must yield the same plan"
+    );
+    let mut rules = drawn.rules;
+    for r in rules.iter_mut() {
+        // Serving chaos lives on the server→replica publish stream of
+        // the initial subscription; frames 1.. spare the handshake.
+        r.conn = Some(0);
+        r.dir = Direction::ServerToClient;
+    }
+    rules.push(FaultRule {
+        conn: Some(1),
+        dir: Direction::ServerToClient,
+        frame: 0,
+        event: FaultEvent::Sever,
+    });
+    let plan = FaultPlan::new(rules);
+    let (first, v1) = run_served_recovery(plan.clone(), 2, 71);
+    let (second, v2) = run_served_recovery(plan, 2, 71);
+    assert!(!first.is_empty(), "the seeded serving plan must have applied faults");
+    assert_eq!(first, second, "same seed must replay the same serving fault trace");
+    assert_eq!((v1, v2), (12, 12));
 }

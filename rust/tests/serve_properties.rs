@@ -1,0 +1,298 @@
+//! Property tests for the serving substrate (ISSUE 8 satellites):
+//! [`BatchServer`] flush semantics, the bounded [`Stats`] quantile
+//! reservoir's edges, and the version-gated monotone install contract
+//! of [`PosteriorCache`] under concurrency.
+//!
+//! These pin behaviour the read-path replica fleet leans on: the batch
+//! server's max-rows flush must short-circuit the deadline (tail
+//! latency under load), the deadline must flush partial batches (tail
+//! latency when idle), and the posterior cache must never publish a
+//! lower version or a torn snapshot no matter how installs race.
+
+use advgp::gp::{Theta, ThetaLayout};
+use advgp::linalg::Mat;
+use advgp::serve::{BatchConfig, BatchServer, PosteriorCache};
+use advgp::util::rng::Pcg64;
+use advgp::util::Stats;
+use std::sync::atomic::{AtomicBool, Ordering};
+use std::sync::Arc;
+use std::time::{Duration, Instant};
+
+/// A small posterior cache seeded at version 1 (mirrors the batch
+/// server's own unit-test fixture).
+fn seeded_cache(m: usize, d: usize) -> (Arc<PosteriorCache>, Theta) {
+    let layout = ThetaLayout::new(m, d);
+    let mut rng = Pcg64::seeded(77);
+    let z = Mat::from_vec(m, d, (0..m * d).map(|_| rng.normal()).collect());
+    let mut th = Theta::init(layout, &z);
+    for v in th.mu_mut() {
+        *v = rng.normal();
+    }
+    let cache = Arc::new(PosteriorCache::new(layout));
+    cache.install(1, &th.data);
+    (cache, th)
+}
+
+// ---------------------------------------------------------------- //
+// BatchServer flush semantics                                       //
+// ---------------------------------------------------------------- //
+
+/// A full batch flushes immediately: with a deadline far beyond the
+/// test's patience, `max_rows` staged rows must come back long before
+/// that deadline could have fired.
+#[test]
+fn max_rows_flush_short_circuits_the_deadline() {
+    let (cache, _th) = seeded_cache(4, 2);
+    let cfg = BatchConfig { max_rows: 4, max_delay: Duration::from_secs(30) };
+    let (server, client) = BatchServer::start(cache, None, cfg);
+    let row = [0.25, -0.5];
+    let t0 = Instant::now();
+    let receivers: Vec<_> =
+        (0..4).map(|_| client.submit(&row).expect("server alive")).collect();
+    for r in receivers {
+        r.recv().expect("reply");
+    }
+    let waited = t0.elapsed();
+    assert!(
+        waited < Duration::from_secs(5),
+        "full batch waited {waited:?} — the deadline was consulted instead of \
+         the row count"
+    );
+    drop(client);
+    let report = server.join();
+    assert_eq!(report.rows, 4);
+    assert_eq!(report.batches, 1, "exactly one full-batch flush");
+}
+
+/// A partial batch flushes at the deadline: fewer than `max_rows` rows
+/// must still be answered once `max_delay` elapses.
+#[test]
+fn deadline_flushes_a_partial_batch() {
+    let (cache, _th) = seeded_cache(4, 2);
+    let cfg = BatchConfig { max_rows: 1000, max_delay: Duration::from_millis(30) };
+    let (server, client) = BatchServer::start(cache, None, cfg);
+    let row = [0.1, 0.2];
+    let receivers: Vec<_> =
+        (0..3).map(|_| client.submit(&row).expect("server alive")).collect();
+    let t0 = Instant::now();
+    for r in receivers {
+        r.recv().expect("reply");
+    }
+    assert!(
+        t0.elapsed() < Duration::from_secs(10),
+        "partial batch never flushed"
+    );
+    drop(client);
+    let report = server.join();
+    assert_eq!(report.rows, 3);
+    assert_eq!(report.batches, 1, "one deadline flush carrying all staged rows");
+    assert_eq!(report.batch_rows.max, 3.0);
+}
+
+/// `max_rows = 1` degenerates to one blocked call per row — batching
+/// off, still correct.
+#[test]
+fn single_row_batches_answer_every_row() {
+    let (cache, _th) = seeded_cache(4, 2);
+    let cfg = BatchConfig { max_rows: 1, max_delay: Duration::ZERO };
+    let (server, client) = BatchServer::start(cache, None, cfg);
+    let row = [0.4, 0.4];
+    for _ in 0..5 {
+        client.predict(&row).expect("server alive");
+    }
+    drop(client);
+    let report = server.join();
+    assert_eq!(report.rows, 5);
+    assert_eq!(report.batches, 5, "every row its own flush at max_rows=1");
+    assert_eq!(report.batch_rows.max, 1.0);
+}
+
+/// No traffic, no flushes: the serve loop blocks for a first row
+/// rather than spinning empty deadline flushes, and an idle server
+/// reports a zeroed ledger.
+#[test]
+fn idle_server_flushes_nothing() {
+    let (cache, _th) = seeded_cache(4, 2);
+    let cfg = BatchConfig { max_rows: 8, max_delay: Duration::from_millis(1) };
+    let (server, client) = BatchServer::start(cache, None, cfg);
+    std::thread::sleep(Duration::from_millis(50));
+    drop(client);
+    let report = server.join();
+    assert_eq!((report.rows, report.batches), (0, 0), "no empty-batch flushes");
+    assert_eq!(report.batch_rows.n, 0);
+}
+
+// ---------------------------------------------------------------- //
+// Stats: 512-slot reservoir quantile edges                          //
+// ---------------------------------------------------------------- //
+
+/// While n ≤ the reservoir capacity every sample is retained, so
+/// quantiles are exact order statistics — including n = 1 and n = 512
+/// exactly at the boundary.
+#[test]
+fn reservoir_quantiles_are_exact_below_capacity() {
+    // n = 1: every quantile is the lone sample.
+    let mut s = Stats::new();
+    s.push(7.5);
+    for q in [0.0, 0.5, 0.999, 1.0] {
+        assert_eq!(s.quantile(q), 7.5);
+    }
+    // n = 512 (the capacity boundary), pushed in adversarial (reversed)
+    // order: still exact.
+    let mut s = Stats::new();
+    for x in (1..=512).rev() {
+        s.push(x as f64);
+    }
+    assert_eq!(s.n, 512);
+    assert_eq!(s.quantile(0.0), 1.0);
+    assert_eq!(s.quantile(1.0), 512.0);
+    // index round(511·q), 0-based over the sorted sample.
+    assert_eq!(s.quantile(0.5), 257.0);
+    assert_eq!(s.quantile(0.99), 507.0);
+    // Welford agrees with the closed form for 1..=512.
+    assert!((s.mean() - 256.5).abs() < 1e-9);
+}
+
+/// Empty stats answer NaN, not a panic.
+#[test]
+fn empty_reservoir_quantile_is_nan() {
+    let s = Stats::new();
+    assert!(s.quantile(0.5).is_nan());
+}
+
+/// Far beyond capacity (n ≫ 512) the reservoir is a uniform sample:
+/// quantile estimates must stay inside the observed range, be monotone
+/// in q, and land near the truth for a uniform stream — while the
+/// exact min/max/mean stay exact (they bypass the reservoir).
+#[test]
+fn reservoir_quantiles_stay_sane_far_beyond_capacity() {
+    let n = 200_000u64;
+    let mut s = Stats::new();
+    for i in 0..n {
+        s.push(i as f64);
+    }
+    assert_eq!(s.n, n);
+    assert_eq!(s.min, 0.0);
+    assert_eq!(s.max, (n - 1) as f64);
+    assert!((s.mean() - (n - 1) as f64 / 2.0).abs() < 1e-6 * n as f64);
+    let qs = [0.01, 0.25, 0.5, 0.75, 0.99];
+    let mut prev = f64::NEG_INFINITY;
+    for &q in &qs {
+        let est = s.quantile(q);
+        assert!(est >= s.min && est <= s.max, "q={q}: {est} outside range");
+        assert!(est >= prev, "q={q}: quantiles not monotone");
+        prev = est;
+        // A 512-point uniform sample pins quantiles to within a few
+        // percentage points with overwhelming probability; the internal
+        // RNG is fixed-seed so this is deterministic, not flaky.
+        let true_q = q * (n - 1) as f64;
+        assert!(
+            (est - true_q).abs() < 0.08 * n as f64,
+            "q={q}: estimate {est} vs truth {true_q}"
+        );
+    }
+    // Determinism: the same push sequence reproduces the same reservoir.
+    let mut s2 = Stats::new();
+    for i in 0..n {
+        s2.push(i as f64);
+    }
+    for &q in &qs {
+        assert_eq!(s.quantile(q), s2.quantile(q), "fixed-seed reservoir drifted");
+    }
+}
+
+// ---------------------------------------------------------------- //
+// PosteriorCache: version-gated monotone installs under races       //
+// ---------------------------------------------------------------- //
+
+/// θ deterministically derived from (base, version): every coordinate
+/// carries the version, so a torn snapshot (coordinates from two
+/// versions) or a mislabeled one (gp built from a different version
+/// than the tag) cannot go unnoticed.
+fn theta_for_version(base: &Theta, v: u64) -> Vec<f64> {
+    base.data.iter().map(|&x| x + v as f64 * 1e-6).collect()
+}
+
+/// Concurrent stale/fresh installs: the cache must end at the maximum
+/// version, never regress at any intermediate observation, and every
+/// snapshot a reader clones must be internally consistent (version tag
+/// matches the θ the posterior was built from, bitwise).
+#[test]
+fn concurrent_installs_are_version_gated_and_untorn() {
+    let (_cache, base) = seeded_cache(4, 2);
+    let layout = base.layout;
+    let cache = Arc::new(PosteriorCache::new(layout));
+    let max_v = 24u64;
+    let writers = 4u64;
+    let stop = Arc::new(AtomicBool::new(false));
+
+    // Reader: version must be non-decreasing, snapshots never torn.
+    let reader = {
+        let cache = Arc::clone(&cache);
+        let base = base.clone();
+        let stop = Arc::clone(&stop);
+        std::thread::spawn(move || {
+            let mut last = 0u64;
+            let mut observed = 0usize;
+            while !stop.load(Ordering::SeqCst) {
+                if let Some(p) = cache.get() {
+                    assert!(
+                        p.version >= last,
+                        "published version regressed: {} after {last}",
+                        p.version
+                    );
+                    last = p.version;
+                    let expect = theta_for_version(&base, p.version);
+                    for (i, (a, b)) in
+                        expect.iter().zip(&p.gp.theta.data).enumerate()
+                    {
+                        assert_eq!(
+                            a.to_bits(),
+                            b.to_bits(),
+                            "torn snapshot at v{}: θ[{i}]",
+                            p.version
+                        );
+                    }
+                    observed += 1;
+                }
+                std::thread::yield_now();
+            }
+            observed
+        })
+    };
+
+    // Writers: interleaved stale and fresh installs.  Writer w installs
+    // versions w+1, w+1+W, w+1+2W, … — so at any moment some writers
+    // are behind the published version (their installs must be dropped)
+    // and some are ahead.
+    std::thread::scope(|scope| {
+        for w in 0..writers {
+            let cache = Arc::clone(&cache);
+            let base = base.clone();
+            scope.spawn(move || {
+                let mut v = w + 1;
+                while v <= max_v {
+                    let accepted = cache.install(v, &theta_for_version(&base, v));
+                    if accepted {
+                        // An accepted install must be visible at ≥ v.
+                        assert!(cache.version().unwrap() >= v);
+                    }
+                    v += writers;
+                }
+                // Re-offering old versions after the fact must be
+                // refused (monotone gate, not last-writer-wins).
+                assert!(!cache.install(1, &theta_for_version(&base, 1)));
+            });
+        }
+    });
+    stop.store(true, Ordering::SeqCst);
+    let observed = reader.join().unwrap();
+    assert!(observed > 0, "reader never saw a snapshot");
+    assert_eq!(cache.version(), Some(max_v), "cache settled below the max version");
+    // The surviving posterior is exactly the max version's θ.
+    let final_post = cache.get().unwrap();
+    let expect = theta_for_version(&base, max_v);
+    for (a, b) in expect.iter().zip(&final_post.gp.theta.data) {
+        assert_eq!(a.to_bits(), b.to_bits());
+    }
+}

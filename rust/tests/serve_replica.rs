@@ -1,0 +1,291 @@
+//! Integration: the read-path replica fleet (ADVGPSV1, ISSUE 8).
+//!
+//! The acceptance criteria pinned here:
+//! * a replica subscribed to a τ=0 loopback training run (S ∈ {1, 2}
+//!   slice servers) converges to the trainer's final θ version with a
+//!   posterior **bitwise-equal** to an in-process [`PosteriorCache`]
+//!   installed from the run's returned θ — and its over-the-wire
+//!   PREDICT answers are bitwise-equal to in-process predictions;
+//! * after the trainer's clean SHUTDOWN the replica keeps serving the
+//!   final posterior (a finished model is final, not stale);
+//! * admission control is typed and per-request: a bad-dimension
+//!   PREDICT draws `REJECT(REJ_BAD_DIM)` and the session survives it;
+//! * the `serve_fleet` smoke: two replicas behind the open-loop load
+//!   generator answer every request with zero rejects and consistent θ
+//!   versions (the CI step of the same name runs this test).
+
+use advgp::data::{kmeans, synth, Dataset, Standardizer};
+use advgp::gp::{Theta, ThetaLayout};
+use advgp::grad::native_factory;
+use advgp::ps::coordinator::{train_remote, train_remote_sharded, TrainConfig};
+use advgp::ps::net::{remote_worker_loop, sharded_worker_loop, NetServer};
+use advgp::ps::worker::{WorkerProfile, WorkerSource};
+use advgp::ps::RunResult;
+use advgp::serve::{
+    loadgen, LoadgenConfig, PosteriorCache, PredictAnswer, PredictClient, Replica,
+    ReplicaConfig,
+};
+use advgp::util::rng::Pcg64;
+use std::time::Duration;
+
+const UPDATES: u64 = 20;
+
+/// Standardized friedman problem + kmeans-initialized θ (the same
+/// setup the sharded-PS suite trains on).
+fn setup(n: usize, m: usize, seed: u64) -> (Dataset, Theta, ThetaLayout) {
+    let mut ds = synth::friedman(n, 4, 0.4, seed);
+    let mut rng = Pcg64::seeded(seed);
+    ds.shuffle(&mut rng);
+    let st = Standardizer::fit(&ds);
+    st.apply(&mut ds);
+    let layout = ThetaLayout::new(m, 4);
+    let z = kmeans::kmeans(&ds.x, m, 15, &mut rng);
+    let theta = Theta::init(layout, &z);
+    (ds, theta, layout)
+}
+
+fn one_thread() -> WorkerProfile {
+    WorkerProfile { threads: 1, ..Default::default() }
+}
+
+fn assert_bitwise(a: &[f64], b: &[f64], what: &str) {
+    assert_eq!(a.len(), b.len(), "{what}: length");
+    for (i, (x, y)) in a.iter().zip(b).enumerate() {
+        assert_eq!(x.to_bits(), y.to_bits(), "{what}: [{i}] diverged ({x} vs {y})");
+    }
+}
+
+/// Run a τ=0 loopback training run over `servers` slice servers with
+/// `replicas` subscribed replicas, and return (train result, replicas).
+/// Order matters: the trainer's accept loops must be live before the
+/// replicas subscribe, and the replicas must subscribe before the
+/// workers exist (training cannot end without them, so no subscription
+/// can miss the run).
+fn train_with_replicas(
+    ds: &Dataset,
+    theta0: &Theta,
+    layout: ThetaLayout,
+    servers: usize,
+    replicas: usize,
+) -> (RunResult, Vec<Replica>) {
+    let nets: Vec<NetServer> =
+        (0..servers).map(|_| NetServer::bind("127.0.0.1:0").unwrap()).collect();
+    let addrs: Vec<String> = nets.iter().map(|n| n.local_addr().to_string()).collect();
+    let trainer = {
+        let theta0 = theta0.data.clone();
+        std::thread::spawn(move || {
+            let mut cfg = TrainConfig::new(layout);
+            cfg.tau = 0;
+            cfg.max_updates = UPDATES;
+            cfg.eval_every_secs = 0.0;
+            if nets.len() > 1 {
+                train_remote_sharded(&cfg, theta0, nets, 2, None)
+            } else {
+                train_remote(&cfg, theta0, nets.into_iter().next().unwrap(), 2, None)
+            }
+        })
+    };
+    let fleet: Vec<Replica> = (0..replicas)
+        .map(|_| Replica::start("127.0.0.1:0", &addrs, ReplicaConfig::default()).unwrap())
+        .collect();
+    let workers: Vec<_> = ds
+        .shard(2)
+        .into_iter()
+        .enumerate()
+        .map(|(k, shard)| {
+            let addrs = addrs.clone();
+            std::thread::spawn(move || {
+                if addrs.len() > 1 {
+                    sharded_worker_loop(
+                        &addrs,
+                        Some(k),
+                        WorkerSource::Memory(shard),
+                        native_factory(layout),
+                        one_thread(),
+                    )
+                    .unwrap()
+                } else {
+                    remote_worker_loop(
+                        &addrs[0],
+                        Some(k),
+                        WorkerSource::Memory(shard),
+                        native_factory(layout),
+                        one_thread(),
+                    )
+                    .unwrap()
+                }
+            })
+        })
+        .collect();
+    let run = trainer.join().unwrap();
+    for w in workers {
+        w.join().unwrap();
+    }
+    (run, fleet)
+}
+
+/// Deterministic predict inputs.
+fn predict_rows(n: usize, d: usize, seed: u64) -> Vec<f64> {
+    let mut rng = Pcg64::seeded(seed);
+    (0..n * d).map(|_| rng.next_f64() * 2.0 - 1.0).collect()
+}
+
+/// The tentpole acceptance test: for S ∈ {1, 2} slice servers, a
+/// subscribed replica's posterior at the final θ version is bitwise
+/// identical to an in-process cache installed from the run's returned
+/// θ — and the answers it serves over the wire are bitwise identical
+/// to in-process predictions from that cache.
+#[test]
+fn replica_posterior_matches_in_process_cache_bitwise() {
+    let (ds, theta0, layout) = setup(400, 6, 41);
+    for servers in [1usize, 2] {
+        let (run, mut fleet) = train_with_replicas(&ds, &theta0, layout, servers, 1);
+        assert_eq!(run.stats.updates, UPDATES, "S={servers}: run length");
+        let replica = fleet.pop().unwrap();
+        assert!(
+            replica.wait_version(UPDATES, Duration::from_secs(30)),
+            "S={servers}: replica stuck at θ v{:?}",
+            replica.version()
+        );
+        // The trainer ended cleanly — the replica serves the final θ.
+        assert!(replica.wait_trainer_end(Duration::from_secs(30)));
+        assert_eq!(replica.version(), Some(UPDATES), "S={servers}: final version");
+
+        // In-process reference cache at the same version.
+        let cache = PosteriorCache::new(layout);
+        assert!(cache.install(UPDATES, &run.theta));
+        let reference = cache.get().unwrap();
+        let served = replica.cache().get().unwrap();
+        assert_eq!(served.version, UPDATES);
+        assert_bitwise(
+            &reference.gp.theta.data,
+            &served.gp.theta.data,
+            &format!("S={servers}: replica θ vs in-process θ"),
+        );
+
+        // Over-the-wire answers vs in-process predictions: bitwise.
+        let rows = predict_rows(16, layout.d, 99);
+        let xb = advgp::linalg::Mat::from_vec(16, layout.d, rows.clone());
+        let mut ws = advgp::gp::PredictWorkspace::new();
+        let (mut mean, mut var) = (Vec::new(), Vec::new());
+        reference.gp.predict_into(&xb, &mut ws, &mut mean, &mut var);
+        let mut client = PredictClient::connect(&replica.predict_addr().to_string()).unwrap();
+        assert_eq!((client.m, client.d), (layout.m, layout.d), "handshake layout");
+        assert_eq!(client.version, UPDATES, "handshake version");
+        match client.predict(&rows).unwrap() {
+            PredictAnswer::Prediction { version, mean: wm, var: wv } => {
+                assert_eq!(version, UPDATES, "S={servers}: answer version");
+                assert_bitwise(&mean, &wm, &format!("S={servers}: wire mean"));
+                assert_bitwise(&var, &wv, &format!("S={servers}: wire var"));
+            }
+            PredictAnswer::Rejected { code, message } => {
+                panic!("S={servers}: healthy replica rejected ({code}: {message})")
+            }
+        }
+        let report = replica.shutdown();
+        assert!(report.rows >= 16, "S={servers}: rows answered");
+    }
+}
+
+/// Admission control is per-request and typed: a PREDICT whose rows
+/// have the wrong feature dimension draws `REJECT(REJ_BAD_DIM)` and
+/// the session keeps working afterwards.
+#[test]
+fn bad_dimension_predict_is_rejected_without_killing_the_session() {
+    use advgp::ps::wire::{self, Frame, REJ_BAD_DIM};
+    let (ds, theta0, layout) = setup(300, 5, 43);
+    let (run, mut fleet) = train_with_replicas(&ds, &theta0, layout, 1, 1);
+    let replica = fleet.pop().unwrap();
+    assert!(replica.wait_version(run.stats.updates, Duration::from_secs(30)));
+
+    let mut client = PredictClient::connect(&replica.predict_addr().to_string()).unwrap();
+    // A raw PREDICT with d+1 columns (PredictClient's own send()
+    // guards the dimension, so craft the frame directly).
+    let wrong_d = (layout.d + 1) as u64;
+    let mut stream =
+        std::net::TcpStream::connect(replica.predict_addr()).expect("second session");
+    wire::write_frame(
+        &mut stream,
+        &Frame::Subscribe {
+            proto: wire::PROTO_VERSION,
+            scope: wire::SUBSCRIBE_PREDICT,
+        },
+    )
+    .unwrap();
+    let mut scratch = Vec::new();
+    let ack = wire::read_frame(&mut stream, &mut scratch).unwrap();
+    assert!(matches!(ack, Frame::PosteriorSync { ref theta, .. } if theta.is_empty()));
+    wire::write_frame(
+        &mut stream,
+        &Frame::Predict { id: 7, d: wrong_d, rows: vec![0.0; wrong_d as usize] },
+    )
+    .unwrap();
+    match wire::read_frame(&mut stream, &mut scratch).unwrap() {
+        Frame::Reject { id, code, .. } => {
+            assert_eq!((id, code), (7, REJ_BAD_DIM), "typed per-request verdict");
+        }
+        f => panic!("expected REJECT, got kind {:#04x}", f.kind()),
+    }
+    // The same session answers a well-formed PREDICT afterwards.
+    wire::write_frame(
+        &mut stream,
+        &Frame::Predict { id: 8, d: layout.d as u64, rows: vec![0.1; layout.d] },
+    )
+    .unwrap();
+    match wire::read_frame(&mut stream, &mut scratch).unwrap() {
+        Frame::Prediction { id, mean, .. } => {
+            assert_eq!(id, 8);
+            assert_eq!(mean.len(), 1);
+        }
+        f => panic!("expected PREDICTION, got kind {:#04x}", f.kind()),
+    }
+    // And the first client's session was never disturbed.
+    match client.predict(&predict_rows(2, layout.d, 5)).unwrap() {
+        PredictAnswer::Prediction { mean, .. } => assert_eq!(mean.len(), 2),
+        PredictAnswer::Rejected { code, message } => {
+            panic!("healthy request rejected ({code}: {message})")
+        }
+    }
+    assert_eq!(replica.rejects().bad_dim.load(std::sync::atomic::Ordering::Relaxed), 1);
+    replica.shutdown();
+}
+
+/// The `serve_fleet` smoke (mirrored by the CI step of the same name):
+/// two replicas subscribed to one training fleet, open-loop load across
+/// both — every request answered, zero rejects, every answer at the
+/// final θ version.
+#[test]
+fn serve_fleet_two_replicas_answer_offered_load() {
+    let (ds, theta0, layout) = setup(300, 5, 47);
+    let (run, fleet) = train_with_replicas(&ds, &theta0, layout, 1, 2);
+    for (i, r) in fleet.iter().enumerate() {
+        assert!(
+            r.wait_version(run.stats.updates, Duration::from_secs(30)),
+            "replica {i} stuck at θ v{:?}",
+            r.version()
+        );
+    }
+    let addrs: Vec<String> = fleet.iter().map(|r| r.predict_addr().to_string()).collect();
+    let cfg = LoadgenConfig {
+        qps: 300.0,
+        requests: 150,
+        rows_per_request: 4,
+        seed: 9,
+    };
+    let sb = loadgen::run(&addrs, &cfg).unwrap();
+    assert_eq!(sb.answered, cfg.requests, "every request answered");
+    assert_eq!(sb.rows, cfg.requests * cfg.rows_per_request);
+    assert_eq!(sb.total_rejects(), 0, "healthy fleet rejected traffic");
+    assert_eq!(sb.broken_sessions, 0);
+    assert_eq!(
+        (sb.min_version, sb.max_version),
+        (run.stats.updates, run.stats.updates),
+        "all answers at the final θ version"
+    );
+    assert!(sb.rows_per_sec > 0.0);
+    assert_eq!(sb.latencies_ns.len(), cfg.requests);
+    for r in fleet {
+        let report = r.shutdown();
+        assert_eq!(report.first_version, run.stats.updates);
+    }
+}
