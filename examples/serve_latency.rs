@@ -55,7 +55,7 @@ fn main() {
 
     // 4. Batch server following the live θ.
     let cache = Arc::new(PosteriorCache::new(layout));
-    let cfg = BatchConfig { max_rows: 256, max_delay: Duration::from_millis(1) };
+    let cfg = BatchConfig { max_rows: 256, latency_budget: Duration::from_millis(1) };
     let (server, client) =
         BatchServer::start(Arc::clone(&cache), Some(Arc::clone(&published)), cfg);
 

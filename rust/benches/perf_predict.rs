@@ -93,7 +93,7 @@ fn main() {
         cache.install(1, &theta.data);
         // Zero delay: a lone client measures the pure round-trip cost
         // (channel + stage + blocked 1-row predict), not the deadline.
-        let cfg = BatchConfig { max_rows: 512, max_delay: std::time::Duration::ZERO };
+        let cfg = BatchConfig { max_rows: 512, latency_budget: std::time::Duration::ZERO };
         let (server, client) = BatchServer::start(cache, None, cfg);
         let row = ds.x.row(0).to_vec();
         let report = bench("batch_server single-row round-trip", 10, 0.6, || {

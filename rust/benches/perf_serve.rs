@@ -5,9 +5,13 @@
 //! to subscribed replicas; after the trainer's clean SHUTDOWN the
 //! replicas keep serving the final posterior (that is the contract),
 //! and `serve::loadgen` offers a fixed request schedule against fleets
-//! of 1 and 2 replicas.  Results merge into `BENCH_serve.json`
-//! (schema 1 — `scripts/bench_diff.py` diffs it like the other bench
-//! dumps): rows/sec plus exact p50/p99/p999 per fleet size.
+//! of 1 and 2 replicas, then once more through a [`Router`] fronting
+//! both (ADVGPRT1, ISSUE 9) so the routed read path is tracked by the
+//! same harness.  Results merge into `BENCH_serve.json` (schema 1 —
+//! `scripts/bench_diff.py` diffs it like the other bench dumps):
+//! rows/sec plus exact p50/p99/p999 per fleet size, and for the routed
+//! entry the `route_*` counters (cache hits/misses, retries,
+//! failovers, per-hop rejects).
 //!
 //! Open loop means latency is measured from each request's *scheduled*
 //! send time, so a stalled replica makes subsequent requests late
@@ -20,7 +24,7 @@ use advgp::grad::native_factory;
 use advgp::ps::coordinator::{train_remote, TrainConfig};
 use advgp::ps::net::{remote_worker_loop, NetServer};
 use advgp::ps::worker::{WorkerProfile, WorkerSource};
-use advgp::serve::{loadgen, LoadgenConfig, Replica, ReplicaConfig};
+use advgp::serve::{loadgen, LoadgenConfig, Replica, ReplicaConfig, Router, RouterConfig};
 use advgp::util::rng::Pcg64;
 use std::time::Duration;
 
@@ -116,6 +120,23 @@ fn main() {
         assert_eq!(sb.total_rejects(), 0, "{name}: healthy fleet rejected traffic");
         sb.write_bench(OUT_PATH, &name, &cfg, n).expect("write bench JSON");
     }
+
+    // ---- the same offered load through the routing tier (ADVGPRT1) ----
+    // One router address in front of both replicas: P2C spreading plus
+    // the per-leg answer cache.  The loadgen's repeated seeded row
+    // stream gives the cache real hits, so the routed entry reports
+    // both ends of the path (route_cache_hits / route_cache_misses)
+    // alongside the same latency quantiles as the direct fleets.
+    let router = Router::start("127.0.0.1:0", &addrs, RouterConfig::default())
+        .expect("start router");
+    let routed = vec![router.addr().to_string()];
+    let mut sb = loadgen::run(&routed, &cfg).expect("routed loadgen run");
+    let name = "serve/routed-replicas=2";
+    assert_eq!(sb.total_rejects(), 0, "{name}: healthy routed fleet rejected traffic");
+    sb.attach_route(router.shutdown());
+    println!("  {name}: {}", sb.summary());
+    sb.write_bench(OUT_PATH, name, &cfg, 2).expect("write bench JSON");
+
     for r in replicas {
         let report = r.shutdown();
         println!("  replica report: {}", report.summary());

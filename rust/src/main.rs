@@ -15,6 +15,9 @@
 //!              posterior locally, answer PREDICT sessions
 //!   loadgen    open-loop load generator + scoreboard against one or
 //!              more replicas; merge-writes BENCH_serve.json
+//!   route      predict-side routing tier (ADVGPRT1): one address in
+//!              front of a replica fleet — P2C balancing, sibling
+//!              retry, per-leg answer caches, heartbeat retirement
 //!   datagen    write a synthetic dataset (flight|taxi|friedman) as CSV
 //!   artifacts  list the AOT artifact manifest
 //!   smoke      PJRT round-trip smoke test on an HLO text file
@@ -42,14 +45,15 @@ fn main() -> Result<()> {
         Some("worker") => cmd_worker(&args),
         Some("serve-replica") => cmd_serve_replica(&args),
         Some("loadgen") => cmd_loadgen(&args),
+        Some("route") => cmd_route(&args),
         Some("store") => cmd_store(&args),
         Some("datagen") => cmd_datagen(&args),
         Some("artifacts") => cmd_artifacts(&args),
         Some("smoke") => cmd_smoke(&args),
         _ => {
             eprintln!(
-                "usage: advgp <train|serve-ps|worker|serve-replica|loadgen|store|datagen|\
-                 artifacts|smoke> [--flags]\n\
+                "usage: advgp <train|serve-ps|worker|serve-replica|loadgen|route|store|\
+                 datagen|artifacts|smoke> [--flags]\n\
                  \n\
                  train:    --data <csv|flight|taxi|friedman> [--n 50000] [--m 100]\n\
                  \x20         [--method advgp|svigp|distgp-gd|distgp-lbfgs|linear]\n\
@@ -69,10 +73,13 @@ fn main() -> Result<()> {
                  serve-replica: --connect host:port[,host:port…] (the serve-ps fleet)\n\
                  \x20         [--listen 127.0.0.1:0] [--staleness-secs 10]\n\
                  \x20         [--max-inflight-rows 4096] [--batch-rows 256]\n\
-                 \x20         [--batch-delay-ms 2] [--linger-secs 0]\n\
+                 \x20         [--latency-budget-ms 2] [--linger-secs 0]\n\
                  loadgen:  --replicas host:port[,host:port…] [--qps 500]\n\
                  \x20         [--requests 2000] [--rows 8] [--seed 42]\n\
                  \x20         [--bench-out BENCH_serve.json] [--name serve/replicas=N]\n\
+                 route:    --replicas host:port[,host:port…] (replica predict addrs)\n\
+                 \x20         [--listen 127.0.0.1:0] [--cache-rows 4096]\n\
+                 \x20         [--retry-hops 1] [--seed …] [--secs 0 (forever)]\n\
                  store:    <verify|migrate|repartition> --store dir [--workers W]\n\
                  \x20         verify: scrub every chunk checksum, per-chunk report\n\
                  \x20         migrate: upgrade ADVGPSH1 shards to SH2 in place\n\
@@ -700,8 +707,10 @@ fn cmd_serve_replica(args: &Args) -> Result<()> {
         std::time::Duration::from_secs_f64(args.f64_or("staleness-secs", 10.0));
     cfg.max_inflight_rows = args.usize_or("max-inflight-rows", cfg.max_inflight_rows);
     cfg.batch.max_rows = args.usize_or("batch-rows", cfg.batch.max_rows);
-    cfg.batch.max_delay =
-        std::time::Duration::from_millis(args.u64_or("batch-delay-ms", 2));
+    // --batch-delay-ms is the pre-ISSUE-9 spelling, kept as a fallback.
+    cfg.batch.latency_budget = std::time::Duration::from_millis(
+        args.u64_or("latency-budget-ms", args.u64_or("batch-delay-ms", 2)),
+    );
     let listen = args.str_or("listen", "127.0.0.1:0");
     let replica = Replica::start(listen, &addrs, cfg)?;
     println!(
@@ -763,6 +772,53 @@ fn cmd_loadgen(args: &Args) -> Result<()> {
         sb.write_bench(out, name, &cfg, addrs.len())?;
         println!("loadgen: wrote entry {name:?} to {out}");
     }
+    Ok(())
+}
+
+/// `advgp route`: the predict-side routing tier (ADVGPRT1).  One
+/// address in front of a replica fleet — power-of-two-choices
+/// balancing on in-flight rows, transparent sibling retry on retryable
+/// REJECTs, bounded per-leg answer caches with version-gated
+/// invalidation, and heartbeat retirement of unreachable replicas.
+fn cmd_route(args: &Args) -> Result<()> {
+    use advgp::serve::{Router, RouterConfig};
+    let replicas = args.get("replicas").context(
+        "--replicas host:port (or a comma-separated list of replica \
+         predict addresses) required",
+    )?;
+    let addrs: Vec<String> = replicas
+        .split(',')
+        .map(|a| a.trim().to_string())
+        .filter(|a| !a.is_empty())
+        .collect();
+    anyhow::ensure!(!addrs.is_empty(), "--replicas: no addresses given");
+    let mut cfg = RouterConfig::default();
+    cfg.cache_rows = args.usize_or("cache-rows", cfg.cache_rows);
+    cfg.retry_hops = args.usize_or("retry-hops", cfg.retry_hops);
+    cfg.seed = args.u64_or("seed", cfg.seed);
+    let listen = args.str_or("listen", "127.0.0.1:0");
+    let router = Router::start(listen, &addrs, cfg)?;
+    println!(
+        "route: predicts on {} — fronting {} replica(s) [{}]",
+        router.addr(),
+        addrs.len(),
+        addrs.join(", ")
+    );
+    // Serve for --secs (0 = forever; kill the process to stop).
+    let secs = args.f64_or("secs", 0.0);
+    if secs > 0.0 {
+        std::thread::sleep(std::time::Duration::from_secs_f64(secs));
+    } else {
+        loop {
+            std::thread::sleep(std::time::Duration::from_secs(3600));
+        }
+    }
+    let stats = router.shutdown();
+    println!(
+        "route: done — {} session(s), {} routed, {} cache hit(s), {} retry(ies), \
+         {} failover(s)",
+        stats.sessions, stats.routed, stats.cache_hits, stats.retries, stats.failovers
+    );
     Ok(())
 }
 

@@ -976,6 +976,17 @@ pub struct Rejected {
     pub message: String,
 }
 
+impl Rejected {
+    /// Whether a *sibling* peer might answer differently — REJ_OVERLOAD
+    /// and REJ_STALE are verdicts about one replica's state, everything
+    /// else about the request or the fleet.  Delegates to the normative
+    /// split in [`super::wire::reject_is_retryable`] (ADVGPRT1 routers
+    /// retry exactly these on another leg before surfacing).
+    pub fn retryable(&self) -> bool {
+        super::wire::reject_is_retryable(self.code)
+    }
+}
+
 impl std::fmt::Display for Rejected {
     fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
         write!(f, "server rejected the connection (code {}): {}", self.code, self.message)

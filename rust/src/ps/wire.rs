@@ -10,6 +10,9 @@
 //! server, or a predict session on a serving replica), POSTERIOR-SYNC
 //! fans θ out to subscribers, and PREDICT/PREDICTION/REJECT carry the
 //! batched prediction traffic with per-request admission control.
+//! The routing tier (`ADVGPRT1`, ISSUE 9) adds ROUTE-STATUS — a
+//! router → client fleet-observability frame any predict client must
+//! absorb — and the normative retry-on-REJECT rule ([`reject_is_retryable`]).
 //!
 //! This module is pure codec: [`Frame`] ⇄ bytes, plus blocking
 //! [`read_frame`]/[`write_frame`] helpers over any `Read`/`Write`.  All
@@ -124,6 +127,18 @@ pub const KIND_POSTERIOR_SYNC: u8 = 0x0E;
 pub const KIND_PREDICT: u8 = 0x0F;
 pub const KIND_PREDICTION: u8 = 0x10;
 pub const KIND_REJECT: u8 = 0x11;
+/// Routing-tier kind (ADVGPRT1, ISSUE 9) — router → client only.
+pub const KIND_ROUTE_STATUS: u8 = 0x12;
+
+/// Ceiling on the replica count a ROUTE-STATUS frame may carry.  A
+/// router fronts a handful-to-hundreds of replicas; a four-digit count
+/// in a status frame is corruption, not a fleet.
+pub const MAX_ROUTE_REPLICAS: usize = 1 << 10;
+
+/// ROUTE-STATUS per-replica flag bit: the router has retired this
+/// replica (heartbeat death or connect failure) and power-of-two-choices
+/// no longer selects it.  All other bits are reserved and must be zero.
+pub const ROUTE_RETIRED: u8 = 0x01;
 
 /// ERROR frame codes.
 pub const ERR_BAD_MAGIC: u16 = 1;
@@ -149,6 +164,33 @@ pub const REJ_STALE: u16 = 2;
 pub const REJ_OVERLOAD: u16 = 3;
 pub const REJ_BAD_DIM: u16 = 4;
 pub const REJ_BAD_SCOPE: u16 = 5;
+
+/// The normative ADVGPRT1 retry rule: a REJECT that reflects *replica
+/// state* (overload, staleness) may be transparently retried on a
+/// sibling replica, because a sibling can hold a healthier queue or a
+/// fresher posterior.  A REJECT that reflects the *request* (bad
+/// dimension, bad scope) or the *fleet* (nothing ready anywhere) would
+/// draw the same verdict from every sibling and must be surfaced as-is.
+pub fn reject_is_retryable(code: u16) -> bool {
+    matches!(code, REJ_OVERLOAD | REJ_STALE)
+}
+
+/// One replica's row in a ROUTE-STATUS frame: the newest posterior
+/// version the router has observed from it, the rows currently in
+/// flight to it, and its flag bits ([`ROUTE_RETIRED`]).
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub struct ReplicaStatus {
+    pub version: u64,
+    pub inflight: u32,
+    pub flags: u8,
+}
+
+impl ReplicaStatus {
+    /// Is the [`ROUTE_RETIRED`] bit set?
+    pub fn retired(&self) -> bool {
+        self.flags & ROUTE_RETIRED != 0
+    }
+}
 
 /// One ADVGPNT1 frame — see the module docs for the byte layout and
 /// `docs/PROTOCOL.md` §"Frame table" for the per-kind payloads.
@@ -240,6 +282,13 @@ pub enum Frame {
     /// Replica → client (ADVGPSV1): PREDICT `id` was refused by
     /// admission control (`REJ_*`).  Non-fatal: the session continues.
     Reject { id: u64, code: u16, message: String },
+    /// Router → client (ADVGPRT1): fleet observability — the maximum
+    /// posterior version across live replicas plus one
+    /// [`ReplicaStatus`] per replica, in stable replica-index order.
+    /// Sent after the predict handshake ack and whenever the router
+    /// chooses to refresh it; a predict client must absorb it at any
+    /// point after the handshake (direct replicas never send it).
+    RouteStatus { fleet_version: u64, replicas: Vec<ReplicaStatus> },
 }
 
 impl Frame {
@@ -263,6 +312,7 @@ impl Frame {
             Frame::Predict { .. } => KIND_PREDICT,
             Frame::Prediction { .. } => KIND_PREDICTION,
             Frame::Reject { .. } => KIND_REJECT,
+            Frame::RouteStatus { .. } => KIND_ROUTE_STATUS,
         }
     }
 
@@ -412,6 +462,20 @@ impl Frame {
                 let msg = message.as_bytes();
                 body.extend_from_slice(&(msg.len() as u32).to_le_bytes());
                 body.extend_from_slice(msg);
+            }
+            Frame::RouteStatus { fleet_version, replicas } => {
+                assert!(
+                    !replicas.is_empty() && replicas.len() <= MAX_ROUTE_REPLICAS,
+                    "ROUTE-STATUS: {} replicas outside [1, {MAX_ROUTE_REPLICAS}]",
+                    replicas.len()
+                );
+                body.extend_from_slice(&fleet_version.to_le_bytes());
+                body.extend_from_slice(&(replicas.len() as u16).to_le_bytes());
+                for r in replicas {
+                    body.extend_from_slice(&r.version.to_le_bytes());
+                    body.extend_from_slice(&r.inflight.to_le_bytes());
+                    body.push(r.flags);
+                }
             }
         }
         seal_frame(body)
@@ -619,6 +683,27 @@ impl Frame {
                 let message = String::from_utf8(r.take(len)?.to_vec())
                     .context("REJECT frame: message is not UTF-8")?;
                 Frame::Reject { id, code, message }
+            }
+            KIND_ROUTE_STATUS => {
+                let fleet_version = r.u64()?;
+                let n = r.u16()? as usize;
+                ensure!(
+                    (1..=MAX_ROUTE_REPLICAS).contains(&n),
+                    "ROUTE-STATUS: implausible replica count {n} \
+                     (max {MAX_ROUTE_REPLICAS})"
+                );
+                let mut replicas = Vec::with_capacity(n);
+                for _ in 0..n {
+                    let version = r.u64()?;
+                    let inflight = r.u32()?;
+                    let flags = r.take(1)?[0];
+                    ensure!(
+                        flags & !ROUTE_RETIRED == 0,
+                        "ROUTE-STATUS: unknown flag bits {flags:#04x}"
+                    );
+                    replicas.push(ReplicaStatus { version, inflight, flags });
+                }
+                Frame::RouteStatus { fleet_version, replicas }
             }
             KIND_ERROR => {
                 let code = r.u16()?;
@@ -1010,6 +1095,17 @@ mod tests {
                 var: vec![0.0625, 0.125],
             },
             Frame::Reject { id: 10, code: REJ_STALE, message: "stale".into() },
+            Frame::RouteStatus {
+                fleet_version: 17,
+                replicas: vec![ReplicaStatus { version: 17, inflight: 5, flags: 0 }],
+            },
+            Frame::RouteStatus {
+                fleet_version: 17,
+                replicas: vec![
+                    ReplicaStatus { version: 17, inflight: 0, flags: 0 },
+                    ReplicaStatus { version: 12, inflight: 0, flags: ROUTE_RETIRED },
+                ],
+            },
         ]
     }
 
@@ -1210,6 +1306,85 @@ mod tests {
                 0xf1, 0x7f, 0x58, 0xbc, 0x19, 0xbb, 0xf5, 0x43, // fnv1a64(body)
             ]
         );
+    }
+
+    /// Pins the ADVGPRT1 ROUTE-STATUS worked example in
+    /// docs/PROTOCOL.md: fleet at v7, replica 0 live with 3 rows in
+    /// flight, replica 1 retired at v6.
+    #[test]
+    fn route_status_frame_matches_the_protocol_doc() {
+        let frame = Frame::RouteStatus {
+            fleet_version: 7,
+            replicas: vec![
+                ReplicaStatus { version: 7, inflight: 3, flags: 0 },
+                ReplicaStatus { version: 6, inflight: 0, flags: ROUTE_RETIRED },
+            ],
+        };
+        assert_eq!(
+            frame.encode(),
+            vec![
+                0x2d, 0x00, 0x00, 0x00, // len = 45
+                0x12, // kind ROUTE-STATUS
+                0x07, 0x00, 0x00, 0x00, 0x00, 0x00, 0x00, 0x00, // fleet_version = 7
+                0x02, 0x00, // n = 2
+                0x07, 0x00, 0x00, 0x00, 0x00, 0x00, 0x00, 0x00, // r0 version = 7
+                0x03, 0x00, 0x00, 0x00, // r0 inflight = 3
+                0x00, // r0 flags = live
+                0x06, 0x00, 0x00, 0x00, 0x00, 0x00, 0x00, 0x00, // r1 version = 6
+                0x00, 0x00, 0x00, 0x00, // r1 inflight = 0
+                0x01, // r1 flags = retired
+                0x61, 0x9d, 0x99, 0xfb, 0x29, 0x1e, 0x9f, 0x93, // fnv1a64(body)
+            ]
+        );
+    }
+
+    /// ROUTE-STATUS semantic validation: an empty replica list, an
+    /// implausible count, and unknown flag bits are all rejected at
+    /// decode (craft the bodies by hand — encode asserts the bounds).
+    #[test]
+    fn route_status_semantic_validation() {
+        let status = |n: u16, flags: u8| {
+            let mut body = vec![KIND_ROUTE_STATUS];
+            body.extend_from_slice(&7u64.to_le_bytes());
+            body.extend_from_slice(&n.to_le_bytes());
+            for _ in 0..n {
+                body.extend_from_slice(&7u64.to_le_bytes());
+                body.extend_from_slice(&0u32.to_le_bytes());
+                body.push(flags);
+            }
+            seal_frame(body)
+        };
+        assert!(Frame::decode(&status(0, 0)[4..]).is_err(), "empty replica list");
+        assert!(Frame::decode(&status(1, 0x02)[4..]).is_err(), "unknown flag bit");
+        assert!(Frame::decode(&status(1, 0x81)[4..]).is_err(), "reserved high bit");
+        assert!(Frame::decode(&status(1, ROUTE_RETIRED)[4..]).is_ok());
+        // A count over the cap is rejected before its rows are read:
+        // claim MAX+1 rows but ship only one — the count check must
+        // fire, not the truncation error.
+        let mut body = vec![KIND_ROUTE_STATUS];
+        body.extend_from_slice(&7u64.to_le_bytes());
+        body.extend_from_slice(&(MAX_ROUTE_REPLICAS as u16 + 1).to_le_bytes());
+        body.extend_from_slice(&7u64.to_le_bytes());
+        body.extend_from_slice(&0u32.to_le_bytes());
+        body.push(0);
+        let bytes = seal_frame(body);
+        let err = Frame::decode(&bytes[4..]).unwrap_err();
+        assert!(
+            format!("{err:#}").contains("implausible replica count"),
+            "{err:#}"
+        );
+    }
+
+    /// The normative retry-on-REJECT table: state-reflecting verdicts
+    /// retry on a sibling, request/fleet-reflecting ones surface.
+    #[test]
+    fn reject_retryability_follows_the_protocol_doc() {
+        assert!(reject_is_retryable(REJ_OVERLOAD));
+        assert!(reject_is_retryable(REJ_STALE));
+        assert!(!reject_is_retryable(REJ_NOT_READY));
+        assert!(!reject_is_retryable(REJ_BAD_DIM));
+        assert!(!reject_is_retryable(REJ_BAD_SCOPE));
+        assert!(!reject_is_retryable(0));
     }
 
     #[test]

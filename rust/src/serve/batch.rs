@@ -1,7 +1,18 @@
 //! Microbatching prediction server: single-row requests are staged and
-//! answered in blocked batches (flush at `max_rows` rows or after
-//! `max_delay`), amortizing the O(B·m²) posterior math and the pool
-//! dispatch across concurrent clients.
+//! answered in blocked batches (flush at `max_rows` rows or when the
+//! oldest staged row's `latency_budget` runs out), amortizing the
+//! O(B·m²) posterior math and the pool dispatch across concurrent
+//! clients.
+//!
+//! The ingress queue is *shared*: [`ServeClient`] is a cheap clone, so
+//! every predict session on a replica feeds the same staging buffer and
+//! rows from different sessions fuse into one batch (cross-session
+//! batching, ADVGPRT1 ISSUE 9).  The `latency_budget` is therefore a
+//! per-*row* promise, not a per-batch one — the flush deadline is
+//! anchored at the oldest staged row's enqueue instant (time spent in
+//! the ingress queue while the server was busy counts against the
+//! budget), so no session's row waits past its budget for stragglers
+//! from another session.
 //!
 //! One serving thread owns a reusable [`PredictWorkspace`] and a staged
 //! row buffer, so the steady-state serve loop allocates nothing on the
@@ -23,15 +34,28 @@ use std::time::{Duration, Instant};
 /// Microbatching policy.
 #[derive(Clone, Debug)]
 pub struct BatchConfig {
-    /// Flush when this many rows are staged.
+    /// Flush when this many rows are staged — a full batch
+    /// short-circuits the latency budget.
     pub max_rows: usize,
-    /// …or when the oldest staged request has waited this long.
-    pub max_delay: Duration,
+    /// …or when the *oldest staged row* (across every session feeding
+    /// the shared ingress queue) has waited this long since it was
+    /// enqueued.  Ingress-queue time counts: a row that sat behind a
+    /// long compute has already burned budget, so its batch closes
+    /// correspondingly sooner.
+    pub latency_budget: Duration,
+}
+
+impl BatchConfig {
+    /// The CLI/bench-facing constructor: a flush size plus the latency
+    /// budget in milliseconds (`--latency-budget-ms`).
+    pub fn with_budget_ms(max_rows: usize, budget_ms: u64) -> Self {
+        Self { max_rows, latency_budget: Duration::from_millis(budget_ms) }
+    }
 }
 
 impl Default for BatchConfig {
     fn default() -> Self {
-        Self { max_rows: 256, max_delay: Duration::from_millis(2) }
+        Self { max_rows: 256, latency_budget: Duration::from_millis(2) }
     }
 }
 
@@ -179,8 +203,12 @@ fn serve_loop(
             Ok(r) => pending.push(r),
             Err(_) => break 'serve,
         }
-        // Stage more until the flush threshold or the deadline.
-        let deadline = Instant::now() + cfg.max_delay;
+        // Stage more until the flush threshold or the deadline.  The
+        // deadline is anchored at the first row's *enqueue* instant —
+        // time it already spent waiting in the shared ingress queue is
+        // budget spent, not budget reset.
+        let waited = Duration::from_secs_f64(pending[0].enqueued.secs());
+        let deadline = Instant::now() + cfg.latency_budget.saturating_sub(waited);
         while pending.len() < cfg.max_rows {
             let now = Instant::now();
             if now >= deadline {
@@ -256,7 +284,7 @@ mod tests {
     fn batched_answers_match_direct_predict_exactly() {
         let (cache, th) = seeded_cache(6, 3);
         let gp = SparseGp::new(th);
-        let cfg = BatchConfig { max_rows: 8, max_delay: Duration::from_millis(5) };
+        let cfg = BatchConfig { max_rows: 8, latency_budget: Duration::from_millis(5) };
         let (server, client) = BatchServer::start(Arc::clone(&cache), None, cfg);
         let mut rng = Pcg64::seeded(78);
         let rows: Vec<Vec<f64>> = (0..40)
@@ -296,7 +324,7 @@ mod tests {
     #[test]
     fn burst_is_microbatched() {
         let (cache, _th) = seeded_cache(4, 2);
-        let cfg = BatchConfig { max_rows: 64, max_delay: Duration::from_millis(100) };
+        let cfg = BatchConfig { max_rows: 64, latency_budget: Duration::from_millis(100) };
         let (server, client) = BatchServer::start(cache, None, cfg);
         let row = [0.3, -0.7];
         let receivers: Vec<_> = (0..256)

@@ -22,8 +22,21 @@
 //! same schema-1 shape as `perf_hotpath`/`perf_predict`, so
 //! `scripts/bench_diff.py` diffs serving runs unchanged and the
 //! replicas=1 / replicas=2 rows accumulate into one file.
+//!
+//! **Routed-fleet mode** (ADVGPRT1, ISSUE 9): point [`run`] at a
+//! [`super::Router`] address instead of the replicas — the wire is
+//! identical (the receiver halves absorb the extra ROUTE-STATUS frame)
+//! — then [`Scoreboard::attach_route`] the router's final
+//! [`RouteStats`] so the bench entry carries per-hop reject, retry,
+//! and cache-hit accounting next to the client-visible numbers.
+//! Throughput stays honest either way: the `rows_per_sec` numerator
+//! counts **accepted rows only** (a REJECT contributes zero rows, and
+//! is reported per-code instead), so a routed run that absorbs
+//! overload rejects on retries cannot inflate its own throughput.
 
 use super::replica::{PredictAnswer, PredictClient};
+use super::router::RouteStats;
+use crate::ps::wire::{REJ_BAD_DIM, REJ_BAD_SCOPE, REJ_NOT_READY, REJ_OVERLOAD, REJ_STALE};
 use crate::util::json::Json;
 use crate::util::rng::Pcg64;
 use anyhow::{ensure, Context, Result};
@@ -69,6 +82,21 @@ pub struct Scoreboard {
     /// θ versions observed in answers (freshness evidence).
     pub min_version: u64,
     pub max_version: u64,
+    /// Router-side counters for a routed run (see
+    /// [`Scoreboard::attach_route`]); `None` for direct-replica runs.
+    pub route: Option<RouteStats>,
+}
+
+/// Stable field-name suffix for a REJECT code.
+fn reject_code_name(code: u16) -> &'static str {
+    match code {
+        REJ_NOT_READY => "not_ready",
+        REJ_STALE => "stale",
+        REJ_OVERLOAD => "overload",
+        REJ_BAD_DIM => "bad_dim",
+        REJ_BAD_SCOPE => "bad_scope",
+        _ => "other",
+    }
 }
 
 impl Scoreboard {
@@ -94,9 +122,17 @@ impl Scoreboard {
         self.rejects.iter().map(|&(_, n)| n).sum()
     }
 
+    /// Fold a router's final counters into this board, so the bench
+    /// entry for a routed run reports per-hop rejects, sibling retries,
+    /// failovers, and answer-cache traffic alongside the
+    /// client-visible numbers.
+    pub fn attach_route(&mut self, stats: RouteStats) {
+        self.route = Some(stats);
+    }
+
     /// One human line for the console.
     pub fn summary(&self) -> String {
-        format!(
+        let mut line = format!(
             "{} answered ({} rows, {} rejects, {} broken) in {:.2}s — \
              {:.0} rows/s, p50 {:.2}ms p99 {:.2}ms p999 {:.2}ms (θ v{}..v{})",
             self.answered,
@@ -110,12 +146,24 @@ impl Scoreboard {
             self.quantile_ns(0.999) as f64 / 1e6,
             self.min_version,
             self.max_version,
-        )
+        );
+        if let Some(r) = &self.route {
+            let hop_rejects: u64 = r.hop_rejects.iter().map(|&(_, n)| n).sum();
+            line.push_str(&format!(
+                " [routed: {} cache hits / {} misses, {} retries, {} failovers, \
+                 {hop_rejects} hop rejects]",
+                r.cache_hits, r.cache_misses, r.retries, r.failovers,
+            ));
+        }
+        line
     }
 
-    /// The schema-1 bench entry for this run.
+    /// The schema-1 bench entry for this run.  `rejects` is the total;
+    /// every nonzero code also lands as its own `rejects_<code>` field,
+    /// and a routed run ([`Scoreboard::attach_route`]) adds `route_*`
+    /// per-hop accounting.
     pub fn to_bench_entry(&self, name: &str, cfg: &LoadgenConfig, replicas: usize) -> Json {
-        Json::obj(vec![
+        let base = Json::obj(vec![
             ("name", Json::Str(name.to_string())),
             ("replicas", Json::Num(replicas as f64)),
             ("qps_target", Json::Num(cfg.qps)),
@@ -128,7 +176,27 @@ impl Scoreboard {
             ("p999_ns", Json::Num(self.quantile_ns(0.999) as f64)),
             ("rejects", Json::Num(self.total_rejects() as f64)),
             ("iters", Json::Num(self.answered as f64)),
-        ])
+        ]);
+        let Json::Obj(mut entry) = base else { unreachable!() };
+        let mut add = |key: String, n: u64| {
+            if n > 0 {
+                let prev = entry.get(&key).and_then(Json::as_f64).unwrap_or(0.0);
+                entry.insert(key, Json::Num(prev + n as f64));
+            }
+        };
+        for &(code, n) in &self.rejects {
+            add(format!("rejects_{}", reject_code_name(code)), n);
+        }
+        if let Some(r) = &self.route {
+            add("route_cache_hits".into(), r.cache_hits);
+            add("route_cache_misses".into(), r.cache_misses);
+            add("route_retries".into(), r.retries);
+            add("route_failovers".into(), r.failovers);
+            for &(code, n) in &r.hop_rejects {
+                add(format!("route_hop_rejects_{}", reject_code_name(code)), n);
+            }
+        }
+        Json::Obj(entry)
     }
 
     /// Merge this run into `path` (`BENCH_serve.json` shape: schema 1,
@@ -298,6 +366,7 @@ pub fn run(replicas: &[String], cfg: &LoadgenConfig) -> Result<Scoreboard> {
         latencies_ns: Vec::new(),
         min_version: u64::MAX,
         max_version: 0,
+        route: None,
     };
     let mut t_end = t0;
     for h in rx_threads {
@@ -344,6 +413,7 @@ mod tests {
             latencies_ns,
             min_version: 1,
             max_version: 1,
+            route: None,
         }
     }
 
@@ -391,5 +461,51 @@ mod tests {
         // The replacement carries the rerun's latencies (mean 55ns).
         assert!((r1.get("mean_ns").unwrap().as_f64().unwrap() - 55.0).abs() < 1e-9);
         let _ = std::fs::remove_dir_all(&dir);
+    }
+
+    /// Regression (ISSUE 9 satellite): the throughput numerator counts
+    /// **accepted rows only** — a REJECTed request contributes zero
+    /// rows to `rows_per_sec` however many times a routed retry
+    /// absorbed it — and every reject code is reported as its own
+    /// bench field instead of hiding in the total.
+    #[test]
+    fn rows_per_sec_counts_only_accepted_rows() {
+        let mut sb = board(vec![10, 20, 30, 40]); // 4 accepted rows, 1s wall
+        sb.rejects = vec![(REJ_OVERLOAD, 5), (REJ_STALE, 2)];
+        // the run() accounting: rows only ever comes from PREDICTION
+        // answers, so rejects leave the numerator untouched
+        sb.rows_per_sec = sb.rows as f64 / sb.wall_secs;
+        assert_eq!(sb.rows_per_sec, 4.0);
+        let entry = sb.to_bench_entry("serve/test", &LoadgenConfig::default(), 1);
+        assert_eq!(entry.get("rows_per_sec").unwrap().as_f64(), Some(4.0));
+        assert_eq!(entry.get("rejects").unwrap().as_f64(), Some(7.0));
+        assert_eq!(entry.get("rejects_overload").unwrap().as_f64(), Some(5.0));
+        assert_eq!(entry.get("rejects_stale").unwrap().as_f64(), Some(2.0));
+        assert!(entry.get("rejects_not_ready").is_none(), "zero counts are elided");
+    }
+
+    /// A routed run's attached [`RouteStats`] lands as `route_*` fields
+    /// in the bench entry — the per-hop accounting `bench_diff.py`
+    /// tables for the routed-fleet config.
+    #[test]
+    fn routed_stats_land_in_the_bench_entry() {
+        let mut sb = board(vec![10]);
+        let rs = RouteStats {
+            cache_hits: 3,
+            cache_misses: 4,
+            retries: 2,
+            failovers: 1,
+            hop_rejects: vec![(REJ_OVERLOAD, 2), (REJ_STALE, 0)],
+            ..RouteStats::default()
+        };
+        sb.attach_route(rs);
+        assert!(sb.summary().contains("3 cache hits"));
+        let entry = sb.to_bench_entry("serve/routed-replicas=2", &LoadgenConfig::default(), 2);
+        assert_eq!(entry.get("route_cache_hits").unwrap().as_f64(), Some(3.0));
+        assert_eq!(entry.get("route_cache_misses").unwrap().as_f64(), Some(4.0));
+        assert_eq!(entry.get("route_retries").unwrap().as_f64(), Some(2.0));
+        assert_eq!(entry.get("route_failovers").unwrap().as_f64(), Some(1.0));
+        assert_eq!(entry.get("route_hop_rejects_overload").unwrap().as_f64(), Some(2.0));
+        assert!(entry.get("route_hop_rejects_stale").is_none(), "zero counts are elided");
     }
 }

@@ -29,14 +29,23 @@
 //! assembler/cache machinery, and serves PREDICT sessions on its own
 //! listener; [`loadgen`] is the open-loop load generator + scoreboard
 //! that measures such a fleet (`advgp loadgen` → `BENCH_serve.json`).
+//!
+//! The **routing tier** (ADVGPRT1, ISSUE 9) puts one address in front
+//! of the fleet: [`router::Router`] spreads PREDICT sessions with
+//! power-of-two-choices balancing, retries replica-state REJECTs on a
+//! sibling, and short-circuits repeated rows through per-leg
+//! version-gated [`router::AnswerCache`]s — answer-preserving by
+//! construction, pinned bitwise by `rust/tests/serve_router.rs`.
 
 pub mod batch;
 pub mod loadgen;
 pub mod replica;
+pub mod router;
 
 pub use batch::{BatchConfig, BatchServer, Prediction, ServeClient, ServeReport};
 pub use loadgen::{LoadgenConfig, Scoreboard};
 pub use replica::{PredictAnswer, PredictClient, Replica, ReplicaConfig};
+pub use router::{AnswerCache, RouteStats, Router, RouterConfig};
 
 use crate::gp::{SparseGp, Theta, ThetaLayout};
 use crate::ps::Published;

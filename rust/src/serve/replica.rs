@@ -27,7 +27,10 @@
 //!
 //! [`PredictClient`] is the client half (used by `advgp loadgen`, the
 //! chaos suite, and any external caller): one SUBSCRIBE(predict)
-//! handshake, then pipelined PREDICT/PREDICTION exchanges.
+//! handshake, then pipelined PREDICT/PREDICTION exchanges.  The same
+//! client speaks to a [`super::Router`] (ADVGPRT1) unchanged — routers
+//! additionally push ROUTE-STATUS frames, absorbed into
+//! [`PredictClient::route_status`].
 
 use super::{BatchConfig, BatchServer, PosteriorCache, ServeClient, ServeReport};
 use crate::gp::ThetaLayout;
@@ -86,7 +89,7 @@ pub struct RejectCounters {
 }
 
 impl RejectCounters {
-    fn bump(&self, code: u16) {
+    pub(crate) fn bump(&self, code: u16) {
         match code {
             REJ_NOT_READY => &self.not_ready,
             REJ_STALE => &self.stale,
@@ -102,6 +105,17 @@ impl RejectCounters {
             + self.stale.load(Ordering::Relaxed)
             + self.overload.load(Ordering::Relaxed)
             + self.bad_dim.load(Ordering::Relaxed)
+    }
+
+    /// Per-code snapshot as `(code, count)` pairs, all four codes —
+    /// the shape `BENCH_serve.json` and [`super::RouteStats`] report.
+    pub fn by_code(&self) -> [(u16, u64); 4] {
+        [
+            (REJ_NOT_READY, self.not_ready.load(Ordering::Relaxed)),
+            (REJ_STALE, self.stale.load(Ordering::Relaxed)),
+            (REJ_OVERLOAD, self.overload.load(Ordering::Relaxed)),
+            (REJ_BAD_DIM, self.bad_dim.load(Ordering::Relaxed)),
+        ]
     }
 }
 
@@ -322,13 +336,13 @@ fn pump_subscription(
     }
 }
 
-fn send_frame(w: &Mutex<TcpStream>, f: &Frame) -> std::io::Result<()> {
+pub(crate) fn send_frame(w: &Mutex<TcpStream>, f: &Frame) -> std::io::Result<()> {
     use std::io::Write;
     w.lock().unwrap().write_all(&f.encode())
 }
 
 /// Sleep in 20 ms polls, aborting when the replica is torn down.
-fn sleep_poll(d: Duration, over: &AtomicBool) -> bool {
+pub(crate) fn sleep_poll(d: Duration, over: &AtomicBool) -> bool {
     let deadline = Instant::now() + d;
     while Instant::now() < deadline {
         if over.load(Ordering::SeqCst) {
@@ -978,6 +992,10 @@ pub struct PredictClient {
     pub d: usize,
     /// θ version at handshake time.
     pub version: u64,
+    /// Latest ROUTE-STATUS absorbed: `(fleet_version, replicas)`.
+    /// Routers (ADVGPRT1) send these unsolicited; direct replicas
+    /// never do, so `None` means "talking straight to a replica".
+    pub route_status: Option<(u64, Vec<wire::ReplicaStatus>)>,
 }
 
 impl PredictClient {
@@ -1019,7 +1037,53 @@ impl PredictClient {
             m: m as usize,
             d: d as usize,
             version,
+            route_status: None,
         })
+    }
+
+    /// Arm (or clear) a read timeout on answers.  With a timeout armed,
+    /// a peer that goes silent mid-request turns into an `Err` from
+    /// [`PredictClient::recv`] instead of a hung thread — the router
+    /// uses this to bound every hop before failing over to a sibling.
+    pub fn set_answer_timeout(&self, timeout: Option<Duration>) -> std::io::Result<()> {
+        self.reader.set_read_timeout(timeout)
+    }
+
+    /// Clone the underlying stream handle, so a supervisor can sever a
+    /// read this client's owner is blocked in from another thread at
+    /// teardown.
+    pub fn try_clone_stream(&self) -> std::io::Result<TcpStream> {
+        self.reader.try_clone()
+    }
+
+    /// Liveness probe: send PING and wait for the PONG, absorbing
+    /// whatever arrives first (peer PINGs are answered, ROUTE-STATUS is
+    /// recorded).  Arm [`PredictClient::set_answer_timeout`] first so a
+    /// wedged peer fails the probe instead of blocking it forever.
+    pub fn ping(&mut self) -> Result<()> {
+        wire::write_frame(&mut self.writer, &Frame::Ping).context("send PING")?;
+        loop {
+            let frame = wire::read_frame(&mut self.reader, &mut self.scratch)
+                .context("await PONG")?;
+            match frame {
+                Frame::Pong => return Ok(()),
+                Frame::Ping => {
+                    wire::write_frame(&mut self.writer, &Frame::Pong)
+                        .context("answer PING")?;
+                }
+                Frame::RouteStatus { fleet_version, replicas } => {
+                    self.route_status = Some((fleet_version, replicas));
+                }
+                Frame::Error { code, message } => {
+                    bail!("peer answered ERROR {code}: {message}")
+                }
+                Frame::Shutdown => bail!("peer shut the session down"),
+                // Stray answers (e.g. from a prior timed-out request)
+                // are stale here — drop them and keep waiting.
+                Frame::Prediction { .. } | Frame::Reject { .. } => {}
+                f => bail!("unexpected kind {:#04x} on a predict session", f.kind()),
+            }
+        }
     }
 
     /// Send one PREDICT (rows row-major, `rows.len() % d == 0`) without
@@ -1059,6 +1123,13 @@ impl PredictClient {
                         .context("answer PING")?;
                 }
                 Frame::Pong => {}
+                Frame::RouteStatus { fleet_version, replicas } => {
+                    // Fleet observability from a router — record and
+                    // keep waiting for the answer (ADVGPRT1: clients
+                    // must absorb ROUTE-STATUS at any point after the
+                    // handshake).
+                    self.route_status = Some((fleet_version, replicas));
+                }
                 Frame::Error { code, message } => {
                     bail!("replica answered ERROR {code}: {message}")
                 }
@@ -1081,7 +1152,11 @@ impl PredictClient {
     pub fn into_split(self) -> (PredictSender, PredictReceiver) {
         (
             PredictSender { writer: self.writer, d: self.d, next_id: self.next_id },
-            PredictReceiver { reader: self.reader, scratch: self.scratch },
+            PredictReceiver {
+                reader: self.reader,
+                scratch: self.scratch,
+                route_status: self.route_status,
+            },
         )
     }
 }
@@ -1122,6 +1197,9 @@ impl PredictSender {
 pub struct PredictReceiver {
     reader: TcpStream,
     scratch: Vec<u8>,
+    /// Latest ROUTE-STATUS absorbed on this half (see
+    /// [`PredictClient::route_status`]).
+    pub route_status: Option<(u64, Vec<wire::ReplicaStatus>)>,
 }
 
 impl PredictReceiver {
@@ -1141,6 +1219,9 @@ impl PredictReceiver {
                     return Ok(Some((id, PredictAnswer::Rejected { code, message })))
                 }
                 Frame::Ping | Frame::Pong => {} // receive half can't answer; harmless
+                Frame::RouteStatus { fleet_version, replicas } => {
+                    self.route_status = Some((fleet_version, replicas));
+                }
                 Frame::Error { code, message } => {
                     bail!("replica answered ERROR {code}: {message}")
                 }

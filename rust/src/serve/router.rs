@@ -1,0 +1,1015 @@
+//! The predict-side routing tier (ADVGPRT1, ISSUE 9): one address in
+//! front of the ADVGPSV1 replica fleet.
+//!
+//! A [`Router`] accepts PREDICT sessions on the same rev-2 wire a
+//! replica does — [`super::PredictClient`] cannot tell the difference
+//! except for the extra ROUTE-STATUS frame pushed after the handshake —
+//! and spreads per-request work over N replicas:
+//!
+//! * **Balancing** is power-of-two-choices on in-flight rows: each
+//!   request draws two distinct live legs from a per-session seeded
+//!   [`Pcg64`] stream and keeps the emptier one (first draw wins ties).
+//!   Same seed + same session order ⇒ same leg choices, which is what
+//!   makes routed fault traces replayable in the chaos suite.
+//! * **Retry** is transparent for *replica-state* verdicts: a
+//!   `REJECT(REJ_OVERLOAD)`/`REJECT(REJ_STALE)` or a dead leg link is
+//!   absorbed and the request re-sent to an untried sibling, up to
+//!   [`RouterConfig::retry_hops`] extra attempts.  *Request/fleet*
+//!   verdicts (`REJ_BAD_DIM`, `REJ_NOT_READY`, `REJ_BAD_SCOPE`) are
+//!   surfaced immediately — a sibling would say the same
+//!   ([`crate::ps::wire::reject_is_retryable`] is the normative split).
+//! * **Caching**: each leg owns a bounded [`AnswerCache`] keyed by
+//!   `(posterior version, FNV-1a(row bytes))`.  A request whose rows
+//!   *all* hit at the leg's newest observed version is answered without
+//!   touching the replica; any newer version observed on the leg
+//!   (handshake, answer, or probe re-handshake) purges every stale
+//!   entry, so a cached `(mean, var)` can never be served across a
+//!   posterior install.
+//! * **Health**: one probe thread per leg holds a PING/PONG session at
+//!   the configured heartbeat cadence.  A failed probe retires the leg
+//!   (P2C stops drawing it); the probe keeps redialing with jittered
+//!   backoff forever and revives the leg on the next good handshake.
+//!
+//! Answer-preservation contract (pinned by `rust/tests/serve_router.rs`):
+//! at a settled posterior version, a routed answer is **bitwise equal**
+//! to the direct-replica answer — cache hit or miss, batched or solo —
+//! because [`crate::gp::SparseGp`] is a deterministic function of
+//! (layout, θ) and the cache stores the replica's own answers under a
+//! version-exact key.
+
+use super::replica::{send_frame, sleep_poll, PredictAnswer, PredictClient, RejectCounters};
+use crate::gp::ThetaLayout;
+use crate::ps::net::RetryPolicy;
+use crate::ps::wire::{
+    self, reject_is_retryable, Frame, ReadEvent, ReplicaStatus, ERR_MALFORMED, ERR_PROTO,
+    MAX_FRAME_LEN, MAX_HANDSHAKE_FRAME_LEN, MAX_ROUTE_REPLICAS, PROTO_NT2, REJ_BAD_DIM,
+    REJ_BAD_SCOPE, REJ_NOT_READY, ROUTE_RETIRED, SUBSCRIBE_PREDICT,
+};
+use crate::ps::PublishMeta;
+use crate::util::rng::Pcg64;
+use crate::util::{fnv1a64, FNV1A64_INIT};
+use crate::{log_info, log_warn};
+use anyhow::{ensure, Context, Result};
+use std::collections::{HashMap, VecDeque};
+use std::net::{SocketAddr, TcpListener, TcpStream};
+use std::sync::atomic::{AtomicBool, AtomicU64, AtomicUsize, Ordering};
+use std::sync::{Arc, Mutex};
+use std::thread::JoinHandle;
+use std::time::{Duration, Instant};
+
+// ---------------------------------------------------------------------------
+// Answer cache
+// ---------------------------------------------------------------------------
+
+/// One cached answer: the full row (compared bitwise on lookup, so a
+/// hash collision can never cross-serve another row's answer) and the
+/// replica's `(mean, var)` for it.
+struct CacheSlot {
+    row: Vec<f64>,
+    mean: f64,
+    var: f64,
+}
+
+struct CacheInner {
+    /// Newest posterior version observed; every stored slot was
+    /// answered at exactly this version.
+    version: u64,
+    /// Hash → slots (a chain holds colliding rows).
+    map: HashMap<u64, Vec<CacheSlot>>,
+    /// Insertion order of hashes — FIFO eviction.
+    fifo: VecDeque<u64>,
+    len: usize,
+}
+
+/// Bounded, version-gated answer cache keyed by
+/// `(posterior version, hash(row bytes))`.
+///
+/// Semantics (the satellite property suite in
+/// `rust/tests/serve_properties.rs` pins each clause):
+/// * a lookup hits **iff** the cache's current version matches the
+///   version the row was answered at *and* the stored row is bitwise
+///   equal to the queried one (`f64::to_bits`, so `-0.0 ≠ 0.0` and
+///   NaN payloads are distinct keys);
+/// * inserting (or [`AnswerCache::advance`]-ing to) a **newer** version
+///   purges every older entry — stale answers become unreachable, not
+///   merely deprioritized; inserts at an **older** version are dropped;
+/// * capacity is enforced by FIFO eviction, so the cache can forget an
+///   answer but never serve one from the wrong version or the wrong
+///   row.
+///
+/// The production hasher is FNV-1a over the row's little-endian f64
+/// bytes; [`AnswerCache::with_hasher`] lets tests inject deliberately
+/// colliding hash functions (real 64-bit FNV collisions being
+/// infeasible to construct) to exercise the chain + bitwise-compare
+/// path.
+pub struct AnswerCache {
+    cap: usize,
+    hasher: fn(&[u8]) -> u64,
+    inner: Mutex<CacheInner>,
+}
+
+fn fnv_row_hasher(bytes: &[u8]) -> u64 {
+    fnv1a64(FNV1A64_INIT, bytes)
+}
+
+fn same_row(a: &[f64], b: &[f64]) -> bool {
+    a.len() == b.len() && a.iter().zip(b).all(|(x, y)| x.to_bits() == y.to_bits())
+}
+
+impl AnswerCache {
+    /// Cache holding at most `cap` rows (0 disables caching entirely).
+    pub fn new(cap: usize) -> Self {
+        Self::with_hasher(cap, fnv_row_hasher)
+    }
+
+    /// [`AnswerCache::new`] with an injected row-bytes hasher — test
+    /// hook for forcing collisions.
+    pub fn with_hasher(cap: usize, hasher: fn(&[u8]) -> u64) -> Self {
+        Self {
+            cap,
+            hasher,
+            inner: Mutex::new(CacheInner {
+                version: 0,
+                map: HashMap::new(),
+                fifo: VecDeque::new(),
+                len: 0,
+            }),
+        }
+    }
+
+    fn key(&self, row: &[f64]) -> u64 {
+        let mut bytes = Vec::with_capacity(row.len() * 8);
+        for v in row {
+            bytes.extend_from_slice(&v.to_le_bytes());
+        }
+        (self.hasher)(&bytes)
+    }
+
+    /// Newest posterior version this cache has seen.
+    pub fn version(&self) -> u64 {
+        self.inner.lock().unwrap().version
+    }
+
+    /// Rows currently cached.
+    pub fn len(&self) -> usize {
+        self.inner.lock().unwrap().len
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.len() == 0
+    }
+
+    /// Make every entry older than `version` unreachable.  Called when
+    /// a newer posterior is observed anywhere on the leg; a no-op for
+    /// `version` at or below the current one.
+    pub fn advance(&self, version: u64) {
+        let mut inner = self.inner.lock().unwrap();
+        advance_locked(&mut inner, version);
+    }
+
+    /// Exact-match lookup: `Some((version, mean, var))` iff `row` was
+    /// answered at the cache's **current** version and is stored
+    /// bitwise-equal.
+    pub fn get(&self, row: &[f64]) -> Option<(u64, f64, f64)> {
+        let h = self.key(row);
+        let inner = self.inner.lock().unwrap();
+        let slot = inner.map.get(&h)?.iter().find(|s| same_row(&s.row, row))?;
+        Some((inner.version, slot.mean, slot.var))
+    }
+
+    /// All-or-nothing multi-row lookup under one lock: every row of the
+    /// request must hit at a single version or the whole request is a
+    /// miss (a half-cached answer would mix versions).
+    pub fn get_batch(&self, rows: &[f64], d: usize) -> Option<(u64, Vec<f64>, Vec<f64>)> {
+        assert!(d > 0 && rows.len() % d == 0, "ragged rows reached the answer cache");
+        let keys: Vec<u64> = rows.chunks_exact(d).map(|r| self.key(r)).collect();
+        let inner = self.inner.lock().unwrap();
+        let mut mean = Vec::with_capacity(keys.len());
+        let mut var = Vec::with_capacity(keys.len());
+        for (row, h) in rows.chunks_exact(d).zip(&keys) {
+            let slot = inner.map.get(h)?.iter().find(|s| same_row(&s.row, row))?;
+            mean.push(slot.mean);
+            var.push(slot.var);
+        }
+        Some((inner.version, mean, var))
+    }
+
+    /// Record one answered row.  An insert at a newer version first
+    /// purges everything older; an insert at an older version is
+    /// dropped (the answer is already stale); a duplicate of a stored
+    /// row is a no-op.
+    pub fn insert(&self, version: u64, row: &[f64], mean: f64, var: f64) {
+        if self.cap == 0 {
+            return;
+        }
+        let h = self.key(row);
+        let mut inner = self.inner.lock().unwrap();
+        if version < inner.version {
+            return;
+        }
+        advance_locked(&mut inner, version);
+        insert_locked(&mut inner, self.cap, h, row, mean, var);
+    }
+
+    /// [`AnswerCache::insert`] for a whole answered request.
+    pub fn insert_batch(&self, version: u64, rows: &[f64], d: usize, mean: &[f64], var: &[f64]) {
+        assert!(d > 0 && rows.len() % d == 0, "ragged rows reached the answer cache");
+        assert_eq!(rows.len() / d, mean.len());
+        assert_eq!(mean.len(), var.len());
+        for (i, row) in rows.chunks_exact(d).enumerate() {
+            self.insert(version, row, mean[i], var[i]);
+        }
+    }
+}
+
+fn advance_locked(inner: &mut CacheInner, version: u64) {
+    if version > inner.version {
+        inner.map.clear();
+        inner.fifo.clear();
+        inner.len = 0;
+        inner.version = version;
+    }
+}
+
+fn insert_locked(inner: &mut CacheInner, cap: usize, h: u64, row: &[f64], mean: f64, var: f64) {
+    let chain = inner.map.entry(h).or_default();
+    if chain.iter().any(|s| same_row(&s.row, row)) {
+        return;
+    }
+    chain.push(CacheSlot { row: row.to_vec(), mean, var });
+    inner.fifo.push_back(h);
+    inner.len += 1;
+    while inner.len > cap {
+        let Some(old) = inner.fifo.pop_front() else { break };
+        if let Some(chain) = inner.map.get_mut(&old) {
+            if !chain.is_empty() {
+                // chains push to the back, so the front slot is the
+                // oldest insert under this hash — FIFO holds even
+                // through collisions
+                chain.remove(0);
+            }
+            if chain.is_empty() {
+                inner.map.remove(&old);
+            }
+        }
+        inner.len -= 1;
+    }
+}
+
+// ---------------------------------------------------------------------------
+// Router
+// ---------------------------------------------------------------------------
+
+/// Router policy knobs.
+#[derive(Clone, Debug)]
+pub struct RouterConfig {
+    /// Timeouts + probe cadence: `heartbeat` paces the per-leg PING
+    /// probes (a leg silent through `2×heartbeat` is retired),
+    /// `handshake_timeout` bounds every forwarded hop, and `reconnect`
+    /// shapes the probe's redial backoff.
+    pub retry: RetryPolicy,
+    /// Answer-cache capacity per replica leg, in rows (0 disables).
+    pub cache_rows: usize,
+    /// Extra sibling attempts after the first hop's retryable failure
+    /// (retryable REJECT or a dead leg link).
+    pub retry_hops: usize,
+    /// Seed for the per-session P2C draw streams (session `k` draws
+    /// from `Pcg64::seeded(seed ^ k)`).
+    pub seed: u64,
+}
+
+impl Default for RouterConfig {
+    fn default() -> Self {
+        Self {
+            retry: RetryPolicy::default(),
+            cache_rows: 4096,
+            retry_hops: 1,
+            seed: 0x5254_0001, // "RT", revision 1
+        }
+    }
+}
+
+/// One replica behind the router.
+struct Leg {
+    addr: String,
+    /// Rows currently forwarded and unanswered — the P2C load signal.
+    inflight: AtomicUsize,
+    /// Set by the probe on heartbeat failure, cleared on revival; a
+    /// retired leg is never drawn for new hops.
+    retired: AtomicBool,
+    /// Newest θ version observed on this leg (handshakes + answers).
+    version: AtomicU64,
+    /// Requests this leg answered (cache hits included).
+    answered: AtomicU64,
+    cache: AnswerCache,
+}
+
+impl Leg {
+    fn observe(&self, version: u64) {
+        self.version.fetch_max(version, Ordering::SeqCst);
+        self.cache.advance(version);
+    }
+}
+
+/// Counter snapshot from a running (or finished) [`Router`].
+#[derive(Clone, Debug, Default)]
+pub struct RouteStats {
+    /// PREDICT sessions accepted.
+    pub sessions: u64,
+    /// Requests answered with a PREDICTION (cache hits included).
+    pub routed: u64,
+    /// Requests answered straight from a leg's [`AnswerCache`].
+    pub cache_hits: u64,
+    /// Per-hop cache lookups that missed (a retried request can miss
+    /// on more than one leg, so this can exceed the request count).
+    pub cache_misses: u64,
+    /// Retryable REJECTs absorbed from replicas (each one either moved
+    /// the request to a sibling or, with the budget spent, surfaced).
+    pub retries: u64,
+    /// Dead-link hops absorbed (connect failure or mid-request error).
+    pub failovers: u64,
+    /// Per-code REJECTs absorbed from replica hops — the per-hop
+    /// accounting `BENCH_serve.json` reports for routed runs.
+    pub hop_rejects: Vec<(u16, u64)>,
+    /// Per-code REJECTs actually surfaced to clients.
+    pub surfaced_rejects: Vec<(u16, u64)>,
+    /// Requests answered per leg, fleet order.
+    pub answered_per_leg: Vec<u64>,
+    /// Retirement flag per leg, fleet order.
+    pub retired: Vec<bool>,
+    /// Newest θ version observed per leg, fleet order.
+    pub leg_versions: Vec<u64>,
+}
+
+struct RouteCtx {
+    legs: Vec<Arc<Leg>>,
+    m: u64,
+    d: u64,
+    layout_len: u64,
+    cfg: RouterConfig,
+    over: AtomicBool,
+    sessions: AtomicU64,
+    routed: AtomicU64,
+    cache_hits: AtomicU64,
+    cache_misses: AtomicU64,
+    retries: AtomicU64,
+    failovers: AtomicU64,
+    hop_rejects: RejectCounters,
+    surfaced: RejectCounters,
+    /// Every stream the router holds (client sessions, leg sessions,
+    /// probes) — severed at shutdown so no thread stays blocked in a
+    /// read.
+    conns: Mutex<Vec<Arc<Mutex<TcpStream>>>>,
+}
+
+impl RouteCtx {
+    fn register(&self, s: &TcpStream) -> Option<Arc<Mutex<TcpStream>>> {
+        let w = Arc::new(Mutex::new(s.try_clone().ok()?));
+        self.conns.lock().unwrap().push(w.clone());
+        Some(w)
+    }
+
+    fn register_raw(&self, s: TcpStream) {
+        self.conns.lock().unwrap().push(Arc::new(Mutex::new(s)));
+    }
+
+    /// Newest version over the live legs (over all legs when every one
+    /// is retired — a frozen fleet still reports what it last saw).
+    fn fleet_version(&self) -> u64 {
+        let live = self
+            .legs
+            .iter()
+            .filter(|l| !l.retired.load(Ordering::SeqCst))
+            .map(|l| l.version.load(Ordering::SeqCst))
+            .max();
+        live.unwrap_or_else(|| {
+            self.legs.iter().map(|l| l.version.load(Ordering::SeqCst)).max().unwrap_or(0)
+        })
+    }
+
+    fn statuses(&self) -> Vec<ReplicaStatus> {
+        self.legs
+            .iter()
+            .map(|l| ReplicaStatus {
+                version: l.version.load(Ordering::SeqCst),
+                inflight: l.inflight.load(Ordering::SeqCst).min(u32::MAX as usize) as u32,
+                flags: if l.retired.load(Ordering::SeqCst) { ROUTE_RETIRED } else { 0 },
+            })
+            .collect()
+    }
+}
+
+/// The routing tier: one listener, N replica legs, per-leg answer
+/// caches and health probes.  See the module doc for semantics.
+pub struct Router {
+    addr: SocketAddr,
+    ctx: Arc<RouteCtx>,
+    threads: Vec<JoinHandle<()>>,
+}
+
+impl Router {
+    /// Bind `listen`, dial every replica (failing fast on an
+    /// unreachable or mismatched fleet), and start serving routed
+    /// PREDICT sessions.
+    pub fn start(listen: &str, replicas: &[String], cfg: RouterConfig) -> Result<Self> {
+        ensure!(!replicas.is_empty(), "a router needs at least one replica");
+        ensure!(
+            replicas.len() <= MAX_ROUTE_REPLICAS,
+            "{} replicas exceeds the ROUTE-STATUS ceiling {MAX_ROUTE_REPLICAS}",
+            replicas.len()
+        );
+        let listener = TcpListener::bind(listen)
+            .with_context(|| format!("bind router listener on {listen}"))?;
+        let addr = listener.local_addr().context("router listener address")?;
+
+        // Dial the whole fleet up front: a typo'd or down replica fails
+        // start() instead of silently serving a smaller fleet, and the
+        // handshakes teach us (m, d, version) for the session acks.
+        let mut first = Vec::with_capacity(replicas.len());
+        let mut md: Option<(usize, usize)> = None;
+        for (i, a) in replicas.iter().enumerate() {
+            let c = PredictClient::connect(a)
+                .with_context(|| format!("router leg {i}: dial replica {a}"))?;
+            match md {
+                None => md = Some((c.m, c.d)),
+                Some((m, d)) => ensure!(
+                    (c.m, c.d) == (m, d),
+                    "router leg {i} ({a}) announces m={}, d={} but leg 0 announced m={m}, d={d}",
+                    c.m,
+                    c.d
+                ),
+            }
+            first.push(c);
+        }
+        let (m, d) = md.unwrap();
+        let layout_len = ThetaLayout::new(m, d).len() as u64;
+
+        let legs: Vec<Arc<Leg>> = replicas
+            .iter()
+            .zip(&first)
+            .map(|(a, c)| {
+                Arc::new(Leg {
+                    addr: a.clone(),
+                    inflight: AtomicUsize::new(0),
+                    retired: AtomicBool::new(false),
+                    version: AtomicU64::new(c.version),
+                    answered: AtomicU64::new(0),
+                    cache: AnswerCache::new(cfg.cache_rows),
+                })
+            })
+            .collect();
+
+        let n = legs.len();
+        let ctx = Arc::new(RouteCtx {
+            legs,
+            m: m as u64,
+            d: d as u64,
+            layout_len,
+            cfg,
+            over: AtomicBool::new(false),
+            sessions: AtomicU64::new(0),
+            routed: AtomicU64::new(0),
+            cache_hits: AtomicU64::new(0),
+            cache_misses: AtomicU64::new(0),
+            retries: AtomicU64::new(0),
+            failovers: AtomicU64::new(0),
+            hop_rejects: RejectCounters::default(),
+            surfaced: RejectCounters::default(),
+            conns: Mutex::new(Vec::new()),
+        });
+
+        let mut threads = Vec::with_capacity(n + 1);
+        for (i, c) in first.into_iter().enumerate() {
+            let ctx = ctx.clone();
+            threads.push(
+                std::thread::Builder::new()
+                    .name(format!("advgp-route-probe-{i}"))
+                    .spawn(move || probe_leg(ctx, i, Some(c)))
+                    .context("spawn probe thread")?,
+            );
+        }
+        {
+            let ctx = ctx.clone();
+            threads.push(
+                std::thread::Builder::new()
+                    .name("advgp-route-accept".into())
+                    .spawn(move || accept_sessions(listener, ctx))
+                    .context("spawn router accept thread")?,
+            );
+        }
+        log_info!("serve::router: routing {addr} over {n} replicas (m={m}, d={d})");
+        Ok(Self { addr, ctx, threads })
+    }
+
+    /// The client-facing listen address.
+    pub fn addr(&self) -> SocketAddr {
+        self.addr
+    }
+
+    /// Live counter snapshot.
+    pub fn stats(&self) -> RouteStats {
+        stats_of(&self.ctx)
+    }
+
+    /// Whether leg `i`'s probe currently has it retired.
+    pub fn leg_retired(&self, i: usize) -> bool {
+        self.ctx.legs[i].retired.load(Ordering::SeqCst)
+    }
+
+    /// Poll until leg `i` is retired (true) or `timeout` passes.
+    pub fn wait_leg_retired(&self, i: usize, timeout: Duration) -> bool {
+        let deadline = Instant::now() + timeout;
+        while Instant::now() < deadline {
+            if self.leg_retired(i) {
+                return true;
+            }
+            std::thread::sleep(Duration::from_millis(20));
+        }
+        self.leg_retired(i)
+    }
+
+    /// Stop accepting, sever every held stream, join all threads, and
+    /// return the final counters.
+    pub fn shutdown(self) -> RouteStats {
+        let Router { ctx, threads, .. } = self;
+        ctx.over.store(true, Ordering::SeqCst);
+        for c in ctx.conns.lock().unwrap().iter() {
+            let _ = c.lock().unwrap().shutdown(std::net::Shutdown::Both);
+        }
+        for t in threads {
+            let _ = t.join();
+        }
+        stats_of(&ctx)
+    }
+}
+
+fn stats_of(ctx: &RouteCtx) -> RouteStats {
+    RouteStats {
+        sessions: ctx.sessions.load(Ordering::Relaxed),
+        routed: ctx.routed.load(Ordering::Relaxed),
+        cache_hits: ctx.cache_hits.load(Ordering::Relaxed),
+        cache_misses: ctx.cache_misses.load(Ordering::Relaxed),
+        retries: ctx.retries.load(Ordering::Relaxed),
+        failovers: ctx.failovers.load(Ordering::Relaxed),
+        hop_rejects: ctx.hop_rejects.by_code().to_vec(),
+        surfaced_rejects: ctx.surfaced.by_code().to_vec(),
+        answered_per_leg: ctx.legs.iter().map(|l| l.answered.load(Ordering::Relaxed)).collect(),
+        retired: ctx.legs.iter().map(|l| l.retired.load(Ordering::SeqCst)).collect(),
+        leg_versions: ctx.legs.iter().map(|l| l.version.load(Ordering::SeqCst)).collect(),
+    }
+}
+
+// ---------------------------------------------------------------------------
+// Health probes
+// ---------------------------------------------------------------------------
+
+/// Arm the probe's PONG grace window, learn the handshake version, and
+/// make the stream severable at shutdown.
+fn adopt_probe(ctx: &RouteCtx, leg: &Leg, c: &PredictClient) {
+    let hb = ctx.cfg.retry.heartbeat;
+    let _ = c.set_answer_timeout(Some(hb * 2));
+    leg.observe(c.version);
+    if let Ok(s) = c.try_clone_stream() {
+        ctx.register_raw(s);
+    }
+}
+
+/// Per-leg health loop: PING at heartbeat cadence; a failed probe
+/// retires the leg, then redials with jittered backoff **forever**
+/// (unlike the budgeted training-side reconnects, retirement is the
+/// steady state while a replica is unreachable and revival costs one
+/// good handshake).
+fn probe_leg(ctx: Arc<RouteCtx>, idx: usize, mut client: Option<PredictClient>) {
+    let leg = ctx.legs[idx].clone();
+    let hb = ctx.cfg.retry.heartbeat;
+    let mut rng =
+        Pcg64::seeded(ctx.cfg.seed ^ fnv1a64(FNV1A64_INIT, leg.addr.as_bytes()));
+    let mut attempt = 0u32;
+    if let Some(c) = &client {
+        adopt_probe(&ctx, &leg, c);
+    }
+    loop {
+        if ctx.over.load(Ordering::SeqCst) {
+            return;
+        }
+        let Some(c) = client.as_mut() else {
+            match PredictClient::connect(&leg.addr) {
+                Ok(c) => {
+                    adopt_probe(&ctx, &leg, &c);
+                    if leg.retired.swap(false, Ordering::SeqCst) {
+                        log_info!(
+                            "serve::router: leg {idx} ({}) revived at θ v{}",
+                            leg.addr,
+                            c.version
+                        );
+                    }
+                    attempt = 0;
+                    client = Some(c);
+                }
+                Err(_) => {
+                    if !leg.retired.swap(true, Ordering::SeqCst) {
+                        log_warn!(
+                            "serve::router: leg {idx} ({}) unreachable — retired",
+                            leg.addr
+                        );
+                    }
+                    let delay = ctx.cfg.retry.reconnect.delay(attempt, &mut rng);
+                    attempt = attempt.saturating_add(1);
+                    if sleep_poll(delay, &ctx.over) {
+                        return;
+                    }
+                }
+            }
+            continue;
+        };
+        if sleep_poll(hb, &ctx.over) {
+            return;
+        }
+        if c.ping().is_ok() {
+            continue;
+        }
+        if !leg.retired.swap(true, Ordering::SeqCst) {
+            log_warn!(
+                "serve::router: leg {idx} ({}) failed its heartbeat probe — retired",
+                leg.addr
+            );
+        }
+        client = None;
+    }
+}
+
+// ---------------------------------------------------------------------------
+// Client sessions
+// ---------------------------------------------------------------------------
+
+fn accept_sessions(listener: TcpListener, ctx: Arc<RouteCtx>) {
+    let nonblocking = listener.set_nonblocking(true).is_ok();
+    loop {
+        match listener.accept() {
+            Ok((s, _peer)) => {
+                if ctx.over.load(Ordering::SeqCst) {
+                    return;
+                }
+                let _ = s.set_nonblocking(false);
+                let ctx = ctx.clone();
+                let _ = std::thread::Builder::new()
+                    .name("advgp-route-conn".into())
+                    .spawn(move || handle_route_conn(s, ctx));
+            }
+            Err(ref e) if e.kind() == std::io::ErrorKind::WouldBlock => {
+                if ctx.over.load(Ordering::SeqCst) || !nonblocking {
+                    return;
+                }
+                std::thread::sleep(Duration::from_millis(50));
+            }
+            Err(_) => {
+                if ctx.over.load(Ordering::SeqCst) {
+                    return;
+                }
+                std::thread::sleep(Duration::from_millis(50));
+            }
+        }
+    }
+}
+
+/// A session's lazily-dialed connection to one leg.  The replica drops
+/// a predict session silent through `2×heartbeat` (its PING goes
+/// unanswered while this handler blocks on the *client* socket), so a
+/// connection idle past one heartbeat window is discarded and redialed
+/// rather than trusted.
+struct LegConn {
+    client: PredictClient,
+    last_used: Instant,
+}
+
+fn handle_route_conn(stream: TcpStream, ctx: Arc<RouteCtx>) {
+    let _ = stream.set_nodelay(true);
+    let _ = stream.set_write_timeout(Some(ctx.cfg.retry.write_timeout));
+    let _ = stream.set_read_timeout(Some(ctx.cfg.retry.handshake_timeout));
+    let peer = stream.peer_addr().map(|a| a.to_string()).unwrap_or_else(|_| "?".into());
+    let Some(writer) = ctx.register(&stream) else { return };
+    let mut reader = stream;
+    let mut scratch = Vec::new();
+    let first = wire::read_frame_capped(&mut reader, &mut scratch, MAX_HANDSHAKE_FRAME_LEN);
+    match first {
+        Ok(Frame::Subscribe { proto, scope }) if proto >= PROTO_NT2 => {
+            if scope != SUBSCRIBE_PREDICT {
+                let _ = send_frame(
+                    &writer,
+                    &Frame::Reject {
+                        id: 0,
+                        code: REJ_BAD_SCOPE,
+                        message: "routers front predict sessions; subscribe to the \
+                                  θ-slice servers for posterior streams"
+                            .into(),
+                    },
+                );
+                return;
+            }
+        }
+        Ok(Frame::Subscribe { .. }) => {
+            let msg = format!("predict sessions require rev {PROTO_NT2}");
+            let _ = send_frame(&writer, &Frame::Error { code: ERR_PROTO, message: msg });
+            return;
+        }
+        Ok(f) => {
+            let msg = format!("expected SUBSCRIBE, got kind {:#04x}", f.kind());
+            let _ = send_frame(&writer, &Frame::Error { code: ERR_MALFORMED, message: msg });
+            return;
+        }
+        Err(e) => {
+            let msg = format!("bad SUBSCRIBE: {e:#}");
+            let _ = send_frame(&writer, &Frame::Error { code: ERR_MALFORMED, message: msg });
+            return;
+        }
+    }
+    // The ack mirrors a replica's exactly — same header-only sync, with
+    // the newest live-leg version as the fleet version — so existing
+    // predict clients work against a router unchanged.
+    let ack = Frame::PosteriorSync {
+        m: ctx.m,
+        d: ctx.d,
+        slice_id: 0,
+        n_slices: 1,
+        start: 0,
+        end: ctx.layout_len,
+        version: ctx.fleet_version(),
+        meta: PublishMeta::default(),
+        theta: vec![],
+    };
+    if send_frame(&writer, &ack).is_err() {
+        return;
+    }
+    // What a replica never sends: fleet observability, pushed once per
+    // session right after the handshake.
+    let status =
+        Frame::RouteStatus { fleet_version: ctx.fleet_version(), replicas: ctx.statuses() };
+    if send_frame(&writer, &status).is_err() {
+        return;
+    }
+    // Per-session draw stream: seed ^ session-ordinal makes leg choices
+    // a pure function of (config seed, session order, request order) —
+    // the chaos suite replays routed fault traces on exactly this.
+    let ordinal = ctx.sessions.fetch_add(1, Ordering::SeqCst);
+    let mut rng = Pcg64::seeded(ctx.cfg.seed ^ ordinal);
+    let mut legs_conn: Vec<Option<LegConn>> = ctx.legs.iter().map(|_| None).collect();
+    let _ = reader.set_read_timeout(Some(ctx.cfg.retry.heartbeat));
+    let mut pinged = false;
+    loop {
+        let frame = match wire::read_frame_event(&mut reader, &mut scratch, MAX_FRAME_LEN) {
+            Ok(ReadEvent::Frame(f)) => {
+                pinged = false;
+                f
+            }
+            Ok(ReadEvent::IdleTimeout) => {
+                if pinged || send_frame(&writer, &Frame::Ping).is_err() {
+                    log_warn!(
+                        "serve::router: client {peer} silent through PING + grace — \
+                         dropping the session"
+                    );
+                    break;
+                }
+                pinged = true;
+                continue;
+            }
+            Ok(ReadEvent::Eof) => break,
+            Err(e) => {
+                let msg = format!("malformed stream: {e:#}");
+                let _ = send_frame(&writer, &Frame::Error { code: ERR_MALFORMED, message: msg });
+                break;
+            }
+        };
+        match frame {
+            Frame::Predict { id, d: want_d, rows } => {
+                if !route_request(&ctx, &mut rng, &mut legs_conn, &writer, id, want_d, rows) {
+                    break;
+                }
+            }
+            Frame::Ping => {
+                let _ = send_frame(&writer, &Frame::Pong);
+            }
+            Frame::Pong => {}
+            Frame::Error { code, message } => {
+                log_warn!("serve::router: client {peer} sent error {code}: {message}");
+                break;
+            }
+            f => {
+                let msg = format!("unexpected kind {:#04x} on a predict session", f.kind());
+                let _ = send_frame(&writer, &Frame::Error { code: ERR_MALFORMED, message: msg });
+                break;
+            }
+        }
+    }
+    let _ = reader.shutdown(std::net::Shutdown::Both);
+}
+
+/// Draw one untried live leg — power of two choices on in-flight rows,
+/// first draw winning ties so a quiet fleet still spreads by the rng
+/// stream alone.
+fn pick_leg(ctx: &RouteCtx, rng: &mut Pcg64, tried: &[bool]) -> Option<usize> {
+    let live: Vec<usize> = ctx
+        .legs
+        .iter()
+        .enumerate()
+        .filter(|(i, l)| !tried[*i] && !l.retired.load(Ordering::SeqCst))
+        .map(|(i, _)| i)
+        .collect();
+    match live.len() {
+        0 => None,
+        1 => Some(live[0]),
+        n => {
+            let ia = rng.next_below(n as u64) as usize;
+            let mut ib = rng.next_below(n as u64 - 1) as usize;
+            if ib >= ia {
+                ib += 1;
+            }
+            let (a, b) = (live[ia], live[ib]);
+            let load_a = ctx.legs[a].inflight.load(Ordering::SeqCst);
+            let load_b = ctx.legs[b].inflight.load(Ordering::SeqCst);
+            Some(if load_b < load_a { b } else { a })
+        }
+    }
+}
+
+/// Route one PREDICT: cache → forward → (maybe) retry on a sibling.
+/// Returns false when the client link is dead and the session should
+/// end.
+fn route_request(
+    ctx: &RouteCtx,
+    rng: &mut Pcg64,
+    legs_conn: &mut [Option<LegConn>],
+    writer: &Mutex<TcpStream>,
+    id: u64,
+    want_d: u64,
+    rows: Vec<f64>,
+) -> bool {
+    let d = ctx.d as usize;
+    let surface = |code: u16, message: String| {
+        ctx.surfaced.bump(code);
+        send_frame(writer, &Frame::Reject { id, code, message }).is_ok()
+    };
+    if want_d != ctx.d {
+        return surface(
+            REJ_BAD_DIM,
+            format!("inputs are {want_d}-dimensional but the model takes {}", ctx.d),
+        );
+    }
+    if rows.is_empty() || rows.len() % d != 0 {
+        return surface(
+            REJ_BAD_DIM,
+            format!("{} values is not a whole number of {d}-dim rows", rows.len()),
+        );
+    }
+    let k = rows.len() / d;
+    let mut tried = vec![false; ctx.legs.len()];
+    let mut attempts = ctx.cfg.retry_hops + 1;
+    let mut last_reject: Option<(u16, String)> = None;
+    while attempts > 0 {
+        let Some(idx) = pick_leg(ctx, rng, &tried) else { break };
+        tried[idx] = true;
+        attempts -= 1;
+        let leg = &ctx.legs[idx];
+        // Cache first: every row must hit at the leg's newest observed
+        // version or the whole request goes upstream.
+        if ctx.cfg.cache_rows > 0 {
+            if let Some((version, mean, var)) = leg.cache.get_batch(&rows, d) {
+                ctx.cache_hits.fetch_add(1, Ordering::Relaxed);
+                ctx.routed.fetch_add(1, Ordering::Relaxed);
+                leg.answered.fetch_add(1, Ordering::Relaxed);
+                return send_frame(writer, &Frame::Prediction { id, version, mean, var })
+                    .is_ok();
+            }
+            ctx.cache_misses.fetch_add(1, Ordering::Relaxed);
+        }
+        // A leg connection idle past one heartbeat window may already
+        // be dropped replica-side — redial instead of trusting it.
+        if let Some(lc) = &legs_conn[idx] {
+            if lc.last_used.elapsed() >= ctx.cfg.retry.heartbeat {
+                legs_conn[idx] = None;
+            }
+        }
+        if legs_conn[idx].is_none() {
+            match PredictClient::connect(&leg.addr) {
+                Ok(c) => {
+                    let _ = c.set_answer_timeout(Some(ctx.cfg.retry.handshake_timeout));
+                    if let Ok(s) = c.try_clone_stream() {
+                        ctx.register_raw(s);
+                    }
+                    leg.observe(c.version);
+                    legs_conn[idx] = Some(LegConn { client: c, last_used: Instant::now() });
+                }
+                Err(_) => {
+                    ctx.failovers.fetch_add(1, Ordering::Relaxed);
+                    continue;
+                }
+            }
+        }
+        let lc = legs_conn[idx].as_mut().unwrap();
+        leg.inflight.fetch_add(k, Ordering::SeqCst);
+        let outcome = lc.client.predict(&rows);
+        leg.inflight.fetch_sub(k, Ordering::SeqCst);
+        match outcome {
+            Ok(PredictAnswer::Prediction { version, mean, var }) => {
+                lc.last_used = Instant::now();
+                leg.observe(version);
+                if ctx.cfg.cache_rows > 0 {
+                    leg.cache.insert_batch(version, &rows, d, &mean, &var);
+                }
+                ctx.routed.fetch_add(1, Ordering::Relaxed);
+                leg.answered.fetch_add(1, Ordering::Relaxed);
+                return send_frame(writer, &Frame::Prediction { id, version, mean, var })
+                    .is_ok();
+            }
+            Ok(PredictAnswer::Rejected { code, message }) => {
+                lc.last_used = Instant::now();
+                ctx.hop_rejects.bump(code);
+                if reject_is_retryable(code) {
+                    // Replica-state verdict: a sibling may well say
+                    // yes — absorb and keep going.
+                    ctx.retries.fetch_add(1, Ordering::Relaxed);
+                    last_reject = Some((code, message));
+                    continue;
+                }
+                // Request/fleet verdict: every sibling would repeat it.
+                return surface(code, message);
+            }
+            Err(_) => {
+                // Dead link mid-request: drop the connection (the next
+                // request redials) and fail over.
+                legs_conn[idx] = None;
+                ctx.failovers.fetch_add(1, Ordering::Relaxed);
+                continue;
+            }
+        }
+    }
+    let (code, message) = last_reject
+        .unwrap_or_else(|| (REJ_NOT_READY, "no live replica could answer".into()));
+    surface(code, message)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn colliding(_bytes: &[u8]) -> u64 {
+        42
+    }
+
+    #[test]
+    fn answer_cache_hits_only_on_exact_version_and_row() {
+        let cache = AnswerCache::new(8);
+        cache.insert(3, &[1.0, 2.0], 0.5, 0.25);
+        assert_eq!(cache.get(&[1.0, 2.0]), Some((3, 0.5, 0.25)));
+        // one-ulp difference in the row is a different key
+        assert_eq!(cache.get(&[1.0, 2.0 + f64::EPSILON]), None);
+        // a newer version makes the entry unreachable
+        cache.advance(4);
+        assert_eq!(cache.get(&[1.0, 2.0]), None);
+        assert_eq!(cache.len(), 0);
+        // inserts at an older version are dropped, not resurrected
+        cache.insert(3, &[1.0, 2.0], 0.5, 0.25);
+        assert_eq!(cache.len(), 0);
+    }
+
+    #[test]
+    fn answer_cache_collisions_never_cross_serve() {
+        let cache = AnswerCache::with_hasher(8, colliding);
+        cache.insert(1, &[1.0], 10.0, 0.1);
+        cache.insert(1, &[2.0], 20.0, 0.2);
+        // both rows live under one hash; lookups stay row-exact
+        assert_eq!(cache.get(&[1.0]), Some((1, 10.0, 0.1)));
+        assert_eq!(cache.get(&[2.0]), Some((1, 20.0, 0.2)));
+        assert_eq!(cache.get(&[3.0]), None);
+    }
+
+    #[test]
+    fn answer_cache_eviction_is_fifo_and_bounded() {
+        let cache = AnswerCache::new(2);
+        cache.insert(1, &[1.0], 10.0, 0.1);
+        cache.insert(1, &[2.0], 20.0, 0.2);
+        cache.insert(1, &[3.0], 30.0, 0.3);
+        assert_eq!(cache.len(), 2);
+        assert_eq!(cache.get(&[1.0]), None, "oldest entry evicted first");
+        assert_eq!(cache.get(&[2.0]), Some((1, 20.0, 0.2)));
+        assert_eq!(cache.get(&[3.0]), Some((1, 30.0, 0.3)));
+    }
+
+    #[test]
+    fn get_batch_is_all_or_nothing() {
+        let cache = AnswerCache::new(8);
+        cache.insert(5, &[1.0, 2.0], 0.5, 0.25);
+        cache.insert(5, &[3.0, 4.0], 0.7, 0.35);
+        let (v, mean, var) = cache.get_batch(&[1.0, 2.0, 3.0, 4.0], 2).unwrap();
+        assert_eq!((v, mean, var), (5, vec![0.5, 0.7], vec![0.25, 0.35]));
+        // one uncached row fails the whole request
+        assert!(cache.get_batch(&[1.0, 2.0, 9.0, 9.0], 2).is_none());
+    }
+
+    #[test]
+    fn zero_capacity_disables_caching() {
+        let cache = AnswerCache::new(0);
+        cache.insert(1, &[1.0], 10.0, 0.1);
+        assert_eq!(cache.len(), 0);
+        assert_eq!(cache.get(&[1.0]), None);
+    }
+}

@@ -25,6 +25,12 @@
 //! at the newest θ version, and the same plan replays the same serving
 //! fault trace.
 //!
+//! The routed matrix (ADVGPRT1, ISSUE 9) aims the proxy at a
+//! [`Router`]'s predict legs instead: a severed leg drains its
+//! sessions to the sibling with zero client-visible errors, a wedged
+//! replica is retired by the health probe so P2C stops selecting it,
+//! and the same routed seed replays the same routed fault trace.
+//!
 //! [`ServerStats::faults`]: advgp::ps::metrics::ServerStats
 
 use advgp::data::{kmeans, synth, Dataset, Standardizer};
@@ -36,7 +42,7 @@ use advgp::ps::net::{sharded_worker_loop_with, NetServer, ReconnectPolicy, Retry
 use advgp::ps::wire::{self, Frame};
 use advgp::ps::worker::{WorkerProfile, WorkerSource};
 use advgp::ps::{FaultEvent, FaultPlan, FaultProxy, FaultRule, RunResult};
-use advgp::serve::{PredictAnswer, PredictClient, Replica, ReplicaConfig};
+use advgp::serve::{PredictAnswer, PredictClient, Replica, ReplicaConfig, Router, RouterConfig};
 use advgp::util::rng::Pcg64;
 use std::net::{TcpListener, TcpStream};
 use std::time::{Duration, Instant};
@@ -696,4 +702,288 @@ fn same_seed_replays_the_same_serving_fault_trace() {
     assert!(!first.is_empty(), "the seeded serving plan must have applied faults");
     assert_eq!(first, second, "same seed must replay the same serving fault trace");
     assert_eq!((v1, v2), (12, 12));
+}
+
+// ---------------------------------------------------------------------
+// ADVGPRT1 routed serving (ISSUE 9): the chaos discipline aimed at a
+// router's predict legs.  Training runs to completion *before* the
+// router starts — every assertion here is about the routed read path
+// (failover, retirement, replay), never about convergence.
+//
+// Seeds in use (documented per the chaos discipline):
+// * 0x5EED_5E13 — the seeded routed sever plan (replay row) and the
+//   RouterConfig::seed / request-stream seed of that row;
+// * 0xF01D_0001 / 0xF01D_0002 — request-stream seeds of the failover
+//   and wedge rows (the router P2C seed stays at its default there).
+// ---------------------------------------------------------------------
+
+/// Train a healthy single-server run to completion with `replicas`
+/// subscribed replicas, wait every replica to the final θ and the
+/// clean trainer end, and hand the fleet over — chaos is then applied
+/// to the predict path only.
+fn trained_fleet(seed: u64, replicas: usize) -> (RunResult, Vec<Replica>, ThetaLayout) {
+    let (train_ds, _test, theta, layout) = setup(400, 6, seed);
+    let shards = train_ds.shard(2);
+    let max_updates = 12u64;
+    let net = NetServer::bind("127.0.0.1:0").unwrap();
+    let addr = net.local_addr().to_string();
+    let trainer = {
+        let theta0 = theta.data.clone();
+        std::thread::spawn(move || {
+            train_remote(&chaos_cfg(layout, max_updates), theta0, net, 2, None)
+        })
+    };
+    let fleet: Vec<Replica> = (0..replicas)
+        .map(|_| {
+            Replica::start(
+                "127.0.0.1:0",
+                std::slice::from_ref(&addr),
+                ReplicaConfig { retry: chaos_retry(), ..Default::default() },
+            )
+            .expect("replica subscribes")
+        })
+        .collect();
+    let workers: Vec<_> = shards
+        .into_iter()
+        .enumerate()
+        .map(|(k, shard)| {
+            let addr = addr.clone();
+            std::thread::spawn(move || {
+                let _ = sharded_worker_loop_with(
+                    &[addr],
+                    Some(k),
+                    WorkerSource::Memory(shard),
+                    native_factory(layout),
+                    one_thread(),
+                    chaos_retry(),
+                );
+            })
+        })
+        .collect();
+    let run = trainer.join().expect("trainer thread");
+    for w in workers {
+        w.join().expect("worker thread");
+    }
+    assert_eq!(run.stats.updates, max_updates, "the training fleet is healthy");
+    for (i, r) in fleet.iter().enumerate() {
+        assert!(
+            r.wait_version(max_updates, Duration::from_secs(30)),
+            "replica {i} stuck at θ v{:?}",
+            r.version()
+        );
+        assert!(r.wait_trainer_end(Duration::from_secs(10)));
+    }
+    (run, fleet, layout)
+}
+
+fn fresh_rows(rng: &mut Pcg64, d: usize) -> Vec<f64> {
+    (0..d).map(|_| rng.next_f64() * 2.0 - 1.0).collect()
+}
+
+/// Severing a replica's predict leg mid-session drains the session to
+/// the sibling inside the router's retry budget: every request —
+/// including the one whose answer the sever swallowed — comes back as
+/// a PREDICTION, zero client-visible errors.  No probe retirement is
+/// involved: the leg stays live and the next request simply redials a
+/// clean connection.
+#[test]
+fn severed_predict_leg_fails_over_with_zero_client_visible_errors() {
+    let (run, fleet, layout) = trained_fleet(73, 2);
+    // Proxy conns in accept order: 0 = the router's validation dial
+    // (adopted by the health probe), 1 = the first session leg.  Sever
+    // the leg's server→client stream at its second answer frame
+    // (frame 0 is the handshake ack) — i.e. mid-session.
+    let sever = FaultRule {
+        conn: Some(1),
+        dir: Direction::ServerToClient,
+        frame: 2,
+        event: FaultEvent::Sever,
+    };
+    let mut proxy = FaultProxy::start(
+        &fleet[0].predict_addr().to_string(),
+        FaultPlan::new(vec![sever]),
+    )
+    .unwrap();
+    let legs = vec![proxy.addr(), fleet[1].predict_addr().to_string()];
+    // Cache off: every request must actually forward, so the sever is
+    // guaranteed to be exercised by live traffic.
+    let rcfg = RouterConfig { cache_rows: 0, ..Default::default() };
+    let router = Router::start("127.0.0.1:0", &legs, rcfg).unwrap();
+    let mut client = PredictClient::connect(&router.addr().to_string()).unwrap();
+    let mut rng = Pcg64::seeded(0xF01D_0001);
+    let deadline = Instant::now() + Duration::from_secs(20);
+    let mut answered = 0u64;
+    loop {
+        let rows = fresh_rows(&mut rng, layout.d);
+        match client.predict(&rows).expect("session must survive the sever") {
+            PredictAnswer::Prediction { version, .. } => {
+                assert_eq!(version, run.stats.updates, "answers stay at the final θ");
+                answered += 1;
+            }
+            PredictAnswer::Rejected { code, message } => {
+                panic!("client-visible error across the sever ({code}: {message})")
+            }
+        }
+        // Keep going until the sever has fired *and* enough later
+        // answers prove the session outlived it.
+        if !proxy.trace().is_empty() && answered >= 24 {
+            break;
+        }
+        assert!(
+            Instant::now() < deadline,
+            "the planned sever never fired (trace {:?}, {answered} answered)",
+            proxy.trace()
+        );
+    }
+    assert_eq!(proxy.trace(), vec![sever]);
+    drop(client);
+    let stats = router.shutdown();
+    assert_eq!(stats.routed, answered, "every request answered through the router");
+    assert!(stats.failovers >= 1, "the dead leg connection must have failed over");
+    assert!(
+        stats.surfaced_rejects.iter().all(|&(_, n)| n == 0),
+        "nothing surfaced to the client: {:?}",
+        stats.surfaced_rejects
+    );
+    assert!(!stats.retired[0], "a severed connection is not a retired leg");
+    for r in fleet {
+        r.shutdown();
+    }
+    proxy.shutdown();
+}
+
+/// A wedged replica (TCP-alive, protocol-silent) is detected by the
+/// router's health probe within ~two heartbeat windows and the leg is
+/// retired: P2C stops selecting it, sessions opened after the
+/// retirement never touch it, and ROUTE-STATUS advertises the
+/// retirement.
+#[test]
+fn wedged_replica_is_retired_and_p2c_stops_selecting_it() {
+    let (run, fleet, layout) = trained_fleet(79, 2);
+    // conn 0 (the router's validation dial, adopted by the probe)
+    // wedges server→client after the handshake ack (frame 0): the
+    // probe's first PING draws no PONG and its read times out.  Every
+    // probe *reconnect* (conns 1..) is severed during its handshake so
+    // a revival cannot race the assertions below.
+    let mut rules = vec![FaultRule {
+        conn: Some(0),
+        dir: Direction::ServerToClient,
+        frame: 1,
+        event: FaultEvent::Wedge,
+    }];
+    for c in 1..=40 {
+        rules.push(FaultRule {
+            conn: Some(c),
+            dir: Direction::ServerToClient,
+            frame: 0,
+            event: FaultEvent::Sever,
+        });
+    }
+    let mut proxy =
+        FaultProxy::start(&fleet[0].predict_addr().to_string(), FaultPlan::new(rules))
+            .unwrap();
+    let legs = vec![proxy.addr(), fleet[1].predict_addr().to_string()];
+    let rcfg =
+        RouterConfig { retry: chaos_retry(), cache_rows: 0, ..Default::default() };
+    let router = Router::start("127.0.0.1:0", &legs, rcfg).unwrap();
+    assert!(
+        router.wait_leg_retired(0, Duration::from_secs(10)),
+        "the heartbeat probe never retired the wedged leg"
+    );
+    // A session opened after the retirement: P2C must never select the
+    // wedged leg, so every answer is prompt and error-free.
+    let mut client = PredictClient::connect(&router.addr().to_string()).unwrap();
+    let mut rng = Pcg64::seeded(0xF01D_0002);
+    for i in 0..10 {
+        let rows = fresh_rows(&mut rng, layout.d);
+        match client.predict(&rows).expect("session") {
+            PredictAnswer::Prediction { version, .. } => {
+                assert_eq!(version, run.stats.updates)
+            }
+            PredictAnswer::Rejected { code, message } => {
+                panic!("request {i} rejected behind a retired leg ({code}: {message})")
+            }
+        }
+    }
+    let (_, statuses) = client.route_status.clone().expect("ROUTE-STATUS pushed");
+    assert!(statuses[0].retired(), "the wedged leg must be advertised retired");
+    assert!(!statuses[1].retired());
+    drop(client);
+    let stats = router.shutdown();
+    assert!(stats.retired[0] && !stats.retired[1]);
+    assert_eq!(
+        stats.answered_per_leg[0], 0,
+        "a retired leg must receive no session traffic"
+    );
+    assert_eq!(
+        stats.failovers, 0,
+        "retirement prevents failover churn entirely — P2C never tried the leg"
+    );
+    assert!(!proxy.trace().is_empty(), "the wedge must have fired");
+    for r in fleet {
+        r.shutdown();
+    }
+    proxy.shutdown();
+}
+
+/// Routed replay determinism: a sever plan *drawn from seed
+/// 0x5EED_5E13*, pinned to the first session leg's server→client
+/// stream, applies the identical fault trace on two independent
+/// end-to-end routed runs — same seed, same P2C draws, same routed
+/// chaos — and both runs answer every request.
+#[test]
+fn same_seed_replays_the_same_routed_fault_trace() {
+    fn routed_faulted_run(plan: FaultPlan) -> Vec<FaultRule> {
+        let (run, fleet, layout) = trained_fleet(83, 2);
+        let mut proxy =
+            FaultProxy::start(&fleet[0].predict_addr().to_string(), plan).unwrap();
+        let legs = vec![proxy.addr(), fleet[1].predict_addr().to_string()];
+        // Default 30 s heartbeat: no idle-leg redials and no probe
+        // repings inside the run, so the proxy's conn/frame schedule is
+        // a pure function of the session's P2C draws — which the fixed
+        // router seed pins.
+        let rcfg =
+            RouterConfig { cache_rows: 0, seed: 0x5EED_5E13, ..Default::default() };
+        let router = Router::start("127.0.0.1:0", &legs, rcfg).unwrap();
+        let mut client = PredictClient::connect(&router.addr().to_string()).unwrap();
+        let mut rng = Pcg64::seeded(0x5EED_5E13);
+        for i in 0..24 {
+            let rows = fresh_rows(&mut rng, layout.d);
+            match client.predict(&rows).expect("session survives the routed chaos") {
+                PredictAnswer::Prediction { version, .. } => {
+                    assert_eq!(version, run.stats.updates)
+                }
+                PredictAnswer::Rejected { code, message } => {
+                    panic!("request {i} surfaced an error ({code}: {message})")
+                }
+            }
+        }
+        drop(client);
+        let stats = router.shutdown();
+        assert_eq!(stats.routed, 24, "every request answered");
+        let trace = proxy.trace();
+        for r in fleet {
+            r.shutdown();
+        }
+        proxy.shutdown();
+        trace
+    }
+    let drawn = FaultPlan::seeded(0x5EED_5E13, &[FaultEvent::Sever], 1..4);
+    assert_eq!(
+        drawn,
+        FaultPlan::seeded(0x5EED_5E13, &[FaultEvent::Sever], 1..4),
+        "same seed must yield the same plan"
+    );
+    let mut rules = drawn.rules;
+    for r in rules.iter_mut() {
+        // conn 1 = the first session leg (conn 0 is the probe); frames
+        // 1.. spare the handshake ack.
+        r.conn = Some(1);
+        r.dir = Direction::ServerToClient;
+    }
+    let plan = FaultPlan::new(rules);
+    let first = routed_faulted_run(plan.clone());
+    let second = routed_faulted_run(plan);
+    assert!(!first.is_empty(), "the seeded routed plan must have applied faults");
+    assert_eq!(first, second, "same seed must replay the same routed fault trace");
 }

@@ -8,10 +8,21 @@
 //! latency under load), the deadline must flush partial batches (tail
 //! latency when idle), and the posterior cache must never publish a
 //! lower version or a torn snapshot no matter how installs race.
+//!
+//! The ADVGPRT1 (ISSUE 9) satellites extend the file with two more
+//! groups: the router's versioned [`AnswerCache`] (a hit requires the
+//! exact `(posterior version, row bytes)` key; a newer version makes
+//! every stale entry unreachable; the capacity bound evicts without
+//! ever serving a wrong-version or wrong-row answer — driven by a
+//! seeded generator over colliding-hash rows) and **cross-session
+//! batching** (the latency budget is anchored at the oldest staged
+//! row so stragglers cannot starve it, `max_rows` short-circuits the
+//! deadline across sessions, and replies stay with their session
+//! under a 4-writer interleaving race).
 
-use advgp::gp::{Theta, ThetaLayout};
+use advgp::gp::{SparseGp, Theta, ThetaLayout};
 use advgp::linalg::Mat;
-use advgp::serve::{BatchConfig, BatchServer, PosteriorCache};
+use advgp::serve::{AnswerCache, BatchConfig, BatchServer, PosteriorCache};
 use advgp::util::rng::Pcg64;
 use advgp::util::Stats;
 use std::sync::atomic::{AtomicBool, Ordering};
@@ -43,7 +54,7 @@ fn seeded_cache(m: usize, d: usize) -> (Arc<PosteriorCache>, Theta) {
 #[test]
 fn max_rows_flush_short_circuits_the_deadline() {
     let (cache, _th) = seeded_cache(4, 2);
-    let cfg = BatchConfig { max_rows: 4, max_delay: Duration::from_secs(30) };
+    let cfg = BatchConfig { max_rows: 4, latency_budget: Duration::from_secs(30) };
     let (server, client) = BatchServer::start(cache, None, cfg);
     let row = [0.25, -0.5];
     let t0 = Instant::now();
@@ -65,11 +76,11 @@ fn max_rows_flush_short_circuits_the_deadline() {
 }
 
 /// A partial batch flushes at the deadline: fewer than `max_rows` rows
-/// must still be answered once `max_delay` elapses.
+/// must still be answered once `latency_budget` elapses.
 #[test]
 fn deadline_flushes_a_partial_batch() {
     let (cache, _th) = seeded_cache(4, 2);
-    let cfg = BatchConfig { max_rows: 1000, max_delay: Duration::from_millis(30) };
+    let cfg = BatchConfig { max_rows: 1000, latency_budget: Duration::from_millis(30) };
     let (server, client) = BatchServer::start(cache, None, cfg);
     let row = [0.1, 0.2];
     let receivers: Vec<_> =
@@ -94,7 +105,7 @@ fn deadline_flushes_a_partial_batch() {
 #[test]
 fn single_row_batches_answer_every_row() {
     let (cache, _th) = seeded_cache(4, 2);
-    let cfg = BatchConfig { max_rows: 1, max_delay: Duration::ZERO };
+    let cfg = BatchConfig { max_rows: 1, latency_budget: Duration::ZERO };
     let (server, client) = BatchServer::start(cache, None, cfg);
     let row = [0.4, 0.4];
     for _ in 0..5 {
@@ -113,7 +124,7 @@ fn single_row_batches_answer_every_row() {
 #[test]
 fn idle_server_flushes_nothing() {
     let (cache, _th) = seeded_cache(4, 2);
-    let cfg = BatchConfig { max_rows: 8, max_delay: Duration::from_millis(1) };
+    let cfg = BatchConfig { max_rows: 8, latency_budget: Duration::from_millis(1) };
     let (server, client) = BatchServer::start(cache, None, cfg);
     std::thread::sleep(Duration::from_millis(50));
     drop(client);
@@ -295,4 +306,227 @@ fn concurrent_installs_are_version_gated_and_untorn() {
     for (a, b) in expect.iter().zip(&final_post.gp.theta.data) {
         assert_eq!(a.to_bits(), b.to_bits());
     }
+}
+
+// ---------------------------------------------------------------- //
+// AnswerCache: exact-key hits, version gating, bounded eviction     //
+// (ADVGPRT1 satellite)                                              //
+// ---------------------------------------------------------------- //
+
+/// A hit requires the exact row **bytes**: one ULP of perturbation, a
+/// prefix, or a permutation all miss — and 0.0 vs −0.0, equal as
+/// floats, are distinct keys because the cache compares bit patterns.
+#[test]
+fn cache_hits_require_exact_row_bytes() {
+    let cache = AnswerCache::new(16);
+    let row = [0.25, -0.5];
+    cache.insert(2, &row, 1.5, 0.1);
+    assert_eq!(cache.get(&row), Some((2, 1.5, 0.1)));
+    let bumped = [0.25, f64::from_bits((-0.5f64).to_bits() + 1)];
+    assert!(cache.get(&bumped).is_none(), "one-ULP perturbation must miss");
+    assert!(cache.get(&[0.25]).is_none(), "prefix row must miss");
+    assert!(cache.get(&[-0.5, 0.25]).is_none(), "permuted row must miss");
+    cache.insert(2, &[0.0], 10.0, 1.0);
+    cache.insert(2, &[-0.0], 20.0, 2.0);
+    assert_eq!(cache.get(&[0.0]), Some((2, 10.0, 1.0)));
+    assert_eq!(cache.get(&[-0.0]), Some((2, 20.0, 2.0)));
+}
+
+/// Observing a newer posterior version makes every stale entry
+/// unreachable at once, and a straggling insert tagged with an old
+/// version is refused — the cache can only ever answer at its current
+/// version.
+#[test]
+fn newer_posterior_version_makes_stale_answers_unreachable() {
+    let cache = AnswerCache::new(16);
+    cache.insert(3, &[1.0, 2.0], 0.5, 0.25);
+    assert_eq!(cache.get(&[1.0, 2.0]), Some((3, 0.5, 0.25)));
+    cache.advance(4); // a newer posterior was observed on this leg
+    assert_eq!(cache.version(), 4);
+    assert!(cache.get(&[1.0, 2.0]).is_none(), "stale answer served");
+    assert!(cache.is_empty(), "stale entries must be purged, not shadowed");
+    // A slow writer still holding the old version's answer: refused.
+    cache.insert(3, &[1.0, 2.0], 0.5, 0.25);
+    assert!(cache.get(&[1.0, 2.0]).is_none());
+    // An insert carrying a newer version both advances and serves.
+    cache.insert(5, &[1.0, 2.0], 0.75, 0.5);
+    assert_eq!(cache.version(), 5);
+    assert_eq!(cache.get(&[1.0, 2.0]), Some((5, 0.75, 0.5)));
+}
+
+/// Seeded generator over a small row alphabet with a deliberately
+/// lossy 4-bucket hash, so hash collisions are the common case and
+/// full-row comparison is load-bearing.  The cache may miss at any
+/// time (bounded capacity evicts), but a hit must be exactly the
+/// value derived from the *current* version and the *queried* row —
+/// never a collision sibling's answer, never a stale version's — and
+/// the capacity bound holds after every step.
+#[test]
+fn answer_cache_never_serves_a_wrong_version_or_wrong_row_answer() {
+    fn lossy(bytes: &[u8]) -> u64 {
+        bytes.iter().map(|&b| b as u64).sum::<u64>() % 4
+    }
+    // (mean, var) injectively derived from (version, row): the weights
+    // 7^i separate every row over the {-1, 0, 1}³ alphabet, so a
+    // swapped answer cannot masquerade as the right one.
+    fn value_for(version: u64, row: &[f64]) -> (f64, f64) {
+        let wsum: f64 =
+            row.iter().enumerate().map(|(i, &x)| x * 7f64.powi(i as i32)).sum();
+        (version as f64 * 1e6 + wsum, version as f64 * 1e3 - wsum)
+    }
+    let cap = 8;
+    let cache = AnswerCache::with_hasher(cap, lossy);
+    let mut rng = Pcg64::seeded(0xCA11_0B5E);
+    let mut version = 1u64;
+    let (mut hits, mut misses, mut bumps) = (0u64, 0u64, 0u64);
+    for _ in 0..6000 {
+        let row: Vec<f64> = (0..3).map(|_| rng.next_below(3) as f64 - 1.0).collect();
+        match rng.next_below(12) {
+            0 => {
+                version += 1;
+                cache.advance(version);
+                bumps += 1;
+                assert!(cache.is_empty(), "version bump left stale entries reachable");
+            }
+            1 => {
+                // Straggler insert at the previous version: must be
+                // dropped, not served later.
+                if version > 1 {
+                    let (m, v) = value_for(version - 1, &row);
+                    cache.insert(version - 1, &row, m, v);
+                }
+            }
+            2..=6 => {
+                let (m, v) = value_for(version, &row);
+                cache.insert(version, &row, m, v);
+            }
+            _ => match cache.get(&row) {
+                Some((v, m, va)) => {
+                    hits += 1;
+                    let (em, eva) = value_for(version, &row);
+                    assert_eq!(v, version, "hit at a stale version");
+                    assert_eq!(m.to_bits(), em.to_bits(), "mean from another row/version");
+                    assert_eq!(va.to_bits(), eva.to_bits(), "var from another row/version");
+                }
+                None => misses += 1, // eviction makes any miss legal
+            },
+        }
+        assert!(cache.len() <= cap, "capacity bound violated: {}", cache.len());
+    }
+    assert!(
+        hits > 100 && misses > 100 && bumps > 100,
+        "generator must exercise every path (hits {hits}, misses {misses}, bumps {bumps})"
+    );
+}
+
+// ---------------------------------------------------------------- //
+// Cross-session batching (ADVGPRT1 satellite)                       //
+// ---------------------------------------------------------------- //
+
+/// The latency budget is anchored at the **oldest** staged row: a
+/// straggler session dripping rows faster than the budget must not
+/// keep re-arming the deadline and starve everyone else's replies.
+#[test]
+fn latency_budget_is_anchored_at_the_oldest_row_not_the_newest() {
+    let (cache, _th) = seeded_cache(4, 2);
+    let cfg = BatchConfig { max_rows: 1000, latency_budget: Duration::from_millis(100) };
+    let (server, client) = BatchServer::start(cache, None, cfg);
+    let stop = Arc::new(AtomicBool::new(false));
+    let drip = {
+        let straggler = client.clone();
+        let stop = Arc::clone(&stop);
+        std::thread::spawn(move || {
+            while !stop.load(Ordering::SeqCst) {
+                // Replies deliberately dropped — the drip only exists
+                // to keep fresh rows arriving inside every budget.
+                if straggler.submit(&[0.0, 0.0]).is_none() {
+                    break;
+                }
+                std::thread::sleep(Duration::from_millis(25));
+            }
+        })
+    };
+    let t0 = Instant::now();
+    let r = client.submit(&[0.5, 0.5]).expect("server alive");
+    r.recv().expect("reply");
+    let waited = t0.elapsed();
+    assert!(
+        waited < Duration::from_secs(5),
+        "budget never closed the batch under a straggler drip ({waited:?})"
+    );
+    stop.store(true, Ordering::SeqCst);
+    drip.join().unwrap();
+    drop(client);
+    let report = server.join();
+    assert!(report.batches >= 1);
+}
+
+/// `max_rows` short-circuits the deadline **across sessions**: four
+/// sessions each staging one row against a 30 s budget are all
+/// answered promptly by one fused flush.
+#[test]
+fn max_rows_short_circuits_the_deadline_across_sessions() {
+    let (cache, _th) = seeded_cache(4, 2);
+    let cfg = BatchConfig { max_rows: 4, latency_budget: Duration::from_secs(30) };
+    let (server, client) = BatchServer::start(cache, None, cfg);
+    let t0 = Instant::now();
+    std::thread::scope(|scope| {
+        for s in 0..4 {
+            let client = client.clone();
+            scope.spawn(move || {
+                let r = client.submit(&[0.1 * s as f64, 0.2]).expect("server alive");
+                r.recv().expect("reply");
+            });
+        }
+    });
+    assert!(
+        t0.elapsed() < Duration::from_secs(5),
+        "cross-session rows did not fuse into a full batch"
+    );
+    drop(client);
+    let report = server.join();
+    assert_eq!(report.rows, 4);
+    assert_eq!(report.batches, 1, "one fused flush across four sessions");
+}
+
+/// Four writers interleaving through the shared ingress queue: every
+/// reply must answer its **own** row — bitwise equal to a direct
+/// single-row prediction (per-row math is independent of the batch a
+/// row happened to land in), so a reply swapped across sessions or
+/// reordered within one cannot go unnoticed.
+#[test]
+fn replies_stay_with_their_session_under_four_writer_races() {
+    let (cache, th) = seeded_cache(6, 3);
+    let gp = SparseGp::new(th);
+    let cfg = BatchConfig { max_rows: 8, latency_budget: Duration::from_millis(1) };
+    let (server, client) = BatchServer::start(cache, None, cfg);
+    std::thread::scope(|scope| {
+        for w in 0..4u64 {
+            let client = client.clone();
+            let gp = &gp;
+            scope.spawn(move || {
+                let mut rng = Pcg64::seeded(0xD15C_0000 + w);
+                for i in 0..25 {
+                    let row: Vec<f64> = (0..3).map(|_| rng.normal()).collect();
+                    let p = client.predict(&row).expect("server alive");
+                    let (em, ev) = gp.predict(&Mat::from_vec(1, 3, row.clone()));
+                    assert_eq!(
+                        p.mean.to_bits(),
+                        em[0].to_bits(),
+                        "writer {w} row {i}: got another row's mean"
+                    );
+                    assert_eq!(
+                        p.var.to_bits(),
+                        ev[0].to_bits(),
+                        "writer {w} row {i}: got another row's var"
+                    );
+                    assert_eq!(p.version, 1);
+                }
+            });
+        }
+    });
+    drop(client);
+    let report = server.join();
+    assert_eq!(report.rows, 100, "every row answered exactly once");
+    assert_eq!(report.latency.n, 100);
 }

@@ -1,0 +1,404 @@
+//! Integration: the predict-side routing tier (ADVGPRT1, ISSUE 9).
+//!
+//! The serving contract pinned here: a [`Router`] in front of the
+//! replica fleet is **answer-preserving** — every routed PREDICT
+//! answer is bitwise identical to the direct-replica answer at the
+//! same posterior version, whichever of the four paths produced it:
+//!
+//! * {cache **miss**, **solo**} — a fresh row set forwarded upstream
+//!   by a single session (`routed_answers_match_direct_replica_answers_bitwise`);
+//! * {cache **hit**, **solo**} — a repeated row set short-circuited by
+//!   the per-leg [`AnswerCache`] (same test: after at most two misses
+//!   both legs are warm, so later repeats hit whatever P2C draws);
+//! * {cache **miss**, **cross-session batch**} — two concurrent routed
+//!   sessions whose rows can only be answered by one fused replica
+//!   batch (`max_rows` short-circuit, deadline parked far away), see
+//!   `cross_session_requests_fuse_into_one_replica_batch`;
+//! * {cache **hit**, batched ancestry} — the same rows re-sent after
+//!   the fused round are answered from cache without the replica ever
+//!   seeing another batch (same test: `report.batches` stays 1).
+//!
+//! Plus the failure-domain row: a severed replica's sessions keep
+//! answering through the sibling with zero client-visible errors, the
+//! probe retires the dead leg, and ROUTE-STATUS advertises the
+//! retirement to new sessions.
+
+use advgp::data::{kmeans, synth, Dataset, Standardizer};
+use advgp::gp::{PredictWorkspace, Theta, ThetaLayout};
+use advgp::grad::native_factory;
+use advgp::linalg::Mat;
+use advgp::ps::coordinator::{train_remote, train_remote_sharded, TrainConfig};
+use advgp::ps::net::{remote_worker_loop, sharded_worker_loop, NetServer};
+use advgp::ps::worker::{WorkerProfile, WorkerSource};
+use advgp::ps::RunResult;
+use advgp::serve::{
+    BatchConfig, PosteriorCache, PredictAnswer, PredictClient, Replica, ReplicaConfig,
+    Router, RouterConfig,
+};
+use advgp::util::rng::Pcg64;
+use std::time::Duration;
+
+const UPDATES: u64 = 20;
+
+/// Standardized friedman problem + kmeans-initialized θ (the same
+/// setup the replica and sharded-PS suites train on).
+fn setup(n: usize, m: usize, seed: u64) -> (Dataset, Theta, ThetaLayout) {
+    let mut ds = synth::friedman(n, 4, 0.4, seed);
+    let mut rng = Pcg64::seeded(seed);
+    ds.shuffle(&mut rng);
+    let st = Standardizer::fit(&ds);
+    st.apply(&mut ds);
+    let layout = ThetaLayout::new(m, 4);
+    let z = kmeans::kmeans(&ds.x, m, 15, &mut rng);
+    let theta = Theta::init(layout, &z);
+    (ds, theta, layout)
+}
+
+fn one_thread() -> WorkerProfile {
+    WorkerProfile { threads: 1, ..Default::default() }
+}
+
+fn assert_bitwise(a: &[f64], b: &[f64], what: &str) {
+    assert_eq!(a.len(), b.len(), "{what}: length");
+    for (i, (x, y)) in a.iter().zip(b).enumerate() {
+        assert_eq!(x.to_bits(), y.to_bits(), "{what}: [{i}] diverged ({x} vs {y})");
+    }
+}
+
+/// Run a τ=0 loopback training run over `servers` slice servers with
+/// one subscribed replica per config in `cfgs`, and return (train
+/// result, replicas).  Same ordering contract as the replica suite:
+/// trainer accept loops live → replicas subscribe → workers start.
+fn train_fleet(
+    ds: &Dataset,
+    theta0: &Theta,
+    layout: ThetaLayout,
+    servers: usize,
+    cfgs: Vec<ReplicaConfig>,
+) -> (RunResult, Vec<Replica>) {
+    let nets: Vec<NetServer> =
+        (0..servers).map(|_| NetServer::bind("127.0.0.1:0").unwrap()).collect();
+    let addrs: Vec<String> = nets.iter().map(|n| n.local_addr().to_string()).collect();
+    let trainer = {
+        let theta0 = theta0.data.clone();
+        std::thread::spawn(move || {
+            let mut cfg = TrainConfig::new(layout);
+            cfg.tau = 0;
+            cfg.max_updates = UPDATES;
+            cfg.eval_every_secs = 0.0;
+            if nets.len() > 1 {
+                train_remote_sharded(&cfg, theta0, nets, 2, None)
+            } else {
+                train_remote(&cfg, theta0, nets.into_iter().next().unwrap(), 2, None)
+            }
+        })
+    };
+    let fleet: Vec<Replica> = cfgs
+        .into_iter()
+        .map(|cfg| Replica::start("127.0.0.1:0", &addrs, cfg).unwrap())
+        .collect();
+    let workers: Vec<_> = ds
+        .shard(2)
+        .into_iter()
+        .enumerate()
+        .map(|(k, shard)| {
+            let addrs = addrs.clone();
+            std::thread::spawn(move || {
+                if addrs.len() > 1 {
+                    sharded_worker_loop(
+                        &addrs,
+                        Some(k),
+                        WorkerSource::Memory(shard),
+                        native_factory(layout),
+                        one_thread(),
+                    )
+                    .unwrap()
+                } else {
+                    remote_worker_loop(
+                        &addrs[0],
+                        Some(k),
+                        WorkerSource::Memory(shard),
+                        native_factory(layout),
+                        one_thread(),
+                    )
+                    .unwrap()
+                }
+            })
+        })
+        .collect();
+    let run = trainer.join().unwrap();
+    for w in workers {
+        w.join().unwrap();
+    }
+    (run, fleet)
+}
+
+/// Deterministic predict inputs.
+fn predict_rows(n: usize, d: usize, seed: u64) -> Vec<f64> {
+    let mut rng = Pcg64::seeded(seed);
+    (0..n * d).map(|_| rng.next_f64() * 2.0 - 1.0).collect()
+}
+
+/// In-process reference predictions from the run's returned θ at the
+/// final version — the ground truth every routed answer must match
+/// bitwise.
+fn reference_predict(layout: ThetaLayout, theta: &[f64], rows: &[f64]) -> (Vec<f64>, Vec<f64>) {
+    let cache = PosteriorCache::new(layout);
+    assert!(cache.install(UPDATES, theta));
+    let post = cache.get().unwrap();
+    let xb = Mat::from_vec(rows.len() / layout.d, layout.d, rows.to_vec());
+    let mut ws = PredictWorkspace::new();
+    let (mut mean, mut var) = (Vec::new(), Vec::new());
+    post.gp.predict_into(&xb, &mut ws, &mut mean, &mut var);
+    (mean, var)
+}
+
+fn expect_prediction(
+    client: &mut PredictClient,
+    rows: &[f64],
+    mean: &[f64],
+    var: &[f64],
+    what: &str,
+) {
+    match client.predict(rows).unwrap() {
+        PredictAnswer::Prediction { version, mean: wm, var: wv } => {
+            assert_eq!(version, UPDATES, "{what}: answer version");
+            assert_bitwise(mean, &wm, &format!("{what}: mean"));
+            assert_bitwise(var, &wv, &format!("{what}: var"));
+        }
+        PredictAnswer::Rejected { code, message } => {
+            panic!("{what}: routed request rejected ({code}: {message})")
+        }
+    }
+}
+
+/// The headline acceptance test: for S ∈ {1, 2} slice servers, every
+/// answer a [`Router`] over two replicas serves — cache hit or miss,
+/// solo — is bitwise identical to the direct-replica answer and to the
+/// in-process reference at the same posterior version.  Also pins the
+/// routed handshake (same (m, d, version) contract as a replica) and
+/// ROUTE-STATUS absorption by an unmodified [`PredictClient`].
+#[test]
+fn routed_answers_match_direct_replica_answers_bitwise() {
+    let (ds, theta0, layout) = setup(400, 6, 41);
+    for servers in [1usize, 2] {
+        let (run, fleet) =
+            train_fleet(&ds, &theta0, layout, servers, vec![ReplicaConfig::default(); 2]);
+        assert_eq!(run.stats.updates, UPDATES, "S={servers}: run length");
+        for (i, r) in fleet.iter().enumerate() {
+            assert!(
+                r.wait_version(UPDATES, Duration::from_secs(30)),
+                "S={servers}: replica {i} stuck at θ v{:?}",
+                r.version()
+            );
+            assert!(r.wait_trainer_end(Duration::from_secs(30)));
+        }
+        let addrs: Vec<String> = fleet.iter().map(|r| r.predict_addr().to_string()).collect();
+        let router = Router::start("127.0.0.1:0", &addrs, RouterConfig::default()).unwrap();
+
+        let rows = predict_rows(8, layout.d, 99);
+        let (mean, var) = reference_predict(layout, &run.theta, &rows);
+
+        // Ground the contract: every replica's *direct* answer equals
+        // the in-process reference, so "routed == reference" below is
+        // exactly "routed == direct" whichever leg answered.
+        for (i, addr) in addrs.iter().enumerate() {
+            let mut direct = PredictClient::connect(addr).unwrap();
+            expect_prediction(&mut direct, &rows, &mean, &var, &format!("S={servers}: direct {i}"));
+            assert!(direct.route_status.is_none(), "replicas never push ROUTE-STATUS");
+        }
+
+        // The routed handshake mirrors a replica's.
+        let mut client = PredictClient::connect(&router.addr().to_string()).unwrap();
+        assert_eq!((client.m, client.d), (layout.m, layout.d), "S={servers}: handshake layout");
+        assert_eq!(client.version, UPDATES, "S={servers}: handshake fleet version");
+
+        // Solo paths.  Request 1 is a miss on whichever leg P2C drew;
+        // by request 3 both legs hold the answer, so requests 3 and 4
+        // are cache hits regardless of the draw — and every answer,
+        // hit or miss, is bitwise the reference.
+        for req in 0..4 {
+            expect_prediction(&mut client, &rows, &mean, &var, &format!("S={servers} req {req}"));
+        }
+        // ROUTE-STATUS was pushed after the handshake and absorbed.
+        let (fleet_version, statuses) =
+            client.route_status.clone().expect("router pushed ROUTE-STATUS");
+        assert_eq!(fleet_version, UPDATES, "S={servers}: advertised fleet version");
+        assert_eq!(statuses.len(), 2, "S={servers}: one status per leg");
+        for s in &statuses {
+            assert_eq!(s.version, UPDATES);
+            assert!(!s.retired(), "healthy fleet advertises no retirement");
+        }
+
+        // A fresh row set through the same session: forced miss, still
+        // bitwise.
+        let rows2 = predict_rows(5, layout.d, 123);
+        let (mean2, var2) = reference_predict(layout, &run.theta, &rows2);
+        expect_prediction(&mut client, &rows2, &mean2, &var2, &format!("S={servers}: fresh rows"));
+
+        drop(client);
+        let stats = router.shutdown();
+        assert_eq!(stats.routed, 5, "S={servers}: every request answered through the router");
+        assert!(stats.cache_hits >= 2, "S={servers}: repeats must hit ({} hits)", stats.cache_hits);
+        assert!(stats.cache_misses >= 2, "S={servers}: first touches miss");
+        assert_eq!(stats.cache_hits + stats.cache_misses, 5);
+        assert!(stats.retired.iter().all(|r| !r), "S={servers}: no leg retired");
+        assert_eq!(stats.leg_versions, vec![UPDATES, UPDATES]);
+        assert_eq!(
+            stats.answered_per_leg.iter().sum::<u64>(),
+            stats.routed,
+            "S={servers}: per-leg accounting adds up"
+        );
+        for r in fleet {
+            r.shutdown();
+        }
+    }
+}
+
+/// The cross-session batch paths: two concurrent routed sessions (4
+/// rows each) against a single replica whose batch server can only
+/// flush at `max_rows = 8` (the latency budget is parked 5 s away), so
+/// answering *requires* fusing both sessions' rows into one batch —
+/// and both sessions' answers are still bitwise the reference for
+/// their own rows.  Re-sending the same rows is then answered from the
+/// leg's [`AnswerCache`] without the replica ever seeing another
+/// batch: `report.batches` stays exactly 1.
+#[test]
+fn cross_session_requests_fuse_into_one_replica_batch() {
+    let (ds, theta0, layout) = setup(300, 5, 53);
+    let mut rcfg = ReplicaConfig::default();
+    rcfg.batch = BatchConfig { max_rows: 8, latency_budget: Duration::from_secs(5) };
+    let (run, mut fleet) = train_fleet(&ds, &theta0, layout, 1, vec![rcfg]);
+    let replica = fleet.pop().unwrap();
+    assert!(replica.wait_version(UPDATES, Duration::from_secs(30)));
+    assert!(replica.wait_trainer_end(Duration::from_secs(30)));
+    let router = Router::start(
+        "127.0.0.1:0",
+        &[replica.predict_addr().to_string()],
+        RouterConfig::default(),
+    )
+    .unwrap();
+    let addr = router.addr().to_string();
+
+    let rows_a = predict_rows(4, layout.d, 11);
+    let rows_b = predict_rows(4, layout.d, 22);
+    let (mean_a, var_a) = reference_predict(layout, &run.theta, &rows_a);
+    let (mean_b, var_b) = reference_predict(layout, &run.theta, &rows_b);
+    let jobs: [(&[f64], &[f64], &[f64], &str); 2] = [
+        (&rows_a, &mean_a, &var_a, "session A"),
+        (&rows_b, &mean_b, &var_b, "session B"),
+    ];
+
+    // Round 1: both sessions in flight at once — neither can be
+    // answered until the other's rows arrive (max_rows short-circuit
+    // is the only flush trigger inside the deadline).
+    std::thread::scope(|scope| {
+        for (rows, mean, var, tag) in jobs {
+            let addr = addr.clone();
+            scope.spawn(move || {
+                let mut c = PredictClient::connect(&addr).unwrap();
+                expect_prediction(&mut c, rows, mean, var, tag);
+            });
+        }
+    });
+    let warm = router.stats();
+    assert_eq!(warm.cache_misses, 2, "both first touches forwarded");
+    assert_eq!(warm.cache_hits, 0);
+
+    // Round 2: the same rows again — answered from the answer cache,
+    // so the replica's batch count cannot move.
+    for (rows, mean, var, tag) in jobs {
+        let mut c = PredictClient::connect(&addr).unwrap();
+        expect_prediction(&mut c, rows, mean, var, &format!("{tag} (cached)"));
+    }
+    let stats = router.shutdown();
+    assert_eq!(stats.cache_hits, 2, "round 2 never left the router");
+    assert_eq!(stats.cache_misses, 2);
+    assert_eq!(stats.sessions, 4);
+
+    let report = replica.shutdown();
+    assert_eq!(report.batches, 1, "both sessions' rows fused into one replica batch");
+    assert_eq!(report.rows, 8, "the fused batch held all 8 rows");
+}
+
+/// The failure-domain row: killing one replica mid-session leaves the
+/// routed session answering through the sibling with **zero**
+/// client-visible errors (fresh rows every request, so the answers
+/// provably come from the surviving replica, not the cache), the
+/// health probe retires the dead leg, and a fresh session's
+/// ROUTE-STATUS advertises the retirement.
+#[test]
+fn severed_replica_fails_over_to_the_sibling_with_zero_client_errors() {
+    let (ds, theta0, layout) = setup(300, 5, 47);
+    let (run, mut fleet) =
+        train_fleet(&ds, &theta0, layout, 1, vec![ReplicaConfig::default(); 2]);
+    for (i, r) in fleet.iter().enumerate() {
+        assert!(
+            r.wait_version(UPDATES, Duration::from_secs(30)),
+            "replica {i} stuck at θ v{:?}",
+            r.version()
+        );
+        assert!(r.wait_trainer_end(Duration::from_secs(30)));
+    }
+    let addrs: Vec<String> = fleet.iter().map(|r| r.predict_addr().to_string()).collect();
+    let mut rcfg = RouterConfig::default();
+    // Fast probe cadence so retirement lands inside the test's budget
+    // (the probe pings every heartbeat and retires on the first miss).
+    // Kept at 2 s — the heartbeat is also the routed session's idle
+    // grace, which must comfortably cover the replica-shutdown pause
+    // between the healthy and post-sever request bursts below.
+    rcfg.retry.heartbeat = Duration::from_secs(2);
+    let router = Router::start("127.0.0.1:0", &addrs, rcfg).unwrap();
+
+    let mut client = PredictClient::connect(&router.addr().to_string()).unwrap();
+    for i in 0..3u64 {
+        let rows = predict_rows(2, layout.d, 500 + i);
+        let (mean, var) = reference_predict(layout, &run.theta, &rows);
+        expect_prediction(&mut client, &rows, &mean, &var, &format!("healthy req {i}"));
+    }
+
+    // Kill replica 0: its listener, sessions, and the router's probe
+    // connection all die.
+    fleet.remove(0).shutdown();
+
+    // The *same* session keeps answering.  Fresh rows each request
+    // force forwarding; any request routed at the dead leg must fail
+    // over to the sibling instead of surfacing an error.
+    for i in 0..12u64 {
+        let rows = predict_rows(2, layout.d, 600 + i);
+        let (mean, var) = reference_predict(layout, &run.theta, &rows);
+        expect_prediction(&mut client, &rows, &mean, &var, &format!("post-sever req {i}"));
+    }
+    assert!(
+        router.wait_leg_retired(0, Duration::from_secs(15)),
+        "probe never retired the dead leg"
+    );
+    assert!(!router.leg_retired(1), "the survivor stays in rotation");
+
+    // A fresh session is told about the retirement up front.
+    let mut fresh = PredictClient::connect(&router.addr().to_string()).unwrap();
+    let rows = predict_rows(2, layout.d, 700);
+    let (mean, var) = reference_predict(layout, &run.theta, &rows);
+    expect_prediction(&mut fresh, &rows, &mean, &var, "fresh session");
+    let (fleet_version, statuses) = fresh.route_status.clone().expect("ROUTE-STATUS pushed");
+    assert_eq!(fleet_version, UPDATES, "fleet version spans live legs only");
+    assert!(statuses[0].retired(), "dead leg advertised as retired");
+    assert!(!statuses[1].retired());
+
+    drop(client);
+    drop(fresh);
+    let stats = router.shutdown();
+    assert!(stats.retired[0] && !stats.retired[1]);
+    assert_eq!(stats.routed, 16, "3 healthy + 12 post-sever + 1 fresh, all answered");
+    assert_eq!(
+        stats.answered_per_leg.iter().sum::<u64>(),
+        stats.routed,
+        "every routed answer is attributed to a leg"
+    );
+    assert!(
+        stats.answered_per_leg[1] >= 13,
+        "the survivor carried the post-sever traffic ({:?})",
+        stats.answered_per_leg
+    );
+    fleet.remove(0).shutdown();
+}
