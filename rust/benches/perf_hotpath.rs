@@ -7,11 +7,16 @@
 //! * K_mm factorization chain (chol + inverse + L⁻¹)
 //! * k-means init, prediction path
 //!
-//! Prints the human-readable table AND dumps machine-readable results
-//! to `BENCH_hotpath.json` (bench name → ns/iter plus the pool/thread
-//! configuration), so the perf trajectory is tracked across PRs.
-//! Thread count follows `ADVGP_THREADS` (default: all cores); rerun
-//! with `ADVGP_THREADS=1` for the serial baseline.
+//! The compute-bound benches (phi_forward, native_grad, predict) run
+//! once per [`ComputeBackend`] — scalar vs simd (ISSUE 10) — so the
+//! JSON carries a measured rows/sec per backend and
+//! `scripts/bench_diff.py` tracks each (bench, backend) series
+//! independently.  Prints the human-readable table AND dumps
+//! machine-readable results to `BENCH_hotpath.json` (bench name →
+//! ns/iter plus the pool/thread configuration), so the perf trajectory
+//! is tracked across PRs.  Thread count follows `ADVGP_THREADS`
+//! (default: all cores); rerun with `ADVGP_THREADS=1` for the serial
+//! baseline.
 
 use advgp::data::synth;
 use advgp::experiments::harness::{bench, BenchReport};
@@ -19,14 +24,41 @@ use advgp::gp::featuremap::{FeatureMap, InducingChol, PhiBatch, PhiWorkspace};
 use advgp::gp::{SparseGp, Theta, ThetaLayout};
 use advgp::grad::chain::LChain;
 use advgp::grad::{native::NativeEngine, GradEngine};
+use advgp::linalg::simd;
 use advgp::opt::AdaDelta;
 use advgp::ps::server::apply_update;
-use advgp::runtime::{Manifest, XlaEngine};
+use advgp::runtime::{Backend, ComputeBackend, Manifest, XlaEngine};
 use advgp::util::json::Json;
 use advgp::util::pool;
 use advgp::util::rng::Pcg64;
 
 const OUT_PATH: &str = "BENCH_hotpath.json";
+
+struct Entry {
+    report: BenchReport,
+    /// Backend name for the per-backend benches; `None` for the
+    /// backend-independent ones (factorization, server update, …).
+    backend: Option<&'static str>,
+    /// Rows processed per second, where the bench has a natural row
+    /// count (the 1024-row block benches).
+    rows_per_sec: Option<f64>,
+}
+
+impl Entry {
+    fn plain(report: BenchReport) -> Self {
+        Self { report, backend: None, rows_per_sec: None }
+    }
+}
+
+/// The backend dimension for the compute-bound benches: the explicit
+/// selectors, constructed via `with_backend` so each row is
+/// self-contained (no process-global state involved).
+fn backends() -> Vec<(&'static str, &'static dyn ComputeBackend)> {
+    vec![
+        ("scalar", Backend::Scalar.resolve().expect("scalar resolves")),
+        ("simd", Backend::Simd.resolve().expect("simd resolves")),
+    ]
+}
 
 fn main() {
     let (m, d, b) = (100usize, 8usize, 1024usize);
@@ -36,51 +68,80 @@ fn main() {
     let z = advgp::data::kmeans::kmeans(&ds.x, m, 10, &mut rng);
     let theta = Theta::init(layout, &z);
     let threads = pool::threads();
-    println!("hot-path microbenches: m={m} d={d} block={b} threads={threads}\n");
-    let mut reports: Vec<BenchReport> = Vec::new();
+    println!(
+        "hot-path microbenches: m={m} d={d} block={b} threads={threads} \
+         simd path={}\n",
+        simd::active_path()
+    );
+    let mut entries: Vec<Entry> = Vec::new();
 
     // L3-side forward: fused feature map (the Pallas kernel's Rust twin),
-    // workspace-reusing path (zero allocation in steady state).
+    // workspace-reusing path (zero allocation in steady state), once per
+    // backend.
     let map = InducingChol::build(&theta.ard(), theta.z_mat());
-    let mut ws = PhiWorkspace::new();
-    let mut pb = PhiBatch::empty();
-    reports.push(bench("phi_forward (K_bm+Phi+ktilde, 1024x100)", 3, 1.0, || {
-        map.phi_into(&theta.ard(), &ds.x, &mut ws, &mut pb);
-        std::hint::black_box(pb.ktilde.len());
-    }));
+    for (bname, be) in backends() {
+        let mut ws = PhiWorkspace::new();
+        let mut pb = PhiBatch::empty();
+        let report = bench(
+            &format!("phi_forward (K_bm+Phi+ktilde, 1024x100) [{bname}]"),
+            3,
+            1.0,
+            || {
+                map.phi_into_be(be, &theta.ard(), &ds.x, &mut ws, &mut pb);
+                std::hint::black_box(pb.ktilde.len());
+            },
+        );
+        let rows_per_sec = b as f64 / report.stats.mean().max(1e-12);
+        entries.push(Entry { report, backend: Some(bname), rows_per_sec: Some(rows_per_sec) });
+    }
 
-    // Native gradient engine per block.
-    let mut nat = NativeEngine::new(layout);
-    reports.push(bench("native_grad (1024 rows)", 2, 1.5, || {
-        let r = nat.grad(&theta.data, &ds.x, &ds.y);
-        std::hint::black_box(r.value);
-    }));
+    // Native gradient engine per block, once per backend.
+    for (bname, be) in backends() {
+        let mut nat = NativeEngine::with_backend(layout, be);
+        let report = bench(&format!("native_grad (1024 rows) [{bname}]"), 2, 1.5, || {
+            let r = nat.grad(&theta.data, &ds.x, &ds.y);
+            std::hint::black_box(r.value);
+        });
+        let rows_per_sec = b as f64 / report.stats.mean().max(1e-12);
+        entries.push(Entry { report, backend: Some(bname), rows_per_sec: Some(rows_per_sec) });
+    }
 
     // XLA (JAX+Pallas artifact) engine per block, if artifacts exist.
     let man_dir = std::path::Path::new(env!("CARGO_MANIFEST_DIR")).join("artifacts");
     match Manifest::load(&man_dir).and_then(|man| XlaEngine::from_manifest(&man, m, d)) {
         Ok(mut xla) => {
-            reports.push(bench("xla_grad (1024 rows, m=100 d=8 artifact)", 2, 1.5, || {
-                let r = xla.grad(&theta.data, &ds.x, &ds.y);
-                std::hint::black_box(r.value);
-            }));
+            entries.push(Entry::plain(bench(
+                "xla_grad (1024 rows, m=100 d=8 artifact)",
+                2,
+                1.5,
+                || {
+                    let r = xla.grad(&theta.data, &ds.x, &ds.y);
+                    std::hint::black_box(r.value);
+                },
+            )));
         }
         Err(e) => println!("(skipping xla_grad: {e:#})"),
     }
 
-    // K_mm factorization chain (once per θ per worker iteration).
-    reports.push(bench("lchain_build (chol+inv+Linv, m=100)", 3, 1.0, || {
-        let c = LChain::build(theta.ard(), theta.z_mat());
-        std::hint::black_box(c.chol_l.data.len());
-    }));
+    // K_mm factorization chain (once per θ per worker iteration) —
+    // stays scalar under every backend by design.
+    entries.push(Entry::plain(bench(
+        "lchain_build (chol+inv+Linv, m=100)",
+        3,
+        1.0,
+        || {
+            let c = LChain::build(theta.ard(), theta.z_mat());
+            std::hint::black_box(c.chol_l.data.len());
+        },
+    )));
 
-    // Server update: ADADELTA + prox, serial vs sharded.
+    // Server update: ADADELTA + prox, serial vs element-wise sharded.
     let dim = layout.len();
     let grad: Vec<f64> = (0..dim).map(|i| (i as f64 * 0.37).sin()).collect();
     for shards in [1usize, 2, 4, 8] {
         let mut th = theta.data.clone();
         let mut ada = AdaDelta::default_for(dim);
-        reports.push(bench(
+        entries.push(Entry::plain(bench(
             &format!("server_update dim={dim} shards={shards}"),
             3,
             0.5,
@@ -88,50 +149,64 @@ fn main() {
                 apply_update(&layout, &mut th, &mut ada, &grad, 0.5, 0.1, shards);
                 std::hint::black_box(th[0]);
             },
-        ));
+        )));
     }
 
-    // Prediction path (evaluator cadence driver).
-    let gp = SparseGp::new(theta.clone());
-    reports.push(bench("predict (1024 rows)", 3, 1.0, || {
-        let (mean, _var) = gp.predict(&ds.x);
-        std::hint::black_box(mean.len());
-    }));
+    // Prediction path (evaluator cadence driver), once per backend.
+    for (bname, be) in backends() {
+        let gp = SparseGp::with_backend(theta.clone(), be);
+        let report = bench(&format!("predict (1024 rows) [{bname}]"), 3, 1.0, || {
+            let (mean, _var) = gp.predict(&ds.x);
+            std::hint::black_box(mean.len());
+        });
+        let rows_per_sec = b as f64 / report.stats.mean().max(1e-12);
+        entries.push(Entry { report, backend: Some(bname), rows_per_sec: Some(rows_per_sec) });
+    }
 
     // k-means init (run once per experiment).
     let big = synth::flight_like(20_000, 9);
-    reports.push(bench("kmeans m=100 on 20K rows (5 iters)", 1, 2.0, || {
+    entries.push(Entry::plain(bench("kmeans m=100 on 20K rows (5 iters)", 1, 2.0, || {
         let mut r = Pcg64::seeded(11);
         let c = advgp::data::kmeans::kmeans(&big.x, m, 5, &mut r);
         std::hint::black_box(c.data.len());
-    }));
+    })));
 
-    write_json(&reports, threads, m, d, b);
-    println!("\nwrote {} ({} benches, threads={threads})", OUT_PATH, reports.len());
+    write_json(&entries, threads, m, d, b);
+    println!("\nwrote {} ({} benches, threads={threads})", OUT_PATH, entries.len());
 }
 
-/// Dump `BENCH_hotpath.json`: schema versioned, one entry per bench
-/// with ns/iter stats plus the configuration that produced them.
-fn write_json(reports: &[BenchReport], threads: usize, m: usize, d: usize, b: usize) {
-    let benches: Vec<Json> = reports
+/// Dump `BENCH_hotpath.json`: schema versioned (2 adds the per-entry
+/// `backend` and `rows_per_sec` fields plus the dispatched `simd_path`),
+/// one entry per bench with ns/iter stats plus the configuration that
+/// produced them.
+fn write_json(entries: &[Entry], threads: usize, m: usize, d: usize, b: usize) {
+    let benches: Vec<Json> = entries
         .iter()
-        .map(|r| {
-            Json::obj(vec![
-                ("name", Json::Str(r.name.clone())),
-                ("mean_ns", Json::Num(r.stats.mean() * 1e9)),
-                ("std_ns", Json::Num(r.stats.std() * 1e9)),
-                ("min_ns", Json::Num(r.stats.min * 1e9)),
-                ("iters", Json::Num(r.iters as f64)),
-            ])
+        .map(|e| {
+            let mut fields = vec![
+                ("name", Json::Str(e.report.name.clone())),
+                ("mean_ns", Json::Num(e.report.stats.mean() * 1e9)),
+                ("std_ns", Json::Num(e.report.stats.std() * 1e9)),
+                ("min_ns", Json::Num(e.report.stats.min * 1e9)),
+                ("iters", Json::Num(e.report.iters as f64)),
+            ];
+            if let Some(bname) = e.backend {
+                fields.push(("backend", Json::Str(bname.into())));
+            }
+            if let Some(rps) = e.rows_per_sec {
+                fields.push(("rows_per_sec", Json::Num(rps)));
+            }
+            Json::obj(fields)
         })
         .collect();
     let doc = Json::obj(vec![
-        ("schema", Json::Num(1.0)),
+        ("schema", Json::Num(2.0)),
         ("bench", Json::Str("perf_hotpath".into())),
         ("threads", Json::Num(threads as f64)),
         ("m", Json::Num(m as f64)),
         ("d", Json::Num(d as f64)),
         ("block", Json::Num(b as f64)),
+        ("simd_path", Json::Str(simd::active_path().into())),
         (
             "par_min_flops",
             Json::Num(advgp::linalg::par_min_flops() as f64),

@@ -1,12 +1,14 @@
 //! §Serving micro-benchmarks: the blocked prediction path (ISSUE 2).
 //!
 //! Measures `SparseGp::predict_into` rows/sec across batch sizes
-//! {1, 64, 4096} at thread budgets {1, N} (N = the pool size), plus the
-//! blocked `data_term_ws` and an end-to-end `serve::BatchServer`
-//! throughput probe.  Prints the human-readable table AND dumps
-//! machine-readable results to `BENCH_predict.json` — the serving twin
-//! of `perf_hotpath`'s `BENCH_hotpath.json`; `scripts/bench_diff.py`
-//! diffs either file against a previous run.
+//! {1, 64, 4096} at thread budgets {1, N} (N = the pool size) for each
+//! [`ComputeBackend`] — scalar vs simd (ISSUE 10) — plus the blocked
+//! `data_term_ws` and an end-to-end `serve::BatchServer` throughput
+//! probe.  Prints the human-readable table AND dumps machine-readable
+//! results to `BENCH_predict.json` — the serving twin of
+//! `perf_hotpath`'s `BENCH_hotpath.json`; `scripts/bench_diff.py`
+//! diffs either file against a previous run, keyed per
+//! (bench, backend).
 //!
 //! Thread count follows `ADVGP_THREADS` (default: all cores); the
 //! budget-1 rows emulate `ADVGP_THREADS=1` via `pool::with_budget`.
@@ -14,6 +16,8 @@
 use advgp::data::synth;
 use advgp::experiments::harness::{bench, BenchReport};
 use advgp::gp::{PredictWorkspace, SparseGp, Theta, ThetaLayout};
+use advgp::linalg::simd;
+use advgp::runtime::{Backend, ComputeBackend};
 use advgp::serve::{BatchConfig, BatchServer, PosteriorCache};
 use advgp::util::json::Json;
 use advgp::util::pool;
@@ -28,6 +32,18 @@ struct Entry {
     batch: usize,
     threads: usize,
     rows_per_sec: f64,
+    /// Backend name for the per-backend benches; `None` for the
+    /// end-to-end server probe (which runs on the process default).
+    backend: Option<&'static str>,
+}
+
+/// The backend dimension: explicit selectors resolved via
+/// `with_backend`, so each bench row is self-contained.
+fn backends() -> Vec<(&'static str, &'static dyn ComputeBackend)> {
+    vec![
+        ("scalar", Backend::Scalar.resolve().expect("scalar resolves")),
+        ("simd", Backend::Simd.resolve().expect("simd resolves")),
+    ]
 }
 
 fn main() {
@@ -37,52 +53,70 @@ fn main() {
     let mut rng = Pcg64::seeded(17);
     let z = advgp::data::kmeans::kmeans(&ds.x, m, 10, &mut rng);
     let theta = Theta::init(layout, &z);
-    let gp = SparseGp::new(theta.clone());
     let pool_threads = pool::threads();
-    println!("predict/serving microbenches: m={m} d={d} threads={pool_threads}\n");
+    println!(
+        "predict/serving microbenches: m={m} d={d} threads={pool_threads} \
+         simd path={}\n",
+        simd::active_path()
+    );
 
     let mut budgets = vec![1usize, pool_threads];
     budgets.dedup();
     let mut entries: Vec<Entry> = Vec::new();
 
-    // Blocked predict across batch × thread budget.
-    for &batch in &BATCHES {
-        let xb = ds.head(batch).x;
+    // Blocked predict across backend × batch × thread budget.
+    for (bname, be) in backends() {
+        let gp = SparseGp::with_backend(theta.clone(), be);
+        for &batch in &BATCHES {
+            let xb = ds.head(batch).x;
+            for &t in &budgets {
+                let mut ws = PredictWorkspace::new();
+                let mut mean = Vec::new();
+                let mut var = Vec::new();
+                let report = bench(
+                    &format!("predict_into batch={batch} threads={t} [{bname}]"),
+                    3,
+                    0.6,
+                    || {
+                        pool::with_budget(t, || {
+                            gp.predict_into(&xb, &mut ws, &mut mean, &mut var)
+                        });
+                        std::hint::black_box(var.len());
+                    },
+                );
+                let rows_per_sec = batch as f64 / report.stats.mean().max(1e-12);
+                entries.push(Entry {
+                    report,
+                    batch,
+                    threads: t,
+                    rows_per_sec,
+                    backend: Some(bname),
+                });
+            }
+        }
+
+        // Blocked data term (the evaluator's −ELBO path) at the big batch.
+        let big = BATCHES[BATCHES.len() - 1];
         for &t in &budgets {
             let mut ws = PredictWorkspace::new();
-            let mut mean = Vec::new();
-            let mut var = Vec::new();
             let report = bench(
-                &format!("predict_into batch={batch} threads={t}"),
+                &format!("data_term_ws batch={big} threads={t} [{bname}]"),
                 3,
                 0.6,
                 || {
-                    pool::with_budget(t, || {
-                        gp.predict_into(&xb, &mut ws, &mut mean, &mut var)
-                    });
-                    std::hint::black_box(var.len());
+                    let g = pool::with_budget(t, || gp.data_term_ws(&ds.x, &ds.y, &mut ws));
+                    std::hint::black_box(g);
                 },
             );
-            let rows_per_sec = batch as f64 / report.stats.mean().max(1e-12);
-            entries.push(Entry { report, batch, threads: t, rows_per_sec });
+            let rows_per_sec = big as f64 / report.stats.mean().max(1e-12);
+            entries.push(Entry {
+                report,
+                batch: big,
+                threads: t,
+                rows_per_sec,
+                backend: Some(bname),
+            });
         }
-    }
-
-    // Blocked data term (the evaluator's −ELBO path) at the big batch.
-    let big = BATCHES[BATCHES.len() - 1];
-    for &t in &budgets {
-        let mut ws = PredictWorkspace::new();
-        let report = bench(
-            &format!("data_term_ws batch={big} threads={t}"),
-            3,
-            0.6,
-            || {
-                let g = pool::with_budget(t, || gp.data_term_ws(&ds.x, &ds.y, &mut ws));
-                std::hint::black_box(g);
-            },
-        );
-        let rows_per_sec = big as f64 / report.stats.mean().max(1e-12);
-        entries.push(Entry { report, batch: big, threads: t, rows_per_sec });
     }
 
     // End-to-end microbatching server: one client firing single-row
@@ -104,20 +138,27 @@ fn main() {
         let sr = server.join();
         println!("  server report: {}", sr.summary());
         let rows_per_sec = 1.0 / report.stats.mean().max(1e-12);
-        entries.push(Entry { report, batch: 1, threads: pool_threads, rows_per_sec });
+        entries.push(Entry {
+            report,
+            batch: 1,
+            threads: pool_threads,
+            rows_per_sec,
+            backend: None,
+        });
     }
 
     write_json(&entries, pool_threads, m, d);
     println!("\nwrote {} ({} entries, threads={pool_threads})", OUT_PATH, entries.len());
 }
 
-/// Dump `BENCH_predict.json`: schema-versioned, one entry per
-/// (bench, batch, threads) with ns/iter stats and rows/sec.
+/// Dump `BENCH_predict.json`: schema-versioned (2 adds the per-entry
+/// `backend` field and the dispatched `simd_path`), one entry per
+/// (bench, backend, batch, threads) with ns/iter stats and rows/sec.
 fn write_json(entries: &[Entry], threads: usize, m: usize, d: usize) {
     let benches: Vec<Json> = entries
         .iter()
         .map(|e| {
-            Json::obj(vec![
+            let mut fields = vec![
                 ("name", Json::Str(e.report.name.clone())),
                 ("batch", Json::Num(e.batch as f64)),
                 ("threads", Json::Num(e.threads as f64)),
@@ -126,15 +167,20 @@ fn write_json(entries: &[Entry], threads: usize, m: usize, d: usize) {
                 ("std_ns", Json::Num(e.report.stats.std() * 1e9)),
                 ("min_ns", Json::Num(e.report.stats.min * 1e9)),
                 ("iters", Json::Num(e.report.iters as f64)),
-            ])
+            ];
+            if let Some(bname) = e.backend {
+                fields.push(("backend", Json::Str(bname.into())));
+            }
+            Json::obj(fields)
         })
         .collect();
     let doc = Json::obj(vec![
-        ("schema", Json::Num(1.0)),
+        ("schema", Json::Num(2.0)),
         ("bench", Json::Str("perf_predict".into())),
         ("threads", Json::Num(threads as f64)),
         ("m", Json::Num(m as f64)),
         ("d", Json::Num(d as f64)),
+        ("simd_path", Json::Str(simd::active_path().into())),
         (
             "par_min_flops",
             Json::Num(advgp::linalg::par_min_flops() as f64),

@@ -15,6 +15,7 @@ use crate::ps::coordinator::{
 };
 use crate::ps::metrics::TraceRow;
 use crate::ps::worker::{WorkerProfile, WorkerSource};
+use crate::runtime::Backend;
 use anyhow::Result;
 use std::path::PathBuf;
 use std::time::Duration;
@@ -47,6 +48,9 @@ pub struct MethodOpts {
     pub keep_last: Option<usize>,
     /// Resume the run from this frozen server state.
     pub resume_from: Option<Checkpoint>,
+    /// Compute backend for the run (ISSUE 10); defaults to the
+    /// `ADVGP_BACKEND` env selection (scalar when unset).
+    pub backend: Backend,
 }
 
 impl Default for MethodOpts {
@@ -67,6 +71,7 @@ impl Default for MethodOpts {
             checkpoint_dir: None,
             keep_last: None,
             resume_from: None,
+            backend: Backend::from_env(),
         }
     }
 }
@@ -97,6 +102,7 @@ fn train_config(p: &Problem, opts: &MethodOpts, workers: usize) -> TrainConfig {
     cfg.checkpoint_dir = opts.checkpoint_dir.clone();
     cfg.keep_last = opts.keep_last;
     cfg.resume_from = opts.resume_from.clone();
+    cfg.backend = opts.backend;
     cfg
 }
 

@@ -20,6 +20,7 @@
 
 use crate::kernel::{cross_into_ws, kmm, ArdParams, CrossScratch, DEFAULT_JITTER};
 use crate::linalg::{cholesky_lower, spd_inverse, sym_eig, Mat};
+use crate::runtime::ComputeBackend;
 
 /// Batch output of a feature map.
 pub struct PhiBatch {
@@ -71,6 +72,26 @@ pub trait FeatureMap {
     /// (allocation-free once `ws`/`out` are warm).
     fn phi_into(&self, params: &ArdParams, x: &Mat, ws: &mut PhiWorkspace, out: &mut PhiBatch);
 
+    /// [`FeatureMap::phi_into`] on an explicit compute backend
+    /// (ISSUE 10).  The default ignores `be` and runs the scalar
+    /// `phi_into` — correct for any map, so exotic maps need no SIMD
+    /// plumbing; the hot maps ([`InducingChol`], [`Nystrom`]) override
+    /// it to route their O(B·m·d) / O(B·m²) products through `be`.
+    /// `ktilde_into` stays scalar under every backend: it is O(B·m)
+    /// and keeping it common pins the eq. (6) diagonal bitwise across
+    /// backends' shared portion.
+    fn phi_into_be(
+        &self,
+        be: &dyn ComputeBackend,
+        params: &ArdParams,
+        x: &Mat,
+        ws: &mut PhiWorkspace,
+        out: &mut PhiBatch,
+    ) {
+        let _ = be;
+        self.phi_into(params, x, ws, out);
+    }
+
     /// Evaluate the map on a batch X [B, d] (allocating convenience
     /// wrapper around [`FeatureMap::phi_into`]).
     fn phi(&self, params: &ArdParams, x: &Mat) -> PhiBatch {
@@ -115,6 +136,19 @@ impl FeatureMap for InducingChol {
         ws.k_bm.mul_tril_into(&self.chol_l, &mut out.phi);
         ktilde_into(&out.phi, params.a0_sq(), &mut out.ktilde);
     }
+
+    fn phi_into_be(
+        &self,
+        be: &dyn ComputeBackend,
+        params: &ArdParams,
+        x: &Mat,
+        ws: &mut PhiWorkspace,
+        out: &mut PhiBatch,
+    ) {
+        be.cross_into_ws(params, x, &self.z, &mut ws.k_bm, &mut ws.cross);
+        be.mul_tril_into(&ws.k_bm, &self.chol_l, &mut out.phi);
+        ktilde_into(&out.phi, params.a0_sq(), &mut out.ktilde);
+    }
 }
 
 /// eq. (21): φ(x) = diag(λ)^{-1/2} Q^T k_m(x) — scaled Nyström/EigenGP.
@@ -148,6 +182,19 @@ impl FeatureMap for Nystrom {
     fn phi_into(&self, params: &ArdParams, x: &Mat, ws: &mut PhiWorkspace, out: &mut PhiBatch) {
         cross_into_ws(params, x, &self.z, &mut ws.k_bm, &mut ws.cross);
         ws.k_bm.matmul_into(&self.w, &mut out.phi);
+        ktilde_into(&out.phi, params.a0_sq(), &mut out.ktilde);
+    }
+
+    fn phi_into_be(
+        &self,
+        be: &dyn ComputeBackend,
+        params: &ArdParams,
+        x: &Mat,
+        ws: &mut PhiWorkspace,
+        out: &mut PhiBatch,
+    ) {
+        be.cross_into_ws(params, x, &self.z, &mut ws.k_bm, &mut ws.cross);
+        be.matmul_into(&ws.k_bm, &self.w, &mut out.phi);
         ktilde_into(&out.phi, params.a0_sq(), &mut out.ktilde);
     }
 }
@@ -344,6 +391,27 @@ mod tests {
             let cap = out.phi.data.capacity();
             map.phi_into(&params, &xb, &mut ws, &mut out);
             assert_eq!(out.phi.data.capacity(), cap, "phi_into reallocated");
+        }
+    }
+
+    #[test]
+    fn phi_into_be_scalar_is_bitwise_phi_into() {
+        let mut rng = Pcg64::seeded(47);
+        let params = ArdParams { log_a0: 0.1, log_eta: vec![0.2, -0.1] };
+        let z = rand_mat(&mut rng, 6, 2);
+        let x = rand_mat(&mut rng, 13, 2);
+        let maps: Vec<Box<dyn FeatureMap>> = vec![
+            Box::new(InducingChol::build(&params, z.clone())),
+            Box::new(Nystrom::build(&params, z)),
+        ];
+        let be = crate::runtime::Backend::Scalar.resolve().unwrap();
+        for map in &maps {
+            let mut ws = PhiWorkspace::new();
+            let mut out = PhiBatch::empty();
+            map.phi_into_be(be, &params, &x, &mut ws, &mut out);
+            let want = map.phi(&params, &x);
+            assert_eq!(out.phi.data, want.phi.data);
+            assert_eq!(out.ktilde, want.ktilde);
         }
     }
 

@@ -29,7 +29,8 @@ pub use params::{Theta, ThetaLayout};
 
 use crate::gp::featuremap::{FeatureMap, InducingChol, PhiBatch, PhiWorkspace};
 use crate::kernel::ArdParams;
-use crate::linalg::{dot, Mat};
+use crate::linalg::Mat;
+use crate::runtime::backend::{self, ComputeBackend};
 use crate::util::pool;
 
 /// Max rows per prediction chunk (bounds the `[chunk, m]` temporaries;
@@ -106,15 +107,27 @@ pub struct SparseGp {
     /// math (like the gradient engine) treats U as structurally
     /// upper-triangular.
     u: Mat,
+    /// Kernel set the blocked posterior math executes on (ISSUE 10).
+    /// The O(m³) feature-map build stays on the scalar reference path.
+    be: &'static dyn ComputeBackend,
 }
 
 impl SparseGp {
+    /// Model on the process-wide active backend
+    /// ([`crate::runtime::backend::active`]) — scalar unless training
+    /// config / `ADVGP_BACKEND` installed something else.
     pub fn new(theta: Theta) -> Self {
+        Self::with_backend(theta, backend::active())
+    }
+
+    /// Model pinned to an explicit backend, regardless of global
+    /// selection (used by the tolerance-contract tests and benches).
+    pub fn with_backend(theta: Theta, be: &'static dyn ComputeBackend) -> Self {
         let ard = theta.ard();
         let map = InducingChol::build(&ard, theta.z_mat());
         let mut u = theta.u_mat();
         u.triu_inplace();
-        Self { theta, map, ard, u }
+        Self { theta, map, ard, u, be }
     }
 
     /// Refresh the cached feature-map factor after θ changed.
@@ -227,7 +240,7 @@ impl SparseGp {
         mean.copy_from_slice(&lane.mv);
         for i in 0..b {
             let vi = lane.v.row(i);
-            var[i] = (lane.pb.ktilde[i] + dot(vi, vi)).max(1e-12) + noise;
+            var[i] = (lane.pb.ktilde[i] + self.be.sumsq(vi)).max(1e-12) + noise;
         }
     }
 
@@ -240,9 +253,9 @@ impl SparseGp {
             .data
             .copy_from_slice(&x.data[start * d..(start + b) * d]);
         self.map
-            .phi_into(&self.ard, &lane.xc, &mut lane.phi_ws, &mut lane.pb);
-        lane.pb.phi.matvec_into(self.theta.mu(), &mut lane.mv);
-        lane.pb.phi.mul_triu_t_into(&self.u, &mut lane.v);
+            .phi_into_be(self.be, &self.ard, &lane.xc, &mut lane.phi_ws, &mut lane.pb);
+        self.be.matvec_into(&lane.pb.phi, self.theta.mu(), &mut lane.mv);
+        self.be.mul_triu_t_into(&lane.pb.phi, &self.u, &mut lane.v);
     }
 
     /// Decide the chunk→lane fan-out (same policy as the gradient
@@ -291,7 +304,7 @@ impl SparseGp {
         for i in 0..b {
             let e = lane.mv[i] - y[start + i];
             let vi = lane.v.row(i);
-            let quad = dot(vi, vi);
+            let quad = self.be.sumsq(vi);
             g += 0.5 * (2.0 * std::f64::consts::PI).ln() + log_sigma
                 + 0.5 * beta * (e * e + quad + lane.pb.ktilde[i]);
         }

@@ -24,8 +24,9 @@
 use super::chain::LChain;
 use super::{GradEngine, GradResult};
 use crate::gp::{Theta, ThetaLayout};
-use crate::kernel::{cross_into_ws, CrossScratch};
-use crate::linalg::{dot, Mat};
+use crate::kernel::CrossScratch;
+use crate::linalg::Mat;
+use crate::runtime::backend::{self, ComputeBackend};
 use crate::util::pool;
 
 /// Max rows processed per chunk (bounds the [chunk, m] temporaries).
@@ -33,13 +34,26 @@ const CHUNK: usize = 2048;
 
 pub struct NativeEngine {
     layout: ThetaLayout,
+    /// Kernel set the per-chunk math executes on (ISSUE 10).  The
+    /// O(m³)-once-per-θ factorization (`Factorization::build`) stays
+    /// on the scalar reference path for every backend.
+    be: &'static dyn ComputeBackend,
     /// Lane workspaces, grown on demand and reused across `grad` calls.
     lanes: Vec<LaneWs>,
 }
 
 impl NativeEngine {
+    /// Engine on the process-wide active backend
+    /// ([`crate::runtime::backend::active`]) — scalar unless training
+    /// config / `ADVGP_BACKEND` installed something else.
     pub fn new(layout: ThetaLayout) -> Self {
-        Self { layout, lanes: Vec::new() }
+        Self::with_backend(layout, backend::active())
+    }
+
+    /// Engine pinned to an explicit backend, regardless of global
+    /// selection (used by the tolerance-contract tests and benches).
+    pub fn with_backend(layout: ThetaLayout, be: &'static dyn ComputeBackend) -> Self {
+        Self { layout, be, lanes: Vec::new() }
     }
 }
 
@@ -172,10 +186,11 @@ impl GradEngine for NativeEngine {
             ws.reset(self.layout.len(), m);
         }
         let layout = self.layout;
+        let be = self.be;
         if lanes == 1 {
             let ws = &mut self.lanes[0];
             for chunk in 0..n_chunks {
-                accumulate_chunk(&layout, &f, x, y, chunk, ws);
+                accumulate_chunk(&layout, be, &f, x, y, chunk, ws);
             }
         } else {
             let fref = &f;
@@ -193,7 +208,7 @@ impl GradEngine for NativeEngine {
                     pool::with_budget(1, || {
                         let mut chunk = lane;
                         while chunk < n_chunks {
-                            accumulate_chunk(&layout, fref, x, y, chunk, ws);
+                            accumulate_chunk(&layout, be, fref, x, y, chunk, ws);
                             chunk += lanes;
                         }
                     });
@@ -229,9 +244,12 @@ impl GradEngine for NativeEngine {
 
 /// Process chunk `chunk` of `x` into the lane workspace: adds the chunk
 /// value to `ws.value`, the direct gradient paths to `ws.grad`, and the
-/// L cotangent to `ws.l_cot`.  Allocation-free once `ws` is warm.
+/// L cotangent to `ws.l_cot`.  Allocation-free once `ws` is warm.  All
+/// O(B·m) / O(B·m²) products run on `be`; the scalar bookkeeping loops
+/// (row sums, per-coordinate gradient folds) stay backend-independent.
 fn accumulate_chunk(
     layout: &ThetaLayout,
+    be: &dyn ComputeBackend,
     f: &Factorization,
     x: &Mat,
     y: &[f64],
@@ -255,19 +273,19 @@ fn accumulate_chunk(
     let yc = &y[start..start + b];
 
     // ---- forward (the Pallas kernel's job on the XLA path) ----
-    cross_into_ws(&f.lchain.params, &ws.xc, z, &mut ws.k_bm, &mut ws.cross); // [B, m]
-    ws.k_bm.mul_tril_into(&f.lchain.chol_l, &mut ws.phi); // [B, m]
+    be.cross_into_ws(&f.lchain.params, &ws.xc, z, &mut ws.k_bm, &mut ws.cross); // [B, m]
+    be.mul_tril_into(&ws.k_bm, &f.lchain.chol_l, &mut ws.phi); // [B, m]
     // uphi rows: (U φ_i)ᵀ = φᵀ Uᵀ; sphi rows: (Σ φ_i)ᵀ = (U φ)ᵀ U.
-    ws.phi.mul_triu_t_into(&f.u, &mut ws.uphi);
-    ws.uphi.mul_triu_into(&f.u, &mut ws.sphi);
+    be.mul_triu_t_into(&ws.phi, &f.u, &mut ws.uphi);
+    be.mul_triu_into(&ws.uphi, &f.u, &mut ws.sphi);
     ws.e.resize(b, 0.0);
     ws.quad.resize(b, 0.0);
     ws.ktilde.resize(b, 0.0);
     for i in 0..b {
         let phi_i = ws.phi.row(i);
-        ws.e[i] = dot(phi_i, &f.mu) - yc[i];
-        ws.quad[i] = dot(ws.uphi.row(i), ws.uphi.row(i));
-        ws.ktilde[i] = a0_sq - dot(phi_i, phi_i);
+        ws.e[i] = be.dot(phi_i, &f.mu) - yc[i];
+        ws.quad[i] = be.sumsq(ws.uphi.row(i));
+        ws.ktilde[i] = a0_sq - be.sumsq(phi_i);
     }
     let mut g_val = 0.0;
     for i in 0..b {
@@ -278,7 +296,7 @@ fn accumulate_chunk(
 
     // ---- dμ (eq. 16): β Φ^T e ----
     {
-        ws.phi.tr_matvec_into(&ws.e, &mut ws.dmu);
+        be.tr_matvec_into(&ws.phi, &ws.e, &mut ws.dmu);
         let r = layout.mu_range();
         for (gslot, v) in ws.grad[r].iter_mut().zip(&ws.dmu) {
             *gslot += beta * v;
@@ -287,8 +305,8 @@ fn accumulate_chunk(
 
     // ---- dU (eq. 17): β triu(U Φ^T Φ) ----
     {
-        ws.phi.gram_into(&mut ws.gram); // Φ^T Φ
-        f.u.triu_matmul_into(&ws.gram, &mut ws.du);
+        be.gram_into(&ws.phi, &mut ws.gram); // Φ^T Φ
+        be.triu_matmul_into(&f.u, &ws.gram, &mut ws.du);
         ws.du.triu_inplace();
         let r = layout.u_range();
         for (gslot, v) in ws.grad[r].iter_mut().zip(&ws.du.data) {
@@ -331,16 +349,16 @@ fn accumulate_chunk(
     }
 
     // ---- direct K_bm path: A1 = (P Lᵀ) ∘ K_bm ----
-    ws.p.mul_tril_t_into(&f.lchain.chol_l, &mut ws.a1);
+    be.mul_tril_t_into(&ws.p, &f.lchain.chol_l, &mut ws.a1);
     for (v, k) in ws.a1.data.iter_mut().zip(&ws.k_bm.data) {
         *v *= k;
     }
-    ws.a1.col_sums_into(&mut ws.s_col); // s_j = Σ_i A1[i,j]
+    be.col_sums_into(&ws.a1, &mut ws.s_col); // s_j = Σ_i A1[i,j]
     ws.row_sum.resize(b, 0.0);
     for i in 0..b {
         ws.row_sum[i] = ws.a1.row(i).iter().sum();
     }
-    ws.a1.tr_matmul_into(&ws.xc, &mut ws.a1t_x); // [m, d]
+    be.tr_matmul_into(&ws.a1, &ws.xc, &mut ws.a1t_x); // [m, d]
 
     // dZ direct: β η_k [ (A1ᵀX)[j,k] − s_j z_jk ].
     {
@@ -374,7 +392,7 @@ fn accumulate_chunk(
 
     // ---- accumulate the true L cotangent: dL̄ += β K_bmᵀ P ----
     {
-        ws.k_bm.tr_matmul_into(&ws.p, &mut ws.dmat);
+        be.tr_matmul_into(&ws.k_bm, &ws.p, &mut ws.dmat);
         ws.l_cot.axpy(beta, &ws.dmat);
     }
 }

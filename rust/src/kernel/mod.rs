@@ -48,15 +48,37 @@ pub fn k_pair(p: &ArdParams, x: &[f64], z: &[f64]) -> f64 {
 /// kernel evaluation allocation-free in steady state.
 #[derive(Clone, Debug)]
 pub struct CrossScratch {
-    /// `ze[j, k] = η_k z[j, k]`.
-    ze: Mat,
+    /// `ze[j, k] = η_k z[j, k]`.  `pub(crate)`: the SIMD backend's
+    /// cross kernel ([`crate::runtime::backend::SimdBackend`]) shares
+    /// this scratch so both backends reuse one z-side preparation.
+    pub(crate) ze: Mat,
     /// `zn[j] = Σ_k η_k z[j, k]²`.
-    zn: Vec<f64>,
+    pub(crate) zn: Vec<f64>,
 }
 
 impl CrossScratch {
     pub fn new() -> Self {
         Self { ze: Mat::empty(), zn: Vec::new() }
+    }
+
+    /// Fill `ze`/`zn` for inducing set `z` under lengthscales `eta`
+    /// (m×d work, small next to the [n, m] output it enables).  Shared
+    /// by the scalar and SIMD cross kernels — identical preparation is
+    /// part of why the two backends differ only by reduction order.
+    pub(crate) fn prepare(&mut self, eta: &[f64], z: &Mat) {
+        let (m, d) = (z.rows, eta.len());
+        self.ze.resize(m, d);
+        self.zn.resize(m, 0.0);
+        for j in 0..m {
+            let zrow = z.row(j);
+            let erow = self.ze.row_mut(j);
+            let mut n2 = 0.0;
+            for c in 0..d {
+                erow[c] = eta[c] * zrow[c];
+                n2 += eta[c] * zrow[c] * zrow[c];
+            }
+            self.zn[j] = n2;
+        }
     }
 }
 
@@ -67,8 +89,9 @@ impl Default for CrossScratch {
 }
 
 /// Rough cost model for one K[X, Z] evaluation: d multiply-adds plus an
-/// exp (~16 flops) per pair.  Drives the serial/parallel dispatch.
-fn cross_flops(rows: usize, m: usize, d: usize) -> usize {
+/// exp (~16 flops) per pair.  Drives the serial/parallel dispatch
+/// (shared with the SIMD backend so both dispatch identically).
+pub(crate) fn cross_flops(rows: usize, m: usize, d: usize) -> usize {
     rows * m * (d + 16)
 }
 
@@ -92,19 +115,7 @@ pub fn cross_into_ws(p: &ArdParams, x: &Mat, z: &Mat, out: &mut Mat, ws: &mut Cr
     if x.rows == 0 || m == 0 {
         return;
     }
-    // z side: scale once per call (m×d, small next to the [n, m] output).
-    ws.ze.resize(m, d);
-    ws.zn.resize(m, 0.0);
-    for j in 0..m {
-        let zrow = z.row(j);
-        let erow = ws.ze.row_mut(j);
-        let mut n2 = 0.0;
-        for c in 0..d {
-            erow[c] = eta[c] * zrow[c];
-            n2 += eta[c] * zrow[c] * zrow[c];
-        }
-        ws.zn[j] = n2;
-    }
+    ws.prepare(&eta, z);
     let ze = &ws.ze;
     let zn = &ws.zn;
     let eta = &eta;

@@ -25,6 +25,7 @@
 
 mod chol;
 mod eig;
+pub mod simd;
 
 pub use chol::{cholesky_lower, solve_lower, solve_upper, spd_inverse, CholError};
 pub use eig::sym_eig;
@@ -94,10 +95,16 @@ impl fmt::Debug for Mat {
 // the serial path runs them over the full range, the parallel path over
 // disjoint blocks.  Per-element accumulation order (ascending k) is
 // identical either way.
+//
+// `pub(crate)` + `#[inline(always)]`: the [`simd`] module recompiles
+// the broadcast-chain kernels under wider target features (see
+// `simd::dispatch!`) — inlining into the `#[target_feature]` wrapper is
+// what lets that codegen actually apply.
 // ---------------------------------------------------------------------
 
 /// Rows [r0, r0+rows) of C = A·B (ikj, k-tiled).
-fn matmul_rows(a: &Mat, b: &Mat, r0: usize, rows: usize, out: &mut [f64]) {
+#[inline(always)]
+pub(crate) fn matmul_rows(a: &Mat, b: &Mat, r0: usize, rows: usize, out: &mut [f64]) {
     let n = b.cols;
     debug_assert_eq!(out.len(), rows * n);
     for v in out.iter_mut() {
@@ -121,7 +128,8 @@ fn matmul_rows(a: &Mat, b: &Mat, r0: usize, rows: usize, out: &mut [f64]) {
 }
 
 /// Rows [i0, i0+rows) of C = Aᵀ·B (k-outer; streams both operands).
-fn tr_matmul_rows(a: &Mat, b: &Mat, i0: usize, rows: usize, out: &mut [f64]) {
+#[inline(always)]
+pub(crate) fn tr_matmul_rows(a: &Mat, b: &Mat, i0: usize, rows: usize, out: &mut [f64]) {
     let n = b.cols;
     debug_assert_eq!(out.len(), rows * n);
     for v in out.iter_mut() {
@@ -141,7 +149,8 @@ fn tr_matmul_rows(a: &Mat, b: &Mat, i0: usize, rows: usize, out: &mut [f64]) {
 }
 
 /// Rows [i0, i0+rows) of G = AᵀA, upper triangle only (j ≥ global i).
-fn gram_rows(a: &Mat, i0: usize, rows: usize, out: &mut [f64]) {
+#[inline(always)]
+pub(crate) fn gram_rows(a: &Mat, i0: usize, rows: usize, out: &mut [f64]) {
     let n = a.cols;
     debug_assert_eq!(out.len(), rows * n);
     for v in out.iter_mut() {
@@ -161,14 +170,16 @@ fn gram_rows(a: &Mat, i0: usize, rows: usize, out: &mut [f64]) {
 }
 
 /// Rows [r0, r0+rows) of y = A·x.
-fn matvec_rows(a: &Mat, x: &[f64], r0: usize, rows: usize, out: &mut [f64]) {
+#[inline(always)]
+pub(crate) fn matvec_rows(a: &Mat, x: &[f64], r0: usize, rows: usize, out: &mut [f64]) {
     for (i, v) in out.iter_mut().enumerate().take(rows) {
         *v = dot(a.row(r0 + i), x);
     }
 }
 
 /// Columns [c0, c0+cols) of y = Aᵀ·x.
-fn tr_matvec_cols(a: &Mat, x: &[f64], c0: usize, cols: usize, out: &mut [f64]) {
+#[inline(always)]
+pub(crate) fn tr_matvec_cols(a: &Mat, x: &[f64], c0: usize, cols: usize, out: &mut [f64]) {
     for v in out.iter_mut() {
         *v = 0.0;
     }
@@ -182,7 +193,8 @@ fn tr_matvec_cols(a: &Mat, x: &[f64], c0: usize, cols: usize, out: &mut [f64]) {
 }
 
 /// Columns [c0, c0+cols) of s_j = Σ_i A[i, j].
-fn col_sums_cols(a: &Mat, c0: usize, cols: usize, out: &mut [f64]) {
+#[inline(always)]
+pub(crate) fn col_sums_cols(a: &Mat, c0: usize, cols: usize, out: &mut [f64]) {
     for v in out.iter_mut() {
         *v = 0.0;
     }
@@ -195,7 +207,8 @@ fn col_sums_cols(a: &Mat, c0: usize, cols: usize, out: &mut [f64]) {
 }
 
 /// Rows [r0, r0+rows) of C = U·B with U upper triangular (k ≥ i).
-fn triu_matmul_rows(u: &Mat, b: &Mat, r0: usize, rows: usize, out: &mut [f64]) {
+#[inline(always)]
+pub(crate) fn triu_matmul_rows(u: &Mat, b: &Mat, r0: usize, rows: usize, out: &mut [f64]) {
     let n = b.cols;
     debug_assert_eq!(out.len(), rows * n);
     for v in out.iter_mut() {
@@ -216,7 +229,8 @@ fn triu_matmul_rows(u: &Mat, b: &Mat, r0: usize, rows: usize, out: &mut [f64]) {
 }
 
 /// Rows [r0, r0+rows) of C = A·L with L lower triangular (j ≤ k).
-fn mul_tril_rows(a: &Mat, l: &Mat, r0: usize, rows: usize, out: &mut [f64]) {
+#[inline(always)]
+pub(crate) fn mul_tril_rows(a: &Mat, l: &Mat, r0: usize, rows: usize, out: &mut [f64]) {
     let n = l.cols;
     debug_assert_eq!(out.len(), rows * n);
     for v in out.iter_mut() {
@@ -235,7 +249,8 @@ fn mul_tril_rows(a: &Mat, l: &Mat, r0: usize, rows: usize, out: &mut [f64]) {
 }
 
 /// Rows [r0, r0+rows) of C = A·U with U upper triangular (j ≥ k).
-fn mul_triu_rows(a: &Mat, u: &Mat, r0: usize, rows: usize, out: &mut [f64]) {
+#[inline(always)]
+pub(crate) fn mul_triu_rows(a: &Mat, u: &Mat, r0: usize, rows: usize, out: &mut [f64]) {
     let n = u.cols;
     debug_assert_eq!(out.len(), rows * n);
     for v in out.iter_mut() {
@@ -255,7 +270,8 @@ fn mul_triu_rows(a: &Mat, u: &Mat, r0: usize, rows: usize, out: &mut [f64]) {
 
 /// Rows [r0, r0+rows) of C = A·Lᵀ with L lower triangular:
 /// C[i, j] = ⟨A[i, ..=j], L[j, ..=j]⟩ (prefix dot).
-fn mul_tril_t_rows(a: &Mat, l: &Mat, r0: usize, rows: usize, out: &mut [f64]) {
+#[inline(always)]
+pub(crate) fn mul_tril_t_rows(a: &Mat, l: &Mat, r0: usize, rows: usize, out: &mut [f64]) {
     let n = l.rows;
     debug_assert_eq!(out.len(), rows * n);
     for i in 0..rows {
@@ -269,7 +285,8 @@ fn mul_tril_t_rows(a: &Mat, l: &Mat, r0: usize, rows: usize, out: &mut [f64]) {
 
 /// Rows [r0, r0+rows) of C = A·Uᵀ with U upper triangular:
 /// C[i, j] = ⟨A[i, j..], U[j, j..]⟩ (suffix dot).
-fn mul_triu_t_rows(a: &Mat, u: &Mat, r0: usize, rows: usize, out: &mut [f64]) {
+#[inline(always)]
+pub(crate) fn mul_triu_t_rows(a: &Mat, u: &Mat, r0: usize, rows: usize, out: &mut [f64]) {
     let n = u.rows;
     debug_assert_eq!(out.len(), rows * n);
     for i in 0..rows {
@@ -288,7 +305,10 @@ fn mul_triu_t_rows(a: &Mat, u: &Mat, r0: usize, rows: usize, out: &mut [f64]) {
 /// the *whole* input operand (tr_matmul/gram/tr_matvec/col_sums): they
 /// get exactly one block per lane, since extra blocks multiply memory
 /// traffic instead of improving balance.
-fn run_rows(
+///
+/// `pub(crate)`: [`crate::runtime::backend::SimdBackend`] reuses this
+/// dispatcher so both backends share one serial/parallel policy.
+pub(crate) fn run_rows(
     out: &mut [f64],
     row_len: usize,
     rows: usize,

@@ -1,0 +1,535 @@
+//! Explicit-width SIMD twins of the hot-path row kernels (ISSUE 10).
+//!
+//! Std-only: no packed intrinsics are written by hand.  Instead every
+//! kernel here is an ordinary safe Rust function shaped so LLVM's
+//! vectorizer maps it onto full-width vector code, and each one is
+//! compiled **twice**:
+//!
+//! * a **generic** copy at the crate's baseline target features (the
+//!   portable fallback — on aarch64 the baseline already includes
+//!   NEON, so this copy *is* the SIMD path there), and
+//! * on x86_64, an **AVX2** copy behind `#[target_feature(enable =
+//!   "avx2")]`, selected at runtime via `is_x86_feature_detected!`
+//!   (cached after the first query).
+//!
+//! The only `unsafe` in this module is the call into the
+//! `#[target_feature]` clone, guarded by that runtime detection.
+//!
+//! # Two kernel families, two determinism contracts
+//!
+//! **Reduction kernels** ([`dot`], [`sumsq`], [`matvec_rows`],
+//! [`mul_tril_t_rows`], [`mul_triu_t_rows`], [`cross_rows`],
+//! [`cross_pairwise_rows`]) accumulate into a `LANES`-wide array with
+//! a fixed pairwise reduction tree.  This *reassociates* the sum
+//! relative to the scalar kernels in [`super`] (which unroll 4-way),
+//! so results differ from the scalar backend by rounding only — the
+//! per-backend tolerance contract (`rust/tests/backend_contract.rs`)
+//! bounds the element-wise relative error.  Across *this module's own*
+//! dispatch paths the accumulation order is identical, so AVX2 vs
+//! generic is bitwise (pinned by [`self_check`]).
+//!
+//! **Broadcast-chain kernels** (`matmul_rows`, `gram_rows`, … — every
+//! kernel where each output element owns an independent `+=` chain)
+//! are not re-implemented at all: the scalar row kernels from
+//! [`super`] are inlined into the AVX2 wrapper and re-vectorized at
+//! the wider ISA.  Vectorizing independent accumulator chains is
+//! semantics-preserving, and we deliberately do **not** enable `fma`
+//! (contraction would change results), so these kernels stay bitwise
+//! identical to the scalar backend on every path.
+//!
+//! # Forcing the fallback
+//!
+//! `ADVGP_SIMD_FALLBACK=1` pins dispatch to the generic copies even on
+//! AVX2-capable hardware (read once, cached).  It pins the *dispatch
+//! path*, not backend selection — [`available`] ignores it — so CI can
+//! run the whole SIMD contract suite down the no-intrinsics path.
+
+use super::Mat;
+#[cfg(target_arch = "x86_64")]
+use std::sync::atomic::{AtomicU8, Ordering};
+
+/// Accumulator width for the reduction kernels: 8 f64 lanes = two
+/// 256-bit AVX2 registers (or four 128-bit NEON registers), enough to
+/// hide FP add latency without spilling on either ISA.
+pub const LANES: usize = 8;
+
+/// Fixed pairwise reduction of the lane accumulators.  The tree shape
+/// is part of the numeric contract: it must not depend on the dispatch
+/// path, or [`self_check`] would fail.
+#[inline(always)]
+fn reduce(acc: [f64; LANES]) -> f64 {
+    ((acc[0] + acc[1]) + (acc[2] + acc[3])) + ((acc[4] + acc[5]) + (acc[6] + acc[7]))
+}
+
+// ---------------------------------------------------------------------
+// Generic kernel bodies.  `#[inline(always)]` is load-bearing: the
+// `#[target_feature]` wrappers below must inline these so the AVX2
+// codegen actually applies to the loops.
+// ---------------------------------------------------------------------
+
+#[inline(always)]
+fn dot_impl(a: &[f64], b: &[f64]) -> f64 {
+    debug_assert_eq!(a.len(), b.len());
+    let mut acc = [0.0f64; LANES];
+    let mut ca = a.chunks_exact(LANES);
+    let mut cb = b.chunks_exact(LANES);
+    for (xa, xb) in ca.by_ref().zip(cb.by_ref()) {
+        for l in 0..LANES {
+            acc[l] += xa[l] * xb[l];
+        }
+    }
+    let mut s = reduce(acc);
+    for (x, y) in ca.remainder().iter().zip(cb.remainder()) {
+        s += x * y;
+    }
+    s
+}
+
+#[inline(always)]
+fn sumsq_impl(a: &[f64]) -> f64 {
+    let mut acc = [0.0f64; LANES];
+    let mut ca = a.chunks_exact(LANES);
+    for xa in ca.by_ref() {
+        for l in 0..LANES {
+            acc[l] += xa[l] * xa[l];
+        }
+    }
+    let mut s = reduce(acc);
+    for x in ca.remainder() {
+        s += x * x;
+    }
+    s
+}
+
+#[inline(always)]
+fn matvec_rows_impl(a: &Mat, x: &[f64], r0: usize, rows: usize, out: &mut [f64]) {
+    for (i, v) in out.iter_mut().enumerate().take(rows) {
+        *v = dot_impl(a.row(r0 + i), x);
+    }
+}
+
+#[inline(always)]
+fn mul_tril_t_rows_impl(a: &Mat, l: &Mat, r0: usize, rows: usize, out: &mut [f64]) {
+    let n = l.rows;
+    debug_assert_eq!(out.len(), rows * n);
+    for i in 0..rows {
+        let arow = a.row(r0 + i);
+        let crow = &mut out[i * n..(i + 1) * n];
+        for (j, slot) in crow.iter_mut().enumerate() {
+            *slot = dot_impl(&arow[..=j], &l.row(j)[..=j]);
+        }
+    }
+}
+
+#[inline(always)]
+fn mul_triu_t_rows_impl(a: &Mat, u: &Mat, r0: usize, rows: usize, out: &mut [f64]) {
+    let n = u.rows;
+    debug_assert_eq!(out.len(), rows * n);
+    for i in 0..rows {
+        let arow = a.row(r0 + i);
+        let crow = &mut out[i * n..(i + 1) * n];
+        for (j, slot) in crow.iter_mut().enumerate() {
+            *slot = dot_impl(&arow[j..], &u.row(j)[j..]);
+        }
+    }
+}
+
+/// SIMD twin of the fast-form cross-covariance row kernel in
+/// [`crate::kernel::cross_into_ws`]: `ze`/`zn` are the η-scaled
+/// inducing rows and η-norms prepared by `CrossScratch`.
+#[inline(always)]
+fn cross_rows_impl(
+    a0_sq: f64,
+    eta: &[f64],
+    x: &Mat,
+    ze: &Mat,
+    zn: &[f64],
+    r0: usize,
+    blk: &mut [f64],
+) {
+    let m = ze.rows;
+    for (i, orow) in blk.chunks_mut(m).enumerate() {
+        let xrow = x.row(r0 + i);
+        let mut xn = 0.0;
+        for (c, &e) in eta.iter().enumerate() {
+            xn += e * xrow[c] * xrow[c];
+        }
+        for (j, v) in orow.iter_mut().enumerate() {
+            let d2 = (xn + zn[j] - 2.0 * dot_impl(xrow, ze.row(j))).max(0.0);
+            *v = a0_sq * (-0.5 * d2).exp();
+        }
+    }
+}
+
+/// SIMD twin of the exact per-pair row kernel in
+/// [`crate::kernel::cross_pairwise`] (lane-array accumulation of the
+/// η-weighted squared distance).
+#[inline(always)]
+fn cross_pairwise_rows_impl(
+    a0_sq: f64,
+    eta: &[f64],
+    x: &Mat,
+    z: &Mat,
+    r0: usize,
+    blk: &mut [f64],
+) {
+    let m = z.rows;
+    for (i, krow) in blk.chunks_mut(m).enumerate() {
+        let xi = x.row(r0 + i);
+        for (j, slot) in krow.iter_mut().enumerate() {
+            let zj = z.row(j);
+            let mut acc = [0.0f64; LANES];
+            let mut cx = xi.chunks_exact(LANES);
+            let mut cz = zj.chunks_exact(LANES);
+            let mut ce = eta.chunks_exact(LANES);
+            for ((xa, za), ea) in cx.by_ref().zip(cz.by_ref()).zip(ce.by_ref()) {
+                for l in 0..LANES {
+                    let diff = xa[l] - za[l];
+                    acc[l] += diff * diff * ea[l];
+                }
+            }
+            let mut d2 = reduce(acc);
+            for ((xv, zv), ev) in cx
+                .remainder()
+                .iter()
+                .zip(cz.remainder())
+                .zip(ce.remainder())
+            {
+                let diff = xv - zv;
+                d2 += diff * diff * ev;
+            }
+            *slot = a0_sq * (-0.5 * d2).exp();
+        }
+    }
+}
+
+// ---------------------------------------------------------------------
+// Runtime dispatch.
+// ---------------------------------------------------------------------
+
+#[cfg(target_arch = "x86_64")]
+const PATH_UNKNOWN: u8 = 0;
+#[cfg(target_arch = "x86_64")]
+const PATH_ACCEL: u8 = 1;
+#[cfg(target_arch = "x86_64")]
+const PATH_GENERIC: u8 = 2;
+
+/// Cached dispatch decision (feature detection + env override are read
+/// once; `Relaxed` is fine — worst case two threads both detect).
+#[cfg(target_arch = "x86_64")]
+static PATH: AtomicU8 = AtomicU8::new(PATH_UNKNOWN);
+
+#[cfg(target_arch = "x86_64")]
+fn fallback_forced() -> bool {
+    std::env::var_os("ADVGP_SIMD_FALLBACK").is_some_and(|v| v == "1")
+}
+
+#[cfg(target_arch = "x86_64")]
+#[inline]
+fn avx2_enabled() -> bool {
+    match PATH.load(Ordering::Relaxed) {
+        PATH_ACCEL => true,
+        PATH_GENERIC => false,
+        _ => {
+            let on = !fallback_forced() && std::is_x86_feature_detected!("avx2");
+            PATH.store(
+                if on { PATH_ACCEL } else { PATH_GENERIC },
+                Ordering::Relaxed,
+            );
+            on
+        }
+    }
+}
+
+/// Whether this build/host has a SIMD path worth selecting via
+/// `Backend::Auto`: AVX2 on x86_64, always on aarch64 (NEON is
+/// baseline, so the generic copies are already vector code).  Ignores
+/// `ADVGP_SIMD_FALLBACK`, which pins the dispatch *path*, not backend
+/// choice.
+pub fn available() -> bool {
+    #[cfg(target_arch = "x86_64")]
+    {
+        std::is_x86_feature_detected!("avx2")
+    }
+    #[cfg(target_arch = "aarch64")]
+    {
+        true
+    }
+    #[cfg(not(any(target_arch = "x86_64", target_arch = "aarch64")))]
+    {
+        false
+    }
+}
+
+/// Which copy of the kernels calls through this module run: for logs,
+/// bench JSON, and the CI forced-fallback run.
+pub fn active_path() -> &'static str {
+    #[cfg(target_arch = "x86_64")]
+    {
+        if avx2_enabled() {
+            "x86_64-avx2"
+        } else {
+            "generic"
+        }
+    }
+    #[cfg(target_arch = "aarch64")]
+    {
+        "aarch64-neon"
+    }
+    #[cfg(not(any(target_arch = "x86_64", target_arch = "aarch64")))]
+    {
+        "generic"
+    }
+}
+
+/// Compile `$imp` twice (generic + AVX2 on x86_64) and emit `$name` as
+/// the runtime-dispatched entry point.  The `unsafe` block is sound
+/// because the AVX2 clone is only reachable after
+/// `is_x86_feature_detected!("avx2")` returned true.
+macro_rules! dispatch {
+    ($(#[$meta:meta])* $vis:vis fn $name:ident(
+        $($arg:ident: $ty:ty),* $(,)?
+    ) $(-> $ret:ty)? = $imp:path;) => {
+        $(#[$meta])*
+        #[inline]
+        $vis fn $name($($arg: $ty),*) $(-> $ret)? {
+            #[cfg(target_arch = "x86_64")]
+            {
+                #[target_feature(enable = "avx2")]
+                unsafe fn avx2($($arg: $ty),*) $(-> $ret)? {
+                    $imp($($arg),*)
+                }
+                if avx2_enabled() {
+                    // SAFETY: guarded by runtime AVX2 detection above.
+                    return unsafe { avx2($($arg),*) };
+                }
+            }
+            $imp($($arg),*)
+        }
+    };
+}
+
+// Reduction kernels (lane-array accumulators; tolerance-bounded vs the
+// scalar backend, bitwise across dispatch paths).
+dispatch! {
+    /// Lane-accumulated dot product (reassociated vs [`super::dot`]).
+    pub fn dot(a: &[f64], b: &[f64]) -> f64 = dot_impl;
+}
+dispatch! {
+    /// Lane-accumulated Σ aᵢ² (the blocked-predict row sum-of-squares).
+    pub fn sumsq(a: &[f64]) -> f64 = sumsq_impl;
+}
+dispatch! {
+    /// Rows [r0, r0+rows) of y = A·x via [`dot`].
+    pub fn matvec_rows(a: &Mat, x: &[f64], r0: usize, rows: usize, out: &mut [f64]) =
+        matvec_rows_impl;
+}
+dispatch! {
+    /// Rows of C = A·Lᵀ (prefix dots) via [`dot`].
+    pub fn mul_tril_t_rows(a: &Mat, l: &Mat, r0: usize, rows: usize, out: &mut [f64]) =
+        mul_tril_t_rows_impl;
+}
+dispatch! {
+    /// Rows of C = A·Uᵀ (suffix dots) via [`dot`].
+    pub fn mul_triu_t_rows(a: &Mat, u: &Mat, r0: usize, rows: usize, out: &mut [f64]) =
+        mul_triu_t_rows_impl;
+}
+dispatch! {
+    /// Fast-form K[X, Z] row block (see [`crate::kernel::cross_into_ws`]).
+    pub fn cross_rows(
+        a0_sq: f64,
+        eta: &[f64],
+        x: &Mat,
+        ze: &Mat,
+        zn: &[f64],
+        r0: usize,
+        blk: &mut [f64],
+    ) = cross_rows_impl;
+}
+dispatch! {
+    /// Exact per-pair K[X, Z] row block (see [`crate::kernel::cross_pairwise`]).
+    pub fn cross_pairwise_rows(
+        a0_sq: f64,
+        eta: &[f64],
+        x: &Mat,
+        z: &Mat,
+        r0: usize,
+        blk: &mut [f64],
+    ) = cross_pairwise_rows_impl;
+}
+
+// Broadcast-chain kernels: the scalar row kernels recompiled at AVX2.
+// Bitwise identical to the scalar backend on every dispatch path (no
+// reassociation, no fma).
+dispatch! {
+    /// Rows of C = A·B — `super::matmul_rows` at the wider ISA.
+    pub fn matmul_rows(a: &Mat, b: &Mat, r0: usize, rows: usize, out: &mut [f64]) =
+        super::matmul_rows;
+}
+dispatch! {
+    /// Rows of C = Aᵀ·B — `super::tr_matmul_rows` at the wider ISA.
+    pub fn tr_matmul_rows(a: &Mat, b: &Mat, i0: usize, rows: usize, out: &mut [f64]) =
+        super::tr_matmul_rows;
+}
+dispatch! {
+    /// Upper-triangle rows of G = AᵀA — `super::gram_rows` at the wider ISA.
+    pub fn gram_rows(a: &Mat, i0: usize, rows: usize, out: &mut [f64]) = super::gram_rows;
+}
+dispatch! {
+    /// Columns of y = Aᵀ·x — `super::tr_matvec_cols` at the wider ISA.
+    pub fn tr_matvec_cols(a: &Mat, x: &[f64], c0: usize, cols: usize, out: &mut [f64]) =
+        super::tr_matvec_cols;
+}
+dispatch! {
+    /// Column sums — `super::col_sums_cols` at the wider ISA.
+    pub fn col_sums_cols(a: &Mat, c0: usize, cols: usize, out: &mut [f64]) =
+        super::col_sums_cols;
+}
+dispatch! {
+    /// Rows of C = U·B — `super::triu_matmul_rows` at the wider ISA.
+    pub fn triu_matmul_rows(u: &Mat, b: &Mat, r0: usize, rows: usize, out: &mut [f64]) =
+        super::triu_matmul_rows;
+}
+dispatch! {
+    /// Rows of C = A·L — `super::mul_tril_rows` at the wider ISA.
+    pub fn mul_tril_rows(a: &Mat, l: &Mat, r0: usize, rows: usize, out: &mut [f64]) =
+        super::mul_tril_rows;
+}
+dispatch! {
+    /// Rows of C = A·U — `super::mul_triu_rows` at the wider ISA.
+    pub fn mul_triu_rows(a: &Mat, u: &Mat, r0: usize, rows: usize, out: &mut [f64]) =
+        super::mul_triu_rows;
+}
+
+/// Compare every dispatched kernel against its generic copy on seeded
+/// data and report the first bitwise mismatch.  On AVX2 hardware this
+/// pins the "bitwise across dispatch paths" half of the SIMD numeric
+/// contract; on other paths it degenerates to a self-comparison (still
+/// useful as a smoke test of every wrapper).
+pub fn self_check() -> Result<(), String> {
+    use crate::util::rng::Pcg64;
+    let mut rng = Pcg64::seeded(0x51D0_C4EC);
+    let rand_mat = |rng: &mut Pcg64, r: usize, c: usize| {
+        Mat::from_vec(r, c, (0..r * c).map(|_| rng.normal()).collect())
+    };
+    let n = 37; // deliberately not a lane multiple
+    let a = rand_mat(&mut rng, n, n);
+    let b = rand_mat(&mut rng, n, n);
+    let x: Vec<f64> = (0..n).map(|_| rng.normal()).collect();
+    let eta: Vec<f64> = (0..n).map(|_| rng.normal().abs() + 0.1).collect();
+    let mut got = vec![0.0; n * n];
+    let mut want = vec![0.0; n * n];
+    let check = |name: &str, got: &[f64], want: &[f64]| -> Result<(), String> {
+        if got != want {
+            return Err(format!(
+                "simd::self_check: `{name}` dispatched path diverges from generic copy \
+                 (path {})",
+                active_path()
+            ));
+        }
+        Ok(())
+    };
+
+    check("dot", &[dot(&a.data[..n], &x)], &[dot_impl(&a.data[..n], &x)])?;
+    check("sumsq", &[sumsq(&a.data[..n])], &[sumsq_impl(&a.data[..n])])?;
+    matvec_rows(&a, &x, 0, n, &mut got[..n]);
+    matvec_rows_impl(&a, &x, 0, n, &mut want[..n]);
+    check("matvec_rows", &got[..n], &want[..n])?;
+    mul_tril_t_rows(&a, &b, 0, n, &mut got);
+    mul_tril_t_rows_impl(&a, &b, 0, n, &mut want);
+    check("mul_tril_t_rows", &got, &want)?;
+    mul_triu_t_rows(&a, &b, 0, n, &mut got);
+    mul_triu_t_rows_impl(&a, &b, 0, n, &mut want);
+    check("mul_triu_t_rows", &got, &want)?;
+    cross_rows(1.3, &eta, &a, &b, &x, 0, &mut got);
+    cross_rows_impl(1.3, &eta, &a, &b, &x, 0, &mut want);
+    check("cross_rows", &got, &want)?;
+    cross_pairwise_rows(1.3, &eta, &a, &b, 0, &mut got);
+    cross_pairwise_rows_impl(1.3, &eta, &a, &b, 0, &mut want);
+    check("cross_pairwise_rows", &got, &want)?;
+    matmul_rows(&a, &b, 0, n, &mut got);
+    super::matmul_rows(&a, &b, 0, n, &mut want);
+    check("matmul_rows", &got, &want)?;
+    tr_matmul_rows(&a, &b, 0, n, &mut got);
+    super::tr_matmul_rows(&a, &b, 0, n, &mut want);
+    check("tr_matmul_rows", &got, &want)?;
+    gram_rows(&a, 0, n, &mut got);
+    super::gram_rows(&a, 0, n, &mut want);
+    check("gram_rows", &got, &want)?;
+    tr_matvec_cols(&a, &x, 0, n, &mut got[..n]);
+    super::tr_matvec_cols(&a, &x, 0, n, &mut want[..n]);
+    check("tr_matvec_cols", &got[..n], &want[..n])?;
+    col_sums_cols(&a, 0, n, &mut got[..n]);
+    super::col_sums_cols(&a, 0, n, &mut want[..n]);
+    check("col_sums_cols", &got[..n], &want[..n])?;
+    triu_matmul_rows(&a, &b, 0, n, &mut got);
+    super::triu_matmul_rows(&a, &b, 0, n, &mut want);
+    check("triu_matmul_rows", &got, &want)?;
+    mul_tril_rows(&a, &b, 0, n, &mut got);
+    super::mul_tril_rows(&a, &b, 0, n, &mut want);
+    check("mul_tril_rows", &got, &want)?;
+    mul_triu_rows(&a, &b, 0, n, &mut got);
+    super::mul_triu_rows(&a, &b, 0, n, &mut want);
+    check("mul_triu_rows", &got, &want)?;
+    Ok(())
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::rng::Pcg64;
+
+    fn rand_vec(rng: &mut Pcg64, n: usize) -> Vec<f64> {
+        (0..n).map(|_| rng.normal()).collect()
+    }
+
+    /// Reassociation moves the sum by rounding only: pin the relative
+    /// error on adversarial (non-lane-multiple, tiny, empty) lengths.
+    #[test]
+    fn lane_dot_is_close_to_scalar_dot() {
+        let mut rng = Pcg64::seeded(90);
+        for n in [0usize, 1, 3, 7, 8, 9, 15, 16, 17, 63, 64, 65, 1000] {
+            let a = rand_vec(&mut rng, n);
+            let b = rand_vec(&mut rng, n);
+            let simd = dot(&a, &b);
+            let scalar = super::super::dot(&a, &b);
+            let scale = a.iter().zip(&b).map(|(x, y)| (x * y).abs()).sum::<f64>();
+            assert!(
+                (simd - scalar).abs() <= 1e-12 * scale.max(1.0),
+                "dot n={n}: simd={simd} scalar={scalar}"
+            );
+            let sq = sumsq(&a);
+            let sq_ref = super::super::dot(&a, &a);
+            assert!(
+                (sq - sq_ref).abs() <= 1e-12 * sq_ref.abs().max(1.0),
+                "sumsq n={n}"
+            );
+        }
+    }
+
+    #[test]
+    fn lane_dot_exact_cases() {
+        // Exactly representable inputs: any path must be exact.
+        let a: Vec<f64> = (0..23).map(|i| i as f64).collect();
+        let ones = vec![1.0; 23];
+        assert_eq!(dot(&a, &ones), (0..23).sum::<usize>() as f64);
+        assert_eq!(sumsq(&[3.0]), 9.0);
+        assert_eq!(dot(&[], &[]), 0.0);
+        assert_eq!(sumsq(&[]), 0.0);
+    }
+
+    #[test]
+    fn dispatched_kernels_match_generic_bitwise() {
+        self_check().unwrap();
+    }
+
+    #[test]
+    fn path_introspection_is_coherent() {
+        // available() describes hardware, active_path() the dispatch
+        // decision; on non-x86_64 they cannot disagree, on x86_64 the
+        // accel path requires availability.
+        if active_path() == "x86_64-avx2" {
+            assert!(available());
+        }
+    }
+}

@@ -39,6 +39,11 @@ use std::path::{Path, PathBuf};
 fn main() -> Result<()> {
     advgp::util::logging::init();
     let args = Args::from_env();
+    // Install the compute backend process-wide before any subcommand
+    // builds an engine (ISSUE 10): `--backend` beats `ADVGP_BACKEND`
+    // beats the scalar default.  An unknown name or an unavailable
+    // backend is a typed error here, not a panic mid-run.
+    advgp::runtime::backend::set_active(backend_arg(&args)?)?;
     match args.positional.first().map(|s| s.as_str()) {
         Some("train") => cmd_train(&args),
         Some("serve-ps") => cmd_serve_ps(&args),
@@ -58,7 +63,8 @@ fn main() -> Result<()> {
                  train:    --data <csv|flight|taxi|friedman> [--n 50000] [--m 100]\n\
                  \x20         [--method advgp|svigp|distgp-gd|distgp-lbfgs|linear]\n\
                  \x20         [--workers 4] [--servers 1] [--tau 32] [--budget 30]\n\
-                 \x20         [--engine native|xla] [--store dir] [--chunk-rows 4096]\n\
+                 \x20         [--engine native|xla] [--backend scalar|simd|auto|xla]\n\
+                 \x20         [--store dir] [--chunk-rows 4096]\n\
                  \x20         [--checkpoint-every 0] [--checkpoint-dir dir]\n\
                  \x20         [--keep-last K] [--resume] [--out-trace trace.csv]\n\
                  serve-ps: --addr 127.0.0.1:7171 --workers 2 --data <...> [--n 50000]\n\
@@ -90,6 +96,17 @@ fn main() -> Result<()> {
             );
             std::process::exit(2);
         }
+    }
+}
+
+/// Resolve this invocation's compute backend: the `--backend` flag
+/// wins, else the `ADVGP_BACKEND` env selection (scalar when unset;
+/// an unknown env value warns and falls back to scalar, but an unknown
+/// *flag* value is an error — the user explicitly asked for it).
+fn backend_arg(args: &Args) -> Result<advgp::runtime::Backend> {
+    match args.get("backend") {
+        Some(v) => Ok(advgp::runtime::Backend::parse(v)?),
+        None => Ok(advgp::runtime::Backend::from_env()),
     }
 }
 
@@ -320,6 +337,7 @@ fn cmd_train(args: &Args) -> Result<()> {
             .then(|| checkpoint_dir.clone()),
         keep_last,
         resume_from,
+        backend: backend_arg(args)?,
         ..Default::default()
     };
     let p = make_problem(raw, n_test, m, 20_000, args.u64_or("seed", 0));
@@ -408,6 +426,7 @@ fn cmd_serve_ps(args: &Args) -> Result<()> {
         .then(|| checkpoint_dir.clone());
     cfg.keep_last = keep_last;
     cfg.resume_from = resume_from;
+    cfg.backend = backend_arg(args)?;
 
     // ---- partitioned-θ modes (ISSUE 5) ----
     if let Some(slice_arg) = args.get("slice") {

@@ -38,6 +38,7 @@ use crate::gp::ThetaLayout;
 use crate::grad::EngineFactory;
 use crate::log_warn;
 use crate::opt::StepSchedule;
+use crate::runtime::backend::{self, Backend};
 use crate::util::Stopwatch;
 use std::collections::BTreeMap;
 use std::path::PathBuf;
@@ -111,6 +112,11 @@ pub struct TrainConfig {
     /// generated per config; override to correlate with external
     /// schedulers.
     pub run_id: String,
+    /// Compute backend installed process-wide at the start of the run
+    /// (ISSUE 10): every worker gradient engine and evaluator posterior
+    /// built after that point inherits it.  Defaults to the
+    /// `ADVGP_BACKEND` env selection (scalar when unset).
+    pub backend: Backend,
 }
 
 impl TrainConfig {
@@ -134,6 +140,7 @@ impl TrainConfig {
             resume_from: None,
             heartbeat_secs: 30.0,
             run_id: gen_run_id(),
+            backend: Backend::from_env(),
         }
     }
 }
@@ -518,6 +525,10 @@ pub fn train_elastic(
     factory: EngineFactory,
     eval_factory: Option<EvalFactory>,
 ) -> RunResult {
+    // Install the run's compute backend before any worker/evaluator
+    // thread constructs an engine (warn-and-fall-back: this entry
+    // point has no error channel, and scalar is always safe).
+    backend::activate(cfg.backend);
     if cfg.servers > 1 {
         return train_elastic_sharded(cfg, published, sources, joiners, factory, eval_factory);
     }
@@ -775,6 +786,7 @@ pub fn train_remote(
     workers: usize,
     eval_factory: Option<EvalFactory>,
 ) -> RunResult {
+    backend::activate(cfg.backend);
     let clock = Stopwatch::start();
     assert!(workers >= 1, "need at least one expected worker");
     assert_eq!(theta0.len(), cfg.layout.len(), "θ₀ does not match the layout");
@@ -856,6 +868,7 @@ pub fn train_remote_sharded(
     workers: usize,
     eval_factory: Option<EvalFactory>,
 ) -> RunResult {
+    backend::activate(cfg.backend);
     let clock = Stopwatch::start();
     assert!(workers >= 1, "need at least one expected worker");
     assert!(!nets.is_empty(), "need at least one listener");
@@ -960,6 +973,7 @@ pub fn train_remote_slice(
     slice_id: usize,
     n_slices: usize,
 ) -> RunResult {
+    backend::activate(cfg.backend);
     let clock = Stopwatch::start();
     assert!(workers >= 1, "need at least one expected worker");
     assert_eq!(theta0.len(), cfg.layout.len(), "θ₀ does not match the layout");

@@ -1,0 +1,672 @@
+//! The compute-backend seam (ISSUE 10, ADVGPBE1): every hot-path
+//! kernel the training/serving planes execute per row of data goes
+//! through [`ComputeBackend`], so swapping the instruction set (or,
+//! later, the device) never touches the layers above.
+//!
+//! Three implementations:
+//!
+//! * [`ScalarBackend`] — the reference semantics: delegates verbatim
+//!   to the PR-1 kernels in [`crate::linalg`] / [`crate::kernel`].
+//!   **Bitwise-pinned**: selecting it reproduces the seed θ trajectory
+//!   and posterior outputs exactly, which is why it is the default.
+//! * [`SimdBackend`] — the same operations through
+//!   [`crate::linalg::simd`]: explicit 8-lane accumulators for the
+//!   reduction kernels (results differ from scalar by reassociated
+//!   rounding, bounded by the tolerance contract in
+//!   `rust/tests/backend_contract.rs`) and AVX2-recompiled copies of
+//!   the broadcast-chain kernels (bitwise-identical to scalar).  Both
+//!   backends share [`crate::linalg`]'s serial/parallel dispatcher, so
+//!   thread count still never changes results *within* a backend.
+//! * `XlaBackend` (behind `--features xla`) — the PJRT slot.  XLA
+//!   executes whole fused per-block graphs at the engine level
+//!   ([`crate::runtime::XlaEngine`] / `PosteriorEval`), so its
+//!   fine-grained host-side kernel obligations delegate to the scalar
+//!   reference; the value of the slot is that the *selection plumbing*
+//!   (`Backend::Xla` → config → engine) is exercised and typed.
+//!
+//! # Selection
+//!
+//! [`Backend`] is the user-facing knob: `TrainConfig::backend`, the
+//! `--backend` CLI flag, or the `ADVGP_BACKEND` env var
+//! (`scalar|simd|auto|xla`).  `auto` resolves to `simd` when
+//! [`crate::linalg::simd::available`] says the host has a vector path,
+//! else `scalar`.  Unknown values are a typed [`BackendError`], never a
+//! panic; the env path warns and falls back to scalar (same contract
+//! as `ADVGP_THREADS`).
+//!
+//! The resolved backend is installed process-wide ([`set_active`] /
+//! [`active`]) by the training entry points; constructors that want a
+//! specific backend regardless of global state take it explicitly
+//! (`NativeEngine::with_backend`, `SparseGp::with_backend`).
+
+use crate::kernel::{self, ArdParams, CrossScratch};
+use crate::linalg::{self, simd, Mat};
+use crate::log_warn;
+use crate::util::pool;
+use std::fmt;
+use std::sync::atomic::{AtomicU8, Ordering};
+
+/// The hot-path kernel set, promoted to a trait.  One method per
+/// operation the per-row training/serving loops execute; everything
+/// O(m³)-once-per-θ (Cholesky, `LChain`) deliberately stays outside —
+/// it is not rows/sec and keeping it scalar pins its bitwise behavior
+/// for every backend.
+///
+/// Implementations must be `Send + Sync` ZST-like statics: engines
+/// hold `&'static dyn ComputeBackend` and fan it across worker lanes.
+pub trait ComputeBackend: Send + Sync {
+    /// Stable identifier (`"scalar"`, `"simd"`, `"xla"`) — used in
+    /// bench JSON and logs.
+    fn name(&self) -> &'static str;
+
+    /// C = A·B.
+    fn matmul_into(&self, a: &Mat, b: &Mat, out: &mut Mat);
+    /// C = Aᵀ·B without materializing Aᵀ.
+    fn tr_matmul_into(&self, a: &Mat, b: &Mat, out: &mut Mat);
+    /// G = AᵀA (symmetry exploited: upper triangle + mirror).
+    fn gram_into(&self, a: &Mat, out: &mut Mat);
+    /// y = A·x.
+    fn matvec_into(&self, a: &Mat, x: &[f64], out: &mut Vec<f64>);
+    /// y = Aᵀ·x.
+    fn tr_matvec_into(&self, a: &Mat, x: &[f64], out: &mut Vec<f64>);
+    /// s_j = Σ_i A[i, j].
+    fn col_sums_into(&self, a: &Mat, out: &mut Vec<f64>);
+    /// C = U·B, U upper triangular.
+    fn triu_matmul_into(&self, u: &Mat, b: &Mat, out: &mut Mat);
+    /// C = A·L, L lower triangular.
+    fn mul_tril_into(&self, a: &Mat, l: &Mat, out: &mut Mat);
+    /// C = A·U, U upper triangular.
+    fn mul_triu_into(&self, a: &Mat, u: &Mat, out: &mut Mat);
+    /// C = A·Lᵀ, L lower triangular (prefix dots).
+    fn mul_tril_t_into(&self, a: &Mat, l: &Mat, out: &mut Mat);
+    /// C = A·Uᵀ, U upper triangular (suffix dots).
+    fn mul_triu_t_into(&self, a: &Mat, u: &Mat, out: &mut Mat);
+    /// ⟨a, b⟩.
+    fn dot(&self, a: &[f64], b: &[f64]) -> f64;
+    /// Σ aᵢ² — the row sum-of-squares of the blocked predict path
+    /// (`V = ΦUᵀ` row norms for the predictive variance).
+    fn sumsq(&self, a: &[f64]) -> f64;
+    /// Cross-covariance K[X, Z] (fast dot-product form) into `out`,
+    /// with the z-side preparation cached in `ws`.
+    fn cross_into_ws(&self, p: &ArdParams, x: &Mat, z: &Mat, out: &mut Mat, ws: &mut CrossScratch);
+    /// Exact per-pair K[X, Z] (used where `chol(inv(K_mm))` would
+    /// amplify fast-form cancellation).
+    fn cross_pairwise(&self, p: &ArdParams, x: &Mat, z: &Mat) -> Mat;
+}
+
+// ---------------------------------------------------------------------
+// Scalar reference backend.
+// ---------------------------------------------------------------------
+
+/// The PR-1 scalar kernels, verbatim.  Every method delegates to the
+/// exact code path the engines called before the trait existed, so
+/// this backend is bitwise-pinned against seed behavior (asserted by
+/// `rust/tests/backend_contract.rs`).
+pub struct ScalarBackend;
+
+/// The process-wide [`ScalarBackend`] instance.
+pub static SCALAR: ScalarBackend = ScalarBackend;
+
+impl ComputeBackend for ScalarBackend {
+    fn name(&self) -> &'static str {
+        "scalar"
+    }
+
+    fn matmul_into(&self, a: &Mat, b: &Mat, out: &mut Mat) {
+        a.matmul_into(b, out);
+    }
+
+    fn tr_matmul_into(&self, a: &Mat, b: &Mat, out: &mut Mat) {
+        a.tr_matmul_into(b, out);
+    }
+
+    fn gram_into(&self, a: &Mat, out: &mut Mat) {
+        a.gram_into(out);
+    }
+
+    fn matvec_into(&self, a: &Mat, x: &[f64], out: &mut Vec<f64>) {
+        a.matvec_into(x, out);
+    }
+
+    fn tr_matvec_into(&self, a: &Mat, x: &[f64], out: &mut Vec<f64>) {
+        a.tr_matvec_into(x, out);
+    }
+
+    fn col_sums_into(&self, a: &Mat, out: &mut Vec<f64>) {
+        a.col_sums_into(out);
+    }
+
+    fn triu_matmul_into(&self, u: &Mat, b: &Mat, out: &mut Mat) {
+        u.triu_matmul_into(b, out);
+    }
+
+    fn mul_tril_into(&self, a: &Mat, l: &Mat, out: &mut Mat) {
+        a.mul_tril_into(l, out);
+    }
+
+    fn mul_triu_into(&self, a: &Mat, u: &Mat, out: &mut Mat) {
+        a.mul_triu_into(u, out);
+    }
+
+    fn mul_tril_t_into(&self, a: &Mat, l: &Mat, out: &mut Mat) {
+        a.mul_tril_t_into(l, out);
+    }
+
+    fn mul_triu_t_into(&self, a: &Mat, u: &Mat, out: &mut Mat) {
+        a.mul_triu_t_into(u, out);
+    }
+
+    fn dot(&self, a: &[f64], b: &[f64]) -> f64 {
+        linalg::dot(a, b)
+    }
+
+    fn sumsq(&self, a: &[f64]) -> f64 {
+        // dot(a, a), not a fresh loop: the blocked predict path
+        // historically computed `dot(vi, vi)`, and bitwise-pinning the
+        // scalar backend means reproducing that exact accumulation.
+        linalg::dot(a, a)
+    }
+
+    fn cross_into_ws(&self, p: &ArdParams, x: &Mat, z: &Mat, out: &mut Mat, ws: &mut CrossScratch) {
+        kernel::cross_into_ws(p, x, z, out, ws);
+    }
+
+    fn cross_pairwise(&self, p: &ArdParams, x: &Mat, z: &Mat) -> Mat {
+        kernel::cross_pairwise(p, x, z)
+    }
+}
+
+// ---------------------------------------------------------------------
+// SIMD backend.
+// ---------------------------------------------------------------------
+
+/// The [`crate::linalg::simd`] kernels behind the same trait surface.
+/// Shares `linalg::run_rows` (and the kernel-module flop model) with
+/// the scalar backend, so the serial/parallel dispatch decision — and
+/// therefore the thread-count-independence guarantee — is identical;
+/// only the per-row arithmetic differs.
+pub struct SimdBackend;
+
+/// The process-wide [`SimdBackend`] instance.
+pub static SIMD: SimdBackend = SimdBackend;
+
+impl ComputeBackend for SimdBackend {
+    fn name(&self) -> &'static str {
+        "simd"
+    }
+
+    fn matmul_into(&self, a: &Mat, b: &Mat, out: &mut Mat) {
+        assert_eq!(
+            a.cols, b.rows,
+            "matmul dims {}x{} * {}x{}",
+            a.rows, a.cols, b.rows, b.cols
+        );
+        out.resize(a.rows, b.cols);
+        let flops = a.rows * a.cols * b.cols;
+        linalg::run_rows(&mut out.data, b.cols, a.rows, flops, false, &|r0, rows, blk| {
+            simd::matmul_rows(a, b, r0, rows, blk)
+        });
+    }
+
+    fn tr_matmul_into(&self, a: &Mat, b: &Mat, out: &mut Mat) {
+        assert_eq!(a.rows, b.rows, "tr_matmul dims");
+        out.resize(a.cols, b.cols);
+        let flops = a.rows * a.cols * b.cols;
+        linalg::run_rows(&mut out.data, b.cols, a.cols, flops, true, &|i0, rows, blk| {
+            simd::tr_matmul_rows(a, b, i0, rows, blk)
+        });
+    }
+
+    fn gram_into(&self, a: &Mat, out: &mut Mat) {
+        let n = a.cols;
+        out.resize(n, n);
+        let flops = a.rows * n * n / 2;
+        linalg::run_rows(&mut out.data, n, n, flops, true, &|i0, rows, blk| {
+            simd::gram_rows(a, i0, rows, blk)
+        });
+        for i in 0..n {
+            for j in 0..i {
+                out[(i, j)] = out[(j, i)];
+            }
+        }
+    }
+
+    fn matvec_into(&self, a: &Mat, x: &[f64], out: &mut Vec<f64>) {
+        assert_eq!(a.cols, x.len());
+        out.resize(a.rows, 0.0);
+        let flops = a.rows * a.cols;
+        linalg::run_rows(out, 1, a.rows, flops, false, &|r0, rows, blk| {
+            simd::matvec_rows(a, x, r0, rows, blk)
+        });
+    }
+
+    fn tr_matvec_into(&self, a: &Mat, x: &[f64], out: &mut Vec<f64>) {
+        assert_eq!(a.rows, x.len());
+        out.resize(a.cols, 0.0);
+        let flops = a.rows * a.cols;
+        linalg::run_rows(out, 1, a.cols, flops, true, &|c0, cols, blk| {
+            simd::tr_matvec_cols(a, x, c0, cols, blk)
+        });
+    }
+
+    fn col_sums_into(&self, a: &Mat, out: &mut Vec<f64>) {
+        out.resize(a.cols, 0.0);
+        let flops = a.rows * a.cols;
+        linalg::run_rows(out, 1, a.cols, flops, true, &|c0, cols, blk| {
+            simd::col_sums_cols(a, c0, cols, blk)
+        });
+    }
+
+    fn triu_matmul_into(&self, u: &Mat, b: &Mat, out: &mut Mat) {
+        assert_eq!(u.rows, u.cols, "triu operand must be square");
+        assert_eq!(u.cols, b.rows, "triu_matmul dims");
+        out.resize(u.rows, b.cols);
+        let flops = u.rows * u.cols * b.cols / 2;
+        linalg::run_rows(&mut out.data, b.cols, u.rows, flops, false, &|r0, rows, blk| {
+            simd::triu_matmul_rows(u, b, r0, rows, blk)
+        });
+    }
+
+    fn mul_tril_into(&self, a: &Mat, l: &Mat, out: &mut Mat) {
+        assert_eq!(l.rows, l.cols, "tril operand must be square");
+        assert_eq!(a.cols, l.rows, "mul_tril dims");
+        out.resize(a.rows, l.cols);
+        let flops = a.rows * l.rows * l.cols / 2;
+        linalg::run_rows(&mut out.data, l.cols, a.rows, flops, false, &|r0, rows, blk| {
+            simd::mul_tril_rows(a, l, r0, rows, blk)
+        });
+    }
+
+    fn mul_triu_into(&self, a: &Mat, u: &Mat, out: &mut Mat) {
+        assert_eq!(u.rows, u.cols, "triu operand must be square");
+        assert_eq!(a.cols, u.rows, "mul_triu dims");
+        out.resize(a.rows, u.cols);
+        let flops = a.rows * u.rows * u.cols / 2;
+        linalg::run_rows(&mut out.data, u.cols, a.rows, flops, false, &|r0, rows, blk| {
+            simd::mul_triu_rows(a, u, r0, rows, blk)
+        });
+    }
+
+    fn mul_tril_t_into(&self, a: &Mat, l: &Mat, out: &mut Mat) {
+        assert_eq!(l.rows, l.cols, "tril operand must be square");
+        assert_eq!(a.cols, l.rows, "mul_tril_t dims");
+        out.resize(a.rows, l.rows);
+        let flops = a.rows * l.rows * l.cols / 2;
+        linalg::run_rows(&mut out.data, l.rows, a.rows, flops, false, &|r0, rows, blk| {
+            simd::mul_tril_t_rows(a, l, r0, rows, blk)
+        });
+    }
+
+    fn mul_triu_t_into(&self, a: &Mat, u: &Mat, out: &mut Mat) {
+        assert_eq!(u.rows, u.cols, "triu operand must be square");
+        assert_eq!(a.cols, u.rows, "mul_triu_t dims");
+        out.resize(a.rows, u.rows);
+        let flops = a.rows * u.rows * u.cols / 2;
+        linalg::run_rows(&mut out.data, u.rows, a.rows, flops, false, &|r0, rows, blk| {
+            simd::mul_triu_t_rows(a, u, r0, rows, blk)
+        });
+    }
+
+    fn dot(&self, a: &[f64], b: &[f64]) -> f64 {
+        simd::dot(a, b)
+    }
+
+    fn sumsq(&self, a: &[f64]) -> f64 {
+        simd::sumsq(a)
+    }
+
+    fn cross_into_ws(&self, p: &ArdParams, x: &Mat, z: &Mat, out: &mut Mat, ws: &mut CrossScratch) {
+        assert_eq!(x.cols, z.cols);
+        assert_eq!(x.cols, p.dim());
+        let eta = p.eta();
+        let a0_sq = p.a0_sq();
+        let m = z.rows;
+        out.resize(x.rows, m);
+        if x.rows == 0 || m == 0 {
+            return;
+        }
+        ws.prepare(&eta, z);
+        let (ze, zn, eta) = (&ws.ze, &ws.zn, &eta);
+        let kern =
+            |r0: usize, blk: &mut [f64]| simd::cross_rows(a0_sq, eta, x, ze, zn, r0, blk);
+        if linalg::should_par(kernel::cross_flops(x.rows, m, eta.len())) {
+            pool::parallel_rows_mut(
+                &mut out.data,
+                m,
+                x.rows,
+                pool::block_size(x.rows),
+                &|r0, blk| kern(r0, blk),
+            );
+        } else {
+            kern(0, &mut out.data);
+        }
+    }
+
+    fn cross_pairwise(&self, p: &ArdParams, x: &Mat, z: &Mat) -> Mat {
+        assert_eq!(x.cols, z.cols);
+        assert_eq!(x.cols, p.dim());
+        let eta = p.eta();
+        let a0_sq = p.a0_sq();
+        let m = z.rows;
+        let mut k = Mat::zeros(x.rows, m);
+        if x.rows == 0 || m == 0 {
+            return k;
+        }
+        let eta = &eta;
+        let kern =
+            |r0: usize, blk: &mut [f64]| simd::cross_pairwise_rows(a0_sq, eta, x, z, r0, blk);
+        if linalg::should_par(kernel::cross_flops(x.rows, m, eta.len())) {
+            pool::parallel_rows_mut(
+                &mut k.data,
+                m,
+                x.rows,
+                pool::block_size(x.rows),
+                &|r0, blk| kern(r0, blk),
+            );
+        } else {
+            kern(0, &mut k.data);
+        }
+        k
+    }
+}
+
+// ---------------------------------------------------------------------
+// XLA backend (feature-gated third slot).
+// ---------------------------------------------------------------------
+
+/// The PJRT slot behind the trait.  XLA runs whole fused per-block
+/// graphs at the engine layer (`GradEngine` / `PosteriorEval`), not
+/// individual host kernels, so the fine-grained obligations here
+/// delegate to the scalar reference — the slot exists so backend
+/// selection (`Backend::Xla` → engine factory) is typed and cannot
+/// rot to a parallel convention-only code path.
+#[cfg(feature = "xla")]
+pub struct XlaBackend;
+
+/// The process-wide `XlaBackend` instance.
+#[cfg(feature = "xla")]
+pub static XLA: XlaBackend = XlaBackend;
+
+#[cfg(feature = "xla")]
+impl ComputeBackend for XlaBackend {
+    fn name(&self) -> &'static str {
+        "xla"
+    }
+
+    fn matmul_into(&self, a: &Mat, b: &Mat, out: &mut Mat) {
+        SCALAR.matmul_into(a, b, out);
+    }
+
+    fn tr_matmul_into(&self, a: &Mat, b: &Mat, out: &mut Mat) {
+        SCALAR.tr_matmul_into(a, b, out);
+    }
+
+    fn gram_into(&self, a: &Mat, out: &mut Mat) {
+        SCALAR.gram_into(a, out);
+    }
+
+    fn matvec_into(&self, a: &Mat, x: &[f64], out: &mut Vec<f64>) {
+        SCALAR.matvec_into(a, x, out);
+    }
+
+    fn tr_matvec_into(&self, a: &Mat, x: &[f64], out: &mut Vec<f64>) {
+        SCALAR.tr_matvec_into(a, x, out);
+    }
+
+    fn col_sums_into(&self, a: &Mat, out: &mut Vec<f64>) {
+        SCALAR.col_sums_into(a, out);
+    }
+
+    fn triu_matmul_into(&self, u: &Mat, b: &Mat, out: &mut Mat) {
+        SCALAR.triu_matmul_into(u, b, out);
+    }
+
+    fn mul_tril_into(&self, a: &Mat, l: &Mat, out: &mut Mat) {
+        SCALAR.mul_tril_into(a, l, out);
+    }
+
+    fn mul_triu_into(&self, a: &Mat, u: &Mat, out: &mut Mat) {
+        SCALAR.mul_triu_into(a, u, out);
+    }
+
+    fn mul_tril_t_into(&self, a: &Mat, l: &Mat, out: &mut Mat) {
+        SCALAR.mul_tril_t_into(a, l, out);
+    }
+
+    fn mul_triu_t_into(&self, a: &Mat, u: &Mat, out: &mut Mat) {
+        SCALAR.mul_triu_t_into(a, u, out);
+    }
+
+    fn dot(&self, a: &[f64], b: &[f64]) -> f64 {
+        SCALAR.dot(a, b)
+    }
+
+    fn sumsq(&self, a: &[f64]) -> f64 {
+        SCALAR.sumsq(a)
+    }
+
+    fn cross_into_ws(&self, p: &ArdParams, x: &Mat, z: &Mat, out: &mut Mat, ws: &mut CrossScratch) {
+        SCALAR.cross_into_ws(p, x, z, out, ws);
+    }
+
+    fn cross_pairwise(&self, p: &ArdParams, x: &Mat, z: &Mat) -> Mat {
+        SCALAR.cross_pairwise(p, x, z)
+    }
+}
+
+// ---------------------------------------------------------------------
+// Selection plumbing.
+// ---------------------------------------------------------------------
+
+/// User-facing backend selector (`TrainConfig::backend`, `--backend`,
+/// `ADVGP_BACKEND`).  `Auto` is resolved at activation time, so a
+/// config recorded as `auto` stays portable across hosts.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum Backend {
+    /// Reference scalar kernels — bitwise-pinned default.
+    Scalar,
+    /// Runtime-dispatched SIMD kernels ([`crate::linalg::simd`]).
+    Simd,
+    /// `Simd` when [`crate::linalg::simd::available`], else `Scalar`.
+    Auto,
+    /// PJRT slot; requires a binary built with `--features xla`.
+    Xla,
+}
+
+/// Typed selection failure: unknown name, or a slot this binary was
+/// not built with.  Never a panic — CLI and config paths surface it.
+#[derive(Clone, Debug, PartialEq, Eq)]
+pub struct BackendError(pub String);
+
+impl fmt::Display for BackendError {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        f.write_str(&self.0)
+    }
+}
+
+impl std::error::Error for BackendError {}
+
+impl fmt::Display for Backend {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        f.write_str(match self {
+            Backend::Scalar => "scalar",
+            Backend::Simd => "simd",
+            Backend::Auto => "auto",
+            Backend::Xla => "xla",
+        })
+    }
+}
+
+/// The valid `--backend` / `ADVGP_BACKEND` values, for error messages
+/// and usage text.
+pub const BACKEND_CHOICES: &str = "scalar|simd|auto|xla";
+
+impl Backend {
+    /// Parse a selector name (case-insensitive, surrounding whitespace
+    /// ignored).  Unknown names are a typed error listing the valid
+    /// set.
+    pub fn parse(s: &str) -> Result<Self, BackendError> {
+        match s.trim().to_ascii_lowercase().as_str() {
+            "scalar" => Ok(Self::Scalar),
+            "simd" => Ok(Self::Simd),
+            "auto" => Ok(Self::Auto),
+            "xla" => Ok(Self::Xla),
+            other => Err(BackendError(format!(
+                "unknown compute backend {other:?} (expected {BACKEND_CHOICES})"
+            ))),
+        }
+    }
+
+    /// [`Backend::from_env`] on an explicit value — the testable core:
+    /// `None`/empty ⇒ the scalar default; invalid ⇒ warn + scalar
+    /// (mirroring the `ADVGP_THREADS` contract: a bad env var must not
+    /// take down a worker fleet).
+    pub fn from_env_value(v: Option<&str>) -> Self {
+        match v {
+            None => Self::Scalar,
+            Some(s) if s.trim().is_empty() => Self::Scalar,
+            Some(s) => Self::parse(s).unwrap_or_else(|e| {
+                log_warn!("ADVGP_BACKEND: {e}; using the scalar backend");
+                Self::Scalar
+            }),
+        }
+    }
+
+    /// Default backend from `ADVGP_BACKEND` (scalar when unset).
+    pub fn from_env() -> Self {
+        Self::from_env_value(std::env::var("ADVGP_BACKEND").ok().as_deref())
+    }
+
+    /// Resolve to a concrete kernel set.  `Auto` inspects the host;
+    /// `Xla` errors unless the binary carries the feature.
+    pub fn resolve(self) -> Result<&'static dyn ComputeBackend, BackendError> {
+        code_of(self).map(backend_of)
+    }
+}
+
+const B_SCALAR: u8 = 0;
+const B_SIMD: u8 = 1;
+#[cfg(feature = "xla")]
+const B_XLA: u8 = 2;
+
+fn code_of(b: Backend) -> Result<u8, BackendError> {
+    match b {
+        Backend::Scalar => Ok(B_SCALAR),
+        Backend::Simd => Ok(B_SIMD),
+        Backend::Auto => Ok(if simd::available() { B_SIMD } else { B_SCALAR }),
+        Backend::Xla => xla_code(),
+    }
+}
+
+#[cfg(feature = "xla")]
+fn xla_code() -> Result<u8, BackendError> {
+    Ok(B_XLA)
+}
+
+#[cfg(not(feature = "xla"))]
+fn xla_code() -> Result<u8, BackendError> {
+    Err(BackendError(
+        "backend `xla` requires a binary built with `--features xla`".into(),
+    ))
+}
+
+fn backend_of(code: u8) -> &'static dyn ComputeBackend {
+    match code {
+        B_SIMD => &SIMD,
+        #[cfg(feature = "xla")]
+        B_XLA => &XLA,
+        _ => &SCALAR,
+    }
+}
+
+/// Process-wide active backend (what [`active`] returns).  Scalar by
+/// default: every pre-existing bitwise test and the seed θ trajectory
+/// depend on the default being the reference kernels.
+static ACTIVE: AtomicU8 = AtomicU8::new(B_SCALAR);
+
+/// The process-wide backend used by constructors that don't take one
+/// explicitly (`NativeEngine::new`, `SparseGp::new` — and therefore
+/// the serving stack's `PosteriorCache` builds).
+pub fn active() -> &'static dyn ComputeBackend {
+    backend_of(ACTIVE.load(Ordering::Relaxed))
+}
+
+/// Install `b` as the process-wide backend.  Typed error if it cannot
+/// resolve; on success returns the concrete backend.
+pub fn set_active(b: Backend) -> Result<&'static dyn ComputeBackend, BackendError> {
+    let code = code_of(b)?;
+    ACTIVE.store(code, Ordering::Relaxed);
+    Ok(backend_of(code))
+}
+
+/// [`set_active`] with the warn-and-fall-back contract used by the
+/// training entry points (which have no error channel to the caller):
+/// an unresolvable selection logs and pins scalar rather than
+/// aborting a fleet.
+pub fn activate(b: Backend) -> &'static dyn ComputeBackend {
+    set_active(b).unwrap_or_else(|e| {
+        log_warn!("backend {b}: {e}; using the scalar backend");
+        set_active(Backend::Scalar).expect("scalar backend always resolves")
+    })
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn parse_accepts_known_names_case_insensitive() {
+        assert_eq!(Backend::parse("scalar").unwrap(), Backend::Scalar);
+        assert_eq!(Backend::parse("SIMD").unwrap(), Backend::Simd);
+        assert_eq!(Backend::parse(" Auto ").unwrap(), Backend::Auto);
+        assert_eq!(Backend::parse("xla").unwrap(), Backend::Xla);
+    }
+
+    #[test]
+    fn parse_unknown_is_typed_error_not_panic() {
+        let err = Backend::parse("cuda").unwrap_err();
+        assert!(err.0.contains("cuda"), "error names the bad value: {err}");
+        assert!(
+            err.0.contains(BACKEND_CHOICES),
+            "error lists valid values: {err}"
+        );
+    }
+
+    #[test]
+    fn env_value_defaults_and_falls_back() {
+        // Unset and empty ⇒ scalar default; garbage warns + scalar
+        // (tested through the value-shaped core so no test mutates
+        // process env out from under parallel tests).
+        assert_eq!(Backend::from_env_value(None), Backend::Scalar);
+        assert_eq!(Backend::from_env_value(Some("")), Backend::Scalar);
+        assert_eq!(Backend::from_env_value(Some("  ")), Backend::Scalar);
+        assert_eq!(Backend::from_env_value(Some("simd")), Backend::Simd);
+        assert_eq!(Backend::from_env_value(Some("bogus")), Backend::Scalar);
+    }
+
+    #[test]
+    fn auto_resolves_by_host_capability() {
+        let resolved = Backend::Auto.resolve().unwrap();
+        if simd::available() {
+            assert_eq!(resolved.name(), "simd");
+        } else {
+            assert_eq!(resolved.name(), "scalar");
+        }
+    }
+
+    #[cfg(not(feature = "xla"))]
+    #[test]
+    fn xla_without_feature_is_typed_error() {
+        let err = Backend::Xla.resolve().unwrap_err();
+        assert!(err.0.contains("--features xla"), "{err}");
+    }
+
+    #[test]
+    fn resolution_names_are_stable() {
+        // Bench JSON and logs key on these exact names; asserting
+        // resolution identity (not global `active()` state, which
+        // parallel tests may legitimately set) keeps this race-free.
+        assert_eq!(Backend::Scalar.resolve().unwrap().name(), "scalar");
+        assert_eq!(Backend::Simd.resolve().unwrap().name(), "simd");
+    }
+}

@@ -211,13 +211,18 @@ impl XlaEvaluator {
             exe_elbo,
         })
     }
+}
 
-    pub fn layout(&self) -> ThetaLayout {
+/// The evaluation surface lives behind [`crate::runtime::PosteriorEval`]
+/// so the feature-gated stub cannot drift from this real implementation
+/// (ISSUE 10 satellite — drift is now a compile error on either side).
+impl crate::runtime::PosteriorEval for XlaEvaluator {
+    fn layout(&self) -> ThetaLayout {
         self.layout
     }
 
     /// Predictive (mean, var_y) for every row of x.
-    pub fn predict(&self, theta: &[f64], x: &Mat) -> Result<(Vec<f64>, Vec<f64>)> {
+    fn predict(&self, theta: &[f64], x: &Mat) -> Result<(Vec<f64>, Vec<f64>)> {
         let (theta_lits, _chain) = theta_literals(self.layout, theta)?;
         let mut mean = Vec::with_capacity(x.rows);
         let mut var = Vec::with_capacity(x.rows);
@@ -240,7 +245,7 @@ impl XlaEvaluator {
 
     /// (Σ_i g_i, Σ_i (mean_i − y_i)²) over the dataset — the data term of
     /// −ELBO (add `Theta::kl()` for the full bound) and the SSE.
-    pub fn elbo_data_term(&self, theta: &[f64], x: &Mat, y: &[f64]) -> Result<(f64, f64)> {
+    fn elbo_data_term(&self, theta: &[f64], x: &Mat, y: &[f64]) -> Result<(f64, f64)> {
         let (theta_lits, _chain) = theta_literals(self.layout, theta)?;
         let mut g = 0.0;
         let mut sse = 0.0;

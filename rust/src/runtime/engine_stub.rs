@@ -13,6 +13,7 @@ use crate::gp::ThetaLayout;
 use crate::grad::{EngineFactory, GradEngine, GradResult};
 use crate::linalg::Mat;
 use crate::runtime::manifest::{ArtifactSpec, Manifest};
+use crate::runtime::PosteriorEval;
 use anyhow::Result;
 
 fn unavailable() -> anyhow::Error {
@@ -67,16 +68,21 @@ impl XlaEvaluator {
     pub fn from_manifest(_manifest: &Manifest, _m: usize, _d: usize) -> Result<Self> {
         Err(unavailable())
     }
+}
 
-    pub fn layout(&self) -> ThetaLayout {
+/// The stub satisfies the same [`PosteriorEval`] trait as the real
+/// PJRT evaluator — drift between the two surfaces is now a compile
+/// error instead of a convention (ISSUE 10 satellite).
+impl PosteriorEval for XlaEvaluator {
+    fn layout(&self) -> ThetaLayout {
         match self.never {}
     }
 
-    pub fn predict(&self, _theta: &[f64], _x: &Mat) -> Result<(Vec<f64>, Vec<f64>)> {
+    fn predict(&self, _theta: &[f64], _x: &Mat) -> Result<(Vec<f64>, Vec<f64>)> {
         match self.never {}
     }
 
-    pub fn elbo_data_term(&self, _theta: &[f64], _x: &Mat, _y: &[f64]) -> Result<(f64, f64)> {
+    fn elbo_data_term(&self, _theta: &[f64], _x: &Mat, _y: &[f64]) -> Result<(f64, f64)> {
         match self.never {}
     }
 }

@@ -16,6 +16,7 @@
 //! error, so the pure-Rust [`crate::grad::native`] path — and all of
 //! tier-1 — works in environments where the PJRT toolchain is absent.
 
+pub mod backend;
 pub mod manifest;
 
 #[cfg(feature = "xla")]
@@ -24,10 +25,30 @@ pub mod engine;
 #[path = "engine_stub.rs"]
 pub mod engine;
 
+pub use backend::{Backend, BackendError, ComputeBackend};
 pub use engine::{XlaEngine, XlaEvaluator};
 pub use manifest::{ArtifactKind, ArtifactSpec, Manifest};
 
+use crate::gp::ThetaLayout;
+use crate::linalg::Mat;
 use anyhow::Result;
+
+/// The posterior-evaluation surface both `XlaEvaluator` variants (real
+/// PJRT and stub) must implement.  Before ISSUE 10 the stub shadowed
+/// the real evaluator's API *by convention only* — a signature drift
+/// compiled fine until someone built with `--features xla`.  As a
+/// trait, drift is a compile error on whichever side lags (the CI
+/// `cargo check --features xla` step keeps the real side honest).
+pub trait PosteriorEval {
+    /// The θ layout the compiled artifacts were specialized for.
+    fn layout(&self) -> ThetaLayout;
+    /// Predictive `(mean, var_y)` for every row of `x`.
+    fn predict(&self, theta: &[f64], x: &Mat) -> Result<(Vec<f64>, Vec<f64>)>;
+    /// `(Σ_i g_i, Σ_i (mean_i − y_i)²)` over the dataset — the data
+    /// term of −ELBO (add `Theta::kl()` for the full bound) and the
+    /// SSE.
+    fn elbo_data_term(&self, theta: &[f64], x: &Mat, y: &[f64]) -> Result<(f64, f64)>;
+}
 
 /// Smoke helper used by the `advgp smoke` subcommand: load an HLO text
 /// file of the reference `fn(x, y) = (x @ y + 2,)` and execute it.

@@ -8,7 +8,7 @@ use advgp::data::synth;
 use advgp::gp::{SparseGp, Theta, ThetaLayout};
 use advgp::grad::{native::NativeEngine, GradEngine};
 use advgp::linalg::Mat;
-use advgp::runtime::{Manifest, XlaEngine, XlaEvaluator};
+use advgp::runtime::{Manifest, PosteriorEval, XlaEngine, XlaEvaluator};
 use advgp::util::rng::Pcg64;
 use std::path::Path;
 

@@ -5,11 +5,13 @@ Usage:
     scripts/bench_diff.py OLD.json NEW.json [--fail-over PCT]
 
 Works on any file written by the `perf_hotpath` / `perf_predict`
-benches (schema 1: {"benches": [{"name", "mean_ns", ...}]}).  Benches
-are matched by name; the table shows old/new mean ns/iter and the
-relative delta (positive = slower).  Entries present on only one side
-are listed separately.  Exit code is 0 unless --fail-over is given and
-some bench regressed by more than PCT percent.
+benches (schema 1: {"benches": [{"name", "mean_ns", ...}]}; schema 2
+adds an optional per-entry "backend").  Benches are matched on
+(name, backend) — each compute backend's series is an independent row,
+so a SIMD win never masks a scalar regression.  The table shows old/new
+mean ns/iter and the relative delta (positive = slower).  Entries
+present on only one side are listed separately.  Exit code is 0 unless
+--fail-over is given and some bench regressed by more than PCT percent.
 
 stdlib-only (the build environment is offline).
 """
@@ -27,8 +29,20 @@ def load(path):
         name = b.get("name")
         mean = b.get("mean_ns")
         if name is not None and mean is not None:
-            out[name] = b
+            # Schema-1 files have no "backend"; "" keeps their keys
+            # stable so old baselines still match the scalar rows of
+            # benches that never grew a backend dimension.
+            out[(name, b.get("backend", ""))] = b
     return doc, out
+
+
+def display(key):
+    name, backend = key
+    # The benches embed "[backend]" in the name already; only append
+    # when a file carries the field without the suffix.
+    if backend and f"[{backend}]" not in name:
+        return f"{name} [{backend}]"
+    return name
 
 
 def fmt_ns(ns):
@@ -60,24 +74,24 @@ def main():
     if ot != nt:
         print(f"note: thread counts differ (old={ot}, new={nt}); deltas are not comparable\n")
 
-    shared = [n for n in new if n in old]
-    name_w = max((len(n) for n in shared), default=4) + 2
+    shared = [k for k in new if k in old]
+    name_w = max((len(display(k)) for k in shared), default=4) + 2
     print(f"{'bench':<{name_w}} {'old':>10} {'new':>10} {'delta':>8}")
     worst = 0.0
-    for name in shared:
-        o, n = old[name]["mean_ns"], new[name]["mean_ns"]
+    for key in shared:
+        o, n = old[key]["mean_ns"], new[key]["mean_ns"]
         delta = (n - o) / o * 100.0 if o > 0 else float("nan")
         worst = max(worst, delta)
         flag = "  <-- regression" if delta > 10.0 else ""
-        print(f"{name:<{name_w}} {fmt_ns(o):>10} {fmt_ns(n):>10} {delta:>+7.1f}%{flag}")
-        rps_o, rps_n = old[name].get("rows_per_sec"), new[name].get("rows_per_sec")
+        print(f"{display(key):<{name_w}} {fmt_ns(o):>10} {fmt_ns(n):>10} {delta:>+7.1f}%{flag}")
+        rps_o, rps_n = old[key].get("rows_per_sec"), new[key].get("rows_per_sec")
         if rps_o and rps_n:
             print(f"{'':<{name_w}} {rps_o:>10.0f} {rps_n:>10.0f}  rows/s")
 
-    for name in sorted(set(old) - set(new)):
-        print(f"{name:<{name_w}} {fmt_ns(old[name]['mean_ns']):>10} {'(gone)':>10}")
-    for name in sorted(set(new) - set(old)):
-        print(f"{name:<{name_w}} {'(new)':>10} {fmt_ns(new[name]['mean_ns']):>10}")
+    for key in sorted(set(old) - set(new)):
+        print(f"{display(key):<{name_w}} {fmt_ns(old[key]['mean_ns']):>10} {'(gone)':>10}")
+    for key in sorted(set(new) - set(old)):
+        print(f"{display(key):<{name_w}} {'(new)':>10} {fmt_ns(new[key]['mean_ns']):>10}")
 
     if args.fail_over is not None and worst > args.fail_over:
         print(f"\nFAIL: worst regression {worst:+.1f}% exceeds {args.fail_over}%")
